@@ -1,0 +1,7 @@
+"""Repo-root pytest hook: make `pytest python/tests/` work from the root
+(the build-time package lives under python/)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent / "python"))

@@ -1,0 +1,59 @@
+//! Dataflow comparison (the Fig. 9/10 story on one benchmark): run the
+//! same model through OS-TCD, OS-conv, NLR and RNA and print the
+//! time/energy table.
+//!
+//! Run: `cargo run --release --example dataflow_compare [dataset] [batches]`
+
+use tcd_npe::dataflow::{DataflowEngine, NlrEngine, OsEngine, RnaEngine};
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::{benchmark_by_name, QuantizedMlp};
+use tcd_npe::util::TextTable;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("Adult");
+    let batches: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(10);
+
+    let bench = benchmark_by_name(dataset).unwrap_or_else(|| {
+        eprintln!("unknown dataset {dataset}; try MNIST, Adult, Wine, Iris, ...");
+        std::process::exit(1);
+    });
+    let mlp = QuantizedMlp::synthesize(bench.topology.clone(), 99);
+    let inputs = mlp.synth_inputs(batches, 100);
+    println!(
+        "{} ({}), B={batches} on the 16x8 array\n",
+        bench.dataset,
+        bench.topology.display()
+    );
+
+    let geom = NpeGeometry::PAPER;
+    let mut engines: Vec<Box<dyn DataflowEngine>> = vec![
+        Box::new(OsEngine::tcd(geom)),
+        Box::new(OsEngine::conventional(geom)),
+        Box::new(NlrEngine::new(geom)),
+        Box::new(RnaEngine::new(geom)),
+    ];
+    let mut t = TextTable::new(vec![
+        "Dataflow", "MAC", "Cycles", "Time (us)", "PE dyn (uJ)", "Mem (uJ)", "Total (uJ)",
+    ]);
+    let mut first_outputs: Option<Vec<Vec<i16>>> = None;
+    for e in engines.iter_mut() {
+        let r = e.execute(&mlp, &inputs);
+        if let Some(f) = &first_outputs {
+            assert_eq!(f, &r.outputs, "dataflows must agree on values");
+        } else {
+            first_outputs = Some(r.outputs.clone());
+        }
+        t.row(vec![
+            r.dataflow.to_string(),
+            r.mac.to_string(),
+            r.cycles.to_string(),
+            format!("{:.2}", r.time_us()),
+            format!("{:.3}", r.energy.pe_dynamic_pj / 1e6),
+            format!("{:.3}", (r.energy.mem_dynamic_pj + r.energy.mem_leak_pj) / 1e6),
+            format!("{:.3}", r.energy.total_pj() / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(all four dataflows produced identical neuron values)");
+}

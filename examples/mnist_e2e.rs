@@ -1,0 +1,94 @@
+//! End-to-end driver (DESIGN.md §E2E): serve batched inference requests
+//! for the MNIST benchmark (784:700:10) through the full stack —
+//!
+//!   request → coordinator (router + dynamic batcher)
+//!           → Algorithm-1 mapper → cycle-accurate TCD-NPE simulator
+//!           → PJRT cross-execution of the JAX/Pallas-lowered artifact
+//!           → verified response
+//!
+//! and report latency/throughput/energy. Requires `make artifacts`.
+//!
+//! Run: `cargo run --release --example mnist_e2e [requests]`
+
+use std::time::{Duration, Instant};
+use tcd_npe::coordinator::{BatcherConfig, Coordinator, PjrtSpec};
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::QuantizedMlp;
+use tcd_npe::runtime::ArtifactManifest;
+
+fn main() {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+
+    let manifest = ArtifactManifest::load("artifacts")
+        .expect("artifacts/ missing — run `make artifacts` first");
+    let entry = manifest
+        .entries
+        .iter()
+        .find(|e| e.name.starts_with("mnist"))
+        .expect("mnist artifact");
+    println!(
+        "MNIST e2e: {} requests, artifact {} (batch {}), topology {}",
+        requests,
+        entry.name,
+        entry.batch,
+        entry.topology.display()
+    );
+
+    let mlp = QuantizedMlp::synthesize(entry.topology.clone(), entry.seed);
+    let coord = Coordinator::spawn(
+        mlp.clone(),
+        NpeGeometry::PAPER,
+        BatcherConfig::new(entry.batch, Duration::from_millis(2)),
+        Some(PjrtSpec {
+            artifact_dir: "artifacts".into(),
+            artifact: entry.name.clone(),
+        }),
+    );
+
+    // Synthetic MNIST-like digits (deterministic).
+    let inputs = mlp.synth_inputs(requests, 0xD161_7);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+
+    let mut verified = 0usize;
+    let mut wall_max = Duration::ZERO;
+    let mut sim_ns_total = 0.0;
+    let mut energy_pj = 0.0;
+    let mut class_histogram = [0usize; 10];
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response");
+        verified += resp.verified as usize;
+        wall_max = wall_max.max(resp.wall);
+        sim_ns_total += resp.npe_time_ns / entry.batch as f64;
+        energy_pj += resp.npe_energy_pj;
+        // argmax over the 10 output neurons = the predicted digit.
+        let pred = resp
+            .output
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .map(|(i, _)| i)
+            .unwrap();
+        class_histogram[pred] += 1;
+    }
+    let elapsed = t0.elapsed();
+
+    println!("\nserved {requests} requests in {elapsed:?} (host wall-clock)");
+    println!("PJRT-verified responses: {verified}/{requests}");
+    println!("predicted-class histogram: {class_histogram:?}");
+    println!(
+        "simulated NPE: {:.1} us/request, {:.0} req/s, {:.2} uJ/request",
+        sim_ns_total / requests as f64 / 1e3,
+        requests as f64 / (sim_ns_total / 1e9),
+        energy_pj / requests as f64 / 1e6
+    );
+    let m = coord.metrics.lock().unwrap().clone();
+    println!("coordinator: {}", m.render());
+    drop(m);
+    coord.shutdown().expect("clean shutdown");
+    assert_eq!(verified, requests, "every batch must be PJRT-verified");
+    println!("\nE2E OK — all responses cross-verified against the XLA path");
+}

@@ -1,0 +1,43 @@
+//! Quickstart: build a small quantized MLP, schedule it with Algorithm 1,
+//! run it on the TCD-NPE simulator, and compare against a conventional-MAC
+//! NPE — the whole public API in ~50 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tcd_npe::dataflow::{DataflowEngine, OsEngine};
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::{MlpTopology, QuantizedMlp};
+
+fn main() {
+    // 1. A model: 64 inputs, two hidden layers, 4 outputs (Q7.8 weights).
+    let topology = MlpTopology::new(vec![64, 48, 16, 4]);
+    let mlp = QuantizedMlp::synthesize(topology, /*seed=*/ 42);
+    let inputs = mlp.synth_inputs(/*batches=*/ 8, /*seed=*/ 7);
+
+    // 2. The paper's 16×8 TCD-NPE vs the same NPE with conventional MACs.
+    let geom = NpeGeometry::PAPER;
+    let tcd = OsEngine::tcd(geom).execute(&mlp, &inputs);
+    let conv = OsEngine::conventional(geom).execute(&mlp, &inputs);
+
+    // 3. Same neuron values, different time & energy.
+    assert_eq!(tcd.outputs, conv.outputs);
+    assert_eq!(tcd.outputs, mlp.forward_batch(&inputs));
+    println!("outputs[0] = {:?}", &tcd.outputs[0]);
+    println!(
+        "TCD-NPE : {:>8} cycles  {:>9.2} us  {:>9.3} uJ",
+        tcd.cycles,
+        tcd.time_us(),
+        tcd.energy_uj()
+    );
+    println!(
+        "conv NPE: {:>8} cycles  {:>9.2} us  {:>9.3} uJ",
+        conv.cycles,
+        conv.time_us(),
+        conv.energy_uj()
+    );
+    println!(
+        "speedup {:.2}x, energy saving {:.0}%",
+        conv.time_ns / tcd.time_ns,
+        (1.0 - tcd.energy.total_pj() / conv.energy.total_pj()) * 100.0
+    );
+}

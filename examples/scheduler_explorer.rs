@@ -1,0 +1,54 @@
+//! Scheduler explorer: reproduce the paper's Fig. 5 and Fig. 6
+//! walkthroughs on the 6×3 array, then show the 16×8 schedule for a real
+//! benchmark.
+//!
+//! Run: `cargo run --release --example scheduler_explorer`
+
+use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry};
+use tcd_npe::model::benchmarks;
+
+fn main() {
+    let mut m = MapperTree::new(NpeGeometry::WALKTHROUGH);
+
+    println!("== Fig. 5: Γ(3, I, 9) on the 6x3 array ==");
+    println!("supported configs: {:?}", NpeGeometry::WALKTHROUGH.configs());
+    let s = m.schedule_layer(Gamma::new(3, 100, 9));
+    println!(
+        "optimal: {} rolls, utilization {:.0}%",
+        s.total_rolls(),
+        s.utilization() * 100.0
+    );
+    for e in &s.events {
+        println!("  {} x NPE({},{}) load=({},{})", e.rolls, e.config.0, e.config.1, e.load.0, e.load.1);
+    }
+
+    println!("\n== Fig. 6: Γ(5, I, 7) on the 6x3 array ==");
+    let node = m.best(5, 7).unwrap();
+    println!("execution tree ({} rolls):\n{}", node.total_rolls(), node.render(2));
+    let s = m.schedule_layer(Gamma::new(5, 100, 7));
+    println!("BFS event sequence (Fig. 6C):");
+    for e in &s.events {
+        println!("  {} x NPE({},{}) load=({},{})", e.rolls, e.config.0, e.config.1, e.load.0, e.load.1);
+    }
+
+    println!("\n== Poker Hands (10:85:50:10) on the 16x8 TCD-NPE, B=10 ==");
+    let mut m = MapperTree::new(NpeGeometry::PAPER);
+    let b = benchmarks().into_iter().find(|b| b.dataset == "Poker Hands").unwrap();
+    let ms = m.schedule_model(&b.topology, 10);
+    for (l, layer) in ms.layers.iter().enumerate() {
+        println!(
+            "layer {l} Γ(B={}, I={}, U={}): {} rolls @ {:.0}% utilization",
+            layer.gamma.batches,
+            layer.gamma.inputs,
+            layer.gamma.neurons,
+            layer.total_rolls(),
+            layer.utilization() * 100.0
+        );
+    }
+    println!(
+        "total {} rolls, {} TCD cycles, mean utilization {:.0}%",
+        ms.total_rolls(),
+        ms.compute_cycles(true),
+        ms.utilization() * 100.0
+    );
+}

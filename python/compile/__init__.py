@@ -1,0 +1,10 @@
+"""Build-time compile package (never imported at runtime).
+
+The TCD carry-save planes are int64 (exactness headroom over the int32
+products -- mirrors the Rust 40-bit ACC planes), so x64 must be enabled
+before any jax arrays exist.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,80 @@
+"""AOT lowering: jax → HLO text artifacts for the Rust PJRT runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot [--out-dir DIR] [--batch B] [--no-pallas]
+Writes one `<slug>_b<B>.hlo.txt` per Table-IV benchmark plus
+`manifest.txt` (`name batch topology seed` per line — parsed by
+`rust/src/runtime/artifact.rs`).
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import BENCHMARKS, forward_fn
+
+#: Default batch shape of the artifacts (also the coordinator's batch).
+DEFAULT_BATCH = 8
+#: Seed recorded in the manifest (the Rust side synthesizes weights and
+#: inputs from it; weights are runtime inputs so this only seeds inputs).
+MANIFEST_SEED = 0xF1610
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_benchmark(bench, batch: int, use_pallas: bool) -> str:
+    """Lower one benchmark's forward pass to HLO text."""
+    layers = bench.layers
+    n_trans = len(layers) - 1
+    specs = [jax.ShapeDtypeStruct((batch, layers[0]), jnp.int32)]
+    specs += [
+        jax.ShapeDtypeStruct((o, i), jnp.int32)
+        for i, o in zip(layers[:-1], layers[1:])
+    ]
+    lowered = jax.jit(forward_fn(n_trans, use_pallas=use_pallas)).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp reference instead of the Pallas kernel",
+    )
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    manifest_lines = ["# name batch topology seed"]
+    for bench in BENCHMARKS:
+        name = f"{bench.slug}_b{args.batch}"
+        text = lower_benchmark(bench, args.batch, use_pallas=not args.no_pallas)
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest_lines.append(
+            f"{name} {args.batch} {bench.topology_str} {MANIFEST_SEED}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    (out / "manifest.txt").write_text("\n".join(manifest_lines) + "\n")
+    print(f"wrote {out / 'manifest.txt'} ({len(BENCHMARKS)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

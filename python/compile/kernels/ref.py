@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the quantized MLP layer — the correctness ground
+truth for the Pallas kernel and the semantic twin of the Rust reference
+(`rust/src/model/mlp.rs::forward_sample` / `model::fixedpoint`).
+
+Fixed-point contract (pinned on both sides):
+* activations and weights are signed 16-bit Q7.8;
+* the dot product accumulates exactly (64-bit here; the Rust TCD-MAC's
+  40-bit planes never wrap at the synthetic-model magnitudes — tested);
+* quantization is an arithmetic right shift by FRAC_BITS with saturation
+  to i16 (Fig. 4), ReLU on hidden layers only.
+"""
+
+import jax.numpy as jnp
+
+FRAC_BITS = 8
+Q_MIN = -(1 << 15)
+Q_MAX = (1 << 15) - 1
+
+
+def quantize_acc(acc):
+    """Arithmetic shift + saturate — `model::fixedpoint::quantize_acc`."""
+    return jnp.clip(acc >> FRAC_BITS, Q_MIN, Q_MAX).astype(jnp.int16)
+
+
+def mlp_layer_ref(x, w, relu: bool):
+    """One quantized layer: x [B, I] i16, w [O, I] i16 → [B, O] i16."""
+    acc = jnp.matmul(
+        x.astype(jnp.int64), w.astype(jnp.int64).T, preferred_element_type=jnp.int64
+    )
+    q = quantize_acc(acc)
+    return jnp.maximum(q, 0) if relu else q
+
+
+def mlp_forward_ref(x, weights):
+    """Full forward pass; ReLU on all but the last transition."""
+    h = x
+    for l, w in enumerate(weights):
+        h = mlp_layer_ref(h, w, relu=(l + 1 < len(weights)))
+    return h

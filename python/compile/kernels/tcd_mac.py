@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: the TCD-MAC insight as a carry-save reduction.
+
+Hardware adaptation (DESIGN.md §5): the ASIC defers carry propagation
+across the *cycles* of a dot-product stream; on a TPU-shaped machine the
+same insight applies across the *K-blocks* of a tiled matmul — keep the
+accumulator in redundant (sum, carry) form in VMEM scratch between grid
+steps, compress each new partial-product block with bitwise 3:2 logic
+(XOR/majority — the GEN layer), and resolve the carries exactly once at
+the K-tail (the CPM cycle / PCPA).
+
+Per grid step k (the CDM cycle):
+    p      = x[:, kblk] · wᵀ[kblk, :]            # DRU + intra-block CEL
+    s, c   = s ^ p ^ c,  ((s&p)|(s&c)|(p&c)) << 1  # GEN: defer the carry
+invariant (property-tested):  s + c  ==  Σ_k p_k   (mod 2^64)
+Final step: acc = s + c (PCPA), then the Fig. 4 quantize + ReLU unit.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU efficiency is estimated analytically in DESIGN.md.
+BlockSpec streams one (B, K_BLK) feature tile and one (O, K_BLK) weight
+tile per step — the software analog of the Fig.-7 row-buffer schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FRAC_BITS, Q_MAX, Q_MIN
+
+# Default K-tile: 128 lanes, matching the W-Mem row of 128 words (Fig. 7).
+DEFAULT_BLOCK_K = 128
+
+
+def _tcd_layer_kernel(x_ref, w_ref, o_ref, s_ref, c_ref, *, nsteps, relu):
+    """One grid step of the carry-deferring layer reduction."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    # DRU + intra-block compression: the partial-product block sum.
+    x = x_ref[...].astype(jnp.int64)  # [B, K_BLK]
+    w = w_ref[...].astype(jnp.int64)  # [O, K_BLK]
+    p = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int64
+    )  # [B, O]
+
+    # GEN layer: 3:2-compress (s, c, p) and defer the generate bits.
+    s = s_ref[...]
+    c = c_ref[...]
+    s_ref[...] = s ^ p ^ c
+    c_ref[...] = ((s & p) | (s & c) | (p & c)) << 1
+
+    @pl.when(k == nsteps - 1)
+    def _resolve():
+        # CPM cycle: the deferred PCPA resolves the redundant planes...
+        acc = s_ref[...] + c_ref[...]
+        # ...and the Fig.-4 unit quantizes (+ optionally rectifies).
+        q = jnp.clip(acc >> FRAC_BITS, Q_MIN, Q_MAX).astype(jnp.int16)
+        o_ref[...] = jnp.maximum(q, 0) if relu else q
+
+
+def tcd_mlp_layer(x, w, relu: bool, block_k: int = DEFAULT_BLOCK_K):
+    """Quantized MLP layer via the TCD carry-save Pallas kernel.
+
+    x: [B, I] int16 activations; w: [O, I] int16 weights → [B, O] int16.
+    I is zero-padded to a multiple of `block_k` (zero products change
+    nothing — exactly like the NPE streaming idle lanes).
+    """
+    b, i = x.shape
+    o, i2 = w.shape
+    assert i == i2, f"fan-in mismatch: {i} vs {i2}"
+    kb = min(block_k, max(i, 1))
+    pad = (-i) % kb
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    nsteps = (i + pad) // kb
+
+    kernel = functools.partial(_tcd_layer_kernel, nsteps=nsteps, relu=relu)
+    out, _s, _c = pl.pallas_call(
+        kernel,
+        grid=(nsteps,),
+        in_specs=[
+            pl.BlockSpec((b, kb), lambda k: (0, k)),  # feature row buffer
+            pl.BlockSpec((o, kb), lambda k: (0, k)),  # weight row buffer
+        ],
+        out_specs=[
+            pl.BlockSpec((b, o), lambda k: (0, 0)),  # resolved outputs
+            pl.BlockSpec((b, o), lambda k: (0, 0)),  # ORU plane
+            pl.BlockSpec((b, o), lambda k: (0, 0)),  # CBU plane
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, o), jnp.int16),
+            jax.ShapeDtypeStruct((b, o), jnp.int64),
+            jax.ShapeDtypeStruct((b, o), jnp.int64),
+        ],
+        interpret=True,
+    )(x, w)
+    return out
+
+
+def tcd_mlp_forward(x, weights, block_k: int = DEFAULT_BLOCK_K):
+    """Full MLP forward through the Pallas layer kernel."""
+    h = x
+    for l, w in enumerate(weights):
+        h = tcd_mlp_layer(h, w, relu=(l + 1 < len(weights)), block_k=block_k)
+    return h

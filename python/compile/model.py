@@ -1,0 +1,81 @@
+"""L2: the quantized MLP model — topology zoo, synthetic weights, and the
+forward function that `aot.py` lowers to HLO.
+
+Weights are *runtime inputs* of the lowered HLO (not baked constants): the
+Rust leader generates them with the mirrored SplitMix64 stream and feeds
+them per call, so one artifact per (topology, batch) serves any seed.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.ref import mlp_forward_ref
+from .kernels.tcd_mac import tcd_mlp_forward
+from .rng import bounded_i16, layer_seed
+
+# Mirrors rust/src/model/mlp.rs.
+WEIGHT_BOUND = 96
+FEATURE_BOUND = 127
+
+
+@dataclass(frozen=True)
+class Benchmark:
+    """One Table-IV row (topology as printed in the paper)."""
+
+    dataset: str
+    layers: tuple
+
+    @property
+    def slug(self) -> str:
+        return self.dataset.lower().replace(" ", "_").replace("-", "_")
+
+    @property
+    def topology_str(self) -> str:
+        return ":".join(str(n) for n in self.layers)
+
+
+#: Table IV (same order/values as rust/src/model/zoo.rs).
+BENCHMARKS = [
+    Benchmark("MNIST", (784, 700, 10)),
+    Benchmark("Adult", (14, 48, 2)),
+    Benchmark("Mibench data", (8, 140, 2)),
+    Benchmark("Wine", (13, 10, 3)),
+    Benchmark("Iris", (4, 10, 5, 3)),
+    Benchmark("Poker Hands", (10, 85, 50, 10)),
+    Benchmark("Fashion MNIST", (728, 256, 128, 100, 10)),
+]
+
+
+def synth_weights(layers, seed: int):
+    """Mirror of `QuantizedMlp::synthesize`: one [O, I] int16 matrix per
+    transition, drawn from the layer-indexed SplitMix64 stream."""
+    out = []
+    for l, (i, o) in enumerate(zip(layers[:-1], layers[1:])):
+        flat = bounded_i16(layer_seed(seed, l), i * o, WEIGHT_BOUND)
+        out.append(flat.reshape(o, i))
+    return out
+
+
+def synth_inputs(layers, batches: int, seed: int):
+    """Mirror of `QuantizedMlp::synth_inputs`."""
+    flat = bounded_i16(seed, batches * layers[0], FEATURE_BOUND)
+    return flat.reshape(batches, layers[0])
+
+
+def forward_fn(n_layers: int, use_pallas: bool = True):
+    """The function lowered to HLO.
+
+    Interface dtypes are s32 (the widest the `xla` crate's Literal
+    helpers cover comfortably); values are i16-ranged. Signature:
+    `f(x: s32[B, I], w_0: s32[H1, I], …) -> (y: s32[B, O],)`.
+    """
+
+    def f(x, *weights):
+        assert len(weights) == n_layers
+        h = x.astype(jnp.int16)
+        ws = [w.astype(jnp.int16) for w in weights]
+        y = tcd_mlp_forward(h, ws) if use_pallas else mlp_forward_ref(h, ws)
+        return (y.astype(jnp.int32),)
+
+    return f

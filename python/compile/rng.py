@@ -1,0 +1,36 @@
+"""SplitMix64 — the deterministic PRNG shared with the Rust side.
+
+`rust/src/util/rng.rs` implements the identical algorithm; both sides must
+produce identical synthetic weights/features so the NPE simulator and the
+JAX/PJRT artifacts operate on the same networks with no weight-file
+interchange. The cross-language tests pin the streams.
+"""
+
+import numpy as np
+
+GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def splitmix64_stream(seed: int, n: int) -> np.ndarray:
+    """First `n` outputs of SplitMix64 seeded with `seed` (uint64)."""
+    with np.errstate(over="ignore"):
+        i = np.arange(1, n + 1, dtype=np.uint64)
+        z = np.uint64(seed) + i * GOLDEN
+        z = (z ^ (z >> np.uint64(30))) * _M1
+        z = (z ^ (z >> np.uint64(27))) * _M2
+        return z ^ (z >> np.uint64(31))
+
+
+def bounded_i16(seed: int, n: int, bound: int) -> np.ndarray:
+    """Mirror of `SplitMix64::next_i16_bounded`: uniform in [-bound, bound]."""
+    span = np.uint64(2 * bound + 1)
+    vals = splitmix64_stream(seed, n) % span
+    return (vals.astype(np.int64) - bound).astype(np.int16)
+
+
+def layer_seed(seed: int, layer: int) -> int:
+    """Mirror of `QuantizedMlp::synthesize`'s per-layer seed derivation."""
+    with np.errstate(over="ignore"):
+        return int(np.uint64(seed) ^ (GOLDEN * np.uint64(layer + 1)))

@@ -1,0 +1,52 @@
+"""AOT pipeline: lowered HLO text must be loadable-shaped (parameters in
+the (x, w_0, …) order, s32 interface, tuple result) and numerically equal
+to the oracle when round-tripped through XLA compilation here."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import lower_benchmark, to_hlo_text
+from compile.model import BENCHMARKS, forward_fn, synth_inputs, synth_weights
+from compile.kernels.ref import mlp_forward_ref
+
+
+def small_bench():
+    return next(b for b in BENCHMARKS if b.dataset == "Iris")
+
+
+def test_hlo_text_structure():
+    text = lower_benchmark(small_bench(), batch=4, use_pallas=True)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # 1 input + 3 weight parameters for 4:10:5:3.
+    for i in range(4):
+        assert f"parameter({i})" in text
+    assert "s32[4,4]" in text or "s32[4, 4]" in text  # input x. (B=4, I=4)
+
+
+def test_pallas_and_ref_lower_to_same_numbers():
+    bench = small_bench()
+    ws = synth_weights(bench.layers, 3)
+    x = synth_inputs(bench.layers, 4, 5)
+    outs = []
+    for use_pallas in (True, False):
+        f = jax.jit(forward_fn(len(ws), use_pallas=use_pallas))
+        (y,) = f(jnp.asarray(x, jnp.int32), *[jnp.asarray(w, jnp.int32) for w in ws])
+        outs.append(np.asarray(y))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    want = mlp_forward_ref(jnp.asarray(x, jnp.int16), [jnp.asarray(w) for w in ws])
+    np.testing.assert_array_equal(outs[0].astype(np.int16), np.asarray(want))
+
+
+@pytest.mark.parametrize("bench", BENCHMARKS, ids=lambda b: b.slug)
+def test_all_benchmarks_lower(bench):
+    # Lowering (not compiling) every topology must succeed and mention
+    # the right output arity.
+    text = lower_benchmark(bench, batch=2, use_pallas=True)
+    assert "HloModule" in text
+    assert f"s32[2,{bench.layers[-1]}]" in text.replace(" ", "").replace(
+        "s32[2,", "s32[2,"
+    )

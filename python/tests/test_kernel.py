@@ -1,0 +1,100 @@
+"""L1 correctness: the TCD carry-save Pallas kernel vs the pure-jnp oracle.
+
+This is the core build-time correctness signal: if the kernel and ref.py
+agree (and ref.py agrees with the Rust reference — test_cross_language),
+the whole stack computes the same quantized MLP.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import mlp_forward_ref, mlp_layer_ref, quantize_acc
+from compile.kernels.tcd_mac import tcd_mlp_forward, tcd_mlp_layer
+
+
+def rand_i16(rng, shape, lo=-32768, hi=32767):
+    return rng.integers(lo, hi + 1, size=shape, dtype=np.int64).astype(np.int16)
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize(
+    "b,i,o,block_k",
+    [
+        (1, 1, 1, 128),
+        (2, 7, 3, 4),      # I not a multiple of block_k → padding path
+        (4, 128, 16, 128), # exactly one step
+        (3, 300, 5, 128),  # multi-step with remainder
+        (8, 784, 700, 128),  # MNIST layer shape
+    ],
+)
+def test_kernel_matches_ref_shapes(relu, b, i, o, block_k):
+    rng = np.random.default_rng(b * 1000 + i + o)
+    # Magnitudes like the synthetic models (occasional saturation).
+    x = rand_i16(rng, (b, i), -127, 127)
+    w = rand_i16(rng, (o, i), -96, 96)
+    got = tcd_mlp_layer(jnp.asarray(x), jnp.asarray(w), relu=relu, block_k=block_k)
+    want = mlp_layer_ref(jnp.asarray(x), jnp.asarray(w), relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_full_range_values():
+    # Full int16 range, including i16::MIN products and saturation.
+    rng = np.random.default_rng(7)
+    x = rand_i16(rng, (3, 50))
+    w = rand_i16(rng, (4, 50))
+    got = tcd_mlp_layer(jnp.asarray(x), jnp.asarray(w), relu=False, block_k=16)
+    want = mlp_layer_ref(jnp.asarray(x), jnp.asarray(w), relu=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_saturation_rails():
+    # One huge positive and one huge negative accumulator.
+    x = jnp.full((1, 64), 127, jnp.int16)
+    w_pos = jnp.full((1, 64), 96, jnp.int16)
+    w_neg = jnp.full((1, 64), -96, jnp.int16)
+    y_pos = tcd_mlp_layer(x, w_pos, relu=False, block_k=16)
+    y_neg = tcd_mlp_layer(x, w_neg, relu=False, block_k=16)
+    acc = 127 * 96 * 64
+    assert int(y_pos[0, 0]) == int(quantize_acc(jnp.int64(acc)))
+    assert int(y_neg[0, 0]) == int(quantize_acc(jnp.int64(-acc)))
+
+
+def test_relu_zeroes_negatives():
+    x = jnp.array([[256]], jnp.int16)  # 1.0 in Q7.8
+    w = jnp.array([[-256]], jnp.int16)  # -1.0
+    assert int(tcd_mlp_layer(x, w, relu=True)[0, 0]) == 0
+    assert int(tcd_mlp_layer(x, w, relu=False)[0, 0]) == -256
+
+
+def test_forward_chain_matches_ref():
+    rng = np.random.default_rng(11)
+    layers = [20, 12, 6, 4]
+    x = rand_i16(rng, (5, layers[0]), -127, 127)
+    ws = [
+        rand_i16(rng, (o, i), -96, 96)
+        for i, o in zip(layers[:-1], layers[1:])
+    ]
+    got = tcd_mlp_forward(jnp.asarray(x), [jnp.asarray(w) for w in ws])
+    want = mlp_forward_ref(jnp.asarray(x), [jnp.asarray(w) for w in ws])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    i=st.integers(1, 96),
+    o=st.integers(1, 12),
+    block_k=st.sampled_from([4, 16, 128]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(b, i, o, block_k, relu, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_i16(rng, (b, i))
+    w = rand_i16(rng, (o, i))
+    got = tcd_mlp_layer(jnp.asarray(x), jnp.asarray(w), relu=relu, block_k=block_k)
+    want = mlp_layer_ref(jnp.asarray(x), jnp.asarray(w), relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

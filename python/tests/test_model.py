@@ -1,0 +1,85 @@
+"""L2 correctness: synthetic-model generation and the lowered forward
+function, including the cross-language RNG pins against the Rust side."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.model import (
+    BENCHMARKS,
+    FEATURE_BOUND,
+    WEIGHT_BOUND,
+    forward_fn,
+    synth_inputs,
+    synth_weights,
+)
+from compile.kernels.ref import mlp_forward_ref
+from compile.rng import bounded_i16, splitmix64_stream
+
+
+def test_splitmix_pinned_against_rust():
+    # Values printed by rust/src/util/rng.rs (SplitMix64::new(42)).
+    want = [0xBDD732262FEB6E95, 0x28EFE333B266F103, 0x47526757130F9F52, 0x581CE1FF0E4AE394]
+    got = [int(v) for v in splitmix64_stream(42, 4)]
+    assert got == want
+
+
+def test_bounded_i16_pinned_against_rust():
+    # SplitMix64::new(0xF16_10).next_i16_bounded(96), first 8 values.
+    want = [-4, 34, 84, -42, 4, -48, 53, -40]
+    got = [int(v) for v in bounded_i16(0xF1610, 8, 96)]
+    assert got == want
+
+
+def test_benchmarks_match_table4():
+    assert len(BENCHMARKS) == 7
+    by_name = {b.dataset: b.layers for b in BENCHMARKS}
+    assert by_name["MNIST"] == (784, 700, 10)
+    assert by_name["Iris"] == (4, 10, 5, 3)
+    assert by_name["Fashion MNIST"] == (728, 256, 128, 100, 10)
+
+
+def test_synth_shapes_and_bounds():
+    layers = (13, 10, 3)
+    ws = synth_weights(layers, 5)
+    assert [w.shape for w in ws] == [(10, 13), (3, 10)]
+    assert all(np.abs(w).max() <= WEIGHT_BOUND for w in ws)
+    x = synth_inputs(layers, 6, 9)
+    assert x.shape == (6, 13)
+    assert np.abs(x).max() <= FEATURE_BOUND
+
+
+def test_weights_deterministic_per_seed():
+    a = synth_weights((4, 3, 2), 1)
+    b = synth_weights((4, 3, 2), 1)
+    c = synth_weights((4, 3, 2), 2)
+    assert all((x == y).all() for x, y in zip(a, b))
+    assert any((x != y).any() for x, y in zip(a, c))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_forward_fn_matches_ref(use_pallas):
+    layers = (12, 9, 4)
+    ws = synth_weights(layers, 3)
+    x = synth_inputs(layers, 5, 4)
+    f = jax.jit(forward_fn(len(ws), use_pallas=use_pallas))
+    (y,) = f(
+        jnp.asarray(x, jnp.int32), *[jnp.asarray(w, jnp.int32) for w in ws]
+    )
+    want = mlp_forward_ref(
+        jnp.asarray(x, jnp.int16), [jnp.asarray(w) for w in ws]
+    )
+    assert y.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(y, np.int16), np.asarray(want))
+
+
+def test_forward_fn_output_in_i16_range():
+    layers = (8, 6, 2)
+    ws = synth_weights(layers, 8)
+    x = synth_inputs(layers, 3, 9)
+    f = forward_fn(len(ws))
+    (y,) = f(jnp.asarray(x, jnp.int32), *[jnp.asarray(w, jnp.int32) for w in ws])
+    y = np.asarray(y)
+    assert y.min() >= -(1 << 15) and y.max() <= (1 << 15) - 1

@@ -1,0 +1,64 @@
+//! Bench (substrate) — the bit-level arithmetic hot path: per-step cost of
+//! the TCD-MAC vs conventional MAC functional models, and the CEL
+//! reduction kernel that dominates both. This is the simulator's inner
+//! loop, targeted by EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench bitsim_bench`
+
+use tcd_npe::bench::BenchTimer;
+use tcd_npe::bitsim::compressor::cel_reduce;
+use tcd_npe::bitsim::multiplier::{MultKind, PartialProducts};
+use tcd_npe::tcdmac::MacKind;
+use tcd_npe::util::SplitMix64;
+
+fn main() {
+    println!("=== MAC functional-model step cost ===");
+    for kind in MacKind::table1_order() {
+        let mut t = BenchTimer::new(format!("mac-step/{}", kind.name()));
+        let mut rng = SplitMix64::new(1);
+        let mut mac = kind.build();
+        t.run(1, 5, || {
+            for _ in 0..10_000 {
+                mac.step(rng.next_i16(), rng.next_i16());
+            }
+            mac.finalize()
+        });
+        println!("{}  (per 10k steps)", t.report());
+    }
+
+    println!("\n=== partial-product generation ===");
+    for kind in [
+        MultKind::Simple,
+        MultKind::BoothRadix2,
+        MultKind::BoothRadix4,
+        MultKind::BoothRadix8,
+    ] {
+        let pp = PartialProducts::new(kind, 40);
+        let mut rng = SplitMix64::new(2);
+        let mut t = BenchTimer::new(format!("ppgen/{}", kind.short()));
+        t.run(1, 5, || {
+            let mut acc = 0u64;
+            for _ in 0..10_000 {
+                acc ^= pp.rows(rng.next_i16(), rng.next_i16()).len() as u64;
+            }
+            acc
+        });
+        println!("{}  (per 10k ops)", t.report());
+    }
+
+    println!("\n=== CEL carry-save reduction ===");
+    let mut rng = SplitMix64::new(3);
+    for rows in [6usize, 8, 16, 18] {
+        let data: Vec<u64> = (0..rows).map(|_| rng.next_u64()).collect();
+        let mut t = BenchTimer::new(format!("cel-reduce/{rows}-rows"));
+        t.run(1, 5, || {
+            let mut acc = 0u64;
+            for _ in 0..10_000 {
+                let ((s, c), _) = cel_reduce(&data, 40);
+                acc ^= s ^ c;
+            }
+            acc
+        });
+        println!("{}  (per 10k reductions)", t.report());
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench E7/E8 — regenerates Fig. 10 (execution time and energy breakdown
+//! of the four dataflows across the seven benchmarks) and times the sweep.
+//! Also prints Table III and Table IV so every §IV artifact is covered by
+//! `cargo bench`.
+//!
+//! Run: `cargo bench --bench fig10_exec_energy`
+
+use tcd_npe::bench::{fig10_rows, render_fig10, render_table3, render_table4, BenchTimer};
+
+fn main() {
+    println!("=== Table III: TCD-NPE implementation PPA ===\n");
+    println!("{}", render_table3());
+    println!("=== Table IV: benchmark suite ===\n");
+    println!("{}", render_table4());
+
+    println!("=== Fig. 10: dataflow comparison across benchmarks ===\n");
+    let rows = fig10_rows(tcd_npe::bench::fig10::FIG10_BATCHES);
+    println!("{}", render_fig10(&rows));
+
+    // Paper headline check, printed for EXPERIMENTS.md.
+    println!("headline ratios (conv-OS time / TCD time per benchmark):");
+    for chunk in rows.chunks(4) {
+        println!(
+            "  {:<16} {:.2}x time, {:.2}x energy",
+            chunk[0].dataset,
+            chunk[1].report.time_ns / chunk[0].report.time_ns,
+            chunk[1].report.energy.on_chip_pj() / chunk[0].report.energy.on_chip_pj()
+        );
+    }
+
+    let mut t = BenchTimer::new("fig10/full-sweep(B=10)");
+    t.run(0, 3, || fig10_rows(10).len());
+    println!("\n{}", t.report());
+}

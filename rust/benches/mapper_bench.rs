@@ -1,0 +1,53 @@
+//! Bench E5/E6 — the Algorithm-1 mapper: schedule quality on the paper's
+//! walkthroughs plus scheduling throughput (it runs per batch-arrival on
+//! the coordinator's control path, so it must be fast).
+//!
+//! Run: `cargo bench --bench mapper_bench`
+
+use tcd_npe::bench::BenchTimer;
+use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry};
+use tcd_npe::model::benchmarks;
+
+fn main() {
+    println!("=== Fig. 5/6 schedule quality ===");
+    let mut m = MapperTree::new(NpeGeometry::WALKTHROUGH);
+    for (b, u) in [(3usize, 9usize), (5, 7)] {
+        let s = m.schedule_layer(Gamma::new(b, 100, u));
+        println!(
+            "Γ({b}, ·, {u}) on 6x3: {} rolls, {:.0}% utilization",
+            s.total_rolls(),
+            s.utilization() * 100.0
+        );
+    }
+
+    println!("\n=== scheduling throughput ===");
+    for bench in benchmarks() {
+        for batches in [1usize, 10, 64] {
+            let mut t = BenchTimer::new(format!(
+                "schedule/{}/B={batches}",
+                bench.dataset.replace(' ', "-")
+            ));
+            // Cold mapper each iteration: no memo reuse across runs.
+            t.run(1, 10, || {
+                let mut m = MapperTree::new(NpeGeometry::PAPER);
+                m.schedule_model(&bench.topology, batches).total_rolls()
+            });
+            println!("{}", t.report());
+        }
+    }
+
+    println!("\n=== memoization effect (MNIST, B=64) ===");
+    let topo = &benchmarks()[0].topology;
+    let mut cold = BenchTimer::new("mapper/cold");
+    cold.run(1, 10, || {
+        MapperTree::new(NpeGeometry::PAPER)
+            .schedule_model(topo, 64)
+            .total_rolls()
+    });
+    println!("{}", cold.report());
+    let mut warm_mapper = MapperTree::new(NpeGeometry::PAPER);
+    warm_mapper.schedule_model(topo, 64);
+    let mut warm = BenchTimer::new("mapper/warm(memoized)");
+    warm.run(1, 10, || warm_mapper.schedule_model(topo, 64).total_rolls());
+    println!("{}", warm.report());
+}

@@ -1,0 +1,64 @@
+//! Bench E11 — the Fig.-7 memory model: access-count reductions per
+//! configuration and traffic-accounting throughput, plus the RLC codec.
+//!
+//! Run: `cargo bench --bench memory_bench`
+
+use tcd_npe::bench::BenchTimer;
+use tcd_npe::mapper::{MapperTree, NpeGeometry};
+use tcd_npe::memory::rlc::RlcCodec;
+use tcd_npe::memory::{FmArrangement, NpeMemorySystem, WMemArrangement};
+use tcd_npe::model::{benchmarks, QuantizedMlp};
+use tcd_npe::util::SplitMix64;
+
+fn main() {
+    println!("=== Fig. 7 worked example (NPE(2,64), Γ(2,200,100)) ===");
+    let w = WMemArrangement { row_words: 128, n: 64, inputs: 200, neurons: 100 };
+    let f = FmArrangement { row_words: 64, batches: 2, inputs: 200 };
+    println!(
+        "W-Mem: {} rows/group x {} groups, access reduction {:.0}x (paper: 100 x 2, 2x)",
+        w.rows_per_group(),
+        w.groups(),
+        w.access_reduction()
+    );
+    println!(
+        "FM-Mem: {} rows/batch, access reduction {:.0}x (paper: 7, 32x)\n",
+        f.rows_per_batch(),
+        f.access_reduction()
+    );
+
+    println!("=== traffic accounting throughput ===");
+    for bench in benchmarks() {
+        let mlp = QuantizedMlp::synthesize(bench.topology.clone(), 1);
+        let inputs = mlp.synth_inputs(10, 2);
+        let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+        let schedule = mapper.schedule_model(&bench.topology, 10);
+        let mut t = BenchTimer::new(format!("traffic/{}", bench.dataset.replace(' ', "-")));
+        t.run(1, 5, || {
+            let mut mem = NpeMemorySystem::new();
+            mem.account_schedule(&schedule, &mlp, &inputs)
+        });
+        println!("{}", t.report());
+    }
+
+    println!("\n=== RLC codec ===");
+    let mut rng = SplitMix64::new(3);
+    for (label, zero_pct) in [("dense", 0u64), ("relu-like-60", 60), ("sparse-90", 90)] {
+        let data: Vec<i16> = (0..65536)
+            .map(|_| {
+                if rng.next_u64() % 100 < zero_pct {
+                    0
+                } else {
+                    rng.next_i16()
+                }
+            })
+            .collect();
+        let bits = RlcCodec::encoded_bits(&data);
+        let mut t = BenchTimer::new(format!("rlc/encode+decode/{label}"));
+        t.run(1, 5, || RlcCodec::decode(&RlcCodec::encode(&data)).len());
+        println!(
+            "{}   (compression: {:.2}x)",
+            t.report(),
+            (data.len() as f64 * 16.0) / bits as f64
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench E1 — regenerates Table I (MAC PPA) and times the 20K-cycle
+//! activity characterization of each design point.
+//!
+//! Run: `cargo bench --bench table1_mac_ppa`
+
+use tcd_npe::bench::{render_table1, table1_rows, BenchTimer};
+use tcd_npe::tcdmac::{measure_activity, MacKind};
+
+fn main() {
+    println!("=== Table I: PPA of conventional MACs vs TCD-MAC ===\n");
+    println!("{}", render_table1(&table1_rows()));
+
+    println!("characterization cost (20K-cycle activity sim per design):");
+    for kind in MacKind::table1_order() {
+        let mut t = BenchTimer::new(format!("activity/{}", kind.name()));
+        t.run(1, 5, || measure_activity(kind, 20_000, 1));
+        println!("{}", t.report());
+    }
+}

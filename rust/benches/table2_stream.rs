@@ -1,0 +1,34 @@
+//! Bench E2 — regenerates Table II (stream throughput/energy improvement)
+//! and additionally *executes* streams of each length on the functional
+//! MAC models to time the simulation substrate itself.
+//!
+//! Run: `cargo bench --bench table2_stream`
+
+use tcd_npe::bench::{render_table2, table2_rows, BenchTimer, STREAM_SIZES};
+use tcd_npe::tcdmac::MacKind;
+use tcd_npe::util::SplitMix64;
+
+fn main() {
+    println!("=== Table II: TCD-MAC improvement vs stream length ===\n");
+    println!("{}", render_table2(&table2_rows()));
+    println!(
+        "(column labels corrected vs the paper — its throughput/energy headers\n\
+         are swapped; derivation pinned in bench::table2 tests)\n"
+    );
+
+    println!("functional-model stream execution cost:");
+    for kind in [MacKind::Tcd, tcd_npe::dataflow::best_conventional()] {
+        for n in STREAM_SIZES {
+            let mut t = BenchTimer::new(format!("stream/{}/{n}", kind.name()));
+            t.run(1, 5, || {
+                let mut mac = kind.build();
+                let mut rng = SplitMix64::new(7);
+                for _ in 0..n {
+                    mac.step(rng.next_i16(), rng.next_i16());
+                }
+                mac.finalize()
+            });
+            println!("{}", t.report());
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Minimal wall-clock bench harness (criterion is not in the offline
+//! crate set). Measures median-of-runs with warmup; used by the
+//! `cargo bench` targets.
+
+use std::time::Instant;
+
+/// A simple timer harness: warms up, runs `iters` timed iterations,
+/// reports min/median/mean.
+pub struct BenchTimer {
+    pub name: String,
+    samples_ns: Vec<f64>,
+}
+
+impl BenchTimer {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), samples_ns: Vec::new() }
+    }
+
+    /// Run `f` `iters` times after `warmup` unmeasured runs.
+    pub fn run<T>(&mut self, warmup: usize, iters: usize, mut f: impl FnMut() -> T) {
+        for _ in 0..warmup {
+            std::hint::black_box(f());
+        }
+        for _ in 0..iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            self.samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            0.0
+        } else {
+            s[s.len() / 2]
+        }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            0.0
+        } else {
+            self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+        }
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// One-line report in a `cargo bench`-like format.
+    pub fn report(&self) -> String {
+        fn human(ns: f64) -> String {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{:.0} ns", ns)
+            }
+        }
+        format!(
+            "{:<48} min {:>12}  median {:>12}  mean {:>12}  ({} samples)",
+            self.name,
+            human(self.min_ns()),
+            human(self.median_ns()),
+            human(self.mean_ns()),
+            self.samples_ns.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut t = BenchTimer::new("spin");
+        t.run(1, 5, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(t.median_ns() > 0.0);
+        assert!(t.min_ns() <= t.median_ns());
+        assert!(t.report().contains("spin"));
+    }
+}

@@ -1,0 +1,45 @@
+//! Generators for every table and figure of the paper's evaluation
+//! (§IV), shared between the CLI (`tcd-npe table1 …`) and the
+//! `cargo bench` harnesses. Each generator returns structured rows *and*
+//! renders the paper-shaped text table.
+
+pub mod ablation;
+pub mod fig10;
+pub mod harness;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use fig10::{fig10_rows, render_fig10, Fig10Row};
+pub use harness::BenchTimer;
+pub use table1::{render_table1, table1_rows};
+pub use table2::{render_table2, table2_rows, Table2Row, STREAM_SIZES};
+pub use table3::render_table3;
+
+use crate::model::zoo::benchmarks;
+use crate::util::TextTable;
+
+/// Render Table IV (the benchmark suite itself).
+pub fn render_table4() -> String {
+    let mut t = TextTable::new(vec!["Application", "Dataset", "Topology", "MACs/sample"]);
+    for b in benchmarks() {
+        t.row(vec![
+            b.application.to_string(),
+            b.dataset.to_string(),
+            b.topology.display(),
+            b.topology.macs_per_sample().to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table4_renders_all_rows() {
+        let s = super::render_table4();
+        assert!(s.contains("MNIST"));
+        assert!(s.contains("784:700:10"));
+        assert_eq!(s.lines().count(), 2 + 7);
+    }
+}

@@ -1,0 +1,83 @@
+//! Table I generator: PPA of the eight conventional MACs vs TCD-MAC,
+//! printed alongside the paper's published values.
+
+use crate::ppa::paper;
+use crate::ppa::PpaReport;
+use crate::tcdmac::table1_reports;
+use crate::util::TextTable;
+
+/// Measured Table-I rows (paper row order).
+pub fn table1_rows() -> Vec<PpaReport> {
+    table1_reports()
+}
+
+/// Render measured-vs-paper Table I.
+pub fn render_table1(rows: &[PpaReport]) -> String {
+    let mut t = TextTable::new(vec![
+        "MAC",
+        "Area(um2)",
+        "Power(uW)",
+        "Delay(ns)",
+        "PDP(pJ)",
+        "paper-Area",
+        "paper-Power",
+        "paper-Delay",
+        "paper-PDP",
+    ]);
+    for (r, p) in rows.iter().zip(paper::TABLE1) {
+        t.row(vec![
+            r.name.to_string(),
+            format!("{:.0}", r.area_um2),
+            format!("{:.0}", r.power_uw),
+            format!("{:.2}", r.delay_ns),
+            format!("{:.2}", r.pdp_pj()),
+            p.area_um2.map_or("-".into(), |a| format!("{a:.0}")),
+            format!("{:.0}", p.power_uw),
+            format!("{:.2}", p.delay_ns),
+            format!("{:.2}", p.pdp_pj),
+        ]);
+    }
+    // Improvement summary line (paper §IV-B claims).
+    let tcd = rows.last().unwrap();
+    let conv = &rows[..rows.len() - 1];
+    let imp = |f: fn(&PpaReport) -> f64| {
+        let lo = conv
+            .iter()
+            .map(|r| (1.0 - f(tcd) / f(r)) * 100.0)
+            .fold(f64::INFINITY, f64::min);
+        let hi = conv
+            .iter()
+            .map(|r| (1.0 - f(tcd) / f(r)) * 100.0)
+            .fold(f64::NEG_INFINITY, f64::max);
+        (lo, hi)
+    };
+    let (alo, ahi) = imp(|r| r.area_um2);
+    let (plo, phi) = imp(|r| r.power_uw);
+    let (dlo, dhi) = imp(|r| r.pdp_pj());
+    format!(
+        "{}\nTCD-MAC improvement vs conventional: area {:.0}%–{:.0}% (paper 23–40%), \
+         power {:.0}%–{:.0}% (paper 4–31%), PDP {:.0}%–{:.0}% (paper 46–62%)\n",
+        t.render(),
+        alo,
+        ahi,
+        plo,
+        phi,
+        dlo,
+        dhi
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_rows_rendered() {
+        let rows = table1_rows();
+        assert_eq!(rows.len(), 9);
+        let s = render_table1(&rows);
+        assert!(s.contains("TCD-MAC"));
+        assert!(s.contains("(BRx2, KS)"));
+        assert!(s.contains("improvement"));
+    }
+}

@@ -1,0 +1,129 @@
+//! Table II generator: throughput and energy improvement of the TCD-MAC
+//! over each conventional MAC for streams of 1 / 10 / 100 / 1000 MACs.
+//!
+//! Derivation (validated against the paper's own Table I → Table II
+//! relationship): for a stream of N operations,
+//!
+//! * time(conv) = N · T_conv,           time(TCD) = (N+1) · T_tcd
+//! * energy(conv) = N · PDP_conv,       energy(TCD) = (N+1) · PDP_tcd
+//!
+//! **Note (documented in EXPERIMENTS.md):** recomputing the paper's own
+//! numbers from its Table I shows its Table II throughput and energy
+//! column *headers* are swapped — e.g. (BRx2, KS) at N=1:
+//! 1 − 2·1.57/2.85 = −10% is a *time* ratio but appears in the energy
+//! column, while 1 − 2·5.02/13.31 = +25% is an *energy* ratio but appears
+//! under throughput. We print the correctly-labeled values.
+
+use super::table1::table1_rows;
+use crate::ppa::PpaReport;
+use crate::util::TextTable;
+
+/// Stream sizes of Table II.
+pub const STREAM_SIZES: [usize; 4] = [1, 10, 100, 1000];
+
+/// One Table-II row: improvements (%) per stream size.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub mac: &'static str,
+    pub throughput_pct: [f64; 4],
+    pub energy_pct: [f64; 4],
+}
+
+/// Throughput improvement (%) of TCD vs a conventional MAC at stream N.
+pub fn throughput_improvement(tcd: &PpaReport, conv: &PpaReport, n: usize) -> f64 {
+    (1.0 - ((n + 1) as f64 * tcd.delay_ns) / (n as f64 * conv.delay_ns)) * 100.0
+}
+
+/// Energy improvement (%) of TCD vs a conventional MAC at stream N.
+pub fn energy_improvement(tcd: &PpaReport, conv: &PpaReport, n: usize) -> f64 {
+    (1.0 - ((n + 1) as f64 * tcd.pdp_pj()) / (n as f64 * conv.pdp_pj())) * 100.0
+}
+
+/// Compute all Table-II rows from the measured Table-I reports.
+pub fn table2_rows() -> Vec<Table2Row> {
+    let rows = table1_rows();
+    let tcd = *rows.last().unwrap();
+    rows[..rows.len() - 1]
+        .iter()
+        .map(|conv| {
+            let mut th = [0.0; 4];
+            let mut en = [0.0; 4];
+            for (i, n) in STREAM_SIZES.iter().enumerate() {
+                th[i] = throughput_improvement(&tcd, conv, *n);
+                en[i] = energy_improvement(&tcd, conv, *n);
+            }
+            Table2Row { mac: conv.name, throughput_pct: th, energy_pct: en }
+        })
+        .collect()
+}
+
+/// Render Table II.
+pub fn render_table2(rows: &[Table2Row]) -> String {
+    let mut t = TextTable::new(vec![
+        "MAC", "thr@1", "thr@10", "thr@100", "thr@1000", "en@1", "en@10", "en@100", "en@1000",
+    ]);
+    for r in rows {
+        let mut cells = vec![r.mac.to_string()];
+        cells.extend(r.throughput_pct.iter().map(|v| format!("{v:.0}")));
+        cells.extend(r.energy_pct.iter().map(|v| format!("{v:.0}")));
+        t.row(cells);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ppa::paper;
+
+    #[test]
+    fn paper_table2_derivation_confirms_swapped_headers() {
+        // Using the paper's own Table-I values: (BRx2, KS) at N = 1.
+        let tcd = paper::TABLE1.last().unwrap();
+        let conv = &paper::TABLE1[0];
+        let time_ratio = (1.0 - 2.0 * tcd.delay_ns / conv.delay_ns) * 100.0;
+        let energy_ratio = (1.0 - 2.0 * tcd.pdp_pj / conv.pdp_pj) * 100.0;
+        // Paper prints 25 under "throughput" and −10 under "energy";
+        // the actual time ratio is −10 and the actual energy ratio is 25.
+        assert!((time_ratio - -10.2).abs() < 1.0, "{time_ratio}");
+        assert!((energy_ratio - 24.6).abs() < 1.0, "{energy_ratio}");
+    }
+
+    #[test]
+    fn improvements_grow_with_stream_length() {
+        for r in table2_rows() {
+            assert!(r.throughput_pct[3] > r.throughput_pct[0], "{}", r.mac);
+            assert!(r.energy_pct[3] > r.energy_pct[0], "{}", r.mac);
+            // Long streams amortize the extra cycle: both must be positive
+            // by N = 100 (paper: 41–63%).
+            assert!(r.throughput_pct[2] > 0.0);
+            assert!(r.energy_pct[2] > 0.0);
+        }
+    }
+
+    #[test]
+    fn long_stream_bands_match_paper_shape() {
+        // Paper Table II @1000 (labels corrected): time 37–54%,
+        // energy 47–63%. Accept ±15pp bands on our substrate.
+        for r in table2_rows() {
+            assert!(
+                r.throughput_pct[3] > 22.0 && r.throughput_pct[3] < 69.0,
+                "{}: {:.0}",
+                r.mac,
+                r.throughput_pct[3]
+            );
+            assert!(
+                r.energy_pct[3] > 32.0 && r.energy_pct[3] < 78.0,
+                "{}: {:.0}",
+                r.mac,
+                r.energy_pct[3]
+            );
+        }
+    }
+
+    #[test]
+    fn render_has_all_macs() {
+        let s = render_table2(&table2_rows());
+        assert_eq!(s.lines().count(), 2 + 8);
+    }
+}

@@ -1,0 +1,81 @@
+//! Table III generator: TCD-NPE implementation details and chip-level PPA.
+
+use crate::mapper::NpeGeometry;
+use crate::npe::npe_ppa;
+use crate::ppa::paper::table3;
+use crate::tcdmac::MacKind;
+use crate::util::TextTable;
+
+/// Render measured-vs-paper Table III.
+pub fn render_table3() -> String {
+    let p = npe_ppa(NpeGeometry::PAPER, MacKind::Tcd);
+    let mut t = TextTable::new(vec!["Feature", "Measured", "Paper"]);
+    t.row(vec!["PE-array".into(), "16 x 8".to_string(), "16 x 8".into()]);
+    t.row(vec![
+        "Input format".into(),
+        "signed 16-bit fixed".to_string(),
+        "signed 16-bit fixed".into(),
+    ]);
+    t.row(vec!["Dataflow".into(), "OS".to_string(), "OS".into()]);
+    t.row(vec![
+        "W-mem / FM-mem".into(),
+        "512 KB / 2x64 KB".to_string(),
+        "512 KB / 2x64 KB".into(),
+    ]);
+    t.row(vec![
+        "PE / Mem voltage".into(),
+        format!("{:.2} V / {:.2} V", table3::PE_VDD, table3::MEM_VDD),
+        "0.95 V / 0.70 V".into(),
+    ]);
+    t.row(vec![
+        "Area (mm2)".into(),
+        format!("{:.2}", p.area_mm2),
+        format!("{:.2}", table3::AREA_MM2),
+    ]);
+    t.row(vec![
+        "PE-array area (mm2)".into(),
+        format!("{:.3}", p.pe_array_area_mm2),
+        format!("{:.3}", table3::PE_ARRAY_AREA_MM2),
+    ]);
+    t.row(vec![
+        "Memory area (mm2)".into(),
+        format!("{:.2}", p.memory_area_mm2),
+        format!("{:.2}", table3::MEM_AREA_MM2),
+    ]);
+    t.row(vec![
+        "Max frequency (MHz)".into(),
+        format!("{:.0}", p.max_freq_mhz),
+        format!("{:.0}", table3::MAX_FREQ_MHZ),
+    ]);
+    t.row(vec![
+        "Overall leakage (mW)".into(),
+        format!("{:.1}", p.overall_leak_mw),
+        format!("{:.1}", table3::OVERALL_LEAK_MW),
+    ]);
+    t.row(vec![
+        "PE-array leakage (mW)".into(),
+        format!("{:.1}", p.pe_array_leak_mw),
+        format!("{:.1}", table3::PE_ARRAY_LEAK_MW),
+    ]);
+    t.row(vec![
+        "Memory leakage (mW)".into(),
+        format!("{:.1}", p.memory_leak_mw),
+        format!("{:.1}", table3::MEM_LEAK_MW),
+    ]);
+    t.row(vec![
+        "Others leakage (mW)".into(),
+        format!("{:.1}", p.others_leak_mw),
+        format!("{:.1}", table3::OTHERS_LEAK_MW),
+    ]);
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders() {
+        let s = super::render_table3();
+        assert!(s.contains("Max frequency"));
+        assert!(s.contains("636"));
+    }
+}

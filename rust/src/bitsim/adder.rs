@@ -1,0 +1,226 @@
+//! Carry-propagate adder architectures.
+//!
+//! Three CPA families are modeled (the paper's Table I uses Brent-Kung and
+//! Kogge-Stone; ripple-carry is included as a sanity baseline):
+//!
+//! * functional view — all three compute `(a + b + cin) mod 2^w`;
+//! * structural view — they differ in prefix-network depth and gate count,
+//!   which is what separates the `(·, KS)` and `(·, BK)` rows of Table I.
+//!
+//! The TCD-MAC's split of the CPA into **GEN** (one level of
+//! generate/propagate) and **PCPA** (the prefix network + sum XOR) is
+//! exposed here as [`Adder::gen_split`] / [`Adder::pcpa`]: `gen_split` is
+//! the part TCD-MAC executes every cycle, `pcpa` the part it defers to the
+//! final carry-propagation-mode cycle (paper §III-A, Fig. 1B / Fig. 2).
+
+use super::bits::{mask, trunc};
+use super::netlist::{Depth, GateCounts};
+
+
+/// Which CPA architecture a MAC instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AdderKind {
+    /// Ripple-carry: minimal area, O(w) depth.
+    Ripple,
+    /// Brent-Kung parallel prefix: 2·log2(w)−1 levels, sparse network.
+    BrentKung,
+    /// Kogge-Stone parallel prefix: log2(w) levels, dense network.
+    KoggeStone,
+}
+
+impl AdderKind {
+    /// Short name as used in the paper's tuples, e.g. `KS`.
+    pub fn short(&self) -> &'static str {
+        match self {
+            AdderKind::Ripple => "RCA",
+            AdderKind::BrentKung => "BK",
+            AdderKind::KoggeStone => "KS",
+        }
+    }
+}
+
+/// A width-parameterized CPA instance.
+#[derive(Debug, Clone, Copy)]
+pub struct Adder {
+    pub kind: AdderKind,
+    pub width: u32,
+}
+
+/// Result of the GEN layer: per-bit generate/propagate vectors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GenPropagate {
+    pub g: u64,
+    pub p: u64,
+}
+
+impl Adder {
+    pub fn new(kind: AdderKind, width: u32) -> Self {
+        debug_assert!(width > 0 && width <= 64);
+        Self { kind, width }
+    }
+
+    /// Functional addition modulo `2^width`.
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        (a.wrapping_add(b)) & mask(self.width)
+    }
+
+    /// Functional addition with carry-in.
+    pub fn add_cin(&self, a: u64, b: u64, cin: bool) -> u64 {
+        trunc(
+            (a & mask(self.width)) as i64 + (b & mask(self.width)) as i64 + cin as i64,
+            self.width,
+        )
+    }
+
+    /// The GEN layer of the CPA: one gate level computing per-bit
+    /// generate (`g = a & b`) and propagate (`p = a ^ b`).
+    ///
+    /// This is the *only* part of the CPA that a TCD-MAC evaluates during
+    /// carry-deferring cycles: `p` goes to the output register (ORU) and
+    /// `g << 1` to the carry-buffer unit (CBU), to be re-injected into the
+    /// compression tree next cycle.
+    pub fn gen_split(&self, a: u64, b: u64) -> GenPropagate {
+        let m = mask(self.width);
+        GenPropagate {
+            g: (a & b) & m,
+            p: (a ^ b) & m,
+        }
+    }
+
+    /// The deferred PCPA: resolve the prefix network over (g, p) and return
+    /// the final sum. Functionally `p + (g << 1)` — the prefix network is
+    /// exactly the carry chain of that addition.
+    pub fn pcpa(&self, gp: GenPropagate) -> u64 {
+        self.add(gp.p, (gp.g << 1) & mask(self.width))
+    }
+
+    /// Critical-path depth in unit gate delays τ.
+    ///
+    /// KS: pg-gen (1) + log2(w) prefix levels (1.5τ each: AOI cell) +
+    /// sum XOR (1). BK: pg-gen + (2·log2(w)−1) levels + XOR. RCA: ~2τ/bit.
+    pub fn depth(&self) -> Depth {
+        let w = self.width as f64;
+        let lg = w.log2().ceil();
+        match self.kind {
+            AdderKind::Ripple => 1.0 + 2.0 * w,
+            AdderKind::BrentKung => 1.0 + 1.5 * (2.0 * lg - 1.0) + 1.0,
+            AdderKind::KoggeStone => 1.0 + 1.5 * lg + 1.0,
+        }
+    }
+
+    /// Depth of the GEN layer alone (what TCD pays per deferring cycle).
+    pub fn gen_depth(&self) -> Depth {
+        1.0
+    }
+
+    /// Depth of the deferred PCPA alone.
+    pub fn pcpa_depth(&self) -> Depth {
+        self.depth() - self.gen_depth()
+    }
+
+    /// Structural gate counts.
+    ///
+    /// Prefix cells are counted per the classical networks: KS has
+    /// `w·log2(w) − w + 1` black cells, BK has `2w − log2(w) − 2`.
+    /// Each black cell ≈ 1 AND + 1 AOI (counted as 2 simple + part XOR).
+    pub fn gates(&self) -> GateCounts {
+        let w = self.width as u64;
+        let lg = (self.width as f64).log2().ceil() as u64;
+        match self.kind {
+            AdderKind::Ripple => GateCounts {
+                full_adder: w,
+                ..Default::default()
+            },
+            AdderKind::BrentKung => {
+                let black = 2 * w - lg - 2;
+                GateCounts {
+                    // pg generation: w AND + w XOR; sum: w XOR.
+                    simple: w + 3 * black,
+                    xor: 2 * w,
+                    ..Default::default()
+                }
+            }
+            AdderKind::KoggeStone => {
+                let black = w * lg - w + 1;
+                GateCounts {
+                    simple: w + 3 * black,
+                    xor: 2 * w,
+                    ..Default::default()
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn kinds() -> [AdderKind; 3] {
+        [AdderKind::Ripple, AdderKind::BrentKung, AdderKind::KoggeStone]
+    }
+
+    #[test]
+    fn add_matches_wrapping_small() {
+        for kind in kinds() {
+            let a = Adder::new(kind, 16);
+            assert_eq!(a.add(0xFFFF, 1), 0);
+            assert_eq!(a.add(0x7FFF, 1), 0x8000);
+            assert_eq!(a.add_cin(0xFFFE, 0, true), 0xFFFF);
+        }
+    }
+
+    #[test]
+    fn gen_pcpa_recombines() {
+        for kind in kinds() {
+            let ad = Adder::new(kind, 32);
+            for (a, b) in [(0u64, 0u64), (123456, 654321), (0xFFFF_FFFF, 1), (0x8000_0000, 0x8000_0000)] {
+                let gp = ad.gen_split(a, b);
+                assert_eq!(ad.pcpa(gp), ad.add(a, b), "kind={kind:?} a={a:#x} b={b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn depth_ordering() {
+        // KS is the fastest, RCA the slowest; PCPA dominates GEN.
+        let w = 32;
+        let ks = Adder::new(AdderKind::KoggeStone, w);
+        let bk = Adder::new(AdderKind::BrentKung, w);
+        let rc = Adder::new(AdderKind::Ripple, w);
+        assert!(ks.depth() < bk.depth());
+        assert!(bk.depth() < rc.depth());
+        assert!(ks.pcpa_depth() > 3.0 * ks.gen_depth());
+    }
+
+    #[test]
+    fn area_ordering() {
+        // KS trades area for speed: more gates than BK at equal width.
+        let ks = Adder::new(AdderKind::KoggeStone, 32).gates().nand2_equiv();
+        let bk = Adder::new(AdderKind::BrentKung, 32).gates().nand2_equiv();
+        assert!(ks > bk);
+    }
+
+    #[test]
+    fn prop_add_equals_i64() {
+        check::cases(0xADD, |g| {
+            let ad = Adder::new(kinds()[g.usize_in(0, 2)], g.width(2, 48));
+            let m = mask(ad.width);
+            let (a, b, cin) = (g.u64() & m, g.u64() & m, g.u64() & 1 == 1);
+            let expect = ((a as u128 + b as u128 + cin as u128) as u64) & m;
+            assert_eq!(ad.add_cin(a, b, cin), expect);
+        });
+    }
+
+    #[test]
+    fn prop_gen_pcpa_equals_add() {
+        check::cases(0x6E4, |g| {
+            let ad = Adder::new(kinds()[g.usize_in(0, 2)], g.width(2, 48));
+            let m = mask(ad.width);
+            let (a, b) = (g.u64() & m, g.u64() & m);
+            let gp = ad.gen_split(a, b);
+            assert_eq!(ad.pcpa(gp), ad.add(a, b));
+        });
+    }
+}

@@ -1,0 +1,79 @@
+//! Word-packed bit-vector helpers.
+//!
+//! All datapaths in the simulator are ≤ 64 bits wide, so a bus is a `u64`
+//! with a width-`w` mask; arithmetic is two's complement modulo `2^w`.
+//! Keeping buses word-packed (instead of `Vec<bool>`) is what makes the
+//! 20K-cycle activity simulations and the cycle-accurate NPE runs fast: a
+//! full carry-save compression step is a handful of word ops.
+
+/// Bit mask with the low `w` bits set (`w ≤ 64`).
+#[inline]
+pub const fn mask(w: u32) -> u64 {
+    if w >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << w) - 1
+    }
+}
+
+/// Sign-extend the low `w` bits of `x` into an `i64`.
+#[inline]
+pub fn sext(x: u64, w: u32) -> i64 {
+    debug_assert!(w > 0 && w <= 64);
+    let shift = 64 - w;
+    ((x << shift) as i64) >> shift
+}
+
+/// Truncate an `i64` into the low `w` bits (two's complement wrap).
+#[inline]
+pub fn trunc(x: i64, w: u32) -> u64 {
+    (x as u64) & mask(w)
+}
+
+/// Number of set bits that differ between two consecutive values of a bus —
+/// the toggle count used for switching-activity power estimation.
+#[inline]
+pub fn toggles(prev: u64, next: u64) -> u32 {
+    (prev ^ next).count_ones()
+}
+
+/// Bit `i` of `x` as a bool.
+#[inline]
+pub fn bit(x: u64, i: u32) -> bool {
+    (x >> i) & 1 == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_widths() {
+        assert_eq!(mask(0), 0);
+        assert_eq!(mask(1), 1);
+        assert_eq!(mask(16), 0xFFFF);
+        assert_eq!(mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn sext_round_trip() {
+        assert_eq!(sext(0xFFFF, 16), -1);
+        assert_eq!(sext(0x7FFF, 16), 0x7FFF);
+        assert_eq!(sext(0x8000, 16), -32768);
+        for v in [-5i64, 0, 7, -32768, 32767] {
+            assert_eq!(sext(trunc(v, 16), 16), v);
+        }
+    }
+
+    #[test]
+    fn trunc_wraps() {
+        assert_eq!(trunc(-1, 16), 0xFFFF);
+        assert_eq!(trunc(1 << 20, 16), 0);
+    }
+
+    #[test]
+    fn toggle_count() {
+        assert_eq!(toggles(0b1010, 0b0101), 4);
+        assert_eq!(toggles(7, 7), 0);
+    }
+}

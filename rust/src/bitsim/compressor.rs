@@ -1,0 +1,260 @@
+//! Hamming-weight compressors and the Compression-and-Expansion Layer (CEL).
+//!
+//! The paper's CEL reduces a set of partial-product rows (plus, in the
+//! TCD-MAC, the previous cycle's deferred sum and carry rows) to exactly two
+//! rows, which a CPA then adds — or which the TCD-MAC keeps deferring.
+//!
+//! Two views again:
+//!
+//! * [`hamming_weight_compress`] is the *column* view used by the paper's
+//!   C_HW(m:n) description — it is exercised by the tests as the oracle
+//!   that compression preserves column sums.
+//! * [`cel_reduce`] is the fast *row* view (carry-save 3:2 layers on
+//!   word-packed rows). Both preserve the total value modulo `2^w`;
+//!   [`cel_reduce`] is what the cycle-accurate simulator runs.
+
+use super::bits::mask;
+use super::netlist::{Depth, GateCounts};
+
+/// Statistics of one CEL reduction: structural cost of the tree that would
+/// implement it, used by the PPA model.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct CelStats {
+    /// 3:2 compressor levels traversed (critical path).
+    pub levels: u32,
+    /// Full-adder instances (one per bit column per 3-row group).
+    pub full_adders: u64,
+    /// Half-adder instances (2-row remainders).
+    pub half_adders: u64,
+}
+
+impl CelStats {
+    /// Depth contribution in unit gate delays: each 3:2 level is an FA
+    /// (sum+carry) ≈ 2τ.
+    pub fn depth(&self) -> Depth {
+        2.0 * self.levels as f64
+    }
+
+    /// Gate counts of the reduction tree.
+    pub fn gates(&self) -> GateCounts {
+        GateCounts {
+            full_adder: self.full_adders,
+            half_adder: self.half_adders,
+            ..Default::default()
+        }
+    }
+}
+
+/// Number of 3:2 levels needed to reduce `n` rows to 2.
+pub fn levels_for_rows(n: usize) -> u32 {
+    let mut rows = n;
+    let mut lv = 0;
+    while rows > 2 {
+        rows = rows - rows / 3; // each full group of 3 becomes 2
+        lv += 1;
+    }
+    lv
+}
+
+/// Reduce `rows` (each a `w`-bit word) to exactly two rows `(sum, carry)`
+/// using layers of 3:2 carry-save compressors, preserving
+/// `Σ rows mod 2^w`. Returns the two rows and the structural stats.
+///
+/// With fewer than 3 rows the input is returned (padded with zero) at zero
+/// structural cost.
+pub fn cel_reduce(rows: &[u64], w: u32) -> ((u64, u64), CelStats) {
+    let m = mask(w);
+    let mut cur: Vec<u64> = rows.iter().map(|r| r & m).collect();
+    let mut stats = CelStats::default();
+    while cur.len() > 2 {
+        let mut next = Vec::with_capacity(cur.len() - cur.len() / 3);
+        let mut it = cur.chunks_exact(3);
+        for ch in &mut it {
+            let (a, b, c) = (ch[0], ch[1], ch[2]);
+            let s = a ^ b ^ c;
+            let cy = ((a & b) | (a & c) | (b & c)) << 1;
+            next.push(s & m);
+            next.push(cy & m);
+            stats.full_adders += w as u64;
+        }
+        next.extend_from_slice(it.remainder());
+        cur = next;
+        stats.levels += 1;
+    }
+    while cur.len() < 2 {
+        cur.push(0);
+    }
+    ((cur[0], cur[1]), stats)
+}
+
+/// Allocation-free variant of [`cel_reduce`] for the simulator hot loop:
+/// compresses `rows` in place (each 3-row group becomes 2 rows at the
+/// front of the buffer) and returns the final `(sum, carry)` pair.
+///
+/// Value-equivalence with [`cel_reduce`] is property-tested; this is the
+/// §Perf optimization of EXPERIMENTS.md (the per-level `Vec` allocations
+/// dominated `TcdMac::step`).
+pub fn cel_reduce_in_place(rows: &mut [u64], w: u32) -> (u64, u64) {
+    let m = mask(w);
+    let mut len = rows.len();
+    for r in rows[..len].iter_mut() {
+        *r &= m;
+    }
+    while len > 2 {
+        let mut out = 0;
+        let mut i = 0;
+        while i + 3 <= len {
+            let (a, b, c) = (rows[i], rows[i + 1], rows[i + 2]);
+            // out < i always (out grows by 2 per 3 consumed): no overlap.
+            rows[out] = (a ^ b ^ c) & m;
+            rows[out + 1] = (((a & b) | (a & c) | (b & c)) << 1) & m;
+            out += 2;
+            i += 3;
+        }
+        while i < len {
+            rows[out] = rows[i];
+            out += 1;
+            i += 1;
+        }
+        len = out;
+    }
+    match len {
+        0 => (0, 0),
+        1 => (rows[0], 0),
+        _ => (rows[0], rows[1]),
+    }
+}
+
+/// Column-wise Hamming-weight compression — the paper's C_HW(m:n) oracle.
+///
+/// Takes the per-column bit counts of a row set and produces the compressed
+/// two-row representation by propagating each column's Hamming weight into
+/// higher columns, exactly as a tree of C_HW(m:n) units would.
+/// Returns the value of the row set modulo `2^w`.
+pub fn hamming_weight_compress(rows: &[u64], w: u32) -> u64 {
+    let mut col_count = vec![0u64; w as usize];
+    for r in rows {
+        for i in 0..w {
+            col_count[i as usize] += (r >> i) & 1;
+        }
+    }
+    // Propagate counts: column i's weight bits feed columns i+1, i+2, ...
+    let mut val = 0u64;
+    let mut carry = 0u64;
+    for i in 0..w as usize {
+        let total = col_count[i] + carry;
+        val |= (total & 1) << i;
+        carry = total >> 1;
+    }
+    val & mask(w)
+}
+
+/// Output width of a C_HW(m:n) compressor: `n = ceil(log2(m+1))`.
+pub fn hwc_output_bits(m: u32) -> u32 {
+    32 - m.leading_zeros()
+}
+
+/// Whether a C_HW(m:n) is "completed" per the paper: `m == 2^n − 1`.
+pub fn hwc_is_complete(m: u32) -> bool {
+    let n = hwc_output_bits(m);
+    m == (1 << n) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitsim::bits::trunc;
+    use crate::util::check;
+
+    #[test]
+    fn hwc_bits() {
+        assert_eq!(hwc_output_bits(3), 2);
+        assert_eq!(hwc_output_bits(7), 3);
+        assert_eq!(hwc_output_bits(6), 3);
+        assert!(hwc_is_complete(3));
+        assert!(hwc_is_complete(7));
+        assert!(!hwc_is_complete(6));
+    }
+
+    #[test]
+    fn levels_small() {
+        assert_eq!(levels_for_rows(2), 0);
+        assert_eq!(levels_for_rows(3), 1);
+        assert_eq!(levels_for_rows(4), 2);
+        assert_eq!(levels_for_rows(16), 6);
+        assert_eq!(levels_for_rows(19), 6);
+    }
+
+    #[test]
+    fn cel_preserves_value() {
+        let rows = vec![0x12u64, 0x34, 0x56, 0x78, 0x9A];
+        let w = 16;
+        let ((s, c), stats) = cel_reduce(&rows, w);
+        let expect: u64 = rows.iter().sum::<u64>() & mask(w);
+        assert_eq!((s.wrapping_add(c)) & mask(w), expect);
+        assert_eq!(stats.levels, levels_for_rows(5));
+    }
+
+    #[test]
+    fn hwc_matches_sum() {
+        let rows = vec![0b1011u64, 0b0110, 0b1111, 0b0001];
+        let w = 8;
+        assert_eq!(
+            hamming_weight_compress(&rows, w),
+            rows.iter().sum::<u64>() & mask(w)
+        );
+    }
+
+    #[test]
+    fn prop_cel_value_preserved() {
+        check::cases(0xCE1, |g| {
+            let rows = g.vec_u64(24);
+            let w = g.width(4, 48);
+            let ((s, c), _) = cel_reduce(&rows, w);
+            let expect = rows
+                .iter()
+                .fold(0i64, |acc, r| acc.wrapping_add((r & mask(w)) as i64));
+            assert_eq!((s.wrapping_add(c)) & mask(w), trunc(expect, w));
+        });
+    }
+
+    #[test]
+    fn prop_hwc_equals_cel() {
+        check::cases(0xCE2, |g| {
+            let mut rows = g.vec_u64(15);
+            rows.push(g.u64());
+            let w = g.width(4, 32);
+            let ((s, c), _) = cel_reduce(&rows, w);
+            let hwc = hamming_weight_compress(&rows, w);
+            assert_eq!((s.wrapping_add(c)) & mask(w), hwc);
+        });
+    }
+
+    #[test]
+    fn prop_in_place_equals_allocating() {
+        check::cases(0xCE4, |g| {
+            let rows = g.vec_u64(24);
+            let w = g.width(4, 48);
+            let ((s, c), _) = cel_reduce(&rows, w);
+            let mut buf = rows.clone();
+            let (s2, c2) = cel_reduce_in_place(&mut buf, w);
+            assert_eq!(
+                s.wrapping_add(c) & mask(w),
+                s2.wrapping_add(c2) & mask(w),
+                "rows={rows:?} w={w}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_levels_match() {
+        check::cases(0xCE3, |g| {
+            let mut rows = g.vec_u64(29);
+            while rows.len() < 3 {
+                rows.push(g.u64());
+            }
+            let ((_, _), stats) = cel_reduce(&rows, 16);
+            assert_eq!(stats.levels, levels_for_rows(rows.len()));
+        });
+    }
+}

@@ -1,0 +1,316 @@
+//! True gate-graph netlists — the deepest level of the substrate.
+//!
+//! The word-level models in [`super::adder`] are *annotated* with depths
+//! and gate counts; this module **constructs the actual gate networks**
+//! (ripple, Brent-Kung and Kogge-Stone prefix adders, and the GEN/PCPA
+//! split), evaluates them gate by gate, and measures their real logic
+//! depth and composition. The tests cross-check three things:
+//!
+//! 1. functional equivalence: netlist evaluation == word-level adder for
+//!    every architecture and width;
+//! 2. the *measured* netlist depth tracks the analytic `Adder::depth()`
+//!    model within its stated tolerance;
+//! 3. the measured gate counts track `Adder::gates()`.
+//!
+//! This is what makes the PPA substrate auditable: the numbers in Table I
+//! trace to networks you can walk.
+
+use super::adder::AdderKind;
+#[cfg(test)]
+use super::adder::Adder;
+use super::bits::{bit, mask};
+
+/// Gate operators in the netlist.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateOp {
+    /// Primary input (bit index into the flattened input vector).
+    Input(u32),
+    Const(bool),
+    Not(u32),
+    And(u32, u32),
+    Or(u32, u32),
+    Xor(u32, u32),
+    /// AND-OR (prefix "black cell" g-path): `g_out = g_hi | (p_hi & g_lo)`.
+    Aoi(u32, u32, u32),
+}
+
+/// A combinational netlist in topological order.
+#[derive(Debug, Default, Clone)]
+pub struct Netlist {
+    gates: Vec<GateOp>,
+    outputs: Vec<u32>,
+    n_inputs: u32,
+}
+
+impl Netlist {
+    pub fn new(n_inputs: u32) -> Self {
+        let mut n = Netlist { gates: Vec::new(), outputs: Vec::new(), n_inputs };
+        for i in 0..n_inputs {
+            n.gates.push(GateOp::Input(i));
+        }
+        n
+    }
+
+    fn push(&mut self, op: GateOp) -> u32 {
+        self.gates.push(op);
+        (self.gates.len() - 1) as u32
+    }
+
+    pub fn not(&mut self, a: u32) -> u32 {
+        self.push(GateOp::Not(a))
+    }
+    pub fn and(&mut self, a: u32, b: u32) -> u32 {
+        self.push(GateOp::And(a, b))
+    }
+    pub fn or(&mut self, a: u32, b: u32) -> u32 {
+        self.push(GateOp::Or(a, b))
+    }
+    pub fn xor(&mut self, a: u32, b: u32) -> u32 {
+        self.push(GateOp::Xor(a, b))
+    }
+    pub fn aoi(&mut self, g_hi: u32, p_hi: u32, g_lo: u32) -> u32 {
+        self.push(GateOp::Aoi(g_hi, p_hi, g_lo))
+    }
+    pub fn constant(&mut self, v: bool) -> u32 {
+        self.push(GateOp::Const(v))
+    }
+    pub fn mark_output(&mut self, node: u32) {
+        self.outputs.push(node);
+    }
+
+    /// Evaluate on a flat input bit-vector; returns the output bits.
+    pub fn eval(&self, inputs: u64) -> u64 {
+        let mut val = vec![false; self.gates.len()];
+        for (i, g) in self.gates.iter().enumerate() {
+            val[i] = match *g {
+                GateOp::Input(k) => bit(inputs, k),
+                GateOp::Const(v) => v,
+                GateOp::Not(a) => !val[a as usize],
+                GateOp::And(a, b) => val[a as usize] & val[b as usize],
+                GateOp::Or(a, b) => val[a as usize] | val[b as usize],
+                GateOp::Xor(a, b) => val[a as usize] ^ val[b as usize],
+                GateOp::Aoi(gh, ph, gl) => {
+                    val[gh as usize] | (val[ph as usize] & val[gl as usize])
+                }
+            };
+        }
+        let mut out = 0u64;
+        for (i, &node) in self.outputs.iter().enumerate() {
+            out |= (val[node as usize] as u64) << i;
+        }
+        out
+    }
+
+    /// Logic depth per node (inputs = 0), and the critical-path depth over
+    /// the outputs.
+    pub fn depth(&self) -> u32 {
+        let mut d = vec![0u32; self.gates.len()];
+        for (i, g) in self.gates.iter().enumerate() {
+            d[i] = match *g {
+                GateOp::Input(_) | GateOp::Const(_) => 0,
+                GateOp::Not(a) => d[a as usize] + 1,
+                GateOp::And(a, b) | GateOp::Or(a, b) | GateOp::Xor(a, b) => {
+                    d[a as usize].max(d[b as usize]) + 1
+                }
+                GateOp::Aoi(gh, ph, gl) => {
+                    d[gh as usize].max(d[ph as usize]).max(d[gl as usize]) + 1
+                }
+            };
+        }
+        self.outputs.iter().map(|&o| d[o as usize]).max().unwrap_or(0)
+    }
+
+    /// Count of logic gates (inputs/constants excluded).
+    pub fn gate_count(&self) -> usize {
+        self.gates
+            .iter()
+            .filter(|g| !matches!(g, GateOp::Input(_) | GateOp::Const(_)))
+            .count()
+    }
+
+    pub fn n_inputs(&self) -> u32 {
+        self.n_inputs
+    }
+}
+
+/// Build the gate network of a `width`-bit adder of the given kind.
+/// Inputs are flattened `[a_0..a_{w-1}, b_0..b_{w-1}]`; outputs are the
+/// `width` sum bits.
+pub fn build_adder(kind: AdderKind, width: u32) -> Netlist {
+    let mut n = Netlist::new(2 * width);
+    let a: Vec<u32> = (0..width).collect();
+    let b: Vec<u32> = (width..2 * width).collect();
+
+    // GEN layer: per-bit generate and propagate.
+    let g0: Vec<u32> = (0..width as usize).map(|i| n.and(a[i], b[i])).collect();
+    let p0: Vec<u32> = (0..width as usize).map(|i| n.xor(a[i], b[i])).collect();
+
+    // Carry network: carries[i] = carry INTO bit i.
+    let carries: Vec<u32> = match kind {
+        AdderKind::Ripple => {
+            let mut c = Vec::with_capacity(width as usize);
+            let zero = n.constant(false);
+            c.push(zero);
+            for i in 0..width as usize - 1 {
+                let prev = c[i];
+                let cy = n.aoi(g0[i], p0[i], prev); // g | (p & cin)
+                c.push(cy);
+            }
+            c
+        }
+        AdderKind::KoggeStone | AdderKind::BrentKung => {
+            // Prefix (g, p) pairs; after the network, group[i] spans bits
+            // [0..=i] and carry into bit i+1 = group-g[i].
+            let mut g = g0.clone();
+            let mut p = p0.clone();
+            match kind {
+                AdderKind::KoggeStone => {
+                    let mut dist = 1usize;
+                    while dist < width as usize {
+                        let (gp, pp) = (g.clone(), p.clone());
+                        for i in dist..width as usize {
+                            g[i] = n.aoi(gp[i], pp[i], gp[i - dist]);
+                            p[i] = n.and(pp[i], pp[i - dist]);
+                        }
+                        dist *= 2;
+                    }
+                }
+                AdderKind::BrentKung => {
+                    // Up-sweep.
+                    let mut dist = 1usize;
+                    while dist < width as usize {
+                        let mut i = 2 * dist - 1;
+                        while i < width as usize {
+                            g[i] = n.aoi(g[i], p[i], g[i - dist]);
+                            p[i] = n.and(p[i], p[i - dist]);
+                            i += 2 * dist;
+                        }
+                        dist *= 2;
+                    }
+                    // Down-sweep.
+                    dist /= 2;
+                    while dist >= 1 {
+                        let mut i = 3 * dist - 1;
+                        while i < width as usize {
+                            g[i] = n.aoi(g[i], p[i], g[i - dist]);
+                            p[i] = n.and(p[i], p[i - dist]);
+                            i += 2 * dist;
+                        }
+                        if dist == 1 {
+                            break;
+                        }
+                        dist /= 2;
+                    }
+                }
+                AdderKind::Ripple => unreachable!(),
+            }
+            let zero = n.constant(false);
+            let mut c = Vec::with_capacity(width as usize);
+            c.push(zero);
+            for i in 0..width as usize - 1 {
+                c.push(g[i]);
+            }
+            c
+        }
+    };
+
+    // Sum: p0 ^ carry-in.
+    for i in 0..width as usize {
+        let s = n.xor(p0[i], carries[i]);
+        n.mark_output(s);
+    }
+    n
+}
+
+/// Evaluate an adder netlist on two operands.
+pub fn eval_adder(net: &Netlist, a: u64, b: u64, width: u32) -> u64 {
+    let inputs = (a & mask(width)) | ((b & mask(width)) << width);
+    net.eval(inputs) & mask(width)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    const KINDS: [AdderKind; 3] =
+        [AdderKind::Ripple, AdderKind::BrentKung, AdderKind::KoggeStone];
+
+    #[test]
+    fn netlists_add_correctly_small() {
+        for kind in KINDS {
+            for w in [2u32, 3, 4, 5, 8] {
+                let net = build_adder(kind, w);
+                for a in 0..(1u64 << w.min(5)) {
+                    for b in 0..(1u64 << w.min(5)) {
+                        assert_eq!(
+                            eval_adder(&net, a, b, w),
+                            (a + b) & mask(w),
+                            "{kind:?} w={w} {a}+{b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_netlists_match_wordlevel_adder() {
+        check::cases(0x6a7e, |g| {
+            let kind = KINDS[g.usize_in(0, 2)];
+            let w = g.width(2, 32);
+            let net = build_adder(kind, w);
+            let (a, b) = (g.u64() & mask(w), g.u64() & mask(w));
+            let word = Adder::new(kind, w);
+            assert_eq!(eval_adder(&net, a, b, w), word.add(a, b), "{kind:?} w={w}");
+        });
+    }
+
+    #[test]
+    fn measured_depth_orders_like_model() {
+        // Real netlist depths must order the same way the analytic model
+        // claims: KS < BK < RCA at 32 bits, and KS scales ~log2.
+        let d = |k| build_adder(k, 32).depth();
+        assert!(d(AdderKind::KoggeStone) < d(AdderKind::BrentKung));
+        assert!(d(AdderKind::BrentKung) < d(AdderKind::Ripple));
+        let ks16 = build_adder(AdderKind::KoggeStone, 16).depth();
+        let ks32 = build_adder(AdderKind::KoggeStone, 32).depth();
+        assert!(ks32 <= ks16 + 2, "KS grows ~1 level per doubling");
+    }
+
+    #[test]
+    fn measured_depth_tracks_analytic_model() {
+        // The τ-unit analytic depth should be within 2× of raw gate levels
+        // (the analytic unit folds cell complexity into fractional τ).
+        for kind in KINDS {
+            for w in [8u32, 16, 32, 40] {
+                let measured = build_adder(kind, w).depth() as f64;
+                let model = Adder::new(kind, w).depth();
+                let ratio = model / measured;
+                assert!(
+                    (0.5..=2.5).contains(&ratio),
+                    "{kind:?} w={w}: model {model} vs measured {measured}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn measured_gate_counts_track_model() {
+        for kind in KINDS {
+            let measured = build_adder(kind, 32).gate_count() as f64;
+            let model = Adder::new(kind, 32).gates().nand2_equiv();
+            // NAND2-equivalents weigh XOR/FA heavier than raw gate count;
+            // expect the model within 1×–6× of raw gates.
+            let ratio = model / measured;
+            assert!((1.0..=6.0).contains(&ratio), "{kind:?}: {model} vs {measured}");
+        }
+    }
+
+    #[test]
+    fn ks_has_more_gates_than_bk() {
+        let ks = build_adder(AdderKind::KoggeStone, 32).gate_count();
+        let bk = build_adder(AdderKind::BrentKung, 32).gate_count();
+        assert!(ks > bk, "KS {ks} vs BK {bk}");
+    }
+}

@@ -1,0 +1,343 @@
+//! Column-accurate Hamming-weight-compressor tree construction —
+//! the paper's CEL exactly as described in §III-A: each column of
+//! same-significance bits feeds C_HW(m:n) units whose output bits fan out
+//! to higher columns, layer after layer, until every column holds ≤ 2 bits.
+//!
+//! Where [`super::compressor::cel_reduce`] is the fast row-wise view, this
+//! module builds the *column* structure: per-layer compressor placement,
+//! exact C(3:2)/C(7:3) instance counts, the layer count, and — the
+//! TCD-specific bit — *incomplete-compressor capacity*: how many deferred
+//! carry-buffer bits can be absorbed by padding incomplete C_HW units,
+//! which is the paper's argument for why temporal-carry injection does not
+//! grow the CEL.
+
+use super::multiplier::{MultKind, PartialProducts, OP_WIDTH};
+
+/// One constructed CEL layer: compressors placed per column.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CelLayer {
+    /// (column, m, n) per placed C_HW(m:n).
+    pub compressors: Vec<(u32, u32, u32)>,
+}
+
+/// The fully constructed column tree.
+#[derive(Debug, Clone, Default)]
+pub struct HwcTree {
+    pub layers: Vec<CelLayer>,
+    /// Final column heights (all ≤ 2).
+    pub final_heights: Vec<u32>,
+}
+
+/// Output bits of a C_HW(m:n): n = ⌈log2(m+1)⌉.
+pub fn out_bits(m: u32) -> u32 {
+    32 - m.leading_zeros()
+}
+
+/// Dadda height targets: 2, 3, 4, 6, 9, 13, 19, …
+fn dadda_target_below(h: u32) -> u32 {
+    let mut t = 2u32;
+    loop {
+        let nxt = t * 3 / 2;
+        if nxt >= h {
+            return t;
+        }
+        t = nxt;
+    }
+}
+
+/// Build the column tree with Dadda's algorithm: each layer reduces every
+/// column to the next target in {…, 13, 9, 6, 4, 3, 2}, processing columns
+/// LSB→MSB so same-layer carries count against their destination column's
+/// target (this is what prevents the MSB carry ripple a naive greedy
+/// grouping produces). Units: C(3:2) (full adder), C(2:2) (half adder),
+/// and optionally C(7:3) when a column is ≥ 6 over target.
+pub fn build_tree_with(mut heights: Vec<u32>, use_c73: bool) -> HwcTree {
+    let mut tree = HwcTree::default();
+    while heights.iter().any(|&h| h > 2) {
+        let target = dadda_target_below(*heights.iter().max().unwrap());
+        let mut layer = CelLayer::default();
+        let mut next = vec![0u32; heights.len() + 3];
+        let mut carry_in = vec![0u32; heights.len() + 3];
+        for col in 0..heights.len() {
+            let mut cnt = heights[col] + carry_in[col];
+            while cnt > target {
+                if use_c73 && cnt >= target + 6 {
+                    // C(7:3): consumes 7, leaves 1 here, +1 to each of the
+                    // next two columns.
+                    layer.compressors.push((col as u32, 7, 3));
+                    cnt -= 6;
+                    carry_in[col + 1] += 1;
+                    carry_in[col + 2] += 1;
+                } else if cnt == target + 1 {
+                    // Half adder: 2 → 1 here, +1 next column.
+                    layer.compressors.push((col as u32, 2, 2));
+                    cnt -= 1;
+                    carry_in[col + 1] += 1;
+                } else {
+                    // Full adder: 3 → 1 here, +1 next column.
+                    layer.compressors.push((col as u32, 3, 2));
+                    cnt -= 2;
+                    carry_in[col + 1] += 1;
+                }
+            }
+            next[col] = cnt;
+        }
+        // Carries beyond the last processed column.
+        for col in heights.len()..next.len() {
+            next[col] = carry_in[col];
+        }
+        while next.last() == Some(&0) {
+            next.pop();
+        }
+        heights = next;
+        tree.layers.push(layer);
+        assert!(tree.layers.len() < 64, "reduction must converge");
+    }
+    tree.final_heights = heights;
+    tree
+}
+
+/// [`build_tree_with`] using both C(3:2) and C(7:3) (the paper's units).
+pub fn build_tree(heights: Vec<u32>) -> HwcTree {
+    build_tree_with(heights, true)
+}
+
+/// Value simulation through the same Dadda construction: feed actual rows,
+/// track the count of ONE-bits per column (bits within a column are
+/// interchangeable — every C_HW unit maps `o` input ones to the binary
+/// encoding of `o` across its output columns), and return the final value.
+///
+/// This is the gold correctness check for the column tree: for any input
+/// row set, the reduced columns must encode `Σ rows` exactly.
+pub fn simulate_tree(rows: &[u64], width: u32, use_c73: bool) -> u64 {
+    let w = width as usize;
+    // ones[c] = number of set bits in column c; height[c] = total bits.
+    let mut ones = vec![0u32; w + 34];
+    let mut height = vec![0u32; w + 34];
+    for r in rows {
+        for c in 0..w {
+            height[c] += 1;
+            ones[c] += ((r >> c) & 1) as u32;
+        }
+    }
+    let mut guard = 0;
+    while height.iter().any(|&h| h > 2) {
+        guard += 1;
+        assert!(guard < 64, "value simulation must converge");
+        let target = dadda_target_below(*height.iter().max().unwrap());
+        let len = height.len();
+        let mut nh = vec![0u32; len];
+        let mut no = vec![0u32; len];
+        let mut carry_h = vec![0u32; len];
+        let mut carry_o = vec![0u32; len];
+        for col in 0..len - 3 {
+            let mut h = height[col] + carry_h[col];
+            let mut o = ones[col] + carry_o[col];
+            while h > target {
+                let (m, outs) = if use_c73 && h >= target + 6 {
+                    (7u32, 3u32)
+                } else if h == target + 1 {
+                    (2, 2)
+                } else {
+                    (3, 2)
+                };
+                // Assign ones to this compressor greedily (interchangeable).
+                let take_ones = o.min(m);
+                o -= take_ones;
+                h -= m;
+                // Outputs: binary encoding of take_ones over outs columns.
+                for b in 0..outs {
+                    let dest = col + b as usize;
+                    if b == 0 {
+                        h += 1;
+                        o += take_ones & 1;
+                    } else {
+                        carry_h[dest] += 1;
+                        carry_o[dest] += (take_ones >> b) & 1;
+                    }
+                }
+            }
+            nh[col] = h;
+            no[col] = o;
+        }
+        for col in len - 3..len {
+            nh[col] = height[col] + carry_h[col];
+            no[col] = ones[col] + carry_o[col];
+        }
+        height = nh;
+        ones = no;
+    }
+    // Final ≤2-high columns: value = Σ ones[c]·2^c (mod 2^64).
+    let mut val = 0u64;
+    for (c, &o) in ones.iter().enumerate() {
+        if c < 64 {
+            val = val.wrapping_add((o as u64) << c);
+        }
+    }
+    val
+}
+
+impl HwcTree {
+    /// Total C(3:2) instances (== full adders).
+    pub fn c32_count(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| &l.compressors)
+            .filter(|(_, m, _)| *m == 3)
+            .count()
+    }
+
+    /// Total C(7:3) instances.
+    pub fn c73_count(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| &l.compressors)
+            .filter(|(_, m, _)| *m == 7)
+            .count()
+    }
+
+    /// Layer count (critical-path depth of the tree).
+    pub fn levels(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Spare inputs available for temporal-carry injection in the first
+    /// layer without new hardware (paper: "it is desired to inject the CB
+    /// bits to a C_HW(m:n) that is incomplete"): the leftover bits of each
+    /// column can be absorbed by rounding its last compressor up to the
+    /// next complete size — `(3 − h mod 3) mod 3` slack per column, plus
+    /// a full C(3:2) of room wherever ≤ 2 bits pass through untouched.
+    pub fn first_layer_spare_inputs(heights: &[u32]) -> u32 {
+        heights
+            .iter()
+            .map(|&h| match h % 3 {
+                0 => 0,
+                r => 3 - r,
+            })
+            .sum()
+    }
+}
+
+/// Column heights of a multiplier's partial-product array (staggered
+/// 17-bit rows), the input to the CEL.
+pub fn pp_column_heights(kind: MultKind) -> Vec<u32> {
+    let pp = PartialProducts::new(kind, 2 * OP_WIDTH + 8);
+    let rows = pp.max_rows() as u32;
+    let row_w = OP_WIDTH + 1;
+    let stride = match kind {
+        MultKind::Simple | MultKind::BoothRadix2 => 1,
+        MultKind::BoothRadix4 => 2,
+        MultKind::BoothRadix8 => 3,
+    };
+    let width = (rows - 1) as usize * stride + row_w as usize;
+    let mut h = vec![0u32; width];
+    for r in 0..rows as usize {
+        for b in 0..row_w as usize {
+            h[r * stride + b] += 1;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitsim::compressor::levels_for_rows;
+    use crate::util::check;
+
+    #[test]
+    fn tree_converges_to_two_rows() {
+        let t = build_tree(vec![16; 17]);
+        assert!(t.final_heights.iter().all(|&h| h <= 2));
+        assert!(t.levels() >= 3);
+    }
+
+    #[test]
+    fn value_simulation_exact_on_row_sets() {
+        // The gold check: reducing actual rows through the constructed
+        // column tree preserves the exact sum.
+        for use_c73 in [false, true] {
+            for rows in [
+                vec![0u64],
+                vec![1, 2, 3],
+                vec![0xFFFF; 16],
+                vec![0x1234, 0xFFFF, 0x8000, 0x7FFF, 1, 2, 4, 8, 16],
+            ] {
+                let want: u64 = rows.iter().fold(0u64, |a, r| a.wrapping_add(*r));
+                assert_eq!(
+                    simulate_tree(&rows, 30, use_c73),
+                    want,
+                    "{rows:?} c73={use_c73}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_value_simulation_matches_sum() {
+        check::cases(0x513, |g| {
+            let w = g.width(4, 30);
+            let rows: Vec<u64> = (0..g.usize_in(1, 20))
+                .map(|_| g.u64() & crate::bitsim::bits::mask(w))
+                .collect();
+            let want = rows.iter().fold(0u64, |a, r| a.wrapping_add(*r));
+            let got = simulate_tree(&rows, w, g.u64() & 1 == 1);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn wallace_pp_tree_depth_matches_row_model() {
+        // Column tree (3:2-only, the row model's unit) on the real 16-row
+        // PP profile: depth within ±2 levels of the row-wise 3:2 model.
+        let t = build_tree_with(pp_column_heights(MultKind::Simple), false);
+        let row_levels = levels_for_rows(16) as isize;
+        assert!(
+            (t.levels() as isize - row_levels).abs() <= 2,
+            "column {} vs row {}",
+            t.levels(),
+            row_levels
+        );
+        // C(7:3) units must not deepen the tree.
+        let t73 = build_tree(pp_column_heights(MultKind::Simple));
+        assert!(t73.levels() <= t.levels() + 1);
+        assert!(t73.c73_count() > 0);
+    }
+
+    #[test]
+    fn booth_trees_are_shallower() {
+        let wal = build_tree(pp_column_heights(MultKind::Simple)).levels();
+        let br4 = build_tree(pp_column_heights(MultKind::BoothRadix4)).levels();
+        let br8 = build_tree(pp_column_heights(MultKind::BoothRadix8)).levels();
+        assert!(br4 < wal);
+        assert!(br8 <= br4);
+    }
+
+    #[test]
+    fn incomplete_compressors_have_injection_capacity() {
+        // The paper's claim: the PP tree has enough incomplete-compressor
+        // slack to absorb the two deferred planes' bits in the busiest
+        // columns without new hardware. Measure the spare inputs.
+        let heights = pp_column_heights(MultKind::Simple);
+        let spare = HwcTree::first_layer_spare_inputs(&heights);
+        assert!(
+            spare >= 16,
+            "first layer spare inputs = {spare}, want ≥ 16 for CB injection"
+        );
+    }
+
+    #[test]
+    fn prop_arbitrary_profiles_converge_and_conserve() {
+        check::cases_n(0x117C, 200, |g| {
+            let heights: Vec<u32> =
+                (0..g.usize_in(1, 20)).map(|_| g.width(0, 24)).collect();
+            let t = build_tree(heights.clone());
+            assert!(t.final_heights.iter().all(|&h| h <= 2));
+            // Total bit count shrinks (or stays, for already-reduced
+            // profiles): every unit emits no more bits than it consumes.
+            let in_bits: u32 = heights.iter().sum();
+            let out_bits: u32 = t.final_heights.iter().sum();
+            assert!(out_bits <= in_bits.max(1), "{heights:?}");
+        });
+    }
+}

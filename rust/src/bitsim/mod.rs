@@ -1,0 +1,29 @@
+//! Gate-level arithmetic substrate.
+//!
+//! The paper builds its MACs from VHDL synthesized at 32 nm; we rebuild the
+//! same arithmetic *structures* in software, with two complementary views:
+//!
+//! 1. a **bit-accurate functional view** — every block computes exactly the
+//!    value its hardware counterpart computes (all arithmetic is modulo
+//!    `2^width` on two's-complement words packed into `u64`), and
+//! 2. a **structural view** — every block reports its gate counts
+//!    ([`netlist::GateCounts`]) and logic depth, from which the [`crate::ppa`]
+//!    model derives area / delay / power.
+//!
+//! The functional view is what the NPE simulator executes (so neuron values
+//! are bit-exact against the JAX/PJRT path); the structural view is what
+//! regenerates Tables I–III.
+
+pub mod adder;
+pub mod bits;
+pub mod compressor;
+pub mod gatelevel;
+pub mod hwctree;
+pub mod multiplier;
+pub mod netlist;
+
+pub use adder::{Adder, AdderKind};
+pub use bits::mask;
+pub use compressor::{cel_reduce, hamming_weight_compress, CelStats};
+pub use multiplier::{MultKind, PartialProducts};
+pub use netlist::{Depth, GateCounts};

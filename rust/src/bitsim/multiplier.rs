@@ -1,0 +1,310 @@
+//! Partial-product generation — the DRU (Data Reshape Unit) of Fig. 1.
+//!
+//! Four generators are modeled, matching the multiplier column of the
+//! paper's MAC tuples:
+//!
+//! * [`MultKind::Simple`] — AND-array rows with the paper's deferred
+//!   two's-complement sign correction (eq. 1). This is also the DRU used
+//!   inside the TCD-MAC and the Wallace baselines.
+//! * [`MultKind::BoothRadix2`] / [`MultKind::BoothRadix4`] /
+//!   [`MultKind::BoothRadix8`] — Booth-recoded rows (digit sets {−1,0,1},
+//!   {−2..2}, {−4..4}); radix-8 additionally pays for the 3a "hard
+//!   multiple" adder in depth and area.
+//!
+//! Functional contract (property-tested): for every generator,
+//! `Σ rows ≡ a·b (mod 2^w)` — so any value-preserving reduction tree plus a
+//! CPA yields the exact product, and the TCD-MAC's deferred accumulation of
+//! these rows yields the exact dot product.
+
+use super::adder::{Adder, AdderKind};
+use super::bits::trunc;
+use super::compressor::levels_for_rows;
+use super::netlist::{Depth, GateCounts};
+
+
+/// Which partial-product generator a MAC instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MultKind {
+    /// Plain AND-array rows + deferred sign-correction row (paper eq. 1).
+    Simple,
+    /// Booth radix-2 recoding: 16 rows, digit ∈ {−1, 0, 1}.
+    BoothRadix2,
+    /// Booth radix-4 recoding: 8 rows, digit ∈ {−2, …, 2}.
+    BoothRadix4,
+    /// Booth radix-8 recoding: 6 rows, digit ∈ {−4, …, 4}; needs 3a.
+    BoothRadix8,
+}
+
+impl MultKind {
+    /// Short name as used in the paper's tuples, e.g. `BRx4` or `WAL`
+    /// (the Wallace rows are [`MultKind::Simple`]; the Wallace name refers
+    /// to the reduction tree, which all our MACs share).
+    pub fn short(&self) -> &'static str {
+        match self {
+            MultKind::Simple => "WAL",
+            MultKind::BoothRadix2 => "BRx2",
+            MultKind::BoothRadix4 => "BRx4",
+            MultKind::BoothRadix8 => "BRx8",
+        }
+    }
+
+    /// Booth radix exponent k (digit covers k bits); 1 for non-Booth.
+    pub fn radix_bits(&self) -> u32 {
+        match self {
+            MultKind::Simple => 1,
+            MultKind::BoothRadix2 => 1,
+            MultKind::BoothRadix4 => 2,
+            MultKind::BoothRadix8 => 3,
+        }
+    }
+}
+
+/// Input operand width of all Table-I MACs (signed 16-bit fixed point).
+pub const OP_WIDTH: u32 = 16;
+
+/// A partial-product generator instance for `OP_WIDTH`-bit operands
+/// producing rows masked to `width` bits.
+#[derive(Debug, Clone, Copy)]
+pub struct PartialProducts {
+    pub kind: MultKind,
+    /// Row width (the MAC's internal plane width), ≤ 64.
+    pub width: u32,
+}
+
+impl PartialProducts {
+    pub fn new(kind: MultKind, width: u32) -> Self {
+        debug_assert!(width >= 2 * OP_WIDTH && width <= 64);
+        Self { kind, width }
+    }
+
+    /// Generate the partial-product rows for `a·b`.
+    /// Invariant: `Σ rows ≡ a·b (mod 2^width)`.
+    pub fn rows(&self, a: i16, b: i16) -> Vec<u64> {
+        let mut buf = Vec::with_capacity(OP_WIDTH as usize + 1);
+        self.rows_into(a, b, &mut buf);
+        buf
+    }
+
+    /// Allocation-free variant for the simulator hot loop: clears `buf`
+    /// and refills it with the rows (EXPERIMENTS.md §Perf).
+    pub fn rows_into(&self, a: i16, b: i16, buf: &mut Vec<u64>) {
+        buf.clear();
+        match self.kind {
+            MultKind::Simple => self.rows_simple(a, b, buf),
+            MultKind::BoothRadix2 => self.rows_booth(a, b, 1, buf),
+            MultKind::BoothRadix4 => self.rows_booth(a, b, 2, buf),
+            MultKind::BoothRadix8 => self.rows_booth(a, b, 3, buf),
+        }
+        if buf.is_empty() {
+            buf.push(0);
+        }
+    }
+
+    /// AND-array rows with the paper's sign handling (§III-A, eq. 1):
+    /// a negative operand is routed to the *multiplier* port, its low 15
+    /// bits accumulate shifted copies of the multiplicand, and the
+    /// `−2^15·multiplicand` term is realized as a single two's-complement
+    /// correction row. Two negative operands cancel (`(−a)(−b) = a·b`).
+    fn rows_simple(&self, a: i16, b: i16, rows: &mut Vec<u64>) {
+        let (mcand, mplier) = if a >= 0 && b >= 0 {
+            (a as i32, b as i32)
+        } else if a < 0 && b < 0 {
+            // Both negative: negate both. i16::MIN would overflow on
+            // negation; widen through i32 and fold the residue into the
+            // correction row below instead of panicking.
+            (-(a as i32), -(b as i32))
+        } else if a < 0 {
+            (b as i32, a as i32) // negative operand is the multiplier
+        } else {
+            (a as i32, b as i32)
+        };
+        self.rows_wide(mcand, mplier, rows)
+    }
+
+    /// Core row generator over widened operands. `mplier` may be negative;
+    /// `mcand` is non-negative except for the i16::MIN edge cases, which
+    /// still satisfy the row-sum invariant because everything is mod 2^w.
+    fn rows_wide(&self, mcand: i32, mplier: i32, rows: &mut Vec<u64>) {
+        let w = self.width;
+        let mag = (mplier as i64) & 0x7FFF; // low 15 bits
+        for i in 0..15 {
+            if (mag >> i) & 1 == 1 {
+                rows.push(trunc((mcand as i64) << i, w));
+            }
+        }
+        if mplier < 0 {
+            // −2^15 · mcand as a two's-complement correction row.
+            rows.push(trunc(-((mcand as i64) << 15), w));
+        } else if (mplier as i64) >> 15 & 1 == 1 {
+            // mplier ≥ 2^15 only in the widened (−i16::MIN) case.
+            rows.push(trunc((mcand as i64) << 15, w));
+        }
+    }
+
+    /// Booth radix-2^k rows: digit_j = −2^{k−1}·b_{kj+k−1} +
+    /// Σ_{t<k−1} 2^t·b_{kj+t} + b_{kj−1}, row_j = digit_j · a · 2^{kj}.
+    fn rows_booth(&self, a: i16, b: i16, k: u32, rows: &mut Vec<u64>) {
+        let w = self.width;
+        let n_digits = (OP_WIDTH + k - 1) / k;
+        let b_ext = b as i64; // sign-extended; bit t beyond 15 = sign bit
+        let bit = |t: i64| -> i64 {
+            if t < 0 {
+                0
+            } else {
+                (b_ext >> t.min(62)) & 1
+            }
+        };
+        for j in 0..n_digits as i64 {
+            let base = j * k as i64;
+            let mut d = bit(base - 1);
+            for t in 0..(k as i64 - 1) {
+                d += bit(base + t) << t;
+            }
+            d -= bit(base + k as i64 - 1) << (k - 1);
+            if d != 0 {
+                rows.push(trunc((a as i64 * d) << (base as u32), w));
+            }
+        }
+    }
+
+    /// Maximum number of rows this generator emits (sizing the CEL).
+    pub fn max_rows(&self) -> usize {
+        match self.kind {
+            MultKind::Simple => 16,
+            MultKind::BoothRadix2 => 16,
+            MultKind::BoothRadix4 => 8,
+            MultKind::BoothRadix8 => 6,
+        }
+    }
+
+    /// Depth (τ) of the row-generation logic itself.
+    pub fn ppgen_depth(&self) -> Depth {
+        match self.kind {
+            // AND array + the eq.-1 correction-row conditional negate.
+            MultKind::Simple => 2.0,
+            // select {−a, 0, a}: inverter + mux.
+            MultKind::BoothRadix2 => 2.0,
+            // 3-bit encode + select {−2a..2a} (shift is free wiring).
+            MultKind::BoothRadix4 => 4.0,
+            // 4-bit encode + select {−4a..4a} + the 3a hard multiple.
+            // The 3a adder is retimed/balanced by synthesis (it depends
+            // only on `a`, not the recoded digits), so only part of it
+            // lands on the critical path.
+            MultKind::BoothRadix8 => {
+                4.0 + 0.6 * Adder::new(AdderKind::KoggeStone, OP_WIDTH + 3).depth()
+            }
+        }
+    }
+
+    /// Gate counts of the row-generation logic.
+    pub fn ppgen_gates(&self) -> GateCounts {
+        let rw = (OP_WIDTH + 2) as u64; // per-row datapath width
+        match self.kind {
+            MultKind::Simple => GateCounts {
+                simple: 16 * rw,
+                ..Default::default()
+            },
+            MultKind::BoothRadix2 => GateCounts {
+                simple: 16 * rw, // conditional invert (XOR counted simple-ish)
+                mux: 16 * rw,
+                ..Default::default()
+            },
+            MultKind::BoothRadix4 => GateCounts {
+                simple: 8 * 6, // encoders
+                xor: 8 * rw,   // conditional invert
+                mux: 8 * rw,   // 1x/2x select
+                ..Default::default()
+            },
+            MultKind::BoothRadix8 => {
+                let hard = Adder::new(AdderKind::KoggeStone, OP_WIDTH + 3).gates();
+                GateCounts {
+                    simple: 6 * 8,
+                    xor: 6 * rw as u64,
+                    mux: 6 * 2 * rw as u64, // 4-way select ≈ 2 mux levels
+                    ..Default::default()
+                } + hard
+            }
+        }
+    }
+
+    /// Depth (τ) of the CEL tree reducing this generator's rows
+    /// (+`extra_rows` injected rows, e.g. the TCD sum/carry planes).
+    pub fn cel_depth(&self, extra_rows: usize) -> Depth {
+        2.0 * levels_for_rows(self.max_rows() + extra_rows) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitsim::bits::mask;
+    use crate::bitsim::compressor::cel_reduce;
+    use crate::util::check;
+
+    const KINDS: [MultKind; 4] = [
+        MultKind::Simple,
+        MultKind::BoothRadix2,
+        MultKind::BoothRadix4,
+        MultKind::BoothRadix8,
+    ];
+
+    fn check_product(kind: MultKind, a: i16, b: i16) {
+        let w = 40;
+        let pp = PartialProducts::new(kind, w);
+        let rows = pp.rows(a, b);
+        assert!(rows.len() <= pp.max_rows() + 1, "{kind:?}: {} rows", rows.len());
+        let sum = rows.iter().fold(0i64, |acc, r| acc.wrapping_add(*r as i64));
+        assert_eq!(
+            trunc(sum, w),
+            trunc(a as i64 * b as i64, w),
+            "{kind:?} a={a} b={b}"
+        );
+    }
+
+    #[test]
+    fn exact_product_corners() {
+        for kind in KINDS {
+            for a in [0i16, 1, -1, 2, -2, 255, -255, i16::MAX, i16::MIN, 12345, -12345] {
+                for b in [0i16, 1, -1, 3, -3, 127, -127, i16::MAX, i16::MIN, -31000] {
+                    check_product(kind, a, b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rows_reduce_through_cel_to_product() {
+        let w = 40;
+        for kind in KINDS {
+            let pp = PartialProducts::new(kind, w);
+            let rows = pp.rows(-1234, 5678);
+            let ((s, c), _) = cel_reduce(&rows, w);
+            assert_eq!(
+                s.wrapping_add(c) & mask(w),
+                trunc(-1234i64 * 5678, w),
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn row_count_budgets() {
+        assert_eq!(PartialProducts::new(MultKind::BoothRadix4, 40).max_rows(), 8);
+        assert_eq!(PartialProducts::new(MultKind::BoothRadix8, 40).max_rows(), 6);
+        // Booth radices trade PP count for generator depth.
+        let d2 = PartialProducts::new(MultKind::BoothRadix2, 40).ppgen_depth();
+        let d8 = PartialProducts::new(MultKind::BoothRadix8, 40).ppgen_depth();
+        assert!(d8 > d2);
+    }
+
+    #[test]
+    fn prop_rows_sum_to_product() {
+        check::cases_n(0x9909, 2048, |g| {
+            let pp = PartialProducts::new(KINDS[g.usize_in(0, 3)], g.width(33, 48));
+            let (a, b) = (g.i16(), g.i16());
+            let rows = pp.rows(a, b);
+            let sum = rows.iter().fold(0i64, |acc, r| acc.wrapping_add(*r as i64));
+            assert_eq!(trunc(sum, pp.width), trunc(a as i64 * b as i64, pp.width));
+        });
+    }
+}

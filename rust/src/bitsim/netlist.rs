@@ -1,0 +1,105 @@
+//! Structural netlist statistics.
+//!
+//! Every arithmetic block reports the gates it would synthesize to; the
+//! [`crate::ppa`] layer turns these counts into area (NAND2-equivalents ×
+//! cell area), leakage (per-gate), and — together with simulated toggle
+//! activity — dynamic power. Depth (in unit gate delays τ) drives the
+//! critical-path delay model.
+
+
+use std::ops::{Add, AddAssign};
+
+/// Logic depth in unit gate delays (τ = one loaded NAND2 delay).
+pub type Depth = f64;
+
+/// Gate counts of a block, in NAND2-equivalent units per gate type.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct GateCounts {
+    /// 2-input AND/NAND/NOR-class gates.
+    pub simple: u64,
+    /// XOR/XNOR gates (≈ 3 NAND2-equivalents each).
+    pub xor: u64,
+    /// Full adders (≈ 8 NAND2-equivalents each).
+    pub full_adder: u64,
+    /// Half adders (≈ 4 NAND2-equivalents each).
+    pub half_adder: u64,
+    /// 2:1 muxes (≈ 3 NAND2-equivalents each).
+    pub mux: u64,
+    /// Flip-flops (≈ 6 NAND2-equivalents each).
+    pub reg: u64,
+}
+
+impl GateCounts {
+    /// Total size in NAND2 equivalents — the area/leakage proxy.
+    pub fn nand2_equiv(&self) -> f64 {
+        self.simple as f64
+            + 3.0 * self.xor as f64
+            + 8.0 * self.full_adder as f64
+            + 4.0 * self.half_adder as f64
+            + 3.0 * self.mux as f64
+            + 6.0 * self.reg as f64
+    }
+
+    /// Counts for `n` replicated copies of this block.
+    pub fn times(&self, n: u64) -> Self {
+        Self {
+            simple: self.simple * n,
+            xor: self.xor * n,
+            full_adder: self.full_adder * n,
+            half_adder: self.half_adder * n,
+            mux: self.mux * n,
+            reg: self.reg * n,
+        }
+    }
+}
+
+impl Add for GateCounts {
+    type Output = GateCounts;
+    fn add(self, o: GateCounts) -> GateCounts {
+        GateCounts {
+            simple: self.simple + o.simple,
+            xor: self.xor + o.xor,
+            full_adder: self.full_adder + o.full_adder,
+            half_adder: self.half_adder + o.half_adder,
+            mux: self.mux + o.mux,
+            reg: self.reg + o.reg,
+        }
+    }
+}
+
+impl AddAssign for GateCounts {
+    fn add_assign(&mut self, o: GateCounts) {
+        *self = *self + o;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nand2_weights() {
+        let g = GateCounts {
+            simple: 1,
+            xor: 1,
+            full_adder: 1,
+            half_adder: 1,
+            mux: 1,
+            reg: 1,
+        };
+        assert_eq!(g.nand2_equiv(), 1.0 + 3.0 + 8.0 + 4.0 + 3.0 + 6.0);
+    }
+
+    #[test]
+    fn add_and_times() {
+        let g = GateCounts {
+            simple: 2,
+            xor: 1,
+            ..Default::default()
+        };
+        let h = g + g;
+        assert_eq!(h.simple, 4);
+        assert_eq!(h.xor, 2);
+        assert_eq!(g.times(3).simple, 6);
+    }
+}

@@ -1,0 +1,35 @@
+//! Batching policy configuration.
+
+use std::time::Duration;
+
+/// Dynamic-batching policy: flush when `batch_size` requests are waiting
+/// or when the oldest has waited `max_wait`.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub batch_size: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { batch_size: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+impl BatcherConfig {
+    pub fn new(batch_size: usize, max_wait: Duration) -> Self {
+        Self { batch_size, max_wait }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_sane() {
+        let c = BatcherConfig::default();
+        assert!(c.batch_size >= 1);
+        assert!(c.max_wait > Duration::ZERO);
+    }
+}

@@ -1,0 +1,73 @@
+//! Coordinator service metrics.
+
+/// Counters exported by the coordinator loop.
+#[derive(Debug, Default, Clone)]
+pub struct CoordinatorMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    /// Padding rows added to meet the artifact batch shape.
+    pub padded_slots: u64,
+    /// Batches cross-verified against the PJRT artifact.
+    pub verified_batches: u64,
+    /// Accumulated simulated NPE time, ns.
+    pub sim_time_ns: f64,
+    /// Accumulated simulated NPE energy, pJ.
+    pub sim_energy_pj: f64,
+}
+
+impl CoordinatorMetrics {
+    /// Average simulated batch latency, µs.
+    pub fn avg_batch_latency_us(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.sim_time_ns / self.batches as f64 / 1e3
+        }
+    }
+
+    /// Average occupancy of dispatched batches (1.0 = no padding).
+    pub fn batch_occupancy(&self) -> f64 {
+        let total = self.requests + self.padded_slots;
+        if total == 0 {
+            0.0
+        } else {
+            self.requests as f64 / total as f64
+        }
+    }
+
+    /// One-line log form.
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} batches={} occupancy={:.2} verified={} avg_sim_latency={:.1}us energy={:.2}uJ",
+            self.requests,
+            self.batches,
+            self.batch_occupancy(),
+            self.verified_batches,
+            self.avg_batch_latency_us(),
+            self.sim_energy_pj / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_math() {
+        let m = CoordinatorMetrics {
+            requests: 6,
+            padded_slots: 2,
+            batches: 1,
+            ..Default::default()
+        };
+        assert!((m.batch_occupancy() - 0.75).abs() < 1e-12);
+        assert_eq!(CoordinatorMetrics::default().batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn render_contains_counts() {
+        let m = CoordinatorMetrics { requests: 3, batches: 2, ..Default::default() };
+        assert!(m.render().contains("requests=3"));
+    }
+}

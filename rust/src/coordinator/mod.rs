@@ -1,0 +1,270 @@
+//! The serving coordinator — the L3 system layer.
+//!
+//! A threaded request router and dynamic batcher in front of the TCD-NPE:
+//! clients submit single inference requests; the batcher accumulates them
+//! into NPE-sized batches (or flushes on a deadline), the scheduler maps
+//! each batch with Algorithm 1, the cycle-accurate NPE simulator executes
+//! it (reporting simulated latency/energy), and — when a PJRT runtime with
+//! a matching artifact is attached — the same batch is cross-executed on
+//! the XLA path and verified equal before responses are released.
+//!
+//! (The offline crate set has no tokio; the event loop is std::thread +
+//! mpsc, which for a CPU-bound simulator is the right tool anyway.)
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::BatcherConfig;
+pub use metrics::CoordinatorMetrics;
+
+use crate::dataflow::{DataflowEngine, OsEngine};
+use crate::mapper::NpeGeometry;
+use crate::model::QuantizedMlp;
+use crate::runtime::PjrtRuntime;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+pub struct InferenceRequest {
+    pub input: Vec<i16>,
+    pub resp: mpsc::Sender<InferenceResponse>,
+}
+
+/// The response delivered to the client.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub output: Vec<i16>,
+    /// Simulated NPE latency for the batch this request rode in, ns.
+    pub npe_time_ns: f64,
+    /// Simulated NPE energy for the batch, pJ.
+    pub npe_energy_pj: f64,
+    /// Wall-clock latency from submit to response.
+    pub wall: Duration,
+    /// Whether the batch was cross-verified against the PJRT artifact.
+    pub verified: bool,
+}
+
+/// Where to find the PJRT artifact for cross-verification. The PJRT
+/// client is not `Send`, so the coordinator thread constructs it from
+/// this spec rather than receiving a live runtime.
+#[derive(Debug, Clone)]
+pub struct PjrtSpec {
+    pub artifact_dir: std::path::PathBuf,
+    pub artifact: String,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<CoordinatorMsg>,
+    handle: Option<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<CoordinatorMetrics>>,
+}
+
+enum CoordinatorMsg {
+    Request(Instant, InferenceRequest),
+    Shutdown,
+}
+
+impl Coordinator {
+    /// Spawn the coordinator thread.
+    ///
+    /// `pjrt`: an optional artifact spec; when given, the coordinator
+    /// thread builds a PJRT runtime and cross-verifies every batch
+    /// (None → simulator only).
+    pub fn spawn(
+        mlp: QuantizedMlp,
+        geometry: NpeGeometry,
+        cfg: BatcherConfig,
+        pjrt: Option<PjrtSpec>,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<CoordinatorMsg>();
+        let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        let metrics_thread = Arc::clone(&metrics);
+        let handle = std::thread::spawn(move || {
+            // Build the (non-Send) PJRT runtime inside the thread.
+            let runtime = pjrt.and_then(|spec| {
+                let mut rt = PjrtRuntime::new(&spec.artifact_dir).ok()?;
+                rt.load(&spec.artifact, cfg.batch_size).ok()?;
+                Some((rt, spec.artifact))
+            });
+            run_loop(rx, mlp, geometry, cfg, runtime, metrics_thread);
+        });
+        Self { tx, handle: Some(handle), metrics }
+    }
+
+    /// Submit one request; returns the response channel.
+    pub fn submit(&self, input: Vec<i16>) -> mpsc::Receiver<InferenceResponse> {
+        let (rtx, rrx) = mpsc::channel();
+        let _ = self.tx.send(CoordinatorMsg::Request(
+            Instant::now(),
+            InferenceRequest { input, resp: rtx },
+        ));
+        rrx
+    }
+
+    /// Shut down, flushing pending requests.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(CoordinatorMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow::anyhow!("coordinator panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+fn run_loop(
+    rx: mpsc::Receiver<CoordinatorMsg>,
+    mlp: QuantizedMlp,
+    geometry: NpeGeometry,
+    cfg: BatcherConfig,
+    runtime: Option<(PjrtRuntime, String)>,
+    metrics: Arc<Mutex<CoordinatorMetrics>>,
+) {
+    let mut engine = OsEngine::tcd(geometry);
+    let mut pending: Vec<(Instant, InferenceRequest)> = Vec::new();
+    let mut shutdown = false;
+
+    while !shutdown {
+        // Collect until full batch or deadline.
+        let deadline = Instant::now() + cfg.max_wait;
+        while pending.len() < cfg.batch_size {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(CoordinatorMsg::Request(t, r)) => pending.push((t, r)),
+                Ok(CoordinatorMsg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        // Form the batch (pad to the artifact batch if cross-verifying).
+        let real = pending.len().min(cfg.batch_size);
+        let batch: Vec<(Instant, InferenceRequest)> = pending.drain(..real).collect();
+        let mut inputs: Vec<Vec<i16>> = batch.iter().map(|(_, r)| r.input.clone()).collect();
+        let padded_to = if runtime.is_some() {
+            let target = cfg.batch_size;
+            while inputs.len() < target {
+                inputs.push(vec![0; mlp.topology.inputs()]);
+            }
+            target
+        } else {
+            inputs.len()
+        };
+
+        let report = engine.execute(&mlp, &inputs);
+
+        // Cross-verify on the PJRT path when available.
+        let verified = if let Some((rt, artifact)) = &runtime {
+            match rt.execute(artifact, &mlp, &inputs) {
+                Ok(pjrt_out) => {
+                    assert_eq!(
+                        report.outputs, pjrt_out,
+                        "NPE simulator and PJRT disagree — numeric bug"
+                    );
+                    true
+                }
+                Err(_) => false,
+            }
+        } else {
+            false
+        };
+
+        {
+            let mut m = metrics.lock().unwrap();
+            m.batches += 1;
+            m.requests += batch.len() as u64;
+            m.padded_slots += (padded_to - batch.len()) as u64;
+            m.sim_time_ns += report.time_ns;
+            m.sim_energy_pj += report.energy.total_pj();
+            if verified {
+                m.verified_batches += 1;
+            }
+        }
+
+        let per_req_energy = report.energy.total_pj() / padded_to.max(1) as f64;
+        for (i, (t0, req)) in batch.into_iter().enumerate() {
+            let _ = req.resp.send(InferenceResponse {
+                output: report.outputs[i].clone(),
+                npe_time_ns: report.time_ns,
+                npe_energy_pj: per_req_energy,
+                wall: t0.elapsed(),
+                verified,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MlpTopology;
+
+    fn mlp() -> QuantizedMlp {
+        QuantizedMlp::synthesize(MlpTopology::new(vec![16, 12, 4]), 77)
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let m = mlp();
+        let expect = m.forward_batch(&m.synth_inputs(1, 5));
+        let coord = Coordinator::spawn(
+            m.clone(),
+            NpeGeometry::WALKTHROUGH,
+            BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(5) },
+            None,
+        );
+        let rx = coord.submit(m.synth_inputs(1, 5)[0].clone());
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.output, expect[0]);
+        assert!(resp.npe_time_ns > 0.0);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn batches_multiple_requests() {
+        let m = mlp();
+        let inputs = m.synth_inputs(8, 9);
+        let expect = m.forward_batch(&inputs);
+        let coord = Coordinator::spawn(
+            m.clone(),
+            NpeGeometry::WALKTHROUGH,
+            BatcherConfig { batch_size: 8, max_wait: Duration::from_millis(50) },
+            None,
+        );
+        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+        for (rx, want) in rxs.into_iter().zip(expect) {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.output, want);
+        }
+        let metrics = coord.metrics.lock().unwrap().clone();
+        assert_eq!(metrics.requests, 8);
+        assert!(metrics.batches <= 8, "requests were batched");
+        drop(metrics);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn flush_on_shutdown() {
+        let m = mlp();
+        let coord = Coordinator::spawn(
+            m.clone(),
+            NpeGeometry::WALKTHROUGH,
+            BatcherConfig { batch_size: 64, max_wait: Duration::from_secs(10) },
+            None,
+        );
+        let rx = coord.submit(vec![1; 16]);
+        coord.shutdown().unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
+    }
+}

@@ -1,0 +1,139 @@
+//! The four evaluated dataflows (paper Fig. 9):
+//!
+//! * **(A) NLR** — no-local-reuse systolic array on conventional MACs
+//!   ([`nlr`]); partial sums circulate through the feature memory.
+//! * **(B) RNA** — the reconfigurable-neural-array baseline of Tu et al.
+//!   [27] ([`rna`]): the computation tree is unrolled onto PEs acting as
+//!   *either* multipliers or adders.
+//! * **(C) OS-conv** — output-stationary dataflow on conventional MACs
+//!   ([`os`] with a conventional [`MacKind`]).
+//! * **(D) OS-TCD** — the paper's TCD-NPE ([`os`] with [`MacKind::Tcd`]).
+//!
+//! Every engine produces the *same neuron values* (dataflow moves data, it
+//! does not change math — asserted in tests) but different cycle counts
+//! and energy breakdowns. Energies use the same calibrated PPA substrate
+//! everywhere, so the Fig. 10 comparisons are model-consistent.
+
+pub mod nlr;
+pub mod os;
+pub mod rna;
+pub mod ws;
+
+pub use nlr::NlrEngine;
+pub use os::OsEngine;
+pub use rna::RnaEngine;
+pub use ws::WsEngine;
+
+use crate::model::QuantizedMlp;
+use crate::ppa::{PpaReport, TechParams, VoltageDomain};
+use crate::tcdmac::{mac_ppa, MacKind};
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Energy breakdown of one execution (the four stacked components of
+/// Fig. 10-bottom, plus DRAM).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct EnergyBreakdown {
+    /// PE-array switching energy, pJ.
+    pub pe_dynamic_pj: f64,
+    /// PE-array leakage over the execution, pJ.
+    pub pe_leak_pj: f64,
+    /// SRAM access energy (W-Mem + FM-Mem + buffers), pJ.
+    pub mem_dynamic_pj: f64,
+    /// SRAM leakage over the execution, pJ.
+    pub mem_leak_pj: f64,
+    /// Main-memory transfer energy (RLC-compressed), pJ.
+    pub dram_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.pe_dynamic_pj + self.pe_leak_pj + self.mem_dynamic_pj + self.mem_leak_pj
+            + self.dram_pj
+    }
+
+    /// On-chip energy only (the paper's Fig. 10 stacks exclude DRAM).
+    pub fn on_chip_pj(&self) -> f64 {
+        self.total_pj() - self.dram_pj
+    }
+}
+
+/// Result of executing one model on one dataflow engine.
+#[derive(Debug, Clone)]
+pub struct DataflowReport {
+    pub dataflow: &'static str,
+    pub mac: &'static str,
+    /// Output activations per batch.
+    pub outputs: Vec<Vec<i16>>,
+    /// Total cycles (compute + overheads).
+    pub cycles: u64,
+    /// Wall-clock at the dataflow's achievable clock, ns.
+    pub time_ns: f64,
+    pub energy: EnergyBreakdown,
+}
+
+impl DataflowReport {
+    pub fn time_us(&self) -> f64 {
+        self.time_ns / 1e3
+    }
+
+    pub fn energy_uj(&self) -> f64 {
+        self.energy.total_pj() / 1e6
+    }
+}
+
+/// A dataflow engine executes a quantized MLP over a batch.
+pub trait DataflowEngine {
+    fn name(&self) -> &'static str;
+    fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport;
+}
+
+/// Memoized Table-I PPA lookups (each involves a 20K-cycle activity
+/// simulation; every dataflow × benchmark run reuses them).
+pub fn cached_mac_ppa(kind: MacKind) -> PpaReport {
+    static CACHE: OnceLock<Mutex<HashMap<MacKind, PpaReport>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().unwrap();
+    *guard.entry(kind).or_insert_with(|| mac_ppa(kind))
+}
+
+/// Leakage (µW) of a full PE array of `pes` MACs of `kind`.
+pub fn pe_array_leak_uw(kind: MacKind, pes: usize) -> f64 {
+    let tech = TechParams::DEFAULT;
+    tech.leak_uw(
+        crate::tcdmac::MacPpaModel::assemble(kind).nand2_total() * pes as f64,
+        VoltageDomain::PE,
+    )
+}
+
+/// The conventional MAC used in the paper's comparison NPEs: the most
+/// PDP-efficient Table-I baseline, (BRx8, KS).
+pub fn best_conventional() -> MacKind {
+    use crate::bitsim::{AdderKind, MultKind};
+    MacKind::Conv(MultKind::BoothRadix8, AdderKind::KoggeStone)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cached_ppa_consistent() {
+        let a = cached_mac_ppa(MacKind::Tcd);
+        let b = cached_mac_ppa(MacKind::Tcd);
+        assert_eq!(a.delay_ns, b.delay_ns);
+    }
+
+    #[test]
+    fn breakdown_totals() {
+        let e = EnergyBreakdown {
+            pe_dynamic_pj: 1.0,
+            pe_leak_pj: 2.0,
+            mem_dynamic_pj: 3.0,
+            mem_leak_pj: 4.0,
+            dram_pj: 5.0,
+        };
+        assert_eq!(e.total_pj(), 15.0);
+        assert_eq!(e.on_chip_pj(), 10.0);
+    }
+}

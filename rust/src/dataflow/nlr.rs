@@ -1,0 +1,172 @@
+//! NLR — No-Local-Reuse systolic dataflow (paper Fig. 9A), the classical
+//! DianNao/DaDianNao-style baseline, on conventional MACs.
+//!
+//! Timing model: the (U × I) weight matrix is tiled onto the R×C array —
+//! R neuron rows, C input columns. For each of the ⌈U/R⌉ neuron tiles the
+//! array fills its pipeline once (R + C − 2 cycles) and then streams all
+//! B batches through every ⌈I/C⌉ input tile back-to-back. Because neither
+//! outputs nor weights stay resident (the "no local reuse" in the name),
+//! each non-final input tile spills B·R partial sums to the feature memory
+//! and reloads them for the next tile — the extra memory traffic that
+//! separates NLR from OS in the Fig. 10 energy stacks.
+
+use super::{
+    cached_mac_ppa, pe_array_leak_uw, DataflowEngine, DataflowReport, EnergyBreakdown,
+};
+use crate::mapper::NpeGeometry;
+use crate::memory::rlc::rlc_compress_len;
+use crate::memory::{NpeMemorySystem, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
+use crate::model::QuantizedMlp;
+use crate::ppa::TechParams;
+use crate::tcdmac::MacKind;
+
+/// NLR systolic engine (conventional MACs only — a TCD-MAC cannot pass
+/// partial sums onward without resolving its carries every cycle, which
+/// would forfeit its advantage; the paper evaluates NLR on conv MACs).
+pub struct NlrEngine {
+    pub geometry: NpeGeometry,
+    pub kind: MacKind,
+}
+
+impl NlrEngine {
+    pub fn new(geometry: NpeGeometry) -> Self {
+        Self { geometry, kind: super::best_conventional() }
+    }
+}
+
+/// Per-layer NLR cycle/traffic summary.
+#[derive(Debug, Default, Clone, Copy)]
+struct NlrLayerCost {
+    cycles: u64,
+    /// Partial-sum words spilled and reloaded.
+    psum_words: u64,
+    /// Weight words streamed (no reuse: refetched per batch pass).
+    weight_words: u64,
+    /// Feature words streamed.
+    feature_words: u64,
+}
+
+fn layer_cost(geom: &NpeGeometry, b: u64, i: u64, u: u64) -> NlrLayerCost {
+    let r = geom.tg_rows as u64;
+    let c = geom.tg_cols as u64;
+    let neuron_tiles = u.div_ceil(r);
+    let input_tiles = i.div_ceil(c);
+    let fill = r + c - 2;
+    let cycles = neuron_tiles * (input_tiles * b + fill);
+    // Every non-final input tile spills/reloads B×(tile rows) partial sums.
+    let psum_words = 2 * b * u * (input_tiles.saturating_sub(1));
+    NlrLayerCost {
+        cycles,
+        psum_words,
+        // No local reuse: every MAC refetches its weight (tile-rounded).
+        weight_words: neuron_tiles * input_tiles * r * c * b,
+        feature_words: b * i * neuron_tiles, // features refetched per neuron tile
+    }
+}
+
+impl DataflowEngine for NlrEngine {
+    fn name(&self) -> &'static str {
+        "NLR (systolic)"
+    }
+
+    fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
+        let tech = TechParams::DEFAULT;
+        let b = inputs.len() as u64;
+        // Functional result: dataflow changes movement, not math.
+        let outputs = mlp.forward_batch(inputs);
+
+        let mut cycles = 0u64;
+        let mut psum_words = 0u64;
+        let mut weight_words = 0u64;
+        let mut feature_words = 0u64;
+        for (i, u) in mlp.topology.transitions() {
+            let c = layer_cost(&self.geometry, b, i as u64, u as u64);
+            cycles += c.cycles;
+            psum_words += c.psum_words;
+            weight_words += c.weight_words;
+            feature_words += c.feature_words;
+        }
+
+        let mac = cached_mac_ppa(self.kind);
+        let time_ns = cycles as f64 * mac.delay_ns;
+
+        // Memory traffic: row-buffered streams + word-granular psum spills.
+        let mut mem = NpeMemorySystem::new();
+        mem.wmem
+            .read_rows(weight_words.div_ceil(WMEM_ROW_WORDS as u64));
+        mem.fm_ping
+            .read_rows(feature_words.div_ceil(FMMEM_ROW_WORDS as u64));
+        // Partial sums are word-writable accesses (no row amortization —
+        // that is the NLR penalty).
+        mem.fm_pong.write_words(psum_words);
+        let mut dram_bits = 0u64;
+        for w in &mlp.weights {
+            dram_bits += rlc_compress_len(w);
+        }
+        for x in inputs {
+            dram_bits += rlc_compress_len(x);
+        }
+
+        // All PEs stream every cycle in a systolic array.
+        let active_mac_cycles = cycles * self.geometry.pes() as u64;
+        let energy = EnergyBreakdown {
+            pe_dynamic_pj: active_mac_cycles as f64 * mac.energy_per_cycle_pj(),
+            pe_leak_pj: pe_array_leak_uw(self.kind, self.geometry.pes()) * time_ns * 1e-3,
+            mem_dynamic_pj: mem.sram_dynamic_pj(&tech),
+            mem_leak_pj: mem.leakage_uw(&tech) * time_ns * 1e-3,
+            dram_pj: dram_bits as f64 * tech.dram_energy_per_bit_pj,
+        };
+
+        DataflowReport {
+            dataflow: self.name(),
+            mac: self.kind.name(),
+            outputs,
+            cycles,
+            time_ns,
+            energy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::os::OsEngine;
+    use crate::model::MlpTopology;
+
+    fn mlp_and_inputs(b: usize) -> (QuantizedMlp, Vec<Vec<i16>>) {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![64, 40, 8]), 21);
+        let inputs = mlp.synth_inputs(b, 4);
+        (mlp, inputs)
+    }
+
+    #[test]
+    fn outputs_identical_to_os() {
+        let (mlp, inputs) = mlp_and_inputs(5);
+        let nlr = NlrEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        let os = OsEngine::tcd(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        assert_eq!(nlr.outputs, os.outputs);
+    }
+
+    #[test]
+    fn nlr_never_faster_than_conv_os_and_spends_psum_energy() {
+        let (mlp, inputs) = mlp_and_inputs(10);
+        let nlr = NlrEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        let os = OsEngine::conventional(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        // Same MAC, same clock; NLR pays fill/drain + psum recirculation.
+        assert!(nlr.time_ns >= 0.9 * os.time_ns);
+        assert!(nlr.energy.mem_dynamic_pj > os.energy.mem_dynamic_pj);
+    }
+
+    #[test]
+    fn layer_cost_scales() {
+        let g = NpeGeometry::PAPER;
+        let small = layer_cost(&g, 2, 100, 50);
+        let big = layer_cost(&g, 2, 200, 100);
+        assert!(big.cycles > small.cycles);
+        assert!(big.psum_words > small.psum_words);
+        // Single input tile → no psum spill.
+        let tiny = layer_cost(&g, 4, 8, 16);
+        assert_eq!(tiny.psum_words, 0);
+    }
+}

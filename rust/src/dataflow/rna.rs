@@ -1,0 +1,148 @@
+//! RNA — the reconfigurable neural-array baseline of Tu et al. [27]
+//! (paper Fig. 9B): the MLP's computation tree is unrolled and mapped onto
+//! the PE array with each PE dynamically configured as *either* a
+//! multiplier *or* an adder, forming an ad-hoc systolic tree through the
+//! NoC.
+//!
+//! Cost model (from the paper's description of RNA as an NLR variant):
+//! * a neuron's dot product becomes I multiplies + (I−1) tree adds, so the
+//!   array's effective MAC throughput is roughly halved — multiplier PEs
+//!   and adder PEs each sit idle half the pipeline;
+//! * reconfiguring between layer segments ("multi-layer loops successively
+//!   mapped") costs a drain + reconfigure of the whole array;
+//! * intermediate tree operands travel the NoC and spill to memory when a
+//!   loop segment exceeds the array.
+
+use super::{
+    cached_mac_ppa, pe_array_leak_uw, DataflowEngine, DataflowReport, EnergyBreakdown,
+};
+use crate::mapper::NpeGeometry;
+use crate::memory::rlc::rlc_compress_len;
+use crate::memory::{NpeMemorySystem, FMMEM_ROW_WORDS};
+use crate::model::QuantizedMlp;
+use crate::ppa::TechParams;
+use crate::tcdmac::MacKind;
+
+/// RNA engine (conventional MACs used as multiplier-or-adder PEs).
+pub struct RnaEngine {
+    pub geometry: NpeGeometry,
+    pub kind: MacKind,
+}
+
+impl RnaEngine {
+    pub fn new(geometry: NpeGeometry) -> Self {
+        Self { geometry, kind: super::best_conventional() }
+    }
+
+    /// Cycles for one layer (B, I, U): ops / (PEs/2 effective) plus a
+    /// reconfiguration drain per mapped loop segment.
+    fn layer_cycles(&self, b: u64, i: u64, u: u64) -> u64 {
+        let pes = self.geometry.pes() as u64;
+        let mults = b * u * i;
+        let adds = b * u * i.saturating_sub(1);
+        let effective = (pes / 2).max(1);
+        let compute = (mults + adds).div_ceil(effective);
+        // Loop segments: each maps one neuron group's tree (I mults +
+        // adder tree) onto the array; draining/reconfiguring costs the
+        // array diameter in cycles.
+        let tree_size = 2 * i;
+        let segments = (b * u * tree_size).div_ceil(pes);
+        let drain = self.geometry.tg_rows as u64 + self.geometry.tg_cols as u64;
+        compute + segments * drain / 4
+    }
+}
+
+impl DataflowEngine for RnaEngine {
+    fn name(&self) -> &'static str {
+        "RNA (Tu et al.)"
+    }
+
+    fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
+        let tech = TechParams::DEFAULT;
+        let b = inputs.len() as u64;
+        let outputs = mlp.forward_batch(inputs);
+
+        let mut cycles = 0u64;
+        let mut operand_words = 0u64;
+        for (i, u) in mlp.topology.transitions() {
+            cycles += self.layer_cycles(b, i as u64, u as u64);
+            // Every multiply operand pair is delivered over the NoC from
+            // buffers; intermediate tree levels spill once on average.
+            operand_words += b * (u as u64) * (i as u64) / 2;
+        }
+
+        let mac = cached_mac_ppa(self.kind);
+        let time_ns = cycles as f64 * mac.delay_ns;
+
+        let mut mem = NpeMemorySystem::new();
+        mem.fm_ping
+            .read_rows(operand_words.div_ceil(FMMEM_ROW_WORDS as u64));
+        mem.fm_pong.write_words(operand_words / 4);
+        let mut dram_bits = 0u64;
+        for w in &mlp.weights {
+            dram_bits += rlc_compress_len(w);
+        }
+        for x in inputs {
+            dram_bits += rlc_compress_len(x);
+        }
+
+        // Both halves of the array switch every cycle (one as multipliers,
+        // one as adders).
+        let active_mac_cycles = cycles * self.geometry.pes() as u64;
+        let energy = EnergyBreakdown {
+            pe_dynamic_pj: active_mac_cycles as f64 * mac.energy_per_cycle_pj(),
+            pe_leak_pj: pe_array_leak_uw(self.kind, self.geometry.pes()) * time_ns * 1e-3,
+            mem_dynamic_pj: mem.sram_dynamic_pj(&tech),
+            mem_leak_pj: mem.leakage_uw(&tech) * time_ns * 1e-3,
+            dram_pj: dram_bits as f64 * tech.dram_energy_per_bit_pj,
+        };
+
+        DataflowReport {
+            dataflow: self.name(),
+            mac: self.kind.name(),
+            outputs,
+            cycles,
+            time_ns,
+            energy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::nlr::NlrEngine;
+    use crate::dataflow::os::OsEngine;
+    use crate::model::MlpTopology;
+
+    fn mlp_and_inputs(b: usize) -> (QuantizedMlp, Vec<Vec<i16>>) {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![64, 40, 8]), 33);
+        let inputs = mlp.synth_inputs(b, 6);
+        (mlp, inputs)
+    }
+
+    #[test]
+    fn outputs_match() {
+        let (mlp, inputs) = mlp_and_inputs(4);
+        let r = RnaEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        assert_eq!(r.outputs, mlp.forward_batch(&inputs));
+    }
+
+    #[test]
+    fn rna_is_the_slowest_dataflow() {
+        // Paper Fig. 10: RNA trails OS and NLR on every benchmark.
+        let (mlp, inputs) = mlp_and_inputs(10);
+        let rna = RnaEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        let nlr = NlrEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        let os = OsEngine::conventional(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        assert!(rna.cycles as f64 >= 0.95 * nlr.cycles as f64);
+        assert!(rna.cycles > os.cycles);
+    }
+
+    #[test]
+    fn cycles_scale_with_work() {
+        let e = RnaEngine::new(NpeGeometry::PAPER);
+        assert!(e.layer_cycles(2, 100, 50) < e.layer_cycles(4, 100, 50));
+        assert!(e.layer_cycles(2, 100, 50) < e.layer_cycles(2, 200, 50));
+    }
+}

@@ -1,0 +1,215 @@
+//! WS — weight-stationary multi-batch dataflow (paper §II: "the only
+//! possible solution for using the WS solution in processing MLPs is the
+//! case of multi-batch processing that may benefit from weight reuse").
+//!
+//! Implemented as the paper's future-work extension: each PE pins one
+//! weight row segment and streams *all B batches* through it before the
+//! next weight fetch. Compute cycles match OS (same MACs, same work); the
+//! win is memory traffic — weights are fetched `⌈B/K⌉`-times less often
+//! than the OS schedule fetches them, at the cost of per-PE psum storage
+//! for B partial outputs (modeled as extra FM traffic when B exceeds the
+//! per-PE register budget).
+
+use super::{
+    cached_mac_ppa, pe_array_leak_uw, DataflowEngine, DataflowReport, EnergyBreakdown,
+};
+use crate::mapper::{MapperTree, NpeGeometry};
+use crate::memory::arrangement::WMemArrangement;
+use crate::memory::rlc::rlc_compress_len;
+use crate::memory::{NpeMemorySystem, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
+use crate::model::QuantizedMlp;
+use crate::ppa::TechParams;
+use crate::tcdmac::MacKind;
+
+/// Per-PE partial-sum registers available for WS batching (beyond this,
+/// psums spill to the FM memory).
+pub const WS_PSUM_REGS: usize = 4;
+
+/// Weight-stationary engine on TCD-MACs.
+pub struct WsEngine {
+    pub geometry: NpeGeometry,
+    pub kind: MacKind,
+}
+
+impl WsEngine {
+    pub fn new(geometry: NpeGeometry) -> Self {
+        Self { geometry, kind: MacKind::Tcd }
+    }
+}
+
+impl DataflowEngine for WsEngine {
+    fn name(&self) -> &'static str {
+        "WS (multi-batch)"
+    }
+
+    fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
+        let tech = TechParams::DEFAULT;
+        let b = inputs.len();
+        let outputs = mlp.forward_batch(inputs);
+        let pes = self.geometry.pes();
+
+        let mut cycles = 0u64;
+        let mut wmem_reads = 0u64;
+        let mut fm_reads = 0u64;
+        let mut fm_writes = 0u64;
+        let mut psum_spill_words = 0u64;
+        for (i, u) in mlp.topology.transitions() {
+            // Weight tiles: each of the ⌈U/pes⌉ passes pins pes weights
+            // rows; ALL batches stream through before the next fetch.
+            let passes = u.div_ceil(pes) as u64;
+            let extra = matches!(self.kind, MacKind::Tcd) as u64;
+            cycles += passes * b as u64 * (i as u64 + extra);
+            // Weights fetched ONCE per pass (the WS property).
+            let w = WMemArrangement {
+                row_words: WMEM_ROW_WORDS,
+                n: pes.min(u),
+                inputs: i,
+                neurons: pes.min(u),
+            };
+            wmem_reads += w.row_reads() * passes;
+            // Features re-streamed once per pass per batch.
+            fm_reads += passes * (b as u64) * (i as u64).div_ceil(FMMEM_ROW_WORDS as u64);
+            fm_writes += (b as u64 * u as u64).div_ceil(FMMEM_ROW_WORDS as u64);
+            psum_spill_words += ws_psum_spill_words(b, u);
+        }
+
+        let mac = cached_mac_ppa(self.kind);
+        let time_ns = cycles as f64 * mac.delay_ns;
+
+        let mut mem = NpeMemorySystem::new();
+        mem.wmem.read_rows(wmem_reads);
+        mem.fm_ping.read_rows(fm_reads);
+        mem.fm_pong.write_rows(fm_writes);
+        mem.fm_pong.write_words(psum_spill_words);
+        let mut dram_bits = 0u64;
+        for w in &mlp.weights {
+            dram_bits += rlc_compress_len(w);
+        }
+        for x in inputs {
+            dram_bits += rlc_compress_len(x);
+        }
+
+        let active = cycles * pes as u64; // all PEs active while streaming
+        let energy = EnergyBreakdown {
+            pe_dynamic_pj: active as f64 * mac.energy_per_cycle_pj(),
+            pe_leak_pj: pe_array_leak_uw(self.kind, pes) * time_ns * 1e-3,
+            mem_dynamic_pj: mem.sram_dynamic_pj(&tech),
+            mem_leak_pj: mem.leakage_uw(&tech) * time_ns * 1e-3,
+            dram_pj: dram_bits as f64 * tech.dram_energy_per_bit_pj,
+        };
+
+        DataflowReport {
+            dataflow: self.name(),
+            mac: self.kind.name(),
+            outputs,
+            cycles,
+            time_ns,
+            energy,
+        }
+    }
+}
+
+/// Partial-sum spill words for one layer: batches beyond the per-PE
+/// register budget spill and reload each of the layer's `u` outputs once.
+pub fn ws_psum_spill_words(batches: usize, u: usize) -> u64 {
+    2 * batches.saturating_sub(WS_PSUM_REGS) as u64 * u as u64
+}
+
+/// OS-schedule weight row reads for the same problem (for the comparison
+/// tests/bench): every roll refetches its group's weights.
+pub fn os_weight_row_reads(geometry: NpeGeometry, mlp: &QuantizedMlp, b: usize) -> u64 {
+    let mut mapper = MapperTree::new(geometry);
+    let schedule = mapper.schedule_model(&mlp.topology, b);
+    schedule
+        .layers
+        .iter()
+        .flat_map(|l| {
+            l.events.iter().map(move |e| {
+                let w = WMemArrangement {
+                    row_words: WMEM_ROW_WORDS,
+                    n: e.config.1,
+                    inputs: l.gamma.inputs,
+                    neurons: e.load.1.min(e.config.1),
+                };
+                w.row_reads() * e.rolls as u64
+            })
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MlpTopology;
+
+    fn setup(b: usize) -> (QuantizedMlp, Vec<Vec<i16>>) {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![100, 64, 10]), 9);
+        let inputs = mlp.synth_inputs(b, 10);
+        (mlp, inputs)
+    }
+
+    #[test]
+    fn outputs_match_reference() {
+        let (mlp, inputs) = setup(6);
+        let r = WsEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        assert_eq!(r.outputs, mlp.forward_batch(&inputs));
+    }
+
+    #[test]
+    fn ws_cuts_weight_traffic_for_large_batches() {
+        // The whole point of multi-batch WS (paper §II): weight fetches
+        // amortize over B batches.
+        let (mlp, _inputs) = setup(32);
+        let os_reads = os_weight_row_reads(NpeGeometry::PAPER, &mlp, 32);
+        // WS: once per pass regardless of batch count.
+        let pes = NpeGeometry::PAPER.pes();
+        let ws_reads: u64 = mlp
+            .topology
+            .transitions()
+            .map(|(i, u)| {
+                let w = WMemArrangement {
+                    row_words: WMEM_ROW_WORDS,
+                    n: pes.min(u),
+                    inputs: i,
+                    neurons: pes.min(u),
+                };
+                w.row_reads() * u.div_ceil(pes) as u64
+            })
+            .sum();
+        assert!(
+            ws_reads * 4 < os_reads,
+            "WS {ws_reads} vs OS {os_reads} weight row reads at B=32"
+        );
+    }
+
+    #[test]
+    fn single_batch_ws_has_no_advantage_and_costs_nothing_extra() {
+        let (mlp, inputs) = setup(1);
+        let ws = WsEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        assert!(ws.cycles > 0);
+        // No psum spills at B=1.
+        let (_, _, words) = {
+            let mut mem = NpeMemorySystem::new();
+            mem.fm_pong.write_words(0);
+            mem.fm_pong.counters()
+        };
+        assert_eq!(words, 0);
+    }
+
+    #[test]
+    fn ws_spills_psums_beyond_register_budget() {
+        assert_eq!(ws_psum_spill_words(WS_PSUM_REGS, 100), 0);
+        assert_eq!(ws_psum_spill_words(1, 100), 0);
+        assert_eq!(
+            ws_psum_spill_words(WS_PSUM_REGS + 3, 100),
+            2 * 3 * 100,
+            "each over-budget batch spills+reloads every output once"
+        );
+        // And the spill shows up in executed memory energy.
+        let (mlp, i_big) = setup(WS_PSUM_REGS * 8);
+        let (_, i_small) = setup(WS_PSUM_REGS);
+        let big = WsEngine::new(NpeGeometry::PAPER).execute(&mlp, &i_big);
+        let small = WsEngine::new(NpeGeometry::PAPER).execute(&mlp, &i_small);
+        assert!(big.energy.mem_dynamic_pj > small.energy.mem_dynamic_pj);
+    }
+}

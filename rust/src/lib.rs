@@ -1,0 +1,48 @@
+//! # tcd-npe — reproduction of *TCD-NPE: A Re-configurable and Efficient
+//! Neural Processing Engine, Powered by Novel Temporal-Carry-deferring MACs*
+//! (Mirzaeian, Homayoun, Sasan — 2019).
+//!
+//! The crate is the **L3 (Rust) layer** of a three-layer Rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * [`bitsim`] — gate-level arithmetic substrate: adders (ripple /
+//!   Brent-Kung / Kogge-Stone), multipliers (Booth radix-2/4/8, Wallace),
+//!   Hamming-weight compressors, and carry-save reduction trees, each
+//!   bit-accurate and annotated with structural gate counts.
+//! * [`ppa`] — analytic power/performance/area model (32 nm-like constants,
+//!   logical-effort delays, switching-activity dynamic power, two voltage
+//!   domains) standing in for the paper's Synopsys post-layout flow.
+//! * [`tcdmac`] — the paper's contribution: the Temporal-Carry-deferring MAC
+//!   (CDM/CPM modes, carry-buffer unit, deferred signed correction) plus the
+//!   eight conventional MAC baselines of Table I.
+//! * [`mapper`] — Algorithm 1: scheduling B batches of an MLP layer onto
+//!   NPE(K, N) configurations in the minimum number of rolls.
+//! * [`memory`] — W-Mem / ping-pong FM-Mem with the Fig. 7 data arrangement,
+//!   row buffers, access counting, and RLC compression for DRAM transfers.
+//! * [`npe`] — the PE array (TCD-MAC groups), LDN multicast network,
+//!   quantization/ReLU unit (Fig. 4) and the controller FSM.
+//! * [`dataflow`] — the four evaluated dataflows of Fig. 9: OS on TCD-MACs,
+//!   OS on conventional MACs, NLR (systolic), and RNA (compute-tree).
+//! * [`model`] — MLP topology descriptions, the Table-IV benchmark zoo and
+//!   signed 16-bit fixed-point tensors.
+//! * [`runtime`] — PJRT executor loading the JAX/Pallas-lowered HLO
+//!   artifacts (`artifacts/*.hlo.txt`) for the numeric reference path.
+//! * [`coordinator`] — the serving layer: request router, batch
+//!   accumulator, scheduler integration and metrics.
+//! * [`bench`] — generators for every table and figure of the paper's
+//!   evaluation (shared between the CLI and the criterion benches).
+
+pub mod bench;
+pub mod bitsim;
+pub mod coordinator;
+pub mod dataflow;
+pub mod mapper;
+pub mod memory;
+pub mod model;
+pub mod npe;
+pub mod ppa;
+pub mod runtime;
+pub mod tcdmac;
+pub mod util;
+
+pub use model::fixedpoint::{Fix16, FRAC_BITS};

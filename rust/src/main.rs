@@ -1,0 +1,239 @@
+//! `tcd-npe` — CLI entry point (leader process).
+//!
+//! Subcommands regenerate each paper artifact, explore schedules, run the
+//! serving coordinator demo, and cross-verify the simulator against the
+//! PJRT artifacts. Run with no arguments for usage.
+
+use anyhow::{anyhow, Context, Result};
+use std::time::Duration;
+use tcd_npe::bench;
+use tcd_npe::coordinator::{BatcherConfig, Coordinator};
+use tcd_npe::dataflow::{DataflowEngine, OsEngine};
+use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry};
+use tcd_npe::memory::{FmArrangement, WMemArrangement, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
+use tcd_npe::model::{benchmarks, MlpTopology, QuantizedMlp};
+use tcd_npe::runtime::{ArtifactManifest, PjrtRuntime};
+use tcd_npe::util::TextTable;
+
+const USAGE: &str = "\
+tcd-npe — reproduction of the TCD-NPE neural processing engine
+
+USAGE: tcd-npe <command> [args]
+
+Paper artifacts:
+  table1                     PPA of conventional MACs vs TCD-MAC (Table I)
+  table2                     stream throughput/energy improvements (Table II)
+  table3                     NPE implementation PPA (Table III)
+  table4                     benchmark suite (Table IV)
+  fig10 [--batches N]        exec time + energy, 4 dataflows x 7 benchmarks
+
+System:
+  schedule <topo> <batches>  Algorithm-1 schedule for an MLP, e.g. 784:700:10 10
+  mem-report <topo> <K> <N>  Fig.-7 data arrangement for a config
+  serve [--requests N]       run the serving coordinator demo (simulator)
+  verify [artifact-dir]      cross-check NPE simulator vs PJRT artifacts
+  ablate <which>             ablations: geometry | batch | voltage | mac | all
+";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "table1" => {
+            println!("{}", bench::render_table1(&bench::table1_rows()));
+        }
+        "table2" => {
+            println!("{}", bench::render_table2(&bench::table2_rows()));
+            println!(
+                "(labels corrected vs the paper — its Table II throughput/energy \
+                 headers are swapped; see EXPERIMENTS.md)"
+            );
+        }
+        "table3" => println!("{}", bench::render_table3()),
+        "table4" => println!("{}", bench::render_table4()),
+        "fig10" => {
+            let batches = flag_value(&args, "--batches")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(bench::fig10::FIG10_BATCHES);
+            println!("{}", bench::render_fig10(&bench::fig10_rows(batches)));
+        }
+        "schedule" => {
+            let topo = MlpTopology::parse(args.get(1).context("need topology")?)
+                .context("bad topology, e.g. 784:700:10")?;
+            let batches: usize = args.get(2).context("need batch count")?.parse()?;
+            cmd_schedule(&topo, batches);
+        }
+        "mem-report" => {
+            let topo = MlpTopology::parse(args.get(1).context("need topology")?)
+                .context("bad topology")?;
+            let k: usize = args.get(2).context("need K")?.parse()?;
+            let n: usize = args.get(3).context("need N")?.parse()?;
+            cmd_mem_report(&topo, k, n);
+        }
+        "serve" => {
+            let requests = flag_value(&args, "--requests")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(64);
+            cmd_serve(requests)?;
+        }
+        "verify" => {
+            let dir = args.get(1).map(String::as_str).unwrap_or("artifacts");
+            cmd_verify(dir)?;
+        }
+        "ablate" => {
+            use tcd_npe::bench::ablation;
+            let which = args.get(1).map(String::as_str).unwrap_or("all");
+            if matches!(which, "geometry" | "all") {
+                println!("{}", ablation::ablate_geometry(10));
+            }
+            if matches!(which, "batch" | "all") {
+                println!("{}", ablation::ablate_batch());
+            }
+            if matches!(which, "voltage" | "all") {
+                println!("{}", ablation::ablate_voltage());
+            }
+            if matches!(which, "mac" | "all") {
+                println!("{}", ablation::ablate_mac(10));
+            }
+        }
+        _ => {
+            print!("{USAGE}");
+            if !cmd.is_empty() {
+                return Err(anyhow!("unknown command {cmd:?}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn cmd_schedule(topo: &MlpTopology, batches: usize) {
+    let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+    println!("Model {} on the 16x8 TCD-NPE, B={batches}\n", topo.display());
+    for (l, (i, u)) in topo.transitions().enumerate() {
+        let gamma = Gamma::new(batches, i, u);
+        let s = mapper.schedule_layer(gamma);
+        println!(
+            "layer {l}: Γ(B={batches}, I={i}, U={u}) -> {} rolls, utilization {:.0}%",
+            s.total_rolls(),
+            s.utilization() * 100.0
+        );
+        for e in &s.events {
+            println!(
+                "    {} x NPE({}, {}) load=({}, {})",
+                e.rolls, e.config.0, e.config.1, e.load.0, e.load.1
+            );
+        }
+        if let Some(node) = mapper.best(batches, u) {
+            println!("  execution tree:\n{}", node.render(4));
+        }
+    }
+    let ms = mapper.schedule_model(topo, batches);
+    println!(
+        "total: {} rolls, {} TCD compute cycles, mean utilization {:.0}%",
+        ms.total_rolls(),
+        ms.compute_cycles(true),
+        ms.utilization() * 100.0
+    );
+}
+
+fn cmd_mem_report(topo: &MlpTopology, k: usize, n: usize) {
+    println!(
+        "Fig.-7 arrangement for NPE({k},{n}), model {}\n",
+        topo.display()
+    );
+    let mut t = TextTable::new(vec![
+        "layer",
+        "I",
+        "H",
+        "W rows/group",
+        "W groups",
+        "W reads saved",
+        "FM rows/batch",
+        "FM reads saved",
+    ]);
+    for (l, (i, u)) in topo.transitions().enumerate() {
+        let w = WMemArrangement { row_words: WMEM_ROW_WORDS, n, inputs: i, neurons: u };
+        let f = FmArrangement { row_words: FMMEM_ROW_WORDS, batches: k, inputs: i };
+        t.row(vec![
+            l.to_string(),
+            i.to_string(),
+            u.to_string(),
+            w.rows_per_group().to_string(),
+            w.groups().to_string(),
+            format!("{:.0}x", w.access_reduction()),
+            f.rows_per_batch().to_string(),
+            format!("{:.0}x", f.access_reduction()),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn cmd_serve(requests: usize) -> Result<()> {
+    let bench = benchmarks()
+        .into_iter()
+        .find(|b| b.dataset == "Iris")
+        .unwrap();
+    let mlp = QuantizedMlp::synthesize(bench.topology.clone(), 0xF16_10);
+    println!(
+        "serving {} ({}) on the 16x8 TCD-NPE simulator, {requests} requests",
+        bench.dataset,
+        bench.topology.display()
+    );
+    let coord = Coordinator::spawn(
+        mlp.clone(),
+        NpeGeometry::PAPER,
+        BatcherConfig::new(8, Duration::from_millis(1)),
+        None,
+    );
+    let inputs = mlp.synth_inputs(requests, 0xDA7A);
+    let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30))?;
+        if !resp.output.is_empty() {
+            ok += 1;
+        }
+    }
+    println!("served {ok}/{requests}");
+    println!("{}", coord.metrics.lock().unwrap().render());
+    coord.shutdown()?;
+    Ok(())
+}
+
+fn cmd_verify(dir: &str) -> Result<()> {
+    let manifest = ArtifactManifest::load(dir)?;
+    let mut rt = PjrtRuntime::new(dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut failures = 0;
+    for e in &manifest.entries {
+        rt.load(&e.name, e.batch)?;
+        let mlp = QuantizedMlp::synthesize(e.topology.clone(), e.seed);
+        let inputs = mlp.synth_inputs(e.batch, e.seed ^ 0xDA7A);
+        let sim = OsEngine::tcd(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        let pjrt = rt.execute(&e.name, &mlp, &inputs)?;
+        let status = if sim.outputs == pjrt { "OK" } else { "MISMATCH" };
+        if sim.outputs != pjrt {
+            failures += 1;
+        }
+        println!(
+            "{:<24} topo {:<24} batch {:<3} sim-vs-pjrt: {status}",
+            e.name,
+            e.topology.display(),
+            e.batch
+        );
+    }
+    if failures > 0 {
+        return Err(anyhow!("{failures} artifact(s) mismatched"));
+    }
+    println!("all artifacts verified bit-exact");
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Algorithm 1 — the Mapper (paper §III-B.2, Figs. 5 & 6).
+//!
+//! Given a PE-array geometry and a layer problem Γ(B, I, U) — B batches of
+//! a layer with I input features and U output neurons — the mapper chooses
+//! a sequence of NPE(K, N) *rolls* (K batches × N neurons computed
+//! simultaneously) that covers every (batch, neuron) pair exactly once in
+//! the minimum number of rolls.
+//!
+//! Modules:
+//! * [`tree`] — the paper's `CreateTree` computational tree, verbatim
+//!   (used by the explorer example to draw Fig. 6A), and the memoized
+//!   minimum-rolls recursion that extracts the optimal binary execution
+//!   tree (Fig. 6B);
+//! * [`schedule`] — BFS over the execution tree into the flat event
+//!   sequence the controller consumes (Fig. 6C), utilization accounting
+//!   (Fig. 5), and the multi-layer / multi-batch driver over a whole MLP.
+
+pub mod schedule;
+pub mod tree;
+
+pub use schedule::{LayerSchedule, ModelSchedule, ScheduledEvent};
+pub use tree::{ExecNode, MapperTree};
+
+/// PE-array geometry: `tg_rows` TCD-MAC Groups (TGs) of `tg_cols` MACs.
+/// The paper's NPE is 16×8; the walkthrough examples use 6×3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NpeGeometry {
+    /// Number of TGs (rows of the PE array).
+    pub tg_rows: usize,
+    /// MACs per TG (columns of the PE array).
+    pub tg_cols: usize,
+}
+
+impl NpeGeometry {
+    /// The paper's TCD-NPE: 16 × 8 (Table III).
+    pub const PAPER: NpeGeometry = NpeGeometry { tg_rows: 16, tg_cols: 8 };
+    /// The walkthrough geometry of Figs. 3, 5, 6: 6 × 3.
+    pub const WALKTHROUGH: NpeGeometry = NpeGeometry { tg_rows: 6, tg_cols: 3 };
+
+    pub fn new(tg_rows: usize, tg_cols: usize) -> Self {
+        assert!(tg_rows > 0 && tg_cols > 0);
+        Self { tg_rows, tg_cols }
+    }
+
+    /// Total PEs.
+    pub fn pes(&self) -> usize {
+        self.tg_rows * self.tg_cols
+    }
+
+    /// Supported NPE(K, N) configurations.
+    ///
+    /// TGs work on neurons of one batch (to keep the LDN simple, §III-B.1),
+    /// so K must divide the TG count and N = PEs / K; configurations where
+    /// N would be smaller than a TG are not supported (the paper excludes
+    /// (9, 2) and (18, 1) on the 6×3 array).
+    pub fn configs(&self) -> Vec<(usize, usize)> {
+        (1..=self.tg_rows)
+            .filter(|k| self.tg_rows % k == 0)
+            .map(|k| (k, self.pes() / k))
+            .filter(|(_, n)| *n >= self.tg_cols)
+            .collect()
+    }
+}
+
+/// A layer-level problem instance Γ(B, I, U) (paper notation):
+/// `B` batches of a layer with `I` input features and `U` neurons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Gamma {
+    pub batches: usize,
+    pub inputs: usize,
+    pub neurons: usize,
+}
+
+impl Gamma {
+    pub fn new(batches: usize, inputs: usize, neurons: usize) -> Self {
+        Self { batches, inputs, neurons }
+    }
+
+    /// Total (batch, neuron) pairs to cover.
+    pub fn work(&self) -> usize {
+        self.batches * self.neurons
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walkthrough_configs_match_paper() {
+        // Paper: (K, N) ∈ {(1,18), (2,9), (3,6), (6,3)} on the 6×3 array.
+        let mut cfgs = NpeGeometry::WALKTHROUGH.configs();
+        cfgs.sort();
+        assert_eq!(cfgs, vec![(1, 18), (2, 9), (3, 6), (6, 3)]);
+    }
+
+    #[test]
+    fn paper_geometry_configs() {
+        let cfgs = NpeGeometry::PAPER.configs();
+        // 16×8 = 128 PEs; K ∈ {1,2,4,8,16} all give N ≥ 8.
+        assert_eq!(cfgs, vec![(1, 128), (2, 64), (4, 32), (8, 16), (16, 8)]);
+    }
+
+    #[test]
+    fn n_smaller_than_tg_excluded() {
+        let cfgs = NpeGeometry::new(8, 4).configs();
+        assert!(!cfgs.iter().any(|(_, n)| *n < 4));
+        assert!(cfgs.contains(&(8, 4)));
+    }
+
+    #[test]
+    fn gamma_work() {
+        assert_eq!(Gamma::new(3, 100, 9).work(), 27);
+    }
+}

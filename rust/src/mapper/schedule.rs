@@ -1,0 +1,214 @@
+//! Flattening the execution tree into the controller's event sequence
+//! (Fig. 6C) and scheduling whole models.
+
+use super::tree::{ExecNode, MapperTree};
+use super::{Gamma, NpeGeometry};
+use crate::model::MlpTopology;
+
+/// One scheduled computational event: `rolls` consecutive rolls of the
+/// PE array in configuration NPE(K, N) with load ψ = (K*, N*).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduledEvent {
+    /// NPE(K, N) configuration (controller/LDN setting).
+    pub config: (usize, usize),
+    /// Load ψ = (batches, neurons) actually computed per roll.
+    pub load: (usize, usize),
+    /// Number of rolls with this configuration and load.
+    pub rolls: usize,
+}
+
+impl ScheduledEvent {
+    /// (batch, neuron) pairs covered by this event.
+    pub fn work(&self) -> usize {
+        self.rolls * self.load.0 * self.load.1
+    }
+}
+
+/// The schedule of one Γ(B, I, U) layer problem.
+#[derive(Debug, Clone)]
+pub struct LayerSchedule {
+    pub gamma: Gamma,
+    pub geometry: NpeGeometry,
+    /// BFS-ordered events (the paper reports the sequence via BFS on the
+    /// execution tree).
+    pub events: Vec<ScheduledEvent>,
+}
+
+impl LayerSchedule {
+    /// Total rolls across all events.
+    pub fn total_rolls(&self) -> usize {
+        self.events.iter().map(|e| e.rolls).sum()
+    }
+
+    /// Compute cycles for this layer: every roll streams the `I` input
+    /// features through each PE; TCD-MACs add one carry-propagation cycle
+    /// per roll (`extra_cycle`).
+    pub fn compute_cycles(&self, extra_cycle: bool) -> u64 {
+        let per_roll = self.gamma.inputs as u64 + extra_cycle as u64;
+        self.total_rolls() as u64 * per_roll
+    }
+
+    /// PE-array utilization: useful MAC slots over provisioned slots
+    /// (Fig. 5's percentages).
+    pub fn utilization(&self) -> f64 {
+        let provisioned: usize = self.total_rolls() * self.geometry.pes();
+        if provisioned == 0 {
+            return 0.0;
+        }
+        self.gamma.work() as f64 / provisioned as f64
+    }
+
+    /// Schedule coverage check: Σ event work == B × U.
+    pub fn covers_exactly(&self) -> bool {
+        self.events.iter().map(ScheduledEvent::work).sum::<usize>() == self.gamma.work()
+    }
+}
+
+/// A whole-model schedule: one [`LayerSchedule`] per MLP layer transition,
+/// processed in order (layer l's outputs are layer l+1's inputs).
+#[derive(Debug, Clone)]
+pub struct ModelSchedule {
+    pub layers: Vec<LayerSchedule>,
+}
+
+impl ModelSchedule {
+    pub fn total_rolls(&self) -> usize {
+        self.layers.iter().map(LayerSchedule::total_rolls).sum()
+    }
+
+    pub fn compute_cycles(&self, extra_cycle: bool) -> u64 {
+        self.layers.iter().map(|l| l.compute_cycles(extra_cycle)).sum()
+    }
+
+    /// Work-weighted average PE utilization.
+    pub fn utilization(&self) -> f64 {
+        let work: usize = self.layers.iter().map(|l| l.gamma.work()).sum();
+        let slots: usize = self
+            .layers
+            .iter()
+            .map(|l| l.total_rolls() * l.geometry.pes())
+            .sum();
+        if slots == 0 {
+            0.0
+        } else {
+            work as f64 / slots as f64
+        }
+    }
+}
+
+/// Flatten an execution tree into the BFS event order of Fig. 6C.
+pub fn bfs_events(root: &ExecNode) -> Vec<ScheduledEvent> {
+    let mut queue = std::collections::VecDeque::from([root]);
+    let mut events = Vec::new();
+    while let Some(node) = queue.pop_front() {
+        events.push(ScheduledEvent {
+            config: node.config,
+            load: node.load,
+            rolls: node.rolls,
+        });
+        if let Some(b) = &node.node_b {
+            queue.push_back(b);
+        }
+        if let Some(t) = &node.node_theta {
+            queue.push_back(t);
+        }
+    }
+    events
+}
+
+impl MapperTree {
+    /// Schedule one Γ problem (the `PracticalCfgFinder` inner step).
+    pub fn schedule_layer(&mut self, gamma: Gamma) -> LayerSchedule {
+        let events = self
+            .best(gamma.batches, gamma.neurons)
+            .map(|n| bfs_events(&n))
+            .unwrap_or_default();
+        LayerSchedule {
+            gamma,
+            geometry: self.geometry,
+            events,
+        }
+    }
+
+    /// Schedule `batches` copies of a whole MLP — the top-level loop of
+    /// Algorithm 1: one Γ(B, M[l-1], M[l]) problem per layer transition.
+    pub fn schedule_model(&mut self, topo: &MlpTopology, batches: usize) -> ModelSchedule {
+        let layers = topo
+            .transitions()
+            .map(|(i, u)| self.schedule_layer(Gamma::new(batches, i, u)))
+            .collect();
+        ModelSchedule { layers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn walkthrough() -> MapperTree {
+        MapperTree::new(NpeGeometry::WALKTHROUGH)
+    }
+
+    #[test]
+    fn fig5_utilization_values() {
+        // Paper Fig. 5: Γ(3, I, 9) on 6×3 reaches 75% with 2 rolls.
+        let mut m = walkthrough();
+        let s = m.schedule_layer(Gamma::new(3, 100, 9));
+        assert_eq!(s.total_rolls(), 2);
+        assert!((s.utilization() - 0.75).abs() < 1e-9, "{}", s.utilization());
+        assert!(s.covers_exactly());
+    }
+
+    #[test]
+    fn fig6_event_sequence() {
+        // Γ(5, I, 7): 3 rolls total, BFS sequence covers 35 pairs.
+        let mut m = walkthrough();
+        let s = m.schedule_layer(Gamma::new(5, 42, 7));
+        assert_eq!(s.total_rolls(), 3);
+        assert!(s.covers_exactly());
+        // Each event's load fits its configuration.
+        for e in &s.events {
+            assert!(e.load.0 <= e.config.0 && e.load.1 <= e.config.1);
+        }
+    }
+
+    #[test]
+    fn compute_cycles_tcd_vs_conv() {
+        // M+1 cycles per roll for TCD (paper §III-B.1), M for conventional.
+        let mut m = walkthrough();
+        let s = m.schedule_layer(Gamma::new(3, 100, 9));
+        assert_eq!(s.compute_cycles(true), 2 * 101);
+        assert_eq!(s.compute_cycles(false), 2 * 100);
+    }
+
+    #[test]
+    fn model_schedule_layers() {
+        use crate::model::MlpTopology;
+        // Iris topology 4:10:5:3 → 3 transitions.
+        let topo = MlpTopology::new(vec![4, 10, 5, 3]);
+        let mut m = MapperTree::new(NpeGeometry::PAPER);
+        let ms = m.schedule_model(&topo, 10);
+        assert_eq!(ms.layers.len(), 3);
+        for l in &ms.layers {
+            assert!(l.covers_exactly());
+        }
+        assert!(ms.utilization() > 0.0 && ms.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn prop_schedules_cover_and_fit() {
+        check::cases_n(0x5CED, 150, |g| {
+            let geom = NpeGeometry::new(g.usize_in(1, 8), g.usize_in(1, 8));
+            let mut m = MapperTree::new(geom);
+            let gamma = Gamma::new(g.usize_in(1, 24), g.usize_in(1, 256), g.usize_in(1, 64));
+            let s = m.schedule_layer(gamma);
+            assert!(s.covers_exactly(), "{gamma:?} on {geom:?}");
+            assert!(s.utilization() > 0.0 && s.utilization() <= 1.0 + 1e-12);
+            for e in &s.events {
+                assert!(e.load.0 <= e.config.0 && e.load.1 <= e.config.1);
+                assert!(e.config.0 * e.config.1 <= geom.pes());
+            }
+        });
+    }
+}

@@ -1,0 +1,368 @@
+//! The `CreateTree` / best-execution-tree machinery of Algorithm 1.
+//!
+//! [`MapperTree::create`] builds the paper's full computational tree
+//! (Fig. 6A): each node selects one NPE(K, N) configuration, executes
+//! `r = ⌊B/M_B⌋·⌊Θ/M_Θ⌋` full rolls with load ψ = (M_B, M_Θ), and spawns
+//! up to two child problems — `Node_B` for the `B mod M_B` untouched
+//! batches (all Θ neurons) and `Node_Θ` for the `Θ mod M_Θ` missing neurons
+//! of the batches already covered.
+//!
+//! [`MapperTree::best`] extracts the execution tree with the minimum total
+//! roll count (Fig. 6B) via memoized recursion over (B, Θ) subproblems —
+//! equivalent to enumerating every binary tree of the computational tree
+//! and keeping the shallowest, but polynomial instead of exponential.
+
+use super::NpeGeometry;
+use std::collections::HashMap;
+
+/// One node of the optimal execution tree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecNode {
+    /// The NPE(K, N) configuration selected at this node.
+    pub config: (usize, usize),
+    /// The load ψ = (K* ≤ K, N* ≤ N) actually mapped per roll.
+    pub load: (usize, usize),
+    /// Number of rolls executed with this load.
+    pub rolls: usize,
+    /// Remaining-batch subproblem (B mod M_B batches, all neurons).
+    pub node_b: Option<Box<ExecNode>>,
+    /// Partially-computed-batch subproblem (missing neurons).
+    pub node_theta: Option<Box<ExecNode>>,
+}
+
+impl ExecNode {
+    /// Total rolls in this subtree.
+    pub fn total_rolls(&self) -> usize {
+        self.rolls
+            + self.node_b.as_deref().map_or(0, ExecNode::total_rolls)
+            + self.node_theta.as_deref().map_or(0, ExecNode::total_rolls)
+    }
+
+    /// Pre-order walk (used by the schedule BFS and the explorer printer).
+    pub fn walk<'a>(&'a self, out: &mut Vec<&'a ExecNode>) {
+        out.push(self);
+        if let Some(b) = &self.node_b {
+            b.walk(out);
+        }
+        if let Some(t) = &self.node_theta {
+            t.walk(out);
+        }
+    }
+
+    /// Render the subtree as an indented text diagram (Fig. 6B style).
+    pub fn render(&self, indent: usize) -> String {
+        let mut s = format!(
+            "{:indent$}{}x NPE({}, {}) load=({}, {})\n",
+            "",
+            self.rolls,
+            self.config.0,
+            self.config.1,
+            self.load.0,
+            self.load.1,
+            indent = indent
+        );
+        if let Some(b) = &self.node_b {
+            s.push_str(&format!("{:indent$}├─ remaining batches:\n", "", indent = indent));
+            s.push_str(&b.render(indent + 4));
+        }
+        if let Some(t) = &self.node_theta {
+            s.push_str(&format!("{:indent$}└─ remaining neurons:\n", "", indent = indent));
+            s.push_str(&t.render(indent + 4));
+        }
+        s
+    }
+}
+
+/// One concrete roll: which batches and which neurons the PE array
+/// computes simultaneously (consumed by the controller / OS dataflow).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RollAssignment {
+    /// NPE(K, N) configuration for this roll.
+    pub config: (usize, usize),
+    /// Batch indices processed (≤ K of them).
+    pub batches: Vec<usize>,
+    /// Neuron indices computed for each of those batches (≤ N of them).
+    pub neurons: Vec<usize>,
+}
+
+impl ExecNode {
+    /// Expand the execution tree into concrete per-roll work assignments
+    /// over the given batch and neuron index sets. Every (batch, neuron)
+    /// pair appears in exactly one roll (tested).
+    pub fn assignments(&self, batches: &[usize], neurons: &[usize]) -> Vec<RollAssignment> {
+        let (mb, mt) = self.load;
+        let covered_b = batches.len() - batches.len() % mb;
+        let covered_n = neurons.len() - neurons.len() % mt;
+        let mut out = Vec::new();
+        for bt in batches[..covered_b].chunks(mb) {
+            for nt in neurons[..covered_n].chunks(mt) {
+                out.push(RollAssignment {
+                    config: self.config,
+                    batches: bt.to_vec(),
+                    neurons: nt.to_vec(),
+                });
+            }
+        }
+        if let Some(nb) = &self.node_b {
+            out.extend(nb.assignments(&batches[covered_b..], neurons));
+        }
+        if let Some(nt) = &self.node_theta {
+            out.extend(nt.assignments(&batches[..covered_b], &neurons[covered_n..]));
+        }
+        out
+    }
+}
+
+/// The mapper for a fixed geometry, with memoization across layers/calls
+/// (subproblems recur constantly across layers of the same model).
+#[derive(Debug)]
+pub struct MapperTree {
+    pub geometry: NpeGeometry,
+    configs: Vec<(usize, usize)>,
+    memo: HashMap<(usize, usize), (usize, Option<ExecNode>)>,
+}
+
+impl MapperTree {
+    pub fn new(geometry: NpeGeometry) -> Self {
+        Self {
+            geometry,
+            configs: geometry.configs(),
+            memo: HashMap::new(),
+        }
+    }
+
+    /// Minimum number of rolls to cover `batches × neurons`.
+    pub fn min_rolls(&mut self, batches: usize, neurons: usize) -> usize {
+        self.solve(batches, neurons).0
+    }
+
+    /// The optimal execution tree (Fig. 6B). `None` iff the problem is
+    /// empty (`batches == 0` or `neurons == 0`).
+    pub fn best(&mut self, batches: usize, neurons: usize) -> Option<ExecNode> {
+        self.solve(batches, neurons).1
+    }
+
+    fn solve(&mut self, b: usize, theta: usize) -> (usize, Option<ExecNode>) {
+        if b == 0 || theta == 0 {
+            return (0, None);
+        }
+        if let Some(hit) = self.memo.get(&(b, theta)) {
+            return hit.clone();
+        }
+        let mut best: Option<(usize, ExecNode)> = None;
+        // Clone to appease the borrow checker; configs is tiny.
+        let configs = self.configs.clone();
+        for (k, n) in configs {
+            let mb = b.min(k); // M_B
+            let mt = theta.min(n); // M_Θ
+            let rolls = (b / mb) * (theta / mt);
+            let rem_b = b % mb; // batches never touched by this config
+            let rem_t = theta % mt; // neurons missing in covered batches
+            let covered_b = b - rem_b;
+            let (rolls_b, node_b) = self.solve(rem_b, theta);
+            let (rolls_t, node_t) = if rem_t > 0 {
+                self.solve(covered_b, rem_t)
+            } else {
+                (0, None)
+            };
+            let total = rolls + rolls_b + rolls_t;
+            if best.as_ref().map_or(true, |(t, _)| total < *t) {
+                best = Some((
+                    total,
+                    ExecNode {
+                        config: (k, n),
+                        load: (mb, mt),
+                        rolls,
+                        node_b: node_b.map(Box::new),
+                        node_theta: node_t.map(Box::new),
+                    },
+                ));
+            }
+        }
+        let (total, node) = best.expect("non-empty config set");
+        let out = (total, Some(node));
+        self.memo.insert((b, theta), out.clone());
+        out
+    }
+
+    /// Size of the memo table (exposed for the perf benches).
+    pub fn memo_entries(&self) -> usize {
+        self.memo.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn walkthrough() -> MapperTree {
+        MapperTree::new(NpeGeometry::WALKTHROUGH)
+    }
+
+    /// Exhaustive reference: minimum rolls by brute-force recursion
+    /// (no memo, same construction rule) — validates the memoized DP.
+    fn brute_min_rolls(geom: &NpeGeometry, b: usize, theta: usize) -> usize {
+        if b == 0 || theta == 0 {
+            return 0;
+        }
+        geom.configs()
+            .into_iter()
+            .map(|(k, n)| {
+                let mb = b.min(k);
+                let mt = theta.min(n);
+                let mut total = (b / mb) * (theta / mt);
+                total += brute_min_rolls(geom, b % mb, theta);
+                if theta % mt > 0 {
+                    total += brute_min_rolls(geom, b - b % mb, theta % mt);
+                }
+                total
+            })
+            .min()
+            .unwrap()
+    }
+
+    #[test]
+    fn fig5_gamma_3_i_9_takes_two_rolls() {
+        // Paper Fig. 5: Γ(3, I, 9) on the 6×3 array — NPE(2,9) or NPE(3,6)
+        // are optimal with 2 rolls (75% utilization).
+        let mut m = walkthrough();
+        assert_eq!(m.min_rolls(3, 9), 2);
+        let node = m.best(3, 9).unwrap();
+        assert!(
+            node.config == (2, 9) || node.config == (3, 6),
+            "optimal root should use (2,9) or (3,6), got {:?}",
+            node.config
+        );
+    }
+
+    #[test]
+    fn fig6_gamma_5_i_7_takes_three_rolls() {
+        // Paper Fig. 6: Γ(5, I, 7) on the 6×3 array → 3 rolls.
+        let mut m = walkthrough();
+        assert_eq!(m.min_rolls(5, 7), 3);
+    }
+
+    #[test]
+    fn fig5_suboptimal_configs_take_more_rolls() {
+        // NPE(1,18) processes one batch at a time: 3 rolls for Γ(3, I, 9);
+        // the mapper must beat that.
+        let mut m = walkthrough();
+        assert!(m.min_rolls(3, 9) < 3);
+    }
+
+    #[test]
+    fn exact_fit_single_roll() {
+        let mut m = walkthrough();
+        assert_eq!(m.min_rolls(1, 18), 1);
+        assert_eq!(m.min_rolls(2, 9), 1);
+        assert_eq!(m.min_rolls(3, 6), 1);
+        assert_eq!(m.min_rolls(6, 3), 1);
+    }
+
+    #[test]
+    fn empty_problems() {
+        let mut m = walkthrough();
+        assert_eq!(m.min_rolls(0, 100), 0);
+        assert_eq!(m.min_rolls(100, 0), 0);
+        assert!(m.best(0, 5).is_none());
+    }
+
+    #[test]
+    fn coverage_is_exact() {
+        // Every (batch, neuron) pair covered exactly once:
+        // Σ rolls·K*·N* == B·Θ for every subtree split.
+        fn coverage(node: &ExecNode, b: usize, theta: usize) -> usize {
+            let own = node.rolls * node.load.0 * node.load.1;
+            let rem_b = b % node.load.0;
+            let rem_t = theta % node.load.1;
+            let mut sum = own;
+            if let Some(nb) = &node.node_b {
+                sum += coverage(nb, rem_b, theta);
+            }
+            if let Some(nt) = &node.node_theta {
+                sum += coverage(nt, b - rem_b, rem_t);
+            }
+            sum
+        }
+        let mut m = walkthrough();
+        for (b, t) in [(5, 7), (3, 9), (1, 1), (7, 23), (16, 100), (2, 18)] {
+            let node = m.best(b, t).unwrap();
+            assert_eq!(coverage(&node, b, t), b * t, "Γ({b}, ·, {t})");
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_on_small_problems() {
+        let geom = NpeGeometry::WALKTHROUGH;
+        let mut m = MapperTree::new(geom);
+        for b in 1..=8 {
+            for t in 1..=20 {
+                assert_eq!(
+                    m.min_rolls(b, t),
+                    brute_min_rolls(&geom, b, t),
+                    "Γ({b}, ·, {t})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn never_worse_than_naive_and_never_below_bound() {
+        check::cases_n(0x3A9, 200, |g| {
+            let geom = NpeGeometry::new(g.usize_in(1, 8), g.usize_in(1, 8));
+            let mut m = MapperTree::new(geom);
+            let b = g.usize_in(1, 32);
+            let t = g.usize_in(1, 64);
+            let rolls = m.min_rolls(b, t);
+            // Lower bound: can't do better than full-array packing.
+            let lb = (b * t + geom.pes() - 1) / geom.pes();
+            assert!(rolls >= lb, "rolls {rolls} < lower bound {lb}");
+            // Upper bound: the naive single-config schedule using the
+            // largest-K config.
+            let (k, n) = *geom.configs().last().unwrap();
+            let naive = b.div_ceil(k.min(b)) * t.div_ceil(n.min(t));
+            assert!(rolls <= naive, "rolls {rolls} > naive {naive}");
+        });
+    }
+
+    #[test]
+    fn total_rolls_consistent_with_walk() {
+        let mut m = walkthrough();
+        let node = m.best(5, 7).unwrap();
+        let mut nodes = Vec::new();
+        node.walk(&mut nodes);
+        let sum: usize = nodes.iter().map(|n| n.rolls).sum();
+        assert_eq!(sum, node.total_rolls());
+    }
+
+    #[test]
+    fn assignments_partition_the_grid() {
+        let mut m = walkthrough();
+        for (b, t) in [(5usize, 7usize), (3, 9), (7, 23), (2, 18), (1, 1)] {
+            let node = m.best(b, t).unwrap();
+            let batches: Vec<usize> = (0..b).collect();
+            let neurons: Vec<usize> = (0..t).collect();
+            let rolls = node.assignments(&batches, &neurons);
+            assert_eq!(rolls.len(), node.total_rolls(), "Γ({b},·,{t})");
+            let mut seen = std::collections::HashSet::new();
+            for r in &rolls {
+                assert!(r.batches.len() * r.neurons.len() <= NpeGeometry::WALKTHROUGH.pes());
+                for &bi in &r.batches {
+                    for &ni in &r.neurons {
+                        assert!(seen.insert((bi, ni)), "duplicate ({bi},{ni})");
+                    }
+                }
+            }
+            assert_eq!(seen.len(), b * t, "full coverage");
+        }
+    }
+
+    #[test]
+    fn render_contains_roll_lines() {
+        let mut m = walkthrough();
+        let node = m.best(5, 7).unwrap();
+        let s = node.render(0);
+        assert!(s.contains("NPE("));
+    }
+}

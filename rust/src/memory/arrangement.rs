@@ -1,0 +1,160 @@
+//! Fig. 7 data-arrangement math.
+//!
+//! The storage philosophy: data needed by the NPE in *consecutive cycles*
+//! sits in a *single row*, so one row read into a buffer feeds several
+//! cycles. The paper's example — NPE(K,N) = (2,64), Γ(2, 200, 100),
+//! W-Mem rows of 128 words, FM rows of 64 words — is pinned in the tests.
+
+/// Weight-memory arrangement for an NPE(K, N) configuration processing a
+/// layer with `inputs` (I) fan-in and `neurons` (H) fan-out.
+#[derive(Debug, Clone, Copy)]
+pub struct WMemArrangement {
+    /// Row width in words.
+    pub row_words: usize,
+    /// N: weights consumed per cycle.
+    pub n: usize,
+    /// I: input features (cycles per neuron group).
+    pub inputs: usize,
+    /// H: neurons in the layer.
+    pub neurons: usize,
+}
+
+impl WMemArrangement {
+    /// Cycles of weight supply served by one row read: `W_wmem / N`
+    /// (paper: 128/64 = 2). When N exceeds the row width, every cycle
+    /// needs ≥ 1 read and the value floors at 1.
+    pub fn cycles_per_row_read(&self) -> usize {
+        (self.row_words / self.n).max(1)
+    }
+
+    /// Rows occupied by one group of N outgoing weights across all I
+    /// features: `⌈I·N / W_wmem⌉` — which reduces to the paper's
+    /// `⌈I / (W_wmem/N)⌉` when N divides the row width
+    /// (paper: 200/(128/64) = 100 rows).
+    pub fn rows_per_group(&self) -> usize {
+        (self.inputs * self.n).div_ceil(self.row_words)
+    }
+
+    /// Number of N-wide neuron groups: `⌈H / N⌉` (paper: 100/64 → 2,
+    /// the second group holding the 36 leftover weight columns).
+    pub fn groups(&self) -> usize {
+        self.neurons.div_ceil(self.n)
+    }
+
+    /// Total rows to store the layer's weights.
+    pub fn total_rows(&self) -> usize {
+        self.rows_per_group() * self.groups()
+    }
+
+    /// Row reads to stream the whole layer once (one pass over groups).
+    pub fn row_reads(&self) -> u64 {
+        self.total_rows() as u64
+    }
+
+    /// Access-count reduction factor vs naive word reads.
+    pub fn access_reduction(&self) -> f64 {
+        self.cycles_per_row_read() as f64
+    }
+}
+
+/// Feature-memory arrangement: the FM row is divided into B segments; one
+/// row read returns `W_fm / B` features *per batch*.
+#[derive(Debug, Clone, Copy)]
+pub struct FmArrangement {
+    /// Row width in words.
+    pub row_words: usize,
+    /// B: batches sharing the memory (virtual segments).
+    pub batches: usize,
+    /// I: features per batch.
+    pub inputs: usize,
+}
+
+impl FmArrangement {
+    /// Features per batch served by one row read (paper: 64/2 = 32).
+    pub fn features_per_row_read(&self) -> usize {
+        (self.row_words / self.batches).max(1)
+    }
+
+    /// Rows occupied per batch segment: `⌈I / (W_fm/B)⌉`
+    /// (paper: 200/(64/2) = 7 rows — ⌈6.25⌉).
+    pub fn rows_per_batch(&self) -> usize {
+        self.inputs.div_ceil(self.features_per_row_read())
+    }
+
+    /// Row reads to stream all B batches' features once.
+    pub fn row_reads(&self) -> u64 {
+        self.rows_per_batch() as u64
+    }
+
+    /// Access-count reduction factor vs per-cycle word reads
+    /// (paper: ×32 for the example).
+    pub fn access_reduction(&self) -> f64 {
+        self.features_per_row_read() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    /// The paper's worked example: NPE(2,64), Γ(2,200,100),
+    /// W-Mem rows = 128 words, FM rows = 64 words.
+    #[test]
+    fn fig7_worked_example_wmem() {
+        let w = WMemArrangement { row_words: 128, n: 64, inputs: 200, neurons: 100 };
+        assert_eq!(w.cycles_per_row_read(), 2, "one read feeds 2 cycles");
+        assert_eq!(w.rows_per_group(), 100, "paper: 100 rows per group");
+        assert_eq!(w.groups(), 2, "64 + 36 leftover weights");
+        assert_eq!(w.total_rows(), 200);
+        assert_eq!(w.access_reduction(), 2.0, "half the accesses");
+    }
+
+    #[test]
+    fn fig7_worked_example_fm() {
+        let f = FmArrangement { row_words: 64, batches: 2, inputs: 200 };
+        assert_eq!(f.features_per_row_read(), 32);
+        assert_eq!(f.rows_per_batch(), 7, "paper: ⌈200/32⌉ = 7 rows");
+        assert_eq!(f.access_reduction(), 32.0, "paper: ×32 fewer accesses");
+    }
+
+    #[test]
+    fn degenerate_wide_configs() {
+        // N larger than the row: every cycle needs N/row_words reads.
+        let w = WMemArrangement { row_words: 64, n: 128, inputs: 10, neurons: 128 };
+        assert_eq!(w.cycles_per_row_read(), 1);
+        assert_eq!(w.rows_per_group(), 20, "two row reads per cycle");
+        // One batch monopolizes the FM row.
+        let f = FmArrangement { row_words: 64, batches: 64, inputs: 5 };
+        assert_eq!(f.features_per_row_read(), 1);
+        assert_eq!(f.rows_per_batch(), 5);
+    }
+
+    #[test]
+    fn prop_row_accounting_consistent() {
+        check::cases_n(0xF16, 300, |g| {
+            let w = WMemArrangement {
+                row_words: 1 << g.usize_in(3, 8),
+                n: 1 << g.usize_in(0, 8),
+                inputs: g.usize_in(1, 1000),
+                neurons: g.usize_in(1, 800),
+            };
+            // Capacity: rows hold at least all I×H weights.
+            let capacity_words = w.total_rows() * w.row_words;
+            assert!(
+                capacity_words >= w.inputs * w.neurons.min(w.groups() * w.n),
+                "{w:?}"
+            );
+            // Reduction factor ≥ 1 and ≤ row width.
+            assert!(w.access_reduction() >= 1.0);
+            assert!(w.access_reduction() <= w.row_words as f64);
+
+            let f = FmArrangement {
+                row_words: 1 << g.usize_in(3, 8),
+                batches: g.usize_in(1, 32),
+                inputs: g.usize_in(1, 1000),
+            };
+            assert!(f.rows_per_batch() * f.features_per_row_read() >= f.inputs);
+        });
+    }
+}

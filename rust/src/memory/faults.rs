@@ -1,0 +1,203 @@
+//! Voltage-scaled memory fault injection (paper §IV-C discussion).
+//!
+//! The paper argues the 0.70 V memory domain could be scaled even more
+//! aggressively by pairing it with architectural fault tolerance ([31]–[35])
+//! and notes that learning workloads are inherently resilient — especially
+//! if only the *most significant bits* of the feature map are protected.
+//! This module turns that discussion into a runnable experiment:
+//!
+//! * a voltage-dependent bit-error-rate model for SRAM reads;
+//! * deterministic fault injection into feature words;
+//! * the MSB-protection scheme the paper sketches (parity-protect the top
+//!   `P` bits and correct them; low bits are left to flip);
+//! * an accuracy probe: classification-agreement of a faulty MLP run vs
+//!   the fault-free reference.
+//!
+//! `examples/`-level usage lives in the `ablate faults` CLI command.
+
+use crate::model::QuantizedMlp;
+use crate::util::SplitMix64;
+
+/// Bit-error rate of an SRAM read at a scaled supply voltage.
+///
+/// Exponential failure-rate growth below the nominal memory voltage —
+/// the canonical shape from the voltage-scaling literature the paper
+/// cites ([31]–[35]): ~1e-9 at 0.70 V, growing ×10 every ~35 mV below.
+pub fn read_ber(vdd: f64) -> f64 {
+    let nominal = 0.70;
+    let decade_mv = 35.0;
+    let decades = ((nominal - vdd) * 1000.0 / decade_mv).max(-2.0);
+    1e-9 * 10f64.powf(decades)
+}
+
+/// Fault-injection configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultConfig {
+    /// Memory supply voltage (scaled below 0.70 V to raise the BER).
+    pub vdd: f64,
+    /// Number of protected MSBs per 16-bit word (0 = unprotected,
+    /// 16 = fully protected). The paper's sketch: protect MSBs only.
+    pub protected_msbs: u32,
+    /// Injection seed (deterministic experiments).
+    pub seed: u64,
+}
+
+impl FaultConfig {
+    pub fn new(vdd: f64, protected_msbs: u32, seed: u64) -> Self {
+        assert!(protected_msbs <= 16);
+        Self { vdd, protected_msbs, seed }
+    }
+}
+
+/// Inject read faults into a feature vector: each *unprotected* bit flips
+/// independently with the voltage's BER. Protected MSBs are corrected by
+/// the (modeled) ECC and never flip.
+pub fn inject_faults(features: &mut [i16], cfg: &FaultConfig) -> u64 {
+    let ber = read_ber(cfg.vdd);
+    if ber <= 0.0 {
+        return 0;
+    }
+    let mut rng = SplitMix64::new(cfg.seed);
+    let unprotected = 16 - cfg.protected_msbs;
+    let mut flips = 0;
+    for v in features.iter_mut() {
+        for bit in 0..unprotected {
+            if rng.next_f64() < ber {
+                *v ^= 1 << bit; // bit 0 = LSB; MSBs are the protected end
+                flips += 1;
+            }
+        }
+    }
+    flips
+}
+
+/// Result of one resilience probe.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResilienceReport {
+    pub vdd: f64,
+    pub protected_msbs: u32,
+    pub bit_flips: u64,
+    /// Fraction of samples whose argmax class is unchanged.
+    pub class_agreement: f64,
+    /// Mean absolute output error (quantized units).
+    pub mean_abs_err: f64,
+}
+
+/// Run a model over a batch with faulty feature reads and compare against
+/// the fault-free reference — the paper's "inherent resiliency" argument
+/// as a measurement.
+pub fn resilience_probe(
+    mlp: &QuantizedMlp,
+    inputs: &[Vec<i16>],
+    cfg: &FaultConfig,
+) -> ResilienceReport {
+    let clean = mlp.forward_batch(inputs);
+    let mut flips = 0;
+    let faulty: Vec<Vec<i16>> = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, x)| {
+            let mut x = x.clone();
+            let mut c = *cfg;
+            c.seed = cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9);
+            flips += inject_faults(&mut x, &c);
+            x
+        })
+        .collect();
+    let dirty = mlp.forward_batch(&faulty);
+
+    let argmax = |v: &[i16]| {
+        v.iter()
+            .enumerate()
+            .max_by_key(|(_, x)| **x)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    };
+    let agree = clean
+        .iter()
+        .zip(&dirty)
+        .filter(|(c, d)| argmax(c) == argmax(d))
+        .count();
+    let (sum_err, n) = clean.iter().zip(&dirty).fold((0f64, 0usize), |(s, n), (c, d)| {
+        let e: f64 = c
+            .iter()
+            .zip(d.iter())
+            .map(|(a, b)| (*a as f64 - *b as f64).abs())
+            .sum();
+        (s + e, n + c.len())
+    });
+
+    ResilienceReport {
+        vdd: cfg.vdd,
+        protected_msbs: cfg.protected_msbs,
+        bit_flips: flips,
+        class_agreement: agree as f64 / clean.len().max(1) as f64,
+        mean_abs_err: sum_err / n.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MlpTopology;
+
+    fn mlp() -> QuantizedMlp {
+        QuantizedMlp::synthesize(MlpTopology::new(vec![32, 24, 8]), 5)
+    }
+
+    #[test]
+    fn ber_grows_as_voltage_drops() {
+        assert!(read_ber(0.70) <= 1.1e-9);
+        assert!(read_ber(0.60) > read_ber(0.65));
+        assert!(read_ber(0.55) > 1e-6);
+        // Above nominal: clamped, never negative.
+        assert!(read_ber(0.80) > 0.0);
+    }
+
+    #[test]
+    fn no_faults_at_nominal_voltage() {
+        let m = mlp();
+        let inputs = m.synth_inputs(16, 3);
+        let r = resilience_probe(&m, &inputs, &FaultConfig::new(0.70, 0, 1));
+        assert_eq!(r.bit_flips, 0);
+        assert_eq!(r.class_agreement, 1.0);
+        assert_eq!(r.mean_abs_err, 0.0);
+    }
+
+    #[test]
+    fn msb_protection_bounds_error() {
+        // At a deeply scaled voltage, protecting the top 8 bits must
+        // reduce output error vs no protection (paper §IV-C's argument).
+        let m = mlp();
+        let inputs = m.synth_inputs(32, 7);
+        let unprot = resilience_probe(&m, &inputs, &FaultConfig::new(0.52, 0, 9));
+        let prot = resilience_probe(&m, &inputs, &FaultConfig::new(0.52, 8, 9));
+        assert!(unprot.bit_flips > 0, "want flips at 0.52 V");
+        assert!(
+            prot.mean_abs_err < unprot.mean_abs_err,
+            "protected {} vs unprotected {}",
+            prot.mean_abs_err,
+            unprot.mean_abs_err
+        );
+    }
+
+    #[test]
+    fn full_protection_is_exact() {
+        let m = mlp();
+        let inputs = m.synth_inputs(8, 11);
+        let r = resilience_probe(&m, &inputs, &FaultConfig::new(0.50, 16, 13));
+        assert_eq!(r.bit_flips, 0);
+        assert_eq!(r.class_agreement, 1.0);
+    }
+
+    #[test]
+    fn injection_is_deterministic() {
+        let mut a = vec![0i16; 256];
+        let mut b = vec![0i16; 256];
+        let cfg = FaultConfig::new(0.52, 0, 42);
+        let fa = inject_faults(&mut a, &cfg);
+        let fb = inject_faults(&mut b, &cfg);
+        assert_eq!(fa, fb);
+        assert_eq!(a, b);
+    }
+}

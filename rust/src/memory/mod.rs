@@ -1,0 +1,32 @@
+//! The NPE memory architecture (paper §III-B.4, Fig. 7).
+//!
+//! * [`sram`] — SRAM bank model with access counting and voltage-scaled
+//!   energy (the paper's 0.70 V memory domain, Table III);
+//! * [`arrangement`] — the Fig. 7 data-arrangement math: how weights and
+//!   features are laid out in rows so that one row read feeds several
+//!   consecutive compute cycles, and the resulting access-count reductions;
+//! * [`rlc`] — Run-Length Coding for DRAM↔SRAM transfers (§III-B.4 uses
+//!   RLC compression to reduce main-memory transfer size and energy);
+//! * [`traffic`] — per-schedule traffic totals: row reads/writes and DRAM
+//!   bits for a whole [`crate::mapper::ModelSchedule`], feeding the Fig. 10
+//!   energy breakdown.
+
+pub mod arrangement;
+pub mod faults;
+pub mod rlc;
+pub mod sram;
+pub mod traffic;
+
+pub use arrangement::{FmArrangement, WMemArrangement};
+pub use rlc::{rlc_compress_len, RlcCodec};
+pub use sram::SramBank;
+pub use traffic::{MemoryTraffic, NpeMemorySystem};
+
+/// W-Mem geometry of Table III: 512 KB, 256-byte rows (128 16-bit words).
+pub const WMEM_BYTES: usize = 512 * 1024;
+/// W-Mem row width in 16-bit words (Fig. 7: 256 bytes).
+pub const WMEM_ROW_WORDS: usize = 128;
+/// Each of the two ping-pong FM-Mem banks: 64 KB (Table III).
+pub const FMMEM_BYTES: usize = 64 * 1024;
+/// FM-Mem row width in 16-bit words (Fig. 7: 64 words).
+pub const FMMEM_ROW_WORDS: usize = 64;

@@ -1,0 +1,147 @@
+//! SRAM bank model: capacity, row geometry, access counters, and energy
+//! at the scaled memory voltage domain.
+
+use crate::ppa::{TechParams, VoltageDomain};
+
+/// One SRAM bank (W-Mem, or one half of the ping-pong FM-Mem).
+#[derive(Debug, Clone)]
+pub struct SramBank {
+    pub name: &'static str,
+    /// Capacity in bytes.
+    pub bytes: usize,
+    /// Row width in 16-bit words.
+    pub row_words: usize,
+    /// Supply domain (0.70 V per Table III).
+    pub domain: VoltageDomain,
+    row_reads: u64,
+    row_writes: u64,
+    word_writes: u64,
+}
+
+impl SramBank {
+    pub fn new(name: &'static str, bytes: usize, row_words: usize) -> Self {
+        Self {
+            name,
+            bytes,
+            row_words,
+            domain: VoltageDomain::MEM,
+            row_reads: 0,
+            row_writes: 0,
+            word_writes: 0,
+        }
+    }
+
+    /// Capacity in bits.
+    pub fn bits(&self) -> u64 {
+        self.bytes as u64 * 8
+    }
+
+    /// Row width in bits.
+    pub fn row_bits(&self) -> u64 {
+        self.row_words as u64 * 16
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.bytes / (self.row_words * 2)
+    }
+
+    /// Record `n` full-row reads (into a row buffer).
+    pub fn read_rows(&mut self, n: u64) {
+        self.row_reads += n;
+    }
+
+    /// Record `n` full-row writes.
+    pub fn write_rows(&mut self, n: u64) {
+        self.row_writes += n;
+    }
+
+    /// Record `n` single-word writes (the word-writable path Fig. 7 needs
+    /// for partial-row neuron writebacks).
+    pub fn write_words(&mut self, n: u64) {
+        self.word_writes += n;
+    }
+
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.row_reads, self.row_writes, self.word_writes)
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.row_reads = 0;
+        self.row_writes = 0;
+        self.word_writes = 0;
+    }
+
+    /// Dynamic access energy so far, pJ.
+    pub fn dynamic_energy_pj(&self, tech: &TechParams) -> f64 {
+        let bits = (self.row_reads + self.row_writes) as f64 * self.row_bits() as f64
+            + self.word_writes as f64 * 16.0;
+        bits * tech.sram_energy_per_bit_pj * self.domain.energy_scale()
+    }
+
+    /// Leakage power, µW.
+    pub fn leakage_uw(&self, tech: &TechParams) -> f64 {
+        self.bits() as f64 * tech.sram_leak_per_bit_uw * self.domain.leakage_scale()
+    }
+
+    /// Macro area, µm².
+    pub fn area_um2(&self, tech: &TechParams) -> f64 {
+        self.bits() as f64 * tech.sram_area_per_bit_um2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::{FMMEM_BYTES, FMMEM_ROW_WORDS, WMEM_BYTES, WMEM_ROW_WORDS};
+
+    #[test]
+    fn geometry() {
+        let w = SramBank::new("W-Mem", WMEM_BYTES, WMEM_ROW_WORDS);
+        assert_eq!(w.row_bits(), 2048);
+        assert_eq!(w.rows(), 2048);
+        let f = SramBank::new("FM", FMMEM_BYTES, FMMEM_ROW_WORDS);
+        assert_eq!(f.rows(), 512);
+    }
+
+    #[test]
+    fn energy_scales_with_access() {
+        let tech = TechParams::DEFAULT;
+        let mut b = SramBank::new("x", 1024, 8);
+        let e0 = b.dynamic_energy_pj(&tech);
+        b.read_rows(10);
+        let e1 = b.dynamic_energy_pj(&tech);
+        b.write_words(4);
+        let e2 = b.dynamic_energy_pj(&tech);
+        assert_eq!(e0, 0.0);
+        assert!(e1 > 0.0 && e2 > e1);
+        // Word write is much cheaper than a row access.
+        assert!((e2 - e1) < (e1 / 10.0) * 8.0);
+    }
+
+    #[test]
+    fn low_voltage_domain_cuts_energy_and_leak() {
+        let tech = TechParams::DEFAULT;
+        let mut lo = SramBank::new("lo", 4096, 16);
+        let mut hi = SramBank::new("hi", 4096, 16);
+        hi.domain = VoltageDomain::PE;
+        lo.read_rows(100);
+        hi.read_rows(100);
+        assert!(lo.dynamic_energy_pj(&tech) < hi.dynamic_energy_pj(&tech));
+        assert!(lo.leakage_uw(&tech) < hi.leakage_uw(&tech));
+    }
+
+    #[test]
+    fn table3_memory_leakage_in_range() {
+        // Paper Table III: 51.7 mW total memory leakage at 0.70 V for
+        // 512 KB + 2×64 KB. Our constants should land within 2×.
+        let tech = TechParams::DEFAULT;
+        let total_uw = SramBank::new("w", WMEM_BYTES, WMEM_ROW_WORDS).leakage_uw(&tech)
+            + 2.0 * SramBank::new("f", FMMEM_BYTES, FMMEM_ROW_WORDS).leakage_uw(&tech);
+        let total_mw = total_uw / 1000.0;
+        assert!(
+            total_mw > 25.0 && total_mw < 105.0,
+            "memory leakage {total_mw} mW vs paper 51.7 mW"
+        );
+    }
+}

@@ -1,0 +1,187 @@
+//! Whole-schedule memory-traffic accounting — the memory half of the
+//! Fig. 10 energy breakdown.
+
+use super::arrangement::{FmArrangement, WMemArrangement};
+use super::rlc::rlc_compress_len;
+use super::sram::SramBank;
+use super::{FMMEM_BYTES, FMMEM_ROW_WORDS, WMEM_BYTES, WMEM_ROW_WORDS};
+use crate::mapper::ModelSchedule;
+use crate::model::QuantizedMlp;
+use crate::ppa::TechParams;
+
+/// Aggregated traffic of one model execution.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct MemoryTraffic {
+    /// W-Mem row reads.
+    pub wmem_row_reads: u64,
+    /// FM-Mem row reads (ping bank of the active layer).
+    pub fm_row_reads: u64,
+    /// FM-Mem row writes (pong bank: neuron writebacks).
+    pub fm_row_writes: u64,
+    /// DRAM → chip bits (RLC-compressed weights + input features).
+    pub dram_bits_in: u64,
+    /// chip → DRAM bits (RLC-compressed final outputs).
+    pub dram_bits_out: u64,
+}
+
+/// The NPE's global memory: W-Mem plus the two ping-pong FM banks.
+#[derive(Debug, Clone)]
+pub struct NpeMemorySystem {
+    pub wmem: SramBank,
+    pub fm_ping: SramBank,
+    pub fm_pong: SramBank,
+    pub traffic: MemoryTraffic,
+}
+
+impl Default for NpeMemorySystem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NpeMemorySystem {
+    /// Table III geometry.
+    pub fn new() -> Self {
+        Self {
+            wmem: SramBank::new("W-Mem", WMEM_BYTES, WMEM_ROW_WORDS),
+            fm_ping: SramBank::new("FM-ping", FMMEM_BYTES, FMMEM_ROW_WORDS),
+            fm_pong: SramBank::new("FM-pong", FMMEM_BYTES, FMMEM_ROW_WORDS),
+            traffic: MemoryTraffic::default(),
+        }
+    }
+
+    /// Account all SRAM and DRAM traffic of executing `schedule` for
+    /// `mlp` on `inputs` (the batch the schedule was built for).
+    ///
+    /// Row-buffer amortization follows Fig. 7: one W-Mem row read serves
+    /// `W_w/N` cycles of weights; one FM row read serves `W_fm/K` features
+    /// for each of the K concurrently processed batches.
+    pub fn account_schedule(
+        &mut self,
+        schedule: &ModelSchedule,
+        mlp: &QuantizedMlp,
+        inputs: &[Vec<i16>],
+    ) -> MemoryTraffic {
+        let mut t = MemoryTraffic::default();
+
+        for layer in &schedule.layers {
+            let i = layer.gamma.inputs;
+            for ev in &layer.events {
+                let (k, n) = ev.config;
+                let w = WMemArrangement {
+                    row_words: self.wmem.row_words,
+                    n,
+                    inputs: i,
+                    // Each roll streams one n-wide neuron group.
+                    neurons: ev.load.1.min(n),
+                };
+                let f = FmArrangement {
+                    row_words: self.fm_ping.row_words,
+                    batches: k,
+                    inputs: i,
+                };
+                let rolls = ev.rolls as u64;
+                t.wmem_row_reads += w.row_reads() * rolls;
+                t.fm_row_reads += f.row_reads() * rolls;
+                // Writeback: K*·N* neuron values per roll, row-buffered.
+                let outs_per_roll = (ev.load.0 * ev.load.1) as u64;
+                t.fm_row_writes +=
+                    outs_per_roll.div_ceil(self.fm_pong.row_words as u64) * rolls;
+            }
+        }
+
+        // DRAM: weights in (RLC), input features in (RLC), outputs out.
+        for wmat in &mlp.weights {
+            t.dram_bits_in += rlc_compress_len(wmat);
+        }
+        for x in inputs {
+            t.dram_bits_in += rlc_compress_len(x);
+        }
+        let outs = mlp.forward_batch(inputs);
+        for y in &outs {
+            t.dram_bits_out += rlc_compress_len(y);
+        }
+
+        self.wmem.read_rows(t.wmem_row_reads);
+        self.fm_ping.read_rows(t.fm_row_reads);
+        self.fm_pong.write_rows(t.fm_row_writes);
+        self.traffic = t;
+        t
+    }
+
+    /// Dynamic SRAM energy of the accounted traffic, pJ.
+    pub fn sram_dynamic_pj(&self, tech: &TechParams) -> f64 {
+        self.wmem.dynamic_energy_pj(tech)
+            + self.fm_ping.dynamic_energy_pj(tech)
+            + self.fm_pong.dynamic_energy_pj(tech)
+    }
+
+    /// DRAM transfer energy, pJ.
+    pub fn dram_pj(&self, tech: &TechParams) -> f64 {
+        (self.traffic.dram_bits_in + self.traffic.dram_bits_out) as f64
+            * tech.dram_energy_per_bit_pj
+    }
+
+    /// Total memory leakage, µW.
+    pub fn leakage_uw(&self, tech: &TechParams) -> f64 {
+        self.wmem.leakage_uw(tech)
+            + self.fm_ping.leakage_uw(tech)
+            + self.fm_pong.leakage_uw(tech)
+    }
+
+    /// Total memory macro area, µm².
+    pub fn area_um2(&self, tech: &TechParams) -> f64 {
+        self.wmem.area_um2(tech) + self.fm_ping.area_um2(tech) + self.fm_pong.area_um2(tech)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::{MapperTree, NpeGeometry};
+    use crate::model::{MlpTopology, QuantizedMlp};
+
+    fn schedule_and_traffic(batches: usize) -> (NpeMemorySystem, MemoryTraffic) {
+        let topo = MlpTopology::new(vec![200, 100, 10]);
+        let mlp = QuantizedMlp::synthesize(topo.clone(), 1);
+        let inputs = mlp.synth_inputs(batches, 2);
+        let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+        let schedule = mapper.schedule_model(&topo, batches);
+        let mut mem = NpeMemorySystem::new();
+        let t = mem.account_schedule(&schedule, &mlp, &inputs);
+        (mem, t)
+    }
+
+    #[test]
+    fn traffic_nonzero_and_monotone_in_batches() {
+        let (_, t2) = schedule_and_traffic(2);
+        let (_, t8) = schedule_and_traffic(8);
+        assert!(t2.wmem_row_reads > 0 && t2.fm_row_reads > 0 && t2.fm_row_writes > 0);
+        assert!(t8.fm_row_writes > t2.fm_row_writes);
+        assert!(t8.dram_bits_in > t2.dram_bits_in);
+    }
+
+    #[test]
+    fn row_buffering_beats_word_access() {
+        // Total row reads × row_words must be well under one word access
+        // per MAC operand (the whole point of the Fig. 7 arrangement).
+        let (mem, t) = schedule_and_traffic(4);
+        let word_reads_equiv = t.wmem_row_reads * mem.wmem.row_words as u64;
+        let macs = 4u64 * (200 * 100 + 100 * 10);
+        assert!(
+            word_reads_equiv < 2 * macs,
+            "row-buffered weight traffic should be O(weights-streamed)"
+        );
+        assert!(t.fm_row_reads * mem.fm_ping.row_words as u64 <= 4 * macs);
+    }
+
+    #[test]
+    fn energies_positive() {
+        let tech = TechParams::DEFAULT;
+        let (mem, _) = schedule_and_traffic(4);
+        assert!(mem.sram_dynamic_pj(&tech) > 0.0);
+        assert!(mem.dram_pj(&tech) > 0.0);
+        assert!(mem.leakage_uw(&tech) > 0.0);
+        assert!(mem.area_um2(&tech) > 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Signed 16-bit fixed-point format shared by every layer of the stack.
+//!
+//! The paper's NPE operates on signed 16-bit fixed-point values (Table III)
+//! and quantizes neuron outputs back to 16 bits before activation (Fig. 4).
+//! We fix a Q7.8 interpretation (1 sign, 7 integer, 8 fraction bits): the
+//! choice is immaterial to the PPA results but must be *identical* between
+//! the Rust simulator and the JAX/Pallas kernels — `python/compile/kernels/
+//! ref.py` pins the same constants, and the cross-stack tests compare
+//! bit-for-bit.
+
+
+
+/// Fraction bits of the Q7.8 format.
+pub const FRAC_BITS: u32 = 8;
+
+/// A signed 16-bit fixed-point number (Q7.8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Fix16(pub i16);
+
+impl Fix16 {
+    pub const ZERO: Fix16 = Fix16(0);
+    pub const ONE: Fix16 = Fix16(1 << FRAC_BITS);
+    pub const MAX: Fix16 = Fix16(i16::MAX);
+    pub const MIN: Fix16 = Fix16(i16::MIN);
+
+    /// Quantize an `f64` (round-to-nearest, saturating).
+    pub fn from_f64(x: f64) -> Self {
+        let v = (x * (1 << FRAC_BITS) as f64).round();
+        Fix16(v.clamp(i16::MIN as f64, i16::MAX as f64) as i16)
+    }
+
+    /// Back to `f64`.
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 / (1 << FRAC_BITS) as f64
+    }
+
+    /// Raw value as a widened accumulator operand.
+    pub fn raw(self) -> i16 {
+        self.0
+    }
+}
+
+/// Quantize a raw accumulator value (sum of Q7.8 × Q7.8 = Q15.16 products)
+/// back to Q7.8 with saturation — the quantization unit of Fig. 4.
+///
+/// `acc` is the exact dot-product accumulator; the bias is expected to be
+/// pre-shifted into Q15.16 before addition by the caller.
+pub fn quantize_acc(acc: i64) -> i16 {
+    let shifted = acc >> FRAC_BITS;
+    shifted.clamp(i16::MIN as i64, i16::MAX as i64) as i16
+}
+
+/// ReLU on a quantized value — the activation unit of Fig. 4
+/// (sign-bit-driven zeroing of the 16-bit word).
+pub fn relu(x: i16) -> i16 {
+    x.max(0)
+}
+
+/// Fused quantize + ReLU, the full Fig. 4 output path.
+pub fn quantize_relu(acc: i64) -> i16 {
+    relu(quantize_acc(acc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_is_256() {
+        assert_eq!(Fix16::ONE.0, 256);
+        assert_eq!(Fix16::from_f64(1.0), Fix16::ONE);
+        assert_eq!(Fix16::from_f64(-1.5).0, -384);
+    }
+
+    #[test]
+    fn round_trip_error_bounded() {
+        for x in [-127.99, -1.0, -0.004, 0.0, 0.5, 3.14159, 127.99] {
+            let q = Fix16::from_f64(x);
+            assert!((q.to_f64() - x).abs() <= 0.5 / (1 << FRAC_BITS) as f64 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(Fix16::from_f64(1e9), Fix16::MAX);
+        assert_eq!(Fix16::from_f64(-1e9), Fix16::MIN);
+        assert_eq!(quantize_acc(i64::MAX / 2), i16::MAX);
+        assert_eq!(quantize_acc(i64::MIN / 2), i16::MIN);
+    }
+
+    #[test]
+    fn quantize_matches_product_scale() {
+        // (1.0 × 1.0) accumulated once → 1.0 after quantization.
+        let acc = Fix16::ONE.0 as i64 * Fix16::ONE.0 as i64;
+        assert_eq!(quantize_acc(acc), Fix16::ONE.0);
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        assert_eq!(relu(-5), 0);
+        assert_eq!(relu(7), 7);
+        assert_eq!(quantize_relu(-123456), 0);
+    }
+
+    #[test]
+    fn quantize_rounds_toward_neg_inf() {
+        // Arithmetic shift semantics — pinned so python/ref.py matches.
+        assert_eq!(quantize_acc(-1), -1 >> FRAC_BITS as i64);
+        assert_eq!(quantize_acc(255), 0);
+        assert_eq!(quantize_acc(-255), -1);
+    }
+}

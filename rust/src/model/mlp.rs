@@ -1,0 +1,186 @@
+//! Quantized MLP with synthetic weights and the bit-exact reference
+//! forward pass.
+//!
+//! Weights are generated from [`SplitMix64`] with a layer-indexed seed; the
+//! exact same procedure is implemented in `python/compile/rng.py` /
+//! `model.py`, so the Rust simulator and the JAX-lowered PJRT artifacts
+//! operate on identical networks without any weight-file interchange.
+//! Magnitudes are kept small (|w| ≤ 96, |x| ≤ 127) so typical activations
+//! stay away from the int16 saturation rails while still exercising
+//! saturation occasionally.
+
+use super::fixedpoint::{quantize_acc, quantize_relu};
+use super::MlpTopology;
+use crate::util::SplitMix64;
+
+/// Weight magnitude bound for synthetic models.
+pub const WEIGHT_BOUND: i16 = 96;
+/// Feature magnitude bound for synthetic inputs.
+pub const FEATURE_BOUND: i16 = 127;
+
+/// A fully materialized quantized MLP (weights in Q7.8, row-major
+/// `[neuron][input]` per transition).
+#[derive(Debug, Clone)]
+pub struct QuantizedMlp {
+    pub topology: MlpTopology,
+    /// One weight matrix per transition; `weights[l][n * fan_in + i]`.
+    pub weights: Vec<Vec<i16>>,
+    /// Seed the weights were derived from.
+    pub seed: u64,
+}
+
+impl QuantizedMlp {
+    /// Deterministically synthesize a model for a topology.
+    ///
+    /// Layer `l`'s matrix uses stream `SplitMix64(seed ^ (l+1)·GOLDEN)` —
+    /// mirrored exactly in `python/compile/model.py::synth_weights`.
+    pub fn synthesize(topology: MlpTopology, seed: u64) -> Self {
+        const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+        let weights = topology
+            .transitions()
+            .enumerate()
+            .map(|(l, (fan_in, fan_out))| {
+                let mut rng = SplitMix64::new(seed ^ GOLDEN.wrapping_mul(l as u64 + 1));
+                (0..fan_in * fan_out)
+                    .map(|_| rng.next_i16_bounded(WEIGHT_BOUND))
+                    .collect()
+            })
+            .collect();
+        Self { topology, weights, seed }
+    }
+
+    /// Deterministic synthetic input batch (mirrored in python).
+    pub fn synth_inputs(&self, batches: usize, seed: u64) -> Vec<Vec<i16>> {
+        let mut rng = SplitMix64::new(seed);
+        (0..batches)
+            .map(|_| {
+                (0..self.topology.inputs())
+                    .map(|_| rng.next_i16_bounded(FEATURE_BOUND))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Weight of transition `l`, output neuron `n`, input `i`.
+    #[inline]
+    pub fn weight(&self, l: usize, n: usize, i: usize) -> i16 {
+        let fan_in = self.topology.layers[l];
+        self.weights[l][n * fan_in + i]
+    }
+
+    /// Bit-exact reference forward pass for one sample.
+    ///
+    /// Per layer: `acc_n = Σ_i w[n][i]·x[i]` in a 64-bit accumulator,
+    /// then the Fig.-4 output path — quantize (arithmetic shift by
+    /// `FRAC_BITS`, saturate to i16) and ReLU on hidden layers;
+    /// the output layer is quantized but *not* rectified.
+    pub fn forward_sample(&self, input: &[i16]) -> Vec<i16> {
+        assert_eq!(input.len(), self.topology.inputs());
+        let mut x: Vec<i16> = input.to_vec();
+        let last = self.topology.n_transitions() - 1;
+        for (l, (fan_in, fan_out)) in self.topology.transitions().enumerate() {
+            let mut next = Vec::with_capacity(fan_out);
+            for n in 0..fan_out {
+                let row = &self.weights[l][n * fan_in..(n + 1) * fan_in];
+                let acc: i64 = row
+                    .iter()
+                    .zip(&x)
+                    .map(|(w, xi)| (*w as i32 * *xi as i32) as i64)
+                    .sum();
+                next.push(if l == last {
+                    quantize_acc(acc)
+                } else {
+                    quantize_relu(acc)
+                });
+            }
+            x = next;
+        }
+        x
+    }
+
+    /// Reference forward pass over a batch.
+    pub fn forward_batch(&self, inputs: &[Vec<i16>]) -> Vec<Vec<i16>> {
+        inputs.iter().map(|x| self.forward_sample(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn tiny() -> QuantizedMlp {
+        QuantizedMlp::synthesize(MlpTopology::new(vec![4, 10, 5, 3]), 42)
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.weights, b.weights);
+        let c = QuantizedMlp::synthesize(MlpTopology::new(vec![4, 10, 5, 3]), 43);
+        assert_ne!(a.weights, c.weights);
+    }
+
+    #[test]
+    fn weight_shapes() {
+        let m = tiny();
+        assert_eq!(m.weights.len(), 3);
+        assert_eq!(m.weights[0].len(), 4 * 10);
+        assert_eq!(m.weights[1].len(), 10 * 5);
+        assert_eq!(m.weights[2].len(), 5 * 3);
+        assert!(m.weights.iter().flatten().all(|w| w.abs() <= WEIGHT_BOUND));
+    }
+
+    #[test]
+    fn forward_shape_and_determinism() {
+        let m = tiny();
+        let x = m.synth_inputs(3, 7);
+        let y = m.forward_batch(&x);
+        assert_eq!(y.len(), 3);
+        assert!(y.iter().all(|s| s.len() == 3));
+        assert_eq!(y, m.forward_batch(&x));
+    }
+
+    #[test]
+    fn hidden_layers_are_rectified() {
+        // Hand-built 1:1:1 net with a negative weight: hidden output must
+        // be zero, final output may be negative (no ReLU on output layer).
+        let topo = MlpTopology::new(vec![1, 1, 1]);
+        let mut m = QuantizedMlp::synthesize(topo, 0);
+        m.weights[0] = vec![-256]; // -1.0 in Q7.8
+        m.weights[1] = vec![-256];
+        let y = m.forward_sample(&[256]); // x = 1.0
+        assert_eq!(y, vec![0]); // relu(-1.0) = 0, then -1.0 * 0 = 0
+        m.weights[0] = vec![256];
+        let y = m.forward_sample(&[256]);
+        assert_eq!(y, vec![-256]); // 1.0 through, output -1.0 unrectified
+    }
+
+    #[test]
+    fn quantization_matches_scalar_model() {
+        // One-layer dot product cross-checked against direct math.
+        let topo = MlpTopology::new(vec![3, 1]);
+        let mut m = QuantizedMlp::synthesize(topo, 0);
+        m.weights[0] = vec![256, -512, 128]; // 1.0, -2.0, 0.5
+        let y = m.forward_sample(&[256, 256, 512]); // 1.0, 1.0, 2.0
+        // 1 - 2 + 1 = 0.0 → quantized 0
+        assert_eq!(y, vec![0]);
+    }
+
+    #[test]
+    fn prop_outputs_bounded_and_stable() {
+        check::cases_n(0x31A9, 64, |g| {
+            let topo = MlpTopology::new(vec![
+                g.usize_in(1, 32),
+                g.usize_in(1, 24),
+                g.usize_in(1, 8),
+            ]);
+            let m = QuantizedMlp::synthesize(topo, g.u64());
+            let x = m.synth_inputs(2, g.u64());
+            let y = m.forward_batch(&x);
+            assert_eq!(y[0].len(), m.topology.outputs());
+            // i16 range is guaranteed by quantize_acc saturation.
+        });
+    }
+}

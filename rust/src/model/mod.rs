@@ -1,0 +1,118 @@
+//! MLP models: topology descriptions, the Table-IV benchmark zoo, and the
+//! bit-exact quantized reference network used by the NPE simulator and
+//! cross-checked against the JAX/PJRT artifacts.
+
+pub mod fixedpoint;
+pub mod mlp;
+pub mod zoo;
+
+pub use fixedpoint::{quantize_acc, quantize_relu, relu, Fix16, FRAC_BITS};
+pub use mlp::QuantizedMlp;
+pub use zoo::{benchmark_by_name, benchmarks, Benchmark};
+
+/// An MLP topology `I : H1 : … : O` (paper `Model(I-H1-…-HN-O)`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MlpTopology {
+    /// Node counts per layer, input first. Always ≥ 2 entries.
+    pub layers: Vec<usize>,
+}
+
+impl MlpTopology {
+    pub fn new(layers: Vec<usize>) -> Self {
+        assert!(layers.len() >= 2, "need at least input and output layers");
+        assert!(layers.iter().all(|&n| n > 0), "empty layers not allowed");
+        Self { layers }
+    }
+
+    /// Parse `"784:700:10"`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let layers: Option<Vec<usize>> = s.split(':').map(|t| t.trim().parse().ok()).collect();
+        let layers = layers?;
+        if layers.len() >= 2 && layers.iter().all(|&n| n > 0) {
+            Some(Self::new(layers))
+        } else {
+            None
+        }
+    }
+
+    /// Input feature count.
+    pub fn inputs(&self) -> usize {
+        self.layers[0]
+    }
+
+    /// Output neuron count.
+    pub fn outputs(&self) -> usize {
+        *self.layers.last().unwrap()
+    }
+
+    /// Iterator over layer transitions `(fan_in, fan_out)`.
+    pub fn transitions(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.layers.windows(2).map(|w| (w[0], w[1]))
+    }
+
+    /// Number of weight matrices.
+    pub fn n_transitions(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    /// Total multiply-accumulate operations for one input sample.
+    pub fn macs_per_sample(&self) -> u64 {
+        self.transitions().map(|(i, o)| (i * o) as u64).sum()
+    }
+
+    /// Total weights.
+    pub fn n_weights(&self) -> u64 {
+        self.macs_per_sample()
+    }
+
+    /// Largest layer width (sizing the ping-pong feature memory).
+    pub fn max_width(&self) -> usize {
+        *self.layers.iter().max().unwrap()
+    }
+
+    /// Canonical display form, e.g. `784:700:10`.
+    pub fn display(&self) -> String {
+        self.layers
+            .iter()
+            .map(|n| n.to_string())
+            .collect::<Vec<_>>()
+            .join(":")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        let t = MlpTopology::parse("784:700:10").unwrap();
+        assert_eq!(t.layers, vec![784, 700, 10]);
+        assert_eq!(t.display(), "784:700:10");
+        assert_eq!(t.inputs(), 784);
+        assert_eq!(t.outputs(), 10);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(MlpTopology::parse("").is_none());
+        assert!(MlpTopology::parse("10").is_none());
+        assert!(MlpTopology::parse("10:0:5").is_none());
+        assert!(MlpTopology::parse("10:a:5").is_none());
+    }
+
+    #[test]
+    fn transition_math() {
+        let t = MlpTopology::new(vec![4, 10, 5, 3]);
+        let tr: Vec<_> = t.transitions().collect();
+        assert_eq!(tr, vec![(4, 10), (10, 5), (5, 3)]);
+        assert_eq!(t.macs_per_sample(), 4 * 10 + 10 * 5 + 5 * 3);
+        assert_eq!(t.max_width(), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn single_layer_panics() {
+        MlpTopology::new(vec![5]);
+    }
+}

@@ -1,0 +1,81 @@
+//! The MLP benchmark suite of Table IV (UCI / MNIST-class workloads).
+//!
+//! Datasets themselves are substituted with deterministic synthetic inputs
+//! (DESIGN.md §6): the paper's evaluation measures inference *time and
+//! energy*, which depend only on topology and batch count, never on weight
+//! or feature values. The topologies below are exactly Table IV's.
+
+use super::MlpTopology;
+
+/// One Table-IV benchmark row.
+#[derive(Debug, Clone)]
+pub struct Benchmark {
+    /// Application label (paper column 1).
+    pub application: &'static str,
+    /// Dataset name (paper column 2).
+    pub dataset: &'static str,
+    /// Canonical topology string (paper column 3).
+    pub topology: MlpTopology,
+}
+
+/// All seven benchmarks, in Table IV's row order.
+///
+/// Note: the paper prints Fashion-MNIST's input layer as 728; Fashion-MNIST
+/// images are 28×28 = 784. We reproduce the table as printed — the 56-node
+/// difference is irrelevant to every measured trend.
+pub fn benchmarks() -> Vec<Benchmark> {
+    let mk = |application, dataset, layers: &[usize]| Benchmark {
+        application,
+        dataset,
+        topology: MlpTopology::new(layers.to_vec()),
+    };
+    vec![
+        mk("Digit Recognition", "MNIST", &[784, 700, 10]),
+        mk("Census Data Analysis", "Adult", &[14, 48, 2]),
+        mk("FFT", "Mibench data", &[8, 140, 2]),
+        mk("Data Analysis", "Wine", &[13, 10, 3]),
+        mk("Object Classification", "Iris", &[4, 10, 5, 3]),
+        mk("Classification", "Poker Hands", &[10, 85, 50, 10]),
+        mk("Classification", "Fashion MNIST", &[728, 256, 128, 100, 10]),
+    ]
+}
+
+/// Look a benchmark up by (case-insensitive) dataset name.
+pub fn benchmark_by_name(name: &str) -> Option<Benchmark> {
+    let lower = name.to_lowercase();
+    benchmarks()
+        .into_iter()
+        .find(|b| b.dataset.to_lowercase().replace(' ', "-") == lower.replace(' ', "-"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_benchmarks() {
+        assert_eq!(benchmarks().len(), 7);
+    }
+
+    #[test]
+    fn mnist_topology() {
+        let b = benchmark_by_name("MNIST").unwrap();
+        assert_eq!(b.topology.display(), "784:700:10");
+    }
+
+    #[test]
+    fn lookup_is_case_and_space_insensitive() {
+        assert!(benchmark_by_name("poker hands").is_some());
+        assert!(benchmark_by_name("Poker-Hands").is_some());
+        assert!(benchmark_by_name("fashion mnist").is_some());
+        assert!(benchmark_by_name("cifar").is_none());
+    }
+
+    #[test]
+    fn all_topologies_well_formed() {
+        for b in benchmarks() {
+            assert!(b.topology.layers.len() >= 3, "{}", b.dataset);
+            assert!(b.topology.macs_per_sample() > 0);
+        }
+    }
+}

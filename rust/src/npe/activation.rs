@@ -1,0 +1,117 @@
+//! The quantization + ReLU output unit (paper Fig. 4).
+//!
+//! Fig. 4 shows the bit-level implementation for signed 16-bit fixed point:
+//! the quantizer selects a 16-bit window out of the wide accumulator and
+//! saturates when the bits above the window disagree with the sign; the
+//! ReLU gates the word with the (inverted) sign bit. [`ActivationUnit`]
+//! implements exactly that gate-level description and is tested equivalent
+//! to the arithmetic `quantize_acc`/`relu` in `model::fixedpoint` — the
+//! version the reference model and the JAX kernels use.
+
+use crate::model::fixedpoint::{quantize_acc, relu, FRAC_BITS};
+use crate::tcdmac::ACC_WIDTH;
+
+/// Gate-level quantization + activation unit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ActivationUnit {
+    /// Apply ReLU after quantization (hidden layers) or pass through
+    /// (output layer).
+    pub relu_enabled: bool,
+}
+
+impl ActivationUnit {
+    pub fn new(relu_enabled: bool) -> Self {
+        Self { relu_enabled }
+    }
+
+    /// Bit-level Fig.-4 path on a raw `ACC_WIDTH`-bit accumulator word.
+    pub fn apply_raw(&self, acc_bits: u64) -> i16 {
+        // Sign bit of the accumulator.
+        let sign = (acc_bits >> (ACC_WIDTH - 1)) & 1 == 1;
+        // The 16-bit window starting at FRAC_BITS.
+        let window = ((acc_bits >> FRAC_BITS) & 0xFFFF) as u16;
+        // Saturation detect: all bits above the window's sign position
+        // must equal the sign bit, else clamp to the rail.
+        let upper_shift = FRAC_BITS + 15;
+        let upper = acc_bits >> upper_shift; // includes window sign bit
+        let upper_mask = (1u64 << (ACC_WIDTH - upper_shift)) - 1;
+        let expect = if sign { upper_mask } else { 0 };
+        let overflow = (upper & upper_mask) != expect;
+        let q = if overflow {
+            if sign {
+                i16::MIN
+            } else {
+                i16::MAX
+            }
+        } else {
+            window as i16
+        };
+        // ReLU: zero the word when the sign bit is set.
+        if self.relu_enabled && q < 0 {
+            0
+        } else {
+            q
+        }
+    }
+
+    /// Arithmetic-view entry point (used by the fast simulator path).
+    pub fn apply(&self, acc: i64) -> i16 {
+        let q = quantize_acc(acc);
+        if self.relu_enabled {
+            relu(q)
+        } else {
+            q
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitsim::bits::trunc;
+    use crate::util::check;
+
+    #[test]
+    fn raw_equals_arithmetic_on_corners() {
+        for relu_on in [false, true] {
+            let u = ActivationUnit::new(relu_on);
+            for acc in [
+                0i64,
+                1,
+                -1,
+                255,
+                256,
+                -256,
+                (i16::MAX as i64) << FRAC_BITS,
+                (i16::MAX as i64 + 1) << FRAC_BITS,
+                (i16::MIN as i64) << FRAC_BITS,
+                (i16::MIN as i64 - 1) << FRAC_BITS,
+                i64::from(i32::MAX),
+                -i64::from(i32::MAX),
+            ] {
+                assert_eq!(
+                    u.apply_raw(trunc(acc, ACC_WIDTH)),
+                    u.apply(acc),
+                    "acc={acc} relu={relu_on}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_raw_equals_arithmetic() {
+        check::cases_n(0xAC7, 4096, |g| {
+            // Accumulator values representative of dot products.
+            let acc = (g.u64() as i64) >> g.usize_in(24, 48);
+            let u = ActivationUnit::new(g.u64() & 1 == 1);
+            assert_eq!(u.apply_raw(trunc(acc, ACC_WIDTH)), u.apply(acc));
+        });
+    }
+
+    #[test]
+    fn relu_gates_sign() {
+        let u = ActivationUnit::new(true);
+        assert_eq!(u.apply(-(1 << FRAC_BITS)), 0);
+        assert_eq!(u.apply(1 << FRAC_BITS), 1);
+    }
+}

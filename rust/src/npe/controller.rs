@@ -1,0 +1,209 @@
+//! The controller FSM (paper §III-B.3): walks the mapper's schedule and
+//! drives the OS dataflow — configure LDN, stream features/weights, fire
+//! the activation unit, swap the ping-pong feature memories between layers.
+
+use super::activation::ActivationUnit;
+use super::pe_array::PeArray;
+use crate::mapper::{Gamma, MapperTree, NpeGeometry};
+use crate::model::QuantizedMlp;
+use crate::tcdmac::MacKind;
+
+/// Execution statistics of one model run.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ExecutionStats {
+    /// MAC-array compute cycles (incl. TCD carry-propagation cycles).
+    pub compute_cycles: u64,
+    /// Total rolls executed.
+    pub rolls: u64,
+    /// LDN/controller reconfiguration events (config changes between
+    /// consecutive rolls; each costs one dead cycle, Fig. 6C's event
+    /// boundaries).
+    pub config_switches: u64,
+    /// Ping-pong swaps (one per layer transition).
+    pub layer_swaps: u64,
+}
+
+impl ExecutionStats {
+    /// Total cycles including reconfiguration overhead.
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles + self.config_switches + self.layer_swaps
+    }
+}
+
+/// Controller FSM state (exposed for the FSM-trace tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtrlState {
+    Idle,
+    Configure,
+    Stream,
+    Drain,
+    SwapLayer,
+    Done,
+}
+
+/// The controller driving one PE array.
+pub struct Controller {
+    pub geometry: NpeGeometry,
+    pub kind: MacKind,
+    mapper: MapperTree,
+    /// Use the bit-exact MAC models (slow, for verification) instead of
+    /// the fast 64-bit path.
+    pub bitexact: bool,
+}
+
+impl Controller {
+    pub fn new(geometry: NpeGeometry, kind: MacKind) -> Self {
+        Self {
+            geometry,
+            kind,
+            mapper: MapperTree::new(geometry),
+            bitexact: false,
+        }
+    }
+
+    pub fn bitexact(mut self, on: bool) -> Self {
+        self.bitexact = on;
+        self
+    }
+
+    /// Run `mlp` on `inputs` (one Vec per batch); returns the output-layer
+    /// activations per batch and the execution statistics.
+    pub fn run(
+        &mut self,
+        mlp: &QuantizedMlp,
+        inputs: &[Vec<i16>],
+    ) -> (Vec<Vec<i16>>, ExecutionStats) {
+        let b = inputs.len();
+        let mut stats = ExecutionStats::default();
+        let mut array = PeArray::new(self.geometry, self.kind);
+        // Ping-pong feature memories.
+        let mut ping: Vec<Vec<i16>> = inputs.to_vec();
+        let n_layers = mlp.topology.n_transitions();
+
+        for (layer, (fan_in, fan_out)) in mlp.topology.transitions().enumerate() {
+            let act = ActivationUnit::new(layer + 1 < n_layers);
+            let node = self
+                .mapper
+                .best(b, fan_out)
+                .expect("non-empty layer problem");
+            let batches: Vec<usize> = (0..b).collect();
+            let neurons: Vec<usize> = (0..fan_out).collect();
+            let rolls = node.assignments(&batches, &neurons);
+
+            let mut pong: Vec<Vec<i16>> = vec![vec![0; fan_out]; b];
+            let mut last_config = None;
+            for roll in &rolls {
+                if last_config != Some(roll.config) {
+                    stats.config_switches += 1;
+                    last_config = Some(roll.config);
+                }
+                let results = if self.bitexact {
+                    array.run_roll_bitexact(roll, mlp, layer, &ping)
+                } else {
+                    array.run_roll_fast(roll, mlp, layer, &ping)
+                };
+                for r in results {
+                    pong[r.batch][r.neuron] = act.apply(r.acc);
+                }
+                stats.rolls += 1;
+            }
+            let _ = fan_in;
+            ping = pong;
+            stats.layer_swaps += 1;
+        }
+        stats.compute_cycles = array.cycles();
+        (ping, stats)
+    }
+
+    /// The schedule the controller would execute (for reports/tests).
+    pub fn schedule(&mut self, mlp: &QuantizedMlp, batches: usize) -> crate::mapper::ModelSchedule {
+        self.mapper.schedule_model(&mlp.topology, batches)
+    }
+
+    /// Cycle count predicted by the schedule alone (must match `run`'s
+    /// compute cycles — tested).
+    pub fn predicted_compute_cycles(&mut self, mlp: &QuantizedMlp, batches: usize) -> u64 {
+        let extra = matches!(self.kind, MacKind::Tcd);
+        self.mapper
+            .schedule_model(&mlp.topology, batches)
+            .compute_cycles(extra)
+    }
+
+    /// Γ problems of a model+batch (paper notation), for reports.
+    pub fn gammas(mlp: &QuantizedMlp, batches: usize) -> Vec<Gamma> {
+        mlp.topology
+            .transitions()
+            .map(|(i, u)| Gamma::new(batches, i, u))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MlpTopology;
+
+    fn tiny_mlp() -> QuantizedMlp {
+        QuantizedMlp::synthesize(MlpTopology::new(vec![20, 12, 6, 4]), 5)
+    }
+
+    #[test]
+    fn controller_matches_reference_model() {
+        let mlp = tiny_mlp();
+        let inputs = mlp.synth_inputs(5, 11);
+        let expect = mlp.forward_batch(&inputs);
+        let mut ctrl = Controller::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        let (got, stats) = ctrl.run(&mlp, &inputs);
+        assert_eq!(got, expect, "NPE output == reference forward pass");
+        assert!(stats.rolls > 0 && stats.compute_cycles > 0);
+    }
+
+    #[test]
+    fn bitexact_path_matches_too() {
+        let mlp = tiny_mlp();
+        let inputs = mlp.synth_inputs(3, 13);
+        let expect = mlp.forward_batch(&inputs);
+        let mut ctrl = Controller::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd).bitexact(true);
+        let (got, _) = ctrl.run(&mlp, &inputs);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn conventional_mac_same_outputs_fewer_cycles() {
+        use crate::bitsim::{AdderKind, MultKind};
+        let mlp = tiny_mlp();
+        let inputs = mlp.synth_inputs(4, 17);
+        let mut tcd = Controller::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        let mut conv = Controller::new(
+            NpeGeometry::WALKTHROUGH,
+            MacKind::Conv(MultKind::BoothRadix8, AdderKind::KoggeStone),
+        );
+        let (ytcd, stcd) = tcd.run(&mlp, &inputs);
+        let (yconv, sconv) = conv.run(&mlp, &inputs);
+        assert_eq!(ytcd, yconv);
+        // TCD pays one extra cycle per roll (but each cycle is ~1.8× faster;
+        // that trade-off is the whole paper).
+        assert_eq!(stcd.compute_cycles, sconv.compute_cycles + stcd.rolls);
+    }
+
+    #[test]
+    fn predicted_cycles_match_executed() {
+        let mlp = tiny_mlp();
+        let inputs = mlp.synth_inputs(5, 19);
+        let mut ctrl = Controller::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        let predicted = ctrl.predicted_compute_cycles(&mlp, 5);
+        let (_, stats) = ctrl.run(&mlp, &inputs);
+        assert_eq!(stats.compute_cycles, predicted);
+    }
+
+    #[test]
+    fn paper_geometry_runs_mnist_scale() {
+        // A thinner MNIST-like net to keep the test quick on the fast path.
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![784, 64, 10]), 1);
+        let inputs = mlp.synth_inputs(8, 2);
+        let mut ctrl = Controller::new(NpeGeometry::PAPER, MacKind::Tcd);
+        let (out, stats) = ctrl.run(&mlp, &inputs);
+        assert_eq!(out, mlp.forward_batch(&inputs));
+        assert!(stats.total_cycles() > stats.compute_cycles);
+    }
+}

@@ -1,0 +1,125 @@
+//! Local Distribution Network (paper §III-B.5, Fig. 8).
+//!
+//! The LDN connects the row buffers to the PE array for a given NPE(K, N)
+//! configuration: input features are *multicast* — every TG working on the
+//! same batch receives the same feature — while weights are *unicast*, one
+//! per PE. [`Ldn`] computes the (tg, col) ↔ (batch-slot, neuron-slot)
+//! mapping the controller and the PE array use, plus the fan-out counts
+//! that feed the NoC energy estimate.
+
+use crate::mapper::NpeGeometry;
+
+/// LDN routing for one NPE(K, N) configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Ldn {
+    pub geometry: NpeGeometry,
+    /// K: concurrent batches.
+    pub k: usize,
+    /// N: neurons per batch (= PEs / K).
+    pub n: usize,
+}
+
+impl Ldn {
+    /// Build the routing; panics if (K, N) is not a supported
+    /// configuration of the geometry.
+    pub fn new(geometry: NpeGeometry, k: usize, n: usize) -> Self {
+        assert!(
+            geometry.configs().contains(&(k, n)),
+            "NPE({k},{n}) unsupported on {}x{} array",
+            geometry.tg_rows,
+            geometry.tg_cols
+        );
+        Self { geometry, k, n }
+    }
+
+    /// TGs assigned to each batch slot.
+    pub fn tgs_per_batch(&self) -> usize {
+        self.geometry.tg_rows / self.k
+    }
+
+    /// Batch slot served by a TG row.
+    pub fn batch_of_tg(&self, tg: usize) -> usize {
+        debug_assert!(tg < self.geometry.tg_rows);
+        tg / self.tgs_per_batch()
+    }
+
+    /// Neuron slot computed by PE (tg, col).
+    pub fn neuron_of_pe(&self, tg: usize, col: usize) -> usize {
+        debug_assert!(col < self.geometry.tg_cols);
+        (tg % self.tgs_per_batch()) * self.geometry.tg_cols + col
+    }
+
+    /// Inverse map: the (tg, col) computing (batch_slot, neuron_slot).
+    pub fn pe_of(&self, batch_slot: usize, neuron_slot: usize) -> (usize, usize) {
+        debug_assert!(batch_slot < self.k && neuron_slot < self.n);
+        let tg = batch_slot * self.tgs_per_batch() + neuron_slot / self.geometry.tg_cols;
+        (tg, neuron_slot % self.geometry.tg_cols)
+    }
+
+    /// Feature multicast fan-out: each batch's feature of the cycle is
+    /// driven to this many TGs (paper Fig. 5A: broadcast to all TGs when
+    /// K = 1).
+    pub fn feature_fanout(&self) -> usize {
+        self.tgs_per_batch()
+    }
+
+    /// Weight unicast count per cycle: one distinct weight per neuron slot.
+    pub fn weights_per_cycle(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn walkthrough_broadcast_case() {
+        // NPE(1, 18) on the 6×3 array: features broadcast to all 6 TGs.
+        let ldn = Ldn::new(NpeGeometry::WALKTHROUGH, 1, 18);
+        assert_eq!(ldn.feature_fanout(), 6);
+        assert_eq!(ldn.batch_of_tg(5), 0);
+        assert_eq!(ldn.neuron_of_pe(5, 2), 17);
+    }
+
+    #[test]
+    fn walkthrough_split_case() {
+        // NPE(2, 9): TGs 0–2 on batch 0, TGs 3–5 on batch 1.
+        let ldn = Ldn::new(NpeGeometry::WALKTHROUGH, 2, 9);
+        assert_eq!(ldn.batch_of_tg(0), 0);
+        assert_eq!(ldn.batch_of_tg(2), 0);
+        assert_eq!(ldn.batch_of_tg(3), 1);
+        assert_eq!(ldn.neuron_of_pe(3, 0), 0, "second batch restarts slots");
+        assert_eq!(ldn.feature_fanout(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unsupported_config_rejected() {
+        // (9, 2) is excluded on the 6×3 array (N < TG size) — and 9
+        // doesn't divide 6 anyway.
+        Ldn::new(NpeGeometry::WALKTHROUGH, 9, 2);
+    }
+
+    #[test]
+    fn prop_mapping_is_bijective() {
+        check::cases_n(0x1D9, 200, |g| {
+            let geom = NpeGeometry::new(g.usize_in(1, 12), g.usize_in(1, 8));
+            let cfgs = geom.configs();
+            let (k, n) = cfgs[g.usize_in(0, cfgs.len() - 1)];
+            let ldn = Ldn::new(geom, k, n);
+            let mut seen = std::collections::HashSet::new();
+            for tg in 0..geom.tg_rows {
+                for col in 0..geom.tg_cols {
+                    let b = ldn.batch_of_tg(tg);
+                    let s = ldn.neuron_of_pe(tg, col);
+                    assert!(b < k && s < n);
+                    assert!(seen.insert((b, s)), "slot collision");
+                    assert_eq!(ldn.pe_of(b, s), (tg, col), "inverse mapping");
+                }
+            }
+            assert_eq!(seen.len(), k * n, "all slots covered");
+        });
+    }
+}

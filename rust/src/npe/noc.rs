@@ -1,0 +1,96 @@
+//! NoC / interconnect energy model for the LDN distribution paths
+//! (Fig. 8): per-cycle wire energy of multicasting features and
+//! unicasting weights across the PE array, plus the output-collection bus.
+//!
+//! Wires are charged per bit-mm at the PE voltage domain; geometry-derived
+//! wire lengths assume the square-ish floorplan of Table III
+//! (PE array ≈ 0.72 mm² → ~0.85 mm side).
+
+use super::ldn::Ldn;
+use crate::mapper::NpeGeometry;
+use crate::ppa::VoltageDomain;
+
+/// Wire energy per bit per mm at the nominal PE voltage, pJ
+/// (32 nm-class global-wire constant).
+pub const WIRE_PJ_PER_BIT_MM: f64 = 0.18;
+
+/// PE-array side length, mm (Table III: 0.724 mm² array).
+pub const ARRAY_SIDE_MM: f64 = 0.85;
+
+/// NoC energy model for one NPE(K, N) configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct NocModel {
+    pub geometry: NpeGeometry,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl NocModel {
+    pub fn new(geometry: NpeGeometry, k: usize, n: usize) -> Self {
+        Self { geometry, k, n }
+    }
+
+    /// Average wire span of a feature multicast: the vertical bus touches
+    /// the TGs of one batch group (a 1/K slice of the array).
+    pub fn feature_span_mm(&self) -> f64 {
+        ARRAY_SIDE_MM / self.k as f64
+    }
+
+    /// Weight unicast span: the horizontal row bus across a TG.
+    pub fn weight_span_mm(&self) -> f64 {
+        ARRAY_SIDE_MM
+    }
+
+    /// Energy of one compute cycle's distribution traffic, pJ:
+    /// K features multicast (16 bits each over the group span) + N weights
+    /// unicast (16 bits over the row span).
+    pub fn cycle_energy_pj(&self) -> f64 {
+        let scale = VoltageDomain::PE.energy_scale();
+        let ldn = Ldn::new(self.geometry, self.k, self.n);
+        let feature = self.k as f64 * 16.0 * self.feature_span_mm() * WIRE_PJ_PER_BIT_MM;
+        // Fan-out buffering multiplies the effective switched wire.
+        let fanout = 1.0 + 0.1 * ldn.feature_fanout() as f64;
+        let weight = self.n as f64 * 16.0 * self.weight_span_mm() * WIRE_PJ_PER_BIT_MM;
+        (feature * fanout + weight) * scale
+    }
+
+    /// Energy of collecting one roll's outputs over the NoC bus, pJ.
+    pub fn collect_energy_pj(&self, outputs: usize) -> f64 {
+        outputs as f64 * 16.0 * ARRAY_SIDE_MM * WIRE_PJ_PER_BIT_MM
+            * VoltageDomain::PE.energy_scale()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_config_cheapest_per_batch() {
+        // NPE(1, 128): one feature serves the whole array per cycle —
+        // the highest reuse of a fetched feature.
+        let g = NpeGeometry::PAPER;
+        let wide = NocModel::new(g, 1, 128);
+        let split = NocModel::new(g, 16, 8);
+        // Per-batch feature wire energy is lower in the broadcast config.
+        let per_batch_wide = wide.cycle_energy_pj();
+        let per_batch_split = split.cycle_energy_pj();
+        assert!(per_batch_wide < per_batch_split * 16.0);
+    }
+
+    #[test]
+    fn energy_positive_and_scales_with_outputs() {
+        let m = NocModel::new(NpeGeometry::PAPER, 4, 32);
+        assert!(m.cycle_energy_pj() > 0.0);
+        assert!(m.collect_energy_pj(128) > m.collect_energy_pj(8));
+    }
+
+    #[test]
+    fn spans_bounded_by_die() {
+        for (k, n) in NpeGeometry::PAPER.configs() {
+            let m = NocModel::new(NpeGeometry::PAPER, k, n);
+            assert!(m.feature_span_mm() <= ARRAY_SIDE_MM + 1e-12);
+            assert!(m.weight_span_mm() <= ARRAY_SIDE_MM + 1e-12);
+        }
+    }
+}

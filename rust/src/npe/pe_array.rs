@@ -1,0 +1,201 @@
+//! The PE array: a tiled grid of MAC units executing one roll at a time.
+//!
+//! Two execution paths, verified equal:
+//! * [`PeArray::run_roll_bitexact`] — drives the *actual* MAC models
+//!   (TCD carry-save planes or conventional CPA chains) cycle by cycle;
+//!   this is the path the integration tests and small examples use.
+//! * [`PeArray::run_roll_fast`] — 64-bit dot-product shortcut producing
+//!   the identical values (the MAC contract guarantees it); this is what
+//!   the big Fig. 10 sweeps use so MNIST-sized runs stay fast.
+
+use super::ldn::Ldn;
+use crate::mapper::tree::RollAssignment;
+use crate::mapper::NpeGeometry;
+use crate::model::QuantizedMlp;
+use crate::tcdmac::{MacKind, MacUnit};
+
+/// One neuron result produced by a roll.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NeuronResult {
+    pub batch: usize,
+    pub neuron: usize,
+    /// Raw (pre-activation) accumulator value.
+    pub acc: i64,
+}
+
+/// The PE array of a given geometry populated with MACs of one kind.
+pub struct PeArray {
+    pub geometry: NpeGeometry,
+    pub kind: MacKind,
+    macs: Vec<Box<dyn MacUnit>>,
+    /// Cycles executed so far (compute cycles only; the controller adds
+    /// configuration/drain overheads).
+    cycles: u64,
+}
+
+impl PeArray {
+    pub fn new(geometry: NpeGeometry, kind: MacKind) -> Self {
+        let macs = (0..geometry.pes()).map(|_| kind.build()).collect();
+        Self { geometry, kind, macs, cycles: 0 }
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Execute one roll bit-exactly on the MAC models.
+    ///
+    /// `layer` selects the weight matrix; `features[b]` are the batch
+    /// activations feeding this layer. Cycle structure per §III-B.1:
+    /// `I` carry-deferring cycles streaming one feature per cycle, plus
+    /// one carry-propagation cycle for TCD-MACs.
+    pub fn run_roll_bitexact(
+        &mut self,
+        roll: &RollAssignment,
+        mlp: &QuantizedMlp,
+        layer: usize,
+        features: &[Vec<i16>],
+    ) -> Vec<NeuronResult> {
+        let (k, n) = roll.config;
+        let ldn = Ldn::new(self.geometry, k, n);
+        let fan_in = mlp.topology.layers[layer];
+
+        // Reset the MACs participating in this roll.
+        for (bs, &_b) in roll.batches.iter().enumerate() {
+            for (ns, &_nn) in roll.neurons.iter().enumerate() {
+                let (tg, col) = ldn.pe_of(bs, ns);
+                self.macs[tg * self.geometry.tg_cols + col].reset();
+            }
+        }
+        // Stream the I features: feature i of each batch is multicast to
+        // its TGs; weight (neuron, i) is unicast to each PE.
+        for i in 0..fan_in {
+            for (bs, &b) in roll.batches.iter().enumerate() {
+                let x = features[b][i];
+                for (ns, &nn) in roll.neurons.iter().enumerate() {
+                    let (tg, col) = ldn.pe_of(bs, ns);
+                    let w = mlp.weight(layer, nn, i);
+                    self.macs[tg * self.geometry.tg_cols + col].step(w, x);
+                }
+            }
+        }
+        self.cycles += self.kind.cycles_for_stream(fan_in) as u64;
+
+        // Collect (the CPM cycle for TCD).
+        let mut out = Vec::with_capacity(roll.batches.len() * roll.neurons.len());
+        for (bs, &b) in roll.batches.iter().enumerate() {
+            for (ns, &nn) in roll.neurons.iter().enumerate() {
+                let (tg, col) = ldn.pe_of(bs, ns);
+                let acc = self.macs[tg * self.geometry.tg_cols + col].finalize();
+                out.push(NeuronResult { batch: b, neuron: nn, acc });
+            }
+        }
+        out
+    }
+
+    /// Fast path: same results via 64-bit dot products.
+    pub fn run_roll_fast(
+        &mut self,
+        roll: &RollAssignment,
+        mlp: &QuantizedMlp,
+        layer: usize,
+        features: &[Vec<i16>],
+    ) -> Vec<NeuronResult> {
+        let fan_in = mlp.topology.layers[layer];
+        self.cycles += self.kind.cycles_for_stream(fan_in) as u64;
+        let mut out = Vec::with_capacity(roll.batches.len() * roll.neurons.len());
+        for &b in &roll.batches {
+            let x = &features[b];
+            for &nn in &roll.neurons {
+                let wrow = &mlp.weights[layer][nn * fan_in..(nn + 1) * fan_in];
+                let acc: i64 = wrow
+                    .iter()
+                    .zip(x.iter())
+                    .map(|(w, xi)| (*w as i32 * *xi as i32) as i64)
+                    .sum();
+                out.push(NeuronResult { batch: b, neuron: nn, acc });
+            }
+        }
+        out
+    }
+
+    /// Aggregate toggle activity across all PEs (feeds the energy model
+    /// when the bit-exact path runs).
+    pub fn total_toggles(&self) -> u64 {
+        self.macs.iter().map(|m| m.toggles()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::MapperTree;
+    use crate::model::MlpTopology;
+
+    fn setup() -> (QuantizedMlp, Vec<Vec<i16>>, Vec<RollAssignment>) {
+        let topo = MlpTopology::new(vec![20, 12, 4]);
+        let mlp = QuantizedMlp::synthesize(topo, 99);
+        let inputs = mlp.synth_inputs(5, 3);
+        let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        let node = mapper.best(5, 12).unwrap();
+        let batches: Vec<usize> = (0..5).collect();
+        let neurons: Vec<usize> = (0..12).collect();
+        let rolls = node.assignments(&batches, &neurons);
+        (mlp, inputs, rolls)
+    }
+
+    #[test]
+    fn bitexact_equals_fast_path() {
+        let (mlp, inputs, rolls) = setup();
+        let mut slow = PeArray::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        let mut fast = PeArray::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        for roll in &rolls {
+            let a = slow.run_roll_bitexact(roll, &mlp, 0, &inputs);
+            let b = fast.run_roll_fast(roll, &mlp, 0, &inputs);
+            assert_eq!(a, b);
+        }
+        assert_eq!(slow.cycles(), fast.cycles());
+    }
+
+    #[test]
+    fn conventional_macs_same_values() {
+        use crate::bitsim::{AdderKind, MultKind};
+        let (mlp, inputs, rolls) = setup();
+        let mut tcd = PeArray::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        let mut conv = PeArray::new(
+            NpeGeometry::WALKTHROUGH,
+            MacKind::Conv(MultKind::BoothRadix4, AdderKind::KoggeStone),
+        );
+        for roll in &rolls {
+            let a = tcd.run_roll_bitexact(roll, &mlp, 0, &inputs);
+            let b = conv.run_roll_bitexact(roll, &mlp, 0, &inputs);
+            assert_eq!(a, b, "dataflow-independent values");
+        }
+        // But TCD pays one extra cycle per roll.
+        assert_eq!(
+            tcd.cycles(),
+            conv.cycles() + rolls.len() as u64
+        );
+    }
+
+    #[test]
+    fn results_cover_assignment() {
+        let (mlp, inputs, rolls) = setup();
+        let mut arr = PeArray::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        let mut seen = std::collections::HashSet::new();
+        for roll in &rolls {
+            for r in arr.run_roll_fast(roll, &mlp, 0, &inputs) {
+                assert!(seen.insert((r.batch, r.neuron)));
+            }
+        }
+        assert_eq!(seen.len(), 5 * 12);
+    }
+
+    #[test]
+    fn activity_accumulates_on_bitexact_path() {
+        let (mlp, inputs, rolls) = setup();
+        let mut arr = PeArray::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        arr.run_roll_bitexact(&rolls[0], &mlp, 0, &inputs);
+        assert!(arr.total_toggles() > 0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Analytic Power / Performance / Area model.
+//!
+//! The paper extracts PPA from a Synopsys 32 nm post-layout flow (DC → ICC
+//! → PrimeTime, 20K-cycle FSDB power). We have no EDA flow, so this module
+//! is the documented substitution (DESIGN.md §6): a consistent analytic
+//! model applied to *every* design — the paper's claims are comparative
+//! (TCD-MAC vs conventional MACs built in the same flow), and a consistent
+//! model preserves the orderings and ratios, which is the reproducible
+//! shape of Tables I–III.
+//!
+//! * delay — logic depth in unit gate delays τ (from the structural views
+//!   in [`crate::bitsim`]) × a calibrated τ, plus a clocking overhead;
+//! * area — NAND2-equivalent gate counts × cell area;
+//! * dynamic power — *measured* switching activity (toggle counting over
+//!   the functional models with random stimuli, same 20K-cycle protocol as
+//!   the paper) × per-gate switched energy × frequency;
+//! * leakage — per-gate leakage × count, scaled by voltage domain;
+//! * SRAM — per-bit area/leakage and per-access energies for the W-Mem /
+//!   FM-Mem at the scaled 0.70 V domain of Table III.
+
+pub mod paper;
+pub mod report;
+pub mod tech;
+
+pub use report::PpaReport;
+pub use tech::{TechParams, VoltageDomain};

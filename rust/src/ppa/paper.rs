@@ -1,0 +1,94 @@
+//! The paper's published numbers (Tables I–III), pinned as constants.
+//!
+//! Used by the calibration tests and by `EXPERIMENTS.md` generators to
+//! print paper-vs-measured side by side. These are *targets for shape
+//! comparison*, not inputs to the model.
+
+/// One row of the paper's Table I.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperMacRow {
+    pub name: &'static str,
+    /// µm²; `None` where the paper cell is blank ((BRx4, KS) area).
+    pub area_um2: Option<f64>,
+    pub power_uw: f64,
+    pub delay_ns: f64,
+    pub pdp_pj: f64,
+}
+
+/// Table I as published (32 nm, signed 16-bit fixed point).
+pub const TABLE1: &[PaperMacRow] = &[
+    PaperMacRow { name: "(BRx2, KS)", area_um2: Some(8357.0), power_uw: 467.0, delay_ns: 2.85, pdp_pj: 13.31 },
+    PaperMacRow { name: "(BRx2, BK)", area_um2: Some(8122.0), power_uw: 394.0, delay_ns: 3.30, pdp_pj: 13.00 },
+    PaperMacRow { name: "(BRx8, BK)", area_um2: Some(7281.0), power_uw: 383.0, delay_ns: 3.14, pdp_pj: 12.03 },
+    PaperMacRow { name: "(BRx4, BK)", area_um2: Some(6437.0), power_uw: 347.0, delay_ns: 3.35, pdp_pj: 11.62 },
+    PaperMacRow { name: "(WAL, KS)",  area_um2: Some(7171.0), power_uw: 346.0, delay_ns: 3.04, pdp_pj: 10.52 },
+    PaperMacRow { name: "(WAL, BK)",  area_um2: Some(6520.0), power_uw: 334.0, delay_ns: 3.13, pdp_pj: 10.45 },
+    PaperMacRow { name: "(BRx4, KS)", area_um2: None,         power_uw: 393.0, delay_ns: 2.47, pdp_pj: 9.71 },
+    PaperMacRow { name: "(BRx8, KS)", area_um2: Some(7342.0), power_uw: 354.0, delay_ns: 2.63, pdp_pj: 9.31 },
+    PaperMacRow { name: "TCD-MAC",    area_um2: Some(5004.0), power_uw: 320.0, delay_ns: 1.57, pdp_pj: 5.02 },
+];
+
+/// Table III headline values (TCD-NPE implementation).
+pub mod table3 {
+    pub const PE_ARRAY_ROWS: usize = 16;
+    pub const PE_ARRAY_COLS: usize = 8;
+    pub const W_MEM_KBYTE: usize = 512;
+    pub const FM_MEM_KBYTE_EACH: usize = 64; // ×2 (ping-pong)
+    pub const PE_VDD: f64 = 0.95;
+    pub const MEM_VDD: f64 = 0.70;
+    pub const AREA_MM2: f64 = 3.54;
+    pub const PE_ARRAY_AREA_MM2: f64 = 0.724;
+    pub const MEM_AREA_MM2: f64 = 2.5;
+    pub const MAX_FREQ_MHZ: f64 = 636.0;
+    pub const OVERALL_LEAK_MW: f64 = 75.5;
+    pub const MEM_LEAK_MW: f64 = 51.7;
+    pub const PE_ARRAY_LEAK_MW: f64 = 6.4;
+    pub const OTHERS_LEAK_MW: f64 = 17.0;
+}
+
+/// Paper §IV-B text: TCD-MAC vs conventional MAC improvements.
+pub mod claims {
+    /// "23% to 40% reduction in area".
+    pub const AREA_IMPROVEMENT_PCT: (f64, f64) = (23.0, 40.0);
+    /// "4% to 31% improvement in power".
+    pub const POWER_IMPROVEMENT_PCT: (f64, f64) = (4.0, 31.0);
+    /// "46% to 62% improvement in PDP".
+    pub const PDP_IMPROVEMENT_PCT: (f64, f64) = (46.0, 62.0);
+    /// Fig. 10: TCD-NPE execution time ≈ half of conventional OS/NLR NPEs.
+    pub const EXEC_TIME_RATIO_VS_CONV_OS: f64 = 0.5;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_pdp_consistent() {
+        // The published PDP column equals power × delay × 10 for *every*
+        // row — the paper's PDP units are off by a consistent factor of
+        // ten (documented in EXPERIMENTS.md). Relative claims are
+        // unaffected; we pin the relationship so the quirk stays visible.
+        for row in TABLE1 {
+            let pdp = row.power_uw * row.delay_ns * 1e-3 * 10.0;
+            assert!(
+                (pdp - row.pdp_pj).abs() / row.pdp_pj < 0.03,
+                "{}: {} vs {}",
+                row.name,
+                pdp,
+                row.pdp_pj
+            );
+        }
+    }
+
+    #[test]
+    fn tcd_is_best_in_paper() {
+        let tcd = TABLE1.last().unwrap();
+        for row in &TABLE1[..TABLE1.len() - 1] {
+            assert!(tcd.pdp_pj < row.pdp_pj);
+            assert!(tcd.delay_ns < row.delay_ns);
+            if let Some(a) = row.area_um2 {
+                assert!(tcd.area_um2.unwrap() < a);
+            }
+        }
+    }
+}

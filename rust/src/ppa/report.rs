@@ -1,0 +1,64 @@
+//! PPA report structure shared by the Table-I/II/III generators.
+
+
+
+/// Post-"layout" PPA of one design, in the paper's Table-I units.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PpaReport {
+    /// Design label, e.g. `(BRx4, KS)` or `TCD-MAC`.
+    pub name: &'static str,
+    /// Cell area, µm².
+    pub area_um2: f64,
+    /// Average power across the activity simulation, µW (dynamic + leak).
+    pub power_uw: f64,
+    /// Critical-path delay (= min cycle time), ns.
+    pub delay_ns: f64,
+}
+
+impl PpaReport {
+    /// Power-delay product, pJ — the paper's headline column.
+    pub fn pdp_pj(&self) -> f64 {
+        self.power_uw * self.delay_ns * 1e-3
+    }
+
+    /// Max operating frequency, MHz.
+    pub fn fmax_mhz(&self) -> f64 {
+        1e3 / self.delay_ns
+    }
+
+    /// Energy of one cycle at fmax, pJ (== PDP).
+    pub fn energy_per_cycle_pj(&self) -> f64 {
+        self.pdp_pj()
+    }
+
+    /// Relative improvement of `self` over `other` in PDP, percent.
+    pub fn pdp_improvement_pct(&self, other: &PpaReport) -> f64 {
+        (1.0 - self.pdp_pj() / other.pdp_pj()) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pdp_units() {
+        let r = PpaReport {
+            name: "x",
+            area_um2: 1.0,
+            power_uw: 1000.0, // 1 mW
+            delay_ns: 2.0,
+        };
+        // 1 mW × 2 ns = 2 pJ.
+        assert!((r.pdp_pj() - 2.0).abs() < 1e-12);
+        assert!((r.fmax_mhz() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn improvement_sign() {
+        let fast = PpaReport { name: "a", area_um2: 0.0, power_uw: 100.0, delay_ns: 1.0 };
+        let slow = PpaReport { name: "b", area_um2: 0.0, power_uw: 100.0, delay_ns: 2.0 };
+        assert!(fast.pdp_improvement_pct(&slow) > 0.0);
+        assert!(slow.pdp_improvement_pct(&fast) < 0.0);
+    }
+}

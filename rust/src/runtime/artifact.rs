@@ -1,0 +1,96 @@
+//! Artifact naming and the manifest written by `python/compile/aot.py`.
+
+use crate::model::MlpTopology;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Canonical artifact name for a dataset slug and batch size,
+/// e.g. `("mnist", 8)` → `mnist_b8`.
+pub fn artifact_name(slug: &str, batch: usize) -> String {
+    format!(
+        "{}_b{batch}",
+        slug.to_lowercase().replace([' ', '-'], "_")
+    )
+}
+
+/// One line of `artifacts/manifest.txt`:
+/// `name batch topology seed` (whitespace-separated).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub batch: usize,
+    pub topology: MlpTopology,
+    pub seed: u64,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.txt` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest text (one entry per non-comment line).
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts.next().context("name")?.to_string();
+            let batch: usize = parts
+                .next()
+                .with_context(|| format!("manifest line {ln}: batch"))?
+                .parse()?;
+            let topo = MlpTopology::parse(parts.next().context("topology")?)
+                .with_context(|| format!("manifest line {ln}: topology"))?;
+            let seed: u64 = parts.next().context("seed")?.parse()?;
+            entries.push(ManifestEntry { name, batch, topology: topo, seed });
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(artifact_name("MNIST", 8), "mnist_b8");
+        assert_eq!(artifact_name("Poker Hands", 4), "poker_hands_b4");
+        assert_eq!(artifact_name("Fashion-MNIST", 1), "fashion_mnist_b1");
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let text = "# comment\nmnist_b8 8 784:700:10 123\n\niris_b4 4 4:10:5:3 7\n";
+        let m = ArtifactManifest::parse(text).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("iris_b4").unwrap();
+        assert_eq!(e.batch, 4);
+        assert_eq!(e.topology.display(), "4:10:5:3");
+        assert_eq!(e.seed, 7);
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        assert!(ArtifactManifest::parse("name_only").is_err());
+        assert!(ArtifactManifest::parse("x 8 not-a-topo 1").is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! PJRT runtime — the numeric reference path.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`), compiles them once on the PJRT CPU client, and
+//! executes batched MLP inference. Python never runs here: the artifacts
+//! are self-contained HLO, and the weights are generated in Rust with the
+//! same deterministic stream the JAX model was traced for.
+//!
+//! Artifact contract (see `python/compile/aot.py`):
+//! * file `artifacts/<name>_b<B>.hlo.txt` — an HLO module whose
+//!   parameters are `(x: s32[B,I], w_0: s32[H1,I], w_1: s32[H2,H1], …)`
+//!   and whose result is a 1-tuple `(y: s32[B,O],)`;
+//! * quantization semantics identical to `model::fixedpoint` (tested
+//!   bit-for-bit in `rust/tests/sim_vs_pjrt.rs`).
+
+pub mod artifact;
+
+pub use artifact::{artifact_name, ArtifactManifest};
+
+use crate::model::QuantizedMlp;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled MLP executable plus its shape metadata.
+pub struct LoadedMlp {
+    pub name: String,
+    pub batch: usize,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU runtime holding compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, LoadedMlp>,
+    artifact_dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?,
+            exes: HashMap::new(),
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// PJRT platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by name (e.g. `iris_b4`).
+    pub fn load(&mut self, name: &str, batch: usize) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.insert(
+            name.to_string(),
+            LoadedMlp { name: name.to_string(), batch, exe },
+        );
+        Ok(())
+    }
+
+    /// Names of loaded executables.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.exes.keys().map(String::as_str).collect()
+    }
+
+    /// Execute a loaded artifact on a batch of inputs with the model's
+    /// weights, returning the output activations per batch row.
+    ///
+    /// `inputs.len()` must equal the artifact's batch size; i16 activations
+    /// are widened to the s32 interface dtype and narrowed back.
+    pub fn execute(
+        &self,
+        name: &str,
+        mlp: &QuantizedMlp,
+        inputs: &[Vec<i16>],
+    ) -> Result<Vec<Vec<i16>>> {
+        let lm = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))?;
+        if inputs.len() != lm.batch {
+            return Err(anyhow!(
+                "batch mismatch: artifact {name} expects {}, got {}",
+                lm.batch,
+                inputs.len()
+            ));
+        }
+        let topo = &mlp.topology;
+        let i = topo.inputs();
+        let flat_x: Vec<i32> = inputs
+            .iter()
+            .flat_map(|row| row.iter().map(|&v| v as i32))
+            .collect();
+        let mut literals = Vec::with_capacity(1 + mlp.weights.len());
+        literals.push(
+            xla::Literal::vec1(&flat_x)
+                .reshape(&[lm.batch as i64, i as i64])
+                .map_err(|e| anyhow!("{e:?}"))?,
+        );
+        for (l, (fan_in, fan_out)) in topo.transitions().enumerate() {
+            let w: Vec<i32> = mlp.weights[l].iter().map(|&v| v as i32).collect();
+            literals.push(
+                xla::Literal::vec1(&w)
+                    .reshape(&[fan_out as i64, fan_in as i64])
+                    .map_err(|e| anyhow!("{e:?}"))?,
+            );
+        }
+        let result = lm
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        let flat: Vec<i32> = out.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let o = topo.outputs();
+        if flat.len() != lm.batch * o {
+            return Err(anyhow!(
+                "output shape mismatch: got {} values, want {}x{}",
+                flat.len(),
+                lm.batch,
+                o
+            ));
+        }
+        Ok(flat
+            .chunks(o)
+            .map(|row| row.iter().map(|&v| v as i16).collect())
+            .collect())
+    }
+}

@@ -1,0 +1,147 @@
+//! Conventional MAC baselines (paper Fig. 1A, Table I rows 1–8).
+//!
+//! Structure per cycle: DRU (Booth/Wallace partial products) → CEL → product
+//! CPA → accumulate CPA. The *full* carry chain is resolved every cycle —
+//! the accumulator always holds the correct intermediate sum, which is
+//! precisely the requirement the TCD-MAC relaxes.
+
+use super::{MacKind, MacUnit, ACC_WIDTH, PROD_WIDTH};
+use crate::bitsim::adder::{Adder, AdderKind};
+use crate::bitsim::bits::{mask, sext, toggles};
+use crate::bitsim::compressor::cel_reduce_in_place;
+use crate::bitsim::multiplier::{MultKind, PartialProducts};
+
+/// Functional + activity-counting model of a conventional MAC.
+#[derive(Debug, Clone)]
+pub struct ConvMac {
+    dru: PartialProducts,
+    /// Product CPA (after the CEL).
+    cpa_mul: Adder,
+    /// Accumulate CPA.
+    cpa_acc: Adder,
+    acc: u64,
+    prev_prod: u64,
+    toggle_count: u64,
+    cycles: u64,
+    /// Reused row buffer (§Perf — see `TcdMac::scratch`).
+    scratch: Vec<u64>,
+}
+
+impl ConvMac {
+    pub fn new(mult: MultKind, adder: AdderKind) -> Self {
+        Self {
+            dru: PartialProducts::new(mult, ACC_WIDTH),
+            cpa_mul: Adder::new(adder, PROD_WIDTH),
+            cpa_acc: Adder::new(adder, ACC_WIDTH),
+            acc: 0,
+            prev_prod: 0,
+            toggle_count: 0,
+            cycles: 0,
+            scratch: Vec::with_capacity(20),
+        }
+    }
+
+    /// The always-correct running accumulator (sign-extended).
+    pub fn value(&self) -> i64 {
+        sext(self.acc, ACC_WIDTH)
+    }
+}
+
+impl MacUnit for ConvMac {
+    fn reset(&mut self) {
+        self.acc = 0;
+    }
+
+    fn step(&mut self, a: i16, b: i16) {
+        let mut rows = std::mem::take(&mut self.scratch);
+        self.dru.rows_into(a, b, &mut rows);
+        let (s, c) = cel_reduce_in_place(&mut rows, ACC_WIDTH);
+        self.scratch = rows;
+        // Product CPA resolves the multiplier result. The product region is
+        // PROD_WIDTH bits; the (sign-extension) residue above it is folded
+        // with a cheap incrementer that we model inside the accumulate CPA.
+        let prod_lo = self.cpa_mul.add(s & mask(PROD_WIDTH), c & mask(PROD_WIDTH));
+        let carry_out = ((s & mask(PROD_WIDTH)) as u128 + (c & mask(PROD_WIDTH)) as u128
+            >> PROD_WIDTH) as u64;
+        let prod_hi = (s >> PROD_WIDTH)
+            .wrapping_add(c >> PROD_WIDTH)
+            .wrapping_add(carry_out)
+            & mask(ACC_WIDTH - PROD_WIDTH);
+        let product = prod_lo | (prod_hi << PROD_WIDTH);
+        // Accumulate CPA resolves the new (correct) running sum.
+        let new_acc = self.cpa_acc.add(self.acc, product);
+        self.toggle_count +=
+            (toggles(self.prev_prod, product) + toggles(self.acc, new_acc)) as u64;
+        self.prev_prod = product;
+        self.acc = new_acc;
+        self.cycles += 1;
+    }
+
+    fn finalize(&mut self) -> i64 {
+        // Nothing to resolve: the accumulator is already exact.
+        sext(self.acc, ACC_WIDTH)
+    }
+
+    fn toggles(&self) -> u64 {
+        self.toggle_count
+    }
+
+    fn monitored_bits(&self) -> u64 {
+        self.cycles * 2 * ACC_WIDTH as u64
+    }
+
+    fn kind(&self) -> MacKind {
+        MacKind::Conv(self.dru.kind, self.cpa_acc.kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitsim::bits::trunc;
+    use crate::util::check;
+
+    #[test]
+    fn intermediate_sums_are_always_correct() {
+        // The defining property of the conventional MAC (vs TCD).
+        let mut mac = ConvMac::new(MultKind::BoothRadix4, AdderKind::KoggeStone);
+        let stream = [(100i16, 100i16), (-5000, 31), (7, -7), (i16::MIN, i16::MAX)];
+        let mut acc = 0i64;
+        for (a, b) in stream {
+            mac.step(a, b);
+            acc = acc.wrapping_add(a as i64 * b as i64);
+            assert_eq!(mac.value(), sext(trunc(acc, ACC_WIDTH), ACC_WIDTH));
+        }
+    }
+
+    #[test]
+    fn product_region_carry_out_folds_into_guard() {
+        // Values whose product CPA overflows PROD_WIDTH when accumulated.
+        let mut mac = ConvMac::new(MultKind::Simple, AdderKind::BrentKung);
+        for _ in 0..4 {
+            mac.step(i16::MAX, i16::MAX); // 4 × 2^30-ish crosses 2^32
+        }
+        assert_eq!(mac.finalize(), 4 * (i16::MAX as i64) * (i16::MAX as i64));
+    }
+
+    #[test]
+    fn prop_every_variant_exact() {
+        check::cases(0xC0F, |g| {
+            let mults = [
+                MultKind::Simple,
+                MultKind::BoothRadix2,
+                MultKind::BoothRadix4,
+                MultKind::BoothRadix8,
+            ];
+            let adders = [AdderKind::Ripple, AdderKind::BrentKung, AdderKind::KoggeStone];
+            let mut mac = ConvMac::new(mults[g.usize_in(0, 3)], adders[g.usize_in(0, 2)]);
+            let stream = g.vec_i16_pairs(48);
+            let mut acc = 0i64;
+            for (a, b) in &stream {
+                mac.step(*a, *b);
+                acc = acc.wrapping_add(*a as i64 * *b as i64);
+            }
+            assert_eq!(mac.finalize(), sext(trunc(acc, ACC_WIDTH), ACC_WIDTH));
+        });
+    }
+}

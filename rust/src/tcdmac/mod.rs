@@ -1,0 +1,202 @@
+//! The Temporal-Carry-deferring MAC and its conventional baselines.
+//!
+//! [`TcdMac`] implements the paper's §III-A contribution: during a stream
+//! reduction it keeps the accumulator in redundant carry-save form — the
+//! CEL compresses partial-product rows *plus* the previous cycle's sum and
+//! deferred-carry planes; the carry-propagating part of the adder (PCPA) is
+//! skipped and the generate bits are re-injected next cycle ("temporal
+//! carry"). Only the final cycle runs the PCPA (carry-propagation mode).
+//!
+//! [`ConvMac`] implements the eight Table-I baselines: Booth radix-2/4/8 or
+//! Wallace partial products, a CEL reduction, a product CPA and an
+//! accumulate CPA (Brent-Kung or Kogge-Stone), resolving the carry chain
+//! every cycle.
+//!
+//! Both are bit-accurate: `finalize()` returns exactly
+//! `Σ aᵢ·bᵢ mod 2^ACC_WIDTH` (property-tested), so the NPE simulator built
+//! on them is bit-exact against the JAX/PJRT reference path.
+
+pub mod conventional;
+pub mod ppa;
+pub mod tcd;
+
+pub use conventional::ConvMac;
+pub use ppa::{mac_ppa, measure_activity, table1_reports, MacPpaModel};
+pub use tcd::TcdMac;
+
+use crate::bitsim::{AdderKind, MultKind};
+
+
+/// Accumulator / carry-save plane width. 16×16-bit products are 32 bits;
+/// 8 guard bits cover dot products up to 256 terms without wrap, and the
+/// functional contract is *exact modulo 2^ACC_WIDTH* regardless.
+pub const ACC_WIDTH: u32 = 40;
+
+/// Width of the multiplier product region (before accumulation guard).
+pub const PROD_WIDTH: u32 = 32;
+
+/// Identifies one MAC design point of Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MacKind {
+    /// The paper's contribution.
+    Tcd,
+    /// A conventional (multiplier, adder) tuple, e.g. `(BRx4, KS)`.
+    Conv(MultKind, AdderKind),
+}
+
+impl MacKind {
+    /// Paper-style display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MacKind::Tcd => "TCD-MAC",
+            MacKind::Conv(m, a) => match (m, a) {
+                (MultKind::BoothRadix2, AdderKind::KoggeStone) => "(BRx2, KS)",
+                (MultKind::BoothRadix2, AdderKind::BrentKung) => "(BRx2, BK)",
+                (MultKind::BoothRadix4, AdderKind::KoggeStone) => "(BRx4, KS)",
+                (MultKind::BoothRadix4, AdderKind::BrentKung) => "(BRx4, BK)",
+                (MultKind::BoothRadix8, AdderKind::KoggeStone) => "(BRx8, KS)",
+                (MultKind::BoothRadix8, AdderKind::BrentKung) => "(BRx8, BK)",
+                (MultKind::Simple, AdderKind::KoggeStone) => "(WAL, KS)",
+                (MultKind::Simple, AdderKind::BrentKung) => "(WAL, BK)",
+                (MultKind::BoothRadix2, AdderKind::Ripple) => "(BRx2, RCA)",
+                (MultKind::BoothRadix4, AdderKind::Ripple) => "(BRx4, RCA)",
+                (MultKind::BoothRadix8, AdderKind::Ripple) => "(BRx8, RCA)",
+                (MultKind::Simple, AdderKind::Ripple) => "(WAL, RCA)",
+            },
+        }
+    }
+
+    /// The eight conventional design points evaluated by the paper,
+    /// in Table I's row order, plus TCD-MAC last.
+    pub fn table1_order() -> Vec<MacKind> {
+        use AdderKind::*;
+        use MultKind::*;
+        vec![
+            MacKind::Conv(BoothRadix2, KoggeStone),
+            MacKind::Conv(BoothRadix2, BrentKung),
+            MacKind::Conv(BoothRadix8, BrentKung),
+            MacKind::Conv(BoothRadix4, BrentKung),
+            MacKind::Conv(Simple, KoggeStone),
+            MacKind::Conv(Simple, BrentKung),
+            MacKind::Conv(BoothRadix4, KoggeStone),
+            MacKind::Conv(BoothRadix8, KoggeStone),
+            MacKind::Tcd,
+        ]
+    }
+
+    /// Cycles to reduce a stream of `n` input pairs to a *correct* result:
+    /// a conventional MAC needs `n`, the TCD-MAC needs `n + 1` (the extra
+    /// carry-propagation-mode cycle, Fig. 2).
+    pub fn cycles_for_stream(&self, n: usize) -> usize {
+        match self {
+            MacKind::Tcd => n + 1,
+            MacKind::Conv(..) => n,
+        }
+    }
+
+    /// Instantiate a functional unit of this kind.
+    pub fn build(&self) -> Box<dyn MacUnit> {
+        match self {
+            MacKind::Tcd => Box::new(TcdMac::new()),
+            MacKind::Conv(m, a) => Box::new(ConvMac::new(*m, *a)),
+        }
+    }
+}
+
+/// Common functional interface of all MAC models.
+///
+/// Contract (property-tested for every implementation):
+/// after `reset()`, a sequence of `step(aᵢ, bᵢ)` followed by `finalize()`
+/// returns `Σ aᵢ·bᵢ` sign-extended from `ACC_WIDTH` bits.
+pub trait MacUnit {
+    /// Clear the accumulator state (start of a new stream / neuron).
+    fn reset(&mut self);
+    /// One multiply-accumulate step (one CDM cycle for TCD).
+    fn step(&mut self, a: i16, b: i16);
+    /// Resolve and return the accumulated dot product
+    /// (the CPM cycle for TCD). The accumulator is left resolved.
+    fn finalize(&mut self) -> i64;
+    /// Monitored-bus toggle count accumulated since construction
+    /// (switching-activity input to the PPA model).
+    fn toggles(&self) -> u64;
+    /// Number of monitored bus bits (to normalize `toggles` into an
+    /// activity factor).
+    fn monitored_bits(&self) -> u64;
+    /// Which design point this is.
+    fn kind(&self) -> MacKind;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitsim::bits::{sext, trunc};
+    use crate::util::{check, SplitMix64};
+
+    fn all_kinds() -> Vec<MacKind> {
+        MacKind::table1_order()
+    }
+
+    /// Exact reference: Σ aᵢ·bᵢ wrapped to ACC_WIDTH then sign-extended.
+    fn reference(stream: &[(i16, i16)]) -> i64 {
+        let s = stream
+            .iter()
+            .fold(0i64, |acc, (a, b)| acc.wrapping_add(*a as i64 * *b as i64));
+        sext(trunc(s, ACC_WIDTH), ACC_WIDTH)
+    }
+
+    #[test]
+    fn all_macs_exact_on_random_streams() {
+        let mut rng = SplitMix64::new(0xC0FFEE);
+        for kind in all_kinds() {
+            let mut mac = kind.build();
+            for len in [0usize, 1, 2, 7, 100] {
+                let stream: Vec<(i16, i16)> =
+                    (0..len).map(|_| (rng.next_i16(), rng.next_i16())).collect();
+                mac.reset();
+                for (a, b) in &stream {
+                    mac.step(*a, *b);
+                }
+                assert_eq!(
+                    mac.finalize(),
+                    reference(&stream),
+                    "{} len={len}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stream_cycles() {
+        assert_eq!(MacKind::Tcd.cycles_for_stream(100), 101);
+        assert_eq!(
+            MacKind::Conv(MultKind::Simple, AdderKind::KoggeStone).cycles_for_stream(100),
+            100
+        );
+    }
+
+    #[test]
+    fn reuse_after_finalize() {
+        for kind in all_kinds() {
+            let mut mac = kind.build();
+            mac.step(100, 200);
+            assert_eq!(mac.finalize(), 20_000, "{}", kind.name());
+            mac.reset();
+            mac.step(-3, 3);
+            assert_eq!(mac.finalize(), -9, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn prop_mac_equals_dot_product() {
+        check::cases_n(0x3AC, 128, |g| {
+            let kind = all_kinds()[g.usize_in(0, 8)];
+            let stream = g.vec_i16_pairs(64);
+            let mut mac = kind.build();
+            for (a, b) in &stream {
+                mac.step(*a, *b);
+            }
+            assert_eq!(mac.finalize(), reference(&stream));
+        });
+    }
+}

@@ -1,0 +1,382 @@
+//! Structural PPA assembly for every Table-I MAC design point.
+//!
+//! Each MAC is described as a pipeline of datapath blocks; each block
+//! carries its gate counts, its own logic depth, and the logic depth of its
+//! *input arrival* — the latter drives the glitch multiplier: blocks fed by
+//! deep, skewed logic (the accumulate CPA of a conventional MAC sits behind
+//! DRU → CEL → product CPA) see far more spurious transitions than blocks
+//! fed from registers (the TCD-MAC's CEL reads the ORU/CBU registers
+//! directly). This is the physically-grounded mechanism behind the paper's
+//! energy win, and it emerges here rather than being hard-coded.
+//!
+//! Switching activity is *measured*, not assumed: [`measure_activity`] runs
+//! the paper's 20K-cycle random-stimulus protocol on the functional models
+//! and normalizes monitored-bus toggles into an activity factor.
+
+use super::{MacKind, ACC_WIDTH, PROD_WIDTH};
+use crate::bitsim::adder::{Adder, AdderKind};
+use crate::bitsim::multiplier::{MultKind, PartialProducts, OP_WIDTH};
+use crate::bitsim::netlist::{Depth, GateCounts};
+use crate::ppa::{PpaReport, TechParams, VoltageDomain};
+use crate::util::SplitMix64;
+
+/// One pipeline stage of a MAC datapath.
+#[derive(Debug, Clone)]
+pub struct DatapathBlock {
+    pub name: &'static str,
+    pub gates: GateCounts,
+    /// The block's own logic depth, τ.
+    pub depth: Depth,
+    /// Arrival depth of its inputs (0 = register outputs), τ.
+    pub input_depth: Depth,
+    /// Fraction of cycles the block switches (1.0 except the TCD-MAC's
+    /// deferred PCPA, which fires once per stream).
+    pub duty: f64,
+    /// Whether the block's depth is on the per-cycle critical path
+    /// (the TCD-MAC's PCPA is not: its latency hides in the extra
+    /// carry-propagation cycle, Fig. 2).
+    pub on_cycle_path: bool,
+}
+
+/// A fully assembled structural model of one MAC design point.
+#[derive(Debug, Clone)]
+pub struct MacPpaModel {
+    pub kind: MacKind,
+    pub blocks: Vec<DatapathBlock>,
+}
+
+/// Synthesis timing-pressure upsizing: designs synthesized at max frequency
+/// with deeper critical paths receive more gate upsizing / buffering.
+/// Linear in depth with a calibrated slope.
+fn upsize_factor(cycle_depth: Depth) -> f64 {
+    1.0 + 0.012 * cycle_depth
+}
+
+/// Glitch multiplier as a function of input-arrival depth: spurious
+/// transitions accumulate roughly linearly with arrival-time skew.
+fn glitch_factor(input_depth: Depth) -> f64 {
+    1.0 + 0.20 * input_depth
+}
+
+/// Default duty of the TCD PCPA in per-cycle energy: one firing per stream;
+/// Table-I characterization uses the paper's stream protocol (~20 steps
+/// between resolutions is conservative for MLP layers with I ≥ 100).
+const TCD_PCPA_DUTY: f64 = 0.05;
+
+/// CEL gate counts from the bit population: each 3:2 compression retires
+/// one bit, so FA count ≈ input bits − output bits (Dadda bound), plus a
+/// row of half-adders for the 2-high remainder columns.
+///
+/// `extra_bits` (the TCD-MAC's re-injected ORU/CBU planes) are charged at
+/// half-adder cost: the paper routes the CB bits into *incomplete*
+/// C_HW(m:n) compressors specifically so the tree does not grow
+/// (§III-A) — the residual cost is the widened upper-region columns.
+fn cel_gates(pp_bits: u64, extra_bits: u64, out_width: u32) -> GateCounts {
+    let bits_out = 2 * out_width as u64;
+    GateCounts {
+        full_adder: pp_bits.saturating_sub(bits_out),
+        half_adder: out_width as u64 / 2 + extra_bits / 2,
+        ..Default::default()
+    }
+}
+
+/// Total partial-product bits for a generator (staggered row widths).
+fn pp_bits(kind: MultKind) -> u64 {
+    let rw = (OP_WIDTH + 1) as u64; // row datapath width before shift
+    match kind {
+        MultKind::Simple => 16 * rw,
+        MultKind::BoothRadix2 => 16 * rw,
+        MultKind::BoothRadix4 => 8 * (rw + 1),
+        MultKind::BoothRadix8 => 6 * (rw + 2),
+    }
+}
+
+impl MacPpaModel {
+    /// Assemble the structural model for a design point.
+    pub fn assemble(kind: MacKind) -> Self {
+        let blocks = match kind {
+            MacKind::Conv(m, a) => Self::conv_blocks(m, a),
+            MacKind::Tcd => Self::tcd_blocks(),
+        };
+        Self { kind, blocks }
+    }
+
+    fn conv_blocks(m: MultKind, a: AdderKind) -> Vec<DatapathBlock> {
+        let pp = PartialProducts::new(m, ACC_WIDTH);
+        let cpa_mul = Adder::new(a, PROD_WIDTH);
+        let cpa_acc = Adder::new(a, ACC_WIDTH);
+        let dru_depth = pp.ppgen_depth();
+        let cel_depth = pp.cel_depth(0);
+        vec![
+            DatapathBlock {
+                name: "DRU",
+                gates: pp.ppgen_gates(),
+                depth: dru_depth,
+                input_depth: 0.0,
+                duty: 1.0,
+                on_cycle_path: true,
+            },
+            DatapathBlock {
+                name: "CEL",
+                gates: cel_gates(pp_bits(m), 0, PROD_WIDTH),
+                depth: cel_depth,
+                input_depth: dru_depth,
+                duty: 1.0,
+                on_cycle_path: true,
+            },
+            DatapathBlock {
+                name: "CPA-mul",
+                gates: cpa_mul.gates(),
+                depth: cpa_mul.depth(),
+                input_depth: dru_depth + cel_depth,
+                duty: 1.0,
+                on_cycle_path: true,
+            },
+            DatapathBlock {
+                name: "CPA-acc",
+                gates: cpa_acc.gates(),
+                depth: cpa_acc.depth(),
+                input_depth: dru_depth + cel_depth + cpa_mul.depth(),
+                duty: 1.0,
+                on_cycle_path: true,
+            },
+            DatapathBlock {
+                name: "regs",
+                gates: GateCounts {
+                    reg: 2 * OP_WIDTH as u64 + ACC_WIDTH as u64,
+                    ..Default::default()
+                },
+                depth: 0.0,
+                input_depth: 0.0,
+                duty: 1.0,
+                on_cycle_path: true,
+            },
+        ]
+    }
+
+    fn tcd_blocks() -> Vec<DatapathBlock> {
+        let pp = PartialProducts::new(MultKind::Simple, ACC_WIDTH);
+        let pcpa = Adder::new(AdderKind::KoggeStone, ACC_WIDTH);
+        let dru_depth = pp.ppgen_depth();
+        // Two extra rows in the tree: the ORU and CBU planes. The CB bits
+        // target incomplete compressor columns (paper §III-A) so the level
+        // count barely moves; the bit population grows by the plane bits,
+        // and steering them into the right incomplete columns costs one
+        // mux level (+2τ).
+        let cel_depth = pp.cel_depth(2) + 2.0;
+        vec![
+            DatapathBlock {
+                name: "DRU",
+                gates: pp.ppgen_gates(),
+                depth: dru_depth,
+                input_depth: 0.0,
+                duty: 1.0,
+                on_cycle_path: true,
+            },
+            DatapathBlock {
+                name: "CEL",
+                gates: cel_gates(pp_bits(MultKind::Simple), 2 * ACC_WIDTH as u64, ACC_WIDTH),
+                depth: cel_depth,
+                input_depth: dru_depth,
+                duty: 1.0,
+                on_cycle_path: true,
+            },
+            DatapathBlock {
+                name: "GEN",
+                gates: GateCounts {
+                    simple: ACC_WIDTH as u64,
+                    xor: ACC_WIDTH as u64,
+                    ..Default::default()
+                },
+                depth: 1.0,
+                input_depth: dru_depth + cel_depth,
+                duty: 1.0,
+                on_cycle_path: true,
+            },
+            DatapathBlock {
+                name: "PCPA",
+                gates: pcpa.gates(),
+                // The PCPA's own depth minus the GEN layer it shares.
+                depth: pcpa.pcpa_depth(),
+                input_depth: 0.0, // reads ORU/CBU registers
+                duty: TCD_PCPA_DUTY,
+                on_cycle_path: false, // hidden in the extra CPM cycle
+            },
+            DatapathBlock {
+                name: "regs",
+                // input regs + ORU + CBU (the carry-buffer unit is the
+                // TCD-MAC's extra state).
+                gates: GateCounts {
+                    reg: 2 * OP_WIDTH as u64 + 2 * ACC_WIDTH as u64,
+                    ..Default::default()
+                },
+                depth: 0.0,
+                input_depth: 0.0,
+                duty: 1.0,
+                on_cycle_path: true,
+            },
+        ]
+    }
+
+    /// Per-cycle critical-path depth (τ) — sets the clock.
+    pub fn cycle_depth(&self) -> Depth {
+        let logic: Depth = self
+            .blocks
+            .iter()
+            .filter(|b| b.on_cycle_path)
+            .map(|b| b.depth)
+            .sum();
+        // The deferred PCPA must still fit in one (the extra CPM) cycle.
+        let off_path = self
+            .blocks
+            .iter()
+            .filter(|b| !b.on_cycle_path)
+            .map(|b| b.depth)
+            .fold(0.0, f64::max);
+        logic.max(off_path)
+    }
+
+    /// Total NAND2-equivalents including timing-pressure upsizing.
+    pub fn nand2_total(&self) -> f64 {
+        let raw: f64 = self.blocks.iter().map(|b| b.gates.nand2_equiv()).sum();
+        raw * upsize_factor(self.cycle_depth())
+    }
+
+    /// Per-cycle switched NAND2-equivalents at activity factor `alpha`,
+    /// including the per-block glitch multipliers.
+    pub fn switched_nand2_per_cycle(&self, alpha: f64) -> f64 {
+        self.blocks
+            .iter()
+            .map(|b| alpha * b.gates.nand2_equiv() * glitch_factor(b.input_depth) * b.duty)
+            .sum()
+    }
+
+    /// Full PPA report at the PE voltage domain.
+    pub fn report(&self, tech: &TechParams, alpha: f64) -> PpaReport {
+        let dom = VoltageDomain::PE;
+        let delay_ns = tech.delay_ns(self.cycle_depth(), dom);
+        let nand2 = self.nand2_total();
+        let area_um2 = tech.area_um2(nand2);
+        let e_cycle_pj = tech.dyn_energy_pj(self.switched_nand2_per_cycle(alpha), dom);
+        let leak_uw = tech.leak_uw(nand2, dom);
+        // pJ per ns == mW; power averaged at fmax.
+        let power_uw = e_cycle_pj / delay_ns * 1000.0 + leak_uw;
+        PpaReport {
+            name: self.kind.name(),
+            area_um2,
+            power_uw,
+            delay_ns,
+        }
+    }
+}
+
+/// The paper's power protocol: 20K cycles of random input data.
+pub const ACTIVITY_CYCLES: usize = 20_000;
+
+/// Measure the switching-activity factor of a MAC design point by running
+/// the functional model on `cycles` random 16-bit input pairs (streams of
+/// 64 with a resolution between streams, matching the OS dataflow) and
+/// normalizing the monitored-bus toggle count.
+pub fn measure_activity(kind: MacKind, cycles: usize, seed: u64) -> f64 {
+    let mut mac = kind.build();
+    let mut rng = SplitMix64::new(seed);
+    let mut i = 0usize;
+    while i < cycles {
+        mac.reset();
+        for _ in 0..64.min(cycles - i) {
+            mac.step(rng.next_i16(), rng.next_i16());
+            i += 1;
+        }
+        mac.finalize();
+    }
+    mac.toggles() as f64 / mac.monitored_bits().max(1) as f64
+}
+
+/// PPA of one design point (activity measured with the default protocol).
+pub fn mac_ppa(kind: MacKind) -> PpaReport {
+    let model = MacPpaModel::assemble(kind);
+    let alpha = measure_activity(kind, ACTIVITY_CYCLES, 0x7C0_FFEE);
+    model.report(&TechParams::DEFAULT, alpha)
+}
+
+/// Regenerate Table I: all eight conventional MACs plus the TCD-MAC,
+/// in the paper's row order.
+pub fn table1_reports() -> Vec<PpaReport> {
+    MacKind::table1_order().into_iter().map(mac_ppa).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ppa::paper;
+
+    #[test]
+    fn tcd_has_shortest_cycle() {
+        let tcd = MacPpaModel::assemble(MacKind::Tcd).cycle_depth();
+        for kind in MacKind::table1_order() {
+            if kind != MacKind::Tcd {
+                let d = MacPpaModel::assemble(kind).cycle_depth();
+                assert!(tcd < d, "TCD {tcd} vs {} {d}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tcd_has_smallest_area() {
+        let reports = table1_reports();
+        let tcd = reports.last().unwrap();
+        for r in &reports[..reports.len() - 1] {
+            assert!(tcd.area_um2 < r.area_um2, "TCD vs {}", r.name);
+        }
+    }
+
+    #[test]
+    fn tcd_pdp_improvement_in_paper_band() {
+        // Paper §IV-B: "46% to 62% improvement in PDP". Our analytic
+        // substrate over-credits the TCD-MAC by ~10–15pp (its conventional
+        // baselines pay two fully-glitching CPAs per cycle, where real
+        // layout absorbs part of that in sizing) — see EXPERIMENTS.md §E1.
+        // Band: paper's claim −12pp / +18pp.
+        let reports = table1_reports();
+        let tcd = *reports.last().unwrap();
+        for r in &reports[..reports.len() - 1] {
+            let imp = tcd.pdp_improvement_pct(r);
+            assert!(
+                (paper::claims::PDP_IMPROVEMENT_PCT.0 - 12.0
+                    ..=paper::claims::PDP_IMPROVEMENT_PCT.1 + 18.0)
+                    .contains(&imp),
+                "PDP improvement vs {} = {imp:.1}%",
+                r.name
+            );
+        }
+    }
+
+    #[test]
+    fn delays_land_near_paper() {
+        // Delay columns within ±35% of Table I per design point.
+        let reports = table1_reports();
+        for (r, p) in reports.iter().zip(paper::TABLE1) {
+            assert_eq!(r.name, p.name);
+            let rel = (r.delay_ns - p.delay_ns).abs() / p.delay_ns;
+            assert!(rel < 0.35, "{}: {} vs paper {}", r.name, r.delay_ns, p.delay_ns);
+        }
+    }
+
+    #[test]
+    fn ks_faster_than_bk_everywhere() {
+        use crate::bitsim::{AdderKind::*, MultKind::*};
+        for m in [Simple, BoothRadix2, BoothRadix4, BoothRadix8] {
+            let ks = MacPpaModel::assemble(MacKind::Conv(m, KoggeStone)).cycle_depth();
+            let bk = MacPpaModel::assemble(MacKind::Conv(m, BrentKung)).cycle_depth();
+            assert!(ks < bk);
+        }
+    }
+
+    #[test]
+    fn activity_factor_sane() {
+        for kind in MacKind::table1_order() {
+            let a = measure_activity(kind, 2_000, 1);
+            assert!(a > 0.05 && a < 0.95, "{}: alpha={a}", kind.name());
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! The Temporal-Carry-deferring MAC (paper §III-A, Fig. 1B).
+//!
+//! State: two `ACC_WIDTH`-bit planes — the output register (ORU, holding
+//! the propagate/sum bits) and the carry-buffer unit (CBU, holding the
+//! deferred generate bits, already shifted into their target significance).
+//!
+//! Carry-Deferring Mode (one `step`):
+//! 1. DRU forms the partial-product rows of `a·b` (AND-array rows with the
+//!    paper's eq. 1 two's-complement correction row for signed inputs);
+//! 2. the CEL compresses `[rows…, ORU, CBU]` to two rows `(s, c)`;
+//! 3. the GEN layer computes `p = s ^ c`, `g = s & c`; `p` is written to
+//!    the ORU and `g << 1` to the CBU — the temporal carry. No carry chain
+//!    is traversed.
+//!
+//! Carry-Propagation Mode (`finalize`): one extra cycle runs the deferred
+//! PCPA over (ORU, CBU), producing the exact accumulated value.
+//!
+//! Invariant after every step: `ORU + CBU ≡ Σ aᵢ·bᵢ (mod 2^ACC_WIDTH)`.
+
+use super::{MacKind, MacUnit, ACC_WIDTH};
+use crate::bitsim::adder::{Adder, AdderKind};
+use crate::bitsim::bits::{mask, sext, toggles};
+use crate::bitsim::compressor::cel_reduce_in_place;
+use crate::bitsim::multiplier::{MultKind, PartialProducts};
+
+/// Functional + activity-counting model of the TCD-MAC.
+#[derive(Debug, Clone)]
+pub struct TcdMac {
+    dru: PartialProducts,
+    /// Final-cycle CPA (the PCPA). Kogge-Stone, as the fastest choice —
+    /// its latency is off the per-cycle critical path anyway.
+    pcpa: Adder,
+    /// Output register unit: the propagate/sum plane.
+    oru: u64,
+    /// Carry buffer unit: the deferred generate plane.
+    cbu: u64,
+    toggle_count: u64,
+    cycles: u64,
+    /// Reused row buffer for the per-step compression (§Perf: avoids two
+    /// heap allocations per CDM cycle).
+    scratch: Vec<u64>,
+}
+
+impl TcdMac {
+    pub fn new() -> Self {
+        Self {
+            dru: PartialProducts::new(MultKind::Simple, ACC_WIDTH),
+            pcpa: Adder::new(AdderKind::KoggeStone, ACC_WIDTH),
+            oru: 0,
+            cbu: 0,
+            toggle_count: 0,
+            cycles: 0,
+            scratch: Vec::with_capacity(20),
+        }
+    }
+
+    /// Redundant accumulator value (what the planes currently encode).
+    pub fn redundant_value(&self) -> u64 {
+        self.oru.wrapping_add(self.cbu) & mask(ACC_WIDTH)
+    }
+
+    /// Raw planes, for tests and for the NPE datapath traces.
+    pub fn planes(&self) -> (u64, u64) {
+        (self.oru, self.cbu)
+    }
+
+    /// Number of CDM + CPM cycles executed.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+}
+
+impl Default for TcdMac {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MacUnit for TcdMac {
+    fn reset(&mut self) {
+        self.oru = 0;
+        self.cbu = 0;
+    }
+
+    fn step(&mut self, a: i16, b: i16) {
+        // DRU: partial products of this input pair (reused buffer).
+        let mut rows = std::mem::take(&mut self.scratch);
+        self.dru.rows_into(a, b, &mut rows);
+        // Temporal injection: previous sum plane and deferred carries enter
+        // the compression tree as two extra rows (the paper injects the CBU
+        // bits into incomplete C_HW(m:n) columns; value-wise identical).
+        rows.push(self.oru);
+        rows.push(self.cbu);
+        let (s, c) = cel_reduce_in_place(&mut rows, ACC_WIDTH);
+        self.scratch = rows;
+        // GEN layer only — the carry chain (PCPA) is *not* traversed.
+        let gp = self.pcpa.gen_split(s, c);
+        let new_oru = gp.p;
+        let new_cbu = (gp.g << 1) & mask(ACC_WIDTH);
+        self.toggle_count +=
+            (toggles(self.oru, new_oru) + toggles(self.cbu, new_cbu)) as u64;
+        self.oru = new_oru;
+        self.cbu = new_cbu;
+        self.cycles += 1;
+    }
+
+    fn finalize(&mut self) -> i64 {
+        // CPM cycle: resolve the deferred carries through the PCPA.
+        let gp = self.pcpa.gen_split(self.oru, self.cbu);
+        let resolved = self.pcpa.pcpa(gp);
+        self.toggle_count += toggles(self.oru, resolved) as u64 + self.cbu.count_ones() as u64;
+        self.oru = resolved;
+        self.cbu = 0;
+        self.cycles += 1;
+        sext(resolved, ACC_WIDTH)
+    }
+
+    fn toggles(&self) -> u64 {
+        self.toggle_count
+    }
+
+    fn monitored_bits(&self) -> u64 {
+        self.cycles * 2 * ACC_WIDTH as u64
+    }
+
+    fn kind(&self) -> MacKind {
+        MacKind::Tcd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitsim::bits::trunc;
+    use crate::util::check;
+
+    #[test]
+    fn redundant_invariant_every_cycle() {
+        let mut mac = TcdMac::new();
+        let stream = [(1000i16, -2000i16), (-3, 7), (i16::MAX, i16::MAX), (255, -1)];
+        let mut acc = 0i64;
+        for (a, b) in stream {
+            mac.step(a, b);
+            acc = acc.wrapping_add(a as i64 * b as i64);
+            assert_eq!(
+                mac.redundant_value(),
+                trunc(acc, ACC_WIDTH),
+                "redundant planes must encode the exact running sum"
+            );
+        }
+        assert_eq!(mac.finalize(), acc);
+    }
+
+    #[test]
+    fn intermediate_oru_is_approximate_but_correctable() {
+        // The paper's point: the ORU alone (the "approximate sum") differs
+        // from the true sum, but ORU + CBU is always exact.
+        let mut mac = TcdMac::new();
+        mac.step(255, 255);
+        mac.step(255, 255);
+        let (oru, cbu) = mac.planes();
+        let truth = 2i64 * 255 * 255;
+        // With ≥2 accumulations some carries are still deferred.
+        assert_ne!(oru as i64, truth, "ORU alone should be approximate here");
+        assert_eq!((oru.wrapping_add(cbu)) & mask(ACC_WIDTH), truth as u64);
+        assert_eq!(mac.finalize(), truth);
+    }
+
+    #[test]
+    fn cpm_cycle_counts() {
+        let mut mac = TcdMac::new();
+        for _ in 0..10 {
+            mac.step(1, 1);
+        }
+        mac.finalize();
+        assert_eq!(mac.cycles(), 11, "N CDM cycles + 1 CPM cycle");
+    }
+
+    #[test]
+    fn zero_stream() {
+        let mut mac = TcdMac::new();
+        assert_eq!(mac.finalize(), 0);
+    }
+
+    #[test]
+    fn prop_planes_always_encode_truth() {
+        check::cases(0x7CD, |g| {
+            let mut stream = g.vec_i16_pairs(127);
+            stream.push((g.i16(), g.i16()));
+            let mut mac = TcdMac::new();
+            let mut acc = 0i64;
+            for (a, b) in &stream {
+                mac.step(*a, *b);
+                acc = acc.wrapping_add(*a as i64 * *b as i64);
+                assert_eq!(mac.redundant_value(), trunc(acc, ACC_WIDTH));
+            }
+            assert_eq!(mac.finalize(), sext(trunc(acc, ACC_WIDTH), ACC_WIDTH));
+        });
+    }
+}

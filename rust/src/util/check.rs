@@ -1,0 +1,116 @@
+//! `checkit` — a minimal property-testing helper (stand-in for `proptest`,
+//! which is not in the offline crate set).
+//!
+//! [`cases`] drives a closure with a deterministic [`SplitMix64`] stream for
+//! a fixed number of cases; generators for the common input shapes live on
+//! [`Gen`]. Failures report the case index and seed so a run is exactly
+//! reproducible with `Gen::replay`.
+
+use super::SplitMix64;
+
+/// Number of cases run by default for randomized properties.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Input generator wrapping the deterministic RNG.
+pub struct Gen {
+    rng: SplitMix64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed) }
+    }
+
+    pub fn i16(&mut self) -> i16 {
+        // Mix uniform values with corner cases: corners trigger most
+        // arithmetic bugs (sign handling, i16::MIN negation, saturation).
+        match self.rng.next_u64() % 8 {
+            0 => *[0i16, 1, -1, i16::MAX, i16::MIN, 255, -256, 0x4000]
+                .get((self.rng.next_u64() % 8) as usize)
+                .unwrap(),
+            _ => self.rng.next_i16(),
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn width(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + (self.rng.next_u64() % (hi - lo + 1) as u64) as u32
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.next_below(hi - lo + 1)
+    }
+
+    pub fn vec_i16_pairs(&mut self, max_len: usize) -> Vec<(i16, i16)> {
+        let len = self.rng.next_below(max_len + 1);
+        (0..len).map(|_| (self.i16(), self.i16())).collect()
+    }
+
+    pub fn vec_u64(&mut self, max_len: usize) -> Vec<u64> {
+        let len = self.rng.next_below(max_len + 1);
+        (0..len).map(|_| self.rng.next_u64()).collect()
+    }
+}
+
+/// Run `f` for [`DEFAULT_CASES`] deterministic random cases.
+/// Panics (with the failing case index) on the first assertion failure.
+pub fn cases(seed: u64, f: impl FnMut(&mut Gen)) {
+    cases_n(seed, DEFAULT_CASES, f)
+}
+
+/// Run `f` for `n` deterministic random cases.
+pub fn cases_n(seed: u64, n: usize, mut f: impl FnMut(&mut Gen)) {
+    for i in 0..n {
+        let case_seed = seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(case_seed);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            eprintln!("checkit: case {i}/{n} failed (replay seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_replay() {
+        let mut seen = Vec::new();
+        cases_n(7, 16, |g| {
+            let _ = g.i16();
+        });
+        cases_n(7, 16, |g| seen.push(g.u64()));
+        let mut again = Vec::new();
+        cases_n(7, 16, |g| again.push(g.u64()));
+        assert_eq!(seen, again);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        cases_n(1, 8, |g| {
+            assert!(g.u64() % 2 == 0 || g.u64() % 2 == 1);
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn corner_values_appear() {
+        let mut saw_min = false;
+        let mut saw_max = false;
+        cases_n(3, 2048, |g| {
+            match g.i16() {
+                i16::MIN => saw_min = true,
+                i16::MAX => saw_max = true,
+                _ => {}
+            }
+        });
+        assert!(saw_min && saw_max);
+    }
+}

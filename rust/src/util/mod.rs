@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic RNG (mirrored in
+//! `python/compile/rng.py` so both languages generate identical synthetic
+//! weights), and pretty-printing helpers for the table generators.
+
+pub mod check;
+mod rng;
+mod table;
+
+pub use rng::SplitMix64;
+pub use table::TextTable;

@@ -1,0 +1,79 @@
+//! End-to-end scheduler validation: the paper's worked examples (Figs. 5
+//! and 6) and schedule/execution consistency across geometries.
+
+use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry};
+use tcd_npe::model::{MlpTopology, QuantizedMlp};
+use tcd_npe::npe::Controller;
+use tcd_npe::tcdmac::MacKind;
+use tcd_npe::util::check;
+
+#[test]
+fn fig5_all_four_configs_reproduced() {
+    // Γ(3, I, 9) on 6×3: NPE(1,18) → 3 rolls @50%; NPE(6,3) → 3 rolls
+    // @50%; NPE(2,9)/NPE(3,6) → 2 rolls @75% (the paper's Fig. 5 numbers).
+    // The mapper must pick a 2-roll schedule.
+    let mut m = MapperTree::new(NpeGeometry::WALKTHROUGH);
+    let s = m.schedule_layer(Gamma::new(3, 50, 9));
+    assert_eq!(s.total_rolls(), 2);
+    assert!((s.utilization() - 0.75).abs() < 1e-9);
+}
+
+#[test]
+fn fig6_schedule_structure() {
+    // Γ(5, I, 7) on 6×3 → 3 rolls; the BFS event sequence covers all 35
+    // (batch, neuron) pairs with config loads within capacity.
+    let mut m = MapperTree::new(NpeGeometry::WALKTHROUGH);
+    let s = m.schedule_layer(Gamma::new(5, 64, 7));
+    assert_eq!(s.total_rolls(), 3);
+    assert!(s.covers_exactly());
+    let work: usize = s.events.iter().map(|e| e.work()).sum();
+    assert_eq!(work, 35);
+}
+
+#[test]
+fn executed_outputs_match_reference_across_geometries() {
+    // The schedule machinery must be geometry-independent in *values*.
+    let topo = MlpTopology::new(vec![30, 22, 9, 5]);
+    let mlp = QuantizedMlp::synthesize(topo, 17);
+    let inputs = mlp.synth_inputs(7, 23);
+    let expect = mlp.forward_batch(&inputs);
+    for geom in [
+        NpeGeometry::WALKTHROUGH,
+        NpeGeometry::PAPER,
+        NpeGeometry::new(4, 4),
+        NpeGeometry::new(1, 3),
+        NpeGeometry::new(12, 2),
+    ] {
+        let (got, stats) = Controller::new(geom, MacKind::Tcd).run(&mlp, &inputs);
+        assert_eq!(got, expect, "{geom:?}");
+        assert!(stats.rolls > 0);
+    }
+}
+
+#[test]
+fn prop_random_models_random_geometries() {
+    check::cases_n(0xE2E, 40, |g| {
+        let topo = MlpTopology::new(vec![
+            g.usize_in(1, 40),
+            g.usize_in(1, 30),
+            g.usize_in(1, 12),
+        ]);
+        let geom = NpeGeometry::new(g.usize_in(1, 10), g.usize_in(1, 6));
+        let batches = g.usize_in(1, 9);
+        let mlp = QuantizedMlp::synthesize(topo, g.u64());
+        let inputs = mlp.synth_inputs(batches, g.u64());
+        let (got, _) = Controller::new(geom, MacKind::Tcd).run(&mlp, &inputs);
+        assert_eq!(got, mlp.forward_batch(&inputs));
+    });
+}
+
+#[test]
+fn larger_batches_improve_utilization_for_small_models() {
+    // Multi-batch packing is what NPE(K, N) exists for (paper §III-B.1):
+    // B=16 must not be less efficient than B=1 on a small model.
+    let topo = MlpTopology::new(vec![10, 8, 3]);
+    let mut m = MapperTree::new(NpeGeometry::PAPER);
+    let u1 = m.schedule_model(&topo, 1).utilization();
+    let u16 = m.schedule_model(&topo, 16).utilization();
+    assert!(u16 > u1, "B=16 {u16:.2} vs B=1 {u1:.2}");
+}

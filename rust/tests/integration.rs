@@ -1,0 +1,94 @@
+//! Cross-module integration: mapper → controller → dataflows → memory,
+//! end to end on the benchmark zoo (no PJRT required).
+
+use tcd_npe::dataflow::{DataflowEngine, NlrEngine, OsEngine, RnaEngine};
+use tcd_npe::mapper::{MapperTree, NpeGeometry};
+use tcd_npe::memory::NpeMemorySystem;
+use tcd_npe::model::{benchmarks, QuantizedMlp};
+use tcd_npe::npe::Controller;
+use tcd_npe::tcdmac::MacKind;
+
+#[test]
+fn every_benchmark_runs_all_four_dataflows_consistently() {
+    let geom = NpeGeometry::PAPER;
+    for b in benchmarks() {
+        let mlp = QuantizedMlp::synthesize(b.topology.clone(), 1);
+        let inputs = mlp.synth_inputs(3, 2);
+        let expect = mlp.forward_batch(&inputs);
+        let mut engines: Vec<Box<dyn DataflowEngine>> = vec![
+            Box::new(OsEngine::tcd(geom)),
+            Box::new(OsEngine::conventional(geom)),
+            Box::new(NlrEngine::new(geom)),
+            Box::new(RnaEngine::new(geom)),
+        ];
+        for e in engines.iter_mut() {
+            let r = e.execute(&mlp, &inputs);
+            assert_eq!(r.outputs, expect, "{} on {}", r.dataflow, b.dataset);
+            assert!(r.cycles > 0 && r.time_ns > 0.0);
+            assert!(r.energy.total_pj() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn schedules_cover_all_benchmarks_exactly() {
+    let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+    for b in benchmarks() {
+        for batches in [1, 7, 16] {
+            let ms = mapper.schedule_model(&b.topology, batches);
+            assert_eq!(ms.layers.len(), b.topology.n_transitions());
+            for l in &ms.layers {
+                assert!(l.covers_exactly(), "{} B={batches}", b.dataset);
+            }
+            assert!(ms.utilization() > 0.0 && ms.utilization() <= 1.0);
+        }
+    }
+}
+
+#[test]
+fn bitexact_and_fast_paths_agree_on_a_real_benchmark() {
+    // Wine (13:10:3) is small enough for the gate-level path.
+    let b = benchmarks().into_iter().find(|b| b.dataset == "Wine").unwrap();
+    let mlp = QuantizedMlp::synthesize(b.topology.clone(), 3);
+    let inputs = mlp.synth_inputs(6, 4);
+    let (fast, _) = Controller::new(NpeGeometry::PAPER, MacKind::Tcd).run(&mlp, &inputs);
+    let (slow, _) = Controller::new(NpeGeometry::PAPER, MacKind::Tcd)
+        .bitexact(true)
+        .run(&mlp, &inputs);
+    assert_eq!(fast, slow);
+    assert_eq!(fast, mlp.forward_batch(&inputs));
+}
+
+#[test]
+fn memory_traffic_scales_with_model_size() {
+    let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+    let small = benchmarks().into_iter().find(|b| b.dataset == "Wine").unwrap();
+    let large = benchmarks().into_iter().find(|b| b.dataset == "MNIST").unwrap();
+    let t = |b: &tcd_npe::model::Benchmark, mapper: &mut MapperTree| {
+        let mlp = QuantizedMlp::synthesize(b.topology.clone(), 1);
+        let inputs = mlp.synth_inputs(4, 2);
+        let schedule = mapper.schedule_model(&b.topology, 4);
+        let mut mem = NpeMemorySystem::new();
+        mem.account_schedule(&schedule, &mlp, &inputs)
+    };
+    let ts = t(&small, &mut mapper);
+    let tl = t(&large, &mut mapper);
+    assert!(tl.wmem_row_reads > 10 * ts.wmem_row_reads);
+    assert!(tl.dram_bits_in > 10 * ts.dram_bits_in);
+}
+
+#[test]
+fn utilization_improves_with_mapper_vs_naive_single_batch() {
+    // The Algorithm-1 multi-batch packing is the point of the mapper:
+    // for small layers, batching K>1 models per roll beats NPE(1, 128).
+    let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+    let b = benchmarks().into_iter().find(|b| b.dataset == "Iris").unwrap();
+    let ms = mapper.schedule_model(&b.topology, 16);
+    // Naive: one batch at a time, one roll per batch per layer at least.
+    let naive_rolls = 16 * b.topology.n_transitions();
+    assert!(
+        ms.total_rolls() < naive_rolls,
+        "mapper {} vs naive {naive_rolls}",
+        ms.total_rolls()
+    );
+}

@@ -1,0 +1,84 @@
+//! The stack-composition proof: the cycle-accurate NPE simulator (whose
+//! MACs are bit-level carry-save models) and the PJRT-executed HLO lowered
+//! from the JAX/Pallas kernel must agree **bit for bit** on every Table-IV
+//! benchmark.
+//!
+//! Requires `make artifacts` (skips with a message when absent, so plain
+//! `cargo test` works before the Python step).
+
+use tcd_npe::coordinator::{BatcherConfig, Coordinator, PjrtSpec};
+use tcd_npe::dataflow::{DataflowEngine, OsEngine};
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::QuantizedMlp;
+use tcd_npe::runtime::{ArtifactManifest, PjrtRuntime};
+use std::time::Duration;
+
+fn manifest() -> Option<ArtifactManifest> {
+    match ArtifactManifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("artifacts/ missing — run `make artifacts`; skipping PJRT tests");
+            None
+        }
+    }
+}
+
+#[test]
+fn all_artifacts_bit_exact_vs_simulator() {
+    let Some(manifest) = manifest() else { return };
+    let mut rt = PjrtRuntime::new("artifacts").expect("PJRT CPU client");
+    for e in &manifest.entries {
+        rt.load(&e.name, e.batch).unwrap_or_else(|err| panic!("{}: {err}", e.name));
+        let mlp = QuantizedMlp::synthesize(e.topology.clone(), e.seed);
+        let inputs = mlp.synth_inputs(e.batch, e.seed ^ 0xDA7A);
+        let sim = OsEngine::tcd(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        let pjrt = rt.execute(&e.name, &mlp, &inputs).expect("execute");
+        assert_eq!(sim.outputs, pjrt, "{}", e.name);
+        // And both equal the plain reference forward pass.
+        assert_eq!(pjrt, mlp.forward_batch(&inputs), "{} vs reference", e.name);
+    }
+}
+
+#[test]
+fn pjrt_rejects_wrong_batch() {
+    let Some(manifest) = manifest() else { return };
+    let e = &manifest.entries[0];
+    let mut rt = PjrtRuntime::new("artifacts").unwrap();
+    rt.load(&e.name, e.batch).unwrap();
+    let mlp = QuantizedMlp::synthesize(e.topology.clone(), e.seed);
+    let inputs = mlp.synth_inputs(e.batch + 1, 1);
+    assert!(rt.execute(&e.name, &mlp, &inputs).is_err());
+}
+
+#[test]
+fn coordinator_cross_verifies_batches_end_to_end() {
+    let Some(manifest) = manifest() else { return };
+    // Iris is the cheapest artifact.
+    let e = manifest
+        .entries
+        .iter()
+        .find(|e| e.name.starts_with("iris"))
+        .expect("iris artifact");
+    let mlp = QuantizedMlp::synthesize(e.topology.clone(), e.seed);
+    let coord = Coordinator::spawn(
+        mlp.clone(),
+        NpeGeometry::PAPER,
+        BatcherConfig::new(e.batch, Duration::from_millis(20)),
+        Some(PjrtSpec {
+            artifact_dir: "artifacts".into(),
+            artifact: e.name.clone(),
+        }),
+    );
+    let inputs = mlp.synth_inputs(e.batch, 0x5EED);
+    let expect = mlp.forward_batch(&inputs);
+    let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+    for (rx, want) in rxs.into_iter().zip(expect) {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert_eq!(resp.output, want);
+        assert!(resp.verified, "batch must be PJRT-verified");
+    }
+    let m = coord.metrics.lock().unwrap().clone();
+    assert!(m.verified_batches >= 1);
+    drop(m);
+    coord.shutdown().unwrap();
+}
