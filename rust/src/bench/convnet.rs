@@ -1,0 +1,122 @@
+//! Conv-workload table: round counts, execution time and energy of the
+//! im2col-lowered CNN zoo on TCD-MAC vs conventional-MAC dataflows —
+//! the CNN companion to the Fig. 10 comparison.
+
+use crate::conv::{im2col_expansion, lower_cnn, CnnEngine, QuantizedCnn};
+use crate::dataflow::DataflowReport;
+use crate::mapper::{MapperTree, NpeGeometry};
+use crate::model::zoo::cnn_benchmarks;
+use crate::util::TextTable;
+
+/// Default batch count for the conv sweeps (same spirit as Fig. 10's
+/// `FIG10_BATCHES`, kept small because conv GEMMs carry B·P rows).
+pub const CONV_BATCHES: usize = 4;
+
+/// One (CNN benchmark × MAC kind) measurement.
+#[derive(Debug, Clone)]
+pub struct ConvRow {
+    pub network: &'static str,
+    pub dataset: &'static str,
+    pub report: DataflowReport,
+    /// Algorithm-1 rolls across all lowered GEMMs.
+    pub rolls: usize,
+    /// FM-Mem read amplification of the im2col lowering.
+    pub im2col_expansion: f64,
+}
+
+/// Run the CNN zoo on the TCD and best-conventional MAC dataflows.
+pub fn conv_rows(batches: usize) -> Vec<ConvRow> {
+    let geom = NpeGeometry::PAPER;
+    let mut out = Vec::new();
+    for b in cnn_benchmarks() {
+        let cnn = QuantizedCnn::synthesize(b.topology.clone(), 0xC0DE);
+        let inputs = cnn.synth_inputs(batches, 0xDA7A);
+        // Throwaway lowering just for roll counts: the mapper DP is
+        // memoized and costs microseconds, so sharing state with the
+        // engines' internal trees isn't worth coupling them.
+        let rolls = lower_cnn(&mut MapperTree::new(geom), &b.topology, batches).total_rolls();
+        let expansion = im2col_expansion(&b.topology);
+        for mut engine in [CnnEngine::tcd(geom), CnnEngine::conventional(geom)] {
+            out.push(ConvRow {
+                network: b.network,
+                dataset: b.dataset,
+                report: engine.execute(&cnn, &inputs),
+                rolls,
+                im2col_expansion: expansion,
+            });
+        }
+    }
+    out
+}
+
+/// Render the conv comparison as a text table (rows arrive in pairs:
+/// TCD first, conventional second).
+pub fn render_conv_table(rows: &[ConvRow], batches: usize) -> String {
+    let mut t = TextTable::new(vec![
+        "Network",
+        "Dataset",
+        "MAC",
+        "Rolls",
+        "Cycles",
+        "Time (us)",
+        "Energy (uJ)",
+        "vs TCD",
+        "im2col reads",
+    ]);
+    for pair in rows.chunks(2) {
+        let tcd_time = pair[0].report.time_ns;
+        for r in pair {
+            t.row(vec![
+                r.network.to_string(),
+                r.dataset.to_string(),
+                r.report.mac.to_string(),
+                r.rolls.to_string(),
+                r.report.cycles.to_string(),
+                format!("{:.1}", r.report.time_us()),
+                format!("{:.2}", r.report.energy_uj()),
+                format!("{:.2}x", r.report.time_ns / tcd_time),
+                format!("{:.1}x", r.im2col_expansion),
+            ]);
+        }
+    }
+    format!("CNN zoo on the 16x8 NPE, B={batches} (im2col lowering)\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcd_wins_on_every_cnn() {
+        // The paper's headline must carry over to the conv workload:
+        // lower time and lower energy than the conventional-MAC NPE.
+        for pair in conv_rows(2).chunks(2) {
+            let (tcd, conv) = (&pair[0], &pair[1]);
+            assert!(tcd.report.dataflow.contains("TCD"));
+            assert!(
+                tcd.report.time_ns < conv.report.time_ns,
+                "{}: TCD {:.0}ns vs conv {:.0}ns",
+                tcd.network,
+                tcd.report.time_ns,
+                conv.report.time_ns
+            );
+            assert!(
+                tcd.report.energy.total_pj() < conv.report.energy.total_pj(),
+                "{}: energy",
+                tcd.network
+            );
+            // Both kinds agree on the math.
+            assert_eq!(tcd.report.outputs, conv.report.outputs);
+            assert_eq!(tcd.rolls, conv.rolls);
+            assert!(tcd.im2col_expansion > 1.0);
+        }
+    }
+
+    #[test]
+    fn render_contains_both_networks() {
+        let s = render_conv_table(&conv_rows(1), 1);
+        assert!(s.contains("LeNet-5"));
+        assert!(s.contains("CifarNet"));
+        assert!(s.contains("TCD-MAC"));
+    }
+}

@@ -4,12 +4,14 @@
 //! renders the paper-shaped text table.
 
 pub mod ablation;
+pub mod convnet;
 pub mod fig10;
 pub mod harness;
 pub mod table1;
 pub mod table2;
 pub mod table3;
 
+pub use convnet::{conv_rows, render_conv_table, ConvRow, CONV_BATCHES};
 pub use fig10::{fig10_rows, render_fig10, Fig10Row};
 pub use harness::BenchTimer;
 pub use table1::{render_table1, table1_rows};

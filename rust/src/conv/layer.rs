@@ -1,0 +1,333 @@
+//! CNN layer descriptors and shape inference.
+//!
+//! A [`CnnTopology`] is a feature-map shape plus an ordered list of
+//! [`CnnLayer`]s (2-D convolutions, 2-D poolings and dense layers). Shape
+//! inference runs at construction time, so an ill-formed network (channel
+//! mismatch, kernel larger than its padded input, …) fails fast instead of
+//! mis-lowering. The conv subsystem turns each parametric layer of a
+//! topology into one Γ(B, I, U) problem (see [`crate::conv::lower`]).
+
+/// A CHW feature-map shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl TensorShape {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        assert!(c > 0 && h > 0 && w > 0, "empty tensor shape");
+        Self { c, h, w }
+    }
+
+    /// Flattened feature count (the FM-Mem words one sample occupies).
+    pub fn features(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Canonical display form, e.g. `1x28x28`.
+    pub fn display(&self) -> String {
+        format!("{}x{}x{}", self.c, self.h, self.w)
+    }
+}
+
+/// A 2-D convolution layer descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dLayer {
+    pub in_channels: usize,
+    pub out_channels: usize,
+    /// Kernel extent `(kh, kw)`.
+    pub kernel: (usize, usize),
+    /// Stride `(sh, sw)`.
+    pub stride: (usize, usize),
+    /// Zero padding `(ph, pw)` applied on both sides of each axis.
+    pub padding: (usize, usize),
+}
+
+impl Conv2dLayer {
+    pub fn new(
+        in_channels: usize,
+        out_channels: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+    ) -> Self {
+        assert!(in_channels > 0 && out_channels > 0, "empty channel count");
+        assert!(kernel.0 > 0 && kernel.1 > 0, "empty kernel");
+        assert!(stride.0 > 0 && stride.1 > 0, "zero stride");
+        Self { in_channels, out_channels, kernel, stride, padding }
+    }
+
+    /// Square-kernel shorthand: `k×k`, stride 1, padding `p`.
+    pub fn square(in_channels: usize, out_channels: usize, k: usize, p: usize) -> Self {
+        Self::new(in_channels, out_channels, (k, k), (1, 1), (p, p))
+    }
+
+    /// Output spatial extent for an `(h, w)` input (floor convention).
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        let (kh, kw) = self.kernel;
+        let (sh, sw) = self.stride;
+        let (ph, pw) = self.padding;
+        assert!(h + 2 * ph >= kh, "kernel height {kh} exceeds padded input {h}+2*{ph}");
+        assert!(w + 2 * pw >= kw, "kernel width {kw} exceeds padded input {w}+2*{pw}");
+        ((h + 2 * ph - kh) / sh + 1, (w + 2 * pw - kw) / sw + 1)
+    }
+
+    /// Full output shape for an input shape (channels must match).
+    pub fn out_shape(&self, input: TensorShape) -> TensorShape {
+        assert_eq!(
+            input.c, self.in_channels,
+            "conv expects {} input channels, feature map has {}",
+            self.in_channels, input.c
+        );
+        let (oh, ow) = self.out_hw(input.h, input.w);
+        TensorShape::new(self.out_channels, oh, ow)
+    }
+
+    /// im2col patch length — the I of the lowered Γ problem.
+    pub fn patch_len(&self) -> usize {
+        self.in_channels * self.kernel.0 * self.kernel.1
+    }
+
+    /// Weight count (`out_channels × patch_len`).
+    pub fn n_weights(&self) -> usize {
+        self.out_channels * self.patch_len()
+    }
+
+    /// MACs for one sample at the given input shape.
+    pub fn macs(&self, input: TensorShape) -> u64 {
+        let out = self.out_shape(input);
+        (out.h * out.w) as u64 * self.patch_len() as u64 * self.out_channels as u64
+    }
+}
+
+/// Pooling flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    /// Average with floor division (arithmetic shift for power-of-two
+    /// windows) — pinned so the NPE pooling unit and the reference agree
+    /// bit-exactly.
+    Avg,
+}
+
+/// A 2-D pooling layer (channel-preserving).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pool2dLayer {
+    pub kind: PoolKind,
+    /// Window extent `(h, w)`.
+    pub size: (usize, usize),
+    /// Stride `(sh, sw)` — typically equal to `size`.
+    pub stride: (usize, usize),
+}
+
+impl Pool2dLayer {
+    pub fn new(kind: PoolKind, size: (usize, usize), stride: (usize, usize)) -> Self {
+        assert!(size.0 > 0 && size.1 > 0, "empty pooling window");
+        assert!(stride.0 > 0 && stride.1 > 0, "zero pooling stride");
+        Self { kind, size, stride }
+    }
+
+    /// Non-overlapping square window shorthand.
+    pub fn square(kind: PoolKind, k: usize) -> Self {
+        Self::new(kind, (k, k), (k, k))
+    }
+
+    /// Output shape (no padding; floor convention).
+    pub fn out_shape(&self, input: TensorShape) -> TensorShape {
+        assert!(input.h >= self.size.0 && input.w >= self.size.1, "pool window exceeds input");
+        TensorShape::new(
+            input.c,
+            (input.h - self.size.0) / self.stride.0 + 1,
+            (input.w - self.size.1) / self.stride.1 + 1,
+        )
+    }
+}
+
+/// One CNN layer. Dense layers implicitly flatten their input feature map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CnnLayer {
+    Conv(Conv2dLayer),
+    Pool(Pool2dLayer),
+    Dense { out: usize },
+}
+
+/// A full CNN topology: input shape plus the layer stack.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CnnTopology {
+    pub input: TensorShape,
+    pub layers: Vec<CnnLayer>,
+}
+
+impl CnnTopology {
+    /// Build and validate: shape inference must succeed through the whole
+    /// stack, and the network must end in at least one parametric layer.
+    pub fn new(input: TensorShape, layers: Vec<CnnLayer>) -> Self {
+        let topo = Self { input, layers };
+        let shapes = topo.shapes(); // panics on any mismatch
+        assert!(!shapes.is_empty(), "topology needs at least one layer");
+        assert!(topo.n_parametric() > 0, "topology needs a parametric layer");
+        topo
+    }
+
+    /// Walk the layer stack with shape inference: one
+    /// `(layer, in_shape, out_shape)` triple per layer. The single source
+    /// of shape threading — every consumer (weight synthesis, lowering,
+    /// traffic, MAC counting) iterates this instead of re-deriving shapes.
+    pub fn layers_with_shapes(&self) -> Vec<(CnnLayer, TensorShape, TensorShape)> {
+        let mut shape = self.input;
+        self.layers
+            .iter()
+            .map(|&l| {
+                let input = shape;
+                shape = match &l {
+                    CnnLayer::Conv(c) => c.out_shape(input),
+                    CnnLayer::Pool(p) => p.out_shape(input),
+                    CnnLayer::Dense { out } => TensorShape::new(*out, 1, 1),
+                };
+                (l, input, shape)
+            })
+            .collect()
+    }
+
+    /// Feature-map shape after each layer (dense output is `(out, 1, 1)`).
+    pub fn shapes(&self) -> Vec<TensorShape> {
+        self.layers_with_shapes()
+            .into_iter()
+            .map(|(_, _, out)| out)
+            .collect()
+    }
+
+    /// Output feature count of the last layer.
+    pub fn output_features(&self) -> usize {
+        self.shapes().last().unwrap().features()
+    }
+
+    /// Number of parametric (conv + dense) layers — one weight matrix each.
+    pub fn n_parametric(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| !matches!(l, CnnLayer::Pool(_)))
+            .count()
+    }
+
+    /// Total MACs for one input sample.
+    pub fn macs_per_sample(&self) -> u64 {
+        self.layers_with_shapes()
+            .into_iter()
+            .map(|(l, input, _)| match l {
+                CnnLayer::Conv(c) => c.macs(input),
+                CnnLayer::Pool(_) => 0,
+                CnnLayer::Dense { out } => (input.features() * out) as u64,
+            })
+            .sum()
+    }
+
+    /// Total weights across parametric layers.
+    pub fn n_weights(&self) -> u64 {
+        self.layers_with_shapes()
+            .into_iter()
+            .map(|(l, input, _)| match l {
+                CnnLayer::Conv(c) => c.n_weights() as u64,
+                CnnLayer::Pool(_) => 0,
+                CnnLayer::Dense { out } => (input.features() * out) as u64,
+            })
+            .sum()
+    }
+
+    /// Canonical display, e.g.
+    /// `1x28x28 > conv6@5x5 > avgpool2 > conv16@5x5 > avgpool2 > fc120 > fc84 > fc10`.
+    pub fn display(&self) -> String {
+        let mut parts = vec![self.input.display()];
+        for l in &self.layers {
+            parts.push(match l {
+                CnnLayer::Conv(c) => {
+                    format!("conv{}@{}x{}", c.out_channels, c.kernel.0, c.kernel.1)
+                }
+                CnnLayer::Pool(p) => match p.kind {
+                    PoolKind::Max => format!("maxpool{}", p.size.0),
+                    PoolKind::Avg => format!("avgpool{}", p.size.0),
+                },
+                CnnLayer::Dense { out } => format!("fc{out}"),
+            });
+        }
+        parts.join(" > ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lenet_like() -> CnnTopology {
+        CnnTopology::new(
+            TensorShape::new(1, 28, 28),
+            vec![
+                CnnLayer::Conv(Conv2dLayer::square(1, 6, 5, 2)),
+                CnnLayer::Pool(Pool2dLayer::square(PoolKind::Avg, 2)),
+                CnnLayer::Conv(Conv2dLayer::square(6, 16, 5, 0)),
+                CnnLayer::Pool(Pool2dLayer::square(PoolKind::Avg, 2)),
+                CnnLayer::Dense { out: 120 },
+                CnnLayer::Dense { out: 84 },
+                CnnLayer::Dense { out: 10 },
+            ],
+        )
+    }
+
+    #[test]
+    fn conv_shape_inference() {
+        let c = Conv2dLayer::square(1, 6, 5, 2);
+        assert_eq!(c.out_hw(28, 28), (28, 28));
+        let c = Conv2dLayer::square(6, 16, 5, 0);
+        assert_eq!(c.out_hw(14, 14), (10, 10));
+        let strided = Conv2dLayer::new(3, 8, (3, 3), (2, 2), (1, 1));
+        assert_eq!(strided.out_hw(32, 32), (16, 16));
+    }
+
+    #[test]
+    fn lenet_shapes_are_the_classic_ones() {
+        let shapes = lenet_like().shapes();
+        assert_eq!(shapes[0], TensorShape::new(6, 28, 28));
+        assert_eq!(shapes[1], TensorShape::new(6, 14, 14));
+        assert_eq!(shapes[2], TensorShape::new(16, 10, 10));
+        assert_eq!(shapes[3], TensorShape::new(16, 5, 5));
+        assert_eq!(shapes[3].features(), 400);
+        assert_eq!(shapes[4], TensorShape::new(120, 1, 1));
+        assert_eq!(shapes.last().unwrap().features(), 10);
+    }
+
+    #[test]
+    fn parametric_count_and_weights() {
+        let t = lenet_like();
+        assert_eq!(t.n_parametric(), 5);
+        // conv1 6·25 + conv2 16·150 + fc 400·120 + 120·84 + 84·10
+        assert_eq!(t.n_weights(), 150 + 2400 + 48000 + 10080 + 840);
+        assert!(t.macs_per_sample() > t.n_weights());
+    }
+
+    #[test]
+    fn display_mentions_every_layer() {
+        let s = lenet_like().display();
+        assert!(s.contains("1x28x28"));
+        assert!(s.contains("conv6@5x5"));
+        assert!(s.contains("avgpool2"));
+        assert!(s.contains("fc10"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn channel_mismatch_panics() {
+        CnnTopology::new(
+            TensorShape::new(3, 8, 8),
+            vec![CnnLayer::Conv(Conv2dLayer::square(1, 4, 3, 0))],
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_kernel_panics() {
+        let c = Conv2dLayer::square(1, 1, 9, 0);
+        c.out_hw(4, 4);
+    }
+}

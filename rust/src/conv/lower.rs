@@ -1,0 +1,480 @@
+//! Lowering CNN layers onto the Algorithm-1 scheduler, and the
+//! cycle-accurate executor that drives the unchanged NPE core with the
+//! lowered GEMMs.
+//!
+//! The lowering is the im2col identity: a conv layer over `B` samples with
+//! `P` output pixels, patch length `I = c·kh·kw` and `U` output channels
+//! is exactly the layer problem Γ(B·P, I, U) — every output pixel of every
+//! sample is an independent "batch row" of a dense layer whose weight
+//! matrix is the flattened kernel bank. Dense layers lower to the familiar
+//! Γ(B, I, U); pooling runs in the activation/output path and schedules no
+//! rolls. The mapper, LDN, PE array and controller are untouched.
+
+use super::im2col::{im2col, im2col_traffic, Im2colTraffic};
+use super::layer::{CnnLayer, CnnTopology, Pool2dLayer, PoolKind, TensorShape};
+use super::QuantizedCnn;
+use crate::dataflow::{cached_mac_ppa, pe_array_leak_uw, DataflowReport, EnergyBreakdown};
+use crate::mapper::schedule::bfs_events;
+use crate::mapper::{Gamma, LayerSchedule, MapperTree, ModelSchedule, NpeGeometry};
+use crate::memory::NpeMemorySystem;
+use crate::model::{MlpTopology, QuantizedMlp};
+use crate::npe::{ActivationUnit, ExecutionStats, PeArray};
+use crate::ppa::TechParams;
+use crate::tcdmac::MacKind;
+
+/// One compute layer after lowering (pooling layers lower to nothing).
+#[derive(Debug, Clone)]
+pub struct LoweredLayer {
+    /// Human-readable origin, e.g. `conv 6@5x5` or `fc 120`.
+    pub label: String,
+    /// The Γ(B, I, U) problem this layer became.
+    pub gamma: Gamma,
+    /// Its Algorithm-1 schedule.
+    pub schedule: LayerSchedule,
+    /// Per-sample im2col traffic (conv layers only).
+    pub im2col: Option<Im2colTraffic>,
+}
+
+/// A whole lowered CNN: an ordered list of GEMM problems plus schedules.
+/// (The batch count is baked into each layer's Γ — conv layers carry
+/// `B·P` lowered batch rows, dense layers carry `B`.)
+#[derive(Debug, Clone)]
+pub struct CnnLowering {
+    pub layers: Vec<LoweredLayer>,
+}
+
+impl CnnLowering {
+    /// View as the mapper's [`ModelSchedule`] (what the controller and the
+    /// memory-traffic accounting consume).
+    pub fn model_schedule(&self) -> ModelSchedule {
+        ModelSchedule {
+            layers: self.layers.iter().map(|l| l.schedule.clone()).collect(),
+        }
+    }
+
+    pub fn total_rolls(&self) -> usize {
+        self.layers.iter().map(|l| l.schedule.total_rolls()).sum()
+    }
+
+    pub fn compute_cycles(&self, extra_cycle: bool) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.schedule.compute_cycles(extra_cycle))
+            .sum()
+    }
+}
+
+/// Lower every compute layer of `topo` for a `batches`-sample run.
+pub fn lower_cnn(mapper: &mut MapperTree, topo: &CnnTopology, batches: usize) -> CnnLowering {
+    assert!(batches > 0, "empty batch");
+    let mut layers = Vec::new();
+    for (layer, input, out) in topo.layers_with_shapes() {
+        match layer {
+            CnnLayer::Conv(c) => {
+                let patches = out.h * out.w;
+                let gamma = Gamma::new(batches * patches, c.patch_len(), c.out_channels);
+                layers.push(LoweredLayer {
+                    label: format!("conv {}@{}x{}", c.out_channels, c.kernel.0, c.kernel.1),
+                    gamma,
+                    schedule: mapper.schedule_layer(gamma),
+                    im2col: Some(im2col_traffic(input, &c)),
+                });
+            }
+            CnnLayer::Pool(_) => {}
+            CnnLayer::Dense { out } => {
+                let gamma = Gamma::new(batches, input.features(), out);
+                layers.push(LoweredLayer {
+                    label: format!("fc {out}"),
+                    gamma,
+                    schedule: mapper.schedule_layer(gamma),
+                    im2col: None,
+                });
+            }
+        }
+    }
+    CnnLowering { layers }
+}
+
+/// Aggregate im2col read amplification of a topology (Σ streamed over
+/// Σ unique across conv layers; 1.0 for a pure MLP).
+pub fn im2col_expansion(topo: &CnnTopology) -> f64 {
+    let (mut streamed, mut unique) = (0u64, 0u64);
+    for (layer, input, _) in topo.layers_with_shapes() {
+        if let CnnLayer::Conv(c) = layer {
+            let t = im2col_traffic(input, &c);
+            streamed += t.streamed_words;
+            unique += t.unique_words;
+        }
+    }
+    if unique == 0 {
+        1.0
+    } else {
+        streamed as f64 / unique as f64
+    }
+}
+
+/// 2-D pooling over one quantized CHW feature map (the NPE's pooling
+/// unit sits behind the quantization/ReLU path, so it sees `i16`s).
+pub fn pool2d(input: &[i16], shape: TensorShape, pool: &Pool2dLayer) -> Vec<i16> {
+    assert_eq!(input.len(), shape.features());
+    let out = pool.out_shape(shape);
+    let window = (pool.size.0 * pool.size.1) as i32;
+    let mut next = Vec::with_capacity(out.features());
+    for c in 0..shape.c {
+        let plane = &input[c * shape.h * shape.w..(c + 1) * shape.h * shape.w];
+        for oy in 0..out.h {
+            for ox in 0..out.w {
+                let mut max = i16::MIN;
+                let mut sum = 0i32;
+                for ky in 0..pool.size.0 {
+                    for kx in 0..pool.size.1 {
+                        let v = plane[(oy * pool.stride.0 + ky) * shape.w
+                            + ox * pool.stride.1
+                            + kx];
+                        max = max.max(v);
+                        sum += v as i32;
+                    }
+                }
+                next.push(match pool.kind {
+                    PoolKind::Max => max,
+                    // Floor division (arithmetic-shift semantics for
+                    // power-of-two windows) — pinned for bit-exactness.
+                    PoolKind::Avg => sum.div_euclid(window) as i16,
+                });
+            }
+        }
+    }
+    next
+}
+
+/// The CNN execution engine: im2col-lowered GEMMs on the cycle-accurate
+/// PE array, pooling in the output path — the conv twin of
+/// [`crate::dataflow::OsEngine`].
+pub struct CnnEngine {
+    pub geometry: NpeGeometry,
+    pub kind: MacKind,
+    /// Run the bit-exact MAC models instead of the fast path.
+    pub bitexact: bool,
+}
+
+impl CnnEngine {
+    pub fn new(geometry: NpeGeometry, kind: MacKind) -> Self {
+        Self { geometry, kind, bitexact: false }
+    }
+
+    pub fn tcd(geometry: NpeGeometry) -> Self {
+        Self::new(geometry, MacKind::Tcd)
+    }
+
+    pub fn conventional(geometry: NpeGeometry) -> Self {
+        Self::new(geometry, crate::dataflow::best_conventional())
+    }
+
+    pub fn bitexact(mut self, on: bool) -> Self {
+        self.bitexact = on;
+        self
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            MacKind::Tcd => "CNN im2col (TCD-NPE)",
+            MacKind::Conv(..) => "CNN im2col (conv MAC)",
+        }
+    }
+
+    /// Execute `cnn` over a batch of flattened CHW inputs; returns the
+    /// same report shape the MLP dataflow engines produce.
+    ///
+    /// Outputs are bit-exact against [`QuantizedCnn::forward_batch`]
+    /// (integration-tested): the GEMM rolls accumulate exactly the terms
+    /// of the convolution sums, and quantization/ReLU/pooling are shared.
+    pub fn execute(&mut self, cnn: &QuantizedCnn, inputs: &[Vec<i16>]) -> DataflowReport {
+        let tech = TechParams::DEFAULT;
+        let b = inputs.len();
+        assert!(b > 0, "empty batch");
+        let mut mapper = MapperTree::new(self.geometry);
+        let mut array = PeArray::new(self.geometry, self.kind);
+        let mut stats = ExecutionStats::default();
+        let mut mem = NpeMemorySystem::new();
+        let extra = matches!(self.kind, MacKind::Tcd) as u64;
+        let mut active_mac_cycles = 0u64;
+
+        let n_param = cnn.topology.n_parametric();
+        let mut feats: Vec<Vec<i16>> = inputs.to_vec();
+        let mut pi = 0usize; // parametric-layer index
+
+        for (layer, in_shape, out_shape) in cnn.topology.layers_with_shapes() {
+            match layer {
+                CnnLayer::Conv(c) => {
+                    let patches = out_shape.h * out_shape.w;
+                    // im2col all samples: B·P GEMM rows of patch_len each.
+                    let mut rows = Vec::with_capacity(b * patches);
+                    for f in &feats {
+                        rows.extend(im2col(f, in_shape, &c));
+                    }
+                    let surrogate = gemm_view(c.patch_len(), c.out_channels, cnn, pi);
+                    let rectify = pi + 1 < n_param;
+                    let gemm_out = self.run_gemm(
+                        &mut mapper,
+                        &mut array,
+                        &mut stats,
+                        &mut mem,
+                        &mut active_mac_cycles,
+                        &surrogate,
+                        &rows,
+                        rectify,
+                        extra,
+                    );
+                    // Reshape [row][oc] back to per-sample CHW maps.
+                    let mut next = vec![vec![0i16; out_shape.features()]; b];
+                    for (r, vals) in gemm_out.iter().enumerate() {
+                        let (bi, pix) = (r / patches, r % patches);
+                        for (oc, &v) in vals.iter().enumerate() {
+                            next[bi][oc * patches + pix] = v;
+                        }
+                    }
+                    mem.account_im2col(&im2col_traffic(in_shape, &c), b as u64);
+                    feats = next;
+                    pi += 1;
+                    stats.layer_swaps += 1;
+                }
+                CnnLayer::Pool(p) => {
+                    feats = feats.iter().map(|f| pool2d(f, in_shape, &p)).collect();
+                    stats.layer_swaps += 1;
+                }
+                CnnLayer::Dense { out } => {
+                    let surrogate = gemm_view(in_shape.features(), out, cnn, pi);
+                    let rectify = pi + 1 < n_param;
+                    feats = self.run_gemm(
+                        &mut mapper,
+                        &mut array,
+                        &mut stats,
+                        &mut mem,
+                        &mut active_mac_cycles,
+                        &surrogate,
+                        &feats,
+                        rectify,
+                        extra,
+                    );
+                    pi += 1;
+                    stats.layer_swaps += 1;
+                }
+            }
+        }
+        stats.compute_cycles = array.cycles();
+
+        // DRAM traffic: RLC-compressed weights + inputs in, outputs out.
+        for w in &cnn.weights {
+            mem.account_dram_in(w);
+        }
+        for x in inputs {
+            mem.account_dram_in(x);
+        }
+        for y in &feats {
+            mem.account_dram_out(y);
+        }
+
+        let mac = cached_mac_ppa(self.kind);
+        let cycles = stats.total_cycles();
+        let time_ns = cycles as f64 * mac.delay_ns;
+        let energy = EnergyBreakdown {
+            pe_dynamic_pj: active_mac_cycles as f64 * mac.energy_per_cycle_pj(),
+            pe_leak_pj: pe_array_leak_uw(self.kind, self.geometry.pes()) * time_ns * 1e-3,
+            mem_dynamic_pj: mem.sram_dynamic_pj(&tech),
+            mem_leak_pj: mem.leakage_uw(&tech) * time_ns * 1e-3,
+            dram_pj: mem.dram_pj(&tech),
+        };
+
+        DataflowReport {
+            dataflow: self.name(),
+            mac: self.kind.name(),
+            outputs: feats,
+            cycles,
+            time_ns,
+            energy,
+        }
+    }
+
+    /// Run one lowered GEMM Γ(rows, I, U) on the PE array: mapper-optimal
+    /// roll assignments, streamed exactly like an MLP layer, activation in
+    /// the Fig.-4 output path.
+    ///
+    /// Keep the roll loop in lockstep with [`crate::npe::Controller::run`]
+    /// (same config-switch counting, same bitexact/fast dispatch): the
+    /// two are the cycle model for MLP and CNN traffic respectively.
+    #[allow(clippy::too_many_arguments)]
+    fn run_gemm(
+        &self,
+        mapper: &mut MapperTree,
+        array: &mut PeArray,
+        stats: &mut ExecutionStats,
+        mem: &mut NpeMemorySystem,
+        active_mac_cycles: &mut u64,
+        gemm: &QuantizedMlp,
+        rows: &[Vec<i16>],
+        rectify: bool,
+        extra: u64,
+    ) -> Vec<Vec<i16>> {
+        let n_rows = rows.len();
+        let fan_out = gemm.topology.outputs();
+        let act = ActivationUnit::new(rectify);
+        // One exec tree drives both the executed rolls and the accounted
+        // schedule, so cycles/energy can never desync from what ran.
+        let node = mapper.best(n_rows, fan_out).expect("non-empty GEMM");
+        let sched = LayerSchedule {
+            gamma: Gamma::new(n_rows, gemm.topology.inputs(), fan_out),
+            geometry: self.geometry,
+            events: bfs_events(&node),
+        };
+        let row_ids: Vec<usize> = (0..n_rows).collect();
+        let neuron_ids: Vec<usize> = (0..fan_out).collect();
+        let assignments = node.assignments(&row_ids, &neuron_ids);
+
+        let mut out = vec![vec![0i16; fan_out]; n_rows];
+        let mut last_config = None;
+        for roll in &assignments {
+            if last_config != Some(roll.config) {
+                stats.config_switches += 1;
+                last_config = Some(roll.config);
+            }
+            let results = if self.bitexact {
+                array.run_roll_bitexact(roll, gemm, 0, rows)
+            } else {
+                array.run_roll_fast(roll, gemm, 0, rows)
+            };
+            for r in results {
+                out[r.batch][r.neuron] = act.apply(r.acc);
+            }
+            stats.rolls += 1;
+        }
+
+        // Schedule-level accounting (energy model inputs).
+        let per_pair = sched.gamma.inputs as u64 + extra;
+        *active_mac_cycles += sched
+            .events
+            .iter()
+            .map(|e| e.work() as u64 * per_pair)
+            .sum::<u64>();
+        mem.account_layer_events(&sched);
+        out
+    }
+}
+
+/// A single-transition [`QuantizedMlp`] view of parametric layer `pi` —
+/// lets the unchanged PE array stream conv kernels as a weight matrix.
+///
+/// The weight clone is deliberate: callers may mutate `cnn.weights`
+/// between executes (the tests do), so caching views across calls would
+/// serve stale weights, and the copy is noise next to the GEMM compute.
+fn gemm_view(fan_in: usize, fan_out: usize, cnn: &QuantizedCnn, pi: usize) -> QuantizedMlp {
+    debug_assert_eq!(cnn.weights[pi].len(), fan_in * fan_out);
+    QuantizedMlp {
+        topology: MlpTopology::new(vec![fan_in, fan_out]),
+        weights: vec![cnn.weights[pi].clone()],
+        seed: cnn.seed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::layer::Conv2dLayer;
+
+    fn tiny_cnn() -> QuantizedCnn {
+        QuantizedCnn::synthesize(
+            CnnTopology::new(
+                TensorShape::new(1, 8, 8),
+                vec![
+                    CnnLayer::Conv(Conv2dLayer::square(1, 3, 3, 1)),
+                    CnnLayer::Pool(Pool2dLayer::square(PoolKind::Max, 2)),
+                    CnnLayer::Dense { out: 5 },
+                ],
+            ),
+            42,
+        )
+    }
+
+    #[test]
+    fn lowering_shapes_and_coverage() {
+        let cnn = tiny_cnn();
+        let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        let lowered = lower_cnn(&mut mapper, &cnn.topology, 2);
+        assert_eq!(lowered.layers.len(), 2, "pooling lowers to nothing");
+        // conv: Γ(2·64, 9, 3); fc: Γ(2, 48, 5).
+        assert_eq!(lowered.layers[0].gamma, Gamma::new(128, 9, 3));
+        assert_eq!(lowered.layers[1].gamma, Gamma::new(2, 48, 5));
+        for l in &lowered.layers {
+            assert!(l.schedule.covers_exactly(), "{}", l.label);
+            assert!(l.schedule.total_rolls() > 0);
+        }
+        assert!(lowered.layers[0].im2col.is_some());
+        assert!(lowered.layers[1].im2col.is_none());
+        assert_eq!(
+            lowered.model_schedule().total_rolls(),
+            lowered.total_rolls()
+        );
+        assert!(lowered.compute_cycles(true) > lowered.compute_cycles(false));
+    }
+
+    #[test]
+    fn engine_matches_reference_bit_exactly() {
+        let cnn = tiny_cnn();
+        let inputs = cnn.synth_inputs(3, 7);
+        let expect = cnn.forward_batch(&inputs);
+        let mut engine = CnnEngine::tcd(NpeGeometry::WALKTHROUGH);
+        let report = engine.execute(&cnn, &inputs);
+        assert_eq!(report.outputs, expect);
+        assert!(report.cycles > 0 && report.time_ns > 0.0);
+    }
+
+    #[test]
+    fn bitexact_path_matches_fast_path() {
+        let cnn = tiny_cnn();
+        let inputs = cnn.synth_inputs(2, 9);
+        let fast = CnnEngine::tcd(NpeGeometry::WALKTHROUGH).execute(&cnn, &inputs);
+        let slow = CnnEngine::tcd(NpeGeometry::WALKTHROUGH)
+            .bitexact(true)
+            .execute(&cnn, &inputs);
+        assert_eq!(fast.outputs, slow.outputs);
+        assert_eq!(fast.cycles, slow.cycles);
+    }
+
+    #[test]
+    fn conventional_mac_same_values_different_cycles() {
+        let cnn = tiny_cnn();
+        let inputs = cnn.synth_inputs(2, 11);
+        let tcd = CnnEngine::tcd(NpeGeometry::WALKTHROUGH).execute(&cnn, &inputs);
+        let conv = CnnEngine::conventional(NpeGeometry::WALKTHROUGH).execute(&cnn, &inputs);
+        assert_eq!(tcd.outputs, conv.outputs, "MAC kind never changes math");
+        assert!(tcd.cycles > conv.cycles, "TCD pays one CPM cycle per roll");
+        assert!(tcd.time_ns < conv.time_ns, "but each TCD cycle is faster");
+    }
+
+    #[test]
+    fn pooling_kinds() {
+        let shape = TensorShape::new(1, 2, 2);
+        let p = Pool2dLayer::square(PoolKind::Max, 2);
+        assert_eq!(pool2d(&[1, -5, 3, 2], shape, &p), vec![3]);
+        let p = Pool2dLayer::square(PoolKind::Avg, 2);
+        assert_eq!(pool2d(&[1, -5, 3, 2], shape, &p), vec![0]); // 1/4 floor = 0
+        assert_eq!(pool2d(&[-1, -5, -3, -2], shape, &p), vec![-3]); // -11/4 floor
+    }
+
+    #[test]
+    fn expansion_above_one_for_overlapping_kernels() {
+        let cnn = tiny_cnn();
+        assert!(im2col_expansion(&cnn.topology) > 1.0);
+    }
+
+    #[test]
+    fn energy_components_positive() {
+        let cnn = tiny_cnn();
+        let inputs = cnn.synth_inputs(2, 3);
+        let r = CnnEngine::tcd(NpeGeometry::PAPER).execute(&cnn, &inputs);
+        assert!(r.energy.pe_dynamic_pj > 0.0);
+        assert!(r.energy.pe_leak_pj > 0.0);
+        assert!(r.energy.mem_dynamic_pj > 0.0);
+        assert!(r.energy.mem_leak_pj > 0.0);
+        assert!(r.energy.dram_pj > 0.0);
+    }
+}

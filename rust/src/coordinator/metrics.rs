@@ -4,6 +4,9 @@
 #[derive(Debug, Default, Clone)]
 pub struct CoordinatorMetrics {
     pub requests: u64,
+    /// Requests dropped for carrying the wrong input length (never
+    /// dispatched; the client's response channel disconnects).
+    pub rejected_requests: u64,
     pub batches: u64,
     /// Padding rows added to meet the artifact batch shape.
     pub padded_slots: u64,
@@ -38,8 +41,9 @@ impl CoordinatorMetrics {
     /// One-line log form.
     pub fn render(&self) -> String {
         format!(
-            "requests={} batches={} occupancy={:.2} verified={} avg_sim_latency={:.1}us energy={:.2}uJ",
+            "requests={} rejected={} batches={} occupancy={:.2} verified={} avg_sim_latency={:.1}us energy={:.2}uJ",
             self.requests,
+            self.rejected_requests,
             self.batches,
             self.batch_occupancy(),
             self.verified_batches,

@@ -17,7 +17,8 @@ pub mod metrics;
 pub use batcher::BatcherConfig;
 pub use metrics::CoordinatorMetrics;
 
-use crate::dataflow::{DataflowEngine, OsEngine};
+use crate::conv::{CnnEngine, QuantizedCnn};
+use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
 use crate::mapper::NpeGeometry;
 use crate::model::QuantizedMlp;
 use crate::runtime::PjrtRuntime;
@@ -26,6 +27,23 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// A model the coordinator can serve: the Table-IV MLPs or a conv-zoo
+/// CNN (lowered through the im2col path).
+pub enum ServedModel {
+    Mlp(QuantizedMlp),
+    Cnn(QuantizedCnn),
+}
+
+impl ServedModel {
+    /// Flattened input length one request must carry.
+    pub fn input_len(&self) -> usize {
+        match self {
+            ServedModel::Mlp(m) => m.topology.inputs(),
+            ServedModel::Cnn(c) => c.topology.input.features(),
+        }
+    }
+}
 
 /// One inference request.
 pub struct InferenceRequest {
@@ -69,7 +87,7 @@ enum CoordinatorMsg {
 }
 
 impl Coordinator {
-    /// Spawn the coordinator thread.
+    /// Spawn the coordinator thread for an MLP.
     ///
     /// `pjrt`: an optional artifact spec; when given, the coordinator
     /// thread builds a PJRT runtime and cross-verifies every batch
@@ -80,17 +98,41 @@ impl Coordinator {
         cfg: BatcherConfig,
         pjrt: Option<PjrtSpec>,
     ) -> Self {
+        Self::spawn_model(ServedModel::Mlp(mlp), geometry, cfg, pjrt)
+    }
+
+    /// Spawn the coordinator thread for a CNN: requests carry flattened
+    /// CHW feature maps and execute through the im2col-lowered conv path
+    /// (no PJRT artifacts exist for CNNs yet, so simulator only).
+    pub fn spawn_cnn(cnn: QuantizedCnn, geometry: NpeGeometry, cfg: BatcherConfig) -> Self {
+        Self::spawn_model(ServedModel::Cnn(cnn), geometry, cfg, None)
+    }
+
+    /// Spawn the coordinator thread for any [`ServedModel`].
+    ///
+    /// `pjrt` applies to MLP models only — no CNN artifacts exist, so a
+    /// spec passed with a [`ServedModel::Cnn`] is ignored (no runtime is
+    /// built and batches are neither padded nor reported as verified).
+    pub fn spawn_model(
+        model: ServedModel,
+        geometry: NpeGeometry,
+        cfg: BatcherConfig,
+        pjrt: Option<PjrtSpec>,
+    ) -> Self {
         let (tx, rx) = mpsc::channel::<CoordinatorMsg>();
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
         let metrics_thread = Arc::clone(&metrics);
         let handle = std::thread::spawn(move || {
-            // Build the (non-Send) PJRT runtime inside the thread.
-            let runtime = pjrt.and_then(|spec| {
-                let mut rt = PjrtRuntime::new(&spec.artifact_dir).ok()?;
-                rt.load(&spec.artifact, cfg.batch_size).ok()?;
-                Some((rt, spec.artifact))
-            });
-            run_loop(rx, mlp, geometry, cfg, runtime, metrics_thread);
+            let runtime = match &model {
+                // Build the (non-Send) PJRT runtime inside the thread.
+                ServedModel::Mlp(_) => pjrt.and_then(|spec| {
+                    let mut rt = PjrtRuntime::new(&spec.artifact_dir).ok()?;
+                    rt.load(&spec.artifact, cfg.batch_size).ok()?;
+                    Some((rt, spec.artifact))
+                }),
+                ServedModel::Cnn(_) => None,
+            };
+            run_loop(rx, model, geometry, cfg, runtime, metrics_thread);
         });
         Self { tx, handle: Some(handle), metrics }
     }
@@ -117,32 +159,56 @@ impl Coordinator {
 
 fn run_loop(
     rx: mpsc::Receiver<CoordinatorMsg>,
-    mlp: QuantizedMlp,
+    model: ServedModel,
     geometry: NpeGeometry,
     cfg: BatcherConfig,
     runtime: Option<(PjrtRuntime, String)>,
     metrics: Arc<Mutex<CoordinatorMetrics>>,
 ) {
-    let mut engine = OsEngine::tcd(geometry);
+    let mut mlp_engine = OsEngine::tcd(geometry);
+    let mut cnn_engine = CnnEngine::tcd(geometry);
     let mut pending: Vec<(Instant, InferenceRequest)> = Vec::new();
     let mut shutdown = false;
 
     while !shutdown {
-        // Collect until full batch or deadline.
-        let deadline = Instant::now() + cfg.max_wait;
-        while pending.len() < cfg.batch_size {
+        // Block until traffic arrives (no idle spinning), then collect
+        // until the batch fills or the *oldest request's* deadline
+        // elapses. Anchoring the flush window to first arrival — not to
+        // the loop iteration — guarantees every request a full
+        // `max_wait` of batching opportunity.
+        //
+        // Malformed (wrong-length) requests are rejected in both arms
+        // below: one bad input must not take down the engine (the conv
+        // path asserts on feature-map size). Dropping the request drops
+        // its response sender, so the client's receiver disconnects
+        // immediately instead of hanging.
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(CoordinatorMsg::Request(_, r))
+                    if r.input.len() != model.input_len() =>
+                {
+                    metrics.lock().unwrap().rejected_requests += 1;
+                }
+                Ok(CoordinatorMsg::Request(t, r)) => pending.push((t, r)),
+                Ok(CoordinatorMsg::Shutdown) | Err(_) => shutdown = true,
+            }
+            if pending.is_empty() {
+                continue;
+            }
+        }
+        let deadline = pending[0].0 + cfg.max_wait;
+        while !shutdown && pending.len() < cfg.batch_size {
             let timeout = deadline.saturating_duration_since(Instant::now());
             match rx.recv_timeout(timeout) {
+                Ok(CoordinatorMsg::Request(_, r))
+                    if r.input.len() != model.input_len() =>
+                {
+                    metrics.lock().unwrap().rejected_requests += 1;
+                }
                 Ok(CoordinatorMsg::Request(t, r)) => pending.push((t, r)),
-                Ok(CoordinatorMsg::Shutdown) => {
-                    shutdown = true;
-                    break;
-                }
+                Ok(CoordinatorMsg::Shutdown) => shutdown = true,
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    shutdown = true;
-                    break;
-                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
             }
         }
         if pending.is_empty() {
@@ -155,18 +221,24 @@ fn run_loop(
         let padded_to = if runtime.is_some() {
             let target = cfg.batch_size;
             while inputs.len() < target {
-                inputs.push(vec![0; mlp.topology.inputs()]);
+                inputs.push(vec![0; model.input_len()]);
             }
             target
         } else {
             inputs.len()
         };
 
-        let report = engine.execute(&mlp, &inputs);
+        let report: DataflowReport = match &model {
+            ServedModel::Mlp(mlp) => mlp_engine.execute(mlp, &inputs),
+            ServedModel::Cnn(cnn) => cnn_engine.execute(cnn, &inputs),
+        };
 
-        // Cross-verify on the PJRT path when available.
-        let verified = if let Some((rt, artifact)) = &runtime {
-            match rt.execute(artifact, &mlp, &inputs) {
+        // Cross-verify on the PJRT path when available (MLP artifacts
+        // only — the conv path is covered by the Rust reference model).
+        let verified = if let (Some((rt, artifact)), ServedModel::Mlp(mlp)) =
+            (&runtime, &model)
+        {
+            match rt.execute(artifact, mlp, &inputs) {
                 Ok(pjrt_out) => {
                     assert_eq!(
                         report.outputs, pjrt_out,
@@ -250,6 +322,105 @@ mod tests {
         let metrics = coord.metrics.lock().unwrap().clone();
         assert_eq!(metrics.requests, 8);
         assert!(metrics.batches <= 8, "requests were batched");
+        drop(metrics);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        // The deadline-flush edge case: fewer requests than `batch_size`
+        // arrive, then the deadline elapses — the partial batch must be
+        // dispatched (in one batch, unpadded) without waiting for a full
+        // batch or a shutdown.
+        let m = mlp();
+        let inputs = m.synth_inputs(3, 21);
+        let expect = m.forward_batch(&inputs);
+        let coord = Coordinator::spawn(
+            m.clone(),
+            NpeGeometry::WALKTHROUGH,
+            BatcherConfig { batch_size: 64, max_wait: Duration::from_millis(200) },
+            None,
+        );
+        let t0 = Instant::now();
+        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+        for (rx, want) in rxs.into_iter().zip(expect) {
+            // Responses must arrive via the deadline path (the batch can
+            // never fill, and shutdown has not been requested).
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.output, want);
+        }
+        assert!(
+            t0.elapsed() >= Duration::from_millis(100),
+            "responses should be held until the deadline"
+        );
+        let metrics = coord.metrics.lock().unwrap().clone();
+        assert_eq!(metrics.requests, 3);
+        assert_eq!(metrics.batches, 1, "one partial batch, flushed once");
+        assert_eq!(metrics.padded_slots, 0, "no artifact, no padding");
+        drop(metrics);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn serves_cnn_requests() {
+        use crate::conv::{
+            CnnLayer, CnnTopology, Conv2dLayer, Pool2dLayer, PoolKind, QuantizedCnn,
+            TensorShape,
+        };
+        let cnn = QuantizedCnn::synthesize(
+            CnnTopology::new(
+                TensorShape::new(1, 6, 6),
+                vec![
+                    CnnLayer::Conv(Conv2dLayer::square(1, 4, 3, 1)),
+                    CnnLayer::Pool(Pool2dLayer::square(PoolKind::Max, 2)),
+                    CnnLayer::Dense { out: 4 },
+                ],
+            ),
+            13,
+        );
+        let inputs = cnn.synth_inputs(5, 3);
+        let expect = cnn.forward_batch(&inputs);
+        let coord = Coordinator::spawn_cnn(
+            cnn.clone(),
+            NpeGeometry::WALKTHROUGH,
+            BatcherConfig { batch_size: 5, max_wait: Duration::from_millis(50) },
+        );
+        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+        for (rx, want) in rxs.into_iter().zip(expect) {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.output, want, "served CNN output == reference");
+            assert!(resp.npe_time_ns > 0.0);
+        }
+        let metrics = coord.metrics.lock().unwrap().clone();
+        assert_eq!(metrics.requests, 5);
+        drop(metrics);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn wrong_length_request_is_rejected_not_fatal() {
+        // A malformed request must be dropped (client sees an immediate
+        // disconnect) while the coordinator keeps serving valid traffic.
+        let m = mlp();
+        let coord = Coordinator::spawn(
+            m.clone(),
+            NpeGeometry::WALKTHROUGH,
+            BatcherConfig { batch_size: 2, max_wait: Duration::from_millis(10) },
+            None,
+        );
+        let bad = coord.submit(vec![1; 3]); // expects 16 features
+        assert!(
+            bad.recv_timeout(Duration::from_secs(5)).is_err(),
+            "malformed request gets a disconnect, not a response"
+        );
+        let good_input = m.synth_inputs(1, 5)[0].clone();
+        let expect = m.forward_batch(&[good_input.clone()]);
+        let good = coord.submit(good_input);
+        let resp = good.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.output, expect[0], "service survives the bad request");
+        let metrics = coord.metrics.lock().unwrap().clone();
+        assert_eq!(metrics.rejected_requests, 1, "rejection is observable");
+        assert_eq!(metrics.requests, 1, "only the valid request dispatched");
         drop(metrics);
         coord.shutdown().unwrap();
     }

@@ -17,13 +17,19 @@
 //!   eight conventional MAC baselines of Table I.
 //! * [`mapper`] — Algorithm 1: scheduling B batches of an MLP layer onto
 //!   NPE(K, N) configurations in the minimum number of rolls.
+//! * [`conv`] — the CNN workload subsystem: `Conv2dLayer`/`CnnTopology`
+//!   descriptors, im2col lowering of convolutions onto the same
+//!   Γ(B, I, U) layer-problem abstraction (plus a traffic model of the
+//!   duplicate FM-Mem reads it induces), and the cycle-accurate
+//!   `CnnEngine` executor chaining conv → pool → dense schedules.
 //! * [`memory`] — W-Mem / ping-pong FM-Mem with the Fig. 7 data arrangement,
 //!   row buffers, access counting, and RLC compression for DRAM transfers.
 //! * [`npe`] — the PE array (TCD-MAC groups), LDN multicast network,
 //!   quantization/ReLU unit (Fig. 4) and the controller FSM.
 //! * [`dataflow`] — the four evaluated dataflows of Fig. 9: OS on TCD-MACs,
 //!   OS on conventional MACs, NLR (systolic), and RNA (compute-tree).
-//! * [`model`] — MLP topology descriptions, the Table-IV benchmark zoo and
+//! * [`model`] — MLP topology descriptions, the Table-IV benchmark zoo
+//!   (plus its CNN companion: LeNet-5 and a small CIFAR-10 convnet) and
 //!   signed 16-bit fixed-point tensors.
 //! * [`runtime`] — PJRT executor loading the JAX/Pallas-lowered HLO
 //!   artifacts (`artifacts/*.hlo.txt`) for the numeric reference path.
@@ -34,6 +40,7 @@
 
 pub mod bench;
 pub mod bitsim;
+pub mod conv;
 pub mod coordinator;
 pub mod dataflow;
 pub mod mapper;

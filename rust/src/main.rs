@@ -26,6 +26,7 @@ Paper artifacts:
   table3                     NPE implementation PPA (Table III)
   table4                     benchmark suite (Table IV)
   fig10 [--batches N]        exec time + energy, 4 dataflows x 7 benchmarks
+  conv [--batches N]         CNN zoo (im2col lowering), TCD vs conventional MAC
 
 System:
   schedule <topo> <batches>  Algorithm-1 schedule for an MLP, e.g. 784:700:10 10
@@ -51,6 +52,13 @@ fn main() -> Result<()> {
         }
         "table3" => println!("{}", bench::render_table3()),
         "table4" => println!("{}", bench::render_table4()),
+        "conv" => {
+            let batches = flag_value(&args, "--batches")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(bench::CONV_BATCHES);
+            println!("{}", bench::render_conv_table(&bench::conv_rows(batches), batches));
+        }
         "fig10" => {
             let batches = flag_value(&args, "--batches")
                 .map(|s| s.parse())

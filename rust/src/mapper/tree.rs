@@ -308,6 +308,30 @@ mod tests {
     }
 
     #[test]
+    fn prop_all_small_geometries_match_brute_force() {
+        // Exhaustive property (stronger than sampling): for *every*
+        // geometry up to 6×3 and *every* Γ with B, U ≤ 12, the memoized
+        // recursion must equal the brute-force minimum. Guards the DP
+        // against regressions now that the conv driver feeds it Γ
+        // problems with B·P lowered batch rows.
+        for rows in 1..=6 {
+            for cols in 1..=3 {
+                let geom = NpeGeometry::new(rows, cols);
+                let mut m = MapperTree::new(geom);
+                for b in 1..=12 {
+                    for u in 1..=12 {
+                        assert_eq!(
+                            m.min_rolls(b, u),
+                            brute_min_rolls(&geom, b, u),
+                            "{geom:?} Γ({b}, ·, {u})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn never_worse_than_naive_and_never_below_bound() {
         check::cases_n(0x3A9, 200, |g| {
             let geom = NpeGeometry::new(g.usize_in(1, 8), g.usize_in(1, 8));

@@ -5,7 +5,8 @@ use super::arrangement::{FmArrangement, WMemArrangement};
 use super::rlc::rlc_compress_len;
 use super::sram::SramBank;
 use super::{FMMEM_BYTES, FMMEM_ROW_WORDS, WMEM_BYTES, WMEM_ROW_WORDS};
-use crate::mapper::ModelSchedule;
+use crate::conv::Im2colTraffic;
+use crate::mapper::{LayerSchedule, ModelSchedule};
 use crate::model::QuantizedMlp;
 use crate::ppa::TechParams;
 
@@ -18,6 +19,10 @@ pub struct MemoryTraffic {
     pub fm_row_reads: u64,
     /// FM-Mem row writes (pong bank: neuron writebacks).
     pub fm_row_writes: u64,
+    /// The share of the FM-Mem reads attributable to im2col patch
+    /// duplication (zero for pure MLP schedules). Attribution within the
+    /// already-charged GEMM streaming traffic, not an addition to it.
+    pub fm_im2col_row_reads: u64,
     /// DRAM → chip bits (RLC-compressed weights + input features).
     pub dram_bits_in: u64,
     /// chip → DRAM bits (RLC-compressed final outputs).
@@ -62,51 +67,84 @@ impl NpeMemorySystem {
         mlp: &QuantizedMlp,
         inputs: &[Vec<i16>],
     ) -> MemoryTraffic {
-        let mut t = MemoryTraffic::default();
+        self.traffic = MemoryTraffic::default();
 
         for layer in &schedule.layers {
-            let i = layer.gamma.inputs;
-            for ev in &layer.events {
-                let (k, n) = ev.config;
-                let w = WMemArrangement {
-                    row_words: self.wmem.row_words,
-                    n,
-                    inputs: i,
-                    // Each roll streams one n-wide neuron group.
-                    neurons: ev.load.1.min(n),
-                };
-                let f = FmArrangement {
-                    row_words: self.fm_ping.row_words,
-                    batches: k,
-                    inputs: i,
-                };
-                let rolls = ev.rolls as u64;
-                t.wmem_row_reads += w.row_reads() * rolls;
-                t.fm_row_reads += f.row_reads() * rolls;
-                // Writeback: K*·N* neuron values per roll, row-buffered.
-                let outs_per_roll = (ev.load.0 * ev.load.1) as u64;
-                t.fm_row_writes +=
-                    outs_per_roll.div_ceil(self.fm_pong.row_words as u64) * rolls;
-            }
+            self.account_layer_events(layer);
         }
 
         // DRAM: weights in (RLC), input features in (RLC), outputs out.
         for wmat in &mlp.weights {
-            t.dram_bits_in += rlc_compress_len(wmat);
+            self.account_dram_in(wmat);
         }
         for x in inputs {
-            t.dram_bits_in += rlc_compress_len(x);
+            self.account_dram_in(x);
         }
         let outs = mlp.forward_batch(inputs);
         for y in &outs {
-            t.dram_bits_out += rlc_compress_len(y);
+            self.account_dram_out(y);
         }
+        self.traffic
+    }
 
+    /// Account the SRAM row traffic of one layer schedule (shared by the
+    /// MLP whole-model accounting above and the conv subsystem's per-GEMM
+    /// accounting in [`crate::conv::CnnEngine`]).
+    pub fn account_layer_events(&mut self, layer: &LayerSchedule) {
+        let i = layer.gamma.inputs;
+        let mut t = MemoryTraffic::default();
+        for ev in &layer.events {
+            let (k, n) = ev.config;
+            let w = WMemArrangement {
+                row_words: self.wmem.row_words,
+                n,
+                inputs: i,
+                // Each roll streams one n-wide neuron group.
+                neurons: ev.load.1.min(n),
+            };
+            let f = FmArrangement {
+                row_words: self.fm_ping.row_words,
+                batches: k,
+                inputs: i,
+            };
+            let rolls = ev.rolls as u64;
+            t.wmem_row_reads += w.row_reads() * rolls;
+            t.fm_row_reads += f.row_reads() * rolls;
+            // Writeback: K*·N* neuron values per roll, row-buffered.
+            let outs_per_roll = (ev.load.0 * ev.load.1) as u64;
+            t.fm_row_writes += outs_per_roll.div_ceil(self.fm_pong.row_words as u64) * rolls;
+        }
         self.wmem.read_rows(t.wmem_row_reads);
         self.fm_ping.read_rows(t.fm_row_reads);
         self.fm_pong.write_rows(t.fm_row_writes);
-        self.traffic = t;
-        t
+        self.traffic.wmem_row_reads += t.wmem_row_reads;
+        self.traffic.fm_row_reads += t.fm_row_reads;
+        self.traffic.fm_row_writes += t.fm_row_writes;
+    }
+
+    /// Attribute the im2col-induced share of the FM-Mem reads of one conv
+    /// layer for `batches` input samples.
+    ///
+    /// The lowered GEMM schedule streams the *duplicated* B·P × patch_len
+    /// im2col matrix, so [`Self::account_layer_events`] has already
+    /// charged those reads to the bank — this records how many of them
+    /// exist only because overlapping kernel windows re-read the same
+    /// feature words (i.e. what a direct-conv dataflow would have
+    /// avoided). Attribution only: no additional reads are charged.
+    pub fn account_im2col(&mut self, t: &Im2colTraffic, batches: u64) {
+        let extra_rows =
+            (t.extra_words() * batches).div_ceil(self.fm_ping.row_words as u64);
+        self.traffic.fm_im2col_row_reads += extra_rows;
+    }
+
+    /// Account an RLC-compressed DRAM → chip transfer of `words`.
+    pub fn account_dram_in(&mut self, words: &[i16]) {
+        self.traffic.dram_bits_in += rlc_compress_len(words);
+    }
+
+    /// Account an RLC-compressed chip → DRAM transfer of `words`.
+    pub fn account_dram_out(&mut self, words: &[i16]) {
+        self.traffic.dram_bits_out += rlc_compress_len(words);
     }
 
     /// Dynamic SRAM energy of the accounted traffic, pJ.
@@ -173,6 +211,24 @@ mod tests {
             "row-buffered weight traffic should be O(weights-streamed)"
         );
         assert!(t.fm_row_reads * mem.fm_ping.row_words as u64 <= 4 * macs);
+    }
+
+    #[test]
+    fn im2col_attribution_does_not_double_charge() {
+        use crate::conv::{im2col_traffic, Conv2dLayer, TensorShape};
+        let (mut mem, t0) = schedule_and_traffic(2);
+        let reads_before = mem.fm_ping.counters().0;
+        let shape = TensorShape::new(1, 28, 28);
+        let conv = Conv2dLayer::square(1, 6, 5, 2);
+        mem.account_im2col(&im2col_traffic(shape, &conv), 4);
+        let t1 = mem.traffic;
+        assert!(t1.fm_im2col_row_reads > 0, "duplication share recorded");
+        assert_eq!(t0.fm_im2col_row_reads, 0, "MLP schedules induce none");
+        // Attribution only: the GEMM schedule already streamed the
+        // duplicated matrix, so neither the total nor the bank counter
+        // may grow again.
+        assert_eq!(t1.fm_row_reads, t0.fm_row_reads);
+        assert_eq!(mem.fm_ping.counters().0, reads_before);
     }
 
     #[test]

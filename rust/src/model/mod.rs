@@ -8,7 +8,10 @@ pub mod zoo;
 
 pub use fixedpoint::{quantize_acc, quantize_relu, relu, Fix16, FRAC_BITS};
 pub use mlp::QuantizedMlp;
-pub use zoo::{benchmark_by_name, benchmarks, Benchmark};
+pub use zoo::{
+    benchmark_by_name, benchmarks, cnn_benchmark_by_name, cnn_benchmarks, Benchmark,
+    CnnBenchmark,
+};
 
 /// An MLP topology `I : H1 : … : O` (paper `Model(I-H1-…-HN-O)`).
 #[derive(Debug, Clone, PartialEq, Eq)]

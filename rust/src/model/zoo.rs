@@ -1,11 +1,15 @@
-//! The MLP benchmark suite of Table IV (UCI / MNIST-class workloads).
+//! The MLP benchmark suite of Table IV (UCI / MNIST-class workloads),
+//! plus the CNN companion zoo served by the conv subsystem.
 //!
 //! Datasets themselves are substituted with deterministic synthetic inputs
 //! (DESIGN.md §6): the paper's evaluation measures inference *time and
 //! energy*, which depend only on topology and batch count, never on weight
-//! or feature values. The topologies below are exactly Table IV's.
+//! or feature values. The MLP topologies below are exactly Table IV's; the
+//! CNN topologies are the classic LeNet-5 and a small CIFAR-10 convnet,
+//! the shapes Flex-TPU-class engines are evaluated on.
 
 use super::MlpTopology;
+use crate::conv::{CnnLayer, CnnTopology, Conv2dLayer, Pool2dLayer, PoolKind, TensorShape};
 
 /// One Table-IV benchmark row.
 #[derive(Debug, Clone)]
@@ -16,6 +20,23 @@ pub struct Benchmark {
     pub dataset: &'static str,
     /// Canonical topology string (paper column 3).
     pub topology: MlpTopology,
+}
+
+impl Benchmark {
+    /// The topology with the paper's typos fixed.
+    ///
+    /// Table IV prints Fashion-MNIST's input layer as 728, but
+    /// Fashion-MNIST images are 28×28 = 784. [`benchmarks`] reproduces
+    /// the table as printed; this accessor returns the corrected row
+    /// (identical to `topology` for every other benchmark, and differing
+    /// only in the input layer for Fashion-MNIST).
+    pub fn corrected_topology(&self) -> MlpTopology {
+        let mut layers = self.topology.layers.clone();
+        if self.dataset == "Fashion MNIST" && layers[0] == 728 {
+            layers[0] = 784;
+        }
+        MlpTopology::new(layers)
+    }
 }
 
 /// All seven benchmarks, in Table IV's row order.
@@ -40,12 +61,82 @@ pub fn benchmarks() -> Vec<Benchmark> {
     ]
 }
 
+/// Shared lookup normalization: case-insensitive, separator-insensitive
+/// (`Fashion MNIST` == `fashion-mnist` == `fashion_mnist`).
+fn norm_name(s: &str) -> String {
+    s.to_lowercase().replace([' ', '-', '_'], "")
+}
+
 /// Look a benchmark up by (case-insensitive) dataset name.
 pub fn benchmark_by_name(name: &str) -> Option<Benchmark> {
-    let lower = name.to_lowercase();
     benchmarks()
         .into_iter()
-        .find(|b| b.dataset.to_lowercase().replace(' ', "-") == lower.replace(' ', "-"))
+        .find(|b| norm_name(b.dataset) == norm_name(name))
+}
+
+/// One CNN zoo entry (the conv-subsystem companion to Table IV).
+#[derive(Debug, Clone)]
+pub struct CnnBenchmark {
+    /// Network name, e.g. `LeNet-5`.
+    pub network: &'static str,
+    /// Dataset the topology targets.
+    pub dataset: &'static str,
+    pub topology: CnnTopology,
+}
+
+/// LeNet-5 on MNIST (1×28×28), the classic shape: conv 6@5×5 (pad 2) →
+/// avgpool 2 → conv 16@5×5 → avgpool 2 → fc 120 → fc 84 → fc 10.
+pub fn lenet5() -> CnnBenchmark {
+    CnnBenchmark {
+        network: "LeNet-5",
+        dataset: "MNIST",
+        topology: CnnTopology::new(
+            TensorShape::new(1, 28, 28),
+            vec![
+                CnnLayer::Conv(Conv2dLayer::square(1, 6, 5, 2)),
+                CnnLayer::Pool(Pool2dLayer::square(PoolKind::Avg, 2)),
+                CnnLayer::Conv(Conv2dLayer::square(6, 16, 5, 0)),
+                CnnLayer::Pool(Pool2dLayer::square(PoolKind::Avg, 2)),
+                CnnLayer::Dense { out: 120 },
+                CnnLayer::Dense { out: 84 },
+                CnnLayer::Dense { out: 10 },
+            ],
+        ),
+    }
+}
+
+/// A small CIFAR-10 convnet (3×32×32): two conv+maxpool stages and a
+/// two-layer classifier head.
+pub fn cifarnet() -> CnnBenchmark {
+    CnnBenchmark {
+        network: "CifarNet",
+        dataset: "CIFAR-10",
+        topology: CnnTopology::new(
+            TensorShape::new(3, 32, 32),
+            vec![
+                CnnLayer::Conv(Conv2dLayer::square(3, 8, 3, 1)),
+                CnnLayer::Pool(Pool2dLayer::square(PoolKind::Max, 2)),
+                CnnLayer::Conv(Conv2dLayer::square(8, 16, 3, 1)),
+                CnnLayer::Pool(Pool2dLayer::square(PoolKind::Max, 2)),
+                CnnLayer::Dense { out: 64 },
+                CnnLayer::Dense { out: 10 },
+            ],
+        ),
+    }
+}
+
+/// The CNN zoo served by the conv subsystem.
+pub fn cnn_benchmarks() -> Vec<CnnBenchmark> {
+    vec![lenet5(), cifarnet()]
+}
+
+/// Look a CNN benchmark up by network or dataset name (case- and
+/// separator-insensitive, e.g. `lenet-5`, `LeNet 5`, `cifar-10`).
+pub fn cnn_benchmark_by_name(name: &str) -> Option<CnnBenchmark> {
+    let wanted = norm_name(name);
+    cnn_benchmarks()
+        .into_iter()
+        .find(|b| norm_name(b.network) == wanted || norm_name(b.dataset) == wanted)
 }
 
 #[cfg(test)]
@@ -77,5 +168,44 @@ mod tests {
             assert!(b.topology.layers.len() >= 3, "{}", b.dataset);
             assert!(b.topology.macs_per_sample() > 0);
         }
+    }
+
+    #[test]
+    fn fashion_mnist_has_both_as_printed_and_corrected_rows() {
+        // The as-printed Table-IV row keeps the paper's 728 typo; the
+        // corrected accessor fixes the input layer to 28×28 = 784. They
+        // must differ in the input layer and nowhere else.
+        let b = benchmark_by_name("Fashion MNIST").unwrap();
+        let printed = b.topology.clone();
+        let corrected = b.corrected_topology();
+        assert_eq!(printed.layers[0], 728);
+        assert_eq!(corrected.layers[0], 784);
+        assert_ne!(printed, corrected);
+        assert_eq!(printed.layers[1..], corrected.layers[1..]);
+    }
+
+    #[test]
+    fn corrected_topology_is_identity_elsewhere() {
+        for b in benchmarks() {
+            if b.dataset != "Fashion MNIST" {
+                assert_eq!(b.corrected_topology(), b.topology, "{}", b.dataset);
+            }
+        }
+    }
+
+    #[test]
+    fn cnn_zoo_entries() {
+        let zoo = cnn_benchmarks();
+        assert_eq!(zoo.len(), 2);
+        let lenet = cnn_benchmark_by_name("lenet-5").unwrap();
+        assert_eq!(lenet.dataset, "MNIST");
+        // Classic LeNet-5 flatten point: 16×5×5 = 400 features.
+        let shapes = lenet.topology.shapes();
+        assert!(shapes.iter().any(|s| s.features() == 400));
+        assert_eq!(lenet.topology.output_features(), 10);
+        let cifar = cnn_benchmark_by_name("CIFAR 10").unwrap();
+        assert_eq!(cifar.network, "CifarNet");
+        assert_eq!(cifar.topology.output_features(), 10);
+        assert!(cnn_benchmark_by_name("resnet").is_none());
     }
 }

@@ -1,0 +1,177 @@
+//! End-to-end validation of the conv subsystem: CNN zoo models lowered
+//! via im2col, scheduled by Algorithm 1, executed on the cycle-accurate
+//! NPE, and compared bit-exactly against the `Fix16` reference GEMM path.
+
+use std::time::Duration;
+use tcd_npe::conv::{
+    im2col, lower_cnn, CnnEngine, CnnLayer, CnnTopology, Conv2dLayer, Pool2dLayer, PoolKind,
+    QuantizedCnn, TensorShape,
+};
+use tcd_npe::coordinator::{BatcherConfig, Coordinator};
+use tcd_npe::mapper::{MapperTree, NpeGeometry};
+use tcd_npe::model::zoo::{cnn_benchmark_by_name, cnn_benchmarks};
+use tcd_npe::model::quantize_acc;
+
+fn tiny_cnn(seed: u64) -> QuantizedCnn {
+    QuantizedCnn::synthesize(
+        CnnTopology::new(
+            TensorShape::new(2, 7, 7),
+            vec![
+                CnnLayer::Conv(Conv2dLayer::square(2, 4, 3, 1)),
+                CnnLayer::Pool(Pool2dLayer::square(PoolKind::Max, 2)),
+                CnnLayer::Conv(Conv2dLayer::square(4, 6, 3, 0)),
+                CnnLayer::Dense { out: 8 },
+                CnnLayer::Dense { out: 3 },
+            ],
+        ),
+        seed,
+    )
+}
+
+#[test]
+fn lenet5_executes_bit_exactly_on_the_npe() {
+    // The acceptance run: LeNet-5, im2col-lowered, scheduled and executed
+    // on the cycle-accurate NPE — output must equal the Fix16 reference
+    // GEMM path bit-for-bit.
+    let lenet = cnn_benchmark_by_name("lenet-5").unwrap();
+    let cnn = QuantizedCnn::synthesize(lenet.topology.clone(), 0x1E9E7);
+    let inputs = cnn.synth_inputs(2, 0xDA7A);
+    let expect = cnn.forward_batch(&inputs);
+    let report = CnnEngine::tcd(NpeGeometry::PAPER).execute(&cnn, &inputs);
+    assert_eq!(report.outputs, expect, "NPE output == Fix16 reference");
+    assert_eq!(report.outputs.len(), 2);
+    assert_eq!(report.outputs[0].len(), 10);
+    assert!(report.cycles > 0 && report.energy.total_pj() > 0.0);
+}
+
+#[test]
+fn whole_cnn_zoo_matches_reference_on_both_mac_kinds() {
+    for bench in cnn_benchmarks() {
+        let cnn = QuantizedCnn::synthesize(bench.topology.clone(), 7);
+        let inputs = cnn.synth_inputs(1, 5);
+        let expect = cnn.forward_batch(&inputs);
+        let tcd = CnnEngine::tcd(NpeGeometry::PAPER).execute(&cnn, &inputs);
+        let conv = CnnEngine::conventional(NpeGeometry::PAPER).execute(&cnn, &inputs);
+        assert_eq!(tcd.outputs, expect, "{}", bench.network);
+        assert_eq!(conv.outputs, expect, "{}", bench.network);
+        assert!(tcd.time_ns < conv.time_ns, "{}: TCD must be faster", bench.network);
+    }
+}
+
+#[test]
+fn geometry_independence() {
+    // Values must not depend on the PE-array geometry, only the schedule.
+    let cnn = tiny_cnn(11);
+    let inputs = cnn.synth_inputs(3, 17);
+    let expect = cnn.forward_batch(&inputs);
+    for geom in [
+        NpeGeometry::WALKTHROUGH,
+        NpeGeometry::PAPER,
+        NpeGeometry::new(4, 4),
+        NpeGeometry::new(1, 3),
+    ] {
+        let report = CnnEngine::tcd(geom).execute(&cnn, &inputs);
+        assert_eq!(report.outputs, expect, "{geom:?}");
+    }
+}
+
+#[test]
+fn bitexact_mac_models_agree_with_fast_path() {
+    // The gate-level MAC planes must produce the same CNN outputs as the
+    // 64-bit fast path (small net: the bit-exact path is slow).
+    let cnn = QuantizedCnn::synthesize(
+        CnnTopology::new(
+            TensorShape::new(1, 5, 5),
+            vec![
+                CnnLayer::Conv(Conv2dLayer::square(1, 2, 3, 0)),
+                CnnLayer::Dense { out: 3 },
+            ],
+        ),
+        23,
+    );
+    let inputs = cnn.synth_inputs(2, 29);
+    let fast = CnnEngine::tcd(NpeGeometry::WALKTHROUGH).execute(&cnn, &inputs);
+    let slow = CnnEngine::tcd(NpeGeometry::WALKTHROUGH)
+        .bitexact(true)
+        .execute(&cnn, &inputs);
+    assert_eq!(fast.outputs, slow.outputs);
+    assert_eq!(fast.cycles, slow.cycles);
+}
+
+#[test]
+fn lowered_schedules_cover_exactly_and_chain() {
+    // conv → pool → dense lowering produces one coverage-exact Γ schedule
+    // per parametric layer, chained into a single ModelSchedule.
+    let lenet = cnn_benchmark_by_name("lenet-5").unwrap();
+    let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+    let lowered = lower_cnn(&mut mapper, &lenet.topology, 3);
+    assert_eq!(lowered.layers.len(), 5, "2 conv + 3 fc");
+    // conv1 lowers to Γ(3·784, 25, 6); conv2 to Γ(3·100, 150, 16).
+    assert_eq!(lowered.layers[0].gamma.batches, 3 * 784);
+    assert_eq!(lowered.layers[0].gamma.inputs, 25);
+    assert_eq!(lowered.layers[0].gamma.neurons, 6);
+    assert_eq!(lowered.layers[1].gamma.batches, 3 * 100);
+    assert_eq!(lowered.layers[1].gamma.inputs, 150);
+    assert_eq!(lowered.layers[1].gamma.neurons, 16);
+    for l in &lowered.layers {
+        assert!(l.schedule.covers_exactly(), "{}", l.label);
+    }
+    let ms = lowered.model_schedule();
+    assert_eq!(ms.total_rolls(), lowered.total_rolls());
+    assert!(ms.utilization() > 0.0 && ms.utilization() <= 1.0);
+}
+
+#[test]
+fn im2col_gemm_equals_direct_convolution() {
+    // The lowering identity itself: patch · kernel-row dot products equal
+    // the reference convolution for a conv-only network.
+    let topo = CnnTopology::new(
+        TensorShape::new(3, 6, 6),
+        vec![CnnLayer::Conv(Conv2dLayer::new(3, 5, (3, 3), (2, 2), (1, 1)))],
+    );
+    let cnn = QuantizedCnn::synthesize(topo, 31);
+    let input = &cnn.synth_inputs(1, 37)[0];
+    let expect = cnn.forward_sample(input);
+
+    let conv = match cnn.topology.layers[0] {
+        CnnLayer::Conv(c) => c,
+        _ => unreachable!(),
+    };
+    let rows = im2col(input, cnn.topology.input, &conv);
+    let out = conv.out_shape(cnn.topology.input);
+    let patch_len = conv.patch_len();
+    let mut gemm = vec![0i16; out.features()];
+    for (p, row) in rows.iter().enumerate() {
+        for oc in 0..conv.out_channels {
+            let wrow = &cnn.weights[0][oc * patch_len..(oc + 1) * patch_len];
+            let acc: i64 = wrow
+                .iter()
+                .zip(row)
+                .map(|(w, v)| (*w as i32 * *v as i32) as i64)
+                .sum();
+            gemm[oc * out.h * out.w + p] = quantize_acc(acc);
+        }
+    }
+    assert_eq!(gemm, expect);
+}
+
+#[test]
+fn coordinator_serves_lenet_traffic() {
+    // CNN model handles flow through the batcher/router end to end.
+    let lenet = cnn_benchmark_by_name("lenet-5").unwrap();
+    let cnn = QuantizedCnn::synthesize(lenet.topology.clone(), 41);
+    let inputs = cnn.synth_inputs(4, 43);
+    let expect = cnn.forward_batch(&inputs);
+    let coord = Coordinator::spawn_cnn(
+        cnn,
+        NpeGeometry::PAPER,
+        BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(50) },
+    );
+    let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+    for (rx, want) in rxs.into_iter().zip(expect) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.output, want);
+        assert!(resp.npe_energy_pj > 0.0);
+    }
+    coord.shutdown().unwrap();
+}
