@@ -1,0 +1,35 @@
+//! Bench E7 — fleet serving: simulated throughput and wall-latency
+//! percentiles vs device count (1/2/4/8) under the seeded Poisson load,
+//! plus the cached-vs-cold Algorithm-1 microbenchmark.
+//!
+//! Run: `cargo bench --bench fleet_bench`
+//!
+//! Emits `BENCH_fleet.json` in the working directory so CI can archive
+//! the trajectory (throughput/p99 vs device count) across PRs.
+
+use tcd_npe::bench::{fleet_json, fleet_rows, mapper_cache_bench, render_fleet_table};
+use tcd_npe::fleet::LoadGenConfig;
+
+fn main() {
+    let load = LoadGenConfig::default();
+
+    println!("=== fleet serving: throughput & latency vs device count ===");
+    let rows = fleet_rows(&load);
+    println!("{}", render_fleet_table(&rows, &load));
+
+    println!("=== Algorithm-1 cold vs schedule cache (Table-IV Γ set, B=8) ===");
+    let mapper = mapper_cache_bench(200);
+    println!(
+        "{} shapes: cold {:.1} us/iter, cached {:.1} us/iter ({:.0}x)",
+        mapper.shapes,
+        mapper.cold_us,
+        mapper.cached_us,
+        mapper.speedup()
+    );
+
+    let json = fleet_json(&rows, &mapper, &load);
+    match std::fs::write("BENCH_fleet.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_fleet.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_fleet.json: {e}"),
+    }
+}

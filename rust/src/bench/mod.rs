@@ -6,6 +6,7 @@
 pub mod ablation;
 pub mod convnet;
 pub mod fig10;
+pub mod fleet;
 pub mod harness;
 pub mod table1;
 pub mod table2;
@@ -13,6 +14,10 @@ pub mod table3;
 
 pub use convnet::{conv_rows, render_conv_table, ConvRow, CONV_BATCHES};
 pub use fig10::{fig10_rows, render_fig10, Fig10Row};
+pub use fleet::{
+    fleet_json, fleet_row, fleet_rows, mapper_cache_bench, render_fleet_table, FleetRow,
+    MapperCacheBench, FLEET_DEVICE_COUNTS,
+};
 pub use harness::BenchTimer;
 pub use table1::{render_table1, table1_rows};
 pub use table2::{render_table2, table2_rows, Table2Row, STREAM_SIZES};

@@ -15,12 +15,13 @@ use super::layer::{CnnLayer, CnnTopology, Pool2dLayer, PoolKind, TensorShape};
 use super::QuantizedCnn;
 use crate::dataflow::{cached_mac_ppa, pe_array_leak_uw, DataflowReport, EnergyBreakdown};
 use crate::mapper::schedule::bfs_events;
-use crate::mapper::{Gamma, LayerSchedule, MapperTree, ModelSchedule, NpeGeometry};
+use crate::mapper::{Gamma, LayerSchedule, MapperTree, ModelSchedule, NpeGeometry, ScheduleCache};
 use crate::memory::NpeMemorySystem;
 use crate::model::{MlpTopology, QuantizedMlp};
 use crate::npe::{ActivationUnit, ExecutionStats, PeArray};
 use crate::ppa::TechParams;
 use crate::tcdmac::MacKind;
+use std::sync::Arc;
 
 /// One compute layer after lowering (pooling layers lower to nothing).
 #[derive(Debug, Clone)]
@@ -150,16 +151,38 @@ pub fn pool2d(input: &[i16], shape: TensorShape, pool: &Pool2dLayer) -> Vec<i16>
 /// The CNN execution engine: im2col-lowered GEMMs on the cycle-accurate
 /// PE array, pooling in the output path — the conv twin of
 /// [`crate::dataflow::OsEngine`].
+///
+/// Like the OS engine, this is a reusable device handle: the private
+/// mapper memo persists across `execute` calls, and
+/// [`CnnEngine::with_cache`] joins it to a fleet-wide schedule cache.
 pub struct CnnEngine {
-    pub geometry: NpeGeometry,
-    pub kind: MacKind,
+    // Private: the mapper memo bakes the geometry in at construction, so
+    // mutating these afterwards would desync schedules from the array.
+    geometry: NpeGeometry,
+    kind: MacKind,
     /// Run the bit-exact MAC models instead of the fast path.
     pub bitexact: bool,
+    mapper: MapperTree,
+    cache: Option<Arc<ScheduleCache>>,
 }
 
 impl CnnEngine {
     pub fn new(geometry: NpeGeometry, kind: MacKind) -> Self {
-        Self { geometry, kind, bitexact: false }
+        Self {
+            geometry,
+            kind,
+            bitexact: false,
+            mapper: MapperTree::new(geometry),
+            cache: None,
+        }
+    }
+
+    pub fn geometry(&self) -> NpeGeometry {
+        self.geometry
+    }
+
+    pub fn kind(&self) -> MacKind {
+        self.kind
     }
 
     pub fn tcd(geometry: NpeGeometry) -> Self {
@@ -172,6 +195,12 @@ impl CnnEngine {
 
     pub fn bitexact(mut self, on: bool) -> Self {
         self.bitexact = on;
+        self
+    }
+
+    /// Attach a fleet-shared schedule cache (see [`ScheduleCache`]).
+    pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.cache = Some(cache);
         self
     }
 
@@ -192,7 +221,6 @@ impl CnnEngine {
         let tech = TechParams::DEFAULT;
         let b = inputs.len();
         assert!(b > 0, "empty batch");
-        let mut mapper = MapperTree::new(self.geometry);
         let mut array = PeArray::new(self.geometry, self.kind);
         let mut stats = ExecutionStats::default();
         let mut mem = NpeMemorySystem::new();
@@ -215,7 +243,6 @@ impl CnnEngine {
                     let surrogate = gemm_view(c.patch_len(), c.out_channels, cnn, pi);
                     let rectify = pi + 1 < n_param;
                     let gemm_out = self.run_gemm(
-                        &mut mapper,
                         &mut array,
                         &mut stats,
                         &mut mem,
@@ -246,7 +273,6 @@ impl CnnEngine {
                     let surrogate = gemm_view(in_shape.features(), out, cnn, pi);
                     let rectify = pi + 1 < n_param;
                     feats = self.run_gemm(
-                        &mut mapper,
                         &mut array,
                         &mut stats,
                         &mut mem,
@@ -304,8 +330,7 @@ impl CnnEngine {
     /// two are the cycle model for MLP and CNN traffic respectively.
     #[allow(clippy::too_many_arguments)]
     fn run_gemm(
-        &self,
-        mapper: &mut MapperTree,
+        &mut self,
         array: &mut PeArray,
         stats: &mut ExecutionStats,
         mem: &mut NpeMemorySystem,
@@ -318,17 +343,33 @@ impl CnnEngine {
         let n_rows = rows.len();
         let fan_out = gemm.topology.outputs();
         let act = ActivationUnit::new(rectify);
-        // One exec tree drives both the executed rolls and the accounted
-        // schedule, so cycles/energy can never desync from what ran.
-        let node = mapper.best(n_rows, fan_out).expect("non-empty GEMM");
-        let sched = LayerSchedule {
-            gamma: Gamma::new(n_rows, gemm.topology.inputs(), fan_out),
-            geometry: self.geometry,
-            events: bfs_events(&node),
-        };
+        let gamma = Gamma::new(n_rows, gemm.topology.inputs(), fan_out);
         let row_ids: Vec<usize> = (0..n_rows).collect();
         let neuron_ids: Vec<usize> = (0..fan_out).collect();
-        let assignments = node.assignments(&row_ids, &neuron_ids);
+        // One exec tree drives both the executed rolls and the accounted
+        // schedule, so cycles/energy can never desync from what ran —
+        // whether it comes from the fleet cache or the private mapper.
+        // A cache hit only borrows the Arc'd entry: no event-list clone
+        // on the steady-state hot path.
+        let cached_entry;
+        let fresh_sched;
+        let (sched, assignments): (&LayerSchedule, _) = match &self.cache {
+            Some(cache) => {
+                cached_entry = cache.get_or_compute(&mut self.mapper, gamma);
+                let node = cached_entry.exec.as_ref().expect("non-empty GEMM");
+                (&cached_entry.layer, node.assignments(&row_ids, &neuron_ids))
+            }
+            None => {
+                let node = self.mapper.best(n_rows, fan_out).expect("non-empty GEMM");
+                let assignments = node.assignments(&row_ids, &neuron_ids);
+                fresh_sched = LayerSchedule {
+                    gamma,
+                    geometry: self.geometry,
+                    events: bfs_events(&node),
+                };
+                (&fresh_sched, assignments)
+            }
+        };
 
         let mut out = vec![vec![0i16; fan_out]; n_rows];
         let mut last_config = None;
@@ -355,7 +396,7 @@ impl CnnEngine {
             .iter()
             .map(|e| e.work() as u64 * per_pair)
             .sum::<u64>();
-        mem.account_layer_events(&sched);
+        mem.account_layer_events(sched);
         out
     }
 }
@@ -448,6 +489,27 @@ mod tests {
         assert_eq!(tcd.outputs, conv.outputs, "MAC kind never changes math");
         assert!(tcd.cycles > conv.cycles, "TCD pays one CPM cycle per roll");
         assert!(tcd.time_ns < conv.time_ns, "but each TCD cycle is faster");
+    }
+
+    #[test]
+    fn cached_engine_matches_uncached() {
+        // Attaching the fleet schedule cache must change neither the
+        // outputs nor the cycle/energy model, and a warm re-run of the
+        // same batch shape must hit on every lowered GEMM (2 here).
+        let cnn = tiny_cnn();
+        let inputs = cnn.synth_inputs(2, 13);
+        let cache = ScheduleCache::shared();
+        let plain = CnnEngine::tcd(NpeGeometry::WALKTHROUGH).execute(&cnn, &inputs);
+        let mut cached_engine =
+            CnnEngine::tcd(NpeGeometry::WALKTHROUGH).with_cache(Arc::clone(&cache));
+        let a = cached_engine.execute(&cnn, &inputs);
+        assert_eq!(a.outputs, plain.outputs);
+        assert_eq!(a.cycles, plain.cycles);
+        assert_eq!(cache.stats().misses, 2);
+        let b = cached_engine.execute(&cnn, &inputs);
+        assert_eq!(b.outputs, plain.outputs);
+        assert_eq!(cache.stats().hits, 2);
+        assert_eq!(cache.stats().misses, 2);
     }
 
     #[test]

@@ -1,6 +1,42 @@
-//! Coordinator service metrics.
+//! Coordinator service metrics: counters, wall-latency percentiles,
+//! schedule-cache counters and per-device (fleet lane) accounting.
 
-/// Counters exported by the coordinator loop.
+use super::InferenceRequest;
+use crate::dataflow::DataflowReport;
+use crate::mapper::{CacheStats, NpeGeometry};
+use std::fmt;
+use std::time::Instant;
+
+/// Size of the sliding latency window: once this many samples exist,
+/// new latencies overwrite the oldest ones (ring buffer), so a
+/// long-running service neither grows without bound nor freezes its
+/// percentiles on cold-start samples.
+pub const LATENCY_SAMPLE_CAP: usize = 1 << 17;
+
+/// Counters for one simulated NPE device (a fleet lane; the single-NPE
+/// coordinator path reports exactly one of these).
+#[derive(Debug, Default, Clone)]
+pub struct DeviceMetrics {
+    /// Geometry label, e.g. `16x8`.
+    pub geometry: String,
+    pub batches: u64,
+    pub requests: u64,
+    /// Accumulated simulated NPE busy time on this device, ns.
+    pub sim_busy_ns: f64,
+}
+
+impl DeviceMetrics {
+    pub fn for_geometry(g: NpeGeometry) -> Self {
+        Self {
+            geometry: format!("{}x{}", g.tg_rows, g.tg_cols),
+            ..Self::default()
+        }
+    }
+}
+
+/// Counters exported by the coordinator loop (and, in fleet mode, by the
+/// device threads — all updates go through one lock, so a snapshot is
+/// always internally consistent).
 #[derive(Debug, Default, Clone)]
 pub struct CoordinatorMetrics {
     pub requests: u64,
@@ -16,6 +52,20 @@ pub struct CoordinatorMetrics {
     pub sim_time_ns: f64,
     /// Accumulated simulated NPE energy, pJ.
     pub sim_energy_pj: f64,
+    /// Schedule-cache hits observed so far (absolute counter snapshot).
+    pub cache_hits: u64,
+    /// Schedule-cache misses observed so far.
+    pub cache_misses: u64,
+    /// Deepest the fleet work queue ever got (0 on the single path).
+    pub queue_peak: u64,
+    /// Sliding window over the most recent [`LATENCY_SAMPLE_CAP`] wall
+    /// latencies, ns (submit → response), in ring order.
+    pub latencies_ns: Vec<u64>,
+    /// Total latencies ever recorded (≥ `latencies_ns.len()`; the
+    /// window's ring cursor).
+    pub latencies_recorded: u64,
+    /// One lane per simulated NPE device.
+    pub devices: Vec<DeviceMetrics>,
 }
 
 impl CoordinatorMetrics {
@@ -38,10 +88,122 @@ impl CoordinatorMetrics {
         }
     }
 
-    /// One-line log form.
+    /// Record one answered request's wall latency into the sliding
+    /// window (the most recent [`LATENCY_SAMPLE_CAP`] samples are kept).
+    pub fn record_latency(&mut self, wall_ns: u64) {
+        let slot = (self.latencies_recorded % LATENCY_SAMPLE_CAP as u64) as usize;
+        self.latencies_recorded += 1;
+        if self.latencies_ns.len() < LATENCY_SAMPLE_CAP {
+            self.latencies_ns.push(wall_ns);
+        } else {
+            self.latencies_ns[slot] = wall_ns;
+        }
+    }
+
+    /// One batch's worth of accounting — shared by the single-NPE
+    /// dispatch path and every fleet device thread so the two can never
+    /// drift (the stress monitor asserts the invariants this maintains:
+    /// one latency sample per request up to the window cap, lanes
+    /// partition the request count, cache counters match the shared
+    /// cache).
+    pub fn account_batch(
+        &mut self,
+        lane: usize,
+        batch: &[(Instant, InferenceRequest)],
+        report: &DataflowReport,
+        padded_to: usize,
+        verified: bool,
+        cache: CacheStats,
+    ) {
+        self.batches += 1;
+        self.requests += batch.len() as u64;
+        self.padded_slots += (padded_to - batch.len()) as u64;
+        self.sim_time_ns += report.time_ns;
+        self.sim_energy_pj += report.energy.total_pj();
+        if verified {
+            self.verified_batches += 1;
+        }
+        for (t0, _) in batch {
+            self.record_latency(t0.elapsed().as_nanos() as u64);
+        }
+        self.cache_hits = cache.hits;
+        self.cache_misses = cache.misses;
+        if let Some(l) = self.devices.get_mut(lane) {
+            l.batches += 1;
+            l.requests += batch.len() as u64;
+            l.sim_busy_ns += report.time_ns;
+        }
+    }
+
+    /// Several wall-latency percentiles (µs) with one sort (`ps` in
+    /// [0, 100], nearest-rank); zeros if nothing has been answered yet.
+    /// The sample vector stays unsorted so updates are O(1) on the
+    /// serving path.
+    pub fn latency_percentiles_us(&self, ps: &[f64]) -> Vec<f64> {
+        if self.latencies_ns.is_empty() {
+            return vec![0.0; ps.len()];
+        }
+        let mut sorted = self.latencies_ns.clone();
+        sorted.sort_unstable();
+        ps.iter()
+            .map(|&p| {
+                let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+                sorted[rank.clamp(1, sorted.len()) - 1] as f64 / 1e3
+            })
+            .collect()
+    }
+
+    /// Single wall-latency percentile, µs.
+    pub fn latency_percentile_us(&self, p: f64) -> f64 {
+        self.latency_percentiles_us(&[p])[0]
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.latency_percentile_us(50.0)
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        self.latency_percentile_us(95.0)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.latency_percentile_us(99.0)
+    }
+
+    /// The snapshotted schedule-cache counters as a [`CacheStats`].
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats { hits: self.cache_hits, misses: self.cache_misses }
+    }
+
+    /// Schedule-cache hit rate over all lookups so far.
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache_stats().hit_rate()
+    }
+
+    /// Simulated makespan: the busiest device's accumulated busy time, ns.
+    /// Devices run in parallel in simulated time, so this — not the sum —
+    /// is the fleet's effective execution time.
+    pub fn sim_makespan_ns(&self) -> f64 {
+        self.devices.iter().map(|d| d.sim_busy_ns).fold(0.0, f64::max)
+    }
+
+    /// Simulated throughput: answered requests over the makespan.
+    pub fn sim_throughput_rps(&self) -> f64 {
+        let makespan = self.sim_makespan_ns();
+        if makespan == 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / (makespan * 1e-9)
+        }
+    }
+
+    /// One-line log form (percentiles + cache included).
     pub fn render(&self) -> String {
+        let p = self.latency_percentiles_us(&[50.0, 95.0, 99.0]);
         format!(
-            "requests={} rejected={} batches={} occupancy={:.2} verified={} avg_sim_latency={:.1}us energy={:.2}uJ",
+            "requests={} rejected={} batches={} occupancy={:.2} verified={} \
+             avg_sim_latency={:.1}us energy={:.2}uJ wall_p50={:.0}us wall_p95={:.0}us \
+             wall_p99={:.0}us cache={}h/{}m",
             self.requests,
             self.rejected_requests,
             self.batches,
@@ -49,7 +211,61 @@ impl CoordinatorMetrics {
             self.verified_batches,
             self.avg_batch_latency_us(),
             self.sim_energy_pj / 1e6,
+            p[0],
+            p[1],
+            p[2],
+            self.cache_hits,
+            self.cache_misses,
         )
+    }
+}
+
+impl fmt::Display for CoordinatorMetrics {
+    /// Multi-line table form: fleet-wide counters, latency percentiles,
+    /// schedule-cache counters and one row per device.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "requests {} (rejected {}), batches {}, occupancy {:.2}, verified {}",
+            self.requests,
+            self.rejected_requests,
+            self.batches,
+            self.batch_occupancy(),
+            self.verified_batches,
+        )?;
+        let p = self.latency_percentiles_us(&[50.0, 95.0, 99.0]);
+        writeln!(
+            f,
+            "wall latency p50/p95/p99: {:.0}/{:.0}/{:.0} us  (n={})",
+            p[0],
+            p[1],
+            p[2],
+            self.latencies_recorded,
+        )?;
+        writeln!(
+            f,
+            "schedule cache: {} hits / {} misses ({:.1}% hit rate)",
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_hit_rate() * 100.0,
+        )?;
+        writeln!(
+            f,
+            "sim time {:.1} us total, makespan {:.1} us, {:.0} req/s simulated, \
+             queue peak {}",
+            self.sim_time_ns / 1e3,
+            self.sim_makespan_ns() / 1e3,
+            self.sim_throughput_rps(),
+            self.queue_peak,
+        )?;
+        for (i, d) in self.devices.iter().enumerate() {
+            writeln!(
+                f,
+                "  device {i} [{}]: {} batches, {} requests, busy {:.1} us",
+                d.geometry, d.batches, d.requests, d.sim_busy_ns / 1e3,
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -73,5 +289,59 @@ mod tests {
     fn render_contains_counts() {
         let m = CoordinatorMetrics { requests: 3, batches: 2, ..Default::default() };
         assert!(m.render().contains("requests=3"));
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        // 1..=100 µs in ns: p50 = 50µs, p95 = 95µs, p99 = 99µs exactly
+        // under nearest-rank; empty → 0.
+        let m = CoordinatorMetrics {
+            latencies_ns: (1..=100u64).map(|v| v * 1000).collect(),
+            ..Default::default()
+        };
+        assert_eq!(m.p50_us(), 50.0);
+        assert_eq!(m.p95_us(), 95.0);
+        assert_eq!(m.p99_us(), 99.0);
+        assert_eq!(m.latency_percentile_us(100.0), 100.0);
+        assert_eq!(CoordinatorMetrics::default().p99_us(), 0.0);
+        // Order-independence: percentiles sort internally.
+        let mut rev = m.clone();
+        rev.latencies_ns.reverse();
+        assert_eq!(rev.p95_us(), 95.0);
+    }
+
+    #[test]
+    fn makespan_and_throughput() {
+        let m = CoordinatorMetrics {
+            requests: 100,
+            devices: vec![
+                DeviceMetrics { sim_busy_ns: 2e6, ..Default::default() },
+                DeviceMetrics { sim_busy_ns: 5e6, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(m.sim_makespan_ns(), 5e6);
+        // 100 requests over 5 ms = 20k req/s.
+        assert!((m.sim_throughput_rps() - 20_000.0).abs() < 1e-6);
+        assert_eq!(CoordinatorMetrics::default().sim_throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn display_lists_cache_and_devices() {
+        let mut m = CoordinatorMetrics {
+            requests: 4,
+            cache_hits: 9,
+            cache_misses: 1,
+            ..Default::default()
+        };
+        m.devices.push(DeviceMetrics::for_geometry(NpeGeometry::PAPER));
+        m.devices.push(DeviceMetrics::for_geometry(NpeGeometry::WALKTHROUGH));
+        let s = m.to_string();
+        assert!(s.contains("9 hits / 1 misses"));
+        assert!(s.contains("90.0% hit rate"));
+        assert!(s.contains("device 0 [16x8]"));
+        assert!(s.contains("device 1 [6x3]"));
+        assert!(s.contains("p50/p95/p99"));
+        assert!((m.cache_hit_rate() - 0.9).abs() < 1e-12);
     }
 }

@@ -3,10 +3,18 @@
 //! A threaded request router and dynamic batcher in front of the TCD-NPE:
 //! clients submit single inference requests; the batcher accumulates them
 //! into NPE-sized batches (or flushes on a deadline), the scheduler maps
-//! each batch with Algorithm 1, the cycle-accurate NPE simulator executes
-//! it (reporting simulated latency/energy), and — when a PJRT runtime with
-//! a matching artifact is attached — the same batch is cross-executed on
-//! the XLA path and verified equal before responses are released.
+//! each batch with Algorithm 1 (through the shared
+//! [`ScheduleCache`], so a shape is mapped once ever), and the batch
+//! executes on one of two backends:
+//!
+//! * **single** — the cycle-accurate NPE simulator in the coordinator
+//!   thread (optionally cross-executed on the PJRT/XLA path and verified
+//!   equal before responses are released);
+//! * **fleet** — [`crate::fleet::Fleet`]: the batch is queued to `N`
+//!   simulated NPE devices and the next idle device executes it.
+//!
+//! Responses are bit-exact across backends and device geometries: the
+//! dataflow moves data, it does not change math.
 //!
 //! (The offline crate set has no tokio; the event loop is std::thread +
 //! mpsc, which for a CPU-bound simulator is the right tool anyway.)
@@ -15,11 +23,12 @@ pub mod batcher;
 pub mod metrics;
 
 pub use batcher::BatcherConfig;
-pub use metrics::CoordinatorMetrics;
+pub use metrics::{CoordinatorMetrics, DeviceMetrics};
 
 use crate::conv::{CnnEngine, QuantizedCnn};
 use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
-use crate::mapper::NpeGeometry;
+use crate::fleet::{Fleet, FleetJob};
+use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::model::QuantizedMlp;
 use crate::runtime::PjrtRuntime;
 use anyhow::Result;
@@ -79,11 +88,53 @@ pub struct Coordinator {
     tx: mpsc::Sender<CoordinatorMsg>,
     handle: Option<JoinHandle<()>>,
     pub metrics: Arc<Mutex<CoordinatorMetrics>>,
+    /// The shared Algorithm-1 schedule cache (hit/miss counters are also
+    /// snapshotted into [`CoordinatorMetrics`] after every batch).
+    pub cache: Arc<ScheduleCache>,
+}
+
+/// A cloneable submit-only handle, for many client threads sharing one
+/// coordinator (the stress suite drives 32 of these concurrently).
+#[derive(Clone)]
+pub struct CoordinatorClient {
+    tx: mpsc::Sender<CoordinatorMsg>,
+}
+
+impl CoordinatorClient {
+    /// Submit one request; returns the response channel.
+    pub fn submit(&self, input: Vec<i16>) -> mpsc::Receiver<InferenceResponse> {
+        submit_via(&self.tx, input)
+    }
 }
 
 enum CoordinatorMsg {
     Request(Instant, InferenceRequest),
     Shutdown,
+}
+
+fn submit_via(
+    tx: &mpsc::Sender<CoordinatorMsg>,
+    input: Vec<i16>,
+) -> mpsc::Receiver<InferenceResponse> {
+    let (rtx, rrx) = mpsc::channel();
+    let _ = tx.send(CoordinatorMsg::Request(
+        Instant::now(),
+        InferenceRequest { input, resp: rtx },
+    ));
+    rrx
+}
+
+/// The single-NPE execution backend (engines + optional PJRT runtime).
+struct SingleBackend {
+    mlp_engine: OsEngine,
+    cnn_engine: CnnEngine,
+    runtime: Option<(PjrtRuntime, String)>,
+}
+
+/// Where dispatched batches execute.
+enum Backend {
+    Single(Box<SingleBackend>),
+    Fleet(Fleet),
 }
 
 impl Coordinator {
@@ -108,7 +159,8 @@ impl Coordinator {
         Self::spawn_model(ServedModel::Cnn(cnn), geometry, cfg, None)
     }
 
-    /// Spawn the coordinator thread for any [`ServedModel`].
+    /// Spawn the coordinator thread for any [`ServedModel`] on a single
+    /// simulated NPE.
     ///
     /// `pjrt` applies to MLP models only — no CNN artifacts exist, so a
     /// spec passed with a [`ServedModel::Cnn`] is ignored (no runtime is
@@ -120,8 +172,13 @@ impl Coordinator {
         pjrt: Option<PjrtSpec>,
     ) -> Self {
         let (tx, rx) = mpsc::channel::<CoordinatorMsg>();
-        let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        let metrics = Arc::new(Mutex::new(CoordinatorMetrics {
+            devices: vec![DeviceMetrics::for_geometry(geometry)],
+            ..CoordinatorMetrics::default()
+        }));
+        let cache = ScheduleCache::shared();
         let metrics_thread = Arc::clone(&metrics);
+        let cache_thread = Arc::clone(&cache);
         let handle = std::thread::spawn(move || {
             let runtime = match &model {
                 // Build the (non-Send) PJRT runtime inside the thread.
@@ -132,22 +189,56 @@ impl Coordinator {
                 }),
                 ServedModel::Cnn(_) => None,
             };
-            run_loop(rx, model, geometry, cfg, runtime, metrics_thread);
+            let backend = Backend::Single(Box::new(SingleBackend {
+                mlp_engine: OsEngine::tcd(geometry).with_cache(Arc::clone(&cache_thread)),
+                cnn_engine: CnnEngine::tcd(geometry).with_cache(Arc::clone(&cache_thread)),
+                runtime,
+            }));
+            run_loop(rx, Arc::new(model), cfg, backend, metrics_thread, cache_thread);
         });
-        Self { tx, handle: Some(handle), metrics }
+        Self { tx, handle: Some(handle), metrics, cache }
+    }
+
+    /// Spawn a coordinator whose batches execute on a fleet of simulated
+    /// NPE devices, one per entry of `geometries` (heterogeneous shapes
+    /// are fine — responses stay bit-exact regardless of geometry).
+    pub fn spawn_fleet(
+        model: ServedModel,
+        geometries: Vec<NpeGeometry>,
+        cfg: BatcherConfig,
+    ) -> Self {
+        assert!(!geometries.is_empty(), "a fleet needs at least one device");
+        let (tx, rx) = mpsc::channel::<CoordinatorMsg>();
+        let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        let cache = ScheduleCache::shared();
+        let metrics_thread = Arc::clone(&metrics);
+        let cache_thread = Arc::clone(&cache);
+        let handle = std::thread::spawn(move || {
+            let model = Arc::new(model);
+            let fleet = Fleet::spawn(
+                Arc::clone(&model),
+                &geometries,
+                Arc::clone(&cache_thread),
+                Arc::clone(&metrics_thread),
+            );
+            run_loop(rx, model, cfg, Backend::Fleet(fleet), metrics_thread, cache_thread);
+        });
+        Self { tx, handle: Some(handle), metrics, cache }
     }
 
     /// Submit one request; returns the response channel.
     pub fn submit(&self, input: Vec<i16>) -> mpsc::Receiver<InferenceResponse> {
-        let (rtx, rrx) = mpsc::channel();
-        let _ = self.tx.send(CoordinatorMsg::Request(
-            Instant::now(),
-            InferenceRequest { input, resp: rtx },
-        ));
-        rrx
+        submit_via(&self.tx, input)
     }
 
-    /// Shut down, flushing pending requests.
+    /// A cloneable submit-only handle for concurrent client threads.
+    pub fn client(&self) -> CoordinatorClient {
+        CoordinatorClient { tx: self.tx.clone() }
+    }
+
+    /// Shut down, flushing pending requests: every request accepted
+    /// before this call is executed and answered (in `batch_size`
+    /// chunks), on both backends.
     pub fn shutdown(mut self) -> Result<()> {
         let _ = self.tx.send(CoordinatorMsg::Shutdown);
         if let Some(h) = self.handle.take() {
@@ -159,18 +250,16 @@ impl Coordinator {
 
 fn run_loop(
     rx: mpsc::Receiver<CoordinatorMsg>,
-    model: ServedModel,
-    geometry: NpeGeometry,
+    model: Arc<ServedModel>,
     cfg: BatcherConfig,
-    runtime: Option<(PjrtRuntime, String)>,
+    mut backend: Backend,
     metrics: Arc<Mutex<CoordinatorMetrics>>,
+    cache: Arc<ScheduleCache>,
 ) {
-    let mut mlp_engine = OsEngine::tcd(geometry);
-    let mut cnn_engine = CnnEngine::tcd(geometry);
     let mut pending: Vec<(Instant, InferenceRequest)> = Vec::new();
     let mut shutdown = false;
 
-    while !shutdown {
+    loop {
         // Block until traffic arrives (no idle spinning), then collect
         // until the batch fills or the *oldest request's* deadline
         // elapses. Anchoring the flush window to first arrival — not to
@@ -183,6 +272,9 @@ fn run_loop(
         // its response sender, so the client's receiver disconnects
         // immediately instead of hanging.
         if pending.is_empty() {
+            if shutdown {
+                break;
+            }
             match rx.recv() {
                 Ok(CoordinatorMsg::Request(_, r))
                     if r.input.len() != model.input_len() =>
@@ -196,84 +288,112 @@ fn run_loop(
                 continue;
             }
         }
-        let deadline = pending[0].0 + cfg.max_wait;
-        while !shutdown && pending.len() < cfg.batch_size {
-            let timeout = deadline.saturating_duration_since(Instant::now());
-            match rx.recv_timeout(timeout) {
-                Ok(CoordinatorMsg::Request(_, r))
-                    if r.input.len() != model.input_len() =>
-                {
-                    metrics.lock().unwrap().rejected_requests += 1;
+        if !shutdown {
+            let deadline = pending[0].0 + cfg.max_wait;
+            while !shutdown && pending.len() < cfg.batch_size {
+                let timeout = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(timeout) {
+                    Ok(CoordinatorMsg::Request(_, r))
+                        if r.input.len() != model.input_len() =>
+                    {
+                        metrics.lock().unwrap().rejected_requests += 1;
+                    }
+                    Ok(CoordinatorMsg::Request(t, r)) => pending.push((t, r)),
+                    Ok(CoordinatorMsg::Shutdown) => shutdown = true,
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
                 }
-                Ok(CoordinatorMsg::Request(t, r)) => pending.push((t, r)),
-                Ok(CoordinatorMsg::Shutdown) => shutdown = true,
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
             }
         }
-        if pending.is_empty() {
-            continue;
-        }
-        // Form the batch (pad to the artifact batch if cross-verifying).
+        // Dispatch one batch per iteration. After a shutdown request the
+        // loop keeps spinning — without waiting for more traffic — until
+        // `pending` is fully flushed in `batch_size` chunks, so queued
+        // work is answered exactly once even when more than one batch
+        // was waiting (no loss, no duplication).
         let real = pending.len().min(cfg.batch_size);
         let batch: Vec<(Instant, InferenceRequest)> = pending.drain(..real).collect();
-        let mut inputs: Vec<Vec<i16>> = batch.iter().map(|(_, r)| r.input.clone()).collect();
-        let padded_to = if runtime.is_some() {
-            let target = cfg.batch_size;
-            while inputs.len() < target {
-                inputs.push(vec![0; model.input_len()]);
-            }
-            target
-        } else {
-            inputs.len()
-        };
+        dispatch(&mut backend, &model, &cfg, batch, &metrics, &cache);
+    }
 
-        let report: DataflowReport = match &model {
-            ServedModel::Mlp(mlp) => mlp_engine.execute(mlp, &inputs),
-            ServedModel::Cnn(cnn) => cnn_engine.execute(cnn, &inputs),
-        };
+    // Drain-then-join the devices: all queued fleet work is answered
+    // before `Coordinator::shutdown` returns.
+    if let Backend::Fleet(fleet) = backend {
+        fleet.shutdown();
+    }
+}
 
-        // Cross-verify on the PJRT path when available (MLP artifacts
-        // only — the conv path is covered by the Rust reference model).
-        let verified = if let (Some((rt, artifact)), ServedModel::Mlp(mlp)) =
-            (&runtime, &model)
-        {
-            match rt.execute(artifact, mlp, &inputs) {
-                Ok(pjrt_out) => {
-                    assert_eq!(
-                        report.outputs, pjrt_out,
-                        "NPE simulator and PJRT disagree — numeric bug"
-                    );
-                    true
-                }
-                Err(_) => false,
-            }
-        } else {
-            false
-        };
-
-        {
+/// Execute one formed batch on the active backend.
+fn dispatch(
+    backend: &mut Backend,
+    model: &ServedModel,
+    cfg: &BatcherConfig,
+    batch: Vec<(Instant, InferenceRequest)>,
+    metrics: &Arc<Mutex<CoordinatorMetrics>>,
+    cache: &Arc<ScheduleCache>,
+) {
+    let single = match backend {
+        Backend::Fleet(fleet) => {
+            // Hand off to the next idle device; the device thread sends
+            // the responses and accounts the metrics.
+            let depth = fleet.submit(FleetJob { requests: batch }) as u64;
             let mut m = metrics.lock().unwrap();
-            m.batches += 1;
-            m.requests += batch.len() as u64;
-            m.padded_slots += (padded_to - batch.len()) as u64;
-            m.sim_time_ns += report.time_ns;
-            m.sim_energy_pj += report.energy.total_pj();
-            if verified {
-                m.verified_batches += 1;
+            if depth > m.queue_peak {
+                m.queue_peak = depth;
             }
+            return;
         }
+        Backend::Single(single) => single,
+    };
 
-        let per_req_energy = report.energy.total_pj() / padded_to.max(1) as f64;
-        for (i, (t0, req)) in batch.into_iter().enumerate() {
-            let _ = req.resp.send(InferenceResponse {
-                output: report.outputs[i].clone(),
-                npe_time_ns: report.time_ns,
-                npe_energy_pj: per_req_energy,
-                wall: t0.elapsed(),
-                verified,
-            });
+    // Form the inputs (pad to the artifact batch if cross-verifying).
+    let mut inputs: Vec<Vec<i16>> = batch.iter().map(|(_, r)| r.input.clone()).collect();
+    let padded_to = if single.runtime.is_some() {
+        while inputs.len() < cfg.batch_size {
+            inputs.push(vec![0; model.input_len()]);
         }
+        cfg.batch_size
+    } else {
+        inputs.len()
+    };
+
+    let report: DataflowReport = match model {
+        ServedModel::Mlp(mlp) => single.mlp_engine.execute(mlp, &inputs),
+        ServedModel::Cnn(cnn) => single.cnn_engine.execute(cnn, &inputs),
+    };
+
+    // Cross-verify on the PJRT path when available (MLP artifacts
+    // only — the conv path is covered by the Rust reference model).
+    let verified = if let (Some((rt, artifact)), ServedModel::Mlp(mlp)) =
+        (single.runtime.as_ref(), model)
+    {
+        match rt.execute(artifact, mlp, &inputs) {
+            Ok(pjrt_out) => {
+                assert_eq!(
+                    report.outputs, pjrt_out,
+                    "NPE simulator and PJRT disagree — numeric bug"
+                );
+                true
+            }
+            Err(_) => false,
+        }
+    } else {
+        false
+    };
+
+    {
+        let mut m = metrics.lock().unwrap();
+        m.account_batch(0, &batch, &report, padded_to, verified, cache.stats());
+    }
+
+    let per_req_energy = report.energy.total_pj() / padded_to.max(1) as f64;
+    for (i, (t0, req)) in batch.into_iter().enumerate() {
+        let _ = req.resp.send(InferenceResponse {
+            output: report.outputs[i].clone(),
+            npe_time_ns: report.time_ns,
+            npe_energy_pj: per_req_energy,
+            wall: t0.elapsed(),
+            verified,
+        });
     }
 }
 
@@ -322,6 +442,8 @@ mod tests {
         let metrics = coord.metrics.lock().unwrap().clone();
         assert_eq!(metrics.requests, 8);
         assert!(metrics.batches <= 8, "requests were batched");
+        assert_eq!(metrics.latencies_ns.len(), 8, "one latency sample per request");
+        assert!(metrics.p99_us() >= metrics.p50_us());
         drop(metrics);
         coord.shutdown().unwrap();
     }
@@ -437,5 +559,57 @@ mod tests {
         let rx = coord.submit(vec![1; 16]);
         coord.shutdown().unwrap();
         assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
+    }
+
+    #[test]
+    fn shutdown_flushes_multiple_queued_batches() {
+        // Regression: with more than `batch_size` requests queued at
+        // shutdown, the tail used to be dropped after the first chunk.
+        // Every accepted request must be answered exactly once.
+        let m = mlp();
+        let inputs = m.synth_inputs(10, 33);
+        let expect = m.forward_batch(&inputs);
+        let coord = Coordinator::spawn(
+            m.clone(),
+            NpeGeometry::WALKTHROUGH,
+            BatcherConfig { batch_size: 4, max_wait: Duration::from_secs(10) },
+            None,
+        );
+        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+        coord.shutdown().unwrap();
+        for (rx, want) in rxs.into_iter().zip(expect) {
+            let resp = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+            assert_eq!(resp.output, want);
+            assert!(
+                rx.recv_timeout(Duration::from_millis(50)).is_err(),
+                "exactly one response per request"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_coordinator_serves_and_accounts() {
+        let m = mlp();
+        let inputs = m.synth_inputs(12, 41);
+        let expect = m.forward_batch(&inputs);
+        let coord = Coordinator::spawn_fleet(
+            ServedModel::Mlp(m.clone()),
+            vec![NpeGeometry::WALKTHROUGH, NpeGeometry::PAPER],
+            BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(5) },
+        );
+        let client = coord.client();
+        let rxs: Vec<_> = inputs.iter().map(|x| client.submit(x.clone())).collect();
+        for (rx, want) in rxs.into_iter().zip(expect) {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.output, want, "fleet response == reference");
+        }
+        let metrics_handle = Arc::clone(&coord.metrics);
+        coord.shutdown().unwrap();
+        let metrics = metrics_handle.lock().unwrap().clone();
+        assert_eq!(metrics.requests, 12);
+        assert_eq!(metrics.devices.len(), 2);
+        assert_eq!(metrics.devices.iter().map(|d| d.requests).sum::<u64>(), 12);
+        assert_eq!(metrics.latencies_ns.len(), 12);
+        assert!(metrics.cache_hits + metrics.cache_misses > 0);
     }
 }

@@ -4,24 +4,48 @@
 use super::{
     cached_mac_ppa, pe_array_leak_uw, DataflowEngine, DataflowReport, EnergyBreakdown,
 };
-use crate::mapper::NpeGeometry;
+use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::memory::NpeMemorySystem;
 use crate::model::QuantizedMlp;
 use crate::npe::Controller;
 use crate::ppa::TechParams;
 use crate::tcdmac::MacKind;
+use std::sync::Arc;
 
 /// OS engine: mapper-scheduled rolls on a PE array of the given MAC kind.
+///
+/// The engine is a reusable device handle: its controller (and the
+/// controller's Algorithm-1 memo) persists across `execute` calls, so a
+/// fleet device serving many batches never re-derives a schedule it has
+/// already computed — and with [`OsEngine::with_cache`] attached, never
+/// one *any* device has computed.
 pub struct OsEngine {
-    pub geometry: NpeGeometry,
-    pub kind: MacKind,
-    /// Run the bit-exact MAC models instead of the fast path.
+    // Private: the controller bakes these in at construction, so
+    // mutating them afterwards would desync execution from the labels.
+    geometry: NpeGeometry,
+    kind: MacKind,
+    /// Run the bit-exact MAC models instead of the fast path (re-synced
+    /// into the controller on every execute, so toggling is safe).
     pub bitexact: bool,
+    ctrl: Controller,
 }
 
 impl OsEngine {
     pub fn new(geometry: NpeGeometry, kind: MacKind) -> Self {
-        Self { geometry, kind, bitexact: false }
+        Self {
+            geometry,
+            kind,
+            bitexact: false,
+            ctrl: Controller::new(geometry, kind),
+        }
+    }
+
+    pub fn geometry(&self) -> NpeGeometry {
+        self.geometry
+    }
+
+    pub fn kind(&self) -> MacKind {
+        self.kind
     }
 
     pub fn tcd(geometry: NpeGeometry) -> Self {
@@ -30,6 +54,12 @@ impl OsEngine {
 
     pub fn conventional(geometry: NpeGeometry) -> Self {
         Self::new(geometry, super::best_conventional())
+    }
+
+    /// Attach a fleet-shared schedule cache (see [`ScheduleCache`]).
+    pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.ctrl = self.ctrl.with_cache(cache);
+        self
     }
 }
 
@@ -44,9 +74,9 @@ impl DataflowEngine for OsEngine {
     fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
         let tech = TechParams::DEFAULT;
         let b = inputs.len();
-        let mut ctrl = Controller::new(self.geometry, self.kind).bitexact(self.bitexact);
-        let (outputs, stats) = ctrl.run(mlp, inputs);
-        let schedule = ctrl.schedule(mlp, b);
+        self.ctrl.bitexact = self.bitexact;
+        let (outputs, stats) = self.ctrl.run(mlp, inputs);
+        let schedule = self.ctrl.schedule(mlp, b);
 
         // Active MAC-cycles: each roll keeps load.0 × load.1 PEs busy for
         // I (+1 for TCD) cycles; idle PEs are clock-gated (leakage only).

@@ -1,0 +1,100 @@
+//! One simulated NPE device: a long-lived engine handle pulling batches
+//! off the fleet queue until shutdown-drain completes.
+
+use super::queue::{FleetJob, FleetQueue};
+use crate::conv::CnnEngine;
+use crate::coordinator::{CoordinatorMetrics, InferenceResponse, ServedModel};
+use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
+use crate::mapper::{NpeGeometry, ScheduleCache};
+use std::sync::{Arc, Mutex};
+
+/// The per-device engine handle — constructed once per device thread and
+/// reused for every batch, so the Algorithm-1 memo (private and shared)
+/// persists across the device's whole lifetime.
+pub enum DeviceEngine {
+    Mlp(OsEngine),
+    Cnn(CnnEngine),
+}
+
+impl DeviceEngine {
+    /// Build the engine matching the served model kind, joined to the
+    /// fleet's shared schedule cache.
+    pub fn for_model(
+        model: &ServedModel,
+        geometry: NpeGeometry,
+        cache: Arc<ScheduleCache>,
+    ) -> Self {
+        match model {
+            ServedModel::Mlp(_) => DeviceEngine::Mlp(OsEngine::tcd(geometry).with_cache(cache)),
+            ServedModel::Cnn(_) => DeviceEngine::Cnn(CnnEngine::tcd(geometry).with_cache(cache)),
+        }
+    }
+
+    /// Execute one batch. The engine/model pairing is fixed at
+    /// construction, so a mismatch is a fleet-wiring bug.
+    pub fn execute(&mut self, model: &ServedModel, inputs: &[Vec<i16>]) -> DataflowReport {
+        match (self, model) {
+            (DeviceEngine::Mlp(e), ServedModel::Mlp(m)) => e.execute(m, inputs),
+            (DeviceEngine::Cnn(e), ServedModel::Cnn(c)) => e.execute(c, inputs),
+            _ => unreachable!("device engine does not match served model"),
+        }
+    }
+}
+
+/// The device thread body: pop → execute → respond → account, until the
+/// queue reports shutdown-drain complete.
+///
+/// All metric updates for a batch happen under one lock acquisition, so
+/// observers never see a half-updated snapshot (the stress suite asserts
+/// monotonic consistency on exactly this).
+pub(crate) fn device_main(
+    idx: usize,
+    model: Arc<ServedModel>,
+    geometry: NpeGeometry,
+    cache: Arc<ScheduleCache>,
+    queue: Arc<FleetQueue>,
+    metrics: Arc<Mutex<CoordinatorMetrics>>,
+) {
+    let mut engine = DeviceEngine::for_model(&model, geometry, Arc::clone(&cache));
+    while let Some(job) = queue.pop() {
+        let inputs: Vec<Vec<i16>> = job.requests.iter().map(|(_, r)| r.input.clone()).collect();
+        let report = engine.execute(&model, &inputs);
+        let n = job.requests.len();
+        let per_req_energy = report.energy.total_pj() / n.max(1) as f64;
+
+        // No padding and no PJRT verification on the fleet path.
+        {
+            let mut m = metrics.lock().unwrap();
+            m.account_batch(idx, &job.requests, &report, n, false, cache.stats());
+        }
+
+        for (i, (t0, req)) in job.requests.into_iter().enumerate() {
+            let _ = req.resp.send(InferenceResponse {
+                output: report.outputs[i].clone(),
+                npe_time_ns: report.time_ns,
+                npe_energy_pj: per_req_energy,
+                wall: t0.elapsed(),
+                // The PJRT cross-check runs on the single-NPE path only.
+                verified: false,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{MlpTopology, QuantizedMlp};
+
+    #[test]
+    fn engine_kind_follows_model() {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![8, 6, 2]), 3);
+        let model = ServedModel::Mlp(mlp.clone());
+        let cache = ScheduleCache::shared();
+        let mut dev = DeviceEngine::for_model(&model, NpeGeometry::WALKTHROUGH, cache);
+        assert!(matches!(dev, DeviceEngine::Mlp(_)));
+        let inputs = mlp.synth_inputs(2, 5);
+        let report = dev.execute(&model, &inputs);
+        assert_eq!(report.outputs, mlp.forward_batch(&inputs));
+    }
+}

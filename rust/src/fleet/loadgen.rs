@@ -1,0 +1,132 @@
+//! Deterministic open-loop load generator for the fleet benchmarks.
+//!
+//! **Seeding contract** (documented in the README and relied on by the
+//! e2e equivalence tests): for a fixed `(seed, rate_rps, requests)` and
+//! served model, [`poisson_arrivals`] returns a byte-identical arrival
+//! stream — same inter-arrival gaps, same synthetic inputs, in the same
+//! order — regardless of how many devices will serve it. One SplitMix64
+//! stream seeds everything, gap then input, request by request, so the
+//! stream never depends on wall-clock time, thread scheduling, or fleet
+//! size. That is what makes "same stream through 1 device and through 4
+//! devices" a meaningful bit-exactness experiment.
+//!
+//! The generator is *open-loop*: arrival times are fixed up front and
+//! submission never waits for responses, so a slow fleet shows up as
+//! queueing delay (latency percentiles), not as reduced offered load.
+
+use crate::coordinator::{Coordinator, ServedModel};
+use crate::model::mlp::FEATURE_BOUND;
+use crate::util::SplitMix64;
+use std::time::{Duration, Instant};
+
+/// Open-loop load description.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadGenConfig {
+    pub seed: u64,
+    /// Mean arrival rate, requests per second (Poisson process).
+    pub rate_rps: f64,
+    /// Total requests to generate.
+    pub requests: usize,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        Self { seed: 0x10AD_0001, rate_rps: 20_000.0, requests: 384 }
+    }
+}
+
+/// One generated request: offset from stream start, plus its input.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    /// Arrival offset from the start of the run, ns.
+    pub at_ns: u64,
+    pub input: Vec<i16>,
+}
+
+/// Generate the seeded Poisson arrival stream for `model` (exponential
+/// inter-arrival gaps with mean `1/rate_rps`; inputs drawn from the same
+/// deterministic stream the model zoo uses for synthetic features).
+pub fn poisson_arrivals(model: &ServedModel, cfg: &LoadGenConfig) -> Vec<Arrival> {
+    assert!(cfg.rate_rps > 0.0, "rate must be positive");
+    let mut rng = SplitMix64::new(cfg.seed);
+    let input_len = model.input_len();
+    let mut t_ns = 0u64;
+    (0..cfg.requests)
+        .map(|_| {
+            // Inverse-CDF exponential gap; 1-u is in (0, 1] so ln is finite.
+            let u = rng.next_f64();
+            let gap_s = -(1.0 - u).ln() / cfg.rate_rps;
+            t_ns += (gap_s * 1e9) as u64;
+            let input = (0..input_len)
+                .map(|_| rng.next_i16_bounded(FEATURE_BOUND))
+                .collect();
+            Arrival { at_ns: t_ns, input }
+        })
+        .collect()
+}
+
+/// Drive `arrivals` through a coordinator open-loop: submit each request
+/// at its scheduled offset, then wait for every response. Returns the
+/// responses in submission order (`None` where the fleet never answered
+/// within `timeout` — the callers assert there are no `None`s).
+pub fn run_open_loop(
+    coord: &Coordinator,
+    arrivals: &[Arrival],
+    timeout: Duration,
+) -> Vec<Option<Vec<i16>>> {
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(arrivals.len());
+    for a in arrivals {
+        let target = Duration::from_nanos(a.at_ns);
+        let elapsed = t0.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        rxs.push(coord.submit(a.input.clone()));
+    }
+    rxs.into_iter()
+        .map(|rx| rx.recv_timeout(timeout).ok().map(|resp| resp.output))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{MlpTopology, QuantizedMlp};
+
+    fn model() -> ServedModel {
+        ServedModel::Mlp(QuantizedMlp::synthesize(MlpTopology::new(vec![16, 8, 4]), 1))
+    }
+
+    #[test]
+    fn stream_is_deterministic() {
+        let cfg = LoadGenConfig { seed: 77, rate_rps: 1e6, requests: 64 };
+        let a = poisson_arrivals(&model(), &cfg);
+        let b = poisson_arrivals(&model(), &cfg);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_ns, y.at_ns);
+            assert_eq!(x.input, y.input);
+        }
+        // A different seed must give a different stream.
+        let c = poisson_arrivals(&model(), &LoadGenConfig { seed: 78, ..cfg });
+        assert!(a.iter().zip(&c).any(|(x, y)| x.at_ns != y.at_ns || x.input != y.input));
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_rate_shaped() {
+        let cfg = LoadGenConfig { seed: 5, rate_rps: 10_000.0, requests: 2000 };
+        let arr = poisson_arrivals(&model(), &cfg);
+        for w in arr.windows(2) {
+            assert!(w[1].at_ns >= w[0].at_ns, "arrival times are monotone");
+        }
+        // Mean gap ≈ 100 µs (1/10k s); allow generous sampling slack.
+        let mean_gap_ns = arr.last().unwrap().at_ns as f64 / arr.len() as f64;
+        assert!(
+            (50_000.0..200_000.0).contains(&mean_gap_ns),
+            "mean gap {mean_gap_ns} ns should be near 100k"
+        );
+        // Inputs carry the model's feature length.
+        assert!(arr.iter().all(|a| a.input.len() == 16));
+    }
+}

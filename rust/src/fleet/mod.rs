@@ -1,0 +1,163 @@
+//! The fleet layer — many simulated TCD-NPE devices behind one front
+//! door.
+//!
+//! The paper's Algorithm 1 schedules one NPE; production traffic needs
+//! many. The fleet runs `N` cycle-accurate NPE simulators (possibly with
+//! heterogeneous geometries — dataflow moves data, it does not change
+//! math, so responses stay bit-exact across device shapes) behind the
+//! coordinator's batcher:
+//!
+//! ```text
+//! clients → Coordinator (batcher) → ScheduleCache ┐
+//!                │                                 │ (shared Algorithm-1 memo)
+//!                └─► FleetQueue ─► device 0 ◄──────┤
+//!                              ├─► device 1 ◄──────┤
+//!                              ├─► …               │
+//!                              └─► device N-1 ◄────┘
+//! ```
+//!
+//! * [`queue`] — the shared MPMC work queue (idle devices pull, which is
+//!   least-loaded dispatch by construction) with drain-on-close
+//!   shutdown;
+//! * [`device`] — the long-lived per-device engine handle and thread
+//!   body (responses, metrics, cache accounting);
+//! * [`loadgen`] — the deterministic open-loop Poisson load generator
+//!   the benchmarks and e2e tests drive traffic with.
+//!
+//! Scheduling work is shared through [`crate::mapper::ScheduleCache`]:
+//! after first sight of a `(geometry, Γ)` shape — by *any* device — no
+//! device ever runs Algorithm 1 for it again.
+
+pub mod device;
+pub mod loadgen;
+pub mod queue;
+
+pub use device::DeviceEngine;
+pub use loadgen::{poisson_arrivals, run_open_loop, Arrival, LoadGenConfig};
+pub use queue::{FleetJob, FleetQueue};
+
+use crate::coordinator::{CoordinatorMetrics, DeviceMetrics, ServedModel};
+use crate::mapper::{NpeGeometry, ScheduleCache};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A running fleet: the shared queue plus one thread per device.
+pub struct Fleet {
+    queue: Arc<FleetQueue>,
+    devices: Vec<JoinHandle<()>>,
+}
+
+impl Fleet {
+    /// Spawn one device thread per geometry, all pulling from one queue
+    /// and sharing one schedule cache. Registers one metrics lane per
+    /// device (replacing any existing lanes).
+    pub fn spawn(
+        model: Arc<ServedModel>,
+        geometries: &[NpeGeometry],
+        cache: Arc<ScheduleCache>,
+        metrics: Arc<Mutex<CoordinatorMetrics>>,
+    ) -> Self {
+        assert!(!geometries.is_empty(), "a fleet needs at least one device");
+        metrics.lock().unwrap().devices = geometries
+            .iter()
+            .map(|g| DeviceMetrics::for_geometry(*g))
+            .collect();
+        let queue = FleetQueue::new();
+        let devices = geometries
+            .iter()
+            .enumerate()
+            .map(|(idx, &geometry)| {
+                let model = Arc::clone(&model);
+                let cache = Arc::clone(&cache);
+                let queue = Arc::clone(&queue);
+                let metrics = Arc::clone(&metrics);
+                std::thread::spawn(move || {
+                    device::device_main(idx, model, geometry, cache, queue, metrics)
+                })
+            })
+            .collect();
+        Self { queue, devices }
+    }
+
+    /// Hand a batch to the next idle device. Returns the queue depth
+    /// after the push (for the queue-peak metric).
+    pub fn submit(&self, job: FleetJob) -> usize {
+        self.queue.push(job)
+    }
+
+    /// Number of devices in the fleet.
+    pub fn size(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Close the queue and join every device after the drain: all work
+    /// submitted before this call is executed and answered.
+    ///
+    /// Panics if any device thread panicked — a dead device has dropped
+    /// a popped job, so the "every accepted request is answered" promise
+    /// is broken and must surface (through the coordinator thread this
+    /// becomes `Coordinator::shutdown`'s error, not a silent `Ok`).
+    pub fn shutdown(self) {
+        self.queue.close();
+        let mut dead = 0usize;
+        for d in self.devices {
+            if d.join().is_err() {
+                dead += 1;
+            }
+        }
+        assert!(dead == 0, "{dead} fleet device(s) panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::InferenceRequest;
+    use crate::model::{MlpTopology, QuantizedMlp};
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn fleet_executes_and_drains_on_shutdown() {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![12, 8, 3]), 9);
+        let model = Arc::new(ServedModel::Mlp(mlp.clone()));
+        let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        let cache = ScheduleCache::shared();
+        let fleet = Fleet::spawn(
+            Arc::clone(&model),
+            &[NpeGeometry::WALKTHROUGH, NpeGeometry::PAPER],
+            Arc::clone(&cache),
+            Arc::clone(&metrics),
+        );
+        assert_eq!(fleet.size(), 2);
+
+        let inputs = mlp.synth_inputs(6, 4);
+        let expect = mlp.forward_batch(&inputs);
+        let mut rxs = Vec::new();
+        for chunk in inputs.chunks(2) {
+            let requests = chunk
+                .iter()
+                .map(|x| {
+                    let (resp, rx) = mpsc::channel();
+                    rxs.push(rx);
+                    (Instant::now(), InferenceRequest { input: x.clone(), resp })
+                })
+                .collect();
+            fleet.submit(FleetJob { requests });
+        }
+        // Shut down immediately: the drain must still answer everything.
+        fleet.shutdown();
+        for (rx, want) in rxs.into_iter().zip(expect) {
+            let got = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(got.output, want, "fleet output == reference, across geometries");
+        }
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.devices.len(), 2);
+        assert_eq!(m.devices.iter().map(|d| d.batches).sum::<u64>(), 3);
+        assert_eq!(m.devices.iter().map(|d| d.requests).sum::<u64>(), 6);
+        assert_eq!(m.latencies_ns.len(), 6);
+        assert_eq!(m.cache_hits + m.cache_misses, cache.stats().lookups());
+    }
+}

@@ -1,0 +1,149 @@
+//! The shared fleet work queue: mapped batches go in, idle devices pull
+//! them out.
+//!
+//! This is the work-stealing half of the dispatch policy: there is no
+//! per-device mailbox to balance — every device blocks on the one queue
+//! and the next free device takes the next batch, which is least-loaded
+//! dispatch by construction (a busy device simply isn't at the queue).
+//!
+//! Shutdown semantics are drain-then-exit: [`FleetQueue::close`] stops
+//! producers, but consumers keep popping until the queue is empty, so no
+//! accepted batch is ever dropped (the e2e suite asserts exactly-once
+//! delivery through shutdown).
+
+use crate::coordinator::InferenceRequest;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One batcher-formed unit of work: the requests riding in the batch,
+/// each with its submit timestamp (for wall-latency accounting).
+pub struct FleetJob {
+    pub requests: Vec<(Instant, InferenceRequest)>,
+}
+
+impl FleetJob {
+    /// Number of requests riding in this job.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+#[derive(Default)]
+struct QueueState {
+    jobs: VecDeque<FleetJob>,
+    closed: bool,
+}
+
+/// MPMC blocking queue of [`FleetJob`]s (Mutex + Condvar; the offline
+/// crate set has no crossbeam, and the coordinator's dispatch rate is
+/// nowhere near lock contention territory).
+#[derive(Default)]
+pub struct FleetQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+impl FleetQueue {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Enqueue a job and wake one idle device. Returns the queue depth
+    /// right after the push (the coordinator folds it into the
+    /// queue-peak metric). Panics if the queue is already closed — the
+    /// coordinator closes it only after the batcher loop has flushed its
+    /// last job, so a push-after-close is a sequencing bug, not a
+    /// runtime condition.
+    pub fn push(&self, job: FleetJob) -> usize {
+        let mut s = self.state.lock().unwrap();
+        assert!(!s.closed, "push after close");
+        s.jobs.push_back(job);
+        self.ready.notify_one();
+        s.jobs.len()
+    }
+
+    /// Block until a job is available or the queue is closed *and*
+    /// drained. `None` means "no more work ever" — the device exits.
+    pub fn pop(&self) -> Option<FleetJob> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = s.jobs.pop_front() {
+                return Some(job);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.ready.wait(s).unwrap();
+        }
+    }
+
+    /// Stop accepting work and wake every device so the drain can finish.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Jobs currently waiting (not including ones being executed).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn job_of(n: usize) -> FleetJob {
+        let requests = (0..n)
+            .map(|_| {
+                // Nothing responds in these tests; the receiver can drop.
+                let (resp, _rx) = mpsc::channel();
+                (Instant::now(), InferenceRequest { input: vec![0; 4], resp })
+            })
+            .collect();
+        FleetJob { requests }
+    }
+
+    #[test]
+    fn fifo_and_depth() {
+        let q = FleetQueue::new();
+        assert_eq!(q.push(job_of(1)), 1);
+        assert_eq!(q.push(job_of(2)), 2, "push reports depth after insert");
+        assert_eq!(q.pop().unwrap().len(), 1);
+        assert_eq!(q.pop().unwrap().len(), 2);
+        assert_eq!(q.depth(), 0);
+        q.close();
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn close_drains_before_none() {
+        let q = FleetQueue::new();
+        q.push(job_of(3));
+        q.close();
+        assert_eq!(q.pop().unwrap().len(), 3, "queued work survives close");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn blocked_consumers_wake_on_close() {
+        let q = FleetQueue::new();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || q.pop().is_none())
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        for h in handles {
+            assert!(h.join().unwrap(), "blocked pop returns None after close");
+        }
+    }
+}

@@ -34,7 +34,14 @@
 //! * [`runtime`] — PJRT executor loading the JAX/Pallas-lowered HLO
 //!   artifacts (`artifacts/*.hlo.txt`) for the numeric reference path.
 //! * [`coordinator`] — the serving layer: request router, batch
-//!   accumulator, scheduler integration and metrics.
+//!   accumulator, scheduler integration and metrics (wall-latency
+//!   percentiles, schedule-cache counters, per-device lanes).
+//! * [`fleet`] — many simulated NPE devices behind the coordinator:
+//!   client → batcher → schedule cache → fleet queue → N devices. A
+//!   shared work queue feeds idle devices (least-loaded by
+//!   construction), a memoized `(geometry, Γ)` schedule cache skips
+//!   Algorithm 1 for every shape already seen, and a deterministic
+//!   seeded-Poisson load generator drives the throughput benches.
 //! * [`bench`] — generators for every table and figure of the paper's
 //!   evaluation (shared between the CLI and the criterion benches).
 
@@ -43,6 +50,7 @@ pub mod bitsim;
 pub mod conv;
 pub mod coordinator;
 pub mod dataflow;
+pub mod fleet;
 pub mod mapper;
 pub mod memory;
 pub mod model;

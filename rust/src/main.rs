@@ -7,11 +7,15 @@
 use anyhow::{anyhow, Context, Result};
 use std::time::Duration;
 use tcd_npe::bench;
-use tcd_npe::coordinator::{BatcherConfig, Coordinator};
+use tcd_npe::conv::QuantizedCnn;
+use tcd_npe::coordinator::{BatcherConfig, Coordinator, ServedModel};
 use tcd_npe::dataflow::{DataflowEngine, OsEngine};
+use tcd_npe::fleet::{poisson_arrivals, run_open_loop, LoadGenConfig};
 use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry};
 use tcd_npe::memory::{FmArrangement, WMemArrangement, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
-use tcd_npe::model::{benchmarks, MlpTopology, QuantizedMlp};
+use tcd_npe::model::{
+    benchmark_by_name, benchmarks, cnn_benchmark_by_name, MlpTopology, QuantizedMlp,
+};
 use tcd_npe::runtime::{ArtifactManifest, PjrtRuntime};
 use tcd_npe::util::TextTable;
 
@@ -32,6 +36,10 @@ System:
   schedule <topo> <batches>  Algorithm-1 schedule for an MLP, e.g. 784:700:10 10
   mem-report <topo> <K> <N>  Fig.-7 data arrangement for a config
   serve [--requests N]       run the serving coordinator demo (simulator)
+  fleet [--devices N] [--requests N] [--rate RPS] [--model NAME]
+                             serve a seeded Poisson load on an N-device fleet
+  fleet --bench [--json PATH]
+                             device-count sweep (1/2/4/8) + BENCH_fleet.json
   verify [artifact-dir]      cross-check NPE simulator vs PJRT artifacts
   ablate <which>             ablations: geometry | batch | voltage | mac | all
 ";
@@ -85,6 +93,26 @@ fn main() -> Result<()> {
                 .transpose()?
                 .unwrap_or(64);
             cmd_serve(requests)?;
+        }
+        "fleet" => {
+            if args.iter().any(|a| a == "--bench") {
+                cmd_fleet_bench(flag_value(&args, "--json"))?;
+            } else {
+                let devices = flag_value(&args, "--devices")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(4);
+                let requests = flag_value(&args, "--requests")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(256);
+                let rate = flag_value(&args, "--rate")
+                    .map(|s| s.parse())
+                    .transpose()?
+                    .unwrap_or(20_000.0);
+                let model = flag_value(&args, "--model").unwrap_or("Iris");
+                cmd_fleet(devices, requests, rate, model)?;
+            }
         }
         "verify" => {
             let dir = args.get(1).map(String::as_str).unwrap_or("artifacts");
@@ -214,6 +242,56 @@ fn cmd_serve(requests: usize) -> Result<()> {
     println!("served {ok}/{requests}");
     println!("{}", coord.metrics.lock().unwrap().render());
     coord.shutdown()?;
+    Ok(())
+}
+
+fn cmd_fleet(devices: usize, requests: usize, rate: f64, model_name: &str) -> Result<()> {
+    // Resolve against the MLP zoo first, then the CNN zoo.
+    let model = if let Some(b) = benchmark_by_name(model_name) {
+        println!(
+            "fleet: {devices} x 16x8 NPE serving {} ({})",
+            b.dataset,
+            b.topology.display()
+        );
+        ServedModel::Mlp(QuantizedMlp::synthesize(b.topology.clone(), 0xF1EE7))
+    } else if let Some(b) = cnn_benchmark_by_name(model_name) {
+        println!("fleet: {devices} x 16x8 NPE serving {} ({})", b.network, b.dataset);
+        ServedModel::Cnn(QuantizedCnn::synthesize(b.topology.clone(), 0xF1EE7))
+    } else {
+        return Err(anyhow!("unknown model {model_name:?} (MLP dataset or CNN name)"));
+    };
+    let load = LoadGenConfig { seed: 0x10AD_0001, rate_rps: rate, requests };
+    let arrivals = poisson_arrivals(&model, &load);
+    let coord = Coordinator::spawn_fleet(
+        model,
+        vec![NpeGeometry::PAPER; devices],
+        BatcherConfig::new(8, Duration::from_micros(500)),
+    );
+    println!("offering {requests} Poisson requests at {rate:.0} req/s (seed {:#x})", load.seed);
+    let responses = run_open_loop(&coord, &arrivals, Duration::from_secs(60));
+    let answered = responses.iter().filter(|o| o.is_some()).count();
+    let metrics = std::sync::Arc::clone(&coord.metrics);
+    coord.shutdown()?;
+    println!("answered {answered}/{requests}\n");
+    print!("{}", metrics.lock().unwrap().clone());
+    Ok(())
+}
+
+fn cmd_fleet_bench(json_path: Option<&str>) -> Result<()> {
+    let load = LoadGenConfig::default();
+    let rows = bench::fleet_rows(&load);
+    println!("{}", bench::render_fleet_table(&rows, &load));
+    let mapper = bench::mapper_cache_bench(200);
+    println!(
+        "mapper: {} shapes, cold {:.1} us/iter vs cached {:.1} us/iter ({:.0}x)",
+        mapper.shapes,
+        mapper.cold_us,
+        mapper.cached_us,
+        mapper.speedup()
+    );
+    let path = json_path.unwrap_or("BENCH_fleet.json");
+    std::fs::write(path, bench::fleet_json(&rows, &mapper, &load))?;
+    println!("wrote {path}");
     Ok(())
 }
 

@@ -1,0 +1,236 @@
+//! The schedule cache — memoized Algorithm-1 results for fleet serving.
+//!
+//! Algorithm 1 is deterministic: for a fixed [`NpeGeometry`] and layer
+//! problem [`Gamma`] it always produces the same optimal execution tree
+//! and event sequence. A serving system therefore never needs to run the
+//! mapper twice for a shape it has already seen — this module provides
+//! the shared, thread-safe `(geometry, Γ) → schedule` store the fleet
+//! devices consult before falling back to the DP.
+//!
+//! Entries are handed out as [`Arc<CachedSchedule>`]: a cache hit clones
+//! one pointer, never the event list or the execution tree, so schedule
+//! "cloning" on the steady-state hot path is a refcount bump. Hit/miss
+//! counters are lock-free atomics surfaced through
+//! [`crate::coordinator::CoordinatorMetrics`].
+
+use super::schedule::bfs_events;
+use super::tree::ExecNode;
+use super::{Gamma, LayerSchedule, MapperTree, ModelSchedule, NpeGeometry};
+use crate::model::MlpTopology;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One memoized mapper result: the flat event sequence (what the
+/// accounting consumes) *and* the optimal execution tree (what the
+/// controller expands into per-roll work assignments). Caching both
+/// means a hit skips Algorithm 1 entirely — no DP, no BFS re-walk.
+#[derive(Debug, Clone)]
+pub struct CachedSchedule {
+    pub layer: LayerSchedule,
+    /// `None` iff the problem is empty (`batches == 0` or `neurons == 0`).
+    pub exec: Option<ExecNode>,
+}
+
+/// Snapshot of the cache counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0.0 when untouched).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Thread-safe memo of Algorithm-1 schedules, shared by every device of
+/// a fleet (and by the single-NPE coordinator path, so both report the
+/// same counters).
+#[derive(Debug, Default)]
+pub struct ScheduleCache {
+    map: Mutex<HashMap<(NpeGeometry, Gamma), Arc<CachedSchedule>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ScheduleCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The usual construction: one shared cache behind an [`Arc`].
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Look `gamma` up for `mapper`'s geometry; on a miss, run Algorithm 1
+    /// on `mapper` and remember the result.
+    ///
+    /// The DP runs *outside* the map lock: a large Γ can take a while and
+    /// concurrent devices must not stall on it. Two devices racing on the
+    /// same miss both compute (identical, deterministic) results and the
+    /// first insert wins; both misses are counted, which is exactly what
+    /// the "wasted mapper work" metric should show.
+    pub fn get_or_compute(&self, mapper: &mut MapperTree, gamma: Gamma) -> Arc<CachedSchedule> {
+        let key = (mapper.geometry, gamma);
+        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let exec = mapper.best(gamma.batches, gamma.neurons);
+        let events = exec.as_ref().map(bfs_events).unwrap_or_default();
+        let entry = Arc::new(CachedSchedule {
+            layer: LayerSchedule { gamma, geometry: mapper.geometry, events },
+            exec,
+        });
+        let mut map = self.map.lock().unwrap();
+        Arc::clone(map.entry(key).or_insert(entry))
+    }
+
+    /// Assemble a whole-model schedule from cached layers (the cached
+    /// twin of [`MapperTree::schedule_model`]). Layer events are cloned
+    /// out of the Arc'd entries — small Vecs, and only on the accounting
+    /// path; the execution path uses the Arc'd trees directly.
+    pub fn schedule_model(
+        &self,
+        mapper: &mut MapperTree,
+        topo: &MlpTopology,
+        batches: usize,
+    ) -> ModelSchedule {
+        let layers = topo
+            .transitions()
+            .map(|(i, u)| {
+                self.get_or_compute(mapper, Gamma::new(batches, i, u))
+                    .layer
+                    .clone()
+            })
+            .collect();
+        ModelSchedule { layers }
+    }
+
+    /// Counter snapshot (hits/misses observed so far).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of distinct `(geometry, Γ)` entries stored.
+    pub fn entries(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_returns_identical_schedule() {
+        let cache = ScheduleCache::new();
+        let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        let gamma = Gamma::new(5, 42, 7);
+        let fresh = MapperTree::new(NpeGeometry::WALKTHROUGH).schedule_layer(gamma);
+        let a = cache.get_or_compute(&mut mapper, gamma);
+        let b = cache.get_or_compute(&mut mapper, gamma);
+        assert!(Arc::ptr_eq(&a, &b), "hit shares the entry, no re-clone");
+        assert_eq!(a.layer.events, fresh.events);
+        assert_eq!(a.layer.gamma, gamma);
+        assert_eq!(
+            a.exec.as_ref().unwrap().total_rolls(),
+            fresh.total_rolls(),
+            "cached exec tree and fresh schedule agree on roll count"
+        );
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.entries(), 1);
+    }
+
+    #[test]
+    fn distinct_geometries_do_not_collide() {
+        let cache = ScheduleCache::new();
+        let gamma = Gamma::new(3, 10, 9);
+        let mut small = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        let mut big = MapperTree::new(NpeGeometry::PAPER);
+        let a = cache.get_or_compute(&mut small, gamma);
+        let b = cache.get_or_compute(&mut big, gamma);
+        assert_eq!(cache.entries(), 2);
+        assert_eq!(a.layer.geometry, NpeGeometry::WALKTHROUGH);
+        assert_eq!(b.layer.geometry, NpeGeometry::PAPER);
+        assert_ne!(a.layer.total_rolls(), 0);
+        assert_ne!(b.layer.total_rolls(), 0);
+    }
+
+    #[test]
+    fn empty_problem_is_cacheable() {
+        let cache = ScheduleCache::new();
+        let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        let e = cache.get_or_compute(&mut mapper, Gamma::new(0, 8, 4));
+        assert!(e.exec.is_none());
+        assert!(e.layer.events.is_empty());
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn schedule_model_matches_uncached() {
+        let topo = MlpTopology::new(vec![16, 12, 6, 4]);
+        let cache = ScheduleCache::new();
+        let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+        let cached = cache.schedule_model(&mut mapper, &topo, 9);
+        let plain = MapperTree::new(NpeGeometry::PAPER).schedule_model(&topo, 9);
+        assert_eq!(cached.layers.len(), plain.layers.len());
+        for (c, p) in cached.layers.iter().zip(&plain.layers) {
+            assert_eq!(c.gamma, p.gamma);
+            assert_eq!(c.events, p.events);
+        }
+        // 3 misses on first sight, 3 hits on the second assembly.
+        let _ = cache.schedule_model(&mut mapper, &topo, 9);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (3, 3));
+        assert_eq!(s.lookups(), 6);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_lookups_are_consistent() {
+        // 8 threads hammering the same small Γ set: every returned
+        // schedule must equal the fresh computation, and the counters
+        // must add up to the exact number of lookups issued.
+        let cache = ScheduleCache::shared();
+        let gammas: Vec<Gamma> = (1..=4)
+            .flat_map(|b| (1..=4).map(move |u| Gamma::new(b, 8, u)))
+            .collect();
+        let per_thread = 50usize;
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let cache = Arc::clone(&cache);
+                let gammas = gammas.clone();
+                s.spawn(move || {
+                    let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+                    for i in 0..per_thread {
+                        let g = gammas[(t + i) % gammas.len()];
+                        let got = cache.get_or_compute(&mut mapper, g);
+                        let want = MapperTree::new(NpeGeometry::WALKTHROUGH).schedule_layer(g);
+                        assert_eq!(got.layer.events, want.events);
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.lookups(), 8 * per_thread as u64);
+        assert!(s.hits >= s.lookups() - 2 * gammas.len() as u64 * 8);
+        assert!(cache.entries() <= gammas.len());
+    }
+}

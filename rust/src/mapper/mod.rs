@@ -13,11 +13,16 @@
 //!   tree (Fig. 6B);
 //! * [`schedule`] — BFS over the execution tree into the flat event
 //!   sequence the controller consumes (Fig. 6C), utilization accounting
-//!   (Fig. 5), and the multi-layer / multi-batch driver over a whole MLP.
+//!   (Fig. 5), and the multi-layer / multi-batch driver over a whole MLP;
+//! * [`cache`] — the thread-safe `(geometry, Γ) → schedule` memo the
+//!   fleet devices share, so steady-state serving skips Algorithm 1
+//!   entirely after first sight of a shape.
 
+pub mod cache;
 pub mod schedule;
 pub mod tree;
 
+pub use cache::{CacheStats, CachedSchedule, ScheduleCache};
 pub use schedule::{LayerSchedule, ModelSchedule, ScheduledEvent};
 pub use tree::{ExecNode, MapperTree};
 

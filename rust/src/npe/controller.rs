@@ -4,9 +4,10 @@
 
 use super::activation::ActivationUnit;
 use super::pe_array::PeArray;
-use crate::mapper::{Gamma, MapperTree, NpeGeometry};
+use crate::mapper::{Gamma, MapperTree, NpeGeometry, ScheduleCache};
 use crate::model::QuantizedMlp;
 use crate::tcdmac::MacKind;
+use std::sync::Arc;
 
 /// Execution statistics of one model run.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
@@ -42,10 +43,17 @@ pub enum CtrlState {
 }
 
 /// The controller driving one PE array.
+///
+/// Controllers are *device handles*: one lives for the lifetime of a
+/// simulated NPE and is reused across batches, so its private mapper
+/// memo (and, when attached, the fleet-wide [`ScheduleCache`]) carries
+/// over from batch to batch instead of re-running Algorithm 1.
 pub struct Controller {
     pub geometry: NpeGeometry,
     pub kind: MacKind,
     mapper: MapperTree,
+    /// Fleet-shared Algorithm-1 memo; `None` → the private mapper only.
+    cache: Option<Arc<ScheduleCache>>,
     /// Use the bit-exact MAC models (slow, for verification) instead of
     /// the fast 64-bit path.
     pub bitexact: bool,
@@ -57,12 +65,20 @@ impl Controller {
             geometry,
             kind,
             mapper: MapperTree::new(geometry),
+            cache: None,
             bitexact: false,
         }
     }
 
     pub fn bitexact(mut self, on: bool) -> Self {
         self.bitexact = on;
+        self
+    }
+
+    /// Attach a shared schedule cache: layer problems are looked up (and
+    /// published) there before falling back to the private mapper DP.
+    pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.cache = Some(cache);
         self
     }
 
@@ -82,13 +98,24 @@ impl Controller {
 
         for (layer, (fan_in, fan_out)) in mlp.topology.transitions().enumerate() {
             let act = ActivationUnit::new(layer + 1 < n_layers);
-            let node = self
-                .mapper
-                .best(b, fan_out)
-                .expect("non-empty layer problem");
             let batches: Vec<usize> = (0..b).collect();
             let neurons: Vec<usize> = (0..fan_out).collect();
-            let rolls = node.assignments(&batches, &neurons);
+            let rolls = match &self.cache {
+                Some(cache) => {
+                    let entry = cache
+                        .get_or_compute(&mut self.mapper, Gamma::new(b, fan_in, fan_out));
+                    entry
+                        .exec
+                        .as_ref()
+                        .expect("non-empty layer problem")
+                        .assignments(&batches, &neurons)
+                }
+                None => self
+                    .mapper
+                    .best(b, fan_out)
+                    .expect("non-empty layer problem")
+                    .assignments(&batches, &neurons),
+            };
 
             let mut pong: Vec<Vec<i16>> = vec![vec![0; fan_out]; b];
             let mut last_config = None;
@@ -107,7 +134,6 @@ impl Controller {
                 }
                 stats.rolls += 1;
             }
-            let _ = fan_in;
             ping = pong;
             stats.layer_swaps += 1;
         }
@@ -116,6 +142,12 @@ impl Controller {
     }
 
     /// The schedule the controller would execute (for reports/tests).
+    ///
+    /// Deliberately served from the *private* mapper memo, not the
+    /// shared cache: [`Controller::run`] already issued one cache lookup
+    /// per layer, and a second lookup here would double-count every
+    /// batch as a guaranteed hit, inflating the fleet's hit-rate metric
+    /// (the private memo makes this path just as cheap).
     pub fn schedule(&mut self, mlp: &QuantizedMlp, batches: usize) -> crate::mapper::ModelSchedule {
         self.mapper.schedule_model(&mlp.topology, batches)
     }
@@ -194,6 +226,29 @@ mod tests {
         let predicted = ctrl.predicted_compute_cycles(&mlp, 5);
         let (_, stats) = ctrl.run(&mlp, &inputs);
         assert_eq!(stats.compute_cycles, predicted);
+    }
+
+    #[test]
+    fn cached_controller_matches_uncached() {
+        // Same outputs, same cycle stats, and the expected hit/miss
+        // trajectory: 3 layer transitions → 3 misses cold, 3 hits warm.
+        let mlp = tiny_mlp();
+        let inputs = mlp.synth_inputs(5, 23);
+        let cache = crate::mapper::ScheduleCache::shared();
+        let mut plain = Controller::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        let mut cached = Controller::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd)
+            .with_cache(Arc::clone(&cache));
+        let (a, sa) = plain.run(&mlp, &inputs);
+        let (b, sb) = cached.run(&mlp, &inputs);
+        assert_eq!(a, b, "cache must not change the math");
+        assert_eq!(sa, sb, "cache must not change the cycle model");
+        assert_eq!(cache.stats().misses, 3);
+        assert_eq!(cache.stats().hits, 0);
+        let (c, sc) = cached.run(&mlp, &inputs);
+        assert_eq!(c, b);
+        assert_eq!(sc, sb);
+        assert_eq!(cache.stats().hits, 3, "warm path hits every layer");
+        assert_eq!(cache.stats().misses, 3, "no new misses when warm");
     }
 
     #[test]

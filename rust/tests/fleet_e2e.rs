@@ -1,0 +1,219 @@
+//! Fleet end-to-end: determinism, bit-exact equivalence with the
+//! single-NPE coordinator across the full MLP + CNN zoo, exactly-once
+//! delivery through shutdown-with-queued-work, and the schedule-cache
+//! correctness property.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tcd_npe::conv::QuantizedCnn;
+use tcd_npe::coordinator::{BatcherConfig, Coordinator, ServedModel};
+use tcd_npe::fleet::{poisson_arrivals, run_open_loop, Arrival, LoadGenConfig};
+use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry, ScheduleCache};
+use tcd_npe::model::{benchmarks, cnn_benchmarks, QuantizedMlp};
+
+/// A heterogeneous 4-device fleet: responses must be bit-exact no
+/// matter which geometry executes the batch.
+fn four_geometries() -> Vec<NpeGeometry> {
+    vec![
+        NpeGeometry::PAPER,
+        NpeGeometry::PAPER,
+        NpeGeometry::WALKTHROUGH,
+        NpeGeometry::new(8, 4),
+    ]
+}
+
+fn batcher() -> BatcherConfig {
+    BatcherConfig::new(2, Duration::from_millis(2))
+}
+
+/// Drive the stream and unwrap every response (panics on any loss).
+fn serve_stream(coord: &Coordinator, arrivals: &[Arrival]) -> Vec<Vec<i16>> {
+    run_open_loop(coord, arrivals, Duration::from_secs(120))
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| o.unwrap_or_else(|| panic!("request {i} lost")))
+        .collect()
+}
+
+#[test]
+fn fleet_matches_single_coordinator_on_full_mlp_zoo() {
+    for (idx, b) in benchmarks().into_iter().enumerate() {
+        let mlp = QuantizedMlp::synthesize(b.topology.clone(), 0x200_u64 + idx as u64);
+        let model = ServedModel::Mlp(mlp.clone());
+        let load = LoadGenConfig {
+            seed: 0xE2E0 + idx as u64,
+            rate_rps: 1e8,
+            requests: 5,
+        };
+        let arrivals = poisson_arrivals(&model, &load);
+        let expect: Vec<Vec<i16>> =
+            arrivals.iter().map(|a| mlp.forward_sample(&a.input)).collect();
+
+        // The pre-fleet single-NPE coordinator path.
+        let single = Coordinator::spawn(mlp.clone(), NpeGeometry::PAPER, batcher(), None);
+        let got_single = serve_stream(&single, &arrivals);
+        single.shutdown().unwrap();
+
+        // fleet(1): must match the single coordinator bit-exactly.
+        let fleet1 = Coordinator::spawn_fleet(
+            ServedModel::Mlp(mlp.clone()),
+            vec![NpeGeometry::PAPER],
+            batcher(),
+        );
+        let got_fleet1 = serve_stream(&fleet1, &arrivals);
+        fleet1.shutdown().unwrap();
+
+        // fleet(4), heterogeneous geometries.
+        let fleet4 =
+            Coordinator::spawn_fleet(ServedModel::Mlp(mlp.clone()), four_geometries(), batcher());
+        let got_fleet4 = serve_stream(&fleet4, &arrivals);
+        fleet4.shutdown().unwrap();
+
+        assert_eq!(got_single, expect, "{}: single == reference", b.dataset);
+        assert_eq!(got_fleet1, expect, "{}: fleet(1) == single", b.dataset);
+        assert_eq!(got_fleet4, expect, "{}: fleet(4) == single", b.dataset);
+    }
+}
+
+#[test]
+fn fleet_matches_single_coordinator_on_cnn_zoo() {
+    for (idx, b) in cnn_benchmarks().into_iter().enumerate() {
+        let cnn = QuantizedCnn::synthesize(b.topology.clone(), 0x300_u64 + idx as u64);
+        let model = ServedModel::Cnn(cnn.clone());
+        let load = LoadGenConfig {
+            seed: 0xC2E0 + idx as u64,
+            rate_rps: 1e8,
+            requests: 4,
+        };
+        let arrivals = poisson_arrivals(&model, &load);
+        let expect: Vec<Vec<i16>> =
+            arrivals.iter().map(|a| cnn.forward_sample(&a.input)).collect();
+
+        let single = Coordinator::spawn_cnn(cnn.clone(), NpeGeometry::PAPER, batcher());
+        let got_single = serve_stream(&single, &arrivals);
+        single.shutdown().unwrap();
+
+        let fleet4 =
+            Coordinator::spawn_fleet(ServedModel::Cnn(cnn.clone()), four_geometries(), batcher());
+        let got_fleet4 = serve_stream(&fleet4, &arrivals);
+        fleet4.shutdown().unwrap();
+
+        assert_eq!(got_single, expect, "{}: single == reference", b.network);
+        assert_eq!(got_fleet4, expect, "{}: fleet(4) == single", b.network);
+    }
+}
+
+#[test]
+fn same_seeded_stream_is_deterministic_across_fleet_runs() {
+    let b = benchmarks().into_iter().find(|b| b.dataset == "Wine").unwrap();
+    let mlp = QuantizedMlp::synthesize(b.topology, 0xD0_0D);
+    let load = LoadGenConfig { seed: 0x5EED, rate_rps: 1e7, requests: 24 };
+    let arrivals = poisson_arrivals(&ServedModel::Mlp(mlp.clone()), &load);
+    // Regenerating the stream must give byte-identical arrivals...
+    let again = poisson_arrivals(&ServedModel::Mlp(mlp.clone()), &load);
+    for (a, b) in arrivals.iter().zip(&again) {
+        assert_eq!(a.at_ns, b.at_ns);
+        assert_eq!(a.input, b.input);
+    }
+    // ...and two independent 4-device fleets must answer it identically,
+    // regardless of how the batches landed on devices.
+    let run = |arrivals: &[Arrival]| {
+        let coord = Coordinator::spawn_fleet(
+            ServedModel::Mlp(mlp.clone()),
+            four_geometries(),
+            BatcherConfig::new(4, Duration::from_millis(1)),
+        );
+        let out = serve_stream(&coord, arrivals);
+        coord.shutdown().unwrap();
+        out
+    };
+    assert_eq!(run(&arrivals), run(&again));
+}
+
+#[test]
+fn shutdown_with_queued_work_answers_every_request_exactly_once() {
+    // Long max_wait + small fills: most of the 50 requests are still in
+    // the batcher (or the fleet queue) when shutdown lands. None may be
+    // lost, none answered twice — including across the fleet drain.
+    let b = benchmarks().into_iter().find(|b| b.dataset == "Iris").unwrap();
+    let mlp = QuantizedMlp::synthesize(b.topology, 0xF10C);
+    let inputs = mlp.synth_inputs(50, 0x10AD);
+    let expect = mlp.forward_batch(&inputs);
+    let coord = Coordinator::spawn_fleet(
+        ServedModel::Mlp(mlp.clone()),
+        four_geometries(),
+        BatcherConfig::new(8, Duration::from_secs(30)),
+    );
+    let client = coord.client();
+    let rxs: Vec<_> = inputs.iter().map(|x| client.submit(x.clone())).collect();
+    let metrics = Arc::clone(&coord.metrics);
+    coord.shutdown().unwrap();
+
+    for (i, (rx, want)) in rxs.into_iter().zip(expect).enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap_or_else(|_| panic!("request {i} lost in shutdown"));
+        assert_eq!(resp.output, want, "request {i} answered with wrong batch row");
+        assert!(
+            rx.recv_timeout(Duration::from_millis(20)).is_err(),
+            "request {i} answered more than once"
+        );
+    }
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.requests, 50, "all accepted requests dispatched");
+    assert_eq!(m.latencies_ns.len(), 50);
+    assert_eq!(m.devices.iter().map(|d| d.requests).sum::<u64>(), 50);
+}
+
+#[test]
+fn schedule_cache_equals_fresh_mapper_for_all_small_shapes() {
+    // The satellite property: for every geometry ≤ 8×4 and every
+    // Γ(B, I, U) with B, I, U ≤ 16, the cached schedule is
+    // event-for-event equal to a freshly computed one, and the hit/miss
+    // counters add up to the lookups issued.
+    for rows in 1..=8usize {
+        for cols in 1..=4usize {
+            let geom = NpeGeometry::new(rows, cols);
+            let cache = ScheduleCache::new();
+            let mut cached_mapper = MapperTree::new(geom);
+            let mut fresh = MapperTree::new(geom);
+            let mut lookups = 0u64;
+            for b in 1..=16usize {
+                for i in 1..=16usize {
+                    for u in 1..=16usize {
+                        let gamma = Gamma::new(b, i, u);
+                        let got = cache.get_or_compute(&mut cached_mapper, gamma);
+                        let want = fresh.schedule_layer(gamma);
+                        lookups += 1;
+                        assert_eq!(
+                            got.layer.events, want.events,
+                            "{geom:?} Γ({b}, {i}, {u}): cached != fresh"
+                        );
+                        assert_eq!(got.layer.gamma, want.gamma);
+                        assert_eq!(got.layer.geometry, geom);
+                        assert!(got.layer.covers_exactly(), "{geom:?} Γ({b}, {i}, {u})");
+                    }
+                }
+            }
+            // Every (B, I, U) is a distinct key: all cold lookups miss.
+            let cold = cache.stats();
+            assert_eq!(cold.lookups(), lookups, "{geom:?}: counters add up");
+            assert_eq!(cold.misses, lookups, "{geom:?}: distinct shapes all miss");
+            assert_eq!(cold.hits, 0);
+            assert_eq!(cache.entries() as u64, lookups);
+            // The warm pass must hit on every single shape.
+            for b in 1..=16usize {
+                for i in 1..=16usize {
+                    for u in 1..=16usize {
+                        let _ = cache.get_or_compute(&mut cached_mapper, Gamma::new(b, i, u));
+                    }
+                }
+            }
+            let warm = cache.stats();
+            assert_eq!(warm.misses, lookups, "{geom:?}: warm pass adds no misses");
+            assert_eq!(warm.hits, lookups, "{geom:?}: warm pass hits everything");
+            assert_eq!(warm.lookups(), 2 * lookups);
+            assert!((warm.hit_rate() - 0.5).abs() < 1e-12);
+        }
+    }
+}

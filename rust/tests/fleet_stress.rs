@@ -1,0 +1,163 @@
+//! Coordinator/fleet stress: 32 concurrent client threads against a
+//! small batcher — no deadlock (bounded wall clock), monotonically
+//! consistent metrics, and wrong-length requests still observable in
+//! the `rejected` counter (regression guard for the PR-1 fix).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tcd_npe::coordinator::metrics::LATENCY_SAMPLE_CAP;
+use tcd_npe::coordinator::{BatcherConfig, Coordinator, ServedModel};
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::{MlpTopology, QuantizedMlp};
+
+const CLIENTS: usize = 32;
+const VALID_PER_CLIENT: usize = 12;
+const INVALID_PER_CLIENT: usize = 4;
+/// Generous no-deadlock bound for a debug-mode CI runner.
+const WALL_BOUND: Duration = Duration::from_secs(120);
+
+fn stress_mlp() -> QuantizedMlp {
+    QuantizedMlp::synthesize(MlpTopology::new(vec![16, 12, 4]), 0x57E55)
+}
+
+/// Watch the metrics while the storm runs: every counter must be
+/// non-decreasing and internally consistent in every snapshot.
+fn spawn_monitor(
+    coord: &Coordinator,
+    done: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<u64> {
+    let metrics = Arc::clone(&coord.metrics);
+    std::thread::spawn(move || {
+        let mut last_requests = 0u64;
+        let mut last_rejected = 0u64;
+        let mut last_batches = 0u64;
+        let mut last_latencies = 0usize;
+        let mut snapshots = 0u64;
+        while !done.load(Ordering::Relaxed) {
+            let m = metrics.lock().unwrap().clone();
+            assert!(m.requests >= last_requests, "requests went backwards");
+            assert!(m.rejected_requests >= last_rejected, "rejected went backwards");
+            assert!(m.batches >= last_batches, "batches went backwards");
+            assert!(m.latencies_ns.len() >= last_latencies, "latencies shrank");
+            assert!(m.batches <= m.requests.max(1), "more batches than requests");
+            assert!(
+                m.latencies_recorded == m.requests,
+                "one latency recorded per dispatched request (got {} for {})",
+                m.latencies_recorded,
+                m.requests
+            );
+            assert!(
+                m.latencies_ns.len() as u64 == m.requests.min(LATENCY_SAMPLE_CAP as u64),
+                "latency window holds min(requests, cap) samples"
+            );
+            let occupancy = m.batch_occupancy();
+            assert!((0.0..=1.0).contains(&occupancy), "occupancy {occupancy}");
+            assert_eq!(
+                m.devices.iter().map(|d| d.requests).sum::<u64>(),
+                m.requests,
+                "device lanes must partition the request count"
+            );
+            last_requests = m.requests;
+            last_rejected = m.rejected_requests;
+            last_batches = m.batches;
+            last_latencies = m.latencies_ns.len();
+            snapshots += 1;
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        snapshots
+    })
+}
+
+fn run_stress(coord: Coordinator, mlp: &QuantizedMlp) {
+    let t0 = Instant::now();
+    let done = Arc::new(AtomicBool::new(false));
+    let monitor = spawn_monitor(&coord, Arc::clone(&done));
+
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let client = coord.client();
+            let mlp = mlp.clone();
+            std::thread::spawn(move || {
+                let inputs = mlp.synth_inputs(VALID_PER_CLIENT, 0xC11E57 + c as u64);
+                let expect = mlp.forward_batch(&inputs);
+                let mut rxs = Vec::new();
+                for (i, x) in inputs.iter().enumerate() {
+                    rxs.push((client.submit(x.clone()), i));
+                    if i < INVALID_PER_CLIENT {
+                        // Interleave malformed traffic (wrong length).
+                        let bad = client.submit(vec![7; 3]);
+                        assert!(
+                            bad.recv_timeout(Duration::from_secs(60)).is_err(),
+                            "malformed request must disconnect, not answer"
+                        );
+                    }
+                }
+                for (rx, i) in rxs {
+                    let resp = rx
+                        .recv_timeout(Duration::from_secs(60))
+                        .unwrap_or_else(|e| panic!("client {c} request {i}: {e}"));
+                    assert_eq!(resp.output, expect[i], "client {c} request {i}");
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("client thread panicked");
+    }
+    done.store(true, Ordering::Relaxed);
+    let snapshots = monitor.join().expect("monitor panicked");
+    assert!(snapshots > 0, "monitor observed at least one snapshot");
+
+    assert!(
+        t0.elapsed() < WALL_BOUND,
+        "stress took {:?} — deadlock or pathological slowdown",
+        t0.elapsed()
+    );
+
+    let metrics = Arc::clone(&coord.metrics);
+    let cache = Arc::clone(&coord.cache);
+    coord.shutdown().unwrap();
+    let m = metrics.lock().unwrap().clone();
+    assert_eq!(m.requests, (CLIENTS * VALID_PER_CLIENT) as u64, "no valid request lost");
+    assert_eq!(
+        m.rejected_requests,
+        (CLIENTS * INVALID_PER_CLIENT) as u64,
+        "every malformed request counted"
+    );
+    assert_eq!(m.latencies_ns.len(), CLIENTS * VALID_PER_CLIENT);
+    assert!(m.batches >= 1);
+    assert!(m.p99_us() >= m.p50_us());
+    // The metrics snapshot of the cache counters matches the cache.
+    let stats = cache.stats();
+    assert_eq!(m.cache_hits + m.cache_misses, stats.lookups());
+    assert!(stats.hits > stats.misses, "steady state is hit-dominated");
+}
+
+#[test]
+fn stress_single_coordinator_32_clients() {
+    let mlp = stress_mlp();
+    let coord = Coordinator::spawn(
+        mlp.clone(),
+        NpeGeometry::WALKTHROUGH,
+        BatcherConfig::new(4, Duration::from_millis(1)),
+        None,
+    );
+    run_stress(coord, &mlp);
+}
+
+#[test]
+fn stress_fleet_coordinator_32_clients() {
+    let mlp = stress_mlp();
+    let coord = Coordinator::spawn_fleet(
+        ServedModel::Mlp(mlp.clone()),
+        vec![
+            NpeGeometry::PAPER,
+            NpeGeometry::WALKTHROUGH,
+            NpeGeometry::new(8, 4),
+            NpeGeometry::new(4, 4),
+        ],
+        BatcherConfig::new(4, Duration::from_millis(1)),
+    );
+    run_stress(coord, &mlp);
+}
