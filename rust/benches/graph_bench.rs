@@ -1,0 +1,32 @@
+//! Bench E8 — the graph compiler: scheduled rounds, cycles and energy of
+//! the DAG zoo under fused (passes + sibling-shared lowering) vs unfused
+//! (per-node) lowering.
+//!
+//! Run: `cargo bench --bench graph_bench`
+//!
+//! Emits `BENCH_graph.json` in the working directory so CI can archive
+//! the trajectory (round savings per DAG entry) across PRs.
+
+use tcd_npe::bench::{graph_json, graph_rows, render_graph_table, GRAPH_BATCHES};
+
+fn main() {
+    println!("=== graph compiler: fused vs unfused lowering, DAG zoo ===");
+    let rows = graph_rows(GRAPH_BATCHES);
+    println!("{}", render_graph_table(&rows, GRAPH_BATCHES));
+
+    for r in &rows {
+        println!(
+            "{:<14} rounds {:>4} fused / {:>4} unfused ({:.0}% saved)",
+            r.network,
+            r.fused_rounds,
+            r.unfused_rounds,
+            r.round_saving() * 100.0
+        );
+    }
+
+    let json = graph_json(&rows, GRAPH_BATCHES);
+    match std::fs::write("BENCH_graph.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_graph.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_graph.json: {e}"),
+    }
+}

@@ -1,0 +1,204 @@
+//! Graph-workload table: scheduled rounds, execution time and energy of
+//! the DAG zoo under fused vs unfused lowering — the trajectory table
+//! `BENCH_graph.json` tracks across PRs.
+//!
+//! "Fused" is the production path: the pass pipeline (dead-node
+//! elimination, ReLU folding, conv→pool fusion) followed by the
+//! sibling-sharing lowering. "Unfused" executes the raw graph with one Γ
+//! per parametric node — the baseline that shows what the graph compiler
+//! buys.
+
+use crate::dataflow::DataflowReport;
+use crate::graph::{lower_graph, optimize, GraphEngine, PassStats, QuantizedGraph};
+use crate::mapper::{MapperTree, NpeGeometry};
+use crate::model::zoo::graph_benchmarks;
+use crate::util::TextTable;
+
+/// Default batch count for the graph sweeps (conv branches carry B·P
+/// lowered rows, so this stays small like `CONV_BATCHES`).
+pub const GRAPH_BATCHES: usize = 2;
+
+/// One (DAG benchmark) measurement: fused vs unfused lowering on the
+/// TCD dataflow.
+#[derive(Debug, Clone)]
+pub struct GraphRow {
+    pub network: &'static str,
+    pub dataset: &'static str,
+    /// Raw-graph node count vs optimized node count.
+    pub nodes_raw: usize,
+    pub nodes_opt: usize,
+    pub passes: PassStats,
+    /// Algorithm-1 rounds of the fused (optimized + sibling-shared)
+    /// lowering vs the per-node baseline.
+    pub fused_rounds: usize,
+    pub unfused_rounds: usize,
+    pub fused: DataflowReport,
+    pub unfused: DataflowReport,
+}
+
+impl GraphRow {
+    /// Fraction of rounds the fused lowering saves (0.0 = none).
+    pub fn round_saving(&self) -> f64 {
+        if self.unfused_rounds == 0 {
+            0.0
+        } else {
+            1.0 - self.fused_rounds as f64 / self.unfused_rounds as f64
+        }
+    }
+}
+
+/// Run the DAG zoo fused and unfused on the paper-geometry TCD NPE.
+pub fn graph_rows(batches: usize) -> Vec<GraphRow> {
+    let geom = NpeGeometry::PAPER;
+    graph_benchmarks()
+        .into_iter()
+        .map(|b| {
+            let raw = QuantizedGraph::synthesize(b.graph.clone(), 0x6A0DE);
+            let (opt, passes) = optimize(&raw);
+            let inputs = raw.synth_inputs(batches, 0xDA7A);
+
+            // Throwaway lowerings just for round counts (the mapper DP is
+            // memoized and costs microseconds).
+            let mut mapper = MapperTree::new(geom);
+            let fused_rounds =
+                lower_graph(&mut mapper, None, &opt.graph, batches, true).total_rounds();
+            let unfused_rounds =
+                lower_graph(&mut mapper, None, &raw.graph, batches, false).total_rounds();
+
+            let fused = GraphEngine::tcd(geom).execute(&opt, &inputs);
+            let unfused = GraphEngine::tcd(geom).fused(false).execute(&raw, &inputs);
+            assert_eq!(
+                fused.outputs, unfused.outputs,
+                "{}: lowering must never change values",
+                b.network
+            );
+            GraphRow {
+                network: b.network,
+                dataset: b.dataset,
+                nodes_raw: raw.graph.n_nodes(),
+                nodes_opt: opt.graph.n_nodes(),
+                passes,
+                fused_rounds,
+                unfused_rounds,
+                fused,
+                unfused,
+            }
+        })
+        .collect()
+}
+
+/// Render the fused-vs-unfused comparison as a text table.
+pub fn render_graph_table(rows: &[GraphRow], batches: usize) -> String {
+    let mut t = TextTable::new(vec![
+        "Network",
+        "Nodes",
+        "Folded",
+        "Rounds (fused)",
+        "Rounds (unfused)",
+        "Saved",
+        "Cycles (fused)",
+        "Time (us)",
+        "Energy (uJ)",
+        "vs unfused",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.network.to_string(),
+            format!("{} -> {}", r.nodes_raw, r.nodes_opt),
+            format!(
+                "{}a+{}p",
+                r.passes.activations_folded, r.passes.pools_fused
+            ),
+            r.fused_rounds.to_string(),
+            r.unfused_rounds.to_string(),
+            format!("{:.0}%", r.round_saving() * 100.0),
+            r.fused.cycles.to_string(),
+            format!("{:.1}", r.fused.time_us()),
+            format!("{:.2}", r.fused.energy_uj()),
+            format!("{:.2}x", r.unfused.time_ns / r.fused.time_ns),
+        ]);
+    }
+    format!(
+        "DAG zoo on the 16x8 TCD-NPE, B={batches} (graph-compiler lowering)\n{}",
+        t.render()
+    )
+}
+
+/// Serialize the comparison as the `BENCH_graph.json` trajectory
+/// artifact. Hand-rolled JSON — the offline crate set has no serde.
+pub fn graph_json(rows: &[GraphRow], batches: usize) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"graph\",\n");
+    s.push_str(&format!("  \"batches\": {batches},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"network\": \"{}\", \"nodes_raw\": {}, \"nodes_opt\": {}, \
+             \"activations_folded\": {}, \"pools_fused\": {}, \
+             \"fused_rounds\": {}, \"unfused_rounds\": {}, \"round_saving\": {:.4}, \
+             \"fused_cycles\": {}, \"unfused_cycles\": {}, \
+             \"fused_time_us\": {:.3}, \"unfused_time_us\": {:.3}, \
+             \"fused_energy_uj\": {:.4}, \"unfused_energy_uj\": {:.4}}}{}\n",
+            r.network,
+            r.nodes_raw,
+            r.nodes_opt,
+            r.passes.activations_folded,
+            r.passes.pools_fused,
+            r.fused_rounds,
+            r.unfused_rounds,
+            r.round_saving(),
+            r.fused.cycles,
+            r.unfused.cycles,
+            r.fused.time_us(),
+            r.unfused.time_us(),
+            r.fused.energy_uj(),
+            r.unfused.energy_uj(),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fused_never_worse_and_strictly_better_somewhere() {
+        let rows = graph_rows(2);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(
+                r.fused_rounds <= r.unfused_rounds,
+                "{}: fused {} > unfused {}",
+                r.network,
+                r.fused_rounds,
+                r.unfused_rounds
+            );
+            assert!(r.fused.cycles <= r.unfused.cycles, "{}", r.network);
+        }
+        // The ISSUE acceptance bar: at least one zoo entry saves rounds.
+        assert!(
+            rows.iter().any(|r| r.fused_rounds < r.unfused_rounds),
+            "sibling sharing must save rounds on some entry"
+        );
+        // By construction that entry is the two-branch Inception.
+        let inception = rows.iter().find(|r| r.network == "InceptionMini").unwrap();
+        assert!(inception.fused_rounds < inception.unfused_rounds);
+        assert!(inception.round_saving() > 0.0);
+    }
+
+    #[test]
+    fn render_and_json_are_shaped() {
+        let rows = graph_rows(1);
+        let table = render_graph_table(&rows, 1);
+        assert!(table.contains("TinyResNet"));
+        assert!(table.contains("InceptionMini"));
+        assert!(table.contains("Rounds (fused)"));
+        let json = graph_json(&rows, 1);
+        assert!(json.contains("\"bench\": \"graph\""));
+        assert!(json.contains("\"network\": \"ResMLP\""));
+        assert!(json.trim_end().ends_with('}'));
+    }
+}

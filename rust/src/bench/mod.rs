@@ -7,6 +7,7 @@ pub mod ablation;
 pub mod convnet;
 pub mod fig10;
 pub mod fleet;
+pub mod graph;
 pub mod harness;
 pub mod table1;
 pub mod table2;
@@ -18,6 +19,7 @@ pub use fleet::{
     fleet_json, fleet_row, fleet_rows, mapper_cache_bench, render_fleet_table, FleetRow,
     MapperCacheBench, FLEET_DEVICE_COUNTS,
 };
+pub use graph::{graph_json, graph_rows, render_graph_table, GraphRow, GRAPH_BATCHES};
 pub use harness::BenchTimer;
 pub use table1::{render_table1, table1_rows};
 pub use table2::{render_table2, table2_rows, Table2Row, STREAM_SIZES};

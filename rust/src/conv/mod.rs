@@ -36,6 +36,64 @@ use crate::model::mlp::{FEATURE_BOUND, WEIGHT_BOUND};
 use crate::util::SplitMix64;
 use layer::CnnLayer as L;
 
+/// Direct nested-loop quantized 2-D convolution over one CHW feature
+/// map — the single source of truth for the reference index math
+/// (deliberately *not* via [`im2col`], so the GEMM lowering is
+/// cross-checked against independent indexing). `w` is the GEMM-ready
+/// kernel bank `[oc][patch_len]`; output is quantized (+ ReLU when
+/// `rectify`) exactly like the Fig.-4 output path. Shared by
+/// [`QuantizedCnn::forward_sample`] and the graph-compiler reference
+/// interpreter ([`crate::graph::QuantizedGraph`]).
+pub fn reference_conv2d(
+    x: &[i16],
+    in_shape: TensorShape,
+    conv: &Conv2dLayer,
+    w: &[i16],
+    rectify: bool,
+) -> Vec<i16> {
+    assert_eq!(x.len(), in_shape.features());
+    assert_eq!(w.len(), conv.n_weights());
+    let out_shape = conv.out_shape(in_shape);
+    let (kh, kw) = conv.kernel;
+    let (sh, sw) = conv.stride;
+    let (ph, pw) = conv.padding;
+    let patch_len = conv.patch_len();
+    let mut fm = vec![0i16; out_shape.features()];
+    for oc in 0..conv.out_channels {
+        let wrow = &w[oc * patch_len..(oc + 1) * patch_len];
+        for oy in 0..out_shape.h {
+            for ox in 0..out_shape.w {
+                let mut acc = 0i64;
+                for ic in 0..in_shape.c {
+                    let plane =
+                        &x[ic * in_shape.h * in_shape.w..(ic + 1) * in_shape.h * in_shape.w];
+                    for ky in 0..kh {
+                        let y = (oy * sh + ky) as isize - ph as isize;
+                        if y < 0 || y >= in_shape.h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let xx = (ox * sw + kx) as isize - pw as isize;
+                            if xx < 0 || xx >= in_shape.w as isize {
+                                continue;
+                            }
+                            let wv = wrow[ic * kh * kw + ky * kw + kx] as i32;
+                            let fv = plane[y as usize * in_shape.w + xx as usize] as i32;
+                            acc += (wv * fv) as i64;
+                        }
+                    }
+                }
+                fm[oc * out_shape.h * out_shape.w + oy * out_shape.w + ox] = if rectify {
+                    quantize_relu(acc)
+                } else {
+                    quantize_acc(acc)
+                };
+            }
+        }
+    }
+    fm
+}
+
 /// A fully materialized quantized CNN: one Q7.8 weight matrix per
 /// parametric (conv or dense) layer.
 ///
@@ -51,24 +109,19 @@ pub struct QuantizedCnn {
 }
 
 impl QuantizedCnn {
-    /// Deterministically synthesize weights (same SplitMix64 scheme and
-    /// magnitude bounds as [`crate::model::QuantizedMlp::synthesize`]).
+    /// Deterministically synthesize weights (same
+    /// [`crate::util::rng::synth_weights`] streams and magnitude bounds
+    /// as [`crate::model::QuantizedMlp::synthesize`]).
     pub fn synthesize(topology: CnnTopology, seed: u64) -> Self {
-        const GOLDEN: u64 = 0x9E3779B97F4A7C15;
         let mut weights = Vec::new();
-        let mut l = 0u64;
+        let mut l = 0usize;
         for (layer, input, _) in topology.layers_with_shapes() {
             let n_weights = match layer {
                 L::Conv(c) => c.n_weights(),
                 L::Pool(_) => continue,
                 L::Dense { out } => input.features() * out,
             };
-            let mut rng = SplitMix64::new(seed ^ GOLDEN.wrapping_mul(l + 1));
-            weights.push(
-                (0..n_weights)
-                    .map(|_| rng.next_i16_bounded(WEIGHT_BOUND))
-                    .collect(),
-            );
+            weights.push(crate::util::rng::synth_weights(seed, l, n_weights, WEIGHT_BOUND));
             l += 1;
         }
         Self { topology, weights, seed }
@@ -97,52 +150,11 @@ impl QuantizedCnn {
         let mut x: Vec<i16> = input.to_vec();
         let mut pi = 0usize;
 
-        for (layer, shape, out_shape) in self.topology.layers_with_shapes() {
+        for (layer, shape, _out_shape) in self.topology.layers_with_shapes() {
             match layer {
                 L::Conv(c) => {
-                    let (kh, kw) = c.kernel;
-                    let (sh, sw) = c.stride;
-                    let (ph, pw) = c.padding;
-                    let patch_len = c.patch_len();
-                    let w = &self.weights[pi];
                     let rectify = pi + 1 < n_param;
-                    let mut next = vec![0i16; out_shape.features()];
-                    for oc in 0..c.out_channels {
-                        let wrow = &w[oc * patch_len..(oc + 1) * patch_len];
-                        for oy in 0..out_shape.h {
-                            for ox in 0..out_shape.w {
-                                let mut acc = 0i64;
-                                for ic in 0..shape.c {
-                                    let plane =
-                                        &x[ic * shape.h * shape.w..(ic + 1) * shape.h * shape.w];
-                                    for ky in 0..kh {
-                                        let y = (oy * sh + ky) as isize - ph as isize;
-                                        if y < 0 || y >= shape.h as isize {
-                                            continue;
-                                        }
-                                        for kx in 0..kw {
-                                            let xx = (ox * sw + kx) as isize - pw as isize;
-                                            if xx < 0 || xx >= shape.w as isize {
-                                                continue;
-                                            }
-                                            let wv =
-                                                wrow[ic * kh * kw + ky * kw + kx] as i32;
-                                            let fv = plane[y as usize * shape.w + xx as usize]
-                                                as i32;
-                                            acc += (wv * fv) as i64;
-                                        }
-                                    }
-                                }
-                                next[oc * out_shape.h * out_shape.w + oy * out_shape.w + ox] =
-                                    if rectify {
-                                        quantize_relu(acc)
-                                    } else {
-                                        quantize_acc(acc)
-                                    };
-                            }
-                        }
-                    }
-                    x = next;
+                    x = reference_conv2d(&x, shape, &c, &self.weights[pi], rectify);
                     pi += 1;
                 }
                 L::Pool(p) => {

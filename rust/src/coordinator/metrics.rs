@@ -56,6 +56,9 @@ pub struct CoordinatorMetrics {
     pub cache_hits: u64,
     /// Schedule-cache misses observed so far.
     pub cache_misses: u64,
+    /// Schedule-cache LRU evictions observed so far (0 while the
+    /// working set fits the configured capacity).
+    pub cache_evictions: u64,
     /// Deepest the fleet work queue ever got (0 on the single path).
     pub queue_peak: u64,
     /// Sliding window over the most recent [`LATENCY_SAMPLE_CAP`] wall
@@ -128,6 +131,7 @@ impl CoordinatorMetrics {
         }
         self.cache_hits = cache.hits;
         self.cache_misses = cache.misses;
+        self.cache_evictions = cache.evictions;
         if let Some(l) = self.devices.get_mut(lane) {
             l.batches += 1;
             l.requests += batch.len() as u64;
@@ -172,7 +176,11 @@ impl CoordinatorMetrics {
 
     /// The snapshotted schedule-cache counters as a [`CacheStats`].
     pub fn cache_stats(&self) -> CacheStats {
-        CacheStats { hits: self.cache_hits, misses: self.cache_misses }
+        CacheStats {
+            hits: self.cache_hits,
+            misses: self.cache_misses,
+            evictions: self.cache_evictions,
+        }
     }
 
     /// Schedule-cache hit rate over all lookups so far.
@@ -244,10 +252,11 @@ impl fmt::Display for CoordinatorMetrics {
         )?;
         writeln!(
             f,
-            "schedule cache: {} hits / {} misses ({:.1}% hit rate)",
+            "schedule cache: {} hits / {} misses ({:.1}% hit rate), {} evicted",
             self.cache_hits,
             self.cache_misses,
             self.cache_hit_rate() * 100.0,
+            self.cache_evictions,
         )?;
         writeln!(
             f,
@@ -332,6 +341,7 @@ mod tests {
             requests: 4,
             cache_hits: 9,
             cache_misses: 1,
+            cache_evictions: 2,
             ..Default::default()
         };
         m.devices.push(DeviceMetrics::for_geometry(NpeGeometry::PAPER));
@@ -339,6 +349,8 @@ mod tests {
         let s = m.to_string();
         assert!(s.contains("9 hits / 1 misses"));
         assert!(s.contains("90.0% hit rate"));
+        assert!(s.contains("2 evicted"));
+        assert_eq!(m.cache_stats().evictions, 2);
         assert!(s.contains("device 0 [16x8]"));
         assert!(s.contains("device 1 [6x3]"));
         assert!(s.contains("p50/p95/p99"));

@@ -28,7 +28,8 @@ pub use metrics::{CoordinatorMetrics, DeviceMetrics};
 use crate::conv::{CnnEngine, QuantizedCnn};
 use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
 use crate::fleet::{Fleet, FleetJob};
-use crate::mapper::{NpeGeometry, ScheduleCache};
+use crate::graph::{GraphEngine, QuantizedGraph};
+use crate::mapper::{NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
 use crate::model::QuantizedMlp;
 use crate::runtime::PjrtRuntime;
 use anyhow::Result;
@@ -37,11 +38,13 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// A model the coordinator can serve: the Table-IV MLPs or a conv-zoo
-/// CNN (lowered through the im2col path).
+/// A model the coordinator can serve: the Table-IV MLPs, a conv-zoo CNN
+/// (lowered through the im2col path), or a DAG model (lowered through
+/// the graph compiler).
 pub enum ServedModel {
     Mlp(QuantizedMlp),
     Cnn(QuantizedCnn),
+    Graph(QuantizedGraph),
 }
 
 impl ServedModel {
@@ -50,6 +53,7 @@ impl ServedModel {
         match self {
             ServedModel::Mlp(m) => m.topology.inputs(),
             ServedModel::Cnn(c) => c.topology.input.features(),
+            ServedModel::Graph(g) => g.graph.input_shape().features(),
         }
     }
 }
@@ -128,6 +132,7 @@ fn submit_via(
 struct SingleBackend {
     mlp_engine: OsEngine,
     cnn_engine: CnnEngine,
+    graph_engine: GraphEngine,
     runtime: Option<(PjrtRuntime, String)>,
 }
 
@@ -159,6 +164,13 @@ impl Coordinator {
         Self::spawn_model(ServedModel::Cnn(cnn), geometry, cfg, None)
     }
 
+    /// Spawn the coordinator thread for a DAG model: requests carry the
+    /// graph input's flattened CHW features and execute through the
+    /// graph compiler's fused lowering (simulator only, like CNNs).
+    pub fn spawn_graph(graph: QuantizedGraph, geometry: NpeGeometry, cfg: BatcherConfig) -> Self {
+        Self::spawn_model(ServedModel::Graph(graph), geometry, cfg, None)
+    }
+
     /// Spawn the coordinator thread for any [`ServedModel`] on a single
     /// simulated NPE.
     ///
@@ -176,7 +188,7 @@ impl Coordinator {
             devices: vec![DeviceMetrics::for_geometry(geometry)],
             ..CoordinatorMetrics::default()
         }));
-        let cache = ScheduleCache::shared();
+        let cache = ScheduleCache::shared_bounded(DEFAULT_SERVING_CACHE_CAPACITY);
         let metrics_thread = Arc::clone(&metrics);
         let cache_thread = Arc::clone(&cache);
         let handle = std::thread::spawn(move || {
@@ -187,11 +199,12 @@ impl Coordinator {
                     rt.load(&spec.artifact, cfg.batch_size).ok()?;
                     Some((rt, spec.artifact))
                 }),
-                ServedModel::Cnn(_) => None,
+                ServedModel::Cnn(_) | ServedModel::Graph(_) => None,
             };
             let backend = Backend::Single(Box::new(SingleBackend {
                 mlp_engine: OsEngine::tcd(geometry).with_cache(Arc::clone(&cache_thread)),
                 cnn_engine: CnnEngine::tcd(geometry).with_cache(Arc::clone(&cache_thread)),
+                graph_engine: GraphEngine::tcd(geometry).with_cache(Arc::clone(&cache_thread)),
                 runtime,
             }));
             run_loop(rx, Arc::new(model), cfg, backend, metrics_thread, cache_thread);
@@ -210,7 +223,7 @@ impl Coordinator {
         assert!(!geometries.is_empty(), "a fleet needs at least one device");
         let (tx, rx) = mpsc::channel::<CoordinatorMsg>();
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
-        let cache = ScheduleCache::shared();
+        let cache = ScheduleCache::shared_bounded(DEFAULT_SERVING_CACHE_CAPACITY);
         let metrics_thread = Arc::clone(&metrics);
         let cache_thread = Arc::clone(&cache);
         let handle = std::thread::spawn(move || {
@@ -359,6 +372,7 @@ fn dispatch(
     let report: DataflowReport = match model {
         ServedModel::Mlp(mlp) => single.mlp_engine.execute(mlp, &inputs),
         ServedModel::Cnn(cnn) => single.cnn_engine.execute(cnn, &inputs),
+        ServedModel::Graph(g) => single.graph_engine.execute(g, &inputs),
     };
 
     // Cross-verify on the PJRT path when available (MLP artifacts

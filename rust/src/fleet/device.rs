@@ -5,6 +5,7 @@ use super::queue::{FleetJob, FleetQueue};
 use crate::conv::CnnEngine;
 use crate::coordinator::{CoordinatorMetrics, InferenceResponse, ServedModel};
 use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
+use crate::graph::GraphEngine;
 use crate::mapper::{NpeGeometry, ScheduleCache};
 use std::sync::{Arc, Mutex};
 
@@ -14,6 +15,7 @@ use std::sync::{Arc, Mutex};
 pub enum DeviceEngine {
     Mlp(OsEngine),
     Cnn(CnnEngine),
+    Graph(GraphEngine),
 }
 
 impl DeviceEngine {
@@ -27,6 +29,9 @@ impl DeviceEngine {
         match model {
             ServedModel::Mlp(_) => DeviceEngine::Mlp(OsEngine::tcd(geometry).with_cache(cache)),
             ServedModel::Cnn(_) => DeviceEngine::Cnn(CnnEngine::tcd(geometry).with_cache(cache)),
+            ServedModel::Graph(_) => {
+                DeviceEngine::Graph(GraphEngine::tcd(geometry).with_cache(cache))
+            }
         }
     }
 
@@ -36,6 +41,7 @@ impl DeviceEngine {
         match (self, model) {
             (DeviceEngine::Mlp(e), ServedModel::Mlp(m)) => e.execute(m, inputs),
             (DeviceEngine::Cnn(e), ServedModel::Cnn(c)) => e.execute(c, inputs),
+            (DeviceEngine::Graph(e), ServedModel::Graph(g)) => e.execute(g, inputs),
             _ => unreachable!("device engine does not match served model"),
         }
     }

@@ -1,0 +1,486 @@
+//! The graph execution engine: lowered GEMM groups on the cycle-accurate
+//! PE array, with pooling / activation / residual / concat stages in the
+//! quantized output path — the DAG twin of [`crate::conv::CnnEngine`].
+//!
+//! Like the OS and CNN engines, this is a reusable device handle: the
+//! private mapper memo persists across `execute` calls and
+//! [`GraphEngine::with_cache`] joins it to a fleet-wide schedule cache.
+//! Outputs are bit-exact against [`QuantizedGraph::forward_batch`]
+//! (`tests/graph_e2e.rs`), with fused and unfused lowering, on every
+//! geometry, with either MAC kind.
+
+use super::ir::{GraphOp, NodeId};
+use super::lower::{lower_graph, GemmGroup};
+use super::{sat_add, QuantizedGraph};
+use crate::conv::lower::pool2d;
+use crate::conv::{im2col, im2col_traffic};
+use crate::dataflow::{cached_mac_ppa, pe_array_leak_uw, DataflowReport, EnergyBreakdown};
+use crate::mapper::{MapperTree, NpeGeometry, ScheduleCache};
+use crate::memory::NpeMemorySystem;
+use crate::model::fixedpoint::relu;
+use crate::model::{MlpTopology, QuantizedMlp};
+use crate::npe::{ActivationUnit, ExecutionStats, PeArray};
+use crate::ppa::TechParams;
+use crate::tcdmac::MacKind;
+use std::sync::Arc;
+
+/// The DAG execution engine.
+pub struct GraphEngine {
+    // Private: the mapper memo bakes the geometry in at construction, so
+    // mutating these afterwards would desync schedules from the array.
+    geometry: NpeGeometry,
+    kind: MacKind,
+    /// Run the bit-exact MAC models instead of the fast path.
+    pub bitexact: bool,
+    /// Merge sibling branches into shared round sets (fused lowering,
+    /// the default); off = the per-node baseline the bench compares.
+    pub fuse: bool,
+    mapper: MapperTree,
+    cache: Option<Arc<ScheduleCache>>,
+}
+
+impl GraphEngine {
+    pub fn new(geometry: NpeGeometry, kind: MacKind) -> Self {
+        Self {
+            geometry,
+            kind,
+            bitexact: false,
+            fuse: true,
+            mapper: MapperTree::new(geometry),
+            cache: None,
+        }
+    }
+
+    pub fn tcd(geometry: NpeGeometry) -> Self {
+        Self::new(geometry, MacKind::Tcd)
+    }
+
+    pub fn conventional(geometry: NpeGeometry) -> Self {
+        Self::new(geometry, crate::dataflow::best_conventional())
+    }
+
+    pub fn geometry(&self) -> NpeGeometry {
+        self.geometry
+    }
+
+    pub fn kind(&self) -> MacKind {
+        self.kind
+    }
+
+    pub fn bitexact(mut self, on: bool) -> Self {
+        self.bitexact = on;
+        self
+    }
+
+    /// Toggle sibling sharing (fused lowering).
+    pub fn fused(mut self, on: bool) -> Self {
+        self.fuse = on;
+        self
+    }
+
+    /// Attach a fleet-shared schedule cache (see [`ScheduleCache`]).
+    pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            MacKind::Tcd => "Graph DAG (TCD-NPE)",
+            MacKind::Conv(..) => "Graph DAG (conv MAC)",
+        }
+    }
+
+    /// Execute `q` over a batch of flattened CHW inputs; returns the same
+    /// report shape the MLP/CNN engines produce.
+    pub fn execute(&mut self, q: &QuantizedGraph, inputs: &[Vec<i16>]) -> DataflowReport {
+        let tech = TechParams::DEFAULT;
+        let b = inputs.len();
+        assert!(b > 0, "empty batch");
+        for x in inputs {
+            assert_eq!(x.len(), q.graph.input_shape().features(), "bad input length");
+        }
+
+        let lowering = lower_graph(&mut self.mapper, self.cache.as_ref(), &q.graph, b, self.fuse);
+        // member node -> its group, so execution can trigger a group's
+        // round set exactly once, at its first member.
+        let mut group_of = vec![usize::MAX; q.graph.n_nodes()];
+        for (gi, group) in lowering.groups.iter().enumerate() {
+            for m in &group.members {
+                group_of[m.0] = gi;
+            }
+        }
+        let mut group_done = vec![false; lowering.groups.len()];
+
+        let mut array = PeArray::new(self.geometry, self.kind);
+        let mut stats = ExecutionStats::default();
+        let mut mem = NpeMemorySystem::new();
+        let extra = matches!(self.kind, MacKind::Tcd) as u64;
+        let mut active_mac_cycles = 0u64;
+
+        let mut vals: Vec<Option<Vec<Vec<i16>>>> = vec![None; q.graph.n_nodes()];
+        vals[0] = Some(inputs.to_vec());
+
+        for id in 1..q.graph.n_nodes() {
+            let node = &q.graph.nodes[id];
+            match &node.op {
+                GraphOp::Input => unreachable!("input is node 0"),
+                GraphOp::Dense { .. } | GraphOp::Conv2d { .. } => {
+                    let gi = group_of[id];
+                    if !group_done[gi] {
+                        self.run_group(
+                            &lowering.groups[gi],
+                            q,
+                            b,
+                            &mut vals,
+                            &mut array,
+                            &mut stats,
+                            &mut mem,
+                            &mut active_mac_cycles,
+                            extra,
+                        );
+                        group_done[gi] = true;
+                        stats.layer_swaps += 1;
+                    }
+                }
+                GraphOp::Pool2d(p) => {
+                    let in_shape = q.graph.in_shape(NodeId(id));
+                    let src = vals[node.inputs[0].0].as_ref().expect("topological order");
+                    let out = src.iter().map(|f| pool2d(f, in_shape, p)).collect();
+                    vals[id] = Some(out);
+                    stats.layer_swaps += 1;
+                }
+                GraphOp::Activation => {
+                    let src = vals[node.inputs[0].0].as_ref().expect("topological order");
+                    let out = src
+                        .iter()
+                        .map(|f| f.iter().map(|&v| relu(v)).collect())
+                        .collect();
+                    vals[id] = Some(out);
+                    stats.layer_swaps += 1;
+                }
+                GraphOp::ResidualAdd => {
+                    let a = vals[node.inputs[0].0].as_ref().expect("topological order");
+                    let c = vals[node.inputs[1].0].as_ref().expect("topological order");
+                    let out = a
+                        .iter()
+                        .zip(c)
+                        .map(|(fa, fb)| {
+                            fa.iter().zip(fb).map(|(&x, &y)| sat_add(x, y)).collect()
+                        })
+                        .collect();
+                    vals[id] = Some(out);
+                    stats.layer_swaps += 1;
+                }
+                GraphOp::Concat => {
+                    let out = (0..b)
+                        .map(|bi| {
+                            node.inputs
+                                .iter()
+                                .flat_map(|i| {
+                                    vals[i.0].as_ref().expect("topological order")[bi]
+                                        .clone()
+                                })
+                                .collect()
+                        })
+                        .collect();
+                    vals[id] = Some(out);
+                    stats.layer_swaps += 1;
+                }
+                GraphOp::Flatten => {
+                    let src = vals[node.inputs[0].0].as_ref().expect("topological order");
+                    vals[id] = Some(src.clone());
+                }
+            }
+        }
+        let outputs = vals[q.graph.output.0].take().expect("output computed");
+        stats.compute_cycles = array.cycles();
+
+        // DRAM traffic: RLC-compressed weights + inputs in, outputs out.
+        for w in &q.weights {
+            mem.account_dram_in(w);
+        }
+        for x in inputs {
+            mem.account_dram_in(x);
+        }
+        for y in &outputs {
+            mem.account_dram_out(y);
+        }
+
+        let mac = cached_mac_ppa(self.kind);
+        let cycles = stats.total_cycles();
+        let time_ns = cycles as f64 * mac.delay_ns;
+        let energy = EnergyBreakdown {
+            pe_dynamic_pj: active_mac_cycles as f64 * mac.energy_per_cycle_pj(),
+            pe_leak_pj: pe_array_leak_uw(self.kind, self.geometry.pes()) * time_ns * 1e-3,
+            mem_dynamic_pj: mem.sram_dynamic_pj(&tech),
+            mem_leak_pj: mem.leakage_uw(&tech) * time_ns * 1e-3,
+            dram_pj: mem.dram_pj(&tech),
+        };
+
+        DataflowReport {
+            dataflow: self.name(),
+            mac: self.kind.name(),
+            outputs,
+            cycles,
+            time_ns,
+            energy,
+        }
+    }
+
+    /// Run one GEMM group: stream its merged Γ on the PE array and
+    /// scatter the neuron ranges back to the member nodes (activation,
+    /// and any fused pooling, in the Fig.-4 output path per member).
+    ///
+    /// Keep the roll loop in lockstep with
+    /// [`crate::conv::CnnEngine`]'s GEMM runner (same config-switch
+    /// counting, same bitexact/fast dispatch, same schedule-level
+    /// accounting): the two are the cycle model for CNN and DAG traffic
+    /// respectively.
+    #[allow(clippy::too_many_arguments)]
+    fn run_group(
+        &self,
+        group: &GemmGroup,
+        q: &QuantizedGraph,
+        b: usize,
+        vals: &mut [Option<Vec<Vec<i16>>>],
+        array: &mut PeArray,
+        stats: &mut ExecutionStats,
+        mem: &mut NpeMemorySystem,
+        active_mac_cycles: &mut u64,
+        extra: u64,
+    ) {
+        let source_shape = q.graph.node(group.source).shape;
+        let fan_in = group.gamma.inputs;
+        let fan_out = group.gamma.neurons;
+
+        // Rows: the source activations (dense) or their im2col patches
+        // (conv) — identical for every member by the grouping invariant.
+        // The im2col duplicate-read attribution is charged here, once per
+        // group: merged siblings stream the row set once, which is
+        // exactly the FM-Mem traffic the fused lowering saves.
+        let rows: Vec<Vec<i16>> = {
+            let src = vals[group.source.0].as_ref().expect("source computed");
+            match &q.graph.node(group.members[0]).op {
+                GraphOp::Conv2d { conv, .. } => {
+                    mem.account_im2col(&im2col_traffic(source_shape, conv), b as u64);
+                    src.iter()
+                        .flat_map(|f| im2col(f, source_shape, conv))
+                        .collect()
+                }
+                GraphOp::Dense { .. } => src.clone(),
+                _ => unreachable!("group members are parametric"),
+            }
+        };
+        debug_assert_eq!(rows.len(), group.gamma.batches);
+
+        // Stacked weight matrix + per-neuron activation units.
+        let mut wcat = Vec::with_capacity(fan_in * fan_out);
+        let mut acts: Vec<ActivationUnit> = Vec::with_capacity(fan_out);
+        for &m in &group.members {
+            wcat.extend_from_slice(q.node_weight(m));
+            let (u, rectify) = match &q.graph.node(m).op {
+                GraphOp::Dense { out, relu } => (*out, *relu),
+                GraphOp::Conv2d { conv, relu, .. } => (conv.out_channels, *relu),
+                _ => unreachable!(),
+            };
+            acts.resize(acts.len() + u, ActivationUnit::new(rectify));
+        }
+        debug_assert_eq!(wcat.len(), fan_in * fan_out);
+        let surrogate = QuantizedMlp {
+            topology: MlpTopology::new(vec![fan_in, fan_out]),
+            weights: vec![wcat],
+            seed: q.seed,
+        };
+
+        let exec = group.sched.exec.as_ref().expect("non-empty GEMM");
+        let row_ids: Vec<usize> = (0..rows.len()).collect();
+        let neuron_ids: Vec<usize> = (0..fan_out).collect();
+        let assignments = exec.assignments(&row_ids, &neuron_ids);
+
+        let mut out = vec![vec![0i16; fan_out]; rows.len()];
+        let mut last_config = None;
+        for roll in &assignments {
+            if last_config != Some(roll.config) {
+                stats.config_switches += 1;
+                last_config = Some(roll.config);
+            }
+            let results = if self.bitexact {
+                array.run_roll_bitexact(roll, &surrogate, 0, &rows)
+            } else {
+                array.run_roll_fast(roll, &surrogate, 0, &rows)
+            };
+            for r in results {
+                out[r.batch][r.neuron] = acts[r.neuron].apply(r.acc);
+            }
+            stats.rolls += 1;
+        }
+
+        // Schedule-level accounting (energy model inputs).
+        let per_pair = group.gamma.inputs as u64 + extra;
+        *active_mac_cycles += group
+            .sched
+            .layer
+            .events
+            .iter()
+            .map(|e| e.work() as u64 * per_pair)
+            .sum::<u64>();
+        mem.account_layer_events(&group.sched.layer);
+
+        // Scatter each member's neuron range back to its node values.
+        let mut off = 0usize;
+        for &m in &group.members {
+            match &q.graph.node(m).op {
+                GraphOp::Conv2d { conv, pool, .. } => {
+                    let conv_out = conv.out_shape(source_shape);
+                    let patches = conv_out.h * conv_out.w;
+                    let oc = conv.out_channels;
+                    let mut maps = vec![vec![0i16; conv_out.features()]; b];
+                    for (r, row) in out.iter().enumerate() {
+                        let (bi, pix) = (r / patches, r % patches);
+                        for c in 0..oc {
+                            maps[bi][c * patches + pix] = row[off + c];
+                        }
+                    }
+                    vals[m.0] = Some(match pool {
+                        Some(p) => maps.iter().map(|f| pool2d(f, conv_out, p)).collect(),
+                        None => maps,
+                    });
+                    off += oc;
+                }
+                GraphOp::Dense { out: u, .. } => {
+                    let u = *u;
+                    vals[m.0] =
+                        Some(out.iter().map(|row| row[off..off + u].to_vec()).collect());
+                    off += u;
+                }
+                _ => unreachable!(),
+            }
+        }
+        debug_assert_eq!(off, fan_out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{Conv2dLayer, Pool2dLayer, PoolKind, TensorShape};
+    use crate::graph::GraphModel;
+
+    fn branchy() -> QuantizedGraph {
+        let mut g = GraphModel::new(TensorShape::new(1, 6, 6));
+        let a = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 3, 3, 1));
+        let a = g.relu(a);
+        let b = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 3, 3, 1));
+        let b = g.relu(b);
+        let cat = g.concat(&[a, b]);
+        let p = g.pool(cat, Pool2dLayer::square(PoolKind::Max, 2));
+        let f = g.flatten(p);
+        let o = g.dense(f, 4);
+        g.set_output(o);
+        QuantizedGraph::synthesize(g, 0x6A_1234)
+    }
+
+    fn residual() -> QuantizedGraph {
+        let mut g = GraphModel::new(TensorShape::new(8, 1, 1));
+        let h = g.dense(GraphModel::INPUT, 10);
+        let h = g.relu(h);
+        let y = g.dense(h, 10);
+        let s = g.add(y, h);
+        let s = g.relu(s);
+        let o = g.dense(s, 3);
+        g.set_output(o);
+        QuantizedGraph::synthesize(g, 0x6A_5678)
+    }
+
+    #[test]
+    fn engine_matches_reference_bit_exactly() {
+        for q in [branchy(), residual()] {
+            let inputs = q.synth_inputs(3, 7);
+            let expect = q.forward_batch(&inputs);
+            let report = GraphEngine::tcd(NpeGeometry::WALKTHROUGH).execute(&q, &inputs);
+            assert_eq!(report.outputs, expect);
+            assert!(report.cycles > 0 && report.time_ns > 0.0);
+        }
+    }
+
+    #[test]
+    fn fused_and_unfused_agree_on_values() {
+        let q = branchy();
+        let inputs = q.synth_inputs(2, 9);
+        let fused = GraphEngine::tcd(NpeGeometry::PAPER).execute(&q, &inputs);
+        let unfused = GraphEngine::tcd(NpeGeometry::PAPER)
+            .fused(false)
+            .execute(&q, &inputs);
+        assert_eq!(fused.outputs, unfused.outputs, "lowering never changes math");
+        assert!(
+            fused.cycles < unfused.cycles,
+            "sibling sharing saves rounds here: {} vs {}",
+            fused.cycles,
+            unfused.cycles
+        );
+    }
+
+    #[test]
+    fn bitexact_path_matches_fast_path() {
+        let q = residual();
+        let inputs = q.synth_inputs(2, 11);
+        let fast = GraphEngine::tcd(NpeGeometry::WALKTHROUGH).execute(&q, &inputs);
+        let slow = GraphEngine::tcd(NpeGeometry::WALKTHROUGH)
+            .bitexact(true)
+            .execute(&q, &inputs);
+        assert_eq!(fast.outputs, slow.outputs);
+        assert_eq!(fast.cycles, slow.cycles);
+    }
+
+    #[test]
+    fn conventional_mac_same_values() {
+        let q = branchy();
+        let inputs = q.synth_inputs(2, 13);
+        let tcd = GraphEngine::tcd(NpeGeometry::WALKTHROUGH).execute(&q, &inputs);
+        let conv = GraphEngine::conventional(NpeGeometry::WALKTHROUGH).execute(&q, &inputs);
+        assert_eq!(tcd.outputs, conv.outputs, "MAC kind never changes math");
+        assert!(tcd.cycles > conv.cycles, "TCD pays one CPM cycle per roll");
+        assert!(tcd.time_ns < conv.time_ns, "but each TCD cycle is faster");
+    }
+
+    #[test]
+    fn cached_engine_matches_uncached() {
+        let q = residual();
+        let inputs = q.synth_inputs(2, 17);
+        let cache = ScheduleCache::shared();
+        let plain = GraphEngine::tcd(NpeGeometry::WALKTHROUGH).execute(&q, &inputs);
+        let mut cached =
+            GraphEngine::tcd(NpeGeometry::WALKTHROUGH).with_cache(Arc::clone(&cache));
+        let a = cached.execute(&q, &inputs);
+        assert_eq!(a.outputs, plain.outputs);
+        assert_eq!(a.cycles, plain.cycles);
+        assert_eq!(cache.stats().misses, 3, "3 dense groups");
+        let b2 = cached.execute(&q, &inputs);
+        assert_eq!(b2.outputs, plain.outputs);
+        assert_eq!(cache.stats().hits, 3);
+    }
+
+    #[test]
+    fn optimized_graph_executes_identically() {
+        let q = branchy();
+        let inputs = q.synth_inputs(2, 19);
+        let raw = GraphEngine::tcd(NpeGeometry::PAPER).execute(&q, &inputs);
+        let (opt, stats) = crate::graph::optimize(&q);
+        let opted = GraphEngine::tcd(NpeGeometry::PAPER).execute(&opt, &inputs);
+        assert!(stats.activations_folded > 0);
+        assert_eq!(opted.outputs, raw.outputs, "passes never change values");
+    }
+
+    #[test]
+    fn energy_components_positive() {
+        let q = branchy();
+        let inputs = q.synth_inputs(2, 3);
+        let r = GraphEngine::tcd(NpeGeometry::PAPER).execute(&q, &inputs);
+        assert!(r.energy.pe_dynamic_pj > 0.0);
+        assert!(r.energy.pe_leak_pj > 0.0);
+        assert!(r.energy.mem_dynamic_pj > 0.0);
+        assert!(r.energy.mem_leak_pj > 0.0);
+        assert!(r.energy.dram_pj > 0.0);
+    }
+}

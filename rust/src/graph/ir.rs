@@ -1,0 +1,467 @@
+//! The typed DAG IR: [`GraphModel`] — [`NodeId`]-indexed ops with
+//! construction-time shape inference.
+//!
+//! A graph is built through the typed builder methods ([`GraphModel::conv`],
+//! [`GraphModel::dense`], …), each of which runs the same shape inference
+//! the [`crate::conv::layer`] descriptors use and panics on an ill-formed
+//! edge (channel mismatch, kernel larger than its padded input, residual
+//! operands of different shapes, …) — a bad network fails at construction,
+//! never at lowering. Node ids are handed out in insertion order, and a
+//! node may only reference already-existing ids, so `0..n_nodes()` is
+//! always a topological order (the passes and the lowering rely on this
+//! invariant and preserve it when they rewrite the graph).
+
+use crate::conv::{CnnLayer, CnnTopology, Conv2dLayer, Pool2dLayer, TensorShape};
+use crate::model::MlpTopology;
+
+/// Index of a node inside a [`GraphModel`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// One graph operation.
+///
+/// The `relu` flags on [`GraphOp::Dense`] / [`GraphOp::Conv2d`] and the
+/// `pool` slot on [`GraphOp::Conv2d`] are *fusion annotations*: builders
+/// create plain nodes (flags off), and the pass pipeline
+/// ([`crate::graph::passes`]) folds adjacent [`GraphOp::Activation`] /
+/// [`GraphOp::Pool2d`] nodes into them where that is bit-exact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphOp {
+    /// The graph input (always node 0, exactly one per graph).
+    Input,
+    /// Fully connected layer over the flattened input features.
+    Dense { out: usize, relu: bool },
+    /// 2-D convolution, optionally with a folded ReLU and/or pooling
+    /// stage applied in the output path.
+    Conv2d {
+        conv: Conv2dLayer,
+        relu: bool,
+        pool: Option<Pool2dLayer>,
+    },
+    /// Standalone 2-D pooling.
+    Pool2d(Pool2dLayer),
+    /// Standalone ReLU on the quantized feature map.
+    Activation,
+    /// Element-wise saturating add of two same-shape feature maps.
+    ResidualAdd,
+    /// Channel concatenation of ≥ 2 same-spatial-extent feature maps.
+    Concat,
+    /// Shape-only reshape to `(features, 1, 1)`.
+    Flatten,
+}
+
+/// One node: its op, its operand nodes, and its (inferred) output shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GraphNode {
+    pub op: GraphOp,
+    pub inputs: Vec<NodeId>,
+    pub shape: TensorShape,
+}
+
+impl GraphNode {
+    /// Is this a parametric (weight-carrying) node?
+    pub fn is_parametric(&self) -> bool {
+        matches!(self.op, GraphOp::Dense { .. } | GraphOp::Conv2d { .. })
+    }
+}
+
+/// A DAG model: nodes in topological (insertion) order plus the output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GraphModel {
+    pub nodes: Vec<GraphNode>,
+    pub output: NodeId,
+}
+
+impl GraphModel {
+    /// The graph input node id (always 0).
+    pub const INPUT: NodeId = NodeId(0);
+
+    /// Start a graph with its input shape; node 0 is the input.
+    pub fn new(input: TensorShape) -> Self {
+        Self {
+            nodes: vec![GraphNode {
+                op: GraphOp::Input,
+                inputs: Vec::new(),
+                shape: input,
+            }],
+            output: Self::INPUT,
+        }
+    }
+
+    fn push(&mut self, op: GraphOp, inputs: Vec<NodeId>, shape: TensorShape) -> NodeId {
+        for id in &inputs {
+            assert!(id.0 < self.nodes.len(), "operand {id:?} does not exist yet");
+        }
+        self.nodes.push(GraphNode { op, inputs, shape });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// Add a convolution (shape inference panics on a bad edge).
+    pub fn conv(&mut self, from: NodeId, conv: Conv2dLayer) -> NodeId {
+        let shape = conv.out_shape(self.node(from).shape);
+        self.push(GraphOp::Conv2d { conv, relu: false, pool: None }, vec![from], shape)
+    }
+
+    /// Add a pooling layer.
+    pub fn pool(&mut self, from: NodeId, pool: Pool2dLayer) -> NodeId {
+        let shape = pool.out_shape(self.node(from).shape);
+        self.push(GraphOp::Pool2d(pool), vec![from], shape)
+    }
+
+    /// Add a dense layer over the flattened input features.
+    pub fn dense(&mut self, from: NodeId, out: usize) -> NodeId {
+        assert!(out > 0, "empty dense layer");
+        self.push(
+            GraphOp::Dense { out, relu: false },
+            vec![from],
+            TensorShape::new(out, 1, 1),
+        )
+    }
+
+    /// Add a standalone ReLU.
+    pub fn relu(&mut self, from: NodeId) -> NodeId {
+        let shape = self.node(from).shape;
+        self.push(GraphOp::Activation, vec![from], shape)
+    }
+
+    /// Add a residual (element-wise saturating) addition.
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let (sa, sb) = (self.node(a).shape, self.node(b).shape);
+        assert_eq!(sa, sb, "residual operands must agree in shape");
+        self.push(GraphOp::ResidualAdd, vec![a, b], sa)
+    }
+
+    /// Add a channel concatenation of ≥ 2 feature maps.
+    pub fn concat(&mut self, parts: &[NodeId]) -> NodeId {
+        assert!(parts.len() >= 2, "concat needs at least two operands");
+        let first = self.node(parts[0]).shape;
+        let mut c = 0;
+        for &p in parts {
+            let s = self.node(p).shape;
+            assert_eq!(
+                (s.h, s.w),
+                (first.h, first.w),
+                "concat operands must share spatial extent"
+            );
+            c += s.c;
+        }
+        self.push(
+            GraphOp::Concat,
+            parts.to_vec(),
+            TensorShape::new(c, first.h, first.w),
+        )
+    }
+
+    /// Add an explicit flatten (shape-only; dense layers flatten
+    /// implicitly, this just makes the classifier head readable).
+    pub fn flatten(&mut self, from: NodeId) -> NodeId {
+        let shape = self.node(from).shape;
+        self.push(
+            GraphOp::Flatten,
+            vec![from],
+            TensorShape::new(shape.features(), 1, 1),
+        )
+    }
+
+    /// Declare the graph output.
+    pub fn set_output(&mut self, id: NodeId) {
+        assert!(id.0 < self.nodes.len(), "output {id:?} does not exist");
+        self.output = id;
+    }
+
+    pub fn node(&self, id: NodeId) -> &GraphNode {
+        &self.nodes[id.0]
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The graph's input shape.
+    pub fn input_shape(&self) -> TensorShape {
+        self.nodes[0].shape
+    }
+
+    /// The graph's output shape.
+    pub fn output_shape(&self) -> TensorShape {
+        self.node(self.output).shape
+    }
+
+    /// Parametric (weight-carrying) node ids, in topological order — the
+    /// weight-matrix order of [`crate::graph::QuantizedGraph`].
+    pub fn parametric_nodes(&self) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].is_parametric())
+            .map(NodeId)
+            .collect()
+    }
+
+    pub fn n_parametric(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_parametric()).count()
+    }
+
+    /// Weight-matrix index of a parametric node.
+    pub fn parametric_index(&self, id: NodeId) -> Option<usize> {
+        if !self.node(id).is_parametric() {
+            return None;
+        }
+        Some(
+            self.nodes[..id.0]
+                .iter()
+                .filter(|n| n.is_parametric())
+                .count(),
+        )
+    }
+
+    /// Shape feeding a node (its first operand's output shape).
+    pub fn in_shape(&self, id: NodeId) -> TensorShape {
+        self.node(self.node(id).inputs[0]).shape
+    }
+
+    /// Weight count of one parametric node.
+    pub fn node_weights(&self, id: NodeId) -> usize {
+        match &self.node(id).op {
+            GraphOp::Conv2d { conv, .. } => conv.n_weights(),
+            GraphOp::Dense { out, .. } => self.in_shape(id).features() * out,
+            _ => 0,
+        }
+    }
+
+    /// Total weights across parametric nodes.
+    pub fn n_weights(&self) -> u64 {
+        self.parametric_nodes()
+            .into_iter()
+            .map(|id| self.node_weights(id) as u64)
+            .sum()
+    }
+
+    /// Total MACs for one input sample.
+    pub fn macs_per_sample(&self) -> u64 {
+        self.parametric_nodes()
+            .into_iter()
+            .map(|id| match &self.node(id).op {
+                GraphOp::Conv2d { conv, .. } => conv.macs(self.in_shape(id)),
+                GraphOp::Dense { out, .. } => (self.in_shape(id).features() * out) as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// How many nodes consume each node (graph-output consumption not
+    /// included — use [`GraphModel::output`] for that).
+    pub fn consumer_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for id in &n.inputs {
+                counts[id.0] += 1;
+            }
+        }
+        counts
+    }
+
+    /// One line per node, e.g. `n3 = conv 4@3x3 (n0) -> 4x12x12`.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            let op = match &n.op {
+                GraphOp::Input => "input".to_string(),
+                GraphOp::Dense { out, relu } => {
+                    format!("fc{out}{}", if *relu { "+relu" } else { "" })
+                }
+                GraphOp::Conv2d { conv, relu, pool } => format!(
+                    "conv {}@{}x{}{}{}",
+                    conv.out_channels,
+                    conv.kernel.0,
+                    conv.kernel.1,
+                    if *relu { "+relu" } else { "" },
+                    if pool.is_some() { "+pool" } else { "" },
+                ),
+                GraphOp::Pool2d(p) => format!("pool {}x{}", p.size.0, p.size.1),
+                GraphOp::Activation => "relu".to_string(),
+                GraphOp::ResidualAdd => "add".to_string(),
+                GraphOp::Concat => "concat".to_string(),
+                GraphOp::Flatten => "flatten".to_string(),
+            };
+            let args = n
+                .inputs
+                .iter()
+                .map(|i| format!("n{}", i.0))
+                .collect::<Vec<_>>()
+                .join(", ");
+            let mark = if NodeId(i) == self.output { "  <- output" } else { "" };
+            s.push_str(&format!("n{i} = {op} ({args}) -> {}{mark}\n", n.shape.display()));
+        }
+        s
+    }
+
+    /// One-line summary, e.g. `1x12x12 DAG, 9 nodes (4 parametric) -> 10`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} DAG, {} nodes ({} parametric) -> {}",
+            self.input_shape().display(),
+            self.n_nodes(),
+            self.n_parametric(),
+            self.output_shape().features(),
+        )
+    }
+}
+
+impl MlpTopology {
+    /// Re-express this sequential MLP as a [`GraphModel`]: one dense node
+    /// per transition, a standalone ReLU after every hidden transition
+    /// (exactly the legacy [`crate::npe::Controller`] semantics — the
+    /// graph path reproduces its outputs bit-exactly, e2e-tested).
+    pub fn into_graph(self) -> GraphModel {
+        let mut g = GraphModel::new(TensorShape::new(self.inputs(), 1, 1));
+        let mut cur = GraphModel::INPUT;
+        let last = self.n_transitions() - 1;
+        for (l, (_fan_in, fan_out)) in self.transitions().enumerate() {
+            cur = g.dense(cur, fan_out);
+            if l < last {
+                cur = g.relu(cur);
+            }
+        }
+        g.set_output(cur);
+        g
+    }
+}
+
+impl CnnTopology {
+    /// Re-express this sequential CNN as a [`GraphModel`] with the legacy
+    /// [`crate::conv::CnnEngine`] activation placement: ReLU after every
+    /// parametric layer except the last.
+    pub fn into_graph(self) -> GraphModel {
+        let mut g = GraphModel::new(self.input);
+        let mut cur = GraphModel::INPUT;
+        let n_param = self.n_parametric();
+        let mut pi = 0usize;
+        for layer in &self.layers {
+            match layer {
+                CnnLayer::Conv(c) => {
+                    cur = g.conv(cur, *c);
+                    pi += 1;
+                    if pi < n_param {
+                        cur = g.relu(cur);
+                    }
+                }
+                CnnLayer::Pool(p) => cur = g.pool(cur, *p),
+                CnnLayer::Dense { out } => {
+                    cur = g.dense(cur, *out);
+                    pi += 1;
+                    if pi < n_param {
+                        cur = g.relu(cur);
+                    }
+                }
+            }
+        }
+        g.set_output(cur);
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::PoolKind;
+
+    fn branchy() -> GraphModel {
+        let mut g = GraphModel::new(TensorShape::new(1, 6, 6));
+        let a = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 2, 3, 1));
+        let a = g.relu(a);
+        let b = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 3, 3, 1));
+        let cat = g.concat(&[a, b]);
+        let p = g.pool(cat, Pool2dLayer::square(PoolKind::Max, 2));
+        let f = g.flatten(p);
+        let out = g.dense(f, 4);
+        g.set_output(out);
+        g
+    }
+
+    #[test]
+    fn shape_inference_through_branches() {
+        let g = branchy();
+        assert_eq!(g.input_shape(), TensorShape::new(1, 6, 6));
+        // concat: 2 + 3 channels at 6x6; pool halves; flatten; fc4.
+        let cat = &g.nodes[4];
+        assert_eq!(cat.shape, TensorShape::new(5, 6, 6));
+        assert_eq!(g.node(NodeId(5)).shape, TensorShape::new(5, 3, 3));
+        assert_eq!(g.node(NodeId(6)).shape, TensorShape::new(45, 1, 1));
+        assert_eq!(g.output_shape().features(), 4);
+        assert_eq!(g.n_parametric(), 3);
+        assert_eq!(g.parametric_nodes(), vec![NodeId(1), NodeId(3), NodeId(7)]);
+        assert_eq!(g.parametric_index(NodeId(3)), Some(1));
+        assert_eq!(g.parametric_index(NodeId(4)), None);
+    }
+
+    #[test]
+    fn weight_and_mac_counts() {
+        let g = branchy();
+        // conv 2@3x3 on 1ch: 18 weights; conv 3@3x3: 27; fc 45->4: 180.
+        assert_eq!(g.n_weights(), 18 + 27 + 180);
+        assert!(g.macs_per_sample() > g.n_weights());
+    }
+
+    #[test]
+    fn consumer_counts_see_fanout() {
+        let g = branchy();
+        // Input feeds both branch convs.
+        assert_eq!(g.consumer_counts()[0], 2);
+        assert_eq!(g.consumer_counts()[g.output.0], 0);
+    }
+
+    #[test]
+    fn render_and_summary_mention_structure() {
+        let g = branchy();
+        let r = g.render();
+        assert!(r.contains("concat"));
+        assert!(r.contains("<- output"));
+        assert!(g.summary().contains("3 parametric"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn residual_shape_mismatch_panics() {
+        let mut g = GraphModel::new(TensorShape::new(1, 4, 4));
+        let a = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 2, 3, 1));
+        let b = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 3, 3, 1));
+        g.add(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn concat_spatial_mismatch_panics() {
+        let mut g = GraphModel::new(TensorShape::new(1, 6, 6));
+        let a = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 2, 3, 1));
+        let b = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 2, 3, 0));
+        g.concat(&[a, b]);
+    }
+
+    #[test]
+    fn mlp_into_graph_shape() {
+        let g = MlpTopology::new(vec![4, 10, 5, 3]).into_graph();
+        // 3 dense + 2 relu + input = 6 nodes.
+        assert_eq!(g.n_nodes(), 6);
+        assert_eq!(g.n_parametric(), 3);
+        assert_eq!(g.input_shape().features(), 4);
+        assert_eq!(g.output_shape().features(), 3);
+    }
+
+    #[test]
+    fn cnn_into_graph_shape() {
+        use crate::conv::CnnLayer as L;
+        let topo = CnnTopology::new(
+            TensorShape::new(1, 8, 8),
+            vec![
+                L::Conv(Conv2dLayer::square(1, 3, 3, 1)),
+                L::Pool(Pool2dLayer::square(PoolKind::Max, 2)),
+                L::Dense { out: 5 },
+            ],
+        );
+        let g = topo.into_graph();
+        // input, conv, relu, pool, dense = 5 nodes; relu only after conv
+        // (dense is the last parametric layer).
+        assert_eq!(g.n_nodes(), 5);
+        assert_eq!(g.n_parametric(), 2);
+        assert_eq!(g.output_shape().features(), 5);
+    }
+}

@@ -1,0 +1,297 @@
+//! Lowering a DAG onto the Algorithm-1 scheduler: topological
+//! partitioning into per-level Γ(B, I, U) problems through the existing
+//! [`MapperTree`] / [`ScheduleCache`].
+//!
+//! Every parametric node becomes (part of) one GEMM problem, exactly as
+//! in the sequential lowerings: a dense node is Γ(B, I, U), a conv node
+//! is the im2col identity Γ(B·P, I = c·kh·kw, U = out_channels). The DAG
+//! twist is **sibling sharing**: parametric nodes of the same
+//! topological level that read the *same* source node with the *same*
+//! GEMM row structure (identical fan-in for dense siblings; identical
+//! kernel/stride/padding for conv siblings) stream identical rows, so
+//! the fused lowering merges them into a single Γ(B[·P], I, ΣU) — one
+//! scheduled round set covers every branch, instead of one per branch.
+//! The merge is bit-exact (each output neuron's dot product is
+//! unchanged; neuron ranges map back to their branch) and never worse in
+//! utilization than the per-branch schedules for the shapes in the zoo —
+//! `bench/graph.rs` reports the round counts fused vs unfused.
+
+use super::ir::{GraphModel, GraphOp, NodeId};
+use crate::mapper::cache::CachedSchedule;
+use crate::mapper::schedule::bfs_events;
+use crate::mapper::{Gamma, LayerSchedule, MapperTree, ModelSchedule, ScheduleCache};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One scheduled GEMM, covering one or more sibling parametric nodes.
+#[derive(Debug, Clone)]
+pub struct GemmGroup {
+    /// Human-readable origin, e.g. `conv 4@3x3 (+1 sibling)` or `fc 10`.
+    pub label: String,
+    /// The node whose values feed every member's GEMM rows.
+    pub source: NodeId,
+    /// Covered parametric nodes, ascending; member `m`'s neurons occupy
+    /// the contiguous range after its predecessors' output counts.
+    pub members: Vec<NodeId>,
+    /// The merged layer problem Γ(B[·P], I, ΣU).
+    pub gamma: Gamma,
+    /// Its Algorithm-1 schedule + execution tree (shared out of the
+    /// fleet cache on a hit, computed privately otherwise).
+    pub sched: Arc<CachedSchedule>,
+}
+
+/// A whole lowered DAG: scheduled GEMM groups in execution order.
+#[derive(Debug, Clone)]
+pub struct GraphLowering {
+    pub groups: Vec<GemmGroup>,
+    /// The batch count the lowering was built for.
+    pub batches: usize,
+}
+
+impl GraphLowering {
+    /// Total scheduled rounds (Algorithm-1 rolls) across all groups.
+    pub fn total_rounds(&self) -> usize {
+        self.groups
+            .iter()
+            .map(|g| g.sched.layer.total_rolls())
+            .sum()
+    }
+
+    /// Compute cycles of the scheduled rounds (per-roll `I`, +1 for TCD).
+    pub fn compute_cycles(&self, extra_cycle: bool) -> u64 {
+        self.groups
+            .iter()
+            .map(|g| g.sched.layer.compute_cycles(extra_cycle))
+            .sum()
+    }
+
+    /// View as the mapper's [`ModelSchedule`] (what the memory-traffic
+    /// accounting consumes).
+    pub fn model_schedule(&self) -> ModelSchedule {
+        ModelSchedule {
+            layers: self.groups.iter().map(|g| g.sched.layer.clone()).collect(),
+        }
+    }
+}
+
+/// Grouping key of the fused lowering: parametric nodes agreeing on this
+/// key stream bit-identical GEMM rows and may share one round set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum GroupKey {
+    Dense {
+        source: NodeId,
+    },
+    Conv {
+        source: NodeId,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+    },
+}
+
+/// Lower every parametric node of `graph` for a `batches`-sample run.
+///
+/// `fuse` enables sibling sharing (the production path); with it off,
+/// every parametric node gets its own Γ — the baseline the graph bench
+/// compares round counts against. `cache`, when given, is consulted
+/// before the private mapper DP (and publishes misses), exactly like the
+/// MLP/CNN engines.
+pub fn lower_graph(
+    mapper: &mut MapperTree,
+    cache: Option<&Arc<ScheduleCache>>,
+    graph: &GraphModel,
+    batches: usize,
+    fuse: bool,
+) -> GraphLowering {
+    assert!(batches > 0, "empty batch");
+    let mut groups: Vec<(GroupKey, Vec<NodeId>)> = Vec::new();
+    let mut index: HashMap<GroupKey, usize> = HashMap::new();
+
+    for id in graph.parametric_nodes() {
+        let key = match &graph.node(id).op {
+            GraphOp::Dense { .. } => GroupKey::Dense {
+                source: graph.node(id).inputs[0],
+            },
+            GraphOp::Conv2d { conv, .. } => GroupKey::Conv {
+                source: graph.node(id).inputs[0],
+                kernel: conv.kernel,
+                stride: conv.stride,
+                padding: conv.padding,
+            },
+            _ => unreachable!("parametric nodes are dense or conv"),
+        };
+        match index.get(&key) {
+            Some(&gi) if fuse => groups[gi].1.push(id),
+            _ => {
+                index.insert(key, groups.len());
+                groups.push((key, vec![id]));
+            }
+        }
+    }
+
+    let groups = groups
+        .into_iter()
+        .map(|(key, members)| {
+            let (gamma, label) = group_problem(graph, &key, &members, batches);
+            let sched = match cache {
+                Some(c) => c.get_or_compute(mapper, gamma),
+                None => {
+                    let exec = mapper.best(gamma.batches, gamma.neurons);
+                    let events = exec.as_ref().map(bfs_events).unwrap_or_default();
+                    Arc::new(CachedSchedule {
+                        layer: LayerSchedule {
+                            gamma,
+                            geometry: mapper.geometry,
+                            events,
+                        },
+                        exec,
+                    })
+                }
+            };
+            GemmGroup {
+                label,
+                source: match key {
+                    GroupKey::Dense { source } | GroupKey::Conv { source, .. } => source,
+                },
+                members,
+                gamma,
+                sched,
+            }
+        })
+        .collect();
+
+    GraphLowering { groups, batches }
+}
+
+/// The merged Γ and display label of one group.
+fn group_problem(
+    graph: &GraphModel,
+    key: &GroupKey,
+    members: &[NodeId],
+    batches: usize,
+) -> (Gamma, String) {
+    let siblings = if members.len() > 1 {
+        format!(" (+{} sibling{})", members.len() - 1, if members.len() > 2 { "s" } else { "" })
+    } else {
+        String::new()
+    };
+    match key {
+        GroupKey::Dense { source } => {
+            let fan_in = graph.node(*source).shape.features();
+            let u: usize = members
+                .iter()
+                .map(|&m| match &graph.node(m).op {
+                    GraphOp::Dense { out, .. } => *out,
+                    _ => unreachable!(),
+                })
+                .sum();
+            (Gamma::new(batches, fan_in, u), format!("fc {u}{siblings}"))
+        }
+        GroupKey::Conv { source, .. } => {
+            let in_shape = graph.node(*source).shape;
+            let (first_conv, mut u) = match &graph.node(members[0]).op {
+                GraphOp::Conv2d { conv, .. } => (*conv, conv.out_channels),
+                _ => unreachable!(),
+            };
+            for &m in &members[1..] {
+                match &graph.node(m).op {
+                    GraphOp::Conv2d { conv, .. } => u += conv.out_channels,
+                    _ => unreachable!(),
+                }
+            }
+            let out = first_conv.out_shape(in_shape);
+            let gamma = Gamma::new(batches * out.h * out.w, first_conv.patch_len(), u);
+            (
+                gamma,
+                format!(
+                    "conv {u}@{}x{}{siblings}",
+                    first_conv.kernel.0, first_conv.kernel.1
+                ),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{Conv2dLayer, TensorShape};
+    use crate::mapper::NpeGeometry;
+
+    /// Two same-geometry conv branches on the input, then a dense head.
+    fn branchy() -> GraphModel {
+        let mut g = GraphModel::new(TensorShape::new(1, 6, 6));
+        let a = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 4, 3, 1));
+        let b = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 4, 3, 1));
+        let cat = g.concat(&[a, b]);
+        let f = g.flatten(cat);
+        let o = g.dense(f, 5);
+        g.set_output(o);
+        g
+    }
+
+    #[test]
+    fn fused_lowering_merges_siblings() {
+        let g = branchy();
+        let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+        let fused = lower_graph(&mut mapper, None, &g, 2, true);
+        assert_eq!(fused.groups.len(), 2, "merged convs + dense head");
+        let conv_group = &fused.groups[0];
+        assert_eq!(conv_group.members.len(), 2);
+        assert_eq!(conv_group.gamma, Gamma::new(2 * 36, 9, 8));
+        assert!(conv_group.label.contains("sibling"));
+        assert_eq!(fused.groups[1].gamma, Gamma::new(2, 2 * 4 * 36, 5));
+        for gr in &fused.groups {
+            assert!(gr.sched.layer.covers_exactly(), "{}", gr.label);
+        }
+    }
+
+    #[test]
+    fn unfused_lowering_keeps_branches_apart() {
+        let g = branchy();
+        let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+        let unfused = lower_graph(&mut mapper, None, &g, 2, false);
+        assert_eq!(unfused.groups.len(), 3);
+        assert!(unfused.groups.iter().all(|gr| gr.members.len() == 1));
+        let fused = lower_graph(&mut mapper, None, &g, 2, true);
+        assert!(
+            fused.total_rounds() < unfused.total_rounds(),
+            "sibling sharing must save rounds here: fused {} vs unfused {}",
+            fused.total_rounds(),
+            unfused.total_rounds()
+        );
+        assert!(fused.compute_cycles(true) < unfused.compute_cycles(true));
+        assert_eq!(
+            fused.model_schedule().total_rolls(),
+            fused.total_rounds()
+        );
+    }
+
+    #[test]
+    fn different_geometry_branches_do_not_merge() {
+        // A 1x1 and a 3x3 branch stream different rows: never merged.
+        let mut g = GraphModel::new(TensorShape::new(1, 6, 6));
+        let a = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 4, 1, 0));
+        let b = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 4, 3, 1));
+        let cat = g.concat(&[a, b]);
+        g.set_output(cat);
+        let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+        let fused = lower_graph(&mut mapper, None, &g, 1, true);
+        assert_eq!(fused.groups.len(), 2);
+    }
+
+    #[test]
+    fn cached_lowering_shares_schedules() {
+        let g = branchy();
+        let cache = ScheduleCache::shared();
+        let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+        let a = lower_graph(&mut mapper, Some(&cache), &g, 2, true);
+        assert_eq!(cache.stats().misses, 2);
+        let b = lower_graph(&mut mapper, Some(&cache), &g, 2, true);
+        assert_eq!(cache.stats().hits, 2, "warm lowering hits every group");
+        assert_eq!(a.total_rounds(), b.total_rounds());
+        // The plain path computes the identical schedule.
+        let plain = lower_graph(&mut MapperTree::new(NpeGeometry::PAPER), None, &g, 2, true);
+        assert_eq!(plain.total_rounds(), a.total_rounds());
+    }
+}

@@ -1,0 +1,303 @@
+//! The graph compiler — a DAG model IR with fusion passes, lowered onto
+//! the Algorithm-1 scheduler.
+//!
+//! The paper's scheduler covers *sequential layer lists*; this subsystem
+//! generalizes the front end to arbitrary DAGs (residual links,
+//! multi-branch blocks, concatenations) while leaving the mapper, LDN,
+//! PE array and controller semantics untouched:
+//!
+//! * [`ir`] — the typed IR: [`GraphModel`] of [`NodeId`]-indexed ops
+//!   (Dense, Conv2d, Pool2d, ResidualAdd, Concat, Activation, Flatten)
+//!   with construction-time shape inference mirroring
+//!   [`crate::conv::layer`]; `MlpTopology::into_graph()` /
+//!   `CnnTopology::into_graph()` re-express the legacy sequential
+//!   front-ends through it.
+//! * [`passes`] — the pass pipeline: dead-node elimination, ReLU folding
+//!   into the preceding parametric node, and conv→pool chain fusion.
+//!   Every pass is bit-exact by construction (see the module docs for
+//!   the legality contract).
+//! * [`lower`] — topological partitioning of the DAG into per-level
+//!   Γ(B, I, U) problems through the existing [`crate::mapper`] (and,
+//!   when attached, [`crate::mapper::ScheduleCache`]); sibling branches
+//!   reading the same node with the same GEMM row structure merge into
+//!   one Γ, so they share a single scheduled round set.
+//! * [`engine`] — [`GraphEngine`], the cycle-accurate executor driving
+//!   the unchanged NPE core with the lowered plan; bit-exact against the
+//!   nested-loop reference interpreter here (`tests/graph_e2e.rs`).
+//! * [`QuantizedGraph`] (here) — synthetic Q7.8 weights (same
+//!   [`crate::util::rng::synth_weights`] streams as the MLP/CNN zoos)
+//!   and the bit-exact nested-loop Fix16 reference forward pass.
+//!
+//! The graph zoo (a residual MLP, a TinyResNet, a two-branch
+//! Inception-style CNN) lives beside Table IV in [`crate::model::zoo`].
+
+pub mod engine;
+pub mod ir;
+pub mod lower;
+pub mod passes;
+
+pub use engine::GraphEngine;
+pub use ir::{GraphModel, GraphNode, GraphOp, NodeId};
+pub use lower::{lower_graph, GemmGroup, GraphLowering};
+pub use passes::{optimize, PassStats};
+
+use crate::conv::lower::pool2d;
+use crate::conv::reference_conv2d;
+use crate::model::fixedpoint::{quantize_acc, quantize_relu, relu};
+use crate::model::mlp::{FEATURE_BOUND, WEIGHT_BOUND};
+use crate::util::rng;
+use crate::util::SplitMix64;
+
+/// Element-wise saturating residual addition (the ResidualAdd op's
+/// arithmetic, shared verbatim by the reference interpreter and the
+/// engine so the two can never disagree).
+pub fn sat_add(a: i16, b: i16) -> i16 {
+    (a as i32 + b as i32).clamp(i16::MIN as i32, i16::MAX as i32) as i16
+}
+
+/// A fully materialized quantized DAG model: one Q7.8 weight matrix per
+/// parametric node, in topological node order.
+///
+/// Conv weights are GEMM-ready `weights[l][oc * patch_len + i]` (same
+/// layout as [`crate::conv::QuantizedCnn`]); dense weights are
+/// `[out][flattened_in]` like [`crate::model::QuantizedMlp`]. The seed
+/// scheme is the shared [`rng::synth_weights`] stream indexed by
+/// parametric position, so `into_graph()` conversions synthesize weights
+/// identical to their legacy counterparts.
+#[derive(Debug, Clone)]
+pub struct QuantizedGraph {
+    pub graph: GraphModel,
+    pub weights: Vec<Vec<i16>>,
+    pub seed: u64,
+}
+
+impl QuantizedGraph {
+    /// Deterministically synthesize weights for a graph.
+    pub fn synthesize(graph: GraphModel, seed: u64) -> Self {
+        let weights = graph
+            .parametric_nodes()
+            .into_iter()
+            .enumerate()
+            .map(|(l, id)| rng::synth_weights(seed, l, graph.node_weights(id), WEIGHT_BOUND))
+            .collect();
+        Self { graph, weights, seed }
+    }
+
+    /// Deterministic synthetic input batch (flattened CHW per sample).
+    pub fn synth_inputs(&self, batches: usize, seed: u64) -> Vec<Vec<i16>> {
+        let mut rng = SplitMix64::new(seed);
+        (0..batches)
+            .map(|_| {
+                (0..self.graph.input_shape().features())
+                    .map(|_| rng.next_i16_bounded(FEATURE_BOUND))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// The weight matrix of parametric node `id`.
+    pub fn node_weight(&self, id: NodeId) -> &[i16] {
+        let l = self
+            .graph
+            .parametric_index(id)
+            .expect("weights of a non-parametric node");
+        &self.weights[l]
+    }
+
+    /// Bit-exact reference forward pass for one sample — direct nested
+    /// loops per node (deliberately *not* via im2col or the lowering, so
+    /// the scheduled GEMM path is cross-checked against independent
+    /// index math). Activation/pooling honor the fusion annotations, so
+    /// the interpreter is the semantics for raw *and* optimized graphs.
+    pub fn forward_sample(&self, input: &[i16]) -> Vec<i16> {
+        assert_eq!(input.len(), self.graph.input_shape().features());
+        let n = self.graph.n_nodes();
+        let mut vals: Vec<Option<Vec<i16>>> = vec![None; n];
+        vals[0] = Some(input.to_vec());
+
+        for id in 1..n {
+            let node = &self.graph.nodes[id];
+            let arg =
+                |k: usize| vals[node.inputs[k].0].as_ref().expect("topological order");
+            let out = match &node.op {
+                GraphOp::Input => unreachable!("input is node 0"),
+                GraphOp::Dense { out, relu } => {
+                    let x = arg(0);
+                    let fan_in = x.len();
+                    let w = self.node_weight(NodeId(id));
+                    (0..*out)
+                        .map(|nn| {
+                            let row = &w[nn * fan_in..(nn + 1) * fan_in];
+                            let acc: i64 = row
+                                .iter()
+                                .zip(x)
+                                .map(|(wv, xv)| (*wv as i32 * *xv as i32) as i64)
+                                .sum();
+                            if *relu {
+                                quantize_relu(acc)
+                            } else {
+                                quantize_acc(acc)
+                            }
+                        })
+                        .collect()
+                }
+                GraphOp::Conv2d { conv, relu, pool } => {
+                    let in_shape = self.graph.in_shape(NodeId(id));
+                    let fm = reference_conv2d(
+                        arg(0),
+                        in_shape,
+                        conv,
+                        self.node_weight(NodeId(id)),
+                        *relu,
+                    );
+                    match pool {
+                        Some(p) => pool2d(&fm, conv.out_shape(in_shape), p),
+                        None => fm,
+                    }
+                }
+                GraphOp::Pool2d(p) => {
+                    pool2d(arg(0), self.graph.in_shape(NodeId(id)), p)
+                }
+                GraphOp::Activation => arg(0).iter().map(|&v| relu(v)).collect(),
+                GraphOp::ResidualAdd => arg(0)
+                    .iter()
+                    .zip(arg(1))
+                    .map(|(&a, &b)| sat_add(a, b))
+                    .collect(),
+                GraphOp::Concat => node
+                    .inputs
+                    .iter()
+                    .flat_map(|i| vals[i.0].as_ref().expect("topological order").clone())
+                    .collect(),
+                GraphOp::Flatten => arg(0).clone(),
+            };
+            vals[id] = Some(out);
+        }
+        vals[self.graph.output.0].take().expect("output computed")
+    }
+
+    /// Reference forward pass over a batch.
+    pub fn forward_batch(&self, inputs: &[Vec<i16>]) -> Vec<Vec<i16>> {
+        inputs.iter().map(|x| self.forward_sample(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{Conv2dLayer, Pool2dLayer, PoolKind, TensorShape};
+    use crate::model::{MlpTopology, QuantizedMlp};
+
+    fn residual_graph() -> GraphModel {
+        let mut g = GraphModel::new(TensorShape::new(6, 1, 1));
+        let h = g.dense(GraphModel::INPUT, 8);
+        let h = g.relu(h);
+        let b = g.dense(h, 8);
+        let s = g.add(b, h);
+        let s = g.relu(s);
+        let o = g.dense(s, 3);
+        g.set_output(o);
+        g
+    }
+
+    #[test]
+    fn synthesis_is_deterministic_and_bounded() {
+        let a = QuantizedGraph::synthesize(residual_graph(), 9);
+        let b = QuantizedGraph::synthesize(residual_graph(), 9);
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.weights.len(), 3);
+        assert_eq!(a.weights[0].len(), 6 * 8);
+        assert_eq!(a.weights[1].len(), 8 * 8);
+        assert_eq!(a.weights[2].len(), 8 * 3);
+        assert!(a.weights.iter().flatten().all(|w| w.abs() <= WEIGHT_BOUND));
+        let c = QuantizedGraph::synthesize(residual_graph(), 10);
+        assert_ne!(a.weights, c.weights);
+    }
+
+    #[test]
+    fn mlp_into_graph_synthesizes_identical_weights() {
+        let topo = MlpTopology::new(vec![5, 7, 4]);
+        let mlp = QuantizedMlp::synthesize(topo.clone(), 42);
+        let q = QuantizedGraph::synthesize(topo.into_graph(), 42);
+        assert_eq!(q.weights, mlp.weights, "shared synth_weights streams");
+    }
+
+    #[test]
+    fn mlp_into_graph_forward_matches_reference() {
+        let topo = MlpTopology::new(vec![5, 9, 4, 3]);
+        let mlp = QuantizedMlp::synthesize(topo.clone(), 17);
+        let q = QuantizedGraph::synthesize(topo.into_graph(), 17);
+        let inputs = mlp.synth_inputs(4, 23);
+        assert_eq!(q.forward_batch(&inputs), mlp.forward_batch(&inputs));
+    }
+
+    #[test]
+    fn residual_add_saturates() {
+        assert_eq!(sat_add(i16::MAX, 1), i16::MAX);
+        assert_eq!(sat_add(i16::MIN, -1), i16::MIN);
+        assert_eq!(sat_add(100, -30), 70);
+    }
+
+    #[test]
+    fn residual_identity_by_hand() {
+        // fc(1.0) -> relu; skip add doubles the value; fc(1.0) out.
+        let mut g = GraphModel::new(TensorShape::new(1, 1, 1));
+        let h = g.dense(GraphModel::INPUT, 1);
+        let h = g.relu(h);
+        let b = g.dense(h, 1);
+        let s = g.add(b, h);
+        let o = g.dense(s, 1);
+        g.set_output(o);
+        let mut q = QuantizedGraph::synthesize(g, 0);
+        q.weights[0] = vec![256]; // 1.0
+        q.weights[1] = vec![256];
+        q.weights[2] = vec![256];
+        // x = 2.0: h = 2.0, b = 2.0, s = 4.0, out = 4.0.
+        assert_eq!(q.forward_sample(&[512]), vec![1024]);
+    }
+
+    #[test]
+    fn concat_orders_channels_by_operand() {
+        let mut g = GraphModel::new(TensorShape::new(1, 2, 2));
+        let a = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 1, 1, 0));
+        let b = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 1, 1, 0));
+        let c = g.concat(&[a, b]);
+        g.set_output(c);
+        let mut q = QuantizedGraph::synthesize(g, 0);
+        q.weights[0] = vec![256]; // identity
+        q.weights[1] = vec![512]; // 2x
+        let y = q.forward_sample(&[10, 20, 30, 40]);
+        assert_eq!(y, vec![10, 20, 30, 40, 20, 40, 60, 80]);
+    }
+
+    #[test]
+    fn fused_annotations_match_standalone_nodes() {
+        // conv+relu+pool expressed as separate nodes vs folded flags must
+        // produce identical values (the pass-legality contract).
+        let conv = Conv2dLayer::square(1, 2, 3, 1);
+        let pool = Pool2dLayer::square(PoolKind::Max, 2);
+        let mut plain = GraphModel::new(TensorShape::new(1, 6, 6));
+        let c = plain.conv(GraphModel::INPUT, conv);
+        let r = plain.relu(c);
+        let p = plain.pool(r, pool);
+        plain.set_output(p);
+
+        let mut fused = GraphModel::new(TensorShape::new(1, 6, 6));
+        let c = fused.conv(GraphModel::INPUT, conv);
+        match &mut fused.nodes[c.0].op {
+            GraphOp::Conv2d { relu, pool: slot, .. } => {
+                *relu = true;
+                *slot = Some(pool);
+            }
+            _ => unreachable!(),
+        }
+        fused.nodes[c.0].shape = pool.out_shape(conv.out_shape(TensorShape::new(1, 6, 6)));
+        fused.set_output(c);
+
+        let qa = QuantizedGraph::synthesize(plain, 3);
+        let qb = QuantizedGraph::synthesize(fused, 3);
+        assert_eq!(qa.weights, qb.weights);
+        let inputs = qa.synth_inputs(3, 5);
+        assert_eq!(qa.forward_batch(&inputs), qb.forward_batch(&inputs));
+    }
+}

@@ -1,0 +1,349 @@
+//! The pass pipeline: graph rewrites that shrink the executed node list
+//! without changing a single output bit.
+//!
+//! **Legality contract** (why each pass is bit-exact):
+//!
+//! * **Dead-node elimination** — a node not reachable backwards from the
+//!   graph output contributes to no output value; removing it (and its
+//!   weights) changes nothing. Node 0 (the input) is always kept.
+//! * **Activation folding** — a standalone ReLU whose sole producer is a
+//!   parametric node with no other consumers becomes that node's `relu`
+//!   flag. Exact because the Fig.-4 output path pins
+//!   `quantize_relu(acc) == relu(quantize_acc(acc))`
+//!   ([`crate::model::fixedpoint`], tested): rectifying the quantized
+//!   value is the same i16 as the fused quantize+ReLU.
+//! * **Conv→pool chain fusion** — a pooling node whose sole producer is
+//!   a conv with no other consumers moves into the conv's `pool` slot.
+//!   Exact because pooling runs in the quantized output path either way:
+//!   the same [`crate::conv::lower::pool2d`] is applied to the same conv
+//!   output values, just without materializing them as a separate node.
+//!
+//! Folding never reorders parametric nodes and only dead-node
+//! elimination can delete one, so the surviving weight matrices are
+//! carried over untouched — the optimized [`QuantizedGraph`] is
+//! value-identical to the raw one (property-tested and e2e-tested).
+
+use super::ir::{GraphModel, GraphOp, NodeId};
+use super::QuantizedGraph;
+
+/// What the pipeline did to a graph.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PassStats {
+    /// Nodes removed as unreachable from the output.
+    pub dead_removed: usize,
+    /// Standalone ReLU nodes folded into their parametric producer.
+    pub activations_folded: usize,
+    /// Pooling nodes fused into their conv producer.
+    pub pools_fused: usize,
+}
+
+impl PassStats {
+    /// Total nodes eliminated from the executed graph.
+    pub fn nodes_eliminated(&self) -> usize {
+        self.dead_removed + self.activations_folded + self.pools_fused
+    }
+}
+
+/// Run the full pipeline: DCE, activation folding, conv→pool fusion,
+/// final DCE. Returns the rewritten model plus its (re-indexed, but
+/// value-identical) weights.
+pub fn optimize(q: &QuantizedGraph) -> (QuantizedGraph, PassStats) {
+    let mut graph = q.graph.clone();
+    let mut weights = q.weights.clone();
+    let mut stats = PassStats::default();
+
+    stats.dead_removed += eliminate_dead(&mut graph, &mut weights);
+    stats.activations_folded += fold_activations(&mut graph, &mut weights);
+    stats.pools_fused += fuse_pools(&mut graph, &mut weights);
+    stats.dead_removed += eliminate_dead(&mut graph, &mut weights);
+
+    (
+        QuantizedGraph { graph, weights, seed: q.seed },
+        stats,
+    )
+}
+
+/// Drop every node unreachable (backwards) from the output. Returns the
+/// number of nodes removed.
+fn eliminate_dead(g: &mut GraphModel, weights: &mut Vec<Vec<i16>>) -> usize {
+    let mut keep = vec![false; g.nodes.len()];
+    keep[0] = true; // the input survives even if the output ignores it
+    let mut stack = vec![g.output];
+    while let Some(id) = stack.pop() {
+        if keep[id.0] {
+            continue;
+        }
+        keep[id.0] = true;
+        stack.extend(g.nodes[id.0].inputs.iter().copied());
+    }
+    let removed = keep.iter().filter(|k| !**k).count();
+    if removed > 0 {
+        retain(g, weights, &keep);
+    }
+    removed
+}
+
+/// Fold standalone ReLU nodes into their parametric producers.
+fn fold_activations(g: &mut GraphModel, weights: &mut Vec<Vec<i16>>) -> usize {
+    let mut folded = 0;
+    loop {
+        let consumers = g.consumer_counts();
+        let candidate = (0..g.nodes.len()).find(|&i| {
+            if !matches!(g.nodes[i].op, GraphOp::Activation) {
+                return false;
+            }
+            let p = g.nodes[i].inputs[0];
+            consumers[p.0] == 1
+                && matches!(
+                    g.nodes[p.0].op,
+                    GraphOp::Dense { relu: false, .. } | GraphOp::Conv2d { relu: false, .. }
+                )
+        });
+        let Some(a) = candidate else { break };
+        let p = g.nodes[a].inputs[0];
+        match &mut g.nodes[p.0].op {
+            GraphOp::Dense { relu, .. } | GraphOp::Conv2d { relu, .. } => *relu = true,
+            _ => unreachable!("candidate producer is parametric"),
+        }
+        replace_uses(g, NodeId(a), p);
+        let mut keep = vec![true; g.nodes.len()];
+        keep[a] = false;
+        retain(g, weights, &keep);
+        folded += 1;
+    }
+    folded
+}
+
+/// Fuse pooling nodes into their conv producers.
+///
+/// A conv whose pool slot is already occupied is not a candidate again
+/// (pool-of-pool chains stay as separate nodes), and fusion happens only
+/// when the conv's quantized output is consumed by the pool alone.
+fn fuse_pools(g: &mut GraphModel, weights: &mut Vec<Vec<i16>>) -> usize {
+    let mut fused = 0;
+    loop {
+        let consumers = g.consumer_counts();
+        let candidate = (0..g.nodes.len()).find_map(|i| {
+            let GraphOp::Pool2d(p) = &g.nodes[i].op else { return None };
+            let producer = g.nodes[i].inputs[0];
+            let ok = consumers[producer.0] == 1
+                && matches!(g.nodes[producer.0].op, GraphOp::Conv2d { pool: None, .. });
+            ok.then_some((i, producer, *p))
+        });
+        let Some((q, producer, p)) = candidate else { break };
+        let pooled_shape = g.nodes[q].shape;
+        match &mut g.nodes[producer.0].op {
+            GraphOp::Conv2d { pool, .. } => *pool = Some(p),
+            _ => unreachable!("candidate producer is a conv"),
+        }
+        g.nodes[producer.0].shape = pooled_shape;
+        replace_uses(g, NodeId(q), producer);
+        let mut keep = vec![true; g.nodes.len()];
+        keep[q] = false;
+        retain(g, weights, &keep);
+        fused += 1;
+    }
+    fused
+}
+
+/// Rewire every use of `from` (operand lists and the graph output) to
+/// `to`.
+fn replace_uses(g: &mut GraphModel, from: NodeId, to: NodeId) {
+    for n in &mut g.nodes {
+        for i in &mut n.inputs {
+            if *i == from {
+                *i = to;
+            }
+        }
+    }
+    if g.output == from {
+        g.output = to;
+    }
+}
+
+/// Compact the graph to the kept nodes, remapping ids (order preserved,
+/// so `0..n` stays a topological order and the parametric weight order
+/// is untouched up to dropped entries).
+fn retain(g: &mut GraphModel, weights: &mut Vec<Vec<i16>>, keep: &[bool]) {
+    assert!(keep[0], "the input node must survive every pass");
+    let mut remap = vec![usize::MAX; g.nodes.len()];
+    let mut next = 0usize;
+    for (i, k) in keep.iter().enumerate() {
+        if *k {
+            remap[i] = next;
+            next += 1;
+        }
+    }
+    // Weights: drop entries of dropped parametric nodes, keep order.
+    let parametric: Vec<usize> = (0..g.nodes.len())
+        .filter(|&i| g.nodes[i].is_parametric())
+        .collect();
+    let mut kept_weights = Vec::with_capacity(weights.len());
+    for (w, &i) in weights.iter().zip(&parametric) {
+        if keep[i] {
+            kept_weights.push(w.clone());
+        }
+    }
+    *weights = kept_weights;
+
+    let mut nodes = Vec::with_capacity(next);
+    for (i, node) in g.nodes.iter().enumerate() {
+        if !keep[i] {
+            continue;
+        }
+        let mut n = node.clone();
+        for id in &mut n.inputs {
+            assert!(keep[id.0], "kept node consumes a dropped node");
+            *id = NodeId(remap[id.0]);
+        }
+        nodes.push(n);
+    }
+    assert!(keep[g.output.0], "the output node must survive");
+    g.output = NodeId(remap[g.output.0]);
+    g.nodes = nodes;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{Conv2dLayer, Pool2dLayer, PoolKind, TensorShape};
+    use crate::model::MlpTopology;
+
+    fn quantized(g: GraphModel) -> QuantizedGraph {
+        QuantizedGraph::synthesize(g, 0xBADC0DE)
+    }
+
+    #[test]
+    fn dce_removes_dead_branch_and_its_weights() {
+        let mut g = GraphModel::new(TensorShape::new(1, 6, 6));
+        let live = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 2, 3, 1));
+        let _dead = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 4, 3, 1));
+        let f = g.flatten(live);
+        let o = g.dense(f, 3);
+        g.set_output(o);
+        let q = quantized(g);
+        assert_eq!(q.weights.len(), 3);
+        let inputs = q.synth_inputs(2, 1);
+        let expect = q.forward_batch(&inputs);
+
+        let (opt, stats) = optimize(&q);
+        assert_eq!(stats.dead_removed, 1);
+        assert_eq!(opt.weights.len(), 2, "dead conv's weights dropped");
+        assert_eq!(opt.graph.n_parametric(), 2);
+        assert_eq!(opt.forward_batch(&inputs), expect, "outputs unchanged");
+    }
+
+    #[test]
+    fn activation_folds_into_producer() {
+        let g = MlpTopology::new(vec![6, 8, 4, 3]).into_graph();
+        let q = quantized(g);
+        let inputs = q.synth_inputs(3, 7);
+        let expect = q.forward_batch(&inputs);
+
+        let (opt, stats) = optimize(&q);
+        assert_eq!(stats.activations_folded, 2, "both hidden ReLUs fold");
+        assert_eq!(stats.dead_removed, 0);
+        // 7 nodes -> 5: input + 3 dense (two with relu folded).
+        assert_eq!(opt.graph.n_nodes(), 5);
+        assert!(opt
+            .graph
+            .nodes
+            .iter()
+            .all(|n| !matches!(n.op, GraphOp::Activation)));
+        assert_eq!(opt.weights, q.weights, "weights carried over verbatim");
+        assert_eq!(opt.forward_batch(&inputs), expect);
+    }
+
+    #[test]
+    fn activation_with_fanout_producer_stays() {
+        // h feeds both the block dense and the residual add: the ReLU
+        // after the *add* must not fold (its producer is not parametric),
+        // and the ReLU on h *does* fold (dense's only consumer).
+        let mut g = GraphModel::new(TensorShape::new(4, 1, 1));
+        let d = g.dense(GraphModel::INPUT, 6);
+        let h = g.relu(d);
+        let b = g.dense(h, 6);
+        let s = g.add(b, h);
+        let r = g.relu(s);
+        let o = g.dense(r, 2);
+        g.set_output(o);
+        let q = quantized(g);
+        let inputs = q.synth_inputs(2, 3);
+        let expect = q.forward_batch(&inputs);
+
+        let (opt, stats) = optimize(&q);
+        assert_eq!(stats.activations_folded, 1, "only h's ReLU is foldable");
+        // The post-add ReLU survives as a standalone node.
+        assert_eq!(
+            opt.graph
+                .nodes
+                .iter()
+                .filter(|n| matches!(n.op, GraphOp::Activation))
+                .count(),
+            1
+        );
+        assert_eq!(opt.forward_batch(&inputs), expect);
+    }
+
+    #[test]
+    fn conv_pool_chain_fuses_through_folded_relu() {
+        use crate::conv::{CnnLayer, CnnTopology};
+        // conv -> relu -> pool -> dense: relu folds first, then the pool
+        // fuses into the conv, leaving input + conv(+relu+pool) + dense.
+        let topo = CnnTopology::new(
+            TensorShape::new(1, 8, 8),
+            vec![
+                CnnLayer::Conv(Conv2dLayer::square(1, 3, 3, 1)),
+                CnnLayer::Pool(Pool2dLayer::square(PoolKind::Max, 2)),
+                CnnLayer::Dense { out: 4 },
+            ],
+        );
+        let q = quantized(topo.into_graph());
+        let inputs = q.synth_inputs(2, 11);
+        let expect = q.forward_batch(&inputs);
+
+        let (opt, stats) = optimize(&q);
+        assert_eq!(stats.activations_folded, 1);
+        assert_eq!(stats.pools_fused, 1);
+        assert_eq!(opt.graph.n_nodes(), 3);
+        let conv_node = &opt.graph.nodes[1];
+        assert!(matches!(
+            conv_node.op,
+            GraphOp::Conv2d { relu: true, pool: Some(_), .. }
+        ));
+        assert_eq!(conv_node.shape, TensorShape::new(3, 4, 4), "pooled shape");
+        assert_eq!(opt.forward_batch(&inputs), expect);
+        assert_eq!(stats.nodes_eliminated(), 2);
+    }
+
+    #[test]
+    fn pool_with_fanout_conv_does_not_fuse() {
+        // The conv output is also consumed by a flatten branch, so the
+        // pool cannot be folded into it.
+        let mut g = GraphModel::new(TensorShape::new(1, 6, 6));
+        let c = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 2, 3, 1));
+        let p = g.pool(c, Pool2dLayer::square(PoolKind::Max, 2));
+        let f1 = g.flatten(p);
+        let f2 = g.flatten(c);
+        let cat = g.concat(&[f1, f2]);
+        let o = g.dense(cat, 2);
+        g.set_output(o);
+        let q = quantized(g);
+        let inputs = q.synth_inputs(1, 2);
+        let expect = q.forward_batch(&inputs);
+        let (opt, stats) = optimize(&q);
+        assert_eq!(stats.pools_fused, 0);
+        assert_eq!(opt.forward_batch(&inputs), expect);
+    }
+
+    #[test]
+    fn optimize_is_idempotent() {
+        let q = quantized(MlpTopology::new(vec![5, 6, 3]).into_graph());
+        let (opt, first) = optimize(&q);
+        let (again, second) = optimize(&opt);
+        assert!(first.nodes_eliminated() > 0);
+        assert_eq!(second, PassStats::default());
+        assert_eq!(again.graph, opt.graph);
+        assert_eq!(again.weights, opt.weights);
+    }
+}

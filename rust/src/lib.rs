@@ -22,6 +22,17 @@
 //!   Γ(B, I, U) layer-problem abstraction (plus a traffic model of the
 //!   duplicate FM-Mem reads it induces), and the cycle-accurate
 //!   `CnnEngine` executor chaining conv → pool → dense schedules.
+//! * [`graph`] — the graph compiler: a typed DAG IR (Dense, Conv2d,
+//!   Pool2d, ResidualAdd, Concat, Activation, Flatten with
+//!   construction-time shape inference), a bit-exact pass pipeline
+//!   (dead-node elimination, ReLU folding into the preceding parametric
+//!   node — exact because `quantize_relu(acc) == relu(quantize_acc(acc))`
+//!   — and conv→pool chain fusion), and a lowering stage that
+//!   topologically partitions the DAG into per-level Γ problems where
+//!   same-structure sibling branches share one scheduled round set.
+//!   `MlpTopology::into_graph()` / `CnnTopology::into_graph()`
+//!   re-express the sequential front-ends through it; the cycle-accurate
+//!   `GraphEngine` executes the lowered plan on the unchanged NPE core.
 //! * [`memory`] — W-Mem / ping-pong FM-Mem with the Fig. 7 data arrangement,
 //!   row buffers, access counting, and RLC compression for DRAM transfers.
 //! * [`npe`] — the PE array (TCD-MAC groups), LDN multicast network,
@@ -51,6 +62,7 @@ pub mod conv;
 pub mod coordinator;
 pub mod dataflow;
 pub mod fleet;
+pub mod graph;
 pub mod mapper;
 pub mod memory;
 pub mod model;

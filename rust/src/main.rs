@@ -11,10 +11,12 @@ use tcd_npe::conv::QuantizedCnn;
 use tcd_npe::coordinator::{BatcherConfig, Coordinator, ServedModel};
 use tcd_npe::dataflow::{DataflowEngine, OsEngine};
 use tcd_npe::fleet::{poisson_arrivals, run_open_loop, LoadGenConfig};
+use tcd_npe::graph::QuantizedGraph;
 use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry};
 use tcd_npe::memory::{FmArrangement, WMemArrangement, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
 use tcd_npe::model::{
-    benchmark_by_name, benchmarks, cnn_benchmark_by_name, MlpTopology, QuantizedMlp,
+    benchmark_by_name, benchmarks, cnn_benchmark_by_name, graph_benchmark_by_name, MlpTopology,
+    QuantizedMlp,
 };
 use tcd_npe::runtime::{ArtifactManifest, PjrtRuntime};
 use tcd_npe::util::TextTable;
@@ -31,6 +33,8 @@ Paper artifacts:
   table4                     benchmark suite (Table IV)
   fig10 [--batches N]        exec time + energy, 4 dataflows x 7 benchmarks
   conv [--batches N]         CNN zoo (im2col lowering), TCD vs conventional MAC
+  graph [--batches N] [--json PATH] [--show NAME]
+                             DAG zoo (graph compiler), fused vs unfused lowering
 
 System:
   schedule <topo> <batches>  Algorithm-1 schedule for an MLP, e.g. 784:700:10 10
@@ -66,6 +70,25 @@ fn main() -> Result<()> {
                 .transpose()?
                 .unwrap_or(bench::CONV_BATCHES);
             println!("{}", bench::render_conv_table(&bench::conv_rows(batches), batches));
+        }
+        "graph" => {
+            if let Some(name) = flag_value(&args, "--show") {
+                let b = graph_benchmark_by_name(name)
+                    .ok_or_else(|| anyhow!("unknown DAG benchmark {name:?}"))?;
+                println!("{} ({}): {}", b.network, b.dataset, b.graph.summary());
+                print!("{}", b.graph.render());
+                return Ok(());
+            }
+            let batches = flag_value(&args, "--batches")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(bench::GRAPH_BATCHES);
+            let rows = bench::graph_rows(batches);
+            println!("{}", bench::render_graph_table(&rows, batches));
+            if let Some(path) = flag_value(&args, "--json") {
+                std::fs::write(path, bench::graph_json(&rows, batches))?;
+                println!("wrote {path}");
+            }
         }
         "fig10" => {
             let batches = flag_value(&args, "--batches")
@@ -257,8 +280,13 @@ fn cmd_fleet(devices: usize, requests: usize, rate: f64, model_name: &str) -> Re
     } else if let Some(b) = cnn_benchmark_by_name(model_name) {
         println!("fleet: {devices} x 16x8 NPE serving {} ({})", b.network, b.dataset);
         ServedModel::Cnn(QuantizedCnn::synthesize(b.topology.clone(), 0xF1EE7))
+    } else if let Some(b) = graph_benchmark_by_name(model_name) {
+        println!("fleet: {devices} x 16x8 NPE serving {} ({})", b.network, b.dataset);
+        ServedModel::Graph(QuantizedGraph::synthesize(b.graph.clone(), 0xF1EE7))
     } else {
-        return Err(anyhow!("unknown model {model_name:?} (MLP dataset or CNN name)"));
+        return Err(anyhow!(
+            "unknown model {model_name:?} (MLP dataset, CNN or DAG network name)"
+        ));
     };
     let load = LoadGenConfig { seed: 0x10AD_0001, rate_rps: rate, requests };
     let arrivals = poisson_arrivals(&model, &load);

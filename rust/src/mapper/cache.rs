@@ -9,7 +9,13 @@
 //!
 //! Entries are handed out as [`Arc<CachedSchedule>`]: a cache hit clones
 //! one pointer, never the event list or the execution tree, so schedule
-//! "cloning" on the steady-state hot path is a refcount bump. Hit/miss
+//! "cloning" on the steady-state hot path is a refcount bump.
+//!
+//! The store is **LRU-bounded**: [`ScheduleCache::bounded`] caps the
+//! number of distinct `(geometry, Γ)` entries, and inserting past the
+//! cap evicts the least-recently-used entry (an unbounded cache serving
+//! many models across long runs grows without limit — exactly the
+//! multi-model serving leak the bound closes). Hit/miss/eviction
 //! counters are lock-free atomics surfaced through
 //! [`crate::coordinator::CoordinatorMetrics`].
 
@@ -20,6 +26,11 @@ use crate::model::MlpTopology;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Default entry cap for the serving coordinators: generous enough that
+/// steady traffic over whole model zoos never evicts, small enough that
+/// a months-long multi-model run stays bounded.
+pub const DEFAULT_SERVING_CACHE_CAPACITY: usize = 4096;
 
 /// One memoized mapper result: the flat event sequence (what the
 /// accounting consumes) *and* the optimal execution tree (what the
@@ -37,6 +48,8 @@ pub struct CachedSchedule {
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Entries dropped by the LRU bound (0 for unbounded caches).
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -54,28 +67,61 @@ impl CacheStats {
     }
 }
 
+/// Map payload: the entry plus its last-touch stamp (for LRU eviction).
+#[derive(Debug, Default)]
+struct LruInner {
+    map: HashMap<(NpeGeometry, Gamma), (Arc<CachedSchedule>, u64)>,
+    /// Monotonic touch counter; higher = more recently used.
+    tick: u64,
+}
+
 /// Thread-safe memo of Algorithm-1 schedules, shared by every device of
 /// a fleet (and by the single-NPE coordinator path, so both report the
 /// same counters).
 #[derive(Debug, Default)]
 pub struct ScheduleCache {
-    map: Mutex<HashMap<(NpeGeometry, Gamma), Arc<CachedSchedule>>>,
+    inner: Mutex<LruInner>,
+    /// `None` = unbounded (the pre-serving default for tools/tests).
+    capacity: Option<usize>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl ScheduleCache {
+    /// An unbounded cache.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// The usual construction: one shared cache behind an [`Arc`].
+    /// A cache bounded to `capacity` entries with LRU eviction.
+    pub fn bounded(capacity: usize) -> Self {
+        assert!(capacity > 0, "cache capacity must be positive");
+        Self {
+            capacity: Some(capacity),
+            ..Self::default()
+        }
+    }
+
+    /// The usual construction: one shared unbounded cache behind an [`Arc`].
     pub fn shared() -> Arc<Self> {
         Arc::new(Self::default())
     }
 
+    /// One shared LRU-bounded cache behind an [`Arc`] (what the serving
+    /// coordinators spawn, with [`DEFAULT_SERVING_CACHE_CAPACITY`]).
+    pub fn shared_bounded(capacity: usize) -> Arc<Self> {
+        Arc::new(Self::bounded(capacity))
+    }
+
+    /// The configured entry cap (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
     /// Look `gamma` up for `mapper`'s geometry; on a miss, run Algorithm 1
-    /// on `mapper` and remember the result.
+    /// on `mapper` and remember the result (evicting the LRU entry when
+    /// the capacity is exceeded).
     ///
     /// The DP runs *outside* the map lock: a large Γ can take a while and
     /// concurrent devices must not stall on it. Two devices racing on the
@@ -84,9 +130,15 @@ impl ScheduleCache {
     /// the "wasted mapper work" metric should show.
     pub fn get_or_compute(&self, mapper: &mut MapperTree, gamma: Gamma) -> Arc<CachedSchedule> {
         let key = (mapper.geometry, gamma);
-        if let Some(hit) = self.map.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(hit);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some((hit, stamp)) = inner.map.get_mut(&key) {
+                *stamp = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(hit);
+            }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let exec = mapper.best(gamma.batches, gamma.neurons);
@@ -95,8 +147,37 @@ impl ScheduleCache {
             layer: LayerSchedule { gamma, geometry: mapper.geometry, events },
             exec,
         });
-        let mut map = self.map.lock().unwrap();
-        Arc::clone(map.entry(key).or_insert(entry))
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let arc = match inner.map.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                o.get_mut().1 = tick;
+                Arc::clone(&o.get().0)
+            }
+            std::collections::hash_map::Entry::Vacant(v) => Arc::clone(&v.insert((entry, tick)).0),
+        };
+        if let Some(cap) = self.capacity {
+            while inner.map.len() > cap {
+                // Evict the stalest entry that is not the one just
+                // touched (capacity ≥ 1 keeps the working entry live).
+                let victim = inner
+                    .map
+                    .iter()
+                    .filter(|(k, _)| **k != key)
+                    .min_by_key(|(_, (_, stamp))| *stamp)
+                    .map(|(k, _)| *k);
+                match victim {
+                    Some(k) => {
+                        inner.map.remove(&k);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => break,
+                }
+            }
+        }
+        arc
     }
 
     /// Assemble a whole-model schedule from cached layers (the cached
@@ -120,17 +201,18 @@ impl ScheduleCache {
         ModelSchedule { layers }
     }
 
-    /// Counter snapshot (hits/misses observed so far).
+    /// Counter snapshot (hits/misses/evictions observed so far).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
 
     /// Number of distinct `(geometry, Γ)` entries stored.
     pub fn entries(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 }
 
@@ -154,8 +236,12 @@ mod tests {
             fresh.total_rolls(),
             "cached exec tree and fresh schedule agree on roll count"
         );
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(
+            cache.stats(),
+            CacheStats { hits: 1, misses: 1, evictions: 0 }
+        );
         assert_eq!(cache.entries(), 1);
+        assert_eq!(cache.capacity(), None);
     }
 
     #[test]
@@ -204,6 +290,44 @@ mod tests {
     }
 
     #[test]
+    fn bounded_cache_evicts_least_recently_used() {
+        let cache = ScheduleCache::bounded(2);
+        assert_eq!(cache.capacity(), Some(2));
+        let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        let (a, b, c) = (Gamma::new(1, 8, 1), Gamma::new(2, 8, 2), Gamma::new(3, 8, 3));
+        cache.get_or_compute(&mut mapper, a); // {a}
+        cache.get_or_compute(&mut mapper, b); // {a, b}
+        cache.get_or_compute(&mut mapper, a); // touch a: b is now LRU
+        cache.get_or_compute(&mut mapper, c); // evicts b -> {a, c}
+        assert_eq!(cache.entries(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        // a survived (hit), b was evicted (recomputed = miss).
+        cache.get_or_compute(&mut mapper, a);
+        assert_eq!(cache.stats().hits, 2);
+        cache.get_or_compute(&mut mapper, b);
+        assert_eq!(cache.stats().misses, 4, "evicted shape recomputes");
+        assert_eq!(cache.entries(), 2);
+        assert_eq!(cache.stats().evictions, 2, "reinserting b evicted c");
+    }
+
+    #[test]
+    fn eviction_never_changes_results() {
+        // A capacity-1 cache thrashes constantly but must stay correct.
+        let cache = ScheduleCache::bounded(1);
+        let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        for round in 0..3 {
+            for b in 1..=4usize {
+                let gamma = Gamma::new(b, 10, 5);
+                let got = cache.get_or_compute(&mut mapper, gamma);
+                let want = MapperTree::new(NpeGeometry::WALKTHROUGH).schedule_layer(gamma);
+                assert_eq!(got.layer.events, want.events, "round {round} B={b}");
+                assert_eq!(cache.entries(), 1);
+            }
+        }
+        assert!(cache.stats().evictions >= 8);
+    }
+
+    #[test]
     fn concurrent_lookups_are_consistent() {
         // 8 threads hammering the same small Γ set: every returned
         // schedule must equal the fresh computation, and the counters
@@ -232,5 +356,31 @@ mod tests {
         assert_eq!(s.lookups(), 8 * per_thread as u64);
         assert!(s.hits >= s.lookups() - 2 * gammas.len() as u64 * 8);
         assert!(cache.entries() <= gammas.len());
+        assert_eq!(s.evictions, 0, "unbounded cache never evicts");
+    }
+
+    #[test]
+    fn concurrent_bounded_cache_stays_within_capacity() {
+        let cache = ScheduleCache::shared_bounded(4);
+        let gammas: Vec<Gamma> = (1..=4)
+            .flat_map(|b| (1..=3).map(move |u| Gamma::new(b, 6, u)))
+            .collect();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let cache = Arc::clone(&cache);
+                let gammas = gammas.clone();
+                s.spawn(move || {
+                    let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+                    for i in 0..40 {
+                        let g = gammas[(t * 7 + i) % gammas.len()];
+                        let got = cache.get_or_compute(&mut mapper, g);
+                        let want = MapperTree::new(NpeGeometry::WALKTHROUGH).schedule_layer(g);
+                        assert_eq!(got.layer.events, want.events);
+                    }
+                });
+            }
+        });
+        assert!(cache.entries() <= 4, "capacity holds under concurrency");
+        assert!(cache.stats().evictions > 0);
     }
 }

@@ -22,7 +22,7 @@ pub mod cache;
 pub mod schedule;
 pub mod tree;
 
-pub use cache::{CacheStats, CachedSchedule, ScheduleCache};
+pub use cache::{CacheStats, CachedSchedule, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
 pub use schedule::{LayerSchedule, ModelSchedule, ScheduledEvent};
 pub use tree::{ExecNode, MapperTree};
 

@@ -32,18 +32,15 @@ pub struct QuantizedMlp {
 impl QuantizedMlp {
     /// Deterministically synthesize a model for a topology.
     ///
-    /// Layer `l`'s matrix uses stream `SplitMix64(seed ^ (l+1)·GOLDEN)` —
-    /// mirrored exactly in `python/compile/model.py::synth_weights`.
+    /// Layer `l`'s matrix draws from the shared
+    /// [`crate::util::rng::layer_stream`] (mirrored exactly in
+    /// `python/compile/model.py::synth_weights`).
     pub fn synthesize(topology: MlpTopology, seed: u64) -> Self {
-        const GOLDEN: u64 = 0x9E3779B97F4A7C15;
         let weights = topology
             .transitions()
             .enumerate()
             .map(|(l, (fan_in, fan_out))| {
-                let mut rng = SplitMix64::new(seed ^ GOLDEN.wrapping_mul(l as u64 + 1));
-                (0..fan_in * fan_out)
-                    .map(|_| rng.next_i16_bounded(WEIGHT_BOUND))
-                    .collect()
+                crate::util::rng::synth_weights(seed, l, fan_in * fan_out, WEIGHT_BOUND)
             })
             .collect();
         Self { topology, weights, seed }

@@ -9,8 +9,8 @@ pub mod zoo;
 pub use fixedpoint::{quantize_acc, quantize_relu, relu, Fix16, FRAC_BITS};
 pub use mlp::QuantizedMlp;
 pub use zoo::{
-    benchmark_by_name, benchmarks, cnn_benchmark_by_name, cnn_benchmarks, Benchmark,
-    CnnBenchmark,
+    benchmark_by_name, benchmarks, cnn_benchmark_by_name, cnn_benchmarks,
+    graph_benchmark_by_name, graph_benchmarks, Benchmark, CnnBenchmark, GraphBenchmark,
 };
 
 /// An MLP topology `I : H1 : … : O` (paper `Model(I-H1-…-HN-O)`).

@@ -10,6 +10,7 @@
 
 use super::MlpTopology;
 use crate::conv::{CnnLayer, CnnTopology, Conv2dLayer, Pool2dLayer, PoolKind, TensorShape};
+use crate::graph::GraphModel;
 
 /// One Table-IV benchmark row.
 #[derive(Debug, Clone)]
@@ -139,6 +140,87 @@ pub fn cnn_benchmark_by_name(name: &str) -> Option<CnnBenchmark> {
         .find(|b| norm_name(b.network) == wanted || norm_name(b.dataset) == wanted)
 }
 
+/// One DAG zoo entry (workloads the sequential front-ends cannot
+/// express: residual links, multi-branch blocks, concatenations).
+#[derive(Debug, Clone)]
+pub struct GraphBenchmark {
+    /// Network name, e.g. `TinyResNet`.
+    pub network: &'static str,
+    /// What the shape stands in for.
+    pub dataset: &'static str,
+    pub graph: GraphModel,
+}
+
+/// A residual MLP: one pre-activation dense block with a skip
+/// connection around it — `16 → fc24 → [fc24 → fc24] + skip → fc5`.
+pub fn residual_mlp() -> GraphBenchmark {
+    let mut g = GraphModel::new(TensorShape::new(16, 1, 1));
+    let h = g.dense(GraphModel::INPUT, 24);
+    let h = g.relu(h);
+    let b = g.dense(h, 24);
+    let b = g.relu(b);
+    let b = g.dense(b, 24);
+    let s = g.add(b, h);
+    let s = g.relu(s);
+    let o = g.dense(s, 5);
+    g.set_output(o);
+    GraphBenchmark { network: "ResMLP", dataset: "synthetic-16", graph: g }
+}
+
+/// A tiny ResNet: a conv stem plus two residual blocks
+/// (`conv → relu → conv`, skip add, ReLU), then pool → flatten → fc.
+pub fn tiny_resnet() -> GraphBenchmark {
+    let mut g = GraphModel::new(TensorShape::new(1, 8, 8));
+    let stem = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 4, 3, 1));
+    let mut x = g.relu(stem);
+    for _ in 0..2 {
+        let y = g.conv(x, Conv2dLayer::square(4, 4, 3, 1));
+        let y = g.relu(y);
+        let y = g.conv(y, Conv2dLayer::square(4, 4, 3, 1));
+        let s = g.add(y, x);
+        x = g.relu(s);
+    }
+    let p = g.pool(x, Pool2dLayer::square(PoolKind::Max, 2));
+    let f = g.flatten(p);
+    let o = g.dense(f, 10);
+    g.set_output(o);
+    GraphBenchmark { network: "TinyResNet", dataset: "synthetic-1x8x8", graph: g }
+}
+
+/// A two-branch Inception-style CNN: both branches open with the same
+/// conv geometry on the input (so the fused lowering shares one round
+/// set across them), branch B goes one conv deeper, and the branches
+/// concatenate into a pooled classifier head.
+pub fn inception_mini() -> GraphBenchmark {
+    let mut g = GraphModel::new(TensorShape::new(1, 12, 12));
+    let a = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 4, 3, 1));
+    let a = g.relu(a);
+    let b = g.conv(GraphModel::INPUT, Conv2dLayer::square(1, 4, 3, 1));
+    let b = g.relu(b);
+    let b = g.conv(b, Conv2dLayer::square(4, 6, 3, 1));
+    let b = g.relu(b);
+    let cat = g.concat(&[a, b]);
+    let p = g.pool(cat, Pool2dLayer::square(PoolKind::Max, 2));
+    let f = g.flatten(p);
+    let o = g.dense(f, 10);
+    g.set_output(o);
+    GraphBenchmark { network: "InceptionMini", dataset: "synthetic-1x12x12", graph: g }
+}
+
+/// The DAG zoo served by the graph compiler.
+pub fn graph_benchmarks() -> Vec<GraphBenchmark> {
+    vec![residual_mlp(), tiny_resnet(), inception_mini()]
+}
+
+/// Look a DAG benchmark up by network name (case- and
+/// separator-insensitive, e.g. `tiny-resnet`).
+pub fn graph_benchmark_by_name(name: &str) -> Option<GraphBenchmark> {
+    let wanted = norm_name(name);
+    graph_benchmarks()
+        .into_iter()
+        .find(|b| norm_name(b.network) == wanted)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,5 +289,28 @@ mod tests {
         assert_eq!(cifar.network, "CifarNet");
         assert_eq!(cifar.topology.output_features(), 10);
         assert!(cnn_benchmark_by_name("resnet").is_none());
+    }
+
+    #[test]
+    fn graph_zoo_entries() {
+        let zoo = graph_benchmarks();
+        assert_eq!(zoo.len(), 3);
+        for b in &zoo {
+            let out = if b.network == "ResMLP" { 5 } else { 10 };
+            assert_eq!(b.graph.output_shape().features(), out, "{}", b.network);
+            assert!(b.graph.n_parametric() >= 3, "{}", b.network);
+            assert!(b.graph.macs_per_sample() > 0);
+        }
+        let resnet = graph_benchmark_by_name("tiny-resnet").unwrap();
+        // stem + 2 blocks x 2 convs + head = 6 parametric nodes.
+        assert_eq!(resnet.graph.n_parametric(), 6);
+        let inception = graph_benchmark_by_name("InceptionMini").unwrap();
+        // Both branch-opening convs read the input node directly.
+        let params = inception.graph.parametric_nodes();
+        assert_eq!(
+            inception.graph.node(params[0]).inputs,
+            inception.graph.node(params[1]).inputs,
+        );
+        assert!(graph_benchmark_by_name("lenet-5").is_none());
     }
 }

@@ -3,7 +3,7 @@
 //! weights), and pretty-printing helpers for the table generators.
 
 pub mod check;
-mod rng;
+pub mod rng;
 mod table;
 
 pub use rng::SplitMix64;

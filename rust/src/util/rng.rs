@@ -6,6 +6,29 @@
 //! Rust NPE simulator and the JAX/PJRT artifacts can be fed identical
 //! synthetic models without a data file interchange.
 
+/// The SplitMix64 golden-ratio increment, also used to derive the
+/// per-layer seeds of the synthetic model zoos.
+pub const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// The layer-indexed synthesis stream shared by every quantized model
+/// kind (`QuantizedMlp`, `QuantizedCnn`, `QuantizedGraph`): parametric
+/// layer `l` of a model seeded `seed` draws from
+/// `SplitMix64(seed ^ (l+1)·GOLDEN)` — mirrored exactly in
+/// `python/compile/model.py::synth_weights`.
+pub fn layer_stream(seed: u64, layer: usize) -> SplitMix64 {
+    SplitMix64::new(seed ^ GOLDEN.wrapping_mul(layer as u64 + 1))
+}
+
+/// Draw the `n` bounded synthetic weights of parametric layer `layer`.
+///
+/// The single seed-derivation point for all three model zoos — keeping
+/// it here is what guarantees `into_graph()` conversions synthesize
+/// weights identical to their legacy counterparts.
+pub fn synth_weights(seed: u64, layer: usize, n: usize, bound: i16) -> Vec<i16> {
+    let mut rng = layer_stream(seed, layer);
+    (0..n).map(|_| rng.next_i16_bounded(bound)).collect()
+}
+
 /// SplitMix64 PRNG (public-domain algorithm by Sebastiano Vigna).
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
@@ -86,6 +109,22 @@ mod tests {
             let v = rng.next_i16_bounded(200);
             assert!((-200..=200).contains(&v));
         }
+    }
+
+    #[test]
+    fn layer_stream_matches_manual_derivation() {
+        // The shared helper must pin the historical formula exactly —
+        // all three model zoos' weights depend on it.
+        let mut manual = SplitMix64::new(0xFEED ^ GOLDEN.wrapping_mul(3));
+        let mut stream = layer_stream(0xFEED, 2);
+        for _ in 0..16 {
+            assert_eq!(stream.next_u64(), manual.next_u64());
+        }
+        let w = synth_weights(0xFEED, 2, 8, 96);
+        let mut again = layer_stream(0xFEED, 2);
+        let expect: Vec<i16> = (0..8).map(|_| again.next_i16_bounded(96)).collect();
+        assert_eq!(w, expect);
+        assert!(w.iter().all(|v| v.abs() <= 96));
     }
 
     #[test]

@@ -155,6 +155,71 @@ fn im2col_gemm_equals_direct_convolution() {
     assert_eq!(gemm, expect);
 }
 
+/// im2col edge cases, each cross-checked bit-exactly against the
+/// nested-loop reference: the lowered GEMM must agree with direct
+/// convolution index math even where the patch extraction is
+/// irregular.
+#[test]
+fn im2col_edge_cases_match_nested_loop_reference() {
+    // (label, input shape, conv): asymmetric kernels, stride > kernel
+    // (windows skip input pixels entirely), and padding = kernel - 1
+    // (every border patch is mostly zeros).
+    let cases: Vec<(&str, TensorShape, Conv2dLayer)> = vec![
+        (
+            "asymmetric 3x2 kernel",
+            TensorShape::new(2, 7, 6),
+            Conv2dLayer::new(2, 3, (3, 2), (1, 1), (0, 0)),
+        ),
+        (
+            "asymmetric 1x4 kernel with asymmetric padding",
+            TensorShape::new(1, 5, 9),
+            Conv2dLayer::new(1, 2, (1, 4), (1, 1), (0, 3)),
+        ),
+        (
+            "stride 3 > kernel 2",
+            TensorShape::new(1, 8, 8),
+            Conv2dLayer::new(1, 4, (2, 2), (3, 3), (0, 0)),
+        ),
+        (
+            "asymmetric stride (3,2) > kernel (2,1)",
+            TensorShape::new(2, 9, 7),
+            Conv2dLayer::new(2, 2, (2, 1), (3, 2), (0, 0)),
+        ),
+        (
+            "padding = kernel - 1",
+            TensorShape::new(1, 5, 5),
+            Conv2dLayer::new(1, 3, (3, 3), (1, 1), (2, 2)),
+        ),
+        (
+            "asymmetric kernel with padding = kernel - 1 and stride 2",
+            TensorShape::new(2, 6, 4),
+            Conv2dLayer::new(2, 3, (3, 2), (2, 2), (2, 1)),
+        ),
+    ];
+    for (label, shape, conv) in cases {
+        let topo = CnnTopology::new(
+            shape,
+            vec![CnnLayer::Conv(conv), CnnLayer::Dense { out: 3 }],
+        );
+        let cnn = QuantizedCnn::synthesize(topo, 0xED6E ^ shape.features() as u64);
+        let inputs = cnn.synth_inputs(2, 0x5EED);
+        let expect = cnn.forward_batch(&inputs);
+
+        // The full NPE path (im2col -> Algorithm 1 -> PE array).
+        let report = CnnEngine::tcd(NpeGeometry::PAPER).execute(&cnn, &inputs);
+        assert_eq!(report.outputs, expect, "{label}: engine == reference");
+
+        // And the bare lowering identity: patch . kernel-row == conv sum.
+        let rows = im2col(&inputs[0], shape, &conv);
+        let out = conv.out_shape(shape);
+        assert_eq!(rows.len(), out.h * out.w, "{label}: patch count");
+        assert!(
+            rows.iter().all(|r| r.len() == conv.patch_len()),
+            "{label}: patch length"
+        );
+    }
+}
+
 #[test]
 fn coordinator_serves_lenet_traffic() {
     // CNN model handles flow through the batcher/router end to end.

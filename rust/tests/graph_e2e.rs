@@ -1,0 +1,190 @@
+//! End-to-end validation of the graph compiler: the DAG zoo lowered by
+//! the pass pipeline + sibling-sharing lowering, scheduled by Algorithm
+//! 1, executed on the cycle-accurate NPE, served through both backends,
+//! and compared bit-exactly against the nested-loop Fix16 reference
+//! interpreter. The legacy sequential front-ends are checked to be
+//! exactly re-expressed: `into_graph()` reproduces the OS/CNN engines'
+//! outputs bit-for-bit.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tcd_npe::conv::{CnnEngine, QuantizedCnn};
+use tcd_npe::coordinator::{BatcherConfig, Coordinator, ServedModel};
+use tcd_npe::dataflow::{DataflowEngine, OsEngine};
+use tcd_npe::graph::{lower_graph, optimize, GraphEngine, QuantizedGraph};
+use tcd_npe::mapper::{MapperTree, NpeGeometry};
+use tcd_npe::model::zoo::{cnn_benchmark_by_name, graph_benchmarks};
+use tcd_npe::model::{benchmark_by_name, QuantizedMlp};
+
+const SEED: u64 = 0x6AF0_0D5;
+
+#[test]
+fn zoo_graphs_execute_bit_exactly_raw_and_optimized() {
+    // Every DAG zoo entry, on the cycle-accurate NPE: the raw graph, the
+    // optimized graph, and the unfused lowering must all equal the
+    // nested-loop reference interpreter bit-for-bit.
+    for b in graph_benchmarks() {
+        let q = QuantizedGraph::synthesize(b.graph.clone(), SEED);
+        let inputs = q.synth_inputs(3, 0xDA7A);
+        let expect = q.forward_batch(&inputs);
+
+        let raw = GraphEngine::tcd(NpeGeometry::PAPER).execute(&q, &inputs);
+        assert_eq!(raw.outputs, expect, "{}: raw graph", b.network);
+
+        let (opt, stats) = optimize(&q);
+        assert!(stats.activations_folded > 0, "{}: folds something", b.network);
+        let opted = GraphEngine::tcd(NpeGeometry::PAPER).execute(&opt, &inputs);
+        assert_eq!(opted.outputs, expect, "{}: optimized graph", b.network);
+        assert_eq!(opt.forward_batch(&inputs), expect, "{}: reference(opt)", b.network);
+
+        let unfused = GraphEngine::tcd(NpeGeometry::PAPER)
+            .fused(false)
+            .execute(&q, &inputs);
+        assert_eq!(unfused.outputs, expect, "{}: unfused lowering", b.network);
+        assert!(raw.cycles > 0 && raw.energy.total_pj() > 0.0);
+    }
+}
+
+#[test]
+fn zoo_graphs_serve_bit_exactly_on_single_backend() {
+    for b in graph_benchmarks() {
+        let q = QuantizedGraph::synthesize(b.graph.clone(), SEED ^ 1);
+        let inputs = q.synth_inputs(5, 0xBEE5);
+        let expect = q.forward_batch(&inputs);
+        let coord = Coordinator::spawn_graph(
+            q,
+            NpeGeometry::PAPER,
+            BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(20) },
+        );
+        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+        for (rx, want) in rxs.into_iter().zip(expect) {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.output, want, "{}: served == reference", b.network);
+            assert!(resp.npe_time_ns > 0.0);
+        }
+        let metrics = coord.metrics.lock().unwrap().clone();
+        assert_eq!(metrics.requests, 5, "{}", b.network);
+        assert!(metrics.cache_hits + metrics.cache_misses > 0, "{}", b.network);
+        drop(metrics);
+        coord.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn zoo_graphs_serve_bit_exactly_on_fleet_backend() {
+    // Heterogeneous fleet: responses must be identical regardless of
+    // which device geometry executes a batch.
+    for b in graph_benchmarks() {
+        let q = QuantizedGraph::synthesize(b.graph.clone(), SEED ^ 2);
+        let inputs = q.synth_inputs(8, 0xF1EE7);
+        let expect = q.forward_batch(&inputs);
+        let coord = Coordinator::spawn_fleet(
+            ServedModel::Graph(q),
+            vec![NpeGeometry::PAPER, NpeGeometry::WALKTHROUGH],
+            BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(5) },
+        );
+        let client = coord.client();
+        let rxs: Vec<_> = inputs.iter().map(|x| client.submit(x.clone())).collect();
+        for (rx, want) in rxs.into_iter().zip(expect) {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.output, want, "{}: fleet == reference", b.network);
+        }
+        let metrics_handle = Arc::clone(&coord.metrics);
+        coord.shutdown().unwrap();
+        let metrics = metrics_handle.lock().unwrap().clone();
+        assert_eq!(metrics.requests, 8, "{}", b.network);
+        assert_eq!(metrics.devices.len(), 2);
+        assert_eq!(
+            metrics.devices.iter().map(|d| d.requests).sum::<u64>(),
+            8,
+            "{}: lanes partition the requests",
+            b.network
+        );
+    }
+}
+
+#[test]
+fn mlp_into_graph_reproduces_legacy_engine_exactly() {
+    // Table-IV topologies re-expressed through the graph path must match
+    // the legacy OS engine bit-for-bit: same synthesized weights, same
+    // served values.
+    for name in ["Iris", "Wine"] {
+        let bench = benchmark_by_name(name).unwrap();
+        let mlp = QuantizedMlp::synthesize(bench.topology.clone(), SEED ^ 3);
+        let q = QuantizedGraph::synthesize(bench.topology.clone().into_graph(), SEED ^ 3);
+        assert_eq!(q.weights, mlp.weights, "{name}: identical weight streams");
+
+        let inputs = mlp.synth_inputs(6, 0x1D1D);
+        let legacy = OsEngine::tcd(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        let graph = GraphEngine::tcd(NpeGeometry::PAPER).execute(&q, &inputs);
+        assert_eq!(graph.outputs, legacy.outputs, "{name}: graph == OS engine");
+        assert_eq!(legacy.outputs, mlp.forward_batch(&inputs), "{name}: sanity");
+
+        // The optimized graph (ReLUs folded) must not change a bit.
+        let (opt, stats) = optimize(&q);
+        assert_eq!(stats.activations_folded, bench.topology.layers.len() - 2);
+        let opted = GraphEngine::tcd(NpeGeometry::PAPER).execute(&opt, &inputs);
+        assert_eq!(opted.outputs, legacy.outputs, "{name}: optimized == legacy");
+    }
+}
+
+#[test]
+fn cnn_into_graph_reproduces_legacy_engine_exactly() {
+    let lenet = cnn_benchmark_by_name("lenet-5").unwrap();
+    let cnn = QuantizedCnn::synthesize(lenet.topology.clone(), SEED ^ 4);
+    let q = QuantizedGraph::synthesize(lenet.topology.clone().into_graph(), SEED ^ 4);
+    assert_eq!(q.weights, cnn.weights, "identical weight streams");
+
+    let inputs = cnn.synth_inputs(2, 0xC4A4);
+    let legacy = CnnEngine::tcd(NpeGeometry::PAPER).execute(&cnn, &inputs);
+    let graph = GraphEngine::tcd(NpeGeometry::PAPER).execute(&q, &inputs);
+    assert_eq!(graph.outputs, legacy.outputs, "graph == CNN engine");
+
+    // Optimized: LeNet folds 4 hidden ReLUs and fuses both conv->pool
+    // chains; still bit-exact.
+    let (opt, stats) = optimize(&q);
+    assert_eq!(stats.activations_folded, 4);
+    assert_eq!(stats.pools_fused, 2);
+    let opted = GraphEngine::tcd(NpeGeometry::PAPER).execute(&opt, &inputs);
+    assert_eq!(opted.outputs, legacy.outputs, "optimized == legacy");
+}
+
+#[test]
+fn fused_lowering_strictly_saves_rounds_on_a_zoo_entry() {
+    // The acceptance bar: fused lowering reports strictly fewer rounds
+    // than unfused on at least one zoo entry (the Inception twin-stem).
+    let mut any_strict = false;
+    for b in graph_benchmarks() {
+        let q = QuantizedGraph::synthesize(b.graph.clone(), SEED);
+        let (opt, _) = optimize(&q);
+        let mut mapper = MapperTree::new(NpeGeometry::PAPER);
+        let fused = lower_graph(&mut mapper, None, &opt.graph, 2, true).total_rounds();
+        let unfused = lower_graph(&mut mapper, None, &q.graph, 2, false).total_rounds();
+        assert!(
+            fused <= unfused,
+            "{}: fused {fused} > unfused {unfused}",
+            b.network
+        );
+        if fused < unfused {
+            any_strict = true;
+        }
+    }
+    assert!(any_strict, "no zoo entry saved rounds under fused lowering");
+}
+
+#[test]
+fn graph_outputs_are_geometry_independent() {
+    let b = graph_benchmarks().remove(1); // TinyResNet
+    let q = QuantizedGraph::synthesize(b.graph, SEED ^ 5);
+    let inputs = q.synth_inputs(2, 0x6E0);
+    let expect = q.forward_batch(&inputs);
+    for geom in [
+        NpeGeometry::WALKTHROUGH,
+        NpeGeometry::PAPER,
+        NpeGeometry::new(4, 4),
+        NpeGeometry::new(1, 3),
+    ] {
+        let report = GraphEngine::tcd(geom).execute(&q, &inputs);
+        assert_eq!(report.outputs, expect, "{geom:?}");
+    }
+}
