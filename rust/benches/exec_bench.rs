@@ -1,0 +1,42 @@
+//! Bench E9 — the execution core: wall-clock of the `bitexact` / `fast` /
+//! `parallel` roll backends over Table-IV MLPs, LeNet-5 and the DAG zoo.
+//!
+//! Run: `cargo bench --bench exec_bench`
+//!
+//! Emits `BENCH_exec.json` in the working directory so CI can archive
+//! the trajectory (per-workload backend speedups) across PRs. Pin
+//! `TCD_NPE_THREADS` for comparable numbers across runners.
+
+use tcd_npe::bench::{exec_json, exec_rows, render_exec_table, EXEC_BATCHES};
+
+fn main() {
+    println!("=== execution core: roll-backend sweep ===");
+    let rows = exec_rows(EXEC_BATCHES);
+    println!("{}", render_exec_table(&rows, EXEC_BATCHES));
+
+    let best_t4 = rows
+        .iter()
+        .filter(|r| r.table4)
+        .map(|r| r.speedup_vs_bitexact())
+        .fold(0.0f64, f64::max);
+    println!(
+        "best Table-IV parallel-vs-bitexact speedup: {best_t4:.0}x (acceptance bar: >=10x)"
+    );
+    assert!(
+        rows.iter().all(|r| r.bit_identical),
+        "a backend diverged from the Fix16 reference"
+    );
+    // The acceptance bar is enforced here, in release, so a performance
+    // regression turns the CI exec job red instead of silently archiving
+    // a bad trajectory.
+    assert!(
+        best_t4 >= 10.0,
+        "Parallel backend no longer >=10x BitExact on any Table-IV workload ({best_t4:.1}x)"
+    );
+
+    let json = exec_json(&rows, EXEC_BATCHES);
+    match std::fs::write("BENCH_exec.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_exec.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_exec.json: {e}"),
+    }
+}

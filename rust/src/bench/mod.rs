@@ -5,6 +5,7 @@
 
 pub mod ablation;
 pub mod convnet;
+pub mod exec;
 pub mod fig10;
 pub mod fleet;
 pub mod graph;
@@ -14,6 +15,10 @@ pub mod table2;
 pub mod table3;
 
 pub use convnet::{conv_rows, render_conv_table, ConvRow, CONV_BATCHES};
+pub use exec::{
+    exec_json, exec_row, exec_rows, exec_workloads, render_exec_table, ExecRow, ExecWorkload,
+    EXEC_BATCHES,
+};
 pub use fig10::{fig10_rows, render_fig10, Fig10Row};
 pub use fleet::{
     fleet_json, fleet_row, fleet_rows, mapper_cache_bench, render_fleet_table, FleetRow,

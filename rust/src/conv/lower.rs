@@ -13,13 +13,11 @@
 use super::im2col::{im2col, im2col_traffic, Im2colTraffic};
 use super::layer::{CnnLayer, CnnTopology, Pool2dLayer, PoolKind, TensorShape};
 use super::QuantizedCnn;
-use crate::dataflow::{cached_mac_ppa, pe_array_leak_uw, DataflowReport, EnergyBreakdown};
-use crate::mapper::schedule::bfs_events;
+use crate::dataflow::DataflowReport;
+use crate::exec::{self, BackendKind, ExecCore, ExecRun, OutputPath};
 use crate::mapper::{Gamma, LayerSchedule, MapperTree, ModelSchedule, NpeGeometry, ScheduleCache};
-use crate::memory::NpeMemorySystem;
 use crate::model::{MlpTopology, QuantizedMlp};
-use crate::npe::{ActivationUnit, ExecutionStats, PeArray};
-use crate::ppa::TechParams;
+use crate::npe::ActivationUnit;
 use crate::tcdmac::MacKind;
 use std::sync::Arc;
 
@@ -148,41 +146,36 @@ pub fn pool2d(input: &[i16], shape: TensorShape, pool: &Pool2dLayer) -> Vec<i16>
     next
 }
 
-/// The CNN execution engine: im2col-lowered GEMMs on the cycle-accurate
-/// PE array, pooling in the output path — the conv twin of
-/// [`crate::dataflow::OsEngine`].
+/// The CNN execution engine: im2col-lowered GEMMs dispatched through
+/// [`crate::exec::ExecCore`], pooling in the output path — the conv twin
+/// of [`crate::dataflow::OsEngine`].
 ///
 /// Like the OS engine, this is a reusable device handle: the private
 /// mapper memo persists across `execute` calls, and
 /// [`CnnEngine::with_cache`] joins it to a fleet-wide schedule cache.
 pub struct CnnEngine {
-    // Private: the mapper memo bakes the geometry in at construction, so
-    // mutating these afterwards would desync schedules from the array.
-    geometry: NpeGeometry,
-    kind: MacKind,
-    /// Run the bit-exact MAC models instead of the fast path.
-    pub bitexact: bool,
-    mapper: MapperTree,
-    cache: Option<Arc<ScheduleCache>>,
+    // Private: the core bakes geometry/kind in at construction, so
+    // mutating them afterwards would desync schedules from the array.
+    core: ExecCore,
+    /// Which roll backend executes the schedule (re-synced into the core
+    /// on every execute, so toggling is safe).
+    pub backend: BackendKind,
 }
 
 impl CnnEngine {
     pub fn new(geometry: NpeGeometry, kind: MacKind) -> Self {
         Self {
-            geometry,
-            kind,
-            bitexact: false,
-            mapper: MapperTree::new(geometry),
-            cache: None,
+            core: ExecCore::new(geometry, kind),
+            backend: BackendKind::Fast,
         }
     }
 
     pub fn geometry(&self) -> NpeGeometry {
-        self.geometry
+        self.core.geometry()
     }
 
     pub fn kind(&self) -> MacKind {
-        self.kind
+        self.core.kind()
     }
 
     pub fn tcd(geometry: NpeGeometry) -> Self {
@@ -193,19 +186,26 @@ impl CnnEngine {
         Self::new(geometry, crate::dataflow::best_conventional())
     }
 
+    /// Run the bit-exact MAC models instead of the fast path.
     pub fn bitexact(mut self, on: bool) -> Self {
-        self.bitexact = on;
+        self.backend = if on { BackendKind::BitExact } else { BackendKind::Fast };
+        self
+    }
+
+    /// Select the roll backend (builder form of the `backend` field).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
         self
     }
 
     /// Attach a fleet-shared schedule cache (see [`ScheduleCache`]).
     pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
-        self.cache = Some(cache);
+        self.core = self.core.with_cache(cache);
         self
     }
 
     pub fn name(&self) -> &'static str {
-        match self.kind {
+        match self.kind() {
             MacKind::Tcd => "CNN im2col (TCD-NPE)",
             MacKind::Conv(..) => "CNN im2col (conv MAC)",
         }
@@ -217,15 +217,13 @@ impl CnnEngine {
     /// Outputs are bit-exact against [`QuantizedCnn::forward_batch`]
     /// (integration-tested): the GEMM rolls accumulate exactly the terms
     /// of the convolution sums, and quantization/ReLU/pooling are shared.
+    /// Each lowered GEMM dispatches through [`ExecCore::run_gemm`] — the
+    /// engine owns only the im2col/pool/reshape plumbing around it.
     pub fn execute(&mut self, cnn: &QuantizedCnn, inputs: &[Vec<i16>]) -> DataflowReport {
-        let tech = TechParams::DEFAULT;
         let b = inputs.len();
         assert!(b > 0, "empty batch");
-        let mut array = PeArray::new(self.geometry, self.kind);
-        let mut stats = ExecutionStats::default();
-        let mut mem = NpeMemorySystem::new();
-        let extra = matches!(self.kind, MacKind::Tcd) as u64;
-        let mut active_mac_cycles = 0u64;
+        self.core.set_backend(self.backend);
+        let mut run = self.core.begin();
 
         let n_param = cnn.topology.n_parametric();
         let mut feats: Vec<Vec<i16>> = inputs.to_vec();
@@ -242,16 +240,7 @@ impl CnnEngine {
                     }
                     let surrogate = gemm_view(c.patch_len(), c.out_channels, cnn, pi);
                     let rectify = pi + 1 < n_param;
-                    let gemm_out = self.run_gemm(
-                        &mut array,
-                        &mut stats,
-                        &mut mem,
-                        &mut active_mac_cycles,
-                        &surrogate,
-                        &rows,
-                        rectify,
-                        extra,
-                    );
+                    let gemm_out = self.run_gemm(&mut run, &surrogate, &rows, rectify);
                     // Reshape [row][oc] back to per-sample CHW maps.
                     let mut next = vec![vec![0i16; out_shape.features()]; b];
                     for (r, vals) in gemm_out.iter().enumerate() {
@@ -260,34 +249,25 @@ impl CnnEngine {
                             next[bi][oc * patches + pix] = v;
                         }
                     }
-                    mem.account_im2col(&im2col_traffic(in_shape, &c), b as u64);
+                    run.mem.account_im2col(&im2col_traffic(in_shape, &c), b as u64);
                     feats = next;
                     pi += 1;
-                    stats.layer_swaps += 1;
+                    run.stats.layer_swaps += 1;
                 }
                 CnnLayer::Pool(p) => {
                     feats = feats.iter().map(|f| pool2d(f, in_shape, &p)).collect();
-                    stats.layer_swaps += 1;
+                    run.stats.layer_swaps += 1;
                 }
                 CnnLayer::Dense { out } => {
                     let surrogate = gemm_view(in_shape.features(), out, cnn, pi);
                     let rectify = pi + 1 < n_param;
-                    feats = self.run_gemm(
-                        &mut array,
-                        &mut stats,
-                        &mut mem,
-                        &mut active_mac_cycles,
-                        &surrogate,
-                        &feats,
-                        rectify,
-                        extra,
-                    );
+                    feats = self.run_gemm(&mut run, &surrogate, &feats, rectify);
                     pi += 1;
-                    stats.layer_swaps += 1;
+                    run.stats.layer_swaps += 1;
                 }
             }
         }
-        stats.compute_cycles = array.cycles();
+        let (stats, mut mem, active_mac_cycles) = run.finish();
 
         // DRAM traffic: RLC-compressed weights + inputs in, outputs out.
         for w in &cnn.weights {
@@ -300,104 +280,30 @@ impl CnnEngine {
             mem.account_dram_out(y);
         }
 
-        let mac = cached_mac_ppa(self.kind);
-        let cycles = stats.total_cycles();
-        let time_ns = cycles as f64 * mac.delay_ns;
-        let energy = EnergyBreakdown {
-            pe_dynamic_pj: active_mac_cycles as f64 * mac.energy_per_cycle_pj(),
-            pe_leak_pj: pe_array_leak_uw(self.kind, self.geometry.pes()) * time_ns * 1e-3,
-            mem_dynamic_pj: mem.sram_dynamic_pj(&tech),
-            mem_leak_pj: mem.leakage_uw(&tech) * time_ns * 1e-3,
-            dram_pj: mem.dram_pj(&tech),
-        };
-
-        DataflowReport {
-            dataflow: self.name(),
-            mac: self.kind.name(),
-            outputs: feats,
-            cycles,
-            time_ns,
-            energy,
-        }
+        exec::assemble_report(
+            self.name(),
+            self.kind(),
+            self.geometry(),
+            feats,
+            &stats,
+            &mem,
+            active_mac_cycles,
+        )
     }
 
-    /// Run one lowered GEMM Γ(rows, I, U) on the PE array: mapper-optimal
-    /// roll assignments, streamed exactly like an MLP layer, activation in
-    /// the Fig.-4 output path.
-    ///
-    /// Keep the roll loop in lockstep with [`crate::npe::Controller::run`]
-    /// (same config-switch counting, same bitexact/fast dispatch): the
-    /// two are the cycle model for MLP and CNN traffic respectively.
-    #[allow(clippy::too_many_arguments)]
+    /// One lowered GEMM Γ(rows, I, U) through the execution core —
+    /// mapper-optimal roll assignments, streamed exactly like an MLP
+    /// layer, uniform activation in the Fig.-4 output path.
     fn run_gemm(
         &mut self,
-        array: &mut PeArray,
-        stats: &mut ExecutionStats,
-        mem: &mut NpeMemorySystem,
-        active_mac_cycles: &mut u64,
+        run: &mut ExecRun,
         gemm: &QuantizedMlp,
         rows: &[Vec<i16>],
         rectify: bool,
-        extra: u64,
     ) -> Vec<Vec<i16>> {
-        let n_rows = rows.len();
-        let fan_out = gemm.topology.outputs();
         let act = ActivationUnit::new(rectify);
-        let gamma = Gamma::new(n_rows, gemm.topology.inputs(), fan_out);
-        let row_ids: Vec<usize> = (0..n_rows).collect();
-        let neuron_ids: Vec<usize> = (0..fan_out).collect();
-        // One exec tree drives both the executed rolls and the accounted
-        // schedule, so cycles/energy can never desync from what ran —
-        // whether it comes from the fleet cache or the private mapper.
-        // A cache hit only borrows the Arc'd entry: no event-list clone
-        // on the steady-state hot path.
-        let cached_entry;
-        let fresh_sched;
-        let (sched, assignments): (&LayerSchedule, _) = match &self.cache {
-            Some(cache) => {
-                cached_entry = cache.get_or_compute(&mut self.mapper, gamma);
-                let node = cached_entry.exec.as_ref().expect("non-empty GEMM");
-                (&cached_entry.layer, node.assignments(&row_ids, &neuron_ids))
-            }
-            None => {
-                let node = self.mapper.best(n_rows, fan_out).expect("non-empty GEMM");
-                let assignments = node.assignments(&row_ids, &neuron_ids);
-                fresh_sched = LayerSchedule {
-                    gamma,
-                    geometry: self.geometry,
-                    events: bfs_events(&node),
-                };
-                (&fresh_sched, assignments)
-            }
-        };
-
-        let mut out = vec![vec![0i16; fan_out]; n_rows];
-        let mut last_config = None;
-        for roll in &assignments {
-            if last_config != Some(roll.config) {
-                stats.config_switches += 1;
-                last_config = Some(roll.config);
-            }
-            let results = if self.bitexact {
-                array.run_roll_bitexact(roll, gemm, 0, rows)
-            } else {
-                array.run_roll_fast(roll, gemm, 0, rows)
-            };
-            for r in results {
-                out[r.batch][r.neuron] = act.apply(r.acc);
-            }
-            stats.rolls += 1;
-        }
-
-        // Schedule-level accounting (energy model inputs).
-        let per_pair = sched.gamma.inputs as u64 + extra;
-        *active_mac_cycles += sched
-            .events
-            .iter()
-            .map(|e| e.work() as u64 * per_pair)
-            .sum::<u64>();
-        mem.account_layer_events(sched);
-        out
+        self.core
+            .run_gemm(run, gemm, 0, rows, OutputPath::Uniform(act), true)
     }
 }
 

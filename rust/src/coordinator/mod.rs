@@ -27,7 +27,8 @@ pub use metrics::{CoordinatorMetrics, DeviceMetrics};
 
 use crate::conv::{CnnEngine, QuantizedCnn};
 use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
-use crate::fleet::{Fleet, FleetJob};
+use crate::exec::BackendKind;
+use crate::fleet::{DeviceSpec, Fleet, FleetJob};
 use crate::graph::{GraphEngine, QuantizedGraph};
 use crate::mapper::{NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
 use crate::model::QuantizedMlp;
@@ -172,7 +173,7 @@ impl Coordinator {
     }
 
     /// Spawn the coordinator thread for any [`ServedModel`] on a single
-    /// simulated NPE.
+    /// simulated NPE (default `Fast` roll backend).
     ///
     /// `pjrt` applies to MLP models only — no CNN artifacts exist, so a
     /// spec passed with a [`ServedModel::Cnn`] is ignored (no runtime is
@@ -180,6 +181,19 @@ impl Coordinator {
     pub fn spawn_model(
         model: ServedModel,
         geometry: NpeGeometry,
+        cfg: BatcherConfig,
+        pjrt: Option<PjrtSpec>,
+    ) -> Self {
+        Self::spawn_model_on(model, geometry, BackendKind::Fast, cfg, pjrt)
+    }
+
+    /// Spawn a single-NPE coordinator on an explicit roll backend
+    /// (`parallel` is the serving fast path; `bitexact` turns the
+    /// coordinator into a slow full-verification service).
+    pub fn spawn_model_on(
+        model: ServedModel,
+        geometry: NpeGeometry,
+        backend: BackendKind,
         cfg: BatcherConfig,
         pjrt: Option<PjrtSpec>,
     ) -> Self {
@@ -202,9 +216,15 @@ impl Coordinator {
                 ServedModel::Cnn(_) | ServedModel::Graph(_) => None,
             };
             let backend = Backend::Single(Box::new(SingleBackend {
-                mlp_engine: OsEngine::tcd(geometry).with_cache(Arc::clone(&cache_thread)),
-                cnn_engine: CnnEngine::tcd(geometry).with_cache(Arc::clone(&cache_thread)),
-                graph_engine: GraphEngine::tcd(geometry).with_cache(Arc::clone(&cache_thread)),
+                mlp_engine: OsEngine::tcd(geometry)
+                    .with_cache(Arc::clone(&cache_thread))
+                    .with_backend(backend),
+                cnn_engine: CnnEngine::tcd(geometry)
+                    .with_cache(Arc::clone(&cache_thread))
+                    .with_backend(backend),
+                graph_engine: GraphEngine::tcd(geometry)
+                    .with_cache(Arc::clone(&cache_thread))
+                    .with_backend(backend),
                 runtime,
             }));
             run_loop(rx, Arc::new(model), cfg, backend, metrics_thread, cache_thread);
@@ -214,13 +234,26 @@ impl Coordinator {
 
     /// Spawn a coordinator whose batches execute on a fleet of simulated
     /// NPE devices, one per entry of `geometries` (heterogeneous shapes
-    /// are fine — responses stay bit-exact regardless of geometry).
+    /// are fine — responses stay bit-exact regardless of geometry),
+    /// all on the default `Fast` backend.
     pub fn spawn_fleet(
         model: ServedModel,
         geometries: Vec<NpeGeometry>,
         cfg: BatcherConfig,
     ) -> Self {
-        assert!(!geometries.is_empty(), "a fleet needs at least one device");
+        let specs = geometries.into_iter().map(DeviceSpec::from).collect();
+        Self::spawn_fleet_on(model, specs, cfg)
+    }
+
+    /// Spawn a fleet coordinator with per-device [`DeviceSpec`]s —
+    /// geometry *and* roll backend are selected per device (responses
+    /// stay bit-exact regardless of either).
+    pub fn spawn_fleet_on(
+        model: ServedModel,
+        specs: Vec<DeviceSpec>,
+        cfg: BatcherConfig,
+    ) -> Self {
+        assert!(!specs.is_empty(), "a fleet needs at least one device");
         let (tx, rx) = mpsc::channel::<CoordinatorMsg>();
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
         let cache = ScheduleCache::shared_bounded(DEFAULT_SERVING_CACHE_CAPACITY);
@@ -228,9 +261,9 @@ impl Coordinator {
         let cache_thread = Arc::clone(&cache);
         let handle = std::thread::spawn(move || {
             let model = Arc::new(model);
-            let fleet = Fleet::spawn(
+            let fleet = Fleet::spawn_on(
                 Arc::clone(&model),
-                &geometries,
+                &specs,
                 Arc::clone(&cache_thread),
                 Arc::clone(&metrics_thread),
             );
@@ -599,6 +632,26 @@ mod tests {
                 "exactly one response per request"
             );
         }
+    }
+
+    #[test]
+    fn parallel_backend_coordinator_serves_bit_exactly() {
+        let m = mlp();
+        let inputs = m.synth_inputs(6, 51);
+        let expect = m.forward_batch(&inputs);
+        let coord = Coordinator::spawn_model_on(
+            ServedModel::Mlp(m.clone()),
+            NpeGeometry::WALKTHROUGH,
+            BackendKind::Parallel,
+            BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(5) },
+            None,
+        );
+        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+        for (rx, want) in rxs.into_iter().zip(expect) {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.output, want, "parallel backend == reference");
+        }
+        coord.shutdown().unwrap();
     }
 
     #[test]

@@ -1,18 +1,18 @@
 //! Output-stationary dataflow (paper Fig. 9C/D) — the TCD-NPE's native
 //! mode, also runnable with conventional MACs for the comparison NPE.
 
-use super::{
-    cached_mac_ppa, pe_array_leak_uw, DataflowEngine, DataflowReport, EnergyBreakdown,
-};
+use super::{DataflowEngine, DataflowReport};
+use crate::exec::{self, BackendKind};
 use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::memory::NpeMemorySystem;
 use crate::model::QuantizedMlp;
 use crate::npe::Controller;
-use crate::ppa::TechParams;
 use crate::tcdmac::MacKind;
 use std::sync::Arc;
 
-/// OS engine: mapper-scheduled rolls on a PE array of the given MAC kind.
+/// OS engine: mapper-scheduled rolls on a PE array of the given MAC kind,
+/// dispatched through [`crate::exec::ExecCore`] (via the controller's
+/// layer walk).
 ///
 /// The engine is a reusable device handle: its controller (and the
 /// controller's Algorithm-1 memo) persists across `execute` calls, so a
@@ -24,9 +24,9 @@ pub struct OsEngine {
     // mutating them afterwards would desync execution from the labels.
     geometry: NpeGeometry,
     kind: MacKind,
-    /// Run the bit-exact MAC models instead of the fast path (re-synced
-    /// into the controller on every execute, so toggling is safe).
-    pub bitexact: bool,
+    /// Which roll backend executes the schedule (re-synced into the
+    /// controller on every execute, so toggling is safe).
+    pub backend: BackendKind,
     ctrl: Controller,
 }
 
@@ -35,7 +35,7 @@ impl OsEngine {
         Self {
             geometry,
             kind,
-            bitexact: false,
+            backend: BackendKind::Fast,
             ctrl: Controller::new(geometry, kind),
         }
     }
@@ -56,6 +56,18 @@ impl OsEngine {
         Self::new(geometry, super::best_conventional())
     }
 
+    /// Run the bit-exact MAC models instead of the fast path.
+    pub fn bitexact(mut self, on: bool) -> Self {
+        self.backend = if on { BackendKind::BitExact } else { BackendKind::Fast };
+        self
+    }
+
+    /// Select the roll backend (builder form of the `backend` field).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
     /// Attach a fleet-shared schedule cache (see [`ScheduleCache`]).
     pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
         self.ctrl = self.ctrl.with_cache(cache);
@@ -72,47 +84,28 @@ impl DataflowEngine for OsEngine {
     }
 
     fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
-        let tech = TechParams::DEFAULT;
         let b = inputs.len();
-        self.ctrl.bitexact = self.bitexact;
-        let (outputs, stats) = self.ctrl.run(mlp, inputs);
+        self.ctrl.backend = self.backend;
+        let (outputs, run) = self.ctrl.run_collect(mlp, inputs);
         let schedule = self.ctrl.schedule(mlp, b);
+        // Active MAC-cycles (the dynamic-energy input) accumulate in the
+        // exec run: each roll keeps load.0 × load.1 PEs busy for I (+1
+        // for TCD) cycles; idle PEs are clock-gated (leakage only).
+        let (stats, _, active_mac_cycles) = run.finish();
 
-        // Active MAC-cycles: each roll keeps load.0 × load.1 PEs busy for
-        // I (+1 for TCD) cycles; idle PEs are clock-gated (leakage only).
-        let extra = matches!(self.kind, MacKind::Tcd) as u64;
-        let active_mac_cycles: u64 = schedule
-            .layers
-            .iter()
-            .map(|l| {
-                let per_pair = l.gamma.inputs as u64 + extra;
-                l.events.iter().map(|e| e.work() as u64 * per_pair).sum::<u64>()
-            })
-            .sum();
-
-        let mac = cached_mac_ppa(self.kind);
-        let cycles = stats.total_cycles();
-        let time_ns = cycles as f64 * mac.delay_ns;
-
+        // Whole-model memory traffic (weights, ping-pong features, DRAM).
         let mut mem = NpeMemorySystem::new();
         mem.account_schedule(&schedule, mlp, inputs);
 
-        let energy = EnergyBreakdown {
-            pe_dynamic_pj: active_mac_cycles as f64 * mac.energy_per_cycle_pj(),
-            pe_leak_pj: pe_array_leak_uw(self.kind, self.geometry.pes()) * time_ns * 1e-3,
-            mem_dynamic_pj: mem.sram_dynamic_pj(&tech),
-            mem_leak_pj: mem.leakage_uw(&tech) * time_ns * 1e-3,
-            dram_pj: mem.dram_pj(&tech),
-        };
-
-        DataflowReport {
-            dataflow: self.name(),
-            mac: self.kind.name(),
+        exec::assemble_report(
+            self.name(),
+            self.kind,
+            self.geometry,
             outputs,
-            cycles,
-            time_ns,
-            energy,
-        }
+            &stats,
+            &mem,
+            active_mac_cycles,
+        )
     }
 }
 
@@ -133,6 +126,26 @@ mod tests {
         let inputs = mlp.synth_inputs(6, 7);
         let r = OsEngine::tcd(NpeGeometry::PAPER).execute(&mlp, &inputs);
         assert_eq!(r.outputs, mlp.forward_batch(&inputs));
+    }
+
+    #[test]
+    fn every_backend_produces_the_same_report_numbers() {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![40, 30, 8]), 3);
+        let inputs = mlp.synth_inputs(6, 7);
+        let base = OsEngine::tcd(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        for backend in BackendKind::ALL {
+            let r = OsEngine::tcd(NpeGeometry::PAPER)
+                .with_backend(backend)
+                .execute(&mlp, &inputs);
+            assert_eq!(r.outputs, base.outputs, "{}", backend.name());
+            assert_eq!(r.cycles, base.cycles, "{}", backend.name());
+            assert_eq!(
+                r.energy.total_pj(),
+                base.energy.total_pj(),
+                "{}",
+                backend.name()
+            );
+        }
     }
 
     #[test]

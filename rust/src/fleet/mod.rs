@@ -37,9 +37,32 @@ pub use loadgen::{poisson_arrivals, run_open_loop, Arrival, LoadGenConfig};
 pub use queue::{FleetJob, FleetQueue};
 
 use crate::coordinator::{CoordinatorMetrics, DeviceMetrics, ServedModel};
+use crate::exec::BackendKind;
 use crate::mapper::{NpeGeometry, ScheduleCache};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+/// One device of a fleet: its PE-array geometry and the roll backend it
+/// executes schedules on. Heterogeneous fleets (mixed geometries *and*
+/// mixed backends) stay bit-exact — neither moves the math.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceSpec {
+    pub geometry: NpeGeometry,
+    pub backend: BackendKind,
+}
+
+impl DeviceSpec {
+    pub fn new(geometry: NpeGeometry, backend: BackendKind) -> Self {
+        Self { geometry, backend }
+    }
+}
+
+impl From<NpeGeometry> for DeviceSpec {
+    /// A bare geometry runs on the default `Fast` backend.
+    fn from(geometry: NpeGeometry) -> Self {
+        Self::new(geometry, BackendKind::Fast)
+    }
+}
 
 /// A running fleet: the shared queue plus one thread per device.
 pub struct Fleet {
@@ -48,31 +71,43 @@ pub struct Fleet {
 }
 
 impl Fleet {
-    /// Spawn one device thread per geometry, all pulling from one queue
-    /// and sharing one schedule cache. Registers one metrics lane per
-    /// device (replacing any existing lanes).
+    /// Spawn one device thread per geometry on the default backend
+    /// (see [`Fleet::spawn_on`]).
     pub fn spawn(
         model: Arc<ServedModel>,
         geometries: &[NpeGeometry],
         cache: Arc<ScheduleCache>,
         metrics: Arc<Mutex<CoordinatorMetrics>>,
     ) -> Self {
-        assert!(!geometries.is_empty(), "a fleet needs at least one device");
-        metrics.lock().unwrap().devices = geometries
+        let specs: Vec<DeviceSpec> = geometries.iter().map(|&g| g.into()).collect();
+        Self::spawn_on(model, &specs, cache, metrics)
+    }
+
+    /// Spawn one device thread per [`DeviceSpec`], all pulling from one
+    /// queue and sharing one schedule cache. Registers one metrics lane
+    /// per device (replacing any existing lanes).
+    pub fn spawn_on(
+        model: Arc<ServedModel>,
+        specs: &[DeviceSpec],
+        cache: Arc<ScheduleCache>,
+        metrics: Arc<Mutex<CoordinatorMetrics>>,
+    ) -> Self {
+        assert!(!specs.is_empty(), "a fleet needs at least one device");
+        metrics.lock().unwrap().devices = specs
             .iter()
-            .map(|g| DeviceMetrics::for_geometry(*g))
+            .map(|s| DeviceMetrics::for_geometry(s.geometry))
             .collect();
         let queue = FleetQueue::new();
-        let devices = geometries
+        let devices = specs
             .iter()
             .enumerate()
-            .map(|(idx, &geometry)| {
+            .map(|(idx, &spec)| {
                 let model = Arc::clone(&model);
                 let cache = Arc::clone(&cache);
                 let queue = Arc::clone(&queue);
                 let metrics = Arc::clone(&metrics);
                 std::thread::spawn(move || {
-                    device::device_main(idx, model, geometry, cache, queue, metrics)
+                    device::device_main(idx, model, spec, cache, queue, metrics)
                 })
             })
             .collect();
@@ -159,5 +194,46 @@ mod tests {
         assert_eq!(m.devices.iter().map(|d| d.requests).sum::<u64>(), 6);
         assert_eq!(m.latencies_ns.len(), 6);
         assert_eq!(m.cache_hits + m.cache_misses, cache.stats().lookups());
+    }
+
+    #[test]
+    fn mixed_backend_fleet_stays_bit_exact() {
+        // One device per backend, heterogeneous geometries on top: every
+        // response must still equal the reference forward pass.
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![10, 7, 3]), 21);
+        let model = Arc::new(ServedModel::Mlp(mlp.clone()));
+        let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        let cache = ScheduleCache::shared();
+        let fleet = Fleet::spawn_on(
+            Arc::clone(&model),
+            &[
+                DeviceSpec::new(NpeGeometry::WALKTHROUGH, BackendKind::BitExact),
+                DeviceSpec::new(NpeGeometry::PAPER, BackendKind::Fast),
+                DeviceSpec::new(NpeGeometry::PAPER, BackendKind::Parallel),
+            ],
+            Arc::clone(&cache),
+            Arc::clone(&metrics),
+        );
+        assert_eq!(fleet.size(), 3);
+        let inputs = mlp.synth_inputs(9, 5);
+        let expect = mlp.forward_batch(&inputs);
+        let mut rxs = Vec::new();
+        for chunk in inputs.chunks(3) {
+            let requests = chunk
+                .iter()
+                .map(|x| {
+                    let (resp, rx) = mpsc::channel();
+                    rxs.push(rx);
+                    (Instant::now(), InferenceRequest { input: x.clone(), resp })
+                })
+                .collect();
+            fleet.submit(FleetJob { requests });
+        }
+        fleet.shutdown();
+        for (rx, want) in rxs.into_iter().zip(expect) {
+            let got = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(got.output, want, "bit-exact across backends");
+        }
+        assert_eq!(metrics.lock().unwrap().requests, 9);
     }
 }

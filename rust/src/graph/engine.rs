@@ -14,40 +14,34 @@ use super::lower::{lower_graph, GemmGroup};
 use super::{sat_add, QuantizedGraph};
 use crate::conv::lower::pool2d;
 use crate::conv::{im2col, im2col_traffic};
-use crate::dataflow::{cached_mac_ppa, pe_array_leak_uw, DataflowReport, EnergyBreakdown};
-use crate::mapper::{MapperTree, NpeGeometry, ScheduleCache};
-use crate::memory::NpeMemorySystem;
+use crate::dataflow::DataflowReport;
+use crate::exec::{self, BackendKind, ExecCore, ExecRun, OutputPath};
+use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::model::fixedpoint::relu;
 use crate::model::{MlpTopology, QuantizedMlp};
-use crate::npe::{ActivationUnit, ExecutionStats, PeArray};
-use crate::ppa::TechParams;
+use crate::npe::ActivationUnit;
 use crate::tcdmac::MacKind;
 use std::sync::Arc;
 
 /// The DAG execution engine.
 pub struct GraphEngine {
-    // Private: the mapper memo bakes the geometry in at construction, so
-    // mutating these afterwards would desync schedules from the array.
-    geometry: NpeGeometry,
-    kind: MacKind,
-    /// Run the bit-exact MAC models instead of the fast path.
-    pub bitexact: bool,
+    // Private: the core bakes geometry/kind in at construction, so
+    // mutating them afterwards would desync schedules from the array.
+    core: ExecCore,
+    /// Which roll backend executes the schedule (re-synced into the core
+    /// on every execute, so toggling is safe).
+    pub backend: BackendKind,
     /// Merge sibling branches into shared round sets (fused lowering,
     /// the default); off = the per-node baseline the bench compares.
     pub fuse: bool,
-    mapper: MapperTree,
-    cache: Option<Arc<ScheduleCache>>,
 }
 
 impl GraphEngine {
     pub fn new(geometry: NpeGeometry, kind: MacKind) -> Self {
         Self {
-            geometry,
-            kind,
-            bitexact: false,
+            core: ExecCore::new(geometry, kind),
+            backend: BackendKind::Fast,
             fuse: true,
-            mapper: MapperTree::new(geometry),
-            cache: None,
         }
     }
 
@@ -60,15 +54,22 @@ impl GraphEngine {
     }
 
     pub fn geometry(&self) -> NpeGeometry {
-        self.geometry
+        self.core.geometry()
     }
 
     pub fn kind(&self) -> MacKind {
-        self.kind
+        self.core.kind()
     }
 
+    /// Run the bit-exact MAC models instead of the fast path.
     pub fn bitexact(mut self, on: bool) -> Self {
-        self.bitexact = on;
+        self.backend = if on { BackendKind::BitExact } else { BackendKind::Fast };
+        self
+    }
+
+    /// Select the roll backend (builder form of the `backend` field).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -80,28 +81,31 @@ impl GraphEngine {
 
     /// Attach a fleet-shared schedule cache (see [`ScheduleCache`]).
     pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
-        self.cache = Some(cache);
+        self.core = self.core.with_cache(cache);
         self
     }
 
     pub fn name(&self) -> &'static str {
-        match self.kind {
+        match self.kind() {
             MacKind::Tcd => "Graph DAG (TCD-NPE)",
             MacKind::Conv(..) => "Graph DAG (conv MAC)",
         }
     }
 
     /// Execute `q` over a batch of flattened CHW inputs; returns the same
-    /// report shape the MLP/CNN engines produce.
+    /// report shape the MLP/CNN engines produce. Every GEMM group
+    /// dispatches through [`ExecCore::run_scheduled`] — the engine owns
+    /// only the DAG plumbing (value table, output-path stages, scatter).
     pub fn execute(&mut self, q: &QuantizedGraph, inputs: &[Vec<i16>]) -> DataflowReport {
-        let tech = TechParams::DEFAULT;
         let b = inputs.len();
         assert!(b > 0, "empty batch");
         for x in inputs {
             assert_eq!(x.len(), q.graph.input_shape().features(), "bad input length");
         }
 
-        let lowering = lower_graph(&mut self.mapper, self.cache.as_ref(), &q.graph, b, self.fuse);
+        self.core.set_backend(self.backend);
+        let (mapper, cache) = self.core.mapper_and_cache();
+        let lowering = lower_graph(mapper, cache, &q.graph, b, self.fuse);
         // member node -> its group, so execution can trigger a group's
         // round set exactly once, at its first member.
         let mut group_of = vec![usize::MAX; q.graph.n_nodes()];
@@ -112,11 +116,7 @@ impl GraphEngine {
         }
         let mut group_done = vec![false; lowering.groups.len()];
 
-        let mut array = PeArray::new(self.geometry, self.kind);
-        let mut stats = ExecutionStats::default();
-        let mut mem = NpeMemorySystem::new();
-        let extra = matches!(self.kind, MacKind::Tcd) as u64;
-        let mut active_mac_cycles = 0u64;
+        let mut run = self.core.begin();
 
         let mut vals: Vec<Option<Vec<Vec<i16>>>> = vec![None; q.graph.n_nodes()];
         vals[0] = Some(inputs.to_vec());
@@ -128,19 +128,9 @@ impl GraphEngine {
                 GraphOp::Dense { .. } | GraphOp::Conv2d { .. } => {
                     let gi = group_of[id];
                     if !group_done[gi] {
-                        self.run_group(
-                            &lowering.groups[gi],
-                            q,
-                            b,
-                            &mut vals,
-                            &mut array,
-                            &mut stats,
-                            &mut mem,
-                            &mut active_mac_cycles,
-                            extra,
-                        );
+                        self.run_group(&mut run, &lowering.groups[gi], q, b, &mut vals);
                         group_done[gi] = true;
-                        stats.layer_swaps += 1;
+                        run.stats.layer_swaps += 1;
                     }
                 }
                 GraphOp::Pool2d(p) => {
@@ -148,7 +138,7 @@ impl GraphEngine {
                     let src = vals[node.inputs[0].0].as_ref().expect("topological order");
                     let out = src.iter().map(|f| pool2d(f, in_shape, p)).collect();
                     vals[id] = Some(out);
-                    stats.layer_swaps += 1;
+                    run.stats.layer_swaps += 1;
                 }
                 GraphOp::Activation => {
                     let src = vals[node.inputs[0].0].as_ref().expect("topological order");
@@ -157,7 +147,7 @@ impl GraphEngine {
                         .map(|f| f.iter().map(|&v| relu(v)).collect())
                         .collect();
                     vals[id] = Some(out);
-                    stats.layer_swaps += 1;
+                    run.stats.layer_swaps += 1;
                 }
                 GraphOp::ResidualAdd => {
                     let a = vals[node.inputs[0].0].as_ref().expect("topological order");
@@ -170,7 +160,7 @@ impl GraphEngine {
                         })
                         .collect();
                     vals[id] = Some(out);
-                    stats.layer_swaps += 1;
+                    run.stats.layer_swaps += 1;
                 }
                 GraphOp::Concat => {
                     let out = (0..b)
@@ -185,7 +175,7 @@ impl GraphEngine {
                         })
                         .collect();
                     vals[id] = Some(out);
-                    stats.layer_swaps += 1;
+                    run.stats.layer_swaps += 1;
                 }
                 GraphOp::Flatten => {
                     let src = vals[node.inputs[0].0].as_ref().expect("topological order");
@@ -194,7 +184,7 @@ impl GraphEngine {
             }
         }
         let outputs = vals[q.graph.output.0].take().expect("output computed");
-        stats.compute_cycles = array.cycles();
+        let (stats, mut mem, active_mac_cycles) = run.finish();
 
         // DRAM traffic: RLC-compressed weights + inputs in, outputs out.
         for w in &q.weights {
@@ -207,48 +197,28 @@ impl GraphEngine {
             mem.account_dram_out(y);
         }
 
-        let mac = cached_mac_ppa(self.kind);
-        let cycles = stats.total_cycles();
-        let time_ns = cycles as f64 * mac.delay_ns;
-        let energy = EnergyBreakdown {
-            pe_dynamic_pj: active_mac_cycles as f64 * mac.energy_per_cycle_pj(),
-            pe_leak_pj: pe_array_leak_uw(self.kind, self.geometry.pes()) * time_ns * 1e-3,
-            mem_dynamic_pj: mem.sram_dynamic_pj(&tech),
-            mem_leak_pj: mem.leakage_uw(&tech) * time_ns * 1e-3,
-            dram_pj: mem.dram_pj(&tech),
-        };
-
-        DataflowReport {
-            dataflow: self.name(),
-            mac: self.kind.name(),
+        exec::assemble_report(
+            self.name(),
+            self.kind(),
+            self.geometry(),
             outputs,
-            cycles,
-            time_ns,
-            energy,
-        }
+            &stats,
+            &mem,
+            active_mac_cycles,
+        )
     }
 
-    /// Run one GEMM group: stream its merged Γ on the PE array and
-    /// scatter the neuron ranges back to the member nodes (activation,
-    /// and any fused pooling, in the Fig.-4 output path per member).
-    ///
-    /// Keep the roll loop in lockstep with
-    /// [`crate::conv::CnnEngine`]'s GEMM runner (same config-switch
-    /// counting, same bitexact/fast dispatch, same schedule-level
-    /// accounting): the two are the cycle model for CNN and DAG traffic
-    /// respectively.
-    #[allow(clippy::too_many_arguments)]
+    /// Run one GEMM group: stream its merged Γ through the execution
+    /// core and scatter the neuron ranges back to the member nodes
+    /// (activation, and any fused pooling, in the Fig.-4 output path per
+    /// member).
     fn run_group(
         &self,
+        run: &mut ExecRun,
         group: &GemmGroup,
         q: &QuantizedGraph,
         b: usize,
         vals: &mut [Option<Vec<Vec<i16>>>],
-        array: &mut PeArray,
-        stats: &mut ExecutionStats,
-        mem: &mut NpeMemorySystem,
-        active_mac_cycles: &mut u64,
-        extra: u64,
     ) {
         let source_shape = q.graph.node(group.source).shape;
         let fan_in = group.gamma.inputs;
@@ -263,7 +233,8 @@ impl GraphEngine {
             let src = vals[group.source.0].as_ref().expect("source computed");
             match &q.graph.node(group.members[0]).op {
                 GraphOp::Conv2d { conv, .. } => {
-                    mem.account_im2col(&im2col_traffic(source_shape, conv), b as u64);
+                    run.mem
+                        .account_im2col(&im2col_traffic(source_shape, conv), b as u64);
                     src.iter()
                         .flat_map(|f| im2col(f, source_shape, conv))
                         .collect()
@@ -293,39 +264,14 @@ impl GraphEngine {
             seed: q.seed,
         };
 
-        let exec = group.sched.exec.as_ref().expect("non-empty GEMM");
-        let row_ids: Vec<usize> = (0..rows.len()).collect();
-        let neuron_ids: Vec<usize> = (0..fan_out).collect();
-        let assignments = exec.assignments(&row_ids, &neuron_ids);
-
-        let mut out = vec![vec![0i16; fan_out]; rows.len()];
-        let mut last_config = None;
-        for roll in &assignments {
-            if last_config != Some(roll.config) {
-                stats.config_switches += 1;
-                last_config = Some(roll.config);
-            }
-            let results = if self.bitexact {
-                array.run_roll_bitexact(roll, &surrogate, 0, &rows)
-            } else {
-                array.run_roll_fast(roll, &surrogate, 0, &rows)
-            };
-            for r in results {
-                out[r.batch][r.neuron] = acts[r.neuron].apply(r.acc);
-            }
-            stats.rolls += 1;
-        }
-
-        // Schedule-level accounting (energy model inputs).
-        let per_pair = group.gamma.inputs as u64 + extra;
-        *active_mac_cycles += group
-            .sched
-            .layer
-            .events
-            .iter()
-            .map(|e| e.work() as u64 * per_pair)
-            .sum::<u64>();
-        mem.account_layer_events(&group.sched.layer);
+        let out = self.core.run_scheduled(
+            run,
+            &group.sched,
+            &surrogate,
+            &rows,
+            OutputPath::PerNeuron(&acts),
+            true,
+        );
 
         // Scatter each member's neuron range back to its node values.
         let mut off = 0usize;

@@ -17,6 +17,16 @@
 //!   eight conventional MAC baselines of Table I.
 //! * [`mapper`] — Algorithm 1: scheduling B batches of an MLP layer onto
 //!   NPE(K, N) configurations in the minimum number of rolls.
+//! * [`exec`] — the unified execution core: `ExecCore` owns the one
+//!   schedule-walk (roll iteration, carry-deferring cycle accounting,
+//!   the Fig.-4 quantize/ReLU output path, report assembly) behind the
+//!   `RollBackend` trait. Three backends — `BitExact` (gate-accurate MAC
+//!   models), `Fast` (serial i64 dot products on the simulated array)
+//!   and `Parallel` (host-parallel tiled i64 dot products, bit-exact
+//!   with the MAC contract and ≥10× faster than `BitExact` on
+//!   Table-IV-scale workloads) — are interchangeable per engine and per
+//!   fleet device; `tests/conformance.rs` and `tests/exec_fuzz.rs`
+//!   certify bit-exactness across all of them at once.
 //! * [`conv`] — the CNN workload subsystem: `Conv2dLayer`/`CnnTopology`
 //!   descriptors, im2col lowering of convolutions onto the same
 //!   Γ(B, I, U) layer-problem abstraction (plus a traffic model of the
@@ -61,6 +71,7 @@ pub mod bitsim;
 pub mod conv;
 pub mod coordinator;
 pub mod dataflow;
+pub mod exec;
 pub mod fleet;
 pub mod graph;
 pub mod mapper;

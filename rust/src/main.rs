@@ -10,7 +10,8 @@ use tcd_npe::bench;
 use tcd_npe::conv::QuantizedCnn;
 use tcd_npe::coordinator::{BatcherConfig, Coordinator, ServedModel};
 use tcd_npe::dataflow::{DataflowEngine, OsEngine};
-use tcd_npe::fleet::{poisson_arrivals, run_open_loop, LoadGenConfig};
+use tcd_npe::exec::BackendKind;
+use tcd_npe::fleet::{poisson_arrivals, run_open_loop, DeviceSpec, LoadGenConfig};
 use tcd_npe::graph::QuantizedGraph;
 use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry};
 use tcd_npe::memory::{FmArrangement, WMemArrangement, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
@@ -35,17 +36,22 @@ Paper artifacts:
   conv [--batches N]         CNN zoo (im2col lowering), TCD vs conventional MAC
   graph [--batches N] [--json PATH] [--show NAME]
                              DAG zoo (graph compiler), fused vs unfused lowering
+  exec [--batches N] [--json PATH]
+                             roll-backend sweep (bitexact/fast/parallel) + BENCH_exec.json
 
 System:
   schedule <topo> <batches>  Algorithm-1 schedule for an MLP, e.g. 784:700:10 10
   mem-report <topo> <K> <N>  Fig.-7 data arrangement for a config
-  serve [--requests N]       run the serving coordinator demo (simulator)
-  fleet [--devices N] [--requests N] [--rate RPS] [--model NAME]
+  serve [--requests N] [--backend B]
+                             run the serving coordinator demo (simulator)
+  fleet [--devices N] [--requests N] [--rate RPS] [--model NAME] [--backend B]
                              serve a seeded Poisson load on an N-device fleet
   fleet --bench [--json PATH]
                              device-count sweep (1/2/4/8) + BENCH_fleet.json
   verify [artifact-dir]      cross-check NPE simulator vs PJRT artifacts
   ablate <which>             ablations: geometry | batch | voltage | mac | all
+
+Backends (B): bitexact (gate-accurate MACs) | fast (serial i64) | parallel (host threads)
 ";
 
 fn main() -> Result<()> {
@@ -90,6 +96,21 @@ fn main() -> Result<()> {
                 println!("wrote {path}");
             }
         }
+        "exec" => {
+            let batches = flag_value(&args, "--batches")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(bench::EXEC_BATCHES);
+            let rows = bench::exec_rows(batches);
+            println!("{}", bench::render_exec_table(&rows, batches));
+            if rows.iter().any(|r| !r.bit_identical) {
+                return Err(anyhow!("a backend diverged from the Fix16 reference"));
+            }
+            if let Some(path) = flag_value(&args, "--json") {
+                std::fs::write(path, bench::exec_json(&rows, batches))?;
+                println!("wrote {path}");
+            }
+        }
         "fig10" => {
             let batches = flag_value(&args, "--batches")
                 .map(|s| s.parse())
@@ -115,7 +136,7 @@ fn main() -> Result<()> {
                 .map(|s| s.parse())
                 .transpose()?
                 .unwrap_or(64);
-            cmd_serve(requests)?;
+            cmd_serve(requests, backend_flag(&args)?)?;
         }
         "fleet" => {
             if args.iter().any(|a| a == "--bench") {
@@ -134,7 +155,7 @@ fn main() -> Result<()> {
                     .transpose()?
                     .unwrap_or(20_000.0);
                 let model = flag_value(&args, "--model").unwrap_or("Iris");
-                cmd_fleet(devices, requests, rate, model)?;
+                cmd_fleet(devices, requests, rate, model, backend_flag(&args)?)?;
             }
         }
         "verify" => {
@@ -172,6 +193,15 @@ fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
         .position(|a| a == flag)
         .and_then(|i| args.get(i + 1))
         .map(String::as_str)
+}
+
+/// Parse `--backend` (default: the `fast` roll backend).
+fn backend_flag(args: &[String]) -> Result<BackendKind> {
+    match flag_value(args, "--backend") {
+        None => Ok(BackendKind::Fast),
+        Some(s) => BackendKind::parse(s)
+            .ok_or_else(|| anyhow!("unknown backend {s:?} (bitexact | fast | parallel)")),
+    }
 }
 
 fn cmd_schedule(topo: &MlpTopology, batches: usize) {
@@ -236,20 +266,22 @@ fn cmd_mem_report(topo: &MlpTopology, k: usize, n: usize) {
     println!("{}", t.render());
 }
 
-fn cmd_serve(requests: usize) -> Result<()> {
+fn cmd_serve(requests: usize, backend: BackendKind) -> Result<()> {
     let bench = benchmarks()
         .into_iter()
         .find(|b| b.dataset == "Iris")
         .unwrap();
     let mlp = QuantizedMlp::synthesize(bench.topology.clone(), 0xF16_10);
     println!(
-        "serving {} ({}) on the 16x8 TCD-NPE simulator, {requests} requests",
+        "serving {} ({}) on the 16x8 TCD-NPE simulator ({} backend), {requests} requests",
         bench.dataset,
-        bench.topology.display()
+        bench.topology.display(),
+        backend.name()
     );
-    let coord = Coordinator::spawn(
-        mlp.clone(),
+    let coord = Coordinator::spawn_model_on(
+        ServedModel::Mlp(mlp.clone()),
         NpeGeometry::PAPER,
+        backend,
         BatcherConfig::new(8, Duration::from_millis(1)),
         None,
     );
@@ -268,20 +300,37 @@ fn cmd_serve(requests: usize) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fleet(devices: usize, requests: usize, rate: f64, model_name: &str) -> Result<()> {
+fn cmd_fleet(
+    devices: usize,
+    requests: usize,
+    rate: f64,
+    model_name: &str,
+    backend: BackendKind,
+) -> Result<()> {
     // Resolve against the MLP zoo first, then the CNN zoo.
     let model = if let Some(b) = benchmark_by_name(model_name) {
         println!(
-            "fleet: {devices} x 16x8 NPE serving {} ({})",
+            "fleet: {devices} x 16x8 NPE ({} backend) serving {} ({})",
+            backend.name(),
             b.dataset,
             b.topology.display()
         );
         ServedModel::Mlp(QuantizedMlp::synthesize(b.topology.clone(), 0xF1EE7))
     } else if let Some(b) = cnn_benchmark_by_name(model_name) {
-        println!("fleet: {devices} x 16x8 NPE serving {} ({})", b.network, b.dataset);
+        println!(
+            "fleet: {devices} x 16x8 NPE ({} backend) serving {} ({})",
+            backend.name(),
+            b.network,
+            b.dataset
+        );
         ServedModel::Cnn(QuantizedCnn::synthesize(b.topology.clone(), 0xF1EE7))
     } else if let Some(b) = graph_benchmark_by_name(model_name) {
-        println!("fleet: {devices} x 16x8 NPE serving {} ({})", b.network, b.dataset);
+        println!(
+            "fleet: {devices} x 16x8 NPE ({} backend) serving {} ({})",
+            backend.name(),
+            b.network,
+            b.dataset
+        );
         ServedModel::Graph(QuantizedGraph::synthesize(b.graph.clone(), 0xF1EE7))
     } else {
         return Err(anyhow!(
@@ -290,9 +339,9 @@ fn cmd_fleet(devices: usize, requests: usize, rate: f64, model_name: &str) -> Re
     };
     let load = LoadGenConfig { seed: 0x10AD_0001, rate_rps: rate, requests };
     let arrivals = poisson_arrivals(&model, &load);
-    let coord = Coordinator::spawn_fleet(
+    let coord = Coordinator::spawn_fleet_on(
         model,
-        vec![NpeGeometry::PAPER; devices],
+        vec![DeviceSpec::new(NpeGeometry::PAPER, backend); devices],
         BatcherConfig::new(8, Duration::from_micros(500)),
     );
     println!("offering {requests} Poisson requests at {rate:.0} req/s (seed {:#x})", load.seed);

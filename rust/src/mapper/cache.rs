@@ -360,6 +360,85 @@ mod tests {
     }
 
     #[test]
+    fn bounded_cache_hammered_from_8_threads_stays_consistent() {
+        // The LRU bound under real contention: 8 workers hammer a
+        // 4-entry cache with a 12-shape working set (guaranteed steady
+        // eviction churn) while a monitor thread asserts the counters
+        // only ever move forward. Every returned schedule must still be
+        // the valid Algorithm-1 result for its Γ key — eviction and
+        // re-computation must never hand a caller a stale or
+        // cross-keyed entry.
+        use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
+
+        let cache = ScheduleCache::shared_bounded(4);
+        let gammas: Vec<Gamma> = (1..=4)
+            .flat_map(|b| (1..=3).map(move |u| Gamma::new(b, 10, u * 2)))
+            .collect();
+        assert_eq!(gammas.len(), 12, "working set 3x the capacity");
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let monitor = {
+            let cache = Arc::clone(&cache);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut prev = CacheStats::default();
+                let mut samples = 0u64;
+                while !stop.load(AtomicOrdering::Acquire) {
+                    let s = cache.stats();
+                    assert!(s.hits >= prev.hits, "hit counter went backwards");
+                    assert!(s.misses >= prev.misses, "miss counter went backwards");
+                    assert!(
+                        s.evictions >= prev.evictions,
+                        "eviction counter went backwards"
+                    );
+                    assert!(cache.entries() <= 4, "capacity breached mid-flight");
+                    prev = s;
+                    samples += 1;
+                    std::thread::yield_now();
+                }
+                samples
+            })
+        };
+
+        let per_thread = 100usize;
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let cache = Arc::clone(&cache);
+                let gammas = gammas.clone();
+                s.spawn(move || {
+                    let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+                    for i in 0..per_thread {
+                        let gamma = gammas[(t * 5 + i) % gammas.len()];
+                        let got = cache.get_or_compute(&mut mapper, gamma);
+                        assert_eq!(got.layer.gamma, gamma, "entry keyed to wrong Γ");
+                        assert_eq!(got.layer.geometry, NpeGeometry::WALKTHROUGH);
+                        assert!(got.layer.covers_exactly(), "{gamma:?}");
+                        let want =
+                            MapperTree::new(NpeGeometry::WALKTHROUGH).schedule_layer(gamma);
+                        assert_eq!(got.layer.events, want.events, "{gamma:?}");
+                        assert_eq!(
+                            got.exec.as_ref().expect("non-empty Γ").total_rolls(),
+                            want.total_rolls(),
+                            "{gamma:?}: exec tree and events disagree"
+                        );
+                    }
+                });
+            }
+        });
+        stop.store(true, AtomicOrdering::Release);
+        let samples = monitor.join().expect("monitor never trips");
+        assert!(samples > 0, "monitor observed the run");
+
+        let s = cache.stats();
+        assert_eq!(s.lookups(), 8 * per_thread as u64, "every lookup counted");
+        assert!(
+            s.evictions > 0,
+            "12 shapes through 4 entries must evict ({s:?})"
+        );
+        assert!(cache.entries() <= 4);
+    }
+
+    #[test]
     fn concurrent_bounded_cache_stays_within_capacity() {
         let cache = ScheduleCache::shared_bounded(4);
         let gammas: Vec<Gamma> = (1..=4)

@@ -1,10 +1,14 @@
 //! The controller FSM (paper §III-B.3): walks the mapper's schedule and
 //! drives the OS dataflow — configure LDN, stream features/weights, fire
 //! the activation unit, swap the ping-pong feature memories between layers.
+//!
+//! The roll walk itself lives in [`crate::exec::ExecCore`] — the
+//! controller contributes the MLP-specific part only: the layer loop and
+//! the ping-pong swap between consecutive transitions.
 
 use super::activation::ActivationUnit;
-use super::pe_array::PeArray;
-use crate::mapper::{Gamma, MapperTree, NpeGeometry, ScheduleCache};
+use crate::exec::{BackendKind, ExecCore, ExecRun, OutputPath};
+use crate::mapper::{Gamma, NpeGeometry, ScheduleCache};
 use crate::model::QuantizedMlp;
 use crate::tcdmac::MacKind;
 use std::sync::Arc;
@@ -49,36 +53,48 @@ pub enum CtrlState {
 /// memo (and, when attached, the fleet-wide [`ScheduleCache`]) carries
 /// over from batch to batch instead of re-running Algorithm 1.
 pub struct Controller {
-    pub geometry: NpeGeometry,
-    pub kind: MacKind,
-    mapper: MapperTree,
-    /// Fleet-shared Algorithm-1 memo; `None` → the private mapper only.
-    cache: Option<Arc<ScheduleCache>>,
-    /// Use the bit-exact MAC models (slow, for verification) instead of
-    /// the fast 64-bit path.
-    pub bitexact: bool,
+    /// Which roll backend executes the schedule (re-synced by the OS
+    /// engine on every execute, so toggling is safe).
+    pub backend: BackendKind,
+    // Geometry and MAC kind live in the core only — it bakes them in at
+    // construction, so a second mutable copy here could silently desync
+    // prediction from execution.
+    core: ExecCore,
 }
 
 impl Controller {
     pub fn new(geometry: NpeGeometry, kind: MacKind) -> Self {
         Self {
-            geometry,
-            kind,
-            mapper: MapperTree::new(geometry),
-            cache: None,
-            bitexact: false,
+            backend: BackendKind::Fast,
+            core: ExecCore::new(geometry, kind),
         }
     }
 
+    pub fn geometry(&self) -> NpeGeometry {
+        self.core.geometry()
+    }
+
+    pub fn kind(&self) -> MacKind {
+        self.core.kind()
+    }
+
+    /// Run the bit-exact MAC models (slow, for verification) instead of
+    /// the fast path.
     pub fn bitexact(mut self, on: bool) -> Self {
-        self.bitexact = on;
+        self.backend = if on { BackendKind::BitExact } else { BackendKind::Fast };
+        self
+    }
+
+    /// Select the roll backend (builder form of the `backend` field).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
         self
     }
 
     /// Attach a shared schedule cache: layer problems are looked up (and
     /// published) there before falling back to the private mapper DP.
     pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
-        self.cache = Some(cache);
+        self.core = self.core.with_cache(cache);
         self
     }
 
@@ -89,56 +105,40 @@ impl Controller {
         mlp: &QuantizedMlp,
         inputs: &[Vec<i16>],
     ) -> (Vec<Vec<i16>>, ExecutionStats) {
-        let b = inputs.len();
-        let mut stats = ExecutionStats::default();
-        let mut array = PeArray::new(self.geometry, self.kind);
-        // Ping-pong feature memories.
+        let (outputs, run) = self.run_collect(mlp, inputs);
+        let (stats, _, _) = run.finish();
+        (outputs, stats)
+    }
+
+    /// Like [`Controller::run`], but hands the whole [`ExecRun`] back so
+    /// the OS engine can fold the accounting (active MAC-cycles) into
+    /// its energy report.
+    pub fn run_collect(
+        &mut self,
+        mlp: &QuantizedMlp,
+        inputs: &[Vec<i16>],
+    ) -> (Vec<Vec<i16>>, ExecRun) {
+        self.core.set_backend(self.backend);
+        let mut run = self.core.begin();
+        // Ping-pong feature memories: each transition's outputs feed the
+        // next transition's rows.
         let mut ping: Vec<Vec<i16>> = inputs.to_vec();
         let n_layers = mlp.topology.n_transitions();
-
-        for (layer, (fan_in, fan_out)) in mlp.topology.transitions().enumerate() {
+        for layer in 0..n_layers {
             let act = ActivationUnit::new(layer + 1 < n_layers);
-            let batches: Vec<usize> = (0..b).collect();
-            let neurons: Vec<usize> = (0..fan_out).collect();
-            let rolls = match &self.cache {
-                Some(cache) => {
-                    let entry = cache
-                        .get_or_compute(&mut self.mapper, Gamma::new(b, fan_in, fan_out));
-                    entry
-                        .exec
-                        .as_ref()
-                        .expect("non-empty layer problem")
-                        .assignments(&batches, &neurons)
-                }
-                None => self
-                    .mapper
-                    .best(b, fan_out)
-                    .expect("non-empty layer problem")
-                    .assignments(&batches, &neurons),
-            };
-
-            let mut pong: Vec<Vec<i16>> = vec![vec![0; fan_out]; b];
-            let mut last_config = None;
-            for roll in &rolls {
-                if last_config != Some(roll.config) {
-                    stats.config_switches += 1;
-                    last_config = Some(roll.config);
-                }
-                let results = if self.bitexact {
-                    array.run_roll_bitexact(roll, mlp, layer, &ping)
-                } else {
-                    array.run_roll_fast(roll, mlp, layer, &ping)
-                };
-                for r in results {
-                    pong[r.batch][r.neuron] = act.apply(r.acc);
-                }
-                stats.rolls += 1;
-            }
-            ping = pong;
-            stats.layer_swaps += 1;
+            ping = self.core.run_gemm(
+                &mut run,
+                mlp,
+                layer,
+                &ping,
+                OutputPath::Uniform(act),
+                // The OS engine accounts the whole model's memory traffic
+                // through `account_schedule`, not per layer.
+                false,
+            );
+            run.stats.layer_swaps += 1;
         }
-        stats.compute_cycles = array.cycles();
-        (ping, stats)
+        (ping, run)
     }
 
     /// The schedule the controller would execute (for reports/tests).
@@ -149,14 +149,15 @@ impl Controller {
     /// batch as a guaranteed hit, inflating the fleet's hit-rate metric
     /// (the private memo makes this path just as cheap).
     pub fn schedule(&mut self, mlp: &QuantizedMlp, batches: usize) -> crate::mapper::ModelSchedule {
-        self.mapper.schedule_model(&mlp.topology, batches)
+        self.core.mapper_mut().schedule_model(&mlp.topology, batches)
     }
 
     /// Cycle count predicted by the schedule alone (must match `run`'s
     /// compute cycles — tested).
     pub fn predicted_compute_cycles(&mut self, mlp: &QuantizedMlp, batches: usize) -> u64 {
-        let extra = matches!(self.kind, MacKind::Tcd);
-        self.mapper
+        let extra = matches!(self.kind(), MacKind::Tcd);
+        self.core
+            .mapper_mut()
             .schedule_model(&mlp.topology, batches)
             .compute_cycles(extra)
     }
@@ -198,6 +199,21 @@ mod tests {
         let mut ctrl = Controller::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd).bitexact(true);
         let (got, _) = ctrl.run(&mlp, &inputs);
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn parallel_backend_matches_too() {
+        let mlp = tiny_mlp();
+        let inputs = mlp.synth_inputs(4, 29);
+        let expect = mlp.forward_batch(&inputs);
+        let mut fast = Controller::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd);
+        let mut par = Controller::new(NpeGeometry::WALKTHROUGH, MacKind::Tcd)
+            .with_backend(BackendKind::Parallel);
+        let (a, sa) = fast.run(&mlp, &inputs);
+        let (b, sb) = par.run(&mlp, &inputs);
+        assert_eq!(a, expect);
+        assert_eq!(b, expect);
+        assert_eq!(sa, sb, "backend must not change the cycle model");
     }
 
     #[test]

@@ -93,7 +93,7 @@ impl PeArray {
         out
     }
 
-    /// Fast path: same results via 64-bit dot products.
+    /// Fast path: same results via 64-bit dot products ([`roll_dot_products`]).
     pub fn run_roll_fast(
         &mut self,
         roll: &RollAssignment,
@@ -103,20 +103,7 @@ impl PeArray {
     ) -> Vec<NeuronResult> {
         let fan_in = mlp.topology.layers[layer];
         self.cycles += self.kind.cycles_for_stream(fan_in) as u64;
-        let mut out = Vec::with_capacity(roll.batches.len() * roll.neurons.len());
-        for &b in &roll.batches {
-            let x = &features[b];
-            for &nn in &roll.neurons {
-                let wrow = &mlp.weights[layer][nn * fan_in..(nn + 1) * fan_in];
-                let acc: i64 = wrow
-                    .iter()
-                    .zip(x.iter())
-                    .map(|(w, xi)| (*w as i32 * *xi as i32) as i64)
-                    .sum();
-                out.push(NeuronResult { batch: b, neuron: nn, acc });
-            }
-        }
-        out
+        roll_dot_products(roll, mlp, layer, features)
     }
 
     /// Aggregate toggle activity across all PEs (feeds the energy model
@@ -124,6 +111,33 @@ impl PeArray {
     pub fn total_toggles(&self) -> u64 {
         self.macs.iter().map(|m| m.toggles()).sum()
     }
+}
+
+/// One roll as a tile of exact i64 dot products — THE widening/accumulate
+/// rule of the MAC contract, shared by [`PeArray::run_roll_fast`] and the
+/// host-parallel backend ([`crate::exec::ParallelBackend`]) so the two
+/// can never drift. Free of array state, so a tile may run on any thread.
+pub fn roll_dot_products(
+    roll: &RollAssignment,
+    mlp: &QuantizedMlp,
+    layer: usize,
+    features: &[Vec<i16>],
+) -> Vec<NeuronResult> {
+    let fan_in = mlp.topology.layers[layer];
+    let mut out = Vec::with_capacity(roll.batches.len() * roll.neurons.len());
+    for &b in &roll.batches {
+        let x = &features[b];
+        for &nn in &roll.neurons {
+            let wrow = &mlp.weights[layer][nn * fan_in..(nn + 1) * fan_in];
+            let acc: i64 = wrow
+                .iter()
+                .zip(x.iter())
+                .map(|(w, xi)| (*w as i32 * *xi as i32) as i64)
+                .sum();
+            out.push(NeuronResult { batch: b, neuron: nn, acc });
+        }
+    }
+    out
 }
 
 #[cfg(test)]

@@ -63,6 +63,38 @@ impl ArtifactManifest {
     pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
         self.entries.iter().find(|e| e.name == name)
     }
+
+    /// Probe an artifact directory without conflating "absent" with
+    /// "present but broken": the status always carries the path it
+    /// looked at and a human-readable reason, so test suites can skip
+    /// *loudly* (and `tests/sim_vs_pjrt.rs`'s guard test can prove a
+    /// typo'd directory never masquerades as a green run).
+    pub fn probe(dir: impl AsRef<Path>) -> ArtifactStatus {
+        let dir = dir.as_ref();
+        match Self::load(dir) {
+            Ok(m) if !m.entries.is_empty() => ArtifactStatus::Present(m),
+            Ok(_) => ArtifactStatus::Missing {
+                dir: dir.to_path_buf(),
+                reason: "manifest.txt parsed but lists no artifacts".to_string(),
+            },
+            Err(e) => ArtifactStatus::Missing {
+                dir: dir.to_path_buf(),
+                reason: format!("{e:#}"),
+            },
+        }
+    }
+}
+
+/// Result of [`ArtifactManifest::probe`].
+#[derive(Debug)]
+pub enum ArtifactStatus {
+    /// A non-empty manifest parsed.
+    Present(ArtifactManifest),
+    /// No usable manifest at `dir`; `reason` names the file it wanted.
+    Missing {
+        dir: std::path::PathBuf,
+        reason: String,
+    },
 }
 
 #[cfg(test)]
@@ -92,5 +124,40 @@ mod tests {
     fn bad_manifest_rejected() {
         assert!(ArtifactManifest::parse("name_only").is_err());
         assert!(ArtifactManifest::parse("x 8 not-a-topo 1").is_err());
+    }
+
+    #[test]
+    fn probe_reports_missing_with_path_and_reason() {
+        match ArtifactManifest::probe("no-such-artifact-dir") {
+            ArtifactStatus::Present(_) => panic!("missing dir cannot probe Present"),
+            ArtifactStatus::Missing { dir, reason } => {
+                assert!(dir.to_string_lossy().contains("no-such-artifact-dir"));
+                assert!(
+                    reason.contains("manifest.txt"),
+                    "reason names the manifest file: {reason}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn probe_round_trips_a_real_manifest() {
+        let dir = std::env::temp_dir().join(format!(
+            "tcd-npe-artifact-probe-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        // An empty manifest is Missing (not a silent Present-with-zero).
+        std::fs::write(dir.join("manifest.txt"), "# no entries yet\n").unwrap();
+        assert!(matches!(
+            ArtifactManifest::probe(&dir),
+            ArtifactStatus::Missing { .. }
+        ));
+        std::fs::write(dir.join("manifest.txt"), "iris_b4 4 4:10:5:3 7\n").unwrap();
+        match ArtifactManifest::probe(&dir) {
+            ArtifactStatus::Present(m) => assert_eq!(m.entries.len(), 1),
+            ArtifactStatus::Missing { reason, .. } => panic!("should be Present: {reason}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -15,7 +15,7 @@
 
 pub mod artifact;
 
-pub use artifact::{artifact_name, ArtifactManifest};
+pub use artifact::{artifact_name, ArtifactManifest, ArtifactStatus};
 
 use crate::model::QuantizedMlp;
 use anyhow::{anyhow, Context, Result};

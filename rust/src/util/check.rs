@@ -75,6 +75,58 @@ pub fn cases_n(seed: u64, n: usize, mut f: impl FnMut(&mut Gen)) {
     }
 }
 
+/// Case count from the `PROPTEST_CASES` environment knob (the same
+/// contract real proptest honors — CI pins it for reproducible load),
+/// else `default`.
+pub fn env_cases(default: usize) -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+}
+
+/// Parse a persisted regression-seed file (the `proptest-regressions/`
+/// idiom): `#` comment lines, then one replay seed per line as
+/// `cc 0x<hex>` (or a bare hex/decimal literal). Unparseable lines are
+/// an error — a typo'd seed silently skipping a regression would defeat
+/// the file's purpose.
+pub fn parse_regression_seeds(text: &str) -> Vec<u64> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(|l| {
+            let tok = l.strip_prefix("cc ").unwrap_or(l).trim();
+            let parsed = match tok.strip_prefix("0x").or_else(|| tok.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                None => tok.parse().ok(),
+            };
+            parsed.unwrap_or_else(|| panic!("checkit: bad regression seed line {l:?}"))
+        })
+        .collect()
+}
+
+/// Run `f` over the persisted regression seeds first (exact replay, so
+/// a once-found failure can never resurface silently), then `n` fresh
+/// deterministic cases from `seed`.
+pub fn cases_with_regressions(
+    seed: u64,
+    n: usize,
+    regressions: &str,
+    mut f: impl FnMut(&mut Gen),
+) {
+    let seeds = parse_regression_seeds(regressions);
+    for (i, &s) in seeds.iter().enumerate() {
+        let mut g = Gen::new(s);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            eprintln!("checkit: persisted regression {i} failed (replay seed {s:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+    cases_n(seed, n, &mut f)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,6 +150,36 @@ mod tests {
             assert!(g.u64() % 2 == 0 || g.u64() % 2 == 1);
             panic!("boom");
         });
+    }
+
+    #[test]
+    fn regression_seed_parsing() {
+        let seeds = parse_regression_seeds(
+            "# comment\n\ncc 0xDEADBEEF\n0x10\n42\n# trailing comment\n",
+        );
+        assert_eq!(seeds, vec![0xDEAD_BEEF, 0x10, 42]);
+        assert_eq!(parse_regression_seeds("# only comments\n"), Vec::<u64>::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad regression seed")]
+    fn malformed_regression_seed_is_loud() {
+        parse_regression_seeds("cc not-a-seed\n");
+    }
+
+    #[test]
+    fn regressions_replay_before_fresh_cases() {
+        let mut first = Vec::new();
+        cases_with_regressions(9, 4, "cc 0x7\ncc 0x7\n", |g| first.push(g.u64()));
+        assert_eq!(first.len(), 6, "2 persisted + 4 fresh");
+        assert_eq!(first[0], first[1], "same seed replays identically");
+    }
+
+    #[test]
+    fn env_cases_defaults_without_knob() {
+        // The suite cannot assume PROPTEST_CASES is unset (CI sets it),
+        // only that the result is a sane positive count.
+        assert!(env_cases(64) > 0);
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Cross-engine conformance: every zoo model (Table-IV MLPs + CNN zoo +
+//! DAG zoo) × MAC kind {TCD, conventional} × geometry {16×8, 8×4, 3×3}
+//! × roll backend {bitexact, fast, parallel} must produce outputs
+//! bit-identical to the Fix16 reference forward pass, with a
+//! backend-invariant cycle count — one macro-generated suite certifying
+//! the whole `exec::ExecCore` dispatch path for all engines at once.
+//!
+//! MAC-kind cycle relation (asserted per model × geometry): a TCD roll
+//! pays exactly one extra carry-propagation cycle, so raw counts obey
+//! `tcd.cycles > conv.cycles` while the execution *time* — cycles × the
+//! MAC's achievable clock, the paper's headline metric — obeys
+//! `tcd.time_ns ≤ conv.time_ns`: the TCD-NPE never costs more than the
+//! conventional NPE on any workload/geometry in the zoo.
+//!
+//! Batch counts are scaled per model so the gate-level `bitexact` leg
+//! stays tractable (MNIST-class models run B=2, small ones B=4); every
+//! backend runs at the same B so cycle counts are comparable.
+
+use tcd_npe::conv::{CnnEngine, QuantizedCnn};
+use tcd_npe::dataflow::{best_conventional, DataflowEngine, DataflowReport, OsEngine};
+use tcd_npe::exec::BackendKind;
+use tcd_npe::graph::{GraphEngine, QuantizedGraph};
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::zoo;
+use tcd_npe::model::{benchmark_by_name, QuantizedMlp};
+use tcd_npe::tcdmac::MacKind;
+
+/// The swept geometries: the paper's NPE, a mid square-ish array, and a
+/// minimal 3×3 (configs (1,9) and (3,3) only).
+fn geometries() -> [NpeGeometry; 3] {
+    [
+        NpeGeometry::PAPER,
+        NpeGeometry { tg_rows: 8, tg_cols: 4 },
+        NpeGeometry { tg_rows: 3, tg_cols: 3 },
+    ]
+}
+
+/// Drive one model through every kind × geometry × backend cell and
+/// assert the conformance contract. `exec` runs the model's engine for
+/// one cell; `reference` is the Fix16 forward pass.
+fn assert_conformance(
+    label: &str,
+    reference: &[Vec<i16>],
+    mut exec: impl FnMut(MacKind, NpeGeometry, BackendKind) -> DataflowReport,
+) {
+    for geom in geometries() {
+        let mut per_kind: Vec<(MacKind, DataflowReport)> = Vec::new();
+        for kind in [MacKind::Tcd, best_conventional()] {
+            let mut cell_cycles = None;
+            let mut last = None;
+            for backend in BackendKind::ALL {
+                let r = exec(kind, geom, backend);
+                assert_eq!(
+                    r.outputs,
+                    reference,
+                    "{label}: {} on {}x{} via {} != reference",
+                    kind.name(),
+                    geom.tg_rows,
+                    geom.tg_cols,
+                    backend.name()
+                );
+                match cell_cycles {
+                    None => cell_cycles = Some(r.cycles),
+                    Some(c) => assert_eq!(
+                        c,
+                        r.cycles,
+                        "{label}: cycle count must be backend-invariant ({} on {}x{}, {})",
+                        kind.name(),
+                        geom.tg_rows,
+                        geom.tg_cols,
+                        backend.name()
+                    ),
+                }
+                last = Some(r);
+            }
+            per_kind.push((kind, last.expect("three backends ran")));
+        }
+        let (_, tcd) = &per_kind[0];
+        let (_, conv) = &per_kind[1];
+        assert!(
+            tcd.cycles > conv.cycles,
+            "{label} on {}x{}: TCD pays one CPM cycle per roll ({} vs {})",
+            geom.tg_rows,
+            geom.tg_cols,
+            tcd.cycles,
+            conv.cycles
+        );
+        assert!(
+            tcd.time_ns <= conv.time_ns,
+            "{label} on {}x{}: TCD execution time {:.0}ns exceeds conventional {:.0}ns",
+            geom.tg_rows,
+            geom.tg_cols,
+            tcd.time_ns,
+            conv.time_ns
+        );
+    }
+}
+
+fn mlp_conformance(dataset: &str, batches: usize) {
+    let b = benchmark_by_name(dataset).expect("Table-IV row");
+    let mlp = QuantizedMlp::synthesize(b.topology.clone(), 0xC0F0);
+    let inputs = mlp.synth_inputs(batches, 0xC0F1);
+    let reference = mlp.forward_batch(&inputs);
+    assert_conformance(dataset, &reference, |kind, geom, backend| {
+        OsEngine::new(geom, kind)
+            .with_backend(backend)
+            .execute(&mlp, &inputs)
+    });
+}
+
+fn cnn_conformance(network: &str, batches: usize) {
+    let b = zoo::cnn_benchmark_by_name(network).expect("CNN zoo row");
+    let cnn = QuantizedCnn::synthesize(b.topology.clone(), 0xC0F2);
+    let inputs = cnn.synth_inputs(batches, 0xC0F3);
+    let reference = cnn.forward_batch(&inputs);
+    assert_conformance(network, &reference, |kind, geom, backend| {
+        CnnEngine::new(geom, kind)
+            .with_backend(backend)
+            .execute(&cnn, &inputs)
+    });
+}
+
+fn graph_conformance(network: &str, batches: usize) {
+    let b = zoo::graph_benchmark_by_name(network).expect("DAG zoo row");
+    let q = QuantizedGraph::synthesize(b.graph.clone(), 0xC0F4);
+    let inputs = q.synth_inputs(batches, 0xC0F5);
+    let reference = q.forward_batch(&inputs);
+    assert_conformance(network, &reference, |kind, geom, backend| {
+        GraphEngine::new(geom, kind)
+            .with_backend(backend)
+            .execute(&q, &inputs)
+    });
+}
+
+macro_rules! conformance_suite {
+    ($($name:ident: $family:ident($model:expr, $batches:expr);)+) => {
+        $(
+            #[test]
+            fn $name() {
+                $family($model, $batches);
+            }
+        )+
+    };
+}
+
+conformance_suite! {
+    // Table-IV MLP zoo (MNIST-class rows run B=2 to keep the gate-level
+    // leg tractable; the small UCI rows run B=4).
+    conformance_mlp_mnist: mlp_conformance("MNIST", 2);
+    conformance_mlp_adult: mlp_conformance("Adult", 4);
+    conformance_mlp_fft: mlp_conformance("Mibench data", 4);
+    conformance_mlp_wine: mlp_conformance("Wine", 4);
+    conformance_mlp_iris: mlp_conformance("Iris", 4);
+    conformance_mlp_poker: mlp_conformance("Poker Hands", 4);
+    conformance_mlp_fashion_mnist: mlp_conformance("Fashion MNIST", 2);
+    // CNN zoo (im2col lowering blows B up to B·P GEMM rows — B=1 is
+    // already hundreds of rows per conv layer).
+    conformance_cnn_lenet5: cnn_conformance("LeNet-5", 1);
+    conformance_cnn_cifarnet: cnn_conformance("CifarNet", 1);
+    // DAG zoo (fused lowering on, the production path).
+    conformance_graph_resmlp: graph_conformance("ResMLP", 4);
+    conformance_graph_tiny_resnet: graph_conformance("TinyResNet", 2);
+    conformance_graph_inception_mini: graph_conformance("InceptionMini", 2);
+}
+
+/// The unfused graph lowering must conform too (it schedules per node
+/// instead of per merged group — different rolls, same math).
+#[test]
+fn conformance_graph_unfused_lowering() {
+    for b in zoo::graph_benchmarks() {
+        let q = QuantizedGraph::synthesize(b.graph.clone(), 0xC0F6);
+        let inputs = q.synth_inputs(2, 0xC0F7);
+        let reference = q.forward_batch(&inputs);
+        for backend in BackendKind::ALL {
+            let r = GraphEngine::tcd(NpeGeometry::PAPER)
+                .fused(false)
+                .with_backend(backend)
+                .execute(&q, &inputs);
+            assert_eq!(r.outputs, reference, "{} unfused via {}", b.network, backend.name());
+        }
+    }
+}

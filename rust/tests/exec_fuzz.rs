@@ -1,0 +1,170 @@
+//! Differential fuzzing of the execution core: random Γ(B, I, U)
+//! problems and random small graph topologies, `Parallel` backend vs
+//! `BitExact` backend, bit-exact on outputs *and* cycle counts (and both
+//! equal to the Fix16 reference forward pass).
+//!
+//! Harness: `util::check` — the repo's proptest stand-in (the offline
+//! crate set has no proptest). It honors proptest's `PROPTEST_CASES`
+//! environment knob (CI pins it) and replays the persisted regression
+//! seeds in `proptest-regressions/exec_fuzz.txt` before the fresh
+//! stream, so a once-found failure can never resurface silently. To
+//! persist a new regression, append the `replay seed 0x…` printed by a
+//! failing run to that file.
+
+use tcd_npe::conv::{Conv2dLayer, Pool2dLayer, PoolKind, TensorShape};
+use tcd_npe::dataflow::{best_conventional, DataflowEngine, DataflowReport, OsEngine};
+use tcd_npe::exec::BackendKind;
+use tcd_npe::graph::{GraphEngine, GraphModel, QuantizedGraph};
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::{MlpTopology, QuantizedMlp};
+use tcd_npe::tcdmac::MacKind;
+use tcd_npe::util::check::{self, Gen};
+
+const REGRESSIONS: &str = include_str!("../proptest-regressions/exec_fuzz.txt");
+
+fn fuzz_cases() -> usize {
+    check::env_cases(48)
+}
+
+/// A random NPE geometry small enough for the gate-level leg.
+fn random_geometry(g: &mut Gen) -> NpeGeometry {
+    NpeGeometry::new(g.usize_in(1, 6), g.usize_in(1, 4))
+}
+
+fn random_kind(g: &mut Gen) -> MacKind {
+    if g.u64() & 1 == 0 {
+        MacKind::Tcd
+    } else {
+        best_conventional()
+    }
+}
+
+/// Differential contract: outputs and total cycles identical between
+/// the two backends, outputs identical to the reference.
+fn assert_differential(
+    label: &str,
+    reference: &[Vec<i16>],
+    parallel: DataflowReport,
+    bitexact: DataflowReport,
+) {
+    assert_eq!(parallel.outputs, bitexact.outputs, "{label}: backend outputs diverge");
+    assert_eq!(parallel.cycles, bitexact.cycles, "{label}: backend cycles diverge");
+    assert_eq!(parallel.outputs, reference, "{label}: outputs != Fix16 reference");
+}
+
+#[test]
+fn fuzz_random_gamma_mlps_parallel_equals_bitexact() {
+    check::cases_with_regressions(0xF0_2201, fuzz_cases(), REGRESSIONS, |g| {
+        let geom = random_geometry(g);
+        let kind = random_kind(g);
+        // Random Γ(B, I, U), optionally stacked two transitions deep so
+        // the ping-pong path fuzzes too.
+        let b = g.usize_in(1, 6);
+        let i = g.usize_in(1, 48);
+        let u = g.usize_in(1, 16);
+        let layers = if g.u64() & 1 == 0 {
+            vec![i, u]
+        } else {
+            vec![i, u, g.usize_in(1, 8)]
+        };
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(layers), g.u64());
+        let inputs = mlp.synth_inputs(b, g.u64());
+        let reference = mlp.forward_batch(&inputs);
+        let pa = OsEngine::new(geom, kind)
+            .with_backend(BackendKind::Parallel)
+            .execute(&mlp, &inputs);
+        let bx = OsEngine::new(geom, kind)
+            .with_backend(BackendKind::BitExact)
+            .execute(&mlp, &inputs);
+        let label = format!(
+            "Γ(B={b}, I={i}, U={u}) {} on {}x{}",
+            kind.name(),
+            geom.tg_rows,
+            geom.tg_cols
+        );
+        assert_differential(&label, &reference, pa, bx);
+    });
+}
+
+/// A random small DAG: one of three topology families (chain CNN, twin
+/// conv branches + concat, dense residual block), with randomized
+/// shapes, kernels and widths. Construction-time shape inference keeps
+/// every sample well-formed by construction.
+fn random_graph(g: &mut Gen) -> GraphModel {
+    let c = g.usize_in(1, 2);
+    let hw = g.usize_in(4, 6);
+    let mut gm = GraphModel::new(TensorShape::new(c, hw, hw));
+    match g.usize_in(0, 2) {
+        // Chain: conv → relu → [pool] → flatten → dense head.
+        0 => {
+            let k = g.usize_in(1, 3);
+            let oc = g.usize_in(1, 4);
+            let x = gm.conv(GraphModel::INPUT, Conv2dLayer::square(c, oc, k, k / 2));
+            let x = gm.relu(x);
+            let x = if g.u64() & 1 == 0 {
+                gm.pool(x, Pool2dLayer::square(PoolKind::Max, 2))
+            } else {
+                x
+            };
+            let f = gm.flatten(x);
+            let o = gm.dense(f, g.usize_in(1, 5));
+            gm.set_output(o);
+        }
+        // Twin same-geometry conv branches (fused lowering merges them
+        // into one Γ) → concat → flatten → dense head.
+        1 => {
+            let k = g.usize_in(1, 3);
+            let conv = Conv2dLayer::square(c, g.usize_in(1, 3), k, k / 2);
+            let a = gm.conv(GraphModel::INPUT, conv);
+            let a = gm.relu(a);
+            let b = gm.conv(GraphModel::INPUT, conv);
+            let b = gm.relu(b);
+            let cat = gm.concat(&[a, b]);
+            let f = gm.flatten(cat);
+            let o = gm.dense(f, g.usize_in(1, 5));
+            gm.set_output(o);
+        }
+        // Dense residual block: fc(w) → relu → fc(w) → add → relu → head.
+        _ => {
+            let w = g.usize_in(1, 10);
+            let f = gm.flatten(GraphModel::INPUT);
+            let h = gm.dense(f, w);
+            let h = gm.relu(h);
+            let y = gm.dense(h, w);
+            let s = gm.add(y, h);
+            let s = gm.relu(s);
+            let o = gm.dense(s, g.usize_in(1, 4));
+            gm.set_output(o);
+        }
+    }
+    gm
+}
+
+#[test]
+fn fuzz_random_graphs_parallel_equals_bitexact() {
+    check::cases_with_regressions(0xF0_2202, fuzz_cases(), REGRESSIONS, |g| {
+        let geom = random_geometry(g);
+        let kind = random_kind(g);
+        let fuse = g.u64() & 1 == 0;
+        let graph = random_graph(g);
+        let q = QuantizedGraph::synthesize(graph, g.u64());
+        let inputs = q.synth_inputs(g.usize_in(1, 4), g.u64());
+        let reference = q.forward_batch(&inputs);
+        let pa = GraphEngine::new(geom, kind)
+            .fused(fuse)
+            .with_backend(BackendKind::Parallel)
+            .execute(&q, &inputs);
+        let bx = GraphEngine::new(geom, kind)
+            .fused(fuse)
+            .with_backend(BackendKind::BitExact)
+            .execute(&q, &inputs);
+        let label = format!(
+            "graph({} nodes, fuse={fuse}) {} on {}x{}",
+            q.graph.n_nodes(),
+            kind.name(),
+            geom.tg_rows,
+            geom.tg_cols
+        );
+        assert_differential(&label, &reference, pa, bx);
+    });
+}
