@@ -11,10 +11,11 @@
 //! Run: `cargo run --release --example mnist_e2e [requests]`
 
 use std::time::{Duration, Instant};
-use tcd_npe::coordinator::{BatcherConfig, Coordinator, PjrtSpec};
+use tcd_npe::coordinator::{BatcherConfig, PjrtSpec};
 use tcd_npe::mapper::NpeGeometry;
 use tcd_npe::model::QuantizedMlp;
 use tcd_npe::runtime::ArtifactManifest;
+use tcd_npe::serve::NpeService;
 
 fn main() {
     let requests: usize = std::env::args()
@@ -38,28 +39,31 @@ fn main() {
     );
 
     let mlp = QuantizedMlp::synthesize(entry.topology.clone(), entry.seed);
-    let coord = Coordinator::spawn(
-        mlp.clone(),
-        NpeGeometry::PAPER,
-        BatcherConfig::new(entry.batch, Duration::from_millis(2)),
-        Some(PjrtSpec {
+    let service = NpeService::builder(mlp.clone())
+        .geometry(NpeGeometry::PAPER)
+        .batcher(BatcherConfig::new(entry.batch, Duration::from_millis(2)))
+        .pjrt(PjrtSpec {
             artifact_dir: "artifacts".into(),
             artifact: entry.name.clone(),
-        }),
-    );
+        })
+        .build()
+        .expect("valid serving config");
 
     // Synthetic MNIST-like digits (deterministic).
     let inputs = mlp.synth_inputs(requests, 0xD161_7);
     let t0 = Instant::now();
-    let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| service.submit(x.clone()).expect("admitted"))
+        .collect();
 
     let mut verified = 0usize;
     let mut wall_max = Duration::ZERO;
     let mut sim_ns_total = 0.0;
     let mut energy_pj = 0.0;
     let mut class_histogram = [0usize; 10];
-    for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response");
+    for t in tickets {
+        let resp = t.wait_timeout(Duration::from_secs(300)).expect("response");
         verified += resp.verified as usize;
         wall_max = wall_max.max(resp.wall);
         sim_ns_total += resp.npe_time_ns / entry.batch as f64;
@@ -85,10 +89,8 @@ fn main() {
         requests as f64 / (sim_ns_total / 1e9),
         energy_pj / requests as f64 / 1e6
     );
-    let m = coord.metrics.lock().unwrap().clone();
-    println!("coordinator: {}", m.render());
-    drop(m);
-    coord.shutdown().expect("clean shutdown");
+    println!("service: {}", service.metrics().render());
+    service.shutdown().expect("clean shutdown");
     assert_eq!(verified, requests, "every batch must be PJRT-verified");
     println!("\nE2E OK — all responses cross-verified against the XLA path");
 }

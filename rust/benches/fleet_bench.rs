@@ -1,13 +1,20 @@
 //! Bench E7 — fleet serving: simulated throughput and wall-latency
 //! percentiles vs device count (1/2/4/8) under the seeded Poisson load,
-//! plus the cached-vs-cold Algorithm-1 microbenchmark.
+//! the cached-vs-cold Algorithm-1 microbenchmark, and the
+//! admission-policy sweep (Block vs Reject at 2× saturation).
 //!
 //! Run: `cargo bench --bench fleet_bench`
 //!
 //! Emits `BENCH_fleet.json` in the working directory so CI can archive
-//! the trajectory (throughput/p99 vs device count) across PRs.
+//! the trajectory (throughput/p99/shed rate vs device count and policy)
+//! across PRs.
 
-use tcd_npe::bench::{fleet_json, fleet_rows, mapper_cache_bench, render_fleet_table};
+#![deny(deprecated)]
+
+use tcd_npe::bench::{
+    admission_rows, fleet_json, fleet_rows, mapper_cache_bench, render_admission_table,
+    render_fleet_table,
+};
 use tcd_npe::fleet::LoadGenConfig;
 
 fn main() {
@@ -16,6 +23,10 @@ fn main() {
     println!("=== fleet serving: throughput & latency vs device count ===");
     let rows = fleet_rows(&load);
     println!("{}", render_fleet_table(&rows, &load));
+
+    println!("=== admission policies at 2x saturation (1 device) ===");
+    let admission = admission_rows(&load);
+    println!("{}", render_admission_table(&admission));
 
     println!("=== Algorithm-1 cold vs schedule cache (Table-IV Γ set, B=8) ===");
     let mapper = mapper_cache_bench(200);
@@ -27,7 +38,7 @@ fn main() {
         mapper.speedup()
     );
 
-    let json = fleet_json(&rows, &mapper, &load);
+    let json = fleet_json(&rows, &admission, &mapper, &load);
     match std::fs::write("BENCH_fleet.json", &json) {
         Ok(()) => println!("\nwrote BENCH_fleet.json"),
         Err(e) => eprintln!("\ncould not write BENCH_fleet.json: {e}"),

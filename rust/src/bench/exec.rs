@@ -334,6 +334,37 @@ mod tests {
     }
 
     #[test]
+    fn every_backend_serves_identically_through_the_facade() {
+        // The exec sweep proves backend bit-identity engine-to-engine;
+        // this closes the loop through the serving facade: for each roll
+        // backend, NpeService::builder(..).backend(b) must answer the
+        // same bits the direct engine (and the Fix16 reference) produce.
+        use crate::coordinator::BatcherConfig;
+        use crate::serve::NpeService;
+        use std::time::Duration;
+
+        let mlp = benchmark_by_name("Wine")
+            .map(|b| QuantizedMlp::synthesize(b.topology.clone(), 0xE8EC))
+            .expect("Wine is in Table IV");
+        let inputs = mlp.synth_inputs(3, 0x5EED);
+        let expect = mlp.forward_batch(&inputs);
+        for backend in BackendKind::ALL {
+            let svc = NpeService::builder(mlp.clone())
+                .geometry(NpeGeometry::PAPER)
+                .backend(backend)
+                .batcher(BatcherConfig::new(3, Duration::from_millis(5)))
+                .build()
+                .expect("valid config");
+            for (x, want) in inputs.iter().zip(&expect) {
+                let got =
+                    svc.submit(x.clone()).expect("admitted").wait().expect("answered").output;
+                assert_eq!(&got, want, "{} served == reference", backend.name());
+            }
+            svc.shutdown().expect("clean shutdown");
+        }
+    }
+
+    #[test]
     fn json_and_table_are_shaped() {
         let w = exec_workloads()
             .into_iter()

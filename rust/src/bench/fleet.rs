@@ -1,14 +1,15 @@
 //! Fleet serving bench: simulated throughput and wall-latency
-//! percentiles vs device count, plus the cached-vs-cold mapper
-//! microbenchmark — the trajectory table future PRs track via
-//! `BENCH_fleet.json`.
+//! percentiles vs device count, the cached-vs-cold mapper
+//! microbenchmark, and the admission-policy sweep (Block vs Reject at
+//! 2× the measured saturation arrival rate) — the trajectory table
+//! future PRs track via `BENCH_fleet.json`.
 
-use crate::coordinator::{BatcherConfig, Coordinator, ServedModel};
-use crate::fleet::{poisson_arrivals, run_open_loop, LoadGenConfig};
+use crate::coordinator::{BatcherConfig, ServedModel};
+use crate::fleet::{poisson_arrivals, run_open_loop, submit_open_loop, LoadGenConfig};
 use crate::mapper::{Gamma, MapperTree, NpeGeometry, ScheduleCache};
 use crate::model::{benchmark_by_name, benchmarks, QuantizedMlp};
+use crate::serve::{AdmissionPolicy, NpeService, ServeError};
 use crate::util::TextTable;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Device counts swept by the fleet bench.
@@ -34,24 +35,31 @@ pub struct FleetRow {
     pub queue_peak: u64,
 }
 
+fn iris_mlp() -> QuantizedMlp {
+    let bench = benchmark_by_name("Iris").expect("Iris is in Table IV");
+    QuantizedMlp::synthesize(bench.topology.clone(), 0xF1EE7)
+}
+
+fn iris_model() -> ServedModel {
+    ServedModel::Mlp(iris_mlp())
+}
+
 /// Run the seeded open-loop load through a fleet of `devices` PAPER-
 /// geometry NPEs serving the Iris MLP (small enough that the bench runs
 /// in seconds, deep enough to exercise batching and the cache).
 pub fn fleet_row(devices: usize, load: &LoadGenConfig) -> FleetRow {
-    let bench = benchmark_by_name("Iris").expect("Iris is in Table IV");
-    let mlp = QuantizedMlp::synthesize(bench.topology.clone(), 0xF1EE7);
-    let model = ServedModel::Mlp(mlp);
+    let model = iris_model();
     let arrivals = poisson_arrivals(&model, load);
-    let coord = Coordinator::spawn_fleet(
-        model,
-        vec![NpeGeometry::PAPER; devices],
-        BatcherConfig::new(8, Duration::from_micros(200)),
-    );
-    let responses = run_open_loop(&coord, &arrivals, Duration::from_secs(60));
+    let service = NpeService::builder(model)
+        .devices(vec![NpeGeometry::PAPER; devices])
+        .batcher(BatcherConfig::new(8, Duration::from_micros(200)))
+        .build()
+        .expect("valid fleet config");
+    let responses = run_open_loop(&service, &arrivals, Duration::from_secs(60));
     let answered = responses.iter().filter(|o| o.is_some()).count() as u64;
-    let metrics = Arc::clone(&coord.metrics);
-    coord.shutdown().expect("fleet coordinator shutdown");
-    let m = metrics.lock().unwrap().clone();
+    let metrics = service.metrics_handle();
+    service.shutdown().expect("fleet service shutdown");
+    let m = metrics.lock().expect("bench metrics lock").clone();
     FleetRow {
         devices,
         requests: load.requests as u64,
@@ -74,6 +82,113 @@ pub fn fleet_rows(load: &LoadGenConfig) -> Vec<FleetRow> {
         .iter()
         .map(|&n| fleet_row(n, load))
         .collect()
+}
+
+/// One admission-policy measurement at an overload arrival rate.
+#[derive(Debug, Clone)]
+pub struct AdmissionRow {
+    /// Policy label (`block` / `reject`).
+    pub policy: &'static str,
+    /// Offered open-loop arrival rate, req/s (2× measured saturation).
+    pub offered_rps: f64,
+    pub requests: u64,
+    /// Requests that got an answer.
+    pub answered: u64,
+    /// Requests refused at submit or shed from the queue.
+    pub shed: u64,
+    /// shed / requests.
+    pub shed_rate: f64,
+    /// p99 wall latency over the *answered* requests, µs.
+    pub wall_p99_us: f64,
+}
+
+/// Measure the wall-clock saturation throughput of a 1-device fleet:
+/// requests answered over the wall time of a closed submit-then-drain
+/// run. The admission sweep offers 2× this.
+fn saturation_rps(load: &LoadGenConfig) -> f64 {
+    let mlp = iris_mlp();
+    let service = NpeService::builder(mlp.clone())
+        .devices([NpeGeometry::PAPER])
+        .batcher(BatcherConfig::new(8, Duration::from_micros(200)))
+        .build()
+        .expect("valid calibration config");
+    let n = (load.requests / 2).max(32);
+    let inputs = mlp.synth_inputs(n, load.seed ^ 0xCA11);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = inputs
+        .into_iter()
+        .filter_map(|x| service.submit(x).ok())
+        .collect();
+    for t in &tickets {
+        let _ = t.wait_timeout(Duration::from_secs(60));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    service.shutdown().expect("calibration shutdown");
+    if elapsed > 0.0 {
+        tickets.len() as f64 / elapsed
+    } else {
+        1e6
+    }
+}
+
+/// Drive the seeded Poisson stream at `rate` through a 1-device fleet
+/// under `policy`, counting sheds at both the submit gate and the queue.
+fn admission_row(
+    policy: AdmissionPolicy,
+    rate: f64,
+    load: &LoadGenConfig,
+) -> AdmissionRow {
+    let model = iris_model();
+    let overload = LoadGenConfig { rate_rps: rate, ..*load };
+    let arrivals = poisson_arrivals(&model, &overload);
+    let service = NpeService::builder(model)
+        .devices([NpeGeometry::PAPER])
+        .batcher(BatcherConfig::new(8, Duration::from_micros(200)))
+        .admission(policy)
+        .build()
+        .expect("valid admission config");
+    let mut answered = 0u64;
+    let mut refused = 0u64;
+    let mut queue_shed = 0u64;
+    let mut tickets = Vec::with_capacity(arrivals.len());
+    for outcome in submit_open_loop(&service, &arrivals) {
+        match outcome {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::QueueFull { .. }) => refused += 1,
+            Err(_) => {}
+        }
+    }
+    for t in tickets {
+        match t.wait_timeout(Duration::from_secs(60)) {
+            Ok(_) => answered += 1,
+            Err(ServeError::QueueFull { .. }) => queue_shed += 1,
+            Err(_) => {}
+        }
+    }
+    let metrics = service.metrics_handle();
+    service.shutdown().expect("admission bench shutdown");
+    let m = metrics.lock().expect("bench metrics lock").clone();
+    let shed = refused + queue_shed;
+    AdmissionRow {
+        policy: policy.name(),
+        offered_rps: rate,
+        requests: overload.requests as u64,
+        answered,
+        shed,
+        shed_rate: shed as f64 / overload.requests.max(1) as f64,
+        wall_p99_us: m.p99_us(),
+    }
+}
+
+/// The admission sweep: Block vs Reject on a 1-device fleet at 2× the
+/// measured saturation arrival rate (the overload regime where the
+/// policies actually diverge).
+pub fn admission_rows(load: &LoadGenConfig) -> Vec<AdmissionRow> {
+    let rate = 2.0 * saturation_rps(load).max(500.0);
+    // Reject bound: roughly two batches of headroom — deep enough to
+    // ride out batching jitter, shallow enough to actually shed at 2×.
+    let policies = [AdmissionPolicy::Block, AdmissionPolicy::Reject { max_depth: 16 }];
+    policies.iter().map(|&p| admission_row(p, rate, load)).collect()
 }
 
 /// Cached-vs-cold Algorithm-1 timing over the whole Table-IV Γ set.
@@ -176,10 +291,41 @@ pub fn render_fleet_table(rows: &[FleetRow], load: &LoadGenConfig) -> String {
     )
 }
 
-/// Serialize the sweep (plus the mapper microbench) as the
+/// Render the admission sweep as a text table.
+pub fn render_admission_table(rows: &[AdmissionRow]) -> String {
+    let mut t = TextTable::new(vec![
+        "Policy",
+        "Offered req/s",
+        "Answered",
+        "Shed",
+        "Shed rate",
+        "p99 (us)",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.policy.to_string(),
+            format!("{:.0}", r.offered_rps),
+            format!("{}/{}", r.answered, r.requests),
+            r.shed.to_string(),
+            format!("{:.1}%", r.shed_rate * 100.0),
+            format!("{:.0}", r.wall_p99_us),
+        ]);
+    }
+    format!(
+        "Admission policies on a 1-device fleet at 2x saturation (open-loop Poisson)\n{}",
+        t.render()
+    )
+}
+
+/// Serialize the sweeps (plus the mapper microbench) as the
 /// `BENCH_fleet.json` trajectory artifact. Hand-rolled JSON — the
 /// offline crate set has no serde.
-pub fn fleet_json(rows: &[FleetRow], mapper: &MapperCacheBench, load: &LoadGenConfig) -> String {
+pub fn fleet_json(
+    rows: &[FleetRow],
+    admission: &[AdmissionRow],
+    mapper: &MapperCacheBench,
+    load: &LoadGenConfig,
+) -> String {
     let mut s = String::from("{\n");
     s.push_str("  \"bench\": \"fleet\",\n");
     s.push_str(&format!(
@@ -193,6 +339,22 @@ pub fn fleet_json(rows: &[FleetRow], mapper: &MapperCacheBench, load: &LoadGenCo
         mapper.cached_us,
         mapper.speedup()
     ));
+    s.push_str("  \"admission\": [\n");
+    for (i, r) in admission.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"policy\": \"{}\", \"offered_rps\": {:.1}, \"requests\": {}, \
+             \"answered\": {}, \"shed\": {}, \"shed_rate\": {:.4}, \"wall_p99_us\": {:.1}}}{}\n",
+            r.policy,
+            r.offered_rps,
+            r.requests,
+            r.answered,
+            r.shed,
+            r.shed_rate,
+            r.wall_p99_us,
+            if i + 1 < admission.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
     s.push_str("  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
@@ -258,6 +420,27 @@ mod tests {
     }
 
     #[test]
+    fn admission_sweep_blocks_everything_and_reject_sheds() {
+        // Small but genuinely overloaded: Block answers everything (the
+        // backlog just queues), Reject keeps its bound by refusing some.
+        let load = LoadGenConfig { seed: 0xADA1, rate_rps: 1e6, requests: 192 };
+        let rows = admission_rows(&load);
+        assert_eq!(rows.len(), 2);
+        let block = &rows[0];
+        let reject = &rows[1];
+        assert_eq!(block.policy, "block");
+        assert_eq!(reject.policy, "reject");
+        assert_eq!(block.answered, block.requests, "Block never sheds");
+        assert_eq!(block.shed, 0);
+        assert_eq!(
+            reject.answered + reject.shed,
+            reject.requests,
+            "every request is answered or shed, never lost"
+        );
+        assert!(block.offered_rps > 0.0);
+    }
+
+    #[test]
     fn mapper_cache_bench_counts_shapes() {
         let b = mapper_cache_bench(2);
         // 7 Table-IV MLPs: 4 two-transition + 2 three-transition +
@@ -270,14 +453,19 @@ mod tests {
     fn json_is_shaped() {
         let load = LoadGenConfig { seed: 1, rate_rps: 2e6, requests: 16 };
         let rows = vec![fleet_row(1, &load)];
+        let admission = vec![admission_row(AdmissionPolicy::Block, 1e5, &load)];
         let mapper = mapper_cache_bench(1);
-        let s = fleet_json(&rows, &mapper, &load);
+        let s = fleet_json(&rows, &admission, &mapper, &load);
         assert!(s.contains("\"bench\": \"fleet\""));
         assert!(s.contains("\"devices\": 1"));
         assert!(s.contains("\"mapper_cache\""));
+        assert!(s.contains("\"admission\""));
+        assert!(s.contains("\"policy\": \"block\""));
         assert!(s.trim_end().ends_with('}'));
         let table = render_fleet_table(&rows, &load);
         assert!(table.contains("Devices"));
         assert!(table.contains("Hit rate"));
+        let atable = render_admission_table(&admission);
+        assert!(atable.contains("Shed rate"));
     }
 }

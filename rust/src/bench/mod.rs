@@ -21,8 +21,9 @@ pub use exec::{
 };
 pub use fig10::{fig10_rows, render_fig10, Fig10Row};
 pub use fleet::{
-    fleet_json, fleet_row, fleet_rows, mapper_cache_bench, render_fleet_table, FleetRow,
-    MapperCacheBench, FLEET_DEVICE_COUNTS,
+    admission_rows, fleet_json, fleet_row, fleet_rows, mapper_cache_bench,
+    render_admission_table, render_fleet_table, AdmissionRow, FleetRow, MapperCacheBench,
+    FLEET_DEVICE_COUNTS,
 };
 pub use graph::{graph_json, graph_rows, render_graph_table, GraphRow, GRAPH_BATCHES};
 pub use harness::BenchTimer;

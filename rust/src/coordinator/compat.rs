@@ -1,0 +1,219 @@
+//! Deprecated legacy serving entry points.
+//!
+//! The seven `Coordinator::spawn_*` functions below are the pre-redesign
+//! serving surface (one entry point per workload × deployment × backend
+//! combination). They survive as thin shims over the one real
+//! construction path — [`NpeService::builder`] — so external callers
+//! keep compiling while first-party code (which builds with
+//! `#[deny(deprecated)]` in `main.rs` and `bench/`) is provably
+//! migrated. `tests/serve_api.rs` proves the shims bit-exact against the
+//! builder. Removal is planned two PRs after this redesign lands (see
+//! CHANGES.md).
+//!
+//! This file is construction-time-only legacy glue: it runs before any
+//! request exists, so it is intentionally *outside* the grep-enforced
+//! no-panic request path (the `expect` below reproduces the legacy
+//! panic-on-misuse behaviour of e.g. `spawn_fleet` with zero devices).
+
+use super::{BatcherConfig, CoordinatorMetrics, PjrtSpec, ServedModel};
+use crate::conv::QuantizedCnn;
+use crate::exec::BackendKind;
+use crate::fleet::DeviceSpec;
+use crate::graph::QuantizedGraph;
+use crate::mapper::{NpeGeometry, ScheduleCache};
+use crate::model::QuantizedMlp;
+use crate::serve::{NpeService, ServeError, ServiceClient, Ticket};
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+/// Legacy handle to a running coordinator. Deprecated: construct an
+/// [`NpeService`] through its builder instead.
+#[deprecated(since = "0.2.0", note = "use NpeService::builder(model).build()")]
+pub struct Coordinator {
+    service: NpeService,
+    /// The live service metrics (kept as a public field for legacy
+    /// callers; the builder API exposes `NpeService::metrics()`).
+    pub metrics: Arc<Mutex<CoordinatorMetrics>>,
+    /// The shared Algorithm-1 schedule cache.
+    pub cache: Arc<ScheduleCache>,
+}
+
+/// Legacy cloneable submit-only handle. Deprecated: use
+/// [`NpeService::client`] / [`ServiceClient`].
+#[deprecated(since = "0.2.0", note = "use NpeService::client() / ServiceClient")]
+#[derive(Clone)]
+pub struct CoordinatorClient {
+    client: ServiceClient,
+}
+
+#[allow(deprecated)]
+impl CoordinatorClient {
+    /// Submit one request; returns the typed ticket.
+    pub fn submit(&self, input: Vec<i16>) -> Result<Ticket, ServeError> {
+        self.client.submit(input)
+    }
+}
+
+#[allow(deprecated)]
+fn wrap(service: NpeService) -> Coordinator {
+    Coordinator {
+        metrics: service.metrics_handle(),
+        cache: service.cache(),
+        service,
+    }
+}
+
+/// Legacy configs accepted `batch_size == 0` (and looped on it); the
+/// builder rejects it, so the shims clamp to the nearest legal value.
+fn legacy_cfg(cfg: BatcherConfig) -> BatcherConfig {
+    BatcherConfig { batch_size: cfg.batch_size.max(1), ..cfg }
+}
+
+#[allow(deprecated)]
+impl Coordinator {
+    /// Spawn the coordinator thread for an MLP.
+    #[deprecated(since = "0.2.0", note = "use NpeService::builder(model) — the one serving construction path")]
+    pub fn spawn(
+        mlp: QuantizedMlp,
+        geometry: NpeGeometry,
+        cfg: BatcherConfig,
+        pjrt: Option<PjrtSpec>,
+    ) -> Self {
+        Self::spawn_model(ServedModel::Mlp(mlp), geometry, cfg, pjrt)
+    }
+
+    /// Spawn the coordinator thread for a CNN.
+    #[deprecated(since = "0.2.0", note = "use NpeService::builder(model) — the one serving construction path")]
+    pub fn spawn_cnn(cnn: QuantizedCnn, geometry: NpeGeometry, cfg: BatcherConfig) -> Self {
+        Self::spawn_model(ServedModel::Cnn(cnn), geometry, cfg, None)
+    }
+
+    /// Spawn the coordinator thread for a DAG model.
+    #[deprecated(since = "0.2.0", note = "use NpeService::builder(model) — the one serving construction path")]
+    pub fn spawn_graph(graph: QuantizedGraph, geometry: NpeGeometry, cfg: BatcherConfig) -> Self {
+        Self::spawn_model(ServedModel::Graph(graph), geometry, cfg, None)
+    }
+
+    /// Spawn the coordinator thread for any [`ServedModel`] on a single
+    /// simulated NPE (default `Fast` roll backend).
+    #[deprecated(since = "0.2.0", note = "use NpeService::builder(model) — the one serving construction path")]
+    pub fn spawn_model(
+        model: ServedModel,
+        geometry: NpeGeometry,
+        cfg: BatcherConfig,
+        pjrt: Option<PjrtSpec>,
+    ) -> Self {
+        Self::spawn_model_on(model, geometry, BackendKind::Fast, cfg, pjrt)
+    }
+
+    /// Spawn a single-NPE coordinator on an explicit roll backend.
+    #[deprecated(since = "0.2.0", note = "use NpeService::builder(model) — the one serving construction path")]
+    pub fn spawn_model_on(
+        model: ServedModel,
+        geometry: NpeGeometry,
+        backend: BackendKind,
+        cfg: BatcherConfig,
+        pjrt: Option<PjrtSpec>,
+    ) -> Self {
+        // The legacy API silently ignored a PJRT spec on non-MLP models;
+        // the builder rejects that combination, so filter here.
+        let pjrt = match &model {
+            ServedModel::Mlp(_) => pjrt,
+            ServedModel::Cnn(_) | ServedModel::Graph(_) => None,
+        };
+        let mut b = NpeService::builder(model)
+            .geometry(geometry)
+            .backend(backend)
+            .batcher(legacy_cfg(cfg));
+        if let Some(spec) = pjrt {
+            b = b.pjrt(spec);
+        }
+        wrap(b.build().expect("legacy spawn: invalid configuration"))
+    }
+
+    /// Spawn a fleet coordinator, one device per geometry, all on the
+    /// default `Fast` backend.
+    #[deprecated(since = "0.2.0", note = "use NpeService::builder(model) — the one serving construction path")]
+    pub fn spawn_fleet(
+        model: ServedModel,
+        geometries: Vec<NpeGeometry>,
+        cfg: BatcherConfig,
+    ) -> Self {
+        let specs = geometries.into_iter().map(DeviceSpec::from).collect();
+        Self::spawn_fleet_on(model, specs, cfg)
+    }
+
+    /// Spawn a fleet coordinator with per-device [`DeviceSpec`]s.
+    /// Panics on an empty spec list (the legacy behaviour; the builder
+    /// returns `InvalidConfig` instead).
+    #[deprecated(since = "0.2.0", note = "use NpeService::builder(model) — the one serving construction path")]
+    pub fn spawn_fleet_on(
+        model: ServedModel,
+        specs: Vec<DeviceSpec>,
+        cfg: BatcherConfig,
+    ) -> Self {
+        wrap(
+            NpeService::builder(model)
+                .devices(specs)
+                .batcher(legacy_cfg(cfg))
+                .build()
+                .expect("legacy spawn_fleet: invalid configuration"),
+        )
+    }
+
+    /// Submit one request; returns the typed ticket.
+    pub fn submit(&self, input: Vec<i16>) -> Result<Ticket, ServeError> {
+        self.service.submit(input)
+    }
+
+    /// A cloneable submit-only handle for concurrent client threads.
+    pub fn client(&self) -> CoordinatorClient {
+        CoordinatorClient { client: self.service.client() }
+    }
+
+    /// Shut down, flushing pending requests.
+    pub fn shutdown(self) -> Result<()> {
+        self.service.shutdown()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+#[allow(deprecated)]
+mod tests {
+    use super::*;
+    use crate::model::MlpTopology;
+    use std::time::Duration;
+
+    #[test]
+    fn legacy_spawn_still_serves() {
+        let m = QuantizedMlp::synthesize(MlpTopology::new(vec![16, 12, 4]), 77);
+        let expect = m.forward_batch(&m.synth_inputs(1, 5));
+        let coord = Coordinator::spawn(
+            m.clone(),
+            NpeGeometry::WALKTHROUGH,
+            BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(5) },
+            None,
+        );
+        let ticket = coord.submit(m.synth_inputs(1, 5)[0].clone()).expect("admitted");
+        let resp = ticket.wait_timeout(Duration::from_secs(5)).expect("answered");
+        assert_eq!(resp.output, expect[0]);
+        assert!(resp.npe_time_ns > 0.0);
+        assert!(coord.metrics.lock().unwrap().requests >= 1);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn legacy_zero_batch_size_is_clamped_not_fatal() {
+        let m = QuantizedMlp::synthesize(MlpTopology::new(vec![8, 6, 2]), 3);
+        let coord = Coordinator::spawn(
+            m.clone(),
+            NpeGeometry::WALKTHROUGH,
+            BatcherConfig { batch_size: 0, max_wait: Duration::from_millis(1) },
+            None,
+        );
+        let out = coord.submit(m.synth_inputs(1, 2)[0].clone()).expect("admitted");
+        assert!(out.wait_timeout(Duration::from_secs(5)).is_ok());
+        coord.shutdown().unwrap();
+    }
+}

@@ -5,7 +5,6 @@ use super::InferenceRequest;
 use crate::dataflow::DataflowReport;
 use crate::mapper::{CacheStats, NpeGeometry};
 use std::fmt;
-use std::time::Instant;
 
 /// Size of the sliding latency window: once this many samples exist,
 /// new latencies overwrite the oldest ones (ring buffer), so a
@@ -40,9 +39,20 @@ impl DeviceMetrics {
 #[derive(Debug, Default, Clone)]
 pub struct CoordinatorMetrics {
     pub requests: u64,
-    /// Requests dropped for carrying the wrong input length (never
-    /// dispatched; the client's response channel disconnects).
+    /// Requests refused for carrying the wrong input length (never
+    /// admitted; the submit call returns `ServeError::ShapeMismatch`).
     pub rejected_requests: u64,
+    /// Requests refused or dropped by admission control: submit-time
+    /// `Reject` refusals plus `ShedOldest` queue sheds (their tickets
+    /// resolve with `ServeError::QueueFull`).
+    pub shed_requests: u64,
+    /// Responses that found no listener: the client dropped its ticket
+    /// before the answer arrived. Counted, never fatal.
+    pub responses_dropped: u64,
+    /// Batches whose PJRT cross-execution *disagreed* with the
+    /// simulator — a numeric bug surfaced as a counter, not a worker
+    /// panic (the affected batches are answered `verified == false`).
+    pub verify_mismatches: u64,
     pub batches: u64,
     /// Padding rows added to meet the artifact batch shape.
     pub padded_slots: u64,
@@ -112,7 +122,7 @@ impl CoordinatorMetrics {
     pub fn account_batch(
         &mut self,
         lane: usize,
-        batch: &[(Instant, InferenceRequest)],
+        batch: &[InferenceRequest],
         report: &DataflowReport,
         padded_to: usize,
         verified: bool,
@@ -120,14 +130,14 @@ impl CoordinatorMetrics {
     ) {
         self.batches += 1;
         self.requests += batch.len() as u64;
-        self.padded_slots += (padded_to - batch.len()) as u64;
+        self.padded_slots += padded_to.saturating_sub(batch.len()) as u64;
         self.sim_time_ns += report.time_ns;
         self.sim_energy_pj += report.energy.total_pj();
         if verified {
             self.verified_batches += 1;
         }
-        for (t0, _) in batch {
-            self.record_latency(t0.elapsed().as_nanos() as u64);
+        for req in batch {
+            self.record_latency(req.submitted.elapsed().as_nanos() as u64);
         }
         self.cache_hits = cache.hits;
         self.cache_misses = cache.misses;
@@ -209,11 +219,13 @@ impl CoordinatorMetrics {
     pub fn render(&self) -> String {
         let p = self.latency_percentiles_us(&[50.0, 95.0, 99.0]);
         format!(
-            "requests={} rejected={} batches={} occupancy={:.2} verified={} \
+            "requests={} rejected={} shed={} dropped={} batches={} occupancy={:.2} verified={} \
              avg_sim_latency={:.1}us energy={:.2}uJ wall_p50={:.0}us wall_p95={:.0}us \
              wall_p99={:.0}us cache={}h/{}m",
             self.requests,
             self.rejected_requests,
+            self.shed_requests,
+            self.responses_dropped,
             self.batches,
             self.batch_occupancy(),
             self.verified_batches,
@@ -234,13 +246,19 @@ impl fmt::Display for CoordinatorMetrics {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "requests {} (rejected {}), batches {}, occupancy {:.2}, verified {}",
+            "requests {} (rejected {}, shed {}, responses dropped {}), batches {}, \
+             occupancy {:.2}, verified {}",
             self.requests,
             self.rejected_requests,
+            self.shed_requests,
+            self.responses_dropped,
             self.batches,
             self.batch_occupancy(),
             self.verified_batches,
         )?;
+        if self.verify_mismatches > 0 {
+            writeln!(f, "!! {} batch(es) FAILED PJRT cross-verification", self.verify_mismatches)?;
+        }
         let p = self.latency_percentiles_us(&[50.0, 95.0, 99.0]);
         writeln!(
             f,

@@ -1,11 +1,12 @@
 //! The serving coordinator — the L3 system layer.
 //!
 //! A threaded request router and dynamic batcher in front of the TCD-NPE:
-//! clients submit single inference requests; the batcher accumulates them
+//! clients submit single inference requests through the
+//! [`crate::serve::NpeService`] facade; the batcher accumulates them
 //! into NPE-sized batches (or flushes on a deadline), the scheduler maps
 //! each batch with Algorithm 1 (through the shared
 //! [`ScheduleCache`], so a shape is mapped once ever), and the batch
-//! executes on one of two backends:
+//! executes on one of two internal backends:
 //!
 //! * **single** — the cycle-accurate NPE simulator in the coordinator
 //!   thread (optionally cross-executed on the PJRT/XLA path and verified
@@ -16,13 +17,22 @@
 //! Responses are bit-exact across backends and device geometries: the
 //! dataflow moves data, it does not change math.
 //!
+//! The request path in this module (and in [`crate::fleet`]) carries no
+//! `unwrap`/`expect`/`panic!`: every way a request can fail resolves its
+//! ticket with a typed [`ServeError`], and a hung-up client is a counted
+//! metric (`responses_dropped`), not a crash. `tests/serve_api.rs`
+//! grep-enforces this.
+//!
 //! (The offline crate set has no tokio; the event loop is std::thread +
 //! mpsc, which for a CPU-bound simulator is the right tool anyway.)
 
 pub mod batcher;
+pub mod compat;
 pub mod metrics;
 
 pub use batcher::BatcherConfig;
+#[allow(deprecated)]
+pub use compat::{Coordinator, CoordinatorClient};
 pub use metrics::{CoordinatorMetrics, DeviceMetrics};
 
 use crate::conv::{CnnEngine, QuantizedCnn};
@@ -30,13 +40,13 @@ use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
 use crate::exec::BackendKind;
 use crate::fleet::{DeviceSpec, Fleet, FleetJob};
 use crate::graph::{GraphEngine, QuantizedGraph};
-use crate::mapper::{NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
+use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::model::QuantizedMlp;
 use crate::runtime::PjrtRuntime;
-use anyhow::Result;
+use crate::serve::{AdmissionPolicy, Responder, ServeError, ServeShared};
+use crate::util;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// A model the coordinator can serve: the Table-IV MLPs, a conv-zoo CNN
@@ -59,14 +69,19 @@ impl ServedModel {
     }
 }
 
-/// One inference request.
+/// One admitted inference request riding through the batcher and (on the
+/// fleet path) the work queue.
 pub struct InferenceRequest {
     pub input: Vec<i16>,
-    pub resp: mpsc::Sender<InferenceResponse>,
+    /// Submit timestamp, for wall-latency accounting.
+    pub submitted: Instant,
+    /// The ticket's service-side end: answers, sheds, and drops all go
+    /// through it (and release the admission depth slot exactly once).
+    pub responder: Responder,
 }
 
 /// The response delivered to the client.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct InferenceResponse {
     pub output: Vec<i16>,
     /// Simulated NPE latency for the batch this request rode in, ns.
@@ -88,45 +103,21 @@ pub struct PjrtSpec {
     pub artifact: String,
 }
 
-/// Handle to a running coordinator.
-pub struct Coordinator {
-    tx: mpsc::Sender<CoordinatorMsg>,
-    handle: Option<JoinHandle<()>>,
-    pub metrics: Arc<Mutex<CoordinatorMetrics>>,
-    /// The shared Algorithm-1 schedule cache (hit/miss counters are also
-    /// snapshotted into [`CoordinatorMetrics`] after every batch).
-    pub cache: Arc<ScheduleCache>,
+/// Where a built service executes — the internal shape behind the one
+/// `ServeBuilder` path (the old API exposed this split as separate
+/// `spawn` vs `spawn_fleet` entry points).
+pub(crate) enum ExecutionPlan {
+    Single {
+        geometry: NpeGeometry,
+        backend: BackendKind,
+        pjrt: Option<PjrtSpec>,
+    },
+    Fleet { specs: Vec<DeviceSpec> },
 }
 
-/// A cloneable submit-only handle, for many client threads sharing one
-/// coordinator (the stress suite drives 32 of these concurrently).
-#[derive(Clone)]
-pub struct CoordinatorClient {
-    tx: mpsc::Sender<CoordinatorMsg>,
-}
-
-impl CoordinatorClient {
-    /// Submit one request; returns the response channel.
-    pub fn submit(&self, input: Vec<i16>) -> mpsc::Receiver<InferenceResponse> {
-        submit_via(&self.tx, input)
-    }
-}
-
-enum CoordinatorMsg {
-    Request(Instant, InferenceRequest),
+pub(crate) enum CoordinatorMsg {
+    Request(InferenceRequest),
     Shutdown,
-}
-
-fn submit_via(
-    tx: &mpsc::Sender<CoordinatorMsg>,
-    input: Vec<i16>,
-) -> mpsc::Receiver<InferenceResponse> {
-    let (rtx, rrx) = mpsc::channel();
-    let _ = tx.send(CoordinatorMsg::Request(
-        Instant::now(),
-        InferenceRequest { input, resp: rtx },
-    ));
-    rrx
 }
 
 /// The single-NPE execution backend (engines + optional PJRT runtime).
@@ -143,70 +134,24 @@ enum Backend {
     Fleet(Fleet),
 }
 
-impl Coordinator {
-    /// Spawn the coordinator thread for an MLP.
-    ///
-    /// `pjrt`: an optional artifact spec; when given, the coordinator
-    /// thread builds a PJRT runtime and cross-verifies every batch
-    /// (None → simulator only).
-    pub fn spawn(
-        mlp: QuantizedMlp,
-        geometry: NpeGeometry,
-        cfg: BatcherConfig,
-        pjrt: Option<PjrtSpec>,
-    ) -> Self {
-        Self::spawn_model(ServedModel::Mlp(mlp), geometry, cfg, pjrt)
-    }
-
-    /// Spawn the coordinator thread for a CNN: requests carry flattened
-    /// CHW feature maps and execute through the im2col-lowered conv path
-    /// (no PJRT artifacts exist for CNNs yet, so simulator only).
-    pub fn spawn_cnn(cnn: QuantizedCnn, geometry: NpeGeometry, cfg: BatcherConfig) -> Self {
-        Self::spawn_model(ServedModel::Cnn(cnn), geometry, cfg, None)
-    }
-
-    /// Spawn the coordinator thread for a DAG model: requests carry the
-    /// graph input's flattened CHW features and execute through the
-    /// graph compiler's fused lowering (simulator only, like CNNs).
-    pub fn spawn_graph(graph: QuantizedGraph, geometry: NpeGeometry, cfg: BatcherConfig) -> Self {
-        Self::spawn_model(ServedModel::Graph(graph), geometry, cfg, None)
-    }
-
-    /// Spawn the coordinator thread for any [`ServedModel`] on a single
-    /// simulated NPE (default `Fast` roll backend).
-    ///
-    /// `pjrt` applies to MLP models only — no CNN artifacts exist, so a
-    /// spec passed with a [`ServedModel::Cnn`] is ignored (no runtime is
-    /// built and batches are neither padded nor reported as verified).
-    pub fn spawn_model(
-        model: ServedModel,
-        geometry: NpeGeometry,
-        cfg: BatcherConfig,
-        pjrt: Option<PjrtSpec>,
-    ) -> Self {
-        Self::spawn_model_on(model, geometry, BackendKind::Fast, cfg, pjrt)
-    }
-
-    /// Spawn a single-NPE coordinator on an explicit roll backend
-    /// (`parallel` is the serving fast path; `bitexact` turns the
-    /// coordinator into a slow full-verification service).
-    pub fn spawn_model_on(
-        model: ServedModel,
-        geometry: NpeGeometry,
-        backend: BackendKind,
-        cfg: BatcherConfig,
-        pjrt: Option<PjrtSpec>,
-    ) -> Self {
-        let (tx, rx) = mpsc::channel::<CoordinatorMsg>();
-        let metrics = Arc::new(Mutex::new(CoordinatorMetrics {
-            devices: vec![DeviceMetrics::for_geometry(geometry)],
-            ..CoordinatorMetrics::default()
-        }));
-        let cache = ScheduleCache::shared_bounded(DEFAULT_SERVING_CACHE_CAPACITY);
-        let metrics_thread = Arc::clone(&metrics);
-        let cache_thread = Arc::clone(&cache);
-        let handle = std::thread::spawn(move || {
-            let runtime = match &model {
+/// The coordinator thread body: build the execution backend, run the
+/// batcher loop until shutdown-drain completes. Returns the number of
+/// fleet device threads that died (0 on a healthy run — surfaced as
+/// `ServeError::DeviceLost` by `NpeService::shutdown`).
+pub(crate) fn service_thread(
+    rx: mpsc::Receiver<CoordinatorMsg>,
+    model: ServedModel,
+    plan: ExecutionPlan,
+    cfg: BatcherConfig,
+    metrics: Arc<Mutex<CoordinatorMetrics>>,
+    cache: Arc<ScheduleCache>,
+    shared: Arc<ServeShared>,
+) -> usize {
+    let model = Arc::new(model);
+    let backend = match plan {
+        ExecutionPlan::Single { geometry, backend, pjrt } => {
+            util::lock(&metrics).devices = vec![DeviceMetrics::for_geometry(geometry)];
+            let runtime = match &*model {
                 // Build the (non-Send) PJRT runtime inside the thread.
                 ServedModel::Mlp(_) => pjrt.and_then(|spec| {
                     let mut rt = PjrtRuntime::new(&spec.artifact_dir).ok()?;
@@ -215,83 +160,27 @@ impl Coordinator {
                 }),
                 ServedModel::Cnn(_) | ServedModel::Graph(_) => None,
             };
-            let backend = Backend::Single(Box::new(SingleBackend {
+            Backend::Single(Box::new(SingleBackend {
                 mlp_engine: OsEngine::tcd(geometry)
-                    .with_cache(Arc::clone(&cache_thread))
+                    .with_cache(Arc::clone(&cache))
                     .with_backend(backend),
                 cnn_engine: CnnEngine::tcd(geometry)
-                    .with_cache(Arc::clone(&cache_thread))
+                    .with_cache(Arc::clone(&cache))
                     .with_backend(backend),
                 graph_engine: GraphEngine::tcd(geometry)
-                    .with_cache(Arc::clone(&cache_thread))
+                    .with_cache(Arc::clone(&cache))
                     .with_backend(backend),
                 runtime,
-            }));
-            run_loop(rx, Arc::new(model), cfg, backend, metrics_thread, cache_thread);
-        });
-        Self { tx, handle: Some(handle), metrics, cache }
-    }
-
-    /// Spawn a coordinator whose batches execute on a fleet of simulated
-    /// NPE devices, one per entry of `geometries` (heterogeneous shapes
-    /// are fine — responses stay bit-exact regardless of geometry),
-    /// all on the default `Fast` backend.
-    pub fn spawn_fleet(
-        model: ServedModel,
-        geometries: Vec<NpeGeometry>,
-        cfg: BatcherConfig,
-    ) -> Self {
-        let specs = geometries.into_iter().map(DeviceSpec::from).collect();
-        Self::spawn_fleet_on(model, specs, cfg)
-    }
-
-    /// Spawn a fleet coordinator with per-device [`DeviceSpec`]s —
-    /// geometry *and* roll backend are selected per device (responses
-    /// stay bit-exact regardless of either).
-    pub fn spawn_fleet_on(
-        model: ServedModel,
-        specs: Vec<DeviceSpec>,
-        cfg: BatcherConfig,
-    ) -> Self {
-        assert!(!specs.is_empty(), "a fleet needs at least one device");
-        let (tx, rx) = mpsc::channel::<CoordinatorMsg>();
-        let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
-        let cache = ScheduleCache::shared_bounded(DEFAULT_SERVING_CACHE_CAPACITY);
-        let metrics_thread = Arc::clone(&metrics);
-        let cache_thread = Arc::clone(&cache);
-        let handle = std::thread::spawn(move || {
-            let model = Arc::new(model);
-            let fleet = Fleet::spawn_on(
-                Arc::clone(&model),
-                &specs,
-                Arc::clone(&cache_thread),
-                Arc::clone(&metrics_thread),
-            );
-            run_loop(rx, model, cfg, Backend::Fleet(fleet), metrics_thread, cache_thread);
-        });
-        Self { tx, handle: Some(handle), metrics, cache }
-    }
-
-    /// Submit one request; returns the response channel.
-    pub fn submit(&self, input: Vec<i16>) -> mpsc::Receiver<InferenceResponse> {
-        submit_via(&self.tx, input)
-    }
-
-    /// A cloneable submit-only handle for concurrent client threads.
-    pub fn client(&self) -> CoordinatorClient {
-        CoordinatorClient { tx: self.tx.clone() }
-    }
-
-    /// Shut down, flushing pending requests: every request accepted
-    /// before this call is executed and answered (in `batch_size`
-    /// chunks), on both backends.
-    pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.tx.send(CoordinatorMsg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            h.join().map_err(|_| anyhow::anyhow!("coordinator panicked"))?;
+            }))
         }
-        Ok(())
-    }
+        ExecutionPlan::Fleet { specs } => Backend::Fleet(Fleet::spawn_on(
+            Arc::clone(&model),
+            &specs,
+            Arc::clone(&cache),
+            Arc::clone(&metrics),
+        )),
+    };
+    run_loop(rx, model, cfg, backend, metrics, cache, shared)
 }
 
 fn run_loop(
@@ -301,8 +190,9 @@ fn run_loop(
     mut backend: Backend,
     metrics: Arc<Mutex<CoordinatorMetrics>>,
     cache: Arc<ScheduleCache>,
-) {
-    let mut pending: Vec<(Instant, InferenceRequest)> = Vec::new();
+    shared: Arc<ServeShared>,
+) -> usize {
+    let mut pending: Vec<InferenceRequest> = Vec::new();
     let mut shutdown = false;
 
     loop {
@@ -312,22 +202,15 @@ fn run_loop(
         // the loop iteration — guarantees every request a full
         // `max_wait` of batching opportunity.
         //
-        // Malformed (wrong-length) requests are rejected in both arms
-        // below: one bad input must not take down the engine (the conv
-        // path asserts on feature-map size). Dropping the request drops
-        // its response sender, so the client's receiver disconnects
-        // immediately instead of hanging.
+        // Shape validation happens at submit time; the checks here are
+        // defensive only (a wrong-length request reaching this loop
+        // would otherwise take down an engine).
         if pending.is_empty() {
             if shutdown {
                 break;
             }
             match rx.recv() {
-                Ok(CoordinatorMsg::Request(_, r))
-                    if r.input.len() != model.input_len() =>
-                {
-                    metrics.lock().unwrap().rejected_requests += 1;
-                }
-                Ok(CoordinatorMsg::Request(t, r)) => pending.push((t, r)),
+                Ok(CoordinatorMsg::Request(r)) => accept(r, &model, &mut pending, &metrics),
                 Ok(CoordinatorMsg::Shutdown) | Err(_) => shutdown = true,
             }
             if pending.is_empty() {
@@ -335,19 +218,51 @@ fn run_loop(
             }
         }
         if !shutdown {
-            let deadline = pending[0].0 + cfg.max_wait;
+            let deadline = pending[0].submitted + cfg.max_wait;
             while !shutdown && pending.len() < cfg.batch_size {
                 let timeout = deadline.saturating_duration_since(Instant::now());
                 match rx.recv_timeout(timeout) {
-                    Ok(CoordinatorMsg::Request(_, r))
-                        if r.input.len() != model.input_len() =>
-                    {
-                        metrics.lock().unwrap().rejected_requests += 1;
+                    Ok(CoordinatorMsg::Request(r)) => {
+                        accept(r, &model, &mut pending, &metrics)
                     }
-                    Ok(CoordinatorMsg::Request(t, r)) => pending.push((t, r)),
                     Ok(CoordinatorMsg::Shutdown) => shutdown = true,
                     Err(mpsc::RecvTimeoutError::Timeout) => break,
                     Err(mpsc::RecvTimeoutError::Disconnected) => shutdown = true,
+                }
+            }
+            // ShedOldest: drain whatever else is already queued so the
+            // bound sees the whole backlog, then shed from the front —
+            // the newest requests are the ones whose clients are still
+            // most likely waiting. Shutdown suspends shedding: every
+            // accepted request is answered through the drain.
+            if let AdmissionPolicy::ShedOldest { max_depth } = shared.policy {
+                loop {
+                    match rx.try_recv() {
+                        Ok(CoordinatorMsg::Request(r)) => {
+                            accept(r, &model, &mut pending, &metrics)
+                        }
+                        Ok(CoordinatorMsg::Shutdown) => {
+                            shutdown = true;
+                            break;
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            shutdown = true;
+                            break;
+                        }
+                    }
+                }
+                if !shutdown {
+                    let excess = pending.len().saturating_sub(max_depth);
+                    if excess > 0 {
+                        util::lock(&metrics).shed_requests += excess as u64;
+                        let depth = pending.len();
+                        for req in pending.drain(..excess) {
+                            let _ = req
+                                .responder
+                                .respond(Err(ServeError::QueueFull { depth, max_depth }));
+                        }
+                    }
                 }
             }
         }
@@ -357,34 +272,93 @@ fn run_loop(
         // work is answered exactly once even when more than one batch
         // was waiting (no loss, no duplication).
         let real = pending.len().min(cfg.batch_size);
-        let batch: Vec<(Instant, InferenceRequest)> = pending.drain(..real).collect();
-        dispatch(&mut backend, &model, &cfg, batch, &metrics, &cache);
+        let batch: Vec<InferenceRequest> = pending.drain(..real).collect();
+        if !batch.is_empty() {
+            dispatch(&mut backend, &model, &cfg, batch, &metrics, &cache, &shared, !shutdown);
+        }
+    }
+
+    // Requests that raced into the channel behind the shutdown message
+    // get a clean `ShuttingDown`, not a silent disconnect.
+    while let Ok(msg) = rx.try_recv() {
+        if let CoordinatorMsg::Request(r) = msg {
+            let _ = r.responder.respond(Err(ServeError::ShuttingDown));
+        }
     }
 
     // Drain-then-join the devices: all queued fleet work is answered
-    // before `Coordinator::shutdown` returns.
-    if let Backend::Fleet(fleet) = backend {
-        fleet.shutdown();
+    // before `NpeService::shutdown` returns. A non-zero return means
+    // device threads died (their in-flight responders were dropped, so
+    // the affected tickets already read `DeviceLost`).
+    match backend {
+        Backend::Fleet(fleet) => fleet.shutdown(),
+        Backend::Single(_) => 0,
     }
 }
 
-/// Execute one formed batch on the active backend.
+/// Accept one incoming request into the pending buffer (defensive shape
+/// re-check; the submit path already validated it).
+fn accept(
+    request: InferenceRequest,
+    model: &ServedModel,
+    pending: &mut Vec<InferenceRequest>,
+    metrics: &Arc<Mutex<CoordinatorMetrics>>,
+) {
+    let expected = model.input_len();
+    if request.input.len() != expected {
+        util::lock(metrics).rejected_requests += 1;
+        let got = request.input.len();
+        let _ = request.responder.respond(Err(ServeError::ShapeMismatch { expected, got }));
+    } else {
+        pending.push(request);
+    }
+}
+
+/// Execute one formed batch on the active backend. `shedding_allowed`
+/// is false during the shutdown drain: every accepted request is
+/// answered, never shed, once shutdown begins.
+#[allow(clippy::too_many_arguments)]
 fn dispatch(
     backend: &mut Backend,
     model: &ServedModel,
     cfg: &BatcherConfig,
-    batch: Vec<(Instant, InferenceRequest)>,
+    batch: Vec<InferenceRequest>,
     metrics: &Arc<Mutex<CoordinatorMetrics>>,
     cache: &Arc<ScheduleCache>,
+    shared: &Arc<ServeShared>,
+    shedding_allowed: bool,
 ) {
     let single = match backend {
         Backend::Fleet(fleet) => {
             // Hand off to the next idle device; the device thread sends
-            // the responses and accounts the metrics.
-            let depth = fleet.submit(FleetJob { requests: batch }) as u64;
-            let mut m = metrics.lock().unwrap();
-            if depth > m.queue_peak {
-                m.queue_peak = depth;
+            // the responses and accounts the metrics. Under ShedOldest
+            // the queue itself stays bounded — except during the
+            // shutdown drain, which must answer everything.
+            let job = FleetJob { requests: batch };
+            let (depth, sheddable) = match shared.policy {
+                AdmissionPolicy::ShedOldest { max_depth } if shedding_allowed => {
+                    let (depth, queued, victims) = fleet.submit_shedding(job, max_depth);
+                    (depth, Some((queued, victims, max_depth)))
+                }
+                _ => (fleet.submit(job), None),
+            };
+            let shed: usize = sheddable
+                .as_ref()
+                .map_or(0, |(_, victims, _)| victims.iter().map(FleetJob::len).sum());
+            // Metric before resolution: a client must never observe a
+            // shed ticket before `shed_requests` reflects it.
+            {
+                let mut m = util::lock(metrics);
+                m.shed_requests += shed as u64;
+                if depth as u64 > m.queue_peak {
+                    m.queue_peak = depth as u64;
+                }
+            }
+            if let Some((queued, victims, max_depth)) = sheddable {
+                let depth_seen = queued + shed;
+                for v in victims {
+                    v.resolve_err(&ServeError::QueueFull { depth: depth_seen, max_depth });
+                }
             }
             return;
         }
@@ -392,7 +366,7 @@ fn dispatch(
     };
 
     // Form the inputs (pad to the artifact batch if cross-verifying).
-    let mut inputs: Vec<Vec<i16>> = batch.iter().map(|(_, r)| r.input.clone()).collect();
+    let mut inputs: Vec<Vec<i16>> = batch.iter().map(|r| r.input.clone()).collect();
     let padded_to = if single.runtime.is_some() {
         while inputs.len() < cfg.batch_size {
             inputs.push(vec![0; model.input_len()]);
@@ -408,18 +382,19 @@ fn dispatch(
         ServedModel::Graph(g) => single.graph_engine.execute(g, &inputs),
     };
 
-    // Cross-verify on the PJRT path when available (MLP artifacts
-    // only — the conv path is covered by the Rust reference model).
+    // Cross-verify on the PJRT path when available (MLP artifacts only —
+    // the conv path is covered by the Rust reference model). A numeric
+    // mismatch is a counted, loud metric rather than a worker panic: the
+    // batch is answered unverified and `verify_mismatches` flags the bug.
+    let mut verify_mismatch = false;
     let verified = if let (Some((rt, artifact)), ServedModel::Mlp(mlp)) =
         (single.runtime.as_ref(), model)
     {
         match rt.execute(artifact, mlp, &inputs) {
-            Ok(pjrt_out) => {
-                assert_eq!(
-                    report.outputs, pjrt_out,
-                    "NPE simulator and PJRT disagree — numeric bug"
-                );
-                true
+            Ok(pjrt_out) if pjrt_out == report.outputs => true,
+            Ok(_) => {
+                verify_mismatch = true;
+                false
             }
             Err(_) => false,
         }
@@ -428,19 +403,50 @@ fn dispatch(
     };
 
     {
-        let mut m = metrics.lock().unwrap();
+        let mut m = util::lock(metrics);
         m.account_batch(0, &batch, &report, padded_to, verified, cache.stats());
+        if verify_mismatch {
+            m.verify_mismatches += 1;
+        }
     }
 
+    respond_batch(batch, &report, padded_to, verified, metrics);
+}
+
+/// Send every request in an executed batch its response. Shared by the
+/// single-NPE dispatch and the fleet device threads so the hung-up
+/// client and short-output paths can never diverge between them.
+pub(crate) fn respond_batch(
+    batch: Vec<InferenceRequest>,
+    report: &DataflowReport,
+    padded_to: usize,
+    verified: bool,
+    metrics: &Arc<Mutex<CoordinatorMetrics>>,
+) {
     let per_req_energy = report.energy.total_pj() / padded_to.max(1) as f64;
-    for (i, (t0, req)) in batch.into_iter().enumerate() {
-        let _ = req.resp.send(InferenceResponse {
-            output: report.outputs[i].clone(),
-            npe_time_ns: report.time_ns,
-            npe_energy_pj: per_req_energy,
-            wall: t0.elapsed(),
-            verified,
-        });
+    let mut dropped = 0u64;
+    for (i, req) in batch.into_iter().enumerate() {
+        let wall = req.submitted.elapsed();
+        // A short output vector would be an engine bug; it resolves the
+        // tail tickets as DeviceLost instead of indexing out of bounds.
+        let result = match report.outputs.get(i) {
+            Some(output) => Ok(InferenceResponse {
+                output: output.clone(),
+                npe_time_ns: report.time_ns,
+                npe_energy_pj: per_req_energy,
+                wall,
+                verified,
+            }),
+            None => Err(ServeError::DeviceLost),
+        };
+        if req.responder.respond(result).is_err() {
+            // The client dropped its ticket before the answer arrived —
+            // counted, not fatal, and definitely not silent.
+            dropped += 1;
+        }
+    }
+    if dropped > 0 {
+        util::lock(metrics).responses_dropped += dropped;
     }
 }
 
@@ -448,26 +454,16 @@ fn dispatch(
 mod tests {
     use super::*;
     use crate::model::MlpTopology;
+    use crate::serve::NpeService;
 
     fn mlp() -> QuantizedMlp {
         QuantizedMlp::synthesize(MlpTopology::new(vec![16, 12, 4]), 77)
     }
 
-    #[test]
-    fn serves_single_request() {
-        let m = mlp();
-        let expect = m.forward_batch(&m.synth_inputs(1, 5));
-        let coord = Coordinator::spawn(
-            m.clone(),
-            NpeGeometry::WALKTHROUGH,
-            BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(5) },
-            None,
-        );
-        let rx = coord.submit(m.synth_inputs(1, 5)[0].clone());
-        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert_eq!(resp.output, expect[0]);
-        assert!(resp.npe_time_ns > 0.0);
-        coord.shutdown().unwrap();
+    fn builder(m: &QuantizedMlp, batch: usize, wait: Duration) -> crate::serve::ServeBuilder {
+        NpeService::builder(m.clone())
+            .geometry(NpeGeometry::WALKTHROUGH)
+            .batcher(BatcherConfig { batch_size: batch, max_wait: wait })
     }
 
     #[test]
@@ -475,24 +471,19 @@ mod tests {
         let m = mlp();
         let inputs = m.synth_inputs(8, 9);
         let expect = m.forward_batch(&inputs);
-        let coord = Coordinator::spawn(
-            m.clone(),
-            NpeGeometry::WALKTHROUGH,
-            BatcherConfig { batch_size: 8, max_wait: Duration::from_millis(50) },
-            None,
-        );
-        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
-        for (rx, want) in rxs.into_iter().zip(expect) {
-            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let svc = builder(&m, 8, Duration::from_millis(50)).build().unwrap();
+        let tickets: Vec<_> =
+            inputs.iter().map(|x| svc.submit(x.clone()).expect("admitted")).collect();
+        for (t, want) in tickets.into_iter().zip(expect) {
+            let resp = t.wait_timeout(Duration::from_secs(5)).unwrap();
             assert_eq!(resp.output, want);
         }
-        let metrics = coord.metrics.lock().unwrap().clone();
+        let metrics = svc.metrics();
         assert_eq!(metrics.requests, 8);
         assert!(metrics.batches <= 8, "requests were batched");
         assert_eq!(metrics.latencies_ns.len(), 8, "one latency sample per request");
         assert!(metrics.p99_us() >= metrics.p50_us());
-        drop(metrics);
-        coord.shutdown().unwrap();
+        svc.shutdown().unwrap();
     }
 
     #[test]
@@ -504,30 +495,25 @@ mod tests {
         let m = mlp();
         let inputs = m.synth_inputs(3, 21);
         let expect = m.forward_batch(&inputs);
-        let coord = Coordinator::spawn(
-            m.clone(),
-            NpeGeometry::WALKTHROUGH,
-            BatcherConfig { batch_size: 64, max_wait: Duration::from_millis(200) },
-            None,
-        );
+        let svc = builder(&m, 64, Duration::from_millis(200)).build().unwrap();
         let t0 = Instant::now();
-        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
-        for (rx, want) in rxs.into_iter().zip(expect) {
+        let tickets: Vec<_> =
+            inputs.iter().map(|x| svc.submit(x.clone()).expect("admitted")).collect();
+        for (t, want) in tickets.into_iter().zip(expect) {
             // Responses must arrive via the deadline path (the batch can
             // never fill, and shutdown has not been requested).
-            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            let resp = t.wait_timeout(Duration::from_secs(10)).unwrap();
             assert_eq!(resp.output, want);
         }
         assert!(
             t0.elapsed() >= Duration::from_millis(100),
             "responses should be held until the deadline"
         );
-        let metrics = coord.metrics.lock().unwrap().clone();
+        let metrics = svc.metrics();
         assert_eq!(metrics.requests, 3);
         assert_eq!(metrics.batches, 1, "one partial batch, flushed once");
         assert_eq!(metrics.padded_slots, 0, "no artifact, no padding");
-        drop(metrics);
-        coord.shutdown().unwrap();
+        svc.shutdown().unwrap();
     }
 
     #[test]
@@ -549,63 +535,29 @@ mod tests {
         );
         let inputs = cnn.synth_inputs(5, 3);
         let expect = cnn.forward_batch(&inputs);
-        let coord = Coordinator::spawn_cnn(
-            cnn.clone(),
-            NpeGeometry::WALKTHROUGH,
-            BatcherConfig { batch_size: 5, max_wait: Duration::from_millis(50) },
-        );
-        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
-        for (rx, want) in rxs.into_iter().zip(expect) {
-            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let svc = NpeService::builder(cnn)
+            .geometry(NpeGeometry::WALKTHROUGH)
+            .batcher(BatcherConfig { batch_size: 5, max_wait: Duration::from_millis(50) })
+            .build()
+            .unwrap();
+        let tickets: Vec<_> =
+            inputs.iter().map(|x| svc.submit(x.clone()).expect("admitted")).collect();
+        for (t, want) in tickets.into_iter().zip(expect) {
+            let resp = t.wait_timeout(Duration::from_secs(10)).unwrap();
             assert_eq!(resp.output, want, "served CNN output == reference");
             assert!(resp.npe_time_ns > 0.0);
         }
-        let metrics = coord.metrics.lock().unwrap().clone();
-        assert_eq!(metrics.requests, 5);
-        drop(metrics);
-        coord.shutdown().unwrap();
-    }
-
-    #[test]
-    fn wrong_length_request_is_rejected_not_fatal() {
-        // A malformed request must be dropped (client sees an immediate
-        // disconnect) while the coordinator keeps serving valid traffic.
-        let m = mlp();
-        let coord = Coordinator::spawn(
-            m.clone(),
-            NpeGeometry::WALKTHROUGH,
-            BatcherConfig { batch_size: 2, max_wait: Duration::from_millis(10) },
-            None,
-        );
-        let bad = coord.submit(vec![1; 3]); // expects 16 features
-        assert!(
-            bad.recv_timeout(Duration::from_secs(5)).is_err(),
-            "malformed request gets a disconnect, not a response"
-        );
-        let good_input = m.synth_inputs(1, 5)[0].clone();
-        let expect = m.forward_batch(&[good_input.clone()]);
-        let good = coord.submit(good_input);
-        let resp = good.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert_eq!(resp.output, expect[0], "service survives the bad request");
-        let metrics = coord.metrics.lock().unwrap().clone();
-        assert_eq!(metrics.rejected_requests, 1, "rejection is observable");
-        assert_eq!(metrics.requests, 1, "only the valid request dispatched");
-        drop(metrics);
-        coord.shutdown().unwrap();
+        assert_eq!(svc.metrics().requests, 5);
+        svc.shutdown().unwrap();
     }
 
     #[test]
     fn flush_on_shutdown() {
         let m = mlp();
-        let coord = Coordinator::spawn(
-            m.clone(),
-            NpeGeometry::WALKTHROUGH,
-            BatcherConfig { batch_size: 64, max_wait: Duration::from_secs(10) },
-            None,
-        );
-        let rx = coord.submit(vec![1; 16]);
-        coord.shutdown().unwrap();
-        assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
+        let svc = builder(&m, 64, Duration::from_secs(10)).build().unwrap();
+        let ticket = svc.submit(vec![1; 16]).expect("admitted");
+        svc.shutdown().unwrap();
+        assert!(ticket.wait_timeout(Duration::from_secs(1)).is_ok());
     }
 
     #[test]
@@ -616,63 +568,60 @@ mod tests {
         let m = mlp();
         let inputs = m.synth_inputs(10, 33);
         let expect = m.forward_batch(&inputs);
-        let coord = Coordinator::spawn(
-            m.clone(),
-            NpeGeometry::WALKTHROUGH,
-            BatcherConfig { batch_size: 4, max_wait: Duration::from_secs(10) },
-            None,
-        );
-        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
-        coord.shutdown().unwrap();
-        for (rx, want) in rxs.into_iter().zip(expect) {
-            let resp = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        let svc = builder(&m, 4, Duration::from_secs(10)).build().unwrap();
+        let tickets: Vec<_> =
+            inputs.iter().map(|x| svc.submit(x.clone()).expect("admitted")).collect();
+        svc.shutdown().unwrap();
+        for (t, want) in tickets.into_iter().zip(expect) {
+            let resp = t.wait_timeout(Duration::from_secs(1)).unwrap();
             assert_eq!(resp.output, want);
-            assert!(
-                rx.recv_timeout(Duration::from_millis(50)).is_err(),
-                "exactly one response per request"
-            );
+            // One response per request: the channel must now be closed
+            // with nothing further in it.
+            assert!(matches!(
+                t.wait_timeout(Duration::from_millis(50)),
+                Err(ServeError::AlreadyAnswered)
+            ));
         }
     }
 
     #[test]
-    fn parallel_backend_coordinator_serves_bit_exactly() {
+    fn parallel_backend_serves_bit_exactly() {
         let m = mlp();
         let inputs = m.synth_inputs(6, 51);
         let expect = m.forward_batch(&inputs);
-        let coord = Coordinator::spawn_model_on(
-            ServedModel::Mlp(m.clone()),
-            NpeGeometry::WALKTHROUGH,
-            BackendKind::Parallel,
-            BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(5) },
-            None,
-        );
-        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
-        for (rx, want) in rxs.into_iter().zip(expect) {
-            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let svc = builder(&m, 3, Duration::from_millis(5))
+            .backend(BackendKind::Parallel)
+            .build()
+            .unwrap();
+        let tickets: Vec<_> =
+            inputs.iter().map(|x| svc.submit(x.clone()).expect("admitted")).collect();
+        for (t, want) in tickets.into_iter().zip(expect) {
+            let resp = t.wait_timeout(Duration::from_secs(10)).unwrap();
             assert_eq!(resp.output, want, "parallel backend == reference");
         }
-        coord.shutdown().unwrap();
+        svc.shutdown().unwrap();
     }
 
     #[test]
-    fn fleet_coordinator_serves_and_accounts() {
+    fn fleet_service_serves_and_accounts() {
         let m = mlp();
         let inputs = m.synth_inputs(12, 41);
         let expect = m.forward_batch(&inputs);
-        let coord = Coordinator::spawn_fleet(
-            ServedModel::Mlp(m.clone()),
-            vec![NpeGeometry::WALKTHROUGH, NpeGeometry::PAPER],
-            BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(5) },
-        );
-        let client = coord.client();
-        let rxs: Vec<_> = inputs.iter().map(|x| client.submit(x.clone())).collect();
-        for (rx, want) in rxs.into_iter().zip(expect) {
-            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let svc = NpeService::builder(m.clone())
+            .devices([NpeGeometry::WALKTHROUGH, NpeGeometry::PAPER])
+            .batcher(BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(5) })
+            .build()
+            .unwrap();
+        let client = svc.client();
+        let tickets: Vec<_> =
+            inputs.iter().map(|x| client.submit(x.clone()).expect("admitted")).collect();
+        for (t, want) in tickets.into_iter().zip(expect) {
+            let resp = t.wait_timeout(Duration::from_secs(10)).unwrap();
             assert_eq!(resp.output, want, "fleet response == reference");
         }
-        let metrics_handle = Arc::clone(&coord.metrics);
-        coord.shutdown().unwrap();
-        let metrics = metrics_handle.lock().unwrap().clone();
+        let metrics_handle = svc.metrics_handle();
+        svc.shutdown().unwrap();
+        let metrics = util::lock(&metrics_handle).clone();
         assert_eq!(metrics.requests, 12);
         assert_eq!(metrics.devices.len(), 2);
         assert_eq!(metrics.devices.iter().map(|d| d.requests).sum::<u64>(), 12);

@@ -1,14 +1,16 @@
 //! One simulated NPE device: a long-lived engine handle pulling batches
 //! off the fleet queue until shutdown-drain completes.
 
-use super::queue::{FleetJob, FleetQueue};
+use super::queue::FleetQueue;
 use super::DeviceSpec;
 use crate::conv::CnnEngine;
-use crate::coordinator::{CoordinatorMetrics, InferenceResponse, ServedModel};
+use crate::coordinator::{respond_batch, CoordinatorMetrics, ServedModel};
 use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
 use crate::exec::BackendKind;
 use crate::graph::GraphEngine;
 use crate::mapper::{NpeGeometry, ScheduleCache};
+use crate::serve::ServeError;
+use crate::util;
 use std::sync::{Arc, Mutex};
 
 /// The per-device engine handle — constructed once per device thread and
@@ -54,13 +56,15 @@ impl DeviceEngine {
     }
 
     /// Execute one batch. The engine/model pairing is fixed at
-    /// construction, so a mismatch is a fleet-wiring bug.
-    pub fn execute(&mut self, model: &ServedModel, inputs: &[Vec<i16>]) -> DataflowReport {
+    /// construction, so `None` (a mismatch) is a fleet-wiring bug — the
+    /// caller resolves the affected tickets with `DeviceLost` instead of
+    /// panicking the device thread.
+    pub fn execute(&mut self, model: &ServedModel, inputs: &[Vec<i16>]) -> Option<DataflowReport> {
         match (self, model) {
-            (DeviceEngine::Mlp(e), ServedModel::Mlp(m)) => e.execute(m, inputs),
-            (DeviceEngine::Cnn(e), ServedModel::Cnn(c)) => e.execute(c, inputs),
-            (DeviceEngine::Graph(e), ServedModel::Graph(g)) => e.execute(g, inputs),
-            _ => unreachable!("device engine does not match served model"),
+            (DeviceEngine::Mlp(e), ServedModel::Mlp(m)) => Some(e.execute(m, inputs)),
+            (DeviceEngine::Cnn(e), ServedModel::Cnn(c)) => Some(e.execute(c, inputs)),
+            (DeviceEngine::Graph(e), ServedModel::Graph(g)) => Some(e.execute(g, inputs)),
+            _ => None,
         }
     }
 }
@@ -82,27 +86,21 @@ pub(crate) fn device_main(
     let mut engine =
         DeviceEngine::for_model_on(&model, spec.geometry, Arc::clone(&cache), spec.backend);
     while let Some(job) = queue.pop() {
-        let inputs: Vec<Vec<i16>> = job.requests.iter().map(|(_, r)| r.input.clone()).collect();
-        let report = engine.execute(&model, &inputs);
+        let inputs: Vec<Vec<i16>> = job.requests.iter().map(|r| r.input.clone()).collect();
+        let Some(report) = engine.execute(&model, &inputs) else {
+            // Engine/model mismatch: impossible by construction, but a
+            // typed error beats a dead device thread.
+            job.resolve_err(&ServeError::DeviceLost);
+            continue;
+        };
         let n = job.requests.len();
-        let per_req_energy = report.energy.total_pj() / n.max(1) as f64;
 
         // No padding and no PJRT verification on the fleet path.
         {
-            let mut m = metrics.lock().unwrap();
+            let mut m = util::lock(&metrics);
             m.account_batch(idx, &job.requests, &report, n, false, cache.stats());
         }
-
-        for (i, (t0, req)) in job.requests.into_iter().enumerate() {
-            let _ = req.resp.send(InferenceResponse {
-                output: report.outputs[i].clone(),
-                npe_time_ns: report.time_ns,
-                npe_energy_pj: per_req_energy,
-                wall: t0.elapsed(),
-                // The PJRT cross-check runs on the single-NPE path only.
-                verified: false,
-            });
-        }
+        respond_batch(job.requests, &report, n, false, &metrics);
     }
 }
 
@@ -119,8 +117,22 @@ mod tests {
         let mut dev = DeviceEngine::for_model(&model, NpeGeometry::WALKTHROUGH, cache);
         assert!(matches!(dev, DeviceEngine::Mlp(_)));
         let inputs = mlp.synth_inputs(2, 5);
-        let report = dev.execute(&model, &inputs);
+        let report = dev.execute(&model, &inputs).expect("matched pairing");
         assert_eq!(report.outputs, mlp.forward_batch(&inputs));
+    }
+
+    #[test]
+    fn mismatched_pairing_is_none_not_a_panic() {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![8, 6, 2]), 3);
+        let mlp_model = ServedModel::Mlp(mlp.clone());
+        let mut dev =
+            DeviceEngine::for_model(&mlp_model, NpeGeometry::WALKTHROUGH, ScheduleCache::shared());
+        let graph = crate::graph::QuantizedGraph::synthesize(
+            MlpTopology::new(vec![8, 6, 2]).into_graph(),
+            3,
+        );
+        let graph_model = ServedModel::Graph(graph);
+        assert!(dev.execute(&graph_model, &mlp.synth_inputs(1, 1)).is_none());
     }
 
     #[test]
@@ -137,7 +149,7 @@ mod tests {
                 Arc::clone(&cache),
                 backend,
             );
-            let report = dev.execute(&model, &inputs);
+            let report = dev.execute(&model, &inputs).expect("matched pairing");
             assert_eq!(report.outputs, expect, "{}", backend.name());
         }
     }

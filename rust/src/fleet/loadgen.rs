@@ -14,8 +14,9 @@
 //! submission never waits for responses, so a slow fleet shows up as
 //! queueing delay (latency percentiles), not as reduced offered load.
 
-use crate::coordinator::{Coordinator, ServedModel};
+use crate::coordinator::ServedModel;
 use crate::model::mlp::FEATURE_BOUND;
+use crate::serve::{NpeService, ServeError, Ticket};
 use crate::util::SplitMix64;
 use std::time::{Duration, Instant};
 
@@ -65,27 +66,43 @@ pub fn poisson_arrivals(model: &ServedModel, cfg: &LoadGenConfig) -> Vec<Arrival
         .collect()
 }
 
-/// Drive `arrivals` through a coordinator open-loop: submit each request
-/// at its scheduled offset, then wait for every response. Returns the
-/// responses in submission order (`None` where the fleet never answered
-/// within `timeout` — the callers assert there are no `None`s).
+/// Submit each arrival at its scheduled offset (open-loop pacing: the
+/// submit stream never waits for responses) and return the per-arrival
+/// submit outcome — `Err` where admission control refused the request.
+/// This is the one copy of the open-loop timing contract; every
+/// open-loop driver (benches, e2e suites, the admission sweep) builds
+/// on it.
+pub fn submit_open_loop(
+    service: &NpeService,
+    arrivals: &[Arrival],
+) -> Vec<Result<Ticket, ServeError>> {
+    let t0 = Instant::now();
+    arrivals
+        .iter()
+        .map(|a| {
+            let target = Duration::from_nanos(a.at_ns);
+            let elapsed = t0.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            service.submit(a.input.clone())
+        })
+        .collect()
+}
+
+/// Drive `arrivals` through a service open-loop: submit each request at
+/// its scheduled offset, then wait for every response. Returns the
+/// responses in submission order (`None` where the request was refused
+/// by admission control or never answered within `timeout` — callers
+/// running without an admission bound assert there are no `None`s).
 pub fn run_open_loop(
-    coord: &Coordinator,
+    service: &NpeService,
     arrivals: &[Arrival],
     timeout: Duration,
 ) -> Vec<Option<Vec<i16>>> {
-    let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(arrivals.len());
-    for a in arrivals {
-        let target = Duration::from_nanos(a.at_ns);
-        let elapsed = t0.elapsed();
-        if target > elapsed {
-            std::thread::sleep(target - elapsed);
-        }
-        rxs.push(coord.submit(a.input.clone()));
-    }
-    rxs.into_iter()
-        .map(|rx| rx.recv_timeout(timeout).ok().map(|resp| resp.output))
+    submit_open_loop(service, arrivals)
+        .into_iter()
+        .map(|t| t.ok().and_then(|t| t.wait_timeout(timeout).ok().map(|resp| resp.output)))
         .collect()
 }
 

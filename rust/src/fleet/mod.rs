@@ -8,17 +8,17 @@
 //! coordinator's batcher:
 //!
 //! ```text
-//! clients → Coordinator (batcher) → ScheduleCache ┐
-//!                │                                 │ (shared Algorithm-1 memo)
-//!                └─► FleetQueue ─► device 0 ◄──────┤
-//!                              ├─► device 1 ◄──────┤
-//!                              ├─► …               │
-//!                              └─► device N-1 ◄────┘
+//! clients → NpeService (batcher) → ScheduleCache ┐
+//!                │                                │ (shared Algorithm-1 memo)
+//!                └─► FleetQueue ─► device 0 ◄─────┤
+//!                              ├─► device 1 ◄─────┤
+//!                              ├─► …              │
+//!                              └─► device N-1 ◄───┘
 //! ```
 //!
 //! * [`queue`] — the shared MPMC work queue (idle devices pull, which is
 //!   least-loaded dispatch by construction) with drain-on-close
-//!   shutdown;
+//!   shutdown and admission-aware bounded pushes;
 //! * [`device`] — the long-lived per-device engine handle and thread
 //!   body (responses, metrics, cache accounting);
 //! * [`loadgen`] — the deterministic open-loop Poisson load generator
@@ -27,18 +27,23 @@
 //! Scheduling work is shared through [`crate::mapper::ScheduleCache`]:
 //! after first sight of a `(geometry, Γ)` shape — by *any* device — no
 //! device ever runs Algorithm 1 for it again.
+//!
+//! Fleets are constructed exclusively through
+//! [`crate::serve::NpeService::builder`]'s `.devices([..])` knob — the
+//! spawn functions here are crate-internal plumbing.
 
 pub mod device;
 pub mod loadgen;
 pub mod queue;
 
 pub use device::DeviceEngine;
-pub use loadgen::{poisson_arrivals, run_open_loop, Arrival, LoadGenConfig};
+pub use loadgen::{poisson_arrivals, run_open_loop, submit_open_loop, Arrival, LoadGenConfig};
 pub use queue::{FleetJob, FleetQueue};
 
 use crate::coordinator::{CoordinatorMetrics, DeviceMetrics, ServedModel};
 use crate::exec::BackendKind;
 use crate::mapper::{NpeGeometry, ScheduleCache};
+use crate::util;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -71,29 +76,17 @@ pub struct Fleet {
 }
 
 impl Fleet {
-    /// Spawn one device thread per geometry on the default backend
-    /// (see [`Fleet::spawn_on`]).
-    pub fn spawn(
-        model: Arc<ServedModel>,
-        geometries: &[NpeGeometry],
-        cache: Arc<ScheduleCache>,
-        metrics: Arc<Mutex<CoordinatorMetrics>>,
-    ) -> Self {
-        let specs: Vec<DeviceSpec> = geometries.iter().map(|&g| g.into()).collect();
-        Self::spawn_on(model, &specs, cache, metrics)
-    }
-
     /// Spawn one device thread per [`DeviceSpec`], all pulling from one
     /// queue and sharing one schedule cache. Registers one metrics lane
-    /// per device (replacing any existing lanes).
-    pub fn spawn_on(
+    /// per device (replacing any existing lanes). The builder validates
+    /// that `specs` is non-empty before this runs.
+    pub(crate) fn spawn_on(
         model: Arc<ServedModel>,
         specs: &[DeviceSpec],
         cache: Arc<ScheduleCache>,
         metrics: Arc<Mutex<CoordinatorMetrics>>,
     ) -> Self {
-        assert!(!specs.is_empty(), "a fleet needs at least one device");
-        metrics.lock().unwrap().devices = specs
+        util::lock(&metrics).devices = specs
             .iter()
             .map(|s| DeviceMetrics::for_geometry(s.geometry))
             .collect();
@@ -116,8 +109,21 @@ impl Fleet {
 
     /// Hand a batch to the next idle device. Returns the queue depth
     /// after the push (for the queue-peak metric).
-    pub fn submit(&self, job: FleetJob) -> usize {
+    pub(crate) fn submit(&self, job: FleetJob) -> usize {
         self.queue.push(job)
+    }
+
+    /// Hand a batch to the queue under `ShedOldest` admission: the
+    /// oldest queued jobs beyond `max_requests` requests are evicted and
+    /// returned **unresolved** (see [`FleetQueue::push_shedding`] for
+    /// the metric-before-resolve ordering contract). Returns
+    /// `(depth, queued_requests_after, victims)`.
+    pub(crate) fn submit_shedding(
+        &self,
+        job: FleetJob,
+        max_requests: usize,
+    ) -> (usize, usize, Vec<FleetJob>) {
+        self.queue.push_shedding(job, max_requests)
     }
 
     /// Number of devices in the fleet.
@@ -128,29 +134,32 @@ impl Fleet {
     /// Close the queue and join every device after the drain: all work
     /// submitted before this call is executed and answered.
     ///
-    /// Panics if any device thread panicked — a dead device has dropped
-    /// a popped job, so the "every accepted request is answered" promise
-    /// is broken and must surface (through the coordinator thread this
-    /// becomes `Coordinator::shutdown`'s error, not a silent `Ok`).
-    pub fn shutdown(self) {
+    /// Returns the number of device threads that died. A dead device has
+    /// dropped a popped job — its requests' tickets already resolved
+    /// `DeviceLost` via the responder drops — and the coordinator
+    /// surfaces the count as `NpeService::shutdown`'s error instead of a
+    /// silent `Ok`.
+    pub(crate) fn shutdown(self) -> usize {
         self.queue.close();
-        let mut dead = 0usize;
-        for d in self.devices {
-            if d.join().is_err() {
-                dead += 1;
-            }
-        }
-        assert!(dead == 0, "{dead} fleet device(s) panicked");
+        self.devices.into_iter().map(JoinHandle::join).filter(Result::is_err).count()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::InferenceRequest;
     use crate::model::{MlpTopology, QuantizedMlp};
-    use std::sync::mpsc;
-    use std::time::{Duration, Instant};
+    use crate::serve::test_support::detached_request;
+    use std::time::Duration;
+
+    fn spawn_specs(
+        model: &Arc<ServedModel>,
+        specs: &[DeviceSpec],
+        cache: &Arc<ScheduleCache>,
+        metrics: &Arc<Mutex<CoordinatorMetrics>>,
+    ) -> Fleet {
+        Fleet::spawn_on(Arc::clone(model), specs, Arc::clone(cache), Arc::clone(metrics))
+    }
 
     #[test]
     fn fleet_executes_and_drains_on_shutdown() {
@@ -158,32 +167,29 @@ mod tests {
         let model = Arc::new(ServedModel::Mlp(mlp.clone()));
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
         let cache = ScheduleCache::shared();
-        let fleet = Fleet::spawn(
-            Arc::clone(&model),
-            &[NpeGeometry::WALKTHROUGH, NpeGeometry::PAPER],
-            Arc::clone(&cache),
-            Arc::clone(&metrics),
-        );
+        let specs: Vec<DeviceSpec> =
+            vec![NpeGeometry::WALKTHROUGH.into(), NpeGeometry::PAPER.into()];
+        let fleet = spawn_specs(&model, &specs, &cache, &metrics);
         assert_eq!(fleet.size(), 2);
 
         let inputs = mlp.synth_inputs(6, 4);
         let expect = mlp.forward_batch(&inputs);
-        let mut rxs = Vec::new();
+        let mut tickets = Vec::new();
         for chunk in inputs.chunks(2) {
             let requests = chunk
                 .iter()
                 .map(|x| {
-                    let (resp, rx) = mpsc::channel();
-                    rxs.push(rx);
-                    (Instant::now(), InferenceRequest { input: x.clone(), resp })
+                    let (req, ticket) = detached_request(x.clone());
+                    tickets.push(ticket);
+                    req
                 })
                 .collect();
             fleet.submit(FleetJob { requests });
         }
         // Shut down immediately: the drain must still answer everything.
-        fleet.shutdown();
-        for (rx, want) in rxs.into_iter().zip(expect) {
-            let got = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(fleet.shutdown(), 0, "no device died");
+        for (t, want) in tickets.into_iter().zip(expect) {
+            let got = t.wait_timeout(Duration::from_secs(10)).unwrap();
             assert_eq!(got.output, want, "fleet output == reference, across geometries");
         }
         let m = metrics.lock().unwrap();
@@ -204,34 +210,30 @@ mod tests {
         let model = Arc::new(ServedModel::Mlp(mlp.clone()));
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
         let cache = ScheduleCache::shared();
-        let fleet = Fleet::spawn_on(
-            Arc::clone(&model),
-            &[
-                DeviceSpec::new(NpeGeometry::WALKTHROUGH, BackendKind::BitExact),
-                DeviceSpec::new(NpeGeometry::PAPER, BackendKind::Fast),
-                DeviceSpec::new(NpeGeometry::PAPER, BackendKind::Parallel),
-            ],
-            Arc::clone(&cache),
-            Arc::clone(&metrics),
-        );
+        let specs = [
+            DeviceSpec::new(NpeGeometry::WALKTHROUGH, BackendKind::BitExact),
+            DeviceSpec::new(NpeGeometry::PAPER, BackendKind::Fast),
+            DeviceSpec::new(NpeGeometry::PAPER, BackendKind::Parallel),
+        ];
+        let fleet = spawn_specs(&model, &specs, &cache, &metrics);
         assert_eq!(fleet.size(), 3);
         let inputs = mlp.synth_inputs(9, 5);
         let expect = mlp.forward_batch(&inputs);
-        let mut rxs = Vec::new();
+        let mut tickets = Vec::new();
         for chunk in inputs.chunks(3) {
             let requests = chunk
                 .iter()
                 .map(|x| {
-                    let (resp, rx) = mpsc::channel();
-                    rxs.push(rx);
-                    (Instant::now(), InferenceRequest { input: x.clone(), resp })
+                    let (req, ticket) = detached_request(x.clone());
+                    tickets.push(ticket);
+                    req
                 })
                 .collect();
             fleet.submit(FleetJob { requests });
         }
-        fleet.shutdown();
-        for (rx, want) in rxs.into_iter().zip(expect) {
-            let got = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(fleet.shutdown(), 0);
+        for (t, want) in tickets.into_iter().zip(expect) {
+            let got = t.wait_timeout(Duration::from_secs(10)).unwrap();
             assert_eq!(got.output, want, "bit-exact across backends");
         }
         assert_eq!(metrics.lock().unwrap().requests, 9);

@@ -9,17 +9,23 @@
 //! Shutdown semantics are drain-then-exit: [`FleetQueue::close`] stops
 //! producers, but consumers keep popping until the queue is empty, so no
 //! accepted batch is ever dropped (the e2e suite asserts exactly-once
-//! delivery through shutdown).
+//! delivery through shutdown). A job pushed *after* close — a sequencing
+//! race, not a legal state — resolves every one of its tickets with
+//! `ShuttingDown` instead of panicking the producer.
+//!
+//! Under `AdmissionPolicy::ShedOldest` the coordinator pushes through
+//! [`FleetQueue::push_shedding`], which bounds the queued-request count
+//! by resolving the *oldest* queued jobs with `QueueFull`.
 
 use crate::coordinator::InferenceRequest;
+use crate::serve::ServeError;
+use crate::util;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
 
-/// One batcher-formed unit of work: the requests riding in the batch,
-/// each with its submit timestamp (for wall-latency accounting).
+/// One batcher-formed unit of work: the requests riding in the batch.
 pub struct FleetJob {
-    pub requests: Vec<(Instant, InferenceRequest)>,
+    pub requests: Vec<InferenceRequest>,
 }
 
 impl FleetJob {
@@ -31,11 +37,20 @@ impl FleetJob {
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
+
+    /// Resolve every ticket in the job with `err` (shed / shutdown).
+    pub(crate) fn resolve_err(self, err: &ServeError) {
+        for req in self.requests {
+            let _ = req.responder.respond(Err(err.clone()));
+        }
+    }
 }
 
 #[derive(Default)]
 struct QueueState {
     jobs: VecDeque<FleetJob>,
+    /// Total requests across `jobs` (the unit admission bounds apply to).
+    queued_requests: usize,
     closed: bool,
 }
 
@@ -54,60 +69,98 @@ impl FleetQueue {
     }
 
     /// Enqueue a job and wake one idle device. Returns the queue depth
-    /// right after the push (the coordinator folds it into the
-    /// queue-peak metric). Panics if the queue is already closed — the
-    /// coordinator closes it only after the batcher loop has flushed its
-    /// last job, so a push-after-close is a sequencing bug, not a
-    /// runtime condition.
+    /// (in jobs) right after the push — the coordinator folds it into
+    /// the queue-peak metric. Pushing after close resolves the job's
+    /// tickets with `ShuttingDown` and returns 0.
     pub fn push(&self, job: FleetJob) -> usize {
-        let mut s = self.state.lock().unwrap();
-        assert!(!s.closed, "push after close");
+        let mut s = util::lock(&self.state);
+        if s.closed {
+            drop(s);
+            job.resolve_err(&ServeError::ShuttingDown);
+            return 0;
+        }
+        s.queued_requests += job.len();
         s.jobs.push_back(job);
         self.ready.notify_one();
         s.jobs.len()
     }
 
+    /// Enqueue a job, then shed the *oldest* queued jobs until at most
+    /// `max_requests` requests are waiting (the newest job always
+    /// survives — newest-wins is the point of `ShedOldest`). Returns
+    /// `(depth_in_jobs, queued_requests_after, victims)`; the victims
+    /// are **unresolved** — the caller accounts the shed metric first
+    /// and only then resolves each ticket with `QueueFull`, so a client
+    /// can never observe a shed ticket before the metric reflects it.
+    pub fn push_shedding(
+        &self,
+        job: FleetJob,
+        max_requests: usize,
+    ) -> (usize, usize, Vec<FleetJob>) {
+        let mut s = util::lock(&self.state);
+        if s.closed {
+            drop(s);
+            job.resolve_err(&ServeError::ShuttingDown);
+            return (0, 0, Vec::new());
+        }
+        s.queued_requests += job.len();
+        s.jobs.push_back(job);
+        let mut victims = Vec::new();
+        while s.queued_requests > max_requests && s.jobs.len() > 1 {
+            if let Some(old) = s.jobs.pop_front() {
+                s.queued_requests -= old.len();
+                victims.push(old);
+            }
+        }
+        let depth = s.jobs.len();
+        let queued = s.queued_requests;
+        self.ready.notify_one();
+        drop(s);
+        (depth, queued, victims)
+    }
+
     /// Block until a job is available or the queue is closed *and*
     /// drained. `None` means "no more work ever" — the device exits.
     pub fn pop(&self) -> Option<FleetJob> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = util::lock(&self.state);
         loop {
             if let Some(job) = s.jobs.pop_front() {
+                s.queued_requests -= job.len();
                 return Some(job);
             }
             if s.closed {
                 return None;
             }
-            s = self.ready.wait(s).unwrap();
+            s = util::wait(&self.ready, s);
         }
     }
 
     /// Stop accepting work and wake every device so the drain can finish.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        util::lock(&self.state).closed = true;
         self.ready.notify_all();
     }
 
     /// Jobs currently waiting (not including ones being executed).
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().jobs.len()
+        util::lock(&self.state).jobs.len()
+    }
+
+    /// Requests currently waiting across all queued jobs.
+    pub fn queued_requests(&self) -> usize {
+        util::lock(&self.state).queued_requests
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
+    use crate::serve::test_support::detached_request;
+    use std::time::Duration;
 
     fn job_of(n: usize) -> FleetJob {
-        let requests = (0..n)
-            .map(|_| {
-                // Nothing responds in these tests; the receiver can drop.
-                let (resp, _rx) = mpsc::channel();
-                (Instant::now(), InferenceRequest { input: vec![0; 4], resp })
-            })
-            .collect();
-        FleetJob { requests }
+        // Nothing responds in these tests; the receivers can drop.
+        FleetJob { requests: (0..n).map(|_| detached_request(vec![0; 4]).0).collect() }
     }
 
     #[test]
@@ -115,9 +168,11 @@ mod tests {
         let q = FleetQueue::new();
         assert_eq!(q.push(job_of(1)), 1);
         assert_eq!(q.push(job_of(2)), 2, "push reports depth after insert");
+        assert_eq!(q.queued_requests(), 3);
         assert_eq!(q.pop().unwrap().len(), 1);
         assert_eq!(q.pop().unwrap().len(), 2);
         assert_eq!(q.depth(), 0);
+        assert_eq!(q.queued_requests(), 0);
         q.close();
         assert!(q.pop().is_none());
     }
@@ -129,6 +184,49 @@ mod tests {
         q.close();
         assert_eq!(q.pop().unwrap().len(), 3, "queued work survives close");
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn push_after_close_resolves_shutting_down() {
+        let q = FleetQueue::new();
+        q.close();
+        let (req, ticket) = detached_request(vec![0; 4]);
+        assert_eq!(q.push(FleetJob { requests: vec![req] }), 0);
+        assert_eq!(
+            ticket.wait_timeout(Duration::from_millis(100)),
+            Err(ServeError::ShuttingDown),
+            "post-close push resolves tickets instead of panicking"
+        );
+    }
+
+    #[test]
+    fn push_shedding_bounds_queued_requests_and_keeps_newest() {
+        let q = FleetQueue::new();
+        let (old_req, old_ticket) = detached_request(vec![0; 4]);
+        q.push(FleetJob { requests: vec![old_req] });
+        q.push(job_of(2));
+        // Bound of 3: pushing 2 more (total 5) must shed the 3 oldest
+        // (both earlier jobs), keeping only the newest job.
+        let (depth, queued, victims) = q.push_shedding(job_of(2), 3);
+        let shed: usize = victims.iter().map(FleetJob::len).sum();
+        assert_eq!(shed, 3, "three oldest requests shed");
+        assert_eq!(depth, 1, "only the newest job remains");
+        assert_eq!(queued, 2);
+        assert_eq!(q.queued_requests(), 2);
+        // Victims come back unresolved; the caller resolves them.
+        for v in victims {
+            v.resolve_err(&ServeError::QueueFull { depth: 5, max_depth: 3 });
+        }
+        assert!(matches!(
+            old_ticket.wait_timeout(Duration::from_millis(100)),
+            Err(ServeError::QueueFull { .. })
+        ));
+        // The newest job always survives, even when it alone exceeds the
+        // bound (shedding it would starve the fleet).
+        let (depth, _, victims) = q.push_shedding(job_of(9), 3);
+        assert_eq!(depth, 1, "survivor is the oversized newest job");
+        assert_eq!(victims.iter().map(FleetJob::len).sum::<usize>(), 2, "previous job shed");
+        assert_eq!(q.pop().unwrap().len(), 9);
     }
 
     #[test]

@@ -54,9 +54,21 @@
 //!   signed 16-bit fixed-point tensors.
 //! * [`runtime`] — PJRT executor loading the JAX/Pallas-lowered HLO
 //!   artifacts (`artifacts/*.hlo.txt`) for the numeric reference path.
-//! * [`coordinator`] — the serving layer: request router, batch
-//!   accumulator, scheduler integration and metrics (wall-latency
-//!   percentiles, schedule-cache counters, per-device lanes).
+//! * [`serve`] — **the serving API**: one typed pipeline
+//!   `NpeService::builder(model) → NpeService → Ticket` for every
+//!   workload kind (`IntoServedModel` covers MLPs, CNNs, DAG models and
+//!   the raw graph IR), with validated configuration (`ServeError::
+//!   InvalidConfig` instead of a hang), admission control
+//!   (`AdmissionPolicy::{Block, Reject, ShedOldest}` bound the queue and
+//!   shed load under overload) and typed request failures
+//!   (`ShapeMismatch` at submit, `QueueFull`, `ShuttingDown`,
+//!   `DeviceLost`, `Timeout`). The legacy `Coordinator::spawn_*` family
+//!   is `#[deprecated]` shims over this builder.
+//! * [`coordinator`] — the serving internals behind the facade: request
+//!   router, batch accumulator, scheduler integration and metrics
+//!   (wall-latency percentiles, schedule-cache counters, shed/drop
+//!   counters, per-device lanes). The request path is panic-free by
+//!   construction (grep-enforced in `tests/serve_api.rs`).
 //! * [`fleet`] — many simulated NPE devices behind the coordinator:
 //!   client → batcher → schedule cache → fleet queue → N devices. A
 //!   shared work queue feeds idle devices (least-loaded by
@@ -66,6 +78,9 @@
 //! * [`bench`] — generators for every table and figure of the paper's
 //!   evaluation (shared between the CLI and the criterion benches).
 
+// First-party bench code must be migrated off the deprecated spawn_*
+// shims (the shims exist for external callers only).
+#[deny(deprecated)]
 pub mod bench;
 pub mod bitsim;
 pub mod conv;
@@ -80,7 +95,11 @@ pub mod model;
 pub mod npe;
 pub mod ppa;
 pub mod runtime;
+pub mod serve;
 pub mod tcdmac;
 pub mod util;
 
 pub use model::fixedpoint::{Fix16, FRAC_BITS};
+pub use serve::{
+    AdmissionPolicy, IntoServedModel, NpeService, ServeBuilder, ServeError, ServiceClient, Ticket,
+};

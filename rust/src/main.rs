@@ -1,14 +1,18 @@
 //! `tcd-npe` — CLI entry point (leader process).
 //!
 //! Subcommands regenerate each paper artifact, explore schedules, run the
-//! serving coordinator demo, and cross-verify the simulator against the
-//! PJRT artifacts. Run with no arguments for usage.
+//! serving demo through the one `NpeService::builder` path, and
+//! cross-verify the simulator against the PJRT artifacts. Run with no
+//! arguments for usage.
+
+// First-party code is provably migrated off the legacy spawn_* shims.
+#![deny(deprecated)]
 
 use anyhow::{anyhow, Context, Result};
 use std::time::Duration;
 use tcd_npe::bench;
 use tcd_npe::conv::QuantizedCnn;
-use tcd_npe::coordinator::{BatcherConfig, Coordinator, ServedModel};
+use tcd_npe::coordinator::{BatcherConfig, ServedModel};
 use tcd_npe::dataflow::{DataflowEngine, OsEngine};
 use tcd_npe::exec::BackendKind;
 use tcd_npe::fleet::{poisson_arrivals, run_open_loop, DeviceSpec, LoadGenConfig};
@@ -20,6 +24,7 @@ use tcd_npe::model::{
     QuantizedMlp,
 };
 use tcd_npe::runtime::{ArtifactManifest, PjrtRuntime};
+use tcd_npe::serve::{AdmissionPolicy, NpeService, ServeError};
 use tcd_npe::util::TextTable;
 
 const USAGE: &str = "\
@@ -42,16 +47,19 @@ Paper artifacts:
 System:
   schedule <topo> <batches>  Algorithm-1 schedule for an MLP, e.g. 784:700:10 10
   mem-report <topo> <K> <N>  Fig.-7 data arrangement for a config
-  serve [--requests N] [--backend B]
-                             run the serving coordinator demo (simulator)
+  serve [--requests N] [--backend B] [--admission P]
+                             run the serving demo (NpeService::builder, simulator)
   fleet [--devices N] [--requests N] [--rate RPS] [--model NAME] [--backend B]
-                             serve a seeded Poisson load on an N-device fleet
+        [--admission P]      serve a seeded Poisson load on an N-device fleet
   fleet --bench [--json PATH]
-                             device-count sweep (1/2/4/8) + BENCH_fleet.json
+                             device-count sweep (1/2/4/8) + admission-policy
+                             sweep (Block vs Reject at 2x saturation) + BENCH_fleet.json
   verify [artifact-dir]      cross-check NPE simulator vs PJRT artifacts
   ablate <which>             ablations: geometry | batch | voltage | mac | all
 
 Backends (B): bitexact (gate-accurate MACs) | fast (serial i64) | parallel (host threads)
+Admission (P): block (unbounded, default) | reject=N (refuse past N in flight)
+               | shed=N (bound the queue by shedding the oldest)
 ";
 
 fn main() -> Result<()> {
@@ -136,7 +144,7 @@ fn main() -> Result<()> {
                 .map(|s| s.parse())
                 .transpose()?
                 .unwrap_or(64);
-            cmd_serve(requests, backend_flag(&args)?)?;
+            cmd_serve(requests, backend_flag(&args)?, admission_flag(&args)?)?;
         }
         "fleet" => {
             if args.iter().any(|a| a == "--bench") {
@@ -155,7 +163,14 @@ fn main() -> Result<()> {
                     .transpose()?
                     .unwrap_or(20_000.0);
                 let model = flag_value(&args, "--model").unwrap_or("Iris");
-                cmd_fleet(devices, requests, rate, model, backend_flag(&args)?)?;
+                cmd_fleet(
+                    devices,
+                    requests,
+                    rate,
+                    model,
+                    backend_flag(&args)?,
+                    admission_flag(&args)?,
+                )?;
             }
         }
         "verify" => {
@@ -201,6 +216,23 @@ fn backend_flag(args: &[String]) -> Result<BackendKind> {
         None => Ok(BackendKind::Fast),
         Some(s) => BackendKind::parse(s)
             .ok_or_else(|| anyhow!("unknown backend {s:?} (bitexact | fast | parallel)")),
+    }
+}
+
+/// Parse `--admission` (default: `block`, the unbounded legacy policy).
+fn admission_flag(args: &[String]) -> Result<AdmissionPolicy> {
+    let Some(s) = flag_value(args, "--admission") else {
+        return Ok(AdmissionPolicy::Block);
+    };
+    let parse_depth = |v: &str| -> Result<usize> {
+        v.parse::<usize>()
+            .map_err(|_| anyhow!("bad admission depth {v:?} (want a positive integer)"))
+    };
+    match s.split_once('=') {
+        None if s == "block" => Ok(AdmissionPolicy::Block),
+        Some(("reject", v)) => Ok(AdmissionPolicy::Reject { max_depth: parse_depth(v)? }),
+        Some(("shed", v)) => Ok(AdmissionPolicy::ShedOldest { max_depth: parse_depth(v)? }),
+        _ => Err(anyhow!("unknown admission policy {s:?} (block | reject=N | shed=N)")),
     }
 }
 
@@ -266,37 +298,52 @@ fn cmd_mem_report(topo: &MlpTopology, k: usize, n: usize) {
     println!("{}", t.render());
 }
 
-fn cmd_serve(requests: usize, backend: BackendKind) -> Result<()> {
+fn cmd_serve(requests: usize, backend: BackendKind, admission: AdmissionPolicy) -> Result<()> {
     let bench = benchmarks()
         .into_iter()
         .find(|b| b.dataset == "Iris")
         .unwrap();
     let mlp = QuantizedMlp::synthesize(bench.topology.clone(), 0xF16_10);
     println!(
-        "serving {} ({}) on the 16x8 TCD-NPE simulator ({} backend), {requests} requests",
+        "serving {} ({}) on the 16x8 TCD-NPE simulator ({} backend, {} admission), \
+         {requests} requests",
         bench.dataset,
         bench.topology.display(),
-        backend.name()
+        backend.name(),
+        admission.name()
     );
-    let coord = Coordinator::spawn_model_on(
-        ServedModel::Mlp(mlp.clone()),
-        NpeGeometry::PAPER,
-        backend,
-        BatcherConfig::new(8, Duration::from_millis(1)),
-        None,
-    );
+    let service = NpeService::builder(mlp.clone())
+        .geometry(NpeGeometry::PAPER)
+        .backend(backend)
+        .batcher(BatcherConfig::new(8, Duration::from_millis(1)))
+        .admission(admission)
+        .build()?;
     let inputs = mlp.synth_inputs(requests, 0xDA7A);
-    let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
-    let mut ok = 0;
-    for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(30))?;
-        if !resp.output.is_empty() {
-            ok += 1;
+    let mut shed = 0usize;
+    let mut tickets = Vec::new();
+    for x in &inputs {
+        match service.submit(x.clone()) {
+            Ok(t) => tickets.push(t),
+            Err(_) => shed += 1,
         }
     }
-    println!("served {ok}/{requests}");
-    println!("{}", coord.metrics.lock().unwrap().render());
-    coord.shutdown()?;
+    let mut ok = 0;
+    for t in tickets {
+        // Under `shed=N` a queued ticket can resolve QueueFull — that is
+        // load-shedding doing its job, not a demo failure.
+        match t.wait_timeout(Duration::from_secs(30)) {
+            Ok(resp) => {
+                if !resp.output.is_empty() {
+                    ok += 1;
+                }
+            }
+            Err(ServeError::QueueFull { .. }) => shed += 1,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    println!("served {ok}/{requests} ({shed} refused or shed at admission)");
+    println!("{}", service.metrics().render());
+    service.shutdown()?;
     Ok(())
 }
 
@@ -306,6 +353,7 @@ fn cmd_fleet(
     rate: f64,
     model_name: &str,
     backend: BackendKind,
+    admission: AdmissionPolicy,
 ) -> Result<()> {
     // Resolve against the MLP zoo first, then the CNN zoo.
     let model = if let Some(b) = benchmark_by_name(model_name) {
@@ -339,16 +387,20 @@ fn cmd_fleet(
     };
     let load = LoadGenConfig { seed: 0x10AD_0001, rate_rps: rate, requests };
     let arrivals = poisson_arrivals(&model, &load);
-    let coord = Coordinator::spawn_fleet_on(
-        model,
-        vec![DeviceSpec::new(NpeGeometry::PAPER, backend); devices],
-        BatcherConfig::new(8, Duration::from_micros(500)),
+    let service = NpeService::builder(model)
+        .devices(vec![DeviceSpec::new(NpeGeometry::PAPER, backend); devices])
+        .batcher(BatcherConfig::new(8, Duration::from_micros(500)))
+        .admission(admission)
+        .build()?;
+    println!(
+        "offering {requests} Poisson requests at {rate:.0} req/s (seed {:#x}, {} admission)",
+        load.seed,
+        admission.name()
     );
-    println!("offering {requests} Poisson requests at {rate:.0} req/s (seed {:#x})", load.seed);
-    let responses = run_open_loop(&coord, &arrivals, Duration::from_secs(60));
+    let responses = run_open_loop(&service, &arrivals, Duration::from_secs(60));
     let answered = responses.iter().filter(|o| o.is_some()).count();
-    let metrics = std::sync::Arc::clone(&coord.metrics);
-    coord.shutdown()?;
+    let metrics = service.metrics_handle();
+    service.shutdown()?;
     println!("answered {answered}/{requests}\n");
     print!("{}", metrics.lock().unwrap().clone());
     Ok(())
@@ -358,6 +410,8 @@ fn cmd_fleet_bench(json_path: Option<&str>) -> Result<()> {
     let load = LoadGenConfig::default();
     let rows = bench::fleet_rows(&load);
     println!("{}", bench::render_fleet_table(&rows, &load));
+    let admission = bench::admission_rows(&load);
+    println!("{}", bench::render_admission_table(&admission));
     let mapper = bench::mapper_cache_bench(200);
     println!(
         "mapper: {} shapes, cold {:.1} us/iter vs cached {:.1} us/iter ({:.0}x)",
@@ -367,7 +421,7 @@ fn cmd_fleet_bench(json_path: Option<&str>) -> Result<()> {
         mapper.speedup()
     );
     let path = json_path.unwrap_or("BENCH_fleet.json");
-    std::fs::write(path, bench::fleet_json(&rows, &mapper, &load))?;
+    std::fs::write(path, bench::fleet_json(&rows, &admission, &mapper, &load))?;
     println!("wrote {path}");
     Ok(())
 }

@@ -1,0 +1,115 @@
+//! Admission control: the bounded-queue layer in front of the batcher.
+//!
+//! The pre-redesign coordinator admitted everything — under sustained
+//! overload the queue grew without bound and every latency percentile
+//! with it. [`AdmissionPolicy`] makes the overload behaviour an explicit
+//! serving knob; [`ServeShared`] is the submit-side state (in-flight
+//! depth, shutdown flag, model input length) every client handle and
+//! every [`crate::serve::Ticket`] shares with the service.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// What happens when requests arrive faster than devices retire them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Admit everything; the backlog grows without bound and callers
+    /// effectively wait in line. This is the pre-redesign behaviour and
+    /// the default — right for offline/batch traffic where every
+    /// request must eventually be answered.
+    #[default]
+    Block,
+    /// Refuse new work at submit time once `max_depth` requests are in
+    /// flight (admitted but unanswered): `submit` returns
+    /// [`crate::serve::ServeError::QueueFull`] immediately and the
+    /// caller decides whether to retry. The bound is best-effort under
+    /// concurrent submitters (two clients can race past the same depth
+    /// reading), which is the standard load-shedding contract.
+    Reject { max_depth: usize },
+    /// Admit everything, but bound the backlog by shedding the *oldest*
+    /// waiting requests once more than `max_depth` are queued at a
+    /// stage (the batcher's pending buffer on a single-device service,
+    /// the fleet work queue on a fleet). Shed requests resolve their
+    /// ticket with [`crate::serve::ServeError::QueueFull`]. Newest-wins
+    /// is the right policy when responses go stale — the oldest request
+    /// is the one its client has most likely already given up on.
+    ShedOldest { max_depth: usize },
+}
+
+impl AdmissionPolicy {
+    /// Short label for tables and JSON artifacts.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::Reject { .. } => "reject",
+            AdmissionPolicy::ShedOldest { .. } => "shed-oldest",
+        }
+    }
+}
+
+/// Submit-side state shared by the service handle, every cloned client,
+/// every outstanding ticket, and the coordinator loop.
+#[derive(Debug)]
+pub(crate) struct ServeShared {
+    /// Flattened input length one request must carry (checked at submit).
+    pub(crate) input_len: usize,
+    pub(crate) policy: AdmissionPolicy,
+    /// Requests admitted but not yet answered (or shed). Incremented by
+    /// submit, decremented exactly once when the request's responder is
+    /// consumed or dropped.
+    pub(crate) depth: AtomicUsize,
+    /// Set before the shutdown message is sent, so submits racing
+    /// shutdown fail with `ShuttingDown` instead of vanishing.
+    pub(crate) shutting_down: AtomicBool,
+}
+
+impl ServeShared {
+    pub(crate) fn new(input_len: usize, policy: AdmissionPolicy) -> Arc<Self> {
+        Arc::new(Self {
+            input_len,
+            policy,
+            depth: AtomicUsize::new(0),
+            shutting_down: AtomicBool::new(false),
+        })
+    }
+
+    /// Current in-flight depth (admitted, unanswered).
+    pub(crate) fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn is_shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn begin_shutdown(&self) {
+        self.shutting_down.store(true, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_block() {
+        assert_eq!(AdmissionPolicy::default(), AdmissionPolicy::Block);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(AdmissionPolicy::Block.name(), "block");
+        assert_eq!(AdmissionPolicy::Reject { max_depth: 4 }.name(), "reject");
+        assert_eq!(AdmissionPolicy::ShedOldest { max_depth: 4 }.name(), "shed-oldest");
+    }
+
+    #[test]
+    fn shared_flags() {
+        let s = ServeShared::new(16, AdmissionPolicy::Block);
+        assert_eq!(s.input_len, 16);
+        assert_eq!(s.depth(), 0);
+        assert!(!s.is_shutting_down());
+        s.begin_shutdown();
+        assert!(s.is_shutting_down());
+    }
+}

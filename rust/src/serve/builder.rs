@@ -1,0 +1,278 @@
+//! [`ServeBuilder`] — the one construction path of the serving API —
+//! and [`IntoServedModel`], the trait that lets every workload kind
+//! (MLP, CNN, DAG, raw graph IR) enter it.
+//!
+//! ```no_run
+//! use tcd_npe::serve::{AdmissionPolicy, NpeService};
+//! use tcd_npe::mapper::NpeGeometry;
+//! use tcd_npe::model::{MlpTopology, QuantizedMlp};
+//!
+//! let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![16, 12, 4]), 7);
+//! let service = NpeService::builder(mlp)
+//!     .geometry(NpeGeometry::PAPER)
+//!     .admission(AdmissionPolicy::Reject { max_depth: 256 })
+//!     .build()?;
+//! let ticket = service.submit(vec![0; 16])?;
+//! let response = ticket.wait()?;
+//! # let _ = response;
+//! # service.shutdown()?;
+//! # Ok::<(), tcd_npe::serve::ServeError>(())
+//! ```
+
+use super::admission::AdmissionPolicy;
+use super::error::ServeError;
+use super::service::NpeService;
+use crate::conv::QuantizedCnn;
+use crate::coordinator::{BatcherConfig, ExecutionPlan, PjrtSpec, ServedModel};
+use crate::exec::BackendKind;
+use crate::fleet::DeviceSpec;
+use crate::graph::{GraphModel, QuantizedGraph};
+use crate::mapper::{NpeGeometry, DEFAULT_SERVING_CACHE_CAPACITY};
+use crate::model::QuantizedMlp;
+
+/// Weight seed used when serving a raw [`GraphModel`]: the graph IR
+/// carries structure, not parameters, so the builder synthesizes weights
+/// the same way the model zoo does, from this documented default stream.
+/// Pass a [`QuantizedGraph`] instead to control the seed.
+pub const DEFAULT_GRAPH_WEIGHT_SEED: u64 = 0x5EED_F00D;
+
+/// Anything the service can serve. The graph IR is the universal
+/// lowering target, so the impl set is closed over every front-end the
+/// compiler understands.
+pub trait IntoServedModel {
+    fn into_served(self) -> ServedModel;
+}
+
+impl IntoServedModel for ServedModel {
+    fn into_served(self) -> ServedModel {
+        self
+    }
+}
+
+impl IntoServedModel for QuantizedMlp {
+    fn into_served(self) -> ServedModel {
+        ServedModel::Mlp(self)
+    }
+}
+
+impl IntoServedModel for QuantizedCnn {
+    fn into_served(self) -> ServedModel {
+        ServedModel::Cnn(self)
+    }
+}
+
+impl IntoServedModel for QuantizedGraph {
+    fn into_served(self) -> ServedModel {
+        ServedModel::Graph(self)
+    }
+}
+
+impl IntoServedModel for GraphModel {
+    /// A bare graph IR is served with zoo-style synthetic weights drawn
+    /// from [`DEFAULT_GRAPH_WEIGHT_SEED`].
+    fn into_served(self) -> ServedModel {
+        ServedModel::Graph(QuantizedGraph::synthesize(self, DEFAULT_GRAPH_WEIGHT_SEED))
+    }
+}
+
+/// Typed, validating builder for [`NpeService`]. Every knob has a
+/// serving-grade default; `build` checks the combination and returns
+/// [`ServeError::InvalidConfig`] instead of letting a bad configuration
+/// hang or panic a worker later.
+pub struct ServeBuilder {
+    model: ServedModel,
+    geometry: NpeGeometry,
+    backend: BackendKind,
+    devices: Option<Vec<DeviceSpec>>,
+    batcher: BatcherConfig,
+    cache_capacity: usize,
+    admission: AdmissionPolicy,
+    pjrt: Option<PjrtSpec>,
+}
+
+impl ServeBuilder {
+    pub(crate) fn new(model: ServedModel) -> Self {
+        Self {
+            model,
+            geometry: NpeGeometry::PAPER,
+            backend: BackendKind::Fast,
+            devices: None,
+            batcher: BatcherConfig::default(),
+            cache_capacity: DEFAULT_SERVING_CACHE_CAPACITY,
+            admission: AdmissionPolicy::default(),
+            pjrt: None,
+        }
+    }
+
+    /// PE-array geometry of the single simulated NPE (ignored when
+    /// [`devices`](Self::devices) selects a fleet — each device carries
+    /// its own geometry). Default: the paper's 16×8.
+    pub fn geometry(mut self, geometry: NpeGeometry) -> Self {
+        self.geometry = geometry;
+        self
+    }
+
+    /// Roll backend of the single NPE (ignored for fleets — per-device
+    /// in the [`DeviceSpec`]). Default: `Fast`.
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Serve on a fleet of simulated devices, one per spec
+    /// (heterogeneous geometries and backends stay bit-exact). Accepts
+    /// anything convertible to [`DeviceSpec`] — bare geometries run on
+    /// the default backend. An empty list is a build error.
+    pub fn devices<I, D>(mut self, specs: I) -> Self
+    where
+        I: IntoIterator<Item = D>,
+        D: Into<DeviceSpec>,
+    {
+        self.devices = Some(specs.into_iter().map(Into::into).collect());
+        self
+    }
+
+    /// Dynamic-batching policy (flush at `batch_size` or when the oldest
+    /// request has waited `max_wait`). Default: [`BatcherConfig::default`].
+    pub fn batcher(mut self, cfg: BatcherConfig) -> Self {
+        self.batcher = cfg;
+        self
+    }
+
+    /// Capacity of the shared Algorithm-1 schedule cache (LRU entries).
+    /// Default: [`DEFAULT_SERVING_CACHE_CAPACITY`].
+    pub fn cache(mut self, capacity: usize) -> Self {
+        self.cache_capacity = capacity;
+        self
+    }
+
+    /// Overload behaviour. Default: [`AdmissionPolicy::Block`]
+    /// (unbounded queueing, the pre-redesign behaviour).
+    pub fn admission(mut self, policy: AdmissionPolicy) -> Self {
+        self.admission = policy;
+        self
+    }
+
+    /// Cross-verify every batch against a PJRT/XLA artifact (MLP models
+    /// on the single-device path only).
+    pub fn pjrt(mut self, spec: PjrtSpec) -> Self {
+        self.pjrt = Some(spec);
+        self
+    }
+
+    /// Validate the configuration and start the service.
+    pub fn build(self) -> Result<NpeService, ServeError> {
+        let invalid = |reason: &str| {
+            Err(ServeError::InvalidConfig { reason: reason.to_string() })
+        };
+        if self.batcher.batch_size == 0 {
+            return invalid("batch_size must be >= 1");
+        }
+        if self.cache_capacity == 0 {
+            return invalid("schedule cache capacity must be >= 1");
+        }
+        match self.admission {
+            AdmissionPolicy::Reject { max_depth } | AdmissionPolicy::ShedOldest { max_depth }
+                if max_depth == 0 =>
+            {
+                return invalid("admission max_depth must be >= 1");
+            }
+            _ => {}
+        }
+        if self.pjrt.is_some() && !matches!(self.model, ServedModel::Mlp(_)) {
+            return invalid("pjrt cross-verification requires an MLP model");
+        }
+        let plan = match self.devices {
+            None => ExecutionPlan::Single {
+                geometry: self.geometry,
+                backend: self.backend,
+                pjrt: self.pjrt,
+            },
+            Some(specs) if specs.is_empty() => {
+                return invalid("a fleet needs at least one device");
+            }
+            Some(specs) => {
+                if self.pjrt.is_some() {
+                    return invalid("pjrt cross-verification runs on the single-device path only");
+                }
+                ExecutionPlan::Fleet { specs }
+            }
+        };
+        Ok(NpeService::start(
+            self.model,
+            plan,
+            self.batcher,
+            self.cache_capacity,
+            self.admission,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MlpTopology;
+    use std::time::Duration;
+
+    fn mlp() -> QuantizedMlp {
+        QuantizedMlp::synthesize(MlpTopology::new(vec![8, 6, 2]), 3)
+    }
+
+    fn reason(err: Result<NpeService, ServeError>) -> String {
+        match err {
+            Err(ServeError::InvalidConfig { reason }) => reason,
+            Err(other) => panic!("expected InvalidConfig, got {other:?}"),
+            Ok(_) => panic!("expected InvalidConfig, got a running service"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs_with_specific_reasons() {
+        let zero_batch = NpeService::builder(mlp())
+            .batcher(BatcherConfig::new(0, Duration::from_millis(1)))
+            .build();
+        assert!(reason(zero_batch).contains("batch_size"));
+
+        let zero_devices = NpeService::builder(mlp())
+            .devices(Vec::<DeviceSpec>::new())
+            .build();
+        assert!(reason(zero_devices).contains("at least one device"));
+
+        let zero_cache = NpeService::builder(mlp()).cache(0).build();
+        assert!(reason(zero_cache).contains("cache"));
+
+        let zero_depth = NpeService::builder(mlp())
+            .admission(AdmissionPolicy::Reject { max_depth: 0 })
+            .build();
+        assert!(reason(zero_depth).contains("max_depth"));
+    }
+
+    #[test]
+    fn geometries_convert_into_device_specs() {
+        let svc = NpeService::builder(mlp())
+            .devices([NpeGeometry::WALKTHROUGH, NpeGeometry::PAPER])
+            .batcher(BatcherConfig::new(2, Duration::from_millis(1)))
+            .build()
+            .expect("two-device fleet");
+        let out = svc.submit(vec![1; 8]).expect("submit").wait().expect("answer");
+        assert_eq!(out.output.len(), 2);
+        svc.shutdown().expect("clean shutdown");
+    }
+
+    #[test]
+    fn raw_graph_model_is_servable() {
+        let graph = MlpTopology::new(vec![8, 5, 3]).into_graph();
+        let want = QuantizedGraph::synthesize(graph.clone(), DEFAULT_GRAPH_WEIGHT_SEED);
+        let inputs = want.synth_inputs(2, 9);
+        let expect = want.forward_batch(&inputs);
+        let svc = NpeService::builder(graph)
+            .batcher(BatcherConfig::new(2, Duration::from_millis(1)))
+            .build()
+            .expect("graph service");
+        for (x, want) in inputs.iter().zip(expect) {
+            let resp = svc.submit(x.clone()).expect("submit").wait().expect("answer");
+            assert_eq!(resp.output, want, "raw-IR serving uses the documented seed");
+        }
+        svc.shutdown().expect("clean shutdown");
+    }
+}

@@ -1,0 +1,96 @@
+//! [`ServeError`] — the one error type of the serving API.
+//!
+//! Every way a request (or a service build) can fail is a typed variant,
+//! replacing the pre-redesign mix of worker-side panics and silent
+//! channel disconnects. Clients match on the variant to decide between
+//! retrying (`QueueFull`), fixing the call (`ShapeMismatch`,
+//! `InvalidConfig`), backing off (`ShuttingDown`) and alerting
+//! (`DeviceLost`).
+
+use std::error::Error;
+use std::fmt;
+use std::time::Duration;
+
+/// Why a submit, wait, or build failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's flattened input length does not match the served
+    /// model. Raised at submit time — malformed traffic never reaches
+    /// the batcher or an engine.
+    ShapeMismatch { expected: usize, got: usize },
+    /// Admission control refused the request (`AdmissionPolicy::Reject`)
+    /// or shed it from the queue (`AdmissionPolicy::ShedOldest`).
+    /// `depth` is the in-flight depth observed when the decision fell.
+    QueueFull { depth: usize, max_depth: usize },
+    /// The service is shutting down (or already gone); the request was
+    /// not accepted.
+    ShuttingDown,
+    /// The device executing the request died (or the response channel
+    /// was torn down) before an answer was produced.
+    DeviceLost,
+    /// [`crate::serve::Ticket::wait_timeout`] elapsed with the request
+    /// still in flight. The ticket stays valid — waiting again can still
+    /// succeed.
+    Timeout { waited: Duration },
+    /// A later wait on a ticket whose one response was already collected
+    /// by an earlier `wait_timeout` (one request, one final word).
+    AlreadyAnswered,
+    /// [`crate::serve::ServeBuilder::build`] rejected the configuration.
+    InvalidConfig { reason: String },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::ShapeMismatch { expected, got } => {
+                write!(f, "input length {got} does not match model input length {expected}")
+            }
+            ServeError::QueueFull { depth, max_depth } => {
+                write!(f, "queue full: {depth} requests in flight (admission bound {max_depth})")
+            }
+            ServeError::ShuttingDown => write!(f, "service is shutting down"),
+            ServeError::DeviceLost => {
+                write!(f, "device lost before the request was answered")
+            }
+            ServeError::Timeout { waited } => {
+                write!(f, "no response within {waited:?} (request still in flight)")
+            }
+            ServeError::AlreadyAnswered => {
+                write!(f, "response already collected by an earlier wait on this ticket")
+            }
+            ServeError::InvalidConfig { reason } => {
+                write!(f, "invalid service configuration: {reason}")
+            }
+        }
+    }
+}
+
+impl Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_specific() {
+        let s = ServeError::ShapeMismatch { expected: 16, got: 3 }.to_string();
+        assert!(s.contains("16") && s.contains("3"));
+        let q = ServeError::QueueFull { depth: 9, max_depth: 8 }.to_string();
+        assert!(q.contains("9") && q.contains("8"));
+        assert!(ServeError::ShuttingDown.to_string().contains("shutting down"));
+        assert!(ServeError::DeviceLost.to_string().contains("device"));
+        let t = ServeError::Timeout { waited: Duration::from_millis(5) }.to_string();
+        assert!(t.contains("5ms"));
+        assert!(ServeError::AlreadyAnswered.to_string().contains("already collected"));
+        let c = ServeError::InvalidConfig { reason: "zero devices".into() }.to_string();
+        assert!(c.contains("zero devices"));
+    }
+
+    #[test]
+    fn is_a_std_error_and_converts_to_anyhow() {
+        fn takes_err(_: &dyn Error) {}
+        takes_err(&ServeError::DeviceLost);
+        let a: anyhow::Error = ServeError::ShuttingDown.into();
+        assert!(a.to_string().contains("shutting down"));
+    }
+}

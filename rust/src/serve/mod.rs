@@ -1,0 +1,61 @@
+//! The serving API: one typed pipeline from model to ticket.
+//!
+//! The paper's pitch is a *re-configurable* NPE — one engine, many
+//! configurations. This module is that pitch applied to the serving
+//! surface: where the crate once grew seven parallel `spawn_*` entry
+//! points (MLP/CNN/graph × single/fleet × default/explicit backend), it
+//! now has exactly one construction path and one submit path:
+//!
+//! ```text
+//! model (QuantizedMlp | QuantizedCnn | QuantizedGraph | GraphModel)
+//!   │  IntoServedModel
+//!   ▼
+//! NpeService::builder(model)
+//!   .geometry(..) .backend(..)        — single-NPE shape/backend
+//!   .devices([DeviceSpec, ..])       — or a (heterogeneous) fleet
+//!   .batcher(..) .cache(..)          — batching + Algorithm-1 memo
+//!   .admission(..)                   — Block | Reject | ShedOldest
+//!   .build()?                        — validated; InvalidConfig, not a hang
+//!   ▼
+//! NpeService ── submit(input)? ──► Ticket ── wait()/wait_timeout()? ──► InferenceResponse
+//! ```
+//!
+//! Every failure is a typed [`ServeError`] (`ShapeMismatch` at submit,
+//! `QueueFull` from admission control, `ShuttingDown` for requests
+//! racing shutdown, `DeviceLost` for dead executors) — the request path
+//! through the coordinator and fleet carries **no** `unwrap`/`expect`/
+//! `panic!` (grep-enforced by `tests/serve_api.rs`).
+//!
+//! The legacy `Coordinator::spawn_*` family still exists as
+//! `#[deprecated]` shims over this builder; `tests/serve_api.rs` proves
+//! them bit-exact against it.
+
+pub mod admission;
+pub mod builder;
+pub mod error;
+pub mod service;
+pub mod ticket;
+
+pub(crate) use admission::ServeShared;
+
+pub use admission::AdmissionPolicy;
+pub use builder::{IntoServedModel, ServeBuilder, DEFAULT_GRAPH_WEIGHT_SEED};
+pub use error::ServeError;
+pub use service::{NpeService, ServiceClient};
+pub use ticket::{Responder, Ticket};
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::admission::{AdmissionPolicy, ServeShared};
+    use super::ticket::{Responder, Ticket};
+    use crate::coordinator::InferenceRequest;
+    use std::time::Instant;
+
+    /// A connected (request, ticket) pair without a running service, for
+    /// unit tests of the queue/device internals.
+    pub(crate) fn detached_request(input: Vec<i16>) -> (InferenceRequest, Ticket) {
+        let shared = ServeShared::new(input.len(), AdmissionPolicy::Block);
+        let (responder, ticket) = Responder::admit(&shared);
+        (InferenceRequest { input, submitted: Instant::now(), responder }, ticket)
+    }
+}

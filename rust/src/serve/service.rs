@@ -1,0 +1,249 @@
+//! [`NpeService`] — the one serving facade — and [`ServiceClient`], its
+//! cloneable submit handle.
+//!
+//! The facade wraps the coordinator loop (dynamic batcher + Algorithm-1
+//! schedule cache) and, behind it, either one simulated NPE or a fleet
+//! of them — the split is an internal [`ExecutionPlan`], not an API
+//! fork. Requests enter through exactly one door
+//! ([`submit`](NpeService::submit)), get admission-checked and
+//! shape-checked *before* they are accepted, and come back through a
+//! typed [`Ticket`].
+
+use super::admission::{AdmissionPolicy, ServeShared};
+use super::builder::{IntoServedModel, ServeBuilder};
+use super::error::ServeError;
+use super::ticket::{Responder, Ticket};
+use crate::coordinator::{
+    service_thread, BatcherConfig, CoordinatorMetrics, CoordinatorMsg, ExecutionPlan,
+    InferenceRequest, ServedModel,
+};
+use crate::mapper::ScheduleCache;
+use crate::util;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A running serving instance: batcher, schedule cache, metrics and the
+/// executing device(s), behind one typed submit path.
+pub struct NpeService {
+    tx: mpsc::Sender<CoordinatorMsg>,
+    /// The coordinator thread; returns the number of device threads that
+    /// died (0 on a healthy shutdown).
+    handle: Option<JoinHandle<usize>>,
+    shared: Arc<ServeShared>,
+    metrics: Arc<Mutex<CoordinatorMetrics>>,
+    cache: Arc<ScheduleCache>,
+}
+
+impl NpeService {
+    /// Begin configuring a service for any servable model — the only
+    /// non-deprecated construction path of the serving API.
+    pub fn builder(model: impl IntoServedModel) -> ServeBuilder {
+        ServeBuilder::new(model.into_served())
+    }
+
+    /// Spawn the coordinator thread for a validated configuration
+    /// (called by [`ServeBuilder::build`]).
+    pub(crate) fn start(
+        model: ServedModel,
+        plan: ExecutionPlan,
+        cfg: BatcherConfig,
+        cache_capacity: usize,
+        admission: AdmissionPolicy,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel();
+        let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        let cache = ScheduleCache::shared_bounded(cache_capacity);
+        let shared = ServeShared::new(model.input_len(), admission);
+        let (metrics_t, cache_t, shared_t) =
+            (Arc::clone(&metrics), Arc::clone(&cache), Arc::clone(&shared));
+        let handle = std::thread::spawn(move || {
+            service_thread(rx, model, plan, cfg, metrics_t, cache_t, shared_t)
+        });
+        Self { tx, handle: Some(handle), shared, metrics, cache }
+    }
+
+    /// Submit one request. Shape and admission are checked here, in the
+    /// caller's thread: a malformed or refused request never occupies
+    /// queue space, and the error comes back immediately instead of as a
+    /// hung channel.
+    pub fn submit(&self, input: Vec<i16>) -> Result<Ticket, ServeError> {
+        submit_via(&self.tx, &self.shared, &self.metrics, input)
+    }
+
+    /// A cloneable submit-only handle for concurrent client threads.
+    pub fn client(&self) -> ServiceClient {
+        ServiceClient {
+            tx: self.tx.clone(),
+            shared: Arc::clone(&self.shared),
+            metrics: Arc::clone(&self.metrics),
+        }
+    }
+
+    /// Snapshot of the service counters (percentiles, cache, lanes).
+    pub fn metrics(&self) -> CoordinatorMetrics {
+        util::lock(&self.metrics).clone()
+    }
+
+    /// Shared handle to the live metrics, for monitors that keep
+    /// observing across (and after) shutdown.
+    pub fn metrics_handle(&self) -> Arc<Mutex<CoordinatorMetrics>> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// The shared Algorithm-1 schedule cache.
+    pub fn cache(&self) -> Arc<ScheduleCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// Requests currently in flight (admitted, not yet answered) — the
+    /// depth admission control reads.
+    pub fn in_flight(&self) -> usize {
+        self.shared.depth()
+    }
+
+    /// Shut down, flushing pending requests: every request accepted
+    /// before this call is executed and answered; submits racing past it
+    /// fail with [`ServeError::ShuttingDown`]. Returns
+    /// [`ServeError::DeviceLost`] if any device or coordinator thread
+    /// died along the way (some responses may then be missing).
+    pub fn shutdown(mut self) -> Result<(), ServeError> {
+        self.shared.begin_shutdown();
+        let _ = self.tx.send(CoordinatorMsg::Shutdown);
+        match self.handle.take() {
+            None => Ok(()),
+            Some(handle) => match handle.join() {
+                Err(_) => Err(ServeError::DeviceLost),
+                Ok(dead) if dead > 0 => Err(ServeError::DeviceLost),
+                Ok(_) => Ok(()),
+            },
+        }
+    }
+}
+
+impl Drop for NpeService {
+    /// Dropping without [`shutdown`](NpeService::shutdown) still flushes:
+    /// the sender disconnect triggers the same drain, we just don't wait
+    /// for it or observe device health.
+    fn drop(&mut self) {
+        self.shared.begin_shutdown();
+        let _ = self.tx.send(CoordinatorMsg::Shutdown);
+    }
+}
+
+/// Cloneable submit-only handle (the stress suite drives 32 of these
+/// concurrently against one service).
+#[derive(Clone)]
+pub struct ServiceClient {
+    tx: mpsc::Sender<CoordinatorMsg>,
+    shared: Arc<ServeShared>,
+    metrics: Arc<Mutex<CoordinatorMetrics>>,
+}
+
+impl ServiceClient {
+    /// Submit one request (same checks and semantics as
+    /// [`NpeService::submit`]).
+    pub fn submit(&self, input: Vec<i16>) -> Result<Ticket, ServeError> {
+        submit_via(&self.tx, &self.shared, &self.metrics, input)
+    }
+
+    /// Requests currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.shared.depth()
+    }
+}
+
+/// The one submit path: shutdown gate → shape check → admission →
+/// enqueue.
+fn submit_via(
+    tx: &mpsc::Sender<CoordinatorMsg>,
+    shared: &Arc<ServeShared>,
+    metrics: &Mutex<CoordinatorMetrics>,
+    input: Vec<i16>,
+) -> Result<Ticket, ServeError> {
+    if shared.is_shutting_down() {
+        return Err(ServeError::ShuttingDown);
+    }
+    if input.len() != shared.input_len {
+        util::lock(metrics).rejected_requests += 1;
+        return Err(ServeError::ShapeMismatch { expected: shared.input_len, got: input.len() });
+    }
+    if let AdmissionPolicy::Reject { max_depth } = shared.policy {
+        let depth = shared.depth();
+        if depth >= max_depth {
+            util::lock(metrics).shed_requests += 1;
+            return Err(ServeError::QueueFull { depth, max_depth });
+        }
+    }
+    let (responder, ticket) = Responder::admit(shared);
+    let request = InferenceRequest { input, submitted: Instant::now(), responder };
+    // A send failure means the coordinator loop is gone; the responder's
+    // drop has already released the depth slot.
+    match tx.send(CoordinatorMsg::Request(request)) {
+        Ok(()) => Ok(ticket),
+        Err(_) => Err(ServeError::ShuttingDown),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{MlpTopology, QuantizedMlp};
+    use std::time::Duration;
+
+    fn service(batch: usize, wait_ms: u64) -> (NpeService, QuantizedMlp) {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![16, 12, 4]), 77);
+        let svc = NpeService::builder(mlp.clone())
+            .geometry(crate::mapper::NpeGeometry::WALKTHROUGH)
+            .batcher(BatcherConfig::new(batch, Duration::from_millis(wait_ms)))
+            .build()
+            .expect("valid config");
+        (svc, mlp)
+    }
+
+    #[test]
+    fn serves_and_accounts_one_request() {
+        let (svc, mlp) = service(4, 5);
+        let input = mlp.synth_inputs(1, 5)[0].clone();
+        let expect = mlp.forward_batch(&[input.clone()]);
+        let resp = svc.submit(input).expect("admitted").wait().expect("answered");
+        assert_eq!(resp.output, expect[0]);
+        assert!(resp.npe_time_ns > 0.0);
+        assert_eq!(svc.in_flight(), 0, "depth returns to zero");
+        assert_eq!(svc.metrics().requests, 1);
+        svc.shutdown().expect("clean shutdown");
+    }
+
+    #[test]
+    fn shape_mismatch_is_immediate_and_typed() {
+        let (svc, mlp) = service(2, 5);
+        let err = svc.submit(vec![1; 3]).expect_err("wrong length");
+        assert_eq!(err, ServeError::ShapeMismatch { expected: 16, got: 3 });
+        assert_eq!(svc.metrics().rejected_requests, 1);
+        // The service keeps serving valid traffic afterwards.
+        let good = mlp.synth_inputs(1, 5)[0].clone();
+        let expect = mlp.forward_batch(&[good.clone()]);
+        let resp = svc.submit(good).expect("admitted").wait().expect("answered");
+        assert_eq!(resp.output, expect[0]);
+        svc.shutdown().expect("clean shutdown");
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_shutting_down() {
+        let (svc, mlp) = service(2, 5);
+        let client = svc.client();
+        svc.shutdown().expect("clean shutdown");
+        let err = client.submit(mlp.synth_inputs(1, 1)[0].clone()).expect_err("gone");
+        assert_eq!(err, ServeError::ShuttingDown);
+    }
+
+    #[test]
+    fn drop_without_shutdown_still_flushes() {
+        let (svc, _mlp) = service(64, 10_000);
+        let ticket = svc.submit(vec![1; 16]).expect("admitted");
+        drop(svc);
+        // The drain triggered by drop must still answer the request.
+        let resp = ticket.wait_timeout(Duration::from_secs(10)).expect("flushed on drop");
+        assert_eq!(resp.output.len(), 4);
+    }
+}

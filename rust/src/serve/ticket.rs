@@ -1,0 +1,186 @@
+//! [`Ticket`] — the typed handle to one in-flight request — and its
+//! service-side counterpart [`Responder`].
+//!
+//! The pair replaces the bare `mpsc::Receiver<InferenceResponse>` of the
+//! pre-redesign API: every way a request can end (answered, shed,
+//! shutdown, device death) now arrives as a typed
+//! [`ServeError`](super::ServeError), and the in-flight depth counter
+//! that admission control reads is maintained for free — the responder
+//! decrements it exactly once when it leaves the system, whether it was
+//! used to answer or silently dropped by a dying thread.
+
+use super::admission::ServeShared;
+use super::error::ServeError;
+use crate::coordinator::InferenceResponse;
+use std::cell::Cell;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// What travels back over a ticket's channel.
+pub(crate) type ServeResult = Result<InferenceResponse, ServeError>;
+
+/// Handle to one submitted request. Obtain it from
+/// [`NpeService::submit`](super::NpeService::submit), then collect the
+/// response with [`wait`](Ticket::wait) or
+/// [`wait_timeout`](Ticket::wait_timeout).
+#[derive(Debug)]
+pub struct Ticket {
+    rx: mpsc::Receiver<ServeResult>,
+    shared: Arc<ServeShared>,
+    /// Whether an earlier `wait_timeout` already collected the final
+    /// word — so a later wait reports `AlreadyAnswered`, not a bogus
+    /// `DeviceLost`, on the then-disconnected channel.
+    answered: Cell<bool>,
+}
+
+impl Ticket {
+    /// Block until the request is answered (or failed with a typed
+    /// error). Consumes the ticket — one request, one final word.
+    pub fn wait(self) -> Result<InferenceResponse, ServeError> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(mpsc::RecvError) => Err(self.disconnect_error()),
+        }
+    }
+
+    /// Wait up to `timeout`. Expiry returns
+    /// [`ServeError::Timeout`] and leaves the ticket valid — the request
+    /// is still in flight and a later wait can still succeed. Once the
+    /// final word has been collected, further waits return
+    /// [`ServeError::AlreadyAnswered`].
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<InferenceResponse, ServeError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(result) => {
+                self.answered.set(true);
+                result
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::Timeout { waited: timeout }),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(self.disconnect_error()),
+        }
+    }
+
+    /// A channel that disconnected without a (further) final word:
+    /// already answered if an earlier wait collected it, the shutdown
+    /// itself during shutdown, a dead executor otherwise.
+    fn disconnect_error(&self) -> ServeError {
+        if self.answered.get() {
+            ServeError::AlreadyAnswered
+        } else if self.shared.is_shutting_down() {
+            ServeError::ShuttingDown
+        } else {
+            ServeError::DeviceLost
+        }
+    }
+}
+
+/// The service-side end of a ticket. Exactly one of these exists per
+/// admitted request; consuming it with [`respond`](Responder::respond)
+/// — or dropping it — decrements the shared in-flight depth counter
+/// exactly once.
+pub struct Responder {
+    tx: Option<mpsc::Sender<ServeResult>>,
+    shared: Arc<ServeShared>,
+}
+
+impl Responder {
+    /// Create a connected (responder, ticket) pair and count the request
+    /// into the in-flight depth.
+    pub(crate) fn admit(shared: &Arc<ServeShared>) -> (Responder, Ticket) {
+        let (tx, rx) = mpsc::channel();
+        shared.depth.fetch_add(1, Ordering::AcqRel);
+        (
+            Responder { tx: Some(tx), shared: Arc::clone(shared) },
+            Ticket { rx, shared: Arc::clone(shared), answered: Cell::new(false) },
+        )
+    }
+
+    /// Deliver the request's final word. `Err(())` means the client hung
+    /// up (dropped its ticket) before the response arrived — callers
+    /// count that into `CoordinatorMetrics::responses_dropped` instead
+    /// of panicking or silently discarding.
+    pub(crate) fn respond(mut self, result: ServeResult) -> Result<(), ()> {
+        match self.tx.take() {
+            Some(tx) => tx.send(result).map_err(|_| ()),
+            None => Err(()),
+        }
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        // Runs exactly once per responder (including at the tail of
+        // `respond`): the request has left the system either way.
+        self.shared.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::AdmissionPolicy;
+
+    fn shared() -> Arc<ServeShared> {
+        ServeShared::new(4, AdmissionPolicy::Block)
+    }
+
+    #[test]
+    fn respond_reaches_ticket_and_depth_balances() {
+        let s = shared();
+        let (responder, ticket) = Responder::admit(&s);
+        assert_eq!(s.depth(), 1);
+        responder
+            .respond(Err(ServeError::DeviceLost))
+            .expect("ticket still listening");
+        assert_eq!(s.depth(), 0, "responding releases the slot");
+        assert_eq!(ticket.wait(), Err(ServeError::DeviceLost));
+    }
+
+    #[test]
+    fn dropped_responder_shows_as_device_lost_then_shutting_down() {
+        let s = shared();
+        let (responder, ticket) = Responder::admit(&s);
+        drop(responder);
+        assert_eq!(s.depth(), 0, "dropping also releases the slot");
+        assert_eq!(ticket.wait_timeout(Duration::from_millis(10)), Err(ServeError::DeviceLost));
+
+        let (responder, ticket) = Responder::admit(&s);
+        s.begin_shutdown();
+        drop(responder);
+        assert_eq!(ticket.wait(), Err(ServeError::ShuttingDown));
+    }
+
+    #[test]
+    fn wait_timeout_expires_but_ticket_survives() {
+        let s = shared();
+        let (responder, ticket) = Responder::admit(&s);
+        let got = ticket.wait_timeout(Duration::from_millis(5));
+        assert_eq!(got, Err(ServeError::Timeout { waited: Duration::from_millis(5) }));
+        responder.respond(Err(ServeError::ShuttingDown)).expect("still listening");
+        assert_eq!(ticket.wait(), Err(ServeError::ShuttingDown));
+    }
+
+    #[test]
+    fn second_wait_after_success_is_already_answered_not_device_lost() {
+        let s = shared();
+        let (responder, ticket) = Responder::admit(&s);
+        responder.respond(Err(ServeError::ShuttingDown)).expect("listening");
+        assert!(ticket.wait_timeout(Duration::from_millis(100)).is_err());
+        // The channel is now disconnected, but the ticket knows its word
+        // was collected — no phantom DeviceLost on a healthy service.
+        assert_eq!(
+            ticket.wait_timeout(Duration::from_millis(10)),
+            Err(ServeError::AlreadyAnswered)
+        );
+        assert_eq!(ticket.wait(), Err(ServeError::AlreadyAnswered));
+    }
+
+    #[test]
+    fn hung_up_client_is_reported_to_the_responder() {
+        let s = shared();
+        let (responder, ticket) = Responder::admit(&s);
+        drop(ticket);
+        assert!(responder.respond(Err(ServeError::DeviceLost)).is_err());
+        assert_eq!(s.depth(), 0);
+    }
+}

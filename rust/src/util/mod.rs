@@ -8,3 +8,39 @@ mod table;
 
 pub use rng::SplitMix64;
 pub use table::TextTable;
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant mutex lock for the serving request path: a client or
+/// monitor thread that panicked while holding the metrics lock must not
+/// cascade into every other thread that touches the same counters. The
+/// guarded data here (monotonic counters, ring buffers) stays internally
+/// consistent even if a writer died mid-update elsewhere.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-tolerant condvar wait (same rationale as [`lock`]).
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod sync_tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*lock(&m), 7, "poisoned lock still readable");
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 8);
+    }
+}

@@ -7,7 +7,8 @@ use tcd_npe::conv::{
     im2col, lower_cnn, CnnEngine, CnnLayer, CnnTopology, Conv2dLayer, Pool2dLayer, PoolKind,
     QuantizedCnn, TensorShape,
 };
-use tcd_npe::coordinator::{BatcherConfig, Coordinator};
+use tcd_npe::coordinator::BatcherConfig;
+use tcd_npe::serve::NpeService;
 use tcd_npe::mapper::{MapperTree, NpeGeometry};
 use tcd_npe::model::zoo::{cnn_benchmark_by_name, cnn_benchmarks};
 use tcd_npe::model::quantize_acc;
@@ -227,16 +228,19 @@ fn coordinator_serves_lenet_traffic() {
     let cnn = QuantizedCnn::synthesize(lenet.topology.clone(), 41);
     let inputs = cnn.synth_inputs(4, 43);
     let expect = cnn.forward_batch(&inputs);
-    let coord = Coordinator::spawn_cnn(
-        cnn,
-        NpeGeometry::PAPER,
-        BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(50) },
-    );
-    let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
-    for (rx, want) in rxs.into_iter().zip(expect) {
-        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    let service = NpeService::builder(cnn)
+        .geometry(NpeGeometry::PAPER)
+        .batcher(BatcherConfig { batch_size: 4, max_wait: Duration::from_millis(50) })
+        .build()
+        .unwrap();
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| service.submit(x.clone()).expect("admitted"))
+        .collect();
+    for (t, want) in tickets.into_iter().zip(expect) {
+        let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(resp.output, want);
         assert!(resp.npe_energy_pj > 0.0);
     }
-    coord.shutdown().unwrap();
+    service.shutdown().unwrap();
 }

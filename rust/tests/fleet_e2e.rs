@@ -3,13 +3,13 @@
 //! delivery through shutdown-with-queued-work, and the schedule-cache
 //! correctness property.
 
-use std::sync::Arc;
 use std::time::Duration;
 use tcd_npe::conv::QuantizedCnn;
-use tcd_npe::coordinator::{BatcherConfig, Coordinator, ServedModel};
+use tcd_npe::coordinator::{BatcherConfig, ServedModel};
 use tcd_npe::fleet::{poisson_arrivals, run_open_loop, Arrival, LoadGenConfig};
 use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry, ScheduleCache};
 use tcd_npe::model::{benchmarks, cnn_benchmarks, QuantizedMlp};
+use tcd_npe::serve::NpeService;
 
 /// A heterogeneous 4-device fleet: responses must be bit-exact no
 /// matter which geometry executes the batch.
@@ -27,8 +27,8 @@ fn batcher() -> BatcherConfig {
 }
 
 /// Drive the stream and unwrap every response (panics on any loss).
-fn serve_stream(coord: &Coordinator, arrivals: &[Arrival]) -> Vec<Vec<i16>> {
-    run_open_loop(coord, arrivals, Duration::from_secs(120))
+fn serve_stream(service: &NpeService, arrivals: &[Arrival]) -> Vec<Vec<i16>> {
+    run_open_loop(service, arrivals, Duration::from_secs(120))
         .into_iter()
         .enumerate()
         .map(|(i, o)| o.unwrap_or_else(|| panic!("request {i} lost")))
@@ -49,23 +49,30 @@ fn fleet_matches_single_coordinator_on_full_mlp_zoo() {
         let expect: Vec<Vec<i16>> =
             arrivals.iter().map(|a| mlp.forward_sample(&a.input)).collect();
 
-        // The pre-fleet single-NPE coordinator path.
-        let single = Coordinator::spawn(mlp.clone(), NpeGeometry::PAPER, batcher(), None);
+        // The single-NPE service path.
+        let single = NpeService::builder(mlp.clone())
+            .geometry(NpeGeometry::PAPER)
+            .batcher(batcher())
+            .build()
+            .unwrap();
         let got_single = serve_stream(&single, &arrivals);
         single.shutdown().unwrap();
 
-        // fleet(1): must match the single coordinator bit-exactly.
-        let fleet1 = Coordinator::spawn_fleet(
-            ServedModel::Mlp(mlp.clone()),
-            vec![NpeGeometry::PAPER],
-            batcher(),
-        );
+        // fleet(1): must match the single service bit-exactly.
+        let fleet1 = NpeService::builder(mlp.clone())
+            .devices([NpeGeometry::PAPER])
+            .batcher(batcher())
+            .build()
+            .unwrap();
         let got_fleet1 = serve_stream(&fleet1, &arrivals);
         fleet1.shutdown().unwrap();
 
         // fleet(4), heterogeneous geometries.
-        let fleet4 =
-            Coordinator::spawn_fleet(ServedModel::Mlp(mlp.clone()), four_geometries(), batcher());
+        let fleet4 = NpeService::builder(mlp.clone())
+            .devices(four_geometries())
+            .batcher(batcher())
+            .build()
+            .unwrap();
         let got_fleet4 = serve_stream(&fleet4, &arrivals);
         fleet4.shutdown().unwrap();
 
@@ -89,12 +96,19 @@ fn fleet_matches_single_coordinator_on_cnn_zoo() {
         let expect: Vec<Vec<i16>> =
             arrivals.iter().map(|a| cnn.forward_sample(&a.input)).collect();
 
-        let single = Coordinator::spawn_cnn(cnn.clone(), NpeGeometry::PAPER, batcher());
+        let single = NpeService::builder(cnn.clone())
+            .geometry(NpeGeometry::PAPER)
+            .batcher(batcher())
+            .build()
+            .unwrap();
         let got_single = serve_stream(&single, &arrivals);
         single.shutdown().unwrap();
 
-        let fleet4 =
-            Coordinator::spawn_fleet(ServedModel::Cnn(cnn.clone()), four_geometries(), batcher());
+        let fleet4 = NpeService::builder(cnn.clone())
+            .devices(four_geometries())
+            .batcher(batcher())
+            .build()
+            .unwrap();
         let got_fleet4 = serve_stream(&fleet4, &arrivals);
         fleet4.shutdown().unwrap();
 
@@ -118,13 +132,13 @@ fn same_seeded_stream_is_deterministic_across_fleet_runs() {
     // ...and two independent 4-device fleets must answer it identically,
     // regardless of how the batches landed on devices.
     let run = |arrivals: &[Arrival]| {
-        let coord = Coordinator::spawn_fleet(
-            ServedModel::Mlp(mlp.clone()),
-            four_geometries(),
-            BatcherConfig::new(4, Duration::from_millis(1)),
-        );
-        let out = serve_stream(&coord, arrivals);
-        coord.shutdown().unwrap();
+        let service = NpeService::builder(mlp.clone())
+            .devices(four_geometries())
+            .batcher(BatcherConfig::new(4, Duration::from_millis(1)))
+            .build()
+            .unwrap();
+        let out = serve_stream(&service, arrivals);
+        service.shutdown().unwrap();
         out
     };
     assert_eq!(run(&arrivals), run(&again));
@@ -139,23 +153,26 @@ fn shutdown_with_queued_work_answers_every_request_exactly_once() {
     let mlp = QuantizedMlp::synthesize(b.topology, 0xF10C);
     let inputs = mlp.synth_inputs(50, 0x10AD);
     let expect = mlp.forward_batch(&inputs);
-    let coord = Coordinator::spawn_fleet(
-        ServedModel::Mlp(mlp.clone()),
-        four_geometries(),
-        BatcherConfig::new(8, Duration::from_secs(30)),
-    );
-    let client = coord.client();
-    let rxs: Vec<_> = inputs.iter().map(|x| client.submit(x.clone())).collect();
-    let metrics = Arc::clone(&coord.metrics);
-    coord.shutdown().unwrap();
+    let service = NpeService::builder(mlp.clone())
+        .devices(four_geometries())
+        .batcher(BatcherConfig::new(8, Duration::from_secs(30)))
+        .build()
+        .unwrap();
+    let client = service.client();
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| client.submit(x.clone()).expect("admitted"))
+        .collect();
+    let metrics = service.metrics_handle();
+    service.shutdown().unwrap();
 
-    for (i, (rx, want)) in rxs.into_iter().zip(expect).enumerate() {
-        let resp = rx
-            .recv_timeout(Duration::from_secs(5))
+    for (i, (t, want)) in tickets.into_iter().zip(expect).enumerate() {
+        let resp = t
+            .wait_timeout(Duration::from_secs(5))
             .unwrap_or_else(|_| panic!("request {i} lost in shutdown"));
         assert_eq!(resp.output, want, "request {i} answered with wrong batch row");
         assert!(
-            rx.recv_timeout(Duration::from_millis(20)).is_err(),
+            t.wait_timeout(Duration::from_millis(20)).is_err(),
             "request {i} answered more than once"
         );
     }

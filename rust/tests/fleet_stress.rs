@@ -1,15 +1,17 @@
-//! Coordinator/fleet stress: 32 concurrent client threads against a
-//! small batcher — no deadlock (bounded wall clock), monotonically
-//! consistent metrics, and wrong-length requests still observable in
-//! the `rejected` counter (regression guard for the PR-1 fix).
+//! Service/fleet stress: 32 concurrent client threads against a small
+//! batcher through the `NpeService` facade — no deadlock (bounded wall
+//! clock), monotonically consistent metrics, and wrong-length requests
+//! refused at the submit gate yet still observable in the `rejected`
+//! counter (regression guard for the PR-1 fix).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tcd_npe::coordinator::metrics::LATENCY_SAMPLE_CAP;
-use tcd_npe::coordinator::{BatcherConfig, Coordinator, ServedModel};
+use tcd_npe::coordinator::BatcherConfig;
 use tcd_npe::mapper::NpeGeometry;
 use tcd_npe::model::{MlpTopology, QuantizedMlp};
+use tcd_npe::serve::{NpeService, ServeError};
 
 const CLIENTS: usize = 32;
 const VALID_PER_CLIENT: usize = 12;
@@ -24,10 +26,10 @@ fn stress_mlp() -> QuantizedMlp {
 /// Watch the metrics while the storm runs: every counter must be
 /// non-decreasing and internally consistent in every snapshot.
 fn spawn_monitor(
-    coord: &Coordinator,
+    service: &NpeService,
     done: Arc<AtomicBool>,
 ) -> std::thread::JoinHandle<u64> {
-    let metrics = Arc::clone(&coord.metrics);
+    let metrics = service.metrics_handle();
     std::thread::spawn(move || {
         let mut last_requests = 0u64;
         let mut last_rejected = 0u64;
@@ -69,33 +71,33 @@ fn spawn_monitor(
     })
 }
 
-fn run_stress(coord: Coordinator, mlp: &QuantizedMlp) {
+fn run_stress(service: NpeService, mlp: &QuantizedMlp) {
     let t0 = Instant::now();
     let done = Arc::new(AtomicBool::new(false));
-    let monitor = spawn_monitor(&coord, Arc::clone(&done));
+    let monitor = spawn_monitor(&service, Arc::clone(&done));
 
     let workers: Vec<_> = (0..CLIENTS)
         .map(|c| {
-            let client = coord.client();
+            let client = service.client();
             let mlp = mlp.clone();
             std::thread::spawn(move || {
                 let inputs = mlp.synth_inputs(VALID_PER_CLIENT, 0xC11E57 + c as u64);
                 let expect = mlp.forward_batch(&inputs);
-                let mut rxs = Vec::new();
+                let mut tickets = Vec::new();
                 for (i, x) in inputs.iter().enumerate() {
-                    rxs.push((client.submit(x.clone()), i));
+                    tickets.push((client.submit(x.clone()).expect("valid request admitted"), i));
                     if i < INVALID_PER_CLIENT {
-                        // Interleave malformed traffic (wrong length).
-                        let bad = client.submit(vec![7; 3]);
-                        assert!(
-                            bad.recv_timeout(Duration::from_secs(60)).is_err(),
-                            "malformed request must disconnect, not answer"
-                        );
+                        // Interleave malformed traffic (wrong length):
+                        // refused at the submit gate with a typed error.
+                        match client.submit(vec![7; 3]) {
+                            Err(ServeError::ShapeMismatch { expected: 16, got: 3 }) => {}
+                            other => panic!("malformed submit must be ShapeMismatch: {other:?}"),
+                        }
                     }
                 }
-                for (rx, i) in rxs {
-                    let resp = rx
-                        .recv_timeout(Duration::from_secs(60))
+                for (t, i) in tickets {
+                    let resp = t
+                        .wait_timeout(Duration::from_secs(60))
                         .unwrap_or_else(|e| panic!("client {c} request {i}: {e}"));
                     assert_eq!(resp.output, expect[i], "client {c} request {i}");
                 }
@@ -115,9 +117,9 @@ fn run_stress(coord: Coordinator, mlp: &QuantizedMlp) {
         t0.elapsed()
     );
 
-    let metrics = Arc::clone(&coord.metrics);
-    let cache = Arc::clone(&coord.cache);
-    coord.shutdown().unwrap();
+    let metrics = service.metrics_handle();
+    let cache = service.cache();
+    service.shutdown().unwrap();
     let m = metrics.lock().unwrap().clone();
     assert_eq!(m.requests, (CLIENTS * VALID_PER_CLIENT) as u64, "no valid request lost");
     assert_eq!(
@@ -135,29 +137,28 @@ fn run_stress(coord: Coordinator, mlp: &QuantizedMlp) {
 }
 
 #[test]
-fn stress_single_coordinator_32_clients() {
+fn stress_single_service_32_clients() {
     let mlp = stress_mlp();
-    let coord = Coordinator::spawn(
-        mlp.clone(),
-        NpeGeometry::WALKTHROUGH,
-        BatcherConfig::new(4, Duration::from_millis(1)),
-        None,
-    );
-    run_stress(coord, &mlp);
+    let service = NpeService::builder(mlp.clone())
+        .geometry(NpeGeometry::WALKTHROUGH)
+        .batcher(BatcherConfig::new(4, Duration::from_millis(1)))
+        .build()
+        .unwrap();
+    run_stress(service, &mlp);
 }
 
 #[test]
-fn stress_fleet_coordinator_32_clients() {
+fn stress_fleet_service_32_clients() {
     let mlp = stress_mlp();
-    let coord = Coordinator::spawn_fleet(
-        ServedModel::Mlp(mlp.clone()),
-        vec![
+    let service = NpeService::builder(mlp.clone())
+        .devices([
             NpeGeometry::PAPER,
             NpeGeometry::WALKTHROUGH,
             NpeGeometry::new(8, 4),
             NpeGeometry::new(4, 4),
-        ],
-        BatcherConfig::new(4, Duration::from_millis(1)),
-    );
-    run_stress(coord, &mlp);
+        ])
+        .batcher(BatcherConfig::new(4, Duration::from_millis(1)))
+        .build()
+        .unwrap();
+    run_stress(service, &mlp);
 }

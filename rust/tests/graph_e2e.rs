@@ -6,10 +6,10 @@
 //! exactly re-expressed: `into_graph()` reproduces the OS/CNN engines'
 //! outputs bit-for-bit.
 
-use std::sync::Arc;
 use std::time::Duration;
 use tcd_npe::conv::{CnnEngine, QuantizedCnn};
-use tcd_npe::coordinator::{BatcherConfig, Coordinator, ServedModel};
+use tcd_npe::coordinator::BatcherConfig;
+use tcd_npe::serve::NpeService;
 use tcd_npe::dataflow::{DataflowEngine, OsEngine};
 use tcd_npe::graph::{lower_graph, optimize, GraphEngine, QuantizedGraph};
 use tcd_npe::mapper::{MapperTree, NpeGeometry};
@@ -51,22 +51,24 @@ fn zoo_graphs_serve_bit_exactly_on_single_backend() {
         let q = QuantizedGraph::synthesize(b.graph.clone(), SEED ^ 1);
         let inputs = q.synth_inputs(5, 0xBEE5);
         let expect = q.forward_batch(&inputs);
-        let coord = Coordinator::spawn_graph(
-            q,
-            NpeGeometry::PAPER,
-            BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(20) },
-        );
-        let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
-        for (rx, want) in rxs.into_iter().zip(expect) {
-            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let service = NpeService::builder(q)
+            .geometry(NpeGeometry::PAPER)
+            .batcher(BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(20) })
+            .build()
+            .unwrap();
+        let tickets: Vec<_> = inputs
+            .iter()
+            .map(|x| service.submit(x.clone()).expect("admitted"))
+            .collect();
+        for (t, want) in tickets.into_iter().zip(expect) {
+            let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
             assert_eq!(resp.output, want, "{}: served == reference", b.network);
             assert!(resp.npe_time_ns > 0.0);
         }
-        let metrics = coord.metrics.lock().unwrap().clone();
+        let metrics = service.metrics();
         assert_eq!(metrics.requests, 5, "{}", b.network);
         assert!(metrics.cache_hits + metrics.cache_misses > 0, "{}", b.network);
-        drop(metrics);
-        coord.shutdown().unwrap();
+        service.shutdown().unwrap();
     }
 }
 
@@ -78,19 +80,22 @@ fn zoo_graphs_serve_bit_exactly_on_fleet_backend() {
         let q = QuantizedGraph::synthesize(b.graph.clone(), SEED ^ 2);
         let inputs = q.synth_inputs(8, 0xF1EE7);
         let expect = q.forward_batch(&inputs);
-        let coord = Coordinator::spawn_fleet(
-            ServedModel::Graph(q),
-            vec![NpeGeometry::PAPER, NpeGeometry::WALKTHROUGH],
-            BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(5) },
-        );
-        let client = coord.client();
-        let rxs: Vec<_> = inputs.iter().map(|x| client.submit(x.clone())).collect();
-        for (rx, want) in rxs.into_iter().zip(expect) {
-            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let service = NpeService::builder(q)
+            .devices([NpeGeometry::PAPER, NpeGeometry::WALKTHROUGH])
+            .batcher(BatcherConfig { batch_size: 3, max_wait: Duration::from_millis(5) })
+            .build()
+            .unwrap();
+        let client = service.client();
+        let tickets: Vec<_> = inputs
+            .iter()
+            .map(|x| client.submit(x.clone()).expect("admitted"))
+            .collect();
+        for (t, want) in tickets.into_iter().zip(expect) {
+            let resp = t.wait_timeout(Duration::from_secs(30)).unwrap();
             assert_eq!(resp.output, want, "{}: fleet == reference", b.network);
         }
-        let metrics_handle = Arc::clone(&coord.metrics);
-        coord.shutdown().unwrap();
+        let metrics_handle = service.metrics_handle();
+        service.shutdown().unwrap();
         let metrics = metrics_handle.lock().unwrap().clone();
         assert_eq!(metrics.requests, 8, "{}", b.network);
         assert_eq!(metrics.devices.len(), 2);

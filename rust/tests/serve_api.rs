@@ -1,0 +1,396 @@
+//! The serving-API redesign contract, end to end:
+//!
+//! * builder misconfiguration is a typed `InvalidConfig`, not a hang;
+//! * shape mismatch is refused at submit, before queue admission;
+//! * `Reject` admission returns `QueueFull` at 2×-depth pressure on a
+//!   1-device fleet; `ShedOldest` bounds the backlog by shedding the
+//!   oldest tickets;
+//! * `wait_timeout` expiry is non-destructive; shutdown races resolve
+//!   as `ShuttingDown`; hung-up clients are a counted metric;
+//! * the deprecated `Coordinator::spawn_*` shims are bit-exact against
+//!   the builder on zoo models;
+//! * the coordinator/fleet/serve request path carries zero
+//!   `unwrap()` / `expect(` / `panic!` / `unreachable!` (grep-enforced
+//!   below).
+
+use std::time::Duration;
+use tcd_npe::coordinator::BatcherConfig;
+use tcd_npe::fleet::DeviceSpec;
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::{benchmark_by_name, MlpTopology, QuantizedMlp};
+use tcd_npe::serve::{AdmissionPolicy, NpeService, ServeError};
+
+fn mlp() -> QuantizedMlp {
+    QuantizedMlp::synthesize(MlpTopology::new(vec![16, 12, 4]), 0x5E12)
+}
+
+fn batcher(batch: usize, wait: Duration) -> BatcherConfig {
+    BatcherConfig { batch_size: batch, max_wait: wait }
+}
+
+// ---------------------------------------------------------------- builder
+
+#[test]
+fn builder_rejects_zero_batch_size() {
+    let err = NpeService::builder(mlp())
+        .batcher(batcher(0, Duration::from_millis(1)))
+        .build()
+        .err()
+        .expect("zero batch size must not build");
+    assert!(
+        matches!(&err, ServeError::InvalidConfig { reason } if reason.contains("batch_size")),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn builder_rejects_zero_devices() {
+    let err = NpeService::builder(mlp())
+        .devices(Vec::<DeviceSpec>::new())
+        .build()
+        .err()
+        .expect("zero devices must not build");
+    assert!(
+        matches!(&err, ServeError::InvalidConfig { reason } if reason.contains("device")),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn builder_rejects_zero_cache_and_zero_admission_depth() {
+    assert!(matches!(
+        NpeService::builder(mlp()).cache(0).build(),
+        Err(ServeError::InvalidConfig { .. })
+    ));
+    assert!(matches!(
+        NpeService::builder(mlp())
+            .admission(AdmissionPolicy::Reject { max_depth: 0 })
+            .build(),
+        Err(ServeError::InvalidConfig { .. })
+    ));
+    assert!(matches!(
+        NpeService::builder(mlp())
+            .admission(AdmissionPolicy::ShedOldest { max_depth: 0 })
+            .build(),
+        Err(ServeError::InvalidConfig { .. })
+    ));
+}
+
+// ------------------------------------------------------- submit-time checks
+
+#[test]
+fn shape_mismatch_is_refused_at_submit() {
+    let svc = NpeService::builder(mlp())
+        .geometry(NpeGeometry::WALKTHROUGH)
+        .batcher(batcher(2, Duration::from_millis(5)))
+        .build()
+        .unwrap();
+    let err = svc.submit(vec![1; 3]).expect_err("wrong length refused");
+    assert_eq!(err, ServeError::ShapeMismatch { expected: 16, got: 3 });
+    assert_eq!(svc.metrics().rejected_requests, 1, "refusal is observable");
+    assert_eq!(svc.in_flight(), 0, "refused requests never occupy queue space");
+    // Valid traffic keeps flowing.
+    let m = mlp();
+    let good = m.synth_inputs(1, 7)[0].clone();
+    let expect = m.forward_batch(&[good.clone()]);
+    let resp = svc.submit(good).expect("admitted").wait().expect("answered");
+    assert_eq!(resp.output, expect[0]);
+    svc.shutdown().unwrap();
+}
+
+#[test]
+fn reject_admission_returns_queue_full_on_one_device_fleet() {
+    // Long max_wait + big batch: the four admitted requests sit in the
+    // batcher, so the in-flight depth deterministically stays at 4 when
+    // the fifth submit arrives.
+    let m = mlp();
+    let svc = NpeService::builder(m.clone())
+        .devices([NpeGeometry::PAPER])
+        .batcher(batcher(64, Duration::from_secs(5)))
+        .admission(AdmissionPolicy::Reject { max_depth: 4 })
+        .build()
+        .unwrap();
+    let inputs = m.synth_inputs(6, 0xADA);
+    let expect = m.forward_batch(&inputs);
+    let mut tickets = Vec::new();
+    for x in inputs.iter().take(4) {
+        tickets.push(svc.submit(x.clone()).expect("under the bound"));
+    }
+    assert_eq!(svc.in_flight(), 4);
+    for x in inputs.iter().skip(4) {
+        match svc.submit(x.clone()) {
+            Err(ServeError::QueueFull { depth, max_depth }) => {
+                assert_eq!(max_depth, 4);
+                assert!(depth >= 4, "observed depth {depth}");
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+    }
+    assert_eq!(svc.metrics().shed_requests, 2, "both refusals counted");
+    // The admitted four are still answered bit-exactly through shutdown.
+    svc.shutdown().unwrap();
+    for (t, want) in tickets.into_iter().zip(expect) {
+        assert_eq!(t.wait_timeout(Duration::from_secs(5)).unwrap().output, want);
+    }
+}
+
+#[test]
+fn shed_oldest_bounds_the_backlog_and_sheds_the_oldest() {
+    // batch 16 never fills; after the 300 ms flush deadline the loop
+    // sees all six requests, sheds the four oldest down to the bound of
+    // two, and answers the two newest.
+    let m = mlp();
+    let svc = NpeService::builder(m.clone())
+        .geometry(NpeGeometry::WALKTHROUGH)
+        .batcher(batcher(16, Duration::from_millis(300)))
+        .admission(AdmissionPolicy::ShedOldest { max_depth: 2 })
+        .build()
+        .unwrap();
+    let inputs = m.synth_inputs(6, 0x5EED);
+    let expect = m.forward_batch(&inputs);
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| svc.submit(x.clone()).expect("ShedOldest admits everything"))
+        .collect();
+    let mut outcomes = Vec::new();
+    for t in tickets {
+        outcomes.push(t.wait_timeout(Duration::from_secs(10)));
+    }
+    for (i, o) in outcomes.iter().take(4).enumerate() {
+        assert!(
+            matches!(o, Err(ServeError::QueueFull { max_depth: 2, .. })),
+            "oldest request {i} must be shed, got {o:?}"
+        );
+    }
+    for (i, o) in outcomes.iter().enumerate().skip(4) {
+        let resp = o.as_ref().unwrap_or_else(|e| panic!("newest request {i} lost: {e}"));
+        assert_eq!(resp.output, expect[i], "newest requests answered bit-exactly");
+    }
+    assert_eq!(svc.metrics().shed_requests, 4);
+    svc.shutdown().unwrap();
+}
+
+// ------------------------------------------------------------ ticket waits
+
+#[test]
+fn wait_timeout_expiry_is_typed_and_non_destructive() {
+    let m = mlp();
+    let svc = NpeService::builder(m.clone())
+        .geometry(NpeGeometry::WALKTHROUGH)
+        .batcher(batcher(64, Duration::from_secs(30)))
+        .build()
+        .unwrap();
+    let input = m.synth_inputs(1, 3)[0].clone();
+    let expect = m.forward_batch(&[input.clone()]);
+    let ticket = svc.submit(input).expect("admitted");
+    // The batch can't fill and the deadline is far away: expiry.
+    match ticket.wait_timeout(Duration::from_millis(50)) {
+        Err(ServeError::Timeout { waited }) => {
+            assert_eq!(waited, Duration::from_millis(50));
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    // The ticket survives the expiry: shutdown flushes and the same
+    // ticket then yields the real response.
+    svc.shutdown().unwrap();
+    let resp = ticket.wait().expect("flushed on shutdown");
+    assert_eq!(resp.output, expect[0]);
+}
+
+#[test]
+fn submits_racing_shutdown_get_shutting_down() {
+    let m = mlp();
+    let svc = NpeService::builder(m.clone())
+        .geometry(NpeGeometry::WALKTHROUGH)
+        .batcher(batcher(4, Duration::from_millis(1)))
+        .build()
+        .unwrap();
+    let client = svc.client();
+    svc.shutdown().unwrap();
+    for _ in 0..3 {
+        assert_eq!(
+            client.submit(m.synth_inputs(1, 1)[0].clone()).expect_err("service gone"),
+            ServeError::ShuttingDown
+        );
+    }
+}
+
+#[test]
+fn hung_up_client_is_a_counted_metric_not_a_crash() {
+    // A batcher that can only flush at shutdown makes the race-free
+    // order certain: the ticket is dropped while its request is still
+    // queued, so the eventual response send must find a dead client.
+    let m = mlp();
+    let svc = NpeService::builder(m.clone())
+        .geometry(NpeGeometry::WALKTHROUGH)
+        .batcher(batcher(64, Duration::from_secs(30)))
+        .build()
+        .unwrap();
+    let ticket = svc.submit(m.synth_inputs(1, 9)[0].clone()).expect("admitted");
+    drop(ticket); // client gives up immediately
+    let metrics = svc.metrics_handle();
+    svc.shutdown().unwrap(); // the flush still executes the request
+    let m = metrics.lock().unwrap().clone();
+    assert_eq!(m.requests, 1, "request was executed");
+    assert_eq!(m.responses_dropped, 1, "the dead client is observable");
+}
+
+#[test]
+fn fleet_shed_oldest_never_loses_a_ticket() {
+    // Flood a 1-device fleet under ShedOldest: every ticket must resolve
+    // — answered or QueueFull — and the counts must partition the flood.
+    let m = mlp();
+    let svc = NpeService::builder(m.clone())
+        .devices([NpeGeometry::WALKTHROUGH])
+        .batcher(batcher(1, Duration::ZERO))
+        .admission(AdmissionPolicy::ShedOldest { max_depth: 1 })
+        .build()
+        .unwrap();
+    let inputs = m.synth_inputs(16, 0xF100D);
+    let expect = m.forward_batch(&inputs);
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| svc.submit(x.clone()).expect("admits everything"))
+        .collect();
+    let mut answered = 0u64;
+    let mut shed = 0u64;
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait_timeout(Duration::from_secs(30)) {
+            Ok(resp) => {
+                answered += 1;
+                assert_eq!(resp.output, expect[i], "answered responses stay bit-exact");
+            }
+            Err(ServeError::QueueFull { .. }) => shed += 1,
+            other => panic!("request {i}: unexpected outcome {other:?}"),
+        }
+    }
+    assert_eq!(answered + shed, 16, "every ticket resolves exactly once");
+    assert!(answered >= 1, "the newest work still gets served");
+    let metrics = svc.metrics();
+    assert_eq!(metrics.shed_requests, shed);
+    svc.shutdown().unwrap();
+}
+
+// ----------------------------------------------------- deprecated shims
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_are_bit_exact_against_the_builder() {
+    use tcd_npe::coordinator::{Coordinator, ServedModel};
+
+    let bench = benchmark_by_name("Iris").expect("Iris is in Table IV");
+    let m = QuantizedMlp::synthesize(bench.topology.clone(), 0xF1EE7);
+    let inputs = m.synth_inputs(6, 0x0DD);
+    let expect = m.forward_batch(&inputs);
+    let cfg = batcher(3, Duration::from_millis(5));
+
+    // Old spawn == builder, single path.
+    let old = Coordinator::spawn(m.clone(), NpeGeometry::PAPER, cfg, None);
+    let new = NpeService::builder(m.clone())
+        .geometry(NpeGeometry::PAPER)
+        .batcher(cfg)
+        .build()
+        .unwrap();
+    for (x, want) in inputs.iter().zip(&expect) {
+        let via_old = old.submit(x.clone()).unwrap().wait().unwrap().output;
+        let via_new = new.submit(x.clone()).unwrap().wait().unwrap().output;
+        assert_eq!(&via_old, want, "legacy spawn == reference");
+        assert_eq!(via_old, via_new, "legacy spawn == builder, bit for bit");
+    }
+    old.shutdown().unwrap();
+    new.shutdown().unwrap();
+
+    // Old spawn_fleet == builder.devices, heterogeneous fleet.
+    let old = Coordinator::spawn_fleet(
+        ServedModel::Mlp(m.clone()),
+        vec![NpeGeometry::PAPER, NpeGeometry::WALKTHROUGH],
+        cfg,
+    );
+    let new = NpeService::builder(m.clone())
+        .devices([NpeGeometry::PAPER, NpeGeometry::WALKTHROUGH])
+        .batcher(cfg)
+        .build()
+        .unwrap();
+    for (x, want) in inputs.iter().zip(&expect) {
+        let via_old = old.client().submit(x.clone()).unwrap().wait().unwrap().output;
+        let via_new = new.client().submit(x.clone()).unwrap().wait().unwrap().output;
+        assert_eq!(&via_old, want, "legacy fleet == reference");
+        assert_eq!(via_old, via_new, "legacy fleet == builder, bit for bit");
+    }
+    old.shutdown().unwrap();
+    new.shutdown().unwrap();
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_graph_shim_matches_builder() {
+    use tcd_npe::coordinator::Coordinator;
+    use tcd_npe::graph::QuantizedGraph;
+    use tcd_npe::model::zoo::graph_benchmarks;
+
+    let benches = graph_benchmarks();
+    let b = &benches[0];
+    let q = QuantizedGraph::synthesize(b.graph.clone(), 0x9AF);
+    let inputs = q.synth_inputs(3, 0xBEE5);
+    let expect = q.forward_batch(&inputs);
+    let cfg = batcher(3, Duration::from_millis(5));
+    let old = Coordinator::spawn_graph(q.clone(), NpeGeometry::PAPER, cfg);
+    let new = NpeService::builder(q).geometry(NpeGeometry::PAPER).batcher(cfg).build().unwrap();
+    for (x, want) in inputs.iter().zip(&expect) {
+        assert_eq!(&old.submit(x.clone()).unwrap().wait().unwrap().output, want);
+        assert_eq!(&new.submit(x.clone()).unwrap().wait().unwrap().output, want);
+    }
+    old.shutdown().unwrap();
+    new.shutdown().unwrap();
+}
+
+// ------------------------------------------- panic-free request path (grep)
+
+/// The redesign's hard promise: no `unwrap()` / `expect(` / `panic!` /
+/// `unreachable!` / `todo!` anywhere on the coordinator/fleet/serve
+/// request path. Test code (everything from the first `#[cfg(test)]`)
+/// is exempt; `coordinator/compat.rs` is exempt by design — it is
+/// construction-time-only deprecated glue whose `expect` reproduces the
+/// legacy panic-on-misuse behaviour, and it runs before any request
+/// exists.
+#[test]
+fn request_path_carries_no_panics() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let files = [
+        "coordinator/mod.rs",
+        "coordinator/batcher.rs",
+        "coordinator/metrics.rs",
+        "fleet/mod.rs",
+        "fleet/device.rs",
+        "fleet/queue.rs",
+        "fleet/loadgen.rs",
+        "serve/mod.rs",
+        "serve/admission.rs",
+        "serve/builder.rs",
+        "serve/error.rs",
+        "serve/service.rs",
+        "serve/ticket.rs",
+    ];
+    let banned = [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+    let mut violations = Vec::new();
+    for f in files {
+        let path = root.join(f);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("request-path source {f} must exist: {e}"));
+        // Strip the trailing test module (tests may unwrap freely).
+        let body = text.split("#[cfg(test)]").next().unwrap_or("");
+        for (lineno, line) in body.lines().enumerate() {
+            let code = line.split("//").next().unwrap_or("");
+            for b in banned {
+                if code.contains(b) {
+                    violations.push(format!("{f}:{}: {} — `{b}`", lineno + 1, line.trim()));
+                }
+            }
+        }
+    }
+    assert!(
+        violations.is_empty(),
+        "panic paths found on the request path:\n{}",
+        violations.join("\n")
+    );
+}

@@ -12,7 +12,8 @@
 //! probe itself so a typo'd directory can't masquerade as a pass.
 
 use std::time::Duration;
-use tcd_npe::coordinator::{BatcherConfig, Coordinator, PjrtSpec};
+use tcd_npe::coordinator::{BatcherConfig, PjrtSpec};
+use tcd_npe::serve::NpeService;
 use tcd_npe::dataflow::{DataflowEngine, OsEngine};
 use tcd_npe::mapper::NpeGeometry;
 use tcd_npe::model::QuantizedMlp;
@@ -121,25 +122,28 @@ fn coordinator_cross_verifies_batches_end_to_end() {
         .find(|e| e.name.starts_with("iris"))
         .expect("iris artifact");
     let mlp = QuantizedMlp::synthesize(e.topology.clone(), e.seed);
-    let coord = Coordinator::spawn(
-        mlp.clone(),
-        NpeGeometry::PAPER,
-        BatcherConfig::new(e.batch, Duration::from_millis(20)),
-        Some(PjrtSpec {
+    let service = NpeService::builder(mlp.clone())
+        .geometry(NpeGeometry::PAPER)
+        .batcher(BatcherConfig::new(e.batch, Duration::from_millis(20)))
+        .pjrt(PjrtSpec {
             artifact_dir: ARTIFACT_DIR.into(),
             artifact: e.name.clone(),
-        }),
-    );
+        })
+        .build()
+        .unwrap();
     let inputs = mlp.synth_inputs(e.batch, 0x5EED);
     let expect = mlp.forward_batch(&inputs);
-    let rxs: Vec<_> = inputs.iter().map(|x| coord.submit(x.clone())).collect();
-    for (rx, want) in rxs.into_iter().zip(expect) {
-        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| service.submit(x.clone()).expect("admitted"))
+        .collect();
+    for (t, want) in tickets.into_iter().zip(expect) {
+        let resp = t.wait_timeout(Duration::from_secs(60)).expect("response");
         assert_eq!(resp.output, want);
         assert!(resp.verified, "batch must be PJRT-verified");
     }
-    let m = coord.metrics.lock().unwrap().clone();
+    let m = service.metrics();
     assert!(m.verified_batches >= 1);
-    drop(m);
-    coord.shutdown().unwrap();
+    assert_eq!(m.verify_mismatches, 0, "simulator and PJRT agree");
+    service.shutdown().unwrap();
 }
