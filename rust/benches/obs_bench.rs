@@ -1,0 +1,24 @@
+//! Bench E8 — observability overhead: the same closed-loop fleet
+//! serving run with tracing off and on (interleaved, best-of-N per
+//! mode), plus the size of the exported Chrome trace.
+//!
+//! Run: `cargo bench --bench obs_bench`
+//!
+//! Emits `BENCH_obs.json` in the working directory so CI can archive
+//! the overhead trajectory across PRs.
+
+#![deny(deprecated)]
+
+use tcd_npe::bench::{obs_bench, obs_json, render_obs, OBS_BENCH_REQUESTS, OBS_BENCH_RUNS};
+
+fn main() {
+    println!("=== observability: traced vs untraced serving ===");
+    let b = obs_bench(OBS_BENCH_RUNS, OBS_BENCH_REQUESTS);
+    println!("{}", render_obs(&b));
+
+    let json = obs_json(&b);
+    match std::fs::write("BENCH_obs.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_obs.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_obs.json: {e}"),
+    }
+}

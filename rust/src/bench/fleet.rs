@@ -57,9 +57,10 @@ pub fn fleet_row(devices: usize, load: &LoadGenConfig) -> FleetRow {
         .expect("valid fleet config");
     let responses = run_open_loop(&service, &arrivals, Duration::from_secs(60));
     let answered = responses.iter().filter(|o| o.is_some()).count() as u64;
-    let metrics = service.metrics_handle();
+    // Read through the service, not the raw handle: cache counters are
+    // overlaid from the shared schedule cache at metrics-read time.
+    let m = service.metrics();
     service.shutdown().expect("fleet service shutdown");
-    let m = metrics.lock().expect("bench metrics lock").clone();
     FleetRow {
         devices,
         requests: load.requests as u64,

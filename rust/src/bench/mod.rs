@@ -10,6 +10,7 @@ pub mod fig10;
 pub mod fleet;
 pub mod graph;
 pub mod harness;
+pub mod obs;
 pub mod table1;
 pub mod table2;
 pub mod table3;
@@ -27,6 +28,7 @@ pub use fleet::{
 };
 pub use graph::{graph_json, graph_rows, render_graph_table, GraphRow, GRAPH_BATCHES};
 pub use harness::BenchTimer;
+pub use obs::{obs_bench, obs_json, render_obs, ObsBench, OBS_BENCH_REQUESTS, OBS_BENCH_RUNS};
 pub use table1::{render_table1, table1_rows};
 pub use table2::{render_table2, table2_rows, Table2Row, STREAM_SIZES};
 pub use table3::render_table3;

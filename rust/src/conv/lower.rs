@@ -18,8 +18,10 @@ use crate::exec::{self, BackendKind, ExecCore, ExecRun, OutputPath};
 use crate::mapper::{Gamma, LayerSchedule, MapperTree, ModelSchedule, NpeGeometry, ScheduleCache};
 use crate::model::{MlpTopology, QuantizedMlp};
 use crate::npe::ActivationUnit;
+use crate::obs::TrackHandle;
 use crate::tcdmac::MacKind;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// One compute layer after lowering (pooling layers lower to nothing).
 #[derive(Debug, Clone)]
@@ -160,6 +162,8 @@ pub struct CnnEngine {
     /// Which roll backend executes the schedule (re-synced into the core
     /// on every execute, so toggling is safe).
     pub backend: BackendKind,
+    /// When set, every execute records its batch attribution here.
+    tracer: Option<TrackHandle>,
 }
 
 impl CnnEngine {
@@ -167,6 +171,7 @@ impl CnnEngine {
         Self {
             core: ExecCore::new(geometry, kind),
             backend: BackendKind::Fast,
+            tracer: None,
         }
     }
 
@@ -204,6 +209,13 @@ impl CnnEngine {
         self
     }
 
+    /// Attach a tracer track: every execute records an `execute` wall
+    /// span plus the batch's per-layer/per-round attribution.
+    pub fn with_tracer(mut self, tracer: Option<TrackHandle>) -> Self {
+        self.tracer = tracer;
+        self
+    }
+
     pub fn name(&self) -> &'static str {
         match self.kind() {
             MacKind::Tcd => "CNN im2col (TCD-NPE)",
@@ -220,6 +232,7 @@ impl CnnEngine {
     /// Each lowered GEMM dispatches through [`ExecCore::run_gemm`] — the
     /// engine owns only the im2col/pool/reshape plumbing around it.
     pub fn execute(&mut self, cnn: &QuantizedCnn, inputs: &[Vec<i16>]) -> DataflowReport {
+        let started = Instant::now();
         let b = inputs.len();
         assert!(b > 0, "empty batch");
         self.core.set_backend(self.backend);
@@ -267,6 +280,7 @@ impl CnnEngine {
                 }
             }
         }
+        let profile = std::mem::take(&mut run.profile);
         let (stats, mut mem, active_mac_cycles) = run.finish();
 
         // DRAM traffic: RLC-compressed weights + inputs in, outputs out.
@@ -280,7 +294,7 @@ impl CnnEngine {
             mem.account_dram_out(y);
         }
 
-        exec::assemble_report(
+        let report = exec::assemble_report(
             self.name(),
             self.kind(),
             self.geometry(),
@@ -288,7 +302,11 @@ impl CnnEngine {
             &stats,
             &mem,
             active_mac_cycles,
-        )
+        );
+        if let Some(t) = &self.tracer {
+            t.record_batch(started, b, profile, &report, active_mac_cycles);
+        }
+        report
     }
 
     /// One lowered GEMM Γ(rows, I, U) through the execution core —

@@ -1,16 +1,12 @@
-//! Coordinator service metrics: counters, wall-latency percentiles,
-//! schedule-cache counters and per-device (fleet lane) accounting.
+//! Coordinator service metrics: counters, wall-latency percentiles
+//! (constant-memory log-bucketed histogram), schedule-cache counters and
+//! per-device (fleet lane) accounting.
 
 use super::InferenceRequest;
 use crate::dataflow::DataflowReport;
 use crate::mapper::{CacheStats, NpeGeometry};
+use crate::obs::LogHistogram;
 use std::fmt;
-
-/// Size of the sliding latency window: once this many samples exist,
-/// new latencies overwrite the oldest ones (ring buffer), so a
-/// long-running service neither grows without bound nor freezes its
-/// percentiles on cold-start samples.
-pub const LATENCY_SAMPLE_CAP: usize = 1 << 17;
 
 /// Counters for one simulated NPE device (a fleet lane; the single-NPE
 /// coordinator path reports exactly one of these).
@@ -69,13 +65,15 @@ pub struct CoordinatorMetrics {
     /// Schedule-cache LRU evictions observed so far (0 while the
     /// working set fits the configured capacity).
     pub cache_evictions: u64,
-    /// Deepest the fleet work queue ever got (0 on the single path).
+    /// Deepest any work queue ever got: the fleet work queue in fleet
+    /// mode, the batcher's pending list on the single path.
     pub queue_peak: u64,
-    /// Sliding window over the most recent [`LATENCY_SAMPLE_CAP`] wall
-    /// latencies, ns (submit → response), in ring order.
-    pub latencies_ns: Vec<u64>,
-    /// Total latencies ever recorded (≥ `latencies_ns.len()`; the
-    /// window's ring cursor).
+    /// Wall latencies, ns (submit → response), as a constant-memory
+    /// log-bucketed histogram: O(1) record, quantiles within ~3 %
+    /// bucket error, exact extrema — see [`LogHistogram`].
+    pub latencies: LogHistogram,
+    /// Total latencies ever recorded (== `latencies.count()`; kept as a
+    /// plain counter so `render()` needn't touch the histogram).
     pub latencies_recorded: u64,
     /// One lane per simulated NPE device.
     pub devices: Vec<DeviceMetrics>,
@@ -101,24 +99,21 @@ impl CoordinatorMetrics {
         }
     }
 
-    /// Record one answered request's wall latency into the sliding
-    /// window (the most recent [`LATENCY_SAMPLE_CAP`] samples are kept).
+    /// Record one answered request's wall latency into the histogram.
+    /// O(1), no allocation after the first sample.
     pub fn record_latency(&mut self, wall_ns: u64) {
-        let slot = (self.latencies_recorded % LATENCY_SAMPLE_CAP as u64) as usize;
+        self.latencies.record(wall_ns);
         self.latencies_recorded += 1;
-        if self.latencies_ns.len() < LATENCY_SAMPLE_CAP {
-            self.latencies_ns.push(wall_ns);
-        } else {
-            self.latencies_ns[slot] = wall_ns;
-        }
     }
 
     /// One batch's worth of accounting — shared by the single-NPE
     /// dispatch path and every fleet device thread so the two can never
     /// drift (the stress monitor asserts the invariants this maintains:
-    /// one latency sample per request up to the window cap, lanes
-    /// partition the request count, cache counters match the shared
-    /// cache).
+    /// one latency sample per request, lanes partition the request
+    /// count). Schedule-cache counters are deliberately *not* written
+    /// here: concurrent lanes would race last-writer-wins on a shared
+    /// snapshot — readers overlay them once per metrics read via
+    /// [`CoordinatorMetrics::set_cache_stats`] instead.
     pub fn account_batch(
         &mut self,
         lane: usize,
@@ -126,7 +121,6 @@ impl CoordinatorMetrics {
         report: &DataflowReport,
         padded_to: usize,
         verified: bool,
-        cache: CacheStats,
     ) {
         self.batches += 1;
         self.requests += batch.len() as u64;
@@ -139,9 +133,6 @@ impl CoordinatorMetrics {
         for req in batch {
             self.record_latency(req.submitted.elapsed().as_nanos() as u64);
         }
-        self.cache_hits = cache.hits;
-        self.cache_misses = cache.misses;
-        self.cache_evictions = cache.evictions;
         if let Some(l) = self.devices.get_mut(lane) {
             l.batches += 1;
             l.requests += batch.len() as u64;
@@ -149,22 +140,22 @@ impl CoordinatorMetrics {
         }
     }
 
-    /// Several wall-latency percentiles (µs) with one sort (`ps` in
-    /// [0, 100], nearest-rank); zeros if nothing has been answered yet.
-    /// The sample vector stays unsorted so updates are O(1) on the
-    /// serving path.
+    /// Overlay one consistent snapshot of the shared schedule cache's
+    /// counters. Called by the service facade at metrics-read time, so
+    /// every snapshot reflects the cache exactly once — monotonic across
+    /// reads regardless of how many fleet lanes feed the cache.
+    pub fn set_cache_stats(&mut self, cache: CacheStats) {
+        self.cache_hits = cache.hits;
+        self.cache_misses = cache.misses;
+        self.cache_evictions = cache.evictions;
+    }
+
+    /// Several wall-latency percentiles (µs), `ps` in [0, 100]
+    /// (nearest-rank over histogram buckets, within ~3 % bucket error);
+    /// zeros if nothing has been answered yet. O(buckets) per
+    /// percentile — no clone, no sort.
     pub fn latency_percentiles_us(&self, ps: &[f64]) -> Vec<f64> {
-        if self.latencies_ns.is_empty() {
-            return vec![0.0; ps.len()];
-        }
-        let mut sorted = self.latencies_ns.clone();
-        sorted.sort_unstable();
-        ps.iter()
-            .map(|&p| {
-                let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
-                sorted[rank.clamp(1, sorted.len()) - 1] as f64 / 1e3
-            })
-            .collect()
+        ps.iter().map(|&p| self.latencies.quantile(p) as f64 / 1e3).collect()
     }
 
     /// Single wall-latency percentile, µs.
@@ -319,22 +310,42 @@ mod tests {
     }
 
     #[test]
-    fn percentiles_nearest_rank() {
-        // 1..=100 µs in ns: p50 = 50µs, p95 = 95µs, p99 = 99µs exactly
-        // under nearest-rank; empty → 0.
-        let m = CoordinatorMetrics {
-            latencies_ns: (1..=100u64).map(|v| v * 1000).collect(),
-            ..Default::default()
-        };
-        assert_eq!(m.p50_us(), 50.0);
-        assert_eq!(m.p95_us(), 95.0);
-        assert_eq!(m.p99_us(), 99.0);
+    fn percentiles_within_bucket_error() {
+        // 1..=100 µs in ns. The histogram's nearest-rank quantile sits
+        // within the bucket's relative-error bound (±3.2 % worst case);
+        // p100 is exact because extrema are tracked exactly; empty → 0.
+        let mut m = CoordinatorMetrics::default();
+        for v in 1..=100u64 {
+            m.record_latency(v * 1000);
+        }
+        for (p, want) in [(50.0, 50.0), (95.0, 95.0), (99.0, 99.0)] {
+            let got = m.latency_percentile_us(p);
+            assert!(
+                (got - want).abs() / want <= 0.04,
+                "p{p}: got {got}, want {want}"
+            );
+        }
         assert_eq!(m.latency_percentile_us(100.0), 100.0);
+        assert_eq!(m.latencies_recorded, 100);
+        assert_eq!(m.latencies.count(), 100);
         assert_eq!(CoordinatorMetrics::default().p99_us(), 0.0);
-        // Order-independence: percentiles sort internally.
-        let mut rev = m.clone();
-        rev.latencies_ns.reverse();
-        assert_eq!(rev.p95_us(), 95.0);
+        // Order-independence: buckets don't care about insertion order.
+        let mut rev = CoordinatorMetrics::default();
+        for v in (1..=100u64).rev() {
+            rev.record_latency(v * 1000);
+        }
+        assert_eq!(rev.p95_us(), m.p95_us());
+    }
+
+    #[test]
+    fn cache_overlay_is_a_snapshot() {
+        // `set_cache_stats` replaces the counters wholesale, so repeated
+        // overlays from a monotonic source stay monotonic.
+        let mut m = CoordinatorMetrics::default();
+        m.set_cache_stats(CacheStats { hits: 2, misses: 5, evictions: 0 });
+        assert_eq!(m.cache_stats().hits, 2);
+        m.set_cache_stats(CacheStats { hits: 9, misses: 6, evictions: 1 });
+        assert_eq!(m.cache_stats(), CacheStats { hits: 9, misses: 6, evictions: 1 });
     }
 
     #[test]

@@ -42,6 +42,7 @@ use crate::fleet::{DeviceSpec, Fleet, FleetJob};
 use crate::graph::{GraphEngine, QuantizedGraph};
 use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::model::QuantizedMlp;
+use crate::obs::{SpanKind, Tracer, TrackHandle};
 use crate::runtime::PjrtRuntime;
 use crate::serve::{AdmissionPolicy, Responder, ServeError, ServeShared};
 use crate::util;
@@ -78,6 +79,9 @@ pub struct InferenceRequest {
     /// The ticket's service-side end: answers, sheds, and drops all go
     /// through it (and release the admission depth slot exactly once).
     pub responder: Responder,
+    /// Tracer request id linking this request's spans across tracks
+    /// (0 when the service runs untraced).
+    pub trace_id: u64,
 }
 
 /// The response delivered to the client.
@@ -126,6 +130,9 @@ struct SingleBackend {
     cnn_engine: CnnEngine,
     graph_engine: GraphEngine,
     runtime: Option<(PjrtRuntime, String)>,
+    /// The device's tracer track (queue-wait/batch-assembly/respond
+    /// spans; the engines record their own execute spans through clones).
+    track: Option<TrackHandle>,
 }
 
 /// Where dispatched batches execute.
@@ -146,6 +153,7 @@ pub(crate) fn service_thread(
     metrics: Arc<Mutex<CoordinatorMetrics>>,
     cache: Arc<ScheduleCache>,
     shared: Arc<ServeShared>,
+    tracer: Option<Arc<Tracer>>,
 ) -> usize {
     let model = Arc::new(model);
     let backend = match plan {
@@ -160,17 +168,27 @@ pub(crate) fn service_thread(
                 }),
                 ServedModel::Cnn(_) | ServedModel::Graph(_) => None,
             };
+            let track = tracer.as_ref().map(|t| {
+                t.register_track(&format!(
+                    "device 0 [{}x{}]",
+                    geometry.tg_rows, geometry.tg_cols
+                ))
+            });
             Backend::Single(Box::new(SingleBackend {
                 mlp_engine: OsEngine::tcd(geometry)
                     .with_cache(Arc::clone(&cache))
-                    .with_backend(backend),
+                    .with_backend(backend)
+                    .with_tracer(track.clone()),
                 cnn_engine: CnnEngine::tcd(geometry)
                     .with_cache(Arc::clone(&cache))
-                    .with_backend(backend),
+                    .with_backend(backend)
+                    .with_tracer(track.clone()),
                 graph_engine: GraphEngine::tcd(geometry)
                     .with_cache(Arc::clone(&cache))
-                    .with_backend(backend),
+                    .with_backend(backend)
+                    .with_tracer(track.clone()),
                 runtime,
+                track,
             }))
         }
         ExecutionPlan::Fleet { specs } => Backend::Fleet(Fleet::spawn_on(
@@ -178,9 +196,10 @@ pub(crate) fn service_thread(
             &specs,
             Arc::clone(&cache),
             Arc::clone(&metrics),
+            tracer,
         )),
     };
-    run_loop(rx, model, cfg, backend, metrics, cache, shared)
+    run_loop(rx, model, cfg, backend, metrics, shared)
 }
 
 fn run_loop(
@@ -189,7 +208,6 @@ fn run_loop(
     cfg: BatcherConfig,
     mut backend: Backend,
     metrics: Arc<Mutex<CoordinatorMetrics>>,
-    cache: Arc<ScheduleCache>,
     shared: Arc<ServeShared>,
 ) -> usize {
     let mut pending: Vec<InferenceRequest> = Vec::new();
@@ -266,6 +284,12 @@ fn run_loop(
                 }
             }
         }
+        // Batcher depth is this path's work queue: record its peak just
+        // like the fleet path records its shared-queue peak.
+        if !pending.is_empty() {
+            let mut m = util::lock(&metrics);
+            m.queue_peak = m.queue_peak.max(pending.len() as u64);
+        }
         // Dispatch one batch per iteration. After a shutdown request the
         // loop keeps spinning — without waiting for more traffic — until
         // `pending` is fully flushed in `batch_size` chunks, so queued
@@ -274,7 +298,7 @@ fn run_loop(
         let real = pending.len().min(cfg.batch_size);
         let batch: Vec<InferenceRequest> = pending.drain(..real).collect();
         if !batch.is_empty() {
-            dispatch(&mut backend, &model, &cfg, batch, &metrics, &cache, &shared, !shutdown);
+            dispatch(&mut backend, &model, &cfg, batch, &metrics, &shared, !shutdown);
         }
     }
 
@@ -324,7 +348,6 @@ fn dispatch(
     cfg: &BatcherConfig,
     batch: Vec<InferenceRequest>,
     metrics: &Arc<Mutex<CoordinatorMetrics>>,
-    cache: &Arc<ScheduleCache>,
     shared: &Arc<ServeShared>,
     shedding_allowed: bool,
 ) {
@@ -365,6 +388,18 @@ fn dispatch(
         Backend::Single(single) => single,
     };
 
+    // Trace the wall-side pipeline stages on this device's track:
+    // per-request queue wait (submit → dispatch) and the batch-assembly
+    // window (first arrival → dispatch).
+    if let Some(track) = &single.track {
+        for req in &batch {
+            track.span_since(SpanKind::QueueWait, req.submitted, Some(req.trace_id));
+        }
+        if let Some(first) = batch.first() {
+            track.span_since(SpanKind::BatchAssembly, first.submitted, None);
+        }
+    }
+
     // Form the inputs (pad to the artifact batch if cross-verifying).
     let mut inputs: Vec<Vec<i16>> = batch.iter().map(|r| r.input.clone()).collect();
     let padded_to = if single.runtime.is_some() {
@@ -404,13 +439,17 @@ fn dispatch(
 
     {
         let mut m = util::lock(metrics);
-        m.account_batch(0, &batch, &report, padded_to, verified, cache.stats());
+        m.account_batch(0, &batch, &report, padded_to, verified);
         if verify_mismatch {
             m.verify_mismatches += 1;
         }
     }
 
+    let respond_started = Instant::now();
     respond_batch(batch, &report, padded_to, verified, metrics);
+    if let Some(track) = &single.track {
+        track.span_since(SpanKind::Respond, respond_started, None);
+    }
 }
 
 /// Send every request in an executed batch its response. Shared by the
@@ -481,7 +520,7 @@ mod tests {
         let metrics = svc.metrics();
         assert_eq!(metrics.requests, 8);
         assert!(metrics.batches <= 8, "requests were batched");
-        assert_eq!(metrics.latencies_ns.len(), 8, "one latency sample per request");
+        assert_eq!(metrics.latencies.count(), 8, "one latency sample per request");
         assert!(metrics.p99_us() >= metrics.p50_us());
         svc.shutdown().unwrap();
     }
@@ -619,13 +658,16 @@ mod tests {
             let resp = t.wait_timeout(Duration::from_secs(10)).unwrap();
             assert_eq!(resp.output, want, "fleet response == reference");
         }
+        // Cache counters live on the shared cache and are overlaid by
+        // `NpeService::metrics` — snapshot before shutdown consumes svc.
+        let overlaid = svc.metrics();
+        assert!(overlaid.cache_hits + overlaid.cache_misses > 0);
         let metrics_handle = svc.metrics_handle();
         svc.shutdown().unwrap();
         let metrics = util::lock(&metrics_handle).clone();
         assert_eq!(metrics.requests, 12);
         assert_eq!(metrics.devices.len(), 2);
         assert_eq!(metrics.devices.iter().map(|d| d.requests).sum::<u64>(), 12);
-        assert_eq!(metrics.latencies_ns.len(), 12);
-        assert!(metrics.cache_hits + metrics.cache_misses > 0);
+        assert_eq!(metrics.latencies.count(), 12);
     }
 }

@@ -7,8 +7,10 @@ use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::memory::NpeMemorySystem;
 use crate::model::QuantizedMlp;
 use crate::npe::Controller;
+use crate::obs::TrackHandle;
 use crate::tcdmac::MacKind;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// OS engine: mapper-scheduled rolls on a PE array of the given MAC kind,
 /// dispatched through [`crate::exec::ExecCore`] (via the controller's
@@ -28,6 +30,8 @@ pub struct OsEngine {
     /// controller on every execute, so toggling is safe).
     pub backend: BackendKind,
     ctrl: Controller,
+    /// When set, every execute records its batch attribution here.
+    tracer: Option<TrackHandle>,
 }
 
 impl OsEngine {
@@ -37,6 +41,7 @@ impl OsEngine {
             kind,
             backend: BackendKind::Fast,
             ctrl: Controller::new(geometry, kind),
+            tracer: None,
         }
     }
 
@@ -73,6 +78,13 @@ impl OsEngine {
         self.ctrl = self.ctrl.with_cache(cache);
         self
     }
+
+    /// Attach a tracer track: every execute records an `execute` wall
+    /// span plus the batch's per-layer/per-round attribution.
+    pub fn with_tracer(mut self, tracer: Option<TrackHandle>) -> Self {
+        self.tracer = tracer;
+        self
+    }
 }
 
 impl DataflowEngine for OsEngine {
@@ -84,10 +96,12 @@ impl DataflowEngine for OsEngine {
     }
 
     fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
+        let started = Instant::now();
         let b = inputs.len();
         self.ctrl.backend = self.backend;
-        let (outputs, run) = self.ctrl.run_collect(mlp, inputs);
+        let (outputs, mut run) = self.ctrl.run_collect(mlp, inputs);
         let schedule = self.ctrl.schedule(mlp, b);
+        let profile = std::mem::take(&mut run.profile);
         // Active MAC-cycles (the dynamic-energy input) accumulate in the
         // exec run: each roll keeps load.0 × load.1 PEs busy for I (+1
         // for TCD) cycles; idle PEs are clock-gated (leakage only).
@@ -97,7 +111,7 @@ impl DataflowEngine for OsEngine {
         let mut mem = NpeMemorySystem::new();
         mem.account_schedule(&schedule, mlp, inputs);
 
-        exec::assemble_report(
+        let report = exec::assemble_report(
             self.name(),
             self.kind,
             self.geometry,
@@ -105,7 +119,11 @@ impl DataflowEngine for OsEngine {
             &stats,
             &mem,
             active_mac_cycles,
-        )
+        );
+        if let Some(t) = &self.tracer {
+            t.record_batch(started, b, profile, &report, active_mac_cycles);
+        }
+        report
     }
 }
 

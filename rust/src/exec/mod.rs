@@ -44,9 +44,11 @@ use crate::memory::NpeMemorySystem;
 use crate::model::QuantizedMlp;
 use crate::npe::pe_array::NeuronResult;
 use crate::npe::{ActivationUnit, ExecutionStats};
+use crate::obs::profile::{BatchProfile, LayerProfile, RoundProfile};
 use crate::ppa::TechParams;
 use crate::tcdmac::MacKind;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Which [`RollBackend`] an engine executes rolls on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -154,6 +156,11 @@ pub struct ExecRun {
     /// Active MAC-cycles (load × stream length per roll) — the dynamic-
     /// energy input; idle PEs are clock-gated.
     pub active_mac_cycles: u64,
+    /// Per-layer/per-round attribution, filled by every walk. Traced
+    /// engines take it (`std::mem::take`) before [`ExecRun::finish`];
+    /// untraced runs drop it. Collection is a handful of u64 adds per
+    /// roll — noise next to the backend arithmetic.
+    pub profile: BatchProfile,
 }
 
 impl ExecRun {
@@ -247,6 +254,7 @@ impl ExecCore {
             stats: ExecutionStats::default(),
             mem: NpeMemorySystem::new(),
             active_mac_cycles: 0,
+            profile: BatchProfile::default(),
         }
     }
 
@@ -276,15 +284,20 @@ impl ExecCore {
         // whether it comes from the fleet cache or the private mapper.
         // A cache hit only borrows the Arc'd entry: no event-list clone
         // on the steady-state hot path.
+        let sched_started = Instant::now();
+        let cache_hit;
         let cached_entry;
         let fresh_sched;
         let (sched, assignments): (&LayerSchedule, _) = match &self.cache {
             Some(cache) => {
-                cached_entry = cache.get_or_compute(&mut self.mapper, gamma);
+                let (entry, hit) = cache.get_or_compute_hit(&mut self.mapper, gamma);
+                cache_hit = Some(hit);
+                cached_entry = entry;
                 let node = cached_entry.exec.as_ref().expect("non-empty GEMM");
                 (&cached_entry.layer, node.assignments(&row_ids, &neuron_ids))
             }
             None => {
+                cache_hit = None;
                 let node = self.mapper.best(rows.len(), fan_out).expect("non-empty GEMM");
                 let assignments = node.assignments(&row_ids, &neuron_ids);
                 fresh_sched = LayerSchedule {
@@ -295,7 +308,15 @@ impl ExecCore {
                 (&fresh_sched, assignments)
             }
         };
-        self.walk(run, sched, &assignments, gemm, layer, rows, path, account_mem)
+        let mapper_wall_ns = sched_started.elapsed().as_nanos() as u64;
+        let out = self.walk(run, sched, &assignments, gemm, layer, rows, path, account_mem);
+        // The walk just pushed this layer's profile; patch in the
+        // scheduling half it could not see.
+        if let Some(lp) = run.profile.layers.last_mut() {
+            lp.mapper_wall_ns = mapper_wall_ns;
+            lp.cache_hit = cache_hit;
+        }
+        out
     }
 
     /// Execute an externally scheduled GEMM (the graph compiler schedules
@@ -332,15 +353,37 @@ impl ExecCore {
         account_mem: bool,
     ) -> Vec<Vec<i16>> {
         let fan_out = gemm.topology.layers[layer + 1];
+        let walk_started = Instant::now();
+        let cycles_before = run.backend.cycles();
+        let amc_before = run.active_mac_cycles;
+        let traffic_before = run.mem.traffic;
+        let extra = matches!(self.kind, MacKind::Tcd) as u64;
+        let stream_len = sched.gamma.inputs as u64;
+        let per_pair = stream_len + extra;
+
         // Reconfiguration events: one dead cycle per config change
-        // between consecutive rolls (Fig. 6C's event boundaries).
+        // between consecutive rolls (Fig. 6C's event boundaries). Each
+        // contiguous same-config run becomes one attribution round.
+        let mut rounds: Vec<RoundProfile> = Vec::new();
         let mut last_config = None;
         for roll in assignments {
             if last_config != Some(roll.config) {
                 run.stats.config_switches += 1;
                 last_config = Some(roll.config);
+                rounds.push(RoundProfile {
+                    config: roll.config,
+                    switch_cycles: 1,
+                    ..RoundProfile::default()
+                });
             }
             run.stats.rolls += 1;
+            let round = rounds.last_mut().expect("roll without a round");
+            round.rolls += 1;
+            round.active_mac_cycles += (roll.batches.len() * roll.neurons.len()) as u64 * per_pair;
+        }
+        for round in &mut rounds {
+            round.stream_cycles = round.rolls * stream_len;
+            round.deferred_cycles = round.rolls * extra;
         }
 
         let results = run.backend.run_rolls(assignments, gemm, layer, rows);
@@ -353,8 +396,6 @@ impl ExecCore {
         }
 
         // Schedule-level accounting (energy model inputs).
-        let extra = matches!(self.kind, MacKind::Tcd) as u64;
-        let per_pair = sched.gamma.inputs as u64 + extra;
         run.active_mac_cycles += sched
             .events
             .iter()
@@ -363,6 +404,26 @@ impl ExecCore {
         if account_mem {
             run.mem.account_layer_events(sched);
         }
+
+        // Per-layer attribution from measured deltas: the profile can
+        // never desync from the counters the report is built on.
+        let traffic = run.mem.traffic;
+        run.profile.layers.push(LayerProfile {
+            index: run.profile.layers.len(),
+            batches: sched.gamma.batches,
+            inputs: sched.gamma.inputs,
+            neurons: sched.gamma.neurons,
+            compute_cycles: run.backend.cycles() - cycles_before,
+            switch_cycles: rounds.len() as u64,
+            active_mac_cycles: run.active_mac_cycles - amc_before,
+            rounds,
+            mapper_wall_ns: 0,
+            cache_hit: None,
+            wall_ns: walk_started.elapsed().as_nanos() as u64,
+            wmem_row_reads: traffic.wmem_row_reads - traffic_before.wmem_row_reads,
+            fm_row_reads: traffic.fm_row_reads - traffic_before.fm_row_reads,
+            fm_row_writes: traffic.fm_row_writes - traffic_before.fm_row_writes,
+        });
         out
     }
 }

@@ -9,9 +9,11 @@ use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
 use crate::exec::BackendKind;
 use crate::graph::GraphEngine;
 use crate::mapper::{NpeGeometry, ScheduleCache};
+use crate::obs::{SpanKind, TrackHandle};
 use crate::serve::ServeError;
 use crate::util;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// The per-device engine handle — constructed once per device thread and
 /// reused for every batch, so the Algorithm-1 memo (private and shared)
@@ -55,6 +57,17 @@ impl DeviceEngine {
         }
     }
 
+    /// Attach a tracer track (builder form, mirroring the engines'
+    /// `with_tracer`): every executed batch records an `execute` wall
+    /// span plus its simulated-time attribution on that track.
+    pub fn with_tracer(self, tracer: Option<TrackHandle>) -> Self {
+        match self {
+            DeviceEngine::Mlp(e) => DeviceEngine::Mlp(e.with_tracer(tracer)),
+            DeviceEngine::Cnn(e) => DeviceEngine::Cnn(e.with_tracer(tracer)),
+            DeviceEngine::Graph(e) => DeviceEngine::Graph(e.with_tracer(tracer)),
+        }
+    }
+
     /// Execute one batch. The engine/model pairing is fixed at
     /// construction, so `None` (a mismatch) is a fleet-wiring bug — the
     /// caller resolves the affected tickets with `DeviceLost` instead of
@@ -82,10 +95,18 @@ pub(crate) fn device_main(
     cache: Arc<ScheduleCache>,
     queue: Arc<FleetQueue>,
     metrics: Arc<Mutex<CoordinatorMetrics>>,
+    track: Option<TrackHandle>,
 ) {
     let mut engine =
-        DeviceEngine::for_model_on(&model, spec.geometry, Arc::clone(&cache), spec.backend);
+        DeviceEngine::for_model_on(&model, spec.geometry, Arc::clone(&cache), spec.backend)
+            .with_tracer(track.clone());
     while let Some(job) = queue.pop() {
+        // Each request waited from submit until this device popped it.
+        if let Some(t) = &track {
+            for req in &job.requests {
+                t.span_since(SpanKind::QueueWait, req.submitted, Some(req.trace_id));
+            }
+        }
         let inputs: Vec<Vec<i16>> = job.requests.iter().map(|r| r.input.clone()).collect();
         let Some(report) = engine.execute(&model, &inputs) else {
             // Engine/model mismatch: impossible by construction, but a
@@ -95,12 +116,18 @@ pub(crate) fn device_main(
         };
         let n = job.requests.len();
 
-        // No padding and no PJRT verification on the fleet path.
+        // No padding and no PJRT verification on the fleet path. Cache
+        // counters are overlaid at metrics-read time (one consistent
+        // snapshot), not written per batch across racing lanes.
         {
             let mut m = util::lock(&metrics);
-            m.account_batch(idx, &job.requests, &report, n, false, cache.stats());
+            m.account_batch(idx, &job.requests, &report, n, false);
         }
+        let respond_started = Instant::now();
         respond_batch(job.requests, &report, n, false, &metrics);
+        if let Some(t) = &track {
+            t.span_since(SpanKind::Respond, respond_started, None);
+        }
     }
 }
 

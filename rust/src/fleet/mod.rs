@@ -43,6 +43,7 @@ pub use queue::{FleetJob, FleetQueue};
 use crate::coordinator::{CoordinatorMetrics, DeviceMetrics, ServedModel};
 use crate::exec::BackendKind;
 use crate::mapper::{NpeGeometry, ScheduleCache};
+use crate::obs::Tracer;
 use crate::util;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -78,13 +79,15 @@ pub struct Fleet {
 impl Fleet {
     /// Spawn one device thread per [`DeviceSpec`], all pulling from one
     /// queue and sharing one schedule cache. Registers one metrics lane
-    /// per device (replacing any existing lanes). The builder validates
+    /// per device (replacing any existing lanes), and — when a tracer is
+    /// attached — one tracer track per device. The builder validates
     /// that `specs` is non-empty before this runs.
     pub(crate) fn spawn_on(
         model: Arc<ServedModel>,
         specs: &[DeviceSpec],
         cache: Arc<ScheduleCache>,
         metrics: Arc<Mutex<CoordinatorMetrics>>,
+        tracer: Option<Arc<Tracer>>,
     ) -> Self {
         util::lock(&metrics).devices = specs
             .iter()
@@ -99,8 +102,14 @@ impl Fleet {
                 let cache = Arc::clone(&cache);
                 let queue = Arc::clone(&queue);
                 let metrics = Arc::clone(&metrics);
+                let track = tracer.as_ref().map(|t| {
+                    t.register_track(&format!(
+                        "device {idx} [{}x{}]",
+                        spec.geometry.tg_rows, spec.geometry.tg_cols
+                    ))
+                });
                 std::thread::spawn(move || {
-                    device::device_main(idx, model, spec, cache, queue, metrics)
+                    device::device_main(idx, model, spec, cache, queue, metrics, track)
                 })
             })
             .collect();
@@ -158,7 +167,7 @@ mod tests {
         cache: &Arc<ScheduleCache>,
         metrics: &Arc<Mutex<CoordinatorMetrics>>,
     ) -> Fleet {
-        Fleet::spawn_on(Arc::clone(model), specs, Arc::clone(cache), Arc::clone(metrics))
+        Fleet::spawn_on(Arc::clone(model), specs, Arc::clone(cache), Arc::clone(metrics), None)
     }
 
     #[test]
@@ -198,8 +207,16 @@ mod tests {
         assert_eq!(m.devices.len(), 2);
         assert_eq!(m.devices.iter().map(|d| d.batches).sum::<u64>(), 3);
         assert_eq!(m.devices.iter().map(|d| d.requests).sum::<u64>(), 6);
-        assert_eq!(m.latencies_ns.len(), 6);
-        assert_eq!(m.cache_hits + m.cache_misses, cache.stats().lookups());
+        assert_eq!(m.latencies.count(), 6);
+        // Cache counters are overlaid at read time, not racily written
+        // per batch — one snapshot reflects all lanes' lookups at once.
+        let mut overlaid = (*m).clone();
+        overlaid.set_cache_stats(cache.stats());
+        assert_eq!(
+            overlaid.cache_hits + overlaid.cache_misses,
+            cache.stats().lookups()
+        );
+        assert!(cache.stats().lookups() > 0, "devices exercised the shared cache");
     }
 
     #[test]

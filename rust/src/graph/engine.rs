@@ -20,8 +20,10 @@ use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::model::fixedpoint::relu;
 use crate::model::{MlpTopology, QuantizedMlp};
 use crate::npe::ActivationUnit;
+use crate::obs::TrackHandle;
 use crate::tcdmac::MacKind;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// The DAG execution engine.
 pub struct GraphEngine {
@@ -34,6 +36,8 @@ pub struct GraphEngine {
     /// Merge sibling branches into shared round sets (fused lowering,
     /// the default); off = the per-node baseline the bench compares.
     pub fuse: bool,
+    /// When set, every execute records its batch attribution here.
+    tracer: Option<TrackHandle>,
 }
 
 impl GraphEngine {
@@ -42,6 +46,7 @@ impl GraphEngine {
             core: ExecCore::new(geometry, kind),
             backend: BackendKind::Fast,
             fuse: true,
+            tracer: None,
         }
     }
 
@@ -85,6 +90,13 @@ impl GraphEngine {
         self
     }
 
+    /// Attach a tracer track: every execute records an `execute` wall
+    /// span plus the batch's per-layer/per-round attribution.
+    pub fn with_tracer(mut self, tracer: Option<TrackHandle>) -> Self {
+        self.tracer = tracer;
+        self
+    }
+
     pub fn name(&self) -> &'static str {
         match self.kind() {
             MacKind::Tcd => "Graph DAG (TCD-NPE)",
@@ -97,6 +109,7 @@ impl GraphEngine {
     /// dispatches through [`ExecCore::run_scheduled`] — the engine owns
     /// only the DAG plumbing (value table, output-path stages, scatter).
     pub fn execute(&mut self, q: &QuantizedGraph, inputs: &[Vec<i16>]) -> DataflowReport {
+        let started = Instant::now();
         let b = inputs.len();
         assert!(b > 0, "empty batch");
         for x in inputs {
@@ -184,6 +197,7 @@ impl GraphEngine {
             }
         }
         let outputs = vals[q.graph.output.0].take().expect("output computed");
+        let profile = std::mem::take(&mut run.profile);
         let (stats, mut mem, active_mac_cycles) = run.finish();
 
         // DRAM traffic: RLC-compressed weights + inputs in, outputs out.
@@ -197,7 +211,7 @@ impl GraphEngine {
             mem.account_dram_out(y);
         }
 
-        exec::assemble_report(
+        let report = exec::assemble_report(
             self.name(),
             self.kind(),
             self.geometry(),
@@ -205,7 +219,11 @@ impl GraphEngine {
             &stats,
             &mem,
             active_mac_cycles,
-        )
+        );
+        if let Some(t) = &self.tracer {
+            t.record_batch(started, b, profile, &report, active_mac_cycles);
+        }
+        report
     }
 
     /// Run one GEMM group: stream its merged Γ through the execution

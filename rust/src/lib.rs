@@ -75,6 +75,14 @@
 //!   construction), a memoized `(geometry, Γ)` schedule cache skips
 //!   Algorithm 1 for every shape already seen, and a deterministic
 //!   seeded-Poisson load generator drives the throughput benches.
+//! * [`obs`] — end-to-end tracing & profiling: a `Tracer` threaded from
+//!   `ServeBuilder` through coordinator/fleet into every engine records
+//!   typed wall spans (submit → admission → queue wait → batch assembly
+//!   → execute → respond) plus per-layer/per-round simulated-time
+//!   attribution (rolls, config-switch cycles, the TCD deferred-
+//!   completion tail, active MAC-cycles); exported as Perfetto-loadable
+//!   Chrome-trace JSON, Prometheus text exposition and a JSON metrics
+//!   snapshot (`NpeService::metrics_snapshot`, CLI `obs` subcommand).
 //! * [`bench`] — generators for every table and figure of the paper's
 //!   evaluation (shared between the CLI and the criterion benches).
 
@@ -93,6 +101,7 @@ pub mod mapper;
 pub mod memory;
 pub mod model;
 pub mod npe;
+pub mod obs;
 pub mod ppa;
 pub mod runtime;
 pub mod serve;

@@ -9,6 +9,7 @@
 #![deny(deprecated)]
 
 use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
 use std::time::Duration;
 use tcd_npe::bench;
 use tcd_npe::conv::QuantizedCnn;
@@ -20,9 +21,10 @@ use tcd_npe::graph::QuantizedGraph;
 use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry};
 use tcd_npe::memory::{FmArrangement, WMemArrangement, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
 use tcd_npe::model::{
-    benchmark_by_name, benchmarks, cnn_benchmark_by_name, graph_benchmark_by_name, MlpTopology,
-    QuantizedMlp,
+    benchmark_by_name, benchmarks, cnn_benchmark_by_name, graph_benchmark_by_name,
+    graph_benchmarks, MlpTopology, QuantizedMlp,
 };
+use tcd_npe::obs::{chrome_trace_json, Tracer};
 use tcd_npe::runtime::{ArtifactManifest, PjrtRuntime};
 use tcd_npe::serve::{AdmissionPolicy, NpeService, ServeError};
 use tcd_npe::util::TextTable;
@@ -54,6 +56,9 @@ System:
   fleet --bench [--json PATH]
                              device-count sweep (1/2/4/8) + admission-policy
                              sweep (Block vs Reject at 2x saturation) + BENCH_fleet.json
+  obs [--devices N] [--requests N] [--rate RPS] [--trace-out F] [--metrics-out F]
+                             traced DAG-zoo fleet run: Chrome trace (Perfetto-loadable)
+                             + Prometheus text + per-layer metrics JSON
   verify [artifact-dir]      cross-check NPE simulator vs PJRT artifacts
   ablate <which>             ablations: geometry | batch | voltage | mac | all
 
@@ -172,6 +177,23 @@ fn main() -> Result<()> {
                     admission_flag(&args)?,
                 )?;
             }
+        }
+        "obs" => {
+            let devices = flag_value(&args, "--devices")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(2);
+            let requests = flag_value(&args, "--requests")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(48);
+            let rate = flag_value(&args, "--rate")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(20_000.0);
+            let trace_out = flag_value(&args, "--trace-out").unwrap_or("trace.json");
+            let metrics_out = flag_value(&args, "--metrics-out").unwrap_or("metrics.json");
+            cmd_obs(devices, requests, rate, trace_out, metrics_out)?;
         }
         "verify" => {
             let dir = args.get(1).map(String::as_str).unwrap_or("artifacts");
@@ -399,10 +421,61 @@ fn cmd_fleet(
     );
     let responses = run_open_loop(&service, &arrivals, Duration::from_secs(60));
     let answered = responses.iter().filter(|o| o.is_some()).count();
-    let metrics = service.metrics_handle();
+    // Snapshot through the service, not the raw handle: cache counters
+    // are overlaid from the shared schedule cache at read time.
+    let metrics = service.metrics();
     service.shutdown()?;
     println!("answered {answered}/{requests}\n");
-    print!("{}", metrics.lock().unwrap().clone());
+    print!("{metrics}");
+    Ok(())
+}
+
+/// The observability demo: serve every DAG-zoo benchmark on a traced
+/// fleet, all recording into one shared tracer, then export the merged
+/// Chrome trace plus per-model Prometheus/JSON metrics snapshots.
+fn cmd_obs(
+    devices: usize,
+    requests: usize,
+    rate: f64,
+    trace_out: &str,
+    metrics_out: &str,
+) -> Result<()> {
+    let tracer = Tracer::shared();
+    let mut entries = Vec::new();
+    let mut last = None;
+    for b in graph_benchmarks() {
+        let model = ServedModel::Graph(QuantizedGraph::synthesize(b.graph.clone(), 0xF1EE7));
+        let load = LoadGenConfig { seed: 0x0B5_0001, rate_rps: rate, requests };
+        let arrivals = poisson_arrivals(&model, &load);
+        let service = NpeService::builder(model)
+            .devices(vec![DeviceSpec::new(NpeGeometry::PAPER, BackendKind::Fast); devices])
+            .batcher(BatcherConfig::new(8, Duration::from_micros(500)))
+            .tracer(Arc::clone(&tracer))
+            .build()?;
+        let responses = run_open_loop(&service, &arrivals, Duration::from_secs(60));
+        let answered = responses.iter().filter(|o| o.is_some()).count();
+        let snap = service.metrics_snapshot();
+        let ps = snap.metrics.latency_percentiles_us(&[50.0, 95.0, 99.0]);
+        println!(
+            "{:<12} answered {answered}/{requests} in {} batches, \
+             p50/p95/p99 {:.0}/{:.0}/{:.0} us, {} layers attributed",
+            b.network,
+            snap.metrics.batches,
+            ps[0],
+            ps[1],
+            ps[2],
+            snap.layers.len()
+        );
+        entries.push(format!("  {:?}: {}", b.network, snap.to_json()));
+        last = Some((b.network, snap));
+        service.shutdown()?;
+    }
+    if let Some((network, snap)) = &last {
+        println!("\nPrometheus exposition ({network}):\n{}", snap.prometheus_text());
+    }
+    std::fs::write(trace_out, chrome_trace_json(&tracer.snapshot()))?;
+    std::fs::write(metrics_out, format!("{{\n{}\n}}\n", entries.join(",\n")))?;
+    println!("wrote {trace_out} (load in Perfetto / chrome://tracing) and {metrics_out}");
     Ok(())
 }
 

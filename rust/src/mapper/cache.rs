@@ -129,6 +129,17 @@ impl ScheduleCache {
     /// first insert wins; both misses are counted, which is exactly what
     /// the "wasted mapper work" metric should show.
     pub fn get_or_compute(&self, mapper: &mut MapperTree, gamma: Gamma) -> Arc<CachedSchedule> {
+        self.get_or_compute_hit(mapper, gamma).0
+    }
+
+    /// [`get_or_compute`](Self::get_or_compute) plus whether the lookup
+    /// hit (`true`) or ran Algorithm 1 (`false`) — the per-layer signal
+    /// the tracing layer records.
+    pub fn get_or_compute_hit(
+        &self,
+        mapper: &mut MapperTree,
+        gamma: Gamma,
+    ) -> (Arc<CachedSchedule>, bool) {
         let key = (mapper.geometry, gamma);
         {
             let mut inner = self.inner.lock().unwrap();
@@ -137,7 +148,7 @@ impl ScheduleCache {
             if let Some((hit, stamp)) = inner.map.get_mut(&key) {
                 *stamp = tick;
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return Arc::clone(hit);
+                return (Arc::clone(hit), true);
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -177,7 +188,7 @@ impl ScheduleCache {
                 }
             }
         }
-        arc
+        (arc, false)
     }
 
     /// Assemble a whole-model schedule from cached layers (the cached

@@ -33,6 +33,13 @@ impl ExecutionStats {
     pub fn total_cycles(&self) -> u64 {
         self.compute_cycles + self.config_switches + self.layer_swaps
     }
+
+    /// Non-compute cycles (reconfiguration + ping-pong swaps) — what
+    /// the obs layer's Chrome exporter draws as `config-switch` and
+    /// `overhead` spans around the attributed rounds.
+    pub fn overhead_cycles(&self) -> u64 {
+        self.config_switches + self.layer_swaps
+    }
 }
 
 /// Controller FSM state (exposed for the FSM-trace tests).

@@ -1,0 +1,324 @@
+//! Chrome-trace-event JSON export (Perfetto-loadable).
+//!
+//! Two processes, one thread (track) per registered tracer track:
+//!
+//! * **pid 0 — "wall: request pipeline"**: every [`WallSpan`] as a
+//!   complete (`ph:"X"`) event in host wall time. Timestamps here vary
+//!   run to run; the determinism test strips this pid.
+//! * **pid 1 — "sim: NPE devices"**: the deterministic simulated-time
+//!   reconstruction of every executed batch, as nested `ph:"B"`/`"E"`
+//!   spans. Each device track keeps a *cycle cursor*: batches abut
+//!   back-to-back in simulated time, and inside a batch the span tree is
+//!
+//!   ```text
+//!   batch N                     cycles = DataflowReport.cycles
+//!   ├─ layer i Γ(B,I,U)         cycles = compute + switch
+//!   │  ├─ config-switch (X)     cycles = 1        (per round)
+//!   │  └─ round KxN             cycles = stream + deferred
+//!   │     └─ deferred-completion (X)  the TCD tail, annotation
+//!   ├─ ...
+//!   └─ overhead (X)             cycles = batch − Σ layers
+//!   ```
+//!
+//!   Every sim event carries integer `start_cycle`/`cycles` args, so
+//!   the schema tests can assert **exact** containment and per-batch
+//!   sums (children of a batch sum to the batch's cycles; children of a
+//!   layer sum to the layer's) without trusting float timestamps.
+//!   Timestamps (µs) are derived from the batch's own ns-per-cycle
+//!   (`time_ns / cycles`), so sim span durations also sum to
+//!   `DataflowReport.time_ns` within float rounding.
+
+use super::profile::BatchProfile;
+use super::span::{BatchTrace, TraceLog};
+use crate::util::json::escape;
+use std::fmt::Write as _;
+
+/// pid of the wall-clock request-pipeline process.
+pub const WALL_PID: u32 = 0;
+/// pid of the simulated NPE-device process.
+pub const SIM_PID: u32 = 1;
+
+/// Render a snapshot as a Chrome trace (JSON object form with a
+/// `traceEvents` array — load it at <https://ui.perfetto.dev>).
+pub fn chrome_trace_json(log: &TraceLog) -> String {
+    let mut events: Vec<String> = Vec::new();
+
+    // Metadata: process and thread names for both pids.
+    for (pid, pname) in [(WALL_PID, "wall: request pipeline"), (SIM_PID, "sim: NPE devices")] {
+        events.push(format!(
+            r#"{{"ph":"M","pid":{pid},"tid":0,"name":"process_name","args":{{"name":"{}"}}}}"#,
+            escape(pname)
+        ));
+        for (tid, track) in log.tracks.iter().enumerate() {
+            events.push(format!(
+                r#"{{"ph":"M","pid":{pid},"tid":{tid},"name":"thread_name","args":{{"name":"{}"}}}}"#,
+                escape(track)
+            ));
+        }
+    }
+
+    // Wall side: every span as a complete event.
+    for s in &log.wall {
+        let mut args = String::new();
+        if let Some(b) = s.batch {
+            let _ = write!(args, r#""batch":{b}"#);
+        }
+        if let Some(r) = s.request {
+            if !args.is_empty() {
+                args.push(',');
+            }
+            let _ = write!(args, r#""request":{r}"#);
+        }
+        events.push(format!(
+            r#"{{"ph":"X","pid":{WALL_PID},"tid":{},"name":"{}","ts":{},"dur":{},"args":{{{args}}}}}"#,
+            s.track,
+            s.kind.name(),
+            us(s.start_ns as f64),
+            us(s.dur_ns as f64),
+        ));
+    }
+
+    // Sim side: one cycle cursor per track, batches back-to-back.
+    let batch_tracks = log.batches.iter().map(|b| b.track as usize + 1).max().unwrap_or(0);
+    let n_tracks = log.tracks.len().max(batch_tracks);
+    let mut cursor_cycles = vec![0u64; n_tracks];
+    let mut cursor_ns = vec![0f64; n_tracks];
+    for b in &log.batches {
+        let t = b.track as usize;
+        emit_batch(&mut events, b, cursor_cycles[t], cursor_ns[t]);
+        cursor_cycles[t] += b.cycles;
+        cursor_ns[t] += b.time_ns;
+    }
+
+    let mut out = String::from("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n");
+    out.push_str(&events.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Format a µs timestamp with ns precision.
+fn us(ns: f64) -> String {
+    format!("{:.3}", ns / 1e3)
+}
+
+/// Emit one batch's nested sim spans starting at `base_cycle`/`base_ns`
+/// on its track.
+fn emit_batch(events: &mut Vec<String>, b: &BatchTrace, base_cycle: u64, base_ns: f64) {
+    let tid = b.track;
+    let ns_per_cycle = if b.cycles > 0 { b.time_ns / b.cycles as f64 } else { 0.0 };
+    let ts_of = |cycle: u64| us(base_ns + (cycle - base_cycle) as f64 * ns_per_cycle);
+
+    let begin = |events: &mut Vec<String>, name: &str, cycle: u64, args: String| {
+        events.push(format!(
+            r#"{{"ph":"B","pid":{SIM_PID},"tid":{tid},"name":"{}","ts":{},"args":{{"start_cycle":{cycle},{args}}}}}"#,
+            escape(name),
+            ts_of(cycle),
+        ));
+    };
+    let end = |events: &mut Vec<String>, name: &str, cycle: u64| {
+        events.push(format!(
+            r#"{{"ph":"E","pid":{SIM_PID},"tid":{tid},"name":"{}","ts":{}}}"#,
+            escape(name),
+            ts_of(cycle),
+        ));
+    };
+    let complete = |events: &mut Vec<String>, name: &str, cycle: u64, cycles: u64, args: String| {
+        events.push(format!(
+            r#"{{"ph":"X","pid":{SIM_PID},"tid":{tid},"name":"{}","ts":{},"dur":{},"args":{{"start_cycle":{cycle},"cycles":{cycles},{args}}}}}"#,
+            escape(name),
+            ts_of(cycle),
+            us(cycles as f64 * ns_per_cycle),
+        ));
+    };
+
+    let batch_name = format!("batch {}", b.batch);
+    begin(
+        events,
+        &batch_name,
+        base_cycle,
+        format!(
+            r#""cycles":{},"requests":{},"time_ns":{:.3},"energy_pj":{:.3},"pe_dynamic_pj":{:.3},"active_mac_cycles":{}"#,
+            b.cycles, b.requests, b.time_ns, b.energy_pj, b.pe_dynamic_pj, b.active_mac_cycles
+        ),
+    );
+
+    let total_amc = total_active_mac_cycles(&b.profile).max(1);
+    let mut cycle = base_cycle;
+    for layer in &b.profile.layers {
+        let layer_name = format!(
+            "layer {} Γ({},{},{})",
+            layer.index, layer.batches, layer.inputs, layer.neurons
+        );
+        let schedule = match layer.cache_hit {
+            Some(true) => "hit",
+            Some(false) => "miss",
+            None => "memo",
+        };
+        let layer_pj = b.pe_dynamic_pj * layer.active_mac_cycles as f64 / total_amc as f64;
+        begin(
+            events,
+            &layer_name,
+            cycle,
+            format!(
+                r#""cycles":{},"rolls":{},"deferred_cycles":{},"schedule":"{schedule}","mapper_wall_ns":{},"pe_dynamic_pj":{layer_pj:.3}"#,
+                layer.total_cycles(),
+                layer.rolls(),
+                layer.deferred_cycles(),
+                layer.mapper_wall_ns,
+            ),
+        );
+        for round in &layer.rounds {
+            if round.switch_cycles > 0 {
+                complete(
+                    events,
+                    "config-switch",
+                    cycle,
+                    round.switch_cycles,
+                    format!(r#""config":"{}x{}""#, round.config.0, round.config.1),
+                );
+                cycle += round.switch_cycles;
+            }
+            let round_name = format!("round {}x{}", round.config.0, round.config.1);
+            begin(
+                events,
+                &round_name,
+                cycle,
+                format!(
+                    r#""cycles":{},"rolls":{},"stream_cycles":{},"deferred_cycles":{},"active_mac_cycles":{}"#,
+                    round.compute_cycles(),
+                    round.rolls,
+                    round.stream_cycles,
+                    round.deferred_cycles,
+                    round.active_mac_cycles,
+                ),
+            );
+            if round.deferred_cycles > 0 {
+                // The TCD tail: drawn at the end of the round.
+                complete(
+                    events,
+                    "deferred-completion",
+                    cycle + round.stream_cycles,
+                    round.deferred_cycles,
+                    format!(r#""rolls":{}"#, round.rolls),
+                );
+            }
+            cycle += round.compute_cycles();
+            end(events, &round_name, cycle);
+        }
+        end(events, &layer_name, cycle);
+    }
+
+    // Whatever the profile did not attribute (layer swaps, non-GEMM
+    // graph stages) becomes one explicit overhead span, so the batch's
+    // children always sum exactly to its reported cycles.
+    let attributed = cycle - base_cycle;
+    let remainder = b.cycles.saturating_sub(attributed);
+    if remainder > 0 {
+        complete(events, "overhead", cycle, remainder, r#""kind":"output + layer swaps""#.into());
+    }
+    end(events, &batch_name, base_cycle + b.cycles);
+}
+
+fn total_active_mac_cycles(p: &BatchProfile) -> u64 {
+    p.layers.iter().map(|l| l.active_mac_cycles).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::profile::{LayerProfile, RoundProfile};
+    use crate::util::json::JsonValue;
+
+    fn sample_log() -> TraceLog {
+        let layer = LayerProfile {
+            index: 0,
+            batches: 2,
+            inputs: 8,
+            neurons: 4,
+            rounds: vec![RoundProfile {
+                config: (4, 2),
+                rolls: 2,
+                stream_cycles: 16,
+                deferred_cycles: 2,
+                switch_cycles: 1,
+                active_mac_cycles: 144,
+            }],
+            compute_cycles: 18,
+            switch_cycles: 1,
+            active_mac_cycles: 144,
+            cache_hit: Some(true),
+            ..Default::default()
+        };
+        TraceLog {
+            tracks: vec!["device 0 [16x8]".into()],
+            wall: Vec::new(),
+            batches: vec![BatchTrace {
+                track: 0,
+                batch: 0,
+                requests: 2,
+                wall_start_ns: 0,
+                wall_dur_ns: 10,
+                cycles: 20, // 18 compute + 1 switch + 1 layer swap
+                time_ns: 40.0,
+                energy_pj: 5.0,
+                pe_dynamic_pj: 3.0,
+                active_mac_cycles: 144,
+                profile: BatchProfile { layers: vec![layer] },
+            }],
+            dropped_events: 0,
+        }
+    }
+
+    #[test]
+    fn emits_valid_balanced_json() {
+        let json = chrome_trace_json(&sample_log());
+        let v = JsonValue::parse(&json).expect("valid JSON");
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        // B/E balance on the sim pid.
+        let mut stack: Vec<String> = Vec::new();
+        for e in events {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            match ph {
+                "B" => stack.push(e.get("name").unwrap().as_str().unwrap().to_string()),
+                "E" => {
+                    let open = stack.pop().expect("E without B");
+                    assert_eq!(open, e.get("name").unwrap().as_str().unwrap());
+                }
+                _ => {}
+            }
+        }
+        assert!(stack.is_empty(), "unclosed spans: {stack:?}");
+        // The overhead span closes the cycle budget: 20 − (18+1) = 1.
+        let overhead = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("overhead"))
+            .expect("overhead span");
+        assert_eq!(overhead.get("args").unwrap().get("cycles").unwrap().as_u64(), Some(1));
+        // The deferred tail is visible.
+        let tail = |e: &JsonValue| e.get("name").unwrap().as_str() == Some("deferred-completion");
+        assert!(events.iter().any(tail), "the TCD tail span is emitted");
+    }
+
+    #[test]
+    fn batches_abut_on_the_cycle_cursor() {
+        let mut log = sample_log();
+        let mut second = log.batches[0].clone();
+        second.batch = 1;
+        log.batches.push(second);
+        let json = chrome_trace_json(&log);
+        let v = JsonValue::parse(&json).unwrap();
+        let starts: Vec<u64> = v
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| {
+                e.get("ph").unwrap().as_str() == Some("B")
+                    && e.get("name").unwrap().as_str().unwrap().starts_with("batch ")
+            })
+            .map(|e| e.get("args").unwrap().get("start_cycle").unwrap().as_u64().unwrap())
+            .collect();
+        assert_eq!(starts, vec![0, 20], "second batch starts where the first ended");
+    }
+}

@@ -1,0 +1,352 @@
+//! Metrics snapshot + Prometheus-style / JSON exposition.
+//!
+//! [`MetricsSnapshot`] joins the coordinator counters (with the shared
+//! cache overlaid — the one consistent read the PR-6 cache-race fix
+//! mandates) with per-layer attribution aggregated from the trace log.
+//! Reachable from
+//! [`NpeService::metrics_snapshot`](crate::serve::NpeService::metrics_snapshot)
+//! and the CLI `obs` subcommand.
+
+use super::span::TraceLog;
+use crate::coordinator::CoordinatorMetrics;
+use crate::util::json::escape;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Aggregated attribution for one layer position across every traced
+/// batch. Keyed by execution index within a batch — when one tracer is
+/// shared across services serving *different* models, aggregate per
+/// service instead (each service snapshots its own metrics).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct LayerAgg {
+    pub index: usize,
+    /// Batches that executed this layer.
+    pub batches: u64,
+    /// Same-config rounds.
+    pub rounds: u64,
+    pub rolls: u64,
+    pub stream_cycles: u64,
+    /// The TCD deferred-completion tail, summed.
+    pub deferred_cycles: u64,
+    pub switch_cycles: u64,
+    pub active_mac_cycles: u64,
+    /// PE dynamic energy attributed to this layer (each batch's
+    /// `pe_dynamic_pj` split proportionally to active MAC-cycles; the
+    /// leak/memory components stay batch-level and are not re-split).
+    pub pe_dynamic_pj: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// One consistent observability read: coordinator counters + per-layer
+/// attribution + trace health.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Coordinator counters, cache stats already overlaid.
+    pub metrics: CoordinatorMetrics,
+    /// Per-layer attribution (empty when the service runs untraced).
+    pub layers: Vec<LayerAgg>,
+    /// Trace events lost to buffer bounds (0 in healthy runs).
+    pub dropped_events: u64,
+}
+
+/// Aggregate per-layer attribution out of a trace snapshot.
+pub fn aggregate_layers(log: &TraceLog) -> Vec<LayerAgg> {
+    let mut by_index: BTreeMap<usize, LayerAgg> = BTreeMap::new();
+    for b in &log.batches {
+        let total_amc: u64 = b.profile.layers.iter().map(|l| l.active_mac_cycles).sum();
+        for layer in &b.profile.layers {
+            let agg = by_index.entry(layer.index).or_insert_with(|| LayerAgg {
+                index: layer.index,
+                ..Default::default()
+            });
+            agg.batches += 1;
+            agg.rounds += layer.rounds.len() as u64;
+            agg.rolls += layer.rolls();
+            agg.stream_cycles += layer.rounds.iter().map(|r| r.stream_cycles).sum::<u64>();
+            agg.deferred_cycles += layer.deferred_cycles();
+            agg.switch_cycles += layer.switch_cycles;
+            agg.active_mac_cycles += layer.active_mac_cycles;
+            if total_amc > 0 {
+                agg.pe_dynamic_pj +=
+                    b.pe_dynamic_pj * layer.active_mac_cycles as f64 / total_amc as f64;
+            }
+            match layer.cache_hit {
+                Some(true) => agg.cache_hits += 1,
+                Some(false) => agg.cache_misses += 1,
+                None => {}
+            }
+        }
+    }
+    by_index.into_values().collect()
+}
+
+impl MetricsSnapshot {
+    /// Build a snapshot from already-overlaid metrics and an optional
+    /// trace log.
+    pub fn new(metrics: CoordinatorMetrics, log: Option<&TraceLog>) -> Self {
+        Self {
+            layers: log.map(aggregate_layers).unwrap_or_default(),
+            dropped_events: log.map(|l| l.dropped_events).unwrap_or(0),
+            metrics,
+        }
+    }
+
+    /// Prometheus text exposition (classic format: `# TYPE` headers,
+    /// counters/gauges, a classic histogram for wall latency, per-layer
+    /// labeled attribution series).
+    pub fn prometheus_text(&self) -> String {
+        let m = &self.metrics;
+        let mut out = String::new();
+        let mut counter = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", num(v));
+        };
+        counter("npe_requests_total", "Requests dispatched to a device.", m.requests as f64);
+        counter("npe_rejected_requests_total", "Bad-shape refusals.", m.rejected_requests as f64);
+        counter("npe_shed_requests_total", "Admission-control sheds.", m.shed_requests as f64);
+        counter("npe_responses_dropped_total", "Dropped responses.", m.responses_dropped as f64);
+        counter("npe_batches_total", "Batches executed.", m.batches as f64);
+        counter("npe_padded_slots_total", "Padding rows added to batches.", m.padded_slots as f64);
+        counter("npe_verified_batches_total", "PJRT-verified batches.", m.verified_batches as f64);
+        counter("npe_verify_mismatches_total", "PJRT mismatches.", m.verify_mismatches as f64);
+        counter("npe_sim_time_ns_total", "Simulated NPE time, ns.", m.sim_time_ns);
+        counter("npe_sim_energy_pj_total", "Simulated NPE energy, pJ.", m.sim_energy_pj);
+        counter("npe_cache_hits_total", "Schedule-cache hits.", m.cache_hits as f64);
+        counter("npe_cache_misses_total", "Schedule-cache misses.", m.cache_misses as f64);
+        counter("npe_cache_evictions_total", "Cache LRU evictions.", m.cache_evictions as f64);
+        counter("npe_trace_dropped_events_total", "Trace events lost.", self.dropped_events as f64);
+
+        let _ = writeln!(out, "# HELP npe_queue_peak Deepest the work queue ever got.");
+        let _ = writeln!(out, "# TYPE npe_queue_peak gauge");
+        let _ = writeln!(out, "npe_queue_peak {}", m.queue_peak);
+
+        // Wall latency as a classic histogram, in µs.
+        let _ = writeln!(out, "# HELP npe_latency_us Wall latency submit to response, us.");
+        let _ = writeln!(out, "# TYPE npe_latency_us histogram");
+        for (upper_ns, cum) in m.latencies.cumulative_buckets() {
+            let _ = writeln!(
+                out,
+                "npe_latency_us_bucket{{le=\"{}\"}} {cum}",
+                num(upper_ns as f64 / 1e3)
+            );
+        }
+        let _ = writeln!(out, "npe_latency_us_bucket{{le=\"+Inf\"}} {}", m.latencies.count());
+        let _ = writeln!(out, "npe_latency_us_sum {}", num(m.latencies.sum() as f64 / 1e3));
+        let _ = writeln!(out, "npe_latency_us_count {}", m.latencies.count());
+
+        // Per-device lanes.
+        let _ = writeln!(out, "# HELP npe_device_requests_total Requests per device lane.");
+        let _ = writeln!(out, "# TYPE npe_device_requests_total counter");
+        for (i, d) in m.devices.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "npe_device_requests_total{{device=\"{i}\",geometry=\"{}\"}} {}",
+                escape(&d.geometry),
+                d.requests
+            );
+        }
+
+        // Per-layer attribution.
+        let series: [(&str, &str, fn(&LayerAgg) -> f64); 6] = [
+            ("npe_layer_rolls_total", "Rolls executed per layer.", |l| l.rolls as f64),
+            ("npe_layer_rounds_total", "Same-config rounds per layer.", |l| l.rounds as f64),
+            ("npe_layer_stream_cycles_total", "Streaming cycles.", |l| l.stream_cycles as f64),
+            ("npe_layer_deferred_cycles_total", "TCD tail cycles.", |l| l.deferred_cycles as f64),
+            ("npe_layer_switch_cycles_total", "Reconfig dead cycles.", |l| l.switch_cycles as f64),
+            ("npe_layer_pe_dynamic_pj_total", "PE dynamic energy, pJ.", |l| l.pe_dynamic_pj),
+        ];
+        for (name, help, get) in series {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for l in &self.layers {
+                let _ = writeln!(out, "{name}{{layer=\"{}\"}} {}", l.index, num(get(l)));
+            }
+        }
+        out
+    }
+
+    /// The snapshot as one JSON object (hand-rolled, same idiom as the
+    /// bench writers).
+    pub fn to_json(&self) -> String {
+        let m = &self.metrics;
+        let mut layers = String::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            if i > 0 {
+                layers.push(',');
+            }
+            let _ = write!(
+                layers,
+                "{{\"index\":{},\"batches\":{},\"rounds\":{},\"rolls\":{},\
+                 \"stream_cycles\":{},\"deferred_cycles\":{},\"switch_cycles\":{},\
+                 \"active_mac_cycles\":{},\"pe_dynamic_pj\":{:.3},\
+                 \"cache_hits\":{},\"cache_misses\":{}}}",
+                l.index,
+                l.batches,
+                l.rounds,
+                l.rolls,
+                l.stream_cycles,
+                l.deferred_cycles,
+                l.switch_cycles,
+                l.active_mac_cycles,
+                l.pe_dynamic_pj,
+                l.cache_hits,
+                l.cache_misses,
+            );
+        }
+        let mut devices = String::new();
+        for (i, d) in m.devices.iter().enumerate() {
+            if i > 0 {
+                devices.push(',');
+            }
+            let _ = write!(
+                devices,
+                "{{\"device\":{i},\"geometry\":\"{}\",\"batches\":{},\"requests\":{},\
+                 \"sim_busy_ns\":{:.3}}}",
+                escape(&d.geometry),
+                d.batches,
+                d.requests,
+                d.sim_busy_ns,
+            );
+        }
+        format!(
+            "{{\"requests\":{},\"rejected_requests\":{},\"shed_requests\":{},\
+             \"responses_dropped\":{},\"batches\":{},\"padded_slots\":{},\
+             \"verified_batches\":{},\"verify_mismatches\":{},\
+             \"sim_time_ns\":{:.3},\"sim_energy_pj\":{:.3},\
+             \"cache_hits\":{},\"cache_misses\":{},\"cache_evictions\":{},\
+             \"queue_peak\":{},\"latencies_recorded\":{},\
+             \"wall_p50_us\":{:.3},\"wall_p95_us\":{:.3},\"wall_p99_us\":{:.3},\
+             \"dropped_events\":{},\"devices\":[{devices}],\"layers\":[{layers}]}}\n",
+            m.requests,
+            m.rejected_requests,
+            m.shed_requests,
+            m.responses_dropped,
+            m.batches,
+            m.padded_slots,
+            m.verified_batches,
+            m.verify_mismatches,
+            m.sim_time_ns,
+            m.sim_energy_pj,
+            m.cache_hits,
+            m.cache_misses,
+            m.cache_evictions,
+            m.queue_peak,
+            m.latencies_recorded,
+            m.p50_us(),
+            m.p95_us(),
+            m.p99_us(),
+            self.dropped_events,
+        )
+    }
+}
+
+/// Prometheus sample value: integers render without a fraction.
+fn num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::profile::{BatchProfile, LayerProfile, RoundProfile};
+    use crate::obs::span::BatchTrace;
+    use crate::util::json::JsonValue;
+
+    fn traced_log() -> TraceLog {
+        let layer = |index: usize, amc: u64| LayerProfile {
+            index,
+            batches: 2,
+            inputs: 8,
+            neurons: 4,
+            rounds: vec![RoundProfile {
+                config: (4, 2),
+                rolls: 2,
+                stream_cycles: 16,
+                deferred_cycles: 2,
+                switch_cycles: 1,
+                active_mac_cycles: amc,
+            }],
+            compute_cycles: 18,
+            switch_cycles: 1,
+            active_mac_cycles: amc,
+            cache_hit: Some(index == 0),
+            ..Default::default()
+        };
+        TraceLog {
+            tracks: vec!["dev".into()],
+            wall: Vec::new(),
+            batches: vec![BatchTrace {
+                track: 0,
+                batch: 0,
+                requests: 2,
+                wall_start_ns: 0,
+                wall_dur_ns: 1,
+                cycles: 40,
+                time_ns: 80.0,
+                energy_pj: 9.0,
+                pe_dynamic_pj: 6.0,
+                active_mac_cycles: 300,
+                profile: BatchProfile { layers: vec![layer(0, 200), layer(1, 100)] },
+            }],
+            dropped_events: 0,
+        }
+    }
+
+    #[test]
+    fn aggregates_layers_and_splits_energy() {
+        let layers = aggregate_layers(&traced_log());
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].index, 0);
+        assert_eq!(layers[0].rolls, 2);
+        assert_eq!(layers[0].deferred_cycles, 2);
+        assert_eq!(layers[0].cache_hits, 1);
+        assert_eq!(layers[1].cache_misses, 1);
+        // 6 pJ split 200:100.
+        assert!((layers[0].pe_dynamic_pj - 4.0).abs() < 1e-9);
+        assert!((layers[1].pe_dynamic_pj - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_text_is_well_formed() {
+        let mut m = CoordinatorMetrics { requests: 5, ..Default::default() };
+        m.record_latency(1_000);
+        m.record_latency(2_000);
+        let snap = MetricsSnapshot::new(m, Some(&traced_log()));
+        let text = snap.prometheus_text();
+        assert!(text.contains("npe_requests_total 5"));
+        assert!(text.contains("# TYPE npe_latency_us histogram"));
+        assert!(text.contains("npe_latency_us_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("npe_latency_us_count 2"));
+        assert!(text.contains("npe_latency_us_sum 3"));
+        assert!(text.contains("npe_layer_deferred_cycles_total{layer=\"0\"} 2"));
+        // Every non-comment line is `name{labels}? value`.
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad sample value in: {line}");
+            assert!(parts.next().is_some(), "no metric name in: {line}");
+        }
+    }
+
+    #[test]
+    fn json_snapshot_parses_back() {
+        let m = CoordinatorMetrics { requests: 3, batches: 1, ..Default::default() };
+        let snap = MetricsSnapshot::new(m, Some(&traced_log()));
+        let v = JsonValue::parse(&snap.to_json()).expect("valid JSON");
+        assert_eq!(v.get("requests").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("layers").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            v.get("layers").unwrap().as_arr().unwrap()[0]
+                .get("deferred_cycles")
+                .unwrap()
+                .as_u64(),
+            Some(2)
+        );
+    }
+}

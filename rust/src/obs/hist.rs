@@ -1,0 +1,277 @@
+//! [`LogHistogram`] — a constant-memory log-bucketed latency histogram.
+//!
+//! Replaces the coordinator's old ring buffer + clone-and-sort
+//! percentile path: recording is O(1) (a leading-zeros shift and one
+//! array increment), a quantile is O(buckets), and `render()` no longer
+//! clones a 128 Ki-entry `Vec` per call. The trade is exactness for
+//! bounded relative error: values below [`LINEAR_MAX`] land in exact
+//! unit buckets; above it each power-of-two range is split into
+//! [`SUB_BUCKETS`] linear sub-buckets, so a reported quantile is within
+//! ±(1 / 2·SUB_BUCKETS) ≈ 1.6 % of the true sample (≤ 3.2 % worst
+//! case at bucket edges).
+
+/// Sub-buckets per power-of-two range (relative error ≤ 1/32 ≈ 3.1 %).
+pub const SUB_BUCKETS: u64 = 32;
+/// Values below this are counted exactly (one bucket per value).
+pub const LINEAR_MAX: u64 = SUB_BUCKETS;
+/// log2(SUB_BUCKETS).
+const SUB_SHIFT: u32 = SUB_BUCKETS.trailing_zeros();
+/// Total bucket count covering the full u64 range.
+const BUCKETS: usize = (LINEAR_MAX + (64 - SUB_SHIFT as u64) * SUB_BUCKETS) as usize;
+
+/// Log-bucketed histogram over `u64` samples (the coordinator feeds it
+/// wall latencies in ns). Constant memory, O(1) record, O(buckets)
+/// quantile.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LogHistogram {
+    /// Lazily sized to [`BUCKETS`] on first record, so
+    /// `CoordinatorMetrics::default()` stays allocation-free.
+    counts: Vec<u64>,
+    count: u64,
+    /// Exact running sum (Prometheus `_sum`; u128 so a years-long run of
+    /// ns samples cannot overflow).
+    sum: u128,
+    /// Exact extrema (the tails are what dashboards read off p99/p100).
+    min: u64,
+    max: u64,
+}
+
+/// Bucket index of a sample.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros();
+        let sub = (v >> (msb - SUB_SHIFT)) - SUB_BUCKETS;
+        (LINEAR_MAX + (msb - SUB_SHIFT) as u64 * SUB_BUCKETS + sub) as usize
+    }
+}
+
+/// Midpoint representative value of a bucket.
+#[inline]
+fn bucket_mid(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < LINEAR_MAX {
+        idx
+    } else {
+        let major = (idx - LINEAR_MAX) / SUB_BUCKETS + SUB_SHIFT as u64;
+        let sub = (idx - LINEAR_MAX) % SUB_BUCKETS;
+        let lower = (1u64 << major) + (sub << (major - SUB_SHIFT as u64));
+        let width = 1u64 << (major - SUB_SHIFT as u64);
+        lower + width / 2
+    }
+}
+
+/// Exclusive upper bound of a bucket (for Prometheus `le` edges).
+#[inline]
+fn bucket_upper(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < LINEAR_MAX {
+        idx + 1
+    } else {
+        let major = (idx - LINEAR_MAX) / SUB_BUCKETS + SUB_SHIFT as u64;
+        let sub = (idx - LINEAR_MAX) % SUB_BUCKETS;
+        (1u64 << major) + ((sub + 1) << (major - SUB_SHIFT as u64))
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample. O(1).
+    pub fn record(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+        }
+        self.counts[bucket_of(v)] += 1;
+        if self.count == 0 || v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        self.sum += v as u128;
+        self.count += 1;
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all recorded samples.
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Largest sample seen (exact).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Smallest sample seen (exact).
+    pub fn min(&self) -> u64 {
+        self.min
+    }
+
+    /// Nearest-rank quantile, `p` in [0, 100]: the representative
+    /// (midpoint) value of the bucket holding the rank-⌈p/100·n⌉ sample,
+    /// clamped to the exact observed extrema. 0 when empty. O(buckets).
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_mid(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Non-empty buckets as `(upper_bound, cumulative_count)` pairs —
+    /// the Prometheus classic-histogram exposition shape. The final
+    /// entry's cumulative count equals [`count`](Self::count).
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((bucket_upper(idx), cum));
+            }
+        }
+        out
+    }
+
+    /// Fold another histogram into this one (fleet lane merges).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+        }
+        for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        if self.count == 0 || other.min < self.min {
+            self.min = other.min;
+        }
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in 0..LINEAR_MAX {
+            h.record(v);
+        }
+        assert_eq!(h.count(), LINEAR_MAX);
+        // Every value below LINEAR_MAX has its own bucket.
+        for v in 0..LINEAR_MAX {
+            let p = (v + 1) as f64 / LINEAR_MAX as f64 * 100.0;
+            assert_eq!(h.quantile(p), v, "exact unit bucket for {v}");
+        }
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error() {
+        // 1..=100 µs in ns — the old nearest-rank test, under the new
+        // bucket-relative error bound (±3.2 % worst case).
+        let mut h = LogHistogram::new();
+        for v in 1..=100u64 {
+            h.record(v * 1000);
+        }
+        for (p, want) in [(50.0, 50_000.0), (95.0, 95_000.0), (99.0, 99_000.0)] {
+            let got = h.quantile(p) as f64;
+            let err = (got - want).abs() / want;
+            assert!(err <= 0.04, "p{p}: got {got}, want {want} (err {err:.3})");
+        }
+        // Extrema are exact, so p100 is too.
+        assert_eq!(h.quantile(100.0), 100_000);
+        assert_eq!(h.min(), 1000);
+        assert_eq!(h.max(), 100_000);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(99.0), 0);
+        assert_eq!(h.count(), 0);
+        assert!(h.cumulative_buckets().is_empty());
+    }
+
+    #[test]
+    fn order_independent() {
+        let mut asc = LogHistogram::new();
+        let mut desc = LogHistogram::new();
+        for v in 1..=1000u64 {
+            asc.record(v * 17);
+            desc.record((1001 - v) * 17);
+        }
+        for p in [10.0, 50.0, 90.0, 99.0] {
+            assert_eq!(asc.quantile(p), desc.quantile(p));
+        }
+    }
+
+    #[test]
+    fn cumulative_buckets_cover_everything() {
+        let mut h = LogHistogram::new();
+        for v in [3u64, 100, 100, 5_000, 1 << 40] {
+            h.record(v);
+        }
+        let buckets = h.cumulative_buckets();
+        assert_eq!(buckets.last().unwrap().1, 5, "cumulative tail == count");
+        // Cumulative counts are non-decreasing, upper bounds strictly grow.
+        for w in buckets.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut all = LogHistogram::new();
+        for v in 1..=500u64 {
+            a.record(v * 7);
+            all.record(v * 7);
+        }
+        for v in 1..=500u64 {
+            b.record(v * 13);
+            all.record(v * 13);
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+    }
+
+    #[test]
+    fn huge_values_do_not_overflow() {
+        let mut h = LogHistogram::new();
+        h.record(u64::MAX);
+        h.record(0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.quantile(0.0), 0);
+    }
+}

@@ -1,0 +1,46 @@
+//! End-to-end tracing & profiling: per-request spans, per-round
+//! cycle/energy attribution, Chrome-trace + Prometheus-style export.
+//!
+//! The paper's whole value claim is an accounting argument — TCD-MAC
+//! wins because carry-deferring moves cycles and energy out of the
+//! steady-state rolls and into one deferred completion round — and this
+//! module makes that accounting visible *per execution* instead of only
+//! as end-of-run aggregates:
+//!
+//! * [`span`] — the [`Tracer`]/[`TrackHandle`] pair threaded from
+//!   [`ServeBuilder`](crate::serve::ServeBuilder) through the
+//!   coordinator and fleet into every engine: typed wall spans (submit →
+//!   admission → queue wait → batch assembly → execute → respond) plus a
+//!   deterministic simulated-time [`BatchTrace`] per executed batch.
+//! * [`profile`] — [`BatchProfile`]/[`LayerProfile`]/[`RoundProfile`],
+//!   the per-layer, per-round attribution the execution core fills
+//!   during its roll walk (rolls, config-switch cycles, the TCD
+//!   deferred-completion tail, active MAC-cycles, SRAM row traffic).
+//! * [`chrome`] — [`chrome_trace_json`]: a Perfetto-loadable
+//!   Chrome-trace export, one wall track per pipeline lane and one
+//!   simulated-time track per device, with exact integer cycle args so
+//!   per-batch span sums equal the engine's reported
+//!   `DataflowReport.cycles`.
+//! * [`export`] — [`MetricsSnapshot`]: coordinator counters + per-layer
+//!   aggregation as Prometheus text exposition or a JSON snapshot,
+//!   reachable from
+//!   [`NpeService::metrics_snapshot`](crate::serve::NpeService::metrics_snapshot).
+//! * [`hist`] — [`LogHistogram`], the constant-memory log-bucketed
+//!   histogram behind the coordinator's latency percentiles.
+//!
+//! Everything here is dependency-free and hand-rolled, like the rest of
+//! the repo: no serde, no tracing crates — the JSON writers live next
+//! to a matching minimal parser ([`crate::util::json`]) used by the
+//! schema tests.
+
+pub mod chrome;
+pub mod export;
+pub mod hist;
+pub mod profile;
+pub mod span;
+
+pub use chrome::chrome_trace_json;
+pub use export::{aggregate_layers, LayerAgg, MetricsSnapshot};
+pub use hist::LogHistogram;
+pub use profile::{BatchProfile, LayerProfile, RoundProfile};
+pub use span::{BatchTrace, SpanKind, TraceLog, Tracer, TrackHandle, WallSpan};

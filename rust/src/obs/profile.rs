@@ -1,0 +1,169 @@
+//! Per-batch cycle/energy attribution records.
+//!
+//! The paper's Table-IV argument is an accounting claim: TCD-MAC wins
+//! because carry-deferring moves cycles out of the steady-state rolls
+//! and into one deferred completion round per GEMM. These records make
+//! that split visible *per execution* instead of only in offline
+//! benches: [`ExecCore`](crate::exec::ExecCore) fills one
+//! [`LayerProfile`] per GEMM it walks, with one [`RoundProfile`] per
+//! contiguous same-config roll run (a "round" — the unit Fig. 6C's
+//! reconfiguration events delimit).
+//!
+//! Collection is unconditional and cheap (a handful of u64 adds per
+//! roll, amortized over the backend's arithmetic); engines that run
+//! untraced simply drop the [`BatchProfile`] on the floor at
+//! `finish()`.
+
+/// One contiguous run of rolls on a single NPE(K, N) configuration.
+///
+/// Cycle identity (asserted by the obs schema tests): per roll the MAC
+/// contract charges `I` streaming cycles plus `extra` deferred-
+/// completion cycles (`extra` = 1 for TCD, 0 conventional), and the
+/// round boundary itself costs [`switch_cycles`](Self::switch_cycles)
+/// dead cycles — so a layer's compute cycles are exactly
+/// `Σ (stream_cycles + deferred_cycles)` over its rounds.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct RoundProfile {
+    /// The NPE(K, N) configuration the rolls ran on.
+    pub config: (usize, usize),
+    /// Rolls executed in this round.
+    pub rolls: u64,
+    /// Steady-state streaming cycles: `rolls × I`.
+    pub stream_cycles: u64,
+    /// Deferred-completion cycles (the TCD tail): `rolls × extra`.
+    pub deferred_cycles: u64,
+    /// Dead cycles paid to reconfigure into this round's config (1 in
+    /// the current model — the walk counts one per config change).
+    pub switch_cycles: u64,
+    /// Active MAC-cycles of this round (`Σ load × (I + extra)`) — the
+    /// round's share of the dynamic-energy input.
+    pub active_mac_cycles: u64,
+}
+
+impl RoundProfile {
+    /// Compute cycles of the round (stream + deferred, excluding the
+    /// reconfiguration dead cycles).
+    pub fn compute_cycles(&self) -> u64 {
+        self.stream_cycles + self.deferred_cycles
+    }
+}
+
+/// Attribution for one scheduled GEMM (one Γ(B, I, U) walk).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct LayerProfile {
+    /// Position in the batch's execution order (0-based).
+    pub index: usize,
+    /// Γ batches (rows fed through the layer).
+    pub batches: usize,
+    /// Γ inputs (fan-in / stream length I).
+    pub inputs: usize,
+    /// Γ neurons (fan-out U).
+    pub neurons: usize,
+    /// One entry per same-config roll run, in execution order.
+    pub rounds: Vec<RoundProfile>,
+    /// Measured backend compute-cycle delta across the walk (equals
+    /// `Σ rounds.compute_cycles()` — the schema test pins this).
+    pub compute_cycles: u64,
+    /// Reconfiguration dead cycles (`rounds.len()` in the current model).
+    pub switch_cycles: u64,
+    /// Active MAC-cycle delta (the layer's dynamic-energy share).
+    pub active_mac_cycles: u64,
+    /// Wall time spent resolving the schedule (cache lookup or
+    /// Algorithm-1 DP), ns. 0 for pre-scheduled graph groups.
+    pub mapper_wall_ns: u64,
+    /// `Some(true)` = shared-cache hit, `Some(false)` = miss (DP ran),
+    /// `None` = private memo or pre-scheduled (no shared cache consulted).
+    pub cache_hit: Option<bool>,
+    /// Wall time of the whole walk (schedule + backend + output path), ns.
+    pub wall_ns: u64,
+    /// SRAM weight-row reads charged to this layer (0 when the engine
+    /// accounts memory at model scope instead).
+    pub wmem_row_reads: u64,
+    /// SRAM feature-map row reads charged to this layer.
+    pub fm_row_reads: u64,
+    /// SRAM feature-map row writes charged to this layer.
+    pub fm_row_writes: u64,
+}
+
+impl LayerProfile {
+    /// Total rolls across every round.
+    pub fn rolls(&self) -> u64 {
+        self.rounds.iter().map(|r| r.rolls).sum()
+    }
+
+    /// Deferred-completion cycles across every round (the TCD tail this
+    /// whole subsystem exists to make visible).
+    pub fn deferred_cycles(&self) -> u64 {
+        self.rounds.iter().map(|r| r.deferred_cycles).sum()
+    }
+
+    /// Compute + reconfiguration cycles of the layer.
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles + self.switch_cycles
+    }
+}
+
+/// Attribution for one executed batch: every GEMM the engine walked, in
+/// order. Taken out of the [`ExecRun`](crate::exec::ExecRun) before
+/// `finish()` by traced engines.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct BatchProfile {
+    pub layers: Vec<LayerProfile>,
+}
+
+impl BatchProfile {
+    /// Compute + switch cycles attributed across all layers. The
+    /// engine's reported total additionally includes layer-swap cycles
+    /// and any non-GEMM stage costs; the Chrome exporter emits that
+    /// remainder as an explicit overhead span so per-batch sums stay
+    /// exact.
+    pub fn attributed_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.total_cycles()).sum()
+    }
+
+    /// Total active MAC-cycles across all layers.
+    pub fn active_mac_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.active_mac_cycles).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(config: (usize, usize), rolls: u64, i: u64, extra: u64) -> RoundProfile {
+        RoundProfile {
+            config,
+            rolls,
+            stream_cycles: rolls * i,
+            deferred_cycles: rolls * extra,
+            switch_cycles: 1,
+            active_mac_cycles: rolls * (i + extra) * (config.0 * config.1) as u64,
+        }
+    }
+
+    #[test]
+    fn cycle_identities_hold() {
+        let r = round((4, 2), 3, 10, 1);
+        assert_eq!(r.compute_cycles(), 33);
+        let layer = LayerProfile {
+            index: 0,
+            batches: 4,
+            inputs: 10,
+            neurons: 6,
+            rounds: vec![round((4, 2), 3, 10, 1), round((2, 4), 2, 10, 1)],
+            compute_cycles: 33 + 22,
+            switch_cycles: 2,
+            ..Default::default()
+        };
+        assert_eq!(layer.rolls(), 5);
+        assert_eq!(layer.deferred_cycles(), 5);
+        assert_eq!(
+            layer.compute_cycles,
+            layer.rounds.iter().map(|r| r.compute_cycles()).sum::<u64>()
+        );
+        assert_eq!(layer.total_cycles(), 57);
+        let batch = BatchProfile { layers: vec![layer.clone(), layer] };
+        assert_eq!(batch.attributed_cycles(), 114);
+    }
+}

@@ -1,0 +1,342 @@
+//! [`Tracer`] — the span recorder threaded through the serving path.
+//!
+//! One `Arc<Tracer>` is created by
+//! [`ServeBuilder::tracing`](crate::serve::ServeBuilder::tracing) (or
+//! attached with [`ServeBuilder::tracer`](crate::serve::ServeBuilder::tracer)
+//! to share a tracer across services) and handed down: the submit gate
+//! records `submit`/`admission` spans, the coordinator loop records
+//! `queue-wait`/`batch-assembly`/`respond`, and every executing engine
+//! holds a [`TrackHandle`] — one registered track per simulated device —
+//! through which it records an `execute` wall span plus the full
+//! simulated-time [`BatchProfile`] of each batch it runs.
+//!
+//! Two clocks, kept separate by construction:
+//! * **wall time** — host `Instant`s relative to the tracer epoch,
+//!   stored in [`WallSpan`]s (and the wall envelope of [`BatchTrace`]);
+//! * **simulated NPE time** — cycles and ns from the engine's own
+//!   accounting, stored in [`BatchTrace`]/[`BatchProfile`] and fully
+//!   deterministic for a seeded run (the determinism test relies on
+//!   this split: strip the wall track and two identical runs emit
+//!   identical traces).
+//!
+//! Buffers are bounded ([`WALL_SPAN_CAP`], [`BATCH_CAP`]); overflow
+//! increments [`TraceLog::dropped_events`] rather than silently
+//! truncating.
+
+use super::profile::BatchProfile;
+use crate::dataflow::DataflowReport;
+use crate::util;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Wall-span buffer bound (spans beyond this are counted as dropped).
+pub const WALL_SPAN_CAP: usize = 1 << 20;
+/// Batch-trace buffer bound.
+pub const BATCH_CAP: usize = 1 << 16;
+
+/// The typed wall-side span taxonomy of one request's lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Client-side submit call (shape/admission checks included).
+    Submit,
+    /// Admission-control decision inside the submit gate.
+    Admission,
+    /// Admitted request waiting to be drained into a batch.
+    QueueWait,
+    /// Batcher assembly: first arrival of the batch → dispatch.
+    BatchAssembly,
+    /// Engine execution of one batch (wall envelope of the sim work).
+    Execute,
+    /// Response fan-out back to the tickets.
+    Respond,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Submit => "submit",
+            SpanKind::Admission => "admission",
+            SpanKind::QueueWait => "queue-wait",
+            SpanKind::BatchAssembly => "batch-assembly",
+            SpanKind::Execute => "execute",
+            SpanKind::Respond => "respond",
+        }
+    }
+}
+
+/// One wall-clock span, epoch-relative.
+#[derive(Debug, Clone)]
+pub struct WallSpan {
+    pub kind: SpanKind,
+    /// Track (device/pipeline lane) index from [`Tracer::register_track`].
+    pub track: u32,
+    /// Batch id, when the span belongs to a dispatched batch.
+    pub batch: Option<u64>,
+    /// Request trace id, when the span belongs to one request.
+    pub request: Option<u64>,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// One executed batch: wall envelope + the deterministic simulated-time
+/// attribution the Chrome exporter turns into nested device-track spans.
+#[derive(Debug, Clone)]
+pub struct BatchTrace {
+    pub track: u32,
+    pub batch: u64,
+    /// Real (unpadded) requests in the batch.
+    pub requests: usize,
+    pub wall_start_ns: u64,
+    pub wall_dur_ns: u64,
+    /// The engine's reported total (`DataflowReport.cycles`).
+    pub cycles: u64,
+    /// Simulated NPE time (`DataflowReport.time_ns`).
+    pub time_ns: f64,
+    /// Total simulated energy, pJ.
+    pub energy_pj: f64,
+    /// PE dynamic energy, pJ (distributed over layers by the exporter,
+    /// proportional to each layer's active MAC-cycles).
+    pub pe_dynamic_pj: f64,
+    /// Active MAC-cycles of the whole batch.
+    pub active_mac_cycles: u64,
+    pub profile: BatchProfile,
+}
+
+#[derive(Debug, Default)]
+struct TraceBuf {
+    wall: Vec<WallSpan>,
+    batches: Vec<BatchTrace>,
+    dropped: u64,
+}
+
+/// Immutable snapshot of everything recorded so far.
+#[derive(Debug, Clone, Default)]
+pub struct TraceLog {
+    /// Track names, indexed by [`WallSpan::track`]/[`BatchTrace::track`].
+    pub tracks: Vec<String>,
+    pub wall: Vec<WallSpan>,
+    pub batches: Vec<BatchTrace>,
+    /// Events lost to the buffer bounds (0 in healthy runs).
+    pub dropped_events: u64,
+}
+
+/// The span recorder. Cheap enough to sit on the serving hot path: a
+/// span record is one short mutex hold and a `Vec` push.
+pub struct Tracer {
+    epoch: Instant,
+    inner: Mutex<TraceBuf>,
+    tracks: Mutex<Vec<String>>,
+    next_batch: AtomicU64,
+    next_request: AtomicU64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+            inner: Mutex::new(TraceBuf::default()),
+            tracks: Mutex::new(Vec::new()),
+            next_batch: AtomicU64::new(0),
+            next_request: AtomicU64::new(0),
+        }
+    }
+
+    /// The usual construction: one tracer shared across a service (or
+    /// several — tracks keep multi-service traces apart).
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::new())
+    }
+
+    /// Nanoseconds since the tracer epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Epoch-relative ns of an `Instant` taken elsewhere (0 if it
+    /// predates the epoch).
+    pub fn ns_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Register a named track (a device lane, or the request pipeline of
+    /// one service) and get its index. Names need not be unique; the
+    /// exporter disambiguates by index.
+    pub fn register_track(self: &Arc<Self>, name: &str) -> TrackHandle {
+        let mut tracks = util::lock(&self.tracks);
+        let idx = tracks.len() as u32;
+        tracks.push(name.to_string());
+        TrackHandle { tracer: Arc::clone(self), track: idx }
+    }
+
+    /// Next request trace id (monotonic per tracer).
+    pub fn next_request_id(&self) -> u64 {
+        self.next_request.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn next_batch_id(&self) -> u64 {
+        self.next_batch.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn push_wall(&self, span: WallSpan) {
+        let mut buf = util::lock(&self.inner);
+        if buf.wall.len() < WALL_SPAN_CAP {
+            buf.wall.push(span);
+        } else {
+            buf.dropped += 1;
+        }
+    }
+
+    /// Snapshot everything recorded so far (spans sorted by start time,
+    /// batches by track then batch id — a stable, render-ready order).
+    pub fn snapshot(&self) -> TraceLog {
+        let tracks = util::lock(&self.tracks).clone();
+        let buf = util::lock(&self.inner);
+        let mut wall = buf.wall.clone();
+        wall.sort_by_key(|s| (s.start_ns, s.track));
+        let mut batches = buf.batches.clone();
+        batches.sort_by_key(|b| (b.track, b.batch));
+        TraceLog { tracks, wall, batches, dropped_events: buf.dropped }
+    }
+}
+
+/// A cloneable handle bound to one track: what engines and the
+/// coordinator actually record through.
+#[derive(Clone)]
+pub struct TrackHandle {
+    tracer: Arc<Tracer>,
+    track: u32,
+}
+
+impl TrackHandle {
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    pub fn track(&self) -> u32 {
+        self.track
+    }
+
+    /// Record a wall span that started at `start` and ends now.
+    pub fn span_since(&self, kind: SpanKind, start: Instant, request: Option<u64>) {
+        let start_ns = self.tracer.ns_of(start);
+        let end_ns = self.tracer.now_ns();
+        self.tracer.push_wall(WallSpan {
+            kind,
+            track: self.track,
+            batch: None,
+            request,
+            start_ns,
+            dur_ns: end_ns.saturating_sub(start_ns),
+        });
+    }
+
+    /// Record one executed batch: the `execute` wall span plus the full
+    /// simulated-time attribution. Returns the batch id.
+    pub fn record_batch(
+        &self,
+        started: Instant,
+        requests: usize,
+        profile: BatchProfile,
+        report: &DataflowReport,
+        active_mac_cycles: u64,
+    ) -> u64 {
+        let batch = self.tracer.next_batch_id();
+        let start_ns = self.tracer.ns_of(started);
+        let dur_ns = self.tracer.now_ns().saturating_sub(start_ns);
+        let mut buf = util::lock(&self.tracer.inner);
+        if buf.wall.len() < WALL_SPAN_CAP {
+            buf.wall.push(WallSpan {
+                kind: SpanKind::Execute,
+                track: self.track,
+                batch: Some(batch),
+                request: None,
+                start_ns,
+                dur_ns,
+            });
+        } else {
+            buf.dropped += 1;
+        }
+        if buf.batches.len() < BATCH_CAP {
+            buf.batches.push(BatchTrace {
+                track: self.track,
+                batch,
+                requests,
+                wall_start_ns: start_ns,
+                wall_dur_ns: dur_ns,
+                cycles: report.cycles,
+                time_ns: report.time_ns,
+                energy_pj: report.energy.total_pj(),
+                pe_dynamic_pj: report.energy.pe_dynamic_pj,
+                active_mac_cycles,
+                profile,
+            });
+        } else {
+            buf.dropped += 1;
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::EnergyBreakdown;
+
+    fn report(cycles: u64) -> DataflowReport {
+        DataflowReport {
+            dataflow: "test",
+            mac: "tcd",
+            outputs: Vec::new(),
+            cycles,
+            time_ns: cycles as f64 * 2.0,
+            energy: EnergyBreakdown {
+                pe_dynamic_pj: 10.0,
+                pe_leak_pj: 1.0,
+                mem_dynamic_pj: 2.0,
+                mem_leak_pj: 0.5,
+                dram_pj: 3.0,
+            },
+        }
+    }
+
+    #[test]
+    fn tracks_spans_and_batches_round_trip() {
+        let tracer = Tracer::shared();
+        let pipeline = tracer.register_track("pipeline");
+        let dev = tracer.register_track("device 0 [16x8]");
+        assert_eq!(pipeline.track(), 0);
+        assert_eq!(dev.track(), 1);
+
+        let t0 = Instant::now();
+        pipeline.span_since(SpanKind::Submit, t0, Some(7));
+        let id = dev.record_batch(t0, 3, BatchProfile::default(), &report(100), 42);
+        assert_eq!(id, 0);
+        let id2 = dev.record_batch(t0, 1, BatchProfile::default(), &report(50), 10);
+        assert_eq!(id2, 1, "batch ids are monotonic");
+
+        let log = tracer.snapshot();
+        assert_eq!(log.tracks, vec!["pipeline", "device 0 [16x8]"]);
+        assert_eq!(log.batches.len(), 2);
+        assert_eq!(log.batches[0].cycles, 100);
+        assert_eq!(log.batches[0].requests, 3);
+        assert!((log.batches[0].energy_pj - 16.5).abs() < 1e-9);
+        // Submit span + 2 execute spans.
+        assert_eq!(log.wall.len(), 3);
+        assert!(log.wall.iter().any(|s| s.kind == SpanKind::Submit && s.request == Some(7)));
+        assert_eq!(log.dropped_events, 0);
+    }
+
+    #[test]
+    fn request_ids_are_monotonic() {
+        let tracer = Tracer::shared();
+        assert_eq!(tracer.next_request_id(), 0);
+        assert_eq!(tracer.next_request_id(), 1);
+    }
+}

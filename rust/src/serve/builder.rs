@@ -29,6 +29,8 @@ use crate::fleet::DeviceSpec;
 use crate::graph::{GraphModel, QuantizedGraph};
 use crate::mapper::{NpeGeometry, DEFAULT_SERVING_CACHE_CAPACITY};
 use crate::model::QuantizedMlp;
+use crate::obs::Tracer;
+use std::sync::Arc;
 
 /// Weight seed used when serving a raw [`GraphModel`]: the graph IR
 /// carries structure, not parameters, so the builder synthesizes weights
@@ -88,6 +90,7 @@ pub struct ServeBuilder {
     cache_capacity: usize,
     admission: AdmissionPolicy,
     pjrt: Option<PjrtSpec>,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl ServeBuilder {
@@ -101,6 +104,7 @@ impl ServeBuilder {
             cache_capacity: DEFAULT_SERVING_CACHE_CAPACITY,
             admission: AdmissionPolicy::default(),
             pjrt: None,
+            tracer: None,
         }
     }
 
@@ -160,6 +164,24 @@ impl ServeBuilder {
         self
     }
 
+    /// Enable (or disable) end-to-end tracing with a fresh private
+    /// [`Tracer`]: per-request spans on a `requests` track, plus one
+    /// track per device carrying execute spans and per-round simulated
+    /// cycle/energy attribution. Default: off (zero overhead — the
+    /// request path carries an `Option` that is `None`).
+    pub fn tracing(mut self, on: bool) -> Self {
+        self.tracer = if on { Some(Tracer::shared()) } else { None };
+        self
+    }
+
+    /// Record spans onto an existing shared [`Tracer`] — several
+    /// services can write one merged trace (tracks are registered
+    /// per-service, so devices never collide). Implies tracing on.
+    pub fn tracer(mut self, tracer: Arc<Tracer>) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+
     /// Validate the configuration and start the service.
     pub fn build(self) -> Result<NpeService, ServeError> {
         let invalid = |reason: &str| {
@@ -204,6 +226,7 @@ impl ServeBuilder {
             self.batcher,
             self.cache_capacity,
             self.admission,
+            self.tracer,
         ))
     }
 }

@@ -15,6 +15,7 @@
 //!   .devices([DeviceSpec, ..])       — or a (heterogeneous) fleet
 //!   .batcher(..) .cache(..)          — batching + Algorithm-1 memo
 //!   .admission(..)                   — Block | Reject | ShedOldest
+//!   .tracing(true) | .tracer(t)      — end-to-end spans ([`crate::obs`])
 //!   .build()?                        — validated; InvalidConfig, not a hang
 //!   ▼
 //! NpeService ── submit(input)? ──► Ticket ── wait()/wait_timeout()? ──► InferenceResponse
@@ -56,6 +57,6 @@ pub(crate) mod test_support {
     pub(crate) fn detached_request(input: Vec<i16>) -> (InferenceRequest, Ticket) {
         let shared = ServeShared::new(input.len(), AdmissionPolicy::Block);
         let (responder, ticket) = Responder::admit(&shared);
-        (InferenceRequest { input, submitted: Instant::now(), responder }, ticket)
+        (InferenceRequest { input, submitted: Instant::now(), responder, trace_id: 0 }, ticket)
     }
 }

@@ -18,6 +18,7 @@ use crate::coordinator::{
     InferenceRequest, ServedModel,
 };
 use crate::mapper::ScheduleCache;
+use crate::obs::{chrome_trace_json, MetricsSnapshot, SpanKind, TraceLog, Tracer, TrackHandle};
 use crate::util;
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -33,6 +34,10 @@ pub struct NpeService {
     shared: Arc<ServeShared>,
     metrics: Arc<Mutex<CoordinatorMetrics>>,
     cache: Arc<ScheduleCache>,
+    /// The span recorder, when tracing was enabled at build time.
+    tracer: Option<Arc<Tracer>>,
+    /// The request-pipeline track submit/admission spans record on.
+    pipeline: Option<TrackHandle>,
 }
 
 impl NpeService {
@@ -50,17 +55,19 @@ impl NpeService {
         cfg: BatcherConfig,
         cache_capacity: usize,
         admission: AdmissionPolicy,
+        tracer: Option<Arc<Tracer>>,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
         let cache = ScheduleCache::shared_bounded(cache_capacity);
         let shared = ServeShared::new(model.input_len(), admission);
-        let (metrics_t, cache_t, shared_t) =
-            (Arc::clone(&metrics), Arc::clone(&cache), Arc::clone(&shared));
+        let pipeline = tracer.as_ref().map(|t| t.register_track("requests"));
+        let (metrics_t, cache_t, shared_t, tracer_t) =
+            (Arc::clone(&metrics), Arc::clone(&cache), Arc::clone(&shared), tracer.clone());
         let handle = std::thread::spawn(move || {
-            service_thread(rx, model, plan, cfg, metrics_t, cache_t, shared_t)
+            service_thread(rx, model, plan, cfg, metrics_t, cache_t, shared_t, tracer_t)
         });
-        Self { tx, handle: Some(handle), shared, metrics, cache }
+        Self { tx, handle: Some(handle), shared, metrics, cache, tracer, pipeline }
     }
 
     /// Submit one request. Shape and admission are checked here, in the
@@ -68,7 +75,7 @@ impl NpeService {
     /// queue space, and the error comes back immediately instead of as a
     /// hung channel.
     pub fn submit(&self, input: Vec<i16>) -> Result<Ticket, ServeError> {
-        submit_via(&self.tx, &self.shared, &self.metrics, input)
+        submit_via(&self.tx, &self.shared, &self.metrics, self.pipeline.as_ref(), input)
     }
 
     /// A cloneable submit-only handle for concurrent client threads.
@@ -77,12 +84,44 @@ impl NpeService {
             tx: self.tx.clone(),
             shared: Arc::clone(&self.shared),
             metrics: Arc::clone(&self.metrics),
+            pipeline: self.pipeline.clone(),
         }
     }
 
     /// Snapshot of the service counters (percentiles, cache, lanes).
+    /// Cache counters are overlaid here from one consistent
+    /// [`ScheduleCache`] snapshot — the execution lanes never write them,
+    /// so concurrent devices cannot clobber each other's view.
     pub fn metrics(&self) -> CoordinatorMetrics {
-        util::lock(&self.metrics).clone()
+        let mut m = util::lock(&self.metrics).clone();
+        m.set_cache_stats(self.cache.stats());
+        m
+    }
+
+    /// The tracer this service records spans on, if tracing was enabled
+    /// via [`ServeBuilder::tracing`] or shared via
+    /// [`ServeBuilder::tracer`].
+    pub fn tracer(&self) -> Option<Arc<Tracer>> {
+        self.tracer.clone()
+    }
+
+    /// Snapshot of every span recorded so far (empty log when untraced).
+    pub fn trace(&self) -> TraceLog {
+        self.tracer.as_ref().map(|t| t.snapshot()).unwrap_or_default()
+    }
+
+    /// The current trace as Chrome-trace JSON (loadable in Perfetto /
+    /// `chrome://tracing`). Empty but valid JSON when untraced.
+    pub fn trace_json(&self) -> String {
+        chrome_trace_json(&self.trace())
+    }
+
+    /// One coherent observability snapshot: overlaid service counters
+    /// plus per-layer cycle/energy attribution aggregated from the
+    /// trace. Exports to Prometheus text or JSON.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let log = self.tracer.as_ref().map(|t| t.snapshot());
+        MetricsSnapshot::new(self.metrics(), log.as_ref())
     }
 
     /// Shared handle to the live metrics, for monitors that keep
@@ -138,13 +177,14 @@ pub struct ServiceClient {
     tx: mpsc::Sender<CoordinatorMsg>,
     shared: Arc<ServeShared>,
     metrics: Arc<Mutex<CoordinatorMetrics>>,
+    pipeline: Option<TrackHandle>,
 }
 
 impl ServiceClient {
     /// Submit one request (same checks and semantics as
     /// [`NpeService::submit`]).
     pub fn submit(&self, input: Vec<i16>) -> Result<Ticket, ServeError> {
-        submit_via(&self.tx, &self.shared, &self.metrics, input)
+        submit_via(&self.tx, &self.shared, &self.metrics, self.pipeline.as_ref(), input)
     }
 
     /// Requests currently in flight.
@@ -159,8 +199,10 @@ fn submit_via(
     tx: &mpsc::Sender<CoordinatorMsg>,
     shared: &Arc<ServeShared>,
     metrics: &Mutex<CoordinatorMetrics>,
+    pipeline: Option<&TrackHandle>,
     input: Vec<i16>,
 ) -> Result<Ticket, ServeError> {
+    let entered = Instant::now();
     if shared.is_shutting_down() {
         return Err(ServeError::ShuttingDown);
     }
@@ -168,6 +210,7 @@ fn submit_via(
         util::lock(metrics).rejected_requests += 1;
         return Err(ServeError::ShapeMismatch { expected: shared.input_len, got: input.len() });
     }
+    let admission_started = Instant::now();
     if let AdmissionPolicy::Reject { max_depth } = shared.policy {
         let depth = shared.depth();
         if depth >= max_depth {
@@ -176,11 +219,26 @@ fn submit_via(
         }
     }
     let (responder, ticket) = Responder::admit(shared);
-    let request = InferenceRequest { input, submitted: Instant::now(), responder };
+    // Span bookkeeping happens only on the admitted path: a rejected
+    // request never mints a trace id, so trace_id 0 == "untraced".
+    let trace_id = match pipeline {
+        Some(p) => {
+            let id = p.tracer().next_request_id();
+            p.span_since(SpanKind::Admission, admission_started, Some(id));
+            id
+        }
+        None => 0,
+    };
+    let request = InferenceRequest { input, submitted: Instant::now(), responder, trace_id };
     // A send failure means the coordinator loop is gone; the responder's
     // drop has already released the depth slot.
     match tx.send(CoordinatorMsg::Request(request)) {
-        Ok(()) => Ok(ticket),
+        Ok(()) => {
+            if let Some(p) = pipeline {
+                p.span_since(SpanKind::Submit, entered, Some(trace_id));
+            }
+            Ok(ticket)
+        }
         Err(_) => Err(ServeError::ShuttingDown),
     }
 }

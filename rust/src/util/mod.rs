@@ -1,8 +1,10 @@
 //! Small shared utilities: deterministic RNG (mirrored in
 //! `python/compile/rng.py` so both languages generate identical synthetic
-//! weights), and pretty-printing helpers for the table generators.
+//! weights), pretty-printing helpers for the table generators, and a
+//! minimal JSON parser ([`json`]) matching the repo's hand-rolled writers.
 
 pub mod check;
+pub mod json;
 pub mod rng;
 mod table;
 

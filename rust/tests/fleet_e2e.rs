@@ -178,7 +178,7 @@ fn shutdown_with_queued_work_answers_every_request_exactly_once() {
     }
     let m = metrics.lock().unwrap();
     assert_eq!(m.requests, 50, "all accepted requests dispatched");
-    assert_eq!(m.latencies_ns.len(), 50);
+    assert_eq!(m.latencies.count(), 50);
     assert_eq!(m.devices.iter().map(|d| d.requests).sum::<u64>(), 50);
 }
 

@@ -7,7 +7,6 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use tcd_npe::coordinator::metrics::LATENCY_SAMPLE_CAP;
 use tcd_npe::coordinator::BatcherConfig;
 use tcd_npe::mapper::NpeGeometry;
 use tcd_npe::model::{MlpTopology, QuantizedMlp};
@@ -30,18 +29,20 @@ fn spawn_monitor(
     done: Arc<AtomicBool>,
 ) -> std::thread::JoinHandle<u64> {
     let metrics = service.metrics_handle();
+    let cache = service.cache();
     std::thread::spawn(move || {
         let mut last_requests = 0u64;
         let mut last_rejected = 0u64;
         let mut last_batches = 0u64;
-        let mut last_latencies = 0usize;
+        let mut last_latencies = 0u64;
+        let mut last_lookups = 0u64;
         let mut snapshots = 0u64;
         while !done.load(Ordering::Relaxed) {
             let m = metrics.lock().unwrap().clone();
             assert!(m.requests >= last_requests, "requests went backwards");
             assert!(m.rejected_requests >= last_rejected, "rejected went backwards");
             assert!(m.batches >= last_batches, "batches went backwards");
-            assert!(m.latencies_ns.len() >= last_latencies, "latencies shrank");
+            assert!(m.latencies.count() >= last_latencies, "latency count shrank");
             assert!(m.batches <= m.requests.max(1), "more batches than requests");
             assert!(
                 m.latencies_recorded == m.requests,
@@ -50,8 +51,8 @@ fn spawn_monitor(
                 m.requests
             );
             assert!(
-                m.latencies_ns.len() as u64 == m.requests.min(LATENCY_SAMPLE_CAP as u64),
-                "latency window holds min(requests, cap) samples"
+                m.latencies.count() == m.requests,
+                "the histogram holds every recorded latency (no sample cap)"
             );
             let occupancy = m.batch_occupancy();
             assert!((0.0..=1.0).contains(&occupancy), "occupancy {occupancy}");
@@ -60,10 +61,22 @@ fn spawn_monitor(
                 m.requests,
                 "device lanes must partition the request count"
             );
+            // Cache counters come from one shared-cache snapshot, so
+            // they are monotone and internally consistent even while
+            // many lanes race (regression guard for the
+            // last-writer-wins overwrite this PR removed).
+            let stats = cache.stats();
+            assert_eq!(
+                stats.hits + stats.misses,
+                stats.lookups(),
+                "cache snapshot is internally consistent"
+            );
+            assert!(stats.lookups() >= last_lookups, "cache lookups went backwards");
+            last_lookups = stats.lookups();
             last_requests = m.requests;
             last_rejected = m.rejected_requests;
             last_batches = m.batches;
-            last_latencies = m.latencies_ns.len();
+            last_latencies = m.latencies.count();
             snapshots += 1;
             std::thread::sleep(Duration::from_millis(1));
         }
@@ -117,6 +130,9 @@ fn run_stress(service: NpeService, mlp: &QuantizedMlp) {
         t0.elapsed()
     );
 
+    // Overlaid snapshot (cache counters included) before shutdown; the
+    // raw handle stays valid for the post-shutdown counters.
+    let overlaid = service.metrics();
     let metrics = service.metrics_handle();
     let cache = service.cache();
     service.shutdown().unwrap();
@@ -127,12 +143,13 @@ fn run_stress(service: NpeService, mlp: &QuantizedMlp) {
         (CLIENTS * INVALID_PER_CLIENT) as u64,
         "every malformed request counted"
     );
-    assert_eq!(m.latencies_ns.len(), CLIENTS * VALID_PER_CLIENT);
+    assert_eq!(m.latencies.count(), (CLIENTS * VALID_PER_CLIENT) as u64);
     assert!(m.batches >= 1);
     assert!(m.p99_us() >= m.p50_us());
-    // The metrics snapshot of the cache counters matches the cache.
+    // The overlaid metrics snapshot of the cache counters matches the
+    // cache itself (all traffic had drained before it was taken).
     let stats = cache.stats();
-    assert_eq!(m.cache_hits + m.cache_misses, stats.lookups());
+    assert_eq!(overlaid.cache_hits + overlaid.cache_misses, stats.lookups());
     assert!(stats.hits > stats.misses, "steady state is hit-dominated");
 }
 

@@ -1,0 +1,282 @@
+//! Observability end-to-end: a traced service emits a valid,
+//! Perfetto-loadable Chrome trace whose simulated-time spans carry exact
+//! integer cycle arguments — per-batch child sums equal the engine's
+//! reported `DataflowReport.cycles` — the sim side of the trace is
+//! deterministic across seeded runs (only wall timestamps vary), and
+//! `metrics_snapshot()` exports coherent Prometheus text and JSON.
+
+use std::collections::HashMap;
+use std::time::Duration;
+use tcd_npe::coordinator::BatcherConfig;
+use tcd_npe::dataflow::{DataflowEngine, OsEngine};
+use tcd_npe::graph::QuantizedGraph;
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::{benchmark_by_name, graph_benchmarks, QuantizedMlp};
+use tcd_npe::obs::chrome::{SIM_PID, WALL_PID};
+use tcd_npe::obs::{MetricsSnapshot, TraceLog};
+use tcd_npe::serve::NpeService;
+use tcd_npe::util::json::JsonValue;
+
+fn iris() -> QuantizedMlp {
+    let b = benchmark_by_name("Iris").expect("Iris is in Table IV");
+    QuantizedMlp::synthesize(b.topology.clone(), 0x0B5_E2E)
+}
+
+/// Run `n` requests through a traced single-device service whose
+/// batcher can only flush when full (30 s timer): exactly one batch of
+/// `n`, in submission order — a fully deterministic sim-side workload.
+fn one_batch_run(n: usize) -> (TraceLog, String, MetricsSnapshot) {
+    let mlp = iris();
+    let service = NpeService::builder(mlp.clone())
+        .geometry(NpeGeometry::PAPER)
+        .batcher(BatcherConfig::new(n, Duration::from_secs(30)))
+        .tracing(true)
+        .build()
+        .expect("valid traced config");
+    let inputs = mlp.synth_inputs(n, 0xDA7A);
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| service.submit(x.clone()).expect("admitted"))
+        .collect();
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(30)).expect("answered");
+    }
+    let log = service.trace();
+    let json = service.trace_json();
+    let snap = service.metrics_snapshot();
+    service.shutdown().expect("clean shutdown");
+    (log, json, snap)
+}
+
+/// The acceptance bar: the cycles the trace attributes to a batch are
+/// the engine's own report, bit for bit — proven by replaying the same
+/// inputs through an offline engine.
+#[test]
+fn traced_batch_cycles_equal_the_engine_report() {
+    let n = 8;
+    let (log, _, _) = one_batch_run(n);
+    assert_eq!(log.batches.len(), 1, "full-batch flush produced one batch");
+    let bt = &log.batches[0];
+    assert_eq!(bt.requests, n);
+    assert!(!bt.profile.layers.is_empty(), "per-layer attribution present");
+
+    let mlp = iris();
+    let inputs = mlp.synth_inputs(n, 0xDA7A);
+    let offline = OsEngine::tcd(NpeGeometry::PAPER).execute(&mlp, &inputs);
+    assert_eq!(bt.cycles, offline.cycles, "trace cycles == engine-reported cycles");
+    assert!(
+        (bt.time_ns - offline.time_ns).abs() < 1e-6,
+        "trace sim time == engine-reported time"
+    );
+    assert!(
+        bt.profile.attributed_cycles() <= bt.cycles,
+        "attribution never exceeds the engine total (the exporter emits \
+         the remainder as an explicit overhead span)"
+    );
+    assert!(bt.profile.layers.iter().all(|l| l.deferred_cycles() > 0), "TCD tail per layer");
+}
+
+/// Full schema walk over a traced 2-device fleet serving a DAG-zoo
+/// model: the export parses as JSON, every `B` has a matching `E` on
+/// its (pid, tid) with LIFO nesting, and the integer `cycles` args of a
+/// span's direct children sum exactly to the span's own — for every
+/// batch and every layer in the trace.
+#[test]
+fn fleet_dag_trace_is_valid_and_sums_per_batch() {
+    let bench = graph_benchmarks().into_iter().next().expect("DAG zoo is non-empty");
+    let graph = QuantizedGraph::synthesize(bench.graph.clone(), 0xF1EE7);
+    let service = NpeService::builder(graph.clone())
+        .devices(vec![NpeGeometry::PAPER; 2])
+        .batcher(BatcherConfig::new(4, Duration::from_millis(1)))
+        .tracing(true)
+        .build()
+        .expect("valid traced fleet");
+    let inputs = graph.synth_inputs(24, 0xDA7A);
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| service.submit(x.clone()).expect("admitted"))
+        .collect();
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(30)).expect("answered");
+    }
+    let log = service.trace();
+    let json = service.trace_json();
+    service.shutdown().expect("clean shutdown");
+
+    assert_eq!(log.dropped_events, 0, "nothing truncated at this scale");
+    let v = JsonValue::parse(&json).expect("Chrome trace is valid JSON");
+    let events = v.get("traceEvents").expect("traceEvents key").as_arr().expect("array");
+    assert!(!events.is_empty());
+
+    // Stack frame per (pid, tid): (name, declared cycles, child sum).
+    let mut stacks: HashMap<(u64, u64), Vec<(String, u64, u64)>> = HashMap::new();
+    let mut batches_checked = 0u64;
+    let mut layers_checked = 0u64;
+    let mut traced_batch_cycles = 0u64;
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        let key = (
+            e.get("pid").unwrap().as_u64().unwrap(),
+            e.get("tid").unwrap().as_u64().unwrap(),
+        );
+        match ph {
+            "B" => {
+                let name = e.get("name").unwrap().as_str().unwrap().to_string();
+                let cycles = e
+                    .get("args")
+                    .and_then(|a| a.get("cycles"))
+                    .and_then(|c| c.as_u64())
+                    .expect("every sim B span declares integer cycles");
+                let stack = stacks.entry(key).or_default();
+                if let Some(parent) = stack.last_mut() {
+                    parent.2 += cycles;
+                }
+                stack.push((name, cycles, 0));
+            }
+            "E" => {
+                let name = e.get("name").unwrap().as_str().unwrap();
+                let (open, declared, children) = stacks
+                    .get_mut(&key)
+                    .and_then(Vec::pop)
+                    .unwrap_or_else(|| panic!("E {name:?} without open B on {key:?}"));
+                assert_eq!(open, name, "E closes the innermost B");
+                if open.starts_with("batch ") {
+                    assert_eq!(children, declared, "children of {open:?} sum to its cycles");
+                    traced_batch_cycles += declared;
+                    batches_checked += 1;
+                } else if open.starts_with("layer ") {
+                    assert_eq!(
+                        children, declared,
+                        "rounds + config switches of {open:?} sum to its cycles"
+                    );
+                    layers_checked += 1;
+                }
+            }
+            "X" if key.0 == SIM_PID as u64 => {
+                let name = e.get("name").unwrap().as_str().unwrap();
+                // deferred-completion annotates the tail *inside* a
+                // round's cycles; config-switch and overhead are the
+                // additive children.
+                if name != "deferred-completion" {
+                    let cycles = e.get("args").unwrap().get("cycles").unwrap().as_u64().unwrap();
+                    if let Some(parent) = stacks.entry(key).or_default().last_mut() {
+                        parent.2 += cycles;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    for (key, stack) in &stacks {
+        assert!(stack.is_empty(), "unclosed spans on {key:?}: {stack:?}");
+    }
+    assert!(batches_checked > 0, "trace contains sim batches");
+    assert!(layers_checked > 0, "trace contains sim layers");
+    assert_eq!(
+        traced_batch_cycles,
+        log.batches.iter().map(|b| b.cycles).sum::<u64>(),
+        "JSON batch cycles round-trip the recorded log"
+    );
+    // The wall side is present too: request-pipeline + device spans.
+    assert!(
+        events.iter().any(|e| {
+            e.get("pid").unwrap().as_u64() == Some(WALL_PID as u64)
+                && e.get("ph").unwrap().as_str() == Some("X")
+        }),
+        "wall spans exported on pid {WALL_PID}"
+    );
+}
+
+/// Two identical seeded runs produce identical traces once the
+/// wall-clock pid is stripped: the simulated side is a pure function of
+/// (model, inputs, batching).
+#[test]
+fn sim_side_of_the_trace_is_deterministic() {
+    fn sim_events(json: &str) -> Vec<JsonValue> {
+        let v = JsonValue::parse(json).expect("valid trace JSON");
+        v.get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("pid").unwrap().as_u64() != Some(WALL_PID as u64))
+            .cloned()
+            .collect()
+    }
+    let (_, json1, _) = one_batch_run(8);
+    let (_, json2, _) = one_batch_run(8);
+    let (a, b) = (sim_events(&json1), sim_events(&json2));
+    assert!(!a.is_empty(), "sim side is non-empty");
+    assert_eq!(a, b, "sim-side events identical across seeded runs");
+}
+
+/// `metrics_snapshot()` is one coherent export: counters, the latency
+/// histogram, and the per-layer aggregation all line up with the raw
+/// trace, in both Prometheus text and JSON form.
+#[test]
+fn metrics_snapshot_exports_prometheus_and_json() {
+    let (log, _, snap) = one_batch_run(8);
+    assert_eq!(snap.metrics.requests, 8);
+    assert_eq!(snap.metrics.batches, 1);
+    assert_eq!(snap.metrics.latencies.count(), 8);
+    assert_eq!(snap.dropped_events, 0);
+    assert!(!snap.layers.is_empty(), "per-layer aggregation present");
+    let agg_rolls: u64 = snap.layers.iter().map(|l| l.rolls).sum();
+    let log_rolls: u64 = log
+        .batches
+        .iter()
+        .flat_map(|b| b.profile.layers.iter())
+        .map(|l| l.rolls())
+        .sum();
+    assert_eq!(agg_rolls, log_rolls, "aggregation conserves rolls");
+    assert!(
+        snap.layers.iter().all(|l| l.deferred_cycles > 0),
+        "the TCD deferred tail is visible per layer"
+    );
+
+    let text = snap.prometheus_text();
+    assert!(text.contains("npe_requests_total 8"));
+    assert!(text.contains("# TYPE npe_latency_us histogram"));
+    assert!(text.contains("npe_latency_us_bucket{le=\"+Inf\"} 8"));
+    assert!(text.contains("npe_latency_us_count 8"));
+    assert!(text.contains("npe_layer_deferred_cycles_total{layer=\"0\"}"));
+
+    let parsed = JsonValue::parse(&snap.to_json()).expect("snapshot JSON parses");
+    assert_eq!(parsed.get("requests").unwrap().as_u64(), Some(8));
+    assert_eq!(parsed.get("batches").unwrap().as_u64(), Some(1));
+    assert_eq!(
+        parsed.get("layers").unwrap().as_arr().unwrap().len(),
+        snap.layers.len()
+    );
+}
+
+/// An untraced service stays untraced: empty log, empty-but-valid
+/// export, and trace ids pinned to 0 — the zero-overhead default.
+#[test]
+fn untraced_service_exports_empty_but_valid() {
+    let mlp = iris();
+    let service = NpeService::builder(mlp.clone())
+        .geometry(NpeGeometry::PAPER)
+        .batcher(BatcherConfig::new(4, Duration::from_millis(1)))
+        .build()
+        .expect("valid untraced config");
+    let t = service.submit(mlp.synth_inputs(1, 1)[0].clone()).expect("admitted");
+    t.wait_timeout(Duration::from_secs(30)).expect("answered");
+    assert!(service.tracer().is_none());
+    let log = service.trace();
+    assert!(log.wall.is_empty() && log.batches.is_empty());
+    let v = JsonValue::parse(&service.trace_json()).expect("still valid JSON");
+    assert!(
+        v.get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .all(|e| e.get("ph").unwrap().as_str() == Some("M")),
+        "an empty trace holds only process metadata"
+    );
+    let snap = service.metrics_snapshot();
+    assert!(snap.layers.is_empty());
+    assert_eq!(snap.metrics.requests, 1);
+    service.shutdown().expect("clean shutdown");
+}
