@@ -1,19 +1,20 @@
 //! Bench E7 — fleet serving: simulated throughput and wall-latency
 //! percentiles vs device count (1/2/4/8) under the seeded Poisson load,
-//! the cached-vs-cold Algorithm-1 microbenchmark, and the
-//! admission-policy sweep (Block vs Reject at 2× saturation).
+//! the cached-vs-cold Algorithm-1 microbenchmark, the admission-policy
+//! sweep (Block vs Reject at 2× saturation), and the two-tenant
+//! contention sweep on a shared registry pool.
 //!
 //! Run: `cargo bench --bench fleet_bench`
 //!
 //! Emits `BENCH_fleet.json` in the working directory so CI can archive
-//! the trajectory (throughput/p99/shed rate vs device count and policy)
-//! across PRs.
+//! the trajectory (throughput/p99/shed rate vs device count, policy and
+//! tenant) across PRs.
 
 #![deny(deprecated)]
 
 use tcd_npe::bench::{
     admission_rows, fleet_json, fleet_rows, mapper_cache_bench, render_admission_table,
-    render_fleet_table,
+    render_fleet_table, render_tenant_table, tenant_rows,
 };
 use tcd_npe::fleet::LoadGenConfig;
 
@@ -28,6 +29,10 @@ fn main() {
     let admission = admission_rows(&load);
     println!("{}", render_admission_table(&admission));
 
+    println!("=== two tenants on one shared registry pool ===");
+    let tenants = tenant_rows(&load);
+    println!("{}", render_tenant_table(&tenants));
+
     println!("=== Algorithm-1 cold vs schedule cache (Table-IV Γ set, B=8) ===");
     let mapper = mapper_cache_bench(200);
     println!(
@@ -38,7 +43,7 @@ fn main() {
         mapper.speedup()
     );
 
-    let json = fleet_json(&rows, &admission, &mapper, &load);
+    let json = fleet_json(&rows, &admission, &tenants, &mapper, &load);
     match std::fs::write("BENCH_fleet.json", &json) {
         Ok(()) => println!("\nwrote BENCH_fleet.json"),
         Err(e) => eprintln!("\ncould not write BENCH_fleet.json: {e}"),

@@ -1,14 +1,16 @@
 //! Fleet serving bench: simulated throughput and wall-latency
 //! percentiles vs device count, the cached-vs-cold mapper
-//! microbenchmark, and the admission-policy sweep (Block vs Reject at
-//! 2× the measured saturation arrival rate) — the trajectory table
-//! future PRs track via `BENCH_fleet.json`.
+//! microbenchmark, the admission-policy sweep (Block vs Reject at
+//! 2× the measured saturation arrival rate), and the two-tenant
+//! contention sweep (a greedy flood next to a light stream on one
+//! shared registry pool) — the trajectory table future PRs track via
+//! `BENCH_fleet.json`.
 
 use crate::coordinator::{BatcherConfig, ServedModel};
 use crate::fleet::{poisson_arrivals, run_open_loop, submit_open_loop, LoadGenConfig};
 use crate::mapper::{Gamma, MapperTree, NpeGeometry, ScheduleCache};
 use crate::model::{benchmark_by_name, benchmarks, QuantizedMlp};
-use crate::serve::{AdmissionPolicy, NpeService, ServeError};
+use crate::serve::{AdmissionPolicy, ModelRegistry, NpeService, ServeError};
 use crate::util::TextTable;
 use std::time::{Duration, Instant};
 
@@ -249,6 +251,144 @@ pub fn mapper_cache_bench(iters: usize) -> MapperCacheBench {
     MapperCacheBench { shapes: gammas.len(), cold_us, cached_us }
 }
 
+/// Devices in the shared pool of the tenant-contention sweep.
+pub const TENANT_POOL_DEVICES: usize = 4;
+
+/// One tenant's measurement from the shared-pool contention sweep: a
+/// greedy flood tenant and a light latency tenant serving same-topology
+/// models through one [`ModelRegistry`] pool, concurrently.
+#[derive(Debug, Clone)]
+pub struct TenantRow {
+    /// Scenario label — the greedy tenant's admission policy
+    /// (`block` / `reject`).
+    pub scenario: &'static str,
+    /// Tenant name (`greedy` / `light`).
+    pub tenant: &'static str,
+    /// This tenant's own admission policy.
+    pub policy: &'static str,
+    pub requests: u64,
+    pub answered: u64,
+    /// Requests refused at this tenant's submit gate.
+    pub shed: u64,
+    pub wall_p50_us: f64,
+    pub wall_p95_us: f64,
+    pub wall_p99_us: f64,
+    /// Shared-cache counters at scenario end. The cache is pool-wide —
+    /// sharing the Algorithm-1 memo across tenants is the point — so
+    /// these aggregate both tenants' lookups and repeat across a
+    /// scenario's rows.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Submit a pre-generated arrival stream open-loop and wait everything
+/// out, counting `(answered, shed)`.
+fn drive_tenant(service: &NpeService, arrivals: &[crate::fleet::Arrival]) -> (u64, u64) {
+    let mut answered = 0u64;
+    let mut shed = 0u64;
+    let mut tickets = Vec::with_capacity(arrivals.len());
+    for outcome in submit_open_loop(service, arrivals) {
+        match outcome {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::QueueFull { .. }) => shed += 1,
+            Err(_) => {}
+        }
+    }
+    for t in tickets {
+        match t.wait_timeout(Duration::from_secs(60)) {
+            Ok(_) => answered += 1,
+            Err(ServeError::QueueFull { .. }) => shed += 1,
+            Err(_) => {}
+        }
+    }
+    (answered, shed)
+}
+
+/// One contention scenario: `greedy` floods the shared pool (open-loop
+/// at 1e6 req/s) under `greedy_policy` while `light` trickles in a
+/// quarter of the load at the configured rate under `Block`. Both
+/// tenants serve the Iris topology (different weight seeds), so every
+/// Γ either maps is a shared-cache hit for the other.
+fn tenant_contention_scenario(
+    greedy_policy: AdmissionPolicy,
+    load: &LoadGenConfig,
+) -> Vec<TenantRow> {
+    let iris_topology = benchmark_by_name("Iris").expect("Iris is in Table IV").topology.clone();
+    let light_mlp = QuantizedMlp::synthesize(iris_topology, 0x11647);
+    let registry = ModelRegistry::builder()
+        .devices(vec![NpeGeometry::PAPER; TENANT_POOL_DEVICES])
+        .batcher(BatcherConfig::new(8, Duration::from_micros(200)))
+        .register_with("greedy", iris_model(), greedy_policy)
+        .register("light", light_mlp.clone())
+        .build()
+        .expect("valid registry config");
+
+    let greedy_arrivals =
+        poisson_arrivals(&iris_model(), &LoadGenConfig { rate_rps: 1e6, ..*load });
+    let light_load = LoadGenConfig {
+        seed: load.seed ^ 0x1164,
+        rate_rps: load.rate_rps,
+        requests: (load.requests / 4).max(16),
+    };
+    let light_arrivals = poisson_arrivals(&ServedModel::Mlp(light_mlp), &light_load);
+
+    let greedy_svc = registry.service("greedy").expect("registered");
+    let light_svc = registry.service("light").expect("registered");
+    let ((g_answered, g_shed), (l_answered, l_shed)) = std::thread::scope(|s| {
+        let g = s.spawn(|| drive_tenant(greedy_svc, &greedy_arrivals));
+        let l = s.spawn(|| drive_tenant(light_svc, &light_arrivals));
+        (g.join().expect("greedy driver"), l.join().expect("light driver"))
+    });
+
+    let scenario = greedy_policy.name();
+    let gm = registry.metrics("greedy").expect("registered");
+    let lm = registry.metrics("light").expect("registered");
+    let rows = vec![
+        TenantRow {
+            scenario,
+            tenant: "greedy",
+            policy: greedy_policy.name(),
+            requests: greedy_arrivals.len() as u64,
+            answered: g_answered,
+            shed: g_shed,
+            wall_p50_us: gm.p50_us(),
+            wall_p95_us: gm.p95_us(),
+            wall_p99_us: gm.p99_us(),
+            cache_hits: gm.cache_hits,
+            cache_misses: gm.cache_misses,
+        },
+        TenantRow {
+            scenario,
+            tenant: "light",
+            policy: AdmissionPolicy::Block.name(),
+            requests: light_arrivals.len() as u64,
+            answered: l_answered,
+            shed: l_shed,
+            wall_p50_us: lm.p50_us(),
+            wall_p95_us: lm.p95_us(),
+            wall_p99_us: lm.p99_us(),
+            cache_hits: lm.cache_hits,
+            cache_misses: lm.cache_misses,
+        },
+    ];
+    registry.shutdown().expect("registry shutdown");
+    rows
+}
+
+/// The tenant-contention sweep: the greedy tenant under `Block` (its
+/// backlog queues behind the shared pool) vs under `Reject { 16 }` (the
+/// flood is clipped at its own submit gate), with the light tenant's
+/// per-tenant percentiles showing what each policy costs the *other*
+/// tenant. Four rows: 2 scenarios × 2 tenants.
+pub fn tenant_rows(load: &LoadGenConfig) -> Vec<TenantRow> {
+    let mut rows = tenant_contention_scenario(AdmissionPolicy::Block, load);
+    rows.extend(tenant_contention_scenario(
+        AdmissionPolicy::Reject { max_depth: 16 },
+        load,
+    ));
+    rows
+}
+
 /// Render the device-count sweep as a text table.
 pub fn render_fleet_table(rows: &[FleetRow], load: &LoadGenConfig) -> String {
     let mut t = TextTable::new(vec![
@@ -318,12 +458,46 @@ pub fn render_admission_table(rows: &[AdmissionRow]) -> String {
     )
 }
 
+/// Render the tenant-contention sweep as a text table.
+pub fn render_tenant_table(rows: &[TenantRow]) -> String {
+    let mut t = TextTable::new(vec![
+        "Scenario",
+        "Tenant",
+        "Policy",
+        "Answered",
+        "Shed",
+        "p50 (us)",
+        "p95 (us)",
+        "p99 (us)",
+        "Cache h/m",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.scenario.to_string(),
+            r.tenant.to_string(),
+            r.policy.to_string(),
+            format!("{}/{}", r.answered, r.requests),
+            r.shed.to_string(),
+            format!("{:.0}", r.wall_p50_us),
+            format!("{:.0}", r.wall_p95_us),
+            format!("{:.0}", r.wall_p99_us),
+            format!("{}/{}", r.cache_hits, r.cache_misses),
+        ]);
+    }
+    format!(
+        "Two tenants on one shared {TENANT_POOL_DEVICES}-device registry pool \
+         (greedy flood vs light stream, scenario = greedy tenant's policy)\n{}",
+        t.render()
+    )
+}
+
 /// Serialize the sweeps (plus the mapper microbench) as the
 /// `BENCH_fleet.json` trajectory artifact. Hand-rolled JSON — the
 /// offline crate set has no serde.
 pub fn fleet_json(
     rows: &[FleetRow],
     admission: &[AdmissionRow],
+    tenants: &[TenantRow],
     mapper: &MapperCacheBench,
     load: &LoadGenConfig,
 ) -> String {
@@ -353,6 +527,28 @@ pub fn fleet_json(
             r.shed_rate,
             r.wall_p99_us,
             if i + 1 < admission.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"tenants\": [\n");
+    for (i, r) in tenants.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"tenant\": \"{}\", \"policy\": \"{}\", \
+             \"requests\": {}, \"answered\": {}, \"shed\": {}, \
+             \"wall_p50_us\": {:.1}, \"wall_p95_us\": {:.1}, \"wall_p99_us\": {:.1}, \
+             \"cache_hits\": {}, \"cache_misses\": {}}}{}\n",
+            r.scenario,
+            r.tenant,
+            r.policy,
+            r.requests,
+            r.answered,
+            r.shed,
+            r.wall_p50_us,
+            r.wall_p95_us,
+            r.wall_p99_us,
+            r.cache_hits,
+            r.cache_misses,
+            if i + 1 < tenants.len() { "," } else { "" },
         ));
     }
     s.push_str("  ],\n");
@@ -451,17 +647,63 @@ mod tests {
     }
 
     #[test]
+    fn tenant_sweep_accounts_for_every_request() {
+        // Small contention run: both scenarios, both tenants, every
+        // request either answered or shed at the submit gate. Latency
+        // bounds are deliberately not asserted (wall-clock, flaky);
+        // accounting and shared-cache reuse are deterministic.
+        let load = LoadGenConfig { seed: 0x7E4A, rate_rps: 5e4, requests: 96 };
+        let rows = tenant_rows(&load);
+        assert_eq!(rows.len(), 4, "2 scenarios x 2 tenants");
+        assert_eq!(rows[0].scenario, "block");
+        assert_eq!(rows[2].scenario, "reject");
+        for r in &rows {
+            assert_eq!(
+                r.answered + r.shed,
+                r.requests,
+                "{}/{}: every request answered or shed, never lost",
+                r.scenario,
+                r.tenant
+            );
+        }
+        // The light tenant runs under Block in both scenarios: nothing shed.
+        for r in rows.iter().filter(|r| r.tenant == "light") {
+            assert_eq!(r.policy, "block");
+            assert_eq!(r.shed, 0, "Block tenant never sheds");
+        }
+        // Same topology on a shared cache: reuse must show up.
+        assert!(rows[0].cache_hits > 0, "shared cache saw no hits");
+        let table = render_tenant_table(&rows);
+        assert!(table.contains("greedy") && table.contains("light"));
+    }
+
+    #[test]
     fn json_is_shaped() {
         let load = LoadGenConfig { seed: 1, rate_rps: 2e6, requests: 16 };
         let rows = vec![fleet_row(1, &load)];
         let admission = vec![admission_row(AdmissionPolicy::Block, 1e5, &load)];
+        let tenants = vec![TenantRow {
+            scenario: "block",
+            tenant: "greedy",
+            policy: "block",
+            requests: 16,
+            answered: 16,
+            shed: 0,
+            wall_p50_us: 1.0,
+            wall_p95_us: 2.0,
+            wall_p99_us: 3.0,
+            cache_hits: 4,
+            cache_misses: 2,
+        }];
         let mapper = mapper_cache_bench(1);
-        let s = fleet_json(&rows, &admission, &mapper, &load);
+        let s = fleet_json(&rows, &admission, &tenants, &mapper, &load);
         assert!(s.contains("\"bench\": \"fleet\""));
         assert!(s.contains("\"devices\": 1"));
         assert!(s.contains("\"mapper_cache\""));
         assert!(s.contains("\"admission\""));
         assert!(s.contains("\"policy\": \"block\""));
+        assert!(s.contains("\"tenants\""));
+        assert!(s.contains("\"tenant\": \"greedy\""));
         assert!(s.trim_end().ends_with('}'));
         let table = render_fleet_table(&rows, &load);
         assert!(table.contains("Devices"));

@@ -23,8 +23,8 @@ pub use exec::{
 pub use fig10::{fig10_rows, render_fig10, Fig10Row};
 pub use fleet::{
     admission_rows, fleet_json, fleet_row, fleet_rows, mapper_cache_bench,
-    render_admission_table, render_fleet_table, AdmissionRow, FleetRow, MapperCacheBench,
-    FLEET_DEVICE_COUNTS,
+    render_admission_table, render_fleet_table, render_tenant_table, tenant_rows, AdmissionRow,
+    FleetRow, MapperCacheBench, TenantRow, FLEET_DEVICE_COUNTS, TENANT_POOL_DEVICES,
 };
 pub use graph::{graph_json, graph_rows, render_graph_table, GraphRow, GRAPH_BATCHES};
 pub use harness::BenchTimer;

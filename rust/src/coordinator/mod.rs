@@ -11,8 +11,11 @@
 //! * **single** — the cycle-accurate NPE simulator in the coordinator
 //!   thread (optionally cross-executed on the PJRT/XLA path and verified
 //!   equal before responses are released);
-//! * **fleet** — [`crate::fleet::Fleet`]: the batch is queued to `N`
-//!   simulated NPE devices and the next idle device executes it.
+//! * **fleet** — [`crate::fleet::FleetPool`]: the batch is queued to `N`
+//!   simulated NPE devices and the next idle device executes it. The
+//!   pool is either owned by this one service or shared across the
+//!   tenants of a [`crate::serve::ModelRegistry`] — each queued job
+//!   carries its tenant's model and metrics, so devices never care.
 //!
 //! Responses are bit-exact across backends and device geometries: the
 //! dataflow moves data, it does not change math.
@@ -27,18 +30,15 @@
 //! mpsc, which for a CPU-bound simulator is the right tool anyway.)
 
 pub mod batcher;
-pub mod compat;
 pub mod metrics;
 
 pub use batcher::BatcherConfig;
-#[allow(deprecated)]
-pub use compat::{Coordinator, CoordinatorClient};
 pub use metrics::{CoordinatorMetrics, DeviceMetrics};
 
 use crate::conv::{CnnEngine, QuantizedCnn};
 use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
 use crate::exec::BackendKind;
-use crate::fleet::{DeviceSpec, Fleet, FleetJob};
+use crate::fleet::{DeviceSpec, FleetJob, FleetPool};
 use crate::graph::{GraphEngine, QuantizedGraph};
 use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::model::QuantizedMlp;
@@ -108,15 +108,19 @@ pub struct PjrtSpec {
 }
 
 /// Where a built service executes — the internal shape behind the one
-/// `ServeBuilder` path (the old API exposed this split as separate
-/// `spawn` vs `spawn_fleet` entry points).
+/// `ServeBuilder` path.
 pub(crate) enum ExecutionPlan {
     Single {
         geometry: NpeGeometry,
         backend: BackendKind,
         pjrt: Option<PjrtSpec>,
     },
+    /// Launch a fresh device pool owned by this service alone.
     Fleet { specs: Vec<DeviceSpec> },
+    /// Join an existing shared pool (multi-tenant registry): this
+    /// service's batches interleave with other tenants' on one queue,
+    /// and the *registry* — not this service — shuts the pool down.
+    Pool { pool: Arc<FleetPool> },
 }
 
 pub(crate) enum CoordinatorMsg {
@@ -135,10 +139,12 @@ struct SingleBackend {
     track: Option<TrackHandle>,
 }
 
-/// Where dispatched batches execute.
+/// Where dispatched batches execute. `owned` distinguishes a pool this
+/// service launched (shut down at the end of its run loop) from a shared
+/// registry pool (shut down by the registry, after *all* tenants flush).
 enum Backend {
     Single(Box<SingleBackend>),
-    Fleet(Fleet),
+    Fleet { pool: Arc<FleetPool>, owned: bool },
 }
 
 /// The coordinator thread body: build the execution backend, run the
@@ -191,13 +197,22 @@ pub(crate) fn service_thread(
                 track,
             }))
         }
-        ExecutionPlan::Fleet { specs } => Backend::Fleet(Fleet::spawn_on(
-            Arc::clone(&model),
-            &specs,
-            Arc::clone(&cache),
-            Arc::clone(&metrics),
-            tracer,
-        )),
+        ExecutionPlan::Fleet { specs } => {
+            util::lock(&metrics).devices =
+                specs.iter().map(|s| DeviceMetrics::for_geometry(s.geometry)).collect();
+            Backend::Fleet {
+                pool: FleetPool::launch(&specs, Arc::clone(&cache), tracer),
+                owned: true,
+            }
+        }
+        ExecutionPlan::Pool { pool } => {
+            // A shared pool: lay this tenant's metrics lanes over the
+            // pool's device set (every tenant gets the full lane layout;
+            // devices account each job at their own lane index).
+            util::lock(&metrics).devices =
+                pool.specs().iter().map(|s| DeviceMetrics::for_geometry(s.geometry)).collect();
+            Backend::Fleet { pool, owned: false }
+        }
     };
     run_loop(rx, model, cfg, backend, metrics, shared)
 }
@@ -310,13 +325,15 @@ fn run_loop(
         }
     }
 
-    // Drain-then-join the devices: all queued fleet work is answered
+    // Drain-then-join an owned pool: all queued fleet work is answered
     // before `NpeService::shutdown` returns. A non-zero return means
     // device threads died (their in-flight responders were dropped, so
-    // the affected tickets already read `DeviceLost`).
+    // the affected tickets already read `DeviceLost`). A shared pool is
+    // left running — the registry shuts it down after every tenant's
+    // batcher has flushed into it.
     match backend {
-        Backend::Fleet(fleet) => fleet.shutdown(),
-        Backend::Single(_) => 0,
+        Backend::Fleet { pool, owned: true } => pool.shutdown(),
+        Backend::Fleet { owned: false, .. } | Backend::Single(_) => 0,
     }
 }
 
@@ -344,7 +361,7 @@ fn accept(
 #[allow(clippy::too_many_arguments)]
 fn dispatch(
     backend: &mut Backend,
-    model: &ServedModel,
+    model: &Arc<ServedModel>,
     cfg: &BatcherConfig,
     batch: Vec<InferenceRequest>,
     metrics: &Arc<Mutex<CoordinatorMetrics>>,
@@ -352,18 +369,26 @@ fn dispatch(
     shedding_allowed: bool,
 ) {
     let single = match backend {
-        Backend::Fleet(fleet) => {
+        Backend::Fleet { pool, .. } => {
             // Hand off to the next idle device; the device thread sends
-            // the responses and accounts the metrics. Under ShedOldest
-            // the queue itself stays bounded — except during the
-            // shutdown drain, which must answer everything.
-            let job = FleetJob { requests: batch };
+            // the responses and accounts the metrics — reading the model
+            // and the metrics sink off the job, so shared pools stay
+            // tenant-correct. Under ShedOldest the queue itself stays
+            // bounded — except during the shutdown drain, which must
+            // answer everything. (The builder forbids ShedOldest on a
+            // shared pool: shedding another tenant's requests would
+            // break isolation, so victims here are always our own.)
+            let job = FleetJob {
+                model: Arc::clone(model),
+                metrics: Arc::clone(metrics),
+                requests: batch,
+            };
             let (depth, sheddable) = match shared.policy {
                 AdmissionPolicy::ShedOldest { max_depth } if shedding_allowed => {
-                    let (depth, queued, victims) = fleet.submit_shedding(job, max_depth);
+                    let (depth, queued, victims) = pool.submit_shedding(job, max_depth);
                     (depth, Some((queued, victims, max_depth)))
                 }
-                _ => (fleet.submit(job), None),
+                _ => (pool.submit(job), None),
             };
             let shed: usize = sheddable
                 .as_ref()
@@ -411,7 +436,7 @@ fn dispatch(
         inputs.len()
     };
 
-    let report: DataflowReport = match model {
+    let report: DataflowReport = match &**model {
         ServedModel::Mlp(mlp) => single.mlp_engine.execute(mlp, &inputs),
         ServedModel::Cnn(cnn) => single.cnn_engine.execute(cnn, &inputs),
         ServedModel::Graph(g) => single.graph_engine.execute(g, &inputs),
@@ -423,7 +448,7 @@ fn dispatch(
     // batch is answered unverified and `verify_mismatches` flags the bug.
     let mut verify_mismatch = false;
     let verified = if let (Some((rt, artifact)), ServedModel::Mlp(mlp)) =
-        (single.runtime.as_ref(), model)
+        (single.runtime.as_ref(), &**model)
     {
         match rt.execute(artifact, mlp, &inputs) {
             Ok(pjrt_out) if pjrt_out == report.outputs => true,

@@ -1,105 +1,93 @@
-//! One simulated NPE device: a long-lived engine handle pulling batches
-//! off the fleet queue until shutdown-drain completes.
+//! One simulated NPE device: a long-lived, model-agnostic engine bundle
+//! pulling batches off the fleet queue until shutdown-drain completes.
+//!
+//! Devices are *reconfigurable* in the paper's sense: each thread owns
+//! all three engine kinds (MLP / CNN / graph) joined to one schedule
+//! cache, and executes whatever model the popped job carries. That is
+//! what lets one device pool serve many tenants — the pairing lives on
+//! the [`super::FleetJob`], never on the device.
 
 use super::queue::FleetQueue;
 use super::DeviceSpec;
 use crate::conv::CnnEngine;
-use crate::coordinator::{respond_batch, CoordinatorMetrics, ServedModel};
+use crate::coordinator::{respond_batch, ServedModel};
 use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
 use crate::exec::BackendKind;
 use crate::graph::GraphEngine;
 use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::obs::{SpanKind, TrackHandle};
-use crate::serve::ServeError;
 use crate::util;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
-/// The per-device engine handle — constructed once per device thread and
-/// reused for every batch, so the Algorithm-1 memo (private and shared)
-/// persists across the device's whole lifetime.
-pub enum DeviceEngine {
-    Mlp(OsEngine),
-    Cnn(CnnEngine),
-    Graph(GraphEngine),
+/// The per-device engine bundle — one engine per servable model kind,
+/// constructed once per device thread and reused for every batch, so
+/// the Algorithm-1 memo (private and shared) persists across the
+/// device's whole lifetime regardless of which tenant's work arrives.
+pub struct DeviceEngines {
+    mlp: OsEngine,
+    cnn: CnnEngine,
+    graph: GraphEngine,
 }
 
-impl DeviceEngine {
-    /// Build the engine matching the served model kind, joined to the
-    /// fleet's shared schedule cache, on the default (`Fast`) backend.
-    pub fn for_model(
-        model: &ServedModel,
-        geometry: NpeGeometry,
-        cache: Arc<ScheduleCache>,
-    ) -> Self {
-        Self::for_model_on(model, geometry, cache, BackendKind::Fast)
+impl DeviceEngines {
+    /// Build the bundle joined to the fleet's shared schedule cache, on
+    /// the default (`Fast`) backend.
+    pub fn new(geometry: NpeGeometry, cache: Arc<ScheduleCache>) -> Self {
+        Self::on(geometry, cache, BackendKind::Fast)
     }
 
-    /// Build the engine on an explicit roll backend (responses are
+    /// Build the bundle on an explicit roll backend (responses are
     /// bit-exact across backends — the conformance suite proves it — so
-    /// heterogeneous-backend fleets are safe).
-    pub fn for_model_on(
-        model: &ServedModel,
-        geometry: NpeGeometry,
-        cache: Arc<ScheduleCache>,
-        backend: BackendKind,
-    ) -> Self {
-        match model {
-            ServedModel::Mlp(_) => DeviceEngine::Mlp(
-                OsEngine::tcd(geometry).with_cache(cache).with_backend(backend),
-            ),
-            ServedModel::Cnn(_) => DeviceEngine::Cnn(
-                CnnEngine::tcd(geometry).with_cache(cache).with_backend(backend),
-            ),
-            ServedModel::Graph(_) => DeviceEngine::Graph(
-                GraphEngine::tcd(geometry).with_cache(cache).with_backend(backend),
-            ),
+    /// heterogeneous-backend pools are safe).
+    pub fn on(geometry: NpeGeometry, cache: Arc<ScheduleCache>, backend: BackendKind) -> Self {
+        Self {
+            mlp: OsEngine::tcd(geometry).with_cache(Arc::clone(&cache)).with_backend(backend),
+            cnn: CnnEngine::tcd(geometry).with_cache(Arc::clone(&cache)).with_backend(backend),
+            graph: GraphEngine::tcd(geometry).with_cache(cache).with_backend(backend),
         }
     }
 
     /// Attach a tracer track (builder form, mirroring the engines'
     /// `with_tracer`): every executed batch records an `execute` wall
     /// span plus its simulated-time attribution on that track.
-    pub fn with_tracer(self, tracer: Option<TrackHandle>) -> Self {
-        match self {
-            DeviceEngine::Mlp(e) => DeviceEngine::Mlp(e.with_tracer(tracer)),
-            DeviceEngine::Cnn(e) => DeviceEngine::Cnn(e.with_tracer(tracer)),
-            DeviceEngine::Graph(e) => DeviceEngine::Graph(e.with_tracer(tracer)),
+    pub fn with_tracer(self, track: Option<TrackHandle>) -> Self {
+        Self {
+            mlp: self.mlp.with_tracer(track.clone()),
+            cnn: self.cnn.with_tracer(track.clone()),
+            graph: self.graph.with_tracer(track),
         }
     }
 
-    /// Execute one batch. The engine/model pairing is fixed at
-    /// construction, so `None` (a mismatch) is a fleet-wiring bug — the
-    /// caller resolves the affected tickets with `DeviceLost` instead of
-    /// panicking the device thread.
-    pub fn execute(&mut self, model: &ServedModel, inputs: &[Vec<i16>]) -> Option<DataflowReport> {
-        match (self, model) {
-            (DeviceEngine::Mlp(e), ServedModel::Mlp(m)) => Some(e.execute(m, inputs)),
-            (DeviceEngine::Cnn(e), ServedModel::Cnn(c)) => Some(e.execute(c, inputs)),
-            (DeviceEngine::Graph(e), ServedModel::Graph(g)) => Some(e.execute(g, inputs)),
-            _ => None,
+    /// Execute one batch on the engine matching the model's kind. Total
+    /// by construction: every [`ServedModel`] variant has an engine.
+    pub fn execute(&mut self, model: &ServedModel, inputs: &[Vec<i16>]) -> DataflowReport {
+        match model {
+            ServedModel::Mlp(m) => self.mlp.execute(m, inputs),
+            ServedModel::Cnn(c) => self.cnn.execute(c, inputs),
+            ServedModel::Graph(g) => self.graph.execute(g, inputs),
         }
     }
 }
 
 /// The device thread body: pop → execute → respond → account, until the
-/// queue reports shutdown-drain complete.
+/// queue reports shutdown-drain complete. The model to run and the
+/// metrics to account into come off each popped job (per-tenant on a
+/// shared pool), while the engines, geometry, backend and tracer track
+/// are the device's own.
 ///
 /// All metric updates for a batch happen under one lock acquisition, so
 /// observers never see a half-updated snapshot (the stress suite asserts
 /// monotonic consistency on exactly this).
 pub(crate) fn device_main(
     idx: usize,
-    model: Arc<ServedModel>,
     spec: DeviceSpec,
     cache: Arc<ScheduleCache>,
     queue: Arc<FleetQueue>,
-    metrics: Arc<Mutex<CoordinatorMetrics>>,
     track: Option<TrackHandle>,
 ) {
-    let mut engine =
-        DeviceEngine::for_model_on(&model, spec.geometry, Arc::clone(&cache), spec.backend)
-            .with_tracer(track.clone());
+    let mut engines = DeviceEngines::on(spec.geometry, cache, spec.backend)
+        .with_tracer(track.clone());
     while let Some(job) = queue.pop() {
         // Each request waited from submit until this device popped it.
         if let Some(t) = &track {
@@ -108,23 +96,18 @@ pub(crate) fn device_main(
             }
         }
         let inputs: Vec<Vec<i16>> = job.requests.iter().map(|r| r.input.clone()).collect();
-        let Some(report) = engine.execute(&model, &inputs) else {
-            // Engine/model mismatch: impossible by construction, but a
-            // typed error beats a dead device thread.
-            job.resolve_err(&ServeError::DeviceLost);
-            continue;
-        };
+        let report = engines.execute(&job.model, &inputs);
         let n = job.requests.len();
 
         // No padding and no PJRT verification on the fleet path. Cache
         // counters are overlaid at metrics-read time (one consistent
         // snapshot), not written per batch across racing lanes.
         {
-            let mut m = util::lock(&metrics);
+            let mut m = util::lock(&job.metrics);
             m.account_batch(idx, &job.requests, &report, n, false);
         }
         let respond_started = Instant::now();
-        respond_batch(job.requests, &report, n, false, &metrics);
+        respond_batch(job.requests, &report, n, false, &job.metrics);
         if let Some(t) = &track {
             t.span_since(SpanKind::Respond, respond_started, None);
         }
@@ -134,32 +117,25 @@ pub(crate) fn device_main(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::QuantizedGraph;
     use crate::model::{MlpTopology, QuantizedMlp};
 
     #[test]
-    fn engine_kind_follows_model() {
+    fn one_bundle_executes_every_model_kind() {
         let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![8, 6, 2]), 3);
-        let model = ServedModel::Mlp(mlp.clone());
+        let graph =
+            QuantizedGraph::synthesize(MlpTopology::new(vec![8, 6, 2]).into_graph(), 3);
         let cache = ScheduleCache::shared();
-        let mut dev = DeviceEngine::for_model(&model, NpeGeometry::WALKTHROUGH, cache);
-        assert!(matches!(dev, DeviceEngine::Mlp(_)));
-        let inputs = mlp.synth_inputs(2, 5);
-        let report = dev.execute(&model, &inputs).expect("matched pairing");
-        assert_eq!(report.outputs, mlp.forward_batch(&inputs));
-    }
+        let mut dev = DeviceEngines::new(NpeGeometry::WALKTHROUGH, cache);
 
-    #[test]
-    fn mismatched_pairing_is_none_not_a_panic() {
-        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![8, 6, 2]), 3);
-        let mlp_model = ServedModel::Mlp(mlp.clone());
-        let mut dev =
-            DeviceEngine::for_model(&mlp_model, NpeGeometry::WALKTHROUGH, ScheduleCache::shared());
-        let graph = crate::graph::QuantizedGraph::synthesize(
-            MlpTopology::new(vec![8, 6, 2]).into_graph(),
-            3,
-        );
-        let graph_model = ServedModel::Graph(graph);
-        assert!(dev.execute(&graph_model, &mlp.synth_inputs(1, 1)).is_none());
+        let inputs = mlp.synth_inputs(2, 5);
+        let report = dev.execute(&ServedModel::Mlp(mlp.clone()), &inputs);
+        assert_eq!(report.outputs, mlp.forward_batch(&inputs));
+
+        // The *same* bundle then serves a different tenant's graph model.
+        let ginputs = graph.synth_inputs(2, 7);
+        let greport = dev.execute(&ServedModel::Graph(graph.clone()), &ginputs);
+        assert_eq!(greport.outputs, graph.forward_batch(&ginputs));
     }
 
     #[test]
@@ -170,13 +146,9 @@ mod tests {
         let inputs = mlp.synth_inputs(3, 7);
         let expect = mlp.forward_batch(&inputs);
         for backend in BackendKind::ALL {
-            let mut dev = DeviceEngine::for_model_on(
-                &model,
-                NpeGeometry::WALKTHROUGH,
-                Arc::clone(&cache),
-                backend,
-            );
-            let report = dev.execute(&model, &inputs).expect("matched pairing");
+            let mut dev =
+                DeviceEngines::on(NpeGeometry::WALKTHROUGH, Arc::clone(&cache), backend);
+            let report = dev.execute(&model, &inputs);
             assert_eq!(report.outputs, expect, "{}", backend.name());
         }
     }

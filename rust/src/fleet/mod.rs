@@ -19,7 +19,7 @@
 //! * [`queue`] — the shared MPMC work queue (idle devices pull, which is
 //!   least-loaded dispatch by construction) with drain-on-close
 //!   shutdown and admission-aware bounded pushes;
-//! * [`device`] — the long-lived per-device engine handle and thread
+//! * [`device`] — the long-lived per-device engine bundle and thread
 //!   body (responses, metrics, cache accounting);
 //! * [`loadgen`] — the deterministic open-loop Poisson load generator
 //!   the benchmarks and e2e tests drive traffic with.
@@ -28,19 +28,21 @@
 //! after first sight of a `(geometry, Γ)` shape — by *any* device — no
 //! device ever runs Algorithm 1 for it again.
 //!
-//! Fleets are constructed exclusively through
-//! [`crate::serve::NpeService::builder`]'s `.devices([..])` knob — the
-//! spawn functions here are crate-internal plumbing.
+//! Devices are model-agnostic: each [`FleetJob`] carries its tenant's
+//! model and metrics, so one [`FleetPool`] can back a single
+//! [`crate::serve::NpeService`] (the builder's `.devices([..])` knob) or
+//! be shared across every tenant of a
+//! [`crate::serve::ModelRegistry`] — construction stays inside the
+//! serving layer either way.
 
 pub mod device;
 pub mod loadgen;
 pub mod queue;
 
-pub use device::DeviceEngine;
+pub use device::DeviceEngines;
 pub use loadgen::{poisson_arrivals, run_open_loop, submit_open_loop, Arrival, LoadGenConfig};
 pub use queue::{FleetJob, FleetQueue};
 
-use crate::coordinator::{CoordinatorMetrics, DeviceMetrics, ServedModel};
 use crate::exec::BackendKind;
 use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::obs::Tracer;
@@ -70,50 +72,50 @@ impl From<NpeGeometry> for DeviceSpec {
     }
 }
 
-/// A running fleet: the shared queue plus one thread per device.
-pub struct Fleet {
+/// A running device pool: the shared queue plus one thread per device.
+///
+/// The pool owns no model and no metrics — both ride on each submitted
+/// [`FleetJob`] — which is what makes it shareable: a single service
+/// owns its pool exclusively, while a registry hands one `Arc<FleetPool>`
+/// to every tenant's service and shuts it down once, after all tenants'
+/// batchers have flushed.
+pub struct FleetPool {
     queue: Arc<FleetQueue>,
-    devices: Vec<JoinHandle<()>>,
+    /// Drained (into `shutdown`'s joins) exactly once; later calls see
+    /// an empty vec, making shutdown idempotent across co-owners.
+    devices: Mutex<Vec<JoinHandle<()>>>,
+    specs: Vec<DeviceSpec>,
 }
 
-impl Fleet {
-    /// Spawn one device thread per [`DeviceSpec`], all pulling from one
-    /// queue and sharing one schedule cache. Registers one metrics lane
-    /// per device (replacing any existing lanes), and — when a tracer is
-    /// attached — one tracer track per device. The builder validates
-    /// that `specs` is non-empty before this runs.
-    pub(crate) fn spawn_on(
-        model: Arc<ServedModel>,
+impl FleetPool {
+    /// Launch one device thread per [`DeviceSpec`], all pulling from one
+    /// queue and sharing one schedule cache. When a tracer is attached,
+    /// each device records onto its own `device {idx} [RxC]` track.
+    /// Metrics lanes are *not* set here — each service joining the pool
+    /// lays out its own lanes (one per device) over its own metrics.
+    /// The serving layer validates that `specs` is non-empty.
+    pub(crate) fn launch(
         specs: &[DeviceSpec],
         cache: Arc<ScheduleCache>,
-        metrics: Arc<Mutex<CoordinatorMetrics>>,
         tracer: Option<Arc<Tracer>>,
-    ) -> Self {
-        util::lock(&metrics).devices = specs
-            .iter()
-            .map(|s| DeviceMetrics::for_geometry(s.geometry))
-            .collect();
+    ) -> Arc<Self> {
         let queue = FleetQueue::new();
         let devices = specs
             .iter()
             .enumerate()
             .map(|(idx, &spec)| {
-                let model = Arc::clone(&model);
                 let cache = Arc::clone(&cache);
                 let queue = Arc::clone(&queue);
-                let metrics = Arc::clone(&metrics);
                 let track = tracer.as_ref().map(|t| {
                     t.register_track(&format!(
                         "device {idx} [{}x{}]",
                         spec.geometry.tg_rows, spec.geometry.tg_cols
                     ))
                 });
-                std::thread::spawn(move || {
-                    device::device_main(idx, model, spec, cache, queue, metrics, track)
-                })
+                std::thread::spawn(move || device::device_main(idx, spec, cache, queue, track))
             })
             .collect();
-        Self { queue, devices }
+        Arc::new(Self { queue, devices: Mutex::new(devices), specs: specs.to_vec() })
     }
 
     /// Hand a batch to the next idle device. Returns the queue depth
@@ -135,51 +137,79 @@ impl Fleet {
         self.queue.push_shedding(job, max_requests)
     }
 
-    /// Number of devices in the fleet.
+    /// Number of devices in the pool.
     pub fn size(&self) -> usize {
-        self.devices.len()
+        self.specs.len()
+    }
+
+    /// The per-device specs the pool was launched with, in lane order.
+    pub fn specs(&self) -> &[DeviceSpec] {
+        &self.specs
     }
 
     /// Close the queue and join every device after the drain: all work
-    /// submitted before this call is executed and answered.
+    /// submitted before this call is executed and answered. Idempotent —
+    /// on a shared pool every co-owner may call it; only the first join
+    /// does work.
     ///
     /// Returns the number of device threads that died. A dead device has
     /// dropped a popped job — its requests' tickets already resolved
-    /// `DeviceLost` via the responder drops — and the coordinator
-    /// surfaces the count as `NpeService::shutdown`'s error instead of a
-    /// silent `Ok`.
-    pub(crate) fn shutdown(self) -> usize {
+    /// `DeviceLost` via the responder drops — and the serving layer
+    /// surfaces the count as `shutdown`'s error instead of a silent `Ok`.
+    pub(crate) fn shutdown(&self) -> usize {
         self.queue.close();
-        self.devices.into_iter().map(JoinHandle::join).filter(Result::is_err).count()
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *util::lock(&self.devices));
+        handles.into_iter().map(JoinHandle::join).filter(Result::is_err).count()
+    }
+}
+
+impl Drop for FleetPool {
+    fn drop(&mut self) {
+        // The last co-owner dropping without an explicit shutdown still
+        // releases the device threads (detached, draining what's queued).
+        self.queue.close();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{CoordinatorMetrics, InferenceRequest, ServedModel};
     use crate::model::{MlpTopology, QuantizedMlp};
     use crate::serve::test_support::detached_request;
     use std::time::Duration;
 
-    fn spawn_specs(
+    fn launch_specs(specs: &[DeviceSpec], cache: &Arc<ScheduleCache>) -> Arc<FleetPool> {
+        FleetPool::launch(specs, Arc::clone(cache), None)
+    }
+
+    fn job_for(
         model: &Arc<ServedModel>,
-        specs: &[DeviceSpec],
-        cache: &Arc<ScheduleCache>,
         metrics: &Arc<Mutex<CoordinatorMetrics>>,
-    ) -> Fleet {
-        Fleet::spawn_on(Arc::clone(model), specs, Arc::clone(cache), Arc::clone(metrics), None)
+        requests: Vec<InferenceRequest>,
+    ) -> FleetJob {
+        FleetJob {
+            model: Arc::clone(model),
+            metrics: Arc::clone(metrics),
+            requests,
+        }
     }
 
     #[test]
-    fn fleet_executes_and_drains_on_shutdown() {
+    fn pool_executes_and_drains_on_shutdown() {
         let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![12, 8, 3]), 9);
         let model = Arc::new(ServedModel::Mlp(mlp.clone()));
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        util::lock(&metrics).devices = vec![
+            crate::coordinator::DeviceMetrics::for_geometry(NpeGeometry::WALKTHROUGH),
+            crate::coordinator::DeviceMetrics::for_geometry(NpeGeometry::PAPER),
+        ];
         let cache = ScheduleCache::shared();
         let specs: Vec<DeviceSpec> =
             vec![NpeGeometry::WALKTHROUGH.into(), NpeGeometry::PAPER.into()];
-        let fleet = spawn_specs(&model, &specs, &cache, &metrics);
-        assert_eq!(fleet.size(), 2);
+        let pool = launch_specs(&specs, &cache);
+        assert_eq!(pool.size(), 2);
+        assert_eq!(pool.specs(), &specs[..]);
 
         let inputs = mlp.synth_inputs(6, 4);
         let expect = mlp.forward_batch(&inputs);
@@ -193,13 +223,14 @@ mod tests {
                     req
                 })
                 .collect();
-            fleet.submit(FleetJob { requests });
+            pool.submit(job_for(&model, &metrics, requests));
         }
         // Shut down immediately: the drain must still answer everything.
-        assert_eq!(fleet.shutdown(), 0, "no device died");
+        assert_eq!(pool.shutdown(), 0, "no device died");
+        assert_eq!(pool.shutdown(), 0, "shutdown is idempotent");
         for (t, want) in tickets.into_iter().zip(expect) {
             let got = t.wait_timeout(Duration::from_secs(10)).unwrap();
-            assert_eq!(got.output, want, "fleet output == reference, across geometries");
+            assert_eq!(got.output, want, "pool output == reference, across geometries");
         }
         let m = metrics.lock().unwrap();
         assert_eq!(m.requests, 6);
@@ -212,28 +243,71 @@ mod tests {
         // per batch — one snapshot reflects all lanes' lookups at once.
         let mut overlaid = (*m).clone();
         overlaid.set_cache_stats(cache.stats());
-        assert_eq!(
-            overlaid.cache_hits + overlaid.cache_misses,
-            cache.stats().lookups()
-        );
+        assert_eq!(overlaid.cache_hits + overlaid.cache_misses, cache.stats().lookups());
         assert!(cache.stats().lookups() > 0, "devices exercised the shared cache");
     }
 
     #[test]
-    fn mixed_backend_fleet_stays_bit_exact() {
+    fn one_pool_serves_two_models_with_separate_metrics() {
+        // The multi-tenant contract at its smallest: two models, two
+        // metrics sinks, one queue and one device — every job accounts
+        // into its own tenant's metrics and answers bit-exact.
+        let mlp_a = QuantizedMlp::synthesize(MlpTopology::new(vec![6, 4, 2]), 11);
+        let mlp_b = QuantizedMlp::synthesize(MlpTopology::new(vec![9, 5, 3]), 12);
+        let model_a = Arc::new(ServedModel::Mlp(mlp_a.clone()));
+        let model_b = Arc::new(ServedModel::Mlp(mlp_b.clone()));
+        let metrics_a = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        let metrics_b = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        for m in [&metrics_a, &metrics_b] {
+            util::lock(m).devices =
+                vec![crate::coordinator::DeviceMetrics::for_geometry(NpeGeometry::PAPER)];
+        }
+        let cache = ScheduleCache::shared();
+        let pool = launch_specs(&[NpeGeometry::PAPER.into()], &cache);
+
+        let inputs_a = mlp_a.synth_inputs(4, 1);
+        let inputs_b = mlp_b.synth_inputs(3, 2);
+        let mut tickets_a = Vec::new();
+        let mut tickets_b = Vec::new();
+        for x in &inputs_a {
+            let (req, ticket) = detached_request(x.clone());
+            tickets_a.push(ticket);
+            pool.submit(job_for(&model_a, &metrics_a, vec![req]));
+        }
+        for x in &inputs_b {
+            let (req, ticket) = detached_request(x.clone());
+            tickets_b.push(ticket);
+            pool.submit(job_for(&model_b, &metrics_b, vec![req]));
+        }
+        assert_eq!(pool.shutdown(), 0);
+        for (t, want) in tickets_a.into_iter().zip(mlp_a.forward_batch(&inputs_a)) {
+            assert_eq!(t.wait_timeout(Duration::from_secs(10)).unwrap().output, want);
+        }
+        for (t, want) in tickets_b.into_iter().zip(mlp_b.forward_batch(&inputs_b)) {
+            assert_eq!(t.wait_timeout(Duration::from_secs(10)).unwrap().output, want);
+        }
+        assert_eq!(metrics_a.lock().unwrap().requests, 4, "tenant A's lane only");
+        assert_eq!(metrics_b.lock().unwrap().requests, 3, "tenant B's lane only");
+    }
+
+    #[test]
+    fn mixed_backend_pool_stays_bit_exact() {
         // One device per backend, heterogeneous geometries on top: every
         // response must still equal the reference forward pass.
         let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![10, 7, 3]), 21);
         let model = Arc::new(ServedModel::Mlp(mlp.clone()));
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        util::lock(&metrics).devices = (0..3)
+            .map(|_| crate::coordinator::DeviceMetrics::for_geometry(NpeGeometry::PAPER))
+            .collect();
         let cache = ScheduleCache::shared();
         let specs = [
             DeviceSpec::new(NpeGeometry::WALKTHROUGH, BackendKind::BitExact),
             DeviceSpec::new(NpeGeometry::PAPER, BackendKind::Fast),
             DeviceSpec::new(NpeGeometry::PAPER, BackendKind::Parallel),
         ];
-        let fleet = spawn_specs(&model, &specs, &cache, &metrics);
-        assert_eq!(fleet.size(), 3);
+        let pool = launch_specs(&specs, &cache);
+        assert_eq!(pool.size(), 3);
         let inputs = mlp.synth_inputs(9, 5);
         let expect = mlp.forward_batch(&inputs);
         let mut tickets = Vec::new();
@@ -246,9 +320,9 @@ mod tests {
                     req
                 })
                 .collect();
-            fleet.submit(FleetJob { requests });
+            pool.submit(job_for(&model, &metrics, requests));
         }
-        assert_eq!(fleet.shutdown(), 0);
+        assert_eq!(pool.shutdown(), 0);
         for (t, want) in tickets.into_iter().zip(expect) {
             let got = t.wait_timeout(Duration::from_secs(10)).unwrap();
             assert_eq!(got.output, want, "bit-exact across backends");

@@ -17,15 +17,24 @@
 //! [`FleetQueue::push_shedding`], which bounds the queued-request count
 //! by resolving the *oldest* queued jobs with `QueueFull`.
 
-use crate::coordinator::InferenceRequest;
+use crate::coordinator::{CoordinatorMetrics, InferenceRequest, ServedModel};
 use crate::serve::ServeError;
 use crate::util;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 
-/// One batcher-formed unit of work: the requests riding in the batch.
+/// One batcher-formed unit of work: the requests riding in the batch,
+/// plus the tenant context a shared multi-tenant pool needs — the model
+/// the batch executes against and the tenant's metrics lanes to account
+/// into. Jobs from different tenants interleave freely on one queue;
+/// each device reads the pairing off the job, never off its own state.
 pub struct FleetJob {
-    pub requests: Vec<InferenceRequest>,
+    /// The served model this batch executes against.
+    pub(crate) model: Arc<ServedModel>,
+    /// The owning tenant's metrics — the executing device accounts the
+    /// batch here, at its own lane index.
+    pub(crate) metrics: Arc<Mutex<CoordinatorMetrics>>,
+    pub(crate) requests: Vec<InferenceRequest>,
 }
 
 impl FleetJob {
@@ -155,12 +164,22 @@ impl FleetQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::{MlpTopology, QuantizedMlp};
     use crate::serve::test_support::detached_request;
     use std::time::Duration;
 
+    fn job_with(requests: Vec<InferenceRequest>) -> FleetJob {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![4, 2]), 1);
+        FleetJob {
+            model: Arc::new(ServedModel::Mlp(mlp)),
+            metrics: Arc::new(Mutex::new(CoordinatorMetrics::default())),
+            requests,
+        }
+    }
+
     fn job_of(n: usize) -> FleetJob {
         // Nothing responds in these tests; the receivers can drop.
-        FleetJob { requests: (0..n).map(|_| detached_request(vec![0; 4]).0).collect() }
+        job_with((0..n).map(|_| detached_request(vec![0; 4]).0).collect())
     }
 
     #[test]
@@ -191,7 +210,7 @@ mod tests {
         let q = FleetQueue::new();
         q.close();
         let (req, ticket) = detached_request(vec![0; 4]);
-        assert_eq!(q.push(FleetJob { requests: vec![req] }), 0);
+        assert_eq!(q.push(job_with(vec![req])), 0);
         assert_eq!(
             ticket.wait_timeout(Duration::from_millis(100)),
             Err(ServeError::ShuttingDown),
@@ -203,7 +222,7 @@ mod tests {
     fn push_shedding_bounds_queued_requests_and_keeps_newest() {
         let q = FleetQueue::new();
         let (old_req, old_ticket) = detached_request(vec![0; 4]);
-        q.push(FleetJob { requests: vec![old_req] });
+        q.push(job_with(vec![old_req]));
         q.push(job_of(2));
         // Bound of 3: pushing 2 more (total 5) must shed the 3 oldest
         // (both earlier jobs), keeping only the newest job.

@@ -62,8 +62,11 @@
 //!   (`AdmissionPolicy::{Block, Reject, ShedOldest}` bound the queue and
 //!   shed load under overload) and typed request failures
 //!   (`ShapeMismatch` at submit, `QueueFull`, `ShuttingDown`,
-//!   `DeviceLost`, `Timeout`). The legacy `Coordinator::spawn_*` family
-//!   is `#[deprecated]` shims over this builder.
+//!   `DeviceLost`, `Timeout`, `UnknownTenant`). On top of the single
+//!   service sits `ModelRegistry`: N models registered under tenant
+//!   names, routed by `submit(tenant, input)`, sharing one device pool
+//!   and one schedule cache while keeping per-tenant admission policies,
+//!   metrics lanes and tracer tracks.
 //! * [`coordinator`] — the serving internals behind the facade: request
 //!   router, batch accumulator, scheduler integration and metrics
 //!   (wall-latency percentiles, schedule-cache counters, shed/drop
@@ -86,8 +89,7 @@
 //! * [`bench`] — generators for every table and figure of the paper's
 //!   evaluation (shared between the CLI and the criterion benches).
 
-// First-party bench code must be migrated off the deprecated spawn_*
-// shims (the shims exist for external callers only).
+// Bench code must never lean on anything the crate has deprecated.
 #[deny(deprecated)]
 pub mod bench;
 pub mod bitsim;
@@ -110,5 +112,6 @@ pub mod util;
 
 pub use model::fixedpoint::{Fix16, FRAC_BITS};
 pub use serve::{
-    AdmissionPolicy, IntoServedModel, NpeService, ServeBuilder, ServeError, ServiceClient, Ticket,
+    AdmissionPolicy, IntoServedModel, ModelRegistry, NpeService, RegistryBuilder, ServeBuilder,
+    ServeError, ServiceClient, Ticket,
 };

@@ -5,7 +5,7 @@
 //! cross-verify the simulator against the PJRT artifacts. Run with no
 //! arguments for usage.
 
-// First-party code is provably migrated off the legacy spawn_* shims.
+// The binary must never lean on anything the crate has deprecated.
 #![deny(deprecated)]
 
 use anyhow::{anyhow, Context, Result};
@@ -55,7 +55,12 @@ System:
         [--admission P]      serve a seeded Poisson load on an N-device fleet
   fleet --bench [--json PATH]
                              device-count sweep (1/2/4/8) + admission-policy
-                             sweep (Block vs Reject at 2x saturation) + BENCH_fleet.json
+                             sweep (Block vs Reject at 2x saturation) + two-tenant
+                             contention sweep on a shared pool + BENCH_fleet.json
+  registry [--requests N] [--rate RPS]
+                             multi-tenant demo: MLP + CNN + DAG tenants routed
+                             through one ModelRegistry over one shared pool,
+                             per-tenant metrics + labeled Prometheus exposition
   obs [--devices N] [--requests N] [--rate RPS] [--trace-out F] [--metrics-out F]
                              traced DAG-zoo fleet run: Chrome trace (Perfetto-loadable)
                              + Prometheus text + per-layer metrics JSON
@@ -177,6 +182,17 @@ fn main() -> Result<()> {
                     admission_flag(&args)?,
                 )?;
             }
+        }
+        "registry" => {
+            let requests = flag_value(&args, "--requests")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(32);
+            let rate = flag_value(&args, "--rate")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(20_000.0);
+            cmd_registry(requests, rate)?;
         }
         "obs" => {
             let devices = flag_value(&args, "--devices")
@@ -479,12 +495,92 @@ fn cmd_obs(
     Ok(())
 }
 
+/// The multi-tenant demo: an MLP, a CNN and a DAG model registered under
+/// tenant names, routed through one `ModelRegistry` over one shared
+/// device pool, surfaced per tenant in metrics and Prometheus labels.
+fn cmd_registry(requests: usize, rate: f64) -> Result<()> {
+    let iris = benchmark_by_name("Iris").expect("Iris is in Table IV");
+    let lenet = cnn_benchmark_by_name("LeNet-5").expect("LeNet-5 is in the CNN zoo");
+    let resmlp = graph_benchmark_by_name("ResMLP").expect("ResMLP is in the DAG zoo");
+    let mlp = QuantizedMlp::synthesize(iris.topology.clone(), 0xF1EE7);
+    let cnn = QuantizedCnn::synthesize(lenet.topology.clone(), 0xF1EE7);
+    let graph = QuantizedGraph::synthesize(resmlp.graph.clone(), 0xF1EE7);
+    let inputs = vec![
+        ("iris", mlp.synth_inputs(requests, 0xDA7A)),
+        ("lenet", cnn.synth_inputs(requests, 0xDA7A)),
+        ("resmlp", graph.synth_inputs(requests, 0xDA7A)),
+    ];
+    let registry = tcd_npe::ModelRegistry::builder()
+        .devices(vec![NpeGeometry::PAPER; 4])
+        .batcher(BatcherConfig::new(8, Duration::from_micros(500)))
+        .register("iris", mlp)
+        .register("lenet", cnn)
+        .register_with("resmlp", graph, AdmissionPolicy::Reject { max_depth: 64 })
+        .build()?;
+    println!(
+        "registry: tenants [{}] sharing a {}-device 16x8 pool and one schedule cache",
+        registry.tenants().join(", "),
+        registry.pool_size()
+    );
+    let gap = Duration::from_secs_f64(1.0 / rate.max(1.0));
+    let mut tickets = Vec::new();
+    let mut refused = 0usize;
+    for i in 0..requests {
+        for (tenant, ins) in &inputs {
+            match registry.submit(tenant, ins[i].clone()) {
+                Ok(t) => tickets.push((*tenant, t)),
+                Err(ServeError::QueueFull { .. }) => refused += 1,
+                Err(e) => return Err(e.into()),
+            }
+            std::thread::sleep(gap);
+        }
+    }
+    let mut answered = std::collections::BTreeMap::<&str, usize>::new();
+    for (tenant, t) in tickets {
+        match t.wait_timeout(Duration::from_secs(60)) {
+            Ok(_) => *answered.entry(tenant).or_default() += 1,
+            Err(ServeError::QueueFull { .. }) => refused += 1,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    println!(
+        "answered {}/{} across all tenants ({refused} refused at admission)\n",
+        answered.values().sum::<usize>(),
+        requests * inputs.len()
+    );
+    let mut table = TextTable::new(vec![
+        "Tenant", "Answered", "Batches", "p50 (us)", "p99 (us)", "Cache h/m",
+    ]);
+    for tenant in registry.tenants() {
+        let m = registry.metrics(tenant)?;
+        table.row(vec![
+            tenant.to_string(),
+            format!("{}/{requests}", answered.get(tenant).copied().unwrap_or(0)),
+            m.batches.to_string(),
+            format!("{:.0}", m.p50_us()),
+            format!("{:.0}", m.p99_us()),
+            format!("{}/{}", m.cache_hits, m.cache_misses),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("Prometheus exposition (tenant-labeled, request counters):");
+    for line in registry.prometheus_text().lines() {
+        if line.starts_with("npe_requests_total") || line.starts_with("npe_shed_requests_total") {
+            println!("  {line}");
+        }
+    }
+    registry.shutdown()?;
+    Ok(())
+}
+
 fn cmd_fleet_bench(json_path: Option<&str>) -> Result<()> {
     let load = LoadGenConfig::default();
     let rows = bench::fleet_rows(&load);
     println!("{}", bench::render_fleet_table(&rows, &load));
     let admission = bench::admission_rows(&load);
     println!("{}", bench::render_admission_table(&admission));
+    let tenants = bench::tenant_rows(&load);
+    println!("{}", bench::render_tenant_table(&tenants));
     let mapper = bench::mapper_cache_bench(200);
     println!(
         "mapper: {} shapes, cold {:.1} us/iter vs cached {:.1} us/iter ({:.0}x)",
@@ -494,7 +590,7 @@ fn cmd_fleet_bench(json_path: Option<&str>) -> Result<()> {
         mapper.speedup()
     );
     let path = json_path.unwrap_or("BENCH_fleet.json");
-    std::fs::write(path, bench::fleet_json(&rows, &admission, &mapper, &load))?;
+    std::fs::write(path, bench::fleet_json(&rows, &admission, &tenants, &mapper, &load))?;
     println!("wrote {path}");
     Ok(())
 }

@@ -48,6 +48,11 @@ pub struct MetricsSnapshot {
     pub layers: Vec<LayerAgg>,
     /// Trace events lost to buffer bounds (0 in healthy runs).
     pub dropped_events: u64,
+    /// Tenant this snapshot belongs to, when taken through a
+    /// [`ModelRegistry`](crate::serve::ModelRegistry): the Prometheus
+    /// exposition then carries `tenant="<name>"` on every sample and the
+    /// JSON object a `tenant` field. `None` for a standalone service.
+    pub tenant: Option<String>,
 }
 
 /// Aggregate per-layer attribution out of a trace snapshot.
@@ -89,7 +94,15 @@ impl MetricsSnapshot {
             layers: log.map(aggregate_layers).unwrap_or_default(),
             dropped_events: log.map(|l| l.dropped_events).unwrap_or(0),
             metrics,
+            tenant: None,
         }
+    }
+
+    /// Label this snapshot with a tenant name (builder form — the
+    /// registry applies it when snapshotting per tenant).
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> Self {
+        self.tenant = Some(tenant.into());
+        self
     }
 
     /// Prometheus text exposition (classic format: `# TYPE` headers,
@@ -164,7 +177,10 @@ impl MetricsSnapshot {
                 let _ = writeln!(out, "{name}{{layer=\"{}\"}} {}", l.index, num(get(l)));
             }
         }
-        out
+        match &self.tenant {
+            None => out,
+            Some(tenant) => inject_tenant_label(&out, tenant),
+        }
     }
 
     /// The snapshot as one JSON object (hand-rolled, same idiom as the
@@ -210,8 +226,13 @@ impl MetricsSnapshot {
                 d.sim_busy_ns,
             );
         }
+        let tenant = match &self.tenant {
+            Some(t) => format!("\"{}\"", escape(t)),
+            None => "null".to_string(),
+        };
         format!(
-            "{{\"requests\":{},\"rejected_requests\":{},\"shed_requests\":{},\
+            "{{\"tenant\":{tenant},\
+             \"requests\":{},\"rejected_requests\":{},\"shed_requests\":{},\
              \"responses_dropped\":{},\"batches\":{},\"padded_slots\":{},\
              \"verified_batches\":{},\"verify_mismatches\":{},\
              \"sim_time_ns\":{:.3},\"sim_energy_pj\":{:.3},\
@@ -240,6 +261,34 @@ impl MetricsSnapshot {
             self.dropped_events,
         )
     }
+}
+
+/// Inject `tenant="<name>"` into every sample line of a Prometheus
+/// exposition: bare names gain a label set, labeled names gain a first
+/// label. Comment lines (`# HELP` / `# TYPE`) pass through untouched.
+fn inject_tenant_label(text: &str, tenant: &str) -> String {
+    let label = format!("tenant=\"{}\"", escape(tenant));
+    let mut out = String::with_capacity(text.len() + text.lines().count() * (label.len() + 2));
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            out.push_str(line);
+        } else if let Some(brace) = line.find('{') {
+            out.push_str(&line[..=brace]);
+            out.push_str(&label);
+            out.push(',');
+            out.push_str(&line[brace + 1..]);
+        } else if let Some(space) = line.find(' ') {
+            out.push_str(&line[..space]);
+            out.push('{');
+            out.push_str(&label);
+            out.push('}');
+            out.push_str(&line[space..]);
+        } else {
+            out.push_str(line);
+        }
+        out.push('\n');
+    }
+    out
 }
 
 /// Prometheus sample value: integers render without a fraction.
@@ -332,6 +381,38 @@ mod tests {
             assert!(value.parse::<f64>().is_ok(), "bad sample value in: {line}");
             assert!(parts.next().is_some(), "no metric name in: {line}");
         }
+    }
+
+    #[test]
+    fn tenant_label_lands_on_every_sample() {
+        let mut m = CoordinatorMetrics { requests: 5, ..Default::default() };
+        m.record_latency(1_000);
+        let snap = MetricsSnapshot::new(m, Some(&traced_log())).with_tenant("mnist");
+        let text = snap.prometheus_text();
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            assert!(line.contains("tenant=\"mnist\""), "unlabeled sample: {line}");
+            // Still well-formed: `name{labels} value`.
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad sample value in: {line}");
+        }
+        // Bare names gain a label set; labeled names gain a first label.
+        assert!(text.contains("npe_requests_total{tenant=\"mnist\"} 5"));
+        assert!(text.contains("npe_latency_us_bucket{tenant=\"mnist\",le=\"+Inf\"} 1"));
+        assert!(text.contains("npe_layer_rolls_total{tenant=\"mnist\",layer=\"0\"}"));
+        // Headers stay untouched (one HELP/TYPE pair per metric).
+        assert!(text.contains("# TYPE npe_requests_total counter"));
+    }
+
+    #[test]
+    fn json_carries_the_tenant_field() {
+        let snap = MetricsSnapshot::new(CoordinatorMetrics::default(), None);
+        let v = JsonValue::parse(&snap.to_json()).expect("valid JSON");
+        assert!(v.get("tenant").unwrap().as_str().is_none(), "standalone service: null");
+        let labeled = MetricsSnapshot::new(CoordinatorMetrics::default(), None)
+            .with_tenant("gcn");
+        let v = JsonValue::parse(&labeled.to_json()).expect("valid JSON");
+        assert_eq!(v.get("tenant").unwrap().as_str(), Some("gcn"));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! depth, shutdown flag, model input length) every client handle and
 //! every [`crate::serve::Ticket`] shares with the service.
 
+use super::error::ServeError;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -22,9 +23,10 @@ pub enum AdmissionPolicy {
     /// Refuse new work at submit time once `max_depth` requests are in
     /// flight (admitted but unanswered): `submit` returns
     /// [`crate::serve::ServeError::QueueFull`] immediately and the
-    /// caller decides whether to retry. The bound is best-effort under
-    /// concurrent submitters (two clients can race past the same depth
-    /// reading), which is the standard load-shedding contract.
+    /// caller decides whether to retry. The bound is exact even under
+    /// concurrent submitters — admission reserves the depth slot with a
+    /// compare-exchange, so in-flight depth can never exceed
+    /// `max_depth` (`tests/serve_api.rs` hammers this with 32 threads).
     Reject { max_depth: usize },
     /// Admit everything, but bound the backlog by shedding the *oldest*
     /// waiting requests once more than `max_depth` are queued at a
@@ -78,6 +80,42 @@ impl ServeShared {
         self.depth.load(Ordering::Acquire)
     }
 
+    /// Reserve one in-flight slot under this service's policy.
+    ///
+    /// `Block` and `ShedOldest` admit unconditionally (their bounding
+    /// happens at the queue, not the submit gate). `Reject` reserves
+    /// with a compare-exchange loop: the increment only lands while the
+    /// observed depth is below `max_depth`, so two submitters can never
+    /// race past the same depth reading — the bound holds exactly. The
+    /// caller must release the slot (via the responder's drop) exactly
+    /// once per successful reservation.
+    pub(crate) fn reserve(&self) -> Result<(), ServeError> {
+        let AdmissionPolicy::Reject { max_depth } = self.policy else {
+            self.depth.fetch_add(1, Ordering::AcqRel);
+            return Ok(());
+        };
+        let mut observed = self.depth.load(Ordering::Acquire);
+        loop {
+            if observed >= max_depth {
+                return Err(ServeError::QueueFull { depth: observed, max_depth });
+            }
+            match self.depth.compare_exchange_weak(
+                observed,
+                observed + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Ok(()),
+                Err(now) => observed = now,
+            }
+        }
+    }
+
+    /// Release one reserved slot (the responder's drop path).
+    pub(crate) fn release(&self) {
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+
     pub(crate) fn is_shutting_down(&self) -> bool {
         self.shutting_down.load(Ordering::Acquire)
     }
@@ -101,6 +139,32 @@ mod tests {
         assert_eq!(AdmissionPolicy::Block.name(), "block");
         assert_eq!(AdmissionPolicy::Reject { max_depth: 4 }.name(), "reject");
         assert_eq!(AdmissionPolicy::ShedOldest { max_depth: 4 }.name(), "shed-oldest");
+    }
+
+    #[test]
+    fn reject_reservation_is_exact() {
+        let s = ServeShared::new(16, AdmissionPolicy::Reject { max_depth: 2 });
+        assert!(s.reserve().is_ok());
+        assert!(s.reserve().is_ok());
+        assert_eq!(
+            s.reserve(),
+            Err(ServeError::QueueFull { depth: 2, max_depth: 2 }),
+            "the third reservation must observe the exact bound"
+        );
+        assert_eq!(s.depth(), 2, "a refused reservation leaves no residue");
+        s.release();
+        assert!(s.reserve().is_ok(), "released slots are reusable");
+    }
+
+    #[test]
+    fn block_and_shed_reserve_unconditionally() {
+        for policy in [AdmissionPolicy::Block, AdmissionPolicy::ShedOldest { max_depth: 1 }] {
+            let s = ServeShared::new(16, policy);
+            for _ in 0..8 {
+                assert!(s.reserve().is_ok(), "{} admits everything", policy.name());
+            }
+            assert_eq!(s.depth(), 8);
+        }
     }
 
     #[test]

@@ -25,9 +25,9 @@ use super::service::NpeService;
 use crate::conv::QuantizedCnn;
 use crate::coordinator::{BatcherConfig, ExecutionPlan, PjrtSpec, ServedModel};
 use crate::exec::BackendKind;
-use crate::fleet::DeviceSpec;
+use crate::fleet::{DeviceSpec, FleetPool};
 use crate::graph::{GraphModel, QuantizedGraph};
-use crate::mapper::{NpeGeometry, DEFAULT_SERVING_CACHE_CAPACITY};
+use crate::mapper::{NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
 use crate::model::QuantizedMlp;
 use crate::obs::Tracer;
 use std::sync::Arc;
@@ -91,6 +91,14 @@ pub struct ServeBuilder {
     admission: AdmissionPolicy,
     pjrt: Option<PjrtSpec>,
     tracer: Option<Arc<Tracer>>,
+    /// Registry wiring: serve on an existing shared device pool instead
+    /// of launching one (mutually exclusive with `devices` and `pjrt`).
+    pub(crate) pool: Option<Arc<FleetPool>>,
+    /// Registry wiring: share an existing schedule cache instead of
+    /// constructing one from `cache_capacity`.
+    pub(crate) shared_cache: Option<Arc<ScheduleCache>>,
+    /// Tenant name, for tracer-track and diagnostic labelling.
+    pub(crate) label: Option<String>,
 }
 
 impl ServeBuilder {
@@ -105,6 +113,9 @@ impl ServeBuilder {
             admission: AdmissionPolicy::default(),
             pjrt: None,
             tracer: None,
+            pool: None,
+            shared_cache: None,
+            label: None,
         }
     }
 
@@ -182,6 +193,29 @@ impl ServeBuilder {
         self
     }
 
+    /// Name this service. The request-pipeline tracer track becomes
+    /// `requests[<name>]`, so services sharing one tracer (a registry's
+    /// tenants, the obs CLI's per-model services) stay distinguishable.
+    pub fn label(mut self, name: impl Into<String>) -> Self {
+        self.label = Some(name.into());
+        self
+    }
+
+    /// Registry wiring: serve on an existing shared device pool (the
+    /// batcher's output interleaves with other tenants' on one queue).
+    /// The pool's owner — the registry — shuts it down, not this service.
+    pub(crate) fn pool(mut self, pool: Arc<FleetPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Registry wiring: share an existing Algorithm-1 schedule cache
+    /// (same-geometry tenants then reuse each other's mapping work).
+    pub(crate) fn shared_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.shared_cache = Some(cache);
+        self
+    }
+
     /// Validate the configuration and start the service.
     pub fn build(self) -> Result<NpeService, ServeError> {
         let invalid = |reason: &str| {
@@ -204,29 +238,53 @@ impl ServeBuilder {
         if self.pjrt.is_some() && !matches!(self.model, ServedModel::Mlp(_)) {
             return invalid("pjrt cross-verification requires an MLP model");
         }
-        let plan = match self.devices {
-            None => ExecutionPlan::Single {
+        let plan = match (self.pool, self.devices) {
+            (Some(_), Some(_)) => {
+                return invalid("a shared pool and a private fleet are mutually exclusive");
+            }
+            (Some(pool), None) => {
+                if self.pjrt.is_some() {
+                    return invalid("pjrt cross-verification runs on the single-device path only");
+                }
+                if matches!(self.admission, AdmissionPolicy::ShedOldest { .. }) {
+                    // Shedding happens at the shared queue, where the
+                    // victims could belong to *other* tenants — a
+                    // cross-tenant isolation hole, so it is a build
+                    // error rather than a surprise.
+                    return invalid(
+                        "ShedOldest admission is not supported on a shared pool \
+                         (shedding could evict other tenants' requests); \
+                         use Reject or Block",
+                    );
+                }
+                ExecutionPlan::Pool { pool }
+            }
+            (None, None) => ExecutionPlan::Single {
                 geometry: self.geometry,
                 backend: self.backend,
                 pjrt: self.pjrt,
             },
-            Some(specs) if specs.is_empty() => {
+            (None, Some(specs)) if specs.is_empty() => {
                 return invalid("a fleet needs at least one device");
             }
-            Some(specs) => {
+            (None, Some(specs)) => {
                 if self.pjrt.is_some() {
                     return invalid("pjrt cross-verification runs on the single-device path only");
                 }
                 ExecutionPlan::Fleet { specs }
             }
         };
+        let cache = self
+            .shared_cache
+            .unwrap_or_else(|| ScheduleCache::shared_bounded(self.cache_capacity));
         Ok(NpeService::start(
             self.model,
             plan,
             self.batcher,
-            self.cache_capacity,
+            cache,
             self.admission,
             self.tracer,
+            self.label.as_deref(),
         ))
     }
 }

@@ -35,6 +35,11 @@ pub enum ServeError {
     /// A later wait on a ticket whose one response was already collected
     /// by an earlier `wait_timeout` (one request, one final word).
     AlreadyAnswered,
+    /// A routed submit named a tenant the
+    /// [`ModelRegistry`](crate::serve::ModelRegistry) has no served
+    /// model for. Raised before admission — an unknown-tenant request
+    /// never occupies queue space or moves any tenant's counters.
+    UnknownTenant { tenant: String },
     /// [`crate::serve::ServeBuilder::build`] rejected the configuration.
     InvalidConfig { reason: String },
 }
@@ -57,6 +62,9 @@ impl fmt::Display for ServeError {
             }
             ServeError::AlreadyAnswered => {
                 write!(f, "response already collected by an earlier wait on this ticket")
+            }
+            ServeError::UnknownTenant { tenant } => {
+                write!(f, "no served model registered under tenant {tenant:?}")
             }
             ServeError::InvalidConfig { reason } => {
                 write!(f, "invalid service configuration: {reason}")
@@ -82,6 +90,8 @@ mod tests {
         let t = ServeError::Timeout { waited: Duration::from_millis(5) }.to_string();
         assert!(t.contains("5ms"));
         assert!(ServeError::AlreadyAnswered.to_string().contains("already collected"));
+        let u = ServeError::UnknownTenant { tenant: "mnist".into() }.to_string();
+        assert!(u.contains("mnist") && u.contains("tenant"));
         let c = ServeError::InvalidConfig { reason: "zero devices".into() }.to_string();
         assert!(c.contains("zero devices"));
     }

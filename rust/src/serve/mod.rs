@@ -2,9 +2,8 @@
 //!
 //! The paper's pitch is a *re-configurable* NPE — one engine, many
 //! configurations. This module is that pitch applied to the serving
-//! surface: where the crate once grew seven parallel `spawn_*` entry
-//! points (MLP/CNN/graph × single/fleet × default/explicit backend), it
-//! now has exactly one construction path and one submit path:
+//! surface: every workload kind and every deployment shape enters
+//! through exactly one construction path and one submit path:
 //!
 //! ```text
 //! model (QuantizedMlp | QuantizedCnn | QuantizedGraph | GraphModel)
@@ -21,19 +20,33 @@
 //! NpeService ── submit(input)? ──► Ticket ── wait()/wait_timeout()? ──► InferenceResponse
 //! ```
 //!
-//! Every failure is a typed [`ServeError`] (`ShapeMismatch` at submit,
-//! `QueueFull` from admission control, `ShuttingDown` for requests
-//! racing shutdown, `DeviceLost` for dead executors) — the request path
-//! through the coordinator and fleet carries **no** `unwrap`/`expect`/
-//! `panic!` (grep-enforced by `tests/serve_api.rs`).
+//! Multi-tenant serving stacks a [`ModelRegistry`] on top: N models
+//! registered under tenant names, routed by
+//! [`submit(tenant, input)`](ModelRegistry::submit), all sharing one
+//! device pool and one schedule cache while keeping per-tenant admission
+//! policies, metrics lanes and tracer tracks:
 //!
-//! The legacy `Coordinator::spawn_*` family still exists as
-//! `#[deprecated]` shims over this builder; `tests/serve_api.rs` proves
-//! them bit-exact against it.
+//! ```text
+//! ModelRegistry::builder()
+//!   .devices([DeviceSpec, ..])       — the shared pool, launched once
+//!   .register("mnist", mlp)          — tenant under the default policy
+//!   .register_with("lenet", cnn, AdmissionPolicy::Reject { max_depth: 64 })
+//!   .build()?
+//!   ▼
+//! ModelRegistry ── submit("mnist", input)? ──► Ticket (same as above)
+//! ```
+//!
+//! Every failure is a typed [`ServeError`] (`ShapeMismatch` at submit,
+//! `QueueFull` from admission control, `UnknownTenant` from routing,
+//! `ShuttingDown` for requests racing shutdown, `DeviceLost` for dead
+//! executors) — the request path through the coordinator and fleet
+//! carries **no** `unwrap`/`expect`/`panic!` (grep-enforced by
+//! `tests/serve_api.rs`).
 
 pub mod admission;
 pub mod builder;
 pub mod error;
+pub mod registry;
 pub mod service;
 pub mod ticket;
 
@@ -42,6 +55,7 @@ pub(crate) use admission::ServeShared;
 pub use admission::AdmissionPolicy;
 pub use builder::{IntoServedModel, ServeBuilder, DEFAULT_GRAPH_WEIGHT_SEED};
 pub use error::ServeError;
+pub use registry::{ModelRegistry, RegistryBuilder};
 pub use service::{NpeService, ServiceClient};
 pub use ticket::{Responder, Ticket};
 
@@ -56,7 +70,8 @@ pub(crate) mod test_support {
     /// unit tests of the queue/device internals.
     pub(crate) fn detached_request(input: Vec<i16>) -> (InferenceRequest, Ticket) {
         let shared = ServeShared::new(input.len(), AdmissionPolicy::Block);
-        let (responder, ticket) = Responder::admit(&shared);
+        let (responder, ticket) =
+            Responder::admit(&shared).expect("Block admission cannot be refused");
         (InferenceRequest { input, submitted: Instant::now(), responder, trace_id: 0 }, ticket)
     }
 }

@@ -1,0 +1,420 @@
+//! [`ModelRegistry`] — multi-model, multi-tenant serving over one shared
+//! device pool — and [`RegistryBuilder`], its construction path.
+//!
+//! One registry holds N served models, each under a tenant name. Every
+//! tenant is a full [`NpeService`] (own batcher, own admission policy,
+//! own metrics lanes, own `requests[<tenant>]` tracer track) — but all
+//! of them dispatch into **one** [`FleetPool`] and share **one**
+//! Algorithm-1 [`ScheduleCache`]:
+//!
+//! ```text
+//! submit("mnist", x) ─► NpeService[mnist] ─ batcher ─┐
+//! submit("lenet", x) ─► NpeService[lenet] ─ batcher ─┼─► FleetQueue ─► devices
+//! submit("gcn",   x) ─► NpeService[gcn]   ─ batcher ─┘      (jobs carry tenant
+//!                                                             model + metrics)
+//! ```
+//!
+//! The sharing is the point: devices stay busy whenever *any* tenant has
+//! traffic, and a `(geometry, Γ)` shape mapped for one tenant is a cache
+//! hit for every other tenant serving the same topology. Isolation is
+//! preserved where it matters — admission is decided per tenant before a
+//! request touches the shared queue, metrics account into the owning
+//! tenant's lanes only, and an unknown tenant name is a typed
+//! [`ServeError::UnknownTenant`] that never occupies queue space.
+//! (`ShedOldest` is the one policy a tenant here cannot use: shedding at
+//! the shared queue could evict *other* tenants' requests, so the
+//! builder rejects it.)
+
+use super::admission::AdmissionPolicy;
+use super::builder::IntoServedModel;
+use super::error::ServeError;
+use super::service::NpeService;
+use super::ticket::Ticket;
+use crate::coordinator::{BatcherConfig, CoordinatorMetrics, ServedModel};
+use crate::fleet::{DeviceSpec, FleetPool};
+use crate::mapper::{NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
+use crate::obs::{chrome_trace_json, MetricsSnapshot, TraceLog, Tracer};
+use std::sync::Arc;
+
+/// One tenant registration, staged until [`RegistryBuilder::build`].
+struct Registration {
+    name: String,
+    model: ServedModel,
+    /// `None` — inherit the builder-level default policy.
+    admission: Option<AdmissionPolicy>,
+}
+
+/// Typed, validating builder for [`ModelRegistry`]. Pool-level knobs
+/// (devices, cache, batcher, default admission, tracing) are set once;
+/// tenants are added with [`register`](Self::register) /
+/// [`register_with`](Self::register_with).
+pub struct RegistryBuilder {
+    devices: Option<Vec<DeviceSpec>>,
+    batcher: BatcherConfig,
+    cache_capacity: usize,
+    admission: AdmissionPolicy,
+    tracer: Option<Arc<Tracer>>,
+    tenants: Vec<Registration>,
+}
+
+impl Default for RegistryBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RegistryBuilder {
+    pub fn new() -> Self {
+        Self {
+            devices: None,
+            batcher: BatcherConfig::default(),
+            cache_capacity: DEFAULT_SERVING_CACHE_CAPACITY,
+            admission: AdmissionPolicy::default(),
+            tracer: None,
+            tenants: Vec::new(),
+        }
+    }
+
+    /// The shared device pool, one device per spec (heterogeneous
+    /// geometries and backends stay bit-exact). Default: one device on
+    /// the paper's 16×8 geometry.
+    pub fn devices<I, D>(mut self, specs: I) -> Self
+    where
+        I: IntoIterator<Item = D>,
+        D: Into<DeviceSpec>,
+    {
+        self.devices = Some(specs.into_iter().map(Into::into).collect());
+        self
+    }
+
+    /// Dynamic-batching policy applied to every tenant's batcher.
+    /// Default: [`BatcherConfig::default`].
+    pub fn batcher(mut self, cfg: BatcherConfig) -> Self {
+        self.batcher = cfg;
+        self
+    }
+
+    /// Capacity of the shared Algorithm-1 schedule cache (LRU entries).
+    /// Default: [`DEFAULT_SERVING_CACHE_CAPACITY`].
+    pub fn cache(mut self, capacity: usize) -> Self {
+        self.cache_capacity = capacity;
+        self
+    }
+
+    /// Default admission policy for tenants registered without an
+    /// explicit one. Default: [`AdmissionPolicy::Block`].
+    pub fn admission(mut self, policy: AdmissionPolicy) -> Self {
+        self.admission = policy;
+        self
+    }
+
+    /// Enable (or disable) end-to-end tracing with a fresh shared
+    /// [`Tracer`]: each tenant records onto its own `requests[<tenant>]`
+    /// track, each device onto its own device track, all in one merged
+    /// trace. Default: off.
+    pub fn tracing(mut self, on: bool) -> Self {
+        self.tracer = if on { Some(Tracer::shared()) } else { None };
+        self
+    }
+
+    /// Record spans onto an existing [`Tracer`] instead of a fresh one.
+    /// Implies tracing on.
+    pub fn tracer(mut self, tracer: Arc<Tracer>) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// Register a tenant under the builder-level default admission
+    /// policy.
+    pub fn register(self, name: impl Into<String>, model: impl IntoServedModel) -> Self {
+        self.add(name.into(), model.into_served(), None)
+    }
+
+    /// Register a tenant with its own admission policy (e.g. a greedy
+    /// batch tenant under `Reject` next to a latency tenant under
+    /// `Block`).
+    pub fn register_with(
+        self,
+        name: impl Into<String>,
+        model: impl IntoServedModel,
+        admission: AdmissionPolicy,
+    ) -> Self {
+        self.add(name.into(), model.into_served(), Some(admission))
+    }
+
+    fn add(mut self, name: String, model: ServedModel, admission: Option<AdmissionPolicy>) -> Self {
+        self.tenants.push(Registration { name, model, admission });
+        self
+    }
+
+    /// Validate the configuration, launch the shared pool, and start one
+    /// service per tenant on it.
+    pub fn build(self) -> Result<ModelRegistry, ServeError> {
+        let invalid =
+            |reason: String| Err(ServeError::InvalidConfig { reason });
+        if self.tenants.is_empty() {
+            return invalid("a registry needs at least one registered tenant".to_string());
+        }
+        for (i, reg) in self.tenants.iter().enumerate() {
+            if reg.name.is_empty() {
+                return invalid("tenant names must be non-empty".to_string());
+            }
+            if self.tenants[..i].iter().any(|r| r.name == reg.name) {
+                return invalid(format!("tenant {:?} registered twice", reg.name));
+            }
+        }
+        if self.cache_capacity == 0 {
+            return invalid("schedule cache capacity must be >= 1".to_string());
+        }
+        let specs = self
+            .devices
+            .unwrap_or_else(|| vec![DeviceSpec::from(NpeGeometry::PAPER)]);
+        if specs.is_empty() {
+            return invalid("the shared pool needs at least one device".to_string());
+        }
+
+        let cache = ScheduleCache::shared_bounded(self.cache_capacity);
+        let pool = FleetPool::launch(&specs, Arc::clone(&cache), self.tracer.clone());
+        let mut tenants: Vec<(String, NpeService)> = Vec::with_capacity(self.tenants.len());
+        for reg in self.tenants {
+            let mut builder = NpeService::builder(reg.model)
+                .batcher(self.batcher)
+                .admission(reg.admission.unwrap_or(self.admission))
+                .label(&reg.name)
+                .pool(Arc::clone(&pool))
+                .shared_cache(Arc::clone(&cache));
+            if let Some(t) = &self.tracer {
+                builder = builder.tracer(Arc::clone(t));
+            }
+            match builder.build() {
+                Ok(service) => tenants.push((reg.name, service)),
+                Err(err) => {
+                    // Unwind what already started: flush the built
+                    // tenants, stop the pool, and surface the error.
+                    for (_, svc) in tenants {
+                        let _ = svc.shutdown();
+                    }
+                    pool.shutdown();
+                    return Err(err);
+                }
+            }
+        }
+        Ok(ModelRegistry { tenants, pool, cache, tracer: self.tracer })
+    }
+}
+
+/// A running multi-tenant serving instance: a router over N per-tenant
+/// [`NpeService`]s sharing one device pool and one schedule cache. See
+/// the [module docs](self) for the shape.
+pub struct ModelRegistry {
+    /// Registration order is preserved (it is also lane-layout order in
+    /// nothing — each tenant has its own full metrics lane set).
+    tenants: Vec<(String, NpeService)>,
+    pool: Arc<FleetPool>,
+    cache: Arc<ScheduleCache>,
+    tracer: Option<Arc<Tracer>>,
+}
+
+impl ModelRegistry {
+    /// Begin configuring a registry.
+    pub fn builder() -> RegistryBuilder {
+        RegistryBuilder::new()
+    }
+
+    /// Route one request to `tenant`'s service. An unregistered name is
+    /// [`ServeError::UnknownTenant`] — decided before admission, so it
+    /// never occupies queue space and never moves any tenant's counters.
+    /// Everything after routing is exactly [`NpeService::submit`].
+    pub fn submit(&self, tenant: &str, input: Vec<i16>) -> Result<Ticket, ServeError> {
+        self.service(tenant)?.submit(input)
+    }
+
+    /// The tenant's underlying service (for clients, cloneable submit
+    /// handles, per-tenant observability).
+    pub fn service(&self, tenant: &str) -> Result<&NpeService, ServeError> {
+        self.tenants
+            .iter()
+            .find(|(name, _)| name == tenant)
+            .map(|(_, svc)| svc)
+            .ok_or_else(|| ServeError::UnknownTenant { tenant: tenant.to_string() })
+    }
+
+    /// Registered tenant names, in registration order.
+    pub fn tenants(&self) -> Vec<&str> {
+        self.tenants.iter().map(|(name, _)| name.as_str()).collect()
+    }
+
+    /// Number of devices in the shared pool.
+    pub fn pool_size(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// The shared Algorithm-1 schedule cache (its hit/miss counters
+    /// aggregate every tenant's lookups).
+    pub fn cache(&self) -> Arc<ScheduleCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// One tenant's service counters (queue-aggregate cache counters
+    /// overlaid, like [`NpeService::metrics`]).
+    pub fn metrics(&self, tenant: &str) -> Result<CoordinatorMetrics, ServeError> {
+        Ok(self.service(tenant)?.metrics())
+    }
+
+    /// One tenant's full observability snapshot, labelled with the
+    /// tenant name — its Prometheus exposition carries
+    /// `tenant="<name>"` on every sample.
+    pub fn metrics_snapshot(&self, tenant: &str) -> Result<MetricsSnapshot, ServeError> {
+        Ok(self.service(tenant)?.metrics_snapshot().with_tenant(tenant))
+    }
+
+    /// Prometheus text exposition for **all** tenants: each tenant's
+    /// samples labelled `tenant="<name>"`, concatenated into one scrape
+    /// body (HELP/TYPE headers repeat per tenant; Prometheus accepts
+    /// repeated headers for the same metric).
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, svc) in &self.tenants {
+            out.push_str(&svc.metrics_snapshot().with_tenant(name).prometheus_text());
+        }
+        out
+    }
+
+    /// Requests currently in flight for one tenant.
+    pub fn in_flight(&self, tenant: &str) -> Result<usize, ServeError> {
+        Ok(self.service(tenant)?.in_flight())
+    }
+
+    /// The shared tracer, when tracing was enabled at build time.
+    pub fn tracer(&self) -> Option<Arc<Tracer>> {
+        self.tracer.clone()
+    }
+
+    /// Snapshot of every span recorded so far, across all tenants and
+    /// devices (empty log when untraced).
+    pub fn trace(&self) -> TraceLog {
+        self.tracer.as_ref().map(|t| t.snapshot()).unwrap_or_default()
+    }
+
+    /// The merged trace as Chrome-trace JSON: one `requests[<tenant>]`
+    /// track per tenant plus one track per shared device.
+    pub fn trace_json(&self) -> String {
+        chrome_trace_json(&self.trace())
+    }
+
+    /// Shut down every tenant, then the shared pool, flushing pending
+    /// requests: tenant batchers drain into the pool queue first, the
+    /// pool then executes and answers everything it accepted. Returns
+    /// [`ServeError::DeviceLost`] if any coordinator or device thread
+    /// died along the way (some responses may then be missing).
+    pub fn shutdown(mut self) -> Result<(), ServeError> {
+        let mut lost = false;
+        for (_, svc) in self.tenants.drain(..) {
+            lost |= svc.shutdown().is_err();
+        }
+        let dead_devices = self.pool.shutdown();
+        if lost || dead_devices > 0 {
+            Err(ServeError::DeviceLost)
+        } else {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{MlpTopology, QuantizedMlp};
+    use std::time::Duration;
+
+    fn mlp(seed: u64) -> QuantizedMlp {
+        QuantizedMlp::synthesize(MlpTopology::new(vec![8, 6, 2]), seed)
+    }
+
+    fn reason(err: Result<ModelRegistry, ServeError>) -> String {
+        match err {
+            Err(ServeError::InvalidConfig { reason }) => reason,
+            Err(other) => panic!("expected InvalidConfig, got {other:?}"),
+            Ok(_) => panic!("expected InvalidConfig, got a running registry"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs_with_specific_reasons() {
+        assert!(reason(ModelRegistry::builder().build()).contains("at least one registered"));
+
+        let dup = ModelRegistry::builder()
+            .register("a", mlp(1))
+            .register("a", mlp(2))
+            .build();
+        assert!(reason(dup).contains("registered twice"));
+
+        let empty_name = ModelRegistry::builder().register("", mlp(1)).build();
+        assert!(reason(empty_name).contains("non-empty"));
+
+        let no_devices = ModelRegistry::builder()
+            .devices(Vec::<DeviceSpec>::new())
+            .register("a", mlp(1))
+            .build();
+        assert!(reason(no_devices).contains("at least one device"));
+
+        // ShedOldest on a shared pool could evict other tenants'
+        // requests; the per-tenant builder rejects it and the registry
+        // surfaces that (after unwinding the tenants already started).
+        let shed = ModelRegistry::builder()
+            .register("fine", mlp(1))
+            .register_with("greedy", mlp(2), AdmissionPolicy::ShedOldest { max_depth: 4 })
+            .build();
+        assert!(reason(shed).contains("ShedOldest"));
+    }
+
+    #[test]
+    fn routes_to_the_named_tenant() {
+        let (a, b) = (mlp(10), mlp(20));
+        let registry = ModelRegistry::builder()
+            .devices([NpeGeometry::WALKTHROUGH])
+            .batcher(BatcherConfig::new(2, Duration::from_millis(2)))
+            .register("a", a.clone())
+            .register("b", b.clone())
+            .build()
+            .expect("valid registry");
+        assert_eq!(registry.tenants(), vec!["a", "b"]);
+        assert_eq!(registry.pool_size(), 1);
+
+        let x = a.synth_inputs(1, 7)[0].clone();
+        // Same input, different tenants: each must answer with *its own*
+        // model's forward pass (the seeds differ, so the answers do).
+        let via_a = registry.submit("a", x.clone()).expect("routed").wait().expect("answered");
+        let via_b = registry.submit("b", x.clone()).expect("routed").wait().expect("answered");
+        assert_eq!(via_a.output, a.forward_batch(&[x.clone()])[0]);
+        assert_eq!(via_b.output, b.forward_batch(&[x])[0]);
+        assert_ne!(via_a.output, via_b.output, "tenants serve different models");
+
+        assert_eq!(registry.metrics("a").expect("known").requests, 1);
+        assert_eq!(registry.metrics("b").expect("known").requests, 1);
+        registry.shutdown().expect("clean shutdown");
+    }
+
+    #[test]
+    fn unknown_tenant_is_typed_and_free() {
+        let registry = ModelRegistry::builder()
+            .devices([NpeGeometry::WALKTHROUGH])
+            .register("only", mlp(3))
+            .build()
+            .expect("valid registry");
+        let err = registry.submit("nope", vec![0; 8]).expect_err("unknown tenant");
+        assert_eq!(err, ServeError::UnknownTenant { tenant: "nope".into() });
+        assert!(matches!(
+            registry.metrics("nope"),
+            Err(ServeError::UnknownTenant { .. })
+        ));
+        assert_eq!(registry.in_flight("only").expect("known"), 0);
+        let m = registry.metrics("only").expect("known");
+        assert_eq!(
+            (m.requests, m.rejected_requests, m.shed_requests),
+            (0, 0, 0),
+            "a misrouted request moves no tenant's counters"
+        );
+        registry.shutdown().expect("clean shutdown");
+    }
+}

@@ -41,27 +41,36 @@ pub struct NpeService {
 }
 
 impl NpeService {
-    /// Begin configuring a service for any servable model — the only
-    /// non-deprecated construction path of the serving API.
+    /// Begin configuring a service for any servable model — the one
+    /// construction path of the serving API (multi-tenant serving goes
+    /// through [`crate::serve::ModelRegistry`], which builds its tenants
+    /// with this same builder over a shared pool).
     pub fn builder(model: impl IntoServedModel) -> ServeBuilder {
         ServeBuilder::new(model.into_served())
     }
 
     /// Spawn the coordinator thread for a validated configuration
-    /// (called by [`ServeBuilder::build`]).
+    /// (called by [`ServeBuilder::build`]). The cache arrives already
+    /// constructed so a registry can hand every tenant the same one;
+    /// `label` (the tenant name, when there is one) disambiguates the
+    /// request-pipeline tracer tracks of services sharing a tracer.
     pub(crate) fn start(
         model: ServedModel,
         plan: ExecutionPlan,
         cfg: BatcherConfig,
-        cache_capacity: usize,
+        cache: Arc<ScheduleCache>,
         admission: AdmissionPolicy,
         tracer: Option<Arc<Tracer>>,
+        label: Option<&str>,
     ) -> Self {
         let (tx, rx) = mpsc::channel();
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
-        let cache = ScheduleCache::shared_bounded(cache_capacity);
         let shared = ServeShared::new(model.input_len(), admission);
-        let pipeline = tracer.as_ref().map(|t| t.register_track("requests"));
+        let track_name = match label {
+            Some(name) => format!("requests[{name}]"),
+            None => "requests".to_string(),
+        };
+        let pipeline = tracer.as_ref().map(|t| t.register_track(&track_name));
         let (metrics_t, cache_t, shared_t, tracer_t) =
             (Arc::clone(&metrics), Arc::clone(&cache), Arc::clone(&shared), tracer.clone());
         let handle = std::thread::spawn(move || {
@@ -211,14 +220,17 @@ fn submit_via(
         return Err(ServeError::ShapeMismatch { expected: shared.input_len, got: input.len() });
     }
     let admission_started = Instant::now();
-    if let AdmissionPolicy::Reject { max_depth } = shared.policy {
-        let depth = shared.depth();
-        if depth >= max_depth {
+    // Admission is the reservation itself: under `Reject` the slot is
+    // taken (or refused) by one compare-exchange inside `admit`, so the
+    // bound holds exactly even across racing submitters — there is no
+    // separate check that a second thread could slip past.
+    let (responder, ticket) = match Responder::admit(shared) {
+        Ok(pair) => pair,
+        Err(err) => {
             util::lock(metrics).shed_requests += 1;
-            return Err(ServeError::QueueFull { depth, max_depth });
+            return Err(err);
         }
-    }
-    let (responder, ticket) = Responder::admit(shared);
+    };
     // Span bookkeeping happens only on the admitted path: a rejected
     // request never mints a trace id, so trace_id 0 == "untraced".
     let trace_id = match pipeline {

@@ -13,9 +13,8 @@ use super::admission::ServeShared;
 use super::error::ServeError;
 use crate::coordinator::InferenceResponse;
 use std::cell::Cell;
-use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// What travels back over a ticket's channel.
 pub(crate) type ServeResult = Result<InferenceResponse, ServeError>;
@@ -45,17 +44,22 @@ impl Ticket {
     }
 
     /// Wait up to `timeout`. Expiry returns
-    /// [`ServeError::Timeout`] and leaves the ticket valid — the request
-    /// is still in flight and a later wait can still succeed. Once the
-    /// final word has been collected, further waits return
+    /// [`ServeError::Timeout`] — carrying the time actually waited,
+    /// which is `>= timeout` (the OS wakes the waiter *after* the
+    /// deadline, never before) — and leaves the ticket valid: the
+    /// request is still in flight and a later wait can still succeed.
+    /// Once the final word has been collected, further waits return
     /// [`ServeError::AlreadyAnswered`].
     pub fn wait_timeout(&self, timeout: Duration) -> Result<InferenceResponse, ServeError> {
+        let started = Instant::now();
         match self.rx.recv_timeout(timeout) {
             Ok(result) => {
                 self.answered.set(true);
                 result
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::Timeout { waited: timeout }),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(ServeError::Timeout { waited: started.elapsed() })
+            }
             Err(mpsc::RecvTimeoutError::Disconnected) => Err(self.disconnect_error()),
         }
     }
@@ -84,15 +88,18 @@ pub struct Responder {
 }
 
 impl Responder {
-    /// Create a connected (responder, ticket) pair and count the request
-    /// into the in-flight depth.
-    pub(crate) fn admit(shared: &Arc<ServeShared>) -> (Responder, Ticket) {
+    /// Reserve an in-flight slot under the service's admission policy
+    /// and create a connected (responder, ticket) pair. Under
+    /// `AdmissionPolicy::Reject` the reservation is a compare-exchange
+    /// (see [`ServeShared::reserve`]), so a refusal here is exact: no
+    /// slot was taken and no pair exists.
+    pub(crate) fn admit(shared: &Arc<ServeShared>) -> Result<(Responder, Ticket), ServeError> {
+        shared.reserve()?;
         let (tx, rx) = mpsc::channel();
-        shared.depth.fetch_add(1, Ordering::AcqRel);
-        (
+        Ok((
             Responder { tx: Some(tx), shared: Arc::clone(shared) },
             Ticket { rx, shared: Arc::clone(shared), answered: Cell::new(false) },
-        )
+        ))
     }
 
     /// Deliver the request's final word. `Err(())` means the client hung
@@ -111,7 +118,7 @@ impl Drop for Responder {
     fn drop(&mut self) {
         // Runs exactly once per responder (including at the tail of
         // `respond`): the request has left the system either way.
-        self.shared.depth.fetch_sub(1, Ordering::AcqRel);
+        self.shared.release();
     }
 }
 
@@ -124,10 +131,14 @@ mod tests {
         ServeShared::new(4, AdmissionPolicy::Block)
     }
 
+    fn admit(s: &Arc<ServeShared>) -> (Responder, Ticket) {
+        Responder::admit(s).expect("Block admission cannot be refused")
+    }
+
     #[test]
     fn respond_reaches_ticket_and_depth_balances() {
         let s = shared();
-        let (responder, ticket) = Responder::admit(&s);
+        let (responder, ticket) = admit(&s);
         assert_eq!(s.depth(), 1);
         responder
             .respond(Err(ServeError::DeviceLost))
@@ -139,12 +150,12 @@ mod tests {
     #[test]
     fn dropped_responder_shows_as_device_lost_then_shutting_down() {
         let s = shared();
-        let (responder, ticket) = Responder::admit(&s);
+        let (responder, ticket) = admit(&s);
         drop(responder);
         assert_eq!(s.depth(), 0, "dropping also releases the slot");
         assert_eq!(ticket.wait_timeout(Duration::from_millis(10)), Err(ServeError::DeviceLost));
 
-        let (responder, ticket) = Responder::admit(&s);
+        let (responder, ticket) = admit(&s);
         s.begin_shutdown();
         drop(responder);
         assert_eq!(ticket.wait(), Err(ServeError::ShuttingDown));
@@ -153,17 +164,37 @@ mod tests {
     #[test]
     fn wait_timeout_expires_but_ticket_survives() {
         let s = shared();
-        let (responder, ticket) = Responder::admit(&s);
-        let got = ticket.wait_timeout(Duration::from_millis(5));
-        assert_eq!(got, Err(ServeError::Timeout { waited: Duration::from_millis(5) }));
+        let (responder, ticket) = admit(&s);
+        let timeout = Duration::from_millis(5);
+        match ticket.wait_timeout(timeout) {
+            Err(ServeError::Timeout { waited }) => assert!(
+                waited >= timeout,
+                "Timeout reports elapsed time, not the request: {waited:?} < {timeout:?}"
+            ),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
         responder.respond(Err(ServeError::ShuttingDown)).expect("still listening");
         assert_eq!(ticket.wait(), Err(ServeError::ShuttingDown));
     }
 
     #[test]
+    fn reject_refusal_takes_no_slot_and_builds_no_pair() {
+        let s = ServeShared::new(4, AdmissionPolicy::Reject { max_depth: 1 });
+        let kept = Responder::admit(&s).expect("first reservation fits");
+        assert_eq!(s.depth(), 1);
+        assert_eq!(
+            Responder::admit(&s).err(),
+            Some(ServeError::QueueFull { depth: 1, max_depth: 1 })
+        );
+        assert_eq!(s.depth(), 1, "a refused admit leaves the depth untouched");
+        drop(kept);
+        assert_eq!(s.depth(), 0);
+    }
+
+    #[test]
     fn second_wait_after_success_is_already_answered_not_device_lost() {
         let s = shared();
-        let (responder, ticket) = Responder::admit(&s);
+        let (responder, ticket) = admit(&s);
         responder.respond(Err(ServeError::ShuttingDown)).expect("listening");
         assert!(ticket.wait_timeout(Duration::from_millis(100)).is_err());
         // The channel is now disconnected, but the ticket knows its word
@@ -178,7 +209,7 @@ mod tests {
     #[test]
     fn hung_up_client_is_reported_to_the_responder() {
         let s = shared();
-        let (responder, ticket) = Responder::admit(&s);
+        let (responder, ticket) = admit(&s);
         drop(ticket);
         assert!(responder.respond(Err(ServeError::DeviceLost)).is_err());
         assert_eq!(s.depth(), 0);

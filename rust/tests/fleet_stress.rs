@@ -24,7 +24,7 @@ fn stress_mlp() -> QuantizedMlp {
 
 /// Watch the metrics while the storm runs: every counter must be
 /// non-decreasing and internally consistent in every snapshot.
-fn spawn_monitor(
+fn start_monitor(
     service: &NpeService,
     done: Arc<AtomicBool>,
 ) -> std::thread::JoinHandle<u64> {
@@ -87,7 +87,7 @@ fn spawn_monitor(
 fn run_stress(service: NpeService, mlp: &QuantizedMlp) {
     let t0 = Instant::now();
     let done = Arc::new(AtomicBool::new(false));
-    let monitor = spawn_monitor(&service, Arc::clone(&done));
+    let monitor = start_monitor(&service, Arc::clone(&done));
 
     let workers: Vec<_> = (0..CLIENTS)
         .map(|c| {

@@ -1,0 +1,81 @@
+//! Grep-enforced guard: the legacy coordinator shim layer is gone and
+//! stays gone. No first-party Rust source — library, tests, criterion
+//! benches, examples — may reference the retired shim entry points or
+//! their module, and the module file itself must not exist.
+//!
+//! The banned substrings are assembled with `concat!` so this test's
+//! own source never matches its own scan.
+
+use std::path::{Path, PathBuf};
+
+/// Every `.rs` file under `dir`, recursively.
+fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) => panic!("guard must be able to read {}: {e}", dir.display()),
+    };
+    for entry in entries {
+        let path = entry.expect("readable dir entry").path();
+        if path.is_dir() {
+            rust_sources(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn no_first_party_code_references_the_retired_shims() {
+    let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let trees = [
+        crate_root.join("src"),
+        crate_root.join("tests"),
+        crate_root.join("benches"),
+        crate_root.join("../examples"),
+    ];
+    // The shim prefix (the seven retired Coordinator entry points;
+    // bare std::thread::spawn carries no trailing underscore and stays
+    // legal) and the deleted module's name.
+    let banned = [concat!("sp", "awn_"), concat!("com", "pat")];
+
+    let mut files = Vec::new();
+    for tree in &trees {
+        assert!(tree.is_dir(), "guarded tree {} must exist", tree.display());
+        rust_sources(tree, &mut files);
+    }
+    assert!(files.len() > 20, "the walk found implausibly few sources");
+
+    let mut violations = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("guard must read {}: {e}", path.display()));
+        for (lineno, line) in text.lines().enumerate() {
+            for b in banned {
+                if line.contains(b) {
+                    violations.push(format!(
+                        "{}:{}: `{b}` — {}",
+                        path.display(),
+                        lineno + 1,
+                        line.trim()
+                    ));
+                }
+            }
+        }
+    }
+    assert!(
+        violations.is_empty(),
+        "retired shim references found:\n{}",
+        violations.join("\n")
+    );
+}
+
+#[test]
+fn the_shim_module_file_is_gone() {
+    let path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("src/coordinator/{}.rs", concat!("com", "pat")));
+    assert!(
+        !path.exists(),
+        "{} must stay deleted — the builder and registry are the only construction paths",
+        path.display()
+    );
+}

@@ -1,0 +1,221 @@
+//! Multi-tenant registry, end to end:
+//!
+//! * routed submits are bit-exact against a dedicated single-tenant
+//!   service for every zoo class (MLP, CNN, DAG) sharing one pool;
+//! * an unknown tenant is a typed `UnknownTenant` that occupies no
+//!   queue space and moves no tenant's counters;
+//! * a shed storm on one tenant never shows up in another tenant's
+//!   metrics lane;
+//! * two tenants serving the same topology share Algorithm-1 schedules:
+//!   the second tenant's traffic is all cache hits;
+//! * the merged Prometheus exposition labels every tenant's samples.
+
+use std::time::Duration;
+use tcd_npe::conv::QuantizedCnn;
+use tcd_npe::coordinator::BatcherConfig;
+use tcd_npe::graph::QuantizedGraph;
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::{benchmark_by_name, cnn_benchmark_by_name, graph_benchmarks, QuantizedMlp};
+use tcd_npe::serve::{AdmissionPolicy, NpeService, ServeError};
+use tcd_npe::ModelRegistry;
+
+fn iris() -> QuantizedMlp {
+    let b = benchmark_by_name("Iris").expect("Iris is in Table IV");
+    QuantizedMlp::synthesize(b.topology.clone(), 0x1E9_1)
+}
+
+fn lenet() -> QuantizedCnn {
+    let b = cnn_benchmark_by_name("LeNet-5").expect("LeNet-5 is in the CNN zoo");
+    QuantizedCnn::synthesize(b.topology.clone(), 0x1E9_2)
+}
+
+fn dag() -> QuantizedGraph {
+    let benches = graph_benchmarks();
+    QuantizedGraph::synthesize(benches[0].graph.clone(), 0x1E9_3)
+}
+
+#[test]
+fn routed_submits_match_dedicated_services_for_every_zoo_class() {
+    let (mlp, cnn, graph) = (iris(), lenet(), dag());
+    let batcher = BatcherConfig::new(2, Duration::from_millis(2));
+    let registry = ModelRegistry::builder()
+        .devices(vec![NpeGeometry::PAPER; 2])
+        .batcher(batcher)
+        .register("iris", mlp.clone())
+        .register("lenet", cnn.clone())
+        .register("dag", graph.clone())
+        .build()
+        .expect("valid registry");
+
+    // Route 3 requests per tenant through the shared pool and compare
+    // against a dedicated single-tenant service *and* the host-side
+    // reference forward pass.
+    let cases: Vec<(&str, Vec<Vec<i16>>, Vec<Vec<i16>>)> = vec![
+        ("iris", mlp.synth_inputs(3, 0xE2E), mlp.forward_batch(&mlp.synth_inputs(3, 0xE2E))),
+        ("lenet", cnn.synth_inputs(3, 0xE2E), cnn.forward_batch(&cnn.synth_inputs(3, 0xE2E))),
+        ("dag", graph.synth_inputs(3, 0xE2E), graph.forward_batch(&graph.synth_inputs(3, 0xE2E))),
+    ];
+    let dedicated = vec![
+        NpeService::builder(mlp).geometry(NpeGeometry::PAPER).batcher(batcher).build().unwrap(),
+        NpeService::builder(cnn).geometry(NpeGeometry::PAPER).batcher(batcher).build().unwrap(),
+        NpeService::builder(graph).geometry(NpeGeometry::PAPER).batcher(batcher).build().unwrap(),
+    ];
+    for ((tenant, inputs, expect), solo) in cases.iter().zip(&dedicated) {
+        for (x, want) in inputs.iter().zip(expect) {
+            let routed =
+                registry.submit(tenant, x.clone()).expect("routed").wait().expect("answered");
+            let alone = solo.submit(x.clone()).expect("admitted").wait().expect("answered");
+            assert_eq!(&routed.output, want, "{tenant}: shared pool == reference");
+            assert_eq!(routed.output, alone.output, "{tenant}: shared pool == dedicated service");
+        }
+    }
+    for (tenant, inputs, _) in &cases {
+        assert_eq!(
+            registry.metrics(tenant).expect("known tenant").requests,
+            inputs.len() as u64,
+            "{tenant}: per-tenant request counter"
+        );
+    }
+    for solo in dedicated {
+        solo.shutdown().expect("dedicated shutdown");
+    }
+    registry.shutdown().expect("registry shutdown");
+}
+
+#[test]
+fn unknown_tenant_is_typed_and_occupies_nothing() {
+    let registry = ModelRegistry::builder()
+        .devices([NpeGeometry::PAPER])
+        .register("iris", iris())
+        .build()
+        .expect("valid registry");
+    for _ in 0..3 {
+        let err = registry.submit("mystery", vec![0; 4]).expect_err("unknown tenant");
+        assert_eq!(err, ServeError::UnknownTenant { tenant: "mystery".into() });
+    }
+    assert_eq!(registry.in_flight("iris").expect("known"), 0, "no queue space consumed");
+    let m = registry.metrics("iris").expect("known");
+    assert_eq!(
+        (m.requests, m.rejected_requests, m.shed_requests),
+        (0, 0, 0),
+        "misroutes move no tenant's counters"
+    );
+    registry.shutdown().expect("registry shutdown");
+}
+
+#[test]
+fn shed_storm_on_one_tenant_stays_out_of_the_others_lane() {
+    // The batcher can only flush at shutdown (batch 64, 30 s deadline),
+    // so admitted requests park deterministically: greedy's Reject{2}
+    // bound refuses 4 of its 6 submits while quiet's Block admits all 3.
+    let greedy_model = iris();
+    let quiet_model = iris();
+    let registry = ModelRegistry::builder()
+        .devices([NpeGeometry::PAPER])
+        .batcher(BatcherConfig::new(64, Duration::from_secs(30)))
+        .register_with("greedy", greedy_model.clone(), AdmissionPolicy::Reject { max_depth: 2 })
+        .register("quiet", quiet_model.clone())
+        .build()
+        .expect("valid registry");
+
+    let storm = greedy_model.synth_inputs(6, 0x5702);
+    let mut admitted = Vec::new();
+    let mut refused = 0;
+    for x in &storm {
+        match registry.submit("greedy", x.clone()) {
+            Ok(t) => admitted.push(t),
+            Err(ServeError::QueueFull { max_depth: 2, .. }) => refused += 1,
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    assert_eq!(admitted.len(), 2, "Reject{{2}} admits exactly the bound");
+    assert_eq!(refused, 4);
+
+    let quiet_inputs = quiet_model.synth_inputs(3, 0x9013);
+    let quiet_expect = quiet_model.forward_batch(&quiet_inputs);
+    let quiet_tickets: Vec<_> = quiet_inputs
+        .iter()
+        .map(|x| registry.submit("quiet", x.clone()).expect("Block admits everything"))
+        .collect();
+
+    assert_eq!(registry.metrics("greedy").expect("known").shed_requests, 4);
+    assert_eq!(
+        registry.metrics("quiet").expect("known").shed_requests,
+        0,
+        "the storm never bleeds into the quiet tenant's lane"
+    );
+    assert_eq!(registry.in_flight("greedy").expect("known"), 2);
+    assert_eq!(registry.in_flight("quiet").expect("known"), 3);
+
+    registry.shutdown().expect("flushes the parked work");
+    for (t, want) in quiet_tickets.into_iter().zip(quiet_expect) {
+        assert_eq!(
+            t.wait_timeout(Duration::from_secs(5)).expect("answered at shutdown").output,
+            want,
+            "quiet tenant answered bit-exactly despite the storm"
+        );
+    }
+    for t in admitted {
+        t.wait_timeout(Duration::from_secs(5)).expect("admitted greedy work is still served");
+    }
+}
+
+#[test]
+fn same_topology_tenants_share_the_schedule_cache() {
+    // Same topology, different weights: tenant "b" maps no shape "a"
+    // hasn't already memoized, so b's traffic adds hits and zero misses.
+    let b_model = {
+        let bench = benchmark_by_name("Iris").expect("Iris is in Table IV");
+        QuantizedMlp::synthesize(bench.topology.clone(), 0xB0B)
+    };
+    let registry = ModelRegistry::builder()
+        .devices([NpeGeometry::PAPER])
+        .batcher(BatcherConfig::new(1, Duration::ZERO))
+        .register("a", iris())
+        .register("b", b_model.clone())
+        .build()
+        .expect("valid registry");
+
+    for x in iris().synth_inputs(4, 0xA11) {
+        registry.submit("a", x).expect("routed").wait().expect("answered");
+    }
+    let after_a = registry.cache().stats();
+    assert!(after_a.misses > 0, "first tenant populates the shared cache");
+
+    for x in b_model.synth_inputs(4, 0xB22) {
+        registry.submit("b", x).expect("routed").wait().expect("answered");
+    }
+    let after_b = registry.cache().stats();
+    assert_eq!(
+        after_b.misses, after_a.misses,
+        "the second tenant's shapes were all memoized already"
+    );
+    assert!(after_b.hits > after_a.hits, "b's lookups landed as shared hits");
+    registry.shutdown().expect("registry shutdown");
+}
+
+#[test]
+fn prometheus_exposition_labels_every_tenant() {
+    let registry = ModelRegistry::builder()
+        .devices([NpeGeometry::PAPER])
+        .batcher(BatcherConfig::new(1, Duration::ZERO))
+        .register("iris", iris())
+        .register("lenet", lenet())
+        .build()
+        .expect("valid registry");
+    let m = iris();
+    for x in m.synth_inputs(2, 0x9E7) {
+        registry.submit("iris", x).expect("routed").wait().expect("answered");
+    }
+    let text = registry.prometheus_text();
+    assert!(text.contains("npe_requests_total{tenant=\"iris\"} 2"), "{text}");
+    assert!(text.contains("npe_requests_total{tenant=\"lenet\"} 0"), "{text}");
+    // Every sample line carries a tenant label; headers stay bare.
+    for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        assert!(line.contains("tenant=\""), "unlabeled sample: {line}");
+    }
+    // The per-tenant snapshot carries the same label.
+    let snap = registry.metrics_snapshot("iris").expect("known");
+    assert!(snap.to_json().contains("\"tenant\":\"iris\""));
+    registry.shutdown().expect("registry shutdown");
+}

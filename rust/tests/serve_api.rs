@@ -7,8 +7,9 @@
 //!   oldest tickets;
 //! * `wait_timeout` expiry is non-destructive; shutdown races resolve
 //!   as `ShuttingDown`; hung-up clients are a counted metric;
-//! * the deprecated `Coordinator::spawn_*` shims are bit-exact against
-//!   the builder on zoo models;
+//! * the `Reject` in-flight bound is *exact* under a many-thread
+//!   submit hammer — the compare-exchange reservation admits precisely
+//!   `max_depth`, never one more;
 //! * the coordinator/fleet/serve request path carries zero
 //!   `unwrap()` / `expect(` / `panic!` / `unreachable!` (grep-enforced
 //!   below).
@@ -17,7 +18,7 @@ use std::time::Duration;
 use tcd_npe::coordinator::BatcherConfig;
 use tcd_npe::fleet::DeviceSpec;
 use tcd_npe::mapper::NpeGeometry;
-use tcd_npe::model::{benchmark_by_name, MlpTopology, QuantizedMlp};
+use tcd_npe::model::{MlpTopology, QuantizedMlp};
 use tcd_npe::serve::{AdmissionPolicy, NpeService, ServeError};
 
 fn mlp() -> QuantizedMlp {
@@ -186,7 +187,12 @@ fn wait_timeout_expiry_is_typed_and_non_destructive() {
     // The batch can't fill and the deadline is far away: expiry.
     match ticket.wait_timeout(Duration::from_millis(50)) {
         Err(ServeError::Timeout { waited }) => {
-            assert_eq!(waited, Duration::from_millis(50));
+            // `waited` reports time actually elapsed, not the deadline
+            // passed in — it can only run over, never under.
+            assert!(
+                waited >= Duration::from_millis(50),
+                "waited {waited:?} < the 50 ms deadline"
+            );
         }
         other => panic!("expected Timeout, got {other:?}"),
     }
@@ -271,88 +277,100 @@ fn fleet_shed_oldest_never_loses_a_ticket() {
     svc.shutdown().unwrap();
 }
 
-// ----------------------------------------------------- deprecated shims
+// ------------------------------------------- admission race (the hammer)
 
+/// The `Reject` bound is exact under contention. 32 threads hammer a
+/// service whose batcher can only flush at shutdown (batch 64, 30 s
+/// deadline), so nothing leaves the queue mid-test: the compare-exchange
+/// reservation must admit *exactly* `max_depth` requests across all
+/// threads, the sampler must never observe `in_flight() > max_depth`,
+/// and every refusal must be a typed `QueueFull`. Before the fix, the
+/// check-then-increment window admitted up to one extra request per
+/// racing thread.
 #[test]
-#[allow(deprecated)]
-fn deprecated_shims_are_bit_exact_against_the_builder() {
-    use tcd_npe::coordinator::{Coordinator, ServedModel};
+fn reject_bound_is_exact_under_a_32_thread_hammer() {
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{Barrier, Mutex};
 
-    let bench = benchmark_by_name("Iris").expect("Iris is in Table IV");
-    let m = QuantizedMlp::synthesize(bench.topology.clone(), 0xF1EE7);
-    let inputs = m.synth_inputs(6, 0x0DD);
-    let expect = m.forward_batch(&inputs);
-    let cfg = batcher(3, Duration::from_millis(5));
+    const THREADS: usize = 32;
+    const ATTEMPTS: usize = 8;
+    const MAX_DEPTH: usize = 4;
 
-    // Old spawn == builder, single path.
-    let old = Coordinator::spawn(m.clone(), NpeGeometry::PAPER, cfg, None);
-    let new = NpeService::builder(m.clone())
-        .geometry(NpeGeometry::PAPER)
-        .batcher(cfg)
+    let m = mlp();
+    let svc = NpeService::builder(m.clone())
+        .geometry(NpeGeometry::WALKTHROUGH)
+        .batcher(batcher(64, Duration::from_secs(30)))
+        .admission(AdmissionPolicy::Reject { max_depth: MAX_DEPTH })
         .build()
         .unwrap();
-    for (x, want) in inputs.iter().zip(&expect) {
-        let via_old = old.submit(x.clone()).unwrap().wait().unwrap().output;
-        let via_new = new.submit(x.clone()).unwrap().wait().unwrap().output;
-        assert_eq!(&via_old, want, "legacy spawn == reference");
-        assert_eq!(via_old, via_new, "legacy spawn == builder, bit for bit");
-    }
-    old.shutdown().unwrap();
-    new.shutdown().unwrap();
+    let input = m.synth_inputs(1, 0x4A44)[0].clone();
+    let expect = m.forward_batch(&[input.clone()])[0].clone();
 
-    // Old spawn_fleet == builder.devices, heterogeneous fleet.
-    let old = Coordinator::spawn_fleet(
-        ServedModel::Mlp(m.clone()),
-        vec![NpeGeometry::PAPER, NpeGeometry::WALKTHROUGH],
-        cfg,
+    let accepted = AtomicUsize::new(0);
+    let refused = AtomicUsize::new(0);
+    let overshoots = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let start = Barrier::new(THREADS + 1);
+    let tickets = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        // Continuous depth sampler, running for the whole hammer window.
+        s.spawn(|| {
+            while !stop.load(Ordering::Relaxed) {
+                if svc.in_flight() > MAX_DEPTH {
+                    overshoots.fetch_add(1, Ordering::Relaxed);
+                }
+                std::thread::yield_now();
+            }
+        });
+        let submitters: Vec<_> = (0..THREADS)
+            .map(|_| {
+                s.spawn(|| {
+                    start.wait();
+                    for _ in 0..ATTEMPTS {
+                        match svc.submit(input.clone()) {
+                            Ok(t) => {
+                                accepted.fetch_add(1, Ordering::Relaxed);
+                                tickets.lock().unwrap().push(t);
+                            }
+                            Err(ServeError::QueueFull { depth, max_depth }) => {
+                                assert_eq!(max_depth, MAX_DEPTH);
+                                assert!(depth >= MAX_DEPTH, "refused below the bound at {depth}");
+                                refused.fetch_add(1, Ordering::Relaxed);
+                            }
+                            other => panic!("unexpected submit outcome {other:?}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        start.wait();
+        for h in submitters {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    assert_eq!(overshoots.load(Ordering::Relaxed), 0, "in_flight exceeded max_depth");
+    assert_eq!(
+        accepted.load(Ordering::Relaxed),
+        MAX_DEPTH,
+        "exactly max_depth admissions (nothing completes mid-hammer)"
     );
-    let new = NpeService::builder(m.clone())
-        .devices([NpeGeometry::PAPER, NpeGeometry::WALKTHROUGH])
-        .batcher(cfg)
-        .build()
-        .unwrap();
-    for (x, want) in inputs.iter().zip(&expect) {
-        let via_old = old.client().submit(x.clone()).unwrap().wait().unwrap().output;
-        let via_new = new.client().submit(x.clone()).unwrap().wait().unwrap().output;
-        assert_eq!(&via_old, want, "legacy fleet == reference");
-        assert_eq!(via_old, via_new, "legacy fleet == builder, bit for bit");
+    assert_eq!(refused.load(Ordering::Relaxed), THREADS * ATTEMPTS - MAX_DEPTH);
+    assert_eq!(svc.metrics().shed_requests as usize, THREADS * ATTEMPTS - MAX_DEPTH);
+    // The admitted requests are real: shutdown flushes them bit-exactly.
+    svc.shutdown().unwrap();
+    for t in tickets.into_inner().unwrap() {
+        assert_eq!(t.wait_timeout(Duration::from_secs(5)).unwrap().output, expect);
     }
-    old.shutdown().unwrap();
-    new.shutdown().unwrap();
-}
-
-#[test]
-#[allow(deprecated)]
-fn deprecated_graph_shim_matches_builder() {
-    use tcd_npe::coordinator::Coordinator;
-    use tcd_npe::graph::QuantizedGraph;
-    use tcd_npe::model::zoo::graph_benchmarks;
-
-    let benches = graph_benchmarks();
-    let b = &benches[0];
-    let q = QuantizedGraph::synthesize(b.graph.clone(), 0x9AF);
-    let inputs = q.synth_inputs(3, 0xBEE5);
-    let expect = q.forward_batch(&inputs);
-    let cfg = batcher(3, Duration::from_millis(5));
-    let old = Coordinator::spawn_graph(q.clone(), NpeGeometry::PAPER, cfg);
-    let new = NpeService::builder(q).geometry(NpeGeometry::PAPER).batcher(cfg).build().unwrap();
-    for (x, want) in inputs.iter().zip(&expect) {
-        assert_eq!(&old.submit(x.clone()).unwrap().wait().unwrap().output, want);
-        assert_eq!(&new.submit(x.clone()).unwrap().wait().unwrap().output, want);
-    }
-    old.shutdown().unwrap();
-    new.shutdown().unwrap();
 }
 
 // ------------------------------------------- panic-free request path (grep)
 
 /// The redesign's hard promise: no `unwrap()` / `expect(` / `panic!` /
 /// `unreachable!` / `todo!` anywhere on the coordinator/fleet/serve
-/// request path. Test code (everything from the first `#[cfg(test)]`)
-/// is exempt; `coordinator/compat.rs` is exempt by design — it is
-/// construction-time-only deprecated glue whose `expect` reproduces the
-/// legacy panic-on-misuse behaviour, and it runs before any request
-/// exists.
+/// request path — registry routing included. Test code (everything from
+/// the first `#[cfg(test)]`) is exempt.
 #[test]
 fn request_path_carries_no_panics() {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
@@ -368,6 +386,7 @@ fn request_path_carries_no_panics() {
         "serve/admission.rs",
         "serve/builder.rs",
         "serve/error.rs",
+        "serve/registry.rs",
         "serve/service.rs",
         "serve/ticket.rs",
     ];
