@@ -1,6 +1,7 @@
 //! Bench E8 — observability overhead: the same closed-loop fleet
-//! serving run with tracing off and on (interleaved, best-of-N per
-//! mode), plus the size of the exported Chrome trace.
+//! serving run with instrumentation off, tracing on, and tracing +
+//! telemetry sampling on (interleaved, best-of-N per mode), plus the
+//! size of the exported Chrome trace.
 //!
 //! Run: `cargo bench --bench obs_bench`
 //!
@@ -12,7 +13,7 @@
 use tcd_npe::bench::{obs_bench, obs_json, render_obs, OBS_BENCH_REQUESTS, OBS_BENCH_RUNS};
 
 fn main() {
-    println!("=== observability: traced vs untraced serving ===");
+    println!("=== observability: untraced vs traced vs traced+sampled serving ===");
     let b = obs_bench(OBS_BENCH_RUNS, OBS_BENCH_REQUESTS);
     println!("{}", render_obs(&b));
 

@@ -1,28 +1,44 @@
 //! Observability overhead bench: the same closed-loop serving run with
-//! tracing off and on, interleaved, best-of-N per mode. Proves the
-//! ISSUE bar — a traced service costs ≤ 5% wall time — and records the
-//! exported trace size, emitted as `BENCH_obs.json`.
+//! instrumentation off, with tracing on, and with tracing + the
+//! telemetry sampler on — interleaved, best-of-N per mode. Proves the
+//! ISSUE bars — a traced service costs ≤ 5% wall time, and a traced **and
+//! sampled** one stays within the same 5% — and records the exported
+//! trace size, emitted as `BENCH_obs.json`.
 
 use crate::coordinator::BatcherConfig;
 use crate::mapper::NpeGeometry;
 use crate::model::{benchmark_by_name, QuantizedMlp};
+use crate::obs::SamplerConfig;
 use crate::serve::NpeService;
 use std::time::{Duration, Instant};
 
 /// Requests per measured run.
 pub const OBS_BENCH_REQUESTS: usize = 256;
-/// Timed run pairs (after one warmup pair); min-of-N per mode.
+/// Timed run triples (after one warmup triple); min-of-N per mode.
 pub const OBS_BENCH_RUNS: usize = 5;
 
-/// Traced-vs-untraced measurement of one serving workload.
+/// Instrumentation level of one measured run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Instrumentation {
+    Off,
+    Traced,
+    /// Tracing plus the background telemetry sampler at a 5 ms period —
+    /// 10x the default cadence, so the bar over-counts rather than
+    /// under-counts sampling cost.
+    TracedSampled,
+}
+
+/// Instrumented-vs-bare measurement of one serving workload.
 #[derive(Debug, Clone)]
 pub struct ObsBench {
     pub requests: usize,
     pub runs: usize,
-    /// Best-of-runs wall time with tracing off, ns.
+    /// Best-of-runs wall time with instrumentation off, ns.
     pub untraced_ns: f64,
     /// Best-of-runs wall time with tracing on, ns.
     pub traced_ns: f64,
+    /// Best-of-runs wall time with tracing + telemetry sampling on, ns.
+    pub sampled_ns: f64,
     /// Spans recorded by one traced run (wall spans + batch records).
     pub trace_events: usize,
     /// Size of the exported Chrome-trace JSON, bytes.
@@ -38,6 +54,16 @@ impl ObsBench {
             self.traced_ns / self.untraced_ns
         }
     }
+
+    /// (traced + sampled) / untraced wall time — the full-observability
+    /// bar: spans, busy-lane stamps, and the sampler thread together.
+    pub fn sampled_overhead_ratio(&self) -> f64 {
+        if self.untraced_ns == 0.0 {
+            1.0
+        } else {
+            self.sampled_ns / self.untraced_ns
+        }
+    }
 }
 
 fn iris() -> QuantizedMlp {
@@ -47,13 +73,15 @@ fn iris() -> QuantizedMlp {
 
 /// One closed-loop run: submit every request, wait for every answer.
 /// Returns (wall ns, recorded spans, exported trace bytes).
-fn run_once(mlp: &QuantizedMlp, requests: usize, traced: bool) -> (f64, usize, usize) {
-    let service = NpeService::builder(mlp.clone())
+fn run_once(mlp: &QuantizedMlp, requests: usize, level: Instrumentation) -> (f64, usize, usize) {
+    let mut builder = NpeService::builder(mlp.clone())
         .devices(vec![NpeGeometry::PAPER; 4])
         .batcher(BatcherConfig::new(8, Duration::from_micros(200)))
-        .tracing(traced)
-        .build()
-        .expect("valid obs bench config");
+        .tracing(level != Instrumentation::Off);
+    if level == Instrumentation::TracedSampled {
+        builder = builder.telemetry(SamplerConfig::default().with_period(Duration::from_millis(5)));
+    }
+    let service = builder.build().expect("valid obs bench config");
     let inputs = mlp.synth_inputs(requests, 0x0B5_BE4C);
     let t0 = Instant::now();
     let tickets: Vec<_> = inputs
@@ -64,39 +92,43 @@ fn run_once(mlp: &QuantizedMlp, requests: usize, traced: bool) -> (f64, usize, u
         t.wait_timeout(Duration::from_secs(60)).expect("answered");
     }
     let elapsed = t0.elapsed().as_nanos() as f64;
-    let (events, bytes) = if traced {
+    let (events, bytes) = if level == Instrumentation::Off {
+        (0, 0)
+    } else {
         let log = service.trace();
         (log.wall.len() + log.batches.len(), service.trace_json().len())
-    } else {
-        (0, 0)
     };
     service.shutdown().expect("obs bench shutdown");
     (elapsed, events, bytes)
 }
 
-/// Interleave untraced/traced runs (ABAB…) so drift hits both modes
-/// alike, and keep the best of each: min-of-N is the right statistic
-/// for proving an *upper bound* on overhead, since every slowdown is
-/// noise by definition.
+/// Interleave bare/traced/sampled runs (ABCABC…) so drift hits every
+/// mode alike, and keep the best of each: min-of-N is the right
+/// statistic for proving an *upper bound* on overhead, since every
+/// slowdown is noise by definition.
 pub fn obs_bench(runs: usize, requests: usize) -> ObsBench {
     let mlp = iris();
-    run_once(&mlp, requests, false);
-    run_once(&mlp, requests, true);
-    let (mut untraced, mut traced) = (f64::INFINITY, f64::INFINITY);
+    run_once(&mlp, requests, Instrumentation::Off);
+    run_once(&mlp, requests, Instrumentation::Traced);
+    run_once(&mlp, requests, Instrumentation::TracedSampled);
+    let (mut untraced, mut traced, mut sampled) = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
     let (mut trace_events, mut trace_bytes) = (0, 0);
     for _ in 0..runs.max(1) {
-        let (u, _, _) = run_once(&mlp, requests, false);
+        let (u, _, _) = run_once(&mlp, requests, Instrumentation::Off);
         untraced = untraced.min(u);
-        let (t, events, bytes) = run_once(&mlp, requests, true);
+        let (t, events, bytes) = run_once(&mlp, requests, Instrumentation::Traced);
         traced = traced.min(t);
         trace_events = events;
         trace_bytes = bytes;
+        let (s, _, _) = run_once(&mlp, requests, Instrumentation::TracedSampled);
+        sampled = sampled.min(s);
     }
     ObsBench {
         requests,
         runs: runs.max(1),
         untraced_ns: untraced,
         traced_ns: traced,
+        sampled_ns: sampled,
         trace_events,
         trace_bytes,
     }
@@ -107,12 +139,15 @@ pub fn render_obs(b: &ObsBench) -> String {
     format!(
         "obs overhead (Iris MLP, 4-device fleet, {} requests, best of {}):\n  \
          untraced {:.3} ms, traced {:.3} ms -> overhead {:.1}%\n  \
+         traced+sampled {:.3} ms -> overhead {:.1}%\n  \
          one traced run recorded {} spans, {} bytes of Chrome trace",
         b.requests,
         b.runs,
         b.untraced_ns / 1e6,
         b.traced_ns / 1e6,
         (b.overhead_ratio() - 1.0) * 100.0,
+        b.sampled_ns / 1e6,
+        (b.sampled_overhead_ratio() - 1.0) * 100.0,
         b.trace_events,
         b.trace_bytes
     )
@@ -124,13 +159,17 @@ pub fn obs_json(b: &ObsBench) -> String {
     format!(
         "{{\n  \"bench\": \"obs\",\n  \"requests\": {},\n  \"runs\": {},\n  \
          \"untraced_ms\": {:.4},\n  \"traced_ms\": {:.4},\n  \
-         \"overhead_ratio\": {:.4},\n  \"trace_events\": {},\n  \
+         \"sampled_ms\": {:.4},\n  \
+         \"overhead_ratio\": {:.4},\n  \"sampled_overhead_ratio\": {:.4},\n  \
+         \"trace_events\": {},\n  \
          \"trace_bytes\": {}\n}}\n",
         b.requests,
         b.runs,
         b.untraced_ns / 1e6,
         b.traced_ns / 1e6,
+        b.sampled_ns / 1e6,
         b.overhead_ratio(),
+        b.sampled_overhead_ratio(),
         b.trace_events,
         b.trace_bytes
     )
@@ -143,14 +182,16 @@ mod tests {
     #[test]
     fn bench_runs_and_records_a_trace() {
         let b = obs_bench(1, 32);
-        assert!(b.untraced_ns > 0.0 && b.traced_ns > 0.0);
+        assert!(b.untraced_ns > 0.0 && b.traced_ns > 0.0 && b.sampled_ns > 0.0);
         assert!(b.trace_events > 0, "traced run recorded spans");
         assert!(b.trace_bytes > 2, "trace export is non-trivial JSON");
         let json = obs_json(&b);
         assert!(json.contains("\"bench\": \"obs\""));
         assert!(json.contains("\"overhead_ratio\""));
+        assert!(json.contains("\"sampled_overhead_ratio\""));
         assert!(json.trim_end().ends_with('}'));
         assert!(render_obs(&b).contains("overhead"));
+        assert!(render_obs(&b).contains("traced+sampled"));
     }
 
     /// The ISSUE acceptance bar: tracing costs ≤ 5% wall time. Timing
@@ -166,6 +207,22 @@ mod tests {
             b.traced_ns / 1e6,
             b.untraced_ns / 1e6,
             b.overhead_ratio()
+        );
+    }
+
+    /// The tentpole's bar: tracing *plus* the telemetry sampler (at 10x
+    /// the default cadence) still costs ≤ 5% wall time. Release-only,
+    /// like the bar above.
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "timing bar is release-only")]
+    fn sampled_overhead_within_five_percent() {
+        let b = obs_bench(OBS_BENCH_RUNS, OBS_BENCH_REQUESTS);
+        assert!(
+            b.sampled_overhead_ratio() <= 1.05,
+            "traced+sampled {:.2} ms vs untraced {:.2} ms — ratio {:.3} > 1.05",
+            b.sampled_ns / 1e6,
+            b.untraced_ns / 1e6,
+            b.sampled_overhead_ratio()
         );
     }
 }

@@ -38,11 +38,11 @@ pub use metrics::{CoordinatorMetrics, DeviceMetrics};
 use crate::conv::{CnnEngine, QuantizedCnn};
 use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
 use crate::exec::BackendKind;
-use crate::fleet::{DeviceSpec, FleetJob, FleetPool};
+use crate::fleet::{FleetJob, FleetPool};
 use crate::graph::{GraphEngine, QuantizedGraph};
 use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::model::QuantizedMlp;
-use crate::obs::{SpanKind, Tracer, TrackHandle};
+use crate::obs::{BusyLanes, EventKind, JournalSink, Severity, SpanKind, Tracer, TrackHandle};
 use crate::runtime::PjrtRuntime;
 use crate::serve::{AdmissionPolicy, Responder, ServeError, ServeShared};
 use crate::util;
@@ -115,12 +115,25 @@ pub(crate) enum ExecutionPlan {
         backend: BackendKind,
         pjrt: Option<PjrtSpec>,
     },
-    /// Launch a fresh device pool owned by this service alone.
-    Fleet { specs: Vec<DeviceSpec> },
-    /// Join an existing shared pool (multi-tenant registry): this
-    /// service's batches interleave with other tenants' on one queue,
-    /// and the *registry* — not this service — shuts the pool down.
-    Pool { pool: Arc<FleetPool> },
+    /// Execute on a device pool, launched *by the builder* before the
+    /// coordinator thread starts — so the telemetry sampler can wire
+    /// against the pool's queue and busy lanes. `owned: true` is a pool
+    /// this service launched for itself (drained and joined at the end
+    /// of its run loop); `owned: false` is a shared multi-tenant
+    /// registry pool — this service's batches interleave with other
+    /// tenants' on one queue, and the *registry* — not this service —
+    /// shuts the pool down.
+    Pool { pool: Arc<FleetPool>, owned: bool },
+}
+
+/// Observability wiring handed from the builder into the coordinator
+/// thread: the tracer (wall-span tracks), the busy lanes the single-NPE
+/// dispatch stamps into (fleet devices stamp the pool's own lanes), and
+/// the tenant's event-journal sink.
+pub(crate) struct CoordinatorObs {
+    pub(crate) tracer: Option<Arc<Tracer>>,
+    pub(crate) busy: Arc<BusyLanes>,
+    pub(crate) journal: Option<JournalSink>,
 }
 
 pub(crate) enum CoordinatorMsg {
@@ -137,6 +150,10 @@ struct SingleBackend {
     /// The device's tracer track (queue-wait/batch-assembly/respond
     /// spans; the engines record their own execute spans through clones).
     track: Option<TrackHandle>,
+    /// Lane 0 of the service's busy lanes — execute wall time is stamped
+    /// here so the telemetry sampler can derive occupancy on the
+    /// single-NPE path exactly like it does for fleet devices.
+    busy: Arc<BusyLanes>,
 }
 
 /// Where dispatched batches execute. `owned` distinguishes a pool this
@@ -159,9 +176,10 @@ pub(crate) fn service_thread(
     metrics: Arc<Mutex<CoordinatorMetrics>>,
     cache: Arc<ScheduleCache>,
     shared: Arc<ServeShared>,
-    tracer: Option<Arc<Tracer>>,
+    obs: CoordinatorObs,
 ) -> usize {
     let model = Arc::new(model);
+    let CoordinatorObs { tracer, busy, journal } = obs;
     let backend = match plan {
         ExecutionPlan::Single { geometry, backend, pjrt } => {
             util::lock(&metrics).devices = vec![DeviceMetrics::for_geometry(geometry)];
@@ -195,26 +213,20 @@ pub(crate) fn service_thread(
                     .with_tracer(track.clone()),
                 runtime,
                 track,
+                busy,
             }))
         }
-        ExecutionPlan::Fleet { specs } => {
-            util::lock(&metrics).devices =
-                specs.iter().map(|s| DeviceMetrics::for_geometry(s.geometry)).collect();
-            Backend::Fleet {
-                pool: FleetPool::launch(&specs, Arc::clone(&cache), tracer),
-                owned: true,
-            }
-        }
-        ExecutionPlan::Pool { pool } => {
-            // A shared pool: lay this tenant's metrics lanes over the
-            // pool's device set (every tenant gets the full lane layout;
-            // devices account each job at their own lane index).
+        ExecutionPlan::Pool { pool, owned } => {
+            // Lay this tenant's metrics lanes over the pool's device set
+            // (every tenant gets the full lane layout; devices account
+            // each job at their own lane index). The pool itself was
+            // launched by the builder (owned) or the registry (shared).
             util::lock(&metrics).devices =
                 pool.specs().iter().map(|s| DeviceMetrics::for_geometry(s.geometry)).collect();
-            Backend::Fleet { pool, owned: false }
+            Backend::Fleet { pool, owned }
         }
     };
-    run_loop(rx, model, cfg, backend, metrics, shared)
+    run_loop(rx, model, cfg, backend, metrics, shared, journal)
 }
 
 fn run_loop(
@@ -224,6 +236,7 @@ fn run_loop(
     mut backend: Backend,
     metrics: Arc<Mutex<CoordinatorMetrics>>,
     shared: Arc<ServeShared>,
+    journal: Option<JournalSink>,
 ) -> usize {
     let mut pending: Vec<InferenceRequest> = Vec::new();
     let mut shutdown = false;
@@ -290,6 +303,16 @@ fn run_loop(
                     if excess > 0 {
                         util::lock(&metrics).shed_requests += excess as u64;
                         let depth = pending.len();
+                        if let Some(j) = &journal {
+                            j.event(
+                                EventKind::Shed,
+                                Severity::Warn,
+                                format!(
+                                    "shed {excess} oldest of {depth} pending \
+                                     (max_depth {max_depth})"
+                                ),
+                            );
+                        }
                         for req in pending.drain(..excess) {
                             let _ = req
                                 .responder
@@ -313,7 +336,16 @@ fn run_loop(
         let real = pending.len().min(cfg.batch_size);
         let batch: Vec<InferenceRequest> = pending.drain(..real).collect();
         if !batch.is_empty() {
-            dispatch(&mut backend, &model, &cfg, batch, &metrics, &shared, !shutdown);
+            dispatch(
+                &mut backend,
+                &model,
+                &cfg,
+                batch,
+                &metrics,
+                &shared,
+                !shutdown,
+                journal.as_ref(),
+            );
         }
     }
 
@@ -367,6 +399,7 @@ fn dispatch(
     metrics: &Arc<Mutex<CoordinatorMetrics>>,
     shared: &Arc<ServeShared>,
     shedding_allowed: bool,
+    journal: Option<&JournalSink>,
 ) {
     let single = match backend {
         Backend::Fleet { pool, .. } => {
@@ -382,6 +415,7 @@ fn dispatch(
                 model: Arc::clone(model),
                 metrics: Arc::clone(metrics),
                 requests: batch,
+                journal: journal.cloned(),
             };
             let (depth, sheddable) = match shared.policy {
                 AdmissionPolicy::ShedOldest { max_depth } if shedding_allowed => {
@@ -405,6 +439,19 @@ fn dispatch(
             if let Some((queued, victims, max_depth)) = sheddable {
                 let depth_seen = queued + shed;
                 for v in victims {
+                    // Each victim journals into its *own* tenant's sink
+                    // (rides on the job, like its metrics lanes).
+                    if let Some(j) = &v.journal {
+                        j.event(
+                            EventKind::Shed,
+                            Severity::Warn,
+                            format!(
+                                "fleet queue shed {} queued request(s) \
+                                 (depth {depth_seen}, max_depth {max_depth})",
+                                v.len()
+                            ),
+                        );
+                    }
                     v.resolve_err(&ServeError::QueueFull { depth: depth_seen, max_depth });
                 }
             }
@@ -436,11 +483,15 @@ fn dispatch(
         inputs.len()
     };
 
+    let execute_started = Instant::now();
     let report: DataflowReport = match &**model {
         ServedModel::Mlp(mlp) => single.mlp_engine.execute(mlp, &inputs),
         ServedModel::Cnn(cnn) => single.cnn_engine.execute(cnn, &inputs),
         ServedModel::Graph(g) => single.graph_engine.execute(g, &inputs),
     };
+    // Stamp execute wall time into lane 0 so the telemetry sampler sees
+    // the same occupancy signal the fleet devices produce.
+    single.busy.add(0, execute_started.elapsed().as_nanos() as u64);
 
     // Cross-verify on the PJRT path when available (MLP artifacts only —
     // the conv path is covered by the Rust reference model). A numeric
@@ -471,7 +522,7 @@ fn dispatch(
     }
 
     let respond_started = Instant::now();
-    respond_batch(batch, &report, padded_to, verified, metrics);
+    respond_batch(batch, &report, padded_to, verified, metrics, journal);
     if let Some(track) = &single.track {
         track.span_since(SpanKind::Respond, respond_started, None);
     }
@@ -486,9 +537,11 @@ pub(crate) fn respond_batch(
     padded_to: usize,
     verified: bool,
     metrics: &Arc<Mutex<CoordinatorMetrics>>,
+    journal: Option<&JournalSink>,
 ) {
     let per_req_energy = report.energy.total_pj() / padded_to.max(1) as f64;
     let mut dropped = 0u64;
+    let mut lost = 0u64;
     for (i, req) in batch.into_iter().enumerate() {
         let wall = req.submitted.elapsed();
         // A short output vector would be an engine bug; it resolves the
@@ -501,7 +554,10 @@ pub(crate) fn respond_batch(
                 wall,
                 verified,
             }),
-            None => Err(ServeError::DeviceLost),
+            None => {
+                lost += 1;
+                Err(ServeError::DeviceLost)
+            }
         };
         if req.responder.respond(result).is_err() {
             // The client dropped its ticket before the answer arrived —
@@ -511,6 +567,15 @@ pub(crate) fn respond_batch(
     }
     if dropped > 0 {
         util::lock(metrics).responses_dropped += dropped;
+    }
+    if lost > 0 {
+        if let Some(j) = journal {
+            j.event(
+                EventKind::DeviceLost,
+                Severity::Error,
+                format!("short engine output: {lost} ticket(s) resolved DeviceLost"),
+            );
+        }
     }
 }
 

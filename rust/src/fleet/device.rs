@@ -15,7 +15,7 @@ use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
 use crate::exec::BackendKind;
 use crate::graph::GraphEngine;
 use crate::mapper::{NpeGeometry, ScheduleCache};
-use crate::obs::{SpanKind, TrackHandle};
+use crate::obs::{BusyLanes, SpanKind, TrackHandle};
 use crate::util;
 use std::sync::Arc;
 use std::time::Instant;
@@ -85,6 +85,7 @@ pub(crate) fn device_main(
     cache: Arc<ScheduleCache>,
     queue: Arc<FleetQueue>,
     track: Option<TrackHandle>,
+    busy: Arc<BusyLanes>,
 ) {
     let mut engines = DeviceEngines::on(spec.geometry, cache, spec.backend)
         .with_tracer(track.clone());
@@ -96,7 +97,11 @@ pub(crate) fn device_main(
             }
         }
         let inputs: Vec<Vec<i16>> = job.requests.iter().map(|r| r.input.clone()).collect();
+        let execute_started = Instant::now();
         let report = engines.execute(&job.model, &inputs);
+        // Stamp execute wall time into this device's busy lane; the
+        // telemetry sampler turns Δbusy/Δwall into an occupancy gauge.
+        busy.add(idx, execute_started.elapsed().as_nanos() as u64);
         let n = job.requests.len();
 
         // No padding and no PJRT verification on the fleet path. Cache
@@ -107,7 +112,7 @@ pub(crate) fn device_main(
             m.account_batch(idx, &job.requests, &report, n, false);
         }
         let respond_started = Instant::now();
-        respond_batch(job.requests, &report, n, false, &job.metrics);
+        respond_batch(job.requests, &report, n, false, &job.metrics, job.journal.as_ref());
         if let Some(t) = &track {
             t.span_since(SpanKind::Respond, respond_started, None);
         }

@@ -45,7 +45,7 @@ pub use queue::{FleetJob, FleetQueue};
 
 use crate::exec::BackendKind;
 use crate::mapper::{NpeGeometry, ScheduleCache};
-use crate::obs::Tracer;
+use crate::obs::{BusyLanes, Tracer};
 use crate::util;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -85,6 +85,9 @@ pub struct FleetPool {
     /// an empty vec, making shutdown idempotent across co-owners.
     devices: Mutex<Vec<JoinHandle<()>>>,
     specs: Vec<DeviceSpec>,
+    /// One wall busy-ns lane per device — the occupancy signal the
+    /// telemetry sampler reads (Δbusy/Δwall per tick).
+    busy: Arc<BusyLanes>,
 }
 
 impl FleetPool {
@@ -100,22 +103,26 @@ impl FleetPool {
         tracer: Option<Arc<Tracer>>,
     ) -> Arc<Self> {
         let queue = FleetQueue::new();
+        let busy = BusyLanes::new(specs.len());
         let devices = specs
             .iter()
             .enumerate()
             .map(|(idx, &spec)| {
                 let cache = Arc::clone(&cache);
                 let queue = Arc::clone(&queue);
+                let busy = Arc::clone(&busy);
                 let track = tracer.as_ref().map(|t| {
                     t.register_track(&format!(
                         "device {idx} [{}x{}]",
                         spec.geometry.tg_rows, spec.geometry.tg_cols
                     ))
                 });
-                std::thread::spawn(move || device::device_main(idx, spec, cache, queue, track))
+                std::thread::spawn(move || {
+                    device::device_main(idx, spec, cache, queue, track, busy)
+                })
             })
             .collect();
-        Arc::new(Self { queue, devices: Mutex::new(devices), specs: specs.to_vec() })
+        Arc::new(Self { queue, devices: Mutex::new(devices), specs: specs.to_vec(), busy })
     }
 
     /// Hand a batch to the next idle device. Returns the queue depth
@@ -145,6 +152,32 @@ impl FleetPool {
     /// The per-device specs the pool was launched with, in lane order.
     pub fn specs(&self) -> &[DeviceSpec] {
         &self.specs
+    }
+
+    /// The per-device busy-ns lanes (telemetry occupancy source).
+    pub fn busy_lanes(&self) -> &Arc<BusyLanes> {
+        &self.busy
+    }
+
+    /// Jobs currently waiting in the shared queue (live gauge — the
+    /// sampler polls this each tick).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Requests currently waiting across all queued jobs.
+    pub fn queued_requests(&self) -> usize {
+        self.queue.queued_requests()
+    }
+
+    /// Display names per device lane, `device {i} [{R}x{C}]` — the
+    /// sampler's device labels, matching the tracer track names.
+    pub fn device_names(&self) -> Vec<String> {
+        self.specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| format!("device {i} [{}x{}]", s.geometry.tg_rows, s.geometry.tg_cols))
+            .collect()
     }
 
     /// Close the queue and join every device after the drain: all work
@@ -192,6 +225,7 @@ mod tests {
             model: Arc::clone(model),
             metrics: Arc::clone(metrics),
             requests,
+            journal: None,
         }
     }
 
@@ -228,6 +262,12 @@ mod tests {
         // Shut down immediately: the drain must still answer everything.
         assert_eq!(pool.shutdown(), 0, "no device died");
         assert_eq!(pool.shutdown(), 0, "shutdown is idempotent");
+        assert_eq!(pool.busy_lanes().len(), 2);
+        assert!(
+            pool.busy_lanes().totals().iter().sum::<u64>() > 0,
+            "devices stamped wall busy time while executing"
+        );
+        assert_eq!(pool.queue_depth(), 0, "drained");
         for (t, want) in tickets.into_iter().zip(expect) {
             let got = t.wait_timeout(Duration::from_secs(10)).unwrap();
             assert_eq!(got.output, want, "pool output == reference, across geometries");

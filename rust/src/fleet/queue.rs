@@ -18,6 +18,7 @@
 //! by resolving the *oldest* queued jobs with `QueueFull`.
 
 use crate::coordinator::{CoordinatorMetrics, InferenceRequest, ServedModel};
+use crate::obs::JournalSink;
 use crate::serve::ServeError;
 use crate::util;
 use std::collections::VecDeque;
@@ -35,6 +36,10 @@ pub struct FleetJob {
     /// batch here, at its own lane index.
     pub(crate) metrics: Arc<Mutex<CoordinatorMetrics>>,
     pub(crate) requests: Vec<InferenceRequest>,
+    /// The owning tenant's event-journal sink, when journaling is on —
+    /// rides with the job (like metrics) so shed victims and device
+    /// losses land in the *owning* tenant's journal lane.
+    pub(crate) journal: Option<JournalSink>,
 }
 
 impl FleetJob {
@@ -174,6 +179,7 @@ mod tests {
             model: Arc::new(ServedModel::Mlp(mlp)),
             metrics: Arc::new(Mutex::new(CoordinatorMetrics::default())),
             requests,
+            journal: None,
         }
     }
 

@@ -9,6 +9,8 @@
 #![deny(deprecated)]
 
 use anyhow::{anyhow, Context, Result};
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 use tcd_npe::bench;
@@ -24,9 +26,11 @@ use tcd_npe::model::{
     benchmark_by_name, benchmarks, cnn_benchmark_by_name, graph_benchmark_by_name,
     graph_benchmarks, MlpTopology, QuantizedMlp,
 };
-use tcd_npe::obs::{chrome_trace_json, Tracer};
+use tcd_npe::obs::{chrome_trace_json, SamplerConfig, SloConfig, Tracer};
 use tcd_npe::runtime::{ArtifactManifest, PjrtRuntime};
-use tcd_npe::serve::{AdmissionPolicy, NpeService, ServeError};
+use tcd_npe::serve::{
+    AdmissionPolicy, NpeService, ServeError, ServiceClient, DEFAULT_JOURNAL_CAPACITY,
+};
 use tcd_npe::util::TextTable;
 
 const USAGE: &str = "\
@@ -62,8 +66,14 @@ System:
                              through one ModelRegistry over one shared pool,
                              per-tenant metrics + labeled Prometheus exposition
   obs [--devices N] [--requests N] [--rate RPS] [--trace-out F] [--metrics-out F]
-                             traced DAG-zoo fleet run: Chrome trace (Perfetto-loadable)
-                             + Prometheus text + per-layer metrics JSON
+      [--timeline-out F]     traced+sampled DAG-zoo fleet run: Chrome trace
+                             (Perfetto-loadable) + Prometheus text + per-layer
+                             metrics JSON + telemetry timeline JSON
+  watch [--requests N] [--rate RPS] [--frames N] [--once]
+                             live dashboard over a 3-tenant registry: fleet
+                             occupancy + per-tenant in-flight/p99/SLO burn +
+                             journal tail, repainted in place; --once prints
+                             one frame after the load (non-TTY/CI friendly)
   verify [artifact-dir]      cross-check NPE simulator vs PJRT artifacts
   ablate <which>             ablations: geometry | batch | voltage | mac | all
 
@@ -209,7 +219,24 @@ fn main() -> Result<()> {
                 .unwrap_or(20_000.0);
             let trace_out = flag_value(&args, "--trace-out").unwrap_or("trace.json");
             let metrics_out = flag_value(&args, "--metrics-out").unwrap_or("metrics.json");
-            cmd_obs(devices, requests, rate, trace_out, metrics_out)?;
+            let timeline_out = flag_value(&args, "--timeline-out").unwrap_or("timeline.json");
+            cmd_obs(devices, requests, rate, trace_out, metrics_out, timeline_out)?;
+        }
+        "watch" => {
+            let requests = flag_value(&args, "--requests")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(64);
+            let rate = flag_value(&args, "--rate")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(2_000.0);
+            let frames = flag_value(&args, "--frames")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(40);
+            let once = args.iter().any(|a| a == "--once");
+            cmd_watch(requests, rate, frames, once)?;
         }
         "verify" => {
             let dir = args.get(1).map(String::as_str).unwrap_or("artifacts");
@@ -446,18 +473,21 @@ fn cmd_fleet(
     Ok(())
 }
 
-/// The observability demo: serve every DAG-zoo benchmark on a traced
-/// fleet, all recording into one shared tracer, then export the merged
-/// Chrome trace plus per-model Prometheus/JSON metrics snapshots.
+/// The observability demo: serve every DAG-zoo benchmark on a traced,
+/// telemetry-sampled fleet, all recording into one shared tracer, then
+/// export the merged Chrome trace plus per-model Prometheus/JSON metrics
+/// snapshots and the per-model telemetry timelines.
 fn cmd_obs(
     devices: usize,
     requests: usize,
     rate: f64,
     trace_out: &str,
     metrics_out: &str,
+    timeline_out: &str,
 ) -> Result<()> {
     let tracer = Tracer::shared();
     let mut entries = Vec::new();
+    let mut timelines = Vec::new();
     let mut last = None;
     for b in graph_benchmarks() {
         let model = ServedModel::Graph(QuantizedGraph::synthesize(b.graph.clone(), 0xF1EE7));
@@ -467,9 +497,18 @@ fn cmd_obs(
             .devices(vec![DeviceSpec::new(NpeGeometry::PAPER, BackendKind::Fast); devices])
             .batcher(BatcherConfig::new(8, Duration::from_micros(500)))
             .tracer(Arc::clone(&tracer))
+            .telemetry(SamplerConfig::default().with_period(Duration::from_millis(10)))
             .build()?;
         let responses = run_open_loop(&service, &arrivals, Duration::from_secs(60));
         let answered = responses.iter().filter(|o| o.is_some()).count();
+        // One explicit tick before snapshotting: a run shorter than the
+        // sampler period would otherwise export an empty timeline.
+        if let Some(s) = service.sampler() {
+            s.tick();
+        }
+        if let Some(tj) = service.timeline_json() {
+            timelines.push(format!("  {:?}: {}", b.network, tj.trim_end()));
+        }
         let snap = service.metrics_snapshot();
         let ps = snap.metrics.latency_percentiles_us(&[50.0, 95.0, 99.0]);
         println!(
@@ -491,8 +530,162 @@ fn cmd_obs(
     }
     std::fs::write(trace_out, chrome_trace_json(&tracer.snapshot()))?;
     std::fs::write(metrics_out, format!("{{\n{}\n}}\n", entries.join(",\n")))?;
-    println!("wrote {trace_out} (load in Perfetto / chrome://tracing) and {metrics_out}");
+    std::fs::write(timeline_out, format!("{{\n{}\n}}\n", timelines.join(",\n")))?;
+    println!(
+        "wrote {trace_out} (load in Perfetto / chrome://tracing), {metrics_out} \
+         and {timeline_out}"
+    );
     Ok(())
+}
+
+/// The live dashboard: three tenants (MLP + CNN + DAG) on a shared
+/// four-device pool with SLO tracking, journaling and telemetry all on.
+/// A background thread offers the seeded load while the foreground
+/// repaints one frame per interval — fleet gauges, a per-tenant table,
+/// the journal tail. `--once` instead waits for the load to finish and
+/// prints a single frame (non-TTY/CI friendly).
+fn cmd_watch(requests: usize, rate: f64, frames: usize, once: bool) -> Result<()> {
+    let iris = benchmark_by_name("Iris").expect("Iris is in Table IV");
+    let lenet = cnn_benchmark_by_name("LeNet-5").expect("LeNet-5 is in the CNN zoo");
+    let resmlp = graph_benchmark_by_name("ResMLP").expect("ResMLP is in the DAG zoo");
+    let mlp = QuantizedMlp::synthesize(iris.topology.clone(), 0xF1EE7);
+    let cnn = QuantizedCnn::synthesize(lenet.topology.clone(), 0xF1EE7);
+    let graph = QuantizedGraph::synthesize(resmlp.graph.clone(), 0xF1EE7);
+    let inputs = vec![
+        ("iris", mlp.synth_inputs(requests, 0xDA7A)),
+        ("lenet", cnn.synth_inputs(requests, 0xDA7A)),
+        ("resmlp", graph.synth_inputs(requests, 0xDA7A)),
+    ];
+    let registry = tcd_npe::ModelRegistry::builder()
+        .devices(vec![NpeGeometry::PAPER; 4])
+        .batcher(BatcherConfig::new(8, Duration::from_micros(500)))
+        .slo(SloConfig::new(50_000, 0.99))
+        .journaling(DEFAULT_JOURNAL_CAPACITY)
+        .telemetry(SamplerConfig::default().with_period(Duration::from_millis(25)))
+        .register("iris", mlp)
+        .register("lenet", cnn)
+        .register_with("resmlp", graph, AdmissionPolicy::Reject { max_depth: 64 })
+        .build()?;
+    let clients = inputs
+        .iter()
+        .map(|(tenant, ins)| Ok((registry.service(tenant)?.client(), ins.clone())))
+        .collect::<Result<Vec<(ServiceClient, Vec<Vec<i16>>)>, ServeError>>()?;
+    let done = Arc::new(AtomicBool::new(false));
+    let loader = {
+        let done = Arc::clone(&done);
+        let gap = Duration::from_secs_f64(1.0 / rate.max(1.0));
+        std::thread::spawn(move || {
+            let mut tickets = Vec::new();
+            for i in 0..requests {
+                for (client, ins) in &clients {
+                    // A Reject-policy refusal is the demo working, not a
+                    // failure: it shows up in the shed counters and as an
+                    // admission_reject journal line.
+                    if let Ok(t) = client.submit(ins[i].clone()) {
+                        tickets.push(t);
+                    }
+                    std::thread::sleep(gap);
+                }
+            }
+            for t in tickets {
+                let _ = t.wait_timeout(Duration::from_secs(60));
+            }
+            done.store(true, Ordering::Relaxed);
+        })
+    };
+    if once {
+        let _ = loader.join();
+        if let Some(s) = registry.sampler() {
+            s.tick();
+        }
+        print!("{}", render_watch_frame(&registry, requests)?);
+    } else {
+        for _ in 0..frames.max(1) {
+            // ANSI clear + home: repaint the whole frame in place.
+            print!("\x1b[2J\x1b[H{}", render_watch_frame(&registry, requests)?);
+            std::io::stdout().flush()?;
+            if done.load(Ordering::Relaxed) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(250));
+        }
+        let _ = loader.join();
+        print!("\x1b[2J\x1b[H{}", render_watch_frame(&registry, requests)?);
+    }
+    registry.shutdown()?;
+    Ok(())
+}
+
+/// One dashboard frame: fleet-wide telemetry gauges, the per-tenant
+/// serving table, and the newest journal lines.
+fn render_watch_frame(registry: &tcd_npe::ModelRegistry, requests: usize) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "tcd-npe watch — tenants [{}] on a {}-device 16x8 pool\n",
+        registry.tenants().join(", "),
+        registry.pool_size()
+    ));
+    if let Some(tl) = registry.timeline() {
+        match tl.latest() {
+            Some(s) => {
+                out.push_str(&format!(
+                    "fleet: queue {} | in-flight {} | {:.0} answered/s | {:.0} shed/s\n",
+                    s.queue_depth,
+                    s.in_flight,
+                    tl.throughput_rps(16),
+                    tl.shed_rate_rps(16),
+                ));
+                let busy: Vec<String> = tl
+                    .device_names
+                    .iter()
+                    .zip(&s.occupancy)
+                    .map(|(name, o)| format!("{name} {:.0}%", o * 100.0))
+                    .collect();
+                out.push_str(&format!("busy:  {}\n", busy.join(" | ")));
+            }
+            None => out.push_str("fleet: (no telemetry tick yet)\n"),
+        }
+    }
+    let mut table = TextTable::new(vec![
+        "Tenant", "Answered", "In-flight", "Shed", "p50 (us)", "p99 (us)", "SLO", "Burn",
+    ]);
+    for tenant in registry.tenants() {
+        let m = registry.metrics(tenant)?;
+        let (slo_col, burn_col) = match registry.slo_status(tenant)? {
+            Some(s) => (
+                format!("{:.1}% good", s.compliance * 100.0),
+                if s.burn_rate.is_infinite() {
+                    "inf".to_string()
+                } else {
+                    format!("{:.2}", s.burn_rate)
+                },
+            ),
+            None => ("-".to_string(), "-".to_string()),
+        };
+        table.row(vec![
+            tenant.to_string(),
+            format!("{}/{requests}", m.latencies_recorded),
+            registry.in_flight(tenant)?.to_string(),
+            (m.shed_requests + m.rejected_requests).to_string(),
+            format!("{:.0}", m.p50_us()),
+            format!("{:.0}", m.p99_us()),
+            slo_col,
+            burn_col,
+        ]);
+    }
+    out.push_str(&table.render());
+    out.push('\n');
+    if let Some(j) = registry.journal() {
+        out.push_str(&format!("journal ({} events, {} dropped):\n", j.len(), j.dropped()));
+        let tail = j.tail(6);
+        if tail.is_empty() {
+            out.push_str("  (quiet)\n");
+        }
+        for e in tail {
+            out.push_str(&format!("  {}\n", e.render()));
+        }
+    }
+    Ok(out)
 }
 
 /// The multi-tenant demo: an MLP, a CNN and a DAG model registered under

@@ -30,6 +30,7 @@
 
 use super::profile::BatchProfile;
 use super::span::{BatchTrace, TraceLog};
+use super::timeline::TimelineSnapshot;
 use crate::util::json::escape;
 use std::fmt::Write as _;
 
@@ -41,6 +42,17 @@ pub const SIM_PID: u32 = 1;
 /// Render a snapshot as a Chrome trace (JSON object form with a
 /// `traceEvents` array — load it at <https://ui.perfetto.dev>).
 pub fn chrome_trace_json(log: &TraceLog) -> String {
+    chrome_trace_json_with(log, None)
+}
+
+/// Like [`chrome_trace_json`], plus counter tracks (`ph:"C"`) from a
+/// telemetry timeline: `npe load` (queue depth + in-flight) and
+/// `npe occupancy` (one series per device), on the wall pid so Perfetto
+/// draws queue pressure directly above the request-pipeline spans. The
+/// sampler must share the tracer's epoch
+/// ([`TelemetrySampler::with_epoch`](super::timeline::TelemetrySampler::with_epoch))
+/// for the timestamps to line up.
+pub fn chrome_trace_json_with(log: &TraceLog, timeline: Option<&TimelineSnapshot>) -> String {
     let mut events: Vec<String> = Vec::new();
 
     // Metadata: process and thread names for both pids.
@@ -88,6 +100,31 @@ pub fn chrome_trace_json(log: &TraceLog) -> String {
         emit_batch(&mut events, b, cursor_cycles[t], cursor_ns[t]);
         cursor_cycles[t] += b.cycles;
         cursor_ns[t] += b.time_ns;
+    }
+
+    // Counter tracks: one "npe load" counter (queue depth + in-flight)
+    // and one "npe occupancy" counter (a series per device), sampled by
+    // the telemetry timeline.
+    if let Some(tl) = timeline {
+        for s in &tl.samples {
+            let ts = us(s.wall_ns as f64);
+            events.push(format!(
+                r#"{{"ph":"C","pid":{WALL_PID},"tid":0,"name":"npe load","ts":{ts},"args":{{"queue_depth":{},"in_flight":{}}}}}"#,
+                s.queue_depth, s.in_flight,
+            ));
+            if !s.occupancy.is_empty() {
+                let series = s
+                    .occupancy
+                    .iter()
+                    .enumerate()
+                    .map(|(i, o)| format!(r#""device {i}":{o:.4}"#))
+                    .collect::<Vec<_>>()
+                    .join(",");
+                events.push(format!(
+                    r#"{{"ph":"C","pid":{WALL_PID},"tid":0,"name":"npe occupancy","ts":{ts},"args":{{{series}}}}}"#,
+                ));
+            }
+        }
     }
 
     let mut out = String::from("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[\n");
@@ -320,5 +357,44 @@ mod tests {
             .map(|e| e.get("args").unwrap().get("start_cycle").unwrap().as_u64().unwrap())
             .collect();
         assert_eq!(starts, vec![0, 20], "second batch starts where the first ended");
+    }
+
+    #[test]
+    fn timeline_becomes_counter_events() {
+        use crate::obs::timeline::{TelemetrySample, TimelineSnapshot};
+        let tl = TimelineSnapshot {
+            device_names: vec!["device 0".into(), "device 1".into()],
+            samples: vec![TelemetrySample {
+                tick: 0,
+                wall_ns: 2_000,
+                queue_depth: 3,
+                in_flight: 5,
+                answered_total: 9,
+                shed_total: 0,
+                occupancy: vec![0.5, 0.0],
+            }],
+            dropped: 0,
+            period_ns: 50_000_000,
+        };
+        let json = chrome_trace_json_with(&sample_log(), Some(&tl));
+        let v = JsonValue::parse(&json).expect("valid JSON with counters");
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let counters: Vec<_> =
+            events.iter().filter(|e| e.get("ph").unwrap().as_str() == Some("C")).collect();
+        assert_eq!(counters.len(), 2, "one load + one occupancy counter per sample");
+        let load = counters
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("npe load"))
+            .expect("load counter");
+        assert_eq!(load.get("args").unwrap().get("queue_depth").unwrap().as_u64(), Some(3));
+        assert_eq!(load.get("args").unwrap().get("in_flight").unwrap().as_u64(), Some(5));
+        let occ = counters
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("npe occupancy"))
+            .expect("occupancy counter");
+        assert_eq!(occ.get("args").unwrap().get("device 0").unwrap().as_f64(), Some(0.5));
+        // Plain export is unchanged: no counter events.
+        let plain = chrome_trace_json(&sample_log());
+        assert!(!plain.contains(r#""ph":"C""#));
     }
 }

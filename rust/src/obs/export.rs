@@ -7,7 +7,9 @@
 //! [`NpeService::metrics_snapshot`](crate::serve::NpeService::metrics_snapshot)
 //! and the CLI `obs` subcommand.
 
+use super::slo::SloStatus;
 use super::span::TraceLog;
+use super::timeline::TimelineSnapshot;
 use crate::coordinator::CoordinatorMetrics;
 use crate::util::json::escape;
 use std::collections::BTreeMap;
@@ -53,6 +55,14 @@ pub struct MetricsSnapshot {
     /// exposition then carries `tenant="<name>"` on every sample and the
     /// JSON object a `tenant` field. `None` for a standalone service.
     pub tenant: Option<String>,
+    /// SLO evaluation against this snapshot's latency histogram, when
+    /// the service was built with an SLO
+    /// ([`ServeBuilder::slo`](crate::serve::ServeBuilder::slo)).
+    pub slo: Option<SloStatus>,
+    /// Live-telemetry timeline, when the service was built with a
+    /// sampler — its latest-sample gauges ride along in the Prometheus
+    /// exposition.
+    pub timeline: Option<TimelineSnapshot>,
 }
 
 /// Aggregate per-layer attribution out of a trace snapshot.
@@ -95,6 +105,8 @@ impl MetricsSnapshot {
             dropped_events: log.map(|l| l.dropped_events).unwrap_or(0),
             metrics,
             tenant: None,
+            slo: None,
+            timeline: None,
         }
     }
 
@@ -102,6 +114,19 @@ impl MetricsSnapshot {
     /// registry applies it when snapshotting per tenant).
     pub fn with_tenant(mut self, tenant: impl Into<String>) -> Self {
         self.tenant = Some(tenant.into());
+        self
+    }
+
+    /// Attach an SLO evaluation (builder form — the service applies it
+    /// when it has an [`SloTracker`](crate::obs::SloTracker)).
+    pub fn with_slo(mut self, slo: SloStatus) -> Self {
+        self.slo = Some(slo);
+        self
+    }
+
+    /// Attach a telemetry timeline (builder form).
+    pub fn with_timeline(mut self, timeline: TimelineSnapshot) -> Self {
+        self.timeline = Some(timeline);
         self
     }
 
@@ -135,10 +160,14 @@ impl MetricsSnapshot {
         let _ = writeln!(out, "# TYPE npe_queue_peak gauge");
         let _ = writeln!(out, "npe_queue_peak {}", m.queue_peak);
 
-        // Wall latency as a classic histogram, in µs.
+        // Wall latency as a classic histogram, in µs. The bucket ladder
+        // is the histogram's *stable* power-of-two set: every scrape
+        // emits the same `le` edges regardless of the data, so PromQL
+        // `histogram_quantile` rate windows never see the bucket set
+        // shift under them (the non-empty-only exposition used to).
         let _ = writeln!(out, "# HELP npe_latency_us Wall latency submit to response, us.");
         let _ = writeln!(out, "# TYPE npe_latency_us histogram");
-        for (upper_ns, cum) in m.latencies.cumulative_buckets() {
+        for (upper_ns, cum) in m.latencies.stable_cumulative_buckets() {
             let _ = writeln!(
                 out,
                 "npe_latency_us_bucket{{le=\"{}\"}} {cum}",
@@ -177,6 +206,38 @@ impl MetricsSnapshot {
                 let _ = writeln!(out, "{name}{{layer=\"{}\"}} {}", l.index, num(get(l)));
             }
         }
+
+        // SLO surfaces (absent unless the service has an objective).
+        if let Some(slo) = &self.slo {
+            let _ = writeln!(out, "# HELP npe_slo_objective_us Latency objective, us.");
+            let _ = writeln!(out, "# TYPE npe_slo_objective_us gauge");
+            let _ = writeln!(out, "npe_slo_objective_us {}", slo.objective_us);
+            let _ = writeln!(out, "# HELP npe_slo_target Required good fraction.");
+            let _ = writeln!(out, "# TYPE npe_slo_target gauge");
+            let _ = writeln!(out, "npe_slo_target {}", slo.target);
+            let _ = writeln!(out, "# HELP npe_slo_good_total Requests inside the objective.");
+            let _ = writeln!(out, "# TYPE npe_slo_good_total counter");
+            let _ = writeln!(out, "npe_slo_good_total {}", slo.good);
+            let _ = writeln!(out, "# HELP npe_slo_bad_total Requests outside the objective.");
+            let _ = writeln!(out, "# TYPE npe_slo_bad_total counter");
+            let _ = writeln!(out, "npe_slo_bad_total {}", slo.bad);
+            let _ = writeln!(out, "# HELP npe_slo_compliance Observed good fraction.");
+            let _ = writeln!(out, "# TYPE npe_slo_compliance gauge");
+            let _ = writeln!(out, "npe_slo_compliance {:.6}", slo.compliance);
+            let _ = writeln!(out, "# HELP npe_slo_burn_rate Error-budget burn rate.");
+            let _ = writeln!(out, "# TYPE npe_slo_burn_rate gauge");
+            if slo.burn_rate.is_finite() {
+                let _ = writeln!(out, "npe_slo_burn_rate {:.6}", slo.burn_rate);
+            } else {
+                let _ = writeln!(out, "npe_slo_burn_rate +Inf");
+            }
+        }
+
+        // Live-telemetry gauges from the latest sampler tick.
+        if let Some(tl) = &self.timeline {
+            out.push_str(&tl.prometheus_gauges());
+        }
+
         match &self.tenant {
             None => out,
             Some(tenant) => inject_tenant_label(&out, tenant),
@@ -230,8 +291,27 @@ impl MetricsSnapshot {
             Some(t) => format!("\"{}\"", escape(t)),
             None => "null".to_string(),
         };
+        // JSON has no Infinity literal: a non-finite burn rate (perfect
+        // target, any miss) serializes as null.
+        let slo = match &self.slo {
+            Some(s) => format!(
+                "{{\"objective_us\":{},\"target\":{},\"good\":{},\"bad\":{},\
+                 \"compliance\":{:.6},\"burn_rate\":{}}}",
+                s.objective_us,
+                s.target,
+                s.good,
+                s.bad,
+                s.compliance,
+                if s.burn_rate.is_finite() {
+                    format!("{:.6}", s.burn_rate)
+                } else {
+                    "null".to_string()
+                },
+            ),
+            None => "null".to_string(),
+        };
         format!(
-            "{{\"tenant\":{tenant},\
+            "{{\"tenant\":{tenant},\"slo\":{slo},\
              \"requests\":{},\"rejected_requests\":{},\"shed_requests\":{},\
              \"responses_dropped\":{},\"batches\":{},\"padded_slots\":{},\
              \"verified_batches\":{},\"verify_mismatches\":{},\
@@ -261,6 +341,93 @@ impl MetricsSnapshot {
             self.dropped_events,
         )
     }
+}
+
+/// Merge several Prometheus expositions (e.g. one per tenant) into one
+/// document with exactly one `# HELP`/`# TYPE` header per metric
+/// family: samples are regrouped under the family's first-seen header,
+/// in first-appearance order. Naive concatenation repeats headers per
+/// tenant, which the exposition format forbids ("Only one TYPE line may
+/// exist for a given metric name").
+///
+/// Histogram child samples (`_bucket`/`_sum`/`_count`) fold into their
+/// parent family when that family was declared by a `# TYPE` line
+/// earlier in the same input — which every exposition this repo writes
+/// does.
+pub fn merge_expositions<'a>(texts: impl IntoIterator<Item = &'a str>) -> String {
+    #[derive(Default)]
+    struct Family {
+        help: Option<String>,
+        kind: Option<String>,
+        samples: Vec<String>,
+    }
+    let mut order: Vec<String> = Vec::new();
+    let mut families: BTreeMap<String, Family> = BTreeMap::new();
+    let mut family_entry = |order: &mut Vec<String>,
+                            families: &mut BTreeMap<String, Family>,
+                            name: &str|
+     -> String {
+        if !families.contains_key(name) {
+            order.push(name.to_string());
+            families.insert(name.to_string(), Family::default());
+        }
+        name.to_string()
+    };
+    for text in texts {
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let name = rest.split(' ').next().unwrap_or(rest);
+                let key = family_entry(&mut order, &mut families, name);
+                if let Some(f) = families.get_mut(&key) {
+                    f.help.get_or_insert_with(|| line.to_string());
+                }
+            } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let name = rest.split(' ').next().unwrap_or(rest);
+                let key = family_entry(&mut order, &mut families, name);
+                if let Some(f) = families.get_mut(&key) {
+                    f.kind.get_or_insert_with(|| line.to_string());
+                }
+            } else if line.starts_with('#') {
+                // Free-form comments don't survive a merge: they have
+                // no family to travel with.
+            } else {
+                let raw = line
+                    .find(|c| c == '{' || c == ' ')
+                    .map_or(line, |cut| &line[..cut]);
+                let name = ["_bucket", "_sum", "_count"]
+                    .iter()
+                    .find_map(|suf| {
+                        raw.strip_suffix(suf).filter(|base| families.contains_key(*base))
+                    })
+                    .unwrap_or(raw);
+                let key = family_entry(&mut order, &mut families, name);
+                if let Some(f) = families.get_mut(&key) {
+                    f.samples.push(line.to_string());
+                }
+            }
+        }
+    }
+    let mut out = String::new();
+    for name in &order {
+        if let Some(f) = families.get(name) {
+            if let Some(h) = &f.help {
+                out.push_str(h);
+                out.push('\n');
+            }
+            if let Some(k) = &f.kind {
+                out.push_str(k);
+                out.push('\n');
+            }
+            for s in &f.samples {
+                out.push_str(s);
+                out.push('\n');
+            }
+        }
+    }
+    out
 }
 
 /// Inject `tenant="<name>"` into every sample line of a Prometheus
@@ -402,6 +569,148 @@ mod tests {
         assert!(text.contains("npe_layer_rolls_total{tenant=\"mnist\",layer=\"0\"}"));
         // Headers stay untouched (one HELP/TYPE pair per metric).
         assert!(text.contains("# TYPE npe_requests_total counter"));
+    }
+
+    /// A sample line is well-formed when it is `name value` or
+    /// `name{k="v",...} value` with exactly one balanced label set.
+    fn assert_well_formed_sample(line: &str) {
+        let opens = line.matches('{').count();
+        let closes = line.matches('}').count();
+        assert!(opens == closes && opens <= 1, "malformed label set: {line}");
+        let (head, value) = line.rsplit_once(' ').expect("name and value");
+        assert!(value.parse::<f64>().is_ok(), "bad sample value in: {line}");
+        if let Some((name, labels)) = head.split_once('{') {
+            assert!(!name.is_empty() && !name.contains(' '), "bad name in: {line}");
+            let labels = labels.strip_suffix('}').expect("closed label set");
+            for pair in labels.split(',') {
+                let (k, v) = pair.split_once('=').expect("k=v label");
+                assert!(!k.is_empty() && !k.contains('"'), "bad label key in: {line}");
+                assert!(
+                    v.len() >= 2 && v.starts_with('"') && v.ends_with('"'),
+                    "unquoted label value in: {line}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tenant_label_merges_into_already_labeled_samples() {
+        // Histogram le= lines AND device= lanes both already carry
+        // labels; the tenant must merge in as a first label, leaving
+        // exactly one well-formed label set per line.
+        let mut m = CoordinatorMetrics { requests: 5, ..Default::default() };
+        m.record_latency(1_000);
+        m.record_latency(50_000);
+        m.devices.push(crate::coordinator::DeviceMetrics {
+            geometry: "16x8".into(),
+            batches: 2,
+            requests: 5,
+            sim_busy_ns: 100.0,
+        });
+        let snap = MetricsSnapshot::new(m, Some(&traced_log())).with_tenant("iris");
+        let text = snap.prometheus_text();
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            assert!(line.contains("tenant=\"iris\""), "unlabeled sample: {line}");
+            assert_well_formed_sample(line);
+        }
+        assert!(text.contains(
+            "npe_device_requests_total{tenant=\"iris\",device=\"0\",geometry=\"16x8\"} 5"
+        ));
+        assert!(text.contains("npe_latency_us_bucket{tenant=\"iris\",le=\"+Inf\"} 2"));
+        // Tenant lands first even on the stable-ladder bucket lines.
+        for line in text.lines().filter(|l| l.starts_with("npe_latency_us_bucket")) {
+            assert!(line.starts_with("npe_latency_us_bucket{tenant=\"iris\","), "{line}");
+        }
+    }
+
+    #[test]
+    fn bucket_ladder_is_identical_across_different_data() {
+        let le_set = |m: CoordinatorMetrics| -> Vec<String> {
+            MetricsSnapshot::new(m, None)
+                .prometheus_text()
+                .lines()
+                .filter(|l| l.starts_with("npe_latency_us_bucket{"))
+                .map(|l| l.split('"').nth(1).unwrap_or("").to_string())
+                .collect()
+        };
+        let empty = le_set(CoordinatorMetrics::default());
+        let mut a = CoordinatorMetrics::default();
+        a.record_latency(30);
+        let mut b = CoordinatorMetrics::default();
+        for v in [1_000u64, 77_777, 1 << 33] {
+            b.record_latency(v);
+        }
+        // Satellite fix: the le set used to be "non-empty buckets only",
+        // so it changed between scrapes as new buckets filled.
+        assert_eq!(le_set(a), empty);
+        assert_eq!(le_set(b), empty);
+        assert_eq!(empty.len(), 65, "64 power-of-two edges + +Inf");
+    }
+
+    #[test]
+    fn merge_expositions_keeps_one_type_header_per_family() {
+        let mk = |tenant: &str, requests: u64| {
+            let mut m = CoordinatorMetrics { requests, ..Default::default() };
+            m.record_latency(1_000);
+            MetricsSnapshot::new(m, Some(&traced_log())).with_tenant(tenant).prometheus_text()
+        };
+        let merged = merge_expositions([mk("iris", 5).as_str(), mk("lenet", 7).as_str()]);
+        // Exactly one # TYPE (and one # HELP) line per metric family.
+        let mut seen = std::collections::BTreeMap::new();
+        for line in merged.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let fam = rest.split(' ').next().unwrap_or("");
+                *seen.entry(fam.to_string()).or_insert(0u32) += 1;
+            }
+        }
+        assert!(!seen.is_empty());
+        for (fam, n) in &seen {
+            assert_eq!(*n, 1, "family {fam} declared {n} times");
+        }
+        // Both tenants' samples survive, grouped after their header.
+        assert!(merged.contains("npe_requests_total{tenant=\"iris\"} 5"));
+        assert!(merged.contains("npe_requests_total{tenant=\"lenet\"} 7"));
+        // Histogram children fold under the parent family: the
+        // histogram TYPE appears once, and every bucket line of both
+        // tenants sits below it before the next # TYPE.
+        let hist_at = merged.find("# TYPE npe_latency_us histogram").expect("histogram header");
+        let after = &merged[hist_at..];
+        let section_end = after[1..].find("# TYPE").map(|i| i + 1).unwrap_or(after.len());
+        let section = &after[..section_end];
+        assert!(section.contains("tenant=\"iris\",le=\"+Inf\""));
+        assert!(section.contains("tenant=\"lenet\",le=\"+Inf\""));
+        // Every sample line stays well-formed after the merge.
+        for line in merged.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            assert_well_formed_sample(line);
+        }
+    }
+
+    #[test]
+    fn slo_and_timeline_surface_in_prometheus() {
+        use crate::obs::slo::{SloConfig, SloTracker};
+        let mut m = CoordinatorMetrics::default();
+        for _ in 0..9 {
+            m.record_latency(10_000);
+        }
+        m.record_latency(1_024_000);
+        let slo = SloTracker::new(SloConfig::new(16, 0.95)).evaluate(&m.latencies);
+        let snap = MetricsSnapshot::new(m, None).with_slo(slo);
+        let text = snap.prometheus_text();
+        assert!(text.contains("npe_slo_objective_us 16"));
+        assert!(text.contains("npe_slo_good_total 9"));
+        assert!(text.contains("npe_slo_bad_total 1"));
+        assert!(text.contains("npe_slo_compliance 0.9"));
+        assert!(text.contains("# TYPE npe_slo_burn_rate gauge"));
+        let v = JsonValue::parse(&snap.to_json()).expect("valid JSON with slo");
+        assert_eq!(v.get("slo").unwrap().get("good").unwrap().as_u64(), Some(9));
+        // Infinite burn serializes as +Inf (Prometheus) / null (JSON).
+        let mut m = CoordinatorMetrics::default();
+        m.record_latency(1_024_000);
+        let slo = SloTracker::new(SloConfig::new(16, 1.0)).evaluate(&m.latencies);
+        let snap = MetricsSnapshot::new(m, None).with_slo(slo);
+        assert!(snap.prometheus_text().contains("npe_slo_burn_rate +Inf"));
+        let v = JsonValue::parse(&snap.to_json()).expect("valid JSON");
+        assert!(v.get("slo").unwrap().get("burn_rate").unwrap().as_f64().is_none());
     }
 
     #[test]

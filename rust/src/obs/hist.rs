@@ -116,9 +116,32 @@ impl LogHistogram {
         self.max
     }
 
-    /// Smallest sample seen (exact).
-    pub fn min(&self) -> u64 {
-        self.min
+    /// Smallest sample seen (exact); `None` when nothing has been
+    /// recorded — the internal `0` sentinel would otherwise read as a
+    /// real observed sample.
+    pub fn min(&self) -> Option<u64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.min)
+        }
+    }
+
+    /// Number of recorded samples ≤ `v`, computed as the cumulative
+    /// count through the bucket containing `v` (clamped by the exact
+    /// extrema). Exact whenever `v` is the top value of its bucket —
+    /// always true below [`LINEAR_MAX`] and at sub-bucket-aligned edges
+    /// (e.g. any multiple of `2^(k-5)` within the `[2^k, 2^(k+1))`
+    /// range); otherwise it over-counts by at most the one partial
+    /// bucket, i.e. stays within the histogram's ~3 % bucket error.
+    pub fn count_le(&self, v: u64) -> u64 {
+        if self.count == 0 || v < self.min {
+            return 0;
+        }
+        if v >= self.max {
+            return self.count;
+        }
+        self.counts.iter().take(bucket_of(v) + 1).sum()
     }
 
     /// Nearest-rank quantile, `p` in [0, 100]: the representative
@@ -151,6 +174,32 @@ impl LogHistogram {
                 cum += c;
                 out.push((bucket_upper(idx), cum));
             }
+        }
+        out
+    }
+
+    /// Fixed power-of-two bucket ladder as `(le_edge, cumulative_count)`
+    /// pairs — every scrape emits the *same* 64 edges (`2^0 ..= 2^63`),
+    /// so PromQL `histogram_quantile` sees a stable `le` set over time
+    /// (the non-empty-only shape of
+    /// [`cumulative_buckets`](Self::cumulative_buckets) changes between
+    /// scrapes as new buckets fill, which breaks rate windows). Each
+    /// edge's count covers the samples strictly below it, matching the
+    /// exclusive-upper-bound convention of the underlying buckets;
+    /// power-of-two edges are always bucket boundaries, so the counts
+    /// are exact. Samples at or above `2^63` appear only in the `+Inf`
+    /// total the exposition layer adds.
+    pub fn stable_cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::with_capacity(64);
+        let mut cum = 0u64;
+        let mut idx = 0usize;
+        for k in 0..64u32 {
+            let edge = 1u64 << k;
+            while idx < self.counts.len() && bucket_upper(idx) <= edge {
+                cum += self.counts[idx];
+                idx += 1;
+            }
+            out.push((edge, cum));
         }
         out
     }
@@ -208,7 +257,7 @@ mod tests {
         }
         // Extrema are exact, so p100 is too.
         assert_eq!(h.quantile(100.0), 100_000);
-        assert_eq!(h.min(), 1000);
+        assert_eq!(h.min(), Some(1000));
         assert_eq!(h.max(), 100_000);
     }
 
@@ -218,6 +267,62 @@ mod tests {
         assert_eq!(h.quantile(99.0), 0);
         assert_eq!(h.count(), 0);
         assert!(h.cumulative_buckets().is_empty());
+    }
+
+    #[test]
+    fn empty_min_is_none_not_zero() {
+        // Regression: the Default sentinel used to leak out as a real
+        // observed sample of 0.
+        let mut h = LogHistogram::new();
+        assert_eq!(h.min(), None);
+        h.record(7);
+        assert_eq!(h.min(), Some(7));
+    }
+
+    #[test]
+    fn count_le_is_exact_at_bucket_tops() {
+        let mut h = LogHistogram::new();
+        // 10 samples below LINEAR_MAX (exact unit buckets), 5 above.
+        for v in 1..=10u64 {
+            h.record(v);
+        }
+        for _ in 0..5 {
+            h.record(1 << 20);
+        }
+        assert_eq!(h.count_le(0), 0);
+        assert_eq!(h.count_le(5), 5);
+        assert_eq!(h.count_le(10), 10);
+        // (1 << 21) - 1 tops its bucket ladder; everything is below it.
+        assert_eq!(h.count_le((1 << 21) - 1), 15);
+        assert_eq!(h.count_le(u64::MAX), 15);
+        assert_eq!(LogHistogram::new().count_le(u64::MAX), 0);
+    }
+
+    #[test]
+    fn stable_buckets_are_stable_and_cover_the_count() {
+        let mut h = LogHistogram::new();
+        let empty_edges: Vec<u64> =
+            LogHistogram::new().stable_cumulative_buckets().iter().map(|b| b.0).collect();
+        for v in [3u64, 100, 100, 5_000, 1 << 40] {
+            h.record(v);
+        }
+        let buckets = h.stable_cumulative_buckets();
+        // The `le` edge set is identical regardless of what was recorded.
+        let edges: Vec<u64> = buckets.iter().map(|b| b.0).collect();
+        assert_eq!(edges, empty_edges, "edge set must not depend on the data");
+        assert_eq!(edges.len(), 64);
+        assert_eq!(edges[0], 1);
+        assert_eq!(edges[63], 1 << 63);
+        // Counts are exact at power-of-two edges and reach the total.
+        assert_eq!(buckets.last().unwrap().1, h.count());
+        let at = |e: u64| buckets.iter().find(|b| b.0 == e).unwrap().1;
+        assert_eq!(at(4), 1, "only 3 is below 4");
+        assert_eq!(at(128), 3, "3 and the two 100s");
+        assert_eq!(at(8192), 4);
+        assert_eq!(at(1 << 41), 5);
+        for w in buckets.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 <= w[1].1);
+        }
     }
 
     #[test]

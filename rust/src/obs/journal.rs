@@ -1,0 +1,335 @@
+//! [`EventJournal`] — a bounded, structured log of notable serving
+//! events (device lost, load shed, admission reject, cache eviction,
+//! SLO budget exhausted).
+//!
+//! The journal is the "what happened and when" companion to the
+//! timeline's "how did the gauges move": metrics tell you the shed rate
+//! spiked, the journal tells you which tenant was shedding and why.
+//! Events carry a monotonic sequence number (assigned under the ring
+//! lock, so sequence order == insertion order), a wall timestamp, a
+//! severity, and an optional tenant label. The ring is fixed-capacity:
+//! on overflow the *oldest* event is dropped and a drop counter bumps,
+//! so the journal can never grow without bound and never lies about
+//! having seen everything.
+//!
+//! Writers hold [`JournalSink`] handles — a cheap clone of the shared
+//! journal pre-labelled with the writer's tenant — so the hot paths
+//! (admission refusal, shed resolution, device-thread exit) append
+//! without knowing who else shares the ring.
+
+use crate::util::lock;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// How loud an event is. Ordered: `Info < Warn < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Info => "INFO",
+            Severity::Warn => "WARN",
+            Severity::Error => "ERROR",
+        })
+    }
+}
+
+/// What class of event happened. The set mirrors the serving layer's
+/// failure/pressure surfaces; stringly-typed details ride alongside in
+/// [`JournalEvent::detail`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A device thread died (join failure at shutdown, short batch
+    /// output at dispatch).
+    DeviceLost,
+    /// `ShedOldest` admission dropped queued work to admit newer work.
+    Shed,
+    /// `Reject` admission refused a submit at the depth bound.
+    AdmissionReject,
+    /// The shared schedule cache evicted an entry under its LRU bound.
+    CacheEviction,
+    /// A tenant's SLO error budget crossed exhaustion (burn ≥ budget).
+    SloBudgetExhausted,
+}
+
+impl fmt::Display for EventKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            EventKind::DeviceLost => "device_lost",
+            EventKind::Shed => "shed",
+            EventKind::AdmissionReject => "admission_reject",
+            EventKind::CacheEviction => "cache_eviction",
+            EventKind::SloBudgetExhausted => "slo_budget_exhausted",
+        })
+    }
+}
+
+/// One journal entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalEvent {
+    /// Monotonic sequence number, unique across the journal's lifetime.
+    /// Later events always carry larger sequence numbers, so consumers
+    /// can detect the gap left by dropped events.
+    pub seq: u64,
+    /// Wall-clock timestamp, ns since the Unix epoch.
+    pub wall_ns: u64,
+    pub severity: Severity,
+    pub kind: EventKind,
+    /// Tenant the event belongs to; `None` for fleet-wide events.
+    pub tenant: Option<String>,
+    /// Free-form human-readable detail, e.g. `"depth 64 at bound"`.
+    pub detail: String,
+}
+
+impl JournalEvent {
+    /// One-line log form: `#seq LEVEL kind [tenant] detail`.
+    pub fn render(&self) -> String {
+        match &self.tenant {
+            Some(t) => format!(
+                "#{} {} {} [{}] {}",
+                self.seq, self.severity, self.kind, t, self.detail
+            ),
+            None => format!("#{} {} {} {}", self.seq, self.severity, self.kind, self.detail),
+        }
+    }
+}
+
+struct Ring {
+    events: VecDeque<JournalEvent>,
+    next_seq: u64,
+}
+
+/// Bounded structured event log. Cheap to append (one short critical
+/// section), safe to share (`Arc`), and honest about loss (dropped
+/// count).
+pub struct EventJournal {
+    ring: Mutex<Ring>,
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+impl EventJournal {
+    /// A journal holding at most `capacity` events (≥ 1 enforced).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            ring: Mutex::new(Ring { events: VecDeque::with_capacity(capacity), next_seq: 0 }),
+            capacity,
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Shared-ownership constructor for multi-writer wiring.
+    pub fn shared(capacity: usize) -> Arc<Self> {
+        Arc::new(Self::new(capacity))
+    }
+
+    /// Append one event; drops the oldest (and counts the drop) when
+    /// the ring is full. Returns the assigned sequence number.
+    pub fn push(
+        &self,
+        kind: EventKind,
+        severity: Severity,
+        tenant: Option<&str>,
+        detail: impl Into<String>,
+    ) -> u64 {
+        let wall_ns = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let mut ring = lock(&self.ring);
+        let seq = ring.next_seq;
+        ring.next_seq += 1;
+        if ring.events.len() == self.capacity {
+            ring.events.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.events.push_back(JournalEvent {
+            seq,
+            wall_ns,
+            severity,
+            kind,
+            tenant: tenant.map(str::to_owned),
+            detail: detail.into(),
+        });
+        seq
+    }
+
+    /// Every retained event, oldest first.
+    pub fn events(&self) -> Vec<JournalEvent> {
+        lock(&self.ring).events.iter().cloned().collect()
+    }
+
+    /// Retained events for one tenant, oldest first. Fleet-wide events
+    /// (no tenant label) are *not* included.
+    pub fn events_for(&self, tenant: &str) -> Vec<JournalEvent> {
+        lock(&self.ring)
+            .events
+            .iter()
+            .filter(|e| e.tenant.as_deref() == Some(tenant))
+            .cloned()
+            .collect()
+    }
+
+    /// The newest `n` retained events, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<JournalEvent> {
+        let ring = lock(&self.ring);
+        let skip = ring.events.len().saturating_sub(n);
+        ring.events.iter().skip(skip).cloned().collect()
+    }
+
+    /// Events dropped to overflow so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Retained event count.
+    pub fn len(&self) -> usize {
+        lock(&self.ring).events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+impl fmt::Debug for EventJournal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("EventJournal")
+            .field("capacity", &self.capacity)
+            .field("len", &self.len())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+/// A writer handle: the shared journal plus the writer's tenant label.
+/// Clone freely — every serving-layer hook takes one of these so the
+/// hot path appends one labelled event without string plumbing.
+#[derive(Clone, Debug)]
+pub struct JournalSink {
+    journal: Arc<EventJournal>,
+    tenant: Option<String>,
+}
+
+impl JournalSink {
+    pub fn new(journal: Arc<EventJournal>, tenant: Option<&str>) -> Self {
+        Self { journal, tenant: tenant.map(str::to_owned) }
+    }
+
+    /// Append one event under this sink's tenant label.
+    pub fn event(&self, kind: EventKind, severity: Severity, detail: impl Into<String>) {
+        self.journal.push(kind, severity, self.tenant.as_deref(), detail);
+    }
+
+    /// The shared journal behind this sink.
+    pub fn journal(&self) -> &Arc<EventJournal> {
+        &self.journal
+    }
+
+    /// This sink's tenant label.
+    pub fn tenant(&self) -> Option<&str> {
+        self.tenant.as_deref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_numbers_are_monotonic_and_dense() {
+        let j = EventJournal::new(8);
+        for i in 0..5 {
+            let seq = j.push(EventKind::Shed, Severity::Warn, None, format!("e{i}"));
+            assert_eq!(seq, i);
+        }
+        let evs = j.events();
+        assert_eq!(evs.len(), 5);
+        for (i, e) in evs.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+        }
+        assert_eq!(j.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let j = EventJournal::new(3);
+        for i in 0..7 {
+            j.push(EventKind::AdmissionReject, Severity::Warn, None, format!("e{i}"));
+        }
+        let evs = j.events();
+        assert_eq!(evs.len(), 3, "ring stays at capacity");
+        // The *newest* three survive; sequence numbers show the gap.
+        assert_eq!(evs.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![4, 5, 6]);
+        assert_eq!(evs[0].detail, "e4");
+        assert_eq!(j.dropped(), 4, "every displaced event is counted");
+    }
+
+    #[test]
+    fn per_tenant_query_filters() {
+        let j = EventJournal::shared(16);
+        let iris = JournalSink::new(Arc::clone(&j), Some("iris"));
+        let lenet = JournalSink::new(Arc::clone(&j), Some("lenet"));
+        let fleet = JournalSink::new(Arc::clone(&j), None);
+        iris.event(EventKind::AdmissionReject, Severity::Warn, "full");
+        lenet.event(EventKind::Shed, Severity::Warn, "shed 2");
+        iris.event(EventKind::SloBudgetExhausted, Severity::Warn, "burn 1.2");
+        fleet.event(EventKind::DeviceLost, Severity::Error, "device 3");
+        assert_eq!(j.events_for("iris").len(), 2);
+        assert_eq!(j.events_for("lenet").len(), 1);
+        assert_eq!(j.events_for("nope").len(), 0);
+        assert_eq!(j.len(), 4);
+        // Fleet-wide events have no tenant and only appear in events().
+        assert!(j.events().iter().any(|e| e.kind == EventKind::DeviceLost));
+        assert!(j.events_for("iris").iter().all(|e| e.tenant.as_deref() == Some("iris")));
+    }
+
+    #[test]
+    fn tail_returns_newest_in_order() {
+        let j = EventJournal::new(10);
+        for i in 0..6 {
+            j.push(EventKind::CacheEviction, Severity::Info, None, format!("e{i}"));
+        }
+        let t = j.tail(2);
+        assert_eq!(t.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![4, 5]);
+        assert_eq!(j.tail(100).len(), 6);
+    }
+
+    #[test]
+    fn render_is_one_line_and_labelled() {
+        let j = EventJournal::new(4);
+        j.push(EventKind::Shed, Severity::Warn, Some("iris"), "dropped 3 queued");
+        let e = &j.events()[0];
+        let line = e.render();
+        assert!(line.contains("WARN"));
+        assert!(line.contains("shed"));
+        assert!(line.contains("[iris]"));
+        assert!(line.contains("dropped 3 queued"));
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let j = EventJournal::new(0);
+        assert_eq!(j.capacity(), 1);
+        j.push(EventKind::Shed, Severity::Warn, None, "a");
+        j.push(EventKind::Shed, Severity::Warn, None, "b");
+        assert_eq!(j.len(), 1);
+        assert_eq!(j.events()[0].detail, "b");
+        assert_eq!(j.dropped(), 1);
+    }
+}

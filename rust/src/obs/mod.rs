@@ -27,6 +27,19 @@
 //!   [`NpeService::metrics_snapshot`](crate::serve::NpeService::metrics_snapshot).
 //! * [`hist`] — [`LogHistogram`], the constant-memory log-bucketed
 //!   histogram behind the coordinator's latency percentiles.
+//! * [`timeline`] — [`TelemetrySampler`]: a background (or, for tests,
+//!   manually ticked and therefore deterministic) gauge sampler feeding
+//!   a bounded ring of queue-depth / in-flight / per-device-occupancy
+//!   samples — the live feedback signal elastic pools will consume —
+//!   exported as Prometheus gauges, `timeline_json()`, and a
+//!   Chrome-trace counter track ([`chrome_trace_json_with`]).
+//! * [`slo`] — per-tenant [`SloTracker`]: latency objective + target
+//!   fraction evaluated against the existing latency histograms into
+//!   good/bad counts, compliance, and error-budget burn rate.
+//! * [`journal`] — [`EventJournal`]: a bounded, per-tenant-queryable
+//!   structured event log (device lost, shed, admission reject, cache
+//!   eviction, SLO budget exhausted) with monotonic sequence numbers
+//!   and drop counting on overflow.
 //!
 //! Everything here is dependency-free and hand-rolled, like the rest of
 //! the repo: no serde, no tracing crates — the JSON writers live next
@@ -36,11 +49,20 @@
 pub mod chrome;
 pub mod export;
 pub mod hist;
+pub mod journal;
 pub mod profile;
+pub mod slo;
 pub mod span;
+pub mod timeline;
 
-pub use chrome::chrome_trace_json;
-pub use export::{aggregate_layers, LayerAgg, MetricsSnapshot};
+pub use chrome::{chrome_trace_json, chrome_trace_json_with};
+pub use export::{aggregate_layers, merge_expositions, LayerAgg, MetricsSnapshot};
 pub use hist::LogHistogram;
+pub use journal::{EventJournal, EventKind, JournalEvent, JournalSink, Severity};
 pub use profile::{BatchProfile, LayerProfile, RoundProfile};
+pub use slo::{SloConfig, SloStatus, SloTracker};
 pub use span::{BatchTrace, SpanKind, TraceLog, Tracer, TrackHandle, WallSpan};
+pub use timeline::{
+    BusyLanes, SamplerConfig, SamplerMode, TelemetrySample, TelemetrySampler, TelemetrySource,
+    TimelineSnapshot,
+};

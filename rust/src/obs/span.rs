@@ -154,6 +154,13 @@ impl Tracer {
         Arc::new(Self::new())
     }
 
+    /// The tracer's epoch instant — shared with the telemetry sampler
+    /// so counter-track timestamps line up with span timestamps in one
+    /// Perfetto timebase.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
     /// Nanoseconds since the tracer epoch.
     pub fn now_ns(&self) -> u64 {
         self.epoch.elapsed().as_nanos() as u64

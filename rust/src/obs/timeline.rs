@@ -1,0 +1,719 @@
+//! Live telemetry timeline: [`BusyLanes`] (per-device busy-ns stamps),
+//! [`TelemetrySampler`] (a periodic gauge reader feeding a bounded ring
+//! of [`TelemetrySample`]s), and [`TimelineSnapshot`] (the queryable /
+//! exportable time series).
+//!
+//! The tracer (PR 6) answers "where did *this request's* time go"; the
+//! metrics snapshot (PR 7) answers "what are the totals so far". The
+//! timeline answers the question between them — *how did load evolve* —
+//! which is exactly the rolling feedback signal the ROADMAP's elastic
+//! device pools need: queue depth, in-flight count, per-device
+//! occupancy, and answered/shed counters, sampled on a fixed cadence
+//! into a fixed-capacity ring.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Lock-cheap.** Devices stamp busy time with one relaxed atomic
+//!    add ([`BusyLanes::add`]); the sampler reads gauges through
+//!    closures the serving layer wires up (queue depth, in-flight,
+//!    answered, shed — all existing atomics or short lock holds). The
+//!    hot path never blocks on the sampler.
+//! 2. **Deterministic for tests.** In [`SamplerMode::Manual`] no thread
+//!    runs; the test calls [`TelemetrySampler::tick`] at points of its
+//!    own choosing (e.g. after a load wave fully quiesces), and
+//!    [`TimelineSnapshot::fingerprint`] hashes only the
+//!    wall-clock-independent fields (tick index, queue depth,
+//!    in-flight, answered/shed totals) — so a seeded load replayed
+//!    under manual ticks yields the *same fingerprint every run*.
+//!    Occupancy and timestamps are wall-time-derived and deliberately
+//!    excluded.
+//! 3. **Bounded.** The ring holds `capacity` samples; overflow drops
+//!    the oldest and counts the drop, like the event journal.
+//!
+//! Occupancy is Δbusy/Δwall per tick, clamped to `[0, 1]`: a device
+//! that spent the whole inter-tick window executing reads 1.0, an idle
+//! one 0.0.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::util::{json, lock};
+
+/// One relaxed atomic per device lane accumulating wall busy-ns (the
+/// device thread stamps each batch's execute duration). Shared between
+/// the fleet (writers) and the sampler (reader).
+#[derive(Debug)]
+pub struct BusyLanes {
+    lanes: Vec<AtomicU64>,
+}
+
+impl BusyLanes {
+    pub fn new(devices: usize) -> Arc<Self> {
+        Arc::new(Self { lanes: (0..devices).map(|_| AtomicU64::new(0)).collect() })
+    }
+
+    /// Stamp `ns` of busy time onto `lane`. Out-of-range lanes are
+    /// ignored (a defensive no-op, not a panic — this sits on the
+    /// device hot path).
+    pub fn add(&self, lane: usize, ns: u64) {
+        if let Some(l) = self.lanes.get(lane) {
+            l.fetch_add(ns, Ordering::Relaxed);
+        }
+    }
+
+    /// Accumulated busy-ns of one lane (0 for out-of-range lanes).
+    pub fn total(&self, lane: usize) -> u64 {
+        self.lanes.get(lane).map_or(0, |l| l.load(Ordering::Relaxed))
+    }
+
+    /// Accumulated busy-ns of every lane.
+    pub fn totals(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+}
+
+/// Where the tick cadence comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerMode {
+    /// A background thread ticks every `period`.
+    Background,
+    /// No thread; the owner calls [`TelemetrySampler::tick`] — the
+    /// deterministic mode tests use.
+    Manual,
+}
+
+/// Sampler knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerConfig {
+    /// Tick period in background mode (ignored in manual mode).
+    pub period: Duration,
+    /// Ring capacity in samples; overflow drops the oldest.
+    pub capacity: usize,
+    pub mode: SamplerMode,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        Self { period: Duration::from_millis(50), capacity: 2048, mode: SamplerMode::Background }
+    }
+}
+
+impl SamplerConfig {
+    /// Deterministic test mode: no thread, caller-driven ticks.
+    pub fn manual() -> Self {
+        Self { mode: SamplerMode::Manual, ..Self::default() }
+    }
+
+    pub fn with_period(mut self, period: Duration) -> Self {
+        self.period = period;
+        self
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity.max(1);
+        self
+    }
+}
+
+/// The gauges a sampler reads each tick, wired up by the serving layer
+/// as closures over its existing counters. All must be cheap and
+/// non-blocking (atomics or short lock holds).
+pub struct TelemetrySource {
+    /// Jobs waiting in the work queue (fleet queue depth, or the
+    /// batcher's pending count on the single path).
+    pub queue_depth: Box<dyn Fn() -> u64 + Send + Sync>,
+    /// Admitted requests not yet answered.
+    pub in_flight: Box<dyn Fn() -> u64 + Send + Sync>,
+    /// Requests answered so far (monotonic).
+    pub answered_total: Box<dyn Fn() -> u64 + Send + Sync>,
+    /// Requests shed/refused by admission so far (monotonic).
+    pub shed_total: Box<dyn Fn() -> u64 + Send + Sync>,
+    /// Per-device busy-ns lanes.
+    pub busy: Arc<BusyLanes>,
+    /// Display names per device lane, e.g. `device 0 [16x8]`.
+    pub device_names: Vec<String>,
+    /// Optional per-tick side probe (the service hangs journal checks —
+    /// cache-eviction deltas, SLO budget transitions — here so the
+    /// sampler stays generic).
+    pub probe: Option<Box<dyn Fn() + Send + Sync>>,
+}
+
+impl std::fmt::Debug for TelemetrySource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TelemetrySource")
+            .field("devices", &self.device_names)
+            .finish_non_exhaustive()
+    }
+}
+
+/// One ring entry: every gauge at one tick.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySample {
+    /// Tick index, monotonic from 0 across the sampler's lifetime
+    /// (keeps counting past ring overflow).
+    pub tick: u64,
+    /// Epoch-relative wall time of the tick, ns (tracer timebase when
+    /// the sampler was built against a tracer).
+    pub wall_ns: u64,
+    pub queue_depth: u64,
+    pub in_flight: u64,
+    pub answered_total: u64,
+    pub shed_total: u64,
+    /// Per-device Δbusy/Δwall since the previous tick, clamped [0, 1].
+    pub occupancy: Vec<f64>,
+}
+
+/// An owned copy of the ring — query, fingerprint, or export it freely
+/// without holding sampler locks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineSnapshot {
+    pub device_names: Vec<String>,
+    /// Retained samples, oldest first.
+    pub samples: Vec<TelemetrySample>,
+    /// Samples dropped to ring overflow.
+    pub dropped: u64,
+    /// Configured tick period, ns (0 in manual mode — ticks are
+    /// caller-paced).
+    pub period_ns: u64,
+}
+
+impl TimelineSnapshot {
+    /// Newest sample, if any tick has happened.
+    pub fn latest(&self) -> Option<&TelemetrySample> {
+        self.samples.last()
+    }
+
+    /// FNV-1a hash over the wall-clock-independent fields of every
+    /// retained sample — the determinism contract: identical seeded
+    /// loads sampled at identical manual tick points hash identically
+    /// across runs. Timestamps and occupancy (both wall-derived) are
+    /// excluded.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        mix(self.samples.len() as u64);
+        mix(self.dropped);
+        for s in &self.samples {
+            mix(s.tick);
+            mix(s.queue_depth);
+            mix(s.in_flight);
+            mix(s.answered_total);
+            mix(s.shed_total);
+        }
+        h
+    }
+
+    /// Answered-requests rate over the trailing `window` samples,
+    /// requests/s (0 with fewer than two samples or no wall progress).
+    pub fn throughput_rps(&self, window: usize) -> f64 {
+        self.trailing_rate(window, |s| s.answered_total)
+    }
+
+    /// Shed rate over the trailing `window` samples, requests/s.
+    pub fn shed_rate_rps(&self, window: usize) -> f64 {
+        self.trailing_rate(window, |s| s.shed_total)
+    }
+
+    fn trailing_rate(&self, window: usize, field: impl Fn(&TelemetrySample) -> u64) -> f64 {
+        let n = self.samples.len();
+        if n < 2 || window < 2 {
+            return 0.0;
+        }
+        let first = &self.samples[n - window.min(n)];
+        let last = &self.samples[n - 1];
+        let dt_ns = last.wall_ns.saturating_sub(first.wall_ns);
+        if dt_ns == 0 {
+            return 0.0;
+        }
+        field(last).saturating_sub(field(first)) as f64 / (dt_ns as f64 * 1e-9)
+    }
+
+    /// The timeline as a self-describing JSON document (hand-rolled,
+    /// like every exporter in this repo — no serde in the offline crate
+    /// set).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256 + self.samples.len() * 128);
+        out.push_str("{\n  \"period_ns\": ");
+        out.push_str(&self.period_ns.to_string());
+        out.push_str(",\n  \"dropped\": ");
+        out.push_str(&self.dropped.to_string());
+        out.push_str(",\n  \"fingerprint\": ");
+        out.push_str(&self.fingerprint().to_string());
+        out.push_str(",\n  \"devices\": [");
+        for (i, name) in self.device_names.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push('"');
+            out.push_str(&json::escape(name));
+            out.push('"');
+        }
+        out.push_str("],\n  \"samples\": [\n");
+        for (i, s) in self.samples.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "    {{\"tick\": {}, \"wall_ns\": {}, \"queue_depth\": {}, \"in_flight\": {}, \
+                 \"answered_total\": {}, \"shed_total\": {}, \"occupancy\": [{}]}}",
+                s.tick,
+                s.wall_ns,
+                s.queue_depth,
+                s.in_flight,
+                s.answered_total,
+                s.shed_total,
+                s.occupancy
+                    .iter()
+                    .map(|o| format!("{o:.4}"))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            ));
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// Latest-sample gauges in Prometheus exposition format:
+    /// `npe_queue_depth`, `npe_in_flight`,
+    /// `npe_device_occupancy{device="..."}`, plus the rolling rates and
+    /// the ring drop counter. Empty string before the first tick (no
+    /// gauges is more honest than fabricated zeros).
+    pub fn prometheus_gauges(&self) -> String {
+        let Some(s) = self.latest() else {
+            return String::new();
+        };
+        let mut out = String::new();
+        out.push_str("# HELP npe_queue_depth Work-queue depth at the last telemetry tick.\n");
+        out.push_str("# TYPE npe_queue_depth gauge\n");
+        out.push_str(&format!("npe_queue_depth {}\n", s.queue_depth));
+        out.push_str("# HELP npe_in_flight Admitted, unanswered requests at the last tick.\n");
+        out.push_str("# TYPE npe_in_flight gauge\n");
+        out.push_str(&format!("npe_in_flight {}\n", s.in_flight));
+        out.push_str(
+            "# HELP npe_device_occupancy Per-device busy fraction over the last tick window.\n",
+        );
+        out.push_str("# TYPE npe_device_occupancy gauge\n");
+        for (i, o) in s.occupancy.iter().enumerate() {
+            out.push_str(&format!("npe_device_occupancy{{device=\"{i}\"}} {o:.4}\n"));
+        }
+        out.push_str("# HELP npe_throughput_rps Answered-request rate over the trailing window.\n");
+        out.push_str("# TYPE npe_throughput_rps gauge\n");
+        out.push_str(&format!("npe_throughput_rps {:.3}\n", self.throughput_rps(16)));
+        out.push_str("# HELP npe_shed_rps Shed-request rate over the trailing window.\n");
+        out.push_str("# TYPE npe_shed_rps gauge\n");
+        out.push_str(&format!("npe_shed_rps {:.3}\n", self.shed_rate_rps(16)));
+        out.push_str("# HELP npe_timeline_dropped_samples Ring-overflow sample drops.\n");
+        out.push_str("# TYPE npe_timeline_dropped_samples counter\n");
+        out.push_str(&format!("npe_timeline_dropped_samples {}\n", self.dropped));
+        out
+    }
+}
+
+struct Ring {
+    samples: VecDeque<TelemetrySample>,
+    dropped: u64,
+    next_tick: u64,
+    /// Busy totals at the previous tick (occupancy deltas).
+    last_busy: Vec<u64>,
+    /// Wall-ns of the previous tick.
+    last_wall_ns: u64,
+}
+
+struct SamplerInner {
+    source: TelemetrySource,
+    ring: Mutex<Ring>,
+    capacity: usize,
+    period: Duration,
+    mode: SamplerMode,
+    epoch: Instant,
+    /// Background-thread shutdown: flag + condvar so `stop()` wakes the
+    /// sleeper immediately instead of waiting out a period.
+    stopping: AtomicBool,
+    stop_gate: Mutex<bool>,
+    stop_cv: Condvar,
+}
+
+impl SamplerInner {
+    fn tick(&self) {
+        let now_ns = self.epoch.elapsed().as_nanos() as u64;
+        let queue_depth = (self.source.queue_depth)();
+        let in_flight = (self.source.in_flight)();
+        let answered_total = (self.source.answered_total)();
+        let shed_total = (self.source.shed_total)();
+        let busy = self.source.busy.totals();
+        let mut ring = lock(&self.ring);
+        let dt = now_ns.saturating_sub(ring.last_wall_ns);
+        let occupancy: Vec<f64> = busy
+            .iter()
+            .zip(ring.last_busy.iter())
+            .map(|(&now, &then)| {
+                if dt == 0 {
+                    0.0
+                } else {
+                    (now.saturating_sub(then) as f64 / dt as f64).clamp(0.0, 1.0)
+                }
+            })
+            .collect();
+        ring.last_busy = busy;
+        ring.last_wall_ns = now_ns;
+        let tick = ring.next_tick;
+        ring.next_tick += 1;
+        if ring.samples.len() == self.capacity {
+            ring.samples.pop_front();
+            ring.dropped += 1;
+        }
+        ring.samples.push_back(TelemetrySample {
+            tick,
+            wall_ns: now_ns,
+            queue_depth,
+            in_flight,
+            answered_total,
+            shed_total,
+            occupancy,
+        });
+        drop(ring);
+        if let Some(probe) = &self.source.probe {
+            probe();
+        }
+    }
+
+    fn snapshot(&self) -> TimelineSnapshot {
+        let ring = lock(&self.ring);
+        TimelineSnapshot {
+            device_names: self.source.device_names.clone(),
+            samples: ring.samples.iter().cloned().collect(),
+            dropped: ring.dropped,
+            period_ns: if self.mode == SamplerMode::Background {
+                self.period.as_nanos() as u64
+            } else {
+                0
+            },
+        }
+    }
+}
+
+/// The sampler handle the serving layer owns. Dropping (or calling
+/// [`stop`](Self::stop)) joins the background thread, if any.
+pub struct TelemetrySampler {
+    inner: Arc<SamplerInner>,
+    thread: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for TelemetrySampler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TelemetrySampler")
+            .field("mode", &self.inner.mode)
+            .field("period", &self.inner.period)
+            .finish_non_exhaustive()
+    }
+}
+
+impl TelemetrySampler {
+    /// Build a sampler over `source`. In background mode the sampling
+    /// thread starts immediately; epoch is "now" (see
+    /// [`with_epoch`](Self::with_epoch) for tracer alignment).
+    pub fn new(source: TelemetrySource, config: SamplerConfig) -> Arc<Self> {
+        Self::with_epoch(source, config, Instant::now())
+    }
+
+    /// Like [`new`](Self::new) but timestamps ticks relative to
+    /// `epoch` — pass the tracer's epoch so Chrome-trace counter events
+    /// share the span timebase.
+    pub fn with_epoch(source: TelemetrySource, config: SamplerConfig, epoch: Instant) -> Arc<Self> {
+        let devices = source.busy.len();
+        let inner = Arc::new(SamplerInner {
+            source,
+            ring: Mutex::new(Ring {
+                samples: VecDeque::with_capacity(config.capacity.max(1)),
+                dropped: 0,
+                next_tick: 0,
+                last_busy: vec![0; devices],
+                last_wall_ns: epoch.elapsed().as_nanos() as u64,
+            }),
+            capacity: config.capacity.max(1),
+            period: config.period,
+            mode: config.mode,
+            epoch,
+            stopping: AtomicBool::new(false),
+            stop_gate: Mutex::new(false),
+            stop_cv: Condvar::new(),
+        });
+        let thread = if config.mode == SamplerMode::Background {
+            let worker = Arc::clone(&inner);
+            thread::Builder::new()
+                .name("telemetry-sampler".into())
+                .spawn(move || {
+                    loop {
+                        let gate = lock(&worker.stop_gate);
+                        let (gate, _) = worker
+                            .stop_cv
+                            .wait_timeout(gate, worker.period)
+                            .unwrap_or_else(PoisonError::into_inner);
+                        if *gate || worker.stopping.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        drop(gate);
+                        worker.tick();
+                    }
+                })
+                .ok()
+        } else {
+            None
+        };
+        Arc::new(Self { inner, thread: Mutex::new(thread) })
+    }
+
+    /// Take one sample now. The manual-mode driver; harmless (one extra
+    /// sample) in background mode.
+    pub fn tick(&self) {
+        self.inner.tick();
+    }
+
+    /// Owned copy of the current ring.
+    pub fn snapshot(&self) -> TimelineSnapshot {
+        self.inner.snapshot()
+    }
+
+    /// The timeline as JSON (see [`TimelineSnapshot::to_json`]).
+    pub fn timeline_json(&self) -> String {
+        self.snapshot().to_json()
+    }
+
+    /// Stop the background thread (no-op in manual mode / second call).
+    pub fn stop(&self) {
+        self.inner.stopping.store(true, Ordering::Relaxed);
+        *lock(&self.inner.stop_gate) = true;
+        self.inner.stop_cv.notify_all();
+        if let Some(h) = lock(&self.thread).take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Ticks taken so far (monotonic, past ring overflow).
+    pub fn ticks(&self) -> u64 {
+        lock(&self.inner.ring).next_tick
+    }
+}
+
+impl Drop for TelemetrySampler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn counter_source(
+        depth: &Arc<AtomicU64>,
+        answered: &Arc<AtomicU64>,
+        busy: &Arc<BusyLanes>,
+    ) -> TelemetrySource {
+        let d = Arc::clone(depth);
+        let a = Arc::clone(answered);
+        TelemetrySource {
+            queue_depth: Box::new(move || d.load(Ordering::Relaxed)),
+            in_flight: Box::new(|| 0),
+            answered_total: Box::new(move || a.load(Ordering::Relaxed)),
+            shed_total: Box::new(|| 0),
+            busy: Arc::clone(busy),
+            device_names: (0..busy.len()).map(|i| format!("device {i}")).collect(),
+            probe: None,
+        }
+    }
+
+    #[test]
+    fn manual_ticks_record_gauges_deterministically() {
+        let depth = Arc::new(AtomicU64::new(0));
+        let answered = Arc::new(AtomicU64::new(0));
+        let busy = BusyLanes::new(2);
+        let sampler = TelemetrySampler::new(
+            counter_source(&depth, &answered, &busy),
+            SamplerConfig::manual(),
+        );
+        depth.store(3, Ordering::Relaxed);
+        sampler.tick();
+        depth.store(1, Ordering::Relaxed);
+        answered.store(7, Ordering::Relaxed);
+        sampler.tick();
+        let snap = sampler.snapshot();
+        assert_eq!(snap.samples.len(), 2);
+        assert_eq!(snap.samples[0].tick, 0);
+        assert_eq!(snap.samples[0].queue_depth, 3);
+        assert_eq!(snap.samples[1].queue_depth, 1);
+        assert_eq!(snap.samples[1].answered_total, 7);
+        assert_eq!(snap.period_ns, 0, "manual mode advertises no period");
+        // Same gauge sequence replayed on a fresh sampler → same
+        // fingerprint; a diverging sequence → different fingerprint.
+        let d2 = Arc::new(AtomicU64::new(0));
+        let a2 = Arc::new(AtomicU64::new(0));
+        let b2 = BusyLanes::new(2);
+        let s2 = TelemetrySampler::new(counter_source(&d2, &a2, &b2), SamplerConfig::manual());
+        d2.store(3, Ordering::Relaxed);
+        s2.tick();
+        d2.store(1, Ordering::Relaxed);
+        a2.store(7, Ordering::Relaxed);
+        s2.tick();
+        assert_eq!(snap.fingerprint(), s2.snapshot().fingerprint());
+        a2.store(8, Ordering::Relaxed);
+        s2.tick();
+        assert_ne!(snap.fingerprint(), s2.snapshot().fingerprint());
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let depth = Arc::new(AtomicU64::new(0));
+        let answered = Arc::new(AtomicU64::new(0));
+        let busy = BusyLanes::new(1);
+        let sampler = TelemetrySampler::new(
+            counter_source(&depth, &answered, &busy),
+            SamplerConfig::manual().with_capacity(3),
+        );
+        for i in 0..8 {
+            depth.store(i, Ordering::Relaxed);
+            sampler.tick();
+        }
+        let snap = sampler.snapshot();
+        assert_eq!(snap.samples.len(), 3);
+        assert_eq!(snap.dropped, 5);
+        assert_eq!(snap.samples.iter().map(|s| s.tick).collect::<Vec<_>>(), vec![5, 6, 7]);
+        assert_eq!(snap.latest().map(|s| s.queue_depth), Some(7));
+        assert_eq!(sampler.ticks(), 8);
+    }
+
+    #[test]
+    fn occupancy_is_busy_over_wall_clamped() {
+        let depth = Arc::new(AtomicU64::new(0));
+        let answered = Arc::new(AtomicU64::new(0));
+        let busy = BusyLanes::new(2);
+        let sampler = TelemetrySampler::new(
+            counter_source(&depth, &answered, &busy),
+            SamplerConfig::manual(),
+        );
+        // Lane 0 claims an absurd busy delta (way beyond wall) → clamps
+        // to 1.0; lane 1 stays idle → exactly 0.0.
+        busy.add(0, u64::MAX / 2);
+        std::thread::sleep(Duration::from_millis(2));
+        sampler.tick();
+        let snap = sampler.snapshot();
+        let occ = &snap.latest().unwrap().occupancy;
+        assert_eq!(occ.len(), 2);
+        assert_eq!(occ[0], 1.0);
+        assert_eq!(occ[1], 0.0);
+        // Next window: both idle → both 0.
+        std::thread::sleep(Duration::from_millis(2));
+        sampler.tick();
+        let snap = sampler.snapshot();
+        assert_eq!(snap.latest().unwrap().occupancy, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn background_mode_ticks_on_its_own_and_stops() {
+        let depth = Arc::new(AtomicU64::new(4));
+        let answered = Arc::new(AtomicU64::new(0));
+        let busy = BusyLanes::new(1);
+        let sampler = TelemetrySampler::new(
+            counter_source(&depth, &answered, &busy),
+            SamplerConfig::default().with_period(Duration::from_millis(5)),
+        );
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while sampler.ticks() < 3 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert!(sampler.ticks() >= 3, "background thread must tick");
+        sampler.stop();
+        let after = sampler.ticks();
+        thread::sleep(Duration::from_millis(25));
+        assert_eq!(sampler.ticks(), after, "no ticks after stop");
+        assert_eq!(sampler.snapshot().latest().map(|s| s.queue_depth), Some(4));
+        sampler.stop(); // idempotent
+    }
+
+    #[test]
+    fn probe_runs_every_tick() {
+        let depth = Arc::new(AtomicU64::new(0));
+        let answered = Arc::new(AtomicU64::new(0));
+        let busy = BusyLanes::new(1);
+        let hits = Arc::new(AtomicU64::new(0));
+        let mut source = counter_source(&depth, &answered, &busy);
+        let h = Arc::clone(&hits);
+        source.probe = Some(Box::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+        let sampler = TelemetrySampler::new(source, SamplerConfig::manual());
+        sampler.tick();
+        sampler.tick();
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn rolling_rates_use_the_trailing_window() {
+        let depth = Arc::new(AtomicU64::new(0));
+        let answered = Arc::new(AtomicU64::new(0));
+        let busy = BusyLanes::new(1);
+        let sampler = TelemetrySampler::new(
+            counter_source(&depth, &answered, &busy),
+            SamplerConfig::manual(),
+        );
+        sampler.tick();
+        std::thread::sleep(Duration::from_millis(2));
+        answered.store(100, Ordering::Relaxed);
+        sampler.tick();
+        let snap = sampler.snapshot();
+        let rps = snap.throughput_rps(8);
+        assert!(rps > 0.0, "100 answers over a real wall window");
+        assert_eq!(snap.shed_rate_rps(8), 0.0);
+        assert_eq!(TimelineSnapshot {
+            device_names: vec![],
+            samples: vec![],
+            dropped: 0,
+            period_ns: 0,
+        }
+        .throughput_rps(8), 0.0);
+    }
+
+    #[test]
+    fn json_and_gauges_are_well_formed() {
+        let depth = Arc::new(AtomicU64::new(2));
+        let answered = Arc::new(AtomicU64::new(9));
+        let busy = BusyLanes::new(2);
+        let sampler = TelemetrySampler::new(
+            counter_source(&depth, &answered, &busy),
+            SamplerConfig::manual(),
+        );
+        assert_eq!(sampler.snapshot().prometheus_gauges(), "", "no gauges before any tick");
+        sampler.tick();
+        let text = sampler.timeline_json();
+        let doc = json::JsonValue::parse(&text).expect("timeline JSON parses");
+        let samples = doc.get("samples").and_then(json::JsonValue::as_arr).expect("samples");
+        assert_eq!(samples.len(), 1);
+        assert_eq!(
+            samples[0].get("queue_depth").and_then(json::JsonValue::as_u64),
+            Some(2),
+        );
+        let gauges = sampler.snapshot().prometheus_gauges();
+        assert!(gauges.contains("npe_queue_depth 2"));
+        assert!(gauges.contains("npe_in_flight 0"));
+        assert!(gauges.contains("npe_device_occupancy{device=\"0\"}"));
+        assert!(gauges.contains("npe_device_occupancy{device=\"1\"}"));
+        assert!(gauges.contains("npe_timeline_dropped_samples 0"));
+    }
+}

@@ -21,7 +21,7 @@
 
 use super::admission::AdmissionPolicy;
 use super::error::ServeError;
-use super::service::NpeService;
+use super::service::{NpeService, ObsWiring};
 use crate::conv::QuantizedCnn;
 use crate::coordinator::{BatcherConfig, ExecutionPlan, PjrtSpec, ServedModel};
 use crate::exec::BackendKind;
@@ -29,8 +29,12 @@ use crate::fleet::{DeviceSpec, FleetPool};
 use crate::graph::{GraphModel, QuantizedGraph};
 use crate::mapper::{NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
 use crate::model::QuantizedMlp;
-use crate::obs::Tracer;
+use crate::obs::{EventJournal, SamplerConfig, SloConfig, Tracer};
 use std::sync::Arc;
+
+/// Default event-journal capacity when journaling is enabled without an
+/// explicit bound (events, oldest dropped and counted on overflow).
+pub const DEFAULT_JOURNAL_CAPACITY: usize = 1024;
 
 /// Weight seed used when serving a raw [`GraphModel`]: the graph IR
 /// carries structure, not parameters, so the builder synthesizes weights
@@ -91,6 +95,13 @@ pub struct ServeBuilder {
     admission: AdmissionPolicy,
     pjrt: Option<PjrtSpec>,
     tracer: Option<Arc<Tracer>>,
+    slo: Option<SloConfig>,
+    /// An existing journal to share (registry wiring: tenants write one
+    /// fleet-wide journal through tenant-labelled sinks).
+    journal: Option<Arc<EventJournal>>,
+    /// Capacity for a fresh private journal ([`Self::journaling`]).
+    journal_capacity: Option<usize>,
+    telemetry: Option<SamplerConfig>,
     /// Registry wiring: serve on an existing shared device pool instead
     /// of launching one (mutually exclusive with `devices` and `pjrt`).
     pub(crate) pool: Option<Arc<FleetPool>>,
@@ -113,6 +124,10 @@ impl ServeBuilder {
             admission: AdmissionPolicy::default(),
             pjrt: None,
             tracer: None,
+            slo: None,
+            journal: None,
+            journal_capacity: None,
+            telemetry: None,
             pool: None,
             shared_cache: None,
             label: None,
@@ -193,6 +208,46 @@ impl ServeBuilder {
         self
     }
 
+    /// Track a latency SLO: `objective_us` is the per-request wall
+    /// latency bound and `target` the fraction of requests that must
+    /// meet it. Surfaces good/bad counts, compliance, and error-budget
+    /// burn rate through [`NpeService::slo_status`] and the metrics
+    /// snapshot; with journaling on, budget exhaustion lands in the
+    /// event journal (edge-detected by the telemetry sampler's probe).
+    pub fn slo(mut self, config: SloConfig) -> Self {
+        self.slo = Some(config);
+        self
+    }
+
+    /// Enable the structured event journal with a fresh private ring of
+    /// `capacity` events (device lost, shed, admission reject, cache
+    /// eviction, SLO budget exhausted). Overflow drops the oldest event
+    /// and counts the drop. Pass [`DEFAULT_JOURNAL_CAPACITY`] when in
+    /// doubt; a zero capacity is clamped to one.
+    pub fn journaling(mut self, capacity: usize) -> Self {
+        self.journal_capacity = Some(capacity);
+        self
+    }
+
+    /// Write events into an existing shared [`EventJournal`] — a
+    /// registry's tenants journal into one fleet-wide ring through
+    /// tenant-labelled sinks. Implies journaling on; takes precedence
+    /// over [`Self::journaling`].
+    pub fn journal(mut self, journal: Arc<EventJournal>) -> Self {
+        self.journal = Some(journal);
+        self
+    }
+
+    /// Enable the live telemetry sampler: queue depth, in-flight count,
+    /// per-device occupancy and rolling throughput/shed rates, sampled
+    /// into a bounded ring ([`SamplerConfig::default`] ticks every 50ms
+    /// on a background thread; [`SamplerConfig::manual`] is the
+    /// deterministic caller-ticked mode tests use). Default: off.
+    pub fn telemetry(mut self, config: SamplerConfig) -> Self {
+        self.telemetry = Some(config);
+        self
+    }
+
     /// Name this service. The request-pipeline tracer track becomes
     /// `requests[<name>]`, so services sharing one tracer (a registry's
     /// tenants, the obs CLI's per-model services) stay distinguishable.
@@ -238,6 +293,9 @@ impl ServeBuilder {
         if self.pjrt.is_some() && !matches!(self.model, ServedModel::Mlp(_)) {
             return invalid("pjrt cross-verification requires an MLP model");
         }
+        let cache = self
+            .shared_cache
+            .unwrap_or_else(|| ScheduleCache::shared_bounded(self.cache_capacity));
         let plan = match (self.pool, self.devices) {
             (Some(_), Some(_)) => {
                 return invalid("a shared pool and a private fleet are mutually exclusive");
@@ -257,7 +315,7 @@ impl ServeBuilder {
                          use Reject or Block",
                     );
                 }
-                ExecutionPlan::Pool { pool }
+                ExecutionPlan::Pool { pool, owned: false }
             }
             (None, None) => ExecutionPlan::Single {
                 geometry: self.geometry,
@@ -271,19 +329,32 @@ impl ServeBuilder {
                 if self.pjrt.is_some() {
                     return invalid("pjrt cross-verification runs on the single-device path only");
                 }
-                ExecutionPlan::Fleet { specs }
+                // Launch the private pool here — before the coordinator
+                // thread — so the telemetry sampler can wire against its
+                // queue and busy lanes. The coordinator still drains and
+                // joins it at shutdown (`owned: true`).
+                ExecutionPlan::Pool {
+                    pool: FleetPool::launch(&specs, Arc::clone(&cache), self.tracer.clone()),
+                    owned: true,
+                }
             }
         };
-        let cache = self
-            .shared_cache
-            .unwrap_or_else(|| ScheduleCache::shared_bounded(self.cache_capacity));
+        let journal = self
+            .journal
+            .or_else(|| self.journal_capacity.map(EventJournal::shared));
+        let obs = ObsWiring {
+            tracer: self.tracer,
+            slo: self.slo,
+            journal,
+            telemetry: self.telemetry,
+        };
         Ok(NpeService::start(
             self.model,
             plan,
             self.batcher,
             cache,
             self.admission,
-            self.tracer,
+            obs,
             self.label.as_deref(),
         ))
     }

@@ -15,6 +15,9 @@
 //!   .batcher(..) .cache(..)          — batching + Algorithm-1 memo
 //!   .admission(..)                   — Block | Reject | ShedOldest
 //!   .tracing(true) | .tracer(t)      — end-to-end spans ([`crate::obs`])
+//!   .slo(..)                         — latency objective + target fraction
+//!   .journaling(..) | .journal(j)    — structured event log
+//!   .telemetry(..)                   — live sampled timeline ([`crate::obs`])
 //!   .build()?                        — validated; InvalidConfig, not a hang
 //!   ▼
 //! NpeService ── submit(input)? ──► Ticket ── wait()/wait_timeout()? ──► InferenceResponse
@@ -53,7 +56,9 @@ pub mod ticket;
 pub(crate) use admission::ServeShared;
 
 pub use admission::AdmissionPolicy;
-pub use builder::{IntoServedModel, ServeBuilder, DEFAULT_GRAPH_WEIGHT_SEED};
+pub use builder::{
+    IntoServedModel, ServeBuilder, DEFAULT_GRAPH_WEIGHT_SEED, DEFAULT_JOURNAL_CAPACITY,
+};
 pub use error::ServeError;
 pub use registry::{ModelRegistry, RegistryBuilder};
 pub use service::{NpeService, ServiceClient};

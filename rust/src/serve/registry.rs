@@ -33,7 +33,13 @@ use super::ticket::Ticket;
 use crate::coordinator::{BatcherConfig, CoordinatorMetrics, ServedModel};
 use crate::fleet::{DeviceSpec, FleetPool};
 use crate::mapper::{NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
-use crate::obs::{chrome_trace_json, MetricsSnapshot, TraceLog, Tracer};
+use crate::obs::{
+    chrome_trace_json_with, merge_expositions, EventJournal, EventKind, JournalSink,
+    MetricsSnapshot, SamplerConfig, Severity, SloConfig, SloStatus, TelemetrySampler,
+    TelemetrySource, TimelineSnapshot, TraceLog, Tracer,
+};
+use crate::util;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// One tenant registration, staged until [`RegistryBuilder::build`].
@@ -54,6 +60,9 @@ pub struct RegistryBuilder {
     cache_capacity: usize,
     admission: AdmissionPolicy,
     tracer: Option<Arc<Tracer>>,
+    slo: Option<SloConfig>,
+    journal_capacity: Option<usize>,
+    telemetry: Option<SamplerConfig>,
     tenants: Vec<Registration>,
 }
 
@@ -71,6 +80,9 @@ impl RegistryBuilder {
             cache_capacity: DEFAULT_SERVING_CACHE_CAPACITY,
             admission: AdmissionPolicy::default(),
             tracer: None,
+            slo: None,
+            journal_capacity: None,
+            telemetry: None,
             tenants: Vec::new(),
         }
     }
@@ -121,6 +133,34 @@ impl RegistryBuilder {
     /// Implies tracing on.
     pub fn tracer(mut self, tracer: Arc<Tracer>) -> Self {
         self.tracer = Some(tracer);
+        self
+    }
+
+    /// Track a latency SLO for **every** tenant: each gets its own
+    /// [`SloTracker`](crate::obs::SloTracker) over this objective,
+    /// evaluated against its own latency lanes — surfaced per tenant in
+    /// [`ModelRegistry::slo_status`] and the labelled Prometheus
+    /// exposition. Default: off.
+    pub fn slo(mut self, config: SloConfig) -> Self {
+        self.slo = Some(config);
+        self
+    }
+
+    /// Enable one fleet-wide [`EventJournal`] of `capacity` events:
+    /// every tenant journals into it through a tenant-labelled sink, so
+    /// sheds / admission rejects / SLO exhaustions stay queryable per
+    /// tenant while fleet-wide events (cache evictions) carry no tenant.
+    /// Default: off.
+    pub fn journaling(mut self, capacity: usize) -> Self {
+        self.journal_capacity = Some(capacity);
+        self
+    }
+
+    /// Enable one fleet-wide telemetry sampler over the shared pool:
+    /// queue depth, in-flight (summed across tenants), per-device
+    /// occupancy and rolling throughput/shed rates. Default: off.
+    pub fn telemetry(mut self, config: SamplerConfig) -> Self {
+        self.telemetry = Some(config);
         self
     }
 
@@ -175,6 +215,7 @@ impl RegistryBuilder {
 
         let cache = ScheduleCache::shared_bounded(self.cache_capacity);
         let pool = FleetPool::launch(&specs, Arc::clone(&cache), self.tracer.clone());
+        let journal = self.journal_capacity.map(EventJournal::shared);
         let mut tenants: Vec<(String, NpeService)> = Vec::with_capacity(self.tenants.len());
         for reg in self.tenants {
             let mut builder = NpeService::builder(reg.model)
@@ -185,6 +226,12 @@ impl RegistryBuilder {
                 .shared_cache(Arc::clone(&cache));
             if let Some(t) = &self.tracer {
                 builder = builder.tracer(Arc::clone(t));
+            }
+            if let Some(cfg) = self.slo {
+                builder = builder.slo(cfg);
+            }
+            if let Some(j) = &journal {
+                builder = builder.journal(Arc::clone(j));
             }
             match builder.build() {
                 Ok(service) => tenants.push((reg.name, service)),
@@ -199,7 +246,95 @@ impl RegistryBuilder {
                 }
             }
         }
-        Ok(ModelRegistry { tenants, pool, cache, tracer: self.tracer })
+        let sampler = self.telemetry.map(|cfg| {
+            fleet_sampler(cfg, &pool, &cache, &tenants, journal.as_ref(), self.tracer.as_ref())
+        });
+        Ok(ModelRegistry { tenants, pool, cache, tracer: self.tracer, journal, sampler })
+    }
+}
+
+/// Wire the registry's one fleet-wide sampler: queue depth and busy
+/// lanes come straight off the shared pool; in-flight / answered / shed
+/// are summed across every tenant's counters; the probe edge-detects
+/// each tenant's SLO budget (journaled under the tenant's name) and the
+/// shared cache's eviction deltas (fleet-wide, no tenant).
+fn fleet_sampler(
+    config: SamplerConfig,
+    pool: &Arc<FleetPool>,
+    cache: &Arc<ScheduleCache>,
+    tenants: &[(String, NpeService)],
+    journal: Option<&Arc<EventJournal>>,
+    tracer: Option<&Arc<Tracer>>,
+) -> Arc<TelemetrySampler> {
+    let queue_depth = {
+        let pool = Arc::clone(pool);
+        Box::new(move || pool.queued_requests() as u64) as Box<dyn Fn() -> u64 + Send + Sync>
+    };
+    let in_flight = {
+        let clients: Vec<_> = tenants.iter().map(|(_, svc)| svc.client()).collect();
+        Box::new(move || clients.iter().map(|c| c.in_flight() as u64).sum())
+            as Box<dyn Fn() -> u64 + Send + Sync>
+    };
+    let answered_total = {
+        let handles: Vec<_> = tenants.iter().map(|(_, svc)| svc.metrics_handle()).collect();
+        Box::new(move || handles.iter().map(|h| util::lock(h).latencies_recorded).sum())
+            as Box<dyn Fn() -> u64 + Send + Sync>
+    };
+    let shed_total = {
+        let handles: Vec<_> = tenants.iter().map(|(_, svc)| svc.metrics_handle()).collect();
+        Box::new(move || handles.iter().map(|h| util::lock(h).shed_requests).sum())
+            as Box<dyn Fn() -> u64 + Send + Sync>
+    };
+    let probe = journal.map(|j| {
+        let fleet_sink = JournalSink::new(Arc::clone(j), None);
+        let cache = Arc::clone(cache);
+        let last_evictions = AtomicU64::new(cache.stats().evictions);
+        let lanes: Vec<_> = tenants
+            .iter()
+            .filter_map(|(name, svc)| {
+                svc.slo_tracker().map(|tracker| {
+                    (JournalSink::new(Arc::clone(j), Some(name)), tracker, svc.metrics_handle())
+                })
+            })
+            .collect();
+        Box::new(move || {
+            let evictions = cache.stats().evictions;
+            let prev = last_evictions.swap(evictions, Ordering::Relaxed);
+            if evictions > prev {
+                fleet_sink.event(
+                    EventKind::CacheEviction,
+                    Severity::Info,
+                    format!("schedule cache evicted {} schedule(s)", evictions - prev),
+                );
+            }
+            for (sink, tracker, metrics) in &lanes {
+                let hist = util::lock(metrics).latencies.clone();
+                let (status, newly_exhausted) = tracker.track(&hist);
+                if newly_exhausted {
+                    sink.event(
+                        EventKind::SloBudgetExhausted,
+                        Severity::Error,
+                        format!(
+                            "error budget exhausted: burn {:.2}, compliance {:.4}",
+                            status.burn_rate, status.compliance
+                        ),
+                    );
+                }
+            }
+        }) as Box<dyn Fn() + Send + Sync>
+    });
+    let source = TelemetrySource {
+        queue_depth,
+        in_flight,
+        answered_total,
+        shed_total,
+        busy: Arc::clone(pool.busy_lanes()),
+        device_names: pool.device_names(),
+        probe,
+    };
+    match tracer {
+        Some(t) => TelemetrySampler::with_epoch(source, config, t.epoch()),
+        None => TelemetrySampler::new(source, config),
     }
 }
 
@@ -213,6 +348,10 @@ pub struct ModelRegistry {
     pool: Arc<FleetPool>,
     cache: Arc<ScheduleCache>,
     tracer: Option<Arc<Tracer>>,
+    /// The fleet-wide event journal, when journaling was enabled.
+    journal: Option<Arc<EventJournal>>,
+    /// The fleet-wide telemetry sampler, when telemetry was enabled.
+    sampler: Option<Arc<TelemetrySampler>>,
 }
 
 impl ModelRegistry {
@@ -268,16 +407,52 @@ impl ModelRegistry {
         Ok(self.service(tenant)?.metrics_snapshot().with_tenant(tenant))
     }
 
-    /// Prometheus text exposition for **all** tenants: each tenant's
-    /// samples labelled `tenant="<name>"`, concatenated into one scrape
-    /// body (HELP/TYPE headers repeat per tenant; Prometheus accepts
-    /// repeated headers for the same metric).
+    /// Prometheus text exposition for **all** tenants, merged into one
+    /// well-formed scrape body: each tenant's samples labelled
+    /// `tenant="<name>"`, grouped by metric family so every family
+    /// carries exactly one `# TYPE` header, with the fleet-wide
+    /// telemetry gauges (queue depth, occupancy, rates) appended once
+    /// when sampling is on.
     pub fn prometheus_text(&self) -> String {
-        let mut out = String::new();
-        for (name, svc) in &self.tenants {
-            out.push_str(&svc.metrics_snapshot().with_tenant(name).prometheus_text());
+        let texts: Vec<String> = self
+            .tenants
+            .iter()
+            .map(|(name, svc)| svc.metrics_snapshot().with_tenant(name).prometheus_text())
+            .collect();
+        let mut out = merge_expositions(texts.iter().map(String::as_str));
+        if let Some(timeline) = self.timeline() {
+            out.push_str(&timeline.prometheus_gauges());
         }
         out
+    }
+
+    /// One tenant's SLO status (`None` when the registry was built
+    /// without an objective).
+    pub fn slo_status(&self, tenant: &str) -> Result<Option<SloStatus>, ServeError> {
+        Ok(self.service(tenant)?.slo_status())
+    }
+
+    /// The fleet-wide event journal (`None` when journaling is off).
+    /// Query per tenant with
+    /// [`EventJournal::events_for`](crate::obs::EventJournal::events_for).
+    pub fn journal(&self) -> Option<Arc<EventJournal>> {
+        self.journal.clone()
+    }
+
+    /// The fleet-wide telemetry sampler (`None` when telemetry is off).
+    pub fn sampler(&self) -> Option<Arc<TelemetrySampler>> {
+        self.sampler.clone()
+    }
+
+    /// Owned snapshot of the fleet-wide telemetry ring (`None` when
+    /// telemetry is off).
+    pub fn timeline(&self) -> Option<TimelineSnapshot> {
+        self.sampler.as_ref().map(|s| s.snapshot())
+    }
+
+    /// The fleet-wide timeline as JSON (`None` when telemetry is off).
+    pub fn timeline_json(&self) -> Option<String> {
+        self.sampler.as_ref().map(|s| s.timeline_json())
     }
 
     /// Requests currently in flight for one tenant.
@@ -297,9 +472,10 @@ impl ModelRegistry {
     }
 
     /// The merged trace as Chrome-trace JSON: one `requests[<tenant>]`
-    /// track per tenant plus one track per shared device.
+    /// track per tenant plus one track per shared device, with the
+    /// fleet-wide timeline — when sampling is on — as counter tracks.
     pub fn trace_json(&self) -> String {
-        chrome_trace_json(&self.trace())
+        chrome_trace_json_with(&self.trace(), self.timeline().as_ref())
     }
 
     /// Shut down every tenant, then the shared pool, flushing pending
@@ -308,6 +484,12 @@ impl ModelRegistry {
     /// [`ServeError::DeviceLost`] if any coordinator or device thread
     /// died along the way (some responses may then be missing).
     pub fn shutdown(mut self) -> Result<(), ServeError> {
+        // Stop sampling before tearing tenants down: the sampler's
+        // closures read tenant counters and the probe walks tenant SLO
+        // lanes, so it must quiesce first.
+        if let Some(s) = &self.sampler {
+            s.stop();
+        }
         let mut lost = false;
         for (_, svc) in self.tenants.drain(..) {
             lost |= svc.shutdown().is_err();

@@ -14,15 +14,30 @@ use super::builder::{IntoServedModel, ServeBuilder};
 use super::error::ServeError;
 use super::ticket::{Responder, Ticket};
 use crate::coordinator::{
-    service_thread, BatcherConfig, CoordinatorMetrics, CoordinatorMsg, ExecutionPlan,
-    InferenceRequest, ServedModel,
+    service_thread, BatcherConfig, CoordinatorMetrics, CoordinatorMsg, CoordinatorObs,
+    ExecutionPlan, InferenceRequest, ServedModel,
 };
 use crate::mapper::ScheduleCache;
-use crate::obs::{chrome_trace_json, MetricsSnapshot, SpanKind, TraceLog, Tracer, TrackHandle};
+use crate::obs::{
+    chrome_trace_json_with, BusyLanes, EventJournal, EventKind, JournalSink, MetricsSnapshot,
+    SamplerConfig, Severity, SloConfig, SloStatus, SloTracker, SpanKind, TelemetrySampler,
+    TelemetrySource, TimelineSnapshot, TraceLog, Tracer, TrackHandle,
+};
 use crate::util;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Observability configuration handed from [`ServeBuilder`] into
+/// [`NpeService::start`]: tracer, SLO objective, event journal, and
+/// telemetry-sampler config — bundled so the start signature stays flat.
+pub(crate) struct ObsWiring {
+    pub(crate) tracer: Option<Arc<Tracer>>,
+    pub(crate) slo: Option<SloConfig>,
+    pub(crate) journal: Option<Arc<EventJournal>>,
+    pub(crate) telemetry: Option<SamplerConfig>,
+}
 
 /// A running serving instance: batcher, schedule cache, metrics and the
 /// executing device(s), behind one typed submit path.
@@ -38,6 +53,14 @@ pub struct NpeService {
     tracer: Option<Arc<Tracer>>,
     /// The request-pipeline track submit/admission spans record on.
     pipeline: Option<TrackHandle>,
+    /// The live telemetry sampler, when enabled at build time.
+    sampler: Option<Arc<TelemetrySampler>>,
+    /// The latency-SLO tracker, when an objective was configured.
+    slo: Option<Arc<SloTracker>>,
+    /// The structured event journal, when journaling was enabled.
+    journal: Option<Arc<EventJournal>>,
+    /// This service's (tenant-labelled) sink into `journal`.
+    journal_sink: Option<JournalSink>,
 }
 
 impl NpeService {
@@ -60,9 +83,10 @@ impl NpeService {
         cfg: BatcherConfig,
         cache: Arc<ScheduleCache>,
         admission: AdmissionPolicy,
-        tracer: Option<Arc<Tracer>>,
+        obs: ObsWiring,
         label: Option<&str>,
     ) -> Self {
+        let ObsWiring { tracer, slo, journal, telemetry } = obs;
         let (tx, rx) = mpsc::channel();
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
         let shared = ServeShared::new(model.input_len(), admission);
@@ -71,12 +95,123 @@ impl NpeService {
             None => "requests".to_string(),
         };
         let pipeline = tracer.as_ref().map(|t| t.register_track(&track_name));
-        let (metrics_t, cache_t, shared_t, tracer_t) =
-            (Arc::clone(&metrics), Arc::clone(&cache), Arc::clone(&shared), tracer.clone());
-        let handle = std::thread::spawn(move || {
-            service_thread(rx, model, plan, cfg, metrics_t, cache_t, shared_t, tracer_t)
+        let journal_sink = journal.as_ref().map(|j| JournalSink::new(Arc::clone(j), label));
+        let slo = slo.map(|cfg| Arc::new(SloTracker::new(cfg)));
+
+        // Busy lanes + device names: the pool's own lanes on the fleet
+        // path (its devices stamp them), a fresh single lane stamped by
+        // the coordinator's dispatch on the single-NPE path.
+        let (busy, device_names, pool_handle) = match &plan {
+            ExecutionPlan::Single { geometry, .. } => (
+                BusyLanes::new(1),
+                vec![format!("device 0 [{}x{}]", geometry.tg_rows, geometry.tg_cols)],
+                None,
+            ),
+            ExecutionPlan::Pool { pool, .. } => (
+                Arc::clone(pool.busy_lanes()),
+                pool.device_names(),
+                Some(Arc::clone(pool)),
+            ),
+        };
+
+        let sampler = telemetry.map(|sampler_cfg| {
+            let queue_depth: Box<dyn Fn() -> u64 + Send + Sync> = match pool_handle {
+                Some(pool) => Box::new(move || pool.queued_requests() as u64),
+                // The single path has no shared work queue — its backlog
+                // (the batcher's pending buffer) is private to the
+                // coordinator loop, so the gauge reads 0 there and load
+                // shows up in `in_flight` instead.
+                None => Box::new(|| 0),
+            };
+            let in_flight = {
+                let s = Arc::clone(&shared);
+                Box::new(move || s.depth() as u64) as Box<dyn Fn() -> u64 + Send + Sync>
+            };
+            let answered_total = {
+                let m = Arc::clone(&metrics);
+                Box::new(move || util::lock(&m).latencies_recorded)
+                    as Box<dyn Fn() -> u64 + Send + Sync>
+            };
+            let shed_total = {
+                let m = Arc::clone(&metrics);
+                Box::new(move || util::lock(&m).shed_requests)
+                    as Box<dyn Fn() -> u64 + Send + Sync>
+            };
+            // Journal checks ride the tick as a side probe: cache
+            // evictions land as deltas, and the SLO tracker's budget
+            // transitions are edge-detected (journaled once per
+            // exhaustion, re-armed on recovery).
+            let probe = journal_sink.clone().map(|sink| {
+                let metrics = Arc::clone(&metrics);
+                let cache = Arc::clone(&cache);
+                let slo = slo.clone();
+                let last_evictions = AtomicU64::new(cache.stats().evictions);
+                Box::new(move || {
+                    let evictions = cache.stats().evictions;
+                    let prev = last_evictions.swap(evictions, Ordering::Relaxed);
+                    if evictions > prev {
+                        sink.event(
+                            EventKind::CacheEviction,
+                            Severity::Info,
+                            format!("schedule cache evicted {} schedule(s)", evictions - prev),
+                        );
+                    }
+                    if let Some(tracker) = &slo {
+                        let hist = util::lock(&metrics).latencies.clone();
+                        let (status, newly_exhausted) = tracker.track(&hist);
+                        if newly_exhausted {
+                            sink.event(
+                                EventKind::SloBudgetExhausted,
+                                Severity::Error,
+                                format!(
+                                    "error budget exhausted: burn {:.2}, compliance {:.4}",
+                                    status.burn_rate, status.compliance
+                                ),
+                            );
+                        }
+                    }
+                }) as Box<dyn Fn() + Send + Sync>
+            });
+            let source = TelemetrySource {
+                queue_depth,
+                in_flight,
+                answered_total,
+                shed_total,
+                busy: Arc::clone(&busy),
+                device_names: device_names.clone(),
+                probe,
+            };
+            // Share the tracer's epoch when there is one, so timeline
+            // ticks and trace spans land on the same timebase.
+            match &tracer {
+                Some(t) => TelemetrySampler::with_epoch(source, sampler_cfg, t.epoch()),
+                None => TelemetrySampler::new(source, sampler_cfg),
+            }
         });
-        Self { tx, handle: Some(handle), shared, metrics, cache, tracer, pipeline }
+
+        let (metrics_t, cache_t, shared_t) =
+            (Arc::clone(&metrics), Arc::clone(&cache), Arc::clone(&shared));
+        let coordinator_obs = CoordinatorObs {
+            tracer: tracer.clone(),
+            busy,
+            journal: journal_sink.clone(),
+        };
+        let handle = std::thread::spawn(move || {
+            service_thread(rx, model, plan, cfg, metrics_t, cache_t, shared_t, coordinator_obs)
+        });
+        Self {
+            tx,
+            handle: Some(handle),
+            shared,
+            metrics,
+            cache,
+            tracer,
+            pipeline,
+            sampler,
+            slo,
+            journal,
+            journal_sink,
+        }
     }
 
     /// Submit one request. Shape and admission are checked here, in the
@@ -84,7 +219,14 @@ impl NpeService {
     /// queue space, and the error comes back immediately instead of as a
     /// hung channel.
     pub fn submit(&self, input: Vec<i16>) -> Result<Ticket, ServeError> {
-        submit_via(&self.tx, &self.shared, &self.metrics, self.pipeline.as_ref(), input)
+        submit_via(
+            &self.tx,
+            &self.shared,
+            &self.metrics,
+            self.pipeline.as_ref(),
+            self.journal_sink.as_ref(),
+            input,
+        )
     }
 
     /// A cloneable submit-only handle for concurrent client threads.
@@ -94,6 +236,7 @@ impl NpeService {
             shared: Arc::clone(&self.shared),
             metrics: Arc::clone(&self.metrics),
             pipeline: self.pipeline.clone(),
+            journal: self.journal_sink.clone(),
         }
     }
 
@@ -120,17 +263,63 @@ impl NpeService {
     }
 
     /// The current trace as Chrome-trace JSON (loadable in Perfetto /
-    /// `chrome://tracing`). Empty but valid JSON when untraced.
+    /// `chrome://tracing`), with the telemetry timeline — when sampling
+    /// is on — rendered as counter tracks alongside the spans. Empty but
+    /// valid JSON when untraced.
     pub fn trace_json(&self) -> String {
-        chrome_trace_json(&self.trace())
+        chrome_trace_json_with(&self.trace(), self.timeline().as_ref())
     }
 
     /// One coherent observability snapshot: overlaid service counters
     /// plus per-layer cycle/energy attribution aggregated from the
-    /// trace. Exports to Prometheus text or JSON.
+    /// trace, the SLO status (when an objective is configured) and the
+    /// telemetry timeline (when sampling is on). Exports to Prometheus
+    /// text or JSON.
     pub fn metrics_snapshot(&self) -> MetricsSnapshot {
         let log = self.tracer.as_ref().map(|t| t.snapshot());
-        MetricsSnapshot::new(self.metrics(), log.as_ref())
+        let mut snap = MetricsSnapshot::new(self.metrics(), log.as_ref());
+        if let Some(status) = self.slo_status() {
+            snap = snap.with_slo(status);
+        }
+        if let Some(timeline) = self.timeline() {
+            snap = snap.with_timeline(timeline);
+        }
+        snap
+    }
+
+    /// The live telemetry sampler, when enabled via
+    /// [`ServeBuilder::telemetry`](super::ServeBuilder::telemetry) —
+    /// tests use it to drive deterministic manual ticks.
+    pub fn sampler(&self) -> Option<Arc<TelemetrySampler>> {
+        self.sampler.clone()
+    }
+
+    /// Owned snapshot of the telemetry ring (`None` when sampling is
+    /// off).
+    pub fn timeline(&self) -> Option<TimelineSnapshot> {
+        self.sampler.as_ref().map(|s| s.snapshot())
+    }
+
+    /// The telemetry timeline as JSON (`None` when sampling is off).
+    pub fn timeline_json(&self) -> Option<String> {
+        self.sampler.as_ref().map(|s| s.timeline_json())
+    }
+
+    /// Current SLO status, evaluated against the live latency histogram
+    /// (`None` when no objective was configured).
+    pub fn slo_status(&self) -> Option<SloStatus> {
+        self.slo.as_ref().map(|t| t.evaluate(&util::lock(&self.metrics).latencies))
+    }
+
+    /// The structured event journal (`None` when journaling is off).
+    pub fn journal(&self) -> Option<Arc<EventJournal>> {
+        self.journal.clone()
+    }
+
+    /// The SLO tracker itself (registry wiring: the fleet-wide sampler's
+    /// probe edge-detects every tenant's budget transitions through it).
+    pub(crate) fn slo_tracker(&self) -> Option<Arc<SloTracker>> {
+        self.slo.clone()
     }
 
     /// Shared handle to the live metrics, for monitors that keep
@@ -157,6 +346,9 @@ impl NpeService {
     /// died along the way (some responses may then be missing).
     pub fn shutdown(mut self) -> Result<(), ServeError> {
         self.shared.begin_shutdown();
+        if let Some(s) = &self.sampler {
+            s.stop();
+        }
         let _ = self.tx.send(CoordinatorMsg::Shutdown);
         match self.handle.take() {
             None => Ok(()),
@@ -175,6 +367,9 @@ impl Drop for NpeService {
     /// for it or observe device health.
     fn drop(&mut self) {
         self.shared.begin_shutdown();
+        if let Some(s) = &self.sampler {
+            s.stop();
+        }
         let _ = self.tx.send(CoordinatorMsg::Shutdown);
     }
 }
@@ -187,13 +382,21 @@ pub struct ServiceClient {
     shared: Arc<ServeShared>,
     metrics: Arc<Mutex<CoordinatorMetrics>>,
     pipeline: Option<TrackHandle>,
+    journal: Option<JournalSink>,
 }
 
 impl ServiceClient {
     /// Submit one request (same checks and semantics as
     /// [`NpeService::submit`]).
     pub fn submit(&self, input: Vec<i16>) -> Result<Ticket, ServeError> {
-        submit_via(&self.tx, &self.shared, &self.metrics, self.pipeline.as_ref(), input)
+        submit_via(
+            &self.tx,
+            &self.shared,
+            &self.metrics,
+            self.pipeline.as_ref(),
+            self.journal.as_ref(),
+            input,
+        )
     }
 
     /// Requests currently in flight.
@@ -209,6 +412,7 @@ fn submit_via(
     shared: &Arc<ServeShared>,
     metrics: &Mutex<CoordinatorMetrics>,
     pipeline: Option<&TrackHandle>,
+    journal: Option<&JournalSink>,
     input: Vec<i16>,
 ) -> Result<Ticket, ServeError> {
     let entered = Instant::now();
@@ -228,6 +432,13 @@ fn submit_via(
         Ok(pair) => pair,
         Err(err) => {
             util::lock(metrics).shed_requests += 1;
+            if let Some(j) = journal {
+                j.event(
+                    EventKind::AdmissionReject,
+                    Severity::Warn,
+                    format!("admission refused a request: {err}"),
+                );
+            }
             return Err(err);
         }
     };

@@ -1,0 +1,325 @@
+//! Live-telemetry end-to-end: the manual-tick sampler is deterministic
+//! across runs of the same seeded load, per-device occupancy reflects
+//! real busy windows (in (0, 1] under load, exactly 0 when idle), the
+//! SLO math is exact on a hand-built histogram and surfaces through the
+//! service, serving events land in the bounded journal with overflow
+//! accounted, and the multi-tenant registry merges all of it into one
+//! well-formed exposition.
+//!
+//! CI runs this file with pinned test threads (`--test-threads 2`): the
+//! occupancy and quiescence assertions reason about wall-time windows,
+//! and an oversubscribed runner would make those windows lie.
+
+use std::time::{Duration, Instant};
+use tcd_npe::coordinator::BatcherConfig;
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::{MlpTopology, QuantizedMlp};
+use tcd_npe::obs::{EventKind, LogHistogram, SamplerConfig, SloConfig, SloTracker};
+use tcd_npe::serve::{AdmissionPolicy, ModelRegistry, NpeService, ServeError};
+use tcd_npe::util::json::JsonValue;
+
+fn mlp(seed: u64) -> QuantizedMlp {
+    QuantizedMlp::synthesize(MlpTopology::new(vec![8, 6, 2]), seed)
+}
+
+/// The depth slot is released *after* the response send (the responder's
+/// drop), so a woken client can observe `in_flight() == 1` for a moment.
+/// Telemetry ticks that want load-determined gauges must wait out that
+/// window.
+fn quiesce(in_flight: impl Fn() -> usize) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while in_flight() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(in_flight(), 0, "service quiesces after every ticket answered");
+}
+
+/// One seeded three-wave run against a manual-tick sampler, ticked only
+/// at fully quiesced points. Returns the timeline fingerprint and the
+/// per-tick answered totals.
+fn seeded_wave_run() -> (u64, Vec<u64>) {
+    let model = mlp(0x5EED);
+    let service = NpeService::builder(model.clone())
+        .devices(vec![NpeGeometry::PAPER; 2])
+        .batcher(BatcherConfig::new(4, Duration::from_micros(200)))
+        .telemetry(SamplerConfig::manual())
+        .build()
+        .expect("valid service");
+    let sampler = service.sampler().expect("telemetry enabled");
+    sampler.tick(); // tick 0: idle baseline
+    for wave in 0u64..3 {
+        let inputs = model.synth_inputs(8, 0xDA7A ^ wave);
+        let tickets: Vec<_> = inputs
+            .into_iter()
+            .map(|x| service.submit(x).expect("admitted"))
+            .collect();
+        for t in tickets {
+            t.wait_timeout(Duration::from_secs(30)).expect("answered");
+        }
+        quiesce(|| service.in_flight());
+        sampler.tick(); // gauges at this point are load-determined
+    }
+    let snap = sampler.snapshot();
+    let answered: Vec<u64> = snap.samples.iter().map(|s| s.answered_total).collect();
+    let fp = snap.fingerprint();
+    service.shutdown().expect("clean shutdown");
+    (fp, answered)
+}
+
+#[test]
+fn manual_tick_timeline_is_identical_across_runs() {
+    let (fp1, answered1) = seeded_wave_run();
+    let (fp2, answered2) = seeded_wave_run();
+    assert_eq!(answered1, vec![0, 8, 16, 24], "quiesced ticks read exact totals");
+    assert_eq!(answered1, answered2);
+    assert_eq!(fp1, fp2, "same seeded load at the same tick points = same fingerprint");
+}
+
+#[test]
+fn occupancy_is_positive_under_load_and_zero_idle() {
+    let model = mlp(0x0CC);
+    let service = NpeService::builder(model.clone())
+        .devices(vec![NpeGeometry::PAPER]) // one device: it must do all the work
+        .batcher(BatcherConfig::new(8, Duration::from_micros(200)))
+        .telemetry(SamplerConfig::manual())
+        .build()
+        .expect("valid service");
+    let sampler = service.sampler().expect("telemetry enabled");
+    sampler.tick(); // baseline for the busy delta
+    let tickets: Vec<_> = model
+        .synth_inputs(32, 0xDA7A)
+        .into_iter()
+        .map(|x| service.submit(x).expect("admitted"))
+        .collect();
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(30)).expect("answered");
+    }
+    quiesce(|| service.in_flight());
+    sampler.tick();
+    let snap = sampler.snapshot();
+    let occ = snap.latest().expect("ticked").occupancy.clone();
+    assert_eq!(occ.len(), 1);
+    assert!(
+        occ[0] > 0.0 && occ[0] <= 1.0,
+        "window covering 32 executions has occupancy in (0, 1], got {}",
+        occ[0]
+    );
+    // A window in which the device never executed is exactly zero.
+    std::thread::sleep(Duration::from_millis(5));
+    sampler.tick();
+    let occ = sampler.snapshot().latest().expect("ticked").occupancy.clone();
+    assert_eq!(occ, vec![0.0], "idle window is exactly zero");
+    service.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn slo_math_is_exact_and_surfaces_through_the_service() {
+    // Hand-built histogram: 90 answers at 10 µs, 10 at 1024 µs — all far
+    // from the 16 µs objective's bucket boundary, so counts are exact.
+    let mut h = LogHistogram::new();
+    for _ in 0..90 {
+        h.record(10_000);
+    }
+    for _ in 0..10 {
+        h.record(1_024_000);
+    }
+    let tracker = SloTracker::new(SloConfig::new(16, 0.95));
+    let s = tracker.evaluate(&h);
+    assert_eq!((s.good, s.bad), (90, 10));
+    assert!((s.compliance - 0.90).abs() < 1e-12);
+    // Allowed bad fraction 5 %, observed 10 % → burn rate exactly 2.
+    assert!((s.burn_rate - 2.0).abs() < 1e-12);
+    assert!(s.exhausted());
+
+    // End to end: a served workload under a generous objective is fully
+    // compliant with zero burn, and the status reaches the exposition.
+    let model = mlp(0x510);
+    let service = NpeService::builder(model.clone())
+        .geometry(NpeGeometry::PAPER)
+        .batcher(BatcherConfig::new(4, Duration::from_micros(200)))
+        .slo(SloConfig::new(60_000_000, 0.99))
+        .build()
+        .expect("valid service");
+    for x in model.synth_inputs(8, 0xDA7A) {
+        service
+            .submit(x)
+            .expect("admitted")
+            .wait_timeout(Duration::from_secs(30))
+            .expect("answered");
+    }
+    let status = service.slo_status().expect("slo configured");
+    assert_eq!(status.total(), 8);
+    assert_eq!(status.good, 8);
+    assert_eq!(status.compliance, 1.0);
+    assert_eq!(status.burn_rate, 0.0);
+    assert!(!status.exhausted());
+    let text = service.metrics_snapshot().prometheus_text();
+    assert!(text.contains("npe_slo_objective_us 60000000"));
+    assert!(text.contains("npe_slo_good_total 8"));
+    assert!(text.contains("npe_slo_compliance 1.000000"));
+    service.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn admission_rejects_journal_with_overflow_accounting() {
+    let model = mlp(0x10C);
+    // max_batch 64 + a 200 ms flush timer: the first admitted request
+    // parks in the batcher, holding the single depth slot, while the
+    // following submits (microseconds later) are all refused.
+    let service = NpeService::builder(model.clone())
+        .geometry(NpeGeometry::PAPER)
+        .batcher(BatcherConfig::new(64, Duration::from_millis(200)))
+        .admission(AdmissionPolicy::Reject { max_depth: 1 })
+        .journaling(4)
+        .label("iris")
+        .build()
+        .expect("valid service");
+    let inputs = model.synth_inputs(16, 0xDA7A);
+    let first = service.submit(inputs[0].clone()).expect("first admitted");
+    let mut rejected = 0usize;
+    for x in &inputs[1..] {
+        match service.submit(x.clone()) {
+            Err(ServeError::QueueFull { .. }) => rejected += 1,
+            Ok(t) => drop(t), // only possible if the batch flushed early
+            Err(e) => panic!("unexpected submit error: {e:?}"),
+        }
+    }
+    assert!(rejected >= 5, "depth bound 1 holds while the batcher waits, got {rejected}");
+    first.wait_timeout(Duration::from_secs(30)).expect("answered");
+    let journal = service.journal().expect("journaling enabled");
+    let events = journal.events();
+    assert!(events.len() <= 4, "journal stays at its capacity");
+    assert_eq!(
+        events.len() + journal.dropped() as usize,
+        rejected,
+        "every refusal journaled; displaced events counted, not lost silently"
+    );
+    assert!(journal.dropped() >= 1, "16 submits against capacity 4 must overflow");
+    // The *newest* events survive; monotonic sequence numbers show the
+    // gap left by the dropped oldest ones.
+    let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "sequence stays monotonic: {seqs:?}");
+    assert_eq!(seqs.last().copied(), Some(rejected as u64 - 1), "newest event retained");
+    for e in &events {
+        assert_eq!(e.kind, EventKind::AdmissionReject);
+        assert_eq!(e.tenant.as_deref(), Some("iris"), "sink carries the service label");
+        assert!(e.render().contains("admission_reject"), "{}", e.render());
+    }
+    assert_eq!(journal.events_for("iris").len(), events.len());
+    assert!(journal.events_for("other").is_empty());
+    service.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn registry_merges_tenant_slo_and_fleet_telemetry() {
+    let (a, b) = (mlp(10), mlp(20));
+    let registry = ModelRegistry::builder()
+        .devices([NpeGeometry::PAPER, NpeGeometry::PAPER])
+        .batcher(BatcherConfig::new(4, Duration::from_micros(500)))
+        .tracing(true)
+        .slo(SloConfig::new(60_000_000, 0.99))
+        .journaling(32)
+        .telemetry(SamplerConfig::manual())
+        .register("a", a.clone())
+        .register("b", b.clone())
+        .build()
+        .expect("valid registry");
+    let sampler = registry.sampler().expect("telemetry enabled");
+    for x in a.synth_inputs(4, 1) {
+        registry
+            .submit("a", x)
+            .expect("routed")
+            .wait_timeout(Duration::from_secs(30))
+            .expect("answered");
+    }
+    for x in b.synth_inputs(4, 2) {
+        registry
+            .submit("b", x)
+            .expect("routed")
+            .wait_timeout(Duration::from_secs(30))
+            .expect("answered");
+    }
+    quiesce(|| {
+        registry.in_flight("a").expect("known") + registry.in_flight("b").expect("known")
+    });
+    sampler.tick();
+
+    // The fleet-wide sample sums both tenants' counters.
+    let tl = registry.timeline().expect("telemetry enabled");
+    let s = tl.latest().expect("ticked");
+    assert_eq!(s.answered_total, 8, "answered is summed across tenants");
+    assert_eq!(s.in_flight, 0);
+    assert_eq!(s.queue_depth, 0);
+    assert_eq!(s.occupancy.len(), 2, "one lane per shared device");
+
+    // Per-tenant SLO status under a generous objective.
+    let slo = registry.slo_status("a").expect("known").expect("slo configured");
+    assert_eq!(slo.total(), 4);
+    assert_eq!(slo.compliance, 1.0);
+    assert!(matches!(registry.slo_status("nope"), Err(ServeError::UnknownTenant { .. })));
+
+    // Merged exposition: one TYPE header per family across tenants,
+    // tenant labels on every per-tenant sample, fleet gauges appended.
+    let text = registry.prometheus_text();
+    let mut families = std::collections::BTreeSet::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let fam = rest.split(' ').next().unwrap_or("");
+            assert!(families.insert(fam.to_string()), "family {fam} declared twice");
+        }
+    }
+    assert!(text.contains("npe_requests_total{tenant=\"a\"} 4"));
+    assert!(text.contains("npe_requests_total{tenant=\"b\"} 4"));
+    assert!(text.contains("npe_slo_compliance{tenant=\"a\"} 1.000000"));
+    assert!(text.contains("npe_queue_depth 0"));
+    assert!(text.contains("npe_in_flight 0"));
+    assert!(text.contains("npe_device_occupancy{device=\"0\"}"));
+    assert!(text.contains("npe_device_occupancy{device=\"1\"}"));
+
+    // The timeline JSON round-trips through the in-repo parser and
+    // advertises the fingerprint the snapshot computes.
+    let tj = registry.timeline_json().expect("telemetry enabled");
+    let doc = JsonValue::parse(&tj).expect("timeline JSON parses");
+    let samples = doc.get("samples").and_then(JsonValue::as_arr).expect("samples array");
+    assert_eq!(samples.len(), 1);
+    assert_eq!(samples[0].get("answered_total").and_then(JsonValue::as_u64), Some(8));
+    assert_eq!(
+        doc.get("fingerprint").and_then(JsonValue::as_u64),
+        Some(tl.fingerprint()),
+        "exported fingerprint matches the snapshot's"
+    );
+
+    // With tracing + telemetry both on, the Chrome export carries the
+    // timeline as counter tracks next to the span tracks.
+    let trace = registry.trace_json();
+    assert!(trace.contains("npe load"), "counter track exported");
+    registry.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn background_sampler_feeds_service_prometheus_gauges() {
+    let model = mlp(0xB6);
+    let service = NpeService::builder(model.clone())
+        .devices(vec![NpeGeometry::PAPER; 2])
+        .batcher(BatcherConfig::new(8, Duration::from_micros(200)))
+        .telemetry(SamplerConfig::default().with_period(Duration::from_millis(5)))
+        .build()
+        .expect("valid service");
+    for x in model.synth_inputs(16, 0xDA7A) {
+        service
+            .submit(x)
+            .expect("admitted")
+            .wait_timeout(Duration::from_secs(30))
+            .expect("answered");
+    }
+    let sampler = service.sampler().expect("telemetry enabled");
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while sampler.ticks() < 2 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(sampler.ticks() >= 2, "background thread ticks on its own");
+    let text = service.metrics_snapshot().prometheus_text();
+    assert!(text.contains("npe_queue_depth"), "gauges reach the service exposition");
+    assert!(text.contains("npe_device_occupancy{device=\"0\"}"));
+    service.shutdown().expect("clean shutdown");
+}
