@@ -1,20 +1,22 @@
 //! Bench E7 — fleet serving: simulated throughput and wall-latency
 //! percentiles vs device count (1/2/4/8) under the seeded Poisson load,
 //! the cached-vs-cold Algorithm-1 microbenchmark, the admission-policy
-//! sweep (Block vs Reject at 2× saturation), and the two-tenant
-//! contention sweep on a shared registry pool.
+//! sweep (Block vs Reject at 2× saturation), the two-tenant contention
+//! sweep on a shared registry pool, and the fixed-vs-elastic load-step
+//! sweep.
 //!
 //! Run: `cargo bench --bench fleet_bench`
 //!
 //! Emits `BENCH_fleet.json` in the working directory so CI can archive
-//! the trajectory (throughput/p99/shed rate vs device count, policy and
-//! tenant) across PRs.
+//! the trajectory (throughput/p99/shed rate vs device count, policy,
+//! tenant and elastic scenario) across PRs.
 
 #![deny(deprecated)]
 
 use tcd_npe::bench::{
-    admission_rows, fleet_json, fleet_rows, mapper_cache_bench, render_admission_table,
-    render_fleet_table, render_tenant_table, tenant_rows,
+    admission_rows, elastic_rows, fleet_json, fleet_rows, mapper_cache_bench,
+    render_admission_table, render_elastic_table, render_fleet_table, render_tenant_table,
+    tenant_rows,
 };
 use tcd_npe::fleet::LoadGenConfig;
 
@@ -33,6 +35,10 @@ fn main() {
     let tenants = tenant_rows(&load);
     println!("{}", render_tenant_table(&tenants));
 
+    println!("=== elastic pool vs fixed-min baseline under a load step ===");
+    let elastic = elastic_rows(&load);
+    println!("{}", render_elastic_table(&elastic));
+
     println!("=== Algorithm-1 cold vs schedule cache (Table-IV Γ set, B=8) ===");
     let mapper = mapper_cache_bench(200);
     println!(
@@ -43,7 +49,7 @@ fn main() {
         mapper.speedup()
     );
 
-    let json = fleet_json(&rows, &admission, &tenants, &mapper, &load);
+    let json = fleet_json(&rows, &admission, &tenants, &elastic, &mapper, &load);
     match std::fs::write("BENCH_fleet.json", &json) {
         Ok(()) => println!("\nwrote BENCH_fleet.json"),
         Err(e) => eprintln!("\ncould not write BENCH_fleet.json: {e}"),

@@ -7,11 +7,16 @@
 //! `BENCH_fleet.json`.
 
 use crate::coordinator::{BatcherConfig, ServedModel};
-use crate::fleet::{poisson_arrivals, run_open_loop, submit_open_loop, LoadGenConfig};
+use crate::fleet::{
+    poisson_arrivals, run_open_loop, submit_open_loop, ControllerConfig, LoadGenConfig,
+};
 use crate::mapper::{Gamma, MapperTree, NpeGeometry, ScheduleCache};
 use crate::model::{benchmark_by_name, benchmarks, QuantizedMlp};
+use crate::obs::EventKind;
 use crate::serve::{AdmissionPolicy, ModelRegistry, NpeService, ServeError};
 use crate::util::TextTable;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Device counts swept by the fleet bench.
@@ -389,6 +394,129 @@ pub fn tenant_rows(load: &LoadGenConfig) -> Vec<TenantRow> {
     rows
 }
 
+/// Elastic sweep bounds: the pool starts (and must settle back) at
+/// `ELASTIC_MIN_DEVICES` and may grow to `ELASTIC_MAX_DEVICES`.
+pub const ELASTIC_MIN_DEVICES: usize = 1;
+pub const ELASTIC_MAX_DEVICES: usize = 4;
+
+/// One scenario of the elastic load-step sweep: the same burst driven
+/// through a fixed pool of `ELASTIC_MIN_DEVICES` devices (the baseline
+/// an elastic pool must beat) and through an elastic pool the
+/// [`PoolController`](crate::fleet::PoolController) resizes live.
+#[derive(Debug, Clone)]
+pub struct ElasticRow {
+    /// Scenario label (`fixed-min` / `elastic`).
+    pub scenario: &'static str,
+    pub requests: u64,
+    pub answered: u64,
+    pub wall_p50_us: f64,
+    pub wall_p99_us: f64,
+    /// Most devices live at any point during the run (sampled).
+    pub peak_devices: usize,
+    /// Devices live after the post-burst settle window.
+    pub settled_devices: usize,
+    /// `PoolResize` journal entries recorded over the run.
+    pub resize_events: u64,
+}
+
+/// The fixed-size baseline: the burst through `ELASTIC_MIN_DEVICES`
+/// devices, no controller.
+fn elastic_baseline_row(load: &LoadGenConfig) -> ElasticRow {
+    let model = iris_model();
+    let arrivals = poisson_arrivals(&model, load);
+    let service = NpeService::builder(model)
+        .devices(vec![NpeGeometry::PAPER; ELASTIC_MIN_DEVICES])
+        .batcher(BatcherConfig::new(8, Duration::from_micros(200)))
+        .build()
+        .expect("valid baseline config");
+    let responses = run_open_loop(&service, &arrivals, Duration::from_secs(60));
+    let answered = responses.iter().filter(|o| o.is_some()).count() as u64;
+    let m = service.metrics();
+    service.shutdown().expect("baseline shutdown");
+    ElasticRow {
+        scenario: "fixed-min",
+        requests: arrivals.len() as u64,
+        answered,
+        wall_p50_us: m.p50_us(),
+        wall_p99_us: m.p99_us(),
+        peak_devices: ELASTIC_MIN_DEVICES,
+        settled_devices: ELASTIC_MIN_DEVICES,
+        resize_events: 0,
+    }
+}
+
+/// The elastic scenario: the same burst, but the controller may grow
+/// the pool to `ELASTIC_MAX_DEVICES` while the backlog is deep and must
+/// shrink it back to `ELASTIC_MIN_DEVICES` once the burst drains. A
+/// sampling thread records the peak live-device count; every resize is
+/// read back out of the event journal.
+fn elastic_controller_row(load: &LoadGenConfig) -> ElasticRow {
+    let model = iris_model();
+    let arrivals = poisson_arrivals(&model, load);
+    // Fast cadence so the sweep settles in milliseconds, not the
+    // serving-grade defaults: grow as soon as the backlog exceeds 4
+    // requests per device, shrink after 3 fully-idle ticks.
+    let cfg = ControllerConfig::default()
+        .with_period(Duration::from_millis(2))
+        .with_cooldown(Duration::from_millis(10))
+        .with_scale_down_idle_ticks(3);
+    let service = NpeService::builder(model)
+        .devices(vec![NpeGeometry::PAPER; ELASTIC_MIN_DEVICES])
+        .elastic(ELASTIC_MIN_DEVICES, ELASTIC_MAX_DEVICES)
+        .controller(cfg)
+        .batcher(BatcherConfig::new(8, Duration::from_micros(200)))
+        .journaling(4096)
+        .build()
+        .expect("valid elastic config");
+    let ctl = service.controller().expect("elastic service has a controller");
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let ctl = Arc::clone(&ctl);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut peak = ctl.pool_size();
+            while !stop.load(Ordering::Relaxed) {
+                peak = peak.max(ctl.pool_size());
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            peak
+        })
+    };
+    let responses = run_open_loop(&service, &arrivals, Duration::from_secs(60));
+    let answered = responses.iter().filter(|o| o.is_some()).count() as u64;
+    // Give the controller its idle ticks + cooldowns to reclaim the
+    // burst capacity; the sweep asserts it actually gets back to min.
+    let settle_deadline = Instant::now() + Duration::from_secs(10);
+    while ctl.pool_size() > ELASTIC_MIN_DEVICES && Instant::now() < settle_deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let peak_devices = monitor.join().expect("pool-size monitor");
+    let settled_devices = ctl.pool_size();
+    let resize_events = service
+        .journal()
+        .map(|j| j.events().iter().filter(|e| e.kind == EventKind::PoolResize).count() as u64)
+        .unwrap_or(0);
+    let m = service.metrics();
+    service.shutdown().expect("elastic shutdown");
+    ElasticRow {
+        scenario: "elastic",
+        requests: arrivals.len() as u64,
+        answered,
+        wall_p50_us: m.p50_us(),
+        wall_p99_us: m.p99_us(),
+        peak_devices: peak_devices.max(settled_devices),
+        settled_devices,
+        resize_events,
+    }
+}
+
+/// The elastic load-step sweep: fixed-min baseline, then the elastic
+/// pool under the identical seeded burst.
+pub fn elastic_rows(load: &LoadGenConfig) -> Vec<ElasticRow> {
+    vec![elastic_baseline_row(load), elastic_controller_row(load)]
+}
+
 /// Render the device-count sweep as a text table.
 pub fn render_fleet_table(rows: &[FleetRow], load: &LoadGenConfig) -> String {
     let mut t = TextTable::new(vec![
@@ -458,6 +586,35 @@ pub fn render_admission_table(rows: &[AdmissionRow]) -> String {
     )
 }
 
+/// Render the elastic load-step sweep as a text table.
+pub fn render_elastic_table(rows: &[ElasticRow]) -> String {
+    let mut t = TextTable::new(vec![
+        "Scenario",
+        "Answered",
+        "p50 (us)",
+        "p99 (us)",
+        "Peak devices",
+        "Settled",
+        "Resizes",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.scenario.to_string(),
+            format!("{}/{}", r.answered, r.requests),
+            format!("{:.0}", r.wall_p50_us),
+            format!("{:.0}", r.wall_p99_us),
+            r.peak_devices.to_string(),
+            r.settled_devices.to_string(),
+            r.resize_events.to_string(),
+        ]);
+    }
+    format!(
+        "Elastic pool under a load step — bounds [{ELASTIC_MIN_DEVICES}, \
+         {ELASTIC_MAX_DEVICES}], fixed-min baseline vs controller-resized pool\n{}",
+        t.render()
+    )
+}
+
 /// Render the tenant-contention sweep as a text table.
 pub fn render_tenant_table(rows: &[TenantRow]) -> String {
     let mut t = TextTable::new(vec![
@@ -498,6 +655,7 @@ pub fn fleet_json(
     rows: &[FleetRow],
     admission: &[AdmissionRow],
     tenants: &[TenantRow],
+    elastic: &[ElasticRow],
     mapper: &MapperCacheBench,
     load: &LoadGenConfig,
 ) -> String {
@@ -549,6 +707,24 @@ pub fn fleet_json(
             r.cache_hits,
             r.cache_misses,
             if i + 1 < tenants.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"elastic\": [\n");
+    for (i, r) in elastic.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"requests\": {}, \"answered\": {}, \
+             \"wall_p50_us\": {:.1}, \"wall_p99_us\": {:.1}, \"peak_devices\": {}, \
+             \"settled_devices\": {}, \"resize_events\": {}}}{}\n",
+            r.scenario,
+            r.requests,
+            r.answered,
+            r.wall_p50_us,
+            r.wall_p99_us,
+            r.peak_devices,
+            r.settled_devices,
+            r.resize_events,
+            if i + 1 < elastic.len() { "," } else { "" },
         ));
     }
     s.push_str("  ],\n");
@@ -678,6 +854,44 @@ mod tests {
     }
 
     #[test]
+    fn elastic_sweep_grows_under_burst_and_settles_back() {
+        // The ISSUE acceptance bar: under the same seeded burst, the
+        // controller grows past min (cutting tail latency below the
+        // fixed-min baseline), shrinks back to min once the burst
+        // drains, journals every resize, and loses nothing.
+        let load = LoadGenConfig { seed: 0xE1A5, rate_rps: 1e6, requests: 768 };
+        let rows = elastic_rows(&load);
+        assert_eq!(rows.len(), 2);
+        let (fixed, elastic) = (&rows[0], &rows[1]);
+        assert_eq!(fixed.scenario, "fixed-min");
+        assert_eq!(elastic.scenario, "elastic");
+        assert_eq!(fixed.answered, fixed.requests, "no loss at fixed size");
+        assert_eq!(elastic.answered, elastic.requests, "no loss across resizes");
+        assert!(
+            elastic.peak_devices > ELASTIC_MIN_DEVICES,
+            "controller never grew under a {}-request burst",
+            elastic.requests
+        );
+        assert_eq!(
+            elastic.settled_devices, ELASTIC_MIN_DEVICES,
+            "controller failed to reclaim burst capacity"
+        );
+        assert!(
+            elastic.resize_events >= 2,
+            "every grow and shrink must be journaled, saw {}",
+            elastic.resize_events
+        );
+        assert!(
+            elastic.wall_p99_us < fixed.wall_p99_us,
+            "elastic p99 {:.0}us not below fixed-min baseline {:.0}us",
+            elastic.wall_p99_us,
+            fixed.wall_p99_us
+        );
+        let table = render_elastic_table(&rows);
+        assert!(table.contains("fixed-min") && table.contains("elastic"));
+    }
+
+    #[test]
     fn json_is_shaped() {
         let load = LoadGenConfig { seed: 1, rate_rps: 2e6, requests: 16 };
         let rows = vec![fleet_row(1, &load)];
@@ -695,8 +909,18 @@ mod tests {
             cache_hits: 4,
             cache_misses: 2,
         }];
+        let elastic = vec![ElasticRow {
+            scenario: "fixed-min",
+            requests: 16,
+            answered: 16,
+            wall_p50_us: 1.0,
+            wall_p99_us: 2.0,
+            peak_devices: 1,
+            settled_devices: 1,
+            resize_events: 0,
+        }];
         let mapper = mapper_cache_bench(1);
-        let s = fleet_json(&rows, &admission, &tenants, &mapper, &load);
+        let s = fleet_json(&rows, &admission, &tenants, &elastic, &mapper, &load);
         assert!(s.contains("\"bench\": \"fleet\""));
         assert!(s.contains("\"devices\": 1"));
         assert!(s.contains("\"mapper_cache\""));
@@ -704,6 +928,8 @@ mod tests {
         assert!(s.contains("\"policy\": \"block\""));
         assert!(s.contains("\"tenants\""));
         assert!(s.contains("\"tenant\": \"greedy\""));
+        assert!(s.contains("\"elastic\""));
+        assert!(s.contains("\"scenario\": \"fixed-min\""));
         assert!(s.trim_end().ends_with('}'));
         let table = render_fleet_table(&rows, &load);
         assert!(table.contains("Devices"));

@@ -22,9 +22,10 @@ pub use exec::{
 };
 pub use fig10::{fig10_rows, render_fig10, Fig10Row};
 pub use fleet::{
-    admission_rows, fleet_json, fleet_row, fleet_rows, mapper_cache_bench,
-    render_admission_table, render_fleet_table, render_tenant_table, tenant_rows, AdmissionRow,
-    FleetRow, MapperCacheBench, TenantRow, FLEET_DEVICE_COUNTS, TENANT_POOL_DEVICES,
+    admission_rows, elastic_rows, fleet_json, fleet_row, fleet_rows, mapper_cache_bench,
+    render_admission_table, render_elastic_table, render_fleet_table, render_tenant_table,
+    tenant_rows, AdmissionRow, ElasticRow, FleetRow, MapperCacheBench, TenantRow,
+    ELASTIC_MAX_DEVICES, ELASTIC_MIN_DEVICES, FLEET_DEVICE_COUNTS, TENANT_POOL_DEVICES,
 };
 pub use graph::{graph_json, graph_rows, render_graph_table, GraphRow, GRAPH_BATCHES};
 pub use harness::BenchTimer;

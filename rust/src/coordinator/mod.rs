@@ -134,6 +134,10 @@ pub(crate) struct CoordinatorObs {
     pub(crate) tracer: Option<Arc<Tracer>>,
     pub(crate) busy: Arc<BusyLanes>,
     pub(crate) journal: Option<JournalSink>,
+    /// Tenant label stamped on fleet jobs, so the shared queue's
+    /// per-tenant lanes (weighted pop) can tell tenants apart. `None`
+    /// for single-tenant services — all jobs share one untagged lane.
+    pub(crate) tenant: Option<Arc<str>>,
 }
 
 pub(crate) enum CoordinatorMsg {
@@ -179,7 +183,7 @@ pub(crate) fn service_thread(
     obs: CoordinatorObs,
 ) -> usize {
     let model = Arc::new(model);
-    let CoordinatorObs { tracer, busy, journal } = obs;
+    let CoordinatorObs { tracer, busy, journal, tenant } = obs;
     let backend = match plan {
         ExecutionPlan::Single { geometry, backend, pjrt } => {
             util::lock(&metrics).devices = vec![DeviceMetrics::for_geometry(geometry)];
@@ -217,18 +221,25 @@ pub(crate) fn service_thread(
             }))
         }
         ExecutionPlan::Pool { pool, owned } => {
-            // Lay this tenant's metrics lanes over the pool's device set
-            // (every tenant gets the full lane layout; devices account
+            // Lay this tenant's metrics lanes over *every lane slot* of
+            // the pool — including elastic headroom lanes that are still
+            // vacant — so a device grown later accounts into an existing
+            // lane (every tenant gets the full layout; devices account
             // each job at their own lane index). The pool itself was
             // launched by the builder (owned) or the registry (shared).
-            util::lock(&metrics).devices =
-                pool.specs().iter().map(|s| DeviceMetrics::for_geometry(s.geometry)).collect();
+            let template = pool.template_spec();
+            util::lock(&metrics).devices = pool
+                .lane_specs()
+                .into_iter()
+                .map(|s| DeviceMetrics::for_geometry(s.unwrap_or(template).geometry))
+                .collect();
             Backend::Fleet { pool, owned }
         }
     };
-    run_loop(rx, model, cfg, backend, metrics, shared, journal)
+    run_loop(rx, model, cfg, backend, metrics, shared, journal, tenant)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_loop(
     rx: mpsc::Receiver<CoordinatorMsg>,
     model: Arc<ServedModel>,
@@ -237,6 +248,7 @@ fn run_loop(
     metrics: Arc<Mutex<CoordinatorMetrics>>,
     shared: Arc<ServeShared>,
     journal: Option<JournalSink>,
+    tenant: Option<Arc<str>>,
 ) -> usize {
     let mut pending: Vec<InferenceRequest> = Vec::new();
     let mut shutdown = false;
@@ -345,6 +357,7 @@ fn run_loop(
                 &shared,
                 !shutdown,
                 journal.as_ref(),
+                tenant.as_ref(),
             );
         }
     }
@@ -400,6 +413,7 @@ fn dispatch(
     shared: &Arc<ServeShared>,
     shedding_allowed: bool,
     journal: Option<&JournalSink>,
+    tenant: Option<&Arc<str>>,
 ) {
     let single = match backend {
         Backend::Fleet { pool, .. } => {
@@ -416,6 +430,7 @@ fn dispatch(
                 metrics: Arc::clone(metrics),
                 requests: batch,
                 journal: journal.cloned(),
+                tenant: tenant.cloned(),
             };
             let (depth, sheddable) = match shared.policy {
                 AdmissionPolicy::ShedOldest { max_depth } if shedding_allowed => {

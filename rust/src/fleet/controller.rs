@@ -1,0 +1,613 @@
+//! [`PoolController`] — the telemetry-driven grow/shrink policy loop
+//! over an elastic [`FleetPool`].
+//!
+//! PR 8 shipped the feedback signals (rolling queue depth, per-device
+//! occupancy, shed rate, SLO burn); this is the actuator that closes the
+//! loop, the serving-layer face of the paper's re-configurability claim:
+//! the pool resizes to fit the offered work, within operator bounds.
+//!
+//! Each tick runs, in order:
+//!
+//! 1. **Reap** — sweep for dead (panicked) device threads
+//!    ([`FleetPool::reap`]), journal each as `DeviceLost` immediately
+//!    (not at shutdown, which was the pre-elastic behaviour), and
+//!    backfill the lost lane like-for-like. Repairs bypass the cooldown:
+//!    they restore decided capacity, they don't decide new capacity.
+//! 2. **Min repair** — grow back to `min_devices` if below it.
+//! 3. **Policy** — scale up by one device when admission pressure
+//!    (queued + in-flight requests per live device) exceeds the
+//!    threshold, when the trailing shed rate is non-negligible, or when
+//!    SLO burn crosses its trigger; scale down by one after
+//!    `scale_down_idle_ticks` consecutive fully-idle ticks. Both
+//!    directions respect `[min_devices, max_devices]` and the resize
+//!    `cooldown` (hysteresis: one resize, then hold).
+//!
+//! Every resize — policy, repair, or forced — lands in the
+//! [`EventJournal`](crate::obs::EventJournal) as a structured
+//! `PoolResize` entry, so an operator can replay exactly why the pool
+//! is the size it is.
+//!
+//! The controller reads *admission-level* pressure (requests admitted
+//! but unanswered, plus queued) rather than instantaneous occupancy:
+//! occupancy is wall-clock-derived and noisy at test timescales, while
+//! admission depth is deterministic for a parked load wave — which is
+//! what lets the elastic e2e suite assert exact resize trajectories
+//! under [`ControllerMode::Manual`].
+
+use super::{DeviceSpec, FleetPool};
+use crate::obs::{EventKind, JournalSink, Severity};
+use crate::util::lock;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Where tick cadence comes from (mirrors the telemetry sampler).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControllerMode {
+    /// A background thread ticks every `period`.
+    Background,
+    /// No thread; the owner calls [`PoolController::tick`] — the
+    /// deterministic mode tests use.
+    Manual,
+}
+
+/// Policy knobs. Bounds (`min`/`max` devices) are not here — they come
+/// from the serving layer's `.elastic(min, max)` knob.
+#[derive(Debug, Clone, Copy)]
+pub struct ControllerConfig {
+    /// Tick period in background mode (ignored in manual mode).
+    pub period: Duration,
+    /// Scale up when `(queued + in_flight) / live_devices` exceeds this.
+    pub scale_up_depth_per_device: f64,
+    /// Scale up when the trailing shed rate reaches this (requests/s).
+    pub scale_up_shed_rps: f64,
+    /// Scale up when SLO burn (consumed error budget / budget) reaches
+    /// this; `1.0` = budget exhausted.
+    pub scale_up_slo_burn: f64,
+    /// Scale down after this many consecutive fully-idle ticks
+    /// (queued == 0 and in-flight == 0).
+    pub scale_down_idle_ticks: u32,
+    /// Minimum wall time between two *policy* resizes (repairs and
+    /// forced resizes bypass it).
+    pub cooldown: Duration,
+    pub mode: ControllerMode,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            period: Duration::from_millis(50),
+            scale_up_depth_per_device: 4.0,
+            scale_up_shed_rps: 1.0,
+            scale_up_slo_burn: 1.0,
+            scale_down_idle_ticks: 3,
+            cooldown: Duration::from_millis(250),
+            mode: ControllerMode::Background,
+        }
+    }
+}
+
+impl ControllerConfig {
+    /// Deterministic test mode: no thread, caller-driven ticks.
+    pub fn manual() -> Self {
+        Self { mode: ControllerMode::Manual, ..Self::default() }
+    }
+
+    pub fn with_period(mut self, period: Duration) -> Self {
+        self.period = period;
+        self
+    }
+
+    pub fn with_scale_up_depth(mut self, per_device: f64) -> Self {
+        self.scale_up_depth_per_device = per_device;
+        self
+    }
+
+    pub fn with_scale_up_shed_rps(mut self, rps: f64) -> Self {
+        self.scale_up_shed_rps = rps;
+        self
+    }
+
+    pub fn with_scale_up_slo_burn(mut self, burn: f64) -> Self {
+        self.scale_up_slo_burn = burn;
+        self
+    }
+
+    pub fn with_scale_down_idle_ticks(mut self, ticks: u32) -> Self {
+        self.scale_down_idle_ticks = ticks.max(1);
+        self
+    }
+
+    pub fn with_cooldown(mut self, cooldown: Duration) -> Self {
+        self.cooldown = cooldown;
+        self
+    }
+}
+
+/// The gauges the controller reads each tick, wired by the serving
+/// layer as closures over existing counters (all cheap, non-blocking).
+pub struct ControllerSignals {
+    /// Requests waiting in the fleet queue.
+    pub queued_requests: Box<dyn Fn() -> u64 + Send + Sync>,
+    /// Admitted requests not yet answered (includes batcher-parked and
+    /// executing requests — admission-level pressure).
+    pub in_flight: Box<dyn Fn() -> u64 + Send + Sync>,
+    /// Trailing shed rate from the telemetry sampler, requests/s.
+    pub shed_rps: Box<dyn Fn() -> f64 + Send + Sync>,
+    /// Worst SLO burn across tenants (consumed budget fraction; 0 when
+    /// no SLO is configured).
+    pub slo_burn: Box<dyn Fn() -> f64 + Send + Sync>,
+}
+
+impl std::fmt::Debug for ControllerSignals {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ControllerSignals").finish_non_exhaustive()
+    }
+}
+
+struct CtlState {
+    last_resize: Option<Instant>,
+    idle_ticks: u32,
+    ticks: u64,
+}
+
+struct ControllerInner {
+    pool: Arc<FleetPool>,
+    min: usize,
+    max: usize,
+    signals: ControllerSignals,
+    config: ControllerConfig,
+    journal: Option<JournalSink>,
+    state: Mutex<CtlState>,
+    stopping: AtomicBool,
+    stop_gate: Mutex<bool>,
+    stop_cv: Condvar,
+}
+
+impl ControllerInner {
+    fn event(&self, kind: EventKind, severity: Severity, detail: String) {
+        if let Some(j) = &self.journal {
+            j.event(kind, severity, detail);
+        }
+    }
+
+    fn resize_event(&self, detail: String) {
+        self.event(EventKind::PoolResize, Severity::Info, detail);
+    }
+
+    fn tick(&self) {
+        // 1. Reap dead devices: journal the loss eagerly, backfill the
+        // lane like-for-like (bypasses cooldown — it's a repair).
+        let dead: Vec<(usize, DeviceSpec)> = self.pool.reap();
+        for (idx, spec) in dead {
+            self.event(
+                EventKind::DeviceLost,
+                Severity::Error,
+                format!(
+                    "device lane {idx} [{}x{}] died mid-run; backfilling",
+                    spec.geometry.tg_rows, spec.geometry.tg_cols
+                ),
+            );
+            match self.pool.grow(spec) {
+                Some(n) => self.resize_event(format!("backfill lane {idx}: {n} devices live")),
+                None => self.event(
+                    EventKind::DeviceLost,
+                    Severity::Error,
+                    format!("backfill of lane {idx} failed (pool closed or at max)"),
+                ),
+            }
+        }
+        // 2. Min repair.
+        while self.pool.size() < self.min {
+            match self.pool.grow(self.pool.template_spec()) {
+                Some(n) => self.resize_event(format!("min repair: {n} devices live")),
+                None => break,
+            }
+        }
+        // 3. Policy.
+        let queued = (self.signals.queued_requests)();
+        let in_flight = (self.signals.in_flight)();
+        let shed = (self.signals.shed_rps)();
+        let burn = (self.signals.slo_burn)();
+        let live = self.pool.size().max(1);
+        let depth_per_device = (queued + in_flight) as f64 / live as f64;
+        let mut st = lock(&self.state);
+        st.ticks += 1;
+        let cooled = st.last_resize.is_none_or(|t| t.elapsed() >= self.config.cooldown);
+        let want_up = depth_per_device > self.config.scale_up_depth_per_device
+            || shed >= self.config.scale_up_shed_rps
+            || burn >= self.config.scale_up_slo_burn;
+        if want_up {
+            st.idle_ticks = 0;
+            if self.pool.size() < self.max && cooled {
+                if let Some(n) = self.pool.grow(self.pool.template_spec()) {
+                    st.last_resize = Some(Instant::now());
+                    self.resize_event(format!(
+                        "grow to {n}: depth/device {depth_per_device:.1} \
+                         (queued {queued}, in-flight {in_flight}), \
+                         shed {shed:.1} rps, burn {burn:.2}"
+                    ));
+                }
+            }
+        } else if queued == 0 && in_flight == 0 {
+            st.idle_ticks += 1;
+            if st.idle_ticks >= self.config.scale_down_idle_ticks
+                && self.pool.size() > self.min
+                && cooled
+            {
+                let idle = st.idle_ticks;
+                if self.pool.shrink().is_some() {
+                    st.last_resize = Some(Instant::now());
+                    st.idle_ticks = 0;
+                    self.resize_event(format!(
+                        "shrink to {}: idle for {idle} ticks",
+                        self.pool.size()
+                    ));
+                }
+            }
+        } else {
+            st.idle_ticks = 0;
+        }
+    }
+}
+
+/// The controller handle the serving layer owns. Dropping (or calling
+/// [`stop`](Self::stop)) joins the background thread, if any.
+pub struct PoolController {
+    inner: Arc<ControllerInner>,
+    thread: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for PoolController {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolController")
+            .field("min", &self.inner.min)
+            .field("max", &self.inner.max)
+            .field("mode", &self.inner.config.mode)
+            .finish_non_exhaustive()
+    }
+}
+
+impl PoolController {
+    /// Build a controller over `pool`, bounded to `[min_devices,
+    /// max_devices]` (clamped to `[1, pool.max_devices()]`). In
+    /// background mode the policy thread starts immediately.
+    pub fn new(
+        pool: Arc<FleetPool>,
+        min_devices: usize,
+        max_devices: usize,
+        signals: ControllerSignals,
+        config: ControllerConfig,
+        journal: Option<JournalSink>,
+    ) -> Arc<Self> {
+        let lanes = pool.max_devices();
+        let min = min_devices.clamp(1, lanes);
+        let max = max_devices.clamp(min, lanes);
+        let inner = Arc::new(ControllerInner {
+            pool,
+            min,
+            max,
+            signals,
+            config,
+            journal,
+            state: Mutex::new(CtlState { last_resize: None, idle_ticks: 0, ticks: 0 }),
+            stopping: AtomicBool::new(false),
+            stop_gate: Mutex::new(false),
+            stop_cv: Condvar::new(),
+        });
+        let thread = if config.mode == ControllerMode::Background {
+            let worker = Arc::clone(&inner);
+            thread::Builder::new()
+                .name("pool-controller".into())
+                .spawn(move || {
+                    loop {
+                        let gate = lock(&worker.stop_gate);
+                        let (gate, _) = worker
+                            .stop_cv
+                            .wait_timeout(gate, worker.config.period)
+                            .unwrap_or_else(PoisonError::into_inner);
+                        if *gate || worker.stopping.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        drop(gate);
+                        worker.tick();
+                    }
+                })
+                .ok()
+        } else {
+            None
+        };
+        Arc::new(Self { inner, thread: Mutex::new(thread) })
+    }
+
+    /// Run one policy tick now. The manual-mode driver; harmless (one
+    /// extra tick) in background mode.
+    pub fn tick(&self) {
+        self.inner.tick();
+    }
+
+    /// Force the pool to `target` devices (clamped to the controller's
+    /// bounds), ignoring signals and cooldown. Shrinks drain through
+    /// retire pills exactly like policy shrinks — accepted work is never
+    /// dropped. Journals every step; arms the cooldown so the policy
+    /// loop doesn't immediately fight the operator. Returns the
+    /// resulting live size.
+    pub fn force(&self, target: usize) -> usize {
+        let target = target.clamp(self.inner.min, self.inner.max);
+        while self.inner.pool.size() < target {
+            match self.inner.pool.grow(self.inner.pool.template_spec()) {
+                Some(n) => self.inner.resize_event(format!("forced grow to {n}")),
+                None => break,
+            }
+        }
+        while self.inner.pool.size() > target {
+            if self.inner.pool.shrink().is_none() {
+                break;
+            }
+            self.inner.resize_event(format!("forced shrink to {}", self.inner.pool.size()));
+        }
+        lock(&self.inner.state).last_resize = Some(Instant::now());
+        self.inner.pool.size()
+    }
+
+    /// Live devices in the pool right now (running lanes).
+    pub fn pool_size(&self) -> usize {
+        self.inner.pool.size()
+    }
+
+    /// Lower device bound.
+    pub fn min_devices(&self) -> usize {
+        self.inner.min
+    }
+
+    /// Upper device bound.
+    pub fn max_devices(&self) -> usize {
+        self.inner.max
+    }
+
+    /// Policy ticks run so far.
+    pub fn ticks(&self) -> u64 {
+        lock(&self.inner.state).ticks
+    }
+
+    /// Stop the background thread (no-op in manual mode / second call).
+    pub fn stop(&self) {
+        self.inner.stopping.store(true, Ordering::Relaxed);
+        *lock(&self.inner.stop_gate) = true;
+        self.inner.stop_cv.notify_all();
+        if let Some(h) = lock(&self.thread).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PoolController {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Lane;
+    use super::*;
+    use crate::mapper::{NpeGeometry, ScheduleCache};
+    use crate::obs::EventJournal;
+    use crate::util;
+    use std::sync::atomic::AtomicU64;
+
+    fn elastic_pool(initial: usize, max: usize) -> Arc<FleetPool> {
+        let specs: Vec<DeviceSpec> =
+            (0..initial).map(|_| NpeGeometry::PAPER.into()).collect();
+        FleetPool::launch_elastic(&specs, max, ScheduleCache::shared(), None)
+    }
+
+    struct Gauges {
+        queued: Arc<AtomicU64>,
+        in_flight: Arc<AtomicU64>,
+    }
+
+    fn gauge_signals() -> (ControllerSignals, Gauges) {
+        let queued = Arc::new(AtomicU64::new(0));
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let (q, f) = (Arc::clone(&queued), Arc::clone(&in_flight));
+        let signals = ControllerSignals {
+            queued_requests: Box::new(move || q.load(Ordering::Relaxed)),
+            in_flight: Box::new(move || f.load(Ordering::Relaxed)),
+            shed_rps: Box::new(|| 0.0),
+            slo_burn: Box::new(|| 0.0),
+        };
+        (signals, Gauges { queued, in_flight })
+    }
+
+    #[test]
+    fn pressure_grows_and_idleness_shrinks_within_bounds() {
+        let pool = elastic_pool(1, 3);
+        let journal = EventJournal::shared(64);
+        let (signals, gauges) = gauge_signals();
+        let ctl = PoolController::new(
+            Arc::clone(&pool),
+            1,
+            3,
+            signals,
+            ControllerConfig::manual()
+                .with_scale_up_depth(2.0)
+                .with_scale_down_idle_ticks(2)
+                .with_cooldown(Duration::ZERO),
+            Some(JournalSink::new(Arc::clone(&journal), None)),
+        );
+        // Pressure: 10 admitted over 1 device → grow each tick to max.
+        gauges.in_flight.store(10, Ordering::Relaxed);
+        ctl.tick();
+        assert_eq!(pool.size(), 2);
+        ctl.tick();
+        assert_eq!(pool.size(), 3);
+        ctl.tick();
+        assert_eq!(pool.size(), 3, "clamped at max_devices");
+        // Idle: two consecutive fully-idle ticks per shrink, back to min.
+        gauges.in_flight.store(0, Ordering::Relaxed);
+        ctl.tick();
+        assert_eq!(pool.size(), 3, "one idle tick is not enough");
+        ctl.tick();
+        assert_eq!(pool.size(), 2);
+        ctl.tick();
+        ctl.tick();
+        assert_eq!(pool.size(), 1);
+        ctl.tick();
+        ctl.tick();
+        assert_eq!(pool.size(), 1, "clamped at min_devices");
+        assert_eq!(ctl.ticks(), 8);
+        let resizes: Vec<String> = journal
+            .events()
+            .iter()
+            .filter(|e| e.kind == EventKind::PoolResize)
+            .map(|e| e.detail.clone())
+            .collect();
+        assert_eq!(resizes.len(), 4, "2 grows + 2 shrinks, each journaled: {resizes:?}");
+        assert!(resizes[0].starts_with("grow to 2"));
+        assert!(resizes[3].starts_with("shrink to 1"));
+    }
+
+    #[test]
+    fn cooldown_holds_resizes_apart() {
+        let pool = elastic_pool(1, 3);
+        let (signals, gauges) = gauge_signals();
+        let ctl = PoolController::new(
+            Arc::clone(&pool),
+            1,
+            3,
+            signals,
+            ControllerConfig::manual()
+                .with_scale_up_depth(2.0)
+                .with_cooldown(Duration::from_secs(3600)),
+            None,
+        );
+        gauges.queued.store(50, Ordering::Relaxed);
+        ctl.tick();
+        assert_eq!(pool.size(), 2, "first resize is free");
+        for _ in 0..5 {
+            ctl.tick();
+        }
+        assert_eq!(pool.size(), 2, "cooldown holds the second grow");
+    }
+
+    #[test]
+    fn shed_and_burn_signals_also_trigger_growth() {
+        let pool = elastic_pool(1, 2);
+        let shed = Arc::new(AtomicU64::new(0));
+        let s = Arc::clone(&shed);
+        let signals = ControllerSignals {
+            queued_requests: Box::new(|| 0),
+            in_flight: Box::new(|| 1), // not idle, not pressured
+            shed_rps: Box::new(move || s.load(Ordering::Relaxed) as f64),
+            slo_burn: Box::new(|| 0.0),
+        };
+        let ctl = PoolController::new(
+            Arc::clone(&pool),
+            1,
+            2,
+            signals,
+            ControllerConfig::manual().with_cooldown(Duration::ZERO),
+            None,
+        );
+        ctl.tick();
+        assert_eq!(pool.size(), 1, "no signal, no resize");
+        shed.store(5, Ordering::Relaxed);
+        ctl.tick();
+        assert_eq!(pool.size(), 2, "trailing shed rate grows the pool");
+        assert_eq!(pool.shutdown(), 0);
+    }
+
+    #[test]
+    fn dead_device_is_journaled_eagerly_and_backfilled() {
+        let pool = elastic_pool(1, 2);
+        let journal = EventJournal::shared(64);
+        let (signals, _gauges) = gauge_signals();
+        let ctl = PoolController::new(
+            Arc::clone(&pool),
+            1,
+            2,
+            signals,
+            ControllerConfig::manual(),
+            Some(JournalSink::new(Arc::clone(&journal), None)),
+        );
+        // Inject a death: park a panicking thread in the vacant lane, as
+        // if a running device hit a bug mid-run.
+        let template = pool.template_spec();
+        let victim = std::thread::spawn(|| panic!("injected device death"));
+        while !victim.is_finished() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        {
+            let mut lanes = util::lock(&pool.lanes);
+            lanes[1] = Lane::Running { spec: template, handle: victim };
+        }
+        assert_eq!(pool.size(), 2, "dead lane still counts until reaped");
+        ctl.tick();
+        // The tick reaps the death, journals it immediately, and
+        // backfills the lane — the pool is whole again.
+        assert_eq!(pool.size(), 2, "backfilled");
+        let events = journal.events();
+        let lost: Vec<_> =
+            events.iter().filter(|e| e.kind == EventKind::DeviceLost).collect();
+        assert_eq!(lost.len(), 1, "death journaled at the tick, not at shutdown");
+        assert!(lost[0].detail.contains("lane 1"));
+        assert_eq!(lost[0].severity, Severity::Error);
+        assert!(events.iter().any(|e| {
+            e.kind == EventKind::PoolResize && e.detail.starts_with("backfill lane 1")
+        }));
+        assert_eq!(pool.shutdown(), 0, "the reaped death is not re-counted at shutdown");
+    }
+
+    #[test]
+    fn force_clamps_to_bounds_and_journals() {
+        let pool = elastic_pool(1, 4);
+        let journal = EventJournal::shared(64);
+        let (signals, _gauges) = gauge_signals();
+        let ctl = PoolController::new(
+            Arc::clone(&pool),
+            1,
+            3,
+            signals,
+            ControllerConfig::manual(),
+            Some(JournalSink::new(Arc::clone(&journal), None)),
+        );
+        assert_eq!(ctl.force(10), 3, "clamped to max");
+        assert_eq!(pool.size(), 3);
+        assert_eq!(ctl.force(0), 1, "clamped to min");
+        assert_eq!(pool.size(), 1);
+        let resizes = journal
+            .events()
+            .iter()
+            .filter(|e| e.kind == EventKind::PoolResize)
+            .count();
+        assert_eq!(resizes, 4, "2 forced grows + 2 forced shrinks");
+        assert_eq!(pool.shutdown(), 0);
+    }
+
+    #[test]
+    fn background_mode_ticks_on_its_own_and_stops() {
+        let pool = elastic_pool(1, 2);
+        let (signals, _gauges) = gauge_signals();
+        let ctl = PoolController::new(
+            Arc::clone(&pool),
+            1,
+            2,
+            signals,
+            ControllerConfig::default().with_period(Duration::from_millis(5)),
+            None,
+        );
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while ctl.ticks() < 3 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert!(ctl.ticks() >= 3, "background thread must tick");
+        ctl.stop();
+        let after = ctl.ticks();
+        thread::sleep(Duration::from_millis(25));
+        assert_eq!(ctl.ticks(), after, "no ticks after stop");
+        ctl.stop(); // idempotent
+        assert_eq!(pool.shutdown(), 0);
+    }
+}

@@ -7,7 +7,7 @@
 //! what lets one device pool serve many tenants — the pairing lives on
 //! the [`super::FleetJob`], never on the device.
 
-use super::queue::FleetQueue;
+use super::queue::{FleetQueue, Popped};
 use super::DeviceSpec;
 use crate::conv::CnnEngine;
 use crate::coordinator::{respond_batch, ServedModel};
@@ -70,11 +70,14 @@ impl DeviceEngines {
     }
 }
 
-/// The device thread body: pop → execute → respond → account, until the
-/// queue reports shutdown-drain complete. The model to run and the
-/// metrics to account into come off each popped job (per-tenant on a
-/// shared pool), while the engines, geometry, backend and tracer track
-/// are the device's own.
+/// The device thread body: pop → execute → respond → account, until
+/// either the queue reports shutdown-drain complete or an elastic
+/// shrink hands this device a retire pill (`Popped::Retire` — the
+/// victim exits between batches, never mid-batch, so every request it
+/// accepted is answered before the thread joins). The model to run and
+/// the metrics to account into come off each popped job (per-tenant on
+/// a shared pool), while the engines, geometry, backend and tracer
+/// track are the device's own.
 ///
 /// All metric updates for a batch happen under one lock acquisition, so
 /// observers never see a half-updated snapshot (the stress suite asserts
@@ -89,7 +92,11 @@ pub(crate) fn device_main(
 ) {
     let mut engines = DeviceEngines::on(spec.geometry, cache, spec.backend)
         .with_tracer(track.clone());
-    while let Some(job) = queue.pop() {
+    loop {
+        let job = match queue.pop_next() {
+            Popped::Job(job) => job,
+            Popped::Retire | Popped::Closed => break,
+        };
         // Each request waited from submit until this device popped it.
         if let Some(t) = &track {
             for req in &job.requests {

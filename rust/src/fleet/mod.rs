@@ -18,11 +18,25 @@
 //!
 //! * [`queue`] — the shared MPMC work queue (idle devices pull, which is
 //!   least-loaded dispatch by construction) with drain-on-close
-//!   shutdown and admission-aware bounded pushes;
+//!   shutdown, admission-aware bounded pushes, per-tenant weighted pop,
+//!   and retire pills for elastic shrinks;
 //! * [`device`] — the long-lived per-device engine bundle and thread
 //!   body (responses, metrics, cache accounting);
+//! * [`controller`] — the telemetry-driven grow/shrink policy loop;
 //! * [`loadgen`] — the deterministic open-loop Poisson load generator
 //!   the benchmarks and e2e tests drive traffic with.
+//!
+//! **Elasticity.** The pool holds a fixed number of *lanes*
+//! (`max_devices`); each lane is either `Running` a device thread or
+//! `Vacant`. [`FleetPool::grow`] spawns a device into a vacant lane
+//! against the live queue; [`FleetPool::shrink`] posts one retire pill
+//! ([`FleetQueue::retire_one`]) and joins whichever device consumes it —
+//! the victim finishes its in-flight batch first and queued jobs stay
+//! behind for the survivors, so a shrink can never drop accepted work
+//! (the PR 5 "always answered" invariant survives resizing). Lane
+//! indices are stable across grow/shrink, which keeps busy-lane and
+//! metrics-lane accounting simple: a re-filled lane continues its
+//! cumulative counters.
 //!
 //! Scheduling work is shared through [`crate::mapper::ScheduleCache`]:
 //! after first sight of a `(geometry, Γ)` shape — by *any* device — no
@@ -35,13 +49,15 @@
 //! [`crate::serve::ModelRegistry`] — construction stays inside the
 //! serving layer either way.
 
+pub mod controller;
 pub mod device;
 pub mod loadgen;
 pub mod queue;
 
+pub use controller::{ControllerConfig, ControllerMode, ControllerSignals, PoolController};
 pub use device::DeviceEngines;
 pub use loadgen::{poisson_arrivals, run_open_loop, submit_open_loop, Arrival, LoadGenConfig};
-pub use queue::{FleetJob, FleetQueue};
+pub use queue::{FleetJob, FleetQueue, Popped};
 
 use crate::exec::BackendKind;
 use crate::mapper::{NpeGeometry, ScheduleCache};
@@ -49,6 +65,7 @@ use crate::obs::{BusyLanes, Tracer};
 use crate::util;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// One device of a fleet: its PE-array geometry and the roll backend it
 /// executes schedules on. Heterogeneous fleets (mixed geometries *and*
@@ -72,57 +89,210 @@ impl From<NpeGeometry> for DeviceSpec {
     }
 }
 
-/// A running device pool: the shared queue plus one thread per device.
+/// One device slot of the pool. Lane indices are stable for the pool's
+/// lifetime: a retired or dead lane goes `Vacant` and may later be
+/// re-filled by a grow, continuing the same busy/metrics lane.
+enum Lane {
+    /// No device here: elastic headroom, a shrink victim's slot, or a
+    /// reaped dead device awaiting backfill.
+    Vacant,
+    Running { spec: DeviceSpec, handle: JoinHandle<()> },
+}
+
+impl Lane {
+    fn is_running(&self) -> bool {
+        matches!(self, Lane::Running { .. })
+    }
+
+    fn is_finished(&self) -> bool {
+        matches!(self, Lane::Running { handle, .. } if handle.is_finished())
+    }
+}
+
+/// A running, resizable device pool: the shared queue plus one thread
+/// per occupied lane.
 ///
 /// The pool owns no model and no metrics — both ride on each submitted
 /// [`FleetJob`] — which is what makes it shareable: a single service
 /// owns its pool exclusively, while a registry hands one `Arc<FleetPool>`
 /// to every tenant's service and shuts it down once, after all tenants'
 /// batchers have flushed.
+///
+/// **Concurrency contract:** [`grow`](Self::grow),
+/// [`shrink`](Self::shrink) and [`reap`](Self::reap) are driven by a
+/// single [`PoolController`] (or a single test thread) — they are safe
+/// against concurrent submits and shutdown, but two concurrent resizers
+/// could each claim the other's victim.
 pub struct FleetPool {
     queue: Arc<FleetQueue>,
-    /// Drained (into `shutdown`'s joins) exactly once; later calls see
-    /// an empty vec, making shutdown idempotent across co-owners.
-    devices: Mutex<Vec<JoinHandle<()>>>,
-    specs: Vec<DeviceSpec>,
-    /// One wall busy-ns lane per device — the occupancy signal the
+    /// `max_devices` lanes, each `Running` or `Vacant`. Shutdown drains
+    /// every `Running` lane exactly once (later calls see only vacants),
+    /// making shutdown idempotent across co-owners.
+    lanes: Mutex<Vec<Lane>>,
+    /// One wall busy-ns lane per lane slot — the occupancy signal the
     /// telemetry sampler reads (Δbusy/Δwall per tick).
     busy: Arc<BusyLanes>,
+    /// What a grow without an explicit spec launches (the first initial
+    /// device's spec) — the controller's backfill template.
+    template: DeviceSpec,
+    cache: Arc<ScheduleCache>,
+    tracer: Option<Arc<Tracer>>,
+    /// Devices found dead (panicked) by `shrink` while it waited for its
+    /// graceful victim; drained by the next `reap` so the loss is still
+    /// journaled.
+    dead: Mutex<Vec<(usize, DeviceSpec)>>,
 }
 
 impl FleetPool {
-    /// Launch one device thread per [`DeviceSpec`], all pulling from one
-    /// queue and sharing one schedule cache. When a tracer is attached,
-    /// each device records onto its own `device {idx} [RxC]` track.
-    /// Metrics lanes are *not* set here — each service joining the pool
-    /// lays out its own lanes (one per device) over its own metrics.
-    /// The serving layer validates that `specs` is non-empty.
+    /// Launch a fixed-size pool: one device thread per [`DeviceSpec`],
+    /// all pulling from one queue and sharing one schedule cache, with
+    /// no elastic headroom (`max_devices == specs.len()`). When a tracer
+    /// is attached, each device records onto its own `device {idx}
+    /// [RxC]` track. Metrics lanes are *not* set here — each service
+    /// joining the pool lays out its own lanes (one per lane slot) over
+    /// its own metrics. The serving layer validates that `specs` is
+    /// non-empty.
     pub(crate) fn launch(
         specs: &[DeviceSpec],
         cache: Arc<ScheduleCache>,
         tracer: Option<Arc<Tracer>>,
     ) -> Arc<Self> {
-        let queue = FleetQueue::new();
-        let busy = BusyLanes::new(specs.len());
-        let devices = specs
-            .iter()
-            .enumerate()
-            .map(|(idx, &spec)| {
-                let cache = Arc::clone(&cache);
-                let queue = Arc::clone(&queue);
-                let busy = Arc::clone(&busy);
-                let track = tracer.as_ref().map(|t| {
-                    t.register_track(&format!(
-                        "device {idx} [{}x{}]",
-                        spec.geometry.tg_rows, spec.geometry.tg_cols
-                    ))
-                });
-                std::thread::spawn(move || {
-                    device::device_main(idx, spec, cache, queue, track, busy)
-                })
-            })
-            .collect();
-        Arc::new(Self { queue, devices: Mutex::new(devices), specs: specs.to_vec(), busy })
+        Self::launch_elastic(specs, specs.len(), cache, tracer)
+    }
+
+    /// Launch with elastic headroom: `specs` devices start immediately,
+    /// and up to `max_devices` lanes exist for later grows (clamped to
+    /// at least `specs.len()`).
+    pub(crate) fn launch_elastic(
+        specs: &[DeviceSpec],
+        max_devices: usize,
+        cache: Arc<ScheduleCache>,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Arc<Self> {
+        let max_devices = max_devices.max(specs.len()).max(1);
+        let template = specs.first().copied().unwrap_or_else(|| NpeGeometry::PAPER.into());
+        let pool = Arc::new(Self {
+            queue: FleetQueue::new(),
+            lanes: Mutex::new((0..max_devices).map(|_| Lane::Vacant).collect()),
+            busy: BusyLanes::new(max_devices),
+            template,
+            cache,
+            tracer,
+            dead: Mutex::new(Vec::new()),
+        });
+        {
+            let mut lanes = util::lock(&pool.lanes);
+            for (idx, &spec) in specs.iter().enumerate() {
+                if let Some(handle) = pool.spawn_device(idx, spec) {
+                    lanes[idx] = Lane::Running { spec, handle };
+                }
+            }
+        }
+        pool
+    }
+
+    /// Spawn one device thread for lane `idx`. `None` if the OS refuses
+    /// the thread (the caller leaves the lane vacant).
+    fn spawn_device(&self, idx: usize, spec: DeviceSpec) -> Option<JoinHandle<()>> {
+        let cache = Arc::clone(&self.cache);
+        let queue = Arc::clone(&self.queue);
+        let busy = Arc::clone(&self.busy);
+        let track = self.tracer.as_ref().map(|t| {
+            t.register_track(&format!(
+                "device {idx} [{}x{}]",
+                spec.geometry.tg_rows, spec.geometry.tg_cols
+            ))
+        });
+        std::thread::Builder::new()
+            .name(format!("npe-device-{idx}"))
+            .spawn(move || device::device_main(idx, spec, cache, queue, track, busy))
+            .ok()
+    }
+
+    /// Grow by one device into the first vacant lane. Returns the live
+    /// device count after the grow, or `None` when every lane is
+    /// occupied (the pool is at `max_devices`), the queue is closed, or
+    /// the OS refused a thread.
+    pub(crate) fn grow(&self, spec: DeviceSpec) -> Option<usize> {
+        let mut lanes = util::lock(&self.lanes);
+        if self.queue.is_closed() {
+            return None;
+        }
+        let idx = lanes.iter().position(|l| matches!(l, Lane::Vacant))?;
+        let handle = self.spawn_device(idx, spec)?;
+        lanes[idx] = Lane::Running { spec, handle };
+        Some(lanes.iter().filter(|l| l.is_running()).count())
+    }
+
+    /// Shrink by one device via a retire pill: post the pill, then wait
+    /// for whichever device consumes it to finish its in-flight batch
+    /// and exit, join it, and vacate its lane. Queued jobs stay behind
+    /// for the survivors — accepted work is never dropped.
+    ///
+    /// Returns the retired device's spec, or `None` when the pool is at
+    /// one device (never kill the last lane), the queue is closed
+    /// (shutdown is the bigger retire), or shutdown raced the wait.
+    pub(crate) fn shrink(&self) -> Option<DeviceSpec> {
+        if self.size() <= 1 {
+            return None;
+        }
+        if !self.queue.retire_one() {
+            return None;
+        }
+        loop {
+            {
+                let mut lanes = util::lock(&self.lanes);
+                let finished: Vec<usize> = lanes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| l.is_finished())
+                    .map(|(i, _)| i)
+                    .collect();
+                for idx in finished {
+                    if let Lane::Running { spec, handle } =
+                        std::mem::replace(&mut lanes[idx], Lane::Vacant)
+                    {
+                        if handle.join().is_ok() {
+                            return Some(spec);
+                        }
+                        // A panicked device, not our graceful victim:
+                        // record the death for the next reap and keep
+                        // waiting for the pill consumer.
+                        util::lock(&self.dead).push((idx, spec));
+                    }
+                }
+                if self.queue.is_closed() && !lanes.iter().any(|l| l.is_running()) {
+                    return None;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Sweep for dead (panicked) device threads: join every finished
+    /// lane, vacate it, and return the `(lane, spec)` of each that died.
+    /// Graceful exits (shrink victims claimed here by a race, or
+    /// post-close drains) are vacated without being counted. Includes
+    /// deaths `shrink` encountered while waiting for its victim.
+    pub(crate) fn reap(&self) -> Vec<(usize, DeviceSpec)> {
+        let mut dead = std::mem::take(&mut *util::lock(&self.dead));
+        let mut lanes = util::lock(&self.lanes);
+        if self.queue.is_closed() {
+            // Shutdown owns the remaining joins.
+            return dead;
+        }
+        for idx in 0..lanes.len() {
+            if lanes[idx].is_finished() {
+                if let Lane::Running { spec, handle } =
+                    std::mem::replace(&mut lanes[idx], Lane::Vacant)
+                {
+                    if handle.join().is_err() {
+                        dead.push((idx, spec));
+                    }
+                }
+            }
+        }
+        dead
     }
 
     /// Hand a batch to the next idle device. Returns the queue depth
@@ -132,10 +302,11 @@ impl FleetPool {
     }
 
     /// Hand a batch to the queue under `ShedOldest` admission: the
-    /// oldest queued jobs beyond `max_requests` requests are evicted and
-    /// returned **unresolved** (see [`FleetQueue::push_shedding`] for
-    /// the metric-before-resolve ordering contract). Returns
-    /// `(depth, queued_requests_after, victims)`.
+    /// globally-oldest queued jobs beyond `max_requests` requests are
+    /// evicted and returned **unresolved** (see
+    /// [`FleetQueue::push_shedding`] for the metric-before-resolve
+    /// ordering contract). Returns `(depth, queued_requests_after,
+    /// victims)`.
     pub(crate) fn submit_shedding(
         &self,
         job: FleetJob,
@@ -144,17 +315,49 @@ impl FleetPool {
         self.queue.push_shedding(job, max_requests)
     }
 
-    /// Number of devices in the pool.
+    /// Live devices in the pool (occupied lanes; the elastic gauge).
     pub fn size(&self) -> usize {
-        self.specs.len()
+        util::lock(&self.lanes).iter().filter(|l| l.is_running()).count()
     }
 
-    /// The per-device specs the pool was launched with, in lane order.
-    pub fn specs(&self) -> &[DeviceSpec] {
-        &self.specs
+    /// Total lane slots — the elastic upper bound. A fixed pool's max
+    /// equals its launch size.
+    pub fn max_devices(&self) -> usize {
+        util::lock(&self.lanes).len()
     }
 
-    /// The per-device busy-ns lanes (telemetry occupancy source).
+    /// The spec a grow without an explicit choice launches (the first
+    /// initial device's spec) — the controller's backfill template.
+    pub fn template_spec(&self) -> DeviceSpec {
+        self.template
+    }
+
+    /// The specs of the currently-running devices, in lane order.
+    pub fn specs(&self) -> Vec<DeviceSpec> {
+        util::lock(&self.lanes)
+            .iter()
+            .filter_map(|l| match l {
+                Lane::Running { spec, .. } => Some(*spec),
+                Lane::Vacant => None,
+            })
+            .collect()
+    }
+
+    /// Per-lane specs, `None` for vacant lanes, length
+    /// [`max_devices`](Self::max_devices) — the serving layer lays out
+    /// one metrics lane per slot so accounting survives resizes.
+    pub fn lane_specs(&self) -> Vec<Option<DeviceSpec>> {
+        util::lock(&self.lanes)
+            .iter()
+            .map(|l| match l {
+                Lane::Running { spec, .. } => Some(*spec),
+                Lane::Vacant => None,
+            })
+            .collect()
+    }
+
+    /// The per-device busy-ns lanes (telemetry occupancy source), one
+    /// per lane slot.
     pub fn busy_lanes(&self) -> &Arc<BusyLanes> {
         &self.busy
     }
@@ -170,13 +373,20 @@ impl FleetPool {
         self.queue.queued_requests()
     }
 
-    /// Display names per device lane, `device {i} [{R}x{C}]` — the
-    /// sampler's device labels, matching the tracer track names.
+    /// Display names per lane, `device {i} [{R}x{C}]` (vacant lanes show
+    /// `[--]`) — the sampler's device labels, matching the tracer track
+    /// names for lanes that were running at launch.
     pub fn device_names(&self) -> Vec<String> {
-        self.specs
+        util::lock(&self.lanes)
             .iter()
             .enumerate()
-            .map(|(i, s)| format!("device {i} [{}x{}]", s.geometry.tg_rows, s.geometry.tg_cols))
+            .map(|(i, l)| match l {
+                Lane::Running { spec, .. } => format!(
+                    "device {i} [{}x{}]",
+                    spec.geometry.tg_rows, spec.geometry.tg_cols
+                ),
+                Lane::Vacant => format!("device {i} [--]"),
+            })
             .collect()
     }
 
@@ -189,10 +399,22 @@ impl FleetPool {
     /// dropped a popped job — its requests' tickets already resolved
     /// `DeviceLost` via the responder drops — and the serving layer
     /// surfaces the count as `shutdown`'s error instead of a silent `Ok`.
+    /// Deaths already reaped (and backfilled) by the controller are not
+    /// re-counted here; deaths seen by `shrink` but never reaped are.
     pub(crate) fn shutdown(&self) -> usize {
         self.queue.close();
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *util::lock(&self.devices));
-        handles.into_iter().map(JoinHandle::join).filter(Result::is_err).count()
+        let handles: Vec<JoinHandle<()>> = {
+            let mut lanes = util::lock(&self.lanes);
+            lanes
+                .iter_mut()
+                .filter_map(|l| match std::mem::replace(l, Lane::Vacant) {
+                    Lane::Running { handle, .. } => Some(handle),
+                    Lane::Vacant => None,
+                })
+                .collect()
+        };
+        let unreaped = std::mem::take(&mut *util::lock(&self.dead)).len();
+        unreaped + handles.into_iter().map(JoinHandle::join).filter(Result::is_err).count()
     }
 }
 
@@ -226,6 +448,7 @@ mod tests {
             metrics: Arc::clone(metrics),
             requests,
             journal: None,
+            tenant: None,
         }
     }
 
@@ -243,7 +466,8 @@ mod tests {
             vec![NpeGeometry::WALKTHROUGH.into(), NpeGeometry::PAPER.into()];
         let pool = launch_specs(&specs, &cache);
         assert_eq!(pool.size(), 2);
-        assert_eq!(pool.specs(), &specs[..]);
+        assert_eq!(pool.max_devices(), 2, "fixed pools have no headroom");
+        assert_eq!(pool.specs(), specs);
 
         let inputs = mlp.synth_inputs(6, 4);
         let expect = mlp.forward_batch(&inputs);
@@ -368,5 +592,64 @@ mod tests {
             assert_eq!(got.output, want, "bit-exact across backends");
         }
         assert_eq!(metrics.lock().unwrap().requests, 9);
+    }
+
+    #[test]
+    fn grow_fills_a_vacant_lane_and_caps_at_max() {
+        let cache = ScheduleCache::shared();
+        let pool = FleetPool::launch_elastic(
+            &[NpeGeometry::PAPER.into()],
+            3,
+            Arc::clone(&cache),
+            None,
+        );
+        assert_eq!(pool.size(), 1);
+        assert_eq!(pool.max_devices(), 3);
+        assert_eq!(pool.lane_specs().iter().filter(|s| s.is_none()).count(), 2);
+        assert_eq!(pool.busy_lanes().len(), 3, "busy lanes cover the headroom");
+        assert!(pool.device_names()[1].contains("[--]"), "vacant lanes are labelled");
+
+        assert_eq!(pool.grow(pool.template_spec()), Some(2));
+        assert_eq!(pool.grow(NpeGeometry::WALKTHROUGH.into()), Some(3));
+        assert_eq!(pool.grow(pool.template_spec()), None, "at max_devices");
+        assert_eq!(pool.size(), 3);
+        assert_eq!(pool.shutdown(), 0);
+        assert_eq!(pool.grow(pool.template_spec()), None, "closed pools refuse grows");
+    }
+
+    #[test]
+    fn shrink_retires_one_device_and_answers_everything() {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![8, 5, 2]), 33);
+        let model = Arc::new(ServedModel::Mlp(mlp.clone()));
+        let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
+        util::lock(&metrics).devices = (0..2)
+            .map(|_| crate::coordinator::DeviceMetrics::for_geometry(NpeGeometry::PAPER))
+            .collect();
+        let cache = ScheduleCache::shared();
+        let pool = FleetPool::launch_elastic(
+            &[NpeGeometry::PAPER.into(), NpeGeometry::PAPER.into()],
+            2,
+            Arc::clone(&cache),
+            None,
+        );
+        let inputs = mlp.synth_inputs(6, 9);
+        let expect = mlp.forward_batch(&inputs);
+        let mut tickets = Vec::new();
+        for x in &inputs {
+            let (req, ticket) = detached_request(x.clone());
+            tickets.push(ticket);
+            pool.submit(job_for(&model, &metrics, vec![req]));
+        }
+        // Shrink while work may still be queued: the victim finishes its
+        // in-flight batch, survivors drain the rest — nothing is dropped.
+        let retired = pool.shrink().expect("one device retires");
+        assert_eq!(retired.geometry, NpeGeometry::PAPER);
+        assert_eq!(pool.size(), 1);
+        assert!(pool.shrink().is_none(), "never retire the last device");
+        assert_eq!(pool.shutdown(), 0);
+        for (t, want) in tickets.into_iter().zip(expect) {
+            assert_eq!(t.wait_timeout(Duration::from_secs(10)).unwrap().output, want);
+        }
+        assert_eq!(metrics.lock().unwrap().requests, 6, "every admitted request answered");
     }
 }

@@ -6,6 +6,22 @@
 //! and the next free device takes the next batch, which is least-loaded
 //! dispatch by construction (a busy device simply isn't at the queue).
 //!
+//! **Tenant-weighted pop.** Jobs land in per-tenant sub-lanes and
+//! devices pop round-robin *across* lanes, FIFO *within* one. A tenant
+//! flooding the queue therefore delays only its own backlog: a light
+//! tenant's next job is at most one round-robin turn away, no matter how
+//! deep the flooder's lane runs. With a single tenant (or untagged
+//! jobs, which share one lane) the queue degenerates to plain FIFO, so
+//! the original single-tenant ordering contract is unchanged.
+//!
+//! **Retire pills.** The elastic pool shrinks by [`FleetQueue::retire_one`]:
+//! a counter of pending "retire pills" that [`FleetQueue::pop_next`]
+//! serves *before* work. Exactly one device consumes each pill and exits
+//! gracefully ([`Popped::Retire`]); queued jobs stay behind for the
+//! survivors, so accepted work is never dropped by a shrink. Once the
+//! queue is closed, pills are ignored — shutdown drains every device
+//! through [`Popped::Closed`] anyway.
+//!
 //! Shutdown semantics are drain-then-exit: [`FleetQueue::close`] stops
 //! producers, but consumers keep popping until the queue is empty, so no
 //! accepted batch is ever dropped (the e2e suite asserts exactly-once
@@ -15,7 +31,8 @@
 //!
 //! Under `AdmissionPolicy::ShedOldest` the coordinator pushes through
 //! [`FleetQueue::push_shedding`], which bounds the queued-request count
-//! by resolving the *oldest* queued jobs with `QueueFull`.
+//! by resolving the *globally oldest* queued jobs (by arrival sequence,
+//! across all tenant lanes) with `QueueFull`.
 
 use crate::coordinator::{CoordinatorMetrics, InferenceRequest, ServedModel};
 use crate::obs::JournalSink;
@@ -40,6 +57,9 @@ pub struct FleetJob {
     /// rides with the job (like metrics) so shed victims and device
     /// losses land in the *owning* tenant's journal lane.
     pub(crate) journal: Option<JournalSink>,
+    /// Tenant label for queue-lane selection; `None` (single-tenant
+    /// services) shares one untagged lane.
+    pub(crate) tenant: Option<Arc<str>>,
 }
 
 impl FleetJob {
@@ -60,12 +80,88 @@ impl FleetJob {
     }
 }
 
+/// What a device gets back from [`FleetQueue::pop_next`].
+pub enum Popped {
+    /// A unit of work.
+    Job(FleetJob),
+    /// A retire pill from an elastic shrink: finish up and exit; the
+    /// rest of the queue belongs to the surviving devices.
+    Retire,
+    /// Closed *and* drained — no more work ever.
+    Closed,
+}
+
+/// One tenant's FIFO sub-lane. Jobs carry their global arrival sequence
+/// so shedding can find the globally-oldest victim across lanes.
+struct TenantLane {
+    tenant: Option<Arc<str>>,
+    jobs: VecDeque<(u64, FleetJob)>,
+}
+
 #[derive(Default)]
 struct QueueState {
-    jobs: VecDeque<FleetJob>,
-    /// Total requests across `jobs` (the unit admission bounds apply to).
+    /// Non-empty tenant lanes, rotation order. Invariant: no lane in
+    /// this deque is ever empty.
+    lanes: VecDeque<TenantLane>,
+    /// Total jobs across all lanes.
+    queued_jobs: usize,
+    /// Total requests across all lanes (the unit admission bounds apply to).
     queued_requests: usize,
+    /// Global arrival sequence, assigned at push.
+    next_seq: u64,
+    /// Pending retire pills (consumed by `pop_next` before work).
+    retiring: usize,
     closed: bool,
+}
+
+impl QueueState {
+    fn enqueue(&mut self, job: FleetJob) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queued_jobs += 1;
+        self.queued_requests += job.len();
+        let tenant = job.tenant.clone();
+        if let Some(lane) = self.lanes.iter_mut().find(|l| l.tenant == tenant) {
+            lane.jobs.push_back((seq, job));
+        } else {
+            let mut jobs = VecDeque::new();
+            jobs.push_back((seq, job));
+            self.lanes.push_back(TenantLane { tenant, jobs });
+        }
+    }
+
+    /// Round-robin across tenant lanes, FIFO within one: the front
+    /// lane's oldest job, with the lane rotated to the back afterwards
+    /// (dropped instead if it emptied).
+    fn pop_job(&mut self) -> Option<FleetJob> {
+        let mut lane = self.lanes.pop_front()?;
+        let (_, job) = lane.jobs.pop_front()?;
+        if !lane.jobs.is_empty() {
+            self.lanes.push_back(lane);
+        }
+        self.queued_jobs -= 1;
+        self.queued_requests -= job.len();
+        Some(job)
+    }
+
+    /// Remove and return the globally-oldest queued job (minimum arrival
+    /// sequence across every lane).
+    fn shed_oldest(&mut self) -> Option<FleetJob> {
+        let idx = self
+            .lanes
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.jobs.front().map_or(u64::MAX, |(seq, _)| *seq))
+            .map(|(i, _)| i)?;
+        let lane = self.lanes.get_mut(idx)?;
+        let (_, job) = lane.jobs.pop_front()?;
+        if lane.jobs.is_empty() {
+            self.lanes.remove(idx);
+        }
+        self.queued_jobs -= 1;
+        self.queued_requests -= job.len();
+        Some(job)
+    }
 }
 
 /// MPMC blocking queue of [`FleetJob`]s (Mutex + Condvar; the offline
@@ -93,19 +189,19 @@ impl FleetQueue {
             job.resolve_err(&ServeError::ShuttingDown);
             return 0;
         }
-        s.queued_requests += job.len();
-        s.jobs.push_back(job);
+        s.enqueue(job);
         self.ready.notify_one();
-        s.jobs.len()
+        s.queued_jobs
     }
 
-    /// Enqueue a job, then shed the *oldest* queued jobs until at most
-    /// `max_requests` requests are waiting (the newest job always
-    /// survives — newest-wins is the point of `ShedOldest`). Returns
-    /// `(depth_in_jobs, queued_requests_after, victims)`; the victims
-    /// are **unresolved** — the caller accounts the shed metric first
-    /// and only then resolves each ticket with `QueueFull`, so a client
-    /// can never observe a shed ticket before the metric reflects it.
+    /// Enqueue a job, then shed the *globally oldest* queued jobs until
+    /// at most `max_requests` requests are waiting (the newest job
+    /// always survives — newest-wins is the point of `ShedOldest`).
+    /// Returns `(depth_in_jobs, queued_requests_after, victims)`; the
+    /// victims are **unresolved** — the caller accounts the shed metric
+    /// first and only then resolves each ticket with `QueueFull`, so a
+    /// client can never observe a shed ticket before the metric reflects
+    /// it.
     pub fn push_shedding(
         &self,
         job: FleetJob,
@@ -117,36 +213,65 @@ impl FleetQueue {
             job.resolve_err(&ServeError::ShuttingDown);
             return (0, 0, Vec::new());
         }
-        s.queued_requests += job.len();
-        s.jobs.push_back(job);
+        s.enqueue(job);
         let mut victims = Vec::new();
-        while s.queued_requests > max_requests && s.jobs.len() > 1 {
-            if let Some(old) = s.jobs.pop_front() {
-                s.queued_requests -= old.len();
+        while s.queued_requests > max_requests && s.queued_jobs > 1 {
+            if let Some(old) = s.shed_oldest() {
                 victims.push(old);
+            } else {
+                break;
             }
         }
-        let depth = s.jobs.len();
+        let depth = s.queued_jobs;
         let queued = s.queued_requests;
         self.ready.notify_one();
         drop(s);
         (depth, queued, victims)
     }
 
-    /// Block until a job is available or the queue is closed *and*
-    /// drained. `None` means "no more work ever" — the device exits.
-    pub fn pop(&self) -> Option<FleetJob> {
+    /// Block until a job, a retire pill, or close-and-drained. Pills are
+    /// served before work (the shrink victim exits immediately; queued
+    /// jobs drain through the survivors) but are ignored once the queue
+    /// is closed — shutdown retires everyone via [`Popped::Closed`].
+    pub fn pop_next(&self) -> Popped {
         let mut s = util::lock(&self.state);
         loop {
-            if let Some(job) = s.jobs.pop_front() {
-                s.queued_requests -= job.len();
-                return Some(job);
+            if !s.closed && s.retiring > 0 {
+                s.retiring -= 1;
+                return Popped::Retire;
+            }
+            if let Some(job) = s.pop_job() {
+                return Popped::Job(job);
             }
             if s.closed {
-                return None;
+                return Popped::Closed;
             }
             s = util::wait(&self.ready, s);
         }
+    }
+
+    /// [`pop_next`](Self::pop_next) flattened for callers that don't
+    /// participate in elastic retirement: `Some(job)` for work, `None`
+    /// for retire-or-closed.
+    pub fn pop(&self) -> Option<FleetJob> {
+        match self.pop_next() {
+            Popped::Job(job) => Some(job),
+            Popped::Retire | Popped::Closed => None,
+        }
+    }
+
+    /// Post one retire pill (elastic shrink): exactly one device will
+    /// consume it and exit gracefully. Returns `false` without posting
+    /// if the queue is already closed — shutdown is the bigger retire.
+    pub fn retire_one(&self) -> bool {
+        let mut s = util::lock(&self.state);
+        if s.closed {
+            return false;
+        }
+        s.retiring += 1;
+        drop(s);
+        self.ready.notify_all();
+        true
     }
 
     /// Stop accepting work and wake every device so the drain can finish.
@@ -155,9 +280,14 @@ impl FleetQueue {
         self.ready.notify_all();
     }
 
+    /// Whether `close` has been called.
+    pub fn is_closed(&self) -> bool {
+        util::lock(&self.state).closed
+    }
+
     /// Jobs currently waiting (not including ones being executed).
     pub fn depth(&self) -> usize {
-        util::lock(&self.state).jobs.len()
+        util::lock(&self.state).queued_jobs
     }
 
     /// Requests currently waiting across all queued jobs.
@@ -180,12 +310,19 @@ mod tests {
             metrics: Arc::new(Mutex::new(CoordinatorMetrics::default())),
             requests,
             journal: None,
+            tenant: None,
         }
     }
 
     fn job_of(n: usize) -> FleetJob {
         // Nothing responds in these tests; the receivers can drop.
         job_with((0..n).map(|_| detached_request(vec![0; 4]).0).collect())
+    }
+
+    fn tenant_job(tenant: &str, n: usize) -> FleetJob {
+        let mut job = job_of(n);
+        job.tenant = Some(Arc::from(tenant));
+        job
     }
 
     #[test]
@@ -200,6 +337,7 @@ mod tests {
         assert_eq!(q.queued_requests(), 0);
         q.close();
         assert!(q.pop().is_none());
+        assert!(q.is_closed());
     }
 
     #[test]
@@ -255,6 +393,68 @@ mod tests {
     }
 
     #[test]
+    fn push_shedding_sheds_globally_oldest_across_tenant_lanes() {
+        let q = FleetQueue::new();
+        q.push(tenant_job("a", 1)); // seq 0 — globally oldest
+        q.push(tenant_job("b", 1)); // seq 1
+        q.push(tenant_job("a", 1)); // seq 2
+        // Bound 2: pushing one more (total 4) sheds seq 0 then seq 1 —
+        // arrival order, not lane order.
+        let (_, queued, victims) = q.push_shedding(tenant_job("b", 1), 2);
+        assert_eq!(queued, 2);
+        let shed_tenants: Vec<_> =
+            victims.iter().map(|v| v.tenant.as_deref().map(str::to_owned)).collect();
+        assert_eq!(shed_tenants, vec![Some("a".into()), Some("b".into())]);
+        for v in victims {
+            v.resolve_err(&ServeError::QueueFull { depth: 4, max_depth: 2 });
+        }
+    }
+
+    #[test]
+    fn pop_round_robins_across_tenants_fifo_within() {
+        let q = FleetQueue::new();
+        q.push(tenant_job("a", 1));
+        q.push(tenant_job("a", 2));
+        q.push(tenant_job("a", 3));
+        q.push(tenant_job("b", 4));
+        // A flooded lane (a: 3 jobs) can't starve b: pop order is
+        // a(1), b(4), a(2), a(3) — round-robin across lanes, FIFO within.
+        let sizes: Vec<usize> = (0..4).map(|_| q.pop().unwrap().len()).collect();
+        assert_eq!(sizes, vec![1, 4, 2, 3]);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn retire_pill_is_served_before_work_and_exactly_once() {
+        let q = FleetQueue::new();
+        q.push(job_of(2));
+        assert!(q.retire_one());
+        // The pill outranks queued work: the first popper retires,
+        // the job stays for a survivor.
+        assert!(matches!(q.pop_next(), Popped::Retire));
+        assert_eq!(q.queued_requests(), 2, "queued work survives the pill");
+        match q.pop_next() {
+            Popped::Job(job) => assert_eq!(job.len(), 2),
+            _ => panic!("job must still be poppable after the pill"),
+        }
+        q.close();
+        assert!(matches!(q.pop_next(), Popped::Closed));
+    }
+
+    #[test]
+    fn retire_after_close_is_refused_and_pending_pills_are_ignored() {
+        let q = FleetQueue::new();
+        assert!(q.retire_one(), "pill accepted while open");
+        q.push(job_of(1));
+        q.close();
+        assert!(!q.retire_one(), "closed queue refuses new pills");
+        // Drain ignores the pending pill: job first, then Closed —
+        // shutdown retires every device anyway.
+        assert!(matches!(q.pop_next(), Popped::Job(_)));
+        assert!(matches!(q.pop_next(), Popped::Closed));
+    }
+
+    #[test]
     fn blocked_consumers_wake_on_close() {
         let q = FleetQueue::new();
         let handles: Vec<_> = (0..4)
@@ -268,5 +468,17 @@ mod tests {
         for h in handles {
             assert!(h.join().unwrap(), "blocked pop returns None after close");
         }
+    }
+
+    #[test]
+    fn blocked_consumer_wakes_on_retire_pill() {
+        let q = FleetQueue::new();
+        let worker = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || matches!(q.pop_next(), Popped::Retire))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(q.retire_one());
+        assert!(worker.join().unwrap(), "blocked pop_next consumes the pill");
     }
 }

@@ -12,13 +12,15 @@ use anyhow::{anyhow, Context, Result};
 use std::io::Write;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use tcd_npe::bench;
 use tcd_npe::conv::QuantizedCnn;
 use tcd_npe::coordinator::{BatcherConfig, ServedModel};
 use tcd_npe::dataflow::{DataflowEngine, OsEngine};
 use tcd_npe::exec::BackendKind;
-use tcd_npe::fleet::{poisson_arrivals, run_open_loop, DeviceSpec, LoadGenConfig};
+use tcd_npe::fleet::{
+    poisson_arrivals, run_open_loop, ControllerConfig, DeviceSpec, LoadGenConfig,
+};
 use tcd_npe::graph::QuantizedGraph;
 use tcd_npe::mapper::{Gamma, MapperTree, NpeGeometry};
 use tcd_npe::memory::{FmArrangement, WMemArrangement, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
@@ -26,7 +28,7 @@ use tcd_npe::model::{
     benchmark_by_name, benchmarks, cnn_benchmark_by_name, graph_benchmark_by_name,
     graph_benchmarks, MlpTopology, QuantizedMlp,
 };
-use tcd_npe::obs::{chrome_trace_json, SamplerConfig, SloConfig, Tracer};
+use tcd_npe::obs::{chrome_trace_json, EventKind, SamplerConfig, SloConfig, Tracer};
 use tcd_npe::runtime::{ArtifactManifest, PjrtRuntime};
 use tcd_npe::serve::{
     AdmissionPolicy, NpeService, ServeError, ServiceClient, DEFAULT_JOURNAL_CAPACITY,
@@ -60,7 +62,12 @@ System:
   fleet --bench [--json PATH]
                              device-count sweep (1/2/4/8) + admission-policy
                              sweep (Block vs Reject at 2x saturation) + two-tenant
-                             contention sweep on a shared pool + BENCH_fleet.json
+                             contention sweep on a shared pool + elastic load-step
+                             sweep (fixed-min vs controller) + BENCH_fleet.json
+  elastic [--requests N] [--rate RPS] [--min N] [--max N]
+                             elastic-pool demo: a Poisson burst through a
+                             controller-resized fleet — grows under backlog,
+                             drain-shrinks back to min, resize journal printed
   registry [--requests N] [--rate RPS]
                              multi-tenant demo: MLP + CNN + DAG tenants routed
                              through one ModelRegistry over one shared pool,
@@ -192,6 +199,25 @@ fn main() -> Result<()> {
                     admission_flag(&args)?,
                 )?;
             }
+        }
+        "elastic" => {
+            let requests = flag_value(&args, "--requests")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(512);
+            let rate = flag_value(&args, "--rate")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(200_000.0);
+            let min = flag_value(&args, "--min")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(1);
+            let max = flag_value(&args, "--max")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(4);
+            cmd_elastic(requests, rate, min, max)?;
         }
         "registry" => {
             let requests = flag_value(&args, "--requests")
@@ -473,6 +499,63 @@ fn cmd_fleet(
     Ok(())
 }
 
+/// The elastic-pool demo: a seeded Poisson burst through a fleet the
+/// [`PoolController`](tcd_npe::fleet::PoolController) resizes live —
+/// it grows while the backlog is deep, drain-shrinks back to `min`
+/// once the burst clears, and journals every resize.
+fn cmd_elastic(requests: usize, rate: f64, min: usize, max: usize) -> Result<()> {
+    let iris = benchmark_by_name("Iris").expect("Iris is in Table IV");
+    let model = ServedModel::Mlp(QuantizedMlp::synthesize(iris.topology.clone(), 0xF1EE7));
+    let load = LoadGenConfig { seed: 0xE1A5_0001, rate_rps: rate, requests };
+    let arrivals = poisson_arrivals(&model, &load);
+    let cfg = ControllerConfig::default()
+        .with_period(Duration::from_millis(5))
+        .with_cooldown(Duration::from_millis(25));
+    let service = NpeService::builder(model)
+        .devices(vec![NpeGeometry::PAPER; min])
+        .elastic(min, max)
+        .controller(cfg)
+        .batcher(BatcherConfig::new(8, Duration::from_micros(500)))
+        .journaling(DEFAULT_JOURNAL_CAPACITY)
+        .telemetry(SamplerConfig::default().with_period(Duration::from_millis(10)))
+        .build()?;
+    let ctl = service
+        .controller()
+        .ok_or_else(|| anyhow!("elastic service did not start a controller"))?;
+    println!(
+        "elastic fleet: bounds [{min}, {max}], starting at {} device(s) on the 16x8 NPE; \
+         offering {requests} Poisson requests at {rate:.0} req/s (seed {:#x})",
+        ctl.pool_size(),
+        load.seed
+    );
+    let responses = run_open_loop(&service, &arrivals, Duration::from_secs(60));
+    let answered = responses.iter().filter(|o| o.is_some()).count();
+    // Let the controller reclaim the burst capacity before reporting.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while ctl.pool_size() > min && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    println!(
+        "answered {answered}/{requests}; pool settled at {} device(s)",
+        ctl.pool_size()
+    );
+    if let Some(j) = service.journal() {
+        let resizes: Vec<_> = j
+            .events()
+            .into_iter()
+            .filter(|e| matches!(e.kind, EventKind::PoolResize | EventKind::DeviceLost))
+            .collect();
+        println!("resize journal ({} events):", resizes.len());
+        for e in resizes {
+            println!("  {}", e.render());
+        }
+    }
+    let metrics = service.metrics();
+    service.shutdown()?;
+    print!("{metrics}");
+    Ok(())
+}
+
 /// The observability demo: serve every DAG-zoo benchmark on a traced,
 /// telemetry-sampled fleet, all recording into one shared tracer, then
 /// export the merged Chrome trace plus per-model Prometheus/JSON metrics
@@ -629,7 +712,9 @@ fn render_watch_frame(registry: &tcd_npe::ModelRegistry, requests: usize) -> Res
         match tl.latest() {
             Some(s) => {
                 out.push_str(&format!(
-                    "fleet: queue {} | in-flight {} | {:.0} answered/s | {:.0} shed/s\n",
+                    "fleet: {} device(s) | queue {} | in-flight {} | {:.0} answered/s \
+                     | {:.0} shed/s\n",
+                    s.pool_devices,
                     s.queue_depth,
                     s.in_flight,
                     tl.throughput_rps(16),
@@ -774,6 +859,8 @@ fn cmd_fleet_bench(json_path: Option<&str>) -> Result<()> {
     println!("{}", bench::render_admission_table(&admission));
     let tenants = bench::tenant_rows(&load);
     println!("{}", bench::render_tenant_table(&tenants));
+    let elastic = bench::elastic_rows(&load);
+    println!("{}", bench::render_elastic_table(&elastic));
     let mapper = bench::mapper_cache_bench(200);
     println!(
         "mapper: {} shapes, cold {:.1} us/iter vs cached {:.1} us/iter ({:.0}x)",
@@ -783,7 +870,10 @@ fn cmd_fleet_bench(json_path: Option<&str>) -> Result<()> {
         mapper.speedup()
     );
     let path = json_path.unwrap_or("BENCH_fleet.json");
-    std::fs::write(path, bench::fleet_json(&rows, &admission, &tenants, &mapper, &load))?;
+    std::fs::write(
+        path,
+        bench::fleet_json(&rows, &admission, &tenants, &elastic, &mapper, &load),
+    )?;
     println!("wrote {path}");
     Ok(())
 }

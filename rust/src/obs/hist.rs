@@ -127,6 +127,25 @@ impl LogHistogram {
         }
     }
 
+    /// The largest value sharing `v`'s bucket — the *top* of the bucket
+    /// containing `v`. [`count_le`](Self::count_le) is exact at exactly
+    /// these values, so callers that must compare against an arbitrary
+    /// threshold (the SLO tracker's latency objective, say) snap the
+    /// threshold up to `bucket_top(threshold)` once and get exact counts
+    /// ever after. Below [`LINEAR_MAX`] every value tops its own unit
+    /// bucket, so `bucket_top(v) == v` there.
+    pub fn bucket_top(v: u64) -> u64 {
+        let idx = bucket_of(v) as u64;
+        if idx < LINEAR_MAX {
+            return idx;
+        }
+        let major = (idx - LINEAR_MAX) / SUB_BUCKETS + SUB_SHIFT as u64;
+        let sub = (idx - LINEAR_MAX) % SUB_BUCKETS;
+        // u128: the top bucket's exclusive upper bound is 2^64.
+        let upper = (1u128 << major) + (u128::from(sub + 1) << (major - SUB_SHIFT as u64));
+        u64::try_from(upper - 1).unwrap_or(u64::MAX)
+    }
+
     /// Number of recorded samples ≤ `v`, computed as the cumulative
     /// count through the bucket containing `v` (clamped by the exact
     /// extrema). Exact whenever `v` is the top value of its bucket —
@@ -277,6 +296,28 @@ mod tests {
         assert_eq!(h.min(), None);
         h.record(7);
         assert_eq!(h.min(), Some(7));
+    }
+
+    #[test]
+    fn bucket_top_is_the_exactness_point_of_count_le() {
+        // Unit buckets: every small value tops itself.
+        for v in 0..LINEAR_MAX {
+            assert_eq!(LogHistogram::bucket_top(v), v);
+        }
+        // Above LINEAR_MAX: the top is one below the next bucket's lower
+        // bound, and everything in the bucket shares it.
+        assert_eq!(LogHistogram::bucket_top(50_000), 50_175, "bucket [49152, 50176)");
+        assert_eq!(LogHistogram::bucket_top(49_152), 50_175);
+        assert_eq!(LogHistogram::bucket_top(50_175), 50_175, "idempotent at the top");
+        assert_eq!(LogHistogram::bucket_top(50_176), 51_199, "next bucket");
+        // The final bucket's upper bound is 2^64; the top saturates.
+        assert_eq!(LogHistogram::bucket_top(u64::MAX), u64::MAX);
+        // count_le at the snapped value counts the whole bucket exactly.
+        let mut h = LogHistogram::new();
+        h.record(49_200);
+        h.record(50_100);
+        h.record(50_176);
+        assert_eq!(h.count_le(LogHistogram::bucket_top(50_000)), 2);
     }
 
     #[test]

@@ -58,6 +58,12 @@ pub enum EventKind {
     CacheEviction,
     /// A tenant's SLO error budget crossed exhaustion (burn ≥ budget).
     SloBudgetExhausted,
+    /// The elastic pool controller resized the device pool (grow,
+    /// shrink, dead-device backfill, or an operator-forced resize).
+    PoolResize,
+    /// A cumulative telemetry counter moved backwards (metrics-sink swap
+    /// or reset); trailing rates read 0 until the window clears it.
+    CounterRegression,
 }
 
 impl fmt::Display for EventKind {
@@ -68,6 +74,8 @@ impl fmt::Display for EventKind {
             EventKind::AdmissionReject => "admission_reject",
             EventKind::CacheEviction => "cache_eviction",
             EventKind::SloBudgetExhausted => "slo_budget_exhausted",
+            EventKind::PoolResize => "pool_resize",
+            EventKind::CounterRegression => "counter_regression",
         })
     }
 }

@@ -7,10 +7,20 @@
 //! [`LogHistogram::count_le`] at the objective, `bad` is the rest, and
 //! the error-budget burn rate is the observed bad fraction over the
 //! allowed bad fraction (`1 − target`): burn `< 1` means latency is
-//! inside budget, `1` exactly on it, `> 1` burning reserve. The math is
-//! exact whenever the objective lands on a histogram bucket boundary
-//! (see `count_le`), which round µs objectives below 32 µs and
-//! power-of-two-aligned ones always do.
+//! inside budget, `1` exactly on it, `> 1` burning reserve.
+//!
+//! **Objective rounding.** The histogram is log-bucketed, so it cannot
+//! distinguish latencies inside one bucket; `count_le` is only exact at
+//! bucket *tops*. [`SloConfig::new`] therefore snaps the objective **up**
+//! to the top of its enclosing bucket once, at construction
+//! ([`LogHistogram::bucket_top`]), and every evaluation compares against
+//! that snapped bound — exact by construction, never data-dependent.
+//! The snap widens the objective by at most one sub-bucket (≤ ~3 %);
+//! before it existed, an off-boundary objective could *under*-count good
+//! events (`count_le`'s min-clamp zeroed the count when the raw
+//! objective fell below the smallest sample even though that sample
+//! shared the objective's bucket) or silently over-count by the partial
+//! bucket. [`SloConfig::objective_ns`] exposes the effective bound.
 //!
 //! The only state is a latch: [`SloTracker`] remembers whether it last
 //! saw the budget exhausted, so the caller can journal the *transition*
@@ -24,17 +34,30 @@ use std::sync::atomic::{AtomicBool, Ordering};
 /// `objective_us`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SloConfig {
-    /// Wall-latency objective, µs (submit → response).
+    /// Wall-latency objective, µs (submit → response), as configured.
     pub objective_us: u64,
     /// Required fraction of requests inside the objective, in (0, 1].
     pub target: f64,
+    /// The *effective* objective in ns: `objective_us · 1000` snapped up
+    /// to its enclosing histogram bucket top, so `count_le` is exact (see
+    /// the module docs on objective rounding).
+    objective_ns: u64,
 }
 
 impl SloConfig {
     /// `target` is clamped into (0, 1] — a nonsensical target would
-    /// otherwise make every burn-rate division meaningless.
+    /// otherwise make every burn-rate division meaningless. The
+    /// objective is snapped up to the top of its enclosing histogram
+    /// bucket (≤ ~3 % widening) so every later evaluation is exact.
     pub fn new(objective_us: u64, target: f64) -> Self {
-        Self { objective_us, target: target.clamp(f64::MIN_POSITIVE, 1.0) }
+        let objective_ns = LogHistogram::bucket_top(objective_us.saturating_mul(1_000));
+        Self { objective_us, target: target.clamp(f64::MIN_POSITIVE, 1.0), objective_ns }
+    }
+
+    /// The effective (bucket-top-snapped) objective in ns that
+    /// evaluations compare latencies against.
+    pub fn objective_ns(&self) -> u64 {
+        self.objective_ns
     }
 }
 
@@ -100,7 +123,7 @@ impl SloTracker {
     /// Pure evaluation: no state is touched.
     pub fn evaluate(&self, latencies: &LogHistogram) -> SloStatus {
         let total = latencies.count();
-        let good = latencies.count_le(self.config.objective_us.saturating_mul(1_000));
+        let good = latencies.count_le(self.config.objective_ns);
         let bad = total - good;
         let compliance = if total == 0 { 1.0 } else { good as f64 / total as f64 };
         let allowed = 1.0 - self.config.target;
@@ -250,6 +273,42 @@ mod tests {
         }
         let (_, refires) = t.track(&h);
         assert!(refires, "a fresh excursion journals again");
+    }
+
+    #[test]
+    fn off_boundary_objective_snaps_to_its_bucket_top() {
+        // 50 µs = 50_000 ns is NOT a bucket boundary: its bucket is
+        // [49_152, 50_176). The effective objective is the bucket top.
+        let c = SloConfig::new(50, 0.99);
+        assert_eq!(c.objective_ns(), 50_175);
+        assert_eq!(c.objective_us, 50, "configured value is preserved for display");
+
+        // Regression: a single sample inside the objective's own bucket
+        // but numerically above the raw 50_000 ns. The unsnapped code
+        // called count_le(50_000), whose min-clamp (50_000 < min=50_100)
+        // returned 0 — an under-count that flipped compliance to 0 and
+        // burn to 100× even though the histogram cannot distinguish
+        // 50_100 from 50_000. Snapped, the count is exact per the
+        // bucket-top contract.
+        let mut h = LogHistogram::new();
+        h.record(50_100);
+        let s = SloTracker::new(c).evaluate(&h);
+        assert_eq!((s.good, s.bad), (1, 0), "in-bucket sample counts good");
+        assert_eq!(s.compliance, 1.0);
+
+        // Exactness at the snapped edge: 50_175 is the last good value,
+        // 50_176 the first bad one.
+        let mut h = LogHistogram::new();
+        h.record(50_175);
+        h.record(50_176);
+        let s = SloTracker::new(c).evaluate(&h);
+        assert_eq!((s.good, s.bad), (1, 1));
+
+        // Round sub-LINEAR_MAX-µs objectives were exact before and stay
+        // bucket-aligned after the snap (16 µs = 16_000 ns tops nothing
+        // below LINEAR_MAX ns, but its snap is still deterministic).
+        let c16 = SloConfig::new(16, 0.95);
+        assert_eq!(c16.objective_ns(), LogHistogram::bucket_top(16_000));
     }
 
     #[test]

@@ -40,6 +40,7 @@ use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::obs::journal::{EventKind, JournalSink, Severity};
 use crate::util::{json, lock};
 
 /// One relaxed atomic per device lane accumulating wall busy-ns (the
@@ -139,6 +140,9 @@ pub struct TelemetrySource {
     pub answered_total: Box<dyn Fn() -> u64 + Send + Sync>,
     /// Requests shed/refused by admission so far (monotonic).
     pub shed_total: Box<dyn Fn() -> u64 + Send + Sync>,
+    /// Live device-pool size. Elastic pools resize at runtime, so this
+    /// is a gauge like the others; fixed pools wire a constant.
+    pub pool_devices: Box<dyn Fn() -> u64 + Send + Sync>,
     /// Per-device busy-ns lanes.
     pub busy: Arc<BusyLanes>,
     /// Display names per device lane, e.g. `device 0 [16x8]`.
@@ -147,6 +151,10 @@ pub struct TelemetrySource {
     /// cache-eviction deltas, SLO budget transitions — here so the
     /// sampler stays generic).
     pub probe: Option<Box<dyn Fn() + Send + Sync>>,
+    /// Fleet-wide journal sink for sampler-detected anomalies (today:
+    /// cumulative-counter regressions). `None` disables the reporting,
+    /// never the sampling.
+    pub journal: Option<JournalSink>,
 }
 
 impl std::fmt::Debug for TelemetrySource {
@@ -170,6 +178,8 @@ pub struct TelemetrySample {
     pub in_flight: u64,
     pub answered_total: u64,
     pub shed_total: u64,
+    /// Device-pool size at the tick (live lanes, not the max bound).
+    pub pool_devices: u64,
     /// Per-device Δbusy/Δwall since the previous tick, clamped [0, 1].
     pub occupancy: Vec<f64>,
 }
@@ -215,6 +225,7 @@ impl TimelineSnapshot {
             mix(s.in_flight);
             mix(s.answered_total);
             mix(s.shed_total);
+            mix(s.pool_devices);
         }
         h
     }
@@ -241,7 +252,15 @@ impl TimelineSnapshot {
         if dt_ns == 0 {
             return 0.0;
         }
-        field(last).saturating_sub(field(first)) as f64 / (dt_ns as f64 * 1e-9)
+        let (a, b) = (field(first), field(last));
+        if b < a {
+            // A cumulative counter moved backwards (metrics-sink swap or
+            // reset). The sampler journals the violation once at tick
+            // time; the rate reads an explicit 0 rather than a silently
+            // saturated difference.
+            return 0.0;
+        }
+        (b - a) as f64 / (dt_ns as f64 * 1e-9)
     }
 
     /// The timeline as a self-describing JSON document (hand-rolled,
@@ -271,13 +290,15 @@ impl TimelineSnapshot {
             }
             out.push_str(&format!(
                 "    {{\"tick\": {}, \"wall_ns\": {}, \"queue_depth\": {}, \"in_flight\": {}, \
-                 \"answered_total\": {}, \"shed_total\": {}, \"occupancy\": [{}]}}",
+                 \"answered_total\": {}, \"shed_total\": {}, \"pool_devices\": {}, \
+                 \"occupancy\": [{}]}}",
                 s.tick,
                 s.wall_ns,
                 s.queue_depth,
                 s.in_flight,
                 s.answered_total,
                 s.shed_total,
+                s.pool_devices,
                 s.occupancy
                     .iter()
                     .map(|o| format!("{o:.4}"))
@@ -312,6 +333,9 @@ impl TimelineSnapshot {
         for (i, o) in s.occupancy.iter().enumerate() {
             out.push_str(&format!("npe_device_occupancy{{device=\"{i}\"}} {o:.4}\n"));
         }
+        out.push_str("# HELP npe_pool_devices Live device-pool size at the last tick.\n");
+        out.push_str("# TYPE npe_pool_devices gauge\n");
+        out.push_str(&format!("npe_pool_devices {}\n", s.pool_devices));
         out.push_str("# HELP npe_throughput_rps Answered-request rate over the trailing window.\n");
         out.push_str("# TYPE npe_throughput_rps gauge\n");
         out.push_str(&format!("npe_throughput_rps {:.3}\n", self.throughput_rps(16)));
@@ -347,6 +371,10 @@ struct SamplerInner {
     stopping: AtomicBool,
     stop_gate: Mutex<bool>,
     stop_cv: Condvar,
+    /// Warn-once latch for cumulative-counter regressions: the first
+    /// violating tick journals, later ones stay quiet (a regressed sink
+    /// would otherwise spam a Warn per tick until the window clears).
+    regression_warned: AtomicBool,
 }
 
 impl SamplerInner {
@@ -356,8 +384,24 @@ impl SamplerInner {
         let in_flight = (self.source.in_flight)();
         let answered_total = (self.source.answered_total)();
         let shed_total = (self.source.shed_total)();
+        let pool_devices = (self.source.pool_devices)();
         let busy = self.source.busy.totals();
         let mut ring = lock(&self.ring);
+        let regression = ring.samples.back().and_then(|prev| {
+            if answered_total < prev.answered_total {
+                Some(format!(
+                    "answered_total regressed {} -> {} at tick {}",
+                    prev.answered_total, answered_total, ring.next_tick
+                ))
+            } else if shed_total < prev.shed_total {
+                Some(format!(
+                    "shed_total regressed {} -> {} at tick {}",
+                    prev.shed_total, shed_total, ring.next_tick
+                ))
+            } else {
+                None
+            }
+        });
         let dt = now_ns.saturating_sub(ring.last_wall_ns);
         let occupancy: Vec<f64> = busy
             .iter()
@@ -385,9 +429,17 @@ impl SamplerInner {
             in_flight,
             answered_total,
             shed_total,
+            pool_devices,
             occupancy,
         });
         drop(ring);
+        if let Some(detail) = regression {
+            if !self.regression_warned.swap(true, Ordering::Relaxed) {
+                if let Some(journal) = &self.source.journal {
+                    journal.event(EventKind::CounterRegression, Severity::Warn, detail);
+                }
+            }
+        }
         if let Some(probe) = &self.source.probe {
             probe();
         }
@@ -453,6 +505,7 @@ impl TelemetrySampler {
             stopping: AtomicBool::new(false),
             stop_gate: Mutex::new(false),
             stop_cv: Condvar::new(),
+            regression_warned: AtomicBool::new(false),
         });
         let thread = if config.mode == SamplerMode::Background {
             let worker = Arc::clone(&inner);
@@ -529,14 +582,17 @@ mod tests {
     ) -> TelemetrySource {
         let d = Arc::clone(depth);
         let a = Arc::clone(answered);
+        let devices = busy.len() as u64;
         TelemetrySource {
             queue_depth: Box::new(move || d.load(Ordering::Relaxed)),
             in_flight: Box::new(|| 0),
             answered_total: Box::new(move || a.load(Ordering::Relaxed)),
             shed_total: Box::new(|| 0),
+            pool_devices: Box::new(move || devices),
             busy: Arc::clone(busy),
             device_names: (0..busy.len()).map(|i| format!("device {i}")).collect(),
             probe: None,
+            journal: None,
         }
     }
 
@@ -712,8 +768,65 @@ mod tests {
         let gauges = sampler.snapshot().prometheus_gauges();
         assert!(gauges.contains("npe_queue_depth 2"));
         assert!(gauges.contains("npe_in_flight 0"));
+        assert!(gauges.contains("npe_pool_devices 2"));
         assert!(gauges.contains("npe_device_occupancy{device=\"0\"}"));
         assert!(gauges.contains("npe_device_occupancy{device=\"1\"}"));
         assert!(gauges.contains("npe_timeline_dropped_samples 0"));
+        assert_eq!(
+            samples[0].get("pool_devices").and_then(json::JsonValue::as_u64),
+            Some(2),
+            "samples carry the pool-size column"
+        );
+    }
+
+    #[test]
+    fn pool_size_changes_move_the_fingerprint() {
+        let depth = Arc::new(AtomicU64::new(0));
+        let answered = Arc::new(AtomicU64::new(0));
+        let busy = BusyLanes::new(1);
+        let pool = Arc::new(AtomicU64::new(1));
+        let mut source = counter_source(&depth, &answered, &busy);
+        let p = Arc::clone(&pool);
+        source.pool_devices = Box::new(move || p.load(Ordering::Relaxed));
+        let sampler = TelemetrySampler::new(source, SamplerConfig::manual());
+        sampler.tick();
+        let one = sampler.snapshot().fingerprint();
+        // Same gauges, different pool size → different fingerprint: the
+        // elastic e2e suite leans on this to assert resize trajectories.
+        let b2 = BusyLanes::new(1);
+        let mut s2 = counter_source(&depth, &answered, &b2);
+        s2.pool_devices = Box::new(|| 2);
+        let sampler2 = TelemetrySampler::new(s2, SamplerConfig::manual());
+        sampler2.tick();
+        assert_ne!(one, sampler2.snapshot().fingerprint());
+        assert_eq!(sampler.snapshot().latest().map(|s| s.pool_devices), Some(1));
+    }
+
+    #[test]
+    fn counter_regression_journals_once_and_rates_read_zero() {
+        use crate::obs::journal::EventJournal;
+        let depth = Arc::new(AtomicU64::new(0));
+        let answered = Arc::new(AtomicU64::new(0));
+        let busy = BusyLanes::new(1);
+        let journal = EventJournal::shared(16);
+        let mut source = counter_source(&depth, &answered, &busy);
+        source.journal = Some(JournalSink::new(Arc::clone(&journal), None));
+        let sampler = TelemetrySampler::new(source, SamplerConfig::manual());
+        answered.store(100, Ordering::Relaxed);
+        sampler.tick();
+        std::thread::sleep(Duration::from_millis(2));
+        // The counter moves backwards (sink swap / reset): exactly one
+        // Warn lands in the journal, and the trailing rate reads an
+        // explicit 0 instead of a saturated garbage value.
+        answered.store(40, Ordering::Relaxed);
+        sampler.tick();
+        answered.store(10, Ordering::Relaxed);
+        sampler.tick();
+        let events = journal.events();
+        assert_eq!(events.len(), 1, "warn-once latch");
+        assert_eq!(events[0].kind, EventKind::CounterRegression);
+        assert_eq!(events[0].severity, Severity::Warn);
+        assert!(events[0].detail.contains("answered_total regressed 100 -> 40"));
+        assert_eq!(sampler.snapshot().throughput_rps(8), 0.0, "regressed rate is explicit 0");
     }
 }

@@ -25,7 +25,7 @@ use super::service::{NpeService, ObsWiring};
 use crate::conv::QuantizedCnn;
 use crate::coordinator::{BatcherConfig, ExecutionPlan, PjrtSpec, ServedModel};
 use crate::exec::BackendKind;
-use crate::fleet::{DeviceSpec, FleetPool};
+use crate::fleet::{ControllerConfig, DeviceSpec, FleetPool};
 use crate::graph::{GraphModel, QuantizedGraph};
 use crate::mapper::{NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
 use crate::model::QuantizedMlp;
@@ -102,6 +102,11 @@ pub struct ServeBuilder {
     /// Capacity for a fresh private journal ([`Self::journaling`]).
     journal_capacity: Option<usize>,
     telemetry: Option<SamplerConfig>,
+    /// Elastic bounds `[min, max]` for a private fleet ([`Self::elastic`]).
+    elastic: Option<(usize, usize)>,
+    /// Policy-loop configuration for the elastic pool controller
+    /// ([`Self::controller`]).
+    controller: Option<ControllerConfig>,
     /// Registry wiring: serve on an existing shared device pool instead
     /// of launching one (mutually exclusive with `devices` and `pjrt`).
     pub(crate) pool: Option<Arc<FleetPool>>,
@@ -128,6 +133,8 @@ impl ServeBuilder {
             journal: None,
             journal_capacity: None,
             telemetry: None,
+            elastic: None,
+            controller: None,
             pool: None,
             shared_cache: None,
             label: None,
@@ -248,6 +255,31 @@ impl ServeBuilder {
         self
     }
 
+    /// Make the private fleet elastic: the pool launches with the
+    /// [`devices`](Self::devices) list but can be resized at runtime
+    /// within `[min_devices, max_devices]` lanes — by the
+    /// [`PoolController`](crate::fleet::PoolController) this service
+    /// starts (policy defaults from [`ControllerConfig::default`],
+    /// override with [`controller`](Self::controller)), or by hand
+    /// through [`NpeService::controller`]. Shrinks drain: the retiring
+    /// device finishes its in-flight batch first, so accepted work is
+    /// never dropped. Requires a non-empty `devices` list with
+    /// `min_devices <= devices.len() <= max_devices` and
+    /// `min_devices >= 1`; incompatible with a shared (registry) pool.
+    pub fn elastic(mut self, min_devices: usize, max_devices: usize) -> Self {
+        self.elastic = Some((min_devices, max_devices));
+        self
+    }
+
+    /// Override the elastic pool controller's policy (tick period,
+    /// scale-up/scale-down thresholds, cooldown, manual vs background
+    /// mode). Only meaningful with [`elastic`](Self::elastic) — a build
+    /// error otherwise.
+    pub fn controller(mut self, config: ControllerConfig) -> Self {
+        self.controller = Some(config);
+        self
+    }
+
     /// Name this service. The request-pipeline tracer track becomes
     /// `requests[<name>]`, so services sharing one tracer (a registry's
     /// tenants, the obs CLI's per-model services) stay distinguishable.
@@ -293,6 +325,31 @@ impl ServeBuilder {
         if self.pjrt.is_some() && !matches!(self.model, ServedModel::Mlp(_)) {
             return invalid("pjrt cross-verification requires an MLP model");
         }
+        if self.controller.is_some() && self.elastic.is_none() {
+            return invalid("a controller policy requires elastic bounds; call .elastic(min, max)");
+        }
+        if let Some((min, max)) = self.elastic {
+            if self.pool.is_some() {
+                // A shared pool is resized by its owner (the registry),
+                // not by one of the tenants serving on it.
+                return invalid("elastic bounds apply to a private fleet, not a shared pool");
+            }
+            let launched = match &self.devices {
+                Some(specs) => specs.len(),
+                None => {
+                    return invalid("elastic bounds require a device fleet; call .devices(..)");
+                }
+            };
+            if min == 0 {
+                return invalid("elastic min_devices must be >= 1");
+            }
+            if min > max {
+                return invalid("elastic min_devices must be <= max_devices");
+            }
+            if launched < min || launched > max {
+                return invalid("the device list length must lie within the elastic bounds");
+            }
+        }
         let cache = self
             .shared_cache
             .unwrap_or_else(|| ScheduleCache::shared_bounded(self.cache_capacity));
@@ -332,9 +389,17 @@ impl ServeBuilder {
                 // Launch the private pool here — before the coordinator
                 // thread — so the telemetry sampler can wire against its
                 // queue and busy lanes. The coordinator still drains and
-                // joins it at shutdown (`owned: true`).
+                // joins it at shutdown (`owned: true`). Elastic fleets
+                // reserve `max_devices` lanes up front so grow never has
+                // to reindex busy lanes or metrics slots.
+                let max_lanes = self.elastic.map_or(specs.len(), |(_, max)| max);
                 ExecutionPlan::Pool {
-                    pool: FleetPool::launch(&specs, Arc::clone(&cache), self.tracer.clone()),
+                    pool: FleetPool::launch_elastic(
+                        &specs,
+                        max_lanes,
+                        Arc::clone(&cache),
+                        self.tracer.clone(),
+                    ),
                     owned: true,
                 }
             }
@@ -347,6 +412,8 @@ impl ServeBuilder {
             slo: self.slo,
             journal,
             telemetry: self.telemetry,
+            elastic: self.elastic,
+            controller: self.controller,
         };
         Ok(NpeService::start(
             self.model,
@@ -397,6 +464,64 @@ mod tests {
             .admission(AdmissionPolicy::Reject { max_depth: 0 })
             .build();
         assert!(reason(zero_depth).contains("max_depth"));
+    }
+
+    #[test]
+    fn elastic_bounds_are_validated() {
+        let no_devices = NpeService::builder(mlp()).elastic(1, 4).build();
+        assert!(reason(no_devices).contains("require a device fleet"));
+
+        let zero_min = NpeService::builder(mlp())
+            .devices([NpeGeometry::PAPER])
+            .elastic(0, 4)
+            .build();
+        assert!(reason(zero_min).contains("min_devices must be >= 1"));
+
+        let inverted = NpeService::builder(mlp())
+            .devices([NpeGeometry::PAPER])
+            .elastic(3, 2)
+            .build();
+        assert!(reason(inverted).contains("<= max_devices"));
+
+        let outside = NpeService::builder(mlp())
+            .devices(vec![NpeGeometry::PAPER; 5])
+            .elastic(1, 4)
+            .build();
+        assert!(reason(outside).contains("within the elastic bounds"));
+
+        let orphan_controller = NpeService::builder(mlp())
+            .devices([NpeGeometry::PAPER])
+            .controller(ControllerConfig::manual())
+            .build();
+        assert!(reason(orphan_controller).contains("requires elastic bounds"));
+    }
+
+    #[test]
+    fn elastic_service_builds_and_reports_its_controller() {
+        let svc = NpeService::builder(mlp())
+            .devices([NpeGeometry::PAPER])
+            .elastic(1, 3)
+            .controller(ControllerConfig::manual())
+            .batcher(BatcherConfig::new(2, Duration::from_millis(1)))
+            .build()
+            .expect("elastic fleet");
+        let ctl = svc.controller().expect("controller present");
+        assert_eq!((ctl.min_devices(), ctl.max_devices()), (1, 3));
+        assert_eq!(ctl.pool_size(), 1, "launches at the device-list size");
+        let out = svc.submit(vec![1; 8]).expect("submit").wait().expect("answer");
+        assert_eq!(out.output.len(), 2);
+        svc.shutdown().expect("clean shutdown");
+    }
+
+    #[test]
+    fn fixed_fleets_have_no_controller() {
+        let svc = NpeService::builder(mlp())
+            .devices([NpeGeometry::PAPER, NpeGeometry::PAPER])
+            .batcher(BatcherConfig::new(2, Duration::from_millis(1)))
+            .build()
+            .expect("fixed fleet");
+        assert!(svc.controller().is_none());
+        svc.shutdown().expect("clean shutdown");
     }
 
     #[test]

@@ -18,6 +18,8 @@
 //!   .slo(..)                         — latency objective + target fraction
 //!   .journaling(..) | .journal(j)    — structured event log
 //!   .telemetry(..)                   — live sampled timeline ([`crate::obs`])
+//!   .elastic(min, max)               — telemetry-driven pool resizing
+//!   .controller(..)                  — resize-policy override (thresholds, cooldown)
 //!   .build()?                        — validated; InvalidConfig, not a hang
 //!   ▼
 //! NpeService ── submit(input)? ──► Ticket ── wait()/wait_timeout()? ──► InferenceResponse
@@ -32,6 +34,7 @@
 //! ```text
 //! ModelRegistry::builder()
 //!   .devices([DeviceSpec, ..])       — the shared pool, launched once
+//!   .elastic(min, max)               — fleet-wide pool resizing (worst burn wins)
 //!   .register("mnist", mlp)          — tenant under the default policy
 //!   .register_with("lenet", cnn, AdmissionPolicy::Reject { max_depth: 64 })
 //!   .build()?

@@ -31,7 +31,9 @@ use super::error::ServeError;
 use super::service::NpeService;
 use super::ticket::Ticket;
 use crate::coordinator::{BatcherConfig, CoordinatorMetrics, ServedModel};
-use crate::fleet::{DeviceSpec, FleetPool};
+use crate::fleet::{
+    ControllerConfig, ControllerSignals, DeviceSpec, FleetPool, PoolController,
+};
 use crate::mapper::{NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
 use crate::obs::{
     chrome_trace_json_with, merge_expositions, EventJournal, EventKind, JournalSink,
@@ -63,6 +65,10 @@ pub struct RegistryBuilder {
     slo: Option<SloConfig>,
     journal_capacity: Option<usize>,
     telemetry: Option<SamplerConfig>,
+    /// Elastic `[min, max]` bounds for the shared pool ([`Self::elastic`]).
+    elastic: Option<(usize, usize)>,
+    /// Policy override for the fleet controller ([`Self::controller`]).
+    controller: Option<ControllerConfig>,
     tenants: Vec<Registration>,
 }
 
@@ -83,6 +89,8 @@ impl RegistryBuilder {
             slo: None,
             journal_capacity: None,
             telemetry: None,
+            elastic: None,
+            controller: None,
             tenants: Vec::new(),
         }
     }
@@ -164,6 +172,28 @@ impl RegistryBuilder {
         self
     }
 
+    /// Make the shared pool elastic: it launches with the
+    /// [`devices`](Self::devices) list but the registry's
+    /// [`PoolController`] resizes it within `[min_devices, max_devices]`
+    /// as fleet-wide load moves (scale-up on queue depth / shed rate /
+    /// the **worst** SLO burn across tenants, scale-down after sustained
+    /// idleness). Shrinks drain — the retiring device finishes its
+    /// in-flight batch first — so no tenant's accepted work is ever
+    /// dropped. Requires `min_devices >= 1` and
+    /// `min_devices <= devices.len() <= max_devices`.
+    pub fn elastic(mut self, min_devices: usize, max_devices: usize) -> Self {
+        self.elastic = Some((min_devices, max_devices));
+        self
+    }
+
+    /// Override the fleet controller's policy (tick period, thresholds,
+    /// cooldown, manual vs background mode). Only meaningful with
+    /// [`elastic`](Self::elastic) — a build error otherwise.
+    pub fn controller(mut self, config: ControllerConfig) -> Self {
+        self.controller = Some(config);
+        self
+    }
+
     /// Register a tenant under the builder-level default admission
     /// policy.
     pub fn register(self, name: impl Into<String>, model: impl IntoServedModel) -> Self {
@@ -212,9 +242,32 @@ impl RegistryBuilder {
         if specs.is_empty() {
             return invalid("the shared pool needs at least one device".to_string());
         }
+        if self.controller.is_some() && self.elastic.is_none() {
+            return invalid(
+                "a controller policy requires elastic bounds; call .elastic(min, max)"
+                    .to_string(),
+            );
+        }
+        if let Some((min, max)) = self.elastic {
+            if min == 0 {
+                return invalid("elastic min_devices must be >= 1".to_string());
+            }
+            if min > max {
+                return invalid("elastic min_devices must be <= max_devices".to_string());
+            }
+            if specs.len() < min || specs.len() > max {
+                return invalid(
+                    "the device list length must lie within the elastic bounds".to_string(),
+                );
+            }
+        }
 
         let cache = ScheduleCache::shared_bounded(self.cache_capacity);
-        let pool = FleetPool::launch(&specs, Arc::clone(&cache), self.tracer.clone());
+        // Elastic pools reserve `max_devices` lanes up front so grow
+        // never reindexes busy lanes or tracer tracks.
+        let max_lanes = self.elastic.map_or(specs.len(), |(_, max)| max);
+        let pool =
+            FleetPool::launch_elastic(&specs, max_lanes, Arc::clone(&cache), self.tracer.clone());
         let journal = self.journal_capacity.map(EventJournal::shared);
         let mut tenants: Vec<(String, NpeService)> = Vec::with_capacity(self.tenants.len());
         for reg in self.tenants {
@@ -249,7 +302,52 @@ impl RegistryBuilder {
         let sampler = self.telemetry.map(|cfg| {
             fleet_sampler(cfg, &pool, &cache, &tenants, journal.as_ref(), self.tracer.as_ref())
         });
-        Ok(ModelRegistry { tenants, pool, cache, tracer: self.tracer, journal, sampler })
+        // The fleet-wide elastic actuator: one controller over the
+        // shared pool, fed fleet-aggregate signals — the worst SLO burn
+        // across tenants grows for everyone, because the pool is shared.
+        let controller = self.elastic.map(|(min, max)| {
+            let queued_requests = {
+                let p = Arc::clone(&pool);
+                Box::new(move || p.queued_requests() as u64) as Box<dyn Fn() -> u64 + Send + Sync>
+            };
+            let in_flight = {
+                let clients: Vec<_> = tenants.iter().map(|(_, svc)| svc.client()).collect();
+                Box::new(move || clients.iter().map(|c| c.in_flight() as u64).sum())
+                    as Box<dyn Fn() -> u64 + Send + Sync>
+            };
+            let shed_rps: Box<dyn Fn() -> f64 + Send + Sync> = match &sampler {
+                Some(s) => {
+                    let s = Arc::clone(s);
+                    Box::new(move || s.snapshot().shed_rate_rps(16))
+                }
+                None => Box::new(|| 0.0),
+            };
+            let slo_burn: Box<dyn Fn() -> f64 + Send + Sync> = {
+                let lanes: Vec<_> = tenants
+                    .iter()
+                    .filter_map(|(_, svc)| {
+                        svc.slo_tracker().map(|t| (t, svc.metrics_handle()))
+                    })
+                    .collect();
+                Box::new(move || {
+                    lanes
+                        .iter()
+                        .map(|(t, m)| t.evaluate(&util::lock(m).latencies).burn_rate)
+                        .fold(0.0, f64::max)
+                })
+            };
+            let signals = ControllerSignals { queued_requests, in_flight, shed_rps, slo_burn };
+            let sink = journal.as_ref().map(|j| JournalSink::new(Arc::clone(j), None));
+            PoolController::new(
+                Arc::clone(&pool),
+                min,
+                max,
+                signals,
+                self.controller.unwrap_or_default(),
+                sink,
+            )
+        });
+        Ok(ModelRegistry { tenants, pool, cache, tracer: self.tracer, journal, sampler, controller })
     }
 }
 
@@ -323,14 +421,20 @@ fn fleet_sampler(
             }
         }) as Box<dyn Fn() + Send + Sync>
     });
+    let pool_devices = {
+        let pool = Arc::clone(pool);
+        Box::new(move || pool.size() as u64) as Box<dyn Fn() -> u64 + Send + Sync>
+    };
     let source = TelemetrySource {
         queue_depth,
         in_flight,
         answered_total,
         shed_total,
+        pool_devices,
         busy: Arc::clone(pool.busy_lanes()),
         device_names: pool.device_names(),
         probe,
+        journal: journal.map(|j| JournalSink::new(Arc::clone(j), None)),
     };
     match tracer {
         Some(t) => TelemetrySampler::with_epoch(source, config, t.epoch()),
@@ -352,6 +456,8 @@ pub struct ModelRegistry {
     journal: Option<Arc<EventJournal>>,
     /// The fleet-wide telemetry sampler, when telemetry was enabled.
     sampler: Option<Arc<TelemetrySampler>>,
+    /// The elastic pool controller, when `.elastic(..)` configured one.
+    controller: Option<Arc<PoolController>>,
 }
 
 impl ModelRegistry {
@@ -444,6 +550,11 @@ impl ModelRegistry {
         self.sampler.clone()
     }
 
+    /// The elastic pool controller (`None` on a fixed-size registry).
+    pub fn controller(&self) -> Option<Arc<PoolController>> {
+        self.controller.clone()
+    }
+
     /// Owned snapshot of the fleet-wide telemetry ring (`None` when
     /// telemetry is off).
     pub fn timeline(&self) -> Option<TimelineSnapshot> {
@@ -489,6 +600,11 @@ impl ModelRegistry {
         // lanes, so it must quiesce first.
         if let Some(s) = &self.sampler {
             s.stop();
+        }
+        // Stop the resize loop before draining: a controller racing the
+        // drain could otherwise retire devices the flush is counting on.
+        if let Some(c) = &self.controller {
+            c.stop();
         }
         let mut lost = false;
         for (_, svc) in self.tenants.drain(..) {
@@ -548,6 +664,50 @@ mod tests {
             .register_with("greedy", mlp(2), AdmissionPolicy::ShedOldest { max_depth: 4 })
             .build();
         assert!(reason(shed).contains("ShedOldest"));
+
+        let inverted = ModelRegistry::builder()
+            .devices([NpeGeometry::WALKTHROUGH])
+            .elastic(3, 2)
+            .register("a", mlp(1))
+            .build();
+        assert!(reason(inverted).contains("<= max_devices"));
+
+        let orphan_controller = ModelRegistry::builder()
+            .controller(ControllerConfig::manual())
+            .register("a", mlp(1))
+            .build();
+        assert!(reason(orphan_controller).contains("requires elastic bounds"));
+    }
+
+    #[test]
+    fn elastic_registry_resizes_through_its_controller() {
+        let model = mlp(9);
+        let registry = ModelRegistry::builder()
+            .devices([NpeGeometry::WALKTHROUGH])
+            .elastic(1, 3)
+            .controller(ControllerConfig::manual())
+            .journaling(64)
+            .batcher(BatcherConfig::new(2, Duration::from_millis(1)))
+            .register("a", model.clone())
+            .build()
+            .expect("valid registry");
+        let ctl = registry.controller().expect("elastic registry has a controller");
+        assert_eq!(registry.pool_size(), 1);
+        assert_eq!(ctl.force(3), 3, "forced grow reaches the target");
+        assert_eq!(registry.pool_size(), 3);
+
+        // The grown pool still answers with the tenant's own model.
+        let x = model.synth_inputs(1, 7)[0].clone();
+        let resp = registry.submit("a", x.clone()).expect("routed").wait().expect("answered");
+        assert_eq!(resp.output, model.forward_batch(&[x])[0]);
+
+        assert_eq!(ctl.force(1), 1, "forced shrink drains back to min");
+        assert_eq!(registry.pool_size(), 1);
+        let journal = registry.journal().expect("journaling on");
+        let resizes =
+            journal.events().iter().filter(|e| e.kind == EventKind::PoolResize).count();
+        assert!(resizes >= 4, "every grow and shrink step is journaled, got {resizes}");
+        registry.shutdown().expect("clean shutdown");
     }
 
     #[test]

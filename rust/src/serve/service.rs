@@ -17,6 +17,7 @@ use crate::coordinator::{
     service_thread, BatcherConfig, CoordinatorMetrics, CoordinatorMsg, CoordinatorObs,
     ExecutionPlan, InferenceRequest, ServedModel,
 };
+use crate::fleet::{ControllerConfig, ControllerSignals, PoolController};
 use crate::mapper::ScheduleCache;
 use crate::obs::{
     chrome_trace_json_with, BusyLanes, EventJournal, EventKind, JournalSink, MetricsSnapshot,
@@ -37,6 +38,11 @@ pub(crate) struct ObsWiring {
     pub(crate) slo: Option<SloConfig>,
     pub(crate) journal: Option<Arc<EventJournal>>,
     pub(crate) telemetry: Option<SamplerConfig>,
+    /// Elastic `[min, max]` device bounds for an owned fleet — when set,
+    /// `start` launches a [`PoolController`] over the pool.
+    pub(crate) elastic: Option<(usize, usize)>,
+    /// Policy override for that controller (defaults otherwise).
+    pub(crate) controller: Option<ControllerConfig>,
 }
 
 /// A running serving instance: batcher, schedule cache, metrics and the
@@ -61,6 +67,9 @@ pub struct NpeService {
     journal: Option<Arc<EventJournal>>,
     /// This service's (tenant-labelled) sink into `journal`.
     journal_sink: Option<JournalSink>,
+    /// The elastic pool controller, when `.elastic(..)` configured one
+    /// over an owned fleet.
+    controller: Option<Arc<PoolController>>,
 }
 
 impl NpeService {
@@ -86,7 +95,7 @@ impl NpeService {
         obs: ObsWiring,
         label: Option<&str>,
     ) -> Self {
-        let ObsWiring { tracer, slo, journal, telemetry } = obs;
+        let ObsWiring { tracer, slo, journal, telemetry, elastic, controller } = obs;
         let (tx, rx) = mpsc::channel();
         let metrics = Arc::new(Mutex::new(CoordinatorMetrics::default()));
         let shared = ServeShared::new(model.input_len(), admission);
@@ -107,21 +116,34 @@ impl NpeService {
                 vec![format!("device 0 [{}x{}]", geometry.tg_rows, geometry.tg_cols)],
                 None,
             ),
-            ExecutionPlan::Pool { pool, .. } => (
+            ExecutionPlan::Pool { pool, owned } => (
                 Arc::clone(pool.busy_lanes()),
                 pool.device_names(),
-                Some(Arc::clone(pool)),
+                Some((Arc::clone(pool), *owned)),
             ),
         };
 
         let sampler = telemetry.map(|sampler_cfg| {
-            let queue_depth: Box<dyn Fn() -> u64 + Send + Sync> = match pool_handle {
-                Some(pool) => Box::new(move || pool.queued_requests() as u64),
+            let queue_depth: Box<dyn Fn() -> u64 + Send + Sync> = match &pool_handle {
+                Some((pool, _)) => {
+                    let pool = Arc::clone(pool);
+                    Box::new(move || pool.queued_requests() as u64)
+                }
                 // The single path has no shared work queue — its backlog
                 // (the batcher's pending buffer) is private to the
                 // coordinator loop, so the gauge reads 0 there and load
                 // shows up in `in_flight` instead.
                 None => Box::new(|| 0),
+            };
+            // Live device count: the pool's running lanes on the fleet
+            // path (elastic resizes move it), constant 1 on the single
+            // path.
+            let pool_devices: Box<dyn Fn() -> u64 + Send + Sync> = match &pool_handle {
+                Some((pool, _)) => {
+                    let pool = Arc::clone(pool);
+                    Box::new(move || pool.size() as u64)
+                }
+                None => Box::new(|| 1),
             };
             let in_flight = {
                 let s = Arc::clone(&shared);
@@ -177,9 +199,11 @@ impl NpeService {
                 in_flight,
                 answered_total,
                 shed_total,
+                pool_devices,
                 busy: Arc::clone(&busy),
                 device_names: device_names.clone(),
                 probe,
+                journal: journal_sink.clone(),
             };
             // Share the tracer's epoch when there is one, so timeline
             // ticks and trace spans land on the same timebase.
@@ -189,12 +213,58 @@ impl NpeService {
             }
         });
 
+        // The elastic actuator: policy loop over the *owned* pool only —
+        // a shared (registry) pool is resized by its owner, never by one
+        // of the tenants serving on it.
+        let controller = match (&pool_handle, elastic) {
+            (Some((pool, true)), Some((min, max))) => {
+                let queued_requests = {
+                    let p = Arc::clone(pool);
+                    Box::new(move || p.queued_requests() as u64)
+                        as Box<dyn Fn() -> u64 + Send + Sync>
+                };
+                let in_flight = {
+                    let s = Arc::clone(&shared);
+                    Box::new(move || s.depth() as u64) as Box<dyn Fn() -> u64 + Send + Sync>
+                };
+                let shed_rps: Box<dyn Fn() -> f64 + Send + Sync> = match &sampler {
+                    Some(s) => {
+                        let s = Arc::clone(s);
+                        Box::new(move || s.snapshot().shed_rate_rps(16))
+                    }
+                    None => Box::new(|| 0.0),
+                };
+                let slo_burn: Box<dyn Fn() -> f64 + Send + Sync> = match &slo {
+                    Some(tracker) => {
+                        let tracker = Arc::clone(tracker);
+                        let m = Arc::clone(&metrics);
+                        Box::new(move || {
+                            tracker.evaluate(&util::lock(&m).latencies).burn_rate
+                        })
+                    }
+                    None => Box::new(|| 0.0),
+                };
+                let signals =
+                    ControllerSignals { queued_requests, in_flight, shed_rps, slo_burn };
+                Some(PoolController::new(
+                    Arc::clone(pool),
+                    min,
+                    max,
+                    signals,
+                    controller.unwrap_or_default(),
+                    journal_sink.clone(),
+                ))
+            }
+            _ => None,
+        };
+
         let (metrics_t, cache_t, shared_t) =
             (Arc::clone(&metrics), Arc::clone(&cache), Arc::clone(&shared));
         let coordinator_obs = CoordinatorObs {
             tracer: tracer.clone(),
             busy,
             journal: journal_sink.clone(),
+            tenant: label.map(Arc::from),
         };
         let handle = std::thread::spawn(move || {
             service_thread(rx, model, plan, cfg, metrics_t, cache_t, shared_t, coordinator_obs)
@@ -211,6 +281,7 @@ impl NpeService {
             slo,
             journal,
             journal_sink,
+            controller,
         }
     }
 
@@ -294,6 +365,15 @@ impl NpeService {
         self.sampler.clone()
     }
 
+    /// The elastic pool controller, when [`ServeBuilder::elastic`]
+    /// configured one (`None` on single-device or fixed-size services).
+    /// Tests use manual mode ([`crate::fleet::ControllerConfig::manual`])
+    /// and drive [`tick`](crate::fleet::PoolController::tick) /
+    /// [`force`](crate::fleet::PoolController::force) deterministically.
+    pub fn controller(&self) -> Option<Arc<PoolController>> {
+        self.controller.clone()
+    }
+
     /// Owned snapshot of the telemetry ring (`None` when sampling is
     /// off).
     pub fn timeline(&self) -> Option<TimelineSnapshot> {
@@ -349,6 +429,11 @@ impl NpeService {
         if let Some(s) = &self.sampler {
             s.stop();
         }
+        // Stop the resize loop before draining: a controller racing the
+        // drain could otherwise retire devices the flush is counting on.
+        if let Some(c) = &self.controller {
+            c.stop();
+        }
         let _ = self.tx.send(CoordinatorMsg::Shutdown);
         match self.handle.take() {
             None => Ok(()),
@@ -369,6 +454,9 @@ impl Drop for NpeService {
         self.shared.begin_shutdown();
         if let Some(s) = &self.sampler {
             s.stop();
+        }
+        if let Some(c) = &self.controller {
+            c.stop();
         }
         let _ = self.tx.send(CoordinatorMsg::Shutdown);
     }

@@ -1,0 +1,228 @@
+//! Elastic-pool end-to-end: a controller-resized fleet stays bit-exact
+//! and lossless while it grows and shrinks.
+//!
+//! What is proven here, via the public serving API only:
+//!
+//! * a manual-tick load-step trajectory (grow under parked backlog,
+//!   shrink after the drain) is **deterministic** — two identical
+//!   seeded runs produce identical telemetry fingerprints, with the
+//!   `pool_devices` column moving through the resizes;
+//! * outputs are **bit-exact across resizes** — every response during a
+//!   grow/shrink storm equals the model's reference forward pass;
+//! * a shrink ordered mid-drain **never drops admitted work** — the
+//!   retire pill waits for the victim's in-flight batch and the
+//!   survivors absorb the queue;
+//! * the controller respects its `[min, max]` bounds and its cooldown,
+//!   and journals every resize as a structured `pool_resize` event.
+//!
+//! CI runs this file with pinned test threads (`--test-threads 2`):
+//! the grow/shrink assertions reason about multi-thread drain windows,
+//! and an oversubscribed runner would stretch those windows.
+
+use std::time::{Duration, Instant};
+use tcd_npe::coordinator::BatcherConfig;
+use tcd_npe::fleet::ControllerConfig;
+use tcd_npe::mapper::NpeGeometry;
+use tcd_npe::model::{MlpTopology, QuantizedMlp};
+use tcd_npe::obs::{EventKind, SamplerConfig};
+use tcd_npe::serve::NpeService;
+
+fn mlp(seed: u64) -> QuantizedMlp {
+    QuantizedMlp::synthesize(MlpTopology::new(vec![8, 6, 2]), seed)
+}
+
+/// Wait out the post-response depth-release window (the slot frees
+/// *after* the answer is sent).
+fn quiesce(service: &NpeService) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while service.in_flight() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(service.in_flight(), 0, "service quiesces once everything is answered");
+}
+
+/// One seeded grow-then-shrink trajectory under a manual-tick controller
+/// and sampler: park a backlog behind a huge batcher, let the controller
+/// grow on its depth signal, flush, let it shrink on idleness, sampling
+/// the timeline at each deterministic point. Returns the timeline
+/// fingerprint and the sampled device counts.
+fn load_step_run() -> (u64, Vec<u64>) {
+    let model = mlp(0x57E9);
+    // batch_size 64 with a 10s wait: submits park in the batcher, so the
+    // controller's admission-depth signal is exact, not racy.
+    let service = NpeService::builder(model.clone())
+        .devices([NpeGeometry::PAPER])
+        .elastic(1, 3)
+        .controller(ControllerConfig::manual().with_cooldown(Duration::ZERO))
+        .batcher(BatcherConfig::new(64, Duration::from_secs(10)))
+        .telemetry(SamplerConfig::manual())
+        .build()
+        .expect("valid elastic service");
+    let ctl = service.controller().expect("elastic service has a controller");
+    let sampler = service.sampler().expect("telemetry enabled");
+    let mut devices = Vec::new();
+    let mut sample = |s: &std::sync::Arc<tcd_npe::obs::TelemetrySampler>| {
+        s.tick();
+        let snap = s.snapshot();
+        devices.push(snap.latest().expect("ticked").pool_devices);
+    };
+
+    sample(&sampler); // tick 0: idle, 1 device
+    // Park 12 requests: depth/device = 12 > 4 → grow on each tick
+    // (zero cooldown) until max.
+    let inputs = model.synth_inputs(12, 0xDA7A);
+    let expect = model.forward_batch(&inputs);
+    let tickets: Vec<_> = inputs
+        .into_iter()
+        .map(|x| service.submit(x).expect("admitted"))
+        .collect();
+    ctl.tick();
+    sample(&sampler); // tick 1: grown to 2, backlog still parked
+    ctl.tick();
+    sample(&sampler); // tick 2: grown to 3 (max)
+    ctl.tick();
+    assert_eq!(ctl.pool_size(), 3, "bounded at max even with the signal still high");
+
+    // Flush the parked backlog through the grown pool and verify every
+    // answer against the reference forward pass.
+    drop(service); // drop flushes: the batcher drains into the pool
+    for (t, want) in tickets.into_iter().zip(expect) {
+        let resp = t.wait_timeout(Duration::from_secs(30)).expect("flushed");
+        assert_eq!(resp.output, want, "bit-exact across the grow");
+    }
+    (sampler.snapshot().fingerprint(), devices)
+}
+
+#[test]
+fn load_step_trajectory_is_deterministic() {
+    let (fp_a, dev_a) = load_step_run();
+    let (fp_b, dev_b) = load_step_run();
+    assert_eq!(dev_a, dev_b, "device-count trajectory repeats");
+    assert_eq!(fp_a, fp_b, "timeline fingerprints match across identical runs");
+    // The trajectory itself: 1 device idle, then 2, then 3 under the
+    // parked backlog (ticks sampled before any request is answered).
+    assert_eq!(&dev_a[..3], &[1, 2, 3], "pool_devices column tracks the grows");
+}
+
+#[test]
+fn outputs_stay_bit_exact_across_a_resize_storm() {
+    let model = mlp(0xB17E);
+    let service = NpeService::builder(model.clone())
+        .devices([NpeGeometry::PAPER])
+        .elastic(1, 4)
+        .controller(ControllerConfig::manual())
+        .batcher(BatcherConfig::new(4, Duration::from_micros(200)))
+        .build()
+        .expect("valid elastic service");
+    let ctl = service.controller().expect("controller present");
+    // Fixed-size reference for the same inputs.
+    let inputs = model.synth_inputs(48, 0x5EED);
+    let expect = model.forward_batch(&inputs);
+    for (wave, chunk) in inputs.chunks(8).enumerate() {
+        // Resize between (and under) waves: 1 → 4 → 2 → 3 → 1 → 4.
+        let target = [1, 4, 2, 3, 1, 4][wave % 6];
+        ctl.force(target);
+        let tickets: Vec<_> = chunk
+            .iter()
+            .map(|x| service.submit(x.clone()).expect("admitted"))
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let resp = t.wait_timeout(Duration::from_secs(30)).expect("answered");
+            assert_eq!(
+                resp.output,
+                expect[wave * 8 + i],
+                "wave {wave} request {i} bit-exact at pool size {target}"
+            );
+        }
+    }
+    quiesce(&service);
+    service.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn shrink_during_drain_drops_nothing() {
+    let model = mlp(0xD0D0);
+    let service = NpeService::builder(model.clone())
+        .devices([NpeGeometry::PAPER, NpeGeometry::PAPER, NpeGeometry::PAPER])
+        .elastic(1, 3)
+        .controller(ControllerConfig::manual())
+        .batcher(BatcherConfig::new(2, Duration::from_micros(100)))
+        .journaling(256)
+        .build()
+        .expect("valid elastic service");
+    let ctl = service.controller().expect("controller present");
+    let inputs = model.synth_inputs(64, 0xFEED);
+    let expect = model.forward_batch(&inputs);
+    // Admit everything first (Block admission: nothing is refused), then
+    // order a shrink to min while the queue is still draining. The two
+    // retiring devices must finish their in-flight batches; the queued
+    // jobs drain through the survivor.
+    let tickets: Vec<_> = inputs
+        .into_iter()
+        .map(|x| service.submit(x).expect("admitted"))
+        .collect();
+    assert_eq!(ctl.force(1), 1, "shrink-to-min lands mid-drain");
+    for (t, want) in tickets.into_iter().zip(expect) {
+        let resp = t.wait_timeout(Duration::from_secs(30)).expect("never dropped");
+        assert_eq!(resp.output, want, "answers stay bit-exact through the shrink");
+    }
+    let journal = service.journal().expect("journaling on");
+    let resizes = journal
+        .events()
+        .iter()
+        .filter(|e| e.kind == EventKind::PoolResize)
+        .count();
+    assert!(resizes >= 2, "both shrink steps journaled, saw {resizes}");
+    quiesce(&service);
+    service.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn bounds_and_cooldown_are_respected() {
+    let model = mlp(0xC001);
+    // Cooldown effectively infinite: after the first (free) resize the
+    // policy loop must hold even though the signal stays high.
+    let service = NpeService::builder(model.clone())
+        .devices([NpeGeometry::PAPER])
+        .elastic(1, 3)
+        .controller(ControllerConfig::manual().with_cooldown(Duration::from_secs(3600)))
+        .batcher(BatcherConfig::new(64, Duration::from_secs(10)))
+        .journaling(256)
+        .build()
+        .expect("valid elastic service");
+    let ctl = service.controller().expect("controller present");
+    assert_eq!((ctl.min_devices(), ctl.max_devices()), (1, 3));
+
+    // Park a deep backlog: depth/device stays far above the threshold.
+    let tickets: Vec<_> = model
+        .synth_inputs(16, 0xDA7A)
+        .into_iter()
+        .map(|x| service.submit(x).expect("admitted"))
+        .collect();
+    for _ in 0..5 {
+        ctl.tick();
+    }
+    assert_eq!(
+        ctl.pool_size(),
+        2,
+        "exactly one grow: the first resize is free, the cooldown gates the rest"
+    );
+
+    // Forced resizes clamp to the bounds, never past them.
+    assert_eq!(ctl.force(100), 3, "force clamps to max");
+    assert_eq!(ctl.force(0), 1, "force clamps to min");
+
+    let journal = service.journal().expect("journaling on");
+    let resizes: Vec<_> = journal
+        .events()
+        .into_iter()
+        .filter(|e| e.kind == EventKind::PoolResize)
+        .collect();
+    // 1 policy grow + 1 forced grow + 2 forced shrinks = 4 events.
+    assert_eq!(resizes.len(), 4, "every resize journaled: {resizes:?}");
+
+    drop(service); // flush the parked backlog
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(30)).expect("flushed on drop");
+    }
+}

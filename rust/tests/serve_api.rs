@@ -379,6 +379,7 @@ fn request_path_carries_no_panics() {
         "coordinator/batcher.rs",
         "coordinator/metrics.rs",
         "fleet/mod.rs",
+        "fleet/controller.rs",
         "fleet/device.rs",
         "fleet/queue.rs",
         "fleet/loadgen.rs",
