@@ -1,0 +1,34 @@
+//! Bench E10 — the dataflow autotuner: every zoo model under all four
+//! fixed dataflows vs the per-layer autotuned plan (cost-model cycles;
+//! MLP rows are measured by actually executing both engines).
+//!
+//! Run: `cargo bench --bench dataflow_bench`
+//!
+//! Emits `BENCH_dataflow.json` in the working directory so CI can
+//! archive the trajectory (autotuned speedup per zoo entry) across PRs.
+
+use tcd_npe::bench::{dataflow_json, dataflow_rows, render_dataflow_table, DATAFLOW_BATCHES};
+
+fn main() {
+    println!("=== dataflow autotuner: fixed dataflows vs per-layer plan, full zoo ===");
+    let rows = dataflow_rows(DATAFLOW_BATCHES);
+    println!("{}", render_dataflow_table(&rows, DATAFLOW_BATCHES));
+
+    for r in &rows {
+        println!(
+            "{:<14} {:<6} plan {:<16} {:>10} vs OS {:>10}  ({:.2}x)",
+            r.network,
+            r.family,
+            r.plan,
+            r.autotuned_cycles,
+            r.os_cycles(),
+            r.speedup()
+        );
+    }
+
+    let json = dataflow_json(&rows, DATAFLOW_BATCHES);
+    match std::fs::write("BENCH_dataflow.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_dataflow.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_dataflow.json: {e}"),
+    }
+}

@@ -1,0 +1,389 @@
+//! The analytical cost model: every (dataflow × Γ) candidate priced in
+//! cycles, wall-clock and on-chip energy *without executing anything*.
+//!
+//! The prices are not a parallel re-derivation — each dataflow's cost is
+//! computed from the **same code the engines report from**:
+//!
+//! * **OS** — the Algorithm-1 exec tree itself ([`MapperTree::best`] +
+//!   the same config-switch scan [`crate::exec::ExecCore`]'s walk runs),
+//!   so the predicted cycle count equals the measured
+//!   [`crate::dataflow::DataflowReport`] *exactly*;
+//! * **WS** — [`crate::dataflow::ws::ws_layer_model`];
+//! * **NLR** — [`crate::dataflow::nlr::layer_cost`];
+//! * **RNA** — [`crate::dataflow::rna::layer_cycles`] /
+//!   [`crate::dataflow::rna::operand_words`].
+//!
+//! Each closed form is `pub` in its engine module and consumed verbatim
+//! here, which is what makes the `predicted == reported` property tests
+//! hold by construction (`tests/autotune_e2e.rs`).
+//!
+//! Energy prices are **on-chip only** (`dram_pj = 0`): the DRAM transfer
+//! of weights and inputs is the same bits regardless of dataflow, so it
+//! cannot change a per-layer decision; the executing engine charges it
+//! once at run time.
+
+use crate::dataflow::{
+    best_conventional, cached_mac_ppa, nlr, pe_array_leak_uw, rna, ws, EnergyBreakdown,
+};
+use crate::mapper::schedule::bfs_events;
+use crate::mapper::{Dataflow, Gamma, LayerSchedule, MapperTree, NpeGeometry};
+use crate::memory::{NpeMemorySystem, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
+use crate::ppa::TechParams;
+use crate::tcdmac::MacKind;
+
+/// What the selector minimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Objective {
+    /// Total cycles (the default): the Fig.-10 throughput metric, and
+    /// clock-independent — right for a reconfigurable array driven from
+    /// one clock domain.
+    #[default]
+    Cycles,
+    /// Wall-clock ns at each dataflow's achievable MAC clock.
+    Latency,
+    /// On-chip energy (pJ).
+    Energy,
+    /// Energy–delay product (per-layer `time × energy`, summed — a
+    /// separable proxy for the whole-model product).
+    Edp,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 4] =
+        [Objective::Cycles, Objective::Latency, Objective::Energy, Objective::Edp];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Cycles => "cycles",
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+        }
+    }
+
+    /// Parse a CLI-style name (`cycles` | `latency` | `energy` | `edp`).
+    pub fn parse(s: &str) -> Option<Objective> {
+        Objective::ALL.into_iter().find(|o| o.name() == s.to_ascii_lowercase())
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Predicted cost of running one Γ(B, I, U) on one dataflow.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCost {
+    pub dataflow: Dataflow,
+    /// The MAC kind this dataflow runs on (OS/WS inherit the model's
+    /// kind; NLR/RNA always price on the best conventional MAC, exactly
+    /// like their engines execute).
+    pub mac: MacKind,
+    pub cycles: u64,
+    /// Cycles × the MAC's achievable clock period.
+    pub time_ns: f64,
+    /// On-chip energy (`dram_pj` is always 0 here — see module docs).
+    pub energy: EnergyBreakdown,
+}
+
+impl LayerCost {
+    /// The scalar the DP planner compares under `objective`.
+    pub fn score(&self, objective: Objective) -> f64 {
+        match objective {
+            Objective::Cycles => self.cycles as f64,
+            Objective::Latency => self.time_ns,
+            Objective::Energy => self.energy.on_chip_pj(),
+            Objective::Edp => self.time_ns * self.energy.on_chip_pj(),
+        }
+    }
+}
+
+/// Cost of reconfiguring the array between two dataflows mid-model: the
+/// pipeline must drain and the LDN/NoC re-program, priced as the array
+/// diameter (`tg_rows + tg_cols`) in dead cycles. Zero when the
+/// dataflows match.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct SwitchCost {
+    pub cycles: u64,
+    /// Dead cycles at the slower of the two MAC clocks.
+    pub time_ns: f64,
+    /// The array leaks through the drain (no switching activity).
+    pub energy_pj: f64,
+}
+
+impl SwitchCost {
+    pub fn score(&self, objective: Objective) -> f64 {
+        match objective {
+            Objective::Cycles => self.cycles as f64,
+            Objective::Latency => self.time_ns,
+            Objective::Energy => self.energy_pj,
+            Objective::Edp => self.time_ns * self.energy_pj,
+        }
+    }
+}
+
+/// The cost model: one geometry + MAC kind, with a private Algorithm-1
+/// memo so repeated Γ lookups (the planner scores every layer four ways)
+/// never re-derive an exec tree.
+pub struct CostModel {
+    geometry: NpeGeometry,
+    kind: MacKind,
+    mapper: MapperTree,
+}
+
+impl CostModel {
+    /// Cost model for the paper's NPE (TCD MACs on OS/WS).
+    pub fn new(geometry: NpeGeometry) -> Self {
+        Self::with_kind(geometry, MacKind::Tcd)
+    }
+
+    /// Cost model with an explicit OS/WS MAC kind (NLR/RNA are always
+    /// priced on [`best_conventional`] — matching what their engines run).
+    pub fn with_kind(geometry: NpeGeometry, kind: MacKind) -> Self {
+        Self { geometry, kind, mapper: MapperTree::new(geometry) }
+    }
+
+    pub fn geometry(&self) -> NpeGeometry {
+        self.geometry
+    }
+
+    pub fn kind(&self) -> MacKind {
+        self.kind
+    }
+
+    /// The memo (the CNN/graph planners lower through it).
+    pub fn mapper_mut(&mut self) -> &mut MapperTree {
+        &mut self.mapper
+    }
+
+    /// The MAC kind a dataflow executes on under this model.
+    pub fn kind_for(&self, dataflow: Dataflow) -> MacKind {
+        match dataflow {
+            Dataflow::Os | Dataflow::Ws => self.kind,
+            // A TCD-MAC cannot forward unresolved carries systolically;
+            // both baselines run (and are priced) on conventional MACs.
+            Dataflow::Nlr | Dataflow::Rna => best_conventional(),
+        }
+    }
+
+    /// Price one Γ on one dataflow.
+    pub fn layer_cost(&mut self, gamma: Gamma, dataflow: Dataflow) -> LayerCost {
+        match dataflow {
+            Dataflow::Os => self.os_cost(gamma),
+            Dataflow::Ws => self.ws_cost(gamma),
+            Dataflow::Nlr => self.nlr_cost(gamma),
+            Dataflow::Rna => self.rna_cost(gamma),
+        }
+    }
+
+    /// All four candidates for one Γ, in [`Dataflow::ALL`] lane order.
+    pub fn candidates(&mut self, gamma: Gamma) -> [LayerCost; 4] {
+        Dataflow::ALL.map(|d| self.layer_cost(gamma, d))
+    }
+
+    /// Reconfiguration between adjacent layers of differing dataflows.
+    pub fn switch_penalty(&self, from: Dataflow, to: Dataflow) -> SwitchCost {
+        if from == to {
+            return SwitchCost::default();
+        }
+        let cycles = (self.geometry.tg_rows + self.geometry.tg_cols) as u64;
+        let delay = cached_mac_ppa(self.kind_for(from))
+            .delay_ns
+            .max(cached_mac_ppa(self.kind_for(to)).delay_ns);
+        let time_ns = cycles as f64 * delay;
+        let energy_pj =
+            pe_array_leak_uw(self.kind_for(to), self.geometry.pes()) * time_ns * 1e-3;
+        SwitchCost { cycles, time_ns, energy_pj }
+    }
+
+    /// OS price: the Algorithm-1 exec tree for Γ, scanned with the same
+    /// config-switch logic [`crate::exec::ExecCore`]'s walk applies, plus
+    /// the controller's one ping-pong layer swap — so the all-OS plan's
+    /// cycle total equals the OS engine's measured report exactly.
+    fn os_cost(&mut self, gamma: Gamma) -> LayerCost {
+        let kind = self.kind;
+        let extra = matches!(kind, MacKind::Tcd) as u64;
+        let per_pair = gamma.inputs as u64 + extra;
+        let node = self
+            .mapper
+            .best(gamma.batches, gamma.neurons)
+            .expect("non-empty Γ");
+        let row_ids: Vec<usize> = (0..gamma.batches).collect();
+        let neuron_ids: Vec<usize> = (0..gamma.neurons).collect();
+        let mut rolls = 0u64;
+        let mut switches = 0u64;
+        let mut last = None;
+        for roll in node.assignments(&row_ids, &neuron_ids) {
+            if last != Some(roll.config) {
+                switches += 1;
+                last = Some(roll.config);
+            }
+            rolls += 1;
+        }
+        let sched =
+            LayerSchedule { gamma, geometry: self.geometry, events: bfs_events(&node) };
+        let active: u64 = sched.events.iter().map(|e| e.work() as u64 * per_pair).sum();
+        let cycles = rolls * per_pair + switches + 1; // +1: ping-pong swap
+        let mut mem = NpeMemorySystem::new();
+        mem.account_layer_events(&sched);
+        self.finish(Dataflow::Os, kind, cycles, active, mem)
+    }
+
+    fn ws_cost(&self, gamma: Gamma) -> LayerCost {
+        let kind = self.kind;
+        let m =
+            ws::ws_layer_model(self.geometry, kind, gamma.batches, gamma.inputs, gamma.neurons);
+        let mut mem = NpeMemorySystem::new();
+        mem.wmem.read_rows(m.wmem_row_reads);
+        mem.fm_ping.read_rows(m.fm_row_reads);
+        mem.fm_pong.write_rows(m.fm_row_writes);
+        mem.fm_pong.write_words(m.psum_spill_words);
+        let active = m.cycles * self.geometry.pes() as u64;
+        self.finish(Dataflow::Ws, kind, m.cycles, active, mem)
+    }
+
+    fn nlr_cost(&self, gamma: Gamma) -> LayerCost {
+        let kind = best_conventional();
+        let c = nlr::layer_cost(
+            &self.geometry,
+            gamma.batches as u64,
+            gamma.inputs as u64,
+            gamma.neurons as u64,
+        );
+        let mut mem = NpeMemorySystem::new();
+        mem.wmem.read_rows(c.weight_words.div_ceil(WMEM_ROW_WORDS as u64));
+        mem.fm_ping.read_rows(c.feature_words.div_ceil(FMMEM_ROW_WORDS as u64));
+        mem.fm_pong.write_words(c.psum_words);
+        let active = c.cycles * self.geometry.pes() as u64;
+        self.finish(Dataflow::Nlr, kind, c.cycles, active, mem)
+    }
+
+    fn rna_cost(&self, gamma: Gamma) -> LayerCost {
+        let kind = best_conventional();
+        let cycles = rna::layer_cycles(
+            self.geometry,
+            gamma.batches as u64,
+            gamma.inputs as u64,
+            gamma.neurons as u64,
+        );
+        let words =
+            rna::operand_words(gamma.batches as u64, gamma.inputs as u64, gamma.neurons as u64);
+        let mut mem = NpeMemorySystem::new();
+        mem.fm_ping.read_rows(words.div_ceil(FMMEM_ROW_WORDS as u64));
+        mem.fm_pong.write_words(words / 4);
+        let active = cycles * self.geometry.pes() as u64;
+        self.finish(Dataflow::Rna, kind, cycles, active, mem)
+    }
+
+    fn finish(
+        &self,
+        dataflow: Dataflow,
+        kind: MacKind,
+        cycles: u64,
+        active_mac_cycles: u64,
+        mem: NpeMemorySystem,
+    ) -> LayerCost {
+        let tech = TechParams::DEFAULT;
+        let mac = cached_mac_ppa(kind);
+        let time_ns = cycles as f64 * mac.delay_ns;
+        let energy = EnergyBreakdown {
+            pe_dynamic_pj: active_mac_cycles as f64 * mac.energy_per_cycle_pj(),
+            pe_leak_pj: pe_array_leak_uw(kind, self.geometry.pes()) * time_ns * 1e-3,
+            mem_dynamic_pj: mem.sram_dynamic_pj(&tech),
+            mem_leak_pj: mem.leakage_uw(&tech) * time_ns * 1e-3,
+            dram_pj: 0.0,
+        };
+        LayerCost { dataflow, mac: kind, cycles, time_ns, energy }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::os::OsEngine;
+    use crate::dataflow::{DataflowEngine, NlrEngine, RnaEngine, WsEngine};
+    use crate::model::{MlpTopology, QuantizedMlp};
+
+    fn mlp_and_inputs(b: usize) -> (QuantizedMlp, Vec<Vec<i16>>) {
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![100, 64, 10]), 17);
+        let inputs = mlp.synth_inputs(b, 8);
+        (mlp, inputs)
+    }
+
+    fn predicted_total(model: &mut CostModel, topo: &MlpTopology, b: usize, d: Dataflow) -> u64 {
+        topo.transitions()
+            .map(|(i, u)| model.layer_cost(Gamma::new(b, i, u), d).cycles)
+            .sum()
+    }
+
+    #[test]
+    fn os_prediction_matches_the_measured_report_exactly() {
+        let (mlp, inputs) = mlp_and_inputs(6);
+        let measured = OsEngine::tcd(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        let mut model = CostModel::new(NpeGeometry::PAPER);
+        let predicted = predicted_total(&mut model, &mlp.topology, 6, Dataflow::Os);
+        assert_eq!(predicted, measured.cycles, "OS closed form is exact");
+    }
+
+    #[test]
+    fn ws_nlr_rna_predictions_match_their_engines_exactly() {
+        let (mlp, inputs) = mlp_and_inputs(5);
+        let mut model = CostModel::new(NpeGeometry::PAPER);
+        let ws_r = WsEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        assert_eq!(predicted_total(&mut model, &mlp.topology, 5, Dataflow::Ws), ws_r.cycles);
+        let nlr_r = NlrEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        assert_eq!(predicted_total(&mut model, &mlp.topology, 5, Dataflow::Nlr), nlr_r.cycles);
+        let rna_r = RnaEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        assert_eq!(predicted_total(&mut model, &mlp.topology, 5, Dataflow::Rna), rna_r.cycles);
+    }
+
+    #[test]
+    fn candidates_cover_all_lanes_with_positive_costs() {
+        let mut model = CostModel::new(NpeGeometry::PAPER);
+        let cand = model.candidates(Gamma::new(4, 64, 32));
+        for (lane, c) in cand.iter().enumerate() {
+            assert_eq!(c.dataflow.lane(), lane);
+            assert!(c.cycles > 0);
+            assert!(c.time_ns > 0.0);
+            assert!(c.energy.on_chip_pj() > 0.0);
+            assert_eq!(c.energy.dram_pj, 0.0, "cost-model energy is on-chip only");
+        }
+        // NLR/RNA price on the conventional baseline regardless of kind.
+        assert_eq!(cand[2].mac, best_conventional());
+        assert_eq!(cand[3].mac, best_conventional());
+        assert_eq!(cand[0].mac, MacKind::Tcd);
+    }
+
+    #[test]
+    fn switch_penalty_is_zero_on_the_diagonal_and_diameter_off_it() {
+        let model = CostModel::new(NpeGeometry::PAPER);
+        for d in Dataflow::ALL {
+            assert_eq!(model.switch_penalty(d, d), SwitchCost::default());
+        }
+        let sw = model.switch_penalty(Dataflow::Os, Dataflow::Nlr);
+        assert_eq!(sw.cycles, (16 + 8) as u64);
+        assert!(sw.time_ns > 0.0 && sw.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn objective_names_parse_round_trip() {
+        for o in Objective::ALL {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+        assert_eq!(Objective::parse("EDP"), Some(Objective::Edp));
+        assert_eq!(Objective::parse("nope"), None);
+        assert_eq!(Objective::default(), Objective::Cycles);
+    }
+
+    #[test]
+    fn scores_follow_the_objective() {
+        let mut model = CostModel::new(NpeGeometry::PAPER);
+        let c = model.layer_cost(Gamma::new(2, 32, 16), Dataflow::Os);
+        assert_eq!(c.score(Objective::Cycles), c.cycles as f64);
+        assert_eq!(c.score(Objective::Latency), c.time_ns);
+        assert_eq!(c.score(Objective::Energy), c.energy.on_chip_pj());
+        assert_eq!(c.score(Objective::Edp), c.time_ns * c.energy.on_chip_pj());
+    }
+}

@@ -1,0 +1,276 @@
+//! Mixed-dataflow execution: [`AutotunedEngine`] plans once per
+//! (topology, batch) and then walks every batch with each layer on its
+//! planned dataflow's cache lane.
+//!
+//! Functionally every layer runs the same bit-exact roll walk (dataflow
+//! moves data, it does not change math), so outputs match the Fix16
+//! reference no matter what the plan chose. The report's cycles/time/
+//! energy are the plan's predicted totals — which, for an all-OS plan,
+//! equal the OS engine's measured report exactly (the cost model's OS
+//! price is the measured closed form), and for the other lanes equal
+//! what the fixed engines report (shared closed forms).
+
+use super::cost::{CostModel, Objective};
+use super::plan::{plan_mlp, DataflowPlan};
+use crate::dataflow::{DataflowEngine, DataflowReport};
+use crate::exec::{BackendKind, ExecCore, OutputPath};
+use crate::mapper::{Dataflow, NpeGeometry, ScheduleCache};
+use crate::memory::rlc::rlc_compress_len;
+use crate::model::{MlpTopology, QuantizedMlp};
+use crate::npe::ActivationUnit;
+use crate::obs::TrackHandle;
+use crate::ppa::TechParams;
+use crate::tcdmac::MacKind;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The autotuned engine: a reusable device handle (like the fixed
+/// engines) whose per-layer dataflow comes from the cost-model planner.
+pub struct AutotunedEngine {
+    geometry: NpeGeometry,
+    kind: MacKind,
+    /// Which roll backend executes the functional walk (re-synced into
+    /// the core on every execute, so toggling is safe).
+    pub backend: BackendKind,
+    objective: Objective,
+    core: ExecCore,
+    cost: CostModel,
+    /// Plans memoized per (topology, batch count): serving replays the
+    /// same model/batch shape far more often than it plans.
+    plans: HashMap<(Vec<usize>, usize), DataflowPlan>,
+    /// When set, every execute records its batch attribution here.
+    tracer: Option<TrackHandle>,
+}
+
+impl AutotunedEngine {
+    /// Autotuned TCD-NPE (OS/WS layers on TCD MACs).
+    pub fn new(geometry: NpeGeometry) -> Self {
+        Self::with_kind(geometry, MacKind::Tcd)
+    }
+
+    /// Autotuned engine with an explicit OS/WS MAC kind.
+    pub fn with_kind(geometry: NpeGeometry, kind: MacKind) -> Self {
+        Self {
+            geometry,
+            kind,
+            backend: BackendKind::Fast,
+            objective: Objective::Cycles,
+            core: ExecCore::new(geometry, kind),
+            cost: CostModel::with_kind(geometry, kind),
+            plans: HashMap::new(),
+            tracer: None,
+        }
+    }
+
+    pub fn geometry(&self) -> NpeGeometry {
+        self.geometry
+    }
+
+    pub fn kind(&self) -> MacKind {
+        self.kind
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    /// Select what the planner minimizes (default: cycles).
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        if objective != self.objective {
+            self.objective = objective;
+            self.plans.clear(); // stale under the old objective
+        }
+        self
+    }
+
+    /// Select the roll backend (builder form of the `backend` field).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Attach a fleet-shared schedule cache; each layer's lookups count
+    /// on the lane its plan chose.
+    pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.core = self.core.with_cache(cache);
+        self
+    }
+
+    /// Attach a tracer track: every execute records an `execute` wall
+    /// span plus the batch's per-layer/per-round attribution.
+    pub fn with_tracer(mut self, tracer: Option<TrackHandle>) -> Self {
+        self.tracer = tracer;
+        self
+    }
+
+    /// Number of distinct (topology, batch) plans memoized so far.
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// The plan this engine would (and will) execute for `topo` at
+    /// `batches` — planned on first use, memoized after.
+    pub fn plan_for(&mut self, topo: &MlpTopology, batches: usize) -> DataflowPlan {
+        let key = (topo.layers.clone(), batches);
+        if let Some(plan) = self.plans.get(&key) {
+            return plan.clone();
+        }
+        let plan = plan_mlp(&mut self.cost, self.objective, topo, batches);
+        self.plans.insert(key, plan.clone());
+        plan
+    }
+}
+
+impl DataflowEngine for AutotunedEngine {
+    fn name(&self) -> &'static str {
+        "Autotuned (per-layer)"
+    }
+
+    fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
+        let started = Instant::now();
+        let tech = TechParams::DEFAULT;
+        let b = inputs.len();
+        let plan = self.plan_for(&mlp.topology, b);
+
+        // Functional walk, each layer on its planned cache lane.
+        self.core.set_backend(self.backend);
+        let mut run = self.core.begin();
+        let mut ping: Vec<Vec<i16>> = inputs.to_vec();
+        let n_layers = mlp.topology.n_transitions();
+        debug_assert_eq!(plan.steps.len(), n_layers);
+        for (layer, step) in plan.steps.iter().enumerate() {
+            self.core.set_dataflow(step.dataflow);
+            let act = ActivationUnit::new(layer + 1 < n_layers);
+            ping = self
+                .core
+                .run_gemm(&mut run, mlp, layer, &ping, OutputPath::Uniform(act), false);
+        }
+        self.core.set_dataflow(Dataflow::Os);
+        let outputs = ping;
+        let profile = std::mem::take(&mut run.profile);
+        let (_stats, _mem, active_mac_cycles) = run.finish();
+
+        // The report carries the plan's predicted totals plus the
+        // dataflow-independent DRAM transfer, charged at execution.
+        let mut dram_bits = 0u64;
+        for w in &mlp.weights {
+            dram_bits += rlc_compress_len(w);
+        }
+        for x in inputs {
+            dram_bits += rlc_compress_len(x);
+        }
+        let mut energy = plan.total_energy();
+        energy.dram_pj = dram_bits as f64 * tech.dram_energy_per_bit_pj;
+
+        let report = DataflowReport {
+            dataflow: self.name(),
+            mac: self.kind.name(),
+            outputs,
+            cycles: plan.total_cycles(),
+            time_ns: plan.total_time_ns(),
+            energy,
+        };
+        if let Some(t) = &self.tracer {
+            t.record_batch(started, b, profile, &report, active_mac_cycles);
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::os::OsEngine;
+
+    fn mlp(layers: Vec<usize>, seed: u64) -> QuantizedMlp {
+        QuantizedMlp::synthesize(MlpTopology::new(layers), seed)
+    }
+
+    #[test]
+    fn outputs_match_reference_for_mixed_plans() {
+        let m = mlp(vec![400, 300, 10], 41);
+        let inputs = m.synth_inputs(2, 12);
+        let mut e = AutotunedEngine::new(NpeGeometry::PAPER);
+        let plan = e.plan_for(&m.topology, 2);
+        assert!(plan.n_switches() > 0, "this shape mixes dataflows: {}", plan.summary());
+        let r = e.execute(&m, &inputs);
+        assert_eq!(r.outputs, m.forward_batch(&inputs), "mixed plan stays bit-exact");
+    }
+
+    #[test]
+    fn autotuned_never_worse_than_fixed_os() {
+        for (layers, b) in [
+            (vec![400, 300, 10], 2),
+            (vec![64, 100, 100], 8),
+            (vec![100, 64, 10], 5),
+        ] {
+            let m = mlp(layers, 7);
+            let inputs = m.synth_inputs(b, 3);
+            let auto = AutotunedEngine::new(NpeGeometry::PAPER).execute(&m, &inputs);
+            let os = OsEngine::tcd(NpeGeometry::PAPER).execute(&m, &inputs);
+            assert!(
+                auto.cycles <= os.cycles,
+                "{}: autotuned {} > OS {}",
+                m.topology.display(),
+                auto.cycles,
+                os.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn strictly_beats_os_when_a_layer_prefers_another_lane() {
+        let m = mlp(vec![400, 300, 10], 11);
+        let inputs = m.synth_inputs(2, 9);
+        let auto = AutotunedEngine::new(NpeGeometry::PAPER).execute(&m, &inputs);
+        let os = OsEngine::tcd(NpeGeometry::PAPER).execute(&m, &inputs);
+        assert!(auto.cycles < os.cycles, "autotuned {} vs OS {}", auto.cycles, os.cycles);
+    }
+
+    #[test]
+    fn every_backend_produces_the_same_report() {
+        let m = mlp(vec![100, 64, 10], 23);
+        let inputs = m.synth_inputs(4, 5);
+        let base = AutotunedEngine::new(NpeGeometry::PAPER).execute(&m, &inputs);
+        for backend in BackendKind::ALL {
+            let r = AutotunedEngine::new(NpeGeometry::PAPER)
+                .with_backend(backend)
+                .execute(&m, &inputs);
+            assert_eq!(r.outputs, base.outputs, "{}", backend.name());
+            assert_eq!(r.cycles, base.cycles, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn plans_are_memoized_per_topology_and_batch() {
+        let m = mlp(vec![100, 64, 10], 2);
+        let inputs = m.synth_inputs(4, 5);
+        let mut e = AutotunedEngine::new(NpeGeometry::PAPER);
+        e.execute(&m, &inputs);
+        e.execute(&m, &inputs);
+        assert_eq!(e.cached_plans(), 1, "same shape re-plans nothing");
+        let smaller = m.synth_inputs(2, 5);
+        e.execute(&m, &smaller);
+        assert_eq!(e.cached_plans(), 2, "new batch count is a new plan");
+    }
+
+    #[test]
+    fn cache_lookups_follow_the_plan_lanes() {
+        let m = mlp(vec![400, 300, 10], 41);
+        let inputs = m.synth_inputs(2, 12);
+        let cache = ScheduleCache::shared();
+        let mut e = AutotunedEngine::new(NpeGeometry::PAPER).with_cache(Arc::clone(&cache));
+        let plan = e.plan_for(&m.topology, 2);
+        e.execute(&m, &inputs);
+        for (lane, df) in Dataflow::ALL.iter().enumerate() {
+            let expect = plan.steps.iter().filter(|s| s.dataflow == *df).count() as u64;
+            assert_eq!(
+                cache.stats_for(Dataflow::ALL[lane]).misses,
+                expect,
+                "{} lane misses",
+                df.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! The dataflow autotuner: cost-model-driven per-layer dataflow
+//! selection with mixed-dataflow execution.
+//!
+//! The paper fixes one dataflow per NPE (its TCD-NPE is output-
+//! stationary end to end; the Fig.-9 baselines are likewise uniform).
+//! But layer shapes pull in different directions — a 10-neuron
+//! classifier head wastes an OS roll streaming hundreds of inputs for a
+//! handful of outputs, while a wide hidden layer is exactly what OS is
+//! for. This subsystem makes the choice per layer:
+//!
+//! * [`cost`] — the analytical [`CostModel`]: every
+//!   (dataflow × geometry × Γ(B, I, U)) candidate priced in cycles,
+//!   wall-clock and on-chip energy using the *same* closed forms the
+//!   engines report from (OS is priced off the Algorithm-1 exec tree
+//!   itself), so predicted == reported — property-tested, not hoped.
+//! * [`plan`] — the per-layer selector: a Viterbi DP over
+//!   (layer × dataflow) weighing candidate costs against the mid-model
+//!   reconfiguration cost of a dataflow switch (array-diameter dead
+//!   cycles). All-OS is always a feasible path, so the plan can never
+//!   be worse than fixed-OS under its objective. [`plan_mlp`],
+//!   [`plan_cnn`] and [`plan_graph`] front-end MLPs, im2col-lowered
+//!   CNNs and fused DAG lowerings onto the same planner.
+//! * [`engine`] — [`AutotunedEngine`]: a `DataflowEngine` that memoizes
+//!   one plan per (topology, batch) and walks every batch with each
+//!   layer on its planned [`Dataflow`] cache lane — bit-exact with the
+//!   Fix16 reference like every other engine.
+//!
+//! Serving integration (the `ServeBuilder::autotune` /
+//! `ServeBuilder::dataflow` knobs, per-device dataflow in mixed fleets,
+//! plan journal events) lives in [`crate::serve`] / [`crate::fleet`].
+
+pub mod cost;
+pub mod engine;
+pub mod plan;
+
+pub use cost::{CostModel, LayerCost, Objective, SwitchCost};
+pub use engine::AutotunedEngine;
+pub use plan::{plan_cnn, plan_gammas, plan_graph, plan_mlp, DataflowPlan, PlanStep};
+
+// The dataflow identifier itself lives in `mapper` (the schedule cache
+// keys on it); re-exported here because every autotune API speaks it.
+pub use crate::mapper::Dataflow;

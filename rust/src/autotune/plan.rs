@@ -1,0 +1,297 @@
+//! The per-layer selector: a shortest-path DP over (layer × dataflow)
+//! that weighs each candidate's [`LayerCost`] *and* the mid-model
+//! reconfiguration cost of switching dataflows between adjacent layers.
+//!
+//! Because the all-OS path is always in the DP's search space, the
+//! chosen plan's total can never exceed the fixed-OS total under the
+//! same objective — the "autotuned ≤ fixed-OS" property the dataflow
+//! bench asserts across every zoo model is structural, not empirical.
+//!
+//! Ties break toward the lower lane index (OS first): re-planning the
+//! same model is deterministic, and the paper's native dataflow wins
+//! when nothing beats it.
+
+use super::cost::{CostModel, LayerCost, Objective};
+use crate::conv::{lower_cnn, CnnTopology};
+use crate::graph::{lower_graph, GraphModel};
+use crate::mapper::{Dataflow, Gamma, NpeGeometry};
+use crate::model::MlpTopology;
+
+/// One planned GEMM: where it came from, its Γ, and the chosen dataflow
+/// with the full candidate table (kept for the CLI / journal).
+#[derive(Debug, Clone)]
+pub struct PlanStep {
+    /// Human-readable origin, e.g. `fc0 784x700` or `conv 6@5x5`.
+    pub label: String,
+    pub gamma: Gamma,
+    pub dataflow: Dataflow,
+    /// The chosen candidate's predicted cost.
+    pub cost: LayerCost,
+    /// All four candidates in [`Dataflow::ALL`] lane order.
+    pub candidates: [LayerCost; 4],
+}
+
+/// A whole-model dataflow plan: the DP's chosen lane per GEMM plus the
+/// reconfiguration cost the lane changes incur.
+#[derive(Debug, Clone)]
+pub struct DataflowPlan {
+    pub geometry: NpeGeometry,
+    pub objective: Objective,
+    pub steps: Vec<PlanStep>,
+    /// Dead cycles paid at dataflow boundaries (Σ over adjacent
+    /// differing-lane pairs).
+    pub switch_cycles: u64,
+    pub switch_time_ns: f64,
+    pub switch_energy_pj: f64,
+}
+
+impl DataflowPlan {
+    /// Predicted end-to-end cycles: per-layer costs plus switches.
+    pub fn total_cycles(&self) -> u64 {
+        self.steps.iter().map(|s| s.cost.cycles).sum::<u64>() + self.switch_cycles
+    }
+
+    pub fn total_time_ns(&self) -> f64 {
+        self.steps.iter().map(|s| s.cost.time_ns).sum::<f64>() + self.switch_time_ns
+    }
+
+    /// Predicted on-chip energy (`dram_pj` stays 0 — the executing
+    /// engine charges the dataflow-independent DRAM transfer).
+    pub fn total_energy(&self) -> crate::dataflow::EnergyBreakdown {
+        let mut e = crate::dataflow::EnergyBreakdown::default();
+        for s in &self.steps {
+            e.pe_dynamic_pj += s.cost.energy.pe_dynamic_pj;
+            e.pe_leak_pj += s.cost.energy.pe_leak_pj;
+            e.mem_dynamic_pj += s.cost.energy.mem_dynamic_pj;
+            e.mem_leak_pj += s.cost.energy.mem_leak_pj;
+        }
+        e.pe_leak_pj += self.switch_energy_pj; // the array leaks through drains
+        e
+    }
+
+    /// The chosen lane sequence.
+    pub fn lanes(&self) -> Vec<Dataflow> {
+        self.steps.iter().map(|s| s.dataflow).collect()
+    }
+
+    /// `Some(d)` when every step chose the same dataflow.
+    pub fn uniform(&self) -> Option<Dataflow> {
+        let first = self.steps.first()?.dataflow;
+        self.steps.iter().all(|s| s.dataflow == first).then_some(first)
+    }
+
+    /// Number of mid-model dataflow switches.
+    pub fn n_switches(&self) -> usize {
+        self.steps.windows(2).filter(|w| w[0].dataflow != w[1].dataflow).count()
+    }
+
+    /// Compact display, e.g. `os→os→nlr`.
+    pub fn summary(&self) -> String {
+        self.steps
+            .iter()
+            .map(|s| s.dataflow.name())
+            .collect::<Vec<_>>()
+            .join("→")
+    }
+}
+
+/// Plan an arbitrary labelled Γ sequence (the common core; the MLP, CNN
+/// and graph front-ends below reduce to it).
+pub fn plan_gammas(
+    model: &mut CostModel,
+    objective: Objective,
+    layers: &[(String, Gamma)],
+) -> DataflowPlan {
+    let n = layers.len();
+    let mut plan = DataflowPlan {
+        geometry: model.geometry(),
+        objective,
+        steps: Vec::with_capacity(n),
+        switch_cycles: 0,
+        switch_time_ns: 0.0,
+        switch_energy_pj: 0.0,
+    };
+    if n == 0 {
+        return plan;
+    }
+    let cand: Vec<[LayerCost; 4]> =
+        layers.iter().map(|(_, gamma)| model.candidates(*gamma)).collect();
+
+    // Viterbi over (layer × lane). Strict `<` with ascending lane scans
+    // makes ties deterministic (lowest lane, i.e. OS, wins).
+    let mut score = vec![[f64::INFINITY; 4]; n];
+    let mut back = vec![[0usize; 4]; n];
+    for d in 0..4 {
+        score[0][d] = cand[0][d].score(objective);
+    }
+    for l in 1..n {
+        for d in 0..4 {
+            let mut best_p = 0usize;
+            let mut best_s = f64::INFINITY;
+            for p in 0..4 {
+                let sw = model
+                    .switch_penalty(Dataflow::ALL[p], Dataflow::ALL[d])
+                    .score(objective);
+                let s = score[l - 1][p] + sw;
+                if s < best_s {
+                    best_s = s;
+                    best_p = p;
+                }
+            }
+            score[l][d] = best_s + cand[l][d].score(objective);
+            back[l][d] = best_p;
+        }
+    }
+
+    let mut lanes = vec![0usize; n];
+    let mut tail = 0usize;
+    for d in 1..4 {
+        if score[n - 1][d] < score[n - 1][tail] {
+            tail = d;
+        }
+    }
+    lanes[n - 1] = tail;
+    for l in (1..n).rev() {
+        lanes[l - 1] = back[l][lanes[l]];
+    }
+
+    for (l, (label, gamma)) in layers.iter().enumerate() {
+        if l > 0 {
+            let sw = model
+                .switch_penalty(Dataflow::ALL[lanes[l - 1]], Dataflow::ALL[lanes[l]]);
+            plan.switch_cycles += sw.cycles;
+            plan.switch_time_ns += sw.time_ns;
+            plan.switch_energy_pj += sw.energy_pj;
+        }
+        plan.steps.push(PlanStep {
+            label: label.clone(),
+            gamma: *gamma,
+            dataflow: Dataflow::ALL[lanes[l]],
+            cost: cand[l][lanes[l]],
+            candidates: cand[l],
+        });
+    }
+    plan
+}
+
+/// Plan an MLP: one Γ(B, I, U) per weight matrix.
+pub fn plan_mlp(
+    model: &mut CostModel,
+    objective: Objective,
+    topo: &MlpTopology,
+    batches: usize,
+) -> DataflowPlan {
+    let layers: Vec<(String, Gamma)> = topo
+        .transitions()
+        .enumerate()
+        .map(|(ix, (i, u))| (format!("fc{ix} {i}x{u}"), Gamma::new(batches, i, u)))
+        .collect();
+    plan_gammas(model, objective, &layers)
+}
+
+/// Plan a CNN over its im2col lowering (conv layers carry Γ(B·P, …)).
+pub fn plan_cnn(
+    model: &mut CostModel,
+    objective: Objective,
+    topo: &CnnTopology,
+    batches: usize,
+) -> DataflowPlan {
+    let lowering = lower_cnn(model.mapper_mut(), topo, batches);
+    let layers: Vec<(String, Gamma)> =
+        lowering.layers.iter().map(|l| (l.label.clone(), l.gamma)).collect();
+    plan_gammas(model, objective, &layers)
+}
+
+/// Plan a DAG model over its fused graph lowering (merged sibling groups
+/// plan as one Γ).
+pub fn plan_graph(
+    model: &mut CostModel,
+    objective: Objective,
+    graph: &GraphModel,
+    batches: usize,
+) -> DataflowPlan {
+    let lowering = lower_graph(model.mapper_mut(), None, graph, batches, true);
+    let layers: Vec<(String, Gamma)> =
+        lowering.groups.iter().map(|g| (g.label.clone(), g.gamma)).collect();
+    plan_gammas(model, objective, &layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn empty_sequence_plans_empty() {
+        let mut model = CostModel::new(NpeGeometry::PAPER);
+        let plan = plan_gammas(&mut model, Objective::Cycles, &[]);
+        assert!(plan.steps.is_empty());
+        assert_eq!(plan.total_cycles(), 0);
+        assert_eq!(plan.uniform(), None);
+    }
+
+    #[test]
+    fn plan_never_beats_nor_loses_to_itself_and_bounds_fixed_lanes() {
+        // The DP total must be ≤ every fixed-lane total (each fixed lane
+        // is one path in its search space) — in particular fixed OS.
+        let mut model = CostModel::new(NpeGeometry::PAPER);
+        let topo = MlpTopology::new(vec![400, 300, 10]);
+        let plan = plan_mlp(&mut model, Objective::Cycles, &topo, 2);
+        for d in Dataflow::ALL {
+            let fixed: u64 = topo
+                .transitions()
+                .map(|(i, u)| model.layer_cost(Gamma::new(2, i, u), d).cycles)
+                .sum();
+            assert!(
+                plan.total_cycles() <= fixed,
+                "plan {} > fixed {}",
+                plan.total_cycles(),
+                d.name()
+            );
+        }
+    }
+
+    #[test]
+    fn small_output_head_switches_off_os() {
+        // Γ(2, 300, 10): a 10-neuron head leaves the OS roll streaming
+        // 300 inputs for one roll; NLR finishes it in a fraction of the
+        // cycles, worth more than the 24-cycle reconfiguration.
+        let mut model = CostModel::new(NpeGeometry::PAPER);
+        let topo = MlpTopology::new(vec![400, 300, 10]);
+        let plan = plan_mlp(&mut model, Objective::Cycles, &topo, 2);
+        assert_eq!(plan.steps[0].dataflow, Dataflow::Os, "wide layer stays OS");
+        assert_ne!(plan.steps[1].dataflow, Dataflow::Os, "tiny head switches");
+        assert_eq!(plan.n_switches(), 1);
+        assert_eq!(plan.switch_cycles, 24);
+        let all_os: u64 = topo
+            .transitions()
+            .map(|(i, u)| model.layer_cost(Gamma::new(2, i, u), Dataflow::Os).cycles)
+            .sum();
+        assert!(plan.total_cycles() < all_os, "the switch pays for itself");
+    }
+
+    #[test]
+    fn ties_and_uniform_wins_stay_deterministic() {
+        let mut model = CostModel::new(NpeGeometry::PAPER);
+        let topo = MlpTopology::new(vec![64, 100, 100]);
+        let a = plan_mlp(&mut model, Objective::Cycles, &topo, 8);
+        let b = plan_mlp(&mut model, Objective::Cycles, &topo, 8);
+        assert_eq!(a.lanes(), b.lanes(), "re-planning is deterministic");
+        assert_eq!(a.summary(), b.summary());
+    }
+
+    #[test]
+    fn cnn_and_graph_zoo_models_plan_without_panicking() {
+        let mut model = CostModel::new(NpeGeometry::PAPER);
+        for bench in zoo::cnn_benchmarks() {
+            let plan = plan_cnn(&mut model, Objective::Cycles, &bench.topology, 2);
+            assert!(!plan.steps.is_empty(), "{}", bench.network);
+            assert!(plan.total_cycles() > 0, "{}", bench.network);
+        }
+        for bench in zoo::graph_benchmarks() {
+            let plan = plan_graph(&mut model, Objective::Cycles, &bench.graph, 2);
+            assert!(!plan.steps.is_empty(), "{}", bench.network);
+            assert!(plan.total_cycles() > 0, "{}", bench.network);
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Dataflow-autotuner table: every zoo model priced under all four fixed
+//! dataflows and under the per-layer autotuned plan — the trajectory
+//! table `BENCH_dataflow.json` tracks across PRs.
+//!
+//! MLP rows are **measured** (the fixed-OS and autotuned engines both
+//! execute, and the measured cycles must equal the analytical
+//! prediction exactly); CNN and DAG rows are **predicted** over the same
+//! lowered Γ sequence the OS engine executes (their engines are
+//! OS-native, so the plan is advisory — the number is what a
+//! reconfigurable array would buy).
+//!
+//! The acceptance bar asserted by this module's tests: the autotuned
+//! plan is never worse than fixed-OS on any zoo model, and strictly
+//! better on at least one.
+
+use crate::autotune::{
+    plan_cnn, plan_graph, plan_mlp, AutotunedEngine, CostModel, Dataflow, Objective,
+};
+use crate::dataflow::{DataflowEngine, OsEngine};
+use crate::mapper::NpeGeometry;
+use crate::model::zoo::{benchmarks, cnn_benchmarks, graph_benchmarks};
+use crate::model::QuantizedMlp;
+use crate::util::TextTable;
+
+/// Default batch count for the dataflow sweep (the Γ(B, I, U) shape the
+/// serving path sees; small B is where OS leaves the most on the table).
+pub const DATAFLOW_BATCHES: usize = 4;
+
+/// One zoo model priced four fixed ways and autotuned.
+#[derive(Debug, Clone)]
+pub struct DataflowRow {
+    pub network: &'static str,
+    /// `mlp` | `cnn` | `graph`.
+    pub family: &'static str,
+    /// Compact plan, e.g. `os→nlr`.
+    pub plan: String,
+    pub n_switches: usize,
+    /// Predicted all-fixed cycle totals in [`Dataflow::ALL`] lane order
+    /// (no switch penalties — a fixed plan never reconfigures).
+    pub fixed_cycles: [u64; 4],
+    /// The autotuned plan's predicted total (switch penalties included).
+    pub autotuned_cycles: u64,
+    /// Measured engine cycles (MLP rows only; CNN/DAG engines are
+    /// OS-native, so there is nothing mixed to measure).
+    pub measured_os: Option<u64>,
+    pub measured_autotuned: Option<u64>,
+}
+
+impl DataflowRow {
+    /// Predicted all-OS baseline (what the engine runs without a tuner).
+    pub fn os_cycles(&self) -> u64 {
+        self.fixed_cycles[Dataflow::Os.lane()]
+    }
+
+    /// Cycles saved by autotuning over fixed-OS, as a ratio ≥ 1.0.
+    pub fn speedup(&self) -> f64 {
+        self.os_cycles() as f64 / self.autotuned_cycles.max(1) as f64
+    }
+}
+
+/// Per-lane fixed totals for one plan: each step's candidate cost in
+/// that lane, summed (fixed dataflows pay no switch penalty).
+fn fixed_totals(plan: &crate::autotune::DataflowPlan) -> [u64; 4] {
+    let mut t = [0u64; 4];
+    for step in &plan.steps {
+        for d in Dataflow::ALL {
+            t[d.lane()] += step.candidates[d.lane()].cycles;
+        }
+    }
+    t
+}
+
+/// Price (and for MLPs, execute) the whole zoo on the paper-geometry
+/// TCD NPE.
+pub fn dataflow_rows(batches: usize) -> Vec<DataflowRow> {
+    let geom = NpeGeometry::PAPER;
+    let mut rows = Vec::new();
+
+    for b in benchmarks() {
+        let mut model = CostModel::new(geom);
+        let plan = plan_mlp(&mut model, Objective::Cycles, &b.topology, batches);
+        let mlp = QuantizedMlp::synthesize(b.topology.clone(), 0xDF_01);
+        let inputs = mlp.synth_inputs(batches, 0xDF_02);
+        let os = OsEngine::tcd(geom).execute(&mlp, &inputs);
+        let auto = AutotunedEngine::new(geom).execute(&mlp, &inputs);
+        assert_eq!(auto.outputs, os.outputs, "{}: autotuning must never change values", b.dataset);
+        rows.push(DataflowRow {
+            network: b.dataset,
+            family: "mlp",
+            plan: plan.summary(),
+            n_switches: plan.n_switches(),
+            fixed_cycles: fixed_totals(&plan),
+            autotuned_cycles: plan.total_cycles(),
+            measured_os: Some(os.cycles),
+            measured_autotuned: Some(auto.cycles),
+        });
+    }
+
+    for b in cnn_benchmarks() {
+        let mut model = CostModel::new(geom);
+        let plan = plan_cnn(&mut model, Objective::Cycles, &b.topology, 1);
+        rows.push(DataflowRow {
+            network: b.network,
+            family: "cnn",
+            plan: plan.summary(),
+            n_switches: plan.n_switches(),
+            fixed_cycles: fixed_totals(&plan),
+            autotuned_cycles: plan.total_cycles(),
+            measured_os: None,
+            measured_autotuned: None,
+        });
+    }
+
+    for b in graph_benchmarks() {
+        let mut model = CostModel::new(geom);
+        let plan = plan_graph(&mut model, Objective::Cycles, &b.graph, 2);
+        rows.push(DataflowRow {
+            network: b.network,
+            family: "graph",
+            plan: plan.summary(),
+            n_switches: plan.n_switches(),
+            fixed_cycles: fixed_totals(&plan),
+            autotuned_cycles: plan.total_cycles(),
+            measured_os: None,
+            measured_autotuned: None,
+        });
+    }
+
+    rows
+}
+
+/// Render the sweep as a text table.
+pub fn render_dataflow_table(rows: &[DataflowRow], batches: usize) -> String {
+    let mut t = TextTable::new(vec![
+        "Network", "Family", "Plan", "Sw", "OS", "WS", "NLR", "RNA", "Autotuned", "vs OS",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.network.to_string(),
+            r.family.to_string(),
+            r.plan.clone(),
+            r.n_switches.to_string(),
+            r.fixed_cycles[0].to_string(),
+            r.fixed_cycles[1].to_string(),
+            r.fixed_cycles[2].to_string(),
+            r.fixed_cycles[3].to_string(),
+            r.autotuned_cycles.to_string(),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    format!(
+        "Dataflow autotuner on the 16x8 TCD-NPE, MLP B={batches} (cycles; \
+         MLP rows measured, CNN/DAG rows predicted)\n{}",
+        t.render()
+    )
+}
+
+/// Serialize the sweep as the `BENCH_dataflow.json` trajectory artifact.
+/// Hand-rolled JSON — the offline crate set has no serde.
+pub fn dataflow_json(rows: &[DataflowRow], batches: usize) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"dataflow\",\n");
+    s.push_str(&format!("  \"batches\": {batches},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let opt = |v: Option<u64>| v.map_or("null".to_string(), |c| c.to_string());
+        s.push_str(&format!(
+            "    {{\"network\": \"{}\", \"family\": \"{}\", \"plan\": \"{}\", \
+             \"switches\": {}, \"os_cycles\": {}, \"ws_cycles\": {}, \
+             \"nlr_cycles\": {}, \"rna_cycles\": {}, \"autotuned_cycles\": {}, \
+             \"measured_os\": {}, \"measured_autotuned\": {}, \
+             \"speedup_vs_os\": {:.4}}}{}\n",
+            r.network,
+            r.family,
+            r.plan,
+            r.n_switches,
+            r.fixed_cycles[0],
+            r.fixed_cycles[1],
+            r.fixed_cycles[2],
+            r.fixed_cycles[3],
+            r.autotuned_cycles,
+            opt(r.measured_os),
+            opt(r.measured_autotuned),
+            r.speedup(),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn autotuned_never_worse_and_strictly_better_somewhere() {
+        let rows = dataflow_rows(DATAFLOW_BATCHES);
+        assert_eq!(rows.len(), 7 + 2 + 3, "whole zoo priced");
+        for r in &rows {
+            assert!(
+                r.autotuned_cycles <= r.os_cycles(),
+                "{}: autotuned {} > fixed-OS {}",
+                r.network,
+                r.autotuned_cycles,
+                r.os_cycles()
+            );
+            assert!(r.speedup() >= 1.0, "{}", r.network);
+        }
+        // The ISSUE acceptance bar: at least one zoo entry strictly wins.
+        assert!(
+            rows.iter().any(|r| r.autotuned_cycles < r.os_cycles()),
+            "autotuning must strictly beat fixed-OS on some zoo entry"
+        );
+    }
+
+    #[test]
+    fn mlp_measurements_match_predictions_exactly() {
+        let rows = dataflow_rows(2);
+        for r in rows.iter().filter(|r| r.family == "mlp") {
+            assert_eq!(
+                r.measured_os,
+                Some(r.os_cycles()),
+                "{}: fixed-OS prediction must be exact",
+                r.network
+            );
+            assert_eq!(
+                r.measured_autotuned,
+                Some(r.autotuned_cycles),
+                "{}: autotuned prediction must be exact",
+                r.network
+            );
+        }
+        for r in rows.iter().filter(|r| r.family != "mlp") {
+            assert_eq!(r.measured_os, None);
+            assert_eq!(r.measured_autotuned, None);
+        }
+    }
+
+    #[test]
+    fn render_and_json_are_shaped() {
+        let rows = dataflow_rows(1);
+        let table = render_dataflow_table(&rows, 1);
+        assert!(table.contains("MNIST"));
+        assert!(table.contains("LeNet-5"));
+        assert!(table.contains("Autotuned"));
+        let json = dataflow_json(&rows, 1);
+        assert!(json.contains("\"bench\": \"dataflow\""));
+        assert!(json.contains("\"network\": \"InceptionMini\""));
+        assert!(json.contains("\"measured_os\": null"), "CNN/DAG rows are predicted-only");
+        assert!(json.trim_end().ends_with('}'));
+    }
+}

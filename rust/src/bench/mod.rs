@@ -5,6 +5,7 @@
 
 pub mod ablation;
 pub mod convnet;
+pub mod dataflow;
 pub mod exec;
 pub mod fig10;
 pub mod fleet;
@@ -16,6 +17,9 @@ pub mod table2;
 pub mod table3;
 
 pub use convnet::{conv_rows, render_conv_table, ConvRow, CONV_BATCHES};
+pub use dataflow::{
+    dataflow_json, dataflow_rows, render_dataflow_table, DataflowRow, DATAFLOW_BATCHES,
+};
 pub use exec::{
     exec_json, exec_row, exec_rows, exec_workloads, render_exec_table, ExecRow, ExecWorkload,
     EXEC_BATCHES,

@@ -4,7 +4,7 @@
 
 use super::InferenceRequest;
 use crate::dataflow::DataflowReport;
-use crate::mapper::{CacheStats, NpeGeometry};
+use crate::mapper::{CacheStats, Dataflow, NpeGeometry};
 use crate::obs::LogHistogram;
 use std::fmt;
 
@@ -65,6 +65,10 @@ pub struct CoordinatorMetrics {
     /// Schedule-cache LRU evictions observed so far (0 while the
     /// working set fits the configured capacity).
     pub cache_evictions: u64,
+    /// Per-dataflow schedule-cache counters in [`Dataflow::ALL`] lane
+    /// order (os / ws / nlr / rna); the totals above are their sums when
+    /// overlaid via [`CoordinatorMetrics::set_cache_lanes`].
+    pub cache_lanes: [CacheStats; 4],
     /// Deepest any work queue ever got: the fleet work queue in fleet
     /// mode, the batcher's pending list on the single path.
     pub queue_peak: u64,
@@ -148,6 +152,24 @@ impl CoordinatorMetrics {
         self.cache_hits = cache.hits;
         self.cache_misses = cache.misses;
         self.cache_evictions = cache.evictions;
+    }
+
+    /// Overlay one consistent per-dataflow-lane snapshot of the shared
+    /// schedule cache ([`crate::mapper::ScheduleCache::lane_stats`]).
+    /// Sets the summed totals too, so callers need exactly one of this
+    /// and [`set_cache_stats`](Self::set_cache_stats), never both.
+    pub fn set_cache_lanes(&mut self, lanes: [CacheStats; 4]) {
+        self.cache_lanes = lanes;
+        self.set_cache_stats(CacheStats {
+            hits: lanes.iter().map(|l| l.hits).sum(),
+            misses: lanes.iter().map(|l| l.misses).sum(),
+            evictions: lanes.iter().map(|l| l.evictions).sum(),
+        });
+    }
+
+    /// The snapshotted counters of one dataflow's cache lane.
+    pub fn cache_lane(&self, dataflow: Dataflow) -> CacheStats {
+        self.cache_lanes[dataflow.lane()]
     }
 
     /// Several wall-latency percentiles (µs), `ps` in [0, 100]
@@ -267,6 +289,17 @@ impl fmt::Display for CoordinatorMetrics {
             self.cache_hit_rate() * 100.0,
             self.cache_evictions,
         )?;
+        if self.cache_lanes.iter().any(|l| l.lookups() > 0 || l.evictions > 0) {
+            let lanes = Dataflow::ALL
+                .iter()
+                .map(|d| {
+                    let l = self.cache_lane(*d);
+                    format!("{} {}h/{}m/{}e", d.name(), l.hits, l.misses, l.evictions)
+                })
+                .collect::<Vec<_>>()
+                .join(", ");
+            writeln!(f, "  per-dataflow lanes: {lanes}")?;
+        }
         writeln!(
             f,
             "sim time {:.1} us total, makespan {:.1} us, {:.0} req/s simulated, \
@@ -346,6 +379,28 @@ mod tests {
         assert_eq!(m.cache_stats().hits, 2);
         m.set_cache_stats(CacheStats { hits: 9, misses: 6, evictions: 1 });
         assert_eq!(m.cache_stats(), CacheStats { hits: 9, misses: 6, evictions: 1 });
+    }
+
+    #[test]
+    fn lane_overlay_sets_lanes_and_totals() {
+        let mut m = CoordinatorMetrics::default();
+        let lanes = [
+            CacheStats { hits: 4, misses: 2, evictions: 0 },
+            CacheStats::default(),
+            CacheStats { hits: 1, misses: 3, evictions: 1 },
+            CacheStats::default(),
+        ];
+        m.set_cache_lanes(lanes);
+        assert_eq!(m.cache_stats(), CacheStats { hits: 5, misses: 5, evictions: 1 });
+        assert_eq!(m.cache_lane(Dataflow::Os), lanes[0]);
+        assert_eq!(m.cache_lane(Dataflow::Nlr), lanes[2]);
+        assert_eq!(m.cache_lane(Dataflow::Ws).lookups(), 0);
+        let s = m.to_string();
+        assert!(s.contains("per-dataflow lanes"), "{s}");
+        assert!(s.contains("os 4h/2m/0e"), "{s}");
+        assert!(s.contains("nlr 1h/3m/1e"), "{s}");
+        // A fresh snapshot with no lane activity keeps the terse form.
+        assert!(!CoordinatorMetrics::default().to_string().contains("per-dataflow"));
     }
 
     #[test]

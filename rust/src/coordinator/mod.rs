@@ -35,10 +35,11 @@ pub mod metrics;
 pub use batcher::BatcherConfig;
 pub use metrics::{CoordinatorMetrics, DeviceMetrics};
 
+use crate::autotune::{plan_cnn, plan_graph, plan_mlp, CostModel, Objective};
 use crate::conv::{CnnEngine, QuantizedCnn};
-use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
+use crate::dataflow::{DataflowEngine, DataflowReport};
 use crate::exec::BackendKind;
-use crate::fleet::{FleetJob, FleetPool};
+use crate::fleet::{DataflowPolicy, FleetJob, FleetPool, MlpEngine};
 use crate::graph::{GraphEngine, QuantizedGraph};
 use crate::mapper::{NpeGeometry, ScheduleCache};
 use crate::model::QuantizedMlp;
@@ -114,6 +115,9 @@ pub(crate) enum ExecutionPlan {
         geometry: NpeGeometry,
         backend: BackendKind,
         pjrt: Option<PjrtSpec>,
+        /// How the single device picks its MLP dataflow (fixed lane or
+        /// the autotuner's per-layer plan).
+        dataflow: DataflowPolicy,
     },
     /// Execute on a device pool, launched *by the builder* before the
     /// coordinator thread starts — so the telemetry sampler can wire
@@ -147,7 +151,7 @@ pub(crate) enum CoordinatorMsg {
 
 /// The single-NPE execution backend (engines + optional PJRT runtime).
 struct SingleBackend {
-    mlp_engine: OsEngine,
+    mlp_engine: MlpEngine,
     cnn_engine: CnnEngine,
     graph_engine: GraphEngine,
     runtime: Option<(PjrtRuntime, String)>,
@@ -185,8 +189,13 @@ pub(crate) fn service_thread(
     let model = Arc::new(model);
     let CoordinatorObs { tracer, busy, journal, tenant } = obs;
     let backend = match plan {
-        ExecutionPlan::Single { geometry, backend, pjrt } => {
+        ExecutionPlan::Single { geometry, backend, pjrt, dataflow } => {
             util::lock(&metrics).devices = vec![DeviceMetrics::for_geometry(geometry)];
+            if dataflow == DataflowPolicy::Autotune {
+                if let Some(j) = &journal {
+                    journal_dataflow_plan(j, &model, geometry, cfg.batch_size);
+                }
+            }
             let runtime = match &*model {
                 // Build the (non-Send) PJRT runtime inside the thread.
                 ServedModel::Mlp(_) => pjrt.and_then(|spec| {
@@ -203,9 +212,7 @@ pub(crate) fn service_thread(
                 ))
             });
             Backend::Single(Box::new(SingleBackend {
-                mlp_engine: OsEngine::tcd(geometry)
-                    .with_cache(Arc::clone(&cache))
-                    .with_backend(backend)
+                mlp_engine: MlpEngine::build(dataflow, geometry, Arc::clone(&cache), backend)
                     .with_tracer(track.clone()),
                 cnn_engine: CnnEngine::tcd(geometry)
                     .with_cache(Arc::clone(&cache))
@@ -221,6 +228,19 @@ pub(crate) fn service_thread(
             }))
         }
         ExecutionPlan::Pool { pool, owned } => {
+            // Journal the autotuner's plan once per distinct autotuned
+            // geometry in the pool — what those devices will run.
+            if let Some(j) = &journal {
+                let mut seen: Vec<NpeGeometry> = Vec::new();
+                for spec in pool.specs() {
+                    if spec.dataflow == DataflowPolicy::Autotune
+                        && !seen.contains(&spec.geometry)
+                    {
+                        seen.push(spec.geometry);
+                        journal_dataflow_plan(j, &model, spec.geometry, cfg.batch_size);
+                    }
+                }
+            }
             // Lay this tenant's metrics lanes over *every lane slot* of
             // the pool — including elastic headroom lanes that are still
             // vacant — so a device grown later accounts into an existing
@@ -237,6 +257,37 @@ pub(crate) fn service_thread(
         }
     };
     run_loop(rx, model, cfg, backend, metrics, shared, journal, tenant)
+}
+
+/// Record the autotuner's chosen plan for `model` on `geometry` at the
+/// batcher's full batch size: the serving-side paper trail of what an
+/// autotuned device runs for MLPs — and, for CNN/graph models (whose
+/// engines are OS-native), what the planner advises.
+fn journal_dataflow_plan(
+    journal: &JournalSink,
+    model: &ServedModel,
+    geometry: NpeGeometry,
+    batches: usize,
+) {
+    let mut cost = CostModel::new(geometry);
+    let plan = match model {
+        ServedModel::Mlp(m) => plan_mlp(&mut cost, Objective::Cycles, &m.topology, batches),
+        ServedModel::Cnn(c) => plan_cnn(&mut cost, Objective::Cycles, &c.topology, batches),
+        ServedModel::Graph(g) => plan_graph(&mut cost, Objective::Cycles, &g.graph, batches),
+    };
+    journal.event(
+        EventKind::DataflowPlan,
+        Severity::Info,
+        format!(
+            "[{}x{}] b={} plan {} ({} switch(es), {} cycles predicted)",
+            geometry.tg_rows,
+            geometry.tg_cols,
+            batches,
+            plan.summary(),
+            plan.n_switches(),
+            plan.total_cycles(),
+        ),
+    );
 }
 
 #[allow(clippy::too_many_arguments)]

@@ -24,6 +24,11 @@ pub use os::OsEngine;
 pub use rna::RnaEngine;
 pub use ws::WsEngine;
 
+// The dataflow identifier lives in `mapper` (the schedule-cache key needs
+// it below the engines); re-exported here so dataflow users never have to
+// know that.
+pub use crate::mapper::Dataflow;
+
 use crate::model::QuantizedMlp;
 use crate::ppa::{PpaReport, TechParams, VoltageDomain};
 use crate::tcdmac::{mac_ppa, MacKind};
@@ -107,10 +112,27 @@ pub fn pe_array_leak_uw(kind: MacKind, pes: usize) -> f64 {
 }
 
 /// The conventional MAC used in the paper's comparison NPEs: the most
-/// PDP-efficient Table-I baseline, (BRx8, KS).
+/// PDP-efficient Table-I baseline (the paper's Table I crowns (BRx8, KS)).
+///
+/// The winner is found by scanning the eight conventional Table-I design
+/// points on the calibrated PPA substrate and taking the minimum-PDP
+/// kind. The scan is memoized: engine constructors call this on the hot
+/// serve path (every spawned fleet device), and each *cold* PPA lookup
+/// behind it is a 20K-cycle activity simulation — recomputing the scan
+/// per call was pure waste.
 pub fn best_conventional() -> MacKind {
-    use crate::bitsim::{AdderKind, MultKind};
-    MacKind::Conv(MultKind::BoothRadix8, AdderKind::KoggeStone)
+    static BEST: OnceLock<MacKind> = OnceLock::new();
+    *BEST.get_or_init(|| {
+        MacKind::table1_order()
+            .into_iter()
+            .filter(|k| matches!(k, MacKind::Conv(..)))
+            .min_by(|a, b| {
+                cached_mac_ppa(*a)
+                    .pdp_pj()
+                    .total_cmp(&cached_mac_ppa(*b).pdp_pj())
+            })
+            .expect("Table I has conventional rows")
+    })
 }
 
 #[cfg(test)]
@@ -122,6 +144,27 @@ mod tests {
         let a = cached_mac_ppa(MacKind::Tcd);
         let b = cached_mac_ppa(MacKind::Tcd);
         assert_eq!(a.delay_ns, b.delay_ns);
+    }
+
+    #[test]
+    fn best_conventional_is_stable_and_minimizes_pdp() {
+        // Regression: the memoized scan must return the same answer on
+        // every call, and that answer must genuinely be the PDP argmin
+        // over the conventional Table-I design points.
+        let first = best_conventional();
+        assert_eq!(best_conventional(), first, "memoized answer is stable");
+        assert!(matches!(first, MacKind::Conv(..)), "winner is conventional");
+        let best_pdp = cached_mac_ppa(first).pdp_pj();
+        for k in MacKind::table1_order() {
+            if matches!(k, MacKind::Conv(..)) {
+                assert!(
+                    best_pdp <= cached_mac_ppa(k).pdp_pj(),
+                    "{} must not beat {}",
+                    k.name(),
+                    first.name()
+                );
+            }
+        }
     }
 
     #[test]

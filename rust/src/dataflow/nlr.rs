@@ -9,44 +9,93 @@
 //! each non-final input tile spills B·R partial sums to the feature memory
 //! and reloads them for the next tile — the extra memory traffic that
 //! separates NLR from OS in the Fig. 10 energy stacks.
+//!
+//! Since PR 10 the *functional* result is produced by the shared
+//! [`ExecCore`] roll walk (bit-exact with the Fix16 reference on every
+//! [`BackendKind`], conformance-gated like OS), while [`layer_cost`]
+//! prices the NLR movement for the report — the same closed form the
+//! autotuner's cost model consults.
 
 use super::{
     cached_mac_ppa, pe_array_leak_uw, DataflowEngine, DataflowReport, EnergyBreakdown,
 };
-use crate::mapper::NpeGeometry;
+use crate::exec::{BackendKind, ExecCore, OutputPath};
+use crate::mapper::{Dataflow, NpeGeometry, ScheduleCache};
 use crate::memory::rlc::rlc_compress_len;
 use crate::memory::{NpeMemorySystem, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
 use crate::model::QuantizedMlp;
+use crate::npe::ActivationUnit;
 use crate::ppa::TechParams;
 use crate::tcdmac::MacKind;
+use std::sync::Arc;
 
-/// NLR systolic engine (conventional MACs only — a TCD-MAC cannot pass
-/// partial sums onward without resolving its carries every cycle, which
-/// would forfeit its advantage; the paper evaluates NLR on conv MACs).
+/// NLR systolic engine (conventional MACs by default — a TCD-MAC cannot
+/// pass partial sums onward without resolving its carries every cycle,
+/// which would forfeit its advantage; the paper evaluates NLR on conv
+/// MACs. [`NlrEngine::with_kind`] exists for the conformance sweep,
+/// where only the functional result is asserted).
 pub struct NlrEngine {
-    pub geometry: NpeGeometry,
-    pub kind: MacKind,
+    // Private: the exec core bakes these in at construction, so mutating
+    // them afterwards would desync execution from the priced model.
+    geometry: NpeGeometry,
+    kind: MacKind,
+    /// Which roll backend executes the functional walk (re-synced into
+    /// the core on every execute, so toggling is safe).
+    pub backend: BackendKind,
+    core: ExecCore,
 }
 
 impl NlrEngine {
     pub fn new(geometry: NpeGeometry) -> Self {
-        Self { geometry, kind: super::best_conventional() }
+        Self::with_kind(geometry, super::best_conventional())
+    }
+
+    /// NLR on an explicit MAC kind (the conformance sweep runs both).
+    pub fn with_kind(geometry: NpeGeometry, kind: MacKind) -> Self {
+        Self {
+            geometry,
+            kind,
+            backend: BackendKind::Fast,
+            core: ExecCore::new(geometry, kind).with_dataflow(Dataflow::Nlr),
+        }
+    }
+
+    pub fn geometry(&self) -> NpeGeometry {
+        self.geometry
+    }
+
+    pub fn kind(&self) -> MacKind {
+        self.kind
+    }
+
+    /// Select the roll backend (builder form of the `backend` field).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Attach a fleet-shared schedule cache; lookups count on the NLR lane.
+    pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.core = self.core.with_cache(cache);
+        self
     }
 }
 
-/// Per-layer NLR cycle/traffic summary.
-#[derive(Debug, Default, Clone, Copy)]
-struct NlrLayerCost {
-    cycles: u64,
+/// Per-layer NLR cycle/traffic summary (see [`layer_cost`]).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct NlrLayerCost {
+    pub cycles: u64,
     /// Partial-sum words spilled and reloaded.
-    psum_words: u64,
+    pub psum_words: u64,
     /// Weight words streamed (no reuse: refetched per batch pass).
-    weight_words: u64,
+    pub weight_words: u64,
     /// Feature words streamed.
-    feature_words: u64,
+    pub feature_words: u64,
 }
 
-fn layer_cost(geom: &NpeGeometry, b: u64, i: u64, u: u64) -> NlrLayerCost {
+/// The NLR closed form for one Γ(B, I, U), shared verbatim by
+/// [`NlrEngine`]'s report and `autotune`'s cost model.
+pub fn layer_cost(geom: &NpeGeometry, b: u64, i: u64, u: u64) -> NlrLayerCost {
     let r = geom.tg_rows as u64;
     let c = geom.tg_cols as u64;
     let neuron_tiles = u.div_ceil(r);
@@ -72,8 +121,21 @@ impl DataflowEngine for NlrEngine {
     fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
         let tech = TechParams::DEFAULT;
         let b = inputs.len() as u64;
-        // Functional result: dataflow changes movement, not math.
-        let outputs = mlp.forward_batch(inputs);
+
+        // Functional result: the shared roll walk (bit-exact on every
+        // backend) — the dataflow changes movement, not math, so the
+        // walk's stats are discarded in favour of the NLR price below.
+        self.core.set_backend(self.backend);
+        let mut run = self.core.begin();
+        let mut ping: Vec<Vec<i16>> = inputs.to_vec();
+        let n_layers = mlp.topology.n_transitions();
+        for layer in 0..n_layers {
+            let act = ActivationUnit::new(layer + 1 < n_layers);
+            ping = self
+                .core
+                .run_gemm(&mut run, mlp, layer, &ping, OutputPath::Uniform(act), false);
+        }
+        let outputs = ping;
 
         let mut cycles = 0u64;
         let mut psum_words = 0u64;
@@ -146,6 +208,29 @@ mod tests {
         let nlr = NlrEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
         let os = OsEngine::tcd(NpeGeometry::PAPER).execute(&mlp, &inputs);
         assert_eq!(nlr.outputs, os.outputs);
+    }
+
+    #[test]
+    fn every_backend_produces_the_same_report() {
+        let (mlp, inputs) = mlp_and_inputs(4);
+        let base = NlrEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        for backend in BackendKind::ALL {
+            let r = NlrEngine::new(NpeGeometry::PAPER)
+                .with_backend(backend)
+                .execute(&mlp, &inputs);
+            assert_eq!(r.outputs, base.outputs, "{}", backend.name());
+            assert_eq!(r.cycles, base.cycles, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn cache_lookups_land_on_the_nlr_lane() {
+        let (mlp, inputs) = mlp_and_inputs(3);
+        let cache = ScheduleCache::shared();
+        let mut e = NlrEngine::new(NpeGeometry::PAPER).with_cache(Arc::clone(&cache));
+        e.execute(&mlp, &inputs);
+        assert_eq!(cache.stats_for(Dataflow::Nlr).misses, 2, "one per transition");
+        assert_eq!(cache.stats_for(Dataflow::Os).misses, 0, "no OS-lane traffic");
     }
 
     #[test]

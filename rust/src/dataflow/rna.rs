@@ -12,44 +12,99 @@
 //!   mapped") costs a drain + reconfigure of the whole array;
 //! * intermediate tree operands travel the NoC and spill to memory when a
 //!   loop segment exceeds the array.
+//!
+//! Since PR 10 the *functional* result is produced by the shared
+//! [`ExecCore`] roll walk (bit-exact with the Fix16 reference on every
+//! [`BackendKind`], conformance-gated like OS), while [`layer_cycles`] /
+//! [`operand_words`] price the RNA movement for the report — the same
+//! closed forms the autotuner's cost model consults.
 
 use super::{
     cached_mac_ppa, pe_array_leak_uw, DataflowEngine, DataflowReport, EnergyBreakdown,
 };
-use crate::mapper::NpeGeometry;
+use crate::exec::{BackendKind, ExecCore, OutputPath};
+use crate::mapper::{Dataflow, NpeGeometry, ScheduleCache};
 use crate::memory::rlc::rlc_compress_len;
 use crate::memory::{NpeMemorySystem, FMMEM_ROW_WORDS};
 use crate::model::QuantizedMlp;
+use crate::npe::ActivationUnit;
 use crate::ppa::TechParams;
 use crate::tcdmac::MacKind;
+use std::sync::Arc;
 
-/// RNA engine (conventional MACs used as multiplier-or-adder PEs).
+/// RNA engine (conventional MACs used as multiplier-or-adder PEs by
+/// default; [`RnaEngine::with_kind`] exists for the conformance sweep,
+/// where only the functional result is asserted).
 pub struct RnaEngine {
-    pub geometry: NpeGeometry,
-    pub kind: MacKind,
+    // Private: the exec core bakes these in at construction, so mutating
+    // them afterwards would desync execution from the priced model.
+    geometry: NpeGeometry,
+    kind: MacKind,
+    /// Which roll backend executes the functional walk (re-synced into
+    /// the core on every execute, so toggling is safe).
+    pub backend: BackendKind,
+    core: ExecCore,
 }
 
 impl RnaEngine {
     pub fn new(geometry: NpeGeometry) -> Self {
-        Self { geometry, kind: super::best_conventional() }
+        Self::with_kind(geometry, super::best_conventional())
     }
 
-    /// Cycles for one layer (B, I, U): ops / (PEs/2 effective) plus a
-    /// reconfiguration drain per mapped loop segment.
-    fn layer_cycles(&self, b: u64, i: u64, u: u64) -> u64 {
-        let pes = self.geometry.pes() as u64;
-        let mults = b * u * i;
-        let adds = b * u * i.saturating_sub(1);
-        let effective = (pes / 2).max(1);
-        let compute = (mults + adds).div_ceil(effective);
-        // Loop segments: each maps one neuron group's tree (I mults +
-        // adder tree) onto the array; draining/reconfiguring costs the
-        // array diameter in cycles.
-        let tree_size = 2 * i;
-        let segments = (b * u * tree_size).div_ceil(pes);
-        let drain = self.geometry.tg_rows as u64 + self.geometry.tg_cols as u64;
-        compute + segments * drain / 4
+    /// RNA on an explicit MAC kind (the conformance sweep runs both).
+    pub fn with_kind(geometry: NpeGeometry, kind: MacKind) -> Self {
+        Self {
+            geometry,
+            kind,
+            backend: BackendKind::Fast,
+            core: ExecCore::new(geometry, kind).with_dataflow(Dataflow::Rna),
+        }
     }
+
+    pub fn geometry(&self) -> NpeGeometry {
+        self.geometry
+    }
+
+    pub fn kind(&self) -> MacKind {
+        self.kind
+    }
+
+    /// Select the roll backend (builder form of the `backend` field).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Attach a fleet-shared schedule cache; lookups count on the RNA lane.
+    pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.core = self.core.with_cache(cache);
+        self
+    }
+}
+
+/// Cycles for one layer (B, I, U): ops / (PEs/2 effective) plus a
+/// reconfiguration drain per mapped loop segment. Shared verbatim by
+/// [`RnaEngine`]'s report and `autotune`'s cost model.
+pub fn layer_cycles(geometry: NpeGeometry, b: u64, i: u64, u: u64) -> u64 {
+    let pes = geometry.pes() as u64;
+    let mults = b * u * i;
+    let adds = b * u * i.saturating_sub(1);
+    let effective = (pes / 2).max(1);
+    let compute = (mults + adds).div_ceil(effective);
+    // Loop segments: each maps one neuron group's tree (I mults +
+    // adder tree) onto the array; draining/reconfiguring costs the
+    // array diameter in cycles.
+    let tree_size = 2 * i;
+    let segments = (b * u * tree_size).div_ceil(pes);
+    let drain = geometry.tg_rows as u64 + geometry.tg_cols as u64;
+    compute + segments * drain / 4
+}
+
+/// NoC operand words for one layer: every multiply operand pair is
+/// delivered over the NoC from buffers; intermediate tree levels spill
+/// once on average.
+pub fn operand_words(b: u64, i: u64, u: u64) -> u64 {
+    b * u * i / 2
 }
 
 impl DataflowEngine for RnaEngine {
@@ -60,15 +115,27 @@ impl DataflowEngine for RnaEngine {
     fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
         let tech = TechParams::DEFAULT;
         let b = inputs.len() as u64;
-        let outputs = mlp.forward_batch(inputs);
+
+        // Functional result: the shared roll walk (bit-exact on every
+        // backend) — the dataflow changes movement, not math, so the
+        // walk's stats are discarded in favour of the RNA price below.
+        self.core.set_backend(self.backend);
+        let mut run = self.core.begin();
+        let mut ping: Vec<Vec<i16>> = inputs.to_vec();
+        let n_layers = mlp.topology.n_transitions();
+        for layer in 0..n_layers {
+            let act = ActivationUnit::new(layer + 1 < n_layers);
+            ping = self
+                .core
+                .run_gemm(&mut run, mlp, layer, &ping, OutputPath::Uniform(act), false);
+        }
+        let outputs = ping;
 
         let mut cycles = 0u64;
-        let mut operand_words = 0u64;
+        let mut noc_words = 0u64;
         for (i, u) in mlp.topology.transitions() {
-            cycles += self.layer_cycles(b, i as u64, u as u64);
-            // Every multiply operand pair is delivered over the NoC from
-            // buffers; intermediate tree levels spill once on average.
-            operand_words += b * (u as u64) * (i as u64) / 2;
+            cycles += layer_cycles(self.geometry, b, i as u64, u as u64);
+            noc_words += operand_words(b, i as u64, u as u64);
         }
 
         let mac = cached_mac_ppa(self.kind);
@@ -76,8 +143,8 @@ impl DataflowEngine for RnaEngine {
 
         let mut mem = NpeMemorySystem::new();
         mem.fm_ping
-            .read_rows(operand_words.div_ceil(FMMEM_ROW_WORDS as u64));
-        mem.fm_pong.write_words(operand_words / 4);
+            .read_rows(noc_words.div_ceil(FMMEM_ROW_WORDS as u64));
+        mem.fm_pong.write_words(noc_words / 4);
         let mut dram_bits = 0u64;
         for w in &mlp.weights {
             dram_bits += rlc_compress_len(w);
@@ -129,6 +196,29 @@ mod tests {
     }
 
     #[test]
+    fn every_backend_produces_the_same_report() {
+        let (mlp, inputs) = mlp_and_inputs(3);
+        let base = RnaEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        for backend in BackendKind::ALL {
+            let r = RnaEngine::new(NpeGeometry::PAPER)
+                .with_backend(backend)
+                .execute(&mlp, &inputs);
+            assert_eq!(r.outputs, base.outputs, "{}", backend.name());
+            assert_eq!(r.cycles, base.cycles, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn cache_lookups_land_on_the_rna_lane() {
+        let (mlp, inputs) = mlp_and_inputs(2);
+        let cache = ScheduleCache::shared();
+        let mut e = RnaEngine::new(NpeGeometry::PAPER).with_cache(Arc::clone(&cache));
+        e.execute(&mlp, &inputs);
+        assert_eq!(cache.stats_for(Dataflow::Rna).misses, 2, "one per transition");
+        assert_eq!(cache.stats_for(Dataflow::Os).misses, 0, "no OS-lane traffic");
+    }
+
+    #[test]
     fn rna_is_the_slowest_dataflow() {
         // Paper Fig. 10: RNA trails OS and NLR on every benchmark.
         let (mlp, inputs) = mlp_and_inputs(10);
@@ -141,8 +231,8 @@ mod tests {
 
     #[test]
     fn cycles_scale_with_work() {
-        let e = RnaEngine::new(NpeGeometry::PAPER);
-        assert!(e.layer_cycles(2, 100, 50) < e.layer_cycles(4, 100, 50));
-        assert!(e.layer_cycles(2, 100, 50) < e.layer_cycles(2, 200, 50));
+        let g = NpeGeometry::PAPER;
+        assert!(layer_cycles(g, 2, 100, 50) < layer_cycles(g, 4, 100, 50));
+        assert!(layer_cycles(g, 2, 100, 50) < layer_cycles(g, 2, 200, 50));
     }
 }

@@ -9,17 +9,26 @@
 //! than the OS schedule fetches them, at the cost of per-PE psum storage
 //! for B partial outputs (modeled as extra FM traffic when B exceeds the
 //! per-PE register budget).
+//!
+//! Since PR 10 the *functional* result is produced by the shared
+//! [`ExecCore`] roll walk (bit-exact with the Fix16 reference and every
+//! [`BackendKind`], conformance-gated like OS), while the closed-form
+//! model below prices the WS movement for the report — the same
+//! [`ws_layer_model`] the autotuner's cost model consults.
 
 use super::{
     cached_mac_ppa, pe_array_leak_uw, DataflowEngine, DataflowReport, EnergyBreakdown,
 };
-use crate::mapper::{MapperTree, NpeGeometry};
+use crate::exec::{BackendKind, ExecCore, OutputPath};
+use crate::mapper::{Dataflow, MapperTree, NpeGeometry, ScheduleCache};
 use crate::memory::arrangement::WMemArrangement;
 use crate::memory::rlc::rlc_compress_len;
 use crate::memory::{NpeMemorySystem, FMMEM_ROW_WORDS, WMEM_ROW_WORDS};
 use crate::model::QuantizedMlp;
+use crate::npe::ActivationUnit;
 use crate::ppa::TechParams;
 use crate::tcdmac::MacKind;
+use std::sync::Arc;
 
 /// Per-PE partial-sum registers available for WS batching (beyond this,
 /// psums spill to the FM memory).
@@ -27,13 +36,92 @@ pub const WS_PSUM_REGS: usize = 4;
 
 /// Weight-stationary engine on TCD-MACs.
 pub struct WsEngine {
-    pub geometry: NpeGeometry,
-    pub kind: MacKind,
+    // Private: the exec core bakes these in at construction, so mutating
+    // them afterwards would desync execution from the priced model.
+    geometry: NpeGeometry,
+    kind: MacKind,
+    /// Which roll backend executes the functional walk (re-synced into
+    /// the core on every execute, so toggling is safe).
+    pub backend: BackendKind,
+    core: ExecCore,
 }
 
 impl WsEngine {
     pub fn new(geometry: NpeGeometry) -> Self {
-        Self { geometry, kind: MacKind::Tcd }
+        Self::with_kind(geometry, MacKind::Tcd)
+    }
+
+    /// WS on an explicit MAC kind (the conformance sweep runs both).
+    pub fn with_kind(geometry: NpeGeometry, kind: MacKind) -> Self {
+        Self {
+            geometry,
+            kind,
+            backend: BackendKind::Fast,
+            core: ExecCore::new(geometry, kind).with_dataflow(Dataflow::Ws),
+        }
+    }
+
+    pub fn geometry(&self) -> NpeGeometry {
+        self.geometry
+    }
+
+    pub fn kind(&self) -> MacKind {
+        self.kind
+    }
+
+    /// Select the roll backend (builder form of the `backend` field).
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Attach a fleet-shared schedule cache; lookups count on the WS lane.
+    pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
+        self.core = self.core.with_cache(cache);
+        self
+    }
+}
+
+/// Per-layer WS closed-form model: cycles plus the traffic components the
+/// report (and the autotuner's cost model) charges for one Γ(B, I, U).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct WsLayerModel {
+    pub cycles: u64,
+    pub wmem_row_reads: u64,
+    pub fm_row_reads: u64,
+    pub fm_row_writes: u64,
+    pub psum_spill_words: u64,
+}
+
+/// The WS closed form for one layer, shared verbatim by [`WsEngine`]'s
+/// report and `autotune`'s cost model (predicted == reported by
+/// construction).
+pub fn ws_layer_model(
+    geometry: NpeGeometry,
+    kind: MacKind,
+    b: usize,
+    i: usize,
+    u: usize,
+) -> WsLayerModel {
+    let pes = geometry.pes();
+    // Weight tiles: each of the ⌈U/pes⌉ passes pins pes weight rows;
+    // ALL batches stream through before the next fetch.
+    let passes = u.div_ceil(pes) as u64;
+    let extra = matches!(kind, MacKind::Tcd) as u64;
+    let w = WMemArrangement {
+        row_words: WMEM_ROW_WORDS,
+        n: pes.min(u),
+        inputs: i,
+        neurons: pes.min(u),
+    };
+    WsLayerModel {
+        cycles: passes * b as u64 * (i as u64 + extra),
+        // Weights fetched ONCE per pass (the WS property).
+        wmem_row_reads: w.row_reads() * passes,
+        // Features re-streamed once per pass per batch.
+        fm_row_reads: passes * (b as u64) * (i as u64).div_ceil(FMMEM_ROW_WORDS as u64),
+        fm_row_writes: (b as u64 * u as u64).div_ceil(FMMEM_ROW_WORDS as u64),
+        psum_spill_words: ws_psum_spill_words(b, u),
     }
 }
 
@@ -45,8 +133,22 @@ impl DataflowEngine for WsEngine {
     fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
         let tech = TechParams::DEFAULT;
         let b = inputs.len();
-        let outputs = mlp.forward_batch(inputs);
-        let pes = self.geometry.pes();
+
+        // Functional result: the shared roll walk (bit-exact on every
+        // backend). WS changes the movement schedule, not the math, so
+        // the stats the walk accumulates are discarded in favour of the
+        // closed-form WS price below.
+        self.core.set_backend(self.backend);
+        let mut run = self.core.begin();
+        let mut ping: Vec<Vec<i16>> = inputs.to_vec();
+        let n_layers = mlp.topology.n_transitions();
+        for layer in 0..n_layers {
+            let act = ActivationUnit::new(layer + 1 < n_layers);
+            ping = self
+                .core
+                .run_gemm(&mut run, mlp, layer, &ping, OutputPath::Uniform(act), false);
+        }
+        let outputs = ping;
 
         let mut cycles = 0u64;
         let mut wmem_reads = 0u64;
@@ -54,23 +156,12 @@ impl DataflowEngine for WsEngine {
         let mut fm_writes = 0u64;
         let mut psum_spill_words = 0u64;
         for (i, u) in mlp.topology.transitions() {
-            // Weight tiles: each of the ⌈U/pes⌉ passes pins pes weights
-            // rows; ALL batches stream through before the next fetch.
-            let passes = u.div_ceil(pes) as u64;
-            let extra = matches!(self.kind, MacKind::Tcd) as u64;
-            cycles += passes * b as u64 * (i as u64 + extra);
-            // Weights fetched ONCE per pass (the WS property).
-            let w = WMemArrangement {
-                row_words: WMEM_ROW_WORDS,
-                n: pes.min(u),
-                inputs: i,
-                neurons: pes.min(u),
-            };
-            wmem_reads += w.row_reads() * passes;
-            // Features re-streamed once per pass per batch.
-            fm_reads += passes * (b as u64) * (i as u64).div_ceil(FMMEM_ROW_WORDS as u64);
-            fm_writes += (b as u64 * u as u64).div_ceil(FMMEM_ROW_WORDS as u64);
-            psum_spill_words += ws_psum_spill_words(b, u);
+            let m = ws_layer_model(self.geometry, self.kind, b, i, u);
+            cycles += m.cycles;
+            wmem_reads += m.wmem_row_reads;
+            fm_reads += m.fm_row_reads;
+            fm_writes += m.fm_row_writes;
+            psum_spill_words += m.psum_spill_words;
         }
 
         let mac = cached_mac_ppa(self.kind);
@@ -89,6 +180,7 @@ impl DataflowEngine for WsEngine {
             dram_bits += rlc_compress_len(x);
         }
 
+        let pes = self.geometry.pes();
         let active = cycles * pes as u64; // all PEs active while streaming
         let energy = EnergyBreakdown {
             pe_dynamic_pj: active as f64 * mac.energy_per_cycle_pj(),
@@ -153,6 +245,43 @@ mod tests {
         let (mlp, inputs) = setup(6);
         let r = WsEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
         assert_eq!(r.outputs, mlp.forward_batch(&inputs));
+    }
+
+    #[test]
+    fn every_backend_produces_the_same_report() {
+        let (mlp, inputs) = setup(5);
+        let base = WsEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        for backend in BackendKind::ALL {
+            let r = WsEngine::new(NpeGeometry::PAPER)
+                .with_backend(backend)
+                .execute(&mlp, &inputs);
+            assert_eq!(r.outputs, base.outputs, "{}", backend.name());
+            assert_eq!(r.cycles, base.cycles, "{}", backend.name());
+        }
+    }
+
+    #[test]
+    fn cache_lookups_land_on_the_ws_lane() {
+        let (mlp, inputs) = setup(4);
+        let cache = ScheduleCache::shared();
+        let mut e = WsEngine::new(NpeGeometry::PAPER).with_cache(Arc::clone(&cache));
+        e.execute(&mlp, &inputs);
+        assert_eq!(cache.stats_for(Dataflow::Ws).misses, 2, "one per transition");
+        assert_eq!(cache.stats_for(Dataflow::Os).misses, 0, "no OS-lane traffic");
+        e.execute(&mlp, &inputs);
+        assert_eq!(cache.stats_for(Dataflow::Ws).hits, 2, "warm path hits");
+    }
+
+    #[test]
+    fn report_matches_the_layer_model_sum() {
+        let (mlp, inputs) = setup(7);
+        let r = WsEngine::new(NpeGeometry::PAPER).execute(&mlp, &inputs);
+        let predicted: u64 = mlp
+            .topology
+            .transitions()
+            .map(|(i, u)| ws_layer_model(NpeGeometry::PAPER, MacKind::Tcd, 7, i, u).cycles)
+            .sum();
+        assert_eq!(r.cycles, predicted);
     }
 
     #[test]

@@ -39,7 +39,7 @@ use crate::dataflow::{cached_mac_ppa, pe_array_leak_uw, DataflowReport, EnergyBr
 use crate::mapper::cache::CachedSchedule;
 use crate::mapper::schedule::bfs_events;
 use crate::mapper::tree::RollAssignment;
-use crate::mapper::{Gamma, LayerSchedule, MapperTree, NpeGeometry, ScheduleCache};
+use crate::mapper::{Dataflow, Gamma, LayerSchedule, MapperTree, NpeGeometry, ScheduleCache};
 use crate::memory::NpeMemorySystem;
 use crate::model::QuantizedMlp;
 use crate::npe::pe_array::NeuronResult;
@@ -184,6 +184,10 @@ pub struct ExecCore {
     geometry: NpeGeometry,
     kind: MacKind,
     backend: BackendKind,
+    /// The dataflow this core's schedule walks are attributed to — the
+    /// third component of the [`ScheduleCache`] key, so each dataflow
+    /// engine counts on (and hits only) its own cache lane. Default: OS.
+    dataflow: Dataflow,
     mapper: MapperTree,
     cache: Option<Arc<ScheduleCache>>,
 }
@@ -194,6 +198,7 @@ impl ExecCore {
             geometry,
             kind,
             backend: BackendKind::Fast,
+            dataflow: Dataflow::Os,
             mapper: MapperTree::new(geometry),
             cache: None,
         }
@@ -203,6 +208,23 @@ impl ExecCore {
     pub fn with_cache(mut self, cache: Arc<ScheduleCache>) -> Self {
         self.cache = Some(cache);
         self
+    }
+
+    /// Attribute this core's cache lookups to `dataflow` (the WS/NLR/RNA
+    /// engines set their own lane; everything else stays OS).
+    pub fn with_dataflow(mut self, dataflow: Dataflow) -> Self {
+        self.dataflow = dataflow;
+        self
+    }
+
+    pub fn dataflow(&self) -> Dataflow {
+        self.dataflow
+    }
+
+    /// Re-point the cache lane mid-run (the autotuned engine walks each
+    /// layer on the lane its plan chose for that layer).
+    pub fn set_dataflow(&mut self, dataflow: Dataflow) {
+        self.dataflow = dataflow;
     }
 
     /// Select the roll backend.
@@ -290,7 +312,8 @@ impl ExecCore {
         let fresh_sched;
         let (sched, assignments): (&LayerSchedule, _) = match &self.cache {
             Some(cache) => {
-                let (entry, hit) = cache.get_or_compute_hit(&mut self.mapper, gamma);
+                let (entry, hit) =
+                    cache.get_or_compute_hit_on(&mut self.mapper, gamma, self.dataflow);
                 cache_hit = Some(hit);
                 cached_entry = entry;
                 let node = cached_entry.exec.as_ref().expect("non-empty GEMM");

@@ -7,44 +7,126 @@
 //! what lets one device pool serve many tenants — the pairing lives on
 //! the [`super::FleetJob`], never on the device.
 
+use super::{DataflowPolicy, DeviceSpec};
 use super::queue::{FleetQueue, Popped};
-use super::DeviceSpec;
+use crate::autotune::AutotunedEngine;
 use crate::conv::CnnEngine;
 use crate::coordinator::{respond_batch, ServedModel};
-use crate::dataflow::{DataflowEngine, DataflowReport, OsEngine};
+use crate::dataflow::{DataflowEngine, DataflowReport, NlrEngine, OsEngine, RnaEngine, WsEngine};
 use crate::exec::BackendKind;
 use crate::graph::GraphEngine;
-use crate::mapper::{NpeGeometry, ScheduleCache};
+use crate::mapper::{Dataflow, NpeGeometry, ScheduleCache};
+use crate::model::QuantizedMlp;
 use crate::obs::{BusyLanes, SpanKind, TrackHandle};
 use crate::util;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// The MLP engine a device runs, chosen by its [`DataflowPolicy`]: one
+/// of the four fixed dataflows or the autotuned per-layer mix. All five
+/// are bit-exact with each other (dataflow moves data, not math), so a
+/// pool may mix them freely.
+pub enum MlpEngine {
+    Os(OsEngine),
+    Ws(WsEngine),
+    Nlr(NlrEngine),
+    Rna(RnaEngine),
+    Auto(AutotunedEngine),
+}
+
+impl MlpEngine {
+    /// Build the policy's engine, joined to the shared schedule cache so
+    /// every lookup lands on its dataflow's lane.
+    pub fn build(
+        policy: DataflowPolicy,
+        geometry: NpeGeometry,
+        cache: Arc<ScheduleCache>,
+        backend: BackendKind,
+    ) -> Self {
+        match policy {
+            DataflowPolicy::Fixed(Dataflow::Os) => {
+                MlpEngine::Os(OsEngine::tcd(geometry).with_cache(cache).with_backend(backend))
+            }
+            DataflowPolicy::Fixed(Dataflow::Ws) => {
+                MlpEngine::Ws(WsEngine::new(geometry).with_cache(cache).with_backend(backend))
+            }
+            DataflowPolicy::Fixed(Dataflow::Nlr) => {
+                MlpEngine::Nlr(NlrEngine::new(geometry).with_cache(cache).with_backend(backend))
+            }
+            DataflowPolicy::Fixed(Dataflow::Rna) => {
+                MlpEngine::Rna(RnaEngine::new(geometry).with_cache(cache).with_backend(backend))
+            }
+            DataflowPolicy::Autotune => MlpEngine::Auto(
+                AutotunedEngine::new(geometry).with_cache(cache).with_backend(backend),
+            ),
+        }
+    }
+
+    /// Attach a tracer track where the engine supports one (the OS and
+    /// autotuned engines record per-batch attribution; the fixed WS/NLR/
+    /// RNA baselines have no tracer hook and pass through unchanged).
+    pub fn with_tracer(self, track: Option<TrackHandle>) -> Self {
+        match self {
+            MlpEngine::Os(e) => MlpEngine::Os(e.with_tracer(track)),
+            MlpEngine::Auto(e) => MlpEngine::Auto(e.with_tracer(track)),
+            other => other,
+        }
+    }
+
+    /// Execute one MLP batch on whichever engine the policy chose.
+    pub fn execute(&mut self, mlp: &QuantizedMlp, inputs: &[Vec<i16>]) -> DataflowReport {
+        match self {
+            MlpEngine::Os(e) => e.execute(mlp, inputs),
+            MlpEngine::Ws(e) => e.execute(mlp, inputs),
+            MlpEngine::Nlr(e) => e.execute(mlp, inputs),
+            MlpEngine::Rna(e) => e.execute(mlp, inputs),
+            MlpEngine::Auto(e) => e.execute(mlp, inputs),
+        }
+    }
+}
 
 /// The per-device engine bundle — one engine per servable model kind,
 /// constructed once per device thread and reused for every batch, so
 /// the Algorithm-1 memo (private and shared) persists across the
 /// device's whole lifetime regardless of which tenant's work arrives.
 pub struct DeviceEngines {
-    mlp: OsEngine,
+    mlp: MlpEngine,
     cnn: CnnEngine,
     graph: GraphEngine,
 }
 
 impl DeviceEngines {
     /// Build the bundle joined to the fleet's shared schedule cache, on
-    /// the default (`Fast`) backend.
+    /// the default (`Fast`) backend and the paper's fixed-OS dataflow.
     pub fn new(geometry: NpeGeometry, cache: Arc<ScheduleCache>) -> Self {
         Self::on(geometry, cache, BackendKind::Fast)
     }
 
     /// Build the bundle on an explicit roll backend (responses are
     /// bit-exact across backends — the conformance suite proves it — so
-    /// heterogeneous-backend pools are safe).
+    /// heterogeneous-backend pools are safe). Fixed-OS dataflow.
     pub fn on(geometry: NpeGeometry, cache: Arc<ScheduleCache>, backend: BackendKind) -> Self {
+        Self::for_spec(
+            &DeviceSpec { geometry, backend, dataflow: DataflowPolicy::default() },
+            cache,
+        )
+    }
+
+    /// Build the bundle a [`DeviceSpec`] describes: geometry, backend
+    /// *and* dataflow policy. Only the MLP engine is dataflow-selectable;
+    /// CNN and graph engines are OS-native.
+    pub fn for_spec(spec: &DeviceSpec, cache: Arc<ScheduleCache>) -> Self {
         Self {
-            mlp: OsEngine::tcd(geometry).with_cache(Arc::clone(&cache)).with_backend(backend),
-            cnn: CnnEngine::tcd(geometry).with_cache(Arc::clone(&cache)).with_backend(backend),
-            graph: GraphEngine::tcd(geometry).with_cache(cache).with_backend(backend),
+            mlp: MlpEngine::build(
+                spec.dataflow,
+                spec.geometry,
+                Arc::clone(&cache),
+                spec.backend,
+            ),
+            cnn: CnnEngine::tcd(spec.geometry)
+                .with_cache(Arc::clone(&cache))
+                .with_backend(spec.backend),
+            graph: GraphEngine::tcd(spec.geometry).with_cache(cache).with_backend(spec.backend),
         }
     }
 
@@ -90,8 +172,7 @@ pub(crate) fn device_main(
     track: Option<TrackHandle>,
     busy: Arc<BusyLanes>,
 ) {
-    let mut engines = DeviceEngines::on(spec.geometry, cache, spec.backend)
-        .with_tracer(track.clone());
+    let mut engines = DeviceEngines::for_spec(&spec, cache).with_tracer(track.clone());
     loop {
         let job = match queue.pop_next() {
             Popped::Job(job) => job,
@@ -148,6 +229,49 @@ mod tests {
         let ginputs = graph.synth_inputs(2, 7);
         let greport = dev.execute(&ServedModel::Graph(graph.clone()), &ginputs);
         assert_eq!(greport.outputs, graph.forward_batch(&ginputs));
+    }
+
+    #[test]
+    fn every_dataflow_policy_stays_bit_exact() {
+        // One bundle per policy — the four fixed dataflows plus the
+        // autotuned mix — all answering identically to the reference.
+        let mlp = QuantizedMlp::synthesize(MlpTopology::new(vec![20, 14, 4]), 17);
+        let model = ServedModel::Mlp(mlp.clone());
+        let inputs = mlp.synth_inputs(3, 9);
+        let expect = mlp.forward_batch(&inputs);
+        let policies = [
+            DataflowPolicy::Fixed(Dataflow::Os),
+            DataflowPolicy::Fixed(Dataflow::Ws),
+            DataflowPolicy::Fixed(Dataflow::Nlr),
+            DataflowPolicy::Fixed(Dataflow::Rna),
+            DataflowPolicy::Autotune,
+        ];
+        for policy in policies {
+            let cache = ScheduleCache::shared();
+            let spec = DeviceSpec {
+                geometry: NpeGeometry::WALKTHROUGH,
+                backend: BackendKind::Fast,
+                dataflow: policy,
+            };
+            let mut dev = DeviceEngines::for_spec(&spec, Arc::clone(&cache));
+            let report = dev.execute(&model, &inputs);
+            assert_eq!(report.outputs, expect, "{policy}");
+            // Fixed policies miss only on their own cache lane; the
+            // autotuned bundle spreads lookups across its plan's lanes.
+            if let DataflowPolicy::Fixed(d) = policy {
+                assert!(cache.stats_for(d).misses > 0, "{policy} used its lane");
+                for other in Dataflow::ALL.iter().filter(|o| **o != d) {
+                    assert_eq!(
+                        cache.stats_for(*other).lookups(),
+                        0,
+                        "{policy} never touched the {} lane",
+                        other.name()
+                    );
+                }
+            } else {
+                assert!(cache.stats().lookups() > 0, "autotune exercised the cache");
+            }
+        }
     }
 
     #[test]

@@ -55,35 +55,80 @@ pub mod loadgen;
 pub mod queue;
 
 pub use controller::{ControllerConfig, ControllerMode, ControllerSignals, PoolController};
-pub use device::DeviceEngines;
+pub use device::{DeviceEngines, MlpEngine};
 pub use loadgen::{poisson_arrivals, run_open_loop, submit_open_loop, Arrival, LoadGenConfig};
 pub use queue::{FleetJob, FleetQueue, Popped};
 
 use crate::exec::BackendKind;
-use crate::mapper::{NpeGeometry, ScheduleCache};
+use crate::mapper::{Dataflow, NpeGeometry, ScheduleCache};
 use crate::obs::{BusyLanes, Tracer};
 use crate::util;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-/// One device of a fleet: its PE-array geometry and the roll backend it
-/// executes schedules on. Heterogeneous fleets (mixed geometries *and*
-/// mixed backends) stay bit-exact — neither moves the math.
+/// How a device picks the dataflow for MLP batches: pinned to one of
+/// the four evaluated dataflows, or chosen per layer by the
+/// [`crate::autotune`] cost-model planner. CNN and graph batches always
+/// execute on the OS engines regardless of policy (their engines are
+/// OS-native); for those models an autotune policy is advisory — the
+/// plan is still computed and journaled by the serving layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataflowPolicy {
+    /// Every MLP layer runs this dataflow (the seed behaviour is
+    /// `Fixed(Dataflow::Os)` — the paper's TCD-NPE configuration).
+    Fixed(Dataflow),
+    /// Per-layer dataflow from [`crate::autotune::AutotunedEngine`].
+    Autotune,
+}
+
+impl Default for DataflowPolicy {
+    fn default() -> Self {
+        DataflowPolicy::Fixed(Dataflow::Os)
+    }
+}
+
+impl std::fmt::Display for DataflowPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DataflowPolicy::Fixed(d) => write!(f, "{}", d.name()),
+            DataflowPolicy::Autotune => write!(f, "autotune"),
+        }
+    }
+}
+
+/// One device of a fleet: its PE-array geometry, the roll backend it
+/// executes schedules on, and its dataflow policy. Heterogeneous fleets
+/// (mixed geometries, mixed backends *and* mixed dataflows) stay
+/// bit-exact — none of the three moves the math.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DeviceSpec {
     pub geometry: NpeGeometry,
     pub backend: BackendKind,
+    pub dataflow: DataflowPolicy,
 }
 
 impl DeviceSpec {
+    /// A device on the paper's fixed-OS dataflow (the seed default).
     pub fn new(geometry: NpeGeometry, backend: BackendKind) -> Self {
-        Self { geometry, backend }
+        Self { geometry, backend, dataflow: DataflowPolicy::default() }
+    }
+
+    /// Pin this device's MLP dataflow (builder form).
+    pub fn with_dataflow(mut self, dataflow: Dataflow) -> Self {
+        self.dataflow = DataflowPolicy::Fixed(dataflow);
+        self
+    }
+
+    /// Let this device autotune its MLP dataflow per layer.
+    pub fn with_autotune(mut self) -> Self {
+        self.dataflow = DataflowPolicy::Autotune;
+        self
     }
 }
 
 impl From<NpeGeometry> for DeviceSpec {
-    /// A bare geometry runs on the default `Fast` backend.
+    /// A bare geometry runs on the default `Fast` backend, fixed OS.
     fn from(geometry: NpeGeometry) -> Self {
         Self::new(geometry, BackendKind::Fast)
     }

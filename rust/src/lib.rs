@@ -49,6 +49,14 @@
 //!   quantization/ReLU unit (Fig. 4) and the controller FSM.
 //! * [`dataflow`] — the four evaluated dataflows of Fig. 9: OS on TCD-MACs,
 //!   OS on conventional MACs, NLR (systolic), and RNA (compute-tree).
+//! * [`autotune`] — the dataflow autotuner: an analytical cost model
+//!   pricing every (dataflow × geometry × Γ) candidate with the same
+//!   closed forms the engines report from (predicted == reported,
+//!   property-tested), a Viterbi per-layer selector that weighs
+//!   mid-model dataflow-switch cost (all-OS is always a feasible path,
+//!   so plans are never worse than fixed OS), and `AutotunedEngine`
+//!   executing mixed-dataflow plans bit-exactly with per-layer
+//!   schedule-cache lanes.
 //! * [`model`] — MLP topology descriptions, the Table-IV benchmark zoo
 //!   (plus its CNN companion: LeNet-5 and a small CIFAR-10 convnet) and
 //!   signed 16-bit fixed-point tensors.
@@ -92,6 +100,7 @@
 // Bench code must never lean on anything the crate has deprecated.
 #[deny(deprecated)]
 pub mod bench;
+pub mod autotune;
 pub mod bitsim;
 pub mod conv;
 pub mod coordinator;

@@ -10,6 +10,9 @@
 
 use anyhow::{anyhow, Context, Result};
 use std::io::Write;
+use tcd_npe::autotune::{
+    plan_cnn, plan_graph, plan_mlp, AutotunedEngine, CostModel, Dataflow, Objective,
+};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -54,6 +57,11 @@ Paper artifacts:
 
 System:
   schedule <topo> <batches>  Algorithm-1 schedule for an MLP, e.g. 784:700:10 10
+  autotune [model] [--batches N] [--objective cycles|latency|energy|edp] [--json PATH]
+                             cost-model dataflow plan for one zoo model (or a raw
+                             MLP topology like 784:700:10): per-layer candidate
+                             costs, chosen dataflow, switch penalties; with no
+                             model, the whole-zoo sweep + BENCH_dataflow.json
   mem-report <topo> <K> <N>  Fig.-7 data arrangement for a config
   serve [--requests N] [--backend B] [--admission P]
                              run the serving demo (NpeService::builder, simulator)
@@ -158,6 +166,20 @@ fn main() -> Result<()> {
                 .context("bad topology, e.g. 784:700:10")?;
             let batches: usize = args.get(2).context("need batch count")?.parse()?;
             cmd_schedule(&topo, batches);
+        }
+        "autotune" => {
+            let model = args.get(1).filter(|a| !a.starts_with("--")).map(String::as_str);
+            let batches = flag_value(&args, "--batches")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(bench::DATAFLOW_BATCHES);
+            let objective = match flag_value(&args, "--objective") {
+                None => Objective::Cycles,
+                Some(s) => Objective::parse(s).ok_or_else(|| {
+                    anyhow!("unknown objective {s:?} (cycles | latency | energy | edp)")
+                })?,
+            };
+            cmd_autotune(model, batches, objective, flag_value(&args, "--json"))?;
         }
         "mem-report" => {
             let topo = MlpTopology::parse(args.get(1).context("need topology")?)
@@ -355,6 +377,105 @@ fn cmd_schedule(topo: &MlpTopology, batches: usize) {
         ms.compute_cycles(true),
         ms.utilization() * 100.0
     );
+}
+
+/// The dataflow autotuner: price one model's layers under all four
+/// dataflows, print the per-layer candidate table and the chosen plan —
+/// and for MLPs, execute both the fixed-OS and the autotuned engine to
+/// show the prediction is exact. With no model: the whole-zoo sweep.
+fn cmd_autotune(
+    model_name: Option<&str>,
+    batches: usize,
+    objective: Objective,
+    json: Option<&str>,
+) -> Result<()> {
+    let geom = NpeGeometry::PAPER;
+    let Some(name) = model_name else {
+        let rows = bench::dataflow_rows(batches);
+        println!("{}", bench::render_dataflow_table(&rows, batches));
+        if let Some(path) = json {
+            std::fs::write(path, bench::dataflow_json(&rows, batches))?;
+            println!("wrote {path}");
+        }
+        return Ok(());
+    };
+    // Resolve: MLP zoo dataset, raw topology, CNN or DAG network name.
+    let mut model = CostModel::new(geom);
+    let (label, plan, mlp) = if let Some(b) = benchmark_by_name(name) {
+        let plan = plan_mlp(&mut model, objective, &b.topology, batches);
+        let m = QuantizedMlp::synthesize(b.topology.clone(), 0xA7_07);
+        (format!("{} ({})", b.dataset, b.topology.display()), plan, Some(m))
+    } else if let Some(topo) = MlpTopology::parse(name) {
+        let plan = plan_mlp(&mut model, objective, &topo, batches);
+        let m = QuantizedMlp::synthesize(topo.clone(), 0xA7_07);
+        (topo.display(), plan, Some(m))
+    } else if let Some(b) = cnn_benchmark_by_name(name) {
+        let plan = plan_cnn(&mut model, objective, &b.topology, batches);
+        (format!("{} ({}, OS-native engine — plan is advisory)", b.network, b.dataset), plan, None)
+    } else if let Some(b) = graph_benchmark_by_name(name) {
+        let plan = plan_graph(&mut model, objective, &b.graph, batches);
+        (format!("{} ({}, OS-native engine — plan is advisory)", b.network, b.dataset), plan, None)
+    } else {
+        return Err(anyhow!(
+            "unknown model {name:?} (MLP dataset, raw topology like 784:700:10, \
+             CNN or DAG network name)"
+        ));
+    };
+
+    println!("autotuning {label} on the 16x8 TCD-NPE, B={batches}, objective {objective}\n");
+    let mut t = TextTable::new(vec!["Layer", "Gamma", "os", "ws", "nlr", "rna", "Chosen"]);
+    for step in &plan.steps {
+        let score = |d: Dataflow| {
+            let c = &step.candidates[d.lane()];
+            match objective {
+                Objective::Cycles => c.cycles.to_string(),
+                _ => format!("{:.1}", c.score(objective)),
+            }
+        };
+        t.row(vec![
+            step.label.clone(),
+            format!("({}, {}, {})", step.gamma.batches, step.gamma.inputs, step.gamma.neurons),
+            score(Dataflow::Os),
+            score(Dataflow::Ws),
+            score(Dataflow::Nlr),
+            score(Dataflow::Rna),
+            step.dataflow.name().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let os_total: u64 = plan
+        .steps
+        .iter()
+        .map(|s| s.candidates[Dataflow::Os.lane()].cycles)
+        .sum();
+    println!(
+        "plan: {} — {} switch(es), {} switch cycles, {} total cycles \
+         (fixed-OS {}, {:.2}x)",
+        plan.summary(),
+        plan.n_switches(),
+        plan.switch_cycles,
+        plan.total_cycles(),
+        os_total,
+        os_total as f64 / plan.total_cycles().max(1) as f64
+    );
+    println!(
+        "predicted: {:.1} us, {:.2} uJ on-chip",
+        plan.total_time_ns() / 1e3,
+        plan.total_energy().on_chip_pj() / 1e6
+    );
+    if let Some(mlp) = mlp {
+        let inputs = mlp.synth_inputs(batches, 0xDA7A);
+        let os = OsEngine::tcd(geom).execute(&mlp, &inputs);
+        let auto = AutotunedEngine::new(geom).with_objective(objective).execute(&mlp, &inputs);
+        if auto.outputs != os.outputs {
+            return Err(anyhow!("autotuned outputs diverged from fixed-OS"));
+        }
+        println!(
+            "measured: fixed-OS {} cycles, autotuned {} cycles (bit-exact outputs)",
+            os.cycles, auto.cycles
+        );
+    }
+    Ok(())
 }
 
 fn cmd_mem_report(topo: &MlpTopology, k: usize, n: usize) {

@@ -12,16 +12,26 @@
 //! "cloning" on the steady-state hot path is a refcount bump.
 //!
 //! The store is **LRU-bounded**: [`ScheduleCache::bounded`] caps the
-//! number of distinct `(geometry, Γ)` entries, and inserting past the
-//! cap evicts the least-recently-used entry (an unbounded cache serving
-//! many models across long runs grows without limit — exactly the
-//! multi-model serving leak the bound closes). Hit/miss/eviction
+//! number of distinct `(geometry, Γ, dataflow)` entries, and inserting
+//! past the cap evicts the least-recently-used entry (an unbounded cache
+//! serving many models across long runs grows without limit — exactly
+//! the multi-model serving leak the bound closes). Hit/miss/eviction
 //! counters are lock-free atomics surfaced through
 //! [`crate::coordinator::CoordinatorMetrics`].
+//!
+//! **Dataflow-keyed since PR 10.** The key carries the [`Dataflow`] the
+//! schedule is walked under. All four dataflows currently walk the same
+//! Algorithm-1 roll schedule (dataflow moves data, not math), but the
+//! lanes stay separate so (a) per-dataflow hit/miss/eviction accounting
+//! is honest — a mixed-dataflow fleet can see exactly which lane pays
+//! the mapper DP — and (b) a future dataflow-specialized schedule can
+//! land without a key migration. Cross-dataflow hits are impossible by
+//! construction (tested). The legacy `get_or_compute` entry points are
+//! the OS lane.
 
 use super::schedule::bfs_events;
 use super::tree::ExecNode;
-use super::{Gamma, LayerSchedule, MapperTree, ModelSchedule, NpeGeometry};
+use super::{Dataflow, Gamma, LayerSchedule, MapperTree, ModelSchedule, NpeGeometry};
 use crate::model::MlpTopology;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -70,22 +80,24 @@ impl CacheStats {
 /// Map payload: the entry plus its last-touch stamp (for LRU eviction).
 #[derive(Debug, Default)]
 struct LruInner {
-    map: HashMap<(NpeGeometry, Gamma), (Arc<CachedSchedule>, u64)>,
+    map: HashMap<(NpeGeometry, Gamma, Dataflow), (Arc<CachedSchedule>, u64)>,
     /// Monotonic touch counter; higher = more recently used.
     tick: u64,
 }
 
 /// Thread-safe memo of Algorithm-1 schedules, shared by every device of
 /// a fleet (and by the single-NPE coordinator path, so both report the
-/// same counters).
+/// same counters). Counters are kept per dataflow lane (indexed by
+/// [`Dataflow::lane`]); [`ScheduleCache::stats`] sums them.
 #[derive(Debug, Default)]
 pub struct ScheduleCache {
     inner: Mutex<LruInner>,
     /// `None` = unbounded (the pre-serving default for tools/tests).
     capacity: Option<usize>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
+    hits: [AtomicU64; 4],
+    misses: [AtomicU64; 4],
+    /// Evictions are attributed to the *victim's* dataflow lane.
+    evictions: [AtomicU64; 4],
 }
 
 impl ScheduleCache {
@@ -119,9 +131,9 @@ impl ScheduleCache {
         self.capacity
     }
 
-    /// Look `gamma` up for `mapper`'s geometry; on a miss, run Algorithm 1
-    /// on `mapper` and remember the result (evicting the LRU entry when
-    /// the capacity is exceeded).
+    /// Look `gamma` up for `mapper`'s geometry on the OS lane; on a
+    /// miss, run Algorithm 1 on `mapper` and remember the result
+    /// (evicting the LRU entry when the capacity is exceeded).
     ///
     /// The DP runs *outside* the map lock: a large Γ can take a while and
     /// concurrent devices must not stall on it. Two devices racing on the
@@ -129,29 +141,52 @@ impl ScheduleCache {
     /// first insert wins; both misses are counted, which is exactly what
     /// the "wasted mapper work" metric should show.
     pub fn get_or_compute(&self, mapper: &mut MapperTree, gamma: Gamma) -> Arc<CachedSchedule> {
-        self.get_or_compute_hit(mapper, gamma).0
+        self.get_or_compute_hit_on(mapper, gamma, Dataflow::Os).0
     }
 
     /// [`get_or_compute`](Self::get_or_compute) plus whether the lookup
     /// hit (`true`) or ran Algorithm 1 (`false`) — the per-layer signal
-    /// the tracing layer records.
+    /// the tracing layer records. OS lane.
     pub fn get_or_compute_hit(
         &self,
         mapper: &mut MapperTree,
         gamma: Gamma,
     ) -> (Arc<CachedSchedule>, bool) {
-        let key = (mapper.geometry, gamma);
+        self.get_or_compute_hit_on(mapper, gamma, Dataflow::Os)
+    }
+
+    /// Dataflow-lane lookup: [`get_or_compute`](Self::get_or_compute)
+    /// keyed by `(geometry, Γ, dataflow)`.
+    pub fn get_or_compute_on(
+        &self,
+        mapper: &mut MapperTree,
+        gamma: Gamma,
+        dataflow: Dataflow,
+    ) -> Arc<CachedSchedule> {
+        self.get_or_compute_hit_on(mapper, gamma, dataflow).0
+    }
+
+    /// The full-key lookup every other entry point funnels into:
+    /// `(geometry, Γ, dataflow)`, with the hit flag, counting on the
+    /// given dataflow's counter lane.
+    pub fn get_or_compute_hit_on(
+        &self,
+        mapper: &mut MapperTree,
+        gamma: Gamma,
+        dataflow: Dataflow,
+    ) -> (Arc<CachedSchedule>, bool) {
+        let key = (mapper.geometry, gamma, dataflow);
         {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
             let tick = inner.tick;
             if let Some((hit, stamp)) = inner.map.get_mut(&key) {
                 *stamp = tick;
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits[dataflow.lane()].fetch_add(1, Ordering::Relaxed);
                 return (Arc::clone(hit), true);
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.misses[dataflow.lane()].fetch_add(1, Ordering::Relaxed);
         let exec = mapper.best(gamma.batches, gamma.neurons);
         let events = exec.as_ref().map(bfs_events).unwrap_or_default();
         let entry = Arc::new(CachedSchedule {
@@ -182,7 +217,7 @@ impl ScheduleCache {
                 match victim {
                     Some(k) => {
                         inner.map.remove(&k);
-                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                        self.evictions[k.2.lane()].fetch_add(1, Ordering::Relaxed);
                     }
                     None => break,
                 }
@@ -212,16 +247,36 @@ impl ScheduleCache {
         ModelSchedule { layers }
     }
 
-    /// Counter snapshot (hits/misses/evictions observed so far).
+    /// Counter snapshot summed over every dataflow lane (the pre-PR-10
+    /// totals every existing consumer reads).
     pub fn stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for d in Dataflow::ALL {
+            let s = self.stats_for(d);
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.evictions += s.evictions;
+        }
+        total
+    }
+
+    /// Counter snapshot of one dataflow's lane.
+    pub fn stats_for(&self, dataflow: Dataflow) -> CacheStats {
+        let lane = dataflow.lane();
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            hits: self.hits[lane].load(Ordering::Relaxed),
+            misses: self.misses[lane].load(Ordering::Relaxed),
+            evictions: self.evictions[lane].load(Ordering::Relaxed),
         }
     }
 
-    /// Number of distinct `(geometry, Γ)` entries stored.
+    /// All four lanes at once, indexed by [`Dataflow::lane`] (what the
+    /// metrics snapshot exports under the Prometheus `dataflow` label).
+    pub fn lane_stats(&self) -> [CacheStats; 4] {
+        Dataflow::ALL.map(|d| self.stats_for(d))
+    }
+
+    /// Number of distinct `(geometry, Γ, dataflow)` entries stored.
     pub fn entries(&self) -> usize {
         self.inner.lock().unwrap().map.len()
     }
@@ -472,5 +527,62 @@ mod tests {
         });
         assert!(cache.entries() <= 4, "capacity holds under concurrency");
         assert!(cache.stats().evictions > 0);
+    }
+
+    #[test]
+    fn dataflow_lanes_never_cross_hit() {
+        // The same (geometry, Γ) looked up under every dataflow: each
+        // first sight is a miss on its own lane — a hit would mean one
+        // dataflow's schedule leaked into another's key.
+        let cache = ScheduleCache::new();
+        let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        let gamma = Gamma::new(5, 42, 7);
+        for d in Dataflow::ALL {
+            let (entry, hit) = cache.get_or_compute_hit_on(&mut mapper, gamma, d);
+            assert!(!hit, "{d}: first sight on this lane must miss");
+            assert_eq!(entry.layer.gamma, gamma);
+            assert_eq!(
+                cache.stats_for(d),
+                CacheStats { hits: 0, misses: 1, evictions: 0 },
+                "{d}: exactly its own miss"
+            );
+        }
+        assert_eq!(cache.entries(), 4, "one entry per dataflow lane");
+        for d in Dataflow::ALL {
+            let (_, hit) = cache.get_or_compute_hit_on(&mut mapper, gamma, d);
+            assert!(hit, "{d}: second sight hits its own lane");
+        }
+        let total = cache.stats();
+        assert_eq!((total.hits, total.misses), (4, 4), "stats() sums the lanes");
+        let lanes = cache.lane_stats();
+        assert!(lanes.iter().all(|s| *s == CacheStats { hits: 1, misses: 1, evictions: 0 }));
+    }
+
+    #[test]
+    fn legacy_entry_points_are_the_os_lane() {
+        let cache = ScheduleCache::new();
+        let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        let gamma = Gamma::new(3, 9, 6);
+        let a = cache.get_or_compute(&mut mapper, gamma);
+        let b = cache.get_or_compute_on(&mut mapper, gamma, Dataflow::Os);
+        assert!(Arc::ptr_eq(&a, &b), "get_or_compute is the OS lane");
+        let s = cache.stats_for(Dataflow::Os);
+        assert_eq!((s.hits, s.misses), (1, 1));
+        for d in [Dataflow::Ws, Dataflow::Nlr, Dataflow::Rna] {
+            assert_eq!(cache.stats_for(d), CacheStats::default(), "{d}: untouched");
+        }
+    }
+
+    #[test]
+    fn evictions_are_attributed_to_the_victim_lane() {
+        let cache = ScheduleCache::bounded(1);
+        let mut mapper = MapperTree::new(NpeGeometry::WALKTHROUGH);
+        let gamma = Gamma::new(2, 8, 4);
+        cache.get_or_compute_on(&mut mapper, gamma, Dataflow::Ws);
+        // Inserting the same shape on the NLR lane evicts the WS entry.
+        cache.get_or_compute_on(&mut mapper, gamma, Dataflow::Nlr);
+        assert_eq!(cache.entries(), 1);
+        assert_eq!(cache.stats_for(Dataflow::Ws).evictions, 1, "WS entry was the victim");
+        assert_eq!(cache.stats_for(Dataflow::Nlr).evictions, 0);
     }
 }

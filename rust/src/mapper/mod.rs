@@ -67,6 +67,64 @@ impl NpeGeometry {
     }
 }
 
+/// The four evaluated dataflows of the paper's Fig. 9.
+///
+/// Defined here (not in [`crate::dataflow`]) because the schedule cache
+/// keys on it: a `(geometry, Γ)` schedule is *reused* across dataflows
+/// only where that is sound, and since PR 10 the cache key is
+/// `(geometry, Γ, dataflow)` — the mapper layer owns the key type so the
+/// dataflow engines, the autotuner, and the fleet can all name it
+/// without a dependency cycle. Re-exported from [`crate::dataflow`] and
+/// [`crate::autotune`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Dataflow {
+    /// Output-stationary on the TCD-NPE (the paper's native dataflow).
+    #[default]
+    Os,
+    /// Multi-batch weight-stationary.
+    Ws,
+    /// No-local-reuse systolic.
+    Nlr,
+    /// Reconfigurable neural array (compute-tree).
+    Rna,
+}
+
+impl Dataflow {
+    /// All four dataflows, in counter-lane order (see [`Self::lane`]).
+    pub const ALL: [Dataflow; 4] = [Dataflow::Os, Dataflow::Ws, Dataflow::Nlr, Dataflow::Rna];
+
+    /// Short lowercase name — also the Prometheus `dataflow` label value.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataflow::Os => "os",
+            Dataflow::Ws => "ws",
+            Dataflow::Nlr => "nlr",
+            Dataflow::Rna => "rna",
+        }
+    }
+
+    /// Stable counter-lane index (cache stats, metrics arrays).
+    pub fn lane(&self) -> usize {
+        match self {
+            Dataflow::Os => 0,
+            Dataflow::Ws => 1,
+            Dataflow::Nlr => 2,
+            Dataflow::Rna => 3,
+        }
+    }
+
+    /// Parse a CLI-style name (`os`, `ws`, `nlr`, `rna`).
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        Dataflow::ALL.into_iter().find(|d| d.name() == s.to_ascii_lowercase())
+    }
+}
+
+impl std::fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// A layer-level problem instance Γ(B, I, U) (paper notation):
 /// `B` batches of a layer with `I` input features and `U` neurons.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -116,5 +174,16 @@ mod tests {
     #[test]
     fn gamma_work() {
         assert_eq!(Gamma::new(3, 100, 9).work(), 27);
+    }
+
+    #[test]
+    fn dataflow_names_lanes_and_parse_round_trip() {
+        for (i, d) in Dataflow::ALL.into_iter().enumerate() {
+            assert_eq!(d.lane(), i, "lane order matches ALL order");
+            assert_eq!(Dataflow::parse(d.name()), Some(d));
+            assert_eq!(Dataflow::parse(&d.name().to_uppercase()), Some(d));
+        }
+        assert_eq!(Dataflow::parse("systolic"), None);
+        assert_eq!(Dataflow::default(), Dataflow::Os);
     }
 }

@@ -11,6 +11,7 @@ use super::slo::SloStatus;
 use super::span::TraceLog;
 use super::timeline::TimelineSnapshot;
 use crate::coordinator::CoordinatorMetrics;
+use crate::mapper::{CacheStats, Dataflow};
 use crate::util::json::escape;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -156,6 +157,35 @@ impl MetricsSnapshot {
         counter("npe_cache_evictions_total", "Cache LRU evictions.", m.cache_evictions as f64);
         counter("npe_trace_dropped_events_total", "Trace events lost.", self.dropped_events as f64);
 
+        // Per-dataflow schedule-cache lanes. Separate families from the
+        // bare totals above, so no family ever mixes bare and labeled
+        // samples (the exposition format forbids that).
+        let lane_families: [(&str, &str, fn(CacheStats) -> u64); 3] = [
+            ("npe_cache_lane_hits_total", "Schedule-cache hits per dataflow lane.", |s| s.hits),
+            (
+                "npe_cache_lane_misses_total",
+                "Schedule-cache misses per dataflow lane.",
+                |s| s.misses,
+            ),
+            (
+                "npe_cache_lane_evictions_total",
+                "Cache LRU evictions per dataflow lane.",
+                |s| s.evictions,
+            ),
+        ];
+        for (name, help, get) in lane_families {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for d in Dataflow::ALL {
+                let _ = writeln!(
+                    out,
+                    "{name}{{dataflow=\"{}\"}} {}",
+                    d.name(),
+                    get(m.cache_lane(d))
+                );
+            }
+        }
+
         let _ = writeln!(out, "# HELP npe_queue_peak Deepest the work queue ever got.");
         let _ = writeln!(out, "# TYPE npe_queue_peak gauge");
         let _ = writeln!(out, "npe_queue_peak {}", m.queue_peak);
@@ -287,6 +317,21 @@ impl MetricsSnapshot {
                 d.sim_busy_ns,
             );
         }
+        let mut cache_lanes = String::new();
+        for (i, d) in Dataflow::ALL.iter().enumerate() {
+            if i > 0 {
+                cache_lanes.push(',');
+            }
+            let l = m.cache_lane(*d);
+            let _ = write!(
+                cache_lanes,
+                "{{\"dataflow\":\"{}\",\"hits\":{},\"misses\":{},\"evictions\":{}}}",
+                d.name(),
+                l.hits,
+                l.misses,
+                l.evictions,
+            );
+        }
         let tenant = match &self.tenant {
             Some(t) => format!("\"{}\"", escape(t)),
             None => "null".to_string(),
@@ -317,6 +362,7 @@ impl MetricsSnapshot {
              \"verified_batches\":{},\"verify_mismatches\":{},\
              \"sim_time_ns\":{:.3},\"sim_energy_pj\":{:.3},\
              \"cache_hits\":{},\"cache_misses\":{},\"cache_evictions\":{},\
+             \"cache_lanes\":[{cache_lanes}],\
              \"queue_peak\":{},\"latencies_recorded\":{},\
              \"wall_p50_us\":{:.3},\"wall_p95_us\":{:.3},\"wall_p99_us\":{:.3},\
              \"dropped_events\":{},\"devices\":[{devices}],\"layers\":[{layers}]}}\n",
@@ -533,9 +579,23 @@ mod tests {
         let mut m = CoordinatorMetrics { requests: 5, ..Default::default() };
         m.record_latency(1_000);
         m.record_latency(2_000);
+        m.set_cache_lanes([
+            CacheStats { hits: 3, misses: 1, evictions: 0 },
+            CacheStats::default(),
+            CacheStats { hits: 0, misses: 2, evictions: 1 },
+            CacheStats::default(),
+        ]);
         let snap = MetricsSnapshot::new(m, Some(&traced_log()));
         let text = snap.prometheus_text();
         assert!(text.contains("npe_requests_total 5"));
+        // Per-dataflow lane families: labeled series summing to the bare
+        // totals, every lane present even when idle.
+        assert!(text.contains("npe_cache_hits_total 3"));
+        assert!(text.contains("npe_cache_lane_hits_total{dataflow=\"os\"} 3"));
+        assert!(text.contains("npe_cache_lane_misses_total{dataflow=\"nlr\"} 2"));
+        assert!(text.contains("npe_cache_lane_evictions_total{dataflow=\"nlr\"} 1"));
+        assert!(text.contains("npe_cache_lane_hits_total{dataflow=\"ws\"} 0"));
+        assert!(text.contains("npe_cache_lane_hits_total{dataflow=\"rna\"} 0"));
         assert!(text.contains("# TYPE npe_latency_us histogram"));
         assert!(text.contains("npe_latency_us_bucket{le=\"+Inf\"} 2"));
         assert!(text.contains("npe_latency_us_count 2"));
@@ -616,6 +676,10 @@ mod tests {
         assert!(text.contains(
             "npe_device_requests_total{tenant=\"iris\",device=\"0\",geometry=\"16x8\"} 5"
         ));
+        assert!(
+            text.contains("npe_cache_lane_hits_total{tenant=\"iris\",dataflow=\"os\"}"),
+            "tenant label merges into dataflow-labeled lane samples"
+        );
         assert!(text.contains("npe_latency_us_bucket{tenant=\"iris\",le=\"+Inf\"} 2"));
         // Tenant lands first even on the stable-ladder bucket lines.
         for line in text.lines().filter(|l| l.starts_with("npe_latency_us_bucket")) {
@@ -726,10 +790,22 @@ mod tests {
 
     #[test]
     fn json_snapshot_parses_back() {
-        let m = CoordinatorMetrics { requests: 3, batches: 1, ..Default::default() };
+        let mut m = CoordinatorMetrics { requests: 3, batches: 1, ..Default::default() };
+        m.set_cache_lanes([
+            CacheStats { hits: 7, misses: 2, evictions: 0 },
+            CacheStats::default(),
+            CacheStats::default(),
+            CacheStats { hits: 0, misses: 1, evictions: 0 },
+        ]);
         let snap = MetricsSnapshot::new(m, Some(&traced_log()));
         let v = JsonValue::parse(&snap.to_json()).expect("valid JSON");
         assert_eq!(v.get("requests").unwrap().as_u64(), Some(3));
+        let lanes = v.get("cache_lanes").unwrap().as_arr().unwrap();
+        assert_eq!(lanes.len(), 4, "one entry per dataflow lane");
+        assert_eq!(lanes[0].get("dataflow").unwrap().as_str(), Some("os"));
+        assert_eq!(lanes[0].get("hits").unwrap().as_u64(), Some(7));
+        assert_eq!(lanes[3].get("dataflow").unwrap().as_str(), Some("rna"));
+        assert_eq!(lanes[3].get("misses").unwrap().as_u64(), Some(1));
         assert_eq!(v.get("layers").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(
             v.get("layers").unwrap().as_arr().unwrap()[0]

@@ -64,6 +64,10 @@ pub enum EventKind {
     /// A cumulative telemetry counter moved backwards (metrics-sink swap
     /// or reset); trailing rates read 0 until the window clears it.
     CounterRegression,
+    /// The dataflow autotuner chose a per-layer plan for a served model
+    /// (detail carries the lane summary, e.g. `os→os→nlr`, and the
+    /// predicted totals).
+    DataflowPlan,
 }
 
 impl fmt::Display for EventKind {
@@ -76,6 +80,7 @@ impl fmt::Display for EventKind {
             EventKind::SloBudgetExhausted => "slo_budget_exhausted",
             EventKind::PoolResize => "pool_resize",
             EventKind::CounterRegression => "counter_regression",
+            EventKind::DataflowPlan => "dataflow_plan",
         })
     }
 }

@@ -25,9 +25,9 @@ use super::service::{NpeService, ObsWiring};
 use crate::conv::QuantizedCnn;
 use crate::coordinator::{BatcherConfig, ExecutionPlan, PjrtSpec, ServedModel};
 use crate::exec::BackendKind;
-use crate::fleet::{ControllerConfig, DeviceSpec, FleetPool};
+use crate::fleet::{ControllerConfig, DataflowPolicy, DeviceSpec, FleetPool};
 use crate::graph::{GraphModel, QuantizedGraph};
-use crate::mapper::{NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
+use crate::mapper::{Dataflow, NpeGeometry, ScheduleCache, DEFAULT_SERVING_CACHE_CAPACITY};
 use crate::model::QuantizedMlp;
 use crate::obs::{EventJournal, SamplerConfig, SloConfig, Tracer};
 use std::sync::Arc;
@@ -90,6 +90,10 @@ pub struct ServeBuilder {
     geometry: NpeGeometry,
     backend: BackendKind,
     devices: Option<Vec<DeviceSpec>>,
+    /// Pin every device's MLP dataflow ([`Self::dataflow`]).
+    dataflow: Option<Dataflow>,
+    /// Autotune every device's MLP dataflow per layer ([`Self::autotune`]).
+    autotune: bool,
     batcher: BatcherConfig,
     cache_capacity: usize,
     admission: AdmissionPolicy,
@@ -124,6 +128,8 @@ impl ServeBuilder {
             geometry: NpeGeometry::PAPER,
             backend: BackendKind::Fast,
             devices: None,
+            dataflow: None,
+            autotune: false,
             batcher: BatcherConfig::default(),
             cache_capacity: DEFAULT_SERVING_CACHE_CAPACITY,
             admission: AdmissionPolicy::default(),
@@ -166,6 +172,30 @@ impl ServeBuilder {
         D: Into<DeviceSpec>,
     {
         self.devices = Some(specs.into_iter().map(Into::into).collect());
+        self
+    }
+
+    /// Pin the MLP dataflow every device runs (OS / WS / NLR / RNA — all
+    /// bit-exact; only cycles, time and energy move). Applies to the
+    /// single device and to every device of a private fleet, overriding
+    /// per-spec policies. Non-OS dataflows require an MLP model (the CNN
+    /// and graph engines are OS-native), and the knob is mutually
+    /// exclusive with [`Self::autotune`]. Default: OS, the paper's
+    /// TCD-NPE configuration.
+    pub fn dataflow(mut self, dataflow: Dataflow) -> Self {
+        self.dataflow = Some(dataflow);
+        self
+    }
+
+    /// Let the [`crate::autotune`] cost model choose each layer's
+    /// dataflow. For MLPs the devices execute the chosen mixed-dataflow
+    /// plan (never slower than fixed OS under the planner's objective);
+    /// for CNN/graph models the plan is advisory — it is computed and
+    /// journaled (with journaling on), while execution stays on the
+    /// OS-native engines. Overrides per-spec policies when enabled;
+    /// mutually exclusive with [`Self::dataflow`]. Default: off.
+    pub fn autotune(mut self, on: bool) -> Self {
+        self.autotune = on;
         self
     }
 
@@ -325,6 +355,30 @@ impl ServeBuilder {
         if self.pjrt.is_some() && !matches!(self.model, ServedModel::Mlp(_)) {
             return invalid("pjrt cross-verification requires an MLP model");
         }
+        if self.autotune && self.dataflow.is_some() {
+            return invalid("autotune and a fixed dataflow are mutually exclusive");
+        }
+        if matches!(self.dataflow, Some(d) if d != Dataflow::Os)
+            && !matches!(self.model, ServedModel::Mlp(_))
+        {
+            return invalid(
+                "a fixed non-OS dataflow requires an MLP model \
+                 (the CNN and graph engines are OS-native)",
+            );
+        }
+        if self.pool.is_some() && (self.autotune || self.dataflow.is_some()) {
+            return invalid(
+                "dataflow knobs configure this service's own devices; \
+                 a shared (registry) pool's devices belong to the registry — \
+                 set the policy on the pool's DeviceSpecs instead",
+            );
+        }
+        // The builder knob, when set, overrides per-spec policies.
+        let policy_override = if self.autotune {
+            Some(DataflowPolicy::Autotune)
+        } else {
+            self.dataflow.map(DataflowPolicy::Fixed)
+        };
         if self.controller.is_some() && self.elastic.is_none() {
             return invalid("a controller policy requires elastic bounds; call .elastic(min, max)");
         }
@@ -378,13 +432,19 @@ impl ServeBuilder {
                 geometry: self.geometry,
                 backend: self.backend,
                 pjrt: self.pjrt,
+                dataflow: policy_override.unwrap_or_default(),
             },
             (None, Some(specs)) if specs.is_empty() => {
                 return invalid("a fleet needs at least one device");
             }
-            (None, Some(specs)) => {
+            (None, Some(mut specs)) => {
                 if self.pjrt.is_some() {
                     return invalid("pjrt cross-verification runs on the single-device path only");
+                }
+                if let Some(policy) = policy_override {
+                    for spec in &mut specs {
+                        spec.dataflow = policy;
+                    }
                 }
                 // Launch the private pool here — before the coordinator
                 // thread — so the telemetry sampler can wire against its
@@ -533,6 +593,90 @@ mod tests {
             .expect("two-device fleet");
         let out = svc.submit(vec![1; 8]).expect("submit").wait().expect("answer");
         assert_eq!(out.output.len(), 2);
+        svc.shutdown().expect("clean shutdown");
+    }
+
+    #[test]
+    fn dataflow_knobs_are_validated() {
+        let both = NpeService::builder(mlp())
+            .autotune(true)
+            .dataflow(Dataflow::Ws)
+            .build();
+        assert!(reason(both).contains("mutually exclusive"));
+
+        let cnn_graph = MlpTopology::new(vec![8, 5, 3]).into_graph();
+        let non_mlp = NpeService::builder(cnn_graph).dataflow(Dataflow::Nlr).build();
+        assert!(reason(non_mlp).contains("requires an MLP model"));
+
+        // Fixed OS on a non-MLP model is the default behaviour, not an
+        // error; autotune on a non-MLP model is advisory, also fine.
+        for svc in [
+            NpeService::builder(MlpTopology::new(vec![8, 5, 3]).into_graph())
+                .dataflow(Dataflow::Os)
+                .batcher(BatcherConfig::new(1, Duration::from_millis(1)))
+                .build()
+                .expect("fixed OS is the default"),
+            NpeService::builder(MlpTopology::new(vec![8, 5, 3]).into_graph())
+                .autotune(true)
+                .batcher(BatcherConfig::new(1, Duration::from_millis(1)))
+                .build()
+                .expect("advisory autotune"),
+        ] {
+            svc.shutdown().expect("clean shutdown");
+        }
+    }
+
+    #[test]
+    fn every_dataflow_knob_serves_bit_exactly() {
+        let m = mlp();
+        let inputs = m.synth_inputs(4, 13);
+        let expect = m.forward_batch(&inputs);
+        let mut builders: Vec<ServeBuilder> = Dataflow::ALL
+            .iter()
+            .map(|d| NpeService::builder(m.clone()).dataflow(*d))
+            .collect();
+        builders.push(NpeService::builder(m.clone()).autotune(true));
+        builders.push(
+            // Mixed-dataflow fleet: one device per policy on one queue.
+            NpeService::builder(m.clone()).devices([
+                DeviceSpec::from(NpeGeometry::PAPER).with_dataflow(Dataflow::Ws),
+                DeviceSpec::from(NpeGeometry::PAPER).with_autotune(),
+            ]),
+        );
+        for builder in builders {
+            let svc = builder
+                .batcher(BatcherConfig::new(2, Duration::from_millis(1)))
+                .build()
+                .expect("valid dataflow config");
+            let tickets: Vec<_> =
+                inputs.iter().map(|x| svc.submit(x.clone()).expect("admitted")).collect();
+            for (t, want) in tickets.into_iter().zip(expect.iter()) {
+                let resp = t.wait_timeout(Duration::from_secs(10)).expect("answered");
+                assert_eq!(&resp.output, want, "bit-exact across dataflow policies");
+            }
+            svc.shutdown().expect("clean shutdown");
+        }
+    }
+
+    #[test]
+    fn autotuned_service_journals_its_plan() {
+        let m = QuantizedMlp::synthesize(MlpTopology::new(vec![100, 64, 10]), 5);
+        let svc = NpeService::builder(m)
+            .autotune(true)
+            .journaling(DEFAULT_JOURNAL_CAPACITY)
+            .batcher(BatcherConfig::new(2, Duration::from_millis(1)))
+            .build()
+            .expect("autotuned service");
+        let _ = svc.submit(vec![1; 100]).expect("admitted").wait().expect("answered");
+        let journal = svc.journal().expect("journaling on");
+        let plans: Vec<_> = journal
+            .events()
+            .into_iter()
+            .filter(|e| e.kind == crate::obs::EventKind::DataflowPlan)
+            .collect();
+        assert_eq!(plans.len(), 1, "one plan event per service start");
+        assert!(plans[0].detail.contains("plan"), "{}", plans[0].detail);
+        assert!(plans[0].detail.contains("cycles predicted"), "{}", plans[0].detail);
         svc.shutdown().expect("clean shutdown");
     }
 

@@ -12,6 +12,7 @@
 //! NpeService::builder(model)
 //!   .geometry(..) .backend(..)        — single-NPE shape/backend
 //!   .devices([DeviceSpec, ..])       — or a (heterogeneous) fleet
+//!   .dataflow(..) | .autotune(true)  — pin or autotune the MLP dataflow
 //!   .batcher(..) .cache(..)          — batching + Algorithm-1 memo
 //!   .admission(..)                   — Block | Reject | ShedOldest
 //!   .tracing(true) | .tracer(t)      — end-to-end spans ([`crate::obs`])

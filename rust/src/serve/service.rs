@@ -317,7 +317,7 @@ impl NpeService {
     /// so concurrent devices cannot clobber each other's view.
     pub fn metrics(&self) -> CoordinatorMetrics {
         let mut m = util::lock(&self.metrics).clone();
-        m.set_cache_stats(self.cache.stats());
+        m.set_cache_lanes(self.cache.lane_stats());
         m
     }
 

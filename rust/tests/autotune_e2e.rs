@@ -1,0 +1,152 @@
+//! End-to-end property tests for the dataflow autotuner: the analytical
+//! cost model's predicted cycle counts must equal the measured
+//! [`DataflowReport`] cycles **exactly** — for all four dataflows, on
+//! random geometries, MAC kinds, topologies and batch sizes. The model
+//! consumes the same closed forms the engines report from (see
+//! `autotune::cost` module docs), so any drift between prediction and
+//! measurement is a bug in one of them, not tolerable noise.
+//!
+//! Harness: `util::check` — the repo's proptest stand-in. It honors the
+//! `PROPTEST_CASES` environment knob and replays the persisted
+//! regression seeds in `proptest-regressions/autotune_e2e.txt` before
+//! the fresh stream. To persist a new regression, append the
+//! `replay seed 0x…` printed by a failing run to that file.
+
+use tcd_npe::autotune::{plan_mlp, AutotunedEngine, CostModel, Objective};
+use tcd_npe::dataflow::{
+    best_conventional, DataflowEngine, NlrEngine, OsEngine, RnaEngine, WsEngine,
+};
+use tcd_npe::mapper::{Dataflow, Gamma, NpeGeometry};
+use tcd_npe::model::{MlpTopology, QuantizedMlp};
+use tcd_npe::tcdmac::MacKind;
+use tcd_npe::util::check::{self, Gen};
+
+const REGRESSIONS: &str = include_str!("../proptest-regressions/autotune_e2e.txt");
+
+fn prop_cases() -> usize {
+    check::env_cases(32)
+}
+
+fn random_geometry(g: &mut Gen) -> NpeGeometry {
+    NpeGeometry::new(g.usize_in(1, 6), g.usize_in(1, 4))
+}
+
+fn random_kind(g: &mut Gen) -> MacKind {
+    if g.u64() & 1 == 0 {
+        MacKind::Tcd
+    } else {
+        best_conventional()
+    }
+}
+
+/// A random 1–2-transition MLP topology sized so every dataflow's
+/// engine leg stays fast.
+fn random_topology(g: &mut Gen) -> MlpTopology {
+    let i = g.usize_in(1, 48);
+    let u = g.usize_in(1, 16);
+    let layers = if g.u64() & 1 == 0 {
+        vec![i, u]
+    } else {
+        vec![i, u, g.usize_in(1, 8)]
+    };
+    MlpTopology::new(layers)
+}
+
+/// The model's whole-MLP prediction for one fixed dataflow: per-layer
+/// costs summed over the topology's Γ transitions (no switches).
+fn predicted_total(model: &mut CostModel, topo: &MlpTopology, b: usize, d: Dataflow) -> u64 {
+    topo.transitions()
+        .map(|(i, u)| model.layer_cost(Gamma::new(b, i, u), d).cycles)
+        .sum()
+}
+
+/// predicted == measured, exactly, for every fixed dataflow on random
+/// (geometry, kind, topology, B).
+#[test]
+fn prop_predicted_cycles_equal_measured_for_every_dataflow() {
+    check::cases_with_regressions(0xA0_70_01, prop_cases(), REGRESSIONS, |g| {
+        let geom = random_geometry(g);
+        let kind = random_kind(g);
+        let topo = random_topology(g);
+        let b = g.usize_in(1, 6);
+        let mlp = QuantizedMlp::synthesize(topo.clone(), g.u64());
+        let inputs = mlp.synth_inputs(b, g.u64());
+        let mut model = CostModel::with_kind(geom, kind);
+        let label = |d: Dataflow| {
+            format!(
+                "{} on {}x{} kind={} topo={:?} b={b}",
+                d.name(),
+                geom.tg_rows,
+                geom.tg_cols,
+                kind.name(),
+                topo.layers
+            )
+        };
+        // OS/WS run on the model's MAC kind; NLR/RNA always run (and are
+        // priced) on the best conventional MAC — so `new` is correct.
+        let os = OsEngine::new(geom, kind).execute(&mlp, &inputs);
+        assert_eq!(
+            predicted_total(&mut model, &topo, b, Dataflow::Os),
+            os.cycles,
+            "{}",
+            label(Dataflow::Os)
+        );
+        let ws = WsEngine::with_kind(geom, kind).execute(&mlp, &inputs);
+        assert_eq!(
+            predicted_total(&mut model, &topo, b, Dataflow::Ws),
+            ws.cycles,
+            "{}",
+            label(Dataflow::Ws)
+        );
+        let nlr = NlrEngine::new(geom).execute(&mlp, &inputs);
+        assert_eq!(
+            predicted_total(&mut model, &topo, b, Dataflow::Nlr),
+            nlr.cycles,
+            "{}",
+            label(Dataflow::Nlr)
+        );
+        let rna = RnaEngine::new(geom).execute(&mlp, &inputs);
+        assert_eq!(
+            predicted_total(&mut model, &topo, b, Dataflow::Rna),
+            rna.cycles,
+            "{}",
+            label(Dataflow::Rna)
+        );
+    });
+}
+
+/// The autotuned engine's measured report equals its own plan's
+/// prediction, the plan never loses to the fixed-OS baseline, and the
+/// executed outputs stay bit-identical to the Fix16 reference.
+#[test]
+fn prop_autotuned_plan_is_exact_and_never_worse_than_os() {
+    check::cases_with_regressions(0xA0_70_02, prop_cases(), REGRESSIONS, |g| {
+        let geom = random_geometry(g);
+        let kind = random_kind(g);
+        let topo = random_topology(g);
+        let b = g.usize_in(1, 6);
+        let mlp = QuantizedMlp::synthesize(topo.clone(), g.u64());
+        let inputs = mlp.synth_inputs(b, g.u64());
+        let reference = mlp.forward_batch(&inputs);
+        let mut model = CostModel::with_kind(geom, kind);
+        let plan = plan_mlp(&mut model, Objective::Cycles, &topo, b);
+        let os_total = predicted_total(&mut model, &topo, b, Dataflow::Os);
+        assert!(
+            plan.total_cycles() <= os_total,
+            "plan {} ({}) must not lose to all-OS ({os_total}) on {}x{} topo={:?} b={b}",
+            plan.summary(),
+            plan.total_cycles(),
+            geom.tg_rows,
+            geom.tg_cols,
+            topo.layers
+        );
+        let r = AutotunedEngine::with_kind(geom, kind).execute(&mlp, &inputs);
+        assert_eq!(
+            r.cycles,
+            plan.total_cycles(),
+            "autotuned report must equal its plan's prediction ({})",
+            plan.summary()
+        );
+        assert_eq!(r.outputs, reference, "autotuned outputs != Fix16 reference");
+    });
+}

@@ -163,6 +163,63 @@ conformance_suite! {
     conformance_graph_inception_mini: graph_conformance("InceptionMini", 2);
 }
 
+/// Every evaluated dataflow — the fixed WS/NLR/RNA engines and the
+/// autotuned per-layer mix — rides the same conformance contract as OS:
+/// outputs bit-identical to the Fix16 reference across zoo model × MAC
+/// kind × geometry × backend, with a backend-invariant cycle count.
+/// Dataflow moves data, it does not change math. (MNIST runs B=1 here:
+/// this sweep multiplies the gate-level leg by 4 engines × 2 kinds.)
+#[test]
+fn conformance_mlp_every_dataflow() {
+    use tcd_npe::autotune::AutotunedEngine;
+    use tcd_npe::dataflow::{NlrEngine, RnaEngine, WsEngine};
+    type Run = fn(NpeGeometry, MacKind, BackendKind, &QuantizedMlp, &[Vec<i16>]) -> DataflowReport;
+    let engines: [(&str, Run); 4] = [
+        ("ws", |g, k, bk, m, x| WsEngine::with_kind(g, k).with_backend(bk).execute(m, x)),
+        ("nlr", |g, k, bk, m, x| NlrEngine::with_kind(g, k).with_backend(bk).execute(m, x)),
+        ("rna", |g, k, bk, m, x| RnaEngine::with_kind(g, k).with_backend(bk).execute(m, x)),
+        ("autotuned", |g, k, bk, m, x| {
+            AutotunedEngine::with_kind(g, k).with_backend(bk).execute(m, x)
+        }),
+    ];
+    for (dataset, batches) in [("Iris", 4), ("Wine", 4), ("MNIST", 1)] {
+        let b = benchmark_by_name(dataset).expect("Table-IV row");
+        let mlp = QuantizedMlp::synthesize(b.topology.clone(), 0xC0F0);
+        let inputs = mlp.synth_inputs(batches, 0xC0F1);
+        let reference = mlp.forward_batch(&inputs);
+        for geom in geometries() {
+            for kind in [MacKind::Tcd, best_conventional()] {
+                for (name, run) in engines {
+                    let mut cell_cycles = None;
+                    for backend in BackendKind::ALL {
+                        let r = run(geom, kind, backend, &mlp, &inputs);
+                        assert_eq!(
+                            r.outputs,
+                            reference,
+                            "{dataset}: {name} ({}) on {}x{} via {} != reference",
+                            kind.name(),
+                            geom.tg_rows,
+                            geom.tg_cols,
+                            backend.name()
+                        );
+                        match cell_cycles {
+                            None => cell_cycles = Some(r.cycles),
+                            Some(c) => assert_eq!(
+                                c,
+                                r.cycles,
+                                "{dataset}: {name} ({}) cycles must be backend-invariant on {}x{}",
+                                kind.name(),
+                                geom.tg_rows,
+                                geom.tg_cols
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// The unfused graph lowering must conform too (it schedules per node
 /// instead of per merged group — different rolls, same math).
 #[test]
